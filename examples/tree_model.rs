@@ -1,0 +1,88 @@
+//! E4: recursion + higher-order functions over runtime-shaped data — the
+//! expressiveness the paper's intro motivates with Tree-LSTM [35] and that
+//! dataflow frameworks cannot represent (§2.2).
+//!
+//! A binary tree is encoded with cons-tuples: a leaf is `(0, value)`, an
+//! internal node `(1, (left, right))`. The model folds the tree with a
+//! recursive function, mixing per-node parameters; `grad` differentiates
+//! straight through the recursion. The in-language `tree_map` shows
+//! higher-order functions over the same structure.
+//!
+//! ```text
+//! cargo run --release --example tree_model
+//! ```
+
+use myia::baselines::DataflowGraph;
+use myia::coordinator::{Options, Session};
+use myia::vm::Value;
+
+const SRC: &str = "\
+def leaf(v):
+    return (0, v)
+
+def node(l, r):
+    return (1, (l, r))
+
+def tree_eval(t, w):
+    if t[0] == 0:
+        return tanh(w * t[1])
+    children = t[1]
+    return tanh(w * (tree_eval(children[0], w) + tree_eval(children[1], w)))
+
+def tree_map(f, t):
+    if t[0] == 0:
+        return leaf(f(t[1]))
+    children = t[1]
+    return node(tree_map(f, children[0]), tree_map(f, children[1]))
+
+def build_full_tree(depth, v):
+    if depth == 0:
+        return leaf(v)
+    return node(build_full_tree(depth - 1, v * 0.7), build_full_tree(depth - 1, v * 1.3))
+
+def loss(w):
+    t = build_full_tree(5, 1.0)
+    t2 = tree_map(lambda v: v + 0.1, t)
+    return tree_eval(t2, w)
+
+def main(w):
+    return grad(loss)(w)
+";
+
+fn f64v(v: &Value) -> f64 {
+    v.as_f64().expect("number")
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut s = Session::from_source(SRC)?;
+    let loss = s.compile("loss", Options::default())?;
+    let grad = s.compile("main", Options::default())?;
+
+    println!("== recursive tree model (depth 5, 63 nodes) ==");
+    for w in [0.1, 0.3, 0.5] {
+        let l = f64v(&loss.call(vec![Value::F64(w)])?);
+        let g = f64v(&grad.call(vec![Value::F64(w)])?);
+        // finite-difference check
+        let eps = 1e-6;
+        let lp = f64v(&loss.call(vec![Value::F64(w + eps)])?);
+        let lm = f64v(&loss.call(vec![Value::F64(w - eps)])?);
+        let fd = (lp - lm) / (2.0 * eps);
+        println!("w={w}: loss={l:.6}  dloss/dw={g:.6}  (finite diff {fd:.6})");
+        assert!((g - fd).abs() < 1e-5, "gradient mismatch");
+    }
+
+    // The IR for this unbounded-recursion model is CONSTANT-SIZE; a dataflow
+    // graph must be unrolled per input shape and cannot be built at all for
+    // runtime-shaped trees (§2.2).
+    println!("\n== dataflow-framework contrast (E4) ==");
+    let mut df = DataflowGraph::new();
+    match df.call("tree_eval", &[]) {
+        Err(e) => println!("dataflow baseline: {e}"),
+        Ok(_) => unreachable!(),
+    }
+    println!(
+        "Myia IR size for the tree model: {} nodes (independent of tree depth)",
+        grad.metrics.nodes_after_optimize
+    );
+    Ok(())
+}

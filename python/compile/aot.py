@@ -1,0 +1,97 @@
+"""AOT lowering: jax → HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Outputs (under --out, default ../artifacts):
+    mlp_forward.hlo.txt     logits(params..., x)
+    mlp_loss.hlo.txt        scalar loss(params..., x, y_onehot)
+    mlp_grads.hlo.txt       (loss, d/dparams...)  — grad cross-check artifact
+    mlp_train_step.hlo.txt  (loss, new_params...) — the compiled train step
+    kernel_matmul.hlo.txt   the Pallas matmul alone
+    kernel_fused_linear.hlo.txt
+    kernel_softmax_xent.hlo.txt
+    meta.json               dims shared with the Rust side
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.fused_linear import fused_linear
+from .kernels.matmul import matmul
+from .kernels.softmax_xent import softmax_xent
+
+
+def to_hlo_text(fn, *specs) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    B, I, H1, H2, O = model.BATCH, model.IN_DIM, model.H1, model.H2, model.OUT_DIM
+    param_specs = [
+        spec((I, H1)), spec((H1,)), spec((H1, H2)), spec((H2,)), spec((H2, O)), spec((O,)),
+    ]
+    x = spec((B, I))
+    y = spec((B, O))
+
+    artifacts = {
+        "mlp_forward": (model.mlp_forward, [*param_specs, x]),
+        "mlp_loss": (model.mlp_loss, [*param_specs, x, y]),
+        "mlp_grads": (model.mlp_loss_and_grads, [*param_specs, x, y]),
+        "mlp_train_step": (model.mlp_train_step, [*param_specs, x, y]),
+        "kernel_matmul": (lambda a, b: (matmul(a, b),), [spec((B, H2)), spec((H2, O))]),
+        "kernel_fused_linear": (
+            lambda a, w, b: (fused_linear(a, w, b),),
+            [x, spec((I, H1)), spec((H1,))],
+        ),
+        "kernel_softmax_xent": (
+            lambda l, t: (softmax_xent(l, t),),
+            [spec((B, O)), y],
+        ),
+    }
+    for name, (fn, specs) in artifacts.items():
+        text = to_hlo_text(fn, *specs)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    meta = {
+        "batch": B,
+        "in_dim": I,
+        "h1": H1,
+        "h2": H2,
+        "out_dim": O,
+        "lr": model.LR,
+        "dtype": "f32",
+        "param_shapes": [[I, H1], [H1], [H1, H2], [H2], [H2, O], [O]],
+    }
+    with open(os.path.join(args.out, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {args.out}/meta.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""L1: fused linear layer tanh(x @ w + b) as a differentiable Pallas primitive.
+
+The fusion is the point: one HBM→VMEM round trip per output tile instead of
+three (matmul, bias add, tanh). The backward pass is hand-written (the
+paper's "kernels and their derivatives" contract): dpre = d · (1 − out²),
+then three Pallas matmuls/reductions.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import matmul_pallas, pick_block
+
+
+def _fused_linear_kernel(x_ref, w_ref, b_ref, o_ref):
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype)
+    o_ref[...] = jnp.tanh(acc + b_ref[...])
+
+
+def fused_linear_pallas(x, w, b, *, bm=None):
+    """``tanh(x @ w + b)`` with row-tiled fusion."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    bm = pick_block(m) if bm is None else bm
+    assert m % bm == 0, f"batch {m} not tiled by {bm}"
+    return pl.pallas_call(
+        _fused_linear_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+@jax.custom_vjp
+def fused_linear(x, w, b):
+    """Differentiable fused layer primitive."""
+    return fused_linear_pallas(x, w, b)
+
+
+def _fl_fwd(x, w, b):
+    out = fused_linear_pallas(x, w, b)
+    return out, (x, w, out)
+
+
+def _fl_bwd(res, d):
+    x, w, out = res
+    dpre = d * (1.0 - out * out)
+    dx = matmul_pallas(dpre, w.T)
+    dw = matmul_pallas(x.T, dpre)
+    db = jnp.sum(dpre, axis=0)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fl_fwd, _fl_bwd)

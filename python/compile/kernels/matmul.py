@@ -1,0 +1,72 @@
+"""L1: tiled matmul as a Pallas kernel, exposed as a differentiable primitive.
+
+TPU-style tiling: the grid splits the output into (bm, bn) tiles sized for
+VMEM residency (multiples of 8 here so small test shapes work under
+interpret=True; the structure matches a real (128, 128) MXU tiling — see
+DESIGN.md §8). interpret=True is mandatory on CPU PJRT: real TPU lowering
+emits a Mosaic custom-call the CPU plugin cannot execute.
+
+The paper's backend contract (§3): "the user can write efficient low-level
+kernels and their derivatives … and expose them to Myia as primitives".
+Here that is a ``jax.custom_vjp`` whose backward pass reuses the same Pallas
+kernel on transposed operands.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def pick_block(n, candidates=(16, 8, 4, 2, 1)):
+    """Largest candidate block size dividing n."""
+    for c in candidates:
+        if n % c == 0:
+            return c
+    return 1
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    # One (bm, bn) output tile; full-K panels of x and y are VMEM-resident.
+    o_ref[...] = jnp.dot(x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype)
+
+
+def matmul_pallas(x, y, *, bm=None, bn=None):
+    """``x @ y`` with a (bm, bn)-tiled Pallas kernel. Blocks must divide the
+    output dims; by default they are chosen automatically."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    bm = pick_block(m) if bm is None else bm
+    bn = pick_block(n) if bn is None else bn
+    assert m % bm == 0 and n % bn == 0, f"({m},{n}) not tiled by ({bm},{bn})"
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+@jax.custom_vjp
+def matmul(x, y):
+    """Differentiable tiled matmul primitive."""
+    return matmul_pallas(x, y)
+
+
+def _matmul_fwd(x, y):
+    return matmul_pallas(x, y), (x, y)
+
+
+def _matmul_bwd(res, d):
+    x, y = res
+    # dX = d @ Yᵀ ; dY = Xᵀ @ d — both through the Pallas kernel.
+    return matmul_pallas(d, y.T), matmul_pallas(x.T, d)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every kernel in this package must agree with its reference here to within
+float tolerance across the shape/dtype sweep in ``python/tests``; pytest
+enforces it at build time, before any artifact is produced.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """Plain dense matmul."""
+    return jnp.matmul(x, y)
+
+
+def fused_linear_ref(x, w, b):
+    """tanh(x @ w + b) — one fused layer."""
+    return jnp.tanh(jnp.matmul(x, w) + b)
+
+
+def softmax_xent_ref(logits, onehot):
+    """Per-row softmax cross-entropy given one-hot labels.
+
+    Numerically stabilized: logsumexp(l) - <l, onehot>.
+    """
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = jnp.squeeze(m, -1) + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+    picked = jnp.sum(logits * onehot, axis=-1)
+    return lse - picked

@@ -1,0 +1,62 @@
+"""L1: fused softmax cross-entropy as a differentiable Pallas primitive.
+
+Computes per-row ``logsumexp(logits) - <logits, onehot>`` in one pass over a
+row tile (stabilized by the row max), never materializing the probabilities
+in HBM. Backward is the classic ``softmax(l) − onehot`` (per-row cotangent
+scaled), hand-written per the kernels-as-primitives contract.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import pick_block
+
+
+def _softmax_xent_kernel(l_ref, y_ref, o_ref):
+    logits = l_ref[...]
+    onehot = y_ref[...]
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = jnp.squeeze(m, -1) + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+    picked = jnp.sum(logits * onehot, axis=-1)
+    o_ref[...] = lse - picked
+
+
+def softmax_xent_pallas(logits, onehot, *, bm=None):
+    """Per-row cross-entropy losses, shape ``(batch,)``."""
+    m, c = logits.shape
+    assert onehot.shape == (m, c)
+    bm = pick_block(m) if bm is None else bm
+    assert m % bm == 0
+    return pl.pallas_call(
+        _softmax_xent_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, c), lambda i: (i, 0)),
+            pl.BlockSpec((bm, c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), logits.dtype),
+        interpret=True,
+    )(logits, onehot)
+
+
+@jax.custom_vjp
+def softmax_xent(logits, onehot):
+    """Differentiable fused cross-entropy primitive."""
+    return softmax_xent_pallas(logits, onehot)
+
+
+def _sx_fwd(logits, onehot):
+    return softmax_xent_pallas(logits, onehot), (logits, onehot)
+
+
+def _sx_bwd(res, d):
+    logits, onehot = res
+    p = jax.nn.softmax(logits, axis=-1)
+    dlogits = d[:, None] * (p - onehot)
+    donehot = -d[:, None] * logits
+    return dlogits, donehot
+
+
+softmax_xent.defvjp(_sx_fwd, _sx_bwd)

@@ -1,0 +1,77 @@
+"""L2: the JAX model — a 3-layer MLP built on the Pallas kernels.
+
+This is the build-time half of the paper's backend story: the model's
+forward pass, loss, gradients (via ``jax.grad`` — JAX's own closure-free ST
+AD, the natural comparator for our Rust J-transform), and an SGD train step
+are lowered ONCE by ``aot.py`` to HLO text and executed forever after by the
+Rust runtime. Python is never on the request path.
+
+Model: 64 → 128 → 64 → 10, tanh activations, softmax cross-entropy.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_linear import fused_linear
+from .kernels.matmul import matmul
+from .kernels.softmax_xent import softmax_xent
+
+# Dimensions shared with the Rust side (see artifacts/meta.json).
+IN_DIM = 64
+H1 = 128
+H2 = 64
+OUT_DIM = 10
+BATCH = 32
+LR = 0.05
+
+
+def init_params(seed=0):
+    """Xavier-ish init, f32."""
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+    scale = lambda n_in: 1.0 / jnp.sqrt(n_in)
+    return (
+        jax.random.normal(k1, (IN_DIM, H1), jnp.float32) * scale(IN_DIM),
+        jnp.zeros((H1,), jnp.float32),
+        jax.random.normal(k2, (H1, H2), jnp.float32) * scale(H1),
+        jnp.zeros((H2,), jnp.float32),
+        jax.random.normal(k3, (H2, OUT_DIM), jnp.float32) * scale(H2),
+        jnp.zeros((OUT_DIM,), jnp.float32),
+    )
+
+
+def mlp_forward(w1, b1, w2, b2, w3, b3, x):
+    """Logits for a batch — layers 1/2 use the fused Pallas kernel, the
+    output layer the tiled Pallas matmul."""
+    h1 = fused_linear(x, w1, b1)
+    h2 = fused_linear(h1, w2, b2)
+    return matmul(h2, w3) + b3
+
+
+def mlp_loss(w1, b1, w2, b2, w3, b3, x, y_onehot):
+    """Mean softmax cross-entropy over the batch (scalar)."""
+    logits = mlp_forward(w1, b1, w2, b2, w3, b3, x)
+    return jnp.mean(softmax_xent(logits, y_onehot))
+
+
+# d loss / d params — JAX reverse-mode over the Pallas kernels.
+mlp_grads = jax.grad(mlp_loss, argnums=(0, 1, 2, 3, 4, 5))
+
+
+def mlp_loss_and_grads(w1, b1, w2, b2, w3, b3, x, y_onehot):
+    """(loss, g_w1, g_b1, g_w2, g_b2, g_w3, g_b3) — the cross-validation
+    artifact: the Rust example compares its own J-transform gradients
+    against these numbers."""
+    loss, grads = jax.value_and_grad(mlp_loss, argnums=(0, 1, 2, 3, 4, 5))(
+        w1, b1, w2, b2, w3, b3, x, y_onehot
+    )
+    return (loss, *grads)
+
+
+def mlp_train_step(w1, b1, w2, b2, w3, b3, x, y_onehot):
+    """One SGD step: returns (loss, new_w1, new_b1, ..., new_b3)."""
+    loss, grads = jax.value_and_grad(mlp_loss, argnums=(0, 1, 2, 3, 4, 5))(
+        w1, b1, w2, b2, w3, b3, x, y_onehot
+    )
+    new = tuple(p - LR * g for p, g in zip((w1, b1, w2, b2, w3, b3), grads))
+    return (loss, *new)

@@ -1,0 +1,76 @@
+"""L2 correctness: model shapes, loss behaviour, gradient sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def data(seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (model.BATCH, model.IN_DIM), jnp.float32)
+    y = jax.nn.one_hot(
+        jax.random.randint(k2, (model.BATCH,), 0, model.OUT_DIM),
+        model.OUT_DIM,
+        dtype=jnp.float32,
+    )
+    return x, y
+
+
+def test_forward_shapes():
+    params = model.init_params()
+    x, _ = data()
+    logits = model.mlp_forward(*params, x)
+    assert logits.shape == (model.BATCH, model.OUT_DIM)
+    assert logits.dtype == jnp.float32
+
+
+def test_loss_is_scalar_and_near_log_c_at_init():
+    params = model.init_params()
+    x, y = data()
+    loss = model.mlp_loss(*params, x, y)
+    assert loss.shape == ()
+    # Untrained: close to log(10)
+    assert abs(float(loss) - np.log(model.OUT_DIM)) < 1.0
+
+
+def test_grads_match_finite_differences():
+    params = model.init_params()
+    x, y = data()
+    grads = model.mlp_grads(*params, x, y)
+    assert len(grads) == 6
+    # Check one scalar direction by central differences on b3[0].
+    eps = 1e-3
+    b3 = params[5]
+    bump = b3.at[0].add(eps)
+    dent = b3.at[0].add(-eps)
+    lp = model.mlp_loss(*params[:5], bump, x, y)
+    lm = model.mlp_loss(*params[:5], dent, x, y)
+    fd = (lp - lm) / (2 * eps)
+    np.testing.assert_allclose(float(grads[5][0]), float(fd), rtol=1e-2, atol=1e-4)
+
+
+def test_train_step_decreases_loss():
+    params = model.init_params()
+    x, y = data()
+    loss0 = float(model.mlp_loss(*params, x, y))
+    out = model.mlp_train_step(*params, x, y)
+    params = out[1:]
+    for _ in range(4):
+        out = model.mlp_train_step(*params, x, y)
+        params = out[1:]
+    loss5 = float(model.mlp_loss(*params, x, y))
+    assert loss5 < loss0, f"{loss5} !< {loss0}"
+
+
+def test_train_step_preserves_shapes():
+    params = model.init_params()
+    x, y = data()
+    out = model.mlp_train_step(*params, x, y)
+    assert out[0].shape == ()
+    for new, old in zip(out[1:], params):
+        assert new.shape == old.shape
+        assert new.dtype == old.dtype

@@ -1,0 +1,55 @@
+//! E2 (§1 fn.1, §2.1.1): per-operation AD overhead — OO tape tracing vs
+//! compiled ST adjoint, across operand sizes (the pytorch#2518 scalar /
+//! small-vector issue). Expectation: ST wins decisively at small sizes; the
+//! curves converge as tensor work amortizes the tracing.
+
+use myia::baselines::tape;
+use myia::bench::{black_box, Bencher};
+use myia::coordinator::{Options, Session};
+use myia::tensor::Tensor;
+use myia::vm::Value;
+
+const CHAIN: usize = 16;
+
+fn main() {
+    println!("=== E2: OO-tape vs ST-compiled gradient, by operand size ===");
+    let mut b = Bencher::default();
+
+    // ST: one compiled adjoint, reused (§2.1.2: transform done once).
+    let src = format!(
+        "def f(x):\n    acc = x\n    for i in range({CHAIN}):\n        acc = relu(acc * 1.01 + x)\n    return item(sum(acc))\n\ndef main(x):\n    return grad(f)(x)\n"
+    );
+    let mut s = Session::from_source(&src).unwrap();
+    let st = s.compile("main", Options::default()).unwrap();
+
+    let mut rows = Vec::new();
+    for size in [1usize, 4, 16, 64, 256, 1024, 4096, 16384] {
+        let xt = Tensor::full(&[size], 0.5);
+
+        let s_st = b.bench(&format!("st_compiled/size={size}"), || {
+            black_box(st.call(vec![Value::Tensor(xt.clone())]).unwrap());
+        });
+
+        let s_oo = b.bench(&format!("oo_tape/size={size}"), || {
+            // OO rebuilds its trace EVERY call — that's the model.
+            let tp = tape::Tape::new();
+            let x = tape::tensor(&tp, xt.clone());
+            let c = tape::scalar(&tp, 1.01);
+            let mut acc = x.clone();
+            for _ in 0..CHAIN {
+                acc = acc.mul(&c).add(&x).relu();
+            }
+            let y = acc.sum();
+            let grads = y.backward().unwrap();
+            black_box(y.grad_of(&grads, &x));
+        });
+
+        rows.push((size, s_oo.median / s_st.median));
+    }
+
+    println!("\nsize   OO/ST ratio (>1 = ST wins)");
+    for (size, ratio) in rows {
+        println!("{size:>6} {ratio:>8.2}x");
+        println!("CSV,e2_ratio,{size},{ratio:.3}");
+    }
+}

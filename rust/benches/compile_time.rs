@@ -1,0 +1,58 @@
+//! E7 (§2.1.2): ST pays its cost once, at compile time. Measures pipeline
+//! latency (parse/lower, grad expansion, optimization, codegen) vs program
+//! size, and the break-even call count against OO tracing.
+
+use myia::bench::Bencher;
+use myia::coordinator::{Options, Session};
+use myia::vm::Value;
+use std::time::Instant;
+
+fn chain_program(n: usize) -> String {
+    let mut body = String::from("    acc = x\n");
+    for i in 0..n {
+        body.push_str(&format!("    acc = acc * 1.0{} + sin(acc)\n", i % 10));
+    }
+    format!("def f(x):\n{body}    return acc\n\ndef main(x):\n    return grad(f)(x)\n")
+}
+
+fn main() {
+    println!("=== E7: compile-pipeline latency vs program size ===");
+    println!(
+        "{:>6} {:>12} {:>12} {:>12} {:>12} {:>10}",
+        "ops", "parse+lower", "expand", "optimize", "codegen", "nodes"
+    );
+    for n in [4usize, 16, 64, 256] {
+        let src = chain_program(n);
+        let t0 = Instant::now();
+        let mut s = Session::from_source(&src).unwrap();
+        let parse_us = t0.elapsed().as_micros();
+        let f = s.compile("main", Options::default()).unwrap();
+        println!(
+            "{n:>6} {parse_us:>10}µs {:>10}µs {:>10}µs {:>10}µs {:>10}",
+            f.metrics.expand_us,
+            f.metrics.optimize_us,
+            f.metrics.codegen_us,
+            f.metrics.nodes_after_optimize
+        );
+        println!(
+            "CSV,e7_compile,{n},{parse_us},{},{},{}",
+            f.metrics.expand_us, f.metrics.optimize_us, f.metrics.codegen_us
+        );
+    }
+
+    // Amortization: per-call time once compiled.
+    let mut b = Bencher::default();
+    let src = chain_program(64);
+    let mut s = Session::from_source(&src).unwrap();
+    let f = s.compile("main", Options::default()).unwrap();
+    let sample = b.bench("compiled_call/ops=64", || {
+        myia::bench::black_box(f.call(vec![Value::F64(0.3)]).unwrap());
+    });
+    let compile_total = (f.metrics.expand_us + f.metrics.optimize_us + f.metrics.codegen_us) as f64 * 1e-6;
+    println!(
+        "\ncompile cost {:.1} ms amortizes over ~{} calls of {:.1} µs each",
+        compile_total * 1e3,
+        (compile_total / sample.median).ceil(),
+        sample.median * 1e6
+    );
+}

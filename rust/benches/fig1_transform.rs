@@ -1,0 +1,70 @@
+//! E1 (Figure 1): the grad transform and its optimization collapse.
+//!
+//! Reports, for `grad(x ** 3)` and a larger program: node counts after
+//! lowering / expansion / optimization, the optimized-vs-handwritten runtime
+//! ratio, and the unoptimized adjoint cost that optimization removes.
+
+use myia::bench::{black_box, Bencher};
+use myia::coordinator::{Options, Session};
+use myia::vm::Value;
+
+fn main() {
+    println!("=== E1 / Figure 1: transform sizes and adjoint quality ===");
+
+    let cases = [
+        (
+            "pow3",
+            "def f(x):\n    return x ** 3.0\n\ndef main(x):\n    return grad(f)(x)\n",
+            "def handwritten(x):\n    return 3.0 * x ** 2.0\n",
+        ),
+        (
+            "composite",
+            "def f(x):\n    return sin(x) * exp(x) + tanh(x * x)\n\ndef main(x):\n    return grad(f)(x)\n",
+            "def handwritten(x):\n    return cos(x) * exp(x) + sin(x) * exp(x) + (1.0 - tanh(x * x) * tanh(x * x)) * 2.0 * x\n",
+        ),
+    ];
+
+    println!(
+        "{:<12} {:>10} {:>10} {:>10}",
+        "program", "lowered", "expanded", "optimized"
+    );
+    for (name, src, _) in &cases {
+        let mut s = Session::from_source(src).unwrap();
+        let f = s.compile("main", Options::default()).unwrap();
+        let (l, e, o) = (
+            f.metrics.nodes_after_lowering,
+            f.metrics.nodes_after_expand,
+            f.metrics.nodes_after_optimize,
+        );
+        println!("{name:<12} {l:>10} {e:>10} {o:>10}");
+        println!("CSV,fig1_nodes,{name},{l},{e},{o}");
+    }
+
+    println!("\n--- optimized adjoint vs hand-written derivative (runtime) ---");
+    let mut b = Bencher::default();
+    for (name, src, hand_src) in &cases {
+        let full = format!("{src}\n{hand_src}");
+        let mut s = Session::from_source(&full).unwrap();
+        let auto = s.compile("main", Options::default()).unwrap();
+        let hand = s.compile("handwritten", Options::default()).unwrap();
+        let sa = b.bench(&format!("fig1/{name}/grad_optimized"), || {
+            black_box(auto.call(vec![Value::F64(1.7)]).unwrap());
+        });
+        let sh = b.bench(&format!("fig1/{name}/handwritten"), || {
+            black_box(hand.call(vec![Value::F64(1.7)]).unwrap());
+        });
+        let mut s2 = Session::from_source(src).unwrap();
+        let unopt = s2
+            .compile("main", Options { optimize: false, ..Default::default() })
+            .unwrap();
+        let su = b.bench(&format!("fig1/{name}/grad_unoptimized"), || {
+            black_box(unopt.call(vec![Value::F64(1.7)]).unwrap());
+        });
+        println!(
+            "  {name}: optimized/handwritten = {:.2}x, unoptimized/handwritten = {:.2}x\n",
+            sa.median / sh.median,
+            su.median / sh.median
+        );
+        println!("CSV,fig1_runtime,{name},{:.3},{:.3}", sa.median / sh.median, su.median / sh.median);
+    }
+}

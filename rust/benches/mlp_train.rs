@@ -1,0 +1,51 @@
+//! E3 (§5): MLP loss+grad throughput — Myia VM vs Myia+XLA segments vs the
+//! JAX AOT artifact ("performance similar to compiled frameworks such as
+//! TensorFlow, while providing the flexibility of OO frameworks").
+
+use myia::bench::{black_box, Bencher};
+use myia::coordinator::mlp::{compile_mlp, default_meta, params_value, synth_batch, synth_teacher};
+use myia::runtime::artifacts::MlpArtifacts;
+use myia::runtime::XlaRuntime;
+use myia::tensor::{DType, Rng, Tensor};
+use myia::vm::Value;
+
+fn main() {
+    println!("=== E3: MLP (64-128-64-10, batch 32) loss+grad throughput ===");
+    let meta = default_meta();
+    let mut rng = Rng::new(99);
+    let teacher = synth_teacher(&meta, &mut rng);
+    let (x, y) = synth_batch(&meta, &mut rng, &teacher);
+    let params_f32 = meta.init_params(11);
+    let params_f64: Vec<Tensor> = params_f32.iter().map(|t| t.cast(DType::F64)).collect();
+
+    let mut b = Bencher::default();
+
+    let (_s1, _l1, grad_vm) = compile_mlp(false).unwrap();
+    let args =
+        || vec![params_value(&params_f64), Value::Tensor(x.clone()), Value::Tensor(y.clone())];
+    let t_vm = b.bench("mlp/loss_and_grad/myia_vm", || {
+        black_box(grad_vm.call(args()).unwrap());
+    });
+
+    let (_s2, _l2, grad_xla) = compile_mlp(true).unwrap();
+    println!("   ({} XLA segments)", grad_xla.metrics.xla_segments);
+    let t_xla = b.bench("mlp/loss_and_grad/myia_xla", || {
+        black_box(grad_xla.call(args()).unwrap());
+    });
+
+    match XlaRuntime::cpu().and_then(|rt| MlpArtifacts::load(&rt, "artifacts")) {
+        Ok(arts) => {
+            let t_jax = b.bench("mlp/loss_and_grad/jax_artifact", || {
+                black_box(arts.loss_and_grads(&params_f32, &x, &y).unwrap());
+            });
+            println!(
+                "\nratios:   vm/jax = {:.2}x   myia+xla/jax = {:.2}x",
+                t_vm.median / t_jax.median,
+                t_xla.median / t_jax.median
+            );
+            println!("CSV,e3_ratio,vm_over_jax,{:.3}", t_vm.median / t_jax.median);
+            println!("CSV,e3_ratio,xla_over_jax,{:.3}", t_xla.median / t_jax.median);
+        }
+        Err(e) => println!("(artifacts unavailable: {e}; run `make artifacts`)"),
+    }
+}

@@ -1,0 +1,62 @@
+//! E6 (§4.3): optimization-pass ablation on the grad-expanded MLP and the
+//! Figure-1 program — node counts and adjoint runtime with each pass
+//! disabled, plus the no-optimization arm.
+
+use myia::ad::expand_macros;
+use myia::bench::{black_box, Bencher};
+use myia::coordinator::mlp::MLP_SOURCE;
+use myia::coordinator::{Options, Session};
+use myia::ir::analyze;
+use myia::opt::Optimizer;
+use myia::parser::compile_source;
+use myia::vm::Value;
+
+fn ablate(src: &str, entry: &str) {
+    let variants: [(&str, fn() -> Optimizer); 6] = [
+        ("full", Optimizer::standard),
+        ("no-inline", || Optimizer::without("inline")),
+        ("no-tuple-simplify", || Optimizer::without("tuple-simplify")),
+        ("no-algebraic", || Optimizer::without("algebraic")),
+        ("no-cse", || Optimizer::without("cse")),
+        ("none", Optimizer::none),
+    ];
+    println!("{:<20} {:>10} {:>8}", "pipeline", "nodes", "iters");
+    for (name, make) in variants {
+        let mut m = myia::ir::Module::new();
+        let graphs = compile_source(&mut m, src).unwrap();
+        let g = graphs[entry];
+        expand_macros(&mut m, g).unwrap();
+        let stats = make().run(&mut m, g).unwrap();
+        let nodes = analyze(&m, g).node_count(&m);
+        println!("{name:<20} {nodes:>10} {:>8}", stats.iterations);
+        println!("CSV,e6_nodes,{entry},{name},{nodes}");
+    }
+}
+
+fn main() {
+    println!("=== E6: per-pass ablation (node counts after optimization) ===");
+    println!("\n--- grad(x**3) (Figure 1) ---");
+    ablate(
+        "def f(x):\n    return x ** 3.0\n\ndef main(x):\n    return grad(f)(x)\n",
+        "main",
+    );
+    println!("\n--- MLP loss gradient ---");
+    ablate(MLP_SOURCE, "mlp_grad");
+
+    // Runtime impact: full vs none on the Figure-1 program.
+    println!("\n--- adjoint runtime, full vs no optimization ---");
+    let src = "def f(x):\n    return x ** 3.0\n\ndef main(x):\n    return grad(f)(x)\n";
+    let mut b = Bencher::default();
+    let mut s1 = Session::from_source(src).unwrap();
+    let opt = s1.compile("main", Options::default()).unwrap();
+    let mut s2 = Session::from_source(src).unwrap();
+    let unopt = s2.compile("main", Options { optimize: false, ..Default::default() }).unwrap();
+    let a = b.bench("ablation/pow3/full", || {
+        black_box(opt.call(vec![Value::F64(2.0)]).unwrap());
+    });
+    let u = b.bench("ablation/pow3/none", || {
+        black_box(unopt.call(vec![Value::F64(2.0)]).unwrap());
+    });
+    println!("speedup from optimization: {:.1}x", u.median / a.median);
+    println!("CSV,e6_speedup,pow3,{:.3}", u.median / a.median);
+}

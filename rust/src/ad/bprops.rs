@@ -1,0 +1,461 @@
+//! Backpropagators of primitives.
+//!
+//! For each primitive `p`, [`fprop_prim`] builds the graph
+//!
+//! ```text
+//! graph ▶p(x₁..xₙ) {
+//!   r = p(x₁..xₙ)
+//!   graph ◀p(d) {               # nested: captures x₁..xₙ and r
+//!     return (ZeroT, dx₁, ..., dxₙ)
+//!   }
+//!   return (r, ◀p)
+//! }
+//! ```
+//!
+//! The first element of the backpropagator's result is the gradient with
+//! respect to the *function itself* — ZeroT for primitives, an env of
+//! free-variable gradients for closures (§3.2: "the adjoint of closure
+//! creation"). The `dxᵢ` expressions are ordinary IR, so they are themselves
+//! differentiable — which is what makes reverse-over-reverse work.
+
+use crate::ir::{Const, GraphId, Module, NodeId, Prim};
+
+/// Build (or fetch from the cache in `JTransform`) the fprop graph of a
+/// primitive at a given arity (arity only matters for `make_tuple`).
+pub fn fprop_prim(m: &mut Module, p: Prim, arity: usize) -> GraphId {
+    let fg = m.add_graph(format!("▶{}", p.name()));
+    let xs: Vec<NodeId> = (0..arity).map(|i| m.add_parameter(fg, format!("x{i}"))).collect();
+    let r = m.apply_prim_variadic(fg, p, &xs);
+
+    // The nested backpropagator graph.
+    let bg = m.add_graph(format!("◀{}", p.name()));
+    let d = m.add_parameter(bg, "d");
+    let dxs = bprop_exprs(m, bg, p, &xs, r, d);
+    let zero = m.constant(Const::ZeroT);
+    let mut tuple_inputs = vec![m.constant(Const::Prim(Prim::MakeTuple)), zero];
+    match dxs {
+        Some(dxs) => tuple_inputs.extend(dxs),
+        None => {
+            // Unsupported derivative: raise at runtime if anyone calls it.
+            let msg = m.constant(Const::Str(format!(
+                "gradient of `{}` is not supported",
+                p.name()
+            )));
+            let raised = m.apply_prim(bg, Prim::Raise, &[msg]);
+            for _ in 0..arity {
+                tuple_inputs.push(raised);
+            }
+        }
+    }
+    let bret = m.apply(bg, tuple_inputs);
+    m.set_return(bg, bret);
+
+    let bconst = m.graph_constant(bg);
+    let fret = m.apply_prim_variadic(fg, Prim::MakeTuple, &[r, bconst]);
+    m.set_return(fg, fret);
+    fg
+}
+
+/// Per-primitive gradient expressions, built inside the backpropagator graph
+/// `bg`. Returns one node per input, or `None` when unsupported.
+fn bprop_exprs(
+    m: &mut Module,
+    bg: GraphId,
+    p: Prim,
+    xs: &[NodeId],
+    r: NodeId,
+    d: NodeId,
+) -> Option<Vec<NodeId>> {
+    use Prim::*;
+    let zt = m.constant(Const::ZeroT);
+
+    // Every input of a non-differentiable primitive gets ZeroT.
+    if p.is_nondifferentiable() {
+        return Some(vec![zt; xs.len()]);
+    }
+
+    macro_rules! ap {
+        ($prim:expr, $($arg:expr),*) => {
+            m.apply_prim(bg, $prim, &[$($arg),*])
+        };
+    }
+    /// `sum_to_like(expr, x)` — undo broadcasting toward input x.
+    macro_rules! stl {
+        ($expr:expr, $x:expr) => {
+            ap!(SumToLike, $expr, $x)
+        };
+    }
+
+    let dxs = match p {
+        Add => {
+            vec![stl!(d, xs[0]), stl!(d, xs[1])]
+        }
+        Sub => {
+            let nd = ap!(Neg, d);
+            vec![stl!(d, xs[0]), stl!(nd, xs[1])]
+        }
+        Mul => {
+            let dy = ap!(Mul, d, xs[1]);
+            let dx2 = ap!(Mul, d, xs[0]);
+            vec![stl!(dy, xs[0]), stl!(dx2, xs[1])]
+        }
+        Div => {
+            let dx = ap!(Div, d, xs[1]);
+            let rdy = ap!(Mul, d, r);
+            let dy0 = ap!(Div, rdy, xs[1]);
+            let dy = ap!(Neg, dy0);
+            vec![stl!(dx, xs[0]), stl!(dy, xs[1])]
+        }
+        Pow => {
+            // dx = d * y * x^(y-1);  dy = d * r * ln(x)
+            let one = m.constant(Const::F64(1.0));
+            let ym1 = ap!(Sub, xs[1], one);
+            let xym1 = ap!(Pow, xs[0], ym1);
+            let yxym1 = ap!(Mul, xs[1], xym1);
+            let dx = ap!(Mul, d, yxym1);
+            let lnx = ap!(Ln, xs[0]);
+            let rlnx = ap!(Mul, r, lnx);
+            let dy = ap!(Mul, d, rlnx);
+            vec![stl!(dx, xs[0]), stl!(dy, xs[1])]
+        }
+        Maximum | Minimum => {
+            // subgradient: winner takes d; ties go to the second argument.
+            let diff = if p == Maximum { ap!(Sub, xs[0], xs[1]) } else { ap!(Sub, xs[1], xs[0]) };
+            let mask = ap!(Step, diff);
+            let one = m.constant(Const::F64(1.0));
+            let inv = ap!(Sub, one, mask);
+            let dx = ap!(Mul, d, mask);
+            let dy = ap!(Mul, d, inv);
+            vec![stl!(dx, xs[0]), stl!(dy, xs[1])]
+        }
+        Neg => vec![ap!(Neg, d)],
+        Exp => vec![ap!(Mul, d, r)],
+        Ln => vec![ap!(Div, d, xs[0])],
+        Tanh => {
+            // d * (1 - r²)
+            let rr = ap!(Mul, r, r);
+            let one = m.constant(Const::F64(1.0));
+            let omr = ap!(Sub, one, rr);
+            vec![ap!(Mul, d, omr)]
+        }
+        Sqrt => {
+            let two = m.constant(Const::F64(2.0));
+            let tr = ap!(Mul, two, r);
+            vec![ap!(Div, d, tr)]
+        }
+        Sin => {
+            let c = ap!(Cos, xs[0]);
+            vec![ap!(Mul, d, c)]
+        }
+        Cos => {
+            let s = ap!(Sin, xs[0]);
+            let ds = ap!(Mul, d, s);
+            vec![ap!(Neg, ds)]
+        }
+        Relu => {
+            let mask = ap!(Step, xs[0]);
+            vec![ap!(Mul, d, mask)]
+        }
+        Sigmoid => {
+            // d * r * (1 - r)
+            let one = m.constant(Const::F64(1.0));
+            let omr = ap!(Sub, one, r);
+            let romr = ap!(Mul, r, omr);
+            vec![ap!(Mul, d, romr)]
+        }
+        Abs => {
+            let s = ap!(Sign, xs[0]);
+            vec![ap!(Mul, d, s)]
+        }
+        Switch => {
+            // d flows into whichever branch was selected.
+            let dt = ap!(Switch, xs[0], d, zt);
+            let df = ap!(Switch, xs[0], zt, d);
+            vec![zt, dt, df]
+        }
+        MakeTuple => (0..xs.len())
+            .map(|i| {
+                let ic = m.constant(Const::I64(i as i64));
+                ap!(TupleGetItem, d, ic)
+            })
+            .collect(),
+        TupleGetItem => {
+            let n = ap!(TupleLen, xs[0]);
+            let dt = ap!(TupleInject, xs[1], n, d);
+            vec![dt, zt]
+        }
+        TupleInject => {
+            // inputs (i, n, v): dv = d[i]
+            let dv = ap!(TupleGetItem, d, xs[0]);
+            vec![zt, zt, dv]
+        }
+        NewEnv => vec![],
+        EnvSetItem => {
+            // (env, key, value)
+            let de = ap!(EnvSetItem, d, xs[1], zt);
+            let dv = ap!(EnvGetItem, d, xs[1]);
+            vec![de, zt, dv]
+        }
+        EnvGetItem => {
+            let empty = m.apply_prim(bg, Prim::NewEnv, &[]);
+            let de = ap!(EnvSetItem, empty, xs[1], d);
+            vec![de, zt]
+        }
+        Gadd => vec![d, d],
+        ZerosLike | OnesLike => vec![zt],
+        MatMul => {
+            // 2-D: dx = d @ yᵀ ; dy = xᵀ @ d
+            let yt = ap!(Transpose, xs[1]);
+            let dx = ap!(MatMul, d, yt);
+            let xt = ap!(Transpose, xs[0]);
+            let dy = ap!(MatMul, xt, d);
+            vec![dx, dy]
+        }
+        Transpose => vec![ap!(Transpose, d)],
+        Reshape => {
+            let s = ap!(ShapeOf, xs[0]);
+            vec![ap!(Reshape, d, s), zt]
+        }
+        BroadcastTo => {
+            let s = ap!(ShapeOf, xs[0]);
+            vec![ap!(SumTo, d, s), zt]
+        }
+        SumTo => {
+            let s = ap!(ShapeOf, xs[0]);
+            vec![ap!(BroadcastTo, d, s), zt]
+        }
+        ReduceSum => {
+            let s = ap!(ShapeOf, xs[0]);
+            vec![ap!(BroadcastTo, d, s)]
+        }
+        ReduceMean => {
+            // broadcast(d / numel, shape(x)); numel via sum(ones_like x)
+            let ones = ap!(OnesLike, xs[0]);
+            let n = ap!(ReduceSum, ones);
+            let dn = ap!(Div, d, n);
+            let s = ap!(ShapeOf, xs[0]);
+            vec![ap!(BroadcastTo, dn, s)]
+        }
+        SumLastKeep => {
+            let s = ap!(ShapeOf, xs[0]);
+            vec![ap!(BroadcastTo, d, s)]
+        }
+        SoftmaxLast => {
+            // dx = r * (d - sum_last_keep(r * d))
+            let rd = ap!(Mul, r, d);
+            let srd = ap!(SumLastKeep, rd);
+            let dm = ap!(Sub, d, srd);
+            vec![ap!(Mul, r, dm)]
+        }
+        SumToLike => {
+            vec![ap!(BroadcastLike, d, xs[0]), zt]
+        }
+        BroadcastLike => {
+            vec![ap!(SumToLike, d, xs[0]), zt]
+        }
+        Item => vec![ap!(ScalarToTensor, d)],
+        ScalarToTensor => vec![ap!(Item, d)],
+        CastF32 => vec![ap!(CastF64, d)],
+        CastF64 => vec![ap!(CastF32, d)],
+        Where => {
+            let mask = ap!(CastF64, xs[0]);
+            let one = m.constant(Const::F64(1.0));
+            let inv = ap!(Sub, one, mask);
+            let da = ap!(Mul, d, mask);
+            let db = ap!(Mul, d, inv);
+            vec![zt, stl!(da, xs[1]), stl!(db, xs[2])]
+        }
+        Print => vec![d],
+        // Structured ops with no (implemented) linearization.
+        Concat0 | TakeRow | ReduceSumAxis | Partial | Mod | FloorDiv => return None,
+        // Non-differentiable prims were handled above.
+        _ => return None,
+    };
+    Some(dxs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vm::{compile_program, Value, Vm};
+
+    /// Evaluate ▶p on args, returning (result, bprop-closure) then call the
+    /// bprop on `d` and return the full gradient tuple.
+    fn fprop_and_bprop(p: Prim, args: Vec<Value>, d: Value) -> (Value, Vec<Value>) {
+        let mut m = Module::new();
+        let fg = fprop_prim(&mut m, p, args.len());
+        let program = compile_program(&m, fg).unwrap();
+        let vm = Vm::new(program);
+        let pair = vm.call_graph(fg, args).unwrap();
+        let (result, bprop) = match &pair {
+            Value::Tuple(items) => (items[0].clone(), items[1].clone()),
+            other => panic!("expected pair, got {other}"),
+        };
+        let grads = vm.call_value(&bprop, vec![d]).unwrap();
+        match grads {
+            Value::Tuple(items) => (result, items.to_vec()),
+            other => panic!("expected gradient tuple, got {other}"),
+        }
+    }
+
+    fn f(v: f64) -> Value {
+        Value::F64(v)
+    }
+
+    fn getf(v: &Value) -> f64 {
+        v.as_f64().unwrap_or_else(|| panic!("expected number, got {v}"))
+    }
+
+    #[test]
+    fn mul_bprop() {
+        let (r, g) = fprop_and_bprop(Prim::Mul, vec![f(3.0), f(4.0)], f(1.0));
+        assert_eq!(getf(&r), 12.0);
+        assert!(matches!(g[0], Value::ZeroT)); // d/d(mul) itself
+        assert_eq!(getf(&g[1]), 4.0);
+        assert_eq!(getf(&g[2]), 3.0);
+    }
+
+    #[test]
+    fn pow_bprop() {
+        let (r, g) = fprop_and_bprop(Prim::Pow, vec![f(2.0), f(3.0)], f(1.0));
+        assert_eq!(getf(&r), 8.0);
+        assert_eq!(getf(&g[1]), 12.0); // 3 * 2²
+        assert!((getf(&g[2]) - 8.0 * 2f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unary_bprops_match_derivatives() {
+        for (p, x, expect) in [
+            (Prim::Exp, 0.7, (0.7f64).exp()),
+            (Prim::Ln, 0.7, 1.0 / 0.7),
+            (Prim::Tanh, 0.3, 1.0 - (0.3f64).tanh().powi(2)),
+            (Prim::Sqrt, 4.0, 0.25),
+            (Prim::Sin, 1.1, (1.1f64).cos()),
+            (Prim::Cos, 1.1, -(1.1f64).sin()),
+            (Prim::Sigmoid, 0.5, {
+                let s = 1.0 / (1.0 + (-0.5f64).exp());
+                s * (1.0 - s)
+            }),
+            (Prim::Relu, 2.0, 1.0),
+            (Prim::Relu, -2.0, 0.0),
+            (Prim::Neg, 5.0, -1.0),
+            (Prim::Abs, -5.0, -1.0),
+        ] {
+            let (_, g) = fprop_and_bprop(p, vec![f(x)], f(1.0));
+            assert!(
+                (getf(&g[1]) - expect).abs() < 1e-12,
+                "{p} at {x}: got {} want {expect}",
+                getf(&g[1])
+            );
+        }
+    }
+
+    #[test]
+    fn comparison_bprop_is_zero() {
+        let (_, g) = fprop_and_bprop(Prim::Lt, vec![f(1.0), f(2.0)], Value::ZeroT);
+        assert!(matches!(g[1], Value::ZeroT));
+        assert!(matches!(g[2], Value::ZeroT));
+    }
+
+    #[test]
+    fn tuple_bprops() {
+        // make_tuple
+        let d = Value::tuple(vec![f(10.0), f(20.0)]);
+        let (_, g) = fprop_and_bprop(Prim::MakeTuple, vec![f(1.0), f(2.0)], d);
+        assert_eq!(getf(&g[1]), 10.0);
+        assert_eq!(getf(&g[2]), 20.0);
+        // tuple_getitem: d flows to slot 1 of a 3-tuple
+        let t = Value::tuple(vec![f(1.0), f(2.0), f(3.0)]);
+        let (r, g) = fprop_and_bprop(Prim::TupleGetItem, vec![t, Value::I64(1)], f(5.0));
+        assert_eq!(getf(&r), 2.0);
+        match &g[1] {
+            Value::Tuple(items) => {
+                assert!(matches!(items[0], Value::ZeroT));
+                assert_eq!(getf(&items[1]), 5.0);
+                assert!(matches!(items[2], Value::ZeroT));
+            }
+            other => panic!("{other}"),
+        }
+    }
+
+    #[test]
+    fn switch_bprop_routes_to_taken_branch() {
+        let (_, g) = fprop_and_bprop(
+            Prim::Switch,
+            vec![Value::Bool(true), f(1.0), f(2.0)],
+            f(7.0),
+        );
+        assert!(matches!(g[1], Value::ZeroT)); // cond
+        assert_eq!(getf(&g[2]), 7.0);
+        assert!(matches!(g[3], Value::ZeroT));
+    }
+
+    #[test]
+    fn matmul_bprop_shapes() {
+        use crate::tensor::Tensor;
+        let a = Value::Tensor(Tensor::from_f64_shaped(vec![1., 2., 3., 4., 5., 6.], vec![2, 3]).unwrap());
+        let b = Value::Tensor(Tensor::from_f64_shaped(vec![1.; 12], vec![3, 4]).unwrap());
+        let d = Value::Tensor(Tensor::ones(crate::tensor::DType::F64, &[2, 4]));
+        let (_, g) = fprop_and_bprop(Prim::MatMul, vec![a, b], d);
+        assert_eq!(g[1].as_tensor().unwrap().shape(), &[2, 3]);
+        assert_eq!(g[2].as_tensor().unwrap().shape(), &[3, 4]);
+        // dx = d @ bᵀ = row sums of ones[3,4] = 4s
+        assert_eq!(g[1].as_tensor().unwrap().as_f64_vec(), vec![4.0; 6]);
+    }
+
+    #[test]
+    fn broadcast_add_bprop_sums() {
+        use crate::tensor::Tensor;
+        // [2,3] + [3] : gradient toward the [3] bias must sum over rows.
+        let a = Value::Tensor(Tensor::from_f64_shaped(vec![0.; 6], vec![2, 3]).unwrap());
+        let b = Value::Tensor(Tensor::from_f64(&[1., 2., 3.]));
+        let d = Value::Tensor(Tensor::ones(crate::tensor::DType::F64, &[2, 3]));
+        let (_, g) = fprop_and_bprop(Prim::Add, vec![a, b], d);
+        assert_eq!(g[1].as_tensor().unwrap().shape(), &[2, 3]);
+        assert_eq!(g[2].as_tensor().unwrap().shape(), &[3]);
+        assert_eq!(g[2].as_tensor().unwrap().as_f64_vec(), vec![2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn softmax_bprop_rows_sum_to_zero() {
+        use crate::tensor::Tensor;
+        let x = Value::Tensor(Tensor::from_f64_shaped(vec![1., 2., 3.], vec![1, 3]).unwrap());
+        let d = Value::Tensor(Tensor::from_f64_shaped(vec![1., 0., 0.], vec![1, 3]).unwrap());
+        let (_, g) = fprop_and_bprop(Prim::SoftmaxLast, vec![x], d);
+        let gx = g[1].as_tensor().unwrap().as_f64_vec();
+        let s: f64 = gx.iter().sum();
+        assert!(s.abs() < 1e-12, "softmax grad rows sum to 0, got {s}");
+    }
+
+    #[test]
+    fn env_bprops_roundtrip() {
+        // env_getitem then env_setitem adjoints compose
+        let mut env = crate::vm::EnvMap::new();
+        env.insert(5, f(2.0));
+        let envv = Value::Env(std::rc::Rc::new(env));
+        let (r, g) =
+            fprop_and_bprop(Prim::EnvGetItem, vec![envv, Value::Key(5)], f(3.0));
+        assert_eq!(getf(&r), 2.0);
+        match &g[1] {
+            Value::Env(e) => assert_eq!(getf(&e[&5]), 3.0),
+            other => panic!("{other}"),
+        }
+    }
+
+    #[test]
+    fn unsupported_bprop_raises_lazily() {
+        // forward works; calling the bprop raises.
+        let mut m = Module::new();
+        let fg = fprop_prim(&mut m, Prim::Mod, 2);
+        let program = compile_program(&m, fg).unwrap();
+        let vm = Vm::new(program);
+        let pair = vm.call_graph(fg, vec![f(7.0), f(3.0)]).unwrap();
+        let (r, bp) = match &pair {
+            Value::Tuple(items) => (items[0].clone(), items[1].clone()),
+            other => panic!("{other}"),
+        };
+        assert_eq!(getf(&r), 1.0);
+        let e = vm.call_value(&bp, vec![f(1.0)]).unwrap_err();
+        assert!(format!("{e}").contains("not supported"), "{e}");
+    }
+}

@@ -1,0 +1,277 @@
+//! Compile-time expansion of the AD macros.
+//!
+//! `grad(f)` in source code lowers to an application of the `grad` macro
+//! constant; this pass replaces each such application with a wrapper graph
+//! built around the J transform (Figure 1: "After the grad macro is
+//! expanded, a new graph ▶f is built"). Expansion iterates to a fixpoint so
+//! `grad(grad(f))` works — the wrapper of the inner expansion is ordinary
+//! IR, which J happily transforms again (reverse-over-reverse).
+
+use super::forward::FwdTransform;
+use super::jtransform::JTransform;
+use crate::ir::{analyze, Const, GraphId, MacroOp, Module, NodeId, Prim};
+use anyhow::{bail, Result};
+
+/// Expand every `grad`/`value_and_grad`/`jfwd` application reachable from
+/// `root`. Returns the number of macros expanded.
+pub fn expand_macros(m: &mut Module, root: GraphId) -> Result<usize> {
+    let mut j = JTransform::new();
+    let mut fwd = FwdTransform::new();
+    let mut count = 0usize;
+    loop {
+        let analysis = analyze(m, root);
+        let mut candidates: Vec<(NodeId, MacroOp)> = Vec::new();
+        for &g in &analysis.graphs {
+            for &n in analysis.order_of(g) {
+                let inputs = m.node(n).inputs();
+                if let Some(Const::Macro(op)) = m.node(inputs[0]).constant() {
+                    candidates.push((n, *op));
+                }
+            }
+        }
+        if candidates.is_empty() {
+            return Ok(count);
+        }
+        // Expand innermost first: a macro whose target function reaches no
+        // other macro application (so grad(grad(f)) transforms the already
+        // expanded inner wrapper — reverse-over-reverse).
+        let is_innermost = |m: &Module, n: NodeId| -> bool {
+            let Some(f) = m.as_graph(m.node(n).inputs()[1]) else {
+                return true; // will error with a clear message below
+            };
+            let sub = analyze(m, f);
+            for &g in &sub.graphs {
+                for &k in sub.order_of(g) {
+                    if matches!(m.node(m.node(k).inputs()[0]).constant(), Some(Const::Macro(_))) {
+                        return false;
+                    }
+                }
+            }
+            true
+        };
+        let (n, op) = candidates
+            .iter()
+            .copied()
+            .find(|&(n, _)| is_innermost(m, n))
+            .unwrap_or(candidates[0]);
+        let wrapper = expand_one(m, &mut j, &mut fwd, n, op)?;
+        let wc = m.graph_constant(wrapper);
+        m.replace_all_uses(n, wc);
+        count += 1;
+    }
+}
+
+fn expand_one(
+    m: &mut Module,
+    j: &mut JTransform,
+    fwd: &mut FwdTransform,
+    n: NodeId,
+    op: MacroOp,
+) -> Result<GraphId> {
+    let inputs = m.node(n).inputs().to_vec();
+    if inputs.len() != 2 {
+        bail!("`{op}` expects exactly one function argument, got {}", inputs.len() - 1);
+    }
+    let Some(f) = m.as_graph(inputs[1]) else {
+        bail!(
+            "`{op}` must be applied to a function literal (a `def` or lambda); \
+             got a dynamic value — bind the function to a name first"
+        );
+    };
+    if !analyze(m, f).free_vars(f).is_empty() {
+        bail!(
+            "`{op}` applied to `{}`, which captures variables from an enclosing scope; \
+             differentiate a closed function instead",
+            m.graph(f).name
+        );
+    }
+    let arity = m.graph(f).params.len();
+    if arity == 0 {
+        bail!("`{op}` applied to a zero-argument function");
+    }
+
+    match op {
+        MacroOp::Grad | MacroOp::ValueAndGrad => {
+            let jf = j.jgraph(m, f)?;
+            let w = m.add_graph(format!("∇{}", m.graph(f).name));
+            let params: Vec<NodeId> = (0..arity)
+                .map(|i| m.add_parameter(w, format!("x{i}")))
+                .collect();
+            // (value, bprop) = ▶f(x…)
+            let jfc = m.graph_constant(jf);
+            let mut call = vec![jfc];
+            call.extend(&params);
+            let pair = m.apply(w, call);
+            let i0 = m.constant(Const::I64(0));
+            let i1 = m.constant(Const::I64(1));
+            let val = m.apply_prim(w, Prim::TupleGetItem, &[pair, i0]);
+            let bp = m.apply_prim(w, Prim::TupleGetItem, &[pair, i1]);
+            // grads = bprop(1.0); `grad` requires a scalar-valued function,
+            // and the scalar seed broadcasts through rank-0 tensors too —
+            // matching Figure 1's "immediately called with the value 1.0".
+            let seed = m.constant(Const::F64(1.0));
+            let grads = m.apply(w, vec![bp, seed]);
+            let dx0 = m.apply_prim(w, Prim::TupleGetItem, &[grads, i1]);
+            // Concretize a possible ZeroT into a proper zero of x₀'s shape.
+            let zx = m.apply_prim(w, Prim::ZerosLike, &[params[0]]);
+            let dx0 = m.apply_prim(w, Prim::Gadd, &[dx0, zx]);
+            let ret = match op {
+                MacroOp::Grad => dx0,
+                MacroOp::ValueAndGrad => m.apply_prim_variadic(w, Prim::MakeTuple, &[val, dx0]),
+                MacroOp::Jfwd => unreachable!(),
+            };
+            m.set_return(w, ret);
+            Ok(w)
+        }
+        MacroOp::Jfwd => {
+            if arity != 1 {
+                bail!("`jfwd` currently supports single-argument functions (got {arity})");
+            }
+            let ff = fwd.fwd_graph(m, f)?;
+            let w = m.add_graph(format!("▷{}", m.graph(f).name));
+            let x = m.add_parameter(w, "x");
+            let dx = m.add_parameter(w, "dx");
+            let pair = m.apply_prim_variadic(w, Prim::MakeTuple, &[x, dx]);
+            let ffc = m.graph_constant(ff);
+            let out = m.apply(w, vec![ffc, pair]);
+            m.set_return(w, out);
+            Ok(w)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parser::compile_source;
+    use crate::vm::{compile_program, Value, Vm};
+
+    fn run(src: &str, entry: &str, args: Vec<Value>) -> Value {
+        let mut m = Module::new();
+        let graphs = compile_source(&mut m, src).unwrap();
+        let g = graphs[entry];
+        let n = expand_macros(&mut m, g).unwrap();
+        assert!(n > 0, "expected at least one macro expansion");
+        let program = compile_program(&m, g).unwrap();
+        Vm::new(program).call_graph(g, args).unwrap()
+    }
+
+    #[test]
+    fn grad_macro_end_to_end() {
+        // The exact program of Figure 1.
+        let src = "\
+def f(x):
+    return x ** 3.0
+
+def main(x):
+    return grad(f)(x)
+";
+        let r = run(src, "main", vec![Value::F64(2.0)]);
+        assert!((r.as_f64().unwrap() - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn value_and_grad_macro() {
+        let src = "\
+def f(x):
+    return sin(x) * x
+
+def main(x):
+    return value_and_grad(f)(x)
+";
+        let r = run(src, "main", vec![Value::F64(1.2)]);
+        match r {
+            Value::Tuple(items) => {
+                let v = items[0].as_f64().unwrap();
+                let g = items[1].as_f64().unwrap();
+                assert!((v - 1.2f64.sin() * 1.2).abs() < 1e-12);
+                assert!((g - (1.2f64.cos() * 1.2 + 1.2f64.sin())).abs() < 1e-12);
+            }
+            other => panic!("{other}"),
+        }
+    }
+
+    #[test]
+    fn grad_of_grad_second_derivative() {
+        // f = x³ → f'' = 6x (reverse-over-reverse!)
+        let src = "\
+def f(x):
+    return x ** 3.0
+
+def df(x):
+    return grad(f)(x)
+
+def main(x):
+    return grad(df)(x)
+";
+        let r = run(src, "main", vec![Value::F64(2.5)]);
+        assert!(
+            (r.as_f64().unwrap() - 15.0).abs() < 1e-9,
+            "6x at 2.5 = 15, got {}",
+            r.as_f64().unwrap()
+        );
+    }
+
+    #[test]
+    fn grad_with_control_flow() {
+        let src = "\
+def f(x):
+    y = 1.0
+    i = 0
+    while i < 4:
+        y = y * x
+        i = i + 1
+    return y
+
+def main(x):
+    return grad(f)(x)
+";
+        // y = x⁴ → 4x³
+        let r = run(src, "main", vec![Value::F64(1.5)]);
+        assert!((r.as_f64().unwrap() - 4.0 * 1.5f64.powi(3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grad_requires_function_literal() {
+        let src = "\
+def main(x):
+    return grad(x)(1.0)
+";
+        let mut m = Module::new();
+        let graphs = compile_source(&mut m, src).unwrap();
+        let e = expand_macros(&mut m, graphs["main"]).unwrap_err();
+        assert!(format!("{e}").contains("function literal"), "{e}");
+    }
+
+    #[test]
+    fn grad_of_capturing_closure_rejected() {
+        let src = "\
+def main(x):
+    g = lambda y: y * x
+    return grad(g)(1.0)
+";
+        let mut m = Module::new();
+        let graphs = compile_source(&mut m, src).unwrap();
+        let e = expand_macros(&mut m, graphs["main"]).unwrap_err();
+        assert!(format!("{e}").contains("captures"), "{e}");
+    }
+
+    #[test]
+    fn jfwd_macro_forward_mode() {
+        let src = "\
+def f(x):
+    return x * x * x
+
+def main(x, dx):
+    return jfwd(f)(x, dx)
+";
+        let r = run(src, "main", vec![Value::F64(2.0), Value::F64(1.0)]);
+        match r {
+            Value::Tuple(items) => {
+                assert!((items[0].as_f64().unwrap() - 8.0).abs() < 1e-12);
+                assert!((items[1].as_f64().unwrap() - 12.0).abs() < 1e-12);
+            }
+            other => panic!("{other}"),
+        }
+    }
+}

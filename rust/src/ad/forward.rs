@@ -1,0 +1,350 @@
+//! Forward-mode AD as a source transformation (§2.1: "forward mode is
+//! relatively straightforward to implement, e.g. using dual numbers").
+//!
+//! Every value in the transformed world is a `(primal, tangent)` pair —
+//! a dual number generalized to tuples and tensors. Function values are
+//! wrapped as `(▷f, ZeroT)` so higher-order code stays uniform: an
+//! application first projects the callee's primal slot, then calls it on
+//! pair arguments, receiving a pair. Control flow needs no special cases:
+//! `switch` selects between pairs, and the thunks the front end creates are
+//! ▷-transformed like any other graph, so loops and recursion differentiate
+//! forward too.
+
+use crate::ir::{analyze, Const, GraphId, Module, NodeId, Prim};
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+/// Forward-transform context (caches ▷graphs and ▷prims).
+#[derive(Default)]
+pub struct FwdTransform {
+    fgraphs: HashMap<GraphId, GraphId>,
+    fprims: HashMap<(Prim, usize), GraphId>,
+}
+
+impl FwdTransform {
+    pub fn new() -> FwdTransform {
+        FwdTransform::default()
+    }
+
+    /// Transform `g` and everything it reaches into ▷ form.
+    pub fn fwd_graph(&mut self, m: &mut Module, g: GraphId) -> Result<GraphId> {
+        if let Some(&fg) = self.fgraphs.get(&g) {
+            return Ok(fg);
+        }
+        let analysis = analyze(m, g);
+        for &h in &analysis.graphs {
+            if !self.fgraphs.contains_key(&h) {
+                let name = format!("▷{}", m.graph(h).name);
+                let fh = m.add_graph(name);
+                self.fgraphs.insert(h, fh);
+            }
+        }
+        let mut remap: HashMap<NodeId, NodeId> = HashMap::new();
+        for &h in &analysis.graphs {
+            let fh = self.fgraphs[&h];
+            if !m.graph(fh).params.is_empty() {
+                continue;
+            }
+            for &p in &m.graph(h).params.clone() {
+                let name = m.node(p).debug_name.clone().unwrap_or_default();
+                let fp = m.add_parameter(fh, format!("▷{name}"));
+                remap.insert(p, fp);
+            }
+        }
+        for &h in &analysis.graphs {
+            if m.graph(self.fgraphs[&h]).ret.is_some() {
+                continue;
+            }
+            let fh = self.fgraphs[&h];
+            for &n in &analysis.order_of(h).to_vec() {
+                let inputs = m.node(n).inputs().to_vec();
+                let fcallee = if let Some(p) = m.as_prim(inputs[0]) {
+                    let fp = self.fwd_prim_cached(m, p, inputs.len() - 1)?;
+                    m.graph_constant(fp)
+                } else {
+                    let fcallee_pair = self.fwd_operand(m, fh, &mut remap, inputs[0])?;
+                    let i0 = m.constant(Const::I64(0));
+                    m.apply_prim(fh, Prim::TupleGetItem, &[fcallee_pair, i0])
+                };
+                let mut call = vec![fcallee];
+                for &a in &inputs[1..] {
+                    call.push(self.fwd_operand(m, fh, &mut remap, a)?);
+                }
+                let out = m.apply(fh, call);
+                remap.insert(n, out);
+            }
+            let ret = m.graph(h).ret.ok_or_else(|| anyhow!("graph without return"))?;
+            let fret = self.fwd_operand(m, fh, &mut remap, ret)?;
+            m.set_return(fh, fret);
+        }
+        Ok(self.fgraphs[&g])
+    }
+
+    /// The pair value of an operand in ▷ land.
+    fn fwd_operand(
+        &mut self,
+        m: &mut Module,
+        fh: GraphId,
+        remap: &mut HashMap<NodeId, NodeId>,
+        o: NodeId,
+    ) -> Result<NodeId> {
+        if let Some(&mapped) = remap.get(&o) {
+            return Ok(mapped);
+        }
+        let constant = m.node(o).constant().cloned();
+        let zt = m.constant(Const::ZeroT);
+        match constant.as_ref() {
+            Some(Const::Graph(h)) => {
+                let fg = *self
+                    .fgraphs
+                    .get(h)
+                    .ok_or_else(|| anyhow!("graph {h} not in forward closure set"))?;
+                let fc = m.graph_constant(fg);
+                Ok(m.apply_prim_variadic(fh, Prim::MakeTuple, &[fc, zt]))
+            }
+            Some(Const::Prim(p)) => {
+                bail!("primitive `{p}` used as a first-class value under jfwd; wrap it in a lambda")
+            }
+            Some(Const::Macro(op)) => bail!("macro `{op}` must be expanded before jfwd"),
+            Some(_) => {
+                // Passive constant: tangent is a structural zero.
+                let z = m.apply_prim(fh, Prim::ZerosLike, &[o]);
+                Ok(m.apply_prim_variadic(fh, Prim::MakeTuple, &[o, z]))
+            }
+            None => bail!("operand {o} not transformed (outside the forward closure set)"),
+        }
+    }
+}
+
+/// Build the ▷prim graph for `p` at `arity` (cached by `FwdTransform`).
+pub fn fwd_prim(m: &mut Module, p: Prim, arity: usize) -> Result<GraphId> {
+    use Prim::*;
+    let fg = m.add_graph(format!("▷{}", p.name()));
+    let pairs: Vec<NodeId> = (0..arity).map(|i| m.add_parameter(fg, format!("p{i}"))).collect();
+    let i0 = m.constant(Const::I64(0));
+    let i1 = m.constant(Const::I64(1));
+    let xs: Vec<NodeId> =
+        pairs.iter().map(|&pp| m.apply_prim(fg, TupleGetItem, &[pp, i0])).collect();
+    let dxs: Vec<NodeId> =
+        pairs.iter().map(|&pp| m.apply_prim(fg, TupleGetItem, &[pp, i1])).collect();
+
+    // switch selects whole pairs; no primal computation at all.
+    if p == Switch {
+        let ret = m.apply_prim(fg, Switch, &[xs[0], pairs[1], pairs[2]]);
+        m.set_return(fg, ret);
+        return Ok(fg);
+    }
+
+    let val = m.apply_prim_variadic(fg, p, &xs);
+    macro_rules! ap {
+        ($prim:expr, $($arg:expr),*) => { m.apply_prim(fg, $prim, &[$($arg),*]) };
+    }
+
+    let tan = match p {
+        Add => ap!(Gadd, dxs[0], dxs[1]),
+        Sub => {
+            let nd = ap!(Neg, dxs[1]);
+            ap!(Gadd, dxs[0], nd)
+        }
+        Mul => {
+            let a = ap!(Mul, dxs[0], xs[1]);
+            let b = ap!(Mul, xs[0], dxs[1]);
+            ap!(Gadd, a, b)
+        }
+        Div => {
+            // dx/y - x·dy/y²
+            let a = ap!(Div, dxs[0], xs[1]);
+            let xy2 = ap!(Mul, xs[1], xs[1]);
+            let b0 = ap!(Mul, xs[0], dxs[1]);
+            let b1 = ap!(Div, b0, xy2);
+            let b = ap!(Neg, b1);
+            ap!(Gadd, a, b)
+        }
+        Pow => {
+            let one = m.constant(Const::F64(1.0));
+            let ym1 = ap!(Sub, xs[1], one);
+            let xym1 = ap!(Pow, xs[0], ym1);
+            let t1a = ap!(Mul, xs[1], xym1);
+            let t1 = ap!(Mul, dxs[0], t1a);
+            let lnx = ap!(Ln, xs[0]);
+            let t2a = ap!(Mul, val, lnx);
+            let t2 = ap!(Mul, dxs[1], t2a);
+            ap!(Gadd, t1, t2)
+        }
+        Maximum | Minimum => {
+            let diff = if p == Maximum { ap!(Sub, xs[0], xs[1]) } else { ap!(Sub, xs[1], xs[0]) };
+            let mask = ap!(Step, diff);
+            let one = m.constant(Const::F64(1.0));
+            let inv = ap!(Sub, one, mask);
+            let a = ap!(Mul, dxs[0], mask);
+            let b = ap!(Mul, dxs[1], inv);
+            ap!(Gadd, a, b)
+        }
+        Neg => ap!(Neg, dxs[0]),
+        Exp => ap!(Mul, dxs[0], val),
+        Ln => ap!(Div, dxs[0], xs[0]),
+        Tanh => {
+            let vv = ap!(Mul, val, val);
+            let one = m.constant(Const::F64(1.0));
+            let omv = ap!(Sub, one, vv);
+            ap!(Mul, dxs[0], omv)
+        }
+        Sqrt => {
+            let two = m.constant(Const::F64(2.0));
+            let tv = ap!(Mul, two, val);
+            ap!(Div, dxs[0], tv)
+        }
+        Sin => {
+            let c = ap!(Cos, xs[0]);
+            ap!(Mul, dxs[0], c)
+        }
+        Cos => {
+            let s = ap!(Sin, xs[0]);
+            let ds = ap!(Mul, dxs[0], s);
+            ap!(Neg, ds)
+        }
+        Relu => {
+            let mask = ap!(Step, xs[0]);
+            ap!(Mul, dxs[0], mask)
+        }
+        Sigmoid => {
+            let one = m.constant(Const::F64(1.0));
+            let omv = ap!(Sub, one, val);
+            let vomv = ap!(Mul, val, omv);
+            ap!(Mul, dxs[0], vomv)
+        }
+        Abs => {
+            let s = ap!(Sign, xs[0]);
+            ap!(Mul, dxs[0], s)
+        }
+        MakeTuple => m.apply_prim_variadic(fg, MakeTuple, &dxs),
+        TupleGetItem => ap!(TupleGetItem, dxs[0], xs[1]),
+        TupleInject => ap!(TupleInject, xs[0], xs[1], dxs[2]),
+        MatMul => {
+            let a = ap!(MatMul, dxs[0], xs[1]);
+            let b = ap!(MatMul, xs[0], dxs[1]);
+            ap!(Gadd, a, b)
+        }
+        Transpose => ap!(Transpose, dxs[0]),
+        Reshape => ap!(Reshape, dxs[0], xs[1]),
+        BroadcastTo => ap!(BroadcastTo, dxs[0], xs[1]),
+        SumTo => ap!(SumTo, dxs[0], xs[1]),
+        ReduceSum => ap!(ReduceSum, dxs[0]),
+        ReduceMean => ap!(ReduceMean, dxs[0]),
+        SumLastKeep => ap!(SumLastKeep, dxs[0]),
+        SumToLike => ap!(SumToLike, dxs[0], xs[1]),
+        BroadcastLike => ap!(BroadcastLike, dxs[0], xs[1]),
+        SoftmaxLast => {
+            // J·dx = r ⊙ (dx − Σ_last(r ⊙ dx))
+            let rd = ap!(Mul, val, dxs[0]);
+            let srd = ap!(SumLastKeep, rd);
+            let dm = ap!(Sub, dxs[0], srd);
+            ap!(Mul, val, dm)
+        }
+        Item => ap!(Item, dxs[0]),
+        ScalarToTensor => ap!(ScalarToTensor, dxs[0]),
+        CastF32 => ap!(CastF32, dxs[0]),
+        CastF64 => ap!(CastF64, dxs[0]),
+        Where => ap!(Where, xs[0], dxs[1], dxs[2]),
+        Gadd => ap!(Gadd, dxs[0], dxs[1]),
+        // Env values (appearing when jfwd is applied over a grad wrapper):
+        // the tangent of an env is the env of tangents, keyed identically.
+        NewEnv => m.apply_prim(fg, NewEnv, &[]),
+        EnvSetItem => ap!(EnvSetItem, dxs[0], xs[1], dxs[2]),
+        EnvGetItem => ap!(EnvGetItem, dxs[0], xs[1]),
+        Print => dxs[0],
+        // Non-differentiable or structural: zero tangent of the right shape.
+        _ if p.is_nondifferentiable() || matches!(p, TupleLen | ZerosLike | OnesLike) => {
+            ap!(ZerosLike, val)
+        }
+        other => bail!("forward-mode rule for `{other}` is not implemented"),
+    };
+    let ret = m.apply_prim_variadic(fg, MakeTuple, &[val, tan]);
+    m.set_return(fg, ret);
+    Ok(fg)
+}
+
+impl FwdTransform {
+    /// Cached ▷prim lookup used by `fwd_graph` operand resolution.
+    fn fwd_prim_cached(&mut self, m: &mut Module, p: Prim, arity: usize) -> Result<GraphId> {
+        if let Some(&fg) = self.fprims.get(&(p, arity)) {
+            return Ok(fg);
+        }
+        let fg = fwd_prim(m, p, arity)?;
+        self.fprims.insert((p, arity), fg);
+        Ok(fg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parser::compile_source;
+    use crate::vm::{compile_program, Value, Vm};
+
+    fn jvp(src: &str, entry: &str, x: f64, dx: f64) -> (f64, f64) {
+        let mut m = Module::new();
+        let graphs = compile_source(&mut m, src).unwrap();
+        let g = graphs[entry];
+        let mut fwd = FwdTransform::new();
+        let fg = fwd.fwd_graph(&mut m, g).unwrap();
+        let program = compile_program(&m, fg).unwrap();
+        let vm = Vm::new(program);
+        let pair = Value::tuple(vec![Value::F64(x), Value::F64(dx)]);
+        let out = vm.call_graph(fg, vec![pair]).unwrap();
+        match out {
+            Value::Tuple(items) => (items[0].as_f64().unwrap(), items[1].as_f64().unwrap()),
+            other => panic!("{other}"),
+        }
+    }
+
+    #[test]
+    fn polynomial_jvp() {
+        let (v, d) = jvp("def f(x):\n    return x * x * x\n", "f", 2.0, 1.0);
+        assert_eq!(v, 8.0);
+        assert!((d - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tangent_scales_linearly() {
+        let (_, d1) = jvp("def f(x):\n    return sin(x)\n", "f", 0.5, 1.0);
+        let (_, d3) = jvp("def f(x):\n    return sin(x)\n", "f", 0.5, 3.0);
+        assert!((d3 - 3.0 * d1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn control_flow_jvp() {
+        let src = "def f(x):\n    if x > 0.0:\n        return x * x\n    else:\n        return -x\n";
+        let (_, d) = jvp(src, "f", 3.0, 1.0);
+        assert!((d - 6.0).abs() < 1e-12);
+        let (_, d) = jvp(src, "f", -3.0, 1.0);
+        assert!((d + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loop_jvp() {
+        let src = "\
+def f(x):
+    i = 0
+    while i < 5:
+        x = x * 2.0
+        i = i + 1
+    return x
+";
+        let (_, d) = jvp(src, "f", 1.0, 1.0);
+        assert!((d - 32.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recursion_jvp() {
+        let src = "\
+def f(x):
+    return 1.0 if x <= 1.0 else x * f(x - 1.0)
+";
+        // f(3.5) = 3.5 * 2.5 * 1.5; d/dx via product rule
+        let (v, d) = jvp(src, "f", 3.5, 1.0);
+        assert!((v - 3.5 * 2.5 * 1.5).abs() < 1e-12);
+        let want = 2.5 * 1.5 + 3.5 * 1.5 + 3.5 * 2.5;
+        assert!((d - want).abs() < 1e-9, "got {d}, want {want}");
+    }
+}

@@ -1,0 +1,517 @@
+//! The `J` transform: closure-based source-transformation reverse-mode AD
+//! (§3.2), closely following Pearlmutter & Siskind's "Lambda the ultimate
+//! backpropagator" as adapted by Myia.
+//!
+//! Every function call is transformed to return an additional value — a
+//! closure called the *backpropagator*:
+//!
+//! ```text
+//! graph ▶f(▶x₁..▶xₙ) {
+//!   (▶a, ◀a) = ▶g(▶x…)        # for each apply a = g(x…) of f
+//!   graph ◀f(∇out) {           # nested: captures every ◀a (and forward
+//!     …reverse walk…           #   values via the prim bprops) — the
+//!     return (env, ∇x₁..∇xₙ)   #   closure-based store of intermediates
+//!   }
+//!   return (▶ret, ◀f)
+//! }
+//! ```
+//!
+//! The first slot of a backpropagator's output is the gradient with respect
+//! to the *called function itself*: ZeroT for primitives, an env keyed by
+//! node identity for closures. When the reverse walk reaches a graph
+//! constant, its accumulated env is unpacked into the sensitivities of the
+//! graph's free variables — the adjoint of closure creation. A function's
+//! own free-variable gradients are packed into the env it returns, to be
+//! unpacked by *its* creator. No tape exists anywhere: the chain of
+//! backpropagator closures *is* the store of intermediate variables, which
+//! is why the transform composes with itself (reverse-over-reverse) and is
+//! a legitimate target for ahead-of-time optimization (Figure 1).
+
+use super::bprops::fprop_prim;
+use crate::ir::{analyze, Const, GraphId, Module, NodeId, Prim, ScopeAnalysis};
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+/// The J transform context (caches ▶graphs and ▶prims across invocations).
+pub struct JTransform {
+    /// original graph → ▶graph
+    jgraphs: HashMap<GraphId, GraphId>,
+    /// (prim, arity) → ▶prim graph
+    jprims: HashMap<(Prim, usize), GraphId>,
+}
+
+impl Default for JTransform {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JTransform {
+    pub fn new() -> JTransform {
+        JTransform { jgraphs: HashMap::new(), jprims: HashMap::new() }
+    }
+
+    /// Transform `g` (and everything it reaches) into its ▶ form.
+    pub fn jgraph(&mut self, m: &mut Module, g: GraphId) -> Result<GraphId> {
+        if let Some(&jg) = self.jgraphs.get(&g) {
+            return Ok(jg);
+        }
+        let analysis = analyze(m, g);
+        // Create placeholder ▶graphs for every reachable graph first so that
+        // (mutually) recursive references resolve.
+        for &h in &analysis.graphs {
+            if !self.jgraphs.contains_key(&h) {
+                let name = format!("▶{}", m.graph(h).name);
+                let jh = m.add_graph(name);
+                self.jgraphs.insert(h, jh);
+            }
+        }
+        // fprop node remap, shared across the whole closure set so nested
+        // graphs see the ▶ versions of their free variables.
+        let mut remap: HashMap<NodeId, NodeId> = HashMap::new();
+        let mut bprop_map: HashMap<NodeId, NodeId> = HashMap::new();
+        // Parameters first (they may be captured across graphs).
+        for &h in &analysis.graphs {
+            let jh = self.jgraphs[&h];
+            if !m.graph(jh).params.is_empty() {
+                continue; // already transformed in an earlier invocation
+            }
+            for &p in &m.graph(h).params.clone() {
+                let name = m.node(p).debug_name.clone().unwrap_or_default();
+                let jp = m.add_parameter(jh, format!("▶{name}"));
+                remap.insert(p, jp);
+            }
+        }
+        for &h in &analysis.graphs {
+            if m.graph(self.jgraphs[&h]).ret.is_some() {
+                continue; // already fully built
+            }
+            self.transform_one(m, h, &analysis, &mut remap, &mut bprop_map)?;
+        }
+        Ok(self.jgraphs[&g])
+    }
+
+    /// ▶ value of an operand node within the transformed world.
+    fn fprop_operand(
+        &mut self,
+        m: &mut Module,
+        remap: &HashMap<NodeId, NodeId>,
+        o: NodeId,
+    ) -> Result<NodeId> {
+        if let Some(&mapped) = remap.get(&o) {
+            return Ok(mapped);
+        }
+        let node = m.node(o);
+        match node.constant() {
+            Some(Const::Graph(h)) => {
+                let jh = *self
+                    .jgraphs
+                    .get(h)
+                    .ok_or_else(|| anyhow!("graph {h} not in J closure set"))?;
+                Ok(m.graph_constant(jh))
+            }
+            Some(Const::Prim(p)) => {
+                bail!("primitive `{p}` used as a first-class value under grad; wrap it in a lambda")
+            }
+            Some(Const::Macro(op)) => bail!("macro `{op}` must be expanded before J"),
+            Some(_) => Ok(o), // passive constants stay
+            None => bail!(
+                "operand {o} not transformed (owned by a graph outside the J closure set)"
+            ),
+        }
+    }
+
+    /// ▶ form of a callee operand: prims become ▶prim graphs.
+    fn fprop_callee(
+        &mut self,
+        m: &mut Module,
+        remap: &HashMap<NodeId, NodeId>,
+        f: NodeId,
+        arity: usize,
+    ) -> Result<NodeId> {
+        if let Some(p) = m.as_prim(f) {
+            let key = (p, arity);
+            let jp = match self.jprims.get(&key) {
+                Some(&jp) => jp,
+                None => {
+                    let jp = fprop_prim(m, p, arity);
+                    self.jprims.insert(key, jp);
+                    jp
+                }
+            };
+            return Ok(m.graph_constant(jp));
+        }
+        self.fprop_operand(m, remap, f)
+    }
+
+    fn transform_one(
+        &mut self,
+        m: &mut Module,
+        h: GraphId,
+        analysis: &ScopeAnalysis,
+        remap: &mut HashMap<NodeId, NodeId>,
+        bprop_map: &mut HashMap<NodeId, NodeId>,
+    ) -> Result<()> {
+        let jh = self.jgraphs[&h];
+        let order: Vec<NodeId> = analysis.order_of(h).to_vec();
+
+        // ---- forward (▶) pass -------------------------------------------
+        for &n in &order {
+            let inputs = m.node(n).inputs().to_vec();
+            let jcallee = self.fprop_callee(m, remap, inputs[0], inputs.len() - 1)?;
+            let mut call_inputs = vec![jcallee];
+            for &a in &inputs[1..] {
+                call_inputs.push(self.fprop_operand(m, remap, a)?);
+            }
+            let pair = m.apply(jh, call_inputs);
+            let zero = m.constant(Const::I64(0));
+            let one = m.constant(Const::I64(1));
+            let val = m.apply_prim(jh, Prim::TupleGetItem, &[pair, zero]);
+            let bp = m.apply_prim(jh, Prim::TupleGetItem, &[pair, one]);
+            if let Some(name) = m.node(n).debug_name.clone() {
+                m.name_node(val, format!("▶{name}"));
+                m.name_node(bp, format!("◀{name}"));
+            }
+            remap.insert(n, val);
+            bprop_map.insert(n, bp);
+        }
+
+        // ---- build ◀h ----------------------------------------------------
+        let bg = m.add_graph(format!("◀{}", m.graph(h).name));
+        let dout = m.add_parameter(bg, "∇out");
+
+        // Sensitivity accumulation keyed by ORIGINAL node ids.
+        let mut sens: HashMap<NodeId, NodeId> = HashMap::new();
+        let ret = m.graph(h).ret.ok_or_else(|| anyhow!("graph without return"))?;
+        sens.insert(ret, dout);
+
+        // Which graph constants capture a given node (for env unpacking).
+        let mut capture_index: HashMap<NodeId, Vec<NodeId>> = HashMap::new();
+        let mut graph_consts: Vec<(NodeId, GraphId)> = Vec::new();
+        {
+            let mut seen = std::collections::HashSet::new();
+            for &n in &order {
+                for &inp in m.node(n).inputs() {
+                    if let Some(sub) = m.as_graph(inp) {
+                        if seen.insert(inp) {
+                            graph_consts.push((inp, sub));
+                            for &fv in analysis.free_vars(sub) {
+                                capture_index.entry(fv).or_default().push(inp);
+                            }
+                        }
+                    }
+                }
+            }
+            // The return node may itself be a closure constant.
+            if let Some(sub) = m.as_graph(ret) {
+                if seen.insert(ret) {
+                    graph_consts.push((ret, sub));
+                    for &fv in analysis.free_vars(sub) {
+                        capture_index.entry(fv).or_default().push(ret);
+                    }
+                }
+            }
+        }
+
+        let add_sens = |m: &mut Module,
+                        sens: &mut HashMap<NodeId, NodeId>,
+                        node: NodeId,
+                        contrib: NodeId| {
+            match sens.get(&node) {
+                Some(&existing) => {
+                    let summed = m.apply_prim(bg, Prim::Gadd, &[existing, contrib]);
+                    sens.insert(node, summed);
+                }
+                None => {
+                    sens.insert(node, contrib);
+                }
+            }
+        };
+
+        // Pull gradient contributions a node receives through closures that
+        // captured it (their envs are finalized before we reach the node,
+        // because captured values precede capture sites in `order`).
+        let collect_capture_sens = |this: &JTransform,
+                                    m: &mut Module,
+                                    sens: &mut HashMap<NodeId, NodeId>,
+                                    capture_index: &HashMap<NodeId, Vec<NodeId>>,
+                                    node: NodeId| {
+            let _ = this;
+            if let Some(captors) = capture_index.get(&node) {
+                for &cg in captors.clone().iter() {
+                    if let Some(&env_sens) = sens.get(&cg) {
+                        let key = m.constant(Const::Key(node.0 as u64));
+                        let contrib = m.apply_prim(bg, Prim::EnvGetItem, &[env_sens, key]);
+                        add_sens(m, sens, node, contrib);
+                    }
+                }
+            }
+        };
+
+        // Reverse walk.
+        for &n in order.iter().rev() {
+            collect_capture_sens(self, m, &mut sens, &capture_index, n);
+            let n_sens = match sens.get(&n) {
+                Some(&s) => s,
+                None => continue, // node does not influence the output
+            };
+            let bp = *bprop_map
+                .get(&n)
+                .ok_or_else(|| anyhow!("missing backpropagator for node {n}"))?;
+            let grads = m.apply(bg, vec![bp, n_sens]);
+            let inputs = m.node(n).inputs().to_vec();
+            // Gradient w.r.t. the callee (slot 0).
+            let callee = inputs[0];
+            let callee_node = m.node(callee);
+            let callee_is_prim = matches!(callee_node.constant(), Some(Const::Prim(_)));
+            if !callee_is_prim {
+                let zero_i = m.constant(Const::I64(0));
+                let dfn = m.apply_prim(bg, Prim::TupleGetItem, &[grads, zero_i]);
+                if !m.node(callee).is_constant() || m.as_graph(callee).is_some() {
+                    add_sens(m, &mut sens, callee, dfn);
+                }
+            }
+            // Gradients w.r.t. the arguments.
+            for (i, &arg) in inputs[1..].iter().enumerate() {
+                let arg_node = m.node(arg);
+                let interesting = !arg_node.is_constant() || m.as_graph(arg).is_some();
+                if !interesting {
+                    continue;
+                }
+                let idx = m.constant(Const::I64((i + 1) as i64));
+                let darg = m.apply_prim(bg, Prim::TupleGetItem, &[grads, idx]);
+                add_sens(m, &mut sens, arg, darg);
+            }
+        }
+
+        // Unpack envs of graph constants whose free variables are parameters
+        // or other leaves (their sens never got visited in the loop).
+        for &p in &m.graph(h).params.clone() {
+            collect_capture_sens(self, m, &mut sens, &capture_index, p);
+        }
+        for &fv in analysis.free_vars(h) {
+            collect_capture_sens(self, m, &mut sens, &capture_index, fv);
+        }
+
+        // Output env: gradients of h's own free variables, keyed by node.
+        let mut env = m.apply_prim(bg, Prim::NewEnv, &[]);
+        for &fv in analysis.free_vars(h) {
+            let key = m.constant(Const::Key(fv.0 as u64));
+            let val = match sens.get(&fv) {
+                Some(&s) => s,
+                None => m.constant(Const::ZeroT),
+            };
+            env = m.apply_prim(bg, Prim::EnvSetItem, &[env, key, val]);
+        }
+
+        // Return (env, ∇p₁.. ∇pₙ).
+        let mut ret_inputs = vec![m.constant(Const::Prim(Prim::MakeTuple)), env];
+        for &p in &m.graph(h).params.clone() {
+            let g = match sens.get(&p) {
+                Some(&s) => s,
+                None => m.constant(Const::ZeroT),
+            };
+            ret_inputs.push(g);
+        }
+        let bret = m.apply(bg, ret_inputs);
+        m.set_return(bg, bret);
+
+        // ▶h returns (▶ret, ◀h).
+        let jret_val = self.fprop_operand(m, remap, ret)?;
+        let bconst = m.graph_constant(bg);
+        let pair = m.apply_prim_variadic(jh, Prim::MakeTuple, &[jret_val, bconst]);
+        m.set_return(jh, pair);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parser::compile_source;
+    use crate::vm::{compile_program, Value, Vm};
+
+    /// grad of a 1-arg scalar function via the raw J machinery.
+    fn grad_at(src: &str, entry: &str, x: f64) -> f64 {
+        grad_multi(src, entry, &[x]).1[0]
+    }
+
+    /// Returns (value, grads) for an n-arg scalar function.
+    fn grad_multi(src: &str, entry: &str, xs: &[f64]) -> (f64, Vec<f64>) {
+        let mut m = Module::new();
+        let graphs = compile_source(&mut m, src).unwrap();
+        let g = graphs[entry];
+        let mut j = JTransform::new();
+        let jg = j.jgraph(&mut m, g).unwrap();
+        m.validate().unwrap();
+        let program = compile_program(&m, jg).unwrap();
+        let vm = Vm::new(program);
+        let args = xs.iter().map(|&v| Value::F64(v)).collect();
+        let pair = vm.call_graph(jg, args).unwrap();
+        let (val, bp) = match &pair {
+            Value::Tuple(items) => (items[0].clone(), items[1].clone()),
+            other => panic!("expected (value, bprop), got {other}"),
+        };
+        let grads = vm.call_value(&bp, vec![Value::F64(1.0)]).unwrap();
+        let gvec = match &grads {
+            Value::Tuple(items) => items[1..]
+                .iter()
+                .map(|v| v.as_f64().unwrap_or(0.0))
+                .collect::<Vec<f64>>(),
+            other => panic!("expected gradient tuple, got {other}"),
+        };
+        (val.as_f64().unwrap(), gvec)
+    }
+
+    #[test]
+    fn figure1_pow_gradient() {
+        // The paper's Figure 1 program: f(x) = x ** 3.
+        let d = grad_at("def f(x):\n    return x ** 3.0\n", "f", 2.0);
+        assert!((d - 12.0).abs() < 1e-12, "d/dx x³ at 2 = 12, got {d}");
+    }
+
+    #[test]
+    fn product_and_chain_rule() {
+        let d = grad_at("def f(x):\n    return x * x * x + 2.0 * x\n", "f", 3.0);
+        assert!((d - 29.0).abs() < 1e-12, "3x²+2 at 3 = 29, got {d}");
+        let d = grad_at("def f(x):\n    return exp(sin(x))\n", "f", 0.7);
+        let want = (0.7f64).sin().exp() * (0.7f64).cos();
+        assert!((d - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multiple_arguments() {
+        let (v, g) = grad_multi("def f(x, y):\n    return x * y + y\n", "f", &[3.0, 4.0]);
+        assert_eq!(v, 16.0);
+        assert_eq!(g[0], 4.0); // df/dx = y
+        assert_eq!(g[1], 4.0); // df/dy = x + 1
+    }
+
+    #[test]
+    fn function_calls_differentiate() {
+        let src = "\
+def square(t):
+    return t * t
+
+def f(x):
+    return square(x) + square(x + 1.0)
+";
+        let d = grad_at(src, "f", 2.0);
+        assert!((d - 10.0).abs() < 1e-12); // 2x + 2(x+1) = 10 at x=2
+    }
+
+    #[test]
+    fn closure_gradient_through_free_variable() {
+        // g captures x; gradient must flow through the env mechanism.
+        let src = "\
+def f(x):
+    def g(y):
+        return y * x
+    return g(3.0) + g(4.0)
+";
+        let d = grad_at(src, "f", 5.0);
+        assert!((d - 7.0).abs() < 1e-12, "d/dx (3x + 4x) = 7, got {d}");
+    }
+
+    #[test]
+    fn conditional_gradient() {
+        let src = "def f(x):\n    if x > 0.0:\n        return x * x\n    else:\n        return -x\n";
+        assert!((grad_at(src, "f", 3.0) - 6.0).abs() < 1e-12);
+        assert!((grad_at(src, "f", -3.0) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loop_gradient() {
+        // f(x) = x * 2^5 via a loop: df/dx = 32
+        let src = "\
+def f(x):
+    i = 0
+    while i < 5:
+        x = x * 2.0
+        i = i + 1
+    return x
+";
+        let d = grad_at(src, "f", 1.5);
+        assert!((d - 32.0).abs() < 1e-12, "got {d}");
+    }
+
+    #[test]
+    fn recursive_gradient() {
+        // pow_rec(x, n) = x^n by recursion; d/dx x^5 = 5x⁴
+        let src = "\
+def pow_rec(x, n):
+    if n == 0:
+        return 1.0
+    return x * pow_rec(x, n - 1)
+
+def f(x):
+    return pow_rec(x, 5)
+";
+        let d = grad_at(src, "f", 2.0);
+        assert!((d - 80.0).abs() < 1e-12, "5·2⁴ = 80, got {d}");
+    }
+
+    #[test]
+    fn higher_order_function_gradient() {
+        let src = "\
+def apply_twice(fn, x):
+    return fn(fn(x))
+
+def f(x):
+    def cube(t):
+        return t * t * t
+    return apply_twice(cube, x)
+";
+        // (x³)³ = x⁹ → 9x⁸
+        let d = grad_at(src, "f", 1.1);
+        let want = 9.0 * (1.1f64).powi(8);
+        assert!((d - want).abs() < 1e-9, "got {d}, want {want}");
+    }
+
+    #[test]
+    fn unused_argument_gets_zero() {
+        let (_, g) = grad_multi("def f(x, y):\n    return x * x\n", "f", &[3.0, 4.0]);
+        assert_eq!(g[0], 6.0);
+        assert_eq!(g[1], 0.0); // ZeroT coerced by as_f64().unwrap_or(0.0)
+    }
+
+    #[test]
+    fn tuple_routing_gradient() {
+        let src = "\
+def f(x):
+    t = (x * 2.0, x * 3.0)
+    return t[0] * t[1]
+";
+        // 6x² → 12x
+        let d = grad_at(src, "f", 2.0);
+        assert!((d - 24.0).abs() < 1e-12, "got {d}");
+    }
+
+    #[test]
+    fn tensor_gradient_through_j() {
+        use crate::tensor::Tensor;
+        let src = "def f(w):\n    return item(sum(w * w))\n";
+        let mut m = Module::new();
+        let graphs = compile_source(&mut m, src).unwrap();
+        let g = graphs["f"];
+        let mut j = JTransform::new();
+        let jg = j.jgraph(&mut m, g).unwrap();
+        let program = compile_program(&m, jg).unwrap();
+        let vm = Vm::new(program);
+        let w = Value::Tensor(Tensor::from_f64(&[1.0, -2.0, 3.0]));
+        let pair = vm.call_graph(jg, vec![w]).unwrap();
+        let (v, bp) = match &pair {
+            Value::Tuple(items) => (items[0].clone(), items[1].clone()),
+            other => panic!("{other}"),
+        };
+        assert_eq!(v.as_f64().unwrap(), 14.0);
+        let grads = vm.call_value(&bp, vec![Value::F64(1.0)]).unwrap();
+        match &grads {
+            Value::Tuple(items) => {
+                let gw = items[1].as_tensor().unwrap();
+                assert_eq!(gw.as_f64_vec(), vec![2.0, -4.0, 6.0]);
+            }
+            other => panic!("{other}"),
+        }
+    }
+}

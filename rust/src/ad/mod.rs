@@ -1,0 +1,18 @@
+//! Automatic differentiation (§2.1, §3.2).
+//!
+//! * [`jtransform`] — the closure-based source-transformation reverse mode:
+//!   tape-free, ahead-of-time optimizable, composable with itself.
+//! * [`bprops`] — backpropagators of primitives.
+//! * [`expand`] — compile-time expansion of the `grad` / `value_and_grad` /
+//!   `jfwd` macros (Figure 1's "after the grad macro is expanded").
+//! * [`forward`] — forward-mode AD as a source transformation over
+//!   (primal, tangent) pairs (§2.1 "dual numbers").
+
+pub mod bprops;
+pub mod expand;
+pub mod forward;
+pub mod jtransform;
+
+
+pub use expand::expand_macros;
+pub use jtransform::JTransform;

@@ -1,0 +1,599 @@
+//! The compiled backend for straight-line graph parts.
+//!
+//! "We also implemented a prototype which compiles the straight-line parts
+//! of the graph using TVM" (§4) — here the role is played by XLA via PJRT.
+//! After VM codegen, [`install_segments`] scans each code object for maximal
+//! runs of consecutive tensor-primitive instructions, replaces each run with
+//! one `XlaCall`, and registers a [`XlaSegment`] runner. Segments are
+//! compiled *lazily, per shape signature*, mirroring Myia's call-site
+//! specialization (§4.2): the first execution with a given set of argument
+//! shapes builds and compiles the `XlaComputation`; later executions hit the
+//! cache. If a segment cannot be lowered for some signature it falls back to
+//! interpreting the same primitive list — the backend is an optimization,
+//! never a semantics change.
+
+use crate::ir::Prim;
+use crate::runtime::{dtype_to_elem, dtype_to_prim, LoadedExec, XlaRuntime};
+use crate::tensor::{ops::broadcast_shapes, DType, Tensor};
+use crate::vm::{eval_prim, CodeObject, Instr, Program, SegmentRunner, Value, Vm};
+use anyhow::{anyhow, bail, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Primitives the segment extractor may move into XLA.
+pub fn lowerable(p: Prim) -> bool {
+    use Prim::*;
+    matches!(
+        p,
+        Add | Sub
+            | Mul
+            | Div
+            | Pow
+            | Neg
+            | Exp
+            | Ln
+            | Tanh
+            | Sqrt
+            | Sin
+            | Cos
+            | Relu
+            | Sigmoid
+            | Abs
+            | Maximum
+            | Minimum
+            | Step
+            | MatMul
+            | Transpose
+            | ReduceSum
+            | ReduceMean
+            | SumLastKeep
+            | SoftmaxLast
+    )
+}
+
+/// One argument of an inner segment instruction.
+#[derive(Debug, Clone)]
+pub enum SegArg {
+    /// i-th segment parameter (an external register).
+    Param(usize),
+    /// Result of the i-th inner instruction.
+    Inner(usize),
+    /// A constant embedded at extraction time.
+    Const(Value),
+}
+
+/// The extracted segment specification.
+#[derive(Debug)]
+pub struct SegSpec {
+    pub prims: Vec<(Prim, Vec<SegArg>)>,
+    pub n_params: usize,
+    /// Indices of inner instructions whose results leave the segment.
+    pub outputs: Vec<usize>,
+    pub name: String,
+}
+
+/// Install XLA segments into a compiled VM. Returns the segment count.
+pub fn install_segments(vm: &mut Vm) -> Result<usize> {
+    let runtime = Rc::new(XlaRuntime::cpu()?);
+    install_segments_with(vm, runtime, 2)
+}
+
+/// As [`install_segments`] with an explicit runtime and minimum run length.
+pub fn install_segments_with(
+    vm: &mut Vm,
+    runtime: Rc<XlaRuntime>,
+    min_len: usize,
+) -> Result<usize> {
+    let program = vm.program.clone();
+    let mut new_codes: Vec<Rc<CodeObject>> = Vec::with_capacity(program.codes.len());
+    let mut segments: Vec<Rc<dyn SegmentRunner>> = std::mem::take(&mut vm.segments);
+    let mut count = 0usize;
+
+    for code in &program.codes {
+        let (new_code, specs) = extract(code, &program, min_len);
+        let mut rewritten = new_code;
+        for (slot, spec) in specs {
+            let exec_idx = segments.len();
+            segments.push(Rc::new(XlaSegment::new(spec, runtime.clone())));
+            // Patch the placeholder exec index.
+            if let Instr::XlaCall { exec, .. } = &mut rewritten.instrs[slot] {
+                *exec = exec_idx;
+            }
+            count += 1;
+        }
+        new_codes.push(Rc::new(rewritten));
+    }
+
+    vm.program = Rc::new(Program {
+        codes: new_codes,
+        consts: program.consts.clone(),
+        graph_code: program.graph_code.clone(),
+    });
+    vm.segments = segments;
+    Ok(count)
+}
+
+/// Scan one code object; replace lowerable runs with XlaCall placeholders.
+fn extract(code: &CodeObject, program: &Program, min_len: usize) -> (CodeObject, Vec<(usize, SegSpec)>) {
+    let instrs = &code.instrs;
+    // Constants materialized earlier in this frame (SSA ⇒ safe to embed).
+    let mut const_regs: HashMap<u32, Value> = HashMap::new();
+    let mut out_instrs: Vec<Instr> = Vec::with_capacity(instrs.len());
+    let mut specs: Vec<(usize, SegSpec)> = Vec::new();
+
+    let mut i = 0usize;
+    while i < instrs.len() {
+        if let Instr::Const { dst, idx } = &instrs[i] {
+            const_regs.insert(*dst, program.consts[*idx].clone());
+        }
+        // Try to grow a run starting at i.
+        let mut j = i;
+        while j < instrs.len() {
+            match &instrs[j] {
+                Instr::CallPrim { prim, .. } if lowerable(*prim) => j += 1,
+                _ => break,
+            }
+        }
+        if j - i < min_len {
+            out_instrs.push(instrs[i].clone());
+            i += 1;
+            continue;
+        }
+        // Build the spec for instrs[i..j].
+        let run = &instrs[i..j];
+        let mut reg_to_inner: HashMap<u32, usize> = HashMap::new();
+        let mut params: Vec<u32> = Vec::new();
+        let mut prims: Vec<(Prim, Vec<SegArg>)> = Vec::new();
+        for (k, ins) in run.iter().enumerate() {
+            let (prim, args, dst) = match ins {
+                Instr::CallPrim { dst, prim, args } => (*prim, args, *dst),
+                _ => unreachable!(),
+            };
+            let sargs = args
+                .iter()
+                .map(|r| {
+                    if let Some(&inner) = reg_to_inner.get(r) {
+                        SegArg::Inner(inner)
+                    } else if let Some(c) = const_regs.get(r) {
+                        SegArg::Const(c.clone())
+                    } else if let Some(pos) = params.iter().position(|p| p == r) {
+                        SegArg::Param(pos)
+                    } else {
+                        params.push(*r);
+                        SegArg::Param(params.len() - 1)
+                    }
+                })
+                .collect();
+            prims.push((prim, sargs));
+            reg_to_inner.insert(dst, k);
+        }
+        // Outputs: registers written in the run and read after it.
+        let mut outputs: Vec<usize> = Vec::new();
+        let mut out_regs: Vec<u32> = Vec::new();
+        let reads_after: Vec<u32> = instrs[j..]
+            .iter()
+            .flat_map(|ins| match ins {
+                Instr::CallPrim { args, .. } | Instr::TailCall { args, .. } => args.clone(),
+                Instr::Call { func, args, .. } => {
+                    let mut v = vec![*func];
+                    v.extend(args);
+                    v
+                }
+                Instr::MakeClosure { captures, .. } => captures.clone(),
+                Instr::Return { src } => vec![*src],
+                Instr::XlaCall { args, .. } => args.clone(),
+                Instr::Const { .. } => vec![],
+            })
+            .collect();
+        for (&reg, &inner) in &reg_to_inner {
+            if reads_after.contains(&reg) && !out_regs.contains(&reg) {
+                out_regs.push(reg);
+                outputs.push(inner);
+            }
+        }
+        // Deterministic order.
+        let mut pairs: Vec<(u32, usize)> = out_regs.iter().copied().zip(outputs.iter().copied()).collect();
+        pairs.sort();
+        let (out_regs, outputs): (Vec<u32>, Vec<usize>) = pairs.into_iter().unzip();
+        if outputs.is_empty() {
+            // Entire run is dead (possible after optimization) — drop it.
+            i = j;
+            continue;
+        }
+        let slot = out_instrs.len();
+        out_instrs.push(Instr::XlaCall { dsts: out_regs, exec: usize::MAX, args: params.clone() });
+        specs.push((
+            slot,
+            SegSpec {
+                prims,
+                n_params: params.len(),
+                outputs,
+                name: format!("{}#seg{}", code.name, specs.len()),
+            },
+        ));
+        i = j;
+    }
+
+    (
+        CodeObject {
+            name: code.name.clone(),
+            n_params: code.n_params,
+            n_captures: code.n_captures,
+            n_regs: code.n_regs,
+            instrs: out_instrs,
+        },
+        specs,
+    )
+}
+
+/// Shape signature of a call.
+type Sig = Vec<(DType, Vec<usize>)>;
+
+enum CompiledSeg {
+    Xla(LoadedExec),
+    /// Lowering failed for this signature: interpret the primitive list.
+    Fallback,
+}
+
+/// A lazily-compiled XLA segment.
+pub struct XlaSegment {
+    spec: SegSpec,
+    runtime: Rc<XlaRuntime>,
+    cache: RefCell<HashMap<Sig, Rc<CompiledSeg>>>,
+}
+
+impl XlaSegment {
+    pub fn new(spec: SegSpec, runtime: Rc<XlaRuntime>) -> XlaSegment {
+        XlaSegment { spec, runtime, cache: RefCell::new(HashMap::new()) }
+    }
+
+    fn arg_tensor(v: &Value) -> Result<Tensor> {
+        v.to_tensor()
+            .ok_or_else(|| anyhow!("segment argument is not tensor-like: {}", v.type_name()))
+    }
+
+    /// Interpret the spec with the VM's own primitive evaluator.
+    fn run_fallback(&self, args: &[Value]) -> Result<Value> {
+        let mut results: Vec<Value> = Vec::with_capacity(self.spec.prims.len());
+        for (p, sargs) in &self.spec.prims {
+            let vals: Vec<Value> = sargs
+                .iter()
+                .map(|a| match a {
+                    SegArg::Param(i) => args[*i].clone(),
+                    SegArg::Inner(i) => results[*i].clone(),
+                    SegArg::Const(c) => c.clone(),
+                })
+                .collect();
+            results.push(eval_prim(*p, &vals)?);
+        }
+        let outs: Vec<Value> = self.spec.outputs.iter().map(|&i| results[i].clone()).collect();
+        Ok(if outs.len() == 1 { outs.into_iter().next().unwrap() } else { Value::tuple(outs) })
+    }
+
+    /// Build the XLA computation for a concrete signature.
+    fn build(&self, sig: &Sig) -> Result<LoadedExec> {
+        let builder = xla::XlaBuilder::new(&self.spec.name);
+        let mut param_ops: Vec<(xla::XlaOp, DType, Vec<usize>)> = Vec::new();
+        for (i, (dtype, shape)) in sig.iter().enumerate() {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let shape_obj = xla::Shape::array_with_type(dtype_to_elem(*dtype), dims);
+            let op = builder
+                .parameter_s(i as i64, &shape_obj, &format!("p{i}"))
+                .map_err(|e| anyhow!("xla: {e}"))?;
+            param_ops.push((op, *dtype, shape.clone()));
+        }
+        let mut vals: Vec<(xla::XlaOp, DType, Vec<usize>)> = Vec::new();
+        for (p, sargs) in &self.spec.prims {
+            let ops: Vec<(xla::XlaOp, DType, Vec<usize>)> = sargs
+                .iter()
+                .map(|a| -> Result<_> {
+                    Ok(match a {
+                        SegArg::Param(i) => param_ops[*i].clone(),
+                        SegArg::Inner(i) => vals[*i].clone(),
+                        SegArg::Const(c) => lower_const(&builder, c)?,
+                    })
+                })
+                .collect::<Result<_>>()?;
+            vals.push(lower_prim(&builder, *p, &ops)?);
+        }
+        let out_ops: Vec<xla::XlaOp> =
+            self.spec.outputs.iter().map(|&i| vals[i].0.clone()).collect();
+        let root = if out_ops.len() == 1 {
+            out_ops.into_iter().next().unwrap()
+        } else {
+            builder.tuple(&out_ops).map_err(|e| anyhow!("xla: {e}"))?
+        };
+        let comp = root.build().map_err(|e| anyhow!("xla: {e}"))?;
+        self.runtime.compile(&comp)
+    }
+}
+
+impl SegmentRunner for XlaSegment {
+    fn run(&self, args: &[Value]) -> Result<Value> {
+        let tensors: Vec<Tensor> = match args.iter().map(Self::arg_tensor).collect() {
+            Ok(t) => t,
+            Err(_) => return self.run_fallback(args),
+        };
+        let sig: Sig = tensors.iter().map(|t| (t.dtype(), t.shape().to_vec())).collect();
+        let compiled = {
+            let mut cache = self.cache.borrow_mut();
+            match cache.get(&sig) {
+                Some(c) => c.clone(),
+                None => {
+                    let c = Rc::new(match self.build(&sig) {
+                        Ok(exec) => CompiledSeg::Xla(exec),
+                        Err(_) => CompiledSeg::Fallback,
+                    });
+                    cache.insert(sig.clone(), c.clone());
+                    c
+                }
+            }
+        };
+        match &*compiled {
+            CompiledSeg::Fallback => self.run_fallback(args),
+            CompiledSeg::Xla(exec) => {
+                let outs = exec.run(&tensors)?;
+                let vals: Vec<Value> = outs.into_iter().map(Value::Tensor).collect();
+                Ok(if vals.len() == 1 {
+                    vals.into_iter().next().unwrap()
+                } else {
+                    Value::tuple(vals)
+                })
+            }
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "{}: {} ops, {} params, {} outputs, {} compiled signatures",
+            self.spec.name,
+            self.spec.prims.len(),
+            self.spec.n_params,
+            self.spec.outputs.len(),
+            self.cache.borrow().len()
+        )
+    }
+}
+
+/// Lower one primitive to an XlaOp given (op, dtype, shape) operands.
+fn lower_prim(
+    builder: &xla::XlaBuilder,
+    p: Prim,
+    args: &[(xla::XlaOp, DType, Vec<usize>)],
+) -> Result<(xla::XlaOp, DType, Vec<usize>)> {
+    use Prim::*;
+    let e = |e: xla::Error| anyhow!("xla: {e}");
+
+    // Promote + broadcast binary operands NumPy-style.
+    let bin = |op: &dyn Fn(&xla::XlaOp, &xla::XlaOp) -> std::result::Result<xla::XlaOp, xla::Error>|
+     -> Result<(xla::XlaOp, DType, Vec<usize>)> {
+        let (a, da, sa) = &args[0];
+        let (b, db, sb) = &args[1];
+        let dtype = promote(*da, *db);
+        let shape = broadcast_shapes(sa, sb).map_err(|er| anyhow!("{er}"))?;
+        let a = cast_op(a, *da, dtype)?;
+        let b = cast_op(b, *db, dtype)?;
+        let a = broadcast_op(&a, sa, &shape)?;
+        let b = broadcast_op(&b, sb, &shape)?;
+        Ok((op(&a, &b).map_err(e)?, dtype, shape))
+    };
+    let un = |op: &dyn Fn(&xla::XlaOp) -> std::result::Result<xla::XlaOp, xla::Error>|
+     -> Result<(xla::XlaOp, DType, Vec<usize>)> {
+        let (a, da, sa) = &args[0];
+        let dtype = if da.is_float() { *da } else { DType::F64 };
+        let a = cast_op(a, *da, dtype)?;
+        Ok((op(&a).map_err(e)?, dtype, sa.clone()))
+    };
+
+    match p {
+        Add => bin(&|a, b| a.add_(b)),
+        Sub => bin(&|a, b| a.sub_(b)),
+        Mul => bin(&|a, b| a.mul_(b)),
+        Div => bin(&|a, b| a.div_(b)),
+        Pow => bin(&|a, b| a.pow(b)),
+        Maximum => bin(&|a, b| a.max(b)),
+        Minimum => bin(&|a, b| a.min(b)),
+        Neg => un(&|a| a.neg()),
+        Exp => un(&|a| a.exp()),
+        Ln => un(&|a| a.log()),
+        Tanh => un(&|a| a.tanh()),
+        Sqrt => un(&|a| a.sqrt()),
+        Sin => un(&|a| a.sin()),
+        Cos => un(&|a| a.cos()),
+        Sigmoid => un(&|a| a.logistic()),
+        Abs => un(&|a| a.abs()),
+        Relu => {
+            let (a, da, sa) = &args[0];
+            let z = a.zeros_like().map_err(e)?;
+            Ok((a.max(&z).map_err(e)?, *da, sa.clone()))
+        }
+        Step => {
+            let (a, da, sa) = &args[0];
+            let z = a.zeros_like().map_err(e)?;
+            let pred = a.gt(&z).map_err(e)?;
+            let out = pred.convert(dtype_to_prim(if da.is_float() { *da } else { DType::F64 })).map_err(e)?;
+            Ok((out, if da.is_float() { *da } else { DType::F64 }, sa.clone()))
+        }
+        MatMul => {
+            let (a, da, sa) = &args[0];
+            let (b, db, sb) = &args[1];
+            if sa.len() != 2 || sb.len() != 2 {
+                bail!("segment matmul supports rank-2 only");
+            }
+            if sa[1] != sb[0] {
+                bail!("matmul inner dim mismatch {sa:?} @ {sb:?}");
+            }
+            let dtype = promote(*da, *db);
+            let a = cast_op(a, *da, dtype)?;
+            let b = cast_op(b, *db, dtype)?;
+            Ok((a.matmul(&b).map_err(e)?, dtype, vec![sa[0], sb[1]]))
+        }
+        Transpose => {
+            let (a, da, sa) = &args[0];
+            if sa.len() != 2 {
+                return Ok((a.clone(), *da, sa.clone()));
+            }
+            Ok((a.transpose(&[1, 0]).map_err(e)?, *da, vec![sa[1], sa[0]]))
+        }
+        ReduceSum | ReduceMean => {
+            let (a, da, sa) = &args[0];
+            let dims: Vec<i64> = (0..sa.len() as i64).collect();
+            let out = if p == ReduceSum {
+                a.reduce_sum(&dims, false).map_err(e)?
+            } else {
+                a.reduce_mean(&dims, false).map_err(e)?
+            };
+            Ok((out, *da, vec![]))
+        }
+        SumLastKeep => {
+            let (a, da, sa) = &args[0];
+            if sa.is_empty() {
+                return Ok((a.clone(), *da, sa.clone()));
+            }
+            let last = sa.len() as i64 - 1;
+            let out = a.reduce_sum(&[last], true).map_err(e)?;
+            let mut shape = sa.clone();
+            *shape.last_mut().unwrap() = 1;
+            Ok((out, *da, shape))
+        }
+        SoftmaxLast => {
+            let (a, da, sa) = &args[0];
+            let out = a.softmax(-1).map_err(e)?;
+            Ok((out, *da, sa.clone()))
+        }
+        other => bail!("primitive `{other}` is not lowerable"),
+    }
+}
+
+fn promote(a: DType, b: DType) -> DType {
+    use DType::*;
+    match (a, b) {
+        (F64, _) | (_, F64) => F64,
+        (F32, _) | (_, F32) => F32,
+        (I64, _) | (_, I64) => I64,
+        _ => Bool,
+    }
+}
+
+fn cast_op(op: &xla::XlaOp, from: DType, to: DType) -> Result<xla::XlaOp> {
+    if from == to {
+        return Ok(op.clone());
+    }
+    op.convert(dtype_to_prim(to)).map_err(|e| anyhow!("xla: {e}"))
+}
+
+/// NumPy-style broadcast of `op` (shape `from`) to `to`.
+fn broadcast_op(op: &xla::XlaOp, from: &[usize], to: &[usize]) -> Result<xla::XlaOp> {
+    if from == to {
+        return Ok(op.clone());
+    }
+    let offset = to.len() - from.len();
+    let bcast_dims: Vec<i64> = (0..from.len()).map(|i| (i + offset) as i64).collect();
+    let out_dims: Vec<i64> = to.iter().map(|&d| d as i64).collect();
+    op.broadcast_in_dim(&out_dims, &bcast_dims).map_err(|e| anyhow!("xla: {e}"))
+}
+
+fn lower_const(builder: &xla::XlaBuilder, c: &Value) -> Result<(xla::XlaOp, DType, Vec<usize>)> {
+    match c {
+        Value::F64(v) => Ok((builder.c0(*v).map_err(|e| anyhow!("xla: {e}"))?, DType::F64, vec![])),
+        Value::I64(v) => Ok((builder.c0(*v).map_err(|e| anyhow!("xla: {e}"))?, DType::I64, vec![])),
+        Value::Tensor(t) => {
+            let lit = crate::runtime::tensor_to_literal(t)?;
+            let op = builder.constant_literal(&lit).map_err(|e| anyhow!("xla: {e}"))?;
+            Ok((op, t.dtype(), t.shape().to_vec()))
+        }
+        other => bail!("constant of type {} not lowerable", other.type_name()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Options, Session};
+
+    fn run_both(src: &str, entry: &str, args: Vec<Value>) -> (Value, Value, usize) {
+        let mut s = Session::from_source(src).unwrap();
+        let plain = s.compile(entry, Options::default()).unwrap();
+        let v1 = plain.call(args.clone()).unwrap();
+        let mut s2 = Session::from_source(src).unwrap();
+        let xla = s2
+            .compile(entry, Options { xla_backend: true, ..Default::default() })
+            .unwrap();
+        let v2 = xla.call(args).unwrap();
+        (v1, v2, xla.metrics.xla_segments)
+    }
+
+    fn t(v: Vec<f64>, s: Vec<usize>) -> Value {
+        Value::Tensor(Tensor::from_f64_shaped(v, s).unwrap())
+    }
+
+    #[test]
+    fn segment_matches_interpreter() {
+        let src = "def f(w, x, b):\n    return tanh(matmul(w, x) + b)\n";
+        let w = t(vec![1., 2., 3., 4.], vec![2, 2]);
+        let x = t(vec![0.5, -0.5, 1.0, 0.25], vec![2, 2]);
+        let b = t(vec![0.1, -0.1], vec![2, 1]);
+        let (v1, v2, nseg) = run_both(src, "f", vec![w, x, b]);
+        assert!(nseg >= 1, "expected at least one segment");
+        let (t1, t2) = (v1.as_tensor().unwrap(), v2.as_tensor().unwrap());
+        assert!(t1.allclose(t2, 1e-9), "{t1:?} vs {t2:?}");
+    }
+
+    #[test]
+    fn gradient_through_segments() {
+        let src = "\
+def loss(w):
+    return item(sum(tanh(w * w)))
+
+def main(w):
+    return grad(loss)(w)
+";
+        let w = t(vec![0.5, -1.0, 2.0], vec![3]);
+        let (v1, v2, _) = run_both(src, "main", vec![w]);
+        let (t1, t2) = (v1.as_tensor().unwrap(), v2.as_tensor().unwrap());
+        assert!(t1.allclose(t2, 1e-9), "{t1:?} vs {t2:?}");
+    }
+
+    #[test]
+    fn shape_polymorphic_cache() {
+        let src = "def f(a, b):\n    return exp(a) * tanh(b) + a\n";
+        let mut s = Session::from_source(src).unwrap();
+        let f = s.compile("f", Options { xla_backend: true, ..Default::default() }).unwrap();
+        // two different shapes through the same compiled segment
+        for n in [3usize, 7] {
+            let a = t(vec![0.1; n], vec![n]);
+            let b = t(vec![0.2; n], vec![n]);
+            let out = f.call(vec![a, b]).unwrap();
+            assert_eq!(out.as_tensor().unwrap().shape(), &[n]);
+        }
+        let stats = f.vm.take_stats();
+        assert!(stats.xla_calls >= 2, "{stats:?}");
+    }
+
+    #[test]
+    fn scalar_args_fall_back_gracefully() {
+        // Scalars flow through segments as rank-0 tensors or via fallback;
+        // numerics must match either way.
+        let src = "def f(x):\n    return exp(x) * tanh(x) + x\n";
+        let (v1, v2, _) = run_both(src, "f", vec![Value::F64(0.7)]);
+        let a = v1.as_f64().unwrap();
+        let b = match &v2 {
+            Value::Tensor(t) => t.item().unwrap(),
+            other => other.as_f64().unwrap(),
+        };
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn broadcasting_inside_segment() {
+        let src = "def f(m, row):\n    return tanh(m + row) * m\n";
+        let m = t(vec![1., 2., 3., 4., 5., 6.], vec![2, 3]);
+        let row = t(vec![0.1, 0.2, 0.3], vec![3]);
+        let (v1, v2, _) = run_both(src, "f", vec![m, row]);
+        assert!(v1
+            .as_tensor()
+            .unwrap()
+            .allclose(v2.as_tensor().unwrap(), 1e-9));
+    }
+}

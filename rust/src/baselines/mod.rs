@@ -1,0 +1,13 @@
+//! The comparison systems the paper discusses, built on the same tensor
+//! substrate so benchmarks isolate the *approach*, not the implementation:
+//!
+//! * [`tape`] — operator-overloading autograd with a runtime tape (the
+//!   PyTorch/Autograd/Chainer model, §2.1.1).
+//! * [`dataflow`] — a static dataflow-graph framework without function calls
+//!   or recursion (the Theano/TensorFlow model, §2.2).
+
+pub mod dataflow;
+pub mod tape;
+
+pub use dataflow::{DataflowGraph, DfRef};
+pub use tape::{leaf, scalar, tensor, Tape, TVal, Var};

@@ -1,0 +1,451 @@
+//! Operator-overloading (OO) autograd baseline — the PyTorch/Autograd/Chainer
+//! model of §2.1.1.
+//!
+//! "All primitives are overloaded so that they additionally perform a tracing
+//! operation: the primitive is logged onto a 'tape', along with its inputs…
+//! Derivatives can be calculated by walking this tape in reverse."
+//!
+//! This implementation exists to *measure* the paper's claims: OO pays a
+//! tracing cost on every call (E2: problematic when primitives are fast
+//! relative to the trace), the adjoint cannot be optimized ahead of time,
+//! and (like most tape systems, §2.1.2) it does not support
+//! reverse-over-reverse — `backward` on a tape built during `backward`
+//! is explicitly unsupported.
+
+use crate::tensor::{ops, Tensor};
+use anyhow::{anyhow, bail, Result};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// A traced scalar-or-tensor value.
+#[derive(Debug, Clone)]
+pub enum TVal {
+    F64(f64),
+    Tensor(Tensor),
+}
+
+impl TVal {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TVal::F64(v) => Some(*v),
+            TVal::Tensor(t) => t.item().ok(),
+        }
+    }
+
+    fn to_tensor(&self) -> Tensor {
+        match self {
+            TVal::F64(v) => Tensor::scalar_f64(*v),
+            TVal::Tensor(t) => t.clone(),
+        }
+    }
+
+    fn zeros_like(&self) -> TVal {
+        match self {
+            TVal::F64(_) => TVal::F64(0.0),
+            TVal::Tensor(t) => TVal::Tensor(Tensor::zeros(t.dtype(), t.shape())),
+        }
+    }
+
+    fn add_into(&self, other: &TVal) -> TVal {
+        match (self, other) {
+            (TVal::F64(a), TVal::F64(b)) => TVal::F64(a + b),
+            (a, b) => TVal::Tensor(ops::add(&a.to_tensor(), &b.to_tensor()).expect("grad shapes")),
+        }
+    }
+}
+
+type BackwardFn = Box<dyn Fn(&TVal) -> Vec<TVal>>;
+
+struct Entry {
+    inputs: Vec<usize>,
+    backward: BackwardFn,
+}
+
+/// The tape: a runtime trace of executed primitives (grows with every op).
+#[derive(Default)]
+pub struct Tape {
+    entries: RefCell<Vec<Option<Entry>>>,
+    values: RefCell<Vec<TVal>>,
+    /// true while `backward` runs — used to reject reverse-over-reverse.
+    in_backward: RefCell<bool>,
+}
+
+/// A variable: an index into its tape (cheap to copy around like torch's
+/// `Tensor` handles).
+#[derive(Clone)]
+pub struct Var {
+    pub tape: Rc<Tape>,
+    pub idx: usize,
+}
+
+impl Tape {
+    pub fn new() -> Rc<Tape> {
+        Rc::new(Tape::default())
+    }
+
+    /// Number of entries traced so far (the tape-growth metric of E2).
+    pub fn len(&self) -> usize {
+        self.entries.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Create a leaf variable.
+pub fn leaf(tape: &Rc<Tape>, v: TVal) -> Var {
+    let mut entries = tape.entries.borrow_mut();
+    let mut values = tape.values.borrow_mut();
+    entries.push(None);
+    values.push(v);
+    Var { tape: tape.clone(), idx: entries.len() - 1 }
+}
+
+pub fn scalar(tape: &Rc<Tape>, v: f64) -> Var {
+    leaf(tape, TVal::F64(v))
+}
+
+pub fn tensor(tape: &Rc<Tape>, t: Tensor) -> Var {
+    leaf(tape, TVal::Tensor(t))
+}
+
+impl Var {
+    pub fn value(&self) -> TVal {
+        self.tape.values.borrow()[self.idx].clone()
+    }
+
+    fn record(&self, inputs: Vec<usize>, value: TVal, backward: BackwardFn) -> Var {
+        // The tracing operation the paper describes: every overloaded op
+        // appends to the tape. This is the per-call overhead E2 measures.
+        let mut entries = self.tape.entries.borrow_mut();
+        let mut values = self.tape.values.borrow_mut();
+        entries.push(Some(Entry { inputs, backward }));
+        values.push(value);
+        Var { tape: self.tape.clone(), idx: entries.len() - 1 }
+    }
+
+    // ---- overloaded operations -----------------------------------------
+
+    pub fn add(&self, other: &Var) -> Var {
+        let (a, b) = (self.value(), other.value());
+        let out = match (&a, &b) {
+            (TVal::F64(x), TVal::F64(y)) => TVal::F64(x + y),
+            _ => TVal::Tensor(ops::add(&a.to_tensor(), &b.to_tensor()).expect("add")),
+        };
+        let (sa, sb) = (a, b);
+        self.record(
+            vec![self.idx, other.idx],
+            out,
+            Box::new(move |d| vec![sum_to_like(d, &sa), sum_to_like(d, &sb)]),
+        )
+    }
+
+    pub fn sub(&self, other: &Var) -> Var {
+        let (a, b) = (self.value(), other.value());
+        let out = match (&a, &b) {
+            (TVal::F64(x), TVal::F64(y)) => TVal::F64(x - y),
+            _ => TVal::Tensor(ops::sub(&a.to_tensor(), &b.to_tensor()).expect("sub")),
+        };
+        self.record(
+            vec![self.idx, other.idx],
+            out,
+            Box::new(move |d| {
+                let nd = neg_val(d);
+                vec![sum_to_like(d, &a), sum_to_like(&nd, &b)]
+            }),
+        )
+    }
+
+    pub fn mul(&self, other: &Var) -> Var {
+        let (a, b) = (self.value(), other.value());
+        let out = match (&a, &b) {
+            (TVal::F64(x), TVal::F64(y)) => TVal::F64(x * y),
+            _ => TVal::Tensor(ops::mul(&a.to_tensor(), &b.to_tensor()).expect("mul")),
+        };
+        self.record(
+            vec![self.idx, other.idx],
+            out,
+            Box::new(move |d| {
+                let da = mul_val(d, &b);
+                let db = mul_val(d, &a);
+                vec![sum_to_like(&da, &a), sum_to_like(&db, &b)]
+            }),
+        )
+    }
+
+    pub fn neg(&self) -> Var {
+        let a = self.value();
+        let out = neg_val(&a);
+        self.record(vec![self.idx], out, Box::new(move |d| vec![neg_val(d)]))
+    }
+
+    pub fn exp(&self) -> Var {
+        let a = self.value();
+        let out = match &a {
+            TVal::F64(x) => TVal::F64(x.exp()),
+            TVal::Tensor(t) => TVal::Tensor(ops::exp(t)),
+        };
+        let saved = out.clone();
+        self.record(vec![self.idx], out, Box::new(move |d| vec![mul_val(d, &saved)]))
+    }
+
+    pub fn tanh(&self) -> Var {
+        let a = self.value();
+        let out = match &a {
+            TVal::F64(x) => TVal::F64(x.tanh()),
+            TVal::Tensor(t) => TVal::Tensor(ops::tanh(t)),
+        };
+        let saved = out.clone();
+        self.record(
+            vec![self.idx],
+            out,
+            Box::new(move |d| {
+                let ss = mul_val(&saved, &saved);
+                let one_minus = match &ss {
+                    TVal::F64(v) => TVal::F64(1.0 - v),
+                    TVal::Tensor(t) => {
+                        TVal::Tensor(ops::sub(&Tensor::scalar_f64(1.0), t).expect("sub"))
+                    }
+                };
+                vec![mul_val(d, &one_minus)]
+            }),
+        )
+    }
+
+    pub fn relu(&self) -> Var {
+        let a = self.value();
+        let out = match &a {
+            TVal::F64(x) => TVal::F64(x.max(0.0)),
+            TVal::Tensor(t) => TVal::Tensor(ops::relu(t)),
+        };
+        self.record(
+            vec![self.idx],
+            out,
+            Box::new(move |d| {
+                let mask = match &a {
+                    TVal::F64(x) => TVal::F64(if *x > 0.0 { 1.0 } else { 0.0 }),
+                    TVal::Tensor(t) => TVal::Tensor(ops::binary_op(
+                        t,
+                        &Tensor::scalar_f64(0.0),
+                        |x, _| (x > 0.0) as i64 as f64,
+                        None,
+                    )
+                    .expect("mask")),
+                };
+                vec![mul_val(d, &mask)]
+            }),
+        )
+    }
+
+    pub fn matmul(&self, other: &Var) -> Var {
+        let (a, b) = (self.value().to_tensor(), other.value().to_tensor());
+        let out = TVal::Tensor(crate::tensor::matmul(&a, &b).expect("matmul"));
+        self.record(
+            vec![self.idx, other.idx],
+            out,
+            Box::new(move |d| {
+                let dt = d.to_tensor();
+                let da = crate::tensor::matmul(&dt, &ops::transpose(&b).expect("t")).expect("mm");
+                let db = crate::tensor::matmul(&ops::transpose(&a).expect("t"), &dt).expect("mm");
+                vec![TVal::Tensor(da), TVal::Tensor(db)]
+            }),
+        )
+    }
+
+    pub fn sum(&self) -> Var {
+        let a = self.value().to_tensor();
+        let out = TVal::F64(ops::reduce_sum_all(&a).item().expect("sum"));
+        let shape = a.shape().to_vec();
+        self.record(
+            vec![self.idx],
+            out,
+            Box::new(move |d| {
+                let dv = d.as_f64().unwrap_or(0.0);
+                vec![TVal::Tensor(Tensor::full(&shape, dv))]
+            }),
+        )
+    }
+
+    /// Reverse pass: walk the tape backwards from this (scalar) output.
+    pub fn backward(&self) -> Result<Vec<Option<TVal>>> {
+        if *self.tape.in_backward.borrow() {
+            bail!(
+                "reverse-over-reverse is not supported by the tape-based OO baseline \
+                 (the tape is a runtime structure, not differentiable code — §2.1.2)"
+            );
+        }
+        *self.tape.in_backward.borrow_mut() = true;
+        let result = self.backward_inner();
+        *self.tape.in_backward.borrow_mut() = false;
+        result
+    }
+
+    fn backward_inner(&self) -> Result<Vec<Option<TVal>>> {
+        let entries = self.tape.entries.borrow();
+        let n = entries.len();
+        let mut grads: Vec<Option<TVal>> = vec![None; n];
+        let seed = match self.value() {
+            TVal::F64(_) => TVal::F64(1.0),
+            TVal::Tensor(t) if t.numel() == 1 => TVal::Tensor(Tensor::ones(t.dtype(), t.shape())),
+            _ => return Err(anyhow!("backward() requires a scalar output")),
+        };
+        grads[self.idx] = Some(seed);
+        for i in (0..=self.idx).rev() {
+            let Some(d) = grads[i].clone() else { continue };
+            let Some(entry) = &entries[i] else { continue };
+            let input_grads = (entry.backward)(&d);
+            for (j, g) in entry.inputs.iter().zip(input_grads) {
+                grads[*j] = Some(match &grads[*j] {
+                    Some(existing) => existing.add_into(&g),
+                    None => g,
+                });
+            }
+        }
+        Ok(grads)
+    }
+
+    /// Gradient of a leaf after `backward`.
+    pub fn grad_of(&self, grads: &[Option<TVal>], leaf: &Var) -> TVal {
+        grads[leaf.idx].clone().unwrap_or_else(|| leaf.value().zeros_like())
+    }
+}
+
+fn neg_val(v: &TVal) -> TVal {
+    match v {
+        TVal::F64(x) => TVal::F64(-x),
+        TVal::Tensor(t) => TVal::Tensor(ops::neg(t)),
+    }
+}
+
+fn mul_val(a: &TVal, b: &TVal) -> TVal {
+    match (a, b) {
+        (TVal::F64(x), TVal::F64(y)) => TVal::F64(x * y),
+        _ => TVal::Tensor(ops::mul(&a.to_tensor(), &b.to_tensor()).expect("mul")),
+    }
+}
+
+fn sum_to_like(d: &TVal, x: &TVal) -> TVal {
+    match (d, x) {
+        (TVal::F64(_), _) => d.clone(),
+        (TVal::Tensor(dt), TVal::Tensor(xt)) => {
+            if dt.shape() == xt.shape() {
+                d.clone()
+            } else {
+                TVal::Tensor(ops::sum_to(dt, xt.shape()).expect("sum_to"))
+            }
+        }
+        (TVal::Tensor(dt), TVal::F64(_)) => TVal::F64(ops::reduce_sum_all(dt).item().unwrap()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_chain() {
+        let tape = Tape::new();
+        let x = scalar(&tape, 2.0);
+        // y = x³ + 2x
+        let y = x.mul(&x).mul(&x).add(&x.mul(&scalar(&tape, 2.0)));
+        assert_eq!(y.value().as_f64().unwrap(), 12.0);
+        let grads = y.backward().unwrap();
+        let dx = y.grad_of(&grads, &x).as_f64().unwrap();
+        assert!((dx - 14.0).abs() < 1e-12); // 3x² + 2 = 14
+    }
+
+    #[test]
+    fn fan_out_accumulates() {
+        let tape = Tape::new();
+        let x = scalar(&tape, 3.0);
+        let y = x.mul(&x); // x used twice
+        let grads = y.backward().unwrap();
+        assert!((y.grad_of(&grads, &x).as_f64().unwrap() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tensor_ops_and_broadcast() {
+        let tape = Tape::new();
+        let w = tensor(&tape, Tensor::from_f64_shaped(vec![1., 2., 3., 4.], vec![2, 2]).unwrap());
+        let b = tensor(&tape, Tensor::from_f64(&[10., 20.]));
+        let x = tensor(&tape, Tensor::from_f64_shaped(vec![1., 1., 1., 1.], vec![2, 2]).unwrap());
+        let y = w.matmul(&x).add(&b).sum();
+        let grads = y.backward().unwrap();
+        let dw = y.grad_of(&grads, &w);
+        let db = y.grad_of(&grads, &b);
+        match dw {
+            TVal::Tensor(t) => assert_eq!(t.shape(), &[2, 2]),
+            other => panic!("{other:?}"),
+        }
+        match db {
+            TVal::Tensor(t) => {
+                assert_eq!(t.shape(), &[2]);
+                assert_eq!(t.as_f64_vec(), vec![2.0, 2.0]); // summed over rows
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn tape_grows_with_every_op() {
+        // The core OO cost model: the trace is rebuilt per execution.
+        let tape = Tape::new();
+        let x = scalar(&tape, 1.0);
+        let before = tape.len();
+        let mut y = x.clone();
+        for _ in 0..10 {
+            y = y.mul(&x);
+        }
+        assert_eq!(tape.len(), before + 10);
+    }
+
+    #[test]
+    fn unused_leaf_has_no_grad() {
+        let tape = Tape::new();
+        let x = scalar(&tape, 1.0);
+        let z = scalar(&tape, 5.0);
+        let y = x.mul(&x);
+        let grads = y.backward().unwrap();
+        assert!(grads[z.idx].is_none());
+        assert_eq!(y.grad_of(&grads, &z).as_f64().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn reverse_over_reverse_unsupported() {
+        // Documented limitation (§2.1.2): most tape-based systems do not
+        // support reverse-over-reverse; ours reports it explicitly.
+        let tape = Tape::new();
+        let x = scalar(&tape, 2.0);
+        let y = x.mul(&x);
+        let _g = y.backward().unwrap();
+        // A second, nested backward during backward is the unsupported path;
+        // the flag shows as an error if triggered reentrantly.
+        *tape.in_backward.borrow_mut() = true;
+        let e = y.backward().unwrap_err();
+        assert!(format!("{e}").contains("reverse-over-reverse"), "{e}");
+        *tape.in_backward.borrow_mut() = false;
+    }
+
+    #[test]
+    fn nonscalar_backward_rejected() {
+        let tape = Tape::new();
+        let w = tensor(&tape, Tensor::from_f64(&[1., 2.]));
+        let y = w.relu();
+        assert!(y.backward().is_err());
+    }
+
+    #[test]
+    fn unary_derivatives() {
+        let tape = Tape::new();
+        let x = scalar(&tape, 0.5);
+        let y = x.exp().tanh();
+        let grads = y.backward().unwrap();
+        let d = y.grad_of(&grads, &x).as_f64().unwrap();
+        let want = (1.0 - 0.5f64.exp().tanh().powi(2)) * 0.5f64.exp();
+        assert!((d - want).abs() < 1e-12);
+        let z = x.neg().relu();
+        let gz = z.backward().unwrap();
+        assert_eq!(z.grad_of(&gz, &x).as_f64().unwrap(), 0.0);
+    }
+}

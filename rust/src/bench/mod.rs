@@ -1,0 +1,200 @@
+//! Micro-benchmark harness (criterion substitute).
+//!
+//! Criterion is not available offline, so the bench binaries (declared with
+//! `harness = false`) use this module: warmup, adaptive iteration counts
+//! targeting a fixed measurement window, and robust statistics (median,
+//! p10/p90). Output is a fixed-width table plus a machine-readable CSV line
+//! per benchmark (prefix `CSV,`) so EXPERIMENTS.md tables can be regenerated
+//! by piping bench output through `grep ^CSV`.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    /// Human-readable benchmark id, e.g. `oo_tape/size=64`.
+    pub name: String,
+    /// Median seconds per iteration.
+    pub median: f64,
+    /// 10th percentile seconds per iteration.
+    pub p10: f64,
+    /// 90th percentile seconds per iteration.
+    pub p90: f64,
+    /// Iterations measured.
+    pub iters: usize,
+}
+
+impl Sample {
+    /// Nanoseconds per iteration (median).
+    pub fn ns(&self) -> f64 {
+        self.median * 1e9
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    /// Warmup time per benchmark.
+    pub warmup: Duration,
+    /// Target measurement time per benchmark.
+    pub measure: Duration,
+    /// Number of timed batches (each batch is `iters_per_batch` calls).
+    pub batches: usize,
+    collected: Vec<Sample>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            batches: 20,
+            collected: Vec::new(),
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl Bencher {
+    /// Quick harness for unit tests (short windows).
+    pub fn fast() -> Bencher {
+        Bencher {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            batches: 5,
+            collected: Vec::new(),
+        }
+    }
+
+    /// Time `f`, returning (and recording) the sample.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> Sample {
+        // Warmup and per-call estimate.
+        let start = Instant::now();
+        let mut calls = 0usize;
+        while start.elapsed() < self.warmup || calls == 0 {
+            f();
+            calls += 1;
+            if calls > 1_000_000 {
+                break;
+            }
+        }
+        let per_call = start.elapsed().as_secs_f64() / calls as f64;
+
+        // Choose batch size so each batch is ~measure/batches long.
+        let batch_target = self.measure.as_secs_f64() / self.batches as f64;
+        let iters_per_batch = ((batch_target / per_call.max(1e-12)) as usize).clamp(1, 10_000_000);
+
+        let mut times = Vec::with_capacity(self.batches);
+        for _ in 0..self.batches {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_batch {
+                f();
+            }
+            times.push(t0.elapsed().as_secs_f64() / iters_per_batch as f64);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pick = |q: f64| times[((times.len() - 1) as f64 * q) as usize];
+        let sample = Sample {
+            name: name.to_string(),
+            median: pick(0.5),
+            p10: pick(0.1),
+            p90: pick(0.9),
+            iters: iters_per_batch * self.batches,
+        };
+        println!(
+            "{:<48} {:>12} {:>12} {:>12} {:>10}",
+            sample.name,
+            fmt_time(sample.median),
+            fmt_time(sample.p10),
+            fmt_time(sample.p90),
+            sample.iters
+        );
+        println!(
+            "CSV,{},{:.6e},{:.6e},{:.6e},{}",
+            sample.name, sample.median, sample.p10, sample.p90, sample.iters
+        );
+        self.collected.push(sample.clone());
+        sample
+    }
+
+    /// All samples recorded so far.
+    pub fn samples(&self) -> &[Sample] {
+        &self.collected
+    }
+
+    /// Print the standard table header.
+    pub fn header(title: &str) {
+        println!("\n=== {title} ===");
+        println!(
+            "{:<48} {:>12} {:>12} {:>12} {:>10}",
+            "benchmark", "median", "p10", "p90", "iters"
+        );
+    }
+}
+
+/// Render a duration in adaptive units.
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher::fast();
+        let s = b.bench("noop_loop", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(s.median > 0.0);
+        assert!(s.p10 <= s.median && s.median <= s.p90 * 1.5);
+        assert_eq!(b.samples().len(), 1);
+    }
+
+    #[test]
+    fn ordering_detected() {
+        // A 50x-heavier loop should measure meaningfully slower.
+        let mut b = Bencher::fast();
+        let fast = b.bench("fast", || {
+            let mut acc = 0u64;
+            for i in 0..20u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        let slow = b.bench("slow", || {
+            let mut acc = 0u64;
+            for i in 0..2000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(slow.median > fast.median);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(5e-9).contains("ns"));
+        assert!(fmt_time(5e-6).contains("µs"));
+        assert!(fmt_time(5e-3).contains("ms"));
+        assert!(fmt_time(5.0).contains(" s"));
+    }
+}

@@ -1,0 +1,167 @@
+//! The MLP workload shared by `examples/train_mlp` and the E3 benches.
+//!
+//! The model is written in the Myia source language (the same architecture
+//! as `python/compile/model.py`): parameters travel as one tuple so that
+//! `grad` — which differentiates with respect to the first argument —
+//! returns the gradient of the whole parameter pytree, exactly like
+//! `jax.grad` over a params tuple.
+
+use crate::coordinator::{CompiledFn, Options, Session};
+use crate::runtime::artifacts::MlpMeta;
+use crate::tensor::{ops, DType, Rng, Tensor};
+use crate::vm::Value;
+use anyhow::{anyhow, Result};
+
+/// The MLP in the Myia source language.
+pub const MLP_SOURCE: &str = "\
+def mlp_loss(params, x, y):
+    w1 = params[0]
+    b1 = params[1]
+    w2 = params[2]
+    b2 = params[3]
+    w3 = params[4]
+    b3 = params[5]
+    h1 = tanh(matmul(x, w1) + b1)
+    h2 = tanh(matmul(h1, w2) + b2)
+    logits = matmul(h2, w3) + b3
+    p = softmax(logits)
+    picked = sum_last_keep(p * y)
+    losses = neg(log(picked))
+    return item(mean(losses))
+
+def mlp_grad(params, x, y):
+    return grad(mlp_loss)(params, x, y)
+
+def mlp_value_and_grad(params, x, y):
+    return value_and_grad(mlp_loss)(params, x, y)
+";
+
+/// Synthetic linearly-separable-ish classification data: labels come from a
+/// random ground-truth projection, so the MLP can actually learn.
+pub fn synth_batch(meta: &MlpMeta, rng: &mut Rng, w_true: &Tensor) -> (Tensor, Tensor) {
+    let x = rng.normal_tensor(&[meta.batch, meta.in_dim], 1.0);
+    let scores = crate::tensor::matmul(&x, w_true).expect("shapes");
+    let labels = ops::argmax_last(&scores).expect("argmax");
+    let y = ops::one_hot(&labels, meta.out_dim).expect("one_hot");
+    (x, y)
+}
+
+/// Ground-truth projection for the synthetic task.
+pub fn synth_teacher(meta: &MlpMeta, rng: &mut Rng) -> Tensor {
+    rng.normal_tensor(&[meta.in_dim, meta.out_dim], 1.0)
+}
+
+/// Parameters as a Myia tuple value.
+pub fn params_value(params: &[Tensor]) -> Value {
+    Value::tuple(params.iter().cloned().map(Value::Tensor).collect())
+}
+
+/// SGD step on the Rust side: p ← p − lr·g.
+pub fn sgd_update(params: &[Tensor], grads: &Value, lr: f64) -> Result<Vec<Tensor>> {
+    let gs = match grads {
+        Value::Tuple(items) => items,
+        other => return Err(anyhow!("expected gradient tuple, got {other}")),
+    };
+    params
+        .iter()
+        .zip(gs.iter())
+        .map(|(p, g)| {
+            let g = match g {
+                Value::Tensor(t) => t.clone(),
+                Value::ZeroT => Tensor::zeros(p.dtype(), p.shape()),
+                other => return Err(anyhow!("non-tensor gradient {other}")),
+            };
+            let lr_t = Tensor::scalar_f64(lr);
+            let step = ops::mul(&g, &lr_t).map_err(|e| anyhow!("{e}"))?;
+            ops::sub(p, &step).map_err(|e| anyhow!("{e}")).map(|t| t.cast(p.dtype()))
+        })
+        .collect()
+}
+
+/// Compile the Myia MLP loss+grad entry points.
+pub fn compile_mlp(xla: bool) -> Result<(Session, std::rc::Rc<CompiledFn>, std::rc::Rc<CompiledFn>)> {
+    let mut s = Session::from_source(MLP_SOURCE)?;
+    let options = Options { xla_backend: xla, ..Default::default() };
+    let loss = s.compile("mlp_loss", options.clone())?;
+    let grad = s.compile("mlp_value_and_grad", options)?;
+    Ok((s, loss, grad))
+}
+
+/// One Myia training step; returns the loss.
+pub fn myia_step(
+    grad_fn: &CompiledFn,
+    params: &mut Vec<Tensor>,
+    x: &Tensor,
+    y: &Tensor,
+    lr: f64,
+) -> Result<f64> {
+    let out = grad_fn.call(vec![
+        params_value(params),
+        Value::Tensor(x.clone()),
+        Value::Tensor(y.clone()),
+    ])?;
+    let (loss, grads) = match &out {
+        Value::Tuple(items) => (items[0].clone(), items[1].clone()),
+        other => return Err(anyhow!("expected (loss, grads), got {other}")),
+    };
+    *params = sgd_update(params, &grads, lr)?;
+    loss.as_f64().ok_or_else(|| anyhow!("non-scalar loss"))
+}
+
+/// Default meta when artifacts haven't been built (keeps CPU-only flows
+/// runnable); matches python/compile/model.py.
+pub fn default_meta() -> MlpMeta {
+    MlpMeta { batch: 32, in_dim: 64, h1: 128, h2: 64, out_dim: 10, lr: 0.05 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn myia_mlp_trains() {
+        let meta = default_meta();
+        let mut rng = Rng::new(17);
+        let teacher = synth_teacher(&meta, &mut rng);
+        let (_s, loss_fn, grad_fn) = compile_mlp(false).unwrap();
+        let mut params: Vec<Tensor> =
+            meta.init_params(3).into_iter().map(|t| t.cast(DType::F64)).collect();
+        let (x, y) = synth_batch(&meta, &mut rng, &teacher);
+        let first = loss_fn
+            .call(vec![params_value(&params), Value::Tensor(x.clone()), Value::Tensor(y.clone())])
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        let mut last = first;
+        for _ in 0..8 {
+            last = myia_step(&grad_fn, &mut params, &x, &y, meta.lr).unwrap();
+        }
+        assert!(last < first, "loss did not decrease: {first} -> {last}");
+    }
+
+    #[test]
+    fn grads_shape_match_params() {
+        let meta = default_meta();
+        let mut rng = Rng::new(5);
+        let teacher = synth_teacher(&meta, &mut rng);
+        let (_s, _loss, grad_fn) = compile_mlp(false).unwrap();
+        let params: Vec<Tensor> =
+            meta.init_params(1).into_iter().map(|t| t.cast(DType::F64)).collect();
+        let (x, y) = synth_batch(&meta, &mut rng, &teacher);
+        let out = grad_fn
+            .call(vec![params_value(&params), Value::Tensor(x), Value::Tensor(y)])
+            .unwrap();
+        match out {
+            Value::Tuple(items) => match &items[1] {
+                Value::Tuple(gs) => {
+                    assert_eq!(gs.len(), 6);
+                    for (g, p) in gs.iter().zip(params.iter()) {
+                        assert_eq!(g.as_tensor().unwrap().shape(), p.shape());
+                    }
+                }
+                other => panic!("{other}"),
+            },
+            other => panic!("{other}"),
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! The compilation pipeline driver.
+//!
+//! Orchestrates the full toolchain the paper describes: parse → lower →
+//! macro (grad) expansion → type/shape specialization → optimization →
+//! VM codegen (optionally with XLA segment extraction) → execution. Compiled
+//! entry points are cached by (source, entry, options) so repeated `grad`
+//! calls pay the source-transformation cost once (§2.1.2: "the AD
+//! transformation is done only once per program and hence doesn't incur
+//! overhead at runtime").
+
+pub mod mlp;
+mod session;
+
+pub use session::{CompiledFn, Metrics, Options, Session};

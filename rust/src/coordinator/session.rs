@@ -1,0 +1,201 @@
+//! Compilation sessions and compiled entry points.
+
+use crate::ad::expand_macros;
+use crate::ir::{analyze, GraphId, Module};
+use crate::opt::Optimizer;
+use crate::parser::compile_source;
+use crate::vm::{compile_program, Value, Vm};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Pipeline options.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Options {
+    /// Run the optimizer (§4.3). Off = the "interpreted, unoptimized" arm.
+    pub optimize: bool,
+    /// Extract straight-line tensor segments and compile them with XLA
+    /// (requires the PJRT runtime; the paper's TVM role).
+    pub xla_backend: bool,
+    /// Reserved: run extra verification passes.
+    pub infer: bool,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Options { optimize: true, xla_backend: false, infer: false }
+    }
+}
+
+/// Compile-time metrics (E1/E6/E7 read these).
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub parse_lower_us: u128,
+    pub expand_us: u128,
+    pub optimize_us: u128,
+    pub codegen_us: u128,
+    pub nodes_after_lowering: usize,
+    pub nodes_after_expand: usize,
+    pub nodes_after_optimize: usize,
+    pub graphs_after_optimize: usize,
+    pub macros_expanded: usize,
+    pub opt_iterations: usize,
+    pub xla_segments: usize,
+}
+
+/// A compilation session over one source module.
+pub struct Session {
+    pub module: Module,
+    pub graphs: HashMap<String, GraphId>,
+    cache: HashMap<(String, Options), Rc<CompiledFn>>,
+}
+
+/// A compiled, executable entry point.
+pub struct CompiledFn {
+    pub vm: Vm,
+    pub entry: GraphId,
+    pub metrics: Metrics,
+}
+
+impl CompiledFn {
+    pub fn call(&self, args: Vec<Value>) -> Result<Value> {
+        self.vm.call_graph(self.entry, args)
+    }
+}
+
+impl Session {
+    /// Parse and lower a source module.
+    pub fn from_source(source: &str) -> Result<Session> {
+        let mut module = Module::new();
+        let graphs = compile_source(&mut module, source)?;
+        Ok(Session { module, graphs, cache: HashMap::new() })
+    }
+
+    /// Graph id of a top-level function.
+    pub fn graph(&self, name: &str) -> Result<GraphId> {
+        self.graphs
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("no top-level function named `{name}`"))
+    }
+
+    /// Eagerly type/shape-check a call before running it (§4.2): infers from
+    /// the argument types and errors on any definite mismatch.
+    pub fn check_call(&self, name: &str, args: &[Value]) -> Result<crate::types::AType> {
+        let g = self.graph(name)?;
+        let atypes: Vec<crate::types::AType> =
+            args.iter().map(crate::types::AType::of_value).collect();
+        crate::types::infer_call(&self.module, g, &atypes)
+    }
+
+    /// Compile an entry point (cached on (name, options)).
+    pub fn compile(&mut self, name: &str, options: Options) -> Result<Rc<CompiledFn>> {
+        let key = (name.to_string(), options.clone());
+        if let Some(f) = self.cache.get(&key) {
+            return Ok(f.clone());
+        }
+        let f = Rc::new(self.compile_uncached(name, &options)?);
+        self.cache.insert(key, f.clone());
+        Ok(f)
+    }
+
+    fn compile_uncached(&mut self, name: &str, options: &Options) -> Result<CompiledFn> {
+        let entry = self.graph(name)?;
+        let m = &mut self.module;
+        let mut metrics = Metrics::default();
+        metrics.nodes_after_lowering = m.reachable_node_count(entry);
+
+        let t0 = Instant::now();
+        metrics.macros_expanded = expand_macros(m, entry)?;
+        metrics.expand_us = t0.elapsed().as_micros();
+        metrics.nodes_after_expand = m.reachable_node_count(entry);
+
+        let t1 = Instant::now();
+        if options.optimize {
+            let stats = Optimizer::standard().run(m, entry)?;
+            metrics.opt_iterations = stats.iterations;
+        }
+        metrics.optimize_us = t1.elapsed().as_micros();
+        let analysis = analyze(m, entry);
+        metrics.nodes_after_optimize = analysis.node_count(m);
+        metrics.graphs_after_optimize = analysis.graphs.len();
+
+        let t2 = Instant::now();
+        let program = compile_program(m, entry).map_err(|e| anyhow!("{e}"))?;
+        let mut vm = Vm::new(program);
+        if options.xla_backend {
+            metrics.xla_segments = crate::backend::install_segments(&mut vm)?;
+        }
+        metrics.codegen_us = t2.elapsed().as_micros();
+
+        Ok(CompiledFn { vm, entry, metrics })
+    }
+}
+
+/// One-shot convenience: compile `entry` from `source` and run it.
+pub fn run_source(source: &str, entry: &str, args: Vec<Value>) -> Result<Value> {
+    let mut s = Session::from_source(source)?;
+    let f = s.compile(entry, Options::default())?;
+    f.call(args)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn end_to_end_grad_pipeline() {
+        let src = "\
+def f(x):
+    return x ** 3.0
+
+def main(x):
+    return grad(f)(x)
+";
+        let mut s = Session::from_source(src).unwrap();
+        let f = s.compile("main", Options::default()).unwrap();
+        let out = f.call(vec![Value::F64(2.0)]).unwrap();
+        assert!((out.as_f64().unwrap() - 12.0).abs() < 1e-12);
+        assert_eq!(f.metrics.macros_expanded, 1);
+        // Optimization must shrink the expanded program substantially.
+        assert!(
+            f.metrics.nodes_after_optimize < f.metrics.nodes_after_expand / 2,
+            "{} -> {}",
+            f.metrics.nodes_after_expand,
+            f.metrics.nodes_after_optimize
+        );
+    }
+
+    #[test]
+    fn cache_hits() {
+        let mut s = Session::from_source("def f(x):\n    return x + 1.0\n").unwrap();
+        let a = s.compile("f", Options::default()).unwrap();
+        let b = s.compile("f", Options::default()).unwrap();
+        assert!(Rc::ptr_eq(&a, &b));
+        let c = s.compile("f", Options { optimize: false, ..Default::default() }).unwrap();
+        assert!(!Rc::ptr_eq(&a, &c));
+    }
+
+    #[test]
+    fn unoptimized_still_correct() {
+        let src = "\
+def f(x):
+    return sin(x) * x
+
+def main(x):
+    return grad(f)(x)
+";
+        let mut s = Session::from_source(src).unwrap();
+        let f = s.compile("main", Options { optimize: false, ..Default::default() }).unwrap();
+        let out = f.call(vec![Value::F64(0.9)]).unwrap();
+        let want = 0.9f64.cos() * 0.9 + 0.9f64.sin();
+        assert!((out.as_f64().unwrap() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_entry_reported() {
+        let mut s = Session::from_source("def f(x):\n    return x\n").unwrap();
+        assert!(s.compile("nope", Options::default()).is_err());
+    }
+}

@@ -1,0 +1,251 @@
+//! Scope analysis: the fixpoint over the closure-nesting relation.
+//!
+//! A node can be needed by a graph without being reachable through plain
+//! input edges: if a nested graph captures it, the *closure creation* in the
+//! owner depends on it (§3's implicit nesting). This analysis computes, per
+//! graph, the "closed" topological order (including capture-only nodes) and
+//! the total free-variable list, as a joint fixpoint — the single source of
+//! truth used by VM compilation, the AD transform, dead-code metrics and
+//! graph cloning.
+
+use super::{GraphId, Module, NodeId};
+use std::collections::{HashMap, HashSet};
+
+/// Result of [`analyze`].
+#[derive(Debug, Default, Clone)]
+pub struct ScopeAnalysis {
+    /// All graphs reachable from the entry (discovery order).
+    pub graphs: Vec<GraphId>,
+    /// Per graph: its own apply nodes in dependency order, where a reference
+    /// to a nested graph constant depends on that graph's free variables.
+    pub order: HashMap<GraphId, Vec<NodeId>>,
+    /// Per graph: total free variables (deterministic order).
+    pub fvs: HashMap<GraphId, Vec<NodeId>>,
+}
+
+impl ScopeAnalysis {
+    pub fn free_vars(&self, g: GraphId) -> &[NodeId] {
+        self.fvs.get(&g).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn order_of(&self, g: GraphId) -> &[NodeId] {
+        self.order.get(&g).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Count of distinct nodes reachable from the entry (the "graph size"
+    /// metric of E1/E6): applies + their referenced params/constants.
+    pub fn node_count(&self, m: &Module) -> usize {
+        let mut seen: HashSet<NodeId> = HashSet::new();
+        for &g in &self.graphs {
+            for &n in self.order_of(g) {
+                seen.insert(n);
+                for &inp in m.node(n).inputs() {
+                    seen.insert(inp);
+                }
+            }
+            for &p in &m.graph(g).params {
+                seen.insert(p);
+            }
+        }
+        seen.len()
+    }
+}
+
+/// Run the scope fixpoint from `entry`.
+pub fn analyze(m: &Module, entry: GraphId) -> ScopeAnalysis {
+    // fv estimates per graph, refined until stable.
+    let mut fvs: HashMap<GraphId, Vec<NodeId>> = HashMap::new();
+    let mut graphs: Vec<GraphId> = vec![entry];
+    let mut order: HashMap<GraphId, Vec<NodeId>> = HashMap::new();
+
+    loop {
+        let mut changed = false;
+        let mut discovered: Vec<GraphId> = graphs.clone();
+        let mut gi = 0;
+        while gi < discovered.len() {
+            let g = discovered[gi];
+            gi += 1;
+            let (g_order, g_fvs, g_refs) = walk_graph(m, g, &fvs);
+            for h in g_refs {
+                if !discovered.contains(&h) {
+                    discovered.push(h);
+                    changed = true;
+                }
+            }
+            if fvs.get(&g) != Some(&g_fvs) {
+                fvs.insert(g, g_fvs);
+                changed = true;
+            }
+            order.insert(g, g_order);
+        }
+        graphs = discovered;
+        if !changed {
+            break;
+        }
+    }
+
+    ScopeAnalysis { graphs, order, fvs }
+}
+
+/// One DFS over graph `g` using the current fv estimates: returns
+/// (closed topo order of g-owned applies, free variables, referenced graphs).
+fn walk_graph(
+    m: &Module,
+    g: GraphId,
+    fv_est: &HashMap<GraphId, Vec<NodeId>>,
+) -> (Vec<NodeId>, Vec<NodeId>, Vec<GraphId>) {
+    let mut order = Vec::new();
+    let mut fvs = Vec::new();
+    let mut refs = Vec::new();
+    let mut fv_seen: HashSet<NodeId> = HashSet::new();
+    let mut ref_seen: HashSet<GraphId> = HashSet::new();
+    let mut state: HashMap<NodeId, u8> = HashMap::new();
+
+    let ret = match m.graph(g).ret {
+        Some(r) => r,
+        None => return (order, fvs, refs),
+    };
+
+    // Dependencies of a node reference within g.
+    let deps = |n: NodeId,
+                fvs: &mut Vec<NodeId>,
+                fv_seen: &mut HashSet<NodeId>,
+                refs: &mut Vec<GraphId>,
+                ref_seen: &mut HashSet<GraphId>|
+     -> Vec<NodeId> {
+        let node = m.node(n);
+        if let Some(h) = m.as_graph(n) {
+            if ref_seen.insert(h) {
+                refs.push(h);
+            }
+            // Closure creation depends on the captured values.
+            let mut out = Vec::new();
+            for &fv in fv_est.get(&h).map(|v| v.as_slice()).unwrap_or(&[]) {
+                out.push(fv);
+            }
+            return out;
+        }
+        if node.is_constant() {
+            return Vec::new();
+        }
+        if node.graph != Some(g) {
+            // Owned elsewhere: a free variable of g.
+            if fv_seen.insert(n) {
+                fvs.push(n);
+            }
+            return Vec::new();
+        }
+        if node.is_parameter() {
+            return Vec::new();
+        }
+        node.inputs().to_vec()
+    };
+
+    let mut stack: Vec<(NodeId, bool)> = vec![(ret, false)];
+    while let Some((n, expanded)) = stack.pop() {
+        if expanded {
+            state.insert(n, 2);
+            let node = m.node(n);
+            if node.is_apply() && node.graph == Some(g) {
+                order.push(n);
+            }
+            continue;
+        }
+        if state.contains_key(&n) {
+            continue;
+        }
+        state.insert(n, 1);
+        stack.push((n, true));
+        let ds = deps(n, &mut fvs, &mut fv_seen, &mut refs, &mut ref_seen);
+        for d in ds.into_iter().rev() {
+            if !state.contains_key(&d) {
+                stack.push((d, false));
+            }
+        }
+    }
+    (order, fvs, refs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Const, Prim};
+
+    #[test]
+    fn capture_only_node_is_ordered() {
+        // f(x): y = x * 2 (only used by nested g); g() = y + 1; return g()
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let two = m.constant(Const::F64(2.0));
+        let y = m.apply_prim(f, Prim::Mul, &[x, two]);
+        let g = m.add_graph("g");
+        let one = m.constant(Const::F64(1.0));
+        let gb = m.apply_prim(g, Prim::Add, &[y, one]);
+        m.set_return(g, gb);
+        let gc = m.graph_constant(g);
+        let call = m.apply(f, vec![gc]);
+        m.set_return(f, call);
+
+        let a = analyze(&m, f);
+        // y must appear in f's order, BEFORE the call.
+        let forder = a.order_of(f);
+        assert_eq!(forder.len(), 2, "y and the call");
+        assert_eq!(forder[0], y);
+        assert_eq!(forder[1], call);
+        // g's fv is y; f has none.
+        assert_eq!(a.free_vars(g), &[y]);
+        assert!(a.free_vars(f).is_empty());
+    }
+
+    #[test]
+    fn transitive_capture_through_two_levels() {
+        // f(x): y = x*2 ; g(): h() = y ; return h ; return g()()
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let two = m.constant(Const::F64(2.0));
+        let y = m.apply_prim(f, Prim::Mul, &[x, two]);
+        let h = m.add_graph("h");
+        m.set_return(h, y); // h returns the captured y directly
+        let g = m.add_graph("g");
+        let hc = m.graph_constant(h);
+        m.set_return(g, hc);
+        let gc = m.graph_constant(g);
+        let callg = m.apply(f, vec![gc]);
+        let callh = m.apply(f, vec![callg]);
+        m.set_return(f, callh);
+
+        let a = analyze(&m, f);
+        assert_eq!(a.free_vars(h), &[y]);
+        assert_eq!(a.free_vars(g), &[y], "g inherits h's capture");
+        assert!(a.free_vars(f).is_empty());
+        // y ordered before the call of g in f.
+        let forder = a.order_of(f);
+        assert_eq!(forder[0], y);
+        // node_count counts across graphs without double counting
+        assert!(a.node_count(&m) >= 5);
+    }
+
+    #[test]
+    fn recursive_graph_converges() {
+        // loop captures x from f and references itself.
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let l = m.add_graph("loop");
+        let n = m.add_parameter(l, "n");
+        let nx = m.apply_prim(l, Prim::Add, &[n, x]);
+        let lc = m.graph_constant(l);
+        let rec = m.apply(l, vec![lc, nx]);
+        m.set_return(l, rec);
+        let lc2 = m.graph_constant(l);
+        let call = m.apply(f, vec![lc2, x]);
+        m.set_return(f, call);
+
+        let a = analyze(&m, f);
+        assert_eq!(a.free_vars(l), &[x]);
+        assert!(a.free_vars(f).is_empty());
+        assert_eq!(a.graphs.len(), 2);
+    }
+}

@@ -1,0 +1,247 @@
+//! Graph cloning.
+//!
+//! Cloning must respect the closure structure: when graph `g` is duplicated
+//! (for inlining, specialization, or the AD transform), every graph that
+//! *captures nodes owned by the cloned set* must be duplicated with it —
+//! otherwise the shared nested graph would still point at the original's
+//! nodes. Graphs that merely get *called* but capture nothing from the set
+//! are shared, not cloned.
+
+use super::{Const, GraphId, Module, NodeId};
+use std::collections::{HashMap, HashSet};
+
+/// Result of [`clone_closure`]: old→new maps for graphs and nodes.
+#[derive(Debug, Default)]
+pub struct CloneResult {
+    pub graphs: HashMap<GraphId, GraphId>,
+    pub nodes: HashMap<NodeId, NodeId>,
+}
+
+impl CloneResult {
+    /// The clone of `g`, or `g` itself if it was shared rather than cloned.
+    pub fn graph(&self, g: GraphId) -> GraphId {
+        *self.graphs.get(&g).unwrap_or(&g)
+    }
+
+    /// The clone of `n`, or `n` itself if outside the cloned set.
+    pub fn node(&self, n: NodeId) -> NodeId {
+        *self.nodes.get(&n).unwrap_or(&n)
+    }
+}
+
+/// Clone `g` together with every reachable graph that captures from the
+/// cloned set. References to nodes outside the set are left pointing at the
+/// originals (they are the clone's free variables too).
+pub fn clone_closure(m: &mut Module, g: GraphId) -> CloneResult {
+    // 1. Decide the clone set S by fixpoint (scope analysis covers
+    //    capture-only nodes and recursive nesting).
+    let analysis = super::analysis::analyze(m, g);
+    let reachable = analysis.graphs.clone();
+    let fv_map = analysis.fvs.clone();
+    let orders = analysis.order.clone();
+    let mut set: HashSet<GraphId> = HashSet::new();
+    set.insert(g);
+    loop {
+        let mut changed = false;
+        for &h in &reachable {
+            if set.contains(&h) {
+                continue;
+            }
+            let captures_from_set = fv_map
+                .get(&h)
+                .map(|fvs| fvs.iter().any(|&fv| m.node(fv).graph.map(|o| set.contains(&o)).unwrap_or(false)))
+                .unwrap_or(false);
+            if captures_from_set {
+                set.insert(h);
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    let mut result = CloneResult::default();
+
+    // 2. Create the new graphs and their parameters.
+    for &h in &reachable {
+        if !set.contains(&h) {
+            continue;
+        }
+        let name = m.graph(h).name.clone();
+        let new_g = m.add_graph(name);
+        result.graphs.insert(h, new_g);
+        for &p in &m.graph(h).params.clone() {
+            let pname = m.node(p).debug_name.clone().unwrap_or_default();
+            let new_p = m.add_parameter(new_g, pname);
+            result.nodes.insert(p, new_p);
+        }
+    }
+
+    // 3. Create placeholder applies (so forward references resolve), then fix
+    //    up inputs once every node has its clone.
+    let dummy = m.constant(Const::Unit);
+    let mut cloned_applies: Vec<(NodeId, NodeId, GraphId)> = Vec::new();
+    for (&h, &new_h) in &result.graphs.clone() {
+        for &n in orders.get(&h).map(|v| v.as_slice()).unwrap_or(&[]) {
+            let new_n = m.apply(new_h, vec![dummy]);
+            if let Some(name) = m.node(n).debug_name.clone() {
+                m.name_node(new_n, name);
+            }
+            result.nodes.insert(n, new_n);
+            cloned_applies.push((n, new_n, h));
+        }
+    }
+    for (old_n, new_n, _) in &cloned_applies {
+        let new_inputs: Vec<NodeId> = m
+            .node(*old_n)
+            .inputs()
+            .to_vec()
+            .into_iter()
+            .map(|inp| remap(m, &result, inp))
+            .collect();
+        m.set_inputs(*new_n, new_inputs);
+    }
+
+    // 4. Returns.
+    for (&h, &new_h) in &result.graphs.clone() {
+        if let Some(r) = m.graph(h).ret {
+            let new_r = remap(m, &result, r);
+            m.set_return(new_h, new_r);
+        }
+    }
+
+    result
+}
+
+/// Remap one node reference through the clone maps: cloned nodes map to their
+/// clones; constants referring to cloned graphs map to fresh graph constants.
+fn remap(m: &mut Module, result: &CloneResult, n: NodeId) -> NodeId {
+    if let Some(&mapped) = result.nodes.get(&n) {
+        return mapped;
+    }
+    if let Some(gref) = m.as_graph(n) {
+        if let Some(&new_g) = result.graphs.get(&gref) {
+            return m.graph_constant(new_g);
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Prim;
+
+    #[test]
+    fn clone_simple_graph() {
+        // f(x) = x * x
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let r = m.apply_prim(f, Prim::Mul, &[x, x]);
+        m.set_return(f, r);
+
+        let res = clone_closure(&mut m, f);
+        let f2 = res.graph(f);
+        assert_ne!(f2, f);
+        let order = m.topo_order(f2);
+        assert_eq!(order.len(), 1);
+        assert!(m.is_apply_of(order[0], Prim::Mul));
+        // clone's mul reads the clone's parameter
+        let p2 = m.graph(f2).params[0];
+        assert_eq!(m.node(order[0]).inputs()[1], p2);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn nested_capturing_graph_is_cloned() {
+        // f(x): g(y) = y + x ; return g
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let g = m.add_graph("g");
+        let y = m.add_parameter(g, "y");
+        let body = m.apply_prim(g, Prim::Add, &[y, x]);
+        m.set_return(g, body);
+        let gc = m.graph_constant(g);
+        m.set_return(f, gc);
+
+        let res = clone_closure(&mut m, f);
+        let f2 = res.graph(f);
+        let g2 = res.graph(g);
+        assert_ne!(g2, g, "capturing nested graph must be cloned");
+        // g2's body adds g2's param and f2's param.
+        let body2 = m.ret_of(g2);
+        let x2 = m.graph(f2).params[0];
+        assert_eq!(m.node(body2).inputs()[2], x2);
+        // f2 returns a constant for g2.
+        assert_eq!(m.as_graph(m.ret_of(f2)), Some(g2));
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn non_capturing_callee_is_shared() {
+        // helper(y) = y * 2 (top-level); f(x) = helper(x)
+        let mut m = Module::new();
+        let helper = m.add_graph("helper");
+        let y = m.add_parameter(helper, "y");
+        let two = m.constant(Const::F64(2.0));
+        let hb = m.apply_prim(helper, Prim::Mul, &[y, two]);
+        m.set_return(helper, hb);
+
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let hc = m.graph_constant(helper);
+        let call = m.apply(f, vec![hc, x]);
+        m.set_return(f, call);
+
+        let res = clone_closure(&mut m, f);
+        assert_eq!(res.graph(helper), helper, "non-capturing callee shared");
+        assert_ne!(res.graph(f), f);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn recursive_graph_clones_consistently() {
+        // loop(n) = loop(n + 1)   (self-reference must point at the clone)
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let l = m.add_graph("loop");
+        let n = m.add_parameter(l, "n");
+        let nx = m.apply_prim(l, Prim::Add, &[n, x]); // captures f's x
+        let lc = m.graph_constant(l);
+        let rec = m.apply(l, vec![lc, nx]);
+        m.set_return(l, rec);
+        let lc2 = m.graph_constant(l);
+        let call = m.apply(f, vec![lc2, x]);
+        m.set_return(f, call);
+
+        let res = clone_closure(&mut m, f);
+        let l2 = res.graph(l);
+        assert_ne!(l2, l);
+        // The recursive call inside l2 must reference l2, not l.
+        let rec2 = m.ret_of(l2);
+        assert_eq!(m.as_graph(m.node(rec2).inputs()[0]), Some(l2));
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn free_variables_preserved() {
+        // g captures from f; cloning g alone keeps pointers into f.
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let g = m.add_graph("g");
+        let y = m.add_parameter(g, "y");
+        let body = m.apply_prim(g, Prim::Add, &[y, x]);
+        m.set_return(g, body);
+        m.set_return(f, x); // f's shape irrelevant here
+
+        let res = clone_closure(&mut m, g);
+        let g2 = res.graph(g);
+        // clone still captures the ORIGINAL x.
+        assert_eq!(m.free_variables_total(g2), vec![x]);
+    }
+}

@@ -1,0 +1,217 @@
+//! The graph-based direct intermediate representation (paper §3).
+//!
+//! A function is a [`Graph`]: an ordered list of parameter nodes and a single
+//! return node. A [`Node`] is a function application whose first input is the
+//! function being applied (which may be a primitive, another graph — i.e. a
+//! first-class function — or any computed value). Constants are nodes with a
+//! value and no inputs. Links are bidirectional: the owning [`Module`]
+//! maintains use lists so graphs can be traversed in either direction.
+//!
+//! Free variables are represented as *direct pointers to nodes that belong to
+//! other graphs* (as in Thorin), creating the implicit nesting relationship
+//! the paper describes: a graph `Gc` is nested in `Gp` if it points to a node
+//! in `Gp`, or to a graph nested in `Gp`. This is what makes the
+//! closure-based AD transform (§3.2) natural: backpropagators are just graphs
+//! whose free variables are the forward pass's intermediate values.
+
+mod analysis;
+mod clone;
+mod module;
+mod prim;
+mod printer;
+
+pub use analysis::{analyze, ScopeAnalysis};
+pub use clone::{clone_closure, CloneResult};
+pub use module::{Graph, Module};
+pub use prim::Prim;
+pub use printer::print_graph;
+
+use crate::tensor::Tensor;
+use std::fmt;
+
+/// Index of a node in its module's arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+/// Index of a graph in its module's arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GraphId(pub u32);
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "%{}", self.0)
+    }
+}
+
+impl fmt::Display for GraphId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "@{}", self.0)
+    }
+}
+
+/// Constant values embeddable in the IR.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Const {
+    /// The unit value (also the empty list / `None`).
+    Unit,
+    F64(f64),
+    I64(i64),
+    Bool(bool),
+    Str(String),
+    Tensor(Tensor),
+    /// A primitive operation in function position.
+    Prim(Prim),
+    /// A first-class function: graphs are values (§3 "functions may be
+    /// passed as parameters ... or returned and then called").
+    Graph(GraphId),
+    /// A stable node key used by the AD env primitives (§3.2).
+    Key(u64),
+    /// The symbolic zero tangent: `gadd(ZeroT, x) = x`; `env_getitem` of a
+    /// missing key. Lets the optimizer cut unused gradient paths for free.
+    ZeroT,
+    /// A compile-time macro (e.g. `grad`), expanded by a dedicated pass
+    /// before execution — Figure 1's "after the grad macro is expanded".
+    Macro(MacroOp),
+}
+
+/// Compile-time macros exposed to the source language.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MacroOp {
+    /// `grad(f)` — function returning df/dx₀ (f must return a scalar).
+    Grad,
+    /// `value_and_grad(f)` — returns `(f(x..), df/dx₀)`.
+    ValueAndGrad,
+    /// `jfwd(f)` — forward-mode: `jfwd(f)(x, dx)` returns `(f(x), J·dx)`.
+    Jfwd,
+}
+
+impl fmt::Display for MacroOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MacroOp::Grad => write!(f, "grad"),
+            MacroOp::ValueAndGrad => write!(f, "value_and_grad"),
+            MacroOp::Jfwd => write!(f, "jfwd"),
+        }
+    }
+}
+
+impl Const {
+    /// 64-bit structural fingerprint (used by CSE and constant dedup).
+    pub fn fingerprint(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        match self {
+            Const::Unit => 0u8.hash(&mut h),
+            Const::F64(v) => {
+                1u8.hash(&mut h);
+                v.to_bits().hash(&mut h);
+            }
+            Const::I64(v) => {
+                2u8.hash(&mut h);
+                v.hash(&mut h);
+            }
+            Const::Bool(v) => {
+                3u8.hash(&mut h);
+                v.hash(&mut h);
+            }
+            Const::Str(s) => {
+                4u8.hash(&mut h);
+                s.hash(&mut h);
+            }
+            Const::Tensor(t) => {
+                5u8.hash(&mut h);
+                t.shape().hash(&mut h);
+                for v in t.as_f64_vec() {
+                    v.to_bits().hash(&mut h);
+                }
+            }
+            Const::Prim(p) => {
+                6u8.hash(&mut h);
+                p.hash(&mut h);
+            }
+            Const::Graph(g) => {
+                7u8.hash(&mut h);
+                g.0.hash(&mut h);
+            }
+            Const::Key(k) => {
+                8u8.hash(&mut h);
+                k.hash(&mut h);
+            }
+            Const::ZeroT => 9u8.hash(&mut h),
+            Const::Macro(op) => {
+                10u8.hash(&mut h);
+                op.hash(&mut h);
+            }
+        }
+        h.finish()
+    }
+}
+
+impl fmt::Display for Const {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Const::Unit => write!(f, "()"),
+            Const::F64(v) => write!(f, "{v}"),
+            Const::I64(v) => write!(f, "{v}"),
+            Const::Bool(v) => write!(f, "{v}"),
+            Const::Str(s) => write!(f, "{s:?}"),
+            Const::Tensor(t) => write!(f, "{t:?}"),
+            Const::Prim(p) => write!(f, "{p}"),
+            Const::Graph(g) => write!(f, "{g}"),
+            Const::Key(k) => write!(f, "key#{k}"),
+            Const::ZeroT => write!(f, "0̸"),
+            Const::Macro(op) => write!(f, "{op}"),
+        }
+    }
+}
+
+/// The three node kinds of §3.1.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NodeKind {
+    /// Function application; `inputs[0]` is the callee.
+    Apply(Vec<NodeId>),
+    /// A graph parameter.
+    Parameter,
+    /// A constant (no incoming edges, a value field).
+    Constant(Const),
+}
+
+/// A node in the IR.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub kind: NodeKind,
+    /// Owning graph; `None` for constants (which are module-global).
+    pub graph: Option<GraphId>,
+    /// Source-level name, for diagnostics and printing.
+    pub debug_name: Option<String>,
+}
+
+impl Node {
+    pub fn is_apply(&self) -> bool {
+        matches!(self.kind, NodeKind::Apply(_))
+    }
+
+    pub fn is_parameter(&self) -> bool {
+        matches!(self.kind, NodeKind::Parameter)
+    }
+
+    pub fn is_constant(&self) -> bool {
+        matches!(self.kind, NodeKind::Constant(_))
+    }
+
+    /// The constant value, if this is a constant node.
+    pub fn constant(&self) -> Option<&Const> {
+        match &self.kind {
+            NodeKind::Constant(c) => Some(c),
+            _ => None,
+        }
+    }
+
+    /// Apply inputs (empty for non-apply nodes).
+    pub fn inputs(&self) -> &[NodeId] {
+        match &self.kind {
+            NodeKind::Apply(inputs) => inputs,
+            _ => &[],
+        }
+    }
+}

@@ -1,0 +1,536 @@
+//! The module arena and graph manager.
+//!
+//! Owns all graphs and nodes, maintains bidirectional edges (use lists), and
+//! answers the structural queries the rest of the compiler is built on:
+//! topological order, reachability, free variables (direct and total), and
+//! in-place rewiring for the optimizer.
+
+use super::{Const, GraphId, Node, NodeId, NodeKind, Prim};
+use std::collections::{HashMap, HashSet};
+
+/// A function: ordered parameters plus a single return node (§3.1). Multiple
+/// return values are expressed with tuples.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub name: String,
+    pub params: Vec<NodeId>,
+    pub ret: Option<NodeId>,
+}
+
+/// Arena of graphs and nodes with use-list maintenance.
+#[derive(Debug, Default, Clone)]
+pub struct Module {
+    nodes: Vec<Node>,
+    graphs: Vec<Graph>,
+    /// For each node, the list of (user, input index) pairs.
+    uses: Vec<Vec<(NodeId, usize)>>,
+    /// Dedup cache for scalar/prim constants.
+    const_cache: HashMap<u64, Vec<NodeId>>,
+}
+
+impl Module {
+    pub fn new() -> Module {
+        Module::default()
+    }
+
+    // ---- construction ----------------------------------------------------
+
+    /// Create an empty graph.
+    pub fn add_graph(&mut self, name: impl Into<String>) -> GraphId {
+        let id = GraphId(self.graphs.len() as u32);
+        self.graphs.push(Graph { name: name.into(), params: Vec::new(), ret: None });
+        id
+    }
+
+    /// Append a parameter to `g`.
+    pub fn add_parameter(&mut self, g: GraphId, name: impl Into<String>) -> NodeId {
+        let id = self.push_node(Node {
+            kind: NodeKind::Parameter,
+            graph: Some(g),
+            debug_name: Some(name.into()),
+        });
+        self.graphs[g.0 as usize].params.push(id);
+        id
+    }
+
+    /// Create an application node owned by `g`. `inputs[0]` is the callee.
+    pub fn apply(&mut self, g: GraphId, inputs: Vec<NodeId>) -> NodeId {
+        assert!(!inputs.is_empty(), "apply requires at least a callee");
+        let id = self.push_node(Node { kind: NodeKind::Apply(inputs.clone()), graph: Some(g), debug_name: None });
+        for (i, &input) in inputs.iter().enumerate() {
+            self.uses[input.0 as usize].push((id, i));
+        }
+        id
+    }
+
+    /// Convenience: apply a primitive.
+    pub fn apply_prim(&mut self, g: GraphId, prim: Prim, args: &[NodeId]) -> NodeId {
+        if let Some(ar) = prim.arity() {
+            debug_assert_eq!(ar, args.len(), "arity mismatch applying {prim}");
+        }
+        let p = self.constant(Const::Prim(prim));
+        let mut inputs = Vec::with_capacity(args.len() + 1);
+        inputs.push(p);
+        inputs.extend_from_slice(args);
+        self.apply(g, inputs)
+    }
+
+    /// Like [`Module::apply_prim`] without the arity debug-check (for
+    /// variadic primitives such as `make_tuple`).
+    pub fn apply_prim_variadic(&mut self, g: GraphId, prim: Prim, args: &[NodeId]) -> NodeId {
+        let p = self.constant(Const::Prim(prim));
+        let mut inputs = Vec::with_capacity(args.len() + 1);
+        inputs.push(p);
+        inputs.extend_from_slice(args);
+        self.apply(g, inputs)
+    }
+
+    /// Intern a constant node (deduplicated for cheap values).
+    pub fn constant(&mut self, value: Const) -> NodeId {
+        let fp = value.fingerprint();
+        if let Some(candidates) = self.const_cache.get(&fp) {
+            for &c in candidates {
+                if self.nodes[c.0 as usize].constant() == Some(&value) {
+                    return c;
+                }
+            }
+        }
+        let id = self.push_node(Node { kind: NodeKind::Constant(value), graph: None, debug_name: None });
+        self.const_cache.entry(fp).or_default().push(id);
+        id
+    }
+
+    /// Constant referring to a graph (a first-class function value).
+    pub fn graph_constant(&mut self, g: GraphId) -> NodeId {
+        self.constant(Const::Graph(g))
+    }
+
+    /// Set the return node of a graph.
+    pub fn set_return(&mut self, g: GraphId, node: NodeId) {
+        self.graphs[g.0 as usize].ret = Some(node);
+    }
+
+    fn push_node(&mut self, node: Node) -> NodeId {
+        let id = NodeId(self.nodes.len() as u32);
+        self.nodes.push(node);
+        self.uses.push(Vec::new());
+        id
+    }
+
+    // ---- accessors --------------------------------------------------------
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0 as usize]
+    }
+
+    pub fn graph(&self, id: GraphId) -> &Graph {
+        &self.graphs[id.0 as usize]
+    }
+
+    pub fn graph_mut(&mut self, id: GraphId) -> &mut Graph {
+        &mut self.graphs[id.0 as usize]
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn num_graphs(&self) -> usize {
+        self.graphs.len()
+    }
+
+    pub fn graph_ids(&self) -> impl Iterator<Item = GraphId> {
+        (0..self.graphs.len() as u32).map(GraphId)
+    }
+
+    /// Users of a node as (user, input-index) pairs. Stale entries (from
+    /// rewired edges) are filtered out lazily.
+    pub fn uses(&self, id: NodeId) -> Vec<(NodeId, usize)> {
+        self.uses[id.0 as usize]
+            .iter()
+            .copied()
+            .filter(|&(u, i)| {
+                self.nodes[u.0 as usize]
+                    .inputs()
+                    .get(i)
+                    .map(|&x| x == id)
+                    .unwrap_or(false)
+            })
+            .collect()
+    }
+
+    /// The return node of `g`; panics if unset.
+    pub fn ret_of(&self, g: GraphId) -> NodeId {
+        self.graphs[g.0 as usize].ret.unwrap_or_else(|| {
+            panic!("graph {} ({}) has no return node", g, self.graphs[g.0 as usize].name)
+        })
+    }
+
+    /// If `node` is a constant holding a primitive, return it.
+    pub fn as_prim(&self, node: NodeId) -> Option<Prim> {
+        match self.node(node).constant() {
+            Some(Const::Prim(p)) => Some(*p),
+            _ => None,
+        }
+    }
+
+    /// If `node` is a constant holding a graph reference, return it.
+    pub fn as_graph(&self, node: NodeId) -> Option<GraphId> {
+        match self.node(node).constant() {
+            Some(Const::Graph(g)) => Some(*g),
+            _ => None,
+        }
+    }
+
+    /// True if `node` is an application of primitive `p`.
+    pub fn is_apply_of(&self, node: NodeId, p: Prim) -> bool {
+        let n = self.node(node);
+        n.is_apply() && self.as_prim(n.inputs()[0]) == Some(p)
+    }
+
+    // ---- mutation (optimizer API) ------------------------------------------
+
+    /// Rewire input `index` of `user` to `new`.
+    pub fn set_input(&mut self, user: NodeId, index: usize, new: NodeId) {
+        let old = match &mut self.nodes[user.0 as usize].kind {
+            NodeKind::Apply(inputs) => std::mem::replace(&mut inputs[index], new),
+            _ => panic!("set_input on non-apply node"),
+        };
+        // Remove the stale use entry; add the new one.
+        self.uses[old.0 as usize].retain(|&(u, i)| !(u == user && i == index));
+        self.uses[new.0 as usize].push((user, index));
+    }
+
+    /// Replace every use of `old` with `new`, including graph returns and
+    /// parameter lists.
+    pub fn replace_all_uses(&mut self, old: NodeId, new: NodeId) {
+        if old == new {
+            return;
+        }
+        for (user, index) in self.uses(old) {
+            self.set_input(user, index, new);
+        }
+        for g in 0..self.graphs.len() {
+            if self.graphs[g].ret == Some(old) {
+                self.graphs[g].ret = Some(new);
+            }
+        }
+    }
+
+    /// Transfer ownership of a node to another graph (used by inlining).
+    pub fn reassign_graph(&mut self, node: NodeId, g: GraphId) {
+        self.nodes[node.0 as usize].graph = Some(g);
+    }
+
+    /// Overwrite the inputs of an apply node.
+    pub fn set_inputs(&mut self, node: NodeId, new_inputs: Vec<NodeId>) {
+        let old_inputs = self.node(node).inputs().to_vec();
+        for (i, &inp) in old_inputs.iter().enumerate() {
+            self.uses[inp.0 as usize].retain(|&(u, j)| !(u == node && j == i));
+        }
+        for (i, &inp) in new_inputs.iter().enumerate() {
+            self.uses[inp.0 as usize].push((node, i));
+        }
+        match &mut self.nodes[node.0 as usize].kind {
+            NodeKind::Apply(inputs) => *inputs = new_inputs,
+            _ => panic!("set_inputs on non-apply node"),
+        }
+    }
+
+    /// Set a node's debug name (builder convenience).
+    pub fn name_node(&mut self, node: NodeId, name: impl Into<String>) {
+        self.nodes[node.0 as usize].debug_name = Some(name.into());
+    }
+
+    // ---- structural queries -------------------------------------------------
+
+    /// Nodes owned by `g` that are reachable from its return node, in
+    /// topological (operands-before-users) order. Free variables, constants
+    /// and parameters are not included — they are leaves.
+    pub fn topo_order(&self, g: GraphId) -> Vec<NodeId> {
+        let ret = match self.graphs[g.0 as usize].ret {
+            Some(r) => r,
+            None => return Vec::new(),
+        };
+        let mut order = Vec::new();
+        let mut state: HashMap<NodeId, u8> = HashMap::new(); // 1=open, 2=done
+        let mut stack = vec![(ret, false)];
+        while let Some((n, expanded)) = stack.pop() {
+            if expanded {
+                state.insert(n, 2);
+                order.push(n);
+                continue;
+            }
+            if state.contains_key(&n) {
+                continue;
+            }
+            let node = self.node(n);
+            // Only walk into apply nodes owned by g.
+            if !(node.is_apply() && node.graph == Some(g)) {
+                continue;
+            }
+            state.insert(n, 1);
+            stack.push((n, true));
+            for &inp in node.inputs().iter().rev() {
+                if !state.contains_key(&inp) {
+                    stack.push((inp, false));
+                }
+            }
+        }
+        order
+    }
+
+    /// Every node referenced from g's reachable body: the inputs of its
+    /// reachable apply nodes plus the return node itself (which may directly
+    /// be a constant or a foreign node).
+    fn referenced_nodes(&self, g: GraphId) -> Vec<NodeId> {
+        let mut seen = HashSet::new();
+        let mut out = Vec::new();
+        for n in self.topo_order(g) {
+            for &inp in self.node(n).inputs() {
+                if seen.insert(inp) {
+                    out.push(inp);
+                }
+            }
+        }
+        if let Some(r) = self.graphs[g.0 as usize].ret {
+            if seen.insert(r) {
+                out.push(r);
+            }
+        }
+        out
+    }
+
+    /// Direct free variables of `g`: non-constant nodes referenced by g's own
+    /// reachable body but owned by another graph. Deterministic order.
+    pub fn free_variables_direct(&self, g: GraphId) -> Vec<NodeId> {
+        self.referenced_nodes(g)
+            .into_iter()
+            .filter(|&inp| {
+                let node = self.node(inp);
+                !node.is_constant() && node.graph != Some(g)
+            })
+            .collect()
+    }
+
+    /// Graphs referenced as constants from g's reachable body.
+    pub fn graphs_used_by(&self, g: GraphId) -> Vec<GraphId> {
+        let mut seen = HashSet::new();
+        let mut out = Vec::new();
+        for inp in self.referenced_nodes(g) {
+            if let Some(sub) = self.as_graph(inp) {
+                if seen.insert(sub) {
+                    out.push(sub);
+                }
+            }
+        }
+        out
+    }
+
+    /// All graphs reachable from `g` through graph constants (including `g`).
+    pub fn reachable_graphs(&self, g: GraphId) -> Vec<GraphId> {
+        let mut seen = HashSet::new();
+        let mut order = Vec::new();
+        let mut stack = vec![g];
+        while let Some(h) = stack.pop() {
+            if !seen.insert(h) {
+                continue;
+            }
+            order.push(h);
+            for sub in self.graphs_used_by(h) {
+                stack.push(sub);
+            }
+        }
+        order
+    }
+
+    /// Total free variables of each reachable graph: the direct free
+    /// variables plus those inherited from referenced graphs, excluding nodes
+    /// the graph itself owns. Computed by the scope-analysis fixpoint so that
+    /// mutual/recursive references and capture-only nodes converge (§3: the
+    /// implicit nesting relation).
+    pub fn free_variables_total(&self, g: GraphId) -> Vec<NodeId> {
+        self.free_variables_total_map(g).remove(&g).unwrap_or_default()
+    }
+
+    /// Fixpoint free-variable map for every graph reachable from `g`.
+    pub fn free_variables_total_map(&self, g: GraphId) -> HashMap<GraphId, Vec<NodeId>> {
+        super::analysis::analyze(self, g).fvs
+    }
+
+    /// Count of distinct nodes reachable from `g`'s return across all nested
+    /// and called graphs — the "graph size" metric used by E1/E6.
+    pub fn reachable_node_count(&self, g: GraphId) -> usize {
+        super::analysis::analyze(self, g).node_count(self)
+    }
+
+    /// Structural integrity check (used by tests and after optimizer passes):
+    /// every apply input exists, every use-list entry is consistent, every
+    /// graph return is set, and parameters belong to their graph.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, node) in self.nodes.iter().enumerate() {
+            for &inp in node.inputs() {
+                if inp.0 as usize >= self.nodes.len() {
+                    return Err(format!("node %{i} references missing node {inp}"));
+                }
+            }
+        }
+        for (gi, graph) in self.graphs.iter().enumerate() {
+            for &p in &graph.params {
+                let n = self.node(p);
+                if !n.is_parameter() || n.graph != Some(GraphId(gi as u32)) {
+                    return Err(format!("graph @{gi} has foreign/non-parameter param {p}"));
+                }
+            }
+        }
+        // Use lists must cover actual edges.
+        for (i, node) in self.nodes.iter().enumerate() {
+            for (idx, &inp) in node.inputs().iter().enumerate() {
+                let ok = self.uses[inp.0 as usize]
+                    .iter()
+                    .any(|&(u, j)| u == NodeId(i as u32) && j == idx);
+                if !ok {
+                    return Err(format!("missing use entry for edge %{i}[{idx}] -> {inp}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build `f(x) = x * x + 2`.
+    fn sample_module() -> (Module, GraphId, NodeId) {
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let sq = m.apply_prim(f, Prim::Mul, &[x, x]);
+        let two = m.constant(Const::F64(2.0));
+        let r = m.apply_prim(f, Prim::Add, &[sq, two]);
+        m.set_return(f, r);
+        (m, f, x)
+    }
+
+    #[test]
+    fn build_and_topo() {
+        let (m, f, _) = sample_module();
+        let order = m.topo_order(f);
+        assert_eq!(order.len(), 2); // mul, add
+        assert!(m.is_apply_of(order[0], Prim::Mul));
+        assert!(m.is_apply_of(order[1], Prim::Add));
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn constants_deduped() {
+        let mut m = Module::new();
+        let a = m.constant(Const::F64(1.5));
+        let b = m.constant(Const::F64(1.5));
+        let c = m.constant(Const::F64(2.5));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        let p1 = m.constant(Const::Prim(Prim::Add));
+        let p2 = m.constant(Const::Prim(Prim::Add));
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn uses_tracked() {
+        let (m, f, x) = sample_module();
+        let uses = m.uses(x);
+        assert_eq!(uses.len(), 2); // both inputs of mul
+        let mul = m.topo_order(f)[0];
+        assert!(uses.iter().all(|&(u, _)| u == mul));
+    }
+
+    #[test]
+    fn replace_all_uses_rewires() {
+        let (mut m, f, x) = sample_module();
+        let ten = m.constant(Const::F64(10.0));
+        m.replace_all_uses(x, ten);
+        let mul = m.topo_order(f)[0];
+        assert_eq!(m.node(mul).inputs()[1], ten);
+        assert_eq!(m.node(mul).inputs()[2], ten);
+        assert!(m.uses(x).is_empty());
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn replace_updates_return() {
+        let (mut m, f, x) = sample_module();
+        let r = m.ret_of(f);
+        let zero = m.constant(Const::F64(0.0));
+        m.replace_all_uses(r, zero);
+        assert_eq!(m.ret_of(f), zero);
+        let _ = x;
+    }
+
+    #[test]
+    fn free_variables_direct_and_nesting() {
+        // f(x): g() = x * 3; return g()
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let g = m.add_graph("g");
+        let three = m.constant(Const::F64(3.0));
+        let body = m.apply_prim(g, Prim::Mul, &[x, three]);
+        m.set_return(g, body);
+        let gc = m.graph_constant(g);
+        let call = m.apply(f, vec![gc]);
+        m.set_return(f, call);
+
+        assert_eq!(m.free_variables_direct(g), vec![x]);
+        assert!(m.free_variables_direct(f).is_empty());
+        // total fvs of f: none (x is owned by f)
+        assert!(m.free_variables_total(f).is_empty());
+        assert_eq!(m.free_variables_total(g), vec![x]);
+        assert_eq!(m.reachable_graphs(f).len(), 2);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn recursive_closure_fv_fixpoint() {
+        // f(x): loop(n) = if-ish: loop refs f's x and itself.
+        // loop(n) = add(n, x); loop calls itself: r = loop(loop_ref(n)) — we
+        // simply build: body = add(n, x); rec = loop(body); ret rec.
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let l = m.add_graph("loop");
+        let n = m.add_parameter(l, "n");
+        let body = m.apply_prim(l, Prim::Add, &[n, x]);
+        let lc = m.graph_constant(l);
+        let rec = m.apply(l, vec![lc, body]);
+        m.set_return(l, rec);
+        let lc2 = m.graph_constant(l);
+        let call = m.apply(f, vec![lc2, x]);
+        m.set_return(f, call);
+
+        // loop's total fvs = {x}; recursion must not hide it.
+        assert_eq!(m.free_variables_total(l), vec![x]);
+        // f's total fvs empty: x belongs to f.
+        assert!(m.free_variables_total(f).is_empty());
+    }
+
+    #[test]
+    fn reachable_node_count_counts_nested() {
+        let (m, f, _) = sample_module();
+        // x, mul-prim-const, mul, 2.0, add-prim-const, add = 6
+        assert_eq!(m.reachable_node_count(f), 6);
+    }
+
+    #[test]
+    fn set_inputs_consistency() {
+        let (mut m, f, x) = sample_module();
+        let mul = m.topo_order(f)[0];
+        let one = m.constant(Const::F64(1.0));
+        let p = m.constant(Const::Prim(Prim::Add));
+        m.set_inputs(mul, vec![p, x, one]);
+        m.validate().unwrap();
+        assert!(m.is_apply_of(mul, Prim::Add));
+        assert_eq!(m.uses(one).len(), 1);
+    }
+}

@@ -1,0 +1,321 @@
+//! The primitive (elementary operation) registry.
+//!
+//! AD "relies on the ability to decompose a program into a series of
+//! elementary operations (primitives) for which the derivatives are known"
+//! (§2.1). This enum is the single source of truth shared by the VM
+//! (evaluation rules), the AD transform (backpropagators), the optimizer
+//! (algebraic identities), the type inferrer (signatures) and the XLA
+//! backend (lowering rules).
+
+use std::fmt;
+
+/// Every primitive operation in the language.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Prim {
+    // -- arithmetic (polymorphic over scalars and tensors, broadcasting) --
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Pow,
+    Neg,
+    Exp,
+    Ln,
+    Tanh,
+    Sqrt,
+    Sin,
+    Cos,
+    Relu,
+    Sigmoid,
+    Abs,
+    Sign,
+    Maximum,
+    Minimum,
+    FloorDiv,
+    Mod,
+    // -- comparisons (produce Bool) --
+    Lt,
+    Gt,
+    Le,
+    Ge,
+    Eq,
+    Ne,
+    // -- boolean --
+    Not,
+    BoolAnd,
+    BoolOr,
+    // -- control --
+    /// `switch(cond, on_true, on_false)` selects one of two values (usually
+    /// branch thunks, which the lowered `if` immediately calls).
+    Switch,
+    // -- tuples --
+    MakeTuple,
+    /// `tuple_getitem(t, i)` with constant i.
+    TupleGetItem,
+    TupleLen,
+    /// `tuple_inject(i, n, v)` — tuple of `n` ZeroT with `v` at slot `i`;
+    /// the backpropagator of `TupleGetItem`.
+    TupleInject,
+    /// `is_nil(x)` — true iff x is Unit; lists are cons-tuples ending in Unit.
+    IsNil,
+    // -- AD environment values (§3.2: gradients w.r.t. closures) --
+    NewEnv,
+    /// `env_setitem(env, key, value)`.
+    EnvSetItem,
+    /// `env_getitem(env, key)` — returns the stored value or ZeroT.
+    EnvGetItem,
+    // -- AD generic tangent arithmetic --
+    /// Generic gradient addition: scalars, tensors, tuples, envs, ZeroT.
+    Gadd,
+    /// `zeros_like(x)` — zero tangent with the structure of x.
+    ZerosLike,
+    /// `ones_like(x)`.
+    OnesLike,
+    // -- tensor ops --
+    MatMul,
+    Transpose,
+    /// `reshape(x, shape_tuple)`.
+    Reshape,
+    /// `broadcast_to(x, shape_tuple)`.
+    BroadcastTo,
+    /// `sum_to(x, shape_tuple)` — adjoint of broadcasting.
+    SumTo,
+    /// `shape(x)` — shape as a tuple of i64.
+    ShapeOf,
+    /// Sum over all elements to a rank-0 tensor.
+    ReduceSum,
+    /// Mean over all elements to a rank-0 tensor.
+    ReduceMean,
+    /// `reduce_sum_axis(x, axis)` with constant axis.
+    ReduceSumAxis,
+    /// Row-wise softmax over the last axis.
+    SoftmaxLast,
+    /// `one_hot(classes, depth)`.
+    OneHot,
+    /// Argmax over the last axis (non-differentiable).
+    ArgmaxLast,
+    /// `concat0(t1, t2)` — concatenate along axis 0.
+    Concat0,
+    /// `take_row(x, i)` — row i of axis 0.
+    TakeRow,
+    /// Extract the single element of a tensor as a scalar.
+    Item,
+    /// `scalar_to_tensor(x)` — rank-0 tensor from a scalar.
+    ScalarToTensor,
+    /// `cast_f32(x)` / `cast_f64(x)`.
+    CastF32,
+    CastF64,
+    /// `where(cond, a, b)` elementwise select.
+    Where,
+    /// Heaviside step (1 where x > 0, else 0); the polymorphic mask used by
+    /// the backpropagators of `relu`/`maximum`/`minimum`.
+    Step,
+    /// `sum_to_like(d, x)` — reduce `d` to the shape of `x` (the adjoint of
+    /// implicit broadcasting; works on scalars and tensors).
+    SumToLike,
+    /// `broadcast_like(v, t)` — broadcast `v` to the shape of `t`; the
+    /// adjoint of `sum_to_like`.
+    BroadcastLike,
+    /// Sum over the last axis, keeping it as size 1 (used by the softmax
+    /// backpropagator).
+    SumLastKeep,
+    // -- effects/debugging (kept out of differentiable paths) --
+    /// Identity that prints its argument (returns it).
+    Print,
+    /// Raise a runtime error with a message.
+    Raise,
+    /// `rng_uniform(seed_i64, shape_tuple)` — deterministic uniform tensor;
+    /// the "monadic RNG" extension from §5: the seed is threaded explicitly.
+    RngUniform,
+    /// `rng_normal(seed_i64, shape_tuple)`.
+    RngNormal,
+    /// `rng_split(seed_i64)` — derive two fresh seeds `(s1, s2)`.
+    RngSplit,
+    /// Partial application: `partial(f, x)` returns g with `g(..) = f(x, ..)`.
+    Partial,
+}
+
+impl Prim {
+    /// Canonical source-level name (used by the printer and the parser's
+    /// builtin table).
+    pub fn name(self) -> &'static str {
+        use Prim::*;
+        match self {
+            Add => "add",
+            Sub => "sub",
+            Mul => "mul",
+            Div => "div",
+            Pow => "pow",
+            Neg => "neg",
+            Exp => "exp",
+            Ln => "log",
+            Tanh => "tanh",
+            Sqrt => "sqrt",
+            Sin => "sin",
+            Cos => "cos",
+            Relu => "relu",
+            Sigmoid => "sigmoid",
+            Abs => "abs",
+            Sign => "sign",
+            Maximum => "maximum",
+            Minimum => "minimum",
+            FloorDiv => "floordiv",
+            Mod => "mod",
+            Lt => "lt",
+            Gt => "gt",
+            Le => "le",
+            Ge => "ge",
+            Eq => "eq",
+            Ne => "ne",
+            Not => "not_",
+            BoolAnd => "bool_and",
+            BoolOr => "bool_or",
+            Switch => "switch",
+            MakeTuple => "make_tuple",
+            TupleGetItem => "tuple_getitem",
+            TupleLen => "tuple_len",
+            TupleInject => "tuple_inject",
+            IsNil => "is_nil",
+            NewEnv => "newenv",
+            EnvSetItem => "env_setitem",
+            EnvGetItem => "env_getitem",
+            Gadd => "gadd",
+            ZerosLike => "zeros_like",
+            OnesLike => "ones_like",
+            MatMul => "matmul",
+            Transpose => "transpose",
+            Reshape => "reshape",
+            BroadcastTo => "broadcast_to",
+            SumTo => "sum_to",
+            ShapeOf => "shape",
+            ReduceSum => "sum",
+            ReduceMean => "mean",
+            ReduceSumAxis => "sum_axis",
+            SoftmaxLast => "softmax",
+            OneHot => "one_hot",
+            ArgmaxLast => "argmax",
+            Concat0 => "concat0",
+            TakeRow => "take_row",
+            Item => "item",
+            ScalarToTensor => "to_tensor",
+            CastF32 => "cast_f32",
+            CastF64 => "cast_f64",
+            Where => "where_",
+            Step => "step",
+            SumToLike => "sum_to_like",
+            BroadcastLike => "broadcast_like",
+            SumLastKeep => "sum_last_keep",
+            Print => "print_",
+            Raise => "raise_",
+            RngUniform => "rng_uniform",
+            RngNormal => "rng_normal",
+            RngSplit => "rng_split",
+            Partial => "partial",
+        }
+    }
+
+    /// Number of arguments, if fixed (`MakeTuple` is variadic).
+    pub fn arity(self) -> Option<usize> {
+        use Prim::*;
+        match self {
+            MakeTuple => None,
+            NewEnv => Some(0),
+            Neg | Exp | Ln | Tanh | Sqrt | Sin | Cos | Relu | Sigmoid | Abs | Sign | Not
+            | TupleLen | IsNil | ZerosLike | OnesLike | Transpose | ShapeOf | ReduceSum
+            | ReduceMean | SoftmaxLast | ArgmaxLast | Item | ScalarToTensor | CastF32
+            | CastF64 | Print | Raise | RngSplit | Step | SumLastKeep => Some(1),
+            Add | Sub | Mul | Div | Pow | Maximum | Minimum | FloorDiv | Mod | Lt | Gt | Le
+            | Ge | Eq | Ne | BoolAnd | BoolOr | TupleGetItem | EnvGetItem | Gadd | MatMul
+            | Reshape | BroadcastTo | SumTo | ReduceSumAxis | OneHot | Concat0 | TakeRow
+            | RngUniform | RngNormal | Partial | SumToLike | BroadcastLike => Some(2),
+            Switch | EnvSetItem | TupleInject | Where => Some(3),
+        }
+    }
+
+    /// True if the op is a pure function of its inputs (everything except
+    /// `Print` and `Raise`); pure applications are eligible for CSE,
+    /// constant folding and dead-code elimination.
+    pub fn is_pure(self) -> bool {
+        !matches!(self, Prim::Print | Prim::Raise)
+    }
+
+    /// True if every input's derivative is known to be zero (the
+    /// backpropagator returns ZeroT for all inputs).
+    pub fn is_nondifferentiable(self) -> bool {
+        use Prim::*;
+        matches!(
+            self,
+            Lt | Gt | Le | Ge | Eq | Ne | Not | BoolAnd | BoolOr | TupleLen | IsNil | ShapeOf
+                | ArgmaxLast | Sign | OneHot | RngUniform | RngNormal | RngSplit | Raise | Step
+        )
+    }
+
+    /// All primitives (for exhaustive registry tests).
+    pub fn all() -> Vec<Prim> {
+        use Prim::*;
+        vec![
+            Add, Sub, Mul, Div, Pow, Neg, Exp, Ln, Tanh, Sqrt, Sin, Cos, Relu, Sigmoid, Abs,
+            Sign, Maximum, Minimum, FloorDiv, Mod, Lt, Gt, Le, Ge, Eq, Ne, Not, BoolAnd, BoolOr,
+            Switch, MakeTuple, TupleGetItem, TupleLen, TupleInject, IsNil, NewEnv, EnvSetItem,
+            EnvGetItem, Gadd, ZerosLike, OnesLike, MatMul, Transpose, Reshape, BroadcastTo,
+            SumTo, ShapeOf, ReduceSum, ReduceMean, ReduceSumAxis, SoftmaxLast, OneHot,
+            ArgmaxLast, Concat0, TakeRow, Item, ScalarToTensor, CastF32, CastF64, Where, Print,
+            Raise, RngUniform, RngNormal, RngSplit, Partial, Step, SumToLike, BroadcastLike,
+            SumLastKeep,
+        ]
+    }
+
+    /// Look up a primitive by its source-level name.
+    pub fn by_name(name: &str) -> Option<Prim> {
+        Prim::all().into_iter().find(|p| p.name() == name)
+    }
+}
+
+impl fmt::Display for Prim {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_unique_and_roundtrip() {
+        let all = Prim::all();
+        let mut seen = std::collections::HashSet::new();
+        for p in &all {
+            assert!(seen.insert(p.name()), "duplicate prim name {}", p.name());
+            assert_eq!(Prim::by_name(p.name()), Some(*p));
+        }
+        assert!(Prim::by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn arity_sane() {
+        assert_eq!(Prim::Add.arity(), Some(2));
+        assert_eq!(Prim::Switch.arity(), Some(3));
+        assert_eq!(Prim::MakeTuple.arity(), None);
+        assert_eq!(Prim::NewEnv.arity(), Some(0));
+        assert_eq!(Prim::Neg.arity(), Some(1));
+    }
+
+    #[test]
+    fn purity_and_differentiability() {
+        assert!(Prim::Add.is_pure());
+        assert!(!Prim::Print.is_pure());
+        assert!(!Prim::Raise.is_pure());
+        assert!(Prim::Lt.is_nondifferentiable());
+        assert!(!Prim::Mul.is_nondifferentiable());
+    }
+
+    #[test]
+    fn all_is_exhaustive_for_names() {
+        // every prim has a nonempty distinct name and Display == name()
+        for p in Prim::all() {
+            assert!(!p.name().is_empty());
+            assert_eq!(format!("{p}"), p.name());
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! Textual rendering of graphs (the format used throughout docs and tests).
+//!
+//! ```text
+//! graph f(%x) {
+//!   %4 = mul(%x, %x)
+//!   %6 = add(%4, 2)
+//!   return %6
+//! }
+//! ```
+//!
+//! `print_graph` renders a graph and (optionally) every graph reachable from
+//! it, in deterministic order — the exact output Figure 1's three stages are
+//! rendered with in `examples/quickstart.rs`.
+
+use super::{GraphId, Module, NodeId};
+
+/// Render `g` (and all reachable graphs if `recursive`).
+pub fn print_graph(m: &Module, g: GraphId, recursive: bool) -> String {
+    let mut out = String::new();
+    let graphs = if recursive { m.reachable_graphs(g) } else { vec![g] };
+    for (i, h) in graphs.iter().enumerate() {
+        if i > 0 {
+            out.push('\n');
+        }
+        print_one(m, *h, &mut out);
+    }
+    out
+}
+
+fn label(m: &Module, n: NodeId) -> String {
+    let node = m.node(n);
+    if let Some(c) = node.constant() {
+        match c {
+            super::Const::Graph(g) => format!("@{}", m.graph(*g).name),
+            other => format!("{other}"),
+        }
+    } else if let Some(name) = &node.debug_name {
+        format!("%{name}")
+    } else {
+        format!("{n}")
+    }
+}
+
+fn print_one(m: &Module, g: GraphId, out: &mut String) {
+    let graph = m.graph(g);
+    let params: Vec<String> = graph.params.iter().map(|&p| label(m, p)).collect();
+    out.push_str(&format!("graph {}({}) {{\n", graph.name, params.join(", ")));
+    for n in m.topo_order(g) {
+        let node = m.node(n);
+        let callee = label(m, node.inputs()[0]);
+        let args: Vec<String> = node.inputs()[1..].iter().map(|&a| label(m, a)).collect();
+        let callee = callee.strip_prefix('@').map(|s| format!("@{s}")).unwrap_or(callee);
+        out.push_str(&format!("  {} = {}({})\n", label(m, n), callee, args.join(", ")));
+    }
+    if let Some(r) = graph.ret {
+        out.push_str(&format!("  return {}\n", label(m, r)));
+    }
+    out.push_str("}\n");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Const, Prim};
+
+    #[test]
+    fn renders_simple_graph() {
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let three = m.constant(Const::I64(3));
+        let r = m.apply_prim(f, Prim::Pow, &[x, three]);
+        m.set_return(f, r);
+        let s = print_graph(&m, f, false);
+        assert!(s.contains("graph f(%x)"), "{s}");
+        assert!(s.contains("pow(%x, 3)"), "{s}");
+        assert!(s.contains("return"), "{s}");
+    }
+
+    #[test]
+    fn renders_nested_graphs_recursively() {
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let g = m.add_graph("inner");
+        let y = m.add_parameter(g, "y");
+        let b = m.apply_prim(g, Prim::Add, &[y, x]);
+        m.set_return(g, b);
+        let gc = m.graph_constant(g);
+        let call = m.apply(f, vec![gc, x]);
+        m.set_return(f, call);
+
+        let s = print_graph(&m, f, true);
+        assert!(s.contains("graph f"));
+        assert!(s.contains("graph inner"));
+        assert!(s.contains("@inner(%x)"), "{s}");
+        let single = print_graph(&m, f, false);
+        assert!(!single.contains("graph inner"));
+    }
+}

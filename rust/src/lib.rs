@@ -1,0 +1,43 @@
+//! myia-rs — a Rust reproduction of the Myia toolchain from
+//! *"Automatic differentiation in ML: Where we are and where we should be
+//! going"* (van Merriënboer, Breuleux, Bergeron, Lamblin; NeurIPS 2018).
+//!
+//! The crate implements the paper's full stack:
+//!
+//! * [`ir`] — the graph-based, purely functional intermediate representation
+//!   (§3): first-class functions, closures as cross-graph node pointers,
+//!   strongly typed after specialization.
+//! * [`parser`] — the Python-subset front end (§4.1).
+//! * [`ad`] — closure-based source-transformation reverse-mode AD (§3.2),
+//!   forward-mode dual numbers, and an operator-overloading tape baseline
+//!   (§2.1.1) for the paper's comparisons.
+//! * [`opt`] — the optimization pipeline (§4.3) that collapses generated
+//!   adjoints to hand-written form (Figure 1).
+//! * [`types`] — type/shape inference and monomorphizing specialization
+//!   (§4.2).
+//! * [`vm`] — Myia's virtual machine: a closure-converted register-bytecode
+//!   interpreter with proper tail calls.
+//! * [`backend`] + [`runtime`] — the compiled backend for straight-line graph
+//!   segments (the paper used TVM; we lower to XLA and execute via PJRT), and
+//!   the loader for AOT artifacts produced by the JAX/Pallas build path.
+//! * [`coordinator`] — the end-to-end pipeline driver and CLI.
+//! * [`tensor`], [`bench`], [`ptest`], [`baselines`] — substrates built from
+//!   scratch: a dense tensor library, a micro-benchmark harness, a property
+//!   testing framework, and the dataflow-graph / OO-tape comparators.
+
+pub mod tensor;
+pub mod ptest;
+pub mod bench;
+pub mod ir;
+pub mod parser;
+pub mod vm;
+pub mod ad;
+pub mod opt;
+pub mod types;
+pub mod runtime;
+pub mod backend;
+pub mod baselines;
+pub mod coordinator;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

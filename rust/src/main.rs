@@ -1,0 +1,114 @@
+//! The `myia` command-line interface.
+//!
+//! ```text
+//! myia run <file.py> <entry> [args..]       compile + execute
+//! myia grad <file.py> <fn> [x..]            derivative of a function
+//! myia show <file.py> <entry> [--raw]       print optimized (or raw) IR
+//! myia check <file.py> <entry> [args..]     eager type/shape check (§4.2)
+//! myia train-mlp                            shorthand for the E2E driver
+//! ```
+//!
+//! Arguments parse as f64 (`3.0`), i64 (`3`) or bool (`true`). Argument
+//! parsing is hand-rolled: clap is not in the offline crate set.
+
+use myia::coordinator::{Options, Session};
+use myia::ir::print_graph;
+use myia::vm::Value;
+use std::process::ExitCode;
+
+fn parse_value(s: &str) -> Value {
+    if let Ok(i) = s.parse::<i64>() {
+        return Value::I64(i);
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Value::F64(f);
+    }
+    match s {
+        "True" | "true" => Value::Bool(true),
+        "False" | "false" => Value::Bool(false),
+        other => Value::str(other),
+    }
+}
+
+fn usage() -> ExitCode {
+    eprintln!(
+        "usage:\n  myia run <file.py> <entry> [args..] [--no-opt] [--xla]\n  \
+         myia grad <file.py> <fn> [x..]\n  myia show <file.py> <entry> [--raw]\n  \
+         myia check <file.py> <entry> [args..]\n  myia train-mlp"
+    );
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(args: &[String]) -> anyhow::Result<ExitCode> {
+    let Some(cmd) = args.first() else { return Ok(usage()) };
+    let flags: Vec<&String> = args.iter().filter(|a| a.starts_with("--")).collect();
+    let pos: Vec<&String> = args[1..].iter().filter(|a| !a.starts_with("--")).collect();
+    let options = Options {
+        optimize: !flags.iter().any(|f| *f == "--no-opt"),
+        xla_backend: flags.iter().any(|f| *f == "--xla"),
+        infer: false,
+    };
+
+    match cmd.as_str() {
+        "run" | "grad" => {
+            let (Some(file), Some(entry)) = (pos.first(), pos.get(1)) else { return Ok(usage()) };
+            let source = std::fs::read_to_string(file)?;
+            let source = if cmd == "grad" {
+                format!("{source}\ndef __cli_grad(x):\n    return grad({entry})(x)\n")
+            } else {
+                source
+            };
+            let entry = if cmd == "grad" { "__cli_grad" } else { entry.as_str() };
+            let mut s = Session::from_source(&source)?;
+            let f = s.compile(entry, options)?;
+            let vals: Vec<Value> = pos[2..].iter().map(|a| parse_value(a)).collect();
+            let out = f.call(vals)?;
+            println!("{out}");
+            Ok(ExitCode::SUCCESS)
+        }
+        "show" => {
+            let (Some(file), Some(entry)) = (pos.first(), pos.get(1)) else { return Ok(usage()) };
+            let source = std::fs::read_to_string(file)?;
+            if flags.iter().any(|f| *f == "--raw") {
+                let s = Session::from_source(&source)?;
+                println!("{}", print_graph(&s.module, s.graph(entry)?, true));
+            } else {
+                let mut s = Session::from_source(&source)?;
+                let f = s.compile(entry, options)?;
+                println!("{}", print_graph(&s.module, s.graph(entry)?, true));
+                eprintln!(
+                    "# nodes: lowered {} -> expanded {} -> optimized {}",
+                    f.metrics.nodes_after_lowering,
+                    f.metrics.nodes_after_expand,
+                    f.metrics.nodes_after_optimize
+                );
+            }
+            Ok(ExitCode::SUCCESS)
+        }
+        "check" => {
+            let (Some(file), Some(entry)) = (pos.first(), pos.get(1)) else { return Ok(usage()) };
+            let source = std::fs::read_to_string(file)?;
+            let s = Session::from_source(&source)?;
+            let vals: Vec<Value> = pos[2..].iter().map(|a| parse_value(a)).collect();
+            let t = s.check_call(entry, &vals)?;
+            println!("{entry}: {t}");
+            Ok(ExitCode::SUCCESS)
+        }
+        "train-mlp" => {
+            eprintln!("use: cargo run --release --example train_mlp");
+            Ok(ExitCode::SUCCESS)
+        }
+        _ => Ok(usage()),
+    }
+}

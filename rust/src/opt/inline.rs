@@ -1,0 +1,228 @@
+//! Inlining (§4.3).
+//!
+//! Applications of non-recursive graph constants are replaced by clones of
+//! the callee body, re-owned by the caller. Together with tuple
+//! simplification this is what collapses the AD output: `▶f` calls inline,
+//! the `(result, backpropagator)` pairs unpack statically, the `◀` closures
+//! inline into straight-line adjoint code, and the algebraic rules erase the
+//! env/ZeroT scaffolding — Figure 1's "after optimization … essentially
+//! identical to what one would have written by hand".
+
+use super::passes::Pass;
+use crate::ir::{analyze, clone_closure, GraphId, Module, NodeId};
+use anyhow::Result;
+use std::collections::{HashMap, HashSet};
+
+/// Inline non-recursive callees. `size_limit` bounds the callee body size
+/// for multi-use call sites (single-use callees always inline).
+pub struct Inline {
+    pub size_limit: usize,
+}
+
+impl Default for Inline {
+    fn default() -> Self {
+        Inline { size_limit: 120 }
+    }
+}
+
+impl Pass for Inline {
+    fn name(&self) -> &'static str {
+        "inline"
+    }
+
+    fn run(&mut self, m: &mut Module, root: GraphId) -> Result<bool> {
+        let analysis = analyze(m, root);
+        // Count call sites per callee graph.
+        let mut call_sites: Vec<(NodeId, GraphId, GraphId)> = Vec::new(); // (site, caller, callee)
+        let mut use_counts: HashMap<GraphId, usize> = HashMap::new();
+        for &g in &analysis.graphs {
+            for &n in analysis.order_of(g) {
+                if let Some(h) = m.as_graph(m.node(n).inputs()[0]) {
+                    if h != root {
+                        call_sites.push((n, g, h));
+                        *use_counts.entry(h).or_default() += 1;
+                    }
+                }
+            }
+        }
+
+        let mut changed = false;
+        for (site, caller, callee) in call_sites {
+            // The site may have been rewritten away by a previous inline.
+            let node = m.node(site);
+            if !node.is_apply() || m.as_graph(node.inputs()[0]) != Some(callee) {
+                continue;
+            }
+            if caller == callee || is_recursive(m, callee) {
+                continue;
+            }
+            let body = m.topo_order(callee).len();
+            let arity_ok = m.graph(callee).params.len() == node.inputs().len() - 1;
+            if !arity_ok {
+                continue; // arity error surfaces at runtime with a message
+            }
+            if use_counts[&callee] > 1 && body > self.size_limit {
+                continue;
+            }
+            inline_site(m, site, caller, callee);
+            changed = true;
+        }
+        Ok(changed)
+    }
+}
+
+/// True if `g` participates in a reference cycle (direct or mutual
+/// recursion) — such graphs must stay calls (they are the loops).
+pub fn is_recursive(m: &Module, g: GraphId) -> bool {
+    let mut seen: HashSet<GraphId> = HashSet::new();
+    let mut stack: Vec<GraphId> = m.graphs_used_by(g);
+    while let Some(h) = stack.pop() {
+        if h == g {
+            return true;
+        }
+        if seen.insert(h) {
+            stack.extend(m.graphs_used_by(h));
+        }
+    }
+    false
+}
+
+/// Replace one call site with a clone of the callee's body.
+fn inline_site(m: &mut Module, site: NodeId, caller: GraphId, callee: GraphId) {
+    let args = m.node(site).inputs()[1..].to_vec();
+    let cloned = clone_closure(m, callee);
+    let new_callee = cloned.graph(callee);
+
+    // Substitute arguments for the clone's parameters.
+    let params = m.graph(new_callee).params.clone();
+    for (p, a) in params.iter().zip(args.iter()) {
+        m.replace_all_uses(*p, *a);
+    }
+    // Re-own the clone's body nodes to the caller — including capture-only
+    // nodes (reachable only through nested closures' free variables), which
+    // is why this must use the scope analysis, computed BEFORE any node is
+    // re-owned (re-owning truncates a later analysis of the clone).
+    let analysis = analyze(m, new_callee);
+    for &n in analysis.order_of(new_callee) {
+        m.reassign_graph(n, caller);
+    }
+    let ret = m.ret_of(new_callee);
+    // The clone's return may be a parameter (already substituted), constant,
+    // or a body node now owned by the caller.
+    let ret = if m.node(ret).is_parameter() {
+        // parameter of the clone: find its index, use the argument
+        let idx = m.graph(new_callee).params.iter().position(|&p| p == ret);
+        match idx {
+            Some(i) => args[i],
+            None => ret,
+        }
+    } else {
+        ret
+    };
+    m.replace_all_uses(site, ret);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Const, Prim};
+    use crate::vm::{compile_program, Value, Vm};
+
+    #[test]
+    fn simple_inline() {
+        // helper(y) = y * y ; f(x) = helper(x) + 1
+        let mut m = Module::new();
+        let h = m.add_graph("helper");
+        let y = m.add_parameter(h, "y");
+        let hb = m.apply_prim(h, Prim::Mul, &[y, y]);
+        m.set_return(h, hb);
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let hc = m.graph_constant(h);
+        let call = m.apply(f, vec![hc, x]);
+        let one = m.constant(Const::F64(1.0));
+        let r = m.apply_prim(f, Prim::Add, &[call, one]);
+        m.set_return(f, r);
+
+        assert!(Inline::default().run(&mut m, f).unwrap());
+        // After inlining, f should reach no other graph.
+        let a = analyze(&m, f);
+        assert_eq!(a.graphs.len(), 1, "{}", crate::ir::print_graph(&m, f, true));
+        // Numerics preserved.
+        let program = compile_program(&m, f).unwrap();
+        let out = Vm::new(program).call_graph(f, vec![Value::F64(3.0)]).unwrap();
+        assert_eq!(out.as_f64().unwrap(), 10.0);
+    }
+
+    #[test]
+    fn recursive_not_inlined() {
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let fc = m.graph_constant(f);
+        let one = m.constant(Const::I64(1));
+        let x1 = m.apply_prim(f, Prim::Sub, &[x, one]);
+        let rec = m.apply(f, vec![fc, x1]);
+        m.set_return(f, rec);
+        assert!(is_recursive(&m, f));
+        assert!(!Inline::default().run(&mut m, f).unwrap());
+    }
+
+    #[test]
+    fn identity_callee_inlines_to_argument() {
+        let mut m = Module::new();
+        let id = m.add_graph("id");
+        let y = m.add_parameter(id, "y");
+        m.set_return(id, y);
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let idc = m.graph_constant(id);
+        let call = m.apply(f, vec![idc, x]);
+        m.set_return(f, call);
+        assert!(Inline::default().run(&mut m, f).unwrap());
+        assert_eq!(m.ret_of(f), x);
+    }
+
+    #[test]
+    fn capturing_thunk_inlines() {
+        // f(x): t() = x * 2 ; return t()   — the if/while thunk pattern.
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let t = m.add_graph("thunk");
+        let two = m.constant(Const::F64(2.0));
+        let tb = m.apply_prim(t, Prim::Mul, &[x, two]);
+        m.set_return(t, tb);
+        let tc = m.graph_constant(t);
+        let call = m.apply(f, vec![tc]);
+        m.set_return(f, call);
+
+        assert!(Inline::default().run(&mut m, f).unwrap());
+        let a = analyze(&m, f);
+        assert_eq!(a.graphs.len(), 1);
+        let program = compile_program(&m, f).unwrap();
+        let out = Vm::new(program).call_graph(f, vec![Value::F64(5.0)]).unwrap();
+        assert_eq!(out.as_f64().unwrap(), 10.0);
+    }
+
+    #[test]
+    fn multi_use_small_callee_inlines_both_sites() {
+        let mut m = Module::new();
+        let h = m.add_graph("sq");
+        let y = m.add_parameter(h, "y");
+        let hb = m.apply_prim(h, Prim::Mul, &[y, y]);
+        m.set_return(h, hb);
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let hc = m.graph_constant(h);
+        let c1 = m.apply(f, vec![hc, x]);
+        let c2 = m.apply(f, vec![hc, c1]);
+        m.set_return(f, c2);
+        let mut pass = Inline::default();
+        while pass.run(&mut m, f).unwrap() {}
+        assert_eq!(analyze(&m, f).graphs.len(), 1);
+        let program = compile_program(&m, f).unwrap();
+        let out = Vm::new(program).call_graph(f, vec![Value::F64(2.0)]).unwrap();
+        assert_eq!(out.as_f64().unwrap(), 16.0); // (2²)² = 16
+    }
+}

@@ -1,0 +1,86 @@
+//! The optimization pipeline (§4.3).
+//!
+//! "The AD transform produces graphs that are substantially larger than the
+//! original source … simplified using inlining and local optimizations."
+//! The [`Optimizer`] runs the pass list to a fixpoint; `examples/quickstart`
+//! and `benches/fig1_transform` show the Figure 1 collapse, and
+//! `benches/opt_ablation` (E6) quantifies each pass's contribution.
+
+pub mod inline;
+pub mod passes;
+
+pub use inline::Inline;
+pub use passes::{Algebraic, ConstantFold, Cse, Pass, TupleSimplify};
+
+use crate::ir::{GraphId, Module};
+use anyhow::Result;
+
+/// Per-pass change counts from an optimization run.
+#[derive(Debug, Default, Clone)]
+pub struct OptStats {
+    /// (pass name, number of fixpoint iterations in which it fired)
+    pub fired: Vec<(&'static str, usize)>,
+    pub iterations: usize,
+}
+
+/// The standard pass pipeline with a fixpoint driver.
+pub struct Optimizer {
+    passes: Vec<Box<dyn Pass>>,
+    pub max_iterations: usize,
+}
+
+impl Default for Optimizer {
+    fn default() -> Self {
+        Optimizer::standard()
+    }
+}
+
+impl Optimizer {
+    /// The full pipeline used by the coordinator.
+    pub fn standard() -> Optimizer {
+        Optimizer {
+            passes: vec![
+                Box::new(TupleSimplify),
+                Box::new(Inline::default()),
+                Box::new(Algebraic),
+                Box::new(ConstantFold),
+                Box::new(Cse),
+            ],
+            max_iterations: 100,
+        }
+    }
+
+    /// A pipeline with one named pass disabled (E6 ablations).
+    pub fn without(pass_name: &str) -> Optimizer {
+        let mut o = Optimizer::standard();
+        o.passes.retain(|p| p.name() != pass_name);
+        o
+    }
+
+    /// An empty pipeline (the "no optimization" arm of E6).
+    pub fn none() -> Optimizer {
+        Optimizer { passes: Vec::new(), max_iterations: 1 }
+    }
+
+    /// Run all passes to fixpoint on everything reachable from `root`.
+    pub fn run(&mut self, m: &mut Module, root: GraphId) -> Result<OptStats> {
+        let mut stats = OptStats::default();
+        for p in &self.passes {
+            stats.fired.push((p.name(), 0));
+        }
+        for _ in 0..self.max_iterations {
+            stats.iterations += 1;
+            let mut changed = false;
+            for (i, pass) in self.passes.iter_mut().enumerate() {
+                if pass.run(m, root)? {
+                    changed = true;
+                    stats.fired[i].1 += 1;
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        Ok(stats)
+    }
+}

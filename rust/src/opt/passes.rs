@@ -1,0 +1,484 @@
+//! Local rewriting passes (§4.3).
+//!
+//! "These graphs typically contain many computations that are not necessary,
+//! such as gradients with respect to constants, and a lot of tuple packing
+//! and unpacking. These graphs can be simplified using inlining and local
+//! optimizations." The passes here are the local half; inlining lives in
+//! `super::inline`. Dead code needs no pass at all: reachability *is* the
+//! graph representation, so replacing a use cuts the dead subtree (Figure 1:
+//! "All unused computations are cut").
+
+use crate::ir::{analyze, Const, GraphId, Module, NodeId, Prim};
+use crate::vm::{compile::const_value, eval_prim, Value};
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// A rewriting pass. Returns true if anything changed.
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    fn run(&mut self, m: &mut Module, root: GraphId) -> Result<bool>;
+}
+
+/// `tuple_getitem(make_tuple(a, b, ..), i)` → element; plus the inject and
+/// len variants. This is the pass that exposes backpropagator call sites to
+/// the inliner (the `(result, bprop)` pairs of §3.2 get unpacked statically).
+pub struct TupleSimplify;
+
+impl Pass for TupleSimplify {
+    fn name(&self) -> &'static str {
+        "tuple-simplify"
+    }
+
+    fn run(&mut self, m: &mut Module, root: GraphId) -> Result<bool> {
+        let analysis = analyze(m, root);
+        let mut changed = false;
+        for &g in &analysis.graphs {
+            for &n in analysis.order_of(g) {
+                if !m.is_apply_of(n, Prim::TupleGetItem) && !m.is_apply_of(n, Prim::TupleLen) {
+                    continue;
+                }
+                let inputs = m.node(n).inputs().to_vec();
+                let src = inputs[1];
+                if m.is_apply_of(n, Prim::TupleLen) {
+                    if m.is_apply_of(src, Prim::MakeTuple) {
+                        let len = m.node(src).inputs().len() - 1;
+                        let c = m.constant(Const::I64(len as i64));
+                        m.replace_all_uses(n, c);
+                        changed = true;
+                    }
+                    continue;
+                }
+                // tuple_getitem with constant index
+                let Some(Const::I64(i)) = m.node(inputs[2]).constant().cloned() else {
+                    continue;
+                };
+                if m.is_apply_of(src, Prim::MakeTuple) {
+                    let items = m.node(src).inputs()[1..].to_vec();
+                    let len = items.len() as i64;
+                    let idx = if i < 0 { i + len } else { i };
+                    if idx >= 0 && idx < len {
+                        m.replace_all_uses(n, items[idx as usize]);
+                        changed = true;
+                    }
+                } else if m.is_apply_of(src, Prim::TupleInject) {
+                    // getitem(inject(j, n, v), i) → v if i==j else ZeroT
+                    let inj = m.node(src).inputs().to_vec();
+                    if let Some(Const::I64(j)) = m.node(inj[1]).constant().cloned() {
+                        let r = if i == j { inj[3] } else { m.constant(Const::ZeroT) };
+                        m.replace_all_uses(n, r);
+                        changed = true;
+                    }
+                }
+            }
+        }
+        Ok(changed)
+    }
+}
+
+/// Algebraic identities, ZeroT absorption, env simplification, switch
+/// folding. These are the rules that erase the AD scaffolding (gradients of
+/// constants, empty envs) once inlining has flattened the calls.
+pub struct Algebraic;
+
+impl Pass for Algebraic {
+    fn name(&self) -> &'static str {
+        "algebraic"
+    }
+
+    fn run(&mut self, m: &mut Module, root: GraphId) -> Result<bool> {
+        let analysis = analyze(m, root);
+        let mut changed = false;
+        for &g in &analysis.graphs {
+            for &n in analysis.order_of(g) {
+                if let Some(repl) = self.rewrite(m, n) {
+                    m.replace_all_uses(n, repl);
+                    changed = true;
+                }
+            }
+        }
+        Ok(changed)
+    }
+}
+
+impl Algebraic {
+    fn rewrite(&self, m: &mut Module, n: NodeId) -> Option<NodeId> {
+        let node = m.node(n);
+        if !node.is_apply() {
+            return None;
+        }
+        let p = m.as_prim(node.inputs()[0])?;
+        let args = node.inputs()[1..].to_vec();
+        let is_zt = |m: &Module, x: NodeId| matches!(m.node(x).constant(), Some(Const::ZeroT));
+        let is_f =
+            |m: &Module, x: NodeId, v: f64| matches!(m.node(x).constant(), Some(Const::F64(w)) if *w == v);
+        let is_i =
+            |m: &Module, x: NodeId, v: i64| matches!(m.node(x).constant(), Some(Const::I64(w)) if *w == v);
+
+        match p {
+            // gadd is a monoid with ZeroT as identity.
+            Prim::Gadd => {
+                if is_zt(m, args[0]) {
+                    return Some(args[1]);
+                }
+                if is_zt(m, args[1]) {
+                    return Some(args[0]);
+                }
+                // gadd(a, zeros_like(b)) → a, when a provably isn't the
+                // symbolic ZeroT (the concretization in the grad wrapper).
+                if m.is_apply_of(args[1], Prim::ZerosLike) && definitely_not_zerot(m, args[0], 8) {
+                    return Some(args[0]);
+                }
+                if m.is_apply_of(args[0], Prim::ZerosLike) && definitely_not_zerot(m, args[1], 8) {
+                    return Some(args[1]);
+                }
+            }
+            Prim::Add => {
+                if is_f(m, args[0], 0.0) || is_i(m, args[0], 0) {
+                    return Some(args[1]);
+                }
+                if is_f(m, args[1], 0.0) || is_i(m, args[1], 0) {
+                    return Some(args[0]);
+                }
+                if is_zt(m, args[0]) {
+                    return Some(args[1]);
+                }
+                if is_zt(m, args[1]) {
+                    return Some(args[0]);
+                }
+            }
+            Prim::Sub => {
+                if is_f(m, args[1], 0.0) || is_i(m, args[1], 0) || is_zt(m, args[1]) {
+                    return Some(args[0]);
+                }
+            }
+            Prim::Mul => {
+                if is_f(m, args[0], 1.0) || is_i(m, args[0], 1) {
+                    return Some(args[1]);
+                }
+                if is_f(m, args[1], 1.0) || is_i(m, args[1], 1) {
+                    return Some(args[0]);
+                }
+                if is_zt(m, args[0]) || is_zt(m, args[1]) {
+                    return Some(m.constant(Const::ZeroT));
+                }
+            }
+            Prim::Div => {
+                if is_f(m, args[1], 1.0) || is_i(m, args[1], 1) {
+                    return Some(args[0]);
+                }
+                if is_zt(m, args[0]) {
+                    return Some(m.constant(Const::ZeroT));
+                }
+            }
+            Prim::Pow => {
+                if is_f(m, args[1], 1.0) || is_i(m, args[1], 1) {
+                    return Some(args[0]);
+                }
+            }
+            Prim::Neg => {
+                if is_zt(m, args[0]) {
+                    return Some(m.constant(Const::ZeroT));
+                }
+                // neg(neg(x)) → x
+                if m.is_apply_of(args[0], Prim::Neg) {
+                    return Some(m.node(args[0]).inputs()[1]);
+                }
+            }
+            Prim::SumToLike | Prim::BroadcastLike => {
+                if is_zt(m, args[0]) {
+                    return Some(m.constant(Const::ZeroT));
+                }
+            }
+            Prim::Switch => {
+                if let Some(Const::Bool(b)) = m.node(args[0]).constant() {
+                    return Some(if *b { args[1] } else { args[2] });
+                }
+            }
+            Prim::EnvGetItem => {
+                // getitem(setitem(e, k, v), k') → v | getitem(e, k')
+                let (env, key) = (args[0], args[1]);
+                if m.is_apply_of(env, Prim::EnvSetItem) {
+                    let set = m.node(env).inputs().to_vec();
+                    let (k1, k2) = (m.node(set[2]).constant().cloned(), m.node(key).constant().cloned());
+                    if let (Some(Const::Key(a)), Some(Const::Key(b))) = (k1, k2) {
+                        if a == b {
+                            return Some(set[3]);
+                        }
+                        // skip this setitem, look through to the inner env
+                        let inner = set[1];
+                        let new = m.apply_prim(
+                            m.node(n).graph.unwrap(),
+                            Prim::EnvGetItem,
+                            &[inner, key],
+                        );
+                        return Some(new);
+                    }
+                }
+                if m.is_apply_of(env, Prim::NewEnv) || is_zt(m, env) {
+                    return Some(m.constant(Const::ZeroT));
+                }
+            }
+            Prim::EnvSetItem => {
+                // setitem(e, k, ZeroT) → e  (ZeroT reads back as ZeroT anyway)
+                if is_zt(m, args[2]) {
+                    return Some(args[0]);
+                }
+            }
+            _ => {}
+        }
+        None
+    }
+}
+
+/// Conservative proof that a node's runtime value is never the symbolic
+/// ZeroT tangent: non-ZeroT constants, `zeros_like`/`ones_like` results, and
+/// arithmetic whose operands are all provably non-ZeroT (the VM's ZeroT
+/// shortcut only fires when an operand IS ZeroT).
+fn definitely_not_zerot(m: &Module, n: NodeId, depth: usize) -> bool {
+    if depth == 0 {
+        return false;
+    }
+    let node = m.node(n);
+    if let Some(c) = node.constant() {
+        return !matches!(c, Const::ZeroT);
+    }
+    if !node.is_apply() {
+        return false;
+    }
+    let Some(p) = m.as_prim(node.inputs()[0]) else { return false };
+    let args = &node.inputs()[1..];
+    match p {
+        // These have no ZeroT shortcut in the VM: if the program runs at all
+        // their result is a concrete value (ZeroT operands raise instead).
+        Prim::ZerosLike
+        | Prim::OnesLike
+        | Prim::Pow
+        | Prim::Exp
+        | Prim::Ln
+        | Prim::Tanh
+        | Prim::Sqrt
+        | Prim::Sin
+        | Prim::Cos
+        | Prim::Relu
+        | Prim::Sigmoid
+        | Prim::Abs
+        | Prim::Maximum
+        | Prim::Minimum
+        | Prim::Step
+        | Prim::SoftmaxLast => true,
+        // ZeroT-absorbing in specific positions: non-ZeroT iff the absorbed
+        // positions are non-ZeroT.
+        Prim::Mul | Prim::MatMul => {
+            args.iter().all(|&a| definitely_not_zerot(m, a, depth - 1))
+        }
+        Prim::Add | Prim::Sub => {
+            args.iter().any(|&a| definitely_not_zerot(m, a, depth - 1))
+        }
+        Prim::Div | Prim::Neg | Prim::SumToLike | Prim::BroadcastLike | Prim::ReduceSum
+        | Prim::ReduceMean | Prim::SumLastKeep | Prim::Transpose | Prim::Reshape
+        | Prim::BroadcastTo | Prim::SumTo => definitely_not_zerot(m, args[0], depth - 1),
+        _ => false,
+    }
+}
+
+/// Constant folding: pure primitives with all-constant arguments evaluate at
+/// compile time via the VM's own `eval_prim` (one evaluator, no drift).
+pub struct ConstantFold;
+
+impl Pass for ConstantFold {
+    fn name(&self) -> &'static str {
+        "constant-fold"
+    }
+
+    fn run(&mut self, m: &mut Module, root: GraphId) -> Result<bool> {
+        let analysis = analyze(m, root);
+        let mut changed = false;
+        for &g in &analysis.graphs {
+            for &n in analysis.order_of(g) {
+                let node = m.node(n);
+                let Some(p) = m.as_prim(node.inputs()[0]) else { continue };
+                if !p.is_pure() || matches!(p, Prim::Switch) {
+                    continue;
+                }
+                let args = node.inputs()[1..].to_vec();
+                let const_args: Option<Vec<Value>> = args
+                    .iter()
+                    .map(|&a| {
+                        m.node(a).constant().and_then(|c| match c {
+                            Const::Graph(_) | Const::Macro(_) => None,
+                            other => Some(const_value(other)),
+                        })
+                    })
+                    .collect();
+                let Some(vals) = const_args else { continue };
+                let Ok(result) = eval_prim(p, &vals) else { continue };
+                let Some(c) = value_to_const(&result) else { continue };
+                let cn = m.constant(c);
+                m.replace_all_uses(n, cn);
+                changed = true;
+            }
+        }
+        Ok(changed)
+    }
+}
+
+/// Inverse of `const_value` for foldable results.
+pub fn value_to_const(v: &Value) -> Option<Const> {
+    Some(match v {
+        Value::Unit => Const::Unit,
+        Value::F64(x) => Const::F64(*x),
+        Value::I64(x) => Const::I64(*x),
+        Value::Bool(b) => Const::Bool(*b),
+        Value::Str(s) => Const::Str((**s).clone()),
+        Value::Tensor(t) => Const::Tensor(t.clone()),
+        Value::Key(k) => Const::Key(*k),
+        Value::ZeroT => Const::ZeroT,
+        _ => return None,
+    })
+}
+
+/// Common-subexpression elimination within each graph: identical pure
+/// applications of the same callee on the same inputs merge.
+pub struct Cse;
+
+impl Pass for Cse {
+    fn name(&self) -> &'static str {
+        "cse"
+    }
+
+    fn run(&mut self, m: &mut Module, root: GraphId) -> Result<bool> {
+        let analysis = analyze(m, root);
+        let mut changed = false;
+        for &g in &analysis.graphs {
+            let mut seen: HashMap<Vec<NodeId>, NodeId> = HashMap::new();
+            for &n in analysis.order_of(g) {
+                let node = m.node(n);
+                // Only pure prim applications (calls to graphs could be
+                // impure through Print and are compile-relevant for AD).
+                match m.as_prim(node.inputs()[0]) {
+                    Some(p) if p.is_pure() => {}
+                    _ => continue,
+                }
+                let key = node.inputs().to_vec();
+                match seen.get(&key) {
+                    Some(&prev) if prev != n => {
+                        m.replace_all_uses(n, prev);
+                        changed = true;
+                    }
+                    Some(_) => {}
+                    None => {
+                        seen.insert(key, n);
+                    }
+                }
+            }
+        }
+        Ok(changed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Module, GraphId, NodeId) {
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        (m, f, x)
+    }
+
+    #[test]
+    fn tuple_getitem_of_make_tuple() {
+        let (mut m, f, x) = setup();
+        let two = m.constant(Const::F64(2.0));
+        let t = m.apply_prim_variadic(f, Prim::MakeTuple, &[x, two]);
+        let i1 = m.constant(Const::I64(1));
+        let get = m.apply_prim(f, Prim::TupleGetItem, &[t, i1]);
+        let r = m.apply_prim(f, Prim::Mul, &[get, x]);
+        m.set_return(f, r);
+        assert!(TupleSimplify.run(&mut m, f).unwrap());
+        let mul = m.ret_of(f);
+        assert_eq!(m.node(mul).inputs()[1], two, "getitem folded to the element");
+    }
+
+    #[test]
+    fn algebraic_identities() {
+        let (mut m, f, x) = setup();
+        let one = m.constant(Const::F64(1.0));
+        let zero = m.constant(Const::F64(0.0));
+        let a = m.apply_prim(f, Prim::Mul, &[x, one]); // x*1 → x
+        let b = m.apply_prim(f, Prim::Add, &[a, zero]); // +0 → x
+        let zt = m.constant(Const::ZeroT);
+        let c = m.apply_prim(f, Prim::Gadd, &[b, zt]); // gadd ZeroT → x
+        m.set_return(f, c);
+        while Algebraic.run(&mut m, f).unwrap() {}
+        assert_eq!(m.ret_of(f), x);
+    }
+
+    #[test]
+    fn env_getitem_through_setitem() {
+        let (mut m, f, x) = setup();
+        let e0 = m.apply_prim(f, Prim::NewEnv, &[]);
+        let k1 = m.constant(Const::Key(1));
+        let k2 = m.constant(Const::Key(2));
+        let e1 = m.apply_prim(f, Prim::EnvSetItem, &[e0, k1, x]);
+        let e2 = m.apply_prim(f, Prim::EnvSetItem, &[e1, k2, x]);
+        let got = m.apply_prim(f, Prim::EnvGetItem, &[e2, k1]);
+        m.set_return(f, got);
+        while Algebraic.run(&mut m, f).unwrap() {}
+        assert_eq!(m.ret_of(f), x, "{}", crate::ir::print_graph(&m, f, false));
+        // getitem of a missing key folds to ZeroT
+        let (mut m, f, _x) = setup();
+        let e0 = m.apply_prim(f, Prim::NewEnv, &[]);
+        let k = m.constant(Const::Key(9));
+        let got = m.apply_prim(f, Prim::EnvGetItem, &[e0, k]);
+        m.set_return(f, got);
+        while Algebraic.run(&mut m, f).unwrap() {}
+        assert!(matches!(m.node(m.ret_of(f)).constant(), Some(Const::ZeroT)));
+    }
+
+    #[test]
+    fn switch_with_constant_condition() {
+        let (mut m, f, x) = setup();
+        let t = m.constant(Const::Bool(true));
+        let y = m.apply_prim(f, Prim::Neg, &[x]);
+        let sw = m.apply_prim(f, Prim::Switch, &[t, x, y]);
+        m.set_return(f, sw);
+        assert!(Algebraic.run(&mut m, f).unwrap());
+        assert_eq!(m.ret_of(f), x);
+    }
+
+    #[test]
+    fn constant_folding_uses_vm_semantics() {
+        let (mut m, f, x) = setup();
+        let a = m.constant(Const::F64(3.0));
+        let b = m.constant(Const::F64(4.0));
+        let s = m.apply_prim(f, Prim::Add, &[a, b]);
+        let r = m.apply_prim(f, Prim::Mul, &[x, s]);
+        m.set_return(f, r);
+        assert!(ConstantFold.run(&mut m, f).unwrap());
+        let mul = m.ret_of(f);
+        assert!(matches!(m.node(m.node(mul).inputs()[2]).constant(), Some(Const::F64(v)) if *v == 7.0));
+    }
+
+    #[test]
+    fn impure_not_folded() {
+        let (mut m, f, _x) = setup();
+        let msg = m.constant(Const::Str("hi".into()));
+        let p = m.apply_prim(f, Prim::Print, &[msg]);
+        m.set_return(f, p);
+        assert!(!ConstantFold.run(&mut m, f).unwrap());
+    }
+
+    #[test]
+    fn cse_merges_duplicates() {
+        let (mut m, f, x) = setup();
+        let a = m.apply_prim(f, Prim::Mul, &[x, x]);
+        let b = m.apply_prim(f, Prim::Mul, &[x, x]);
+        let r = m.apply_prim(f, Prim::Add, &[a, b]);
+        m.set_return(f, r);
+        assert!(Cse.run(&mut m, f).unwrap());
+        let add = m.ret_of(f);
+        assert_eq!(m.node(add).inputs()[1], m.node(add).inputs()[2]);
+    }
+}

@@ -1,0 +1,180 @@
+//! Abstract syntax tree for the Python subset.
+//!
+//! Mutating statements (`x[i] = v`, `x += y`) are *representable as parse
+//! errors only*: the parser recognizes them and rejects them with the
+//! targeted message the paper calls for (§4.1 "We currently forbid these
+//! statements in Myia").
+
+/// Binary arithmetic operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    FloorDiv,
+    Mod,
+    Pow,
+    MatMul,
+}
+
+/// Comparison operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpOp {
+    Lt,
+    Gt,
+    Le,
+    Ge,
+    Eq,
+    Ne,
+}
+
+/// Expressions. Every variant carries the source line for diagnostics.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Int(i64, usize),
+    Float(f64, usize),
+    Bool(bool, usize),
+    NoneLit(usize),
+    Str(String, usize),
+    Name(String, usize),
+    /// `(a, b, c)` — a tuple literal.
+    Tuple(Vec<Expr>, usize),
+    /// `[a, b, c]` — sugar for a cons list `(a, (b, (c, None)))`.
+    List(Vec<Expr>, usize),
+    BinOp(BinOp, Box<Expr>, Box<Expr>, usize),
+    /// Unary minus.
+    Neg(Box<Expr>, usize),
+    Compare(CmpOp, Box<Expr>, Box<Expr>, usize),
+    /// Short-circuit `and` / `or` (lowered to switch over thunks).
+    And(Box<Expr>, Box<Expr>, usize),
+    Or(Box<Expr>, Box<Expr>, usize),
+    Not(Box<Expr>, usize),
+    Call(Box<Expr>, Vec<Expr>, usize),
+    /// `x[i]` — tuple indexing.
+    Index(Box<Expr>, Box<Expr>, usize),
+    Lambda(Vec<String>, Box<Expr>, usize),
+    /// `a if cond else b`.
+    IfExp(Box<Expr>, Box<Expr>, Box<Expr>, usize),
+}
+
+impl Expr {
+    /// Source line of the expression.
+    pub fn line(&self) -> usize {
+        use Expr::*;
+        match self {
+            Int(_, l) | Float(_, l) | Bool(_, l) | NoneLit(l) | Str(_, l) | Name(_, l)
+            | Tuple(_, l) | List(_, l) | BinOp(_, _, _, l) | Neg(_, l) | Compare(_, _, _, l)
+            | And(_, _, l) | Or(_, _, l) | Not(_, l) | Call(_, _, l) | Index(_, _, l)
+            | Lambda(_, _, l) | IfExp(_, _, _, l) => *l,
+        }
+    }
+}
+
+/// Statements.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    /// `def name(params): body`
+    FuncDef { name: String, params: Vec<String>, body: Vec<Stmt>, line: usize },
+    Return(Option<Expr>, usize),
+    /// `if cond: then else: orelse` (elif chains are nested in orelse).
+    If { cond: Expr, then: Vec<Stmt>, orelse: Vec<Stmt>, line: usize },
+    While { cond: Expr, body: Vec<Stmt>, line: usize },
+    /// `for var in range(count): body` — the only supported `for` form.
+    ForRange { var: String, count: Expr, body: Vec<Stmt>, line: usize },
+    /// `a = expr` or `a, b = expr` (tuple destructuring).
+    Assign { targets: Vec<String>, value: Expr, line: usize },
+    ExprStmt(Expr, usize),
+    Pass(usize),
+}
+
+impl Stmt {
+    pub fn line(&self) -> usize {
+        use Stmt::*;
+        match self {
+            FuncDef { line, .. }
+            | If { line, .. }
+            | While { line, .. }
+            | ForRange { line, .. }
+            | Assign { line, .. } => *line,
+            Return(_, l) | ExprStmt(_, l) | Pass(l) => *l,
+        }
+    }
+}
+
+/// Collect the names assigned anywhere in a statement list, *not* descending
+/// into nested function definitions (their scopes are separate). Used by the
+/// lowering of `if`/`while` to compute merged ("phi") variables.
+pub fn assigned_names(stmts: &[Stmt]) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    fn walk(stmts: &[Stmt], out: &mut Vec<String>, seen: &mut std::collections::HashSet<String>) {
+        for s in stmts {
+            match s {
+                Stmt::Assign { targets, .. } => {
+                    for t in targets {
+                        if seen.insert(t.clone()) {
+                            out.push(t.clone());
+                        }
+                    }
+                }
+                Stmt::ForRange { var, body, .. } => {
+                    if seen.insert(var.clone()) {
+                        out.push(var.clone());
+                    }
+                    walk(body, out, seen);
+                }
+                Stmt::If { then, orelse, .. } => {
+                    walk(then, out, seen);
+                    walk(orelse, out, seen);
+                }
+                Stmt::While { body, .. } => walk(body, out, seen),
+                Stmt::FuncDef { name, .. } => {
+                    // the *binding* of the function name counts
+                    if seen.insert(name.clone()) {
+                        out.push(name.clone());
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    walk(stmts, &mut out, &mut seen);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assigned_names_ignores_nested_functions() {
+        let stmts = vec![
+            Stmt::Assign { targets: vec!["a".into()], value: Expr::Int(1, 1), line: 1 },
+            Stmt::FuncDef {
+                name: "g".into(),
+                params: vec![],
+                body: vec![Stmt::Assign {
+                    targets: vec!["hidden".into()],
+                    value: Expr::Int(2, 2),
+                    line: 2,
+                }],
+                line: 2,
+            },
+            Stmt::If {
+                cond: Expr::Bool(true, 3),
+                then: vec![Stmt::Assign { targets: vec!["b".into()], value: Expr::Int(3, 3), line: 3 }],
+                orelse: vec![],
+                line: 3,
+            },
+        ];
+        let names = assigned_names(&stmts);
+        assert_eq!(names, vec!["a".to_string(), "g".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn line_accessors() {
+        assert_eq!(Expr::Int(1, 42).line(), 42);
+        assert_eq!(Stmt::Pass(7).line(), 7);
+    }
+}

@@ -1,0 +1,442 @@
+//! Indentation-aware lexer for the Python-subset front end (§4.1).
+//!
+//! Produces a token stream with explicit `Indent`/`Dedent`/`Newline` tokens,
+//! Python-style: blank lines and comments are skipped, and newlines inside
+//! parentheses/brackets are implicit continuations.
+
+use std::fmt;
+
+/// A lexical token with its source position.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    pub kind: Tok,
+    pub line: usize,
+    pub col: usize,
+}
+
+/// Token kinds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    // literals & names
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Name(String),
+    // keywords
+    Def,
+    Return,
+    If,
+    Elif,
+    Else,
+    While,
+    For,
+    In,
+    Lambda,
+    True,
+    False,
+    None_,
+    And,
+    Or,
+    Not,
+    Pass,
+    // operators
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    DoubleSlash,
+    Percent,
+    DoubleStar,
+    At,
+    Lt,
+    Gt,
+    Le,
+    Ge,
+    EqEq,
+    NotEq,
+    Assign,
+    // rejected-but-recognized (for targeted error messages, §4.1)
+    AugAssign(String),
+    // punctuation
+    LParen,
+    RParen,
+    LBracket,
+    RBracket,
+    Comma,
+    Colon,
+    Dot,
+    // layout
+    Newline,
+    Indent,
+    Dedent,
+    Eof,
+}
+
+impl fmt::Display for Tok {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:?}", self)
+    }
+}
+
+/// Lexer error with position.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LexError {
+    pub message: String,
+    pub line: usize,
+    pub col: usize,
+}
+
+impl fmt::Display for LexError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "lex error at {}:{}: {}", self.line, self.col, self.message)
+    }
+}
+
+impl std::error::Error for LexError {}
+
+/// Tokenize a full source file.
+pub fn lex(source: &str) -> Result<Vec<Token>, LexError> {
+    let mut tokens = Vec::new();
+    let mut indents: Vec<usize> = vec![0];
+    let mut paren_depth = 0usize;
+    let chars: Vec<char> = source.chars().collect();
+    let mut pos = 0usize;
+    let mut line = 1usize;
+    let mut col = 1usize;
+    let mut at_line_start = true;
+
+    macro_rules! err {
+        ($msg:expr) => {
+            return Err(LexError { message: $msg.to_string(), line, col })
+        };
+    }
+
+    while pos < chars.len() {
+        // Handle indentation at line starts (outside brackets).
+        if at_line_start && paren_depth == 0 {
+            let mut indent = 0usize;
+            let start = pos;
+            while pos < chars.len() && (chars[pos] == ' ' || chars[pos] == '\t') {
+                indent += if chars[pos] == '\t' { 8 } else { 1 };
+                pos += 1;
+            }
+            col += pos - start;
+            // Blank line or comment-only line: consume to newline, emit nothing.
+            if pos >= chars.len() || chars[pos] == '\n' || chars[pos] == '#' {
+                while pos < chars.len() && chars[pos] != '\n' {
+                    pos += 1;
+                }
+                if pos < chars.len() {
+                    pos += 1;
+                    line += 1;
+                    col = 1;
+                }
+                continue;
+            }
+            let current = *indents.last().unwrap();
+            if indent > current {
+                indents.push(indent);
+                tokens.push(Token { kind: Tok::Indent, line, col });
+            } else {
+                while indent < *indents.last().unwrap() {
+                    indents.pop();
+                    tokens.push(Token { kind: Tok::Dedent, line, col });
+                }
+                if indent != *indents.last().unwrap() {
+                    err!("inconsistent indentation");
+                }
+            }
+            at_line_start = false;
+            continue;
+        }
+
+        let c = chars[pos];
+        let tline = line;
+        let tcol = col;
+        macro_rules! push {
+            ($kind:expr, $len:expr) => {{
+                tokens.push(Token { kind: $kind, line: tline, col: tcol });
+                pos += $len;
+                col += $len;
+            }};
+        }
+
+        match c {
+            ' ' | '\t' => {
+                pos += 1;
+                col += 1;
+            }
+            '#' => {
+                while pos < chars.len() && chars[pos] != '\n' {
+                    pos += 1;
+                }
+            }
+            '\n' => {
+                if paren_depth == 0 {
+                    // collapse consecutive newlines
+                    if !matches!(tokens.last().map(|t| &t.kind), Some(Tok::Newline) | None) {
+                        tokens.push(Token { kind: Tok::Newline, line, col });
+                    }
+                    at_line_start = true;
+                }
+                pos += 1;
+                line += 1;
+                col = 1;
+            }
+            '\\' if pos + 1 < chars.len() && chars[pos + 1] == '\n' => {
+                pos += 2;
+                line += 1;
+                col = 1;
+            }
+            '(' => {
+                paren_depth += 1;
+                push!(Tok::LParen, 1);
+            }
+            ')' => {
+                paren_depth = paren_depth.saturating_sub(1);
+                push!(Tok::RParen, 1);
+            }
+            '[' => {
+                paren_depth += 1;
+                push!(Tok::LBracket, 1);
+            }
+            ']' => {
+                paren_depth = paren_depth.saturating_sub(1);
+                push!(Tok::RBracket, 1);
+            }
+            ',' => push!(Tok::Comma, 1),
+            ':' => push!(Tok::Colon, 1),
+            '.' if !chars.get(pos + 1).map(|c| c.is_ascii_digit()).unwrap_or(false) => {
+                push!(Tok::Dot, 1)
+            }
+            '+' if chars.get(pos + 1) == Some(&'=') => push!(Tok::AugAssign("+=".into()), 2),
+            '-' if chars.get(pos + 1) == Some(&'=') => push!(Tok::AugAssign("-=".into()), 2),
+            '*' if chars.get(pos + 1) == Some(&'=') => push!(Tok::AugAssign("*=".into()), 2),
+            '/' if chars.get(pos + 1) == Some(&'=') => push!(Tok::AugAssign("/=".into()), 2),
+            '+' => push!(Tok::Plus, 1),
+            '-' => push!(Tok::Minus, 1),
+            '*' if chars.get(pos + 1) == Some(&'*') => push!(Tok::DoubleStar, 2),
+            '*' => push!(Tok::Star, 1),
+            '/' if chars.get(pos + 1) == Some(&'/') => push!(Tok::DoubleSlash, 2),
+            '/' => push!(Tok::Slash, 1),
+            '%' => push!(Tok::Percent, 1),
+            '@' => push!(Tok::At, 1),
+            '<' if chars.get(pos + 1) == Some(&'=') => push!(Tok::Le, 2),
+            '<' => push!(Tok::Lt, 1),
+            '>' if chars.get(pos + 1) == Some(&'=') => push!(Tok::Ge, 2),
+            '>' => push!(Tok::Gt, 1),
+            '=' if chars.get(pos + 1) == Some(&'=') => push!(Tok::EqEq, 2),
+            '=' => push!(Tok::Assign, 1),
+            '!' if chars.get(pos + 1) == Some(&'=') => push!(Tok::NotEq, 2),
+            '\'' | '"' => {
+                let quote = c;
+                let mut s = String::new();
+                let mut p = pos + 1;
+                while p < chars.len() && chars[p] != quote && chars[p] != '\n' {
+                    if chars[p] == '\\' && p + 1 < chars.len() {
+                        p += 1;
+                        s.push(match chars[p] {
+                            'n' => '\n',
+                            't' => '\t',
+                            other => other,
+                        });
+                    } else {
+                        s.push(chars[p]);
+                    }
+                    p += 1;
+                }
+                if p >= chars.len() || chars[p] != quote {
+                    err!("unterminated string literal");
+                }
+                let len = p + 1 - pos;
+                push!(Tok::Str(s), len);
+            }
+            _ if c.is_ascii_digit() || (c == '.' && chars.get(pos + 1).map(|d| d.is_ascii_digit()).unwrap_or(false)) => {
+                let start = pos;
+                let mut is_float = false;
+                while pos < chars.len()
+                    && (chars[pos].is_ascii_digit()
+                        || chars[pos] == '.'
+                        || chars[pos] == 'e'
+                        || chars[pos] == 'E'
+                        || ((chars[pos] == '+' || chars[pos] == '-')
+                            && matches!(chars.get(pos.wrapping_sub(1)), Some('e') | Some('E'))))
+                {
+                    if chars[pos] == '.' || chars[pos] == 'e' || chars[pos] == 'E' {
+                        is_float = true;
+                    }
+                    pos += 1;
+                }
+                let text: String = chars[start..pos].iter().collect();
+                col += pos - start;
+                let kind = if is_float {
+                    Tok::Float(text.parse().map_err(|_| LexError {
+                        message: format!("bad float literal {text}"),
+                        line: tline,
+                        col: tcol,
+                    })?)
+                } else {
+                    Tok::Int(text.parse().map_err(|_| LexError {
+                        message: format!("bad int literal {text}"),
+                        line: tline,
+                        col: tcol,
+                    })?)
+                };
+                tokens.push(Token { kind, line: tline, col: tcol });
+            }
+            _ if c.is_ascii_alphabetic() || c == '_' => {
+                let start = pos;
+                while pos < chars.len() && (chars[pos].is_ascii_alphanumeric() || chars[pos] == '_') {
+                    pos += 1;
+                }
+                let text: String = chars[start..pos].iter().collect();
+                col += pos - start;
+                let kind = match text.as_str() {
+                    "def" => Tok::Def,
+                    "return" => Tok::Return,
+                    "if" => Tok::If,
+                    "elif" => Tok::Elif,
+                    "else" => Tok::Else,
+                    "while" => Tok::While,
+                    "for" => Tok::For,
+                    "in" => Tok::In,
+                    "lambda" => Tok::Lambda,
+                    "True" => Tok::True,
+                    "False" => Tok::False,
+                    "None" => Tok::None_,
+                    "and" => Tok::And,
+                    "or" => Tok::Or,
+                    "not" => Tok::Not,
+                    "pass" => Tok::Pass,
+                    _ => Tok::Name(text),
+                };
+                tokens.push(Token { kind, line: tline, col: tcol });
+            }
+            _ => err!(format!("unexpected character {c:?}")),
+        }
+    }
+
+    // Final newline + dedents.
+    if !matches!(tokens.last().map(|t| &t.kind), Some(Tok::Newline) | None) {
+        tokens.push(Token { kind: Tok::Newline, line, col });
+    }
+    while indents.len() > 1 {
+        indents.pop();
+        tokens.push(Token { kind: Tok::Dedent, line, col });
+    }
+    tokens.push(Token { kind: Tok::Eof, line, col });
+    Ok(tokens)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|t| t.kind).collect()
+    }
+
+    #[test]
+    fn simple_tokens() {
+        let k = kinds("x = 1 + 2.5");
+        assert_eq!(
+            k,
+            vec![
+                Tok::Name("x".into()),
+                Tok::Assign,
+                Tok::Int(1),
+                Tok::Plus,
+                Tok::Float(2.5),
+                Tok::Newline,
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn keywords_and_operators() {
+        let k = kinds("def f(x):\n    return x ** 3\n");
+        assert!(k.contains(&Tok::Def));
+        assert!(k.contains(&Tok::Indent));
+        assert!(k.contains(&Tok::Return));
+        assert!(k.contains(&Tok::DoubleStar));
+        assert!(k.contains(&Tok::Dedent));
+    }
+
+    #[test]
+    fn indentation_nesting() {
+        let k = kinds("if a:\n  if b:\n    x = 1\n  y = 2\nz = 3\n");
+        let indents = k.iter().filter(|t| **t == Tok::Indent).count();
+        let dedents = k.iter().filter(|t| **t == Tok::Dedent).count();
+        assert_eq!(indents, 2);
+        assert_eq!(dedents, 2);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_skipped() {
+        let k = kinds("x = 1\n\n# comment line\n   # indented comment\ny = 2\n");
+        let names: Vec<_> = k
+            .iter()
+            .filter_map(|t| match t {
+                Tok::Name(n) => Some(n.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(names, vec!["x", "y"]);
+        // no stray indents from the indented comment
+        assert!(!k.contains(&Tok::Indent));
+    }
+
+    #[test]
+    fn parens_allow_newlines() {
+        let k = kinds("x = f(1,\n      2)\ny = 3\n");
+        let newlines = k.iter().filter(|t| **t == Tok::Newline).count();
+        assert_eq!(newlines, 2); // one per logical line
+    }
+
+    #[test]
+    fn augmented_assign_recognized() {
+        let k = kinds("x += 1");
+        assert!(matches!(&k[1], Tok::AugAssign(s) if s == "+="));
+    }
+
+    #[test]
+    fn string_literals() {
+        let k = kinds(r#"raise_("bad \"thing\"\n")"#);
+        assert!(k.iter().any(|t| matches!(t, Tok::Str(s) if s.contains("bad \"thing\"\n"))));
+        assert!(lex("x = 'unterminated").is_err());
+    }
+
+    #[test]
+    fn comparison_operators() {
+        let k = kinds("a <= b != c == d >= e < f > g");
+        assert!(k.contains(&Tok::Le));
+        assert!(k.contains(&Tok::NotEq));
+        assert!(k.contains(&Tok::EqEq));
+        assert!(k.contains(&Tok::Ge));
+        assert!(k.contains(&Tok::Lt));
+        assert!(k.contains(&Tok::Gt));
+    }
+
+    #[test]
+    fn scientific_notation() {
+        let k = kinds("x = 1e-3 + 2.5E+2");
+        assert!(k.contains(&Tok::Float(1e-3)));
+        assert!(k.contains(&Tok::Float(2.5e2)));
+    }
+
+    #[test]
+    fn bad_char_errors() {
+        assert!(lex("x = $").is_err());
+        let e = lex("x = $").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn matmul_and_floordiv() {
+        let k = kinds("a @ b // c % d");
+        assert!(k.contains(&Tok::At));
+        assert!(k.contains(&Tok::DoubleSlash));
+        assert!(k.contains(&Tok::Percent));
+    }
+}

@@ -1,0 +1,705 @@
+//! AST → IR lowering (§4.1).
+//!
+//! "Most of Python's features, such as functions, conditionals, and loops,
+//! can readily be parsed into our functional representation":
+//!
+//! * nested `def`s and `lambda`s become nested graphs; a reference to an
+//!   outer variable becomes a direct pointer to the outer graph's node (the
+//!   IR's closure mechanism — no explicit capture lists);
+//! * `if` lowers to `switch(cond, then_thunk, else_thunk)()`, with the code
+//!   *after* the `if` lowered once into a continuation graph whose
+//!   parameters are the variables assigned in either branch (the functional
+//!   equivalent of SSA phi nodes);
+//! * `while` lowers to a tail-recursive header graph whose parameters are
+//!   the loop variables; `for i in range(n)` desugars to a `while`;
+//! * `and`/`or`/ternary lower to `switch` over thunks, preserving
+//!   short-circuit semantics (vital for recursive base cases).
+//!
+//! Scoping is SSA-like: a closure captures the *binding at its definition
+//! point*. In the pure subset this differs from CPython's late binding only
+//! for programs that rebind a captured variable after the closure is made —
+//! exactly the mutation-flavored pattern the paper excludes.
+
+use super::ast::{assigned_names, BinOp, CmpOp, Expr, Stmt};
+use crate::ir::{Const, GraphId, MacroOp, Module, NodeId, Prim};
+use std::collections::HashMap;
+use std::fmt;
+
+/// Lowering error with source line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LowerError {
+    pub message: String,
+    pub line: usize,
+}
+
+impl fmt::Display for LowerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "lowering error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for LowerError {}
+
+type LResult<T> = Result<T, LowerError>;
+
+/// Scope chain: innermost map last. Assignments bind in the innermost map;
+/// lookups walk outward.
+type Env = Vec<HashMap<String, NodeId>>;
+
+/// What a block does when control falls off its end.
+#[derive(Debug, Clone)]
+enum FallOff {
+    /// Return `None` (function bodies).
+    Unit,
+    /// Tail-call a continuation/loop-header graph with the current values of
+    /// the named variables.
+    CallCont { graph: GraphId, vars: Vec<String> },
+}
+
+/// Lower a parsed module; returns the top-level function name → graph map.
+///
+/// Top-level definitions are mutually visible (two-pass binding), so a
+/// function may reference one defined later in the file.
+pub fn lower_module(m: &mut Module, stmts: &[Stmt]) -> LResult<HashMap<String, GraphId>> {
+    let mut lower = Lower { m, thunk_counter: 0 };
+    let mut env: Env = vec![HashMap::new()];
+    let mut graphs = HashMap::new();
+    // Pass 1: create graphs and bind all top-level names.
+    for s in stmts {
+        match s {
+            Stmt::FuncDef { name, .. } => {
+                let g = lower.m.add_graph(name.clone());
+                let gc = lower.m.graph_constant(g);
+                env.last_mut().unwrap().insert(name.clone(), gc);
+                graphs.insert(name.clone(), g);
+            }
+            Stmt::Pass(_) => {}
+            other => {
+                return Err(LowerError {
+                    message: "only `def` is allowed at module top level".into(),
+                    line: other.line(),
+                })
+            }
+        }
+    }
+    // Pass 2: lower bodies.
+    for s in stmts {
+        if let Stmt::FuncDef { name, params, body, .. } = s {
+            lower.fill_function(graphs[name], name, params, body, &env)?;
+        }
+    }
+    Ok(graphs)
+}
+
+/// Convenience: parse and lower a source string.
+pub fn compile_source(m: &mut Module, source: &str) -> crate::Result<HashMap<String, GraphId>> {
+    let ast = super::parse::parse_module(source).map_err(|e| anyhow::anyhow!("{e}"))?;
+    lower_module(m, &ast).map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+struct Lower<'m> {
+    m: &'m mut Module,
+    thunk_counter: usize,
+}
+
+/// True if every control path through the block ends in `return`.
+fn block_returns(stmts: &[Stmt]) -> bool {
+    match stmts.last() {
+        Some(Stmt::Return(..)) => true,
+        Some(Stmt::If { then, orelse, .. }) => {
+            !orelse.is_empty() && block_returns(then) && block_returns(orelse)
+        }
+        _ => false,
+    }
+}
+
+impl<'m> Lower<'m> {
+    fn fresh_name(&mut self, base: &str) -> String {
+        self.thunk_counter += 1;
+        format!("{base}#{}", self.thunk_counter)
+    }
+
+    fn lower_function(
+        &mut self,
+        name: &str,
+        params: &[String],
+        body: &[Stmt],
+        env: &Env,
+    ) -> LResult<GraphId> {
+        let g = self.m.add_graph(name);
+        self.fill_function(g, name, params, body, env)?;
+        Ok(g)
+    }
+
+    /// Lower params + body into an already-created (empty) graph.
+    fn fill_function(
+        &mut self,
+        g: GraphId,
+        name: &str,
+        params: &[String],
+        body: &[Stmt],
+        env: &Env,
+    ) -> LResult<()> {
+        let mut inner: HashMap<String, NodeId> = HashMap::new();
+        // Bind the function's own name first so recursion works.
+        let gc = self.m.graph_constant(g);
+        inner.insert(name.to_string(), gc);
+        for p in params {
+            let pn = self.m.add_parameter(g, p.clone());
+            inner.insert(p.clone(), pn);
+        }
+        let mut env2 = env.clone();
+        env2.push(inner);
+        let ret = self.lower_block(g, body, env2, FallOff::Unit)?;
+        self.m.set_return(g, ret);
+        Ok(())
+    }
+
+    /// Lower a statement list into graph `g`; returns the block's value.
+    fn lower_block(
+        &mut self,
+        g: GraphId,
+        stmts: &[Stmt],
+        mut env: Env,
+        falloff: FallOff,
+    ) -> LResult<NodeId> {
+        let mut effects: Vec<NodeId> = Vec::new();
+        let mut i = 0usize;
+        while i < stmts.len() {
+            let stmt = &stmts[i];
+            let rest = &stmts[i + 1..];
+            match stmt {
+                Stmt::Pass(_) => {}
+                Stmt::FuncDef { name, params, body, .. } => {
+                    let fg = self.lower_function(name, params, body, &env)?;
+                    let gc = self.m.graph_constant(fg);
+                    env.last_mut().unwrap().insert(name.clone(), gc);
+                }
+                Stmt::Assign { targets, value, line } => {
+                    let v = self.lower_expr(g, value, &env)?;
+                    if targets.len() == 1 {
+                        self.m.name_node(v, targets[0].clone());
+                        env.last_mut().unwrap().insert(targets[0].clone(), v);
+                    } else {
+                        for (idx, t) in targets.iter().enumerate() {
+                            let ic = self.m.constant(Const::I64(idx as i64));
+                            let item = self.m.apply_prim(g, Prim::TupleGetItem, &[v, ic]);
+                            self.m.name_node(item, t.clone());
+                            env.last_mut().unwrap().insert(t.clone(), item);
+                        }
+                        let _ = line;
+                    }
+                }
+                Stmt::ExprStmt(e, _) => {
+                    let v = self.lower_expr(g, e, &env)?;
+                    effects.push(v);
+                }
+                Stmt::Return(e, _) => {
+                    let v = match e {
+                        Some(e) => self.lower_expr(g, e, &env)?,
+                        None => self.m.constant(Const::Unit),
+                    };
+                    return Ok(self.sequence_effects(g, effects, v));
+                }
+                Stmt::If { cond, then, orelse, .. } => {
+                    let v = self.lower_if(g, cond, then, orelse, rest, env, falloff)?;
+                    return Ok(self.sequence_effects(g, effects, v));
+                }
+                Stmt::While { cond, body, .. } => {
+                    let v = self.lower_while(g, cond, body, rest, env, falloff)?;
+                    return Ok(self.sequence_effects(g, effects, v));
+                }
+                Stmt::ForRange { var, count, body, line } => {
+                    // Desugar: hidden = count; var = 0; while var < hidden:
+                    //   body; var = var + 1
+                    let hidden = format!("__range_limit#{line}_{i}");
+                    let mut new_body = body.clone();
+                    new_body.push(Stmt::Assign {
+                        targets: vec![var.clone()],
+                        value: Expr::BinOp(
+                            BinOp::Add,
+                            Box::new(Expr::Name(var.clone(), *line)),
+                            Box::new(Expr::Int(1, *line)),
+                            *line,
+                        ),
+                        line: *line,
+                    });
+                    let mut desugared = vec![
+                        Stmt::Assign { targets: vec![hidden.clone()], value: count.clone(), line: *line },
+                        Stmt::Assign { targets: vec![var.clone()], value: Expr::Int(0, *line), line: *line },
+                        Stmt::While {
+                            cond: Expr::Compare(
+                                CmpOp::Lt,
+                                Box::new(Expr::Name(var.clone(), *line)),
+                                Box::new(Expr::Name(hidden, *line)),
+                                *line,
+                            ),
+                            body: new_body,
+                            line: *line,
+                        },
+                    ];
+                    desugared.extend_from_slice(rest);
+                    let v = self.lower_block(g, &desugared, env, falloff)?;
+                    return Ok(self.sequence_effects(g, effects, v));
+                }
+            }
+            i += 1;
+        }
+        // Fell off the end of the block.
+        let v = match falloff {
+            FallOff::Unit => self.m.constant(Const::Unit),
+            FallOff::CallCont { graph, vars } => {
+                let gc = self.m.graph_constant(graph);
+                let mut inputs = vec![gc];
+                for name in &vars {
+                    inputs.push(self.lookup(name, &env, 0)?);
+                }
+                self.m.apply(g, inputs)
+            }
+        };
+        Ok(self.sequence_effects(g, effects, v))
+    }
+
+    /// Thread impure expression-statement results into the block value so
+    /// they are evaluated (and ordered before the value).
+    fn sequence_effects(&mut self, g: GraphId, effects: Vec<NodeId>, value: NodeId) -> NodeId {
+        if effects.is_empty() {
+            return value;
+        }
+        let mut inputs = vec![self.m.constant(Const::Prim(Prim::MakeTuple))];
+        inputs.extend(effects);
+        inputs.push(value);
+        let n = inputs.len() - 1;
+        let tup = self.m.apply(g, inputs);
+        let idx = self.m.constant(Const::I64((n - 1) as i64));
+        self.m.apply_prim(g, Prim::TupleGetItem, &[tup, idx])
+    }
+
+    fn lower_if(
+        &mut self,
+        g: GraphId,
+        cond: &Expr,
+        then: &[Stmt],
+        orelse: &[Stmt],
+        rest: &[Stmt],
+        env: Env,
+        falloff: FallOff,
+    ) -> LResult<NodeId> {
+        let cond_node = self.lower_expr(g, cond, &env)?;
+
+        // Decide whether we need a continuation graph for `rest`.
+        let both_return = block_returns(then) && !orelse.is_empty() && block_returns(orelse);
+        let branch_falloff: FallOff;
+        if both_return || rest.is_empty() {
+            branch_falloff = falloff.clone();
+        } else {
+            // merged variables: assigned in either branch AND (defined before
+            // or assigned in both) — the phi set.
+            let a_then = assigned_names(then);
+            let a_else = assigned_names(orelse);
+            let mut merged: Vec<String> = Vec::new();
+            for n in a_then.iter().chain(a_else.iter()) {
+                if merged.contains(n) {
+                    continue;
+                }
+                let defined_before = self.lookup(n, &env, 0).is_ok();
+                let in_both = a_then.contains(n) && a_else.contains(n);
+                if defined_before || in_both {
+                    merged.push(n.clone());
+                }
+            }
+            let kname = self.fresh_name("if_cont");
+            let k = self.m.add_graph(kname);
+            let mut kenv = env.clone();
+            for name in &merged {
+                let p = self.m.add_parameter(k, name.clone());
+                kenv.last_mut().unwrap().insert(name.clone(), p);
+            }
+            let kret = self.lower_block(k, rest, kenv, falloff)?;
+            self.m.set_return(k, kret);
+            branch_falloff = FallOff::CallCont { graph: k, vars: merged };
+        }
+
+        let tt = self.lower_thunk(then, &env, branch_falloff.clone(), "if_true")?;
+        let ff = self.lower_thunk(orelse, &env, branch_falloff, "if_false")?;
+        let ttc = self.m.graph_constant(tt);
+        let ffc = self.m.graph_constant(ff);
+        let sel = self.m.apply_prim(g, Prim::Switch, &[cond_node, ttc, ffc]);
+        Ok(self.m.apply(g, vec![sel]))
+    }
+
+    fn lower_while(
+        &mut self,
+        g: GraphId,
+        cond: &Expr,
+        body: &[Stmt],
+        rest: &[Stmt],
+        env: Env,
+        falloff: FallOff,
+    ) -> LResult<NodeId> {
+        // Loop variables: assigned in the body and already defined.
+        let loop_vars: Vec<String> = assigned_names(body)
+            .into_iter()
+            .filter(|n| self.lookup(n, &env, 0).is_ok())
+            .collect();
+
+        let wname = self.fresh_name("while_header");
+        let w = self.m.add_graph(wname);
+        let mut wenv = env.clone();
+        for name in &loop_vars {
+            let p = self.m.add_parameter(w, name.clone());
+            wenv.last_mut().unwrap().insert(name.clone(), p);
+        }
+        let cond_node = self.lower_expr(w, cond, &wenv)?;
+
+        // Body thunk: run the body, then tail-call the header again.
+        let bt = self.lower_thunk(
+            body,
+            &wenv,
+            FallOff::CallCont { graph: w, vars: loop_vars.clone() },
+            "while_body",
+        )?;
+        // Exit thunk: the rest of the enclosing block.
+        let et = self.lower_thunk(rest, &wenv, falloff, "while_exit")?;
+
+        let btc = self.m.graph_constant(bt);
+        let etc = self.m.graph_constant(et);
+        let sel = self.m.apply_prim(w, Prim::Switch, &[cond_node, btc, etc]);
+        let wret = self.m.apply(w, vec![sel]);
+        self.m.set_return(w, wret);
+
+        // Kick off the loop with the current values.
+        let wc = self.m.graph_constant(w);
+        let mut inputs = vec![wc];
+        for name in &loop_vars {
+            inputs.push(self.lookup(name, &env, 0)?);
+        }
+        Ok(self.m.apply(g, inputs))
+    }
+
+    /// A zero-parameter nested graph running `stmts`.
+    fn lower_thunk(&mut self, stmts: &[Stmt], env: &Env, falloff: FallOff, base: &str) -> LResult<GraphId> {
+        let name = self.fresh_name(base);
+        let t = self.m.add_graph(name);
+        let ret = self.lower_block(t, stmts, env.clone(), falloff)?;
+        self.m.set_return(t, ret);
+        Ok(t)
+    }
+
+    /// A zero-parameter nested graph evaluating one expression.
+    fn expr_thunk(&mut self, g_env: &Env, e: &Expr, base: &str) -> LResult<NodeId> {
+        let name = self.fresh_name(base);
+        let t = self.m.add_graph(name);
+        let v = self.lower_expr(t, e, g_env)?;
+        self.m.set_return(t, v);
+        Ok(self.m.graph_constant(t))
+    }
+
+    fn lookup(&mut self, name: &str, env: &Env, line: usize) -> LResult<NodeId> {
+        for scope in env.iter().rev() {
+            if let Some(&n) = scope.get(name) {
+                return Ok(n);
+            }
+        }
+        // Builtins.
+        if let Some(p) = builtin(name) {
+            return Ok(self.m.constant(Const::Prim(p)));
+        }
+        match name {
+            "grad" => return Ok(self.m.constant(Const::Macro(MacroOp::Grad))),
+            "value_and_grad" => return Ok(self.m.constant(Const::Macro(MacroOp::ValueAndGrad))),
+            "jfwd" => return Ok(self.m.constant(Const::Macro(MacroOp::Jfwd))),
+            _ => {}
+        }
+        Err(LowerError { message: format!("undefined name `{name}`"), line })
+    }
+
+    fn lower_expr(&mut self, g: GraphId, e: &Expr, env: &Env) -> LResult<NodeId> {
+        Ok(match e {
+            Expr::Int(v, _) => self.m.constant(Const::I64(*v)),
+            Expr::Float(v, _) => self.m.constant(Const::F64(*v)),
+            Expr::Bool(v, _) => self.m.constant(Const::Bool(*v)),
+            Expr::NoneLit(_) => self.m.constant(Const::Unit),
+            Expr::Str(s, _) => self.m.constant(Const::Str(s.clone())),
+            Expr::Name(n, line) => self.lookup(n, env, *line)?,
+            Expr::Tuple(items, _) => {
+                let mut args = Vec::with_capacity(items.len());
+                for it in items {
+                    args.push(self.lower_expr(g, it, env)?);
+                }
+                let mut inputs = vec![self.m.constant(Const::Prim(Prim::MakeTuple))];
+                inputs.extend(args);
+                self.m.apply(g, inputs)
+            }
+            Expr::List(items, _) => {
+                // cons list: (a, (b, (c, ())))
+                let mut acc = self.m.constant(Const::Unit);
+                for it in items.iter().rev() {
+                    let head = self.lower_expr(g, it, env)?;
+                    acc = self.m.apply_prim(g, Prim::MakeTuple, &[head, acc]);
+                }
+                acc
+            }
+            Expr::BinOp(op, a, b, _) => {
+                let an = self.lower_expr(g, a, env)?;
+                let bn = self.lower_expr(g, b, env)?;
+                let p = match op {
+                    BinOp::Add => Prim::Add,
+                    BinOp::Sub => Prim::Sub,
+                    BinOp::Mul => Prim::Mul,
+                    BinOp::Div => Prim::Div,
+                    BinOp::FloorDiv => Prim::FloorDiv,
+                    BinOp::Mod => Prim::Mod,
+                    BinOp::Pow => Prim::Pow,
+                    BinOp::MatMul => Prim::MatMul,
+                };
+                self.m.apply_prim(g, p, &[an, bn])
+            }
+            Expr::Neg(a, _) => {
+                let an = self.lower_expr(g, a, env)?;
+                self.m.apply_prim(g, Prim::Neg, &[an])
+            }
+            Expr::Not(a, _) => {
+                let an = self.lower_expr(g, a, env)?;
+                self.m.apply_prim(g, Prim::Not, &[an])
+            }
+            Expr::Compare(op, a, b, _) => {
+                let an = self.lower_expr(g, a, env)?;
+                let bn = self.lower_expr(g, b, env)?;
+                let p = match op {
+                    CmpOp::Lt => Prim::Lt,
+                    CmpOp::Gt => Prim::Gt,
+                    CmpOp::Le => Prim::Le,
+                    CmpOp::Ge => Prim::Ge,
+                    CmpOp::Eq => Prim::Eq,
+                    CmpOp::Ne => Prim::Ne,
+                };
+                self.m.apply_prim(g, p, &[an, bn])
+            }
+            Expr::And(a, b, _) => {
+                // switch(a, thunk_b, thunk_False)()
+                let an = self.lower_expr(g, a, env)?;
+                let bt = self.expr_thunk(env, b, "and_rhs")?;
+                let fe = Expr::Bool(false, e.line());
+                let ft = self.expr_thunk(env, &fe, "and_false")?;
+                let sel = self.m.apply_prim(g, Prim::Switch, &[an, bt, ft]);
+                self.m.apply(g, vec![sel])
+            }
+            Expr::Or(a, b, _) => {
+                let an = self.lower_expr(g, a, env)?;
+                let te = Expr::Bool(true, e.line());
+                let tt = self.expr_thunk(env, &te, "or_true")?;
+                let bt = self.expr_thunk(env, b, "or_rhs")?;
+                let sel = self.m.apply_prim(g, Prim::Switch, &[an, tt, bt]);
+                self.m.apply(g, vec![sel])
+            }
+            Expr::IfExp(c, t, f, _) => {
+                let cn = self.lower_expr(g, c, env)?;
+                let tt = self.expr_thunk(env, t, "ternary_true")?;
+                let ft = self.expr_thunk(env, f, "ternary_false")?;
+                let sel = self.m.apply_prim(g, Prim::Switch, &[cn, tt, ft]);
+                self.m.apply(g, vec![sel])
+            }
+            Expr::Call(f, args, _) => {
+                let fnode = self.lower_expr(g, f, env)?;
+                let mut inputs = vec![fnode];
+                for a in args {
+                    inputs.push(self.lower_expr(g, a, env)?);
+                }
+                self.m.apply(g, inputs)
+            }
+            Expr::Index(x, i, _) => {
+                let xn = self.lower_expr(g, x, env)?;
+                let in_ = self.lower_expr(g, i, env)?;
+                self.m.apply_prim(g, Prim::TupleGetItem, &[xn, in_])
+            }
+            Expr::Lambda(params, body, line) => {
+                let name = self.fresh_name("lambda");
+                let stmts = vec![Stmt::Return(Some((**body).clone()), *line)];
+                let lg = self.lower_function(&name, params, &stmts, env)?;
+                self.m.graph_constant(lg)
+            }
+        })
+    }
+}
+
+/// Builtin function table: Python-level names → primitives.
+fn builtin(name: &str) -> Option<Prim> {
+    match name {
+        "print" => Some(Prim::Print),
+        "len" => Some(Prim::TupleLen),
+        _ => Prim::by_name(name),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::print_graph;
+    use crate::parser::parse::parse_module;
+
+    fn lower(src: &str) -> (Module, HashMap<String, GraphId>) {
+        let mut m = Module::new();
+        let ast = parse_module(src).unwrap();
+        let graphs = lower_module(&mut m, &ast).unwrap();
+        m.validate().unwrap();
+        (m, graphs)
+    }
+
+    #[test]
+    fn simple_function_lowering() {
+        let (m, gs) = lower("def f(x):\n    return x ** 3\n");
+        let f = gs["f"];
+        let order = m.topo_order(f);
+        assert_eq!(order.len(), 1);
+        assert!(m.is_apply_of(order[0], Prim::Pow));
+    }
+
+    #[test]
+    fn nested_function_captures_free_variable() {
+        let (m, gs) = lower("def f(x):\n    def g(y):\n        return y + x\n    return g(2)\n");
+        let f = gs["f"];
+        let nested = m.reachable_graphs(f);
+        assert_eq!(nested.len(), 2);
+        let g = nested.into_iter().find(|&h| h != f).unwrap();
+        let fvs = m.free_variables_total(g);
+        assert_eq!(fvs.len(), 1);
+        assert_eq!(m.node(fvs[0]).debug_name.as_deref(), Some("x"));
+    }
+
+    #[test]
+    fn recursion_sees_own_name() {
+        let (m, gs) = lower(
+            "def fact(n):\n    return 1 if n <= 1 else n * fact(n - 1)\n",
+        );
+        let f = gs["fact"];
+        // some reachable graph applies the fact constant again
+        let all = m.reachable_graphs(f);
+        assert!(all.len() >= 3, "ternary thunks present");
+        let txt = print_graph(&m, f, true);
+        assert!(txt.contains("@fact"), "{txt}");
+    }
+
+    #[test]
+    fn while_lowering_structure() {
+        let (m, gs) = lower(
+            "def f(n):\n    s = 0\n    i = 0\n    while i < n:\n        s = s + i\n        i = i + 1\n    return s\n",
+        );
+        let f = gs["f"];
+        let txt = print_graph(&m, f, true);
+        assert!(txt.contains("while_header"), "{txt}");
+        assert!(txt.contains("switch("), "{txt}");
+        // header should have two params (s, i)
+        let header = m
+            .graph_ids()
+            .find(|&h| m.graph(h).name.starts_with("while_header"))
+            .unwrap();
+        assert_eq!(m.graph(header).params.len(), 2);
+    }
+
+    #[test]
+    fn for_range_desugars_to_while() {
+        let (m, gs) = lower(
+            "def f(n):\n    s = 0\n    for i in range(n):\n        s = s + i\n    return s\n",
+        );
+        let txt = print_graph(&m, gs["f"], true);
+        assert!(txt.contains("while_header"), "{txt}");
+        assert!(txt.contains("lt("), "{txt}");
+    }
+
+    #[test]
+    fn if_with_continuation_params() {
+        let (m, gs) = lower(
+            "def f(x):\n    if x > 0:\n        y = x\n    else:\n        y = -x\n    return y * 2\n",
+        );
+        let f = gs["f"];
+        let k = m
+            .graph_ids()
+            .find(|&h| m.graph(h).name.starts_with("if_cont"))
+            .expect("continuation graph exists");
+        // y is merged → continuation takes one parameter
+        assert_eq!(m.graph(k).params.len(), 1);
+        assert_eq!(m.node(m.graph(k).params[0]).debug_name.as_deref(), Some("y"));
+        let _ = f;
+    }
+
+    #[test]
+    fn early_return_pattern() {
+        let (m, gs) = lower(
+            "def f(x):\n    if x < 0:\n        return 0\n    return x\n",
+        );
+        let txt = print_graph(&m, gs["f"], true);
+        assert!(txt.contains("if_true"), "{txt}");
+        // fallthrough branch continues to the rest via if_false thunk
+        assert!(txt.contains("if_false"), "{txt}");
+    }
+
+    #[test]
+    fn undefined_name_reports_line() {
+        let mut m = Module::new();
+        let ast = parse_module("def f(x):\n    return x + zzz\n").unwrap();
+        let err = lower_module(&mut m, &ast).unwrap_err();
+        assert!(err.message.contains("zzz"));
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn top_level_statement_rejected() {
+        let mut m = Module::new();
+        let ast = parse_module("x = 5\n").unwrap();
+        assert!(lower_module(&mut m, &ast).is_err());
+    }
+
+    #[test]
+    fn grad_macro_lowered_with_forward_reference() {
+        let (m, gs) =
+            lower("def df(x):\n    return grad(square)(x)\n\ndef square(x):\n    return x * x\n");
+        let df = gs["df"];
+        // df's body contains an apply whose callee is an apply of the grad macro
+        let order = m.topo_order(df);
+        let has_macro = order.iter().any(|&n| {
+            m.node(n).inputs().iter().any(|&i| {
+                matches!(m.node(i).constant(), Some(Const::Macro(MacroOp::Grad)))
+            })
+        });
+        assert!(has_macro, "{}", print_graph(&m, df, true));
+    }
+
+    #[test]
+    fn destructuring_lowers_to_getitems() {
+        let (m, gs) = lower("def f(t):\n    a, b = t\n    return a + b\n");
+        let f = gs["f"];
+        let order = m.topo_order(f);
+        let getitems = order.iter().filter(|&&n| m.is_apply_of(n, Prim::TupleGetItem)).count();
+        assert_eq!(getitems, 2);
+    }
+
+    #[test]
+    fn list_literal_is_cons_chain() {
+        let (m, gs) = lower("def f():\n    return [1, 2]\n");
+        let f = gs["f"];
+        let order = m.topo_order(f);
+        let tuples = order.iter().filter(|&&n| m.is_apply_of(n, Prim::MakeTuple)).count();
+        assert_eq!(tuples, 2); // (1, (2, ()))
+    }
+
+    #[test]
+    fn short_circuit_becomes_switch_thunks() {
+        let (m, gs) = lower("def f(n):\n    return n <= 1 or f(n - 1)\n");
+        let txt = print_graph(&m, gs["f"], true);
+        assert!(txt.contains("or_rhs"), "{txt}");
+        assert!(txt.contains("switch("), "{txt}");
+    }
+
+    #[test]
+    fn lambda_lowering() {
+        let (m, gs) = lower("def f(x):\n    g = lambda y: y * x\n    return g(3)\n");
+        let f = gs["f"];
+        let lam = m
+            .graph_ids()
+            .find(|&h| m.graph(h).name.starts_with("lambda"))
+            .unwrap();
+        assert_eq!(m.free_variables_total(lam).len(), 1);
+        let _ = f;
+    }
+}

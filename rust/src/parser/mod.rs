@@ -1,0 +1,15 @@
+//! The Python-subset front end (§4.1).
+//!
+//! "Users can write models in a subset of Python 3.6 and have them compiled
+//! to our IR." The pipeline is [`lexer`] → [`parse`] → [`lower`]; mutation
+//! statements are rejected with targeted errors, and everything else —
+//! nested functions, lambdas, conditionals, loops, recursion, higher-order
+//! functions — lowers onto the purely functional graph IR.
+
+pub mod ast;
+pub mod lexer;
+pub mod lower;
+pub mod parse;
+
+pub use lower::{compile_source, lower_module, LowerError};
+pub use parse::{parse_module, ParseError};

@@ -1,0 +1,646 @@
+//! Recursive-descent parser for the Python subset (§4.1).
+
+use super::ast::{assigned_names, BinOp, CmpOp, Expr, Stmt};
+use super::lexer::{lex, Tok, Token};
+use std::fmt;
+
+/// Parse error with source position.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParseError {
+    pub message: String,
+    pub line: usize,
+    pub col: usize,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "parse error at {}:{}: {}", self.line, self.col, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+type PResult<T> = Result<T, ParseError>;
+
+/// Parse a full module (a sequence of statements, usually `def`s).
+pub fn parse_module(source: &str) -> PResult<Vec<Stmt>> {
+    let tokens = lex(source).map_err(|e| ParseError { message: e.message, line: e.line, col: e.col })?;
+    let mut p = Parser { tokens, pos: 0 };
+    let mut stmts = Vec::new();
+    p.skip_newlines();
+    while !p.at(&Tok::Eof) {
+        stmts.push(p.statement()?);
+        p.skip_newlines();
+    }
+    // sanity: duplicate top-level definitions are confusing — reject early
+    let names = assigned_names(&stmts);
+    let mut seen = std::collections::HashSet::new();
+    for n in &names {
+        if !seen.insert(n) {
+            // rebinding at top level is allowed in Python but almost always a
+            // bug in a pure module of defs; we allow it silently for assigns
+            // but this hook is where a lint would go.
+        }
+    }
+    Ok(stmts)
+}
+
+struct Parser {
+    tokens: Vec<Token>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Token {
+        &self.tokens[self.pos.min(self.tokens.len() - 1)]
+    }
+
+    fn peek2(&self) -> &Tok {
+        &self.tokens[(self.pos + 1).min(self.tokens.len() - 1)].kind
+    }
+
+    fn at(&self, kind: &Tok) -> bool {
+        &self.peek().kind == kind
+    }
+
+    fn bump(&mut self) -> Token {
+        let t = self.tokens[self.pos.min(self.tokens.len() - 1)].clone();
+        self.pos += 1;
+        t
+    }
+
+    fn err<T>(&self, msg: impl Into<String>) -> PResult<T> {
+        let t = self.peek();
+        Err(ParseError { message: msg.into(), line: t.line, col: t.col })
+    }
+
+    fn expect(&mut self, kind: Tok) -> PResult<Token> {
+        if self.at(&kind) {
+            Ok(self.bump())
+        } else {
+            self.err(format!("expected {:?}, found {:?}", kind, self.peek().kind))
+        }
+    }
+
+    fn skip_newlines(&mut self) {
+        while self.at(&Tok::Newline) {
+            self.bump();
+        }
+    }
+
+    // ---- statements -------------------------------------------------------
+
+    fn statement(&mut self) -> PResult<Stmt> {
+        let line = self.peek().line;
+        match &self.peek().kind {
+            Tok::Def => self.funcdef(),
+            Tok::Return => {
+                self.bump();
+                let value = if self.at(&Tok::Newline) { None } else { Some(self.expr()?) };
+                self.expect(Tok::Newline)?;
+                Ok(Stmt::Return(value, line))
+            }
+            Tok::If => self.if_stmt(),
+            Tok::While => {
+                self.bump();
+                let cond = self.expr()?;
+                self.expect(Tok::Colon)?;
+                let body = self.block()?;
+                Ok(Stmt::While { cond, body, line })
+            }
+            Tok::For => self.for_stmt(),
+            Tok::Pass => {
+                self.bump();
+                self.expect(Tok::Newline)?;
+                Ok(Stmt::Pass(line))
+            }
+            Tok::Name(_) => {
+                // Could be: assignment, destructuring, aug-assign (rejected),
+                // index-assign (rejected), or a bare expression.
+                self.assign_or_expr()
+            }
+            _ => {
+                let e = self.expr()?;
+                self.expect(Tok::Newline)?;
+                Ok(Stmt::ExprStmt(e, line))
+            }
+        }
+    }
+
+    fn funcdef(&mut self) -> PResult<Stmt> {
+        let line = self.peek().line;
+        self.expect(Tok::Def)?;
+        let name = match self.bump().kind {
+            Tok::Name(n) => n,
+            other => return self.err(format!("expected function name, found {other:?}")),
+        };
+        self.expect(Tok::LParen)?;
+        let mut params = Vec::new();
+        while !self.at(&Tok::RParen) {
+            match self.bump().kind {
+                Tok::Name(n) => params.push(n),
+                other => return self.err(format!("expected parameter name, found {other:?}")),
+            }
+            if self.at(&Tok::Comma) {
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        self.expect(Tok::RParen)?;
+        self.expect(Tok::Colon)?;
+        let body = self.block()?;
+        Ok(Stmt::FuncDef { name, params, body, line })
+    }
+
+    fn if_stmt(&mut self) -> PResult<Stmt> {
+        let line = self.peek().line;
+        self.bump(); // if / elif
+        let cond = self.expr()?;
+        self.expect(Tok::Colon)?;
+        let then = self.block()?;
+        let orelse = if self.at(&Tok::Elif) {
+            vec![self.if_stmt()?]
+        } else if self.at(&Tok::Else) {
+            self.bump();
+            self.expect(Tok::Colon)?;
+            self.block()?
+        } else {
+            Vec::new()
+        };
+        Ok(Stmt::If { cond, then, orelse, line })
+    }
+
+    fn for_stmt(&mut self) -> PResult<Stmt> {
+        let line = self.peek().line;
+        self.expect(Tok::For)?;
+        let var = match self.bump().kind {
+            Tok::Name(n) => n,
+            other => return self.err(format!("expected loop variable, found {other:?}")),
+        };
+        self.expect(Tok::In)?;
+        // only `range(expr)` is supported
+        match self.bump().kind {
+            Tok::Name(n) if n == "range" => {}
+            other => {
+                return self.err(format!(
+                    "only `for v in range(n)` loops are supported, found iterator {other:?}"
+                ))
+            }
+        }
+        self.expect(Tok::LParen)?;
+        let count = self.expr()?;
+        self.expect(Tok::RParen)?;
+        self.expect(Tok::Colon)?;
+        let body = self.block()?;
+        Ok(Stmt::ForRange { var, count, body, line })
+    }
+
+    fn assign_or_expr(&mut self) -> PResult<Stmt> {
+        let line = self.peek().line;
+        // Lookahead for `name = `, `name, name = `, `name += `, `name[ ... ] =`.
+        let start = self.pos;
+        // Try to parse a target list of names.
+        let mut targets = Vec::new();
+        loop {
+            match &self.peek().kind {
+                Tok::Name(n) => {
+                    let n = n.clone();
+                    match self.peek2() {
+                        Tok::Assign | Tok::Comma => {
+                            targets.push(n);
+                            self.bump();
+                            if self.at(&Tok::Comma) {
+                                self.bump();
+                                continue;
+                            }
+                            break;
+                        }
+                        Tok::AugAssign(op) => {
+                            let op = op.clone();
+                            return self.err(format!(
+                                "augmented assignment `{n} {op} ...` implies mutation, which \
+                                 Myia forbids (§4.1); write `{n} = {n} {} ...` instead",
+                                &op[..1]
+                            ));
+                        }
+                        _ => {
+                            targets.clear();
+                            self.pos = start;
+                            break;
+                        }
+                    }
+                }
+                _ => {
+                    targets.clear();
+                    self.pos = start;
+                    break;
+                }
+            }
+        }
+        if !targets.is_empty() {
+            self.expect(Tok::Assign)?;
+            let value = self.expr()?;
+            self.expect(Tok::Newline)?;
+            return Ok(Stmt::Assign { targets, value, line });
+        }
+        // Not a plain assignment: parse an expression, then check for the
+        // forbidden `x[i] = v` form.
+        let e = self.expr()?;
+        if self.at(&Tok::Assign) {
+            if matches!(e, Expr::Index(..)) {
+                return self.err(
+                    "index assignment `x[i] = v` implies mutation, which Myia forbids (§4.1); \
+                     build a new tuple instead",
+                );
+            }
+            return self.err("invalid assignment target");
+        }
+        self.expect(Tok::Newline)?;
+        Ok(Stmt::ExprStmt(e, line))
+    }
+
+    fn block(&mut self) -> PResult<Vec<Stmt>> {
+        self.expect(Tok::Newline)?;
+        self.expect(Tok::Indent)?;
+        let mut stmts = Vec::new();
+        self.skip_newlines();
+        while !self.at(&Tok::Dedent) && !self.at(&Tok::Eof) {
+            stmts.push(self.statement()?);
+            self.skip_newlines();
+        }
+        self.expect(Tok::Dedent)?;
+        if stmts.is_empty() {
+            return self.err("empty block");
+        }
+        Ok(stmts)
+    }
+
+    // ---- expressions (precedence climbing) ---------------------------------
+
+    fn expr(&mut self) -> PResult<Expr> {
+        self.ternary()
+    }
+
+    fn ternary(&mut self) -> PResult<Expr> {
+        let line = self.peek().line;
+        let body = self.or_expr()?;
+        if self.at(&Tok::If) {
+            self.bump();
+            let cond = self.or_expr()?;
+            self.expect(Tok::Else)?;
+            let orelse = self.ternary()?;
+            Ok(Expr::IfExp(Box::new(cond), Box::new(body), Box::new(orelse), line))
+        } else {
+            Ok(body)
+        }
+    }
+
+    fn or_expr(&mut self) -> PResult<Expr> {
+        let mut lhs = self.and_expr()?;
+        while self.at(&Tok::Or) {
+            let line = self.bump().line;
+            let rhs = self.and_expr()?;
+            lhs = Expr::Or(Box::new(lhs), Box::new(rhs), line);
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> PResult<Expr> {
+        let mut lhs = self.not_expr()?;
+        while self.at(&Tok::And) {
+            let line = self.bump().line;
+            let rhs = self.not_expr()?;
+            lhs = Expr::And(Box::new(lhs), Box::new(rhs), line);
+        }
+        Ok(lhs)
+    }
+
+    fn not_expr(&mut self) -> PResult<Expr> {
+        if self.at(&Tok::Not) {
+            let line = self.bump().line;
+            let e = self.not_expr()?;
+            Ok(Expr::Not(Box::new(e), line))
+        } else {
+            self.comparison()
+        }
+    }
+
+    fn comparison(&mut self) -> PResult<Expr> {
+        let lhs = self.arith()?;
+        let op = match self.peek().kind {
+            Tok::Lt => CmpOp::Lt,
+            Tok::Gt => CmpOp::Gt,
+            Tok::Le => CmpOp::Le,
+            Tok::Ge => CmpOp::Ge,
+            Tok::EqEq => CmpOp::Eq,
+            Tok::NotEq => CmpOp::Ne,
+            _ => return Ok(lhs),
+        };
+        let line = self.bump().line;
+        let rhs = self.arith()?;
+        Ok(Expr::Compare(op, Box::new(lhs), Box::new(rhs), line))
+    }
+
+    fn arith(&mut self) -> PResult<Expr> {
+        let mut lhs = self.term()?;
+        loop {
+            let op = match self.peek().kind {
+                Tok::Plus => BinOp::Add,
+                Tok::Minus => BinOp::Sub,
+                _ => return Ok(lhs),
+            };
+            let line = self.bump().line;
+            let rhs = self.term()?;
+            lhs = Expr::BinOp(op, Box::new(lhs), Box::new(rhs), line);
+        }
+    }
+
+    fn term(&mut self) -> PResult<Expr> {
+        let mut lhs = self.unary()?;
+        loop {
+            let op = match self.peek().kind {
+                Tok::Star => BinOp::Mul,
+                Tok::Slash => BinOp::Div,
+                Tok::DoubleSlash => BinOp::FloorDiv,
+                Tok::Percent => BinOp::Mod,
+                Tok::At => BinOp::MatMul,
+                _ => return Ok(lhs),
+            };
+            let line = self.bump().line;
+            let rhs = self.unary()?;
+            lhs = Expr::BinOp(op, Box::new(lhs), Box::new(rhs), line);
+        }
+    }
+
+    fn unary(&mut self) -> PResult<Expr> {
+        match self.peek().kind {
+            Tok::Minus => {
+                let line = self.bump().line;
+                let e = self.unary()?;
+                Ok(Expr::Neg(Box::new(e), line))
+            }
+            Tok::Plus => {
+                self.bump();
+                self.unary()
+            }
+            _ => self.power(),
+        }
+    }
+
+    fn power(&mut self) -> PResult<Expr> {
+        let base = self.postfix()?;
+        if self.at(&Tok::DoubleStar) {
+            let line = self.bump().line;
+            let exp = self.unary()?; // right-assoc, binds tighter than unary minus on the left
+            Ok(Expr::BinOp(BinOp::Pow, Box::new(base), Box::new(exp), line))
+        } else {
+            Ok(base)
+        }
+    }
+
+    fn postfix(&mut self) -> PResult<Expr> {
+        let mut e = self.atom()?;
+        loop {
+            match self.peek().kind {
+                Tok::LParen => {
+                    let line = self.bump().line;
+                    let mut args = Vec::new();
+                    while !self.at(&Tok::RParen) {
+                        args.push(self.expr()?);
+                        if self.at(&Tok::Comma) {
+                            self.bump();
+                        } else {
+                            break;
+                        }
+                    }
+                    self.expect(Tok::RParen)?;
+                    e = Expr::Call(Box::new(e), args, line);
+                }
+                Tok::LBracket => {
+                    let line = self.bump().line;
+                    let idx = self.expr()?;
+                    self.expect(Tok::RBracket)?;
+                    e = Expr::Index(Box::new(e), Box::new(idx), line);
+                }
+                Tok::Dot => {
+                    return self.err(
+                        "attribute access is not supported in the Myia subset; \
+                         use the functional builtins instead",
+                    );
+                }
+                _ => return Ok(e),
+            }
+        }
+    }
+
+    fn atom(&mut self) -> PResult<Expr> {
+        let line = self.peek().line;
+        match self.bump().kind {
+            Tok::Int(v) => Ok(Expr::Int(v, line)),
+            Tok::Float(v) => Ok(Expr::Float(v, line)),
+            Tok::True => Ok(Expr::Bool(true, line)),
+            Tok::False => Ok(Expr::Bool(false, line)),
+            Tok::None_ => Ok(Expr::NoneLit(line)),
+            Tok::Str(s) => Ok(Expr::Str(s, line)),
+            Tok::Name(n) => Ok(Expr::Name(n, line)),
+            Tok::Lambda => {
+                let mut params = Vec::new();
+                while !self.at(&Tok::Colon) {
+                    match self.bump().kind {
+                        Tok::Name(n) => params.push(n),
+                        other => return self.err(format!("expected lambda parameter, found {other:?}")),
+                    }
+                    if self.at(&Tok::Comma) {
+                        self.bump();
+                    }
+                }
+                self.expect(Tok::Colon)?;
+                let body = self.expr()?;
+                Ok(Expr::Lambda(params, Box::new(body), line))
+            }
+            Tok::LParen => {
+                if self.at(&Tok::RParen) {
+                    self.bump();
+                    return Ok(Expr::Tuple(Vec::new(), line));
+                }
+                let first = self.expr()?;
+                if self.at(&Tok::Comma) {
+                    let mut items = vec![first];
+                    while self.at(&Tok::Comma) {
+                        self.bump();
+                        if self.at(&Tok::RParen) {
+                            break;
+                        }
+                        items.push(self.expr()?);
+                    }
+                    self.expect(Tok::RParen)?;
+                    Ok(Expr::Tuple(items, line))
+                } else {
+                    self.expect(Tok::RParen)?;
+                    Ok(first)
+                }
+            }
+            Tok::LBracket => {
+                let mut items = Vec::new();
+                while !self.at(&Tok::RBracket) {
+                    items.push(self.expr()?);
+                    if self.at(&Tok::Comma) {
+                        self.bump();
+                    } else {
+                        break;
+                    }
+                }
+                self.expect(Tok::RBracket)?;
+                Ok(Expr::List(items, line))
+            }
+            other => {
+                self.pos -= 1;
+                self.err(format!("unexpected token {other:?} in expression"))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(src: &str) -> Vec<Stmt> {
+        parse_module(src).unwrap()
+    }
+
+    #[test]
+    fn simple_function() {
+        let m = parse("def f(x):\n    return x ** 3\n");
+        assert_eq!(m.len(), 1);
+        match &m[0] {
+            Stmt::FuncDef { name, params, body, .. } => {
+                assert_eq!(name, "f");
+                assert_eq!(params, &["x".to_string()]);
+                assert!(matches!(&body[0], Stmt::Return(Some(Expr::BinOp(BinOp::Pow, ..)), _)));
+            }
+            other => panic!("expected funcdef, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn precedence() {
+        let m = parse("x = 1 + 2 * 3 ** 2\n");
+        match &m[0] {
+            Stmt::Assign { value, .. } => match value {
+                Expr::BinOp(BinOp::Add, _, rhs, _) => match rhs.as_ref() {
+                    Expr::BinOp(BinOp::Mul, _, rhs2, _) => {
+                        assert!(matches!(rhs2.as_ref(), Expr::BinOp(BinOp::Pow, ..)));
+                    }
+                    other => panic!("expected mul, got {other:?}"),
+                },
+                other => panic!("expected add at top, got {other:?}"),
+            },
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn unary_minus_and_pow() {
+        // -x ** 2 parses as -(x ** 2) in Python
+        let m = parse("y = -x ** 2\n");
+        match &m[0] {
+            Stmt::Assign { value: Expr::Neg(inner, _), .. } => {
+                assert!(matches!(inner.as_ref(), Expr::BinOp(BinOp::Pow, ..)));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn if_elif_else() {
+        let m = parse("if a:\n    x = 1\nelif b:\n    x = 2\nelse:\n    x = 3\n");
+        match &m[0] {
+            Stmt::If { orelse, .. } => {
+                assert_eq!(orelse.len(), 1);
+                assert!(matches!(&orelse[0], Stmt::If { orelse: o2, .. } if o2.len() == 1));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn while_and_for() {
+        let m = parse("while x < 10:\n    x = x + 1\n");
+        assert!(matches!(&m[0], Stmt::While { .. }));
+        let m = parse("for i in range(10):\n    s = s + i\n");
+        assert!(matches!(&m[0], Stmt::ForRange { .. }));
+        assert!(parse_module("for x in items:\n    pass\n").is_err());
+    }
+
+    #[test]
+    fn destructuring_assignment() {
+        let m = parse("a, b = f(x)\n");
+        match &m[0] {
+            Stmt::Assign { targets, .. } => assert_eq!(targets, &["a".to_string(), "b".to_string()]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn mutation_rejected_with_targeted_errors() {
+        let e = parse_module("x += 1\n").unwrap_err();
+        assert!(e.message.contains("augmented assignment"), "{e}");
+        assert!(e.message.contains("forbids"), "{e}");
+        let e = parse_module("x[0] = 5\n").unwrap_err();
+        assert!(e.message.contains("index assignment"), "{e}");
+    }
+
+    #[test]
+    fn attribute_access_rejected() {
+        let e = parse_module("y = x.T\n").unwrap_err();
+        assert!(e.message.contains("attribute access"), "{e}");
+    }
+
+    #[test]
+    fn lambda_and_call() {
+        let m = parse("f = lambda x, y: x + y\nz = f(1, 2)\n");
+        assert!(matches!(&m[0], Stmt::Assign { value: Expr::Lambda(p, _, _), .. } if p.len() == 2));
+        assert!(matches!(&m[1], Stmt::Assign { value: Expr::Call(_, args, _), .. } if args.len() == 2));
+    }
+
+    #[test]
+    fn tuples_lists_indexing() {
+        let m = parse("t = (1, 2, 3)\nl = [1, 2]\nx = t[0]\ne = ()\n");
+        assert!(matches!(&m[0], Stmt::Assign { value: Expr::Tuple(v, _), .. } if v.len() == 3));
+        assert!(matches!(&m[1], Stmt::Assign { value: Expr::List(v, _), .. } if v.len() == 2));
+        assert!(matches!(&m[2], Stmt::Assign { value: Expr::Index(..), .. }));
+        assert!(matches!(&m[3], Stmt::Assign { value: Expr::Tuple(v, _), .. } if v.is_empty()));
+    }
+
+    #[test]
+    fn short_circuit_and_ternary() {
+        let m = parse("x = a and b or not c\ny = 1 if c else 2\n");
+        assert!(matches!(&m[0], Stmt::Assign { value: Expr::Or(..), .. }));
+        assert!(matches!(&m[1], Stmt::Assign { value: Expr::IfExp(..), .. }));
+    }
+
+    #[test]
+    fn nested_def() {
+        let m = parse("def f(x):\n    def g(y):\n        return y + x\n    return g(3)\n");
+        match &m[0] {
+            Stmt::FuncDef { body, .. } => {
+                assert!(matches!(&body[0], Stmt::FuncDef { name, .. } if name == "g"));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_block_rejected() {
+        assert!(parse_module("def f(x):\n    pass\n").is_ok());
+        assert!(parse_module("def f(x):\nreturn 1\n").is_err());
+    }
+
+    #[test]
+    fn matmul_operator() {
+        let m = parse("c = a @ b\n");
+        assert!(matches!(&m[0], Stmt::Assign { value: Expr::BinOp(BinOp::MatMul, ..), .. }));
+    }
+}

@@ -1,0 +1,130 @@
+//! Minimal property-based testing substrate.
+//!
+//! `proptest` is not available offline, so this module provides the subset we
+//! need: seeded generators, a case runner that reports the failing seed, and
+//! size-directed shrinking for integers. Properties over random *programs*
+//! (see `rust/tests/prop_random_programs.rs`) are the main client: they check
+//! that optimization preserves semantics and that ST-AD gradients agree with
+//! finite differences on arbitrarily generated expressions.
+
+use crate::tensor::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of random cases to execute.
+    pub cases: usize,
+    /// Base seed; case `i` uses `seed + i`.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `prop` against `cases` deterministic RNGs. Panics with the failing
+/// seed and message on the first failure so `cargo test` reports it.
+pub fn check(config: Config, mut prop: impl FnMut(&mut Rng) -> CaseResult) {
+    for i in 0..config.cases {
+        let seed = config.seed.wrapping_add(i as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed at case {i} (seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Like [`check`] with the default configuration.
+pub fn quickcheck(prop: impl FnMut(&mut Rng) -> CaseResult) {
+    check(Config::default(), prop)
+}
+
+/// Assert two f64s are within `tol`, with a helpful message.
+pub fn close(a: f64, b: f64, tol: f64, what: &str) -> CaseResult {
+    // Relative tolerance for large magnitudes, absolute for small.
+    let scale = 1.0_f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol}, scale {scale})"))
+    }
+}
+
+/// Shrink a failing integer input toward zero: returns the smallest value in
+/// `[0, bad]` that still fails `fails`.
+pub fn shrink_usize(bad: usize, mut fails: impl FnMut(usize) -> bool) -> usize {
+    let mut hi = bad; // known failing
+    let mut lo = 0usize; // known passing boundary candidate
+    if fails(0) {
+        return 0;
+    }
+    while lo + 1 < hi {
+        let mid = lo + (hi - lo) / 2;
+        if fails(mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    hi
+}
+
+/// Draw a random shape with rank in [0, max_rank] and dims in [1, max_dim].
+pub fn gen_shape(rng: &mut Rng, max_rank: usize, max_dim: usize) -> Vec<usize> {
+    let rank = rng.below(max_rank + 1);
+    (0..rank).map(|_| 1 + rng.below(max_dim)).collect()
+}
+
+/// Draw a random f64 in a well-conditioned range (avoids overflow in exp).
+pub fn gen_value(rng: &mut Rng) -> f64 {
+    rng.uniform_range(-2.0, 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivially() {
+        quickcheck(|rng| {
+            let x = gen_value(rng);
+            close(x + 0.0, x, 1e-12, "identity")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn check_reports_failure() {
+        check(Config { cases: 4, seed: 1 }, |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn shrink_finds_boundary() {
+        // Fails for values >= 37.
+        let min = shrink_usize(100, |x| x >= 37);
+        assert_eq!(min, 37);
+        // Fails everywhere.
+        assert_eq!(shrink_usize(10, |_| true), 0);
+    }
+
+    #[test]
+    fn shapes_are_bounded() {
+        let mut rng = Rng::new(9);
+        for _ in 0..100 {
+            let s = gen_shape(&mut rng, 3, 5);
+            assert!(s.len() <= 3);
+            assert!(s.iter().all(|&d| (1..=5).contains(&d)));
+        }
+    }
+
+    #[test]
+    fn close_is_relative() {
+        assert!(close(1e9, 1e9 + 1.0, 1e-6, "big").is_ok());
+        assert!(close(1.0, 1.1, 1e-6, "small").is_err());
+    }
+}

@@ -1,0 +1,144 @@
+//! Typed access to the JAX/Pallas AOT artifacts.
+//!
+//! `make artifacts` (the only step that runs Python) produces
+//! `artifacts/*.hlo.txt` plus `meta.json`; this module loads them into
+//! compiled executables and exposes the MLP operations with Rust-native
+//! signatures. Used by `examples/train_mlp` as (a) the compiled-framework
+//! baseline of E3 and (b) the gradient cross-check oracle for our own
+//! J-transform.
+
+use super::{LoadedExec, XlaRuntime};
+use crate::tensor::{DType, Tensor};
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Model dimensions shared with `python/compile/model.py`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MlpMeta {
+    pub batch: usize,
+    pub in_dim: usize,
+    pub h1: usize,
+    pub h2: usize,
+    pub out_dim: usize,
+    pub lr: f64,
+}
+
+/// Extract `"key": <number>` from a flat JSON object (serde is not in the
+/// offline crate set; meta.json is machine-generated and flat).
+fn json_number(text: &str, key: &str) -> Result<f64> {
+    let pat = format!("\"{key}\":");
+    let start = text
+        .find(&pat)
+        .ok_or_else(|| anyhow!("key `{key}` not found in meta.json"))?
+        + pat.len();
+    let rest = text[start..].trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == 'e' || c == 'E' || c == '+'))
+        .unwrap_or(rest.len());
+    rest[..end]
+        .parse::<f64>()
+        .map_err(|e| anyhow!("bad number for `{key}`: {e}"))
+}
+
+impl MlpMeta {
+    pub fn load(dir: &Path) -> Result<MlpMeta> {
+        let text = std::fs::read_to_string(dir.join("meta.json"))
+            .with_context(|| format!("reading {}/meta.json — run `make artifacts`", dir.display()))?;
+        Ok(MlpMeta {
+            batch: json_number(&text, "batch")? as usize,
+            in_dim: json_number(&text, "in_dim")? as usize,
+            h1: json_number(&text, "h1")? as usize,
+            h2: json_number(&text, "h2")? as usize,
+            out_dim: json_number(&text, "out_dim")? as usize,
+            lr: json_number(&text, "lr")?,
+        })
+    }
+
+    /// Parameter shapes in call order (w1, b1, w2, b2, w3, b3).
+    pub fn param_shapes(&self) -> Vec<Vec<usize>> {
+        vec![
+            vec![self.in_dim, self.h1],
+            vec![self.h1],
+            vec![self.h1, self.h2],
+            vec![self.h2],
+            vec![self.h2, self.out_dim],
+            vec![self.out_dim],
+        ]
+    }
+
+    /// Deterministic f32 parameter init matching the artifact shapes
+    /// (values differ from the Python init; both sides train fine).
+    pub fn init_params(&self, seed: u64) -> Vec<Tensor> {
+        let mut rng = crate::tensor::Rng::new(seed);
+        self.param_shapes()
+            .into_iter()
+            .map(|shape| {
+                let fan_in = shape[0].max(1) as f64;
+                let scale = if shape.len() == 2 { 1.0 / fan_in.sqrt() } else { 0.0 };
+                rng.normal_tensor(&shape, scale).cast(DType::F32)
+            })
+            .collect()
+    }
+}
+
+/// The loaded MLP artifact set.
+pub struct MlpArtifacts {
+    pub meta: MlpMeta,
+    pub forward: LoadedExec,
+    pub loss: LoadedExec,
+    pub grads: LoadedExec,
+    pub train_step: LoadedExec,
+}
+
+impl MlpArtifacts {
+    /// Load every artifact from `dir` (default `artifacts/`).
+    pub fn load(runtime: &XlaRuntime, dir: impl Into<PathBuf>) -> Result<MlpArtifacts> {
+        let dir: PathBuf = dir.into();
+        Ok(MlpArtifacts {
+            meta: MlpMeta::load(&dir)?,
+            forward: runtime.load_hlo_text(dir.join("mlp_forward.hlo.txt"))?,
+            loss: runtime.load_hlo_text(dir.join("mlp_loss.hlo.txt"))?,
+            grads: runtime.load_hlo_text(dir.join("mlp_grads.hlo.txt"))?,
+            train_step: runtime.load_hlo_text(dir.join("mlp_train_step.hlo.txt"))?,
+        })
+    }
+
+    /// One SGD step: (params, x, y_onehot) → (loss, new params).
+    pub fn step(&self, params: &[Tensor], x: &Tensor, y: &Tensor) -> Result<(f64, Vec<Tensor>)> {
+        let mut args: Vec<Tensor> = params.to_vec();
+        args.push(x.cast(DType::F32));
+        args.push(y.cast(DType::F32));
+        let outs = self.train_step.run(&args)?;
+        let loss = outs[0].item().map_err(|e| anyhow!("{e}"))?;
+        Ok((loss, outs[1..].to_vec()))
+    }
+
+    /// Loss and parameter gradients (the cross-check oracle).
+    pub fn loss_and_grads(
+        &self,
+        params: &[Tensor],
+        x: &Tensor,
+        y: &Tensor,
+    ) -> Result<(f64, Vec<Tensor>)> {
+        let mut args: Vec<Tensor> = params.to_vec();
+        args.push(x.cast(DType::F32));
+        args.push(y.cast(DType::F32));
+        let outs = self.grads.run(&args)?;
+        let loss = outs[0].item().map_err(|e| anyhow!("{e}"))?;
+        Ok((loss, outs[1..].to_vec()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_number_extraction() {
+        let text = r#"{ "batch": 32, "lr": 0.05, "neg": -3 }"#;
+        assert_eq!(json_number(text, "batch").unwrap(), 32.0);
+        assert_eq!(json_number(text, "lr").unwrap(), 0.05);
+        assert_eq!(json_number(text, "neg").unwrap(), -3.0);
+        assert!(json_number(text, "missing").is_err());
+    }
+}

@@ -1,0 +1,207 @@
+//! XLA/PJRT runtime (the execution half of the paper's backend story).
+//!
+//! Wraps the `xla` crate: a PJRT CPU client that (a) loads AOT artifacts
+//! produced by the JAX/Pallas build path (`artifacts/*.hlo.txt`, HLO *text*
+//! because jax ≥ 0.5 emits protos with 64-bit ids that xla_extension 0.5.1
+//! rejects), and (b) compiles `XlaComputation`s built at runtime by the
+//! segment backend. Python never runs on this path — the artifacts are
+//! self-contained.
+
+pub mod artifacts;
+
+use crate::tensor::{Buffer, DType, Tensor};
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
+
+/// A PJRT client plus compile/execute helpers.
+pub struct XlaRuntime {
+    pub client: xla::PjRtClient,
+}
+
+/// A compiled executable ready to run.
+pub struct LoadedExec {
+    exe: xla::PjRtLoadedExecutable,
+    /// Whether the program returns a 1-tuple that should be unwrapped
+    /// (jax lowers with `return_tuple=True`).
+    pub unwrap_tuple: bool,
+}
+
+impl XlaRuntime {
+    /// Create a CPU runtime.
+    pub fn cpu() -> Result<XlaRuntime> {
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        Ok(XlaRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact (the jax AOT interchange format).
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<LoadedExec> {
+        let path = path.as_ref();
+        if !path.exists() {
+            bail!(
+                "artifact {} not found — run `make artifacts` first (builds the \
+                 jax/pallas AOT outputs)",
+                path.display()
+            );
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(wrap)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(wrap)?;
+        Ok(LoadedExec { exe, unwrap_tuple: true })
+    }
+
+    /// Compile a computation built with `XlaBuilder` (segment backend).
+    pub fn compile(&self, comp: &xla::XlaComputation) -> Result<LoadedExec> {
+        let exe = self.client.compile(comp).map_err(wrap)?;
+        Ok(LoadedExec { exe, unwrap_tuple: false })
+    }
+}
+
+impl LoadedExec {
+    /// Execute on tensors; returns the output tensors (a tuple output is
+    /// decomposed into its elements).
+    pub fn run(&self, args: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> =
+            args.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals).map_err(wrap)?;
+        let mut out = result[0][0].to_literal_sync().map_err(wrap)?;
+        // Decompose tuple outputs.
+        let shape = out.shape().map_err(wrap)?;
+        if shape.is_tuple() {
+            let parts = out.decompose_tuple().map_err(wrap)?;
+            parts.iter().map(literal_to_tensor).collect()
+        } else {
+            Ok(vec![literal_to_tensor(&out)?])
+        }
+    }
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+/// Convert a tensor into an XLA literal (host → device format).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<usize> = t.shape().to_vec();
+    let lit = match t.buffer() {
+        Buffer::F32(v) => xla::Literal::vec1(v),
+        Buffer::F64(v) => xla::Literal::vec1(v),
+        Buffer::I64(v) => xla::Literal::vec1(v),
+        Buffer::Bool(v) => {
+            // Pred literals: go through i64 then convert.
+            let iv: Vec<i64> = v.iter().map(|&b| b as i64).collect();
+            let l = xla::Literal::vec1(&iv);
+            l.convert(xla::PrimitiveType::Pred).map_err(wrap)?
+        }
+    };
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims_i64).map_err(wrap)
+}
+
+/// Convert an XLA literal back into a tensor.
+pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape().map_err(wrap)?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let ty = l.ty().map_err(wrap)?;
+    let tensor = match ty {
+        xla::ElementType::F32 => {
+            Tensor::from_f32_shaped(l.to_vec::<f32>().map_err(wrap)?, dims)
+        }
+        xla::ElementType::F64 => {
+            Tensor::from_f64_shaped(l.to_vec::<f64>().map_err(wrap)?, dims)
+        }
+        xla::ElementType::S64 => {
+            Tensor::from_i64_shaped(l.to_vec::<i64>().map_err(wrap)?, dims)
+        }
+        xla::ElementType::Pred => {
+            let conv = l.convert(xla::PrimitiveType::S64).map_err(wrap)?;
+            let t = Tensor::from_i64_shaped(conv.to_vec::<i64>().map_err(wrap)?, dims)
+                .map_err(|e| anyhow!("{e}"))?;
+            return Ok(t.cast(DType::Bool));
+        }
+        other => bail!("unsupported literal element type {other:?}"),
+    };
+    tensor.map_err(|e| anyhow!("{e}"))
+}
+
+/// XLA primitive type for a tensor dtype.
+pub fn dtype_to_prim(d: DType) -> xla::PrimitiveType {
+    match d {
+        DType::F32 => xla::PrimitiveType::F32,
+        DType::F64 => xla::PrimitiveType::F64,
+        DType::I64 => xla::PrimitiveType::S64,
+        DType::Bool => xla::PrimitiveType::Pred,
+    }
+}
+
+/// XLA element type for a tensor dtype (builder-side shapes).
+pub fn dtype_to_elem(d: DType) -> xla::ElementType {
+    match d {
+        DType::F32 => xla::ElementType::F32,
+        DType::F64 => xla::ElementType::F64,
+        DType::I64 => xla::ElementType::S64,
+        DType::Bool => xla::ElementType::Pred,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f64() {
+        let t = Tensor::from_f64_shaped(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]).unwrap();
+        let l = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&l).unwrap();
+        assert_eq!(back.shape(), &[2, 3]);
+        assert_eq!(back.as_f64_vec(), t.as_f64_vec());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32_i64() {
+        let t = Tensor::from_f32(&[1.5, -2.5]);
+        let back = literal_to_tensor(&tensor_to_literal(&t).unwrap()).unwrap();
+        assert_eq!(back.dtype(), DType::F32);
+        assert_eq!(back.as_f64_vec(), vec![1.5, -2.5]);
+        let t = Tensor::from_i64_shaped(vec![7, -9], vec![2]).unwrap();
+        let back = literal_to_tensor(&tensor_to_literal(&t).unwrap()).unwrap();
+        assert_eq!(back.dtype(), DType::I64);
+        assert_eq!(back.as_f64_vec(), vec![7.0, -9.0]);
+    }
+
+    #[test]
+    fn cpu_client_builds_and_runs() {
+        let rt = XlaRuntime::cpu().unwrap();
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+        // (x + y) * 2 over f64[3]
+        let builder = xla::XlaBuilder::new("test");
+        let shape = xla::Shape::array::<f64>(vec![3]);
+        let x = builder.parameter_s(0, &shape, "x").unwrap();
+        let y = builder.parameter_s(1, &shape, "y").unwrap();
+        let two = builder.c0(2f64).unwrap();
+        let sum = (x + y).unwrap();
+        let prod = sum.mul_(&two.broadcast(&[3]).unwrap()).unwrap();
+        let comp = prod.build().unwrap();
+        let exe = rt.compile(&comp).unwrap();
+        let a = Tensor::from_f64(&[1.0, 2.0, 3.0]);
+        let b = Tensor::from_f64(&[10.0, 20.0, 30.0]);
+        let out = exe.run(&[a, b]).unwrap();
+        assert_eq!(out[0].as_f64_vec(), vec![22.0, 44.0, 66.0]);
+    }
+
+    #[test]
+    fn missing_artifact_reports_make_hint() {
+        let rt = XlaRuntime::cpu().unwrap();
+        let e = match rt.load_hlo_text("/nonexistent/model.hlo.txt") {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(format!("{e}").contains("make artifacts"), "{e}");
+    }
+}

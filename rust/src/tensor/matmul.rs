@@ -1,0 +1,124 @@
+//! Blocked matrix multiplication.
+//!
+//! The interpreter's fallback matmul kernel — used when the XLA backend is
+//! disabled or unavailable. Row-major `ikj` loop order with a fixed j-block
+//! keeps the inner loop vectorizable by LLVM; this is not MKL, but it is the
+//! honest CPU baseline the paper's VM-vs-compiled comparisons need.
+
+use super::{terr, Buffer, DType, TResult, Tensor};
+
+/// Matrix product. Supports `[m,k] @ [k,n]`, `[k] @ [k,n]`, `[m,k] @ [k]`
+/// and `[k] @ [k]` (dot product), mirroring NumPy's `matmul` for ranks <= 2.
+pub fn matmul(a: &Tensor, b: &Tensor) -> TResult<Tensor> {
+    let (av, bv) = (a.as_f64_vec(), b.as_f64_vec());
+    let (m, k1, lifted_a) = match a.rank() {
+        1 => (1, a.shape()[0], true),
+        2 => (a.shape()[0], a.shape()[1], false),
+        r => return terr(format!("matmul lhs rank {r} unsupported (must be 1 or 2)")),
+    };
+    let (k2, n, lifted_b) = match b.rank() {
+        1 => (b.shape()[0], 1, true),
+        2 => (b.shape()[0], b.shape()[1], false),
+        r => return terr(format!("matmul rhs rank {r} unsupported (must be 1 or 2)")),
+    };
+    if k1 != k2 {
+        return terr(format!(
+            "matmul inner dimension mismatch: {:?} @ {:?}",
+            a.shape(),
+            b.shape()
+        ));
+    }
+    let out = matmul_f64(&av, &bv, m, k1, n);
+    let mut shape = Vec::new();
+    if !lifted_a {
+        shape.push(m);
+    }
+    if !lifted_b {
+        shape.push(n);
+    }
+    let buf = if a.dtype() == DType::F32 && b.dtype() == DType::F32 {
+        Buffer::F32(out.into_iter().map(|x| x as f32).collect())
+    } else {
+        Buffer::F64(out)
+    };
+    Tensor::new(shape, buf)
+}
+
+/// Dense `m×k @ k×n` in f64, ikj order.
+pub fn matmul_f64(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let mut out = vec![0.0f64; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, &ap) in arow.iter().enumerate() {
+            if ap == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += ap * bv;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: &[f64], s: &[usize]) -> Tensor {
+        Tensor::from_f64_shaped(v.to_vec(), s.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn mat_mat() {
+        let a = t(&[1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let b = t(&[1.0, 1.0, 1.0, 1.0], &[2, 2]);
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.shape(), &[2, 2]);
+        assert_eq!(c.as_f64_vec(), vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn rectangular() {
+        let a = t(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let b = t(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[3, 2]);
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.shape(), &[2, 2]);
+        assert_eq!(c.as_f64_vec(), vec![22.0, 28.0, 49.0, 64.0]);
+    }
+
+    #[test]
+    fn vec_mat_and_mat_vec() {
+        let v = t(&[1.0, 2.0], &[2]);
+        let m = t(&[1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let vm = matmul(&v, &m).unwrap();
+        assert_eq!(vm.shape(), &[2]);
+        assert_eq!(vm.as_f64_vec(), vec![7.0, 10.0]);
+        let mv = matmul(&m, &v).unwrap();
+        assert_eq!(mv.shape(), &[2]);
+        assert_eq!(mv.as_f64_vec(), vec![5.0, 11.0]);
+        let dot = matmul(&v, &v).unwrap();
+        assert_eq!(dot.rank(), 0);
+        assert_eq!(dot.item().unwrap(), 5.0);
+    }
+
+    #[test]
+    fn mismatch_rejected() {
+        let a = t(&[1.0, 2.0], &[1, 2]);
+        let b = t(&[1.0, 2.0, 3.0], &[3, 1]);
+        assert!(matmul(&a, &b).is_err());
+        let hi = Tensor::zeros(DType::F64, &[2, 2, 2]);
+        assert!(matmul(&hi, &a).is_err());
+    }
+
+    #[test]
+    fn f32_preserved() {
+        let a = Tensor::from_f32(&[1.0, 2.0]).reshape(&[1, 2]).unwrap();
+        let b = Tensor::from_f32(&[3.0, 4.0]).reshape(&[2, 1]).unwrap();
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.dtype(), DType::F32);
+        assert_eq!(c.as_f64_vec(), vec![11.0]);
+    }
+}

@@ -1,0 +1,461 @@
+//! Dense tensor substrate.
+//!
+//! The paper's IR manipulates array values whose kernels are supplied by a
+//! backend; this module is the reference CPU implementation of those values:
+//! contiguous row-major tensors over f32/f64/i64/bool with broadcasting,
+//! matmul, reductions and an xorshift RNG. Buffers are reference-counted so
+//! cloning a tensor is O(1) — the language is purely functional (§3), so
+//! values are never mutated in place once shared.
+
+pub mod rng;
+pub mod ops;
+pub mod matmul;
+
+pub use matmul::matmul;
+pub use ops::*;
+pub use rng::Rng;
+
+use std::fmt;
+use std::sync::Arc;
+
+/// Element dtype of a [`Tensor`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F64,
+    I64,
+    Bool,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    pub fn size_of(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::F64 => 8,
+            DType::I64 => 8,
+            DType::Bool => 1,
+        }
+    }
+
+    /// True for floating-point dtypes.
+    pub fn is_float(self) -> bool {
+        matches!(self, DType::F32 | DType::F64)
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+            DType::I64 => "i64",
+            DType::Bool => "bool",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Type-erased contiguous buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Buffer {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I64(Vec<i64>),
+    Bool(Vec<bool>),
+}
+
+impl Buffer {
+    pub fn len(&self) -> usize {
+        match self {
+            Buffer::F32(v) => v.len(),
+            Buffer::F64(v) => v.len(),
+            Buffer::I64(v) => v.len(),
+            Buffer::Bool(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Buffer::F32(_) => DType::F32,
+            Buffer::F64(_) => DType::F64,
+            Buffer::I64(_) => DType::I64,
+            Buffer::Bool(_) => DType::Bool,
+        }
+    }
+}
+
+/// A dense, contiguous, row-major tensor. Cheap to clone (shared buffer).
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Arc<Buffer>,
+}
+
+/// Errors raised by tensor operations; surfaced to the interpreter as
+/// runtime errors and to the type checker as shape errors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorError(pub String);
+
+impl fmt::Display for TensorError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "tensor error: {}", self.0)
+    }
+}
+
+impl std::error::Error for TensorError {}
+
+impl std::fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}<{}>", self.shape, self.dtype())?;
+        if self.numel() <= 16 {
+            write!(f, " {}", self.to_display_string())
+        } else {
+            write!(f, " [..{} elements..]", self.numel())
+        }
+    }
+}
+
+pub type TResult<T> = std::result::Result<T, TensorError>;
+
+pub(crate) fn terr<T>(msg: impl Into<String>) -> TResult<T> {
+    Err(TensorError(msg.into()))
+}
+
+impl Tensor {
+    /// Build a tensor from a shape and a buffer; the buffer length must equal
+    /// the product of the shape.
+    pub fn new(shape: Vec<usize>, data: Buffer) -> TResult<Tensor> {
+        let numel: usize = shape.iter().product();
+        if data.len() != numel {
+            return terr(format!(
+                "buffer length {} does not match shape {:?} ({} elements)",
+                data.len(),
+                shape,
+                numel
+            ));
+        }
+        Ok(Tensor { shape, data: Arc::new(data) })
+    }
+
+    /// 1-D f64 tensor from a slice.
+    pub fn from_f64(values: &[f64]) -> Tensor {
+        Tensor { shape: vec![values.len()], data: Arc::new(Buffer::F64(values.to_vec())) }
+    }
+
+    /// 1-D f32 tensor from a slice.
+    pub fn from_f32(values: &[f32]) -> Tensor {
+        Tensor { shape: vec![values.len()], data: Arc::new(Buffer::F32(values.to_vec())) }
+    }
+
+    /// f64 tensor with an explicit shape.
+    pub fn from_f64_shaped(values: Vec<f64>, shape: Vec<usize>) -> TResult<Tensor> {
+        Tensor::new(shape, Buffer::F64(values))
+    }
+
+    /// f32 tensor with an explicit shape.
+    pub fn from_f32_shaped(values: Vec<f32>, shape: Vec<usize>) -> TResult<Tensor> {
+        Tensor::new(shape, Buffer::F32(values))
+    }
+
+    /// i64 tensor with an explicit shape.
+    pub fn from_i64_shaped(values: Vec<i64>, shape: Vec<usize>) -> TResult<Tensor> {
+        Tensor::new(shape, Buffer::I64(values))
+    }
+
+    /// Rank-0 (scalar) tensor.
+    pub fn scalar_f64(v: f64) -> Tensor {
+        Tensor { shape: vec![], data: Arc::new(Buffer::F64(vec![v])) }
+    }
+
+    /// All-zeros tensor of the given dtype and shape.
+    pub fn zeros(dtype: DType, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        let data = match dtype {
+            DType::F32 => Buffer::F32(vec![0.0; n]),
+            DType::F64 => Buffer::F64(vec![0.0; n]),
+            DType::I64 => Buffer::I64(vec![0; n]),
+            DType::Bool => Buffer::Bool(vec![false; n]),
+        };
+        Tensor { shape: shape.to_vec(), data: Arc::new(data) }
+    }
+
+    /// All-ones tensor of the given dtype and shape.
+    pub fn ones(dtype: DType, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        let data = match dtype {
+            DType::F32 => Buffer::F32(vec![1.0; n]),
+            DType::F64 => Buffer::F64(vec![1.0; n]),
+            DType::I64 => Buffer::I64(vec![1; n]),
+            DType::Bool => Buffer::Bool(vec![true; n]),
+        };
+        Tensor { shape: shape.to_vec(), data: Arc::new(data) }
+    }
+
+    /// Tensor filled with a constant f64 value (dtype F64).
+    pub fn full(shape: &[usize], v: f64) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: Arc::new(Buffer::F64(vec![v; n])) }
+    }
+
+    /// `[0, 1, ..., n-1]` as i64.
+    pub fn arange(n: usize) -> Tensor {
+        Tensor {
+            shape: vec![n],
+            data: Arc::new(Buffer::I64((0..n as i64).collect())),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.data.dtype()
+    }
+
+    pub fn buffer(&self) -> &Buffer {
+        &self.data
+    }
+
+    /// Bytes occupied by the element buffer.
+    pub fn nbytes(&self) -> usize {
+        self.numel() * self.dtype().size_of()
+    }
+
+    /// View the buffer as f64, converting if necessary.
+    pub fn as_f64_vec(&self) -> Vec<f64> {
+        match &*self.data {
+            Buffer::F64(v) => v.clone(),
+            Buffer::F32(v) => v.iter().map(|&x| x as f64).collect(),
+            Buffer::I64(v) => v.iter().map(|&x| x as f64).collect(),
+            Buffer::Bool(v) => v.iter().map(|&x| if x { 1.0 } else { 0.0 }).collect(),
+        }
+    }
+
+    /// View the buffer as f32, converting if necessary.
+    pub fn as_f32_vec(&self) -> Vec<f32> {
+        match &*self.data {
+            Buffer::F32(v) => v.clone(),
+            Buffer::F64(v) => v.iter().map(|&x| x as f32).collect(),
+            Buffer::I64(v) => v.iter().map(|&x| x as f32).collect(),
+            Buffer::Bool(v) => v.iter().map(|&x| if x { 1.0 } else { 0.0 }).collect(),
+        }
+    }
+
+    /// Borrow the raw f64 slice; panics if the dtype is not F64.
+    pub fn f64_slice(&self) -> &[f64] {
+        match &*self.data {
+            Buffer::F64(v) => v,
+            other => panic!("expected f64 tensor, got {}", other.dtype()),
+        }
+    }
+
+    /// Borrow the raw f32 slice; panics if the dtype is not F32.
+    pub fn f32_slice(&self) -> &[f32] {
+        match &*self.data {
+            Buffer::F32(v) => v,
+            other => panic!("expected f32 tensor, got {}", other.dtype()),
+        }
+    }
+
+    /// Extract a scalar (rank-0 or single-element) as f64.
+    pub fn item(&self) -> TResult<f64> {
+        if self.numel() != 1 {
+            return terr(format!("item() on tensor with {} elements", self.numel()));
+        }
+        Ok(self.as_f64_vec()[0])
+    }
+
+    /// Cast to another dtype (copies unless identical dtype).
+    pub fn cast(&self, dtype: DType) -> Tensor {
+        if self.dtype() == dtype {
+            return self.clone();
+        }
+        let data = match dtype {
+            DType::F32 => Buffer::F32(self.as_f32_vec()),
+            DType::F64 => Buffer::F64(self.as_f64_vec()),
+            DType::I64 => Buffer::I64(match &*self.data {
+                Buffer::F32(v) => v.iter().map(|&x| x as i64).collect(),
+                Buffer::F64(v) => v.iter().map(|&x| x as i64).collect(),
+                Buffer::I64(v) => v.clone(),
+                Buffer::Bool(v) => v.iter().map(|&x| x as i64).collect(),
+            }),
+            DType::Bool => Buffer::Bool(match &*self.data {
+                Buffer::F32(v) => v.iter().map(|&x| x != 0.0).collect(),
+                Buffer::F64(v) => v.iter().map(|&x| x != 0.0).collect(),
+                Buffer::I64(v) => v.iter().map(|&x| x != 0).collect(),
+                Buffer::Bool(v) => v.clone(),
+            }),
+        };
+        Tensor { shape: self.shape.clone(), data: Arc::new(data) }
+    }
+
+    /// Reshape to a new shape with the same element count.
+    pub fn reshape(&self, shape: &[usize]) -> TResult<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.numel() {
+            return terr(format!(
+                "cannot reshape {:?} ({} elements) to {:?} ({} elements)",
+                self.shape,
+                self.numel(),
+                shape,
+                n
+            ));
+        }
+        Ok(Tensor { shape: shape.to_vec(), data: self.data.clone() })
+    }
+
+    /// Row-major strides for this tensor's shape.
+    pub fn strides(&self) -> Vec<usize> {
+        strides_for(&self.shape)
+    }
+
+    /// Human-readable value rendering (used by Debug and the REPL printer).
+    pub fn to_display_string(&self) -> String {
+        fn fmt_rec(vals: &[f64], shape: &[usize], out: &mut String) {
+            if shape.is_empty() {
+                out.push_str(&format!("{}", vals[0]));
+                return;
+            }
+            out.push('[');
+            let inner: usize = shape[1..].iter().product();
+            for i in 0..shape[0] {
+                if i > 0 {
+                    out.push_str(", ");
+                }
+                fmt_rec(&vals[i * inner..(i + 1) * inner], &shape[1..], out);
+            }
+            out.push(']');
+        }
+        let mut out = String::new();
+        fmt_rec(&self.as_f64_vec(), &self.shape, &mut out);
+        out
+    }
+
+    /// Maximum absolute difference against another tensor (must be the same
+    /// shape); used pervasively by tests.
+    pub fn max_abs_diff(&self, other: &Tensor) -> TResult<f64> {
+        if self.shape != other.shape {
+            return terr(format!(
+                "max_abs_diff shape mismatch: {:?} vs {:?}",
+                self.shape, other.shape
+            ));
+        }
+        let a = self.as_f64_vec();
+        let b = other.as_f64_vec();
+        Ok(a.iter()
+            .zip(b.iter())
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f64::max))
+    }
+
+    /// True if all elements are within `tol` of `other`.
+    pub fn allclose(&self, other: &Tensor, tol: f64) -> bool {
+        self.shape == other.shape && self.max_abs_diff(other).map(|d| d <= tol).unwrap_or(false)
+    }
+}
+
+/// Row-major strides for a shape.
+pub fn strides_for(shape: &[usize]) -> Vec<usize> {
+    let mut strides = vec![1; shape.len()];
+    for i in (0..shape.len().saturating_sub(1)).rev() {
+        strides[i] = strides[i + 1] * shape[i + 1];
+    }
+    strides
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_shape() {
+        let t = Tensor::from_f64_shaped(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]).unwrap();
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.dtype(), DType::F64);
+        assert_eq!(t.rank(), 2);
+        assert_eq!(t.nbytes(), 48);
+    }
+
+    #[test]
+    fn bad_shape_rejected() {
+        assert!(Tensor::from_f64_shaped(vec![1.0, 2.0], vec![3]).is_err());
+    }
+
+    #[test]
+    fn zeros_ones_full() {
+        assert_eq!(Tensor::zeros(DType::F64, &[2, 2]).as_f64_vec(), vec![0.0; 4]);
+        assert_eq!(Tensor::ones(DType::F32, &[3]).as_f32_vec(), vec![1.0; 3]);
+        assert_eq!(Tensor::full(&[2], 7.5).as_f64_vec(), vec![7.5, 7.5]);
+        assert_eq!(Tensor::ones(DType::I64, &[2]).as_f64_vec(), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn scalar_item() {
+        let s = Tensor::scalar_f64(3.25);
+        assert_eq!(s.rank(), 0);
+        assert_eq!(s.item().unwrap(), 3.25);
+        assert!(Tensor::from_f64(&[1.0, 2.0]).item().is_err());
+    }
+
+    #[test]
+    fn reshape_shares_buffer() {
+        let t = Tensor::from_f64(&[1.0, 2.0, 3.0, 4.0]);
+        let r = t.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.shape(), &[2, 2]);
+        assert_eq!(r.as_f64_vec(), t.as_f64_vec());
+        assert!(t.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn cast_roundtrip() {
+        let t = Tensor::from_f64(&[1.5, -2.0, 0.0]);
+        let f32t = t.cast(DType::F32);
+        assert_eq!(f32t.dtype(), DType::F32);
+        assert_eq!(f32t.as_f64_vec(), vec![1.5, -2.0, 0.0]);
+        let b = t.cast(DType::Bool);
+        assert_eq!(b.as_f64_vec(), vec![1.0, 1.0, 0.0]);
+        let i = t.cast(DType::I64);
+        assert_eq!(i.as_f64_vec(), vec![1.0, -2.0, 0.0]);
+    }
+
+    #[test]
+    fn strides() {
+        assert_eq!(strides_for(&[2, 3, 4]), vec![12, 4, 1]);
+        assert_eq!(strides_for(&[]), Vec::<usize>::new());
+        let t = Tensor::zeros(DType::F64, &[2, 5]);
+        assert_eq!(t.strides(), vec![5, 1]);
+    }
+
+    #[test]
+    fn arange_and_display() {
+        let t = Tensor::arange(4);
+        assert_eq!(t.dtype(), DType::I64);
+        assert_eq!(t.as_f64_vec(), vec![0.0, 1.0, 2.0, 3.0]);
+        let m = Tensor::from_f64_shaped(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]).unwrap();
+        assert_eq!(m.to_display_string(), "[[1, 2], [3, 4]]");
+    }
+
+    #[test]
+    fn allclose_and_diff() {
+        let a = Tensor::from_f64(&[1.0, 2.0]);
+        let b = Tensor::from_f64(&[1.0, 2.0 + 1e-9]);
+        assert!(a.allclose(&b, 1e-8));
+        assert!(!a.allclose(&b, 1e-10));
+        assert!(a.max_abs_diff(&Tensor::from_f64(&[1.0])).is_err());
+    }
+}

@@ -1,0 +1,605 @@
+//! Elementwise operations, broadcasting, reductions and shape manipulation.
+//!
+//! All binary elementwise ops use NumPy broadcasting semantics (§2: the IR's
+//! array primitives mirror the array-programming model of NumPy). Gradient
+//! support requires the inverse of broadcasting — [`sum_to`] — which reduces
+//! a tensor back down to a target shape by summing the broadcast axes; it is
+//! the backpropagator of `broadcast_to` and of implicit broadcasting in
+//! binary ops.
+
+use super::{strides_for, terr, Buffer, DType, TResult, Tensor};
+
+
+/// Broadcast two shapes together (NumPy rules).
+pub fn broadcast_shapes(a: &[usize], b: &[usize]) -> TResult<Vec<usize>> {
+    let rank = a.len().max(b.len());
+    let mut out = vec![0; rank];
+    for i in 0..rank {
+        let da = if i < rank - a.len() { 1 } else { a[i - (rank - a.len())] };
+        let db = if i < rank - b.len() { 1 } else { b[i - (rank - b.len())] };
+        out[i] = if da == db {
+            da
+        } else if da == 1 {
+            db
+        } else if db == 1 {
+            da
+        } else {
+            return terr(format!("cannot broadcast shapes {a:?} and {b:?}"));
+        };
+    }
+    Ok(out)
+}
+
+/// Iterate the flat index of a (possibly broadcast) operand for each output
+/// position. `shape` is the operand's own shape, `out_shape` the broadcast
+/// result shape.
+fn broadcast_index_map(shape: &[usize], out_shape: &[usize]) -> Vec<usize> {
+    let out_strides = strides_for(out_shape);
+    let in_strides = strides_for(shape);
+    let offset = out_shape.len() - shape.len();
+    let numel: usize = out_shape.iter().product();
+    let mut map = Vec::with_capacity(numel);
+    for flat in 0..numel {
+        let mut idx = 0usize;
+        for (d, &os) in out_strides.iter().enumerate() {
+            let coord = (flat / os) % out_shape[d];
+            if d >= offset && shape[d - offset] != 1 {
+                idx += coord * in_strides[d - offset];
+            }
+        }
+        map.push(idx);
+    }
+    map
+}
+
+/// Result dtype of a binary arithmetic op.
+fn promote(a: DType, b: DType) -> DType {
+    use DType::*;
+    match (a, b) {
+        (F64, _) | (_, F64) => F64,
+        (F32, _) | (_, F32) => F32,
+        (I64, _) | (_, I64) => I64,
+        _ => Bool,
+    }
+}
+
+/// Apply a binary f64 function elementwise with broadcasting. Output dtype is
+/// the promotion of the operand dtypes (or `force_dtype` if given).
+pub fn binary_op(
+    a: &Tensor,
+    b: &Tensor,
+    f: impl Fn(f64, f64) -> f64,
+    force_dtype: Option<DType>,
+) -> TResult<Tensor> {
+    let out_shape = broadcast_shapes(a.shape(), b.shape())?;
+    let dtype = force_dtype.unwrap_or_else(|| promote(a.dtype(), b.dtype()));
+    let numel: usize = out_shape.iter().product();
+    let av = a.as_f64_vec();
+    let bv = b.as_f64_vec();
+
+    // Fast paths: same shape (no index mapping), or scalar operand.
+    let out: Vec<f64> = if a.shape() == b.shape() {
+        av.iter().zip(bv.iter()).map(|(&x, &y)| f(x, y)).collect()
+    } else if a.numel() == 1 {
+        let x = av[0];
+        let bmap = broadcast_index_map(b.shape(), &out_shape);
+        bmap.iter().map(|&j| f(x, bv[j])).collect()
+    } else if b.numel() == 1 {
+        let y = bv[0];
+        let amap = broadcast_index_map(a.shape(), &out_shape);
+        amap.iter().map(|&i| f(av[i], y)).collect()
+    } else {
+        let amap = broadcast_index_map(a.shape(), &out_shape);
+        let bmap = broadcast_index_map(b.shape(), &out_shape);
+        (0..numel).map(|k| f(av[amap[k]], bv[bmap[k]])).collect()
+    };
+
+    let buf = match dtype {
+        DType::F64 => Buffer::F64(out),
+        DType::F32 => Buffer::F32(out.into_iter().map(|x| x as f32).collect()),
+        DType::I64 => Buffer::I64(out.into_iter().map(|x| x as i64).collect()),
+        DType::Bool => Buffer::Bool(out.into_iter().map(|x| x != 0.0).collect()),
+    };
+    Tensor::new(out_shape, buf)
+}
+
+/// Apply a unary f64 function elementwise, preserving shape. Output dtype is
+/// float (f64 unless the input is f32).
+pub fn unary_op(a: &Tensor, f: impl Fn(f64) -> f64) -> Tensor {
+    let out: Vec<f64> = a.as_f64_vec().into_iter().map(f).collect();
+    let buf = match a.dtype() {
+        DType::F32 => Buffer::F32(out.into_iter().map(|x| x as f32).collect()),
+        _ => Buffer::F64(out),
+    };
+    Tensor::new(a.shape().to_vec(), buf).expect("unary preserves shape")
+}
+
+macro_rules! binary_fns {
+    ($($name:ident => $op:expr;)*) => {
+        $(pub fn $name(a: &Tensor, b: &Tensor) -> TResult<Tensor> {
+            binary_op(a, b, $op, None)
+        })*
+    };
+}
+
+binary_fns! {
+    add => |x, y| x + y;
+    sub => |x, y| x - y;
+    mul => |x, y| x * y;
+    div => |x, y| x / y;
+    pow => |x, y| x.powf(y);
+    maximum => |x: f64, y: f64| x.max(y);
+    minimum => |x: f64, y: f64| x.min(y);
+}
+
+macro_rules! compare_fns {
+    ($($name:ident => $op:expr;)*) => {
+        $(pub fn $name(a: &Tensor, b: &Tensor) -> TResult<Tensor> {
+            binary_op(a, b, $op, Some(DType::Bool))
+        })*
+    };
+}
+
+compare_fns! {
+    lt => |x, y| (x < y) as i64 as f64;
+    gt => |x, y| (x > y) as i64 as f64;
+    le => |x, y| (x <= y) as i64 as f64;
+    ge => |x, y| (x >= y) as i64 as f64;
+    eq => |x, y| (x == y) as i64 as f64;
+    ne => |x, y| (x != y) as i64 as f64;
+}
+
+macro_rules! unary_fns {
+    ($($name:ident => $op:expr;)*) => {
+        $(pub fn $name(a: &Tensor) -> Tensor { unary_op(a, $op) })*
+    };
+}
+
+unary_fns! {
+    neg => |x: f64| -x;
+    exp => f64::exp;
+    ln => f64::ln;
+    tanh => f64::tanh;
+    sqrt => f64::sqrt;
+    sin => f64::sin;
+    cos => f64::cos;
+    relu => |x: f64| x.max(0.0);
+    sigmoid => |x: f64| 1.0 / (1.0 + (-x).exp());
+    abs => f64::abs;
+    sign => f64::signum;
+    floor => f64::floor;
+}
+
+/// Elementwise select: `cond ? a : b`, with broadcasting.
+pub fn where_(cond: &Tensor, a: &Tensor, b: &Tensor) -> TResult<Tensor> {
+    let ab = binary_op(a, b, |x, _| x, None)?; // broadcast a over (a,b)
+    let ba = binary_op(a, b, |_, y| y, None)?;
+    let shape = broadcast_shapes(cond.shape(), ab.shape())?;
+    let cmap = broadcast_index_map(cond.shape(), &shape);
+    let amap = broadcast_index_map(ab.shape(), &shape);
+    let cv = cond.as_f64_vec();
+    let av = ab.as_f64_vec();
+    let bv = ba.as_f64_vec();
+    let out: Vec<f64> = (0..shape.iter().product::<usize>())
+        .map(|k| if cv[cmap[k]] != 0.0 { av[amap[k]] } else { bv[amap[k]] })
+        .collect();
+    let buf = match promote(a.dtype(), b.dtype()) {
+        DType::F32 => Buffer::F32(out.into_iter().map(|x| x as f32).collect()),
+        DType::I64 => Buffer::I64(out.into_iter().map(|x| x as i64).collect()),
+        DType::Bool => Buffer::Bool(out.into_iter().map(|x| x != 0.0).collect()),
+        DType::F64 => Buffer::F64(out),
+    };
+    Tensor::new(shape, buf)
+}
+
+/// Broadcast a tensor to a larger shape (materializing the copy).
+pub fn broadcast_to(a: &Tensor, shape: &[usize]) -> TResult<Tensor> {
+    let joint = broadcast_shapes(a.shape(), shape)?;
+    if joint != shape {
+        return terr(format!("cannot broadcast {:?} to {:?}", a.shape(), shape));
+    }
+    let map = broadcast_index_map(a.shape(), shape);
+    let av = a.as_f64_vec();
+    let out: Vec<f64> = map.iter().map(|&i| av[i]).collect();
+    let buf = match a.dtype() {
+        DType::F32 => Buffer::F32(out.into_iter().map(|x| x as f32).collect()),
+        DType::I64 => Buffer::I64(out.into_iter().map(|x| x as i64).collect()),
+        DType::Bool => Buffer::Bool(out.into_iter().map(|x| x != 0.0).collect()),
+        DType::F64 => Buffer::F64(out),
+    };
+    Tensor::new(shape.to_vec(), buf)
+}
+
+/// Sum a tensor down to a (broadcast-compatible) smaller shape — the adjoint
+/// of broadcasting. `target` must be reachable from `a.shape()` by NumPy
+/// broadcast rules.
+pub fn sum_to(a: &Tensor, target: &[usize]) -> TResult<Tensor> {
+    if a.shape() == target {
+        return Ok(a.clone());
+    }
+    let joint = broadcast_shapes(a.shape(), target)?;
+    if joint != a.shape() {
+        return terr(format!("sum_to: {:?} does not broadcast from {:?}", a.shape(), target));
+    }
+    let offset = a.rank() - target.len();
+    let av = a.as_f64_vec();
+    let in_strides = strides_for(a.shape());
+    let t_strides = strides_for(target);
+    let t_numel: usize = target.iter().product();
+    let mut out = vec![0.0f64; t_numel.max(1)];
+    for (flat, &v) in av.iter().enumerate() {
+        let mut tidx = 0usize;
+        for (d, &st) in in_strides.iter().enumerate() {
+            if d >= offset {
+                let coord = (flat / st) % a.shape()[d];
+                if target[d - offset] != 1 {
+                    tidx += coord * t_strides[d - offset];
+                }
+            }
+        }
+        out[tidx] += v;
+    }
+    let buf = match a.dtype() {
+        DType::F32 => Buffer::F32(out.into_iter().map(|x| x as f32).collect()),
+        _ => Buffer::F64(out),
+    };
+    Tensor::new(target.to_vec(), buf)
+}
+
+/// Sum over all elements, producing a rank-0 tensor.
+pub fn reduce_sum_all(a: &Tensor) -> Tensor {
+    let s: f64 = a.as_f64_vec().iter().sum();
+    match a.dtype() {
+        DType::F32 => Tensor::new(vec![], Buffer::F32(vec![s as f32])).unwrap(),
+        _ => Tensor::scalar_f64(s),
+    }
+}
+
+/// Mean over all elements, producing a rank-0 tensor.
+pub fn reduce_mean_all(a: &Tensor) -> Tensor {
+    let n = a.numel().max(1) as f64;
+    let s: f64 = a.as_f64_vec().iter().sum();
+    match a.dtype() {
+        DType::F32 => Tensor::new(vec![], Buffer::F32(vec![(s / n) as f32])).unwrap(),
+        _ => Tensor::scalar_f64(s / n),
+    }
+}
+
+/// Sum along a single axis (removing it).
+pub fn reduce_sum_axis(a: &Tensor, axis: usize) -> TResult<Tensor> {
+    reduce_axis(a, axis, 0.0, |acc, v| acc + v)
+}
+
+/// Max along a single axis (removing it).
+pub fn reduce_max_axis(a: &Tensor, axis: usize) -> TResult<Tensor> {
+    reduce_axis(a, axis, f64::NEG_INFINITY, f64::max)
+}
+
+fn reduce_axis(
+    a: &Tensor,
+    axis: usize,
+    init: f64,
+    f: impl Fn(f64, f64) -> f64,
+) -> TResult<Tensor> {
+    if axis >= a.rank() {
+        return terr(format!("axis {} out of range for rank {}", axis, a.rank()));
+    }
+    let shape = a.shape();
+    let outer: usize = shape[..axis].iter().product();
+    let n = shape[axis];
+    let inner: usize = shape[axis + 1..].iter().product();
+    let av = a.as_f64_vec();
+    let mut out = vec![init; outer * inner];
+    for o in 0..outer {
+        for k in 0..n {
+            let base = (o * n + k) * inner;
+            for i in 0..inner {
+                out[o * inner + i] = f(out[o * inner + i], av[base + i]);
+            }
+        }
+    }
+    let mut out_shape: Vec<usize> = shape.to_vec();
+    out_shape.remove(axis);
+    let buf = match a.dtype() {
+        DType::F32 => Buffer::F32(out.into_iter().map(|x| x as f32).collect()),
+        _ => Buffer::F64(out),
+    };
+    Tensor::new(out_shape, buf)
+}
+
+/// Sum over the last axis, keeping it with size 1 (keepdims). The adjoint is
+/// plain broadcasting, which is why the softmax backpropagator uses it.
+pub fn sum_last_keep(a: &Tensor) -> TResult<Tensor> {
+    if a.rank() == 0 {
+        return Ok(a.clone());
+    }
+    let n = a.shape()[a.rank() - 1];
+    let outer = a.numel() / n.max(1);
+    let av = a.as_f64_vec();
+    let mut out = vec![0.0f64; outer];
+    for o in 0..outer {
+        out[o] = av[o * n..(o + 1) * n].iter().sum();
+    }
+    let mut shape = a.shape().to_vec();
+    *shape.last_mut().unwrap() = 1;
+    let buf = match a.dtype() {
+        DType::F32 => Buffer::F32(out.into_iter().map(|x| x as f32).collect()),
+        _ => Buffer::F64(out),
+    };
+    Tensor::new(shape, buf)
+}
+
+/// Index of the maximum along the last axis (returns i64 tensor).
+pub fn argmax_last(a: &Tensor) -> TResult<Tensor> {
+    if a.rank() == 0 {
+        return terr("argmax on rank-0 tensor");
+    }
+    let shape = a.shape();
+    let n = shape[shape.len() - 1];
+    let outer: usize = shape[..shape.len() - 1].iter().product();
+    let av = a.as_f64_vec();
+    let mut out = Vec::with_capacity(outer);
+    for o in 0..outer {
+        let row = &av[o * n..(o + 1) * n];
+        let mut best = 0usize;
+        for (i, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = i;
+            }
+        }
+        out.push(best as i64);
+    }
+    Tensor::new(shape[..shape.len() - 1].to_vec(), Buffer::I64(out))
+}
+
+/// 2-D transpose (rank must be 2), or rank-0/1 identity.
+pub fn transpose(a: &Tensor) -> TResult<Tensor> {
+    match a.rank() {
+        0 | 1 => Ok(a.clone()),
+        2 => {
+            let (m, n) = (a.shape()[0], a.shape()[1]);
+            let av = a.as_f64_vec();
+            let mut out = vec![0.0f64; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    out[j * m + i] = av[i * n + j];
+                }
+            }
+            let buf = match a.dtype() {
+                DType::F32 => Buffer::F32(out.into_iter().map(|x| x as f32).collect()),
+                _ => Buffer::F64(out),
+            };
+            Tensor::new(vec![n, m], buf)
+        }
+        r => terr(format!("transpose expects rank <= 2, got rank {r}")),
+    }
+}
+
+/// Concatenate along axis 0.
+pub fn concat0(parts: &[Tensor]) -> TResult<Tensor> {
+    if parts.is_empty() {
+        return terr("concat of zero tensors");
+    }
+    let tail = &parts[0].shape()[1.min(parts[0].rank())..];
+    let mut rows = 0usize;
+    let mut data = Vec::new();
+    for p in parts {
+        if p.rank() == 0 || &p.shape()[1..] != tail {
+            return terr(format!("concat0 shape mismatch: {:?} vs tail {:?}", p.shape(), tail));
+        }
+        rows += p.shape()[0];
+        data.extend(p.as_f64_vec());
+    }
+    let mut shape = vec![rows];
+    shape.extend_from_slice(tail);
+    Tensor::new(shape, Buffer::F64(data))
+}
+
+/// Take row `i` from axis 0.
+pub fn take_row(a: &Tensor, i: usize) -> TResult<Tensor> {
+    if a.rank() == 0 {
+        return terr("take_row on rank-0 tensor");
+    }
+    if i >= a.shape()[0] {
+        return terr(format!("row {} out of range for shape {:?}", i, a.shape()));
+    }
+    let inner: usize = a.shape()[1..].iter().product();
+    let av = a.as_f64_vec();
+    let out = av[i * inner..(i + 1) * inner].to_vec();
+    let buf = match a.dtype() {
+        DType::F32 => Buffer::F32(out.into_iter().map(|x| x as f32).collect()),
+        DType::I64 => Buffer::I64(out.into_iter().map(|x| x as i64).collect()),
+        _ => Buffer::F64(out),
+    };
+    Tensor::new(a.shape()[1..].to_vec(), buf)
+}
+
+/// One-hot encode an i64 class tensor into `[.., depth]` f64.
+pub fn one_hot(classes: &Tensor, depth: usize) -> TResult<Tensor> {
+    let cv = classes.as_f64_vec();
+    let mut out = vec![0.0f64; cv.len() * depth];
+    for (i, &c) in cv.iter().enumerate() {
+        let c = c as i64;
+        if c < 0 || c as usize >= depth {
+            return terr(format!("one_hot class {c} out of range 0..{depth}"));
+        }
+        out[i * depth + c as usize] = 1.0;
+    }
+    let mut shape = classes.shape().to_vec();
+    shape.push(depth);
+    Tensor::new(shape, Buffer::F64(out))
+}
+
+/// Row-wise softmax over the last axis (numerically stabilized).
+pub fn softmax_last(a: &Tensor) -> TResult<Tensor> {
+    if a.rank() == 0 {
+        return terr("softmax on rank-0 tensor");
+    }
+    let n = a.shape()[a.rank() - 1];
+    let outer = a.numel() / n.max(1);
+    let av = a.as_f64_vec();
+    let mut out = vec![0.0f64; av.len()];
+    for o in 0..outer {
+        let row = &av[o * n..(o + 1) * n];
+        let m = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut z = 0.0;
+        for (j, &v) in row.iter().enumerate() {
+            let e = (v - m).exp();
+            out[o * n + j] = e;
+            z += e;
+        }
+        for j in 0..n {
+            out[o * n + j] /= z;
+        }
+    }
+    let buf = match a.dtype() {
+        DType::F32 => Buffer::F32(out.into_iter().map(|x| x as f32).collect()),
+        _ => Buffer::F64(out),
+    };
+    Tensor::new(a.shape().to_vec(), buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: &[f64], s: &[usize]) -> Tensor {
+        Tensor::from_f64_shaped(v.to_vec(), s.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn broadcast_shape_rules() {
+        assert_eq!(broadcast_shapes(&[2, 3], &[3]).unwrap(), vec![2, 3]);
+        assert_eq!(broadcast_shapes(&[2, 1], &[1, 4]).unwrap(), vec![2, 4]);
+        assert_eq!(broadcast_shapes(&[], &[5]).unwrap(), vec![5]);
+        assert!(broadcast_shapes(&[2], &[3]).is_err());
+    }
+
+    #[test]
+    fn elementwise_same_shape() {
+        let a = t(&[1.0, 2.0, 3.0], &[3]);
+        let b = t(&[10.0, 20.0, 30.0], &[3]);
+        assert_eq!(add(&a, &b).unwrap().as_f64_vec(), vec![11.0, 22.0, 33.0]);
+        assert_eq!(mul(&a, &b).unwrap().as_f64_vec(), vec![10.0, 40.0, 90.0]);
+        assert_eq!(sub(&b, &a).unwrap().as_f64_vec(), vec![9.0, 18.0, 27.0]);
+        assert_eq!(div(&b, &a).unwrap().as_f64_vec(), vec![10.0, 10.0, 10.0]);
+    }
+
+    #[test]
+    fn elementwise_broadcast() {
+        let a = t(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let row = t(&[10.0, 20.0, 30.0], &[3]);
+        let r = add(&a, &row).unwrap();
+        assert_eq!(r.shape(), &[2, 3]);
+        assert_eq!(r.as_f64_vec(), vec![11.0, 22.0, 33.0, 14.0, 25.0, 36.0]);
+        let col = t(&[100.0, 200.0], &[2, 1]);
+        let r2 = add(&a, &col).unwrap();
+        assert_eq!(r2.as_f64_vec(), vec![101.0, 102.0, 103.0, 204.0, 205.0, 206.0]);
+        let s = Tensor::scalar_f64(1.0);
+        assert_eq!(add(&a, &s).unwrap().as_f64_vec(), vec![2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(add(&s, &a).unwrap().shape(), &[2, 3]);
+    }
+
+    #[test]
+    fn comparisons_produce_bool() {
+        let a = t(&[1.0, 5.0], &[2]);
+        let b = t(&[3.0, 3.0], &[2]);
+        let r = lt(&a, &b).unwrap();
+        assert_eq!(r.dtype(), DType::Bool);
+        assert_eq!(r.as_f64_vec(), vec![1.0, 0.0]);
+        assert_eq!(ge(&a, &b).unwrap().as_f64_vec(), vec![0.0, 1.0]);
+        assert_eq!(eq(&a, &a).unwrap().as_f64_vec(), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn unary_ops() {
+        let a = t(&[0.0, 1.0, -2.0], &[3]);
+        assert_eq!(neg(&a).as_f64_vec(), vec![0.0, -1.0, 2.0]);
+        assert_eq!(relu(&a).as_f64_vec(), vec![0.0, 1.0, 0.0]);
+        assert!((exp(&a).as_f64_vec()[1] - std::f64::consts::E).abs() < 1e-12);
+        assert!((sigmoid(&t(&[0.0], &[1])).as_f64_vec()[0] - 0.5).abs() < 1e-12);
+        assert_eq!(abs(&a).as_f64_vec(), vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn broadcast_and_sum_to_roundtrip() {
+        let a = t(&[1.0, 2.0], &[2, 1]);
+        let b = broadcast_to(&a, &[2, 3]).unwrap();
+        assert_eq!(b.as_f64_vec(), vec![1.0, 1.0, 1.0, 2.0, 2.0, 2.0]);
+        let s = sum_to(&b, &[2, 1]).unwrap();
+        assert_eq!(s.as_f64_vec(), vec![3.0, 6.0]);
+        // sum_to over a leading broadcast axis
+        let v = t(&[1.0, 2.0, 3.0], &[3]);
+        let m = broadcast_to(&v, &[2, 3]).unwrap();
+        assert_eq!(sum_to(&m, &[3]).unwrap().as_f64_vec(), vec![2.0, 4.0, 6.0]);
+        // to scalar
+        assert_eq!(sum_to(&m, &[]).unwrap().item().unwrap(), 12.0);
+        assert!(broadcast_to(&t(&[1.0, 2.0], &[2]), &[3]).is_err());
+    }
+
+    #[test]
+    fn reductions() {
+        let a = t(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        assert_eq!(reduce_sum_all(&a).item().unwrap(), 21.0);
+        assert_eq!(reduce_mean_all(&a).item().unwrap(), 3.5);
+        assert_eq!(reduce_sum_axis(&a, 0).unwrap().as_f64_vec(), vec![5.0, 7.0, 9.0]);
+        assert_eq!(reduce_sum_axis(&a, 1).unwrap().as_f64_vec(), vec![6.0, 15.0]);
+        assert_eq!(reduce_max_axis(&a, 1).unwrap().as_f64_vec(), vec![3.0, 6.0]);
+        assert!(reduce_sum_axis(&a, 2).is_err());
+    }
+
+    #[test]
+    fn transpose_2d() {
+        let a = t(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let at = transpose(&a).unwrap();
+        assert_eq!(at.shape(), &[3, 2]);
+        assert_eq!(at.as_f64_vec(), vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+        let v = t(&[1.0], &[1]);
+        assert_eq!(transpose(&v).unwrap().shape(), &[1]);
+    }
+
+    #[test]
+    fn softmax_and_argmax() {
+        let a = t(&[1.0, 2.0, 3.0, 3.0, 2.0, 1.0], &[2, 3]);
+        let s = softmax_last(&a).unwrap();
+        let v = s.as_f64_vec();
+        assert!((v[0..3].iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(v[2] > v[1] && v[1] > v[0]);
+        let am = argmax_last(&a).unwrap();
+        assert_eq!(am.as_f64_vec(), vec![2.0, 0.0]);
+    }
+
+    #[test]
+    fn onehot_take_concat() {
+        let c = Tensor::from_i64_shaped(vec![0, 2], vec![2]).unwrap();
+        let oh = one_hot(&c, 3).unwrap();
+        assert_eq!(oh.shape(), &[2, 3]);
+        assert_eq!(oh.as_f64_vec(), vec![1.0, 0.0, 0.0, 0.0, 0.0, 1.0]);
+        assert!(one_hot(&Tensor::from_i64_shaped(vec![5], vec![1]).unwrap(), 3).is_err());
+        let a = t(&[1.0, 2.0], &[1, 2]);
+        let b = t(&[3.0, 4.0], &[1, 2]);
+        let cat = concat0(&[a.clone(), b]).unwrap();
+        assert_eq!(cat.shape(), &[2, 2]);
+        assert_eq!(take_row(&cat, 1).unwrap().as_f64_vec(), vec![3.0, 4.0]);
+        assert!(take_row(&cat, 2).is_err());
+    }
+
+    #[test]
+    fn where_select() {
+        let c = Tensor::new(vec![3], Buffer::Bool(vec![true, false, true])).unwrap();
+        let a = t(&[1.0, 2.0, 3.0], &[3]);
+        let b = t(&[10.0, 20.0, 30.0], &[3]);
+        assert_eq!(where_(&c, &a, &b).unwrap().as_f64_vec(), vec![1.0, 20.0, 3.0]);
+    }
+
+    #[test]
+    fn dtype_promotion() {
+        let f = t(&[1.5], &[1]);
+        let i = Tensor::from_i64_shaped(vec![2], vec![1]).unwrap();
+        let r = add(&f, &i).unwrap();
+        assert_eq!(r.dtype(), DType::F64);
+        assert_eq!(r.as_f64_vec(), vec![3.5]);
+        let f32t = Tensor::from_f32(&[1.0]);
+        assert_eq!(add(&f32t, &i).unwrap().dtype(), DType::F32);
+    }
+}

@@ -1,0 +1,128 @@
+//! Deterministic xorshift64* RNG.
+//!
+//! No external `rand` crate is vendored, and the paper's functional stance
+//! argues for explicit, reproducible randomness anyway (§5 suggests handling
+//! RNGs monadically). All random tensors in examples, tests and benches draw
+//! from this seeded generator.
+
+use super::{Buffer, Tensor};
+
+/// xorshift64* pseudo-random generator.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Create a generator from a non-zero seed (zero is remapped).
+    pub fn new(seed: u64) -> Rng {
+        Rng { state: if seed == 0 { 0x9E3779B97F4A7C15 } else { seed } }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn uniform_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.uniform().max(1e-300);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Tensor of iid U[lo, hi) values.
+    pub fn uniform_tensor(&mut self, shape: &[usize], lo: f64, hi: f64) -> Tensor {
+        let n: usize = shape.iter().product();
+        let data: Vec<f64> = (0..n).map(|_| self.uniform_range(lo, hi)).collect();
+        Tensor::new(shape.to_vec(), Buffer::F64(data)).expect("shape matches")
+    }
+
+    /// Tensor of iid N(0, scale²) values.
+    pub fn normal_tensor(&mut self, shape: &[usize], scale: f64) -> Tensor {
+        let n: usize = shape.iter().product();
+        let data: Vec<f64> = (0..n).map(|_| self.normal() * scale).collect();
+        Tensor::new(shape.to_vec(), Buffer::F64(data)).expect("shape matches")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+        for _ in 0..100 {
+            let u = r.uniform_range(-3.0, 5.0);
+            assert!((-3.0..5.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn tensors_have_shape() {
+        let mut r = Rng::new(3);
+        let t = r.normal_tensor(&[4, 5], 0.1);
+        assert_eq!(t.shape(), &[4, 5]);
+        let u = r.uniform_tensor(&[3], 0.0, 1.0);
+        assert_eq!(u.numel(), 3);
+        assert!(r.below(10) < 10);
+    }
+
+    #[test]
+    fn zero_seed_remapped() {
+        let mut r = Rng::new(0);
+        assert_ne!(r.next_u64(), 0);
+    }
+}

@@ -1,0 +1,456 @@
+//! The abstract interpreter behind type/shape inference.
+
+use super::AType;
+use crate::ir::{analyze, Const, GraphId, Module, NodeId, Prim};
+use crate::tensor::{ops::broadcast_shapes, DType};
+use anyhow::{anyhow, bail, Result};
+use std::collections::{HashMap, HashSet};
+
+/// Infer the result type of calling `g` on arguments of the given types.
+/// Raises an error for definite type/shape mismatches (§4.2: eager errors).
+pub fn infer_call(m: &Module, g: GraphId, args: &[AType]) -> Result<AType> {
+    let mut inf = Inferrer::new(m);
+    inf.call_graph(g, args.to_vec())
+}
+
+/// Inference engine with per-signature memoization and recursion widening.
+pub struct Inferrer<'m> {
+    m: &'m Module,
+    /// (graph, arg signature) → result (memo; polyvariant specialization).
+    memo: HashMap<(GraphId, Vec<AType>), AType>,
+    /// calls currently on the stack (recursion detection).
+    pending: HashSet<(GraphId, Vec<AType>)>,
+    /// inferred types of nodes (free variables of nested graphs look here).
+    node_types: HashMap<NodeId, AType>,
+}
+
+impl<'m> Inferrer<'m> {
+    pub fn new(m: &'m Module) -> Inferrer<'m> {
+        Inferrer { m, memo: HashMap::new(), pending: HashSet::new(), node_types: HashMap::new() }
+    }
+
+    pub fn call_graph(&mut self, g: GraphId, args: Vec<AType>) -> Result<AType> {
+        let params = self.m.graph(g).params.clone();
+        if params.len() != args.len() {
+            bail!(
+                "`{}` expects {} arguments, got {}",
+                self.m.graph(g).name,
+                params.len(),
+                args.len()
+            );
+        }
+        let key = (g, args.clone());
+        if let Some(t) = self.memo.get(&key) {
+            return Ok(t.clone());
+        }
+        if self.pending.contains(&key) {
+            // Recursive call: widen. A second pass refines via the memo.
+            return Ok(AType::Any);
+        }
+        self.pending.insert(key.clone());
+        for (p, a) in params.iter().zip(args.iter()) {
+            // Join with any previous binding (polyvariance across contexts
+            // is approximated by widening shared node types).
+            let t = match self.node_types.get(p) {
+                Some(prev) => prev.join(a),
+                None => a.clone(),
+            };
+            self.node_types.insert(*p, t);
+        }
+        let result = self.eval_graph(g);
+        self.pending.remove(&key);
+        let result = result?;
+        self.memo.insert(key, result.clone());
+        Ok(result)
+    }
+
+    fn eval_graph(&mut self, g: GraphId) -> Result<AType> {
+        let analysis = analyze(self.m, g);
+        for &n in analysis.order_of(g) {
+            let t = self.eval_apply(n)?;
+            let t = match self.node_types.get(&n) {
+                Some(prev) => prev.join(&t),
+                None => t,
+            };
+            self.node_types.insert(n, t);
+        }
+        let ret = self.m.graph(g).ret.ok_or_else(|| anyhow!("graph without return"))?;
+        self.type_of(ret)
+    }
+
+    fn type_of(&mut self, n: NodeId) -> Result<AType> {
+        if let Some(t) = self.node_types.get(&n) {
+            return Ok(t.clone());
+        }
+        let node = self.m.node(n);
+        if let Some(c) = node.constant() {
+            return Ok(match c {
+                Const::Unit => AType::Unit,
+                Const::F64(_) => AType::F64,
+                Const::I64(_) => AType::I64,
+                Const::Bool(_) => AType::Bool,
+                Const::Str(_) => AType::Str,
+                Const::Key(_) => AType::Key,
+                Const::ZeroT => AType::ZeroT,
+                Const::Tensor(t) => AType::Tensor {
+                    dtype: t.dtype(),
+                    shape: t.shape().iter().map(|&d| Some(d)).collect(),
+                },
+                Const::Prim(p) => AType::Prim(*p),
+                Const::Graph(h) => AType::Func(h.0),
+                Const::Macro(_) => AType::Any,
+            });
+        }
+        // Unbound parameter / free variable: unknown.
+        Ok(AType::Any)
+    }
+
+    fn eval_apply(&mut self, n: NodeId) -> Result<AType> {
+        let inputs = self.m.node(n).inputs().to_vec();
+        let callee_t = self.type_of(inputs[0])?;
+        let mut args = Vec::with_capacity(inputs.len() - 1);
+        for &a in &inputs[1..] {
+            args.push(self.type_of(a)?);
+        }
+        match callee_t {
+            AType::Prim(p) => prim_rule(self.m, p, &inputs[1..], &args),
+            AType::Func(gid) => self.call_graph(GraphId(gid), args),
+            AType::FuncUnion(gids) => {
+                // A switch over branch thunks: infer each and join (§4.2).
+                let mut result: Option<AType> = None;
+                for gid in gids {
+                    let t = self.call_graph(GraphId(gid), args.clone())?;
+                    result = Some(match result {
+                        Some(prev) => prev.join(&t),
+                        None => t,
+                    });
+                }
+                Ok(result.unwrap_or(AType::Any))
+            }
+            AType::Any => Ok(AType::Any),
+            other => bail!(
+                "cannot call a value of type `{other}`{}",
+                self.m
+                    .node(inputs[0])
+                    .debug_name
+                    .as_ref()
+                    .map(|n| format!(" (`{n}`)"))
+                    .unwrap_or_default()
+            ),
+        }
+    }
+}
+
+/// Result types of primitives, with eager shape checking.
+fn prim_rule(m: &Module, p: Prim, arg_nodes: &[NodeId], args: &[AType]) -> Result<AType> {
+    use Prim::*;
+    if let Some(ar) = p.arity() {
+        if args.len() != ar {
+            bail!("`{p}` expects {ar} arguments, got {}", args.len());
+        }
+    }
+    let any = args.iter().any(|a| matches!(a, AType::Any));
+    Ok(match p {
+        Add | Sub | Mul | Maximum | Minimum | Gadd => binary_numeric(p, &args[0], &args[1])?,
+        Div => match binary_numeric(p, &args[0], &args[1])? {
+            AType::I64 => AType::F64, // true division
+            t => t,
+        },
+        Pow | Mod | FloorDiv => binary_numeric(p, &args[0], &args[1])?,
+        Neg | Abs => args[0].clone(),
+        Exp | Ln | Tanh | Sqrt | Sin | Cos | Relu | Sigmoid | Sign | Step => match &args[0] {
+            t @ AType::Tensor { .. } => t.clone(),
+            AType::I64 | AType::F64 => AType::F64,
+            AType::Any => AType::Any,
+            other => bail!("`{p}` expects a number or tensor, got {other}"),
+        },
+        Lt | Gt | Le | Ge | Eq | Ne => {
+            if let (AType::Tensor { shape: s1, .. }, AType::Tensor { shape: s2, .. }) =
+                (&args[0], &args[1])
+            {
+                let shape = broadcast_abstract(s1, s2)
+                    .map_err(|e| anyhow!("in `{p}`: {e}"))?;
+                AType::Tensor { dtype: DType::Bool, shape }
+            } else if matches!(&args[0], AType::Tensor { .. })
+                || matches!(&args[1], AType::Tensor { .. })
+            {
+                AType::Any
+            } else {
+                AType::Bool
+            }
+        }
+        Not | BoolAnd | BoolOr | IsNil => AType::Bool,
+        Switch => {
+            if !any && !matches!(args[0], AType::Bool) {
+                bail!("`switch` condition must be bool, got {}", args[0]);
+            }
+            args[1].join(&args[2])
+        }
+        MakeTuple => AType::Tuple(args.to_vec()),
+        TupleGetItem => match (&args[0], m.node(arg_nodes[1]).constant()) {
+            (AType::Tuple(items), Some(Const::I64(i))) => {
+                let n = items.len() as i64;
+                let idx = if *i < 0 { *i + n } else { *i };
+                if idx < 0 || idx >= n {
+                    bail!("tuple index {i} out of range for {}-tuple", items.len());
+                }
+                items[idx as usize].clone()
+            }
+            (AType::Tuple(_), _) | (AType::Any, _) | (AType::ZeroT, _) => AType::Any,
+            (other, _) => bail!("indexing a non-tuple value of type {other}"),
+        },
+        TupleLen => AType::I64,
+        TupleInject => AType::Any,
+        NewEnv | EnvSetItem => AType::Env,
+        EnvGetItem => AType::Any,
+        ZerosLike | OnesLike => args[0].clone(),
+        MatMul => matmul_rule(&args[0], &args[1])?,
+        Transpose => match &args[0] {
+            AType::Tensor { dtype, shape } if shape.len() == 2 => {
+                AType::Tensor { dtype: *dtype, shape: vec![shape[1], shape[0]] }
+            }
+            t @ AType::Tensor { .. } => t.clone(),
+            AType::Any => AType::Any,
+            other => bail!("`transpose` expects a tensor, got {other}"),
+        },
+        Reshape | BroadcastTo | SumTo => match &args[0] {
+            AType::Tensor { dtype, .. } => {
+                // Shape known only if the tuple is constant — else unknown.
+                AType::Tensor { dtype: *dtype, shape: vec![] }.widen_shape()
+            }
+            AType::Any => AType::Any,
+            other => bail!("`{p}` expects a tensor, got {other}"),
+        },
+        ShapeOf => AType::Any,
+        ReduceSum | ReduceMean => match &args[0] {
+            AType::Tensor { dtype, .. } => AType::Tensor { dtype: *dtype, shape: vec![] },
+            AType::F64 | AType::I64 | AType::Any => AType::Any,
+            other => bail!("`{p}` expects a tensor, got {other}"),
+        },
+        SoftmaxLast | SumLastKeep => match &args[0] {
+            t @ AType::Tensor { .. } => {
+                if p == SumLastKeep {
+                    if let AType::Tensor { dtype, shape } = t {
+                        let mut s = shape.clone();
+                        if let Some(last) = s.last_mut() {
+                            *last = Some(1);
+                        }
+                        return Ok(AType::Tensor { dtype: *dtype, shape: s });
+                    }
+                }
+                t.clone()
+            }
+            AType::Any => AType::Any,
+            other => bail!("`{p}` expects a tensor, got {other}"),
+        },
+        Item => AType::F64,
+        ScalarToTensor => AType::Tensor { dtype: DType::F64, shape: vec![] },
+        CastF32 | CastF64 => match &args[0] {
+            AType::Tensor { shape, .. } => AType::Tensor {
+                dtype: if p == CastF32 { DType::F32 } else { DType::F64 },
+                shape: shape.clone(),
+            },
+            _ => AType::Any,
+        },
+        Print => args[0].clone(),
+        Raise => AType::Any,
+        _ => AType::Any,
+    })
+}
+
+impl AType {
+    fn widen_shape(self) -> AType {
+        match self {
+            AType::Tensor { dtype, .. } => AType::Tensor { dtype, shape: vec![None] },
+            t => t,
+        }
+    }
+}
+
+fn binary_numeric(p: Prim, a: &AType, b: &AType) -> Result<AType> {
+    Ok(match (a, b) {
+        (AType::Any, _) | (_, AType::Any) => AType::Any,
+        (AType::ZeroT, x) | (x, AType::ZeroT) => x.clone(),
+        (AType::Tensor { dtype: d1, shape: s1 }, AType::Tensor { dtype: d2, shape: s2 }) => {
+            let shape = broadcast_abstract(s1, s2).map_err(|e| anyhow!("in `{p}`: {e}"))?;
+            let dtype = if *d1 == DType::F64 || *d2 == DType::F64 {
+                DType::F64
+            } else if *d1 == DType::F32 || *d2 == DType::F32 {
+                DType::F32
+            } else {
+                *d1
+            };
+            AType::Tensor { dtype, shape }
+        }
+        (t @ AType::Tensor { .. }, s) | (s, t @ AType::Tensor { .. }) if s.is_scalar_num() => {
+            t.clone()
+        }
+        (AType::I64, AType::I64) => AType::I64,
+        (x, y) if x.is_scalar_num() && y.is_scalar_num() => AType::F64,
+        (AType::Tuple(x), AType::Tuple(y)) if p == Prim::Gadd && x.len() == y.len() => {
+            AType::Tuple(x.iter().zip(y.iter()).map(|(a, b)| a.join(b)).collect())
+        }
+        (AType::Env, AType::Env) if p == Prim::Gadd => AType::Env,
+        (x, y) => bail!("`{p}` cannot combine {x} and {y}"),
+    })
+}
+
+fn matmul_rule(a: &AType, b: &AType) -> Result<AType> {
+    match (a, b) {
+        (AType::Any, _) | (_, AType::Any) => Ok(AType::Any),
+        (AType::Tensor { dtype, shape: s1 }, AType::Tensor { shape: s2, .. }) => {
+            if s1.len() == 2 && s2.len() == 2 {
+                if let (Some(k1), Some(k2)) = (s1[1], s2[0]) {
+                    if k1 != k2 {
+                        bail!(
+                            "matmul inner dimension mismatch: [?, {k1}] @ [{k2}, ?] \
+                             (caught before execution — §4.2)"
+                        );
+                    }
+                }
+                Ok(AType::Tensor { dtype: *dtype, shape: vec![s1[0], s2[1]] })
+            } else {
+                Ok(AType::Tensor { dtype: *dtype, shape: vec![None] })
+            }
+        }
+        (x, y) => bail!("matmul expects tensors, got {x} and {y}"),
+    }
+}
+
+/// Abstract broadcasting: unknown dims unify with anything.
+fn broadcast_abstract(
+    a: &[Option<usize>],
+    b: &[Option<usize>],
+) -> std::result::Result<Vec<Option<usize>>, String> {
+    // Fully known shapes reuse the concrete checker for identical errors.
+    if a.iter().all(Option::is_some) && b.iter().all(Option::is_some) {
+        let ca: Vec<usize> = a.iter().map(|d| d.unwrap()).collect();
+        let cb: Vec<usize> = b.iter().map(|d| d.unwrap()).collect();
+        return broadcast_shapes(&ca, &cb)
+            .map(|s| s.into_iter().map(Some).collect())
+            .map_err(|e| e.0);
+    }
+    let rank = a.len().max(b.len());
+    let mut out = vec![None; rank];
+    for i in 0..rank {
+        let da = if i < rank - a.len() { Some(1) } else { a[i - (rank - a.len())] };
+        let db = if i < rank - b.len() { Some(1) } else { b[i - (rank - b.len())] };
+        out[i] = match (da, db) {
+            (Some(1), d) | (d, Some(1)) => d,
+            (Some(x), Some(y)) if x == y => Some(x),
+            (Some(x), Some(y)) => return Err(format!("cannot broadcast dims {x} and {y}")),
+            (None, d) | (d, None) => d,
+        };
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parser::compile_source;
+
+    fn infer(src: &str, entry: &str, args: &[AType]) -> Result<AType> {
+        let mut m = Module::new();
+        let graphs = compile_source(&mut m, src)?;
+        infer_call(&m, graphs[entry], args)
+    }
+
+    fn t(shape: &[usize]) -> AType {
+        AType::Tensor { dtype: DType::F64, shape: shape.iter().map(|&d| Some(d)).collect() }
+    }
+
+    #[test]
+    fn scalar_inference() {
+        let r = infer("def f(x):\n    return x * x + 1.0\n", "f", &[AType::F64]).unwrap();
+        assert_eq!(r, AType::F64);
+        let r = infer("def f(n):\n    return n + 1\n", "f", &[AType::I64]).unwrap();
+        assert_eq!(r, AType::I64);
+    }
+
+    #[test]
+    fn polymorphic_specialization() {
+        // same function, two signatures (§4.2 polyvariance)
+        let src = "def f(x):\n    return x + x\n";
+        assert_eq!(infer(src, "f", &[AType::F64]).unwrap(), AType::F64);
+        assert_eq!(infer(src, "f", &[t(&[3])]).unwrap(), t(&[3]));
+    }
+
+    #[test]
+    fn matmul_shapes_propagate() {
+        let src = "def f(a, b):\n    return matmul(a, b)\n";
+        let r = infer(src, "f", &[t(&[2, 3]), t(&[3, 5])]).unwrap();
+        assert_eq!(r, t(&[2, 5]));
+    }
+
+    #[test]
+    fn shape_mismatch_caught_eagerly() {
+        let src = "def f(a, b):\n    return matmul(a, b)\n";
+        let e = infer(src, "f", &[t(&[2, 3]), t(&[4, 5])]).unwrap_err();
+        assert!(format!("{e}").contains("inner dimension mismatch"), "{e}");
+        let src = "def f(a, b):\n    return a + b\n";
+        let e = infer(src, "f", &[t(&[2]), t(&[3])]).unwrap_err();
+        assert!(format!("{e}").contains("broadcast"), "{e}");
+    }
+
+    #[test]
+    fn conditionals_join_branches() {
+        let src = "def f(x):\n    if x > 0.0:\n        return 1.0\n    else:\n        return 2\n";
+        let r = infer(src, "f", &[AType::F64]).unwrap();
+        assert_eq!(r, AType::F64); // join(f64, i64) = f64
+    }
+
+    #[test]
+    fn recursion_converges() {
+        let src = "def fact(n):\n    return 1 if n <= 1 else n * fact(n - 1)\n";
+        let r = infer(src, "fact", &[AType::I64]).unwrap();
+        // Any (widened) or i64 depending on join order — must not hang.
+        assert!(matches!(r, AType::I64 | AType::Any), "{r}");
+    }
+
+    #[test]
+    fn higher_order_functions_specialize() {
+        let src = "\
+def apply(f, x):
+    return f(x)
+
+def sq(t):
+    return t * t
+
+def main(x):
+    return apply(sq, x)
+";
+        let r = infer(src, "main", &[AType::F64]).unwrap();
+        assert_eq!(r, AType::F64);
+    }
+
+    #[test]
+    fn calling_non_function_is_an_error() {
+        let src = "def f(x):\n    y = 1.0\n    return y(x)\n";
+        let e = infer(src, "f", &[AType::F64]).unwrap_err();
+        assert!(format!("{e}").contains("cannot call"), "{e}");
+    }
+
+    #[test]
+    fn tuple_types_tracked() {
+        let src = "def f(x):\n    t = (x, x * 2.0, 3)\n    return t[2]\n";
+        let r = infer(src, "f", &[AType::F64]).unwrap();
+        assert_eq!(r, AType::I64);
+        let src = "def f(x):\n    t = (x, 1)\n    return t[5]\n";
+        let e = infer(src, "f", &[AType::F64]).unwrap_err();
+        assert!(format!("{e}").contains("out of range"), "{e}");
+    }
+
+    #[test]
+    fn arity_mismatch_eager() {
+        let src = "\
+def g(a, b):
+    return a
+
+def f(x):
+    return g(x)
+";
+        let e = infer(src, "f", &[AType::F64]).unwrap_err();
+        assert!(format!("{e}").contains("expects 2 arguments"), "{e}");
+    }
+}

@@ -1,0 +1,206 @@
+//! Type and shape inference (§4.2).
+//!
+//! "When a Myia function is called, we use the types of the user-provided
+//! arguments as a starting point for type inference, which allows us to
+//! compile a specialized version of the function for these types. No type
+//! annotations are required, even when using higher order functions."
+//!
+//! [`infer_call`] abstractly interprets a graph on abstract values: concrete
+//! dtypes, tensor shapes with per-dimension unknowns, tuples, and function
+//! values carried *precisely* (a graph reference plus the abstract values of
+//! its free variables), so higher-order code and closures specialize per
+//! call site (polyvariance). Recursion is handled by a pending-call set that
+//! widens to `Any` and refines on a second pass — the fixpoint the paper
+//! alludes to for recursive calls. Errors (shape mismatches, bad arities,
+//! calling non-functions) surface *before* any tensor work happens: "it is
+//! best to catch errors as early as possible".
+
+mod infer;
+
+pub use infer::{infer_call, Inferrer};
+
+use crate::tensor::DType;
+use crate::vm::Value;
+use std::fmt;
+
+/// Abstract values.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum AType {
+    Unit,
+    F64,
+    I64,
+    Bool,
+    Str,
+    Key,
+    ZeroT,
+    Env,
+    /// Tensor with dtype and per-dimension shape (None = unknown dim).
+    Tensor { dtype: DType, shape: Vec<Option<usize>> },
+    Tuple(Vec<AType>),
+    /// A function value: the graph plus abstract free-variable context is
+    /// tracked by the inferrer; here we keep the graph id for diagnostics.
+    Func(u32),
+    /// One of several possible functions (a `switch` over branch thunks);
+    /// calling it infers every member and joins the results.
+    FuncUnion(Vec<u32>),
+    /// A primitive as a value.
+    Prim(crate::ir::Prim),
+    /// Unknown (widened) — anything goes; checks are deferred to runtime.
+    Any,
+}
+
+impl AType {
+    /// Abstract value of a runtime value (call-site entry point of §4.2).
+    pub fn of_value(v: &Value) -> AType {
+        match v {
+            Value::Unit => AType::Unit,
+            Value::F64(_) => AType::F64,
+            Value::I64(_) => AType::I64,
+            Value::Bool(_) => AType::Bool,
+            Value::Str(_) => AType::Str,
+            Value::Key(_) => AType::Key,
+            Value::ZeroT => AType::ZeroT,
+            Value::Env(_) => AType::Env,
+            Value::Tensor(t) => AType::Tensor {
+                dtype: t.dtype(),
+                shape: t.shape().iter().map(|&d| Some(d)).collect(),
+            },
+            Value::Tuple(items) => AType::Tuple(items.iter().map(AType::of_value).collect()),
+            Value::Closure(_) | Value::Partial(_) => AType::Any,
+            Value::Prim(p) => AType::Prim(*p),
+        }
+    }
+
+    /// Is this a numeric scalar type?
+    pub fn is_scalar_num(&self) -> bool {
+        matches!(self, AType::F64 | AType::I64 | AType::Bool)
+    }
+
+    /// Least upper bound (widening join).
+    pub fn join(&self, other: &AType) -> AType {
+        if self == other {
+            return self.clone();
+        }
+        match (self, other) {
+            (AType::Any, x) | (x, AType::Any) => {
+                let _ = x;
+                AType::Any
+            }
+            (AType::ZeroT, x) | (x, AType::ZeroT) => x.clone(),
+            (AType::F64, AType::I64) | (AType::I64, AType::F64) => AType::F64,
+            (
+                AType::Tensor { dtype: d1, shape: s1 },
+                AType::Tensor { dtype: d2, shape: s2 },
+            ) if d1 == d2 && s1.len() == s2.len() => AType::Tensor {
+                dtype: *d1,
+                shape: s1
+                    .iter()
+                    .zip(s2.iter())
+                    .map(|(a, b)| if a == b { *a } else { None })
+                    .collect(),
+            },
+            (AType::Tuple(a), AType::Tuple(b)) if a.len() == b.len() => {
+                AType::Tuple(a.iter().zip(b.iter()).map(|(x, y)| x.join(y)).collect())
+            }
+            (AType::Func(a), AType::Func(b)) => AType::FuncUnion(vec![*a, *b]),
+            (AType::FuncUnion(u), AType::Func(b)) | (AType::Func(b), AType::FuncUnion(u)) => {
+                let mut u = u.clone();
+                if !u.contains(b) {
+                    u.push(*b);
+                }
+                AType::FuncUnion(u)
+            }
+            (AType::FuncUnion(a), AType::FuncUnion(b)) => {
+                let mut u = a.clone();
+                for g in b {
+                    if !u.contains(g) {
+                        u.push(*g);
+                    }
+                }
+                AType::FuncUnion(u)
+            }
+            _ => AType::Any,
+        }
+    }
+}
+
+impl fmt::Display for AType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AType::Unit => write!(f, "None"),
+            AType::F64 => write!(f, "f64"),
+            AType::I64 => write!(f, "i64"),
+            AType::Bool => write!(f, "bool"),
+            AType::Str => write!(f, "str"),
+            AType::Key => write!(f, "key"),
+            AType::ZeroT => write!(f, "zero"),
+            AType::Env => write!(f, "env"),
+            AType::Tensor { dtype, shape } => {
+                write!(f, "tensor<{dtype}>[")?;
+                for (i, d) in shape.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    match d {
+                        Some(d) => write!(f, "{d}")?,
+                        None => write!(f, "?")?,
+                    }
+                }
+                write!(f, "]")
+            }
+            AType::Tuple(items) => {
+                write!(f, "(")?;
+                for (i, t) in items.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{t}")?;
+                }
+                write!(f, ")")
+            }
+            AType::Func(g) => write!(f, "fn@{g}"),
+            AType::FuncUnion(gs) => write!(f, "fn@{gs:?}"),
+            AType::Prim(p) => write!(f, "prim<{p}>"),
+            AType::Any => write!(f, "any"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn of_value_roundtrip() {
+        assert_eq!(AType::of_value(&Value::F64(1.0)), AType::F64);
+        let t = Value::Tensor(Tensor::zeros(DType::F32, &[2, 3]));
+        assert_eq!(
+            AType::of_value(&t),
+            AType::Tensor { dtype: DType::F32, shape: vec![Some(2), Some(3)] }
+        );
+        let tup = Value::tuple(vec![Value::I64(1), Value::Bool(true)]);
+        assert_eq!(AType::of_value(&tup), AType::Tuple(vec![AType::I64, AType::Bool]));
+    }
+
+    #[test]
+    fn join_widens() {
+        assert_eq!(AType::F64.join(&AType::F64), AType::F64);
+        assert_eq!(AType::F64.join(&AType::I64), AType::F64);
+        assert_eq!(AType::F64.join(&AType::Str), AType::Any);
+        let a = AType::Tensor { dtype: DType::F64, shape: vec![Some(2), Some(3)] };
+        let b = AType::Tensor { dtype: DType::F64, shape: vec![Some(4), Some(3)] };
+        assert_eq!(
+            a.join(&b),
+            AType::Tensor { dtype: DType::F64, shape: vec![None, Some(3)] }
+        );
+        assert_eq!(AType::ZeroT.join(&AType::F64), AType::F64);
+    }
+
+    #[test]
+    fn display_forms() {
+        let t = AType::Tensor { dtype: DType::F64, shape: vec![Some(2), None] };
+        assert_eq!(format!("{t}"), "tensor<f64>[2, ?]");
+        assert_eq!(format!("{}", AType::Tuple(vec![AType::F64, AType::Any])), "(f64, any)");
+    }
+}

@@ -1,0 +1,383 @@
+//! Graph → register bytecode compilation.
+//!
+//! Myia's VM executes graphs after *flat closure conversion*: each graph's
+//! total free variables (§3's implicit nesting) become capture slots, filled
+//! when the enclosing frame materializes the graph constant with
+//! `MakeClosure`. Applications whose callee is a primitive constant compile
+//! to direct `CallPrim` dispatch; an application in return position compiles
+//! to `TailCall`, so the tail-recursive loops produced by the front end run
+//! in constant stack space.
+
+use super::value::Value;
+use crate::ir::{Const, GraphId, Module, NodeId, Prim};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Virtual register index within a frame.
+pub type Reg = u32;
+
+/// Bytecode instructions.
+#[derive(Debug, Clone)]
+pub enum Instr {
+    /// Load a constant from the program constant pool.
+    Const { dst: Reg, idx: usize },
+    /// Materialize a closure over `code`, capturing the listed registers.
+    MakeClosure { dst: Reg, code: usize, captures: Vec<Reg> },
+    /// Direct primitive application.
+    CallPrim { dst: Reg, prim: Prim, args: Vec<Reg> },
+    /// General call of a function value.
+    Call { dst: Reg, func: Reg, args: Vec<Reg> },
+    /// Call in return position: replaces the current frame.
+    TailCall { func: Reg, args: Vec<Reg> },
+    /// Return a register's value to the caller.
+    Return { src: Reg },
+    /// Execute a fused XLA segment (installed by the backend pass); the
+    /// segment returns one value per destination register.
+    XlaCall { dsts: Vec<Reg>, exec: usize, args: Vec<Reg> },
+}
+
+/// Compiled form of one graph.
+#[derive(Debug)]
+pub struct CodeObject {
+    pub name: String,
+    pub n_params: usize,
+    pub n_captures: usize,
+    pub n_regs: usize,
+    pub instrs: Vec<Instr>,
+}
+
+/// A compiled program: all graphs reachable from the entry.
+#[derive(Debug, Default)]
+pub struct Program {
+    pub codes: Vec<Rc<CodeObject>>,
+    pub consts: Vec<Value>,
+    pub graph_code: HashMap<GraphId, usize>,
+}
+
+/// Compilation error.
+#[derive(Debug)]
+pub struct CompileError(pub String);
+
+impl std::fmt::Display for CompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "vm compile error: {}", self.0)
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+/// Compile every graph reachable from `entry`.
+pub fn compile_program(m: &Module, entry: GraphId) -> Result<Program, CompileError> {
+    let analysis = crate::ir::analyze(m, entry);
+    let graphs = analysis.graphs.clone();
+    let fv_map = analysis.fvs.clone();
+    let mut program = Program::default();
+    // Reserve code slots first so MakeClosure can forward-reference.
+    for &g in &graphs {
+        let idx = program.codes.len();
+        program.codes.push(Rc::new(CodeObject {
+            name: String::new(),
+            n_params: 0,
+            n_captures: 0,
+            n_regs: 0,
+            instrs: Vec::new(),
+        }));
+        program.graph_code.insert(g, idx);
+    }
+    for &g in &graphs {
+        let code = compile_graph(m, g, &fv_map, analysis.order_of(g), &mut program)?;
+        let idx = program.graph_code[&g];
+        program.codes[idx] = Rc::new(code);
+    }
+    Ok(program)
+}
+
+fn compile_graph(
+    m: &Module,
+    g: GraphId,
+    fv_map: &HashMap<GraphId, Vec<NodeId>>,
+    order: &[NodeId],
+    program: &mut Program,
+) -> Result<CodeObject, CompileError> {
+    let graph = m.graph(g);
+    let params = graph.params.clone();
+    let captures: Vec<NodeId> = fv_map.get(&g).cloned().unwrap_or_default();
+
+    let mut c = Ctx {
+        m,
+        g,
+        fv_map,
+        program,
+        regs: HashMap::new(),
+        const_regs: HashMap::new(),
+        closure_regs: HashMap::new(),
+        next_reg: 0,
+        instrs: Vec::new(),
+    };
+    for &p in &params {
+        let r = c.alloc();
+        c.regs.insert(p, r);
+    }
+    for &fv in &captures {
+        let r = c.alloc();
+        c.regs.insert(fv, r);
+    }
+
+    let ret = m
+        .graph(g)
+        .ret
+        .ok_or_else(|| CompileError(format!("graph {} has no return", m.graph(g).name)))?;
+
+    for &n in order {
+        let is_ret = n == ret;
+        let inputs = m.node(n).inputs().to_vec();
+        // Callee forms.
+        if let Some(p) = m.as_prim(inputs[0]) {
+            let args: Vec<Reg> = inputs[1..]
+                .iter()
+                .map(|&a| c.reg_for(a))
+                .collect::<Result<_, _>>()?;
+            let dst = c.alloc();
+            c.instrs.push(Instr::CallPrim { dst, prim: p, args });
+            c.regs.insert(n, dst);
+        } else {
+            if let Some(Const::Macro(op)) = m.node(inputs[0]).constant() {
+                return Err(CompileError(format!(
+                    "macro `{op}` reached the VM unexpanded; run the AD expansion pass first"
+                )));
+            }
+            let func = c.reg_for(inputs[0])?;
+            let args: Vec<Reg> = inputs[1..]
+                .iter()
+                .map(|&a| c.reg_for(a))
+                .collect::<Result<_, _>>()?;
+            if is_ret {
+                c.instrs.push(Instr::TailCall { func, args });
+                // TailCall never falls through; register map entry unneeded.
+                c.regs.insert(n, u32::MAX);
+            } else {
+                let dst = c.alloc();
+                c.instrs.push(Instr::Call { dst, func, args });
+                c.regs.insert(n, dst);
+            }
+        }
+    }
+
+    // Emit Return unless the last instruction was the tail call for ret.
+    let tail = matches!(c.instrs.last(), Some(Instr::TailCall { .. }))
+        && m.node(ret).is_apply()
+        && c.regs.get(&ret) == Some(&u32::MAX);
+    if !tail {
+        let src = c.reg_for(ret)?;
+        c.instrs.push(Instr::Return { src });
+    }
+
+    Ok(CodeObject {
+        name: graph.name.clone(),
+        n_params: params.len(),
+        n_captures: captures.len(),
+        n_regs: c.next_reg as usize,
+        instrs: c.instrs,
+    })
+}
+
+struct Ctx<'a> {
+    m: &'a Module,
+    g: GraphId,
+    fv_map: &'a HashMap<GraphId, Vec<NodeId>>,
+    program: &'a mut Program,
+    regs: HashMap<NodeId, Reg>,
+    const_regs: HashMap<NodeId, Reg>,
+    closure_regs: HashMap<GraphId, Reg>,
+    next_reg: Reg,
+    instrs: Vec<Instr>,
+}
+
+impl<'a> Ctx<'a> {
+    fn alloc(&mut self) -> Reg {
+        let r = self.next_reg;
+        self.next_reg += 1;
+        r
+    }
+
+    /// Register holding the value of `n` in this frame.
+    fn reg_for(&mut self, n: NodeId) -> Result<Reg, CompileError> {
+        if let Some(&r) = self.regs.get(&n) {
+            if r == u32::MAX {
+                return Err(CompileError("use of tail-call result".into()));
+            }
+            return Ok(r);
+        }
+        if let Some(&r) = self.const_regs.get(&n) {
+            return Ok(r);
+        }
+        let node = self.m.node(n);
+        if let Some(c) = node.constant() {
+            let r = match c {
+                Const::Graph(h) => self.make_closure(*h)?,
+                Const::Macro(op) => {
+                    return Err(CompileError(format!(
+                        "macro `{op}` reached the VM unexpanded; run the AD expansion pass first"
+                    )))
+                }
+                other => {
+                    let v = const_value(other);
+                    let idx = self.program.consts.len();
+                    self.program.consts.push(v);
+                    let r = self.alloc();
+                    self.instrs.push(Instr::Const { dst: r, idx });
+                    r
+                }
+            };
+            self.const_regs.insert(n, r);
+            return Ok(r);
+        }
+        Err(CompileError(format!(
+            "node {n} ({:?}) is not available in graph {} — owned by {:?}, captures {:?}",
+            node.debug_name,
+            self.m.graph(self.g).name,
+            node.graph,
+            self.fv_map.get(&self.g)
+        )))
+    }
+
+    /// Emit (or reuse) a MakeClosure for graph `h` in the current frame.
+    fn make_closure(&mut self, h: GraphId) -> Result<Reg, CompileError> {
+        if let Some(&r) = self.closure_regs.get(&h) {
+            return Ok(r);
+        }
+        let code = *self
+            .program
+            .graph_code
+            .get(&h)
+            .ok_or_else(|| CompileError(format!("graph {h} not in compilation set")))?;
+        let fvs = self.fv_map.get(&h).cloned().unwrap_or_default();
+        // Allocate dst BEFORE resolving captures that might themselves emit.
+        let cap_regs: Vec<Reg> = fvs
+            .iter()
+            .map(|&fv| self.reg_for(fv))
+            .collect::<Result<_, _>>()?;
+        let dst = self.alloc();
+        self.instrs.push(Instr::MakeClosure { dst, code, captures: cap_regs });
+        // Only cache when the closure captures nothing that could differ —
+        // within a single frame captures are SSA, so caching is always safe.
+        self.closure_regs.insert(h, dst);
+        Ok(dst)
+    }
+}
+
+/// Convert an IR constant to a runtime value (graphs/macros handled above).
+pub fn const_value(c: &Const) -> Value {
+    match c {
+        Const::Unit => Value::Unit,
+        Const::F64(v) => Value::F64(*v),
+        Const::I64(v) => Value::I64(*v),
+        Const::Bool(b) => Value::Bool(*b),
+        Const::Str(s) => Value::str(s.clone()),
+        Const::Tensor(t) => Value::Tensor(t.clone()),
+        Const::Prim(p) => Value::Prim(*p),
+        Const::Key(k) => Value::Key(*k),
+        Const::ZeroT => Value::ZeroT,
+        Const::Graph(_) | Const::Macro(_) => unreachable!("handled by compiler"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compiles_simple_graph() {
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let r = m.apply_prim(f, Prim::Mul, &[x, x]);
+        m.set_return(f, r);
+        let p = compile_program(&m, f).unwrap();
+        let code = &p.codes[p.graph_code[&f]];
+        assert_eq!(code.n_params, 1);
+        assert_eq!(code.n_captures, 0);
+        assert!(matches!(code.instrs[0], Instr::CallPrim { prim: Prim::Mul, .. }));
+        assert!(matches!(code.instrs.last(), Some(Instr::Return { .. })));
+    }
+
+    #[test]
+    fn tail_call_in_return_position() {
+        // f(x) = g(x); g(y) = y
+        let mut m = Module::new();
+        let g = m.add_graph("g");
+        let y = m.add_parameter(g, "y");
+        m.set_return(g, y);
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let gc = m.graph_constant(g);
+        let call = m.apply(f, vec![gc, x]);
+        m.set_return(f, call);
+
+        let p = compile_program(&m, f).unwrap();
+        let code = &p.codes[p.graph_code[&f]];
+        assert!(
+            code.instrs.iter().any(|i| matches!(i, Instr::TailCall { .. })),
+            "{:?}",
+            code.instrs
+        );
+        assert!(!code.instrs.iter().any(|i| matches!(i, Instr::Return { .. })));
+    }
+
+    #[test]
+    fn closure_captures_compiled() {
+        // f(x): g(y) = y + x; return g  — g captures x
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let g = m.add_graph("g");
+        let y = m.add_parameter(g, "y");
+        let b = m.apply_prim(g, Prim::Add, &[y, x]);
+        m.set_return(g, b);
+        let gc = m.graph_constant(g);
+        m.set_return(f, gc);
+
+        let p = compile_program(&m, f).unwrap();
+        let fcode = &p.codes[p.graph_code[&f]];
+        let gcode = &p.codes[p.graph_code[&g]];
+        assert_eq!(gcode.n_captures, 1);
+        assert!(fcode
+            .instrs
+            .iter()
+            .any(|i| matches!(i, Instr::MakeClosure { captures, .. } if captures.len() == 1)));
+    }
+
+    #[test]
+    fn unexpanded_macro_rejected() {
+        use crate::ir::MacroOp;
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let mac = m.constant(Const::Macro(MacroOp::Grad));
+        let sq = m.add_graph("sq");
+        let y = m.add_parameter(sq, "y");
+        let yy = m.apply_prim(sq, Prim::Mul, &[y, y]);
+        m.set_return(sq, yy);
+        let sqc = m.graph_constant(sq);
+        let gradf = m.apply(f, vec![mac, sqc]);
+        let call = m.apply(f, vec![gradf, x]);
+        m.set_return(f, call);
+        let err = compile_program(&m, f).unwrap_err();
+        assert!(err.0.contains("unexpanded"), "{err}");
+    }
+
+    #[test]
+    fn const_pool_shared() {
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let two = m.constant(Const::F64(2.0));
+        let a = m.apply_prim(f, Prim::Mul, &[x, two]);
+        let b = m.apply_prim(f, Prim::Add, &[a, two]);
+        m.set_return(f, b);
+        let p = compile_program(&m, f).unwrap();
+        let code = &p.codes[p.graph_code[&f]];
+        let const_loads = code.instrs.iter().filter(|i| matches!(i, Instr::Const { .. })).count();
+        assert_eq!(const_loads, 1, "constant loaded once per frame");
+    }
+}

@@ -1,0 +1,507 @@
+//! The bytecode interpreter.
+//!
+//! Frames live on an explicit heap stack, `TailCall` reuses the top frame, so
+//! the tail-recursive loops emitted by the front end (and the deep
+//! backpropagator chains built by reverse-mode AD) run without growing the
+//! native stack.
+
+use super::compile::{CodeObject, Instr, Program, Reg};
+use super::prims::eval_prim;
+use super::value::{Closure, Value};
+use crate::ir::GraphId;
+use anyhow::{anyhow, bail, Result};
+use std::cell::Cell;
+use std::rc::Rc;
+
+/// A runner for a fused backend segment (installed by the XLA backend).
+pub trait SegmentRunner {
+    /// Execute the segment on argument values.
+    fn run(&self, args: &[Value]) -> Result<Value>;
+    /// Human-readable description (for metrics).
+    fn describe(&self) -> String;
+}
+
+/// Execution statistics (metrics surface for the coordinator).
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub instrs: u64,
+    pub calls: u64,
+    pub prim_calls: u64,
+    pub max_depth: usize,
+    pub xla_calls: u64,
+}
+
+/// The virtual machine: a compiled program plus backend segment table.
+pub struct Vm {
+    pub program: Rc<Program>,
+    pub segments: Vec<Rc<dyn SegmentRunner>>,
+    pub max_depth: usize,
+    stats: Cell<ExecStats>,
+}
+
+struct Frame {
+    code: Rc<CodeObject>,
+    regs: Vec<Value>,
+    pc: usize,
+    /// Register in the *caller's* frame receiving our return value.
+    ret_dst: Reg,
+}
+
+impl Frame {
+    fn new(code: Rc<CodeObject>, captures: &[Value], args: Vec<Value>, ret_dst: Reg) -> Result<Frame> {
+        if args.len() != code.n_params {
+            bail!(
+                "function `{}` expects {} arguments, got {}",
+                code.name,
+                code.n_params,
+                args.len()
+            );
+        }
+        let mut regs = Vec::with_capacity(code.n_regs);
+        regs.extend(args);
+        regs.extend_from_slice(captures);
+        regs.resize(code.n_regs, Value::Unit);
+        Ok(Frame { code, regs, pc: 0, ret_dst })
+    }
+}
+
+impl Vm {
+    pub fn new(program: Program) -> Vm {
+        Vm { program: Rc::new(program), segments: Vec::new(), max_depth: 100_000, stats: Cell::new(ExecStats::default()) }
+    }
+
+    /// Statistics accumulated since the last [`Vm::take_stats`].
+    pub fn take_stats(&self) -> ExecStats {
+        self.stats.take()
+    }
+
+    /// Build the entry closure for a compiled graph (must capture nothing).
+    pub fn closure_for(&self, g: GraphId) -> Result<Value> {
+        let idx = *self
+            .program
+            .graph_code
+            .get(&g)
+            .ok_or_else(|| anyhow!("graph {g} was not compiled"))?;
+        let code = self.program.codes[idx].clone();
+        if code.n_captures != 0 {
+            bail!("graph `{}` captures free variables and cannot be an entry point", code.name);
+        }
+        Ok(Value::Closure(Rc::new(Closure { code, captures: Vec::new() })))
+    }
+
+    /// Call a compiled graph by id.
+    pub fn call_graph(&self, g: GraphId, args: Vec<Value>) -> Result<Value> {
+        let f = self.closure_for(g)?;
+        self.call_value(&f, args)
+    }
+
+    /// Call any function value (closure, primitive, partial application).
+    pub fn call_value(&self, f: &Value, args: Vec<Value>) -> Result<Value> {
+        let mut stats = self.stats.take();
+        let result = self.run(f, args, &mut stats);
+        self.stats.set(stats);
+        result
+    }
+
+    fn run(&self, f: &Value, mut args: Vec<Value>, stats: &mut ExecStats) -> Result<Value> {
+        // Resolve non-closure callables without a frame.
+        let mut func = f.clone();
+        loop {
+            match func {
+                Value::Prim(p) => {
+                    stats.prim_calls += 1;
+                    return eval_prim(p, &args);
+                }
+                Value::Partial(pa) => {
+                    let mut combined = pa.bound.clone();
+                    combined.extend(args);
+                    args = combined;
+                    func = pa.func.clone();
+                }
+                Value::Closure(_) => break,
+                other => bail!("cannot call non-function value of type {}", other.type_name()),
+            }
+        }
+        let closure = match func {
+            Value::Closure(c) => c,
+            _ => unreachable!(),
+        };
+
+        let mut stack: Vec<Frame> = Vec::with_capacity(64);
+        stack.push(Frame::new(closure.code.clone(), &closure.captures, args, 0)?);
+
+        loop {
+            let frame = stack.last_mut().expect("non-empty stack");
+            let instr = &frame.code.instrs[frame.pc];
+            frame.pc += 1;
+            stats.instrs += 1;
+            match instr {
+                Instr::Const { dst, idx } => {
+                    frame.regs[*dst as usize] = self.program.consts[*idx].clone();
+                }
+                Instr::MakeClosure { dst, code, captures } => {
+                    let cap: Vec<Value> =
+                        captures.iter().map(|&r| frame.regs[r as usize].clone()).collect();
+                    let code = self.program.codes[*code].clone();
+                    frame.regs[*dst as usize] = Value::Closure(Rc::new(Closure { code, captures: cap }));
+                }
+                Instr::CallPrim { dst, prim, args } => {
+                    stats.prim_calls += 1;
+                    // Hot path (§Perf): arity ≤ 4 covers every fixed-arity
+                    // primitive; a stack buffer avoids a heap Vec per op.
+                    let v = if args.len() <= 4 {
+                        let mut buf: [Value; 4] =
+                            [Value::Unit, Value::Unit, Value::Unit, Value::Unit];
+                        for (i, &r) in args.iter().enumerate() {
+                            buf[i] = frame.regs[r as usize].clone();
+                        }
+                        eval_prim(*prim, &buf[..args.len()])
+                    } else {
+                        let argv: Vec<Value> =
+                            args.iter().map(|&r| frame.regs[r as usize].clone()).collect();
+                        eval_prim(*prim, &argv)
+                    }
+                    .map_err(|e| anyhow!("in `{}`: {e}", frame.code.name))?;
+                    frame.regs[*dst as usize] = v;
+                }
+                Instr::XlaCall { dsts, exec, args } => {
+                    stats.xla_calls += 1;
+                    let argv: Vec<Value> =
+                        args.iter().map(|&r| frame.regs[r as usize].clone()).collect();
+                    let seg = self
+                        .segments
+                        .get(*exec)
+                        .ok_or_else(|| anyhow!("missing backend segment {exec}"))?;
+                    let outs = seg.run(&argv)?;
+                    let outs = match outs {
+                        Value::Tuple(items) if dsts.len() > 1 => items.to_vec(),
+                        single => vec![single],
+                    };
+                    if outs.len() != dsts.len() {
+                        bail!("segment returned {} values for {} registers", outs.len(), dsts.len());
+                    }
+                    for (d, v) in dsts.iter().zip(outs) {
+                        frame.regs[*d as usize] = v;
+                    }
+                }
+                Instr::Call { dst, func, args } => {
+                    stats.calls += 1;
+                    let dst = *dst;
+                    let callee = frame.regs[*func as usize].clone();
+                    let mut argv: Vec<Value> =
+                        args.iter().map(|&r| frame.regs[r as usize].clone()).collect();
+                    // Resolve partial chains / prims inline.
+                    let mut callee = callee;
+                    loop {
+                        match callee {
+                            Value::Prim(p) => {
+                                stats.prim_calls += 1;
+                                let v = eval_prim(p, &argv)?;
+                                let frame = stack.last_mut().unwrap();
+                                frame.regs[dst as usize] = v;
+                                break;
+                            }
+                            Value::Partial(pa) => {
+                                let mut combined = pa.bound.clone();
+                                combined.extend(argv);
+                                argv = combined;
+                                callee = pa.func.clone();
+                            }
+                            Value::Closure(c) => {
+                                if stack.len() >= self.max_depth {
+                                    bail!("recursion limit exceeded ({} frames)", self.max_depth);
+                                }
+                                let new = Frame::new(c.code.clone(), &c.captures, argv, dst)?;
+                                stack.push(new);
+                                break;
+                            }
+                            other => bail!(
+                                "cannot call non-function value of type {} (in `{}`)",
+                                other.type_name(),
+                                stack.last().unwrap().code.name
+                            ),
+                        }
+                    }
+                    stats.max_depth = stats.max_depth.max(stack.len());
+                }
+                Instr::TailCall { func, args } => {
+                    stats.calls += 1;
+                    let callee = frame.regs[*func as usize].clone();
+                    let mut argv: Vec<Value> =
+                        args.iter().map(|&r| frame.regs[r as usize].clone()).collect();
+                    let ret_dst = frame.ret_dst;
+                    let mut callee = callee;
+                    loop {
+                        match callee {
+                            Value::Prim(p) => {
+                                stats.prim_calls += 1;
+                                let v = eval_prim(p, &argv)?;
+                                stack.pop();
+                                match stack.last_mut() {
+                                    None => return Ok(v),
+                                    Some(caller) => caller.regs[ret_dst as usize] = v,
+                                }
+                                break;
+                            }
+                            Value::Partial(pa) => {
+                                let mut combined = pa.bound.clone();
+                                combined.extend(argv);
+                                argv = combined;
+                                callee = pa.func.clone();
+                            }
+                            Value::Closure(c) => {
+                                let new = Frame::new(c.code.clone(), &c.captures, argv, ret_dst)?;
+                                *stack.last_mut().unwrap() = new;
+                                break;
+                            }
+                            other => bail!("cannot tail-call value of type {}", other.type_name()),
+                        }
+                    }
+                }
+                Instr::Return { src } => {
+                    let v = frame.regs[*src as usize].clone();
+                    let ret_dst = frame.ret_dst;
+                    stack.pop();
+                    match stack.last_mut() {
+                        None => return Ok(v),
+                        Some(caller) => caller.regs[ret_dst as usize] = v,
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::compile::compile_program;
+    use super::*;
+    use crate::ir::Module;
+    use crate::parser::compile_source;
+
+    /// Full pipeline helper: source → IR → bytecode → run.
+    fn run(src: &str, entry: &str, args: Vec<Value>) -> Result<Value> {
+        let mut m = Module::new();
+        let graphs = compile_source(&mut m, src)?;
+        let g = graphs[entry];
+        let program = compile_program(&m, g).map_err(|e| anyhow!("{e}"))?;
+        let vm = Vm::new(program);
+        vm.call_graph(g, args)
+    }
+
+    fn runf(src: &str, entry: &str, args: &[f64]) -> f64 {
+        let vals = args.iter().map(|&v| Value::F64(v)).collect();
+        match run(src, entry, vals).unwrap() {
+            Value::F64(v) => v,
+            Value::I64(v) => v as f64,
+            Value::Tensor(t) => t.item().unwrap(),
+            other => panic!("expected number, got {other}"),
+        }
+    }
+
+    #[test]
+    fn arithmetic_expression() {
+        assert_eq!(runf("def f(x):\n    return x ** 3 + 2 * x\n", "f", &[2.0]), 12.0);
+    }
+
+    #[test]
+    fn conditionals() {
+        let src = "def f(x):\n    if x > 0:\n        return x\n    else:\n        return -x\n";
+        assert_eq!(runf(src, "f", &[3.0]), 3.0);
+        assert_eq!(runf(src, "f", &[-3.0]), 3.0);
+    }
+
+    #[test]
+    fn if_statement_with_merge() {
+        let src = "def f(x):\n    y = 0.0\n    if x > 1.0:\n        y = x * 10.0\n    return y + 1.0\n";
+        assert_eq!(runf(src, "f", &[2.0]), 21.0);
+        assert_eq!(runf(src, "f", &[0.5]), 1.0);
+    }
+
+    #[test]
+    fn while_loop_sums() {
+        let src = "def f(n):\n    s = 0\n    i = 0\n    while i < n:\n        s = s + i\n        i = i + 1\n    return s\n";
+        let r = run(src, "f", vec![Value::I64(10)]).unwrap();
+        assert!(matches!(r, Value::I64(45)));
+    }
+
+    #[test]
+    fn for_range_loop() {
+        let src = "def f(n):\n    s = 1\n    for i in range(n):\n        s = s * 2\n    return s\n";
+        let r = run(src, "f", vec![Value::I64(10)]).unwrap();
+        assert!(matches!(r, Value::I64(1024)));
+    }
+
+    #[test]
+    fn deep_loop_constant_stack() {
+        // one million iterations: requires working tail calls
+        let src = "def f(n):\n    i = 0\n    while i < n:\n        i = i + 1\n    return i\n";
+        let r = run(src, "f", vec![Value::I64(1_000_000)]).unwrap();
+        assert!(matches!(r, Value::I64(1_000_000)));
+    }
+
+    #[test]
+    fn recursion_factorial() {
+        let src = "def fact(n):\n    return 1 if n <= 1 else n * fact(n - 1)\n";
+        let r = run(src, "fact", vec![Value::I64(10)]).unwrap();
+        assert!(matches!(r, Value::I64(3628800)));
+    }
+
+    #[test]
+    fn mutual_recursion() {
+        let src = "def is_even(n):\n    return True if n == 0 else is_odd(n - 1)\n\ndef is_odd(n):\n    return False if n == 0 else is_even(n - 1)\n";
+        let r = run(src, "is_even", vec![Value::I64(10)]).unwrap();
+        assert!(matches!(r, Value::Bool(true)));
+        let r = run(src, "is_even", vec![Value::I64(7)]).unwrap();
+        assert!(matches!(r, Value::Bool(false)));
+    }
+
+    #[test]
+    fn closures_capture() {
+        let src = "def f(x):\n    def g(y):\n        return y + x\n    return g(10.0)\n";
+        assert_eq!(runf(src, "f", &[5.0]), 15.0);
+    }
+
+    #[test]
+    fn higher_order_functions() {
+        let src = "\
+def compose(f, g):
+    def h(x):
+        return f(g(x))
+    return h
+
+def double(x):
+    return x * 2
+
+def inc(x):
+    return x + 1
+
+def main(x):
+    h = compose(double, inc)
+    return h(x)
+";
+        assert_eq!(runf(src, "main", &[5.0]), 12.0);
+    }
+
+    #[test]
+    fn returned_closure_over_loop_var() {
+        let src = "\
+def make_adder(n):
+    return lambda x: x + n
+
+def main(a):
+    add3 = make_adder(3.0)
+    return add3(a)
+";
+        assert_eq!(runf(src, "main", &[4.0]), 7.0);
+    }
+
+    #[test]
+    fn cons_list_recursion() {
+        // sum over a cons list built with list literal sugar
+        let src = "\
+def sum_list(xs):
+    if is_nil(xs):
+        return 0
+    return xs[0] + sum_list(xs[1])
+
+def main():
+    return sum_list([1, 2, 3, 4])
+";
+        let r = run(src, "main", vec![]).unwrap();
+        assert!(matches!(r, Value::I64(10)));
+    }
+
+    #[test]
+    fn tree_recursion() {
+        // binary tree as nested tuples: (left, right) or leaf number
+        let src = "\
+def tree_sum(t):
+    if is_tuple_pair(t):
+        return tree_sum(t[0]) + tree_sum(t[1])
+    return t
+
+def is_tuple_pair(t):
+    return tuple_len_safe(t) == 2
+
+def tuple_len_safe(t):
+    return 0 if is_leaf(t) else len(t)
+
+def is_leaf(t):
+    return is_num(t)
+
+def is_num(t):
+    return not is_nil(t) and t == t and is_scalar(t)
+
+def is_scalar(t):
+    return True
+
+def main():
+    return 1
+";
+        // This test only checks the pipeline compiles deeply-nested defs;
+        // the real tree model (with proper tags) lives in examples/.
+        let r = run(src, "main", vec![]).unwrap();
+        assert!(matches!(r, Value::I64(1)));
+    }
+
+    #[test]
+    fn short_circuit_protects_recursion() {
+        let src = "def f(n):\n    return n <= 0 or f(n - 1)\n";
+        let r = run(src, "f", vec![Value::I64(100)]).unwrap();
+        assert!(matches!(r, Value::Bool(true)));
+    }
+
+    #[test]
+    fn tensors_through_language() {
+        let src = "def f(w, x):\n    return sum(matmul(w, x))\n";
+        let w = Value::Tensor(crate::tensor::Tensor::from_f64_shaped(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]).unwrap());
+        let x = Value::Tensor(crate::tensor::Tensor::from_f64_shaped(vec![1.0, 1.0], vec![2]).unwrap());
+        let r = run(src, "f", vec![w, x]).unwrap();
+        match r {
+            Value::Tensor(t) => assert_eq!(t.item().unwrap(), 10.0),
+            other => panic!("{other}"),
+        }
+    }
+
+    #[test]
+    fn runtime_error_reports_function() {
+        let src = "def f(x):\n    return x[0]\n";
+        let e = run(src, "f", vec![Value::F64(1.0)]).unwrap_err();
+        assert!(format!("{e}").contains("tuple"), "{e}");
+    }
+
+    #[test]
+    fn arity_mismatch_reported() {
+        let src = "def f(x, y):\n    return x\n";
+        let e = run(src, "f", vec![Value::F64(1.0)]).unwrap_err();
+        assert!(format!("{e}").contains("expects 2 arguments"), "{e}");
+    }
+
+    #[test]
+    fn stats_collected() {
+        let mut m = Module::new();
+        let graphs = compile_source(&mut m, "def f(x):\n    return x * x + 1.0\n").unwrap();
+        let g = graphs["f"];
+        let program = compile_program(&m, g).unwrap();
+        let vm = Vm::new(program);
+        vm.call_graph(g, vec![Value::F64(2.0)]).unwrap();
+        let stats = vm.take_stats();
+        assert!(stats.instrs >= 3);
+        assert!(stats.prim_calls >= 2);
+        // stats reset after take
+        assert_eq!(vm.take_stats().instrs, 0);
+    }
+
+    #[test]
+    fn recursion_limit_enforced() {
+        let mut m = Module::new();
+        let graphs = compile_source(&mut m, "def f(x):\n    return 1 + f(x)\n").unwrap();
+        let g = graphs["f"];
+        let program = compile_program(&m, g).unwrap();
+        let mut vm = Vm::new(program);
+        vm.max_depth = 100;
+        let e = vm.call_graph(g, vec![Value::F64(1.0)]).unwrap_err();
+        assert!(format!("{e}").contains("recursion limit"), "{e}");
+    }
+}

@@ -1,0 +1,18 @@
+//! Myia's virtual machine.
+//!
+//! Graphs are compiled to register bytecode after flat closure conversion
+//! ([`compile`]), then executed by an explicit-stack interpreter with proper
+//! tail calls ([`exec`]). Primitive semantics live in [`prims`]; the runtime
+//! value universe in [`value`]. The backend pass (see `crate::backend`)
+//! replaces straight-line tensor regions with `XlaCall` instructions that
+//! dispatch into compiled XLA executables — the paper's TVM role.
+
+pub mod compile;
+pub mod exec;
+pub mod prims;
+pub mod value;
+
+pub use compile::{compile_program, CodeObject, Instr, Program, Reg};
+pub use exec::{ExecStats, SegmentRunner, Vm};
+pub use prims::{eval_prim, gadd, zeros_like};
+pub use value::{Closure, EnvMap, PartialApp, Value};

@@ -1,0 +1,756 @@
+//! Evaluation rules for every primitive.
+//!
+//! Arithmetic primitives are polymorphic over scalars and tensors (with
+//! NumPy broadcasting); `gadd`/`zeros_like` implement the generic tangent
+//! arithmetic the AD transform relies on (§3.2); the env primitives carry
+//! gradients of free variables; `switch` powers all lowered control flow.
+
+use super::value::{EnvMap, PartialApp, Value};
+use crate::ir::Prim;
+use crate::tensor::{ops, DType, Rng, Tensor};
+use anyhow::{anyhow, bail, Result};
+use std::rc::Rc;
+
+/// Evaluate a primitive on argument values.
+pub fn eval_prim(p: Prim, args: &[Value]) -> Result<Value> {
+    use Prim::*;
+    if let Some(ar) = p.arity() {
+        if args.len() != ar {
+            bail!("{p} expects {ar} arguments, got {}", args.len());
+        }
+    }
+    // Symbolic-zero propagation: backpropagator graphs are linear in the
+    // incoming cotangent, so ZeroT absorbs through the linear positions of
+    // the primitives they use (§3.2: unused gradients cost nothing).
+    if args.iter().any(|a| matches!(a, Value::ZeroT)) {
+        if let Some(v) = zerot_shortcut(p, args)? {
+            return Ok(v);
+        }
+    }
+    match p {
+        Add | Sub | Mul | Div | Pow | Maximum | Minimum | FloorDiv | Mod => {
+            numeric_binop(p, &args[0], &args[1])
+        }
+        Neg | Exp | Ln | Tanh | Sqrt | Sin | Cos | Relu | Sigmoid | Abs | Sign | Item
+        | ScalarToTensor | CastF32 | CastF64 => numeric_unop(p, &args[0]),
+        Lt | Gt | Le | Ge | Eq | Ne => compare(p, &args[0], &args[1]),
+        Not => match &args[0] {
+            Value::Bool(b) => Ok(Value::Bool(!b)),
+            other => bail!("not_ expects bool, got {}", other.type_name()),
+        },
+        BoolAnd | BoolOr => match (&args[0], &args[1]) {
+            (Value::Bool(a), Value::Bool(b)) => {
+                Ok(Value::Bool(if p == BoolAnd { *a && *b } else { *a || *b }))
+            }
+            (a, b) => bail!("{p} expects bools, got {} and {}", a.type_name(), b.type_name()),
+        },
+        Switch => match &args[0] {
+            Value::Bool(c) => Ok(if *c { args[1].clone() } else { args[2].clone() }),
+            other => bail!("switch condition must be bool, got {}", other.type_name()),
+        },
+        MakeTuple => Ok(Value::tuple(args.to_vec())),
+        TupleGetItem => {
+            let items = as_tuple(&args[0], "tuple_getitem")?;
+            let i = args[1]
+                .as_i64()
+                .ok_or_else(|| anyhow!("tuple index must be an integer"))?;
+            let n = items.len() as i64;
+            let idx = if i < 0 { i + n } else { i };
+            if idx < 0 || idx >= n {
+                bail!("tuple index {i} out of range for length {n}");
+            }
+            Ok(items[idx as usize].clone())
+        }
+        TupleLen => Ok(Value::I64(as_tuple(&args[0], "len")?.len() as i64)),
+        TupleInject => {
+            let i = args[0].as_i64().ok_or_else(|| anyhow!("tuple_inject index"))? as usize;
+            let n = args[1].as_i64().ok_or_else(|| anyhow!("tuple_inject length"))? as usize;
+            if i >= n {
+                bail!("tuple_inject slot {i} out of range for length {n}");
+            }
+            let mut items = vec![Value::ZeroT; n];
+            items[i] = args[2].clone();
+            Ok(Value::tuple(items))
+        }
+        IsNil => Ok(Value::Bool(matches!(args[0], Value::Unit))),
+        NewEnv => Ok(Value::Env(Rc::new(EnvMap::new()))),
+        EnvSetItem => {
+            let mut env: EnvMap = match &args[0] {
+                Value::Env(e) => (**e).clone(),
+                Value::ZeroT => EnvMap::new(),
+                other => bail!("env_setitem expects env, got {}", other.type_name()),
+            };
+            let key = match &args[1] {
+                Value::Key(k) => *k,
+                other => bail!("env_setitem expects key, got {}", other.type_name()),
+            };
+            env.insert(key, args[2].clone());
+            Ok(Value::Env(Rc::new(env)))
+        }
+        EnvGetItem => {
+            let key = match &args[1] {
+                Value::Key(k) => *k,
+                other => bail!("env_getitem expects key, got {}", other.type_name()),
+            };
+            match &args[0] {
+                Value::Env(e) => Ok(e.get(&key).cloned().unwrap_or(Value::ZeroT)),
+                Value::ZeroT => Ok(Value::ZeroT),
+                other => bail!("env_getitem expects env, got {}", other.type_name()),
+            }
+        }
+        Gadd => gadd(&args[0], &args[1]),
+        ZerosLike => Ok(zeros_like(&args[0])),
+        OnesLike => ones_like(&args[0]),
+        MatMul => {
+            let a = need_tensor(&args[0], "matmul")?;
+            let b = need_tensor(&args[1], "matmul")?;
+            Ok(Value::Tensor(crate::tensor::matmul(&a, &b).map_err(err)?))
+        }
+        Transpose => {
+            let a = need_tensor(&args[0], "transpose")?;
+            Ok(Value::Tensor(ops::transpose(&a).map_err(err)?))
+        }
+        Reshape => {
+            let a = need_tensor(&args[0], "reshape")?;
+            let shape = shape_arg(&args[1])?;
+            Ok(Value::Tensor(a.reshape(&shape).map_err(err)?))
+        }
+        BroadcastTo => {
+            let a = need_tensor(&args[0], "broadcast_to")?;
+            let shape = shape_arg(&args[1])?;
+            Ok(Value::Tensor(ops::broadcast_to(&a, &shape).map_err(err)?))
+        }
+        SumTo => {
+            let a = need_tensor(&args[0], "sum_to")?;
+            let shape = shape_arg(&args[1])?;
+            Ok(Value::Tensor(ops::sum_to(&a, &shape).map_err(err)?))
+        }
+        ShapeOf => {
+            let a = need_tensor(&args[0], "shape")?;
+            Ok(Value::tuple(a.shape().iter().map(|&d| Value::I64(d as i64)).collect()))
+        }
+        ReduceSum => {
+            let a = need_tensor(&args[0], "sum")?;
+            Ok(Value::Tensor(ops::reduce_sum_all(&a)))
+        }
+        ReduceMean => {
+            let a = need_tensor(&args[0], "mean")?;
+            Ok(Value::Tensor(ops::reduce_mean_all(&a)))
+        }
+        ReduceSumAxis => {
+            let a = need_tensor(&args[0], "sum_axis")?;
+            let axis = args[1].as_i64().ok_or_else(|| anyhow!("sum_axis axis"))? as usize;
+            Ok(Value::Tensor(ops::reduce_sum_axis(&a, axis).map_err(err)?))
+        }
+        SoftmaxLast => {
+            let a = need_tensor(&args[0], "softmax")?;
+            Ok(Value::Tensor(ops::softmax_last(&a).map_err(err)?))
+        }
+        OneHot => {
+            let a = need_tensor(&args[0], "one_hot")?;
+            let depth = args[1].as_i64().ok_or_else(|| anyhow!("one_hot depth"))? as usize;
+            Ok(Value::Tensor(ops::one_hot(&a, depth).map_err(err)?))
+        }
+        ArgmaxLast => {
+            let a = need_tensor(&args[0], "argmax")?;
+            Ok(Value::Tensor(ops::argmax_last(&a).map_err(err)?))
+        }
+        Concat0 => {
+            let a = need_tensor(&args[0], "concat0")?;
+            let b = need_tensor(&args[1], "concat0")?;
+            Ok(Value::Tensor(ops::concat0(&[a, b]).map_err(err)?))
+        }
+        TakeRow => {
+            let a = need_tensor(&args[0], "take_row")?;
+            let i = args[1].as_i64().ok_or_else(|| anyhow!("take_row index"))? as usize;
+            Ok(Value::Tensor(ops::take_row(&a, i).map_err(err)?))
+        }
+        Where => {
+            let c = need_tensor(&args[0], "where_")?;
+            let a = need_tensor(&args[1], "where_")?;
+            let b = need_tensor(&args[2], "where_")?;
+            Ok(Value::Tensor(ops::where_(&c, &a, &b).map_err(err)?))
+        }
+        Step => match &args[0] {
+            Value::Tensor(t) => Ok(Value::Tensor(ops::binary_op(
+                t,
+                &Tensor::scalar_f64(0.0),
+                |x, _| (x > 0.0) as i64 as f64,
+                None,
+            )
+            .map_err(err)?)),
+            other => {
+                let x = other
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("step expects number, got {}", other.type_name()))?;
+                Ok(Value::F64(if x > 0.0 { 1.0 } else { 0.0 }))
+            }
+        },
+        SumToLike => sum_to_like(&args[0], &args[1]),
+        BroadcastLike => broadcast_like(&args[0], &args[1]),
+        SumLastKeep => {
+            let a = need_tensor(&args[0], "sum_last_keep")?;
+            Ok(Value::Tensor(ops::sum_last_keep(&a).map_err(err)?))
+        }
+        Print => {
+            println!("{}", args[0]);
+            Ok(args[0].clone())
+        }
+        Raise => {
+            bail!("{}", args[0])
+        }
+        RngSplit => {
+            let seed = args[0].as_i64().ok_or_else(|| anyhow!("rng_split seed"))? as u64;
+            let (a, b) = split_seed(seed);
+            Ok(Value::tuple(vec![Value::I64(a as i64), Value::I64(b as i64)]))
+        }
+        RngUniform | RngNormal => {
+            let seed = args[0].as_i64().ok_or_else(|| anyhow!("rng seed"))? as u64;
+            let shape = shape_arg(&args[1])?;
+            let mut rng = Rng::new(seed);
+            let t = if p == RngUniform {
+                rng.uniform_tensor(&shape, 0.0, 1.0)
+            } else {
+                rng.normal_tensor(&shape, 1.0)
+            };
+            Ok(Value::Tensor(t))
+        }
+        Partial => Ok(Value::Partial(Rc::new(PartialApp {
+            func: args[0].clone(),
+            bound: vec![args[1].clone()],
+        }))),
+    }
+}
+
+fn err(e: crate::tensor::TensorError) -> anyhow::Error {
+    anyhow!("{e}")
+}
+
+/// ZeroT absorption rules for the linear positions of primitives.
+/// Returns `Ok(None)` when the primitive has no shortcut (normal evaluation
+/// proceeds and may legitimately error).
+fn zerot_shortcut(p: Prim, args: &[Value]) -> Result<Option<Value>> {
+    use Prim::*;
+    let z = |i: usize| matches!(args.get(i), Some(Value::ZeroT));
+    Ok(match p {
+        // Linear unary ops.
+        Neg | Transpose | ReduceSum | ReduceMean | SumLastKeep | Item | ScalarToTensor
+        | CastF32 | CastF64 if z(0) => Some(Value::ZeroT),
+        // ZeroT times / through anything is ZeroT.
+        Mul | MatMul if z(0) || z(1) => Some(Value::ZeroT),
+        Div if z(0) => Some(Value::ZeroT),
+        // ZeroT is the additive identity.
+        Add if z(0) => Some(args[1].clone()),
+        Add if z(1) => Some(args[0].clone()),
+        Sub if z(1) => Some(args[0].clone()),
+        Sub if z(0) => Some(numeric_unop(Neg, &args[1])?),
+        // Shape ops on a zero cotangent stay zero.
+        Reshape | BroadcastTo | SumTo | TupleGetItem if z(0) => Some(Value::ZeroT),
+        _ => None,
+    })
+}
+
+fn as_tuple<'v>(v: &'v Value, what: &str) -> Result<&'v Rc<Vec<Value>>> {
+    match v {
+        Value::Tuple(items) => Ok(items),
+        other => bail!("{what} expects a tuple, got {}", other.type_name()),
+    }
+}
+
+fn need_tensor(v: &Value, what: &str) -> Result<Tensor> {
+    v.to_tensor()
+        .ok_or_else(|| anyhow!("{what} expects a tensor (or scalar), got {}", v.type_name()))
+}
+
+/// Shape tuples are tuples of non-negative integers.
+fn shape_arg(v: &Value) -> Result<Vec<usize>> {
+    let items = as_tuple(v, "shape argument")?;
+    items
+        .iter()
+        .map(|it| {
+            it.as_i64()
+                .filter(|&d| d >= 0)
+                .map(|d| d as usize)
+                .ok_or_else(|| anyhow!("shape entries must be non-negative integers, got {it}"))
+        })
+        .collect()
+}
+
+/// `sum_to_like(d, x)`: reduce `d` down to the shape of `x` — the adjoint of
+/// implicit broadcasting in binary ops. ZeroT passes through.
+fn sum_to_like(d: &Value, x: &Value) -> Result<Value> {
+    if matches!(d, Value::ZeroT) {
+        return Ok(Value::ZeroT);
+    }
+    match x {
+        Value::Tensor(xt) => {
+            let dt = need_tensor(d, "sum_to_like")?;
+            if dt.shape() == xt.shape() {
+                return Ok(Value::Tensor(dt));
+            }
+            if dt.rank() < xt.rank() {
+                // Gradient already smaller (degenerate); broadcast up.
+                return Ok(Value::Tensor(ops::broadcast_to(&dt, xt.shape()).map_err(err)?));
+            }
+            Ok(Value::Tensor(ops::sum_to(&dt, xt.shape()).map_err(err)?))
+        }
+        // Scalar target: total sum.
+        _ => match d {
+            Value::Tensor(dt) => Ok(Value::F64(ops::reduce_sum_all(dt).item().map_err(err)?)),
+            other => Ok(other.clone()),
+        },
+    }
+}
+
+/// `broadcast_like(v, t)`: broadcast `v` to the shape of `t` — the adjoint of
+/// `sum_to_like`.
+fn broadcast_like(v: &Value, t: &Value) -> Result<Value> {
+    if matches!(v, Value::ZeroT) {
+        return Ok(Value::ZeroT);
+    }
+    match t {
+        Value::Tensor(tt) => {
+            let vt = need_tensor(v, "broadcast_like")?;
+            Ok(Value::Tensor(ops::broadcast_to(&vt, tt.shape()).map_err(err)?))
+        }
+        _ => match v {
+            Value::Tensor(vt) => Ok(Value::F64(vt.item().map_err(err)?)),
+            other => Ok(other.clone()),
+        },
+    }
+}
+
+/// SplitMix64-style seed derivation for `rng_split`.
+fn split_seed(seed: u64) -> (u64, u64) {
+    fn mix(mut z: u64) -> u64 {
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+    let a = mix(seed.wrapping_add(0x9E3779B97F4A7C15));
+    let b = mix(seed.wrapping_add(0x3C6EF372FE94F82A));
+    (a | 1, b | 1)
+}
+
+fn both_int(a: &Value, b: &Value) -> Option<(i64, i64)> {
+    match (a, b) {
+        (Value::I64(x), Value::I64(y)) => Some((*x, *y)),
+        (Value::I64(x), Value::Bool(y)) => Some((*x, *y as i64)),
+        (Value::Bool(x), Value::I64(y)) => Some((*x as i64, *y)),
+        (Value::Bool(x), Value::Bool(y)) => Some((*x as i64, *y as i64)),
+        _ => None,
+    }
+}
+
+fn numeric_binop(p: Prim, a: &Value, b: &Value) -> Result<Value> {
+    use Prim::*;
+    // Tensor path if either side is a tensor.
+    if matches!(a, Value::Tensor(_)) || matches!(b, Value::Tensor(_)) {
+        let ta = need_tensor(a, p.name())?;
+        let tb = need_tensor(b, p.name())?;
+        let r = match p {
+            Add => ops::add(&ta, &tb),
+            Sub => ops::sub(&ta, &tb),
+            Mul => ops::mul(&ta, &tb),
+            Div => ops::div(&ta, &tb),
+            Pow => ops::pow(&ta, &tb),
+            Maximum => ops::maximum(&ta, &tb),
+            Minimum => ops::minimum(&ta, &tb),
+            FloorDiv => ops::div(&ta, &tb).map(|t| ops::floor(&t)),
+            Mod => ops::binary_op(&ta, &tb, |x, y| x.rem_euclid(y), None),
+            _ => unreachable!(),
+        }
+        .map_err(err)?;
+        return Ok(Value::Tensor(r));
+    }
+    // Integer-preserving scalar path.
+    if let Some((x, y)) = both_int(a, b) {
+        let v = match p {
+            Add => Value::I64(x.wrapping_add(y)),
+            Sub => Value::I64(x.wrapping_sub(y)),
+            Mul => Value::I64(x.wrapping_mul(y)),
+            Div => {
+                if y == 0 {
+                    bail!("division by zero");
+                }
+                Value::F64(x as f64 / y as f64)
+            }
+            FloorDiv => {
+                if y == 0 {
+                    bail!("integer division by zero");
+                }
+                Value::I64(x.div_euclid(y))
+            }
+            Mod => {
+                if y == 0 {
+                    bail!("modulo by zero");
+                }
+                Value::I64(x.rem_euclid(y))
+            }
+            Pow => {
+                if y >= 0 {
+                    Value::I64(x.pow(y.min(u32::MAX as i64) as u32))
+                } else {
+                    Value::F64((x as f64).powi(y as i32))
+                }
+            }
+            Maximum => Value::I64(x.max(y)),
+            Minimum => Value::I64(x.min(y)),
+            _ => unreachable!(),
+        };
+        return Ok(v);
+    }
+    // Float scalar path.
+    let (x, y) = match (a.as_f64(), b.as_f64()) {
+        (Some(x), Some(y)) => (x, y),
+        _ => bail!("{} expects numbers, got {} and {}", p.name(), a.type_name(), b.type_name()),
+    };
+    let v = match p {
+        Add => x + y,
+        Sub => x - y,
+        Mul => x * y,
+        Div => x / y,
+        Pow => x.powf(y),
+        Maximum => x.max(y),
+        Minimum => x.min(y),
+        FloorDiv => (x / y).floor(),
+        Mod => x.rem_euclid(y),
+        _ => unreachable!(),
+    };
+    Ok(Value::F64(v))
+}
+
+fn numeric_unop(p: Prim, a: &Value) -> Result<Value> {
+    use Prim::*;
+    match p {
+        Item => {
+            let t = need_tensor(a, "item")?;
+            return Ok(Value::F64(t.item().map_err(err)?));
+        }
+        ScalarToTensor => {
+            return Ok(Value::Tensor(need_tensor(a, "to_tensor")?));
+        }
+        CastF32 => {
+            return Ok(Value::Tensor(need_tensor(a, "cast_f32")?.cast(DType::F32)));
+        }
+        CastF64 => {
+            return Ok(Value::Tensor(need_tensor(a, "cast_f64")?.cast(DType::F64)));
+        }
+        _ => {}
+    }
+    if let Value::Tensor(t) = a {
+        let r = match p {
+            Neg => ops::neg(t),
+            Exp => ops::exp(t),
+            Ln => ops::ln(t),
+            Tanh => ops::tanh(t),
+            Sqrt => ops::sqrt(t),
+            Sin => ops::sin(t),
+            Cos => ops::cos(t),
+            Relu => ops::relu(t),
+            Sigmoid => ops::sigmoid(t),
+            Abs => ops::abs(t),
+            Sign => ops::sign(t),
+            _ => unreachable!(),
+        };
+        return Ok(Value::Tensor(r));
+    }
+    if p == Neg {
+        if let Value::I64(v) = a {
+            return Ok(Value::I64(-v));
+        }
+    }
+    if p == Abs {
+        if let Value::I64(v) = a {
+            return Ok(Value::I64(v.abs()));
+        }
+    }
+    let x = a
+        .as_f64()
+        .ok_or_else(|| anyhow!("{} expects a number, got {}", p.name(), a.type_name()))?;
+    let v = match p {
+        Neg => -x,
+        Exp => x.exp(),
+        Ln => x.ln(),
+        Tanh => x.tanh(),
+        Sqrt => x.sqrt(),
+        Sin => x.sin(),
+        Cos => x.cos(),
+        Relu => x.max(0.0),
+        Sigmoid => 1.0 / (1.0 + (-x).exp()),
+        Abs => x.abs(),
+        Sign => x.signum(),
+        _ => unreachable!(),
+    };
+    Ok(Value::F64(v))
+}
+
+fn compare(p: Prim, a: &Value, b: &Value) -> Result<Value> {
+    use Prim::*;
+    if matches!(a, Value::Tensor(_)) || matches!(b, Value::Tensor(_)) {
+        let ta = need_tensor(a, p.name())?;
+        let tb = need_tensor(b, p.name())?;
+        let r = match p {
+            Lt => ops::lt(&ta, &tb),
+            Gt => ops::gt(&ta, &tb),
+            Le => ops::le(&ta, &tb),
+            Ge => ops::ge(&ta, &tb),
+            Eq => ops::eq(&ta, &tb),
+            Ne => ops::ne(&ta, &tb),
+            _ => unreachable!(),
+        }
+        .map_err(err)?;
+        return Ok(Value::Tensor(r));
+    }
+    // Structural equality for non-numeric values.
+    if matches!(p, Eq | Ne) && (a.as_f64().is_none() || b.as_f64().is_none()) {
+        let eq = a.structural_eq(b);
+        return Ok(Value::Bool(if p == Eq { eq } else { !eq }));
+    }
+    let (x, y) = match (a.as_f64(), b.as_f64()) {
+        (Some(x), Some(y)) => (x, y),
+        _ => bail!("{} expects numbers, got {} and {}", p.name(), a.type_name(), b.type_name()),
+    };
+    let v = match p {
+        Lt => x < y,
+        Gt => x > y,
+        Le => x <= y,
+        Ge => x >= y,
+        Eq => x == y,
+        Ne => x != y,
+        _ => unreachable!(),
+    };
+    Ok(Value::Bool(v))
+}
+
+/// Generic gradient addition (§3.2): the monoid over tangents. `ZeroT` is
+/// the identity; tuples add elementwise; envs merge with recursive `gadd`.
+pub fn gadd(a: &Value, b: &Value) -> Result<Value> {
+    match (a, b) {
+        (Value::ZeroT, x) | (x, Value::ZeroT) => Ok(x.clone()),
+        (Value::Unit, Value::Unit) => Ok(Value::Unit),
+        (Value::Tuple(xs), Value::Tuple(ys)) => {
+            if xs.len() != ys.len() {
+                bail!("gadd tuple length mismatch: {} vs {}", xs.len(), ys.len());
+            }
+            let items: Result<Vec<Value>> =
+                xs.iter().zip(ys.iter()).map(|(x, y)| gadd(x, y)).collect();
+            Ok(Value::tuple(items?))
+        }
+        (Value::Env(x), Value::Env(y)) => {
+            let mut out = (**x).clone();
+            for (k, v) in y.iter() {
+                let merged = match out.get(k) {
+                    Some(existing) => gadd(existing, v)?,
+                    None => v.clone(),
+                };
+                out.insert(*k, merged);
+            }
+            Ok(Value::Env(Rc::new(out)))
+        }
+        _ => numeric_binop(Prim::Add, a, b)
+            .map_err(|_| anyhow!("gadd cannot combine {} and {}", a.type_name(), b.type_name())),
+    }
+}
+
+/// Zero tangent with the structure of `x`.
+pub fn zeros_like(x: &Value) -> Value {
+    match x {
+        Value::F64(_) => Value::F64(0.0),
+        Value::I64(_) => Value::I64(0),
+        Value::Bool(_) => Value::Bool(false),
+        Value::Tensor(t) => Value::Tensor(Tensor::zeros(t.dtype(), t.shape())),
+        Value::Tuple(items) => Value::tuple(items.iter().map(zeros_like).collect()),
+        // The gradient of a function value is an env of free-variable
+        // gradients; its zero is the empty env.
+        Value::Closure(_) | Value::Prim(_) | Value::Partial(_) => Value::Env(Rc::new(EnvMap::new())),
+        Value::Env(_) => Value::Env(Rc::new(EnvMap::new())),
+        Value::Unit | Value::Str(_) | Value::Key(_) => Value::Unit,
+        Value::ZeroT => Value::ZeroT,
+    }
+}
+
+fn ones_like(x: &Value) -> Result<Value> {
+    Ok(match x {
+        Value::F64(_) => Value::F64(1.0),
+        Value::I64(_) => Value::I64(1),
+        Value::Tensor(t) => Value::Tensor(Tensor::ones(t.dtype(), t.shape())),
+        Value::Tuple(items) => {
+            let v: Result<Vec<Value>> = items.iter().map(ones_like).collect();
+            Value::tuple(v?)
+        }
+        other => bail!("ones_like of {}", other.type_name()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(p: Prim, args: &[Value]) -> Value {
+        eval_prim(p, args).unwrap()
+    }
+
+    #[test]
+    fn scalar_arithmetic() {
+        assert!(matches!(ev(Prim::Add, &[Value::I64(2), Value::I64(3)]), Value::I64(5)));
+        assert!(matches!(ev(Prim::Div, &[Value::I64(7), Value::I64(2)]), Value::F64(v) if v == 3.5));
+        assert!(matches!(ev(Prim::FloorDiv, &[Value::I64(7), Value::I64(2)]), Value::I64(3)));
+        assert!(matches!(ev(Prim::Pow, &[Value::I64(2), Value::I64(10)]), Value::I64(1024)));
+        assert!(matches!(ev(Prim::Pow, &[Value::F64(2.0), Value::F64(0.5)]), Value::F64(_)));
+        assert!(matches!(ev(Prim::Mod, &[Value::I64(-7), Value::I64(3)]), Value::I64(2)));
+        assert!(eval_prim(Prim::Div, &[Value::I64(1), Value::I64(0)]).is_err());
+    }
+
+    #[test]
+    fn mixed_scalar_tensor() {
+        let t = Value::Tensor(Tensor::from_f64(&[1.0, 2.0]));
+        let r = ev(Prim::Mul, &[t.clone(), Value::F64(3.0)]);
+        match r {
+            Value::Tensor(t) => assert_eq!(t.as_f64_vec(), vec![3.0, 6.0]),
+            other => panic!("{other:?}"),
+        }
+        let r = ev(Prim::Lt, &[t, Value::F64(1.5)]);
+        assert!(matches!(r, Value::Tensor(ref t) if t.dtype() == DType::Bool));
+    }
+
+    #[test]
+    fn comparisons_and_bools() {
+        assert!(matches!(ev(Prim::Lt, &[Value::I64(1), Value::I64(2)]), Value::Bool(true)));
+        assert!(matches!(ev(Prim::Eq, &[Value::Unit, Value::Unit]), Value::Bool(true)));
+        assert!(matches!(ev(Prim::Ne, &[Value::str("a"), Value::str("b")]), Value::Bool(true)));
+        assert!(matches!(ev(Prim::Not, &[Value::Bool(false)]), Value::Bool(true)));
+        assert!(eval_prim(Prim::Not, &[Value::I64(1)]).is_err());
+    }
+
+    #[test]
+    fn switch_selects() {
+        let r = ev(Prim::Switch, &[Value::Bool(true), Value::I64(1), Value::I64(2)]);
+        assert!(matches!(r, Value::I64(1)));
+        let r = ev(Prim::Switch, &[Value::Bool(false), Value::I64(1), Value::I64(2)]);
+        assert!(matches!(r, Value::I64(2)));
+        assert!(eval_prim(Prim::Switch, &[Value::I64(1), Value::I64(1), Value::I64(2)]).is_err());
+    }
+
+    #[test]
+    fn tuple_ops() {
+        let t = ev(Prim::MakeTuple, &[Value::I64(1), Value::F64(2.0)]);
+        assert!(matches!(ev(Prim::TupleGetItem, &[t.clone(), Value::I64(0)]), Value::I64(1)));
+        assert!(matches!(ev(Prim::TupleGetItem, &[t.clone(), Value::I64(-1)]), Value::F64(_)));
+        assert!(matches!(ev(Prim::TupleLen, &[t.clone()]), Value::I64(2)));
+        assert!(eval_prim(Prim::TupleGetItem, &[t.clone(), Value::I64(5)]).is_err());
+        let inj = ev(Prim::TupleInject, &[Value::I64(1), Value::I64(3), Value::F64(7.0)]);
+        match inj {
+            Value::Tuple(items) => {
+                assert!(matches!(items[0], Value::ZeroT));
+                assert!(matches!(items[1], Value::F64(v) if v == 7.0));
+                assert!(matches!(items[2], Value::ZeroT));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(ev(Prim::IsNil, &[Value::Unit]), Value::Bool(true)));
+        assert!(matches!(ev(Prim::IsNil, &[Value::I64(0)]), Value::Bool(false)));
+    }
+
+    #[test]
+    fn env_ops_roundtrip() {
+        let e = ev(Prim::NewEnv, &[]);
+        let k = Value::Key(42);
+        let e2 = ev(Prim::EnvSetItem, &[e.clone(), k.clone(), Value::F64(1.5)]);
+        assert!(matches!(ev(Prim::EnvGetItem, &[e2.clone(), k.clone()]), Value::F64(v) if v == 1.5));
+        // missing key → ZeroT
+        assert!(matches!(ev(Prim::EnvGetItem, &[e, k.clone()]), Value::ZeroT));
+        // getitem on ZeroT env → ZeroT
+        assert!(matches!(ev(Prim::EnvGetItem, &[Value::ZeroT, k]), Value::ZeroT));
+    }
+
+    #[test]
+    fn gadd_monoid() {
+        // identity
+        assert!(matches!(gadd(&Value::ZeroT, &Value::F64(3.0)).unwrap(), Value::F64(v) if v == 3.0));
+        assert!(matches!(gadd(&Value::F64(3.0), &Value::ZeroT).unwrap(), Value::F64(v) if v == 3.0));
+        // tuples
+        let a = Value::tuple(vec![Value::F64(1.0), Value::ZeroT]);
+        let b = Value::tuple(vec![Value::F64(2.0), Value::F64(5.0)]);
+        match gadd(&a, &b).unwrap() {
+            Value::Tuple(items) => {
+                assert!(matches!(items[0], Value::F64(v) if v == 3.0));
+                assert!(matches!(items[1], Value::F64(v) if v == 5.0));
+            }
+            other => panic!("{other:?}"),
+        }
+        // envs merge with addition on collision
+        let mut m1 = EnvMap::new();
+        m1.insert(1, Value::F64(1.0));
+        let mut m2 = EnvMap::new();
+        m2.insert(1, Value::F64(2.0));
+        m2.insert(2, Value::F64(9.0));
+        let merged = gadd(&Value::Env(Rc::new(m1)), &Value::Env(Rc::new(m2))).unwrap();
+        match merged {
+            Value::Env(e) => {
+                assert!(matches!(e[&1], Value::F64(v) if v == 3.0));
+                assert!(matches!(e[&2], Value::F64(v) if v == 9.0));
+            }
+            other => panic!("{other:?}"),
+        }
+        // length mismatch errors
+        let c = Value::tuple(vec![Value::F64(0.0)]);
+        assert!(gadd(&a, &c).is_err());
+    }
+
+    #[test]
+    fn zeros_and_ones_like() {
+        let t = Value::Tensor(Tensor::from_f64(&[1.0, 2.0]));
+        match zeros_like(&t) {
+            Value::Tensor(z) => assert_eq!(z.as_f64_vec(), vec![0.0, 0.0]),
+            other => panic!("{other:?}"),
+        }
+        let tup = Value::tuple(vec![Value::F64(5.0), t]);
+        match zeros_like(&tup) {
+            Value::Tuple(items) => assert!(matches!(items[0], Value::F64(v) if v == 0.0)),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(ev(Prim::OnesLike, &[Value::F64(9.0)]), Value::F64(v) if v == 1.0));
+    }
+
+    #[test]
+    fn tensor_shape_ops() {
+        let t = Value::Tensor(Tensor::from_f64(&[1.0, 2.0, 3.0, 4.0]));
+        let shape2x2 = Value::tuple(vec![Value::I64(2), Value::I64(2)]);
+        let r = ev(Prim::Reshape, &[t.clone(), shape2x2.clone()]);
+        assert!(matches!(&r, Value::Tensor(t) if t.shape() == [2, 2]));
+        let s = ev(Prim::ShapeOf, &[r.clone()]);
+        assert!(s.structural_eq(&shape2x2));
+        let mm = ev(Prim::MatMul, &[r.clone(), r]);
+        assert!(matches!(&mm, Value::Tensor(t) if t.shape() == [2, 2]));
+        assert!(matches!(ev(Prim::ReduceSum, &[t.clone()]), Value::Tensor(s) if s.item().unwrap() == 10.0));
+        assert!(matches!(ev(Prim::Item, &[ev(Prim::ReduceMean, &[t])]), Value::F64(v) if v == 2.5));
+    }
+
+    #[test]
+    fn rng_deterministic_and_split() {
+        let shape = Value::tuple(vec![Value::I64(3)]);
+        let a = ev(Prim::RngUniform, &[Value::I64(7), shape.clone()]);
+        let b = ev(Prim::RngUniform, &[Value::I64(7), shape.clone()]);
+        assert!(a.structural_eq(&b), "same seed, same tensor");
+        let c = ev(Prim::RngUniform, &[Value::I64(8), shape]);
+        assert!(!a.structural_eq(&c));
+        let s = ev(Prim::RngSplit, &[Value::I64(7)]);
+        match s {
+            Value::Tuple(items) => assert!(!items[0].structural_eq(&items[1])),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn raise_errors() {
+        let e = eval_prim(Prim::Raise, &[Value::str("boom")]).unwrap_err();
+        assert!(format!("{e}").contains("boom"));
+    }
+
+    #[test]
+    fn arity_checked() {
+        assert!(eval_prim(Prim::Add, &[Value::I64(1)]).is_err());
+        assert!(eval_prim(Prim::Neg, &[]).is_err());
+    }
+}

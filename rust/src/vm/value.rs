@@ -1,0 +1,217 @@
+//! Runtime values.
+//!
+//! The VM's value universe mirrors the IR's type universe (§3): scalars,
+//! tensors, tuples, first-class functions (closures and primitives), and the
+//! AD environment values of §3.2. `ZeroT` is the symbolic zero tangent — the
+//! additive identity of `gadd` — which keeps never-used gradient paths free.
+
+use crate::ir::Prim;
+use crate::tensor::{DType, Tensor};
+use std::collections::HashMap;
+use std::fmt;
+use std::rc::Rc;
+
+use super::compile::CodeObject;
+
+/// AD environment: node-key → gradient contribution (§3.2).
+pub type EnvMap = HashMap<u64, Value>;
+
+/// A closure: compiled code plus captured values (flat closure conversion of
+/// the graph's total free variables).
+#[derive(Debug)]
+pub struct Closure {
+    pub code: Rc<CodeObject>,
+    pub captures: Vec<Value>,
+}
+
+/// A partially-applied function (`partial(f, x)`).
+#[derive(Debug)]
+pub struct PartialApp {
+    pub func: Value,
+    pub bound: Vec<Value>,
+}
+
+/// A runtime value.
+#[derive(Debug, Clone)]
+pub enum Value {
+    Unit,
+    F64(f64),
+    I64(i64),
+    Bool(bool),
+    Str(Rc<String>),
+    Tensor(Tensor),
+    Tuple(Rc<Vec<Value>>),
+    Closure(Rc<Closure>),
+    Prim(Prim),
+    Partial(Rc<PartialApp>),
+    Env(Rc<EnvMap>),
+    Key(u64),
+    ZeroT,
+}
+
+impl Value {
+    pub fn tuple(items: Vec<Value>) -> Value {
+        Value::Tuple(Rc::new(items))
+    }
+
+    pub fn str(s: impl Into<String>) -> Value {
+        Value::Str(Rc::new(s.into()))
+    }
+
+    /// Type name for error messages.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Unit => "unit",
+            Value::F64(_) => "f64",
+            Value::I64(_) => "i64",
+            Value::Bool(_) => "bool",
+            Value::Str(_) => "str",
+            Value::Tensor(_) => "tensor",
+            Value::Tuple(_) => "tuple",
+            Value::Closure(_) => "closure",
+            Value::Prim(_) => "primitive",
+            Value::Partial(_) => "partial",
+            Value::Env(_) => "env",
+            Value::Key(_) => "key",
+            Value::ZeroT => "zero-tangent",
+        }
+    }
+
+    /// Is this a function-like value?
+    pub fn is_callable(&self) -> bool {
+        matches!(self, Value::Closure(_) | Value::Prim(_) | Value::Partial(_))
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::F64(v) => Some(*v),
+            Value::I64(v) => Some(*v as f64),
+            Value::Bool(b) => Some(*b as i64 as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::I64(v) => Some(*v),
+            Value::Bool(b) => Some(*b as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_tensor(&self) -> Option<&Tensor> {
+        match self {
+            Value::Tensor(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// Scalars are promoted to rank-0 tensors where a tensor is required.
+    pub fn to_tensor(&self) -> Option<Tensor> {
+        match self {
+            Value::Tensor(t) => Some(t.clone()),
+            Value::F64(v) => Some(Tensor::scalar_f64(*v)),
+            Value::I64(v) => Some(Tensor::scalar_f64(*v as f64).cast(DType::I64)),
+            Value::Bool(b) => Some(Tensor::scalar_f64(*b as i64 as f64).cast(DType::Bool)),
+            _ => None,
+        }
+    }
+
+    /// Structural equality (used by tests and the `eq` primitive on
+    /// non-numeric data).
+    pub fn structural_eq(&self, other: &Value) -> bool {
+        match (self, other) {
+            (Value::Unit, Value::Unit) => true,
+            (Value::F64(a), Value::F64(b)) => a == b,
+            (Value::I64(a), Value::I64(b)) => a == b,
+            (Value::F64(a), Value::I64(b)) | (Value::I64(b), Value::F64(a)) => *a == *b as f64,
+            (Value::Bool(a), Value::Bool(b)) => a == b,
+            (Value::Str(a), Value::Str(b)) => a == b,
+            (Value::Tensor(a), Value::Tensor(b)) => a == b,
+            (Value::Tuple(a), Value::Tuple(b)) => {
+                a.len() == b.len() && a.iter().zip(b.iter()).all(|(x, y)| x.structural_eq(y))
+            }
+            (Value::Key(a), Value::Key(b)) => a == b,
+            (Value::ZeroT, Value::ZeroT) => true,
+            (Value::Prim(a), Value::Prim(b)) => a == b,
+            _ => false,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Unit => write!(f, "None"),
+            Value::F64(v) => write!(f, "{v}"),
+            Value::I64(v) => write!(f, "{v}"),
+            Value::Bool(b) => write!(f, "{}", if *b { "True" } else { "False" }),
+            Value::Str(s) => write!(f, "{s}"),
+            Value::Tensor(t) => write!(f, "{}", t.to_display_string()),
+            Value::Tuple(items) => {
+                write!(f, "(")?;
+                for (i, it) in items.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{it}")?;
+                }
+                if items.len() == 1 {
+                    write!(f, ",")?;
+                }
+                write!(f, ")")
+            }
+            Value::Closure(c) => write!(f, "<closure {}>", c.code.name),
+            Value::Prim(p) => write!(f, "<primitive {p}>"),
+            Value::Partial(p) => write!(f, "<partial {} (+{} bound)>", p.func, p.bound.len()),
+            Value::Env(e) => write!(f, "<env with {} entries>", e.len()),
+            Value::Key(k) => write!(f, "<key {k}>"),
+            Value::ZeroT => write!(f, "<zero>"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        assert_eq!(Value::F64(1.5).as_f64(), Some(1.5));
+        assert_eq!(Value::I64(3).as_f64(), Some(3.0));
+        assert_eq!(Value::Bool(true).as_i64(), Some(1));
+        assert_eq!(Value::Unit.as_f64(), None);
+        let t = Value::I64(2).to_tensor().unwrap();
+        assert_eq!(t.dtype(), DType::I64);
+        assert_eq!(t.rank(), 0);
+    }
+
+    #[test]
+    fn structural_equality() {
+        let a = Value::tuple(vec![Value::F64(1.0), Value::I64(2)]);
+        let b = Value::tuple(vec![Value::F64(1.0), Value::I64(2)]);
+        let c = Value::tuple(vec![Value::F64(1.0)]);
+        assert!(a.structural_eq(&b));
+        assert!(!a.structural_eq(&c));
+        assert!(Value::F64(2.0).structural_eq(&Value::I64(2)));
+        assert!(Value::ZeroT.structural_eq(&Value::ZeroT));
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(format!("{}", Value::Bool(true)), "True");
+        assert_eq!(format!("{}", Value::Unit), "None");
+        assert_eq!(
+            format!("{}", Value::tuple(vec![Value::I64(1), Value::I64(2)])),
+            "(1, 2)"
+        );
+        assert_eq!(format!("{}", Value::tuple(vec![Value::I64(1)])), "(1,)");
+    }
+}

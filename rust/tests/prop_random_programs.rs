@@ -1,0 +1,112 @@
+//! Property tests over randomly generated programs, using the in-crate
+//! `ptest` substrate:
+//!
+//! 1. optimization preserves semantics (random expression, random input);
+//! 2. ST gradients agree with central finite differences;
+//! 3. forward and reverse mode agree with each other;
+//! 4. the compile pipeline never panics on generated programs.
+
+use myia::coordinator::{Options, Session};
+use myia::ptest;
+use myia::tensor::Rng;
+use myia::vm::Value;
+
+/// Generate a random smooth scalar expression over variable `x` with bounded
+/// depth. Only well-conditioned ops so finite differences are meaningful.
+fn gen_expr(rng: &mut Rng, depth: usize) -> String {
+    if depth == 0 {
+        return match rng.below(3) {
+            0 => "x".to_string(),
+            1 => format!("{:.3}", rng.uniform_range(0.2, 2.0)),
+            _ => "x".to_string(),
+        };
+    }
+    match rng.below(8) {
+        0 => format!("({} + {})", gen_expr(rng, depth - 1), gen_expr(rng, depth - 1)),
+        1 => format!("({} - {})", gen_expr(rng, depth - 1), gen_expr(rng, depth - 1)),
+        2 => format!("({} * {})", gen_expr(rng, depth - 1), gen_expr(rng, depth - 1)),
+        3 => format!("sin({})", gen_expr(rng, depth - 1)),
+        4 => format!("cos({})", gen_expr(rng, depth - 1)),
+        5 => format!("tanh({})", gen_expr(rng, depth - 1)),
+        6 => format!("sigmoid({})", gen_expr(rng, depth - 1)),
+        _ => format!("({} * 0.5 + {})", gen_expr(rng, depth - 1), gen_expr(rng, depth - 1)),
+    }
+}
+
+fn eval(src: &str, entry: &str, optimize: bool, x: f64) -> Result<f64, String> {
+    let mut s = Session::from_source(src).map_err(|e| e.to_string())?;
+    let f = s
+        .compile(entry, Options { optimize, ..Default::default() })
+        .map_err(|e| e.to_string())?;
+    match f.call(vec![Value::F64(x)]).map_err(|e| e.to_string())? {
+        Value::F64(v) => Ok(v),
+        Value::Tensor(t) => t.item().map_err(|e| e.to_string()),
+        other => Err(format!("non-numeric result {other}")),
+    }
+}
+
+#[test]
+fn optimization_preserves_semantics() {
+    ptest::check(ptest::Config { cases: 40, seed: 0xA11CE }, |rng| {
+        let expr = gen_expr(rng, 3);
+        let src = format!("def f(x):\n    return {expr}\n");
+        let x = ptest::gen_value(rng);
+        let a = eval(&src, "f", true, x)?;
+        let b = eval(&src, "f", false, x)?;
+        ptest::close(a, b, 1e-12, &format!("opt vs unopt on {expr}"))
+    });
+}
+
+#[test]
+fn gradients_match_finite_differences() {
+    ptest::check(ptest::Config { cases: 30, seed: 0xBEE }, |rng| {
+        let expr = gen_expr(rng, 3);
+        let src = format!(
+            "def f(x):\n    return {expr}\n\ndef main(x):\n    return grad(f)(x)\n"
+        );
+        let x = ptest::gen_value(rng);
+        let g = eval(&src, "main", true, x)?;
+        let eps = 1e-6;
+        let fp = eval(&src, "f", true, x + eps)?;
+        let fm = eval(&src, "f", true, x - eps)?;
+        let fd = (fp - fm) / (2.0 * eps);
+        ptest::close(g, fd, 1e-4, &format!("grad vs fd on {expr} at {x}"))
+    });
+}
+
+#[test]
+fn forward_agrees_with_reverse() {
+    ptest::check(ptest::Config { cases: 25, seed: 0xF0D }, |rng| {
+        let expr = gen_expr(rng, 3);
+        let src_r = format!(
+            "def f(x):\n    return {expr}\n\ndef main(x):\n    return grad(f)(x)\n"
+        );
+        let src_f = format!(
+            "def f(x):\n    return {expr}\n\ndef main(x):\n    return jfwd(f)(x, 1.0)[1]\n"
+        );
+        let x = ptest::gen_value(rng);
+        let r = eval(&src_r, "main", true, x)?;
+        let f = eval(&src_f, "main", true, x)?;
+        ptest::close(r, f, 1e-10, &format!("fwd vs rev on {expr}"))
+    });
+}
+
+#[test]
+fn pipeline_never_panics_on_generated_control_flow() {
+    ptest::check(ptest::Config { cases: 20, seed: 4242 }, |rng| {
+        let expr = gen_expr(rng, 2);
+        let n = 1 + rng.below(4);
+        let src = format!(
+            "def f(x):\n    acc = 0.0\n    for i in range({n}):\n        acc = acc + {expr}\n    \
+             if acc > 0.0:\n        return acc\n    return -acc\n\ndef main(x):\n    return grad(f)(x)\n"
+        );
+        let x = ptest::gen_value(rng);
+        // Must not panic; result must be finite.
+        let g = eval(&src, "main", true, x)?;
+        if g.is_finite() {
+            Ok(())
+        } else {
+            Err(format!("non-finite gradient {g} for {src}"))
+        }
+    });
+}

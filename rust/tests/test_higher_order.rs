@@ -1,0 +1,147 @@
+//! E5: higher-order derivatives via reverse-over-reverse (§3.2).
+//!
+//! "In order to ensure that our transformation can be applied again on the
+//! transformed program (so we can use reverse-over-reverse to compute
+//! second-order derivatives), it must be able to handle functions with free
+//! variables." These tests apply `grad` up to three deep and compare against
+//! closed forms. The tape baseline cannot do this at all (§2.1.2).
+
+use myia::coordinator::{Options, Session};
+use myia::vm::Value;
+
+fn run1(src: &str, x: f64) -> f64 {
+    let mut s = Session::from_source(src).unwrap();
+    let f = s.compile("main", Options::default()).unwrap();
+    match f.call(vec![Value::F64(x)]).unwrap() {
+        Value::F64(v) => v,
+        Value::Tensor(t) => t.item().unwrap(),
+        other => panic!("{other}"),
+    }
+}
+
+#[test]
+fn second_derivative_of_cubic() {
+    let src = "\
+def f(x):
+    return x ** 3.0
+
+def df(x):
+    return grad(f)(x)
+
+def main(x):
+    return grad(df)(x)
+";
+    // f'' = 6x
+    for x in [0.5, 2.0, -1.25] {
+        let d2 = run1(src, x);
+        assert!((d2 - 6.0 * x).abs() < 1e-9, "x={x}: {d2}");
+    }
+}
+
+#[test]
+fn third_derivative() {
+    let src = "\
+def f(x):
+    return x ** 4.0 + 2.0 * x ** 2.0
+
+def d1(x):
+    return grad(f)(x)
+
+def d2(x):
+    return grad(d1)(x)
+
+def main(x):
+    return grad(d2)(x)
+";
+    // f''' = 24x
+    let d3 = run1(src, 1.5);
+    assert!((d3 - 36.0).abs() < 1e-6, "{d3}");
+}
+
+#[test]
+fn second_derivative_of_transcendental() {
+    let src = "\
+def f(x):
+    return sin(x) * exp(x)
+
+def df(x):
+    return grad(f)(x)
+
+def main(x):
+    return grad(df)(x)
+";
+    // (sin·eˣ)'' = 2·cos(x)·eˣ
+    let x = 0.7f64;
+    let want = 2.0 * x.cos() * x.exp();
+    let got = run1(src, x);
+    assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+}
+
+#[test]
+fn hessian_diagonal_through_control_flow() {
+    let src = "\
+def f(x):
+    if x > 0.0:
+        return x ** 3.0
+    else:
+        return x ** 2.0
+
+def df(x):
+    return grad(f)(x)
+
+def main(x):
+    return grad(df)(x)
+";
+    assert!((run1(src, 2.0) - 12.0).abs() < 1e-9); // 6x on the cubic side
+    assert!((run1(src, -2.0) - 2.0).abs() < 1e-9); // 2 on the quadratic side
+}
+
+#[test]
+fn value_and_grad_composes_with_grad() {
+    let src = "\
+def f(x):
+    return x ** 3.0
+
+def g(x):
+    vg = value_and_grad(f)(x)
+    return vg[0] + vg[1]
+
+def main(x):
+    return grad(g)(x)
+";
+    // d/dx (x³ + 3x²) = 3x² + 6x
+    let x = 1.2f64;
+    let want = 3.0 * x * x + 6.0 * x;
+    let got = run1(src, x);
+    assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+}
+
+#[test]
+fn forward_over_reverse() {
+    // jfwd of a grad-function: d²f/dx² through mixed modes.
+    let src = "\
+def f(x):
+    return x ** 3.0
+
+def df(x):
+    return grad(f)(x)
+
+def main(x):
+    out = jfwd(df)(x, 1.0)
+    return out[1]
+";
+    let got = run1(src, 2.0);
+    assert!((got - 12.0).abs() < 1e-9, "{got}");
+}
+
+#[test]
+fn tape_baseline_cannot_do_reverse_over_reverse() {
+    use myia::baselines::tape;
+    let tp = tape::Tape::new();
+    let x = tape::scalar(&tp, 2.0);
+    let y = x.mul(&x).mul(&x);
+    let _ = y.backward().unwrap();
+    // The limitation is documented and explicit (checked in unit tests);
+    // here we assert the API surface exists and the first backward works.
+    assert!((y.value().as_f64().unwrap() - 8.0).abs() < 1e-12);
+}
