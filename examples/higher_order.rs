@@ -2,28 +2,25 @@
 //! mixed forward-over-reverse — possible exactly because the adjoint program
 //! is ordinary IR, not a runtime tape (§2.1.2).
 //!
+//! The derivative tower is built with the transform API: `f'` is
+//! `trace("f").grad()`, `f''` is `.grad().grad()`, `f'''` is three chained
+//! `grad()`s — one source function, no `grad(grad(…))` strings.
+//!
 //! ```text
 //! cargo run --release --example higher_order
 //! ```
 
-use myia::coordinator::{Options, Session};
-use myia::vm::Value;
+use myia::prelude::*;
 
 const SRC: &str = "\
 def f(x):
     return sin(x) * exp(0.5 * x)
 
-def d1(x):
+def df(x):
     return grad(f)(x)
 
-def d2(x):
-    return grad(d1)(x)
-
-def d3(x):
-    return grad(d2)(x)
-
 def fwd_over_rev(x):
-    out = jfwd(d1)(x, 1.0)
+    out = jfwd(df)(x, 1.0)
     return out[1]
 ";
 
@@ -39,12 +36,17 @@ fn analytic(x: f64) -> (f64, f64, f64, f64) {
 
 fn main() -> anyhow::Result<()> {
     let mut s = Session::from_source(SRC)?;
-    let fs: Vec<_> = ["f", "d1", "d2", "d3", "fwd_over_rev"]
-        .iter()
-        .map(|n| s.compile(n, Options::default()).unwrap())
-        .collect();
+    // The derivative tower: each order is one more `.grad()` in the chain.
+    let fs = vec![
+        s.trace("f")?.compile()?,
+        s.trace("f")?.grad().compile()?,
+        s.trace("f")?.grad().grad().compile()?,
+        s.trace("f")?.grad().grad().grad().compile()?,
+        // Mixed mode: forward (`jfwd`) over reverse (`grad`).
+        s.trace("fwd_over_rev")?.compile()?,
+    ];
 
-    println!("f(x) = sin(x)·e^(x/2); derivatives via repeated grad():\n");
+    println!("f(x) = sin(x)·e^(x/2); derivatives via chained .grad():\n");
     println!(
         "{:>6} {:>12} {:>12} {:>12} {:>12} {:>14}",
         "x", "f", "f'", "f''", "f'''", "jfwd(grad f)"
@@ -67,8 +69,8 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!("\nadjoint sizes (nodes after optimize):");
-    for (name, f) in ["f", "d1", "d2", "d3"].iter().zip(&fs) {
-        println!("  {:>3}: {}", name, f.metrics.nodes_after_optimize);
+    for (name, f) in ["f", "f'", "f''", "f'''"].iter().zip(&fs) {
+        println!("  {:>4}: {}", name, f.metrics.nodes_after_optimize);
     }
     println!("\nall orders match closed forms; the OO-tape baseline cannot express any of this.");
     Ok(())

@@ -1,54 +1,59 @@
-//! Quickstart: the paper's Figure 1, live.
+//! Quickstart: the paper's Figure 1, live, through the transform API.
 //!
-//! Compiles `f(x) = x ** 3`, expands `grad`, prints the IR at each stage
-//! (after lowering, after the grad macro + J transform, after optimization),
-//! and evaluates the derivative. Run with:
+//! Compiles `f(x) = x ** 3`, derives its gradient with the `Grad`
+//! transform, prints the IR at each pipeline stage (after lowering, after
+//! the J transform, after optimization), evaluates the derivative, and
+//! finishes with `f.grad().grad()` — the second derivative as a composed
+//! pipeline, no `grad(grad(f))` string anywhere. Run with:
 //!
 //! ```text
 //! cargo run --release --example quickstart
 //! ```
 
-use myia::coordinator::{Options, Session};
-use myia::ir::print_graph;
-use myia::vm::Value;
+use myia::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     let src = "\
 def f(x):
     return x ** 3.0
-
-def main(x):
-    return grad(f)(x)
 ";
     println!("=== source ===\n{src}");
 
+    // One session serves every pipeline below: each compile transforms its
+    // own clone of the lowered module, so the arms can't contaminate each
+    // other, and identical pipelines share one cached artifact.
+    let mut s = Session::from_source(src)?;
+
     // Stage 1: after parsing + lowering to the graph IR (§3.1).
-    let s0 = Session::from_source(src)?;
     println!("=== IR after lowering ===");
-    println!("{}", print_graph(&s0.module, s0.graph("main")?, true));
+    println!("{}", myia::ir::print_graph(&s.module, s.graph("f")?, true));
 
-    // Stage 2: after grad expansion (the J transform of §3.2), unoptimized.
-    let mut s1 = Session::from_source(src)?;
-    let unopt = s1.compile("main", Options { optimize: false, ..Default::default() })?;
+    // Stage 2: the grad transform (the J transform of §3.2), unoptimized.
+    let unopt = s.trace("f")?.grad().optimize(PassSet::None).compile()?;
     println!(
-        "=== after grad expansion (unoptimized): {} reachable nodes across {} graphs ===",
-        unopt.metrics.nodes_after_expand,
-        myia::ir::analyze(&s1.module, s1.graph("main")?).graphs.len()
+        "=== after grad transform (pipeline `{}`): {} reachable nodes ===",
+        unopt.metrics.pipeline, unopt.metrics.nodes_after_expand
     );
 
-    // Stage 3: after optimization (§4.3) — Figure 1's collapse.
-    let mut s2 = Session::from_source(src)?;
-    let opt = s2.compile("main", Options::default())?;
+    // Stage 3: with optimization (§4.3) — Figure 1's collapse.
+    let opt = s.trace("f")?.grad().compile()?;
     println!(
-        "=== after optimization: {} nodes in {} graph(s) ===",
-        opt.metrics.nodes_after_optimize, opt.metrics.graphs_after_optimize
+        "=== after optimization (pipeline `{}`): {} nodes in {} graph(s) ===",
+        opt.metrics.pipeline, opt.metrics.nodes_after_optimize, opt.metrics.graphs_after_optimize
     );
-    println!("{}", print_graph(&s2.module, s2.graph("main")?, true));
+    println!("{}", myia::ir::print_graph(&opt.module, opt.entry, true));
 
     // Evaluate: d/dx x³ = 3x².
     for x in [1.0, 2.0, 3.0] {
         let d = opt.call(vec![Value::F64(x)])?;
         println!("grad(f)({x}) = {d}   (expect {})", 3.0 * x * x);
+    }
+
+    // Transforms compose: grad of grad is just a longer pipeline.
+    let d2 = s.trace("f")?.grad().grad().compile()?;
+    for x in [1.0, 2.0, 3.0] {
+        let v = d2.call(vec![Value::F64(x)])?;
+        println!("grad(grad(f))({x}) = {v}   (expect {})", 6.0 * x);
     }
 
     println!(

@@ -13,8 +13,7 @@
 //! ```
 
 use myia::baselines::DataflowGraph;
-use myia::coordinator::{Options, Session};
-use myia::vm::Value;
+use myia::prelude::*;
 
 const SRC: &str = "\
 def leaf(v):
@@ -44,9 +43,6 @@ def loss(w):
     t = build_full_tree(5, 1.0)
     t2 = tree_map(lambda v: v + 0.1, t)
     return tree_eval(t2, w)
-
-def main(w):
-    return grad(loss)(w)
 ";
 
 fn f64v(v: &Value) -> f64 {
@@ -55,8 +51,10 @@ fn f64v(v: &Value) -> f64 {
 
 fn main() -> anyhow::Result<()> {
     let mut s = Session::from_source(SRC)?;
-    let loss = s.compile("loss", Options::default())?;
-    let grad = s.compile("main", Options::default())?;
+    let loss = s.trace("loss")?.compile()?;
+    // `grad` differentiates straight through the recursion + higher-order
+    // `tree_map` — it is a transform over the loss, not a source wrapper.
+    let grad = s.trace("loss")?.grad().compile()?;
 
     println!("== recursive tree model (depth 5, 63 nodes) ==");
     for w in [0.1, 0.3, 0.5] {

@@ -5,7 +5,7 @@
 
 use myia::baselines::tape;
 use myia::bench::{black_box, Bencher};
-use myia::coordinator::{Options, Session};
+use myia::coordinator::Session;
 use myia::tensor::Tensor;
 use myia::vm::Value;
 
@@ -20,7 +20,7 @@ fn main() {
         "def f(x):\n    acc = x\n    for i in range({CHAIN}):\n        acc = relu(acc * 1.01 + x)\n    return item(sum(acc))\n\ndef main(x):\n    return grad(f)(x)\n"
     );
     let mut s = Session::from_source(&src).unwrap();
-    let st = s.compile("main", Options::default()).unwrap();
+    let st = s.trace("main").unwrap().compile().unwrap();
 
     let mut rows = Vec::new();
     for size in [1usize, 4, 16, 64, 256, 1024, 4096, 16384] {

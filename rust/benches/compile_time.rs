@@ -3,7 +3,7 @@
 //! size, and the break-even call count against OO tracing.
 
 use myia::bench::Bencher;
-use myia::coordinator::{Options, Session};
+use myia::coordinator::Session;
 use myia::vm::Value;
 use std::time::Instant;
 
@@ -26,7 +26,7 @@ fn main() {
         let t0 = Instant::now();
         let mut s = Session::from_source(&src).unwrap();
         let parse_us = t0.elapsed().as_micros();
-        let f = s.compile("main", Options::default()).unwrap();
+        let f = s.trace("main").unwrap().compile().unwrap();
         println!(
             "{n:>6} {parse_us:>10}µs {:>10}µs {:>10}µs {:>10}µs {:>10}",
             f.metrics.expand_us,
@@ -44,7 +44,7 @@ fn main() {
     let mut b = Bencher::default();
     let src = chain_program(64);
     let mut s = Session::from_source(&src).unwrap();
-    let f = s.compile("main", Options::default()).unwrap();
+    let f = s.trace("main").unwrap().compile().unwrap();
     let sample = b.bench("compiled_call/ops=64", || {
         myia::bench::black_box(f.call(vec![Value::F64(0.3)]).unwrap());
     });

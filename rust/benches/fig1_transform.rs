@@ -5,7 +5,8 @@
 //! ratio, and the unoptimized adjoint cost that optimization removes.
 
 use myia::bench::{black_box, Bencher};
-use myia::coordinator::{Options, Session};
+use myia::coordinator::Session;
+use myia::opt::PassSet;
 use myia::vm::Value;
 
 fn main() {
@@ -30,7 +31,7 @@ fn main() {
     );
     for (name, src, _) in &cases {
         let mut s = Session::from_source(src).unwrap();
-        let f = s.compile("main", Options::default()).unwrap();
+        let f = s.trace("main").unwrap().compile().unwrap();
         let (l, e, o) = (
             f.metrics.nodes_after_lowering,
             f.metrics.nodes_after_expand,
@@ -45,8 +46,8 @@ fn main() {
     for (name, src, hand_src) in &cases {
         let full = format!("{src}\n{hand_src}");
         let mut s = Session::from_source(&full).unwrap();
-        let auto = s.compile("main", Options::default()).unwrap();
-        let hand = s.compile("handwritten", Options::default()).unwrap();
+        let auto = s.trace("main").unwrap().compile().unwrap();
+        let hand = s.trace("handwritten").unwrap().compile().unwrap();
         let sa = b.bench(&format!("fig1/{name}/grad_optimized"), || {
             black_box(auto.call(vec![Value::F64(1.7)]).unwrap());
         });
@@ -54,9 +55,7 @@ fn main() {
             black_box(hand.call(vec![Value::F64(1.7)]).unwrap());
         });
         let mut s2 = Session::from_source(src).unwrap();
-        let unopt = s2
-            .compile("main", Options { optimize: false, ..Default::default() })
-            .unwrap();
+        let unopt = s2.trace("main").unwrap().optimize(PassSet::None).compile().unwrap();
         let su = b.bench(&format!("fig1/{name}/grad_unoptimized"), || {
             black_box(unopt.call(vec![Value::F64(1.7)]).unwrap());
         });

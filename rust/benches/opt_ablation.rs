@@ -5,28 +5,28 @@
 use myia::ad::expand_macros;
 use myia::bench::{black_box, Bencher};
 use myia::coordinator::mlp::MLP_SOURCE;
-use myia::coordinator::{Options, Session};
+use myia::coordinator::Session;
 use myia::ir::analyze;
-use myia::opt::Optimizer;
+use myia::opt::PassSet;
 use myia::parser::compile_source;
 use myia::vm::Value;
 
 fn ablate(src: &str, entry: &str) {
-    let variants: [(&str, fn() -> Optimizer); 6] = [
-        ("full", Optimizer::standard),
-        ("no-inline", || Optimizer::without("inline")),
-        ("no-tuple-simplify", || Optimizer::without("tuple-simplify")),
-        ("no-algebraic", || Optimizer::without("algebraic")),
-        ("no-cse", || Optimizer::without("cse")),
-        ("none", Optimizer::none),
+    let variants: [(&str, PassSet); 6] = [
+        ("full", PassSet::Standard),
+        ("no-inline", PassSet::Without("inline".to_string())),
+        ("no-tuple-simplify", PassSet::Without("tuple-simplify".to_string())),
+        ("no-algebraic", PassSet::Without("algebraic".to_string())),
+        ("no-cse", PassSet::Without("cse".to_string())),
+        ("none", PassSet::None),
     ];
     println!("{:<20} {:>10} {:>8}", "pipeline", "nodes", "iters");
-    for (name, make) in variants {
+    for (name, passes) in variants {
         let mut m = myia::ir::Module::new();
         let graphs = compile_source(&mut m, src).unwrap();
         let g = graphs[entry];
         expand_macros(&mut m, g).unwrap();
-        let stats = make().run(&mut m, g).unwrap();
+        let stats = passes.optimizer().run(&mut m, g).unwrap();
         let nodes = analyze(&m, g).node_count(&m);
         println!("{name:<20} {nodes:>10} {:>8}", stats.iterations);
         println!("CSV,e6_nodes,{entry},{name},{nodes}");
@@ -48,9 +48,9 @@ fn main() {
     let src = "def f(x):\n    return x ** 3.0\n\ndef main(x):\n    return grad(f)(x)\n";
     let mut b = Bencher::default();
     let mut s1 = Session::from_source(src).unwrap();
-    let opt = s1.compile("main", Options::default()).unwrap();
+    let opt = s1.trace("main").unwrap().compile().unwrap();
     let mut s2 = Session::from_source(src).unwrap();
-    let unopt = s2.compile("main", Options { optimize: false, ..Default::default() }).unwrap();
+    let unopt = s2.trace("main").unwrap().optimize(PassSet::None).compile().unwrap();
     let a = b.bench("ablation/pow3/full", || {
         black_box(opt.call(vec![Value::F64(2.0)]).unwrap());
     });

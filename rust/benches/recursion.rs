@@ -6,7 +6,7 @@
 
 use myia::baselines::{tape, DataflowGraph};
 use myia::bench::{black_box, Bencher};
-use myia::coordinator::{Options, Session};
+use myia::coordinator::Session;
 use myia::tensor::Tensor;
 use myia::vm::Value;
 
@@ -28,7 +28,7 @@ def main(w):
     return grad(loss)(w)
 ";
     let mut s = Session::from_source(src).unwrap();
-    let grad = s.compile("main", Options::default()).unwrap();
+    let grad = s.trace("main").unwrap().compile().unwrap();
     println!(
         "Myia IR: {} nodes for ANY depth (here 8 → 511 runtime nodes)",
         grad.metrics.nodes_after_optimize

@@ -12,6 +12,46 @@ use super::jtransform::JTransform;
 use crate::ir::{analyze, Const, GraphId, MacroOp, Module, NodeId, Prim};
 use anyhow::{bail, Result};
 
+/// A programmatic differentiation request: the explicit counterpart of a
+/// source-level `grad(f)` / `value_and_grad(f)` macro. The `transform`
+/// layer's `Grad` and `ValueAndGrad` stages hand this to [`expand_grad`]
+/// instead of scanning the IR for macro applications.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GradSpec {
+    /// How many times to differentiate (≥ 1); 2 = reverse-over-reverse.
+    pub order: usize,
+    /// Index of the parameter to differentiate with respect to.
+    pub wrt: usize,
+    /// If set, the final wrapper returns `(value, grad)` instead of `grad`.
+    pub value_and_grad: bool,
+}
+
+impl Default for GradSpec {
+    fn default() -> Self {
+        GradSpec { order: 1, wrt: 0, value_and_grad: false }
+    }
+}
+
+/// Build the ∇-wrapper graph requested by `spec` around `f` — the
+/// programmatic equivalent of `order` nested source-level `grad(...)`
+/// applications, without any macro in the IR. Macros inside `f`'s body are
+/// expanded first so the J transform only ever sees ordinary IR. Returns the
+/// wrapper graph, which takes `f`'s parameters and returns the derivative
+/// (or `(value, derivative)` for `value_and_grad`).
+pub fn expand_grad(m: &mut Module, f: GraphId, spec: &GradSpec) -> Result<GraphId> {
+    if spec.order == 0 {
+        bail!("grad order must be >= 1");
+    }
+    expand_macros(m, f)?;
+    let mut j = JTransform::new();
+    let mut g = f;
+    for i in 0..spec.order {
+        let vag = spec.value_and_grad && i + 1 == spec.order;
+        g = build_grad_wrapper(m, &mut j, g, spec.wrt, vag)?;
+    }
+    Ok(g)
+}
+
 /// Expand every `grad`/`value_and_grad`/`jfwd` application reachable from
 /// `root`. Returns the number of macros expanded.
 pub fn expand_macros(m: &mut Module, root: GraphId) -> Result<usize> {
@@ -78,52 +118,21 @@ fn expand_one(
              got a dynamic value — bind the function to a name first"
         );
     };
-    if !analyze(m, f).free_vars(f).is_empty() {
-        bail!(
-            "`{op}` applied to `{}`, which captures variables from an enclosing scope; \
-             differentiate a closed function instead",
-            m.graph(f).name
-        );
-    }
-    let arity = m.graph(f).params.len();
-    if arity == 0 {
-        bail!("`{op}` applied to a zero-argument function");
-    }
-
     match op {
+        // Capture/arity validation for the grad ops lives in
+        // `build_grad_wrapper`, shared with the programmatic path.
         MacroOp::Grad | MacroOp::ValueAndGrad => {
-            let jf = j.jgraph(m, f)?;
-            let w = m.add_graph(format!("∇{}", m.graph(f).name));
-            let params: Vec<NodeId> = (0..arity)
-                .map(|i| m.add_parameter(w, format!("x{i}")))
-                .collect();
-            // (value, bprop) = ▶f(x…)
-            let jfc = m.graph_constant(jf);
-            let mut call = vec![jfc];
-            call.extend(&params);
-            let pair = m.apply(w, call);
-            let i0 = m.constant(Const::I64(0));
-            let i1 = m.constant(Const::I64(1));
-            let val = m.apply_prim(w, Prim::TupleGetItem, &[pair, i0]);
-            let bp = m.apply_prim(w, Prim::TupleGetItem, &[pair, i1]);
-            // grads = bprop(1.0); `grad` requires a scalar-valued function,
-            // and the scalar seed broadcasts through rank-0 tensors too —
-            // matching Figure 1's "immediately called with the value 1.0".
-            let seed = m.constant(Const::F64(1.0));
-            let grads = m.apply(w, vec![bp, seed]);
-            let dx0 = m.apply_prim(w, Prim::TupleGetItem, &[grads, i1]);
-            // Concretize a possible ZeroT into a proper zero of x₀'s shape.
-            let zx = m.apply_prim(w, Prim::ZerosLike, &[params[0]]);
-            let dx0 = m.apply_prim(w, Prim::Gadd, &[dx0, zx]);
-            let ret = match op {
-                MacroOp::Grad => dx0,
-                MacroOp::ValueAndGrad => m.apply_prim_variadic(w, Prim::MakeTuple, &[val, dx0]),
-                MacroOp::Jfwd => unreachable!(),
-            };
-            m.set_return(w, ret);
-            Ok(w)
+            build_grad_wrapper(m, j, f, 0, op == MacroOp::ValueAndGrad)
         }
         MacroOp::Jfwd => {
+            if !analyze(m, f).free_vars(f).is_empty() {
+                bail!(
+                    "`{op}` applied to `{}`, which captures variables from an enclosing \
+                     scope; differentiate a closed function instead",
+                    m.graph(f).name
+                );
+            }
+            let arity = m.graph(f).params.len();
             if arity != 1 {
                 bail!("`jfwd` currently supports single-argument functions (got {arity})");
             }
@@ -138,6 +147,66 @@ fn expand_one(
             Ok(w)
         }
     }
+}
+
+/// Build one ∇-wrapper around `f`: call ▶f, seed the backpropagator with
+/// 1.0, and project the sensitivity of parameter `wrt` (Figure 1's
+/// "immediately called with the value 1.0"). Shared by the macro expander
+/// and the programmatic [`expand_grad`] path.
+fn build_grad_wrapper(
+    m: &mut Module,
+    j: &mut JTransform,
+    f: GraphId,
+    wrt: usize,
+    value_and_grad: bool,
+) -> Result<GraphId> {
+    if !analyze(m, f).free_vars(f).is_empty() {
+        bail!(
+            "cannot differentiate `{}`: it captures variables from an enclosing scope; \
+             differentiate a closed function instead",
+            m.graph(f).name
+        );
+    }
+    let arity = m.graph(f).params.len();
+    if arity == 0 {
+        bail!("cannot differentiate zero-argument function `{}`", m.graph(f).name);
+    }
+    if wrt >= arity {
+        bail!(
+            "grad wrt parameter {wrt} is out of range: `{}` has {arity} parameter(s)",
+            m.graph(f).name
+        );
+    }
+
+    let jf = j.jgraph(m, f)?;
+    let w = m.add_graph(format!("∇{}", m.graph(f).name));
+    let params: Vec<NodeId> = (0..arity).map(|i| m.add_parameter(w, format!("x{i}"))).collect();
+    // (value, bprop) = ▶f(x…)
+    let jfc = m.graph_constant(jf);
+    let mut call = vec![jfc];
+    call.extend(&params);
+    let pair = m.apply(w, call);
+    let i0 = m.constant(Const::I64(0));
+    let i1 = m.constant(Const::I64(1));
+    let val = m.apply_prim(w, Prim::TupleGetItem, &[pair, i0]);
+    let bp = m.apply_prim(w, Prim::TupleGetItem, &[pair, i1]);
+    // grads = bprop(1.0); `grad` requires a scalar-valued function, and the
+    // scalar seed broadcasts through rank-0 tensors too. grads[0] is the
+    // sensitivity of the function value itself; parameter i lives at i+1.
+    let seed = m.constant(Const::F64(1.0));
+    let grads = m.apply(w, vec![bp, seed]);
+    let iw = m.constant(Const::I64(wrt as i64 + 1));
+    let dx = m.apply_prim(w, Prim::TupleGetItem, &[grads, iw]);
+    // Concretize a possible ZeroT into a proper zero of the input's shape.
+    let zx = m.apply_prim(w, Prim::ZerosLike, &[params[wrt]]);
+    let dx = m.apply_prim(w, Prim::Gadd, &[dx, zx]);
+    let ret = if value_and_grad {
+        m.apply_prim_variadic(w, Prim::MakeTuple, &[val, dx])
+    } else {
+        dx
+    };
+    m.set_return(w, ret);
+    Ok(w)
 }
 
 #[cfg(test)]

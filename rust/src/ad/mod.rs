@@ -4,7 +4,10 @@
 //!   tape-free, ahead-of-time optimizable, composable with itself.
 //! * [`bprops`] — backpropagators of primitives.
 //! * [`expand`] — compile-time expansion of the `grad` / `value_and_grad` /
-//!   `jfwd` macros (Figure 1's "after the grad macro is expanded").
+//!   `jfwd` macros (Figure 1's "after the grad macro is expanded"), plus the
+//!   programmatic [`GradSpec`]/[`expand_grad`] entry point used by the
+//!   [`crate::transform`] layer — no macro scanning, just "differentiate
+//!   this graph, `order` times, w.r.t. parameter `wrt`".
 //! * [`forward`] — forward-mode AD as a source transformation over
 //!   (primal, tangent) pairs (§2.1 "dual numbers").
 
@@ -14,5 +17,5 @@ pub mod forward;
 pub mod jtransform;
 
 
-pub use expand::expand_macros;
+pub use expand::{expand_grad, expand_macros, GradSpec};
 pub use jtransform::JTransform;

@@ -19,7 +19,45 @@ use crate::vm::{eval_prim, CodeObject, Instr, Program, SegmentRunner, Value, Vm}
 use anyhow::{anyhow, bail, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
+use std::fmt;
 use std::rc::Rc;
+
+/// Execution backends a pipeline can lower to (the `Lower` transform's
+/// target). `Vm` is always available; `Xla` additionally extracts
+/// straight-line tensor segments and compiles them via PJRT.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Backend {
+    /// The closure-converted register-bytecode interpreter.
+    #[default]
+    Vm,
+    /// The VM with straight-line tensor segments compiled by XLA.
+    Xla,
+}
+
+impl Backend {
+    /// Stable spec token, used in pipeline fingerprints and `--pipeline`.
+    pub fn key(self) -> &'static str {
+        match self {
+            Backend::Vm => "vm",
+            Backend::Xla => "xla",
+        }
+    }
+
+    /// Inverse of [`Backend::key`].
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s {
+            "vm" => Ok(Backend::Vm),
+            "xla" => Ok(Backend::Xla),
+            other => bail!("unknown backend `{other}` (expected `vm` or `xla`)"),
+        }
+    }
+}
+
+impl fmt::Display for Backend {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.key())
+    }
+}
 
 /// Primitives the segment extractor may move into XLA.
 pub fn lowerable(p: Prim) -> bool {
@@ -510,16 +548,14 @@ fn lower_const(builder: &xla::XlaBuilder, c: &Value) -> Result<(xla::XlaOp, DTyp
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{Options, Session};
+    use crate::coordinator::Session;
 
     fn run_both(src: &str, entry: &str, args: Vec<Value>) -> (Value, Value, usize) {
         let mut s = Session::from_source(src).unwrap();
-        let plain = s.compile(entry, Options::default()).unwrap();
+        let plain = s.trace(entry).unwrap().compile().unwrap();
         let v1 = plain.call(args.clone()).unwrap();
         let mut s2 = Session::from_source(src).unwrap();
-        let xla = s2
-            .compile(entry, Options { xla_backend: true, ..Default::default() })
-            .unwrap();
+        let xla = s2.trace(entry).unwrap().jit(Backend::Xla).compile().unwrap();
         let v2 = xla.call(args).unwrap();
         (v1, v2, xla.metrics.xla_segments)
     }
@@ -559,7 +595,7 @@ def main(w):
     fn shape_polymorphic_cache() {
         let src = "def f(a, b):\n    return exp(a) * tanh(b) + a\n";
         let mut s = Session::from_source(src).unwrap();
-        let f = s.compile("f", Options { xla_backend: true, ..Default::default() }).unwrap();
+        let f = s.trace("f").unwrap().jit(Backend::Xla).compile().unwrap();
         // two different shapes through the same compiled segment
         for n in [3usize, 7] {
             let a = t(vec![0.1; n], vec![n]);

@@ -6,7 +6,8 @@
 //! returns the gradient of the whole parameter pytree, exactly like
 //! `jax.grad` over a params tuple.
 
-use crate::coordinator::{CompiledFn, Options, Session};
+use crate::backend::Backend;
+use crate::coordinator::{CompiledFn, Session};
 use crate::runtime::artifacts::MlpMeta;
 use crate::tensor::{ops, DType, Rng, Tensor};
 use crate::vm::Value;
@@ -31,9 +32,6 @@ def mlp_loss(params, x, y):
 
 def mlp_grad(params, x, y):
     return grad(mlp_loss)(params, x, y)
-
-def mlp_value_and_grad(params, x, y):
-    return value_and_grad(mlp_loss)(params, x, y)
 ";
 
 /// Synthetic linearly-separable-ish classification data: labels come from a
@@ -78,12 +76,14 @@ pub fn sgd_update(params: &[Tensor], grads: &Value, lr: f64) -> Result<Vec<Tenso
         .collect()
 }
 
-/// Compile the Myia MLP loss+grad entry points.
+/// Compile the Myia MLP loss+grad entry points. The gradient is derived
+/// from the loss with the transform API — `value_and_grad` is a pipeline
+/// stage, not a string in the model source.
 pub fn compile_mlp(xla: bool) -> Result<(Session, std::rc::Rc<CompiledFn>, std::rc::Rc<CompiledFn>)> {
     let mut s = Session::from_source(MLP_SOURCE)?;
-    let options = Options { xla_backend: xla, ..Default::default() };
-    let loss = s.compile("mlp_loss", options.clone())?;
-    let grad = s.compile("mlp_value_and_grad", options)?;
+    let backend = if xla { Backend::Xla } else { Backend::Vm };
+    let loss = s.trace("mlp_loss")?.jit(backend).compile()?;
+    let grad = s.trace("mlp_loss")?.value_and_grad().jit(backend).compile()?;
     Ok((s, loss, grad))
 }
 

@@ -1,14 +1,18 @@
 //! The compilation pipeline driver.
 //!
 //! Orchestrates the full toolchain the paper describes: parse → lower →
-//! macro (grad) expansion → type/shape specialization → optimization →
-//! VM codegen (optionally with XLA segment extraction) → execution. Compiled
-//! entry points are cached by (source, entry, options) so repeated `grad`
-//! calls pay the source-transformation cost once (§2.1.2: "the AD
+//! macro (grad) expansion → transform pipeline (grad / optimize / lower) →
+//! VM codegen (optionally with XLA segment extraction) → execution. The
+//! public surface is [`Session::trace`] + [`Function`]: transforms compose
+//! as first-class values, and compiled entry points are cached by
+//! `(entry, pipeline fingerprint, argument-type signature)` so repeated
+//! `grad` calls pay the source-transformation cost once (§2.1.2: "the AD
 //! transformation is done only once per program and hence doesn't incur
 //! overhead at runtime").
 
 pub mod mlp;
 mod session;
 
-pub use session::{CompiledFn, Metrics, Options, Session};
+#[allow(deprecated)]
+pub use session::Options;
+pub use session::{run_source, CompiledFn, Function, Metrics, Session};

@@ -1,16 +1,41 @@
-//! Compilation sessions and compiled entry points.
+//! Compilation sessions, function handles, and compiled entry points.
+//!
+//! [`Session`] owns one parsed source module. [`Session::trace`] returns a
+//! [`Function`] handle whose chainable methods (`.grad()`,
+//! `.value_and_grad()`, `.optimize(PassSet)`, `.jit(Backend)`) assemble a
+//! transform [`Pipeline`]; [`Function::compile`] runs it and caches the
+//! result under `(entry, pipeline fingerprint, argument-type signature)`.
+//! `f.grad().grad().compile()` is second-order AD with no `grad(grad(…))`
+//! string anywhere in user source — the transforms compose because the
+//! adjoint program is ordinary IR (§3.2).
+//!
+//! The legacy bool-flag [`Options`] struct survives as a deprecated shim
+//! that compiles down to a canonical pipeline, so it shares cache entries
+//! with the equivalent builder-built pipelines.
 
 use crate::ad::expand_macros;
+use crate::backend::Backend;
 use crate::ir::{analyze, GraphId, Module};
-use crate::opt::Optimizer;
+use crate::opt::PassSet;
 use crate::parser::compile_source;
+use crate::transform::{Pipeline, StageMetrics, Transform};
+use crate::types::AType;
 use crate::vm::{compile_program, Value, Vm};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::rc::Rc;
 use std::time::Instant;
 
-/// Pipeline options.
+/// Legacy bool-flag pipeline options.
+///
+/// Each flag combination maps onto one canonical [`Pipeline`] (see
+/// [`Options::to_pipeline`]), so code still passing `Options` shares compile
+/// caches with code using the transform API. New code should build
+/// pipelines directly: `session.trace("f")?.grad().compile()?`.
+#[deprecated(
+    note = "use Session::trace(..) with the transform API (or build a Pipeline); \
+            Options compiles down to a canonical pipeline"
+)]
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct Options {
     /// Run the optimizer (§4.3). Off = the "interpreted, unoptimized" arm.
@@ -22,15 +47,33 @@ pub struct Options {
     pub infer: bool,
 }
 
+#[allow(deprecated)]
 impl Default for Options {
     fn default() -> Self {
         Options { optimize: true, xla_backend: false, infer: false }
     }
 }
 
+#[allow(deprecated)]
+impl Options {
+    /// The canonical pipeline these flags describe.
+    pub fn to_pipeline(&self) -> Pipeline {
+        let mut b = Pipeline::builder();
+        if self.optimize {
+            b = b.optimize(PassSet::Standard);
+        }
+        let backend = if self.xla_backend { Backend::Xla } else { Backend::Vm };
+        b.lower(backend).build().expect("Options always maps to a valid pipeline")
+    }
+}
+
 /// Compile-time metrics (E1/E6/E7 read these).
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
+    /// Canonical spec of the pipeline that produced this artifact.
+    pub pipeline: String,
+    /// Per-transform timings and node counts, in execution order.
+    pub stages: Vec<StageMetrics>,
     pub parse_lower_us: u128,
     pub expand_us: u128,
     pub optimize_us: u128,
@@ -39,23 +82,48 @@ pub struct Metrics {
     pub nodes_after_expand: usize,
     pub nodes_after_optimize: usize,
     pub graphs_after_optimize: usize,
+    /// Source-level `grad`/`value_and_grad`/`jfwd` macros expanded.
     pub macros_expanded: usize,
+    /// Total derivative order applied by `Grad`/`ValueAndGrad` pipeline
+    /// stages (programmatic grads; disjoint from `macros_expanded`).
+    pub grad_transforms: usize,
     pub opt_iterations: usize,
     pub xla_segments: usize,
 }
 
+/// One compile-cache entry. Lookups compare borrowed data so a cache hit
+/// allocates nothing (no `name` clone, no key construction).
+struct CacheEntry {
+    fingerprint: u64,
+    signature: Option<Vec<AType>>,
+    compiled: Rc<CompiledFn>,
+}
+
 /// A compilation session over one source module.
+///
+/// [`Session::module`] holds the *pristine* lowered IR: every compile
+/// works on its own clone, so an `Optimize` stage in one pipeline can
+/// never leak into another pipeline's artifact (or into the session), and
+/// the cache key honestly describes what each artifact was built from.
+/// The transformed IR a pipeline produced lives in [`CompiledFn::module`].
 pub struct Session {
     pub module: Module,
     pub graphs: HashMap<String, GraphId>,
-    cache: HashMap<(String, Options), Rc<CompiledFn>>,
+    cache: HashMap<String, Vec<CacheEntry>>,
 }
 
-/// A compiled, executable entry point.
+/// A compiled, executable entry point, owning the transformed IR snapshot
+/// it was generated from ([`CompiledFn::entry`] indexes into it).
 pub struct CompiledFn {
     pub vm: Vm,
     pub entry: GraphId,
+    /// The module after this artifact's pipeline ran (for `show`/printing).
+    pub module: Module,
     pub metrics: Metrics,
+    /// Argument signature this artifact was specialized to (None = generic).
+    pub signature: Option<Vec<AType>>,
+    /// Inferred return type, when specialized.
+    pub ret_type: Option<AType>,
 }
 
 impl CompiledFn {
@@ -82,61 +150,235 @@ impl Session {
 
     /// Eagerly type/shape-check a call before running it (§4.2): infers from
     /// the argument types and errors on any definite mismatch.
-    pub fn check_call(&self, name: &str, args: &[Value]) -> Result<crate::types::AType> {
+    pub fn check_call(&self, name: &str, args: &[Value]) -> Result<AType> {
         let g = self.graph(name)?;
-        let atypes: Vec<crate::types::AType> =
-            args.iter().map(crate::types::AType::of_value).collect();
+        let atypes: Vec<AType> = args.iter().map(AType::of_value).collect();
         crate::types::infer_call(&self.module, g, &atypes)
     }
 
-    /// Compile an entry point (cached on (name, options)).
-    pub fn compile(&mut self, name: &str, options: Options) -> Result<Rc<CompiledFn>> {
-        let key = (name.to_string(), options.clone());
-        if let Some(f) = self.cache.get(&key) {
-            return Ok(f.clone());
-        }
-        let f = Rc::new(self.compile_uncached(name, &options)?);
-        self.cache.insert(key, f.clone());
-        Ok(f)
+    /// Begin a transform chain over the named entry point. The returned
+    /// [`Function`] borrows the session; finish the chain with
+    /// [`Function::compile`] to get a cached, callable artifact.
+    pub fn trace(&mut self, name: &str) -> Result<Function<'_>> {
+        self.graph(name)?; // fail fast on unknown entry points
+        Ok(Function {
+            name: name.to_string(),
+            session: self,
+            builder: Pipeline::builder(),
+            passes: None,
+            backend: Backend::Vm,
+            signature: None,
+        })
     }
 
-    fn compile_uncached(&mut self, name: &str, options: &Options) -> Result<CompiledFn> {
-        let entry = self.graph(name)?;
-        let m = &mut self.module;
-        let mut metrics = Metrics::default();
-        metrics.nodes_after_lowering = m.reachable_node_count(entry);
+    /// Compile `name` through `pipeline` (unspecialized). Cached.
+    pub fn compile_pipeline(&mut self, name: &str, pipeline: &Pipeline) -> Result<Rc<CompiledFn>> {
+        self.compile_specialized(name, pipeline, None)
+    }
 
-        let t0 = Instant::now();
-        metrics.macros_expanded = expand_macros(m, entry)?;
-        metrics.expand_us = t0.elapsed().as_micros();
-        metrics.nodes_after_expand = m.reachable_node_count(entry);
-
-        let t1 = Instant::now();
-        if options.optimize {
-            let stats = Optimizer::standard().run(m, entry)?;
-            metrics.opt_iterations = stats.iterations;
+    /// Compile `name` through `pipeline`, optionally specialized to an
+    /// argument-type signature (the signature is type-checked eagerly,
+    /// §4.2). Artifacts are cached under `(name, pipeline fingerprint,
+    /// signature)`; a hit performs no allocation.
+    pub fn compile_specialized(
+        &mut self,
+        name: &str,
+        pipeline: &Pipeline,
+        signature: Option<&[AType]>,
+    ) -> Result<Rc<CompiledFn>> {
+        let fp = pipeline.fingerprint();
+        if let Some(entries) = self.cache.get(name) {
+            // The fingerprint is the fast filter; comparing the canonical
+            // spec (already stored in the artifact's metrics) makes a
+            // 64-bit hash collision impossible to serve.
+            if let Some(hit) = entries.iter().find(|e| {
+                e.fingerprint == fp
+                    && e.compiled.metrics.pipeline == pipeline.spec()
+                    && e.signature.as_deref() == signature
+            }) {
+                return Ok(hit.compiled.clone());
+            }
         }
-        metrics.optimize_us = t1.elapsed().as_micros();
+        let compiled = Rc::new(self.compile_uncached(name, pipeline, signature)?);
+        self.cache.entry(name.to_string()).or_default().push(CacheEntry {
+            fingerprint: fp,
+            signature: signature.map(|s| s.to_vec()),
+            compiled: compiled.clone(),
+        });
+        Ok(compiled)
+    }
+
+    /// Deprecated shim: compile with legacy bool flags. Equivalent to
+    /// `compile_pipeline(name, &options.to_pipeline())` — and because the
+    /// mapping is canonical, it shares cache entries with the new API.
+    #[allow(deprecated)]
+    #[deprecated(note = "use Session::trace(name)…compile(), or compile_pipeline")]
+    pub fn compile(&mut self, name: &str, options: Options) -> Result<Rc<CompiledFn>> {
+        self.compile_pipeline(name, &options.to_pipeline())
+    }
+
+    fn compile_uncached(
+        &mut self,
+        name: &str,
+        pipeline: &Pipeline,
+        signature: Option<&[AType]>,
+    ) -> Result<CompiledFn> {
+        let source_entry = self.graph(name)?;
+        // Transform a private clone: the session module stays pristine, so
+        // e.g. an unoptimized pipeline compiled after an optimized one of
+        // the same entry really is unoptimized.
+        let mut module = self.module.clone();
+        let m = &mut module;
+        let mut metrics =
+            Metrics { pipeline: pipeline.spec().to_string(), ..Default::default() };
+        metrics.nodes_after_lowering = m.reachable_node_count(source_entry);
+
+        // Source-level macros (`grad(f)` written in user code) are expanded
+        // unconditionally: the VM cannot execute a Macro constant, so this
+        // is a semantic requirement rather than a pipeline choice — it is
+        // deliberately not part of the fingerprint.
+        let t0 = Instant::now();
+        metrics.macros_expanded = expand_macros(m, source_entry)?;
+        metrics.expand_us = t0.elapsed().as_micros();
+        metrics.nodes_after_expand = m.reachable_node_count(source_entry);
+
+        let (entry, stages) = pipeline.apply_ir(m, source_entry)?;
+        for sm in &stages {
+            for (k, v) in &sm.detail {
+                match k.as_str() {
+                    "grad_order" => metrics.grad_transforms += *v,
+                    "iterations" => metrics.opt_iterations += *v,
+                    _ => {}
+                }
+            }
+            match sm.name.as_str() {
+                "grad" | "value_and_grad" => {
+                    metrics.expand_us += sm.us;
+                    metrics.nodes_after_expand = sm.nodes_after;
+                }
+                "optimize" => metrics.optimize_us += sm.us,
+                _ => {}
+            }
+        }
+        metrics.stages = stages;
+
         let analysis = analyze(m, entry);
         metrics.nodes_after_optimize = analysis.node_count(m);
         metrics.graphs_after_optimize = analysis.graphs.len();
 
+        // Eager per-signature specialization check (§4.2).
+        let ret_type = match signature {
+            Some(sig) => Some(crate::types::infer_call(m, entry, sig)?),
+            None => None,
+        };
+
         let t2 = Instant::now();
         let program = compile_program(m, entry).map_err(|e| anyhow!("{e}"))?;
         let mut vm = Vm::new(program);
-        if options.xla_backend {
+        if pipeline.backend() == Backend::Xla {
             metrics.xla_segments = crate::backend::install_segments(&mut vm)?;
         }
         metrics.codegen_us = t2.elapsed().as_micros();
 
-        Ok(CompiledFn { vm, entry, metrics })
+        Ok(CompiledFn {
+            vm,
+            entry,
+            module,
+            metrics,
+            signature: signature.map(|s| s.to_vec()),
+            ret_type,
+        })
+    }
+}
+
+/// A traced entry point: a handle that accumulates transforms and compiles
+/// into a cached artifact. Obtained from [`Session::trace`].
+///
+/// Transform methods consume and return the handle, so chains read like the
+/// math: `s.trace("f")?.grad().grad().compile()?` is d²f/dx².
+pub struct Function<'s> {
+    session: &'s mut Session,
+    name: String,
+    builder: crate::transform::PipelineBuilder,
+    passes: Option<PassSet>,
+    backend: Backend,
+    signature: Option<Vec<AType>>,
+}
+
+impl<'s> Function<'s> {
+    /// Differentiate w.r.t. the first parameter (reverse mode). Chainable:
+    /// each call raises the derivative order by one.
+    pub fn grad(mut self) -> Self {
+        self.builder = self.builder.grad();
+        self
+    }
+
+    /// Differentiate w.r.t. parameter `wrt`.
+    pub fn grad_wrt(mut self, wrt: usize) -> Self {
+        self.builder = self.builder.grad_wrt(wrt);
+        self
+    }
+
+    /// Rewrite to return `(value, gradient)`, sharing the forward pass.
+    pub fn value_and_grad(mut self) -> Self {
+        self.builder = self.builder.value_and_grad();
+        self
+    }
+
+    /// Rewrite to return `(value, gradient)` w.r.t. parameter `wrt`.
+    pub fn value_and_grad_wrt(mut self, wrt: usize) -> Self {
+        self.builder = self.builder.value_and_grad_wrt(wrt);
+        self
+    }
+
+    /// Append a user-defined IR transform. Lowering is not expressible
+    /// here — the handle appends its own final lowering stage, so a
+    /// transform with `lower_to()` set is rejected when the pipeline is
+    /// built (same behavior as [`crate::transform::PipelineBuilder`]);
+    /// select the backend with [`Function::jit`] instead.
+    pub fn transform(mut self, t: impl Transform + 'static) -> Self {
+        self.builder = self.builder.transform(t);
+        self
+    }
+
+    /// Select the optimization pass set (default: [`PassSet::Standard`]).
+    pub fn optimize(mut self, passes: PassSet) -> Self {
+        self.passes = Some(passes);
+        self
+    }
+
+    /// Lower to `backend` (default: the VM). `jit(Backend::Xla)` compiles
+    /// straight-line tensor segments with XLA.
+    pub fn jit(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Specialize to an argument-type signature: the signature joins the
+    /// cache key and is eagerly type/shape-checked at compile time (§4.2).
+    pub fn specialize(mut self, signature: Vec<AType>) -> Self {
+        self.signature = Some(signature);
+        self
+    }
+
+    /// The pipeline this handle currently describes: accumulated transforms,
+    /// then optimization, then lowering.
+    pub fn pipeline(&self) -> Result<Pipeline> {
+        let passes = self.passes.clone().unwrap_or(PassSet::Standard);
+        self.builder.clone().optimize(passes).lower(self.backend).build()
+    }
+
+    /// Run the pipeline and return the (cached) compiled artifact.
+    pub fn compile(self) -> Result<Rc<CompiledFn>> {
+        let pipeline = self.pipeline()?;
+        self.session.compile_specialized(&self.name, &pipeline, self.signature.as_deref())
     }
 }
 
 /// One-shot convenience: compile `entry` from `source` and run it.
 pub fn run_source(source: &str, entry: &str, args: Vec<Value>) -> Result<Value> {
     let mut s = Session::from_source(source)?;
-    let f = s.compile(entry, Options::default())?;
+    let f = s.compile_pipeline(entry, &Pipeline::standard(Backend::Vm))?;
     f.call(args)
 }
 
@@ -154,10 +396,11 @@ def main(x):
     return grad(f)(x)
 ";
         let mut s = Session::from_source(src).unwrap();
-        let f = s.compile("main", Options::default()).unwrap();
+        let f = s.trace("main").unwrap().compile().unwrap();
         let out = f.call(vec![Value::F64(2.0)]).unwrap();
         assert!((out.as_f64().unwrap() - 12.0).abs() < 1e-12);
         assert_eq!(f.metrics.macros_expanded, 1);
+        assert_eq!(f.metrics.pipeline, "opt=standard,vm");
         // Optimization must shrink the expanded program substantially.
         assert!(
             f.metrics.nodes_after_optimize < f.metrics.nodes_after_expand / 2,
@@ -168,13 +411,23 @@ def main(x):
     }
 
     #[test]
-    fn cache_hits() {
+    fn cache_hits_across_both_apis() {
         let mut s = Session::from_source("def f(x):\n    return x + 1.0\n").unwrap();
-        let a = s.compile("f", Options::default()).unwrap();
-        let b = s.compile("f", Options::default()).unwrap();
+        let a = s.trace("f").unwrap().compile().unwrap();
+        let b = s.trace("f").unwrap().compile().unwrap();
         assert!(Rc::ptr_eq(&a, &b));
-        let c = s.compile("f", Options { optimize: false, ..Default::default() }).unwrap();
+        // A different pass set is a different pipeline.
+        let c = s.trace("f").unwrap().optimize(PassSet::None).compile().unwrap();
         assert!(!Rc::ptr_eq(&a, &c));
+        // The deprecated Options shim canonicalizes onto the SAME pipelines.
+        #[allow(deprecated)]
+        let d = s.compile("f", Options::default()).unwrap();
+        assert!(Rc::ptr_eq(&a, &d));
+        #[allow(deprecated)]
+        let e = s
+            .compile("f", Options { optimize: false, ..Default::default() })
+            .unwrap();
+        assert!(Rc::ptr_eq(&c, &e));
     }
 
     #[test]
@@ -187,7 +440,7 @@ def main(x):
     return grad(f)(x)
 ";
         let mut s = Session::from_source(src).unwrap();
-        let f = s.compile("main", Options { optimize: false, ..Default::default() }).unwrap();
+        let f = s.trace("main").unwrap().optimize(PassSet::None).compile().unwrap();
         let out = f.call(vec![Value::F64(0.9)]).unwrap();
         let want = 0.9f64.cos() * 0.9 + 0.9f64.sin();
         assert!((out.as_f64().unwrap() - want).abs() < 1e-12);
@@ -196,6 +449,26 @@ def main(x):
     #[test]
     fn missing_entry_reported() {
         let mut s = Session::from_source("def f(x):\n    return x\n").unwrap();
-        assert!(s.compile("nope", Options::default()).is_err());
+        assert!(s.trace("nope").is_err());
+    }
+
+    #[test]
+    fn function_grad_matches_macro_grad() {
+        // Programmatic .grad() and source-level grad(f) agree.
+        let src = "\
+def f(x):
+    return x ** 3.0
+
+def main(x):
+    return grad(f)(x)
+";
+        let mut s = Session::from_source(src).unwrap();
+        let via_macro = s.trace("main").unwrap().compile().unwrap();
+        let via_transform = s.trace("f").unwrap().grad().compile().unwrap();
+        for x in [0.5, -1.0, 2.0] {
+            let a = via_macro.call(vec![Value::F64(x)]).unwrap().as_f64().unwrap();
+            let b = via_transform.call(vec![Value::F64(x)]).unwrap().as_f64().unwrap();
+            assert!((a - b).abs() < 1e-12, "x={x}: {a} vs {b}");
+        }
     }
 }

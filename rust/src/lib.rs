@@ -11,8 +11,16 @@
 //! * [`ad`] — closure-based source-transformation reverse-mode AD (§3.2),
 //!   forward-mode dual numbers, and an operator-overloading tape baseline
 //!   (§2.1.1) for the paper's comparisons.
+//! * [`transform`] — the public compilation API: first-class, composable
+//!   program transforms ([`transform::Grad`], [`transform::ValueAndGrad`],
+//!   [`transform::Optimize`], [`transform::Lower`]) chained by a
+//!   [`transform::PipelineBuilder`] into a fingerprinted
+//!   [`transform::Pipeline`]. `grad` of `grad`, grad-under-jit, and backend
+//!   selection are all expressed by composing transforms — AD is just
+//!   another compiler pass, which is the paper's thesis.
 //! * [`opt`] — the optimization pipeline (§4.3) that collapses generated
-//!   adjoints to hand-written form (Figure 1).
+//!   adjoints to hand-written form (Figure 1); pass selections are named
+//!   [`opt::PassSet`] values.
 //! * [`types`] — type/shape inference and monomorphizing specialization
 //!   (§4.2).
 //! * [`vm`] — Myia's virtual machine: a closure-converted register-bytecode
@@ -20,7 +28,12 @@
 //! * [`backend`] + [`runtime`] — the compiled backend for straight-line graph
 //!   segments (the paper used TVM; we lower to XLA and execute via PJRT), and
 //!   the loader for AOT artifacts produced by the JAX/Pallas build path.
-//! * [`coordinator`] — the end-to-end pipeline driver and CLI.
+//! * [`coordinator`] — the end-to-end driver and CLI: [`coordinator::Session`]
+//!   owns a parsed module, and [`coordinator::Session::trace`] returns a
+//!   [`coordinator::Function`] handle supporting `.grad()`,
+//!   `.value_and_grad()`, `.jit(Backend)`, and `.compile()`. Compiled
+//!   artifacts are cached per (entry, pipeline fingerprint, argument-type
+//!   signature).
 //! * [`tensor`], [`bench`], [`ptest`], [`baselines`] — substrates built from
 //!   scratch: a dense tensor library, a micro-benchmark harness, a property
 //!   testing framework, and the dataflow-graph / OO-tape comparators.
@@ -33,11 +46,24 @@ pub mod parser;
 pub mod vm;
 pub mod ad;
 pub mod opt;
+pub mod transform;
 pub mod types;
 pub mod runtime;
 pub mod backend;
 pub mod baselines;
 pub mod coordinator;
+
+/// The common public surface: `use myia::prelude::*` is enough for the
+/// quickstart, the examples, and most downstream code.
+pub mod prelude {
+    pub use crate::backend::Backend;
+    pub use crate::coordinator::{CompiledFn, Function, Metrics, Session};
+    pub use crate::opt::PassSet;
+    pub use crate::transform::{
+        Grad, Lower, Optimize, Pipeline, PipelineBuilder, Transform, ValueAndGrad,
+    };
+    pub use crate::vm::Value;
+}
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

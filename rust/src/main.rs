@@ -2,17 +2,26 @@
 //!
 //! ```text
 //! myia run <file.py> <entry> [args..]       compile + execute
-//! myia grad <file.py> <fn> [x..]            derivative of a function
+//! myia grad <file.py> <fn> [args..]         derivative of a function
 //! myia show <file.py> <entry> [--raw]       print optimized (or raw) IR
 //! myia check <file.py> <entry> [args..]     eager type/shape check (§4.2)
 //! myia train-mlp                            shorthand for the E2E driver
 //! ```
 //!
+//! Pipeline selection: `--pipeline=SPEC` takes a full transform spec
+//! (e.g. `grad^2,opt=no-inline,xla`); otherwise `--no-opt` / `--xla` map
+//! onto the canonical pipeline. `grad` takes `--order=N` and `--wrt=K` and
+//! works for entry points of any arity — differentiation is a transform
+//! stage, not a generated source wrapper.
+//!
 //! Arguments parse as f64 (`3.0`), i64 (`3`) or bool (`true`). Argument
 //! parsing is hand-rolled: clap is not in the offline crate set.
 
-use myia::coordinator::{Options, Session};
+use myia::backend::Backend;
+use myia::coordinator::Session;
 use myia::ir::print_graph;
+use myia::opt::PassSet;
+use myia::transform::Pipeline;
 use myia::vm::Value;
 use std::process::ExitCode;
 
@@ -32,11 +41,58 @@ fn parse_value(s: &str) -> Value {
 
 fn usage() -> ExitCode {
     eprintln!(
-        "usage:\n  myia run <file.py> <entry> [args..] [--no-opt] [--xla]\n  \
-         myia grad <file.py> <fn> [x..]\n  myia show <file.py> <entry> [--raw]\n  \
-         myia check <file.py> <entry> [args..]\n  myia train-mlp"
+        "usage:\n  myia run <file.py> <entry> [args..] [--no-opt] [--xla] [--pipeline=SPEC]\n  \
+         myia grad <file.py> <fn> [args..] [--order=N] [--wrt=K] [--no-opt] [--xla]\n  \
+         myia show <file.py> <entry> [--raw] [--pipeline=SPEC]\n  \
+         myia check <file.py> <entry> [args..]\n  myia train-mlp\n\n\
+         pipeline spec: comma-separated stages from grad[^N][@WRT], vgrad[@WRT],\n\
+         opt[=standard|none|no-<pass>], and a final backend (vm | xla),\n\
+         e.g. --pipeline=grad^2,opt=standard,vm"
     );
     ExitCode::from(2)
+}
+
+/// Value of a `--name=value` flag.
+fn flag_value<'a>(flags: &[&'a String], name: &str) -> Option<&'a str> {
+    flags
+        .iter()
+        .find_map(|f| f.strip_prefix(name).and_then(|rest| rest.strip_prefix('=')))
+}
+
+fn parse_usize_flag(flags: &[&String], name: &str, default: usize) -> anyhow::Result<usize> {
+    match flag_value(flags, name) {
+        None => Ok(default),
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("{name} expects a non-negative integer, got `{v}`")),
+    }
+}
+
+/// The pipeline the flags describe. `--pipeline=SPEC` wins outright;
+/// otherwise `grad_order`/`wrt` (for the `grad` subcommand) plus
+/// `--no-opt`/`--xla` assemble the canonical pipeline.
+fn pipeline_from_flags(
+    flags: &[&String],
+    grad_order: usize,
+    wrt: usize,
+) -> anyhow::Result<Pipeline> {
+    if let Some(spec) = flag_value(flags, "--pipeline") {
+        if flags.iter().any(|f| *f == "--no-opt" || *f == "--xla") {
+            anyhow::bail!(
+                "--pipeline already specifies optimization and backend; \
+                 drop --no-opt/--xla"
+            );
+        }
+        return Pipeline::parse(spec);
+    }
+    let mut b = Pipeline::builder();
+    if grad_order > 0 {
+        b = b.grad_spec(grad_order, wrt);
+    }
+    let passes =
+        if flags.iter().any(|f| *f == "--no-opt") { PassSet::None } else { PassSet::Standard };
+    let backend = if flags.iter().any(|f| *f == "--xla") { Backend::Xla } else { Backend::Vm };
+    b.optimize(passes).lower(backend).build()
 }
 
 fn main() -> ExitCode {
@@ -52,26 +108,53 @@ fn main() -> ExitCode {
 
 fn run(args: &[String]) -> anyhow::Result<ExitCode> {
     let Some(cmd) = args.first() else { return Ok(usage()) };
+    if !matches!(cmd.as_str(), "run" | "grad" | "show" | "check" | "train-mlp") {
+        return Ok(usage()); // includes `myia --help` and typo'd commands
+    }
     let flags: Vec<&String> = args.iter().filter(|a| a.starts_with("--")).collect();
     let pos: Vec<&String> = args[1..].iter().filter(|a| !a.starts_with("--")).collect();
-    let options = Options {
-        optimize: !flags.iter().any(|f| *f == "--no-opt"),
-        xla_backend: flags.iter().any(|f| *f == "--xla"),
-        infer: false,
+    // Reject flags the subcommand does not honor — in particular
+    // `--order 2` (space instead of `=`) would otherwise silently default
+    // the flag and push `2` into the positional call arguments, and
+    // `myia run --order=2` would silently not differentiate.
+    let allowed: &[&str] = match cmd.as_str() {
+        "run" => &["--no-opt", "--xla", "--pipeline="],
+        "grad" => &["--no-opt", "--xla", "--order=", "--wrt="],
+        "show" => &["--raw", "--no-opt", "--xla", "--pipeline="],
+        _ => &[],
     };
+    for f in &flags {
+        let known = allowed
+            .iter()
+            .any(|a| if a.ends_with('=') { f.starts_with(a) } else { f.as_str() == *a });
+        if !known {
+            anyhow::bail!(
+                "flag `{f}` is not valid for `{cmd}` (value-taking flags use --flag=value)"
+            );
+        }
+    }
 
     match cmd.as_str() {
         "run" | "grad" => {
             let (Some(file), Some(entry)) = (pos.first(), pos.get(1)) else { return Ok(usage()) };
-            let source = std::fs::read_to_string(file)?;
-            let source = if cmd == "grad" {
-                format!("{source}\ndef __cli_grad(x):\n    return grad({entry})(x)\n")
+            // `grad` is the programmatic Grad transform: it differentiates
+            // entry points of any arity (w.r.t. `--wrt`, default the first
+            // parameter) — no single-argument source wrapper involved.
+            let (order, wrt) = if cmd == "grad" {
+                // (--pipeline is rejected above for `grad`: a full spec
+                // would silently override the implicit Grad stage.)
+                let order = parse_usize_flag(&flags, "--order", 1)?;
+                if order == 0 {
+                    anyhow::bail!("--order must be >= 1");
+                }
+                (order, parse_usize_flag(&flags, "--wrt", 0)?)
             } else {
-                source
+                (0, 0)
             };
-            let entry = if cmd == "grad" { "__cli_grad" } else { entry.as_str() };
+            let pipeline = pipeline_from_flags(&flags, order, wrt)?;
+            let source = std::fs::read_to_string(file)?;
             let mut s = Session::from_source(&source)?;
-            let f = s.compile(entry, options)?;
+            let f = s.compile_pipeline(entry, &pipeline)?;
             let vals: Vec<Value> = pos[2..].iter().map(|a| parse_value(a)).collect();
             let out = f.call(vals)?;
             println!("{out}");
@@ -81,14 +164,21 @@ fn run(args: &[String]) -> anyhow::Result<ExitCode> {
             let (Some(file), Some(entry)) = (pos.first(), pos.get(1)) else { return Ok(usage()) };
             let source = std::fs::read_to_string(file)?;
             if flags.iter().any(|f| *f == "--raw") {
+                if flags.len() > 1 {
+                    anyhow::bail!(
+                        "--raw shows the untransformed IR; drop the pipeline-selecting flags"
+                    );
+                }
                 let s = Session::from_source(&source)?;
                 println!("{}", print_graph(&s.module, s.graph(entry)?, true));
             } else {
+                let pipeline = pipeline_from_flags(&flags, 0, 0)?;
                 let mut s = Session::from_source(&source)?;
-                let f = s.compile(entry, options)?;
-                println!("{}", print_graph(&s.module, s.graph(entry)?, true));
+                let f = s.compile_pipeline(entry, &pipeline)?;
+                println!("{}", print_graph(&f.module, f.entry, true));
                 eprintln!(
-                    "# nodes: lowered {} -> expanded {} -> optimized {}",
+                    "# pipeline {}: nodes lowered {} -> expanded {} -> optimized {}",
+                    f.metrics.pipeline,
                     f.metrics.nodes_after_lowering,
                     f.metrics.nodes_after_expand,
                     f.metrics.nodes_after_optimize

@@ -13,7 +13,76 @@ pub use inline::Inline;
 pub use passes::{Algebraic, ConstantFold, Cse, Pass, TupleSimplify};
 
 use crate::ir::{GraphId, Module};
-use anyhow::Result;
+use anyhow::{bail, Result};
+
+/// Names of every pass in the standard pipeline, in execution order.
+pub const STANDARD_PASSES: [&str; 5] =
+    ["tuple-simplify", "inline", "algebraic", "constant-fold", "cse"];
+
+/// A named, selectable set of optimization passes — the unit the `Optimize`
+/// transform is configured with. Unlike a bare [`Optimizer`], a `PassSet` is
+/// cheap to clone, hash and fingerprint, so pipelines that differ only in
+/// their pass selection get distinct cache entries.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, Default)]
+pub enum PassSet {
+    /// The full standard pipeline ([`STANDARD_PASSES`]).
+    #[default]
+    Standard,
+    /// The standard pipeline minus one named pass (E6 ablations).
+    Without(String),
+    /// No optimization at all (the paper's "unoptimized" arm).
+    None,
+}
+
+impl PassSet {
+    /// Instantiate the optimizer this set describes.
+    pub fn optimizer(&self) -> Optimizer {
+        match self {
+            PassSet::Standard => Optimizer::standard(),
+            PassSet::Without(name) => Optimizer::without(name),
+            PassSet::None => Optimizer::none(),
+        }
+    }
+
+    /// Stable spec token, used in pipeline fingerprints and `--pipeline`.
+    pub fn key(&self) -> String {
+        match self {
+            PassSet::Standard => "standard".to_string(),
+            PassSet::Without(name) => format!("no-{name}"),
+            PassSet::None => "none".to_string(),
+        }
+    }
+
+    /// Check that every pass this set names exists. `Optimizer::without`
+    /// silently removes nothing on a typo, so both [`PassSet::parse`] and
+    /// pipeline building route through this.
+    pub fn validate(&self) -> Result<()> {
+        if let PassSet::Without(name) = self {
+            if !STANDARD_PASSES.contains(&name.as_str()) {
+                bail!("unknown pass `{name}` (known: {})", STANDARD_PASSES.join(", "));
+            }
+        }
+        Ok(())
+    }
+
+    /// Inverse of [`PassSet::key`]; rejects unknown pass names.
+    pub fn parse(s: &str) -> Result<PassSet> {
+        let set = match s {
+            "standard" | "full" => PassSet::Standard,
+            "none" => PassSet::None,
+            other => {
+                let Some(name) = other.strip_prefix("no-") else {
+                    bail!(
+                        "unknown pass set `{other}` (expected `standard`, `none`, or `no-<pass>`)"
+                    );
+                };
+                PassSet::Without(name.to_string())
+            }
+        };
+        set.validate()?;
+        Ok(set)
+    }
+}
 
 /// Per-pass change counts from an optimization run.
 #[derive(Debug, Default, Clone)]

@@ -1,0 +1,620 @@
+//! First-class, composable program transforms (§3.2, §4.3).
+//!
+//! The paper's central claim is that a closure-capable functional IR makes
+//! AD *just another program transformation*: `grad` composes with itself
+//! (reverse-over-reverse), with optimization, and with backend lowering.
+//! This module makes that composition the public API instead of burying it
+//! behind boolean flags:
+//!
+//! * [`Transform`] — an IR-module-to-IR-module rewrite with its own metrics.
+//!   Concrete implementations: [`Grad`] (`order`-times differentiation
+//!   w.r.t. parameter `wrt`), [`ValueAndGrad`], [`Optimize`] over a named
+//!   [`PassSet`], and [`Lower`] to a [`Backend`].
+//! * [`PipelineBuilder`] — chains transforms into a validated, canonicalized
+//!   [`Pipeline`]. Canonicalization merges adjacent `Grad` stages and
+//!   deduplicates repeated identical `Optimize` stages, so a pipeline built
+//!   as `.grad().grad()` and one built as `grad^2` share one fingerprint —
+//!   and therefore one cache entry in the session.
+//! * [`Pipeline`] — the runnable result: an ordered stage list plus the
+//!   lowering backend, with a stable [`Pipeline::fingerprint`] and a
+//!   round-trippable spec string ([`Pipeline::parse`] / [`Pipeline::spec`],
+//!   the CLI's `--pipeline` format).
+//!
+//! ```text
+//! spec    := stage ("," stage)*
+//! stage   := "grad" ["^" ORDER] ["@" WRT]   differentiate (reverse mode)
+//!          | "vgrad" ["@" WRT]              value_and_grad
+//!          | "opt" ["=" PASSSET]            optimize (default: standard)
+//!          | "vm" | "xla"                   lower to a backend (last stage)
+//! PASSSET := "standard" | "none" | "no-" PASS
+//! ```
+
+use crate::ad::{expand_grad, GradSpec};
+use crate::backend::Backend;
+use crate::ir::{GraphId, Module};
+use crate::opt::PassSet;
+use anyhow::{anyhow, bail, Result};
+use std::collections::hash_map::DefaultHasher;
+use std::fmt;
+use std::hash::{Hash, Hasher};
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Per-stage compile metrics, collected by the pipeline runner.
+#[derive(Debug, Clone, Default)]
+pub struct StageMetrics {
+    /// The transform's [`Transform::name`].
+    pub name: String,
+    /// Wall time spent in this stage.
+    pub us: u128,
+    /// Reachable node count of the entry graph after this stage.
+    pub nodes_after: usize,
+    /// Transform-specific counters (e.g. `iterations` for optimize).
+    pub detail: Vec<(String, usize)>,
+}
+
+/// An IR-module-to-IR-module rewrite. Applying a transform may create new
+/// graphs (e.g. the ∇-wrapper) and returns the entry graph the rest of the
+/// pipeline should continue from.
+pub trait Transform {
+    /// Short stable name for metrics and progress output.
+    fn name(&self) -> &'static str;
+
+    /// Canonical spec token. Two transforms with the same key must rewrite
+    /// identical inputs identically — keys are what pipeline fingerprints
+    /// (and therefore compile-cache hits) are built from.
+    fn key(&self) -> String;
+
+    /// Rewrite the module; returns the new entry graph. `stage.detail` may
+    /// be filled with transform-specific counters.
+    fn apply(&self, m: &mut Module, entry: GraphId, stage: &mut StageMetrics) -> Result<GraphId>;
+
+    /// If this is a lowering stage, the backend to lower to. Lowering
+    /// stages terminate a pipeline; codegen happens after all IR rewrites.
+    fn lower_to(&self) -> Option<Backend> {
+        None
+    }
+}
+
+fn grad_key(base: &str, order: usize, wrt: usize) -> String {
+    let mut s = String::from(base);
+    if order != 1 {
+        s.push('^');
+        s.push_str(&order.to_string());
+    }
+    if wrt != 0 {
+        s.push('@');
+        s.push_str(&wrt.to_string());
+    }
+    s
+}
+
+/// Reverse-mode differentiation: builds the ∇-wrapper around the entry
+/// graph `order` times, differentiating w.r.t. parameter `wrt`. `order: 2`
+/// is reverse-over-reverse — the second derivative, with no `grad(grad(…))`
+/// string anywhere in user source.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Grad {
+    pub order: usize,
+    pub wrt: usize,
+}
+
+impl Default for Grad {
+    fn default() -> Self {
+        Grad { order: 1, wrt: 0 }
+    }
+}
+
+impl Transform for Grad {
+    fn name(&self) -> &'static str {
+        "grad"
+    }
+
+    fn key(&self) -> String {
+        grad_key("grad", self.order, self.wrt)
+    }
+
+    fn apply(&self, m: &mut Module, entry: GraphId, stage: &mut StageMetrics) -> Result<GraphId> {
+        let spec = GradSpec { order: self.order, wrt: self.wrt, value_and_grad: false };
+        let g = expand_grad(m, entry, &spec)?;
+        stage.detail.push(("grad_order".to_string(), self.order));
+        Ok(g)
+    }
+}
+
+/// Like [`Grad`] but the wrapper returns `(value, gradient)`, sharing the
+/// forward pass between both outputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct ValueAndGrad {
+    pub wrt: usize,
+}
+
+impl Transform for ValueAndGrad {
+    fn name(&self) -> &'static str {
+        "value_and_grad"
+    }
+
+    fn key(&self) -> String {
+        grad_key("vgrad", 1, self.wrt)
+    }
+
+    fn apply(&self, m: &mut Module, entry: GraphId, stage: &mut StageMetrics) -> Result<GraphId> {
+        let spec = GradSpec { order: 1, wrt: self.wrt, value_and_grad: true };
+        let g = expand_grad(m, entry, &spec)?;
+        stage.detail.push(("grad_order".to_string(), 1));
+        Ok(g)
+    }
+}
+
+/// Run a named [`PassSet`] to fixpoint over everything reachable from the
+/// entry graph (§4.3 — Figure 1's collapse of the expanded adjoint).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Optimize(pub PassSet);
+
+impl Transform for Optimize {
+    fn name(&self) -> &'static str {
+        "optimize"
+    }
+
+    fn key(&self) -> String {
+        format!("opt={}", self.0.key())
+    }
+
+    fn apply(&self, m: &mut Module, entry: GraphId, stage: &mut StageMetrics) -> Result<GraphId> {
+        let stats = self.0.optimizer().run(m, entry)?;
+        stage.detail.push(("iterations".to_string(), stats.iterations));
+        for (pass, fired) in stats.fired {
+            stage.detail.push((format!("fired:{pass}"), fired));
+        }
+        Ok(entry)
+    }
+}
+
+/// Lower to an execution backend. The IR rewrite is the identity — codegen
+/// runs after every IR stage — but the stage selects *where* the program
+/// executes, terminates the pipeline, and participates in the fingerprint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct Lower(pub Backend);
+
+impl Transform for Lower {
+    fn name(&self) -> &'static str {
+        "lower"
+    }
+
+    fn key(&self) -> String {
+        self.0.key().to_string()
+    }
+
+    fn apply(&self, _m: &mut Module, entry: GraphId, _stage: &mut StageMetrics) -> Result<GraphId> {
+        Ok(entry)
+    }
+
+    fn lower_to(&self) -> Option<Backend> {
+        Some(self.0)
+    }
+}
+
+/// A builder stage, kept structured (rather than boxed) so [`build`] can
+/// canonicalize: adjacent `Grad`s merge, duplicate `Optimize`s collapse.
+///
+/// [`build`]: PipelineBuilder::build
+#[derive(Clone)]
+enum Stage {
+    Grad { order: usize, wrt: usize },
+    ValueAndGrad { wrt: usize },
+    Optimize(PassSet),
+    Lower(Backend),
+    Custom(Rc<dyn Transform>),
+}
+
+/// Chains transforms into a validated [`Pipeline`].
+#[derive(Clone, Default)]
+pub struct PipelineBuilder {
+    stages: Vec<Stage>,
+}
+
+impl PipelineBuilder {
+    pub fn new() -> PipelineBuilder {
+        PipelineBuilder::default()
+    }
+
+    /// Differentiate once w.r.t. the first parameter.
+    pub fn grad(self) -> Self {
+        self.grad_spec(1, 0)
+    }
+
+    /// Differentiate once w.r.t. parameter `wrt`.
+    pub fn grad_wrt(self, wrt: usize) -> Self {
+        self.grad_spec(1, wrt)
+    }
+
+    /// Differentiate `order` times w.r.t. parameter `wrt`.
+    pub fn grad_spec(mut self, order: usize, wrt: usize) -> Self {
+        self.stages.push(Stage::Grad { order, wrt });
+        self
+    }
+
+    /// Rewrite to return `(value, gradient)` w.r.t. the first parameter.
+    pub fn value_and_grad(self) -> Self {
+        self.value_and_grad_wrt(0)
+    }
+
+    /// Rewrite to return `(value, gradient)` w.r.t. parameter `wrt`.
+    pub fn value_and_grad_wrt(mut self, wrt: usize) -> Self {
+        self.stages.push(Stage::ValueAndGrad { wrt });
+        self
+    }
+
+    /// Run the given pass set to fixpoint.
+    pub fn optimize(mut self, passes: PassSet) -> Self {
+        self.stages.push(Stage::Optimize(passes));
+        self
+    }
+
+    /// Lower to `backend`. Must be the final stage.
+    pub fn lower(mut self, backend: Backend) -> Self {
+        self.stages.push(Stage::Lower(backend));
+        self
+    }
+
+    /// Append a user-defined transform (the escape hatch for passes the
+    /// builder has no dedicated method for).
+    pub fn transform(mut self, t: impl Transform + 'static) -> Self {
+        self.stages.push(Stage::Custom(Rc::new(t)));
+        self
+    }
+
+    /// Validate and canonicalize into a runnable [`Pipeline`].
+    ///
+    /// Errors: a `grad` stage with order 0; a lowering stage anywhere but
+    /// last (which also covers two lowering stages: the first of them is
+    /// necessarily non-final); an unknown pass name in a `PassSet::Without`.
+    pub fn build(self) -> Result<Pipeline> {
+        // Validate before canonicalization so errors point at what the
+        // caller actually wrote.
+        let n = self.stages.len();
+        let mut backend = Backend::Vm;
+        for (i, s) in self.stages.iter().enumerate() {
+            // A custom transform that claims to lower can't be honored: the
+            // builder would have to drop its apply()/key() (silent wrong
+            // cache sharing) or run codegen itself. Only `Lower` lowers.
+            if let Stage::Custom(t) = s {
+                if t.lower_to().is_some() {
+                    bail!(
+                        "custom transform `{}` sets lower_to(); \
+                         select backends with the `Lower` stage (or `Function::jit`) instead",
+                        t.name()
+                    );
+                }
+            }
+            if let Stage::Lower(b) = s {
+                if i + 1 != n {
+                    bail!("the lowering stage (`{}`) must be the final pipeline stage", b.key());
+                }
+                backend = *b;
+            }
+            if let Stage::Grad { order: 0, .. } = s {
+                bail!("grad order must be >= 1");
+            }
+            // Reject unknown pass names for programmatically-built sets —
+            // the same guarantee the `opt=no-<pass>` parse path gives.
+            if let Stage::Optimize(passes) = s {
+                passes.validate()?;
+            }
+        }
+
+        // Canonicalize the IR-level stages.
+        let mut canon: Vec<Stage> = Vec::new();
+        for stage in self.stages {
+            match (&stage, canon.last_mut()) {
+                // The lowering stage moves into `backend`.
+                (Stage::Lower(_), _) => continue,
+                // "Optimize with no passes" is the identity — dropping it
+                // keeps `opt=none` pipelines fingerprint-equal to pipelines
+                // that simply omit the optimize stage.
+                (Stage::Optimize(PassSet::None), _) => continue,
+                // grad of grad = grad^2 (same wrt only).
+                (Stage::Grad { order: o2, wrt: w2 }, Some(Stage::Grad { order, wrt }))
+                    if *wrt == *w2 =>
+                {
+                    *order += *o2;
+                    continue;
+                }
+                // Optimization is a fixpoint: running the same set twice in
+                // a row is the same pipeline.
+                (Stage::Optimize(b), Some(Stage::Optimize(a))) if *a == *b => continue,
+                _ => {}
+            }
+            canon.push(stage);
+        }
+
+        let stages: Vec<Rc<dyn Transform>> = canon
+            .into_iter()
+            .map(|s| -> Rc<dyn Transform> {
+                match s {
+                    Stage::Grad { order, wrt } => Rc::new(Grad { order, wrt }),
+                    Stage::ValueAndGrad { wrt } => Rc::new(ValueAndGrad { wrt }),
+                    Stage::Optimize(passes) => Rc::new(Optimize(passes)),
+                    Stage::Custom(t) => t,
+                    Stage::Lower(_) => unreachable!("lowering stages were filtered above"),
+                }
+            })
+            .collect();
+
+        let mut spec = stages.iter().map(|t| t.key()).collect::<Vec<_>>().join(",");
+        if !spec.is_empty() {
+            spec.push(',');
+        }
+        spec.push_str(backend.key());
+
+        let mut h = DefaultHasher::new();
+        spec.hash(&mut h);
+        let fingerprint = h.finish();
+
+        Ok(Pipeline { stages, backend, fingerprint, spec })
+    }
+}
+
+/// A validated, canonicalized transform pipeline: the unit compilation is
+/// requested in and cached by. Construct with [`Pipeline::builder`] or
+/// [`Pipeline::parse`].
+#[derive(Clone)]
+pub struct Pipeline {
+    stages: Vec<Rc<dyn Transform>>,
+    backend: Backend,
+    fingerprint: u64,
+    spec: String,
+}
+
+impl Pipeline {
+    pub fn builder() -> PipelineBuilder {
+        PipelineBuilder::new()
+    }
+
+    /// The canonical pipeline the old `Options::default()` mapped to:
+    /// standard optimization, lowered to `backend`.
+    pub fn standard(backend: Backend) -> Pipeline {
+        Pipeline::builder()
+            .optimize(PassSet::Standard)
+            .lower(backend)
+            .build()
+            .expect("the standard pipeline is always valid")
+    }
+
+    /// Parse a `--pipeline` spec (see the module docs for the grammar).
+    /// Round-trips with [`Pipeline::spec`]: parsing a canonical spec yields
+    /// an equal fingerprint.
+    pub fn parse(spec: &str) -> Result<Pipeline> {
+        let mut b = PipelineBuilder::new();
+        let mut any = false;
+        for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            b = parse_stage(b, tok)?;
+            any = true;
+        }
+        if !any {
+            bail!("empty pipeline spec (expected at least one stage, e.g. `grad,opt,vm`)");
+        }
+        b.build()
+    }
+
+    /// IR-level stages, in execution order (lowering excluded).
+    pub fn stages(&self) -> &[Rc<dyn Transform>] {
+        &self.stages
+    }
+
+    /// The backend the final lowering stage selected (default: VM).
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Stable hash of the canonical spec — the compile-cache key component.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// The canonical spec string, e.g. `grad^2,opt=standard,vm`.
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    /// Apply every IR-level stage in order, collecting per-stage metrics.
+    /// Returns the final entry graph; codegen for [`Pipeline::backend`] is
+    /// the caller's job (the session owns the VM and the XLA runtime).
+    pub fn apply_ir(
+        &self,
+        m: &mut Module,
+        entry: GraphId,
+    ) -> Result<(GraphId, Vec<StageMetrics>)> {
+        let mut cur = entry;
+        let mut stages = Vec::with_capacity(self.stages.len());
+        for t in &self.stages {
+            let mut sm = StageMetrics { name: t.name().to_string(), ..Default::default() };
+            let t0 = Instant::now();
+            cur = t.apply(m, cur, &mut sm)?;
+            sm.us = t0.elapsed().as_micros();
+            sm.nodes_after = m.reachable_node_count(cur);
+            stages.push(sm);
+        }
+        Ok((cur, stages))
+    }
+}
+
+impl PartialEq for Pipeline {
+    fn eq(&self, other: &Pipeline) -> bool {
+        self.spec == other.spec
+    }
+}
+
+impl Eq for Pipeline {}
+
+impl fmt::Display for Pipeline {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.spec)
+    }
+}
+
+impl fmt::Debug for Pipeline {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Pipeline({})", self.spec)
+    }
+}
+
+fn parse_stage(b: PipelineBuilder, tok: &str) -> Result<PipelineBuilder> {
+    if tok == "opt" {
+        return Ok(b.optimize(PassSet::Standard));
+    }
+    if let Some(v) = tok.strip_prefix("opt=") {
+        return Ok(b.optimize(PassSet::parse(v)?));
+    }
+    if tok == "vm" || tok == "xla" {
+        return Ok(b.lower(Backend::parse(tok)?));
+    }
+    if let Some(rest) = tok.strip_prefix("vgrad") {
+        let (order, wrt) = parse_grad_suffix(tok, rest)?;
+        if order != 1 {
+            bail!("`vgrad` does not take an order; apply `grad^N` before it instead");
+        }
+        return Ok(b.value_and_grad_wrt(wrt));
+    }
+    if let Some(rest) = tok.strip_prefix("grad") {
+        let (order, wrt) = parse_grad_suffix(tok, rest)?;
+        return Ok(b.grad_spec(order, wrt));
+    }
+    bail!(
+        "unknown pipeline stage `{tok}` \
+         (expected grad[^N][@WRT], vgrad[@WRT], opt[=SET], vm, or xla)"
+    )
+}
+
+/// Parse the `[^ORDER][@WRT]` suffix of a `grad`/`vgrad` token.
+fn parse_grad_suffix(tok: &str, rest: &str) -> Result<(usize, usize)> {
+    let (head, at) = match rest.split_once('@') {
+        Some((h, a)) => (h, Some(a)),
+        None => (rest, None),
+    };
+    let order = if head.is_empty() {
+        1
+    } else {
+        head.strip_prefix('^')
+            .and_then(|n| n.parse::<usize>().ok())
+            .ok_or_else(|| anyhow!("bad order in pipeline stage `{tok}`"))?
+    };
+    if order == 0 {
+        bail!("grad order must be >= 1 in `{tok}`");
+    }
+    let wrt = match at {
+        None => 0,
+        Some(a) => a
+            .parse::<usize>()
+            .map_err(|_| anyhow!("bad wrt-parameter index in pipeline stage `{tok}`"))?,
+    };
+    Ok((order, wrt))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adjacent_grads_merge() {
+        let two_steps = Pipeline::builder().grad().grad().lower(Backend::Vm).build().unwrap();
+        let one_step = Pipeline::builder().grad_spec(2, 0).lower(Backend::Vm).build().unwrap();
+        assert_eq!(two_steps.spec(), "grad^2,vm");
+        assert_eq!(two_steps, one_step);
+        assert_eq!(two_steps.fingerprint(), one_step.fingerprint());
+    }
+
+    #[test]
+    fn grads_with_different_wrt_do_not_merge() {
+        let p = Pipeline::builder().grad().grad_wrt(1).build().unwrap();
+        assert_eq!(p.spec(), "grad,grad@1,vm");
+    }
+
+    #[test]
+    fn duplicate_optimize_collapses() {
+        let p = Pipeline::builder()
+            .optimize(PassSet::Standard)
+            .optimize(PassSet::Standard)
+            .build()
+            .unwrap();
+        assert_eq!(p.spec(), "opt=standard,vm");
+    }
+
+    #[test]
+    fn optimize_none_is_identity_stage() {
+        let explicit = Pipeline::parse("opt=none,vm").unwrap();
+        let omitted = Pipeline::parse("vm").unwrap();
+        assert_eq!(explicit.spec(), "vm");
+        assert_eq!(explicit.fingerprint(), omitted.fingerprint());
+    }
+
+    #[test]
+    fn lower_must_be_last() {
+        let e = Pipeline::builder().lower(Backend::Vm).grad().build().unwrap_err();
+        assert!(format!("{e}").contains("final"), "{e}");
+        // Two lowering stages: the first is necessarily non-final.
+        let e2 = Pipeline::builder()
+            .lower(Backend::Vm)
+            .lower(Backend::Xla)
+            .build()
+            .unwrap_err();
+        assert!(format!("{e2}").contains("final"), "{e2}");
+    }
+
+    #[test]
+    fn unknown_pass_name_rejected_at_build() {
+        let e = Pipeline::builder()
+            .optimize(PassSet::Without("algebriac".to_string()))
+            .build()
+            .unwrap_err();
+        assert!(format!("{e}").contains("unknown pass"), "{e}");
+    }
+
+    #[test]
+    fn zero_order_grad_rejected() {
+        let e = Pipeline::builder().grad_spec(0, 0).build().unwrap_err();
+        assert!(format!("{e}").contains(">= 1"), "{e}");
+    }
+
+    #[test]
+    fn parse_round_trips_canonical_spec() {
+        for spec in ["grad^2,opt=standard,vm", "vgrad,opt=no-inline,xla", "vm", "grad@1,vm"] {
+            let p = Pipeline::parse(spec).unwrap();
+            assert_eq!(p.spec(), spec, "canonical spec must round-trip");
+            let q = Pipeline::parse(p.spec()).unwrap();
+            assert_eq!(p.fingerprint(), q.fingerprint());
+        }
+    }
+
+    #[test]
+    fn parse_matches_builder() {
+        let parsed = Pipeline::parse("grad,grad,opt,vm").unwrap();
+        let built = Pipeline::builder()
+            .grad()
+            .grad()
+            .optimize(PassSet::Standard)
+            .lower(Backend::Vm)
+            .build()
+            .unwrap();
+        assert_eq!(parsed.fingerprint(), built.fingerprint());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Pipeline::parse("").is_err());
+        assert!(Pipeline::parse("warp-speed").is_err());
+        assert!(Pipeline::parse("grad^0").is_err());
+        assert!(Pipeline::parse("opt=no-such-pass").is_err());
+        assert!(Pipeline::parse("grad^x").is_err());
+        assert!(Pipeline::parse("vgrad^2").is_err());
+    }
+
+    #[test]
+    fn differing_pass_sets_fingerprint_differently() {
+        let a = Pipeline::parse("opt=standard,vm").unwrap();
+        let b = Pipeline::parse("opt=none,vm").unwrap();
+        let c = Pipeline::parse("opt=standard,xla").unwrap();
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+}

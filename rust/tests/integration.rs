@@ -3,7 +3,8 @@
 //! node-count collapse.
 
 use myia::baselines::tape;
-use myia::coordinator::{Options, Session};
+use myia::coordinator::Session;
+use myia::opt::PassSet;
 use myia::vm::Value;
 
 fn f64v(v: &Value) -> f64 {
@@ -28,8 +29,8 @@ def handwritten(x):
     return 3.0 * x ** 2.0
 ";
     let mut s = Session::from_source(src).unwrap();
-    let auto = s.compile("main", Options::default()).unwrap();
-    let hand = s.compile("handwritten", Options::default()).unwrap();
+    let auto = s.trace("main").unwrap().compile().unwrap();
+    let hand = s.trace("handwritten").unwrap().compile().unwrap();
 
     for x in [-1.5, 0.0, 2.0, 3.7] {
         let a = f64v(&auto.call(vec![Value::F64(x)]).unwrap());
@@ -68,7 +69,7 @@ def main(x):
     return grad(f)(x)
 ";
     let mut s = Session::from_source(src).unwrap();
-    let st = f64v(&s.compile("main", Options::default()).unwrap().call(vec![Value::F64(x0)]).unwrap());
+    let st = f64v(&s.trace("main").unwrap().compile().unwrap().call(vec![Value::F64(x0)]).unwrap());
     assert!((st - want).abs() < 1e-12, "ST {st} vs analytic {want}");
 
     // 2. OO tape baseline (§2.1.1).
@@ -89,7 +90,9 @@ def main(x, dx):
 ";
     let mut s2 = Session::from_source(src_f).unwrap();
     let out = s2
-        .compile("main", Options::default())
+        .trace("main")
+        .unwrap()
+        .compile()
         .unwrap()
         .call(vec![Value::F64(x0), Value::F64(1.0)])
         .unwrap();
@@ -115,8 +118,8 @@ def main(x):
     return grad(model)(x)
 ";
     let mut s = Session::from_source(src).unwrap();
-    let g = s.compile("main", Options::default()).unwrap();
-    let f = s.compile("model", Options::default()).unwrap();
+    let g = s.trace("main").unwrap().compile().unwrap();
+    let f = s.trace("model").unwrap().compile().unwrap();
     for x0 in [0.2, 0.9, -0.7] {
         let eps = 1e-6;
         let fp = f64v(&f.call(vec![Value::F64(x0 + eps)]).unwrap());
@@ -146,8 +149,8 @@ def main(x):
     return grad(loss)(x)
 ";
     let mut s = Session::from_source(src).unwrap();
-    let g = s.compile("main", Options::default()).unwrap();
-    let f = s.compile("loss", Options::default()).unwrap();
+    let g = s.trace("main").unwrap().compile().unwrap();
+    let f = s.trace("loss").unwrap().compile().unwrap();
     let x0 = 0.3;
     let eps = 1e-6;
     let fd = (f64v(&f.call(vec![Value::F64(x0 + eps)]).unwrap())
@@ -178,9 +181,9 @@ def main(w, x):
         myia::tensor::Tensor::from_f64_shaped(vec![1.0, 0.5, -0.5, 0.2], vec![2, 2]).unwrap(),
     );
     let mut s1 = Session::from_source(src).unwrap();
-    let opt = s1.compile("main", Options::default()).unwrap();
+    let opt = s1.trace("main").unwrap().compile().unwrap();
     let mut s2 = Session::from_source(src).unwrap();
-    let unopt = s2.compile("main", Options { optimize: false, ..Default::default() }).unwrap();
+    let unopt = s2.trace("main").unwrap().optimize(PassSet::None).compile().unwrap();
     let a = opt.call(vec![w.clone(), x.clone()]).unwrap();
     let b = unopt.call(vec![w, x]).unwrap();
     let (ta, tb) = (a.as_tensor().unwrap(), b.as_tensor().unwrap());

@@ -6,7 +6,8 @@
 //! 3. forward and reverse mode agree with each other;
 //! 4. the compile pipeline never panics on generated programs.
 
-use myia::coordinator::{Options, Session};
+use myia::coordinator::Session;
+use myia::opt::PassSet;
 use myia::ptest;
 use myia::tensor::Rng;
 use myia::vm::Value;
@@ -35,8 +36,12 @@ fn gen_expr(rng: &mut Rng, depth: usize) -> String {
 
 fn eval(src: &str, entry: &str, optimize: bool, x: f64) -> Result<f64, String> {
     let mut s = Session::from_source(src).map_err(|e| e.to_string())?;
+    let passes = if optimize { PassSet::Standard } else { PassSet::None };
     let f = s
-        .compile(entry, Options { optimize, ..Default::default() })
+        .trace(entry)
+        .map_err(|e| e.to_string())?
+        .optimize(passes)
+        .compile()
         .map_err(|e| e.to_string())?;
     match f.call(vec![Value::F64(x)]).map_err(|e| e.to_string())? {
         Value::F64(v) => Ok(v),
