@@ -253,6 +253,43 @@ fn bprop_exprs(
         BroadcastLike => {
             vec![ap!(SumToLike, d, xs[0]), zt]
         }
+        BatchMatMul => {
+            // Per-example matmul bprop, with the batch flags (runtime bools
+            // in this shared graph) steering (a) whether the other operand's
+            // transpose is batched and (b) whether the per-example gradient
+            // must be summed over the batch axis (gradient toward a shared
+            // operand accumulates over examples). `transpose` swaps the last
+            // two axes, so it is batch-aware for per-example *matrices*; a
+            // batched per-example vector ([B, k]) is indistinguishable from
+            // a matrix in this shape-erased graph, so its adjoint misaligns
+            // and surfaces as a runtime batch-mismatch error (see the
+            // known-limitation note in ad/vmap.rs) — keep per-example
+            // operands rank 2 ([1, k] rows) when differentiating.
+            let dbat = ap!(BoolOr, xs[2], xs[3]);
+            let bt = ap!(Transpose, xs[1]);
+            let da_full = ap!(BatchMatMul, d, bt, dbat, xs[3]);
+            let zero_ax = m.constant(Const::I64(0));
+            let da_sum = ap!(ReduceSumAxis, da_full, zero_ax);
+            // Sum over the batch only when the gradient IS batched and the
+            // operand is not; with both flags false `da_full` is already
+            // the plain (unbatched) matmul adjoint.
+            let da_off = ap!(Switch, xs[3], da_sum, da_full);
+            let da = ap!(Switch, xs[2], da_full, da_off);
+            let at = ap!(Transpose, xs[0]);
+            let db_full = ap!(BatchMatMul, at, d, xs[2], dbat);
+            let db_sum = ap!(ReduceSumAxis, db_full, zero_ax);
+            let db_off = ap!(Switch, xs[2], db_sum, db_full);
+            let db = ap!(Switch, xs[3], db_full, db_off);
+            vec![da, db, zt, zt]
+        }
+        SumTail => vec![ap!(BroadcastLead, d, xs[0])],
+        BroadcastLead => vec![ap!(SumToLead, d, xs[0]), zt],
+        SumToLead => vec![ap!(BroadcastLead, d, xs[0]), zt],
+        MoveAxis => vec![ap!(MoveAxis, d, xs[2], xs[1]), zt, zt],
+        BroadcastBatch => {
+            let zero_ax = m.constant(Const::I64(0));
+            vec![ap!(ReduceSumAxis, d, zero_ax), zt]
+        }
         Item => vec![ap!(ScalarToTensor, d)],
         ScalarToTensor => vec![ap!(Item, d)],
         CastF32 => vec![ap!(CastF64, d)],
@@ -266,8 +303,10 @@ fn bprop_exprs(
             vec![zt, stl!(da, xs[1]), stl!(db, xs[2])]
         }
         Print => vec![d],
-        // Structured ops with no (implemented) linearization.
-        Concat0 | TakeRow | ReduceSumAxis | Partial | Mod | FloorDiv => return None,
+        // Structured ops with no (implemented) linearization. `SumToTail`'s
+        // adjoint needs a batch-pinned trailing broadcast we do not have a
+        // kernel for; second-order-through-vmap raises lazily instead.
+        Concat0 | TakeRow | ReduceSumAxis | Partial | Mod | FloorDiv | SumToTail => return None,
         // Non-differentiable prims were handled above.
         _ => return None,
     };
@@ -401,6 +440,51 @@ mod tests {
         assert_eq!(g[2].as_tensor().unwrap().shape(), &[3, 4]);
         // dx = d @ bᵀ = row sums of ones[3,4] = 4s
         assert_eq!(g[1].as_tensor().unwrap().as_f64_vec(), vec![4.0; 6]);
+    }
+
+    #[test]
+    fn batch_matmul_bprop_sums_toward_shared_operand() {
+        use crate::tensor::Tensor;
+        // a batched [2,2,3], b shared [3,2]: db accumulates over examples.
+        let a = Value::Tensor(
+            Tensor::from_f64_shaped((1..=12).map(|i| i as f64).collect(), vec![2, 2, 3]).unwrap(),
+        );
+        let b = Value::Tensor(Tensor::from_f64_shaped(vec![1.0; 6], vec![3, 2]).unwrap());
+        let d = Value::Tensor(Tensor::ones(crate::tensor::DType::F64, &[2, 2, 2]));
+        let (_, g) = fprop_and_bprop(
+            Prim::BatchMatMul,
+            vec![a, b, Value::Bool(true), Value::Bool(false)],
+            d,
+        );
+        // da = d @ bᵀ per example: rows of ones[3,2]ᵀ sum to 2.
+        assert_eq!(g[1].as_tensor().unwrap().shape(), &[2, 2, 3]);
+        assert_eq!(g[1].as_tensor().unwrap().as_f64_vec(), vec![2.0; 12]);
+        // db = Σ_e aᵀ_e @ d_e: column sums of a over all examples' rows.
+        assert_eq!(g[2].as_tensor().unwrap().shape(), &[3, 2]);
+        let acc = g[2].as_tensor().unwrap().as_f64_vec();
+        // column k of db = sum over e,i of a[e,i,k] = (1+4+7+10, ...)
+        assert_eq!(acc, vec![22.0, 22.0, 26.0, 26.0, 30.0, 30.0]);
+    }
+
+    #[test]
+    fn sum_tail_and_lead_bprops_roundtrip() {
+        use crate::tensor::Tensor;
+        let x = Value::Tensor(
+            Tensor::from_f64_shaped(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]).unwrap(),
+        );
+        let d = Value::Tensor(Tensor::from_f64(&[10.0, 20.0]));
+        let (r, g) = fprop_and_bprop(Prim::SumTail, vec![x.clone()], d);
+        assert_eq!(r.as_tensor().unwrap().as_f64_vec(), vec![6.0, 15.0]);
+        // d spreads over each example's entries.
+        assert_eq!(
+            g[1].as_tensor().unwrap().as_f64_vec(),
+            vec![10.0, 10.0, 10.0, 20.0, 20.0, 20.0]
+        );
+        // broadcast_lead's adjoint reduces back with leading alignment.
+        let v = Value::Tensor(Tensor::from_f64(&[1.0, 2.0]));
+        let dd = Value::Tensor(Tensor::ones(crate::tensor::DType::F64, &[2, 3]));
+        let (_, g2) = fprop_and_bprop(Prim::BroadcastLead, vec![v, x], dd);
+        assert_eq!(g2[1].as_tensor().unwrap().as_f64_vec(), vec![3.0, 3.0]);
     }
 
     #[test]

@@ -234,6 +234,18 @@ pub fn fwd_prim(m: &mut Module, p: Prim, arity: usize) -> Result<GraphId> {
         SumLastKeep => ap!(SumLastKeep, dxs[0]),
         SumToLike => ap!(SumToLike, dxs[0], xs[1]),
         BroadcastLike => ap!(BroadcastLike, dxs[0], xs[1]),
+        BatchMatMul => {
+            // Bilinear in (a, b); the batch flags ride along as primals.
+            let da = m.apply_prim(fg, BatchMatMul, &[dxs[0], xs[1], xs[2], xs[3]]);
+            let db = m.apply_prim(fg, BatchMatMul, &[xs[0], dxs[1], xs[2], xs[3]]);
+            ap!(Gadd, da, db)
+        }
+        SumTail => ap!(SumTail, dxs[0]),
+        BroadcastLead => ap!(BroadcastLead, dxs[0], xs[1]),
+        SumToLead => ap!(SumToLead, dxs[0], xs[1]),
+        SumToTail => ap!(SumToTail, dxs[0], xs[1]),
+        MoveAxis => ap!(MoveAxis, dxs[0], xs[1], xs[2]),
+        BroadcastBatch => ap!(BroadcastBatch, dxs[0], xs[1]),
         SoftmaxLast => {
             // J·dx = r ⊙ (dx − Σ_last(r ⊙ dx))
             let rd = ap!(Mul, val, dxs[0]);

@@ -10,12 +10,16 @@
 //!   this graph, `order` times, w.r.t. parameter `wrt`".
 //! * [`forward`] — forward-mode AD as a source transformation over
 //!   (primal, tangent) pairs (§2.1 "dual numbers").
+//! * [`vmap`] — batching as a source transformation ([`VmapSpec`] /
+//!   [`expand_vmap`]): the proof that AD is "one transform among many" —
+//!   `vmap(grad(f))` is per-example gradients, ahead of time.
 
 pub mod bprops;
 pub mod expand;
 pub mod forward;
 pub mod jtransform;
-
+pub mod vmap;
 
 pub use expand::{expand_grad, expand_macros, GradSpec};
 pub use jtransform::JTransform;
+pub use vmap::{expand_vmap, VmapSpec};

@@ -1,0 +1,762 @@
+//! `Vmap`: batching as a source transformation.
+//!
+//! The paper's claim (§3) is that a closure-capable graph IR makes AD *one
+//! source transformation among many*. This module is the "many": `vmap`
+//! rewrites a graph so that selected inputs carry a mapped (batch) leading
+//! axis and every derived value is computed for all examples at once —
+//! JAX-style `vmap(f)`, but ahead of time, over the same IR the Grad
+//! transform consumes and produces. The two therefore compose in both
+//! orders: `vmap(grad(f))` batches an adjoint program into per-example
+//! gradients, and `grad(vmap(f))` differentiates a batched program.
+//!
+//! The transform runs in two phases over the closure set of the entry:
+//!
+//! 1. **Batch analysis** — a joint fixpoint that tracks, per node, (a)
+//!    whether its value carries the batch axis and (b) which graphs it may
+//!    evaluate to (a small 0-CFA). The closure analysis is what lets the
+//!    batch bit flow through the flat-closure machinery untouched: branch
+//!    thunks selected by `switch`, backpropagator closures fished out of
+//!    `(value, bprop)` pairs, and recursive loop headers all just propagate
+//!    their argument/return facts (the flat-closure IR makes this free).
+//! 2. **Rewrite** — a clone of every reachable graph in which rank-sensitive
+//!    primitives are re-expressed for the extra axis: elementwise ops are
+//!    left alone (NumPy broadcasting absorbs the batch dimension), `matmul`
+//!    becomes the blocked [`crate::tensor::batch_matmul`] kernel with its
+//!    operand-batching flags baked in, total reductions shift off the batch
+//!    axis (`sum` → `sum_tail`), axis reductions shift their axis by one,
+//!    and the broadcasting adjoints (`sum_to_like`, `broadcast_like`,
+//!    `broadcast_to(_, shape(x))`) are re-aimed so gradients keep or drop
+//!    the batch axis depending on whether their target is mapped.
+//!
+//! Data-dependent control flow (a batched branch condition) has no
+//! loop-free batched form in this IR and is rejected with a clear error.
+//!
+//! **Known limitation — per-example vectors in rank-sensitive positions.**
+//! The IR is shape-erased, so a mapped per-example *vector* (runtime shape
+//! `[B, k]`) is indistinguishable from an unmapped matrix. Elementwise
+//! mixing of two mapped operands of *different* per-example rank (e.g.
+//! per-example scalar `[B]` against per-example vector `[B, k]`), explicit
+//! `transpose` of a mapped per-example vector, and the matmul adjoint for
+//! per-example-vector operands therefore fall back to trailing-aligned
+//! kernels that pair the batch axis with a data axis — a runtime shape
+//! error in the common case (`k != B`), not a silent wrong answer, but not
+//! the crisp compile-time rejection the control-flow case gets. Represent
+//! per-example data as `[1, k]` row matrices (as the MLP workload does)
+//! when composing with `grad` to stay clear of the ambiguity; a durable
+//! fix needs per-example rank tracking through the batch analysis.
+
+use super::expand::expand_macros;
+use crate::ir::{analyze, Const, GraphId, Module, NodeId, Prim, ScopeAnalysis};
+use anyhow::{anyhow, bail, Result};
+use std::collections::{BTreeSet, HashMap, HashSet};
+
+/// A programmatic batching request: which parameter carries the mapped axis
+/// where. `None` for the whole struct means "every parameter, axis 0".
+#[derive(Debug, Clone, PartialEq, Eq, Hash, Default)]
+pub struct VmapSpec {
+    /// Per-parameter mapped axis; `None` entries are unmapped (broadcast).
+    /// `None` for the whole vector maps every parameter at axis 0.
+    pub in_axes: Option<Vec<Option<usize>>>,
+}
+
+impl VmapSpec {
+    /// Map every parameter along axis 0.
+    pub fn all_axis0() -> VmapSpec {
+        VmapSpec { in_axes: None }
+    }
+
+    /// Concrete per-parameter axes for a function of the given arity.
+    pub fn resolve(&self, arity: usize) -> Result<Vec<Option<usize>>> {
+        match &self.in_axes {
+            None => Ok(vec![Some(0); arity]),
+            Some(axes) => {
+                if axes.len() != arity {
+                    bail!(
+                        "vmap in_axes has {} entries but the function takes {arity} argument(s)",
+                        axes.len()
+                    );
+                }
+                Ok(axes.clone())
+            }
+        }
+    }
+}
+
+/// Build the batched wrapper around `f`: a graph with `f`'s signature whose
+/// mapped parameters carry a leading batch axis (moved there from
+/// `in_axes[i]` when nonzero) and whose output is batched along axis 0.
+pub fn expand_vmap(m: &mut Module, f: GraphId, spec: &VmapSpec) -> Result<GraphId> {
+    expand_macros(m, f)?;
+    let arity = m.graph(f).params.len();
+    let axes = spec.resolve(arity)?;
+    if !axes.iter().any(Option::is_some) {
+        bail!("vmap requires at least one mapped argument (in_axes is all None)");
+    }
+    let analysis = analyze(m, f);
+    if !analysis.free_vars(f).is_empty() {
+        bail!(
+            "cannot vmap `{}`: it captures variables from an enclosing scope; \
+             batch a closed function instead",
+            m.graph(f).name
+        );
+    }
+    let mask: Vec<bool> = axes.iter().map(Option::is_some).collect();
+    let abs = analyze_batched(m, &analysis, f, &mask);
+    let ret_batched = {
+        let ret = m.graph(f).ret.ok_or_else(|| anyhow!("graph without return"))?;
+        abs.get(&ret).map(|a| a.batched).unwrap_or(false)
+    };
+    let mixed = mixed_params(m, &analysis, &abs);
+    let mut rw = Rewriter { abs, mixed, map: HashMap::new(), remap: HashMap::new() };
+    let bf = rw.run(m, &analysis, f)?;
+
+    let w = m.add_graph(format!("vmap·{}", m.graph(f).name));
+    let bfc = m.graph_constant(bf);
+    let mut call = vec![bfc];
+    let mut first_batched: Option<NodeId> = None;
+    for (i, ax) in axes.iter().enumerate() {
+        let p = m.add_parameter(w, format!("x{i}"));
+        let arg = match ax {
+            Some(a) if *a != 0 => {
+                let src = m.constant(Const::I64(*a as i64));
+                let dst = m.constant(Const::I64(0));
+                m.apply_prim(w, Prim::MoveAxis, &[p, src, dst])
+            }
+            _ => p,
+        };
+        if ax.is_some() && first_batched.is_none() {
+            first_batched = Some(arg);
+        }
+        call.push(arg);
+    }
+    let out = m.apply(w, call);
+    let ret = if ret_batched {
+        out
+    } else {
+        // The output does not depend on any mapped input: stack B copies so
+        // vmap(f) still returns one result per example.
+        let reference = first_batched.expect("at least one mapped argument");
+        m.apply_prim(w, Prim::BroadcastBatch, &[out, reference])
+    };
+    m.set_return(w, ret);
+    Ok(w)
+}
+
+// ---- phase 1: batch analysis -------------------------------------------
+
+/// Abstract value of a node: does it carry the batch axis, and which graphs
+/// might it evaluate to (for calls through closure values).
+#[derive(Debug, Clone, Default, PartialEq)]
+struct Abs {
+    batched: bool,
+    graphs: BTreeSet<GraphId>,
+}
+
+impl Abs {
+    fn join_from(&mut self, other: &Abs) -> bool {
+        let mut changed = false;
+        if other.batched && !self.batched {
+            self.batched = true;
+            changed = true;
+        }
+        for &g in &other.graphs {
+            changed |= self.graphs.insert(g);
+        }
+        changed
+    }
+}
+
+/// Fixpoint over every node reachable from `entry`: batch bits enter at the
+/// masked entry parameters and flow forward; graph sets flow through
+/// constants, tuples, `switch`, `partial` and call returns, so indirect
+/// calls (thunks, backpropagators) propagate facts into their callees'
+/// parameters just like direct calls.
+fn analyze_batched(
+    m: &Module,
+    analysis: &ScopeAnalysis,
+    entry: GraphId,
+    mask: &[bool],
+) -> HashMap<NodeId, Abs> {
+    let mut abs: HashMap<NodeId, Abs> = HashMap::new();
+    for (i, &p) in m.graph(entry).params.iter().enumerate() {
+        abs.entry(p).or_default().batched |= mask.get(i).copied().unwrap_or(false);
+    }
+
+    let abs_of = |abs: &HashMap<NodeId, Abs>, n: NodeId| -> Abs {
+        if let Some(h) = m.as_graph(n) {
+            let mut a = Abs::default();
+            a.graphs.insert(h);
+            return a;
+        }
+        abs.get(&n).cloned().unwrap_or_default()
+    };
+
+    loop {
+        let mut changed = false;
+        for &g in &analysis.graphs {
+            for &n in analysis.order_of(g) {
+                let inputs = m.node(n).inputs();
+                let callee = inputs[0];
+                let args: Vec<Abs> = inputs[1..].iter().map(|&a| abs_of(&abs, a)).collect();
+                let out = if let Some(p) = m.as_prim(callee) {
+                    prim_transfer(p, &args)
+                } else {
+                    let callee_abs = abs_of(&abs, callee);
+                    let mut out = Abs::default();
+                    if callee_abs.graphs.is_empty() {
+                        // Unknown callable: be conservative.
+                        out.batched =
+                            callee_abs.batched || args.iter().any(|a| a.batched);
+                    }
+                    for &h in &callee_abs.graphs {
+                        let params = &m.graph(h).params;
+                        if params.len() == args.len() {
+                            for (&p, a) in params.iter().zip(args.iter()) {
+                                changed |= abs.entry(p).or_default().join_from(a);
+                            }
+                        } else {
+                            // Arity mismatch (partial application etc.):
+                            // smear every argument over every parameter.
+                            let mut joined = Abs::default();
+                            for a in &args {
+                                joined.join_from(a);
+                            }
+                            for &p in params {
+                                changed |= abs.entry(p).or_default().join_from(&joined);
+                            }
+                        }
+                        if let Some(r) = m.graph(h).ret {
+                            let ra = abs_of(&abs, r);
+                            out.join_from(&ra);
+                        }
+                    }
+                    out
+                };
+                changed |= abs.entry(n).or_default().join_from(&out);
+            }
+        }
+        if !changed {
+            return abs;
+        }
+    }
+}
+
+/// Parameters that receive BOTH a mapped value and an unmapped
+/// non-constant value across call sites. The analysis is monovariant (one
+/// batched clone per graph, joined facts), which is sound for elementwise
+/// bodies — an unmapped scalar just broadcasts — but a rank-sensitive
+/// rewrite driven directly by such a parameter would misread the unmapped
+/// value's leading axis as the batch axis and go silently wrong; the
+/// rewriter uses this set to reject those cases instead.
+fn mixed_params(
+    m: &Module,
+    analysis: &ScopeAnalysis,
+    abs: &HashMap<NodeId, Abs>,
+) -> HashSet<NodeId> {
+    let mut saw_batched: HashSet<NodeId> = HashSet::new();
+    let mut saw_unbatched: HashSet<NodeId> = HashSet::new();
+    let arg_batched =
+        |a: NodeId| -> bool { abs.get(&a).map(|x| x.batched).unwrap_or(false) };
+    for &g in &analysis.graphs {
+        for &n in analysis.order_of(g) {
+            let inputs = m.node(n).inputs();
+            let callee = inputs[0];
+            if m.as_prim(callee).is_some() {
+                continue;
+            }
+            let mut targets: BTreeSet<GraphId> = BTreeSet::new();
+            if let Some(h) = m.as_graph(callee) {
+                targets.insert(h);
+            } else if let Some(a) = abs.get(&callee) {
+                targets.extend(a.graphs.iter().copied());
+            }
+            for h in targets {
+                let params = &m.graph(h).params;
+                let record = |p: NodeId,
+                              a: NodeId,
+                              sb: &mut HashSet<NodeId>,
+                              su: &mut HashSet<NodeId>| {
+                    if arg_batched(a) {
+                        sb.insert(p);
+                    } else if !m.node(a).is_constant() {
+                        su.insert(p);
+                    }
+                };
+                if params.len() == inputs.len() - 1 {
+                    for (&p, &a) in params.iter().zip(inputs[1..].iter()) {
+                        record(p, a, &mut saw_batched, &mut saw_unbatched);
+                    }
+                } else {
+                    for &p in params {
+                        for &a in &inputs[1..] {
+                            record(p, a, &mut saw_batched, &mut saw_unbatched);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    saw_batched.intersection(&saw_unbatched).copied().collect()
+}
+
+/// Abstract transfer of a primitive: which outputs carry the batch axis
+/// (and, for structure-forwarding prims, the closure facts of the inputs).
+fn prim_transfer(p: Prim, args: &[Abs]) -> Abs {
+    use Prim::*;
+    match p {
+        // Metadata / fresh values: never batched.
+        ShapeOf | TupleLen | IsNil | NewEnv | RngSplit | RngUniform | RngNormal | Raise => {
+            Abs::default()
+        }
+        // switch forwards whichever branch value (including thunks).
+        Switch => {
+            let mut out = Abs::default();
+            if let Some(a) = args.get(1) {
+                out.join_from(a);
+            }
+            if let Some(a) = args.get(2) {
+                out.join_from(a);
+            }
+            out
+        }
+        // Everything else: batched if any input is; closure facts union
+        // (tuples of closures, partials, env values all forward this way).
+        _ => {
+            let mut out = Abs::default();
+            for a in args {
+                out.join_from(a);
+            }
+            out
+        }
+    }
+}
+
+// ---- phase 2: rewrite ---------------------------------------------------
+
+struct Rewriter {
+    abs: HashMap<NodeId, Abs>,
+    /// Parameters fed both mapped and unmapped non-constant values.
+    mixed: HashSet<NodeId>,
+    /// original graph → batched clone
+    map: HashMap<GraphId, GraphId>,
+    /// original node → node in the batched world
+    remap: HashMap<NodeId, NodeId>,
+}
+
+impl Rewriter {
+    fn batched(&self, n: NodeId) -> bool {
+        self.abs.get(&n).map(|a| a.batched).unwrap_or(false)
+    }
+
+    /// A rank-sensitive rewrite driven directly by a mixed parameter would
+    /// treat the unmapped call sites' values as batched — reject instead
+    /// of computing a silently wrong answer for them.
+    fn check_not_mixed(&self, m: &Module, operand: NodeId, what: &str) -> Result<()> {
+        if self.mixed.contains(&operand) {
+            let name = m
+                .node(operand)
+                .debug_name
+                .clone()
+                .unwrap_or_else(|| format!("{operand}"));
+            bail!(
+                "vmap: parameter `{name}` receives both mapped and unmapped values from \
+                 different call sites and flows into the rank-sensitive `{what}`; the single \
+                 batched clone cannot serve both — split the helper function (or pass the \
+                 unmapped value as a constant) so each call site is consistently mapped"
+            );
+        }
+        Ok(())
+    }
+
+    fn run(&mut self, m: &mut Module, analysis: &ScopeAnalysis, entry: GraphId) -> Result<GraphId> {
+        // Placeholders + parameters first so recursion and captures resolve.
+        for &h in &analysis.graphs {
+            let name = format!("§{}", m.graph(h).name);
+            let nh = m.add_graph(name);
+            self.map.insert(h, nh);
+        }
+        for &h in &analysis.graphs {
+            let nh = self.map[&h];
+            for &p in &m.graph(h).params.clone() {
+                let name = m.node(p).debug_name.clone().unwrap_or_default();
+                let np = m.add_parameter(nh, format!("§{name}"));
+                self.remap.insert(p, np);
+            }
+        }
+        for &h in &analysis.graphs {
+            let nh = self.map[&h];
+            for &n in &analysis.order_of(h).to_vec() {
+                self.rewrite_apply(m, nh, n)?;
+            }
+            let ret = m.graph(h).ret.ok_or_else(|| anyhow!("graph without return"))?;
+            let nret = self.operand(m, ret)?;
+            m.set_return(nh, nret);
+        }
+        Ok(self.map[&entry])
+    }
+
+    /// Batched-world value of an operand node.
+    fn operand(&mut self, m: &mut Module, o: NodeId) -> Result<NodeId> {
+        if let Some(&mapped) = self.remap.get(&o) {
+            return Ok(mapped);
+        }
+        match m.node(o).constant() {
+            Some(Const::Graph(h)) => {
+                let nh = *self
+                    .map
+                    .get(h)
+                    .ok_or_else(|| anyhow!("graph {h} not in vmap closure set"))?;
+                Ok(m.graph_constant(nh))
+            }
+            Some(Const::Macro(op)) => bail!("macro `{op}` must be expanded before vmap"),
+            Some(_) => Ok(o), // shared constants (incl. first-class prims)
+            None => bail!("operand {o} not transformed (outside the vmap closure set)"),
+        }
+    }
+
+    /// If `s` is `shape(x)` with a batched `x`, return `x`.
+    fn shape_of_batched(&self, m: &Module, s: NodeId) -> Option<NodeId> {
+        if m.is_apply_of(s, Prim::ShapeOf) {
+            let x = m.node(s).inputs()[1];
+            if self.batched(x) {
+                return Some(x);
+            }
+        }
+        None
+    }
+
+    fn rewrite_apply(&mut self, m: &mut Module, ng: GraphId, n: NodeId) -> Result<()> {
+        use Prim::*;
+        let inputs = m.node(n).inputs().to_vec();
+        let out = if let Some(p) = m.as_prim(inputs[0]) {
+            let bflags: Vec<bool> = inputs[1..].iter().map(|&i| self.batched(i)).collect();
+            let b = |i: usize| bflags[i];
+            let any_b = bflags.iter().any(|&f| f);
+            match p {
+                Switch if b(0) => bail!(
+                    "vmap over data-dependent control flow: the branch condition depends on a \
+                     mapped input; hoist the branch out of the mapped function"
+                ),
+                MatMul if any_b => {
+                    self.check_not_mixed(m, inputs[1], "matmul")?;
+                    self.check_not_mixed(m, inputs[2], "matmul")?;
+                    let a = self.operand(m, inputs[1])?;
+                    let bb = self.operand(m, inputs[2])?;
+                    let fa = m.constant(Const::Bool(b(0)));
+                    let fb = m.constant(Const::Bool(b(1)));
+                    m.apply_prim(ng, BatchMatMul, &[a, bb, fa, fb])
+                }
+                // Total reductions shift off the batch axis.
+                ReduceSum | Item if b(0) => {
+                    self.check_not_mixed(m, inputs[1], p.name())?;
+                    let x = self.operand(m, inputs[1])?;
+                    m.apply_prim(ng, SumTail, &[x])
+                }
+                ReduceMean if b(0) => {
+                    // mean over the per-example tail = sum_tail(x) / count,
+                    // with the count computed per example so the adjoint
+                    // stays differentiable IR.
+                    self.check_not_mixed(m, inputs[1], "mean")?;
+                    let x = self.operand(m, inputs[1])?;
+                    let ones = m.apply_prim(ng, OnesLike, &[x]);
+                    let cnt = m.apply_prim(ng, SumTail, &[ones]);
+                    let s = m.apply_prim(ng, SumTail, &[x]);
+                    m.apply_prim(ng, Div, &[s, cnt])
+                }
+                ReduceSumAxis if b(0) => {
+                    self.check_not_mixed(m, inputs[1], "sum_axis")?;
+                    let x = self.operand(m, inputs[1])?;
+                    let axis = match m.node(inputs[2]).constant() {
+                        Some(Const::I64(a)) => m.constant(Const::I64(a + 1)),
+                        _ => {
+                            let a = self.operand(m, inputs[2])?;
+                            let one = m.constant(Const::I64(1));
+                            m.apply_prim(ng, Add, &[a, one])
+                        }
+                    };
+                    m.apply_prim(ng, ReduceSumAxis, &[x, axis])
+                }
+                // Broadcasting adjoints: keep or drop the batch axis
+                // depending on whether the target operand is mapped.
+                SumToLike if b(0) && !b(1) => {
+                    let d = self.operand(m, inputs[1])?;
+                    let x = self.operand(m, inputs[2])?;
+                    m.apply_prim(ng, SumToTail, &[d, x])
+                }
+                // !b(0) && b(1) — an unbatched gradient (e.g. the scalar
+                // seed) toward a mapped value — needs no rewrite: the
+                // runtime kernel broadcasts the shared gradient up to the
+                // batched shape, which is the stacked per-example result.
+                BroadcastLike if b(0) && b(1) => {
+                    let v = self.operand(m, inputs[1])?;
+                    let t = self.operand(m, inputs[2])?;
+                    m.apply_prim(ng, BroadcastLead, &[v, t])
+                }
+                BroadcastLike if b(0) && !b(1) => bail!(
+                    "vmap: broadcast_like of a mapped value toward an unbatched shape is not \
+                     supported"
+                ),
+                BroadcastTo => match self.shape_of_batched(m, inputs[2]) {
+                    Some(x) => {
+                        let v = self.operand(m, inputs[1])?;
+                        let xx = self.operand(m, x)?;
+                        let prim = if b(0) { BroadcastLead } else { BroadcastLike };
+                        m.apply_prim(ng, prim, &[v, xx])
+                    }
+                    None if b(0) => bail!(
+                        "vmap: broadcast_to of a mapped value to a static shape is not supported"
+                    ),
+                    None => self.default_rebuild(m, ng, &inputs)?,
+                },
+                SumTo => match self.shape_of_batched(m, inputs[2]) {
+                    Some(x) if b(0) => {
+                        let d = self.operand(m, inputs[1])?;
+                        let xx = self.operand(m, x)?;
+                        m.apply_prim(ng, SumToLike, &[d, xx])
+                    }
+                    Some(_) => bail!(
+                        "vmap: sum_to of an unbatched gradient toward a mapped shape is not \
+                         supported"
+                    ),
+                    None if b(0) => {
+                        bail!("vmap: sum_to of a mapped value to a static shape is not supported")
+                    }
+                    None => self.default_rebuild(m, ng, &inputs)?,
+                },
+                // reshape(v, shape(x)) with both mapped works unchanged —
+                // shape(x) now yields the full batched shape; anything else
+                // cannot preserve per-example semantics.
+                Reshape if b(0) && self.shape_of_batched(m, inputs[2]).is_none() => {
+                    bail!("vmap: reshape of a mapped value to a static shape is not supported")
+                }
+                Concat0 | TakeRow if any_b => {
+                    bail!("vmap rule for `{p}` over mapped values is not implemented")
+                }
+                BatchMatMul | SumTail | BroadcastLead | SumToLead | SumToTail | MoveAxis
+                | BroadcastBatch
+                    if any_b =>
+                {
+                    bail!("nested vmap (batching `{p}`) is not supported")
+                }
+                // Everything else — elementwise arithmetic, comparisons,
+                // tuple/env plumbing, gadd, casts, last-axis ops, RNG with
+                // unmapped seeds — absorbs the batch axis via broadcasting.
+                _ => self.default_rebuild(m, ng, &inputs)?,
+            }
+        } else {
+            self.default_rebuild(m, ng, &inputs)?
+        };
+        if let Some(name) = m.node(n).debug_name.clone() {
+            m.name_node(out, format!("§{name}"));
+        }
+        self.remap.insert(n, out);
+        Ok(())
+    }
+
+    fn default_rebuild(
+        &mut self,
+        m: &mut Module,
+        ng: GraphId,
+        inputs: &[NodeId],
+    ) -> Result<NodeId> {
+        let mut new_inputs = Vec::with_capacity(inputs.len());
+        for &i in inputs {
+            // Primitive callees stay as shared constants.
+            if m.as_prim(i).is_some() {
+                new_inputs.push(i);
+            } else {
+                new_inputs.push(self.operand(m, i)?);
+            }
+        }
+        Ok(m.apply(ng, new_inputs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parser::compile_source;
+    use crate::tensor::Tensor;
+    use crate::vm::{compile_program, Value, Vm};
+
+    fn vmap_run(src: &str, entry: &str, spec: &VmapSpec, args: Vec<Value>) -> Result<Value> {
+        let mut m = Module::new();
+        let graphs = compile_source(&mut m, src).unwrap();
+        let g = graphs[entry];
+        let vg = expand_vmap(&mut m, g, spec)?;
+        m.validate().unwrap();
+        let program = compile_program(&m, vg).map_err(|e| anyhow!("{e}"))?;
+        Vm::new(program).call_graph(vg, args)
+    }
+
+    fn tvec(v: &Value) -> Vec<f64> {
+        v.as_tensor().unwrap().as_f64_vec()
+    }
+
+    #[test]
+    fn vmap_elementwise_matches_loop() {
+        let src = "def f(x):\n    return x * x + 1.0\n";
+        let xs = [0.5, -1.0, 2.0];
+        let out = vmap_run(
+            src,
+            "f",
+            &VmapSpec::all_axis0(),
+            vec![Value::Tensor(Tensor::from_f64(&xs))],
+        )
+        .unwrap();
+        assert_eq!(tvec(&out), xs.iter().map(|x| x * x + 1.0).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn vmap_with_unmapped_argument() {
+        let src = "def f(x, y):\n    return x * y\n";
+        let spec = VmapSpec { in_axes: Some(vec![Some(0), None]) };
+        let xs = [1.0, 2.0, 3.0];
+        let out = vmap_run(
+            src,
+            "f",
+            &spec,
+            vec![Value::Tensor(Tensor::from_f64(&xs)), Value::F64(10.0)],
+        )
+        .unwrap();
+        assert_eq!(tvec(&out), vec![10.0, 20.0, 30.0]);
+    }
+
+    #[test]
+    fn vmap_constant_function_broadcasts() {
+        let src = "def f(x):\n    return 7.0\n";
+        let out = vmap_run(
+            src,
+            "f",
+            &VmapSpec::all_axis0(),
+            vec![Value::Tensor(Tensor::from_f64(&[1.0, 2.0]))],
+        )
+        .unwrap();
+        assert_eq!(tvec(&out), vec![7.0, 7.0]);
+    }
+
+    #[test]
+    fn vmap_reduction_per_example() {
+        // per-example total of w ⊙ w over a [B, k] stack
+        let src = "def f(w):\n    return item(sum(w * w))\n";
+        let w = Tensor::from_f64_shaped(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]).unwrap();
+        let out =
+            vmap_run(src, "f", &VmapSpec::all_axis0(), vec![Value::Tensor(w)]).unwrap();
+        assert_eq!(tvec(&out), vec![5.0, 25.0]);
+    }
+
+    #[test]
+    fn vmap_mean_per_example() {
+        let src = "def f(w):\n    return item(mean(w))\n";
+        let w = Tensor::from_f64_shaped(vec![1.0, 3.0, 5.0, 9.0], vec![2, 2]).unwrap();
+        let out =
+            vmap_run(src, "f", &VmapSpec::all_axis0(), vec![Value::Tensor(w)]).unwrap();
+        assert_eq!(tvec(&out), vec![2.0, 7.0]);
+    }
+
+    #[test]
+    fn vmap_matmul_uses_batched_kernel() {
+        // per-example [1,2] @ shared [2,2]
+        let src = "def f(x, w):\n    return matmul(x, w)\n";
+        let spec = VmapSpec { in_axes: Some(vec![Some(0), None]) };
+        let x = Tensor::from_f64_shaped(vec![1.0, 0.0, 0.0, 1.0], vec![2, 1, 2]).unwrap();
+        let w = Tensor::from_f64_shaped(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]).unwrap();
+        let out = vmap_run(
+            src,
+            "f",
+            &spec,
+            vec![Value::Tensor(x), Value::Tensor(w)],
+        )
+        .unwrap();
+        let t = out.as_tensor().unwrap();
+        assert_eq!(t.shape(), &[2, 1, 2]);
+        assert_eq!(t.as_f64_vec(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn vmap_through_loop_and_closure() {
+        // The while loop lowers to a recursive header with thunks; the batch
+        // bit must thread through the closure set unchanged.
+        let src = "\
+def f(x):
+    acc = 0.0
+    i = 0
+    while i < 3:
+        acc = acc + x * x
+        i = i + 1
+    return acc
+";
+        let xs = [1.0, 2.0, -3.0];
+        let out = vmap_run(
+            src,
+            "f",
+            &VmapSpec::all_axis0(),
+            vec![Value::Tensor(Tensor::from_f64(&xs))],
+        )
+        .unwrap();
+        assert_eq!(tvec(&out), xs.iter().map(|x| 3.0 * x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn vmap_nonzero_in_axis_moves_axis() {
+        let src = "def f(x):\n    return item(sum(x))\n";
+        // x stacked along axis 1: [k, B] with per-example vectors of size k
+        let spec = VmapSpec { in_axes: Some(vec![Some(1)]) };
+        let x = Tensor::from_f64_shaped(vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0], vec![3, 2]).unwrap();
+        let out = vmap_run(src, "f", &spec, vec![Value::Tensor(x)]).unwrap();
+        assert_eq!(tvec(&out), vec![6.0, 60.0]);
+    }
+
+    #[test]
+    fn vmap_data_dependent_branch_rejected() {
+        let src = "def f(x):\n    if x > 0.0:\n        return x\n    return -x\n";
+        let e = vmap_run(
+            src,
+            "f",
+            &VmapSpec::all_axis0(),
+            vec![Value::Tensor(Tensor::from_f64(&[1.0, -1.0]))],
+        )
+        .unwrap_err();
+        assert!(format!("{e}").contains("data-dependent"), "{e}");
+    }
+
+    #[test]
+    fn vmap_rejects_mixed_calls_into_rank_sensitive_helper() {
+        // `total` is called with a mapped vector AND an unmapped vector; the
+        // single batched clone would run sum_tail on both, silently treating
+        // w's leading axis as the batch axis. Must be a compile-time error.
+        let src = "\
+def total(t):
+    return item(sum(t))
+
+def f(x, w):
+    return total(x) * total(w)
+";
+        let spec = VmapSpec { in_axes: Some(vec![Some(0), None]) };
+        let e = vmap_run(
+            src,
+            "f",
+            &spec,
+            vec![
+                Value::Tensor(Tensor::from_f64(&[1.0, 2.0])),
+                Value::Tensor(Tensor::from_f64(&[3.0, 4.0, 5.0])),
+            ],
+        )
+        .unwrap_err();
+        assert!(
+            format!("{e}").contains("both mapped and unmapped"),
+            "{e}"
+        );
+    }
+
+    #[test]
+    fn vmap_requires_a_mapped_argument() {
+        let src = "def f(x):\n    return x\n";
+        let spec = VmapSpec { in_axes: Some(vec![None]) };
+        let e = vmap_run(src, "f", &spec, vec![Value::F64(1.0)]).unwrap_err();
+        assert!(format!("{e}").contains("at least one"), "{e}");
+        let bad = VmapSpec { in_axes: Some(vec![Some(0), Some(0)]) };
+        let e2 = vmap_run(src, "f", &bad, vec![Value::F64(1.0)]).unwrap_err();
+        assert!(format!("{e2}").contains("entries"), "{e2}");
+    }
+}

@@ -331,6 +331,21 @@ impl<'s> Function<'s> {
         self
     }
 
+    /// Batch every parameter along axis 0 (the `Vmap` transform). Composes
+    /// with `grad` in both orders: `f.grad().vmap()` is per-example
+    /// gradients; `f.vmap().grad()` differentiates the batched program.
+    pub fn vmap(mut self) -> Self {
+        self.builder = self.builder.vmap();
+        self
+    }
+
+    /// Batch with explicit per-parameter axes; `None` entries are broadcast
+    /// (shared across the batch) rather than mapped.
+    pub fn vmap_axes(mut self, in_axes: Vec<Option<usize>>) -> Self {
+        self.builder = self.builder.vmap_axes(in_axes);
+        self
+    }
+
     /// Append a user-defined IR transform. Lowering is not expressible
     /// here — the handle appends its own final lowering stage, so a
     /// transform with `lower_to()` set is rejected when the pipeline is

@@ -119,6 +119,31 @@ pub enum Prim {
     /// Sum over the last axis, keeping it as size 1 (used by the softmax
     /// backpropagator).
     SumLastKeep,
+    // -- batching (the Vmap transform, §3's "one transform among many") --
+    /// `batch_matmul(a, b, a_batched, b_batched)` — per-example matmul over
+    /// a leading batch axis; the flags (constant bools baked in by the Vmap
+    /// transform) say which operands carry the batch dimension.
+    BatchMatMul,
+    /// `sum_tail(x)` — sum every axis except the leading (batch) axis; the
+    /// batched form of `sum`.
+    SumTail,
+    /// `broadcast_lead(v, like)` — broadcast `v` over `like`'s shape with
+    /// LEADING alignment (`[B]` spreads over `[B, ...]`); the adjoint of
+    /// `sum_tail` and the batched "broadcast a per-example scalar".
+    BroadcastLead,
+    /// `sum_to_lead(d, like)` — reduce `d` to `like`'s shape with leading
+    /// alignment; the adjoint of `broadcast_lead`.
+    SumToLead,
+    /// `sum_to_tail(d, x)` — per-example `sum_to_like` toward an unbatched
+    /// `x`: reduce trailing axes of a batched `d` to `x`'s shape, keeping
+    /// the batch axis.
+    SumToTail,
+    /// `move_axis(x, src, dst)` — NumPy moveaxis; normalizes `in_axes` to 0.
+    MoveAxis,
+    /// `broadcast_batch(v, ref)` — stack `B` copies of `v` along a new
+    /// leading axis, with `B` taken from `ref`'s batch axis; lifts values
+    /// independent of the mapped inputs into the batched world.
+    BroadcastBatch,
     // -- effects/debugging (kept out of differentiable paths) --
     /// Identity that prints its argument (returns it).
     Print,
@@ -205,6 +230,13 @@ impl Prim {
             SumToLike => "sum_to_like",
             BroadcastLike => "broadcast_like",
             SumLastKeep => "sum_last_keep",
+            BatchMatMul => "batch_matmul",
+            SumTail => "sum_tail",
+            BroadcastLead => "broadcast_lead",
+            SumToLead => "sum_to_lead",
+            SumToTail => "sum_to_tail",
+            MoveAxis => "move_axis",
+            BroadcastBatch => "broadcast_batch",
             Print => "print_",
             Raise => "raise_",
             RngUniform => "rng_uniform",
@@ -223,12 +255,14 @@ impl Prim {
             Neg | Exp | Ln | Tanh | Sqrt | Sin | Cos | Relu | Sigmoid | Abs | Sign | Not
             | TupleLen | IsNil | ZerosLike | OnesLike | Transpose | ShapeOf | ReduceSum
             | ReduceMean | SoftmaxLast | ArgmaxLast | Item | ScalarToTensor | CastF32
-            | CastF64 | Print | Raise | RngSplit | Step | SumLastKeep => Some(1),
+            | CastF64 | Print | Raise | RngSplit | Step | SumLastKeep | SumTail => Some(1),
             Add | Sub | Mul | Div | Pow | Maximum | Minimum | FloorDiv | Mod | Lt | Gt | Le
             | Ge | Eq | Ne | BoolAnd | BoolOr | TupleGetItem | EnvGetItem | Gadd | MatMul
             | Reshape | BroadcastTo | SumTo | ReduceSumAxis | OneHot | Concat0 | TakeRow
-            | RngUniform | RngNormal | Partial | SumToLike | BroadcastLike => Some(2),
-            Switch | EnvSetItem | TupleInject | Where => Some(3),
+            | RngUniform | RngNormal | Partial | SumToLike | BroadcastLike | BroadcastLead
+            | SumToLead | SumToTail | BroadcastBatch => Some(2),
+            Switch | EnvSetItem | TupleInject | Where | MoveAxis => Some(3),
+            BatchMatMul => Some(4),
         }
     }
 
@@ -261,7 +295,8 @@ impl Prim {
             SumTo, ShapeOf, ReduceSum, ReduceMean, ReduceSumAxis, SoftmaxLast, OneHot,
             ArgmaxLast, Concat0, TakeRow, Item, ScalarToTensor, CastF32, CastF64, Where, Print,
             Raise, RngUniform, RngNormal, RngSplit, Partial, Step, SumToLike, BroadcastLike,
-            SumLastKeep,
+            SumLastKeep, BatchMatMul, SumTail, BroadcastLead, SumToLead, SumToTail, MoveAxis,
+            BroadcastBatch,
         ]
     }
 

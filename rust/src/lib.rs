@@ -60,7 +60,7 @@ pub mod prelude {
     pub use crate::coordinator::{CompiledFn, Function, Metrics, Session};
     pub use crate::opt::PassSet;
     pub use crate::transform::{
-        Grad, Lower, Optimize, Pipeline, PipelineBuilder, Transform, ValueAndGrad,
+        Grad, Lower, Optimize, Pipeline, PipelineBuilder, Transform, ValueAndGrad, Vmap,
     };
     pub use crate::vm::Value;
 }

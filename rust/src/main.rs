@@ -46,8 +46,9 @@ fn usage() -> ExitCode {
          myia show <file.py> <entry> [--raw] [--pipeline=SPEC]\n  \
          myia check <file.py> <entry> [args..]\n  myia train-mlp\n\n\
          pipeline spec: comma-separated stages from grad[^N][@WRT], vgrad[@WRT],\n\
+         vmap[@AXES] (AXES dot-separated per parameter, `n` = unmapped),\n\
          opt[=standard|none|no-<pass>], and a final backend (vm | xla),\n\
-         e.g. --pipeline=grad^2,opt=standard,vm"
+         e.g. --pipeline=grad,vmap@n.0.0,opt=standard,vm"
     );
     ExitCode::from(2)
 }

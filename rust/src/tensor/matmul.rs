@@ -44,6 +44,79 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> TResult<Tensor> {
     Tensor::new(shape, buf)
 }
 
+/// Batched matrix product — the `vmap` counterpart of [`matmul`].
+///
+/// `a_batched` / `b_batched` say which operands carry a leading batch axis
+/// (the transform knows this statically and bakes it into the call). The
+/// per-example operands follow the same rank-1/rank-2 lifting rules as
+/// [`matmul`]; an unbatched operand is shared across all examples. Each
+/// example runs through the same blocked `ikj` kernel, so this is a loop of
+/// contiguous [`matmul_f64`] slabs rather than a gather.
+pub fn batch_matmul(a: &Tensor, b: &Tensor, a_batched: bool, b_batched: bool) -> TResult<Tensor> {
+    if !a_batched && !b_batched {
+        return matmul(a, b);
+    }
+    let batch = if a_batched {
+        if a.rank() == 0 {
+            return terr("batch_matmul: batched lhs has no batch axis");
+        }
+        a.shape()[0]
+    } else {
+        if b.rank() == 0 {
+            return terr("batch_matmul: batched rhs has no batch axis");
+        }
+        b.shape()[0]
+    };
+    if a_batched && b_batched && b.shape()[0] != batch {
+        return terr(format!(
+            "batch_matmul: batch dimensions disagree: {:?} vs {:?}",
+            a.shape(),
+            b.shape()
+        ));
+    }
+    let pa: &[usize] = if a_batched { &a.shape()[1..] } else { a.shape() };
+    let pb: &[usize] = if b_batched { &b.shape()[1..] } else { b.shape() };
+    let (m, k1, lifted_a) = match pa.len() {
+        1 => (1, pa[0], true),
+        2 => (pa[0], pa[1], false),
+        r => return terr(format!("batch_matmul lhs per-example rank {r} unsupported")),
+    };
+    let (k2, n, lifted_b) = match pb.len() {
+        1 => (pb[0], 1, true),
+        2 => (pb[0], pb[1], false),
+        r => return terr(format!("batch_matmul rhs per-example rank {r} unsupported")),
+    };
+    if k1 != k2 {
+        return terr(format!(
+            "batch_matmul inner dimension mismatch: {:?} @ {:?}",
+            a.shape(),
+            b.shape()
+        ));
+    }
+    let (av, bv) = (a.as_f64_vec(), b.as_f64_vec());
+    let a_stride = if a_batched { m * k1 } else { 0 };
+    let b_stride = if b_batched { k1 * n } else { 0 };
+    let mut out = Vec::with_capacity(batch * m * n);
+    for e in 0..batch {
+        let ae = &av[e * a_stride..e * a_stride + m * k1];
+        let be = &bv[e * b_stride..e * b_stride + k1 * n];
+        out.extend(matmul_f64(ae, be, m, k1, n));
+    }
+    let mut shape = vec![batch];
+    if !lifted_a {
+        shape.push(m);
+    }
+    if !lifted_b {
+        shape.push(n);
+    }
+    let buf = if a.dtype() == DType::F32 && b.dtype() == DType::F32 {
+        Buffer::F32(out.into_iter().map(|x| x as f32).collect())
+    } else {
+        Buffer::F64(out)
+    };
+    Tensor::new(shape, buf)
+}
+
 /// Dense `m×k @ k×n` in f64, ikj order.
 pub fn matmul_f64(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
     let mut out = vec![0.0f64; m * n];
@@ -111,6 +184,52 @@ mod tests {
         assert!(matmul(&a, &b).is_err());
         let hi = Tensor::zeros(DType::F64, &[2, 2, 2]);
         assert!(matmul(&hi, &a).is_err());
+    }
+
+    #[test]
+    fn batch_matmul_matches_loop() {
+        // [2,2,3] @ [3,2] (rhs shared)
+        let a = t(&(1..=12).map(|i| i as f64).collect::<Vec<_>>(), &[2, 2, 3]);
+        let b = t(&[1.0, 0.0, 0.0, 1.0, 1.0, 1.0], &[3, 2]);
+        let c = batch_matmul(&a, &b, true, false).unwrap();
+        assert_eq!(c.shape(), &[2, 2, 2]);
+        for e in 0..2 {
+            let ae = t(&a.as_f64_vec()[e * 6..(e + 1) * 6], &[2, 3]);
+            let ce = matmul(&ae, &b).unwrap();
+            assert_eq!(c.as_f64_vec()[e * 4..(e + 1) * 4], ce.as_f64_vec()[..]);
+        }
+        // both batched
+        let b2 = t(&(1..=12).map(|i| i as f64).collect::<Vec<_>>(), &[2, 3, 2]);
+        let c2 = batch_matmul(&a, &b2, true, true).unwrap();
+        assert_eq!(c2.shape(), &[2, 2, 2]);
+        for e in 0..2 {
+            let ae = t(&a.as_f64_vec()[e * 6..(e + 1) * 6], &[2, 3]);
+            let be = t(&b2.as_f64_vec()[e * 6..(e + 1) * 6], &[3, 2]);
+            let ce = matmul(&ae, &be).unwrap();
+            assert_eq!(c2.as_f64_vec()[e * 4..(e + 1) * 4], ce.as_f64_vec()[..]);
+        }
+    }
+
+    #[test]
+    fn batch_matmul_vector_examples() {
+        // per-example vectors: [B,k] @ [B,k] → per-example dot products [B]
+        let a = t(&[1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let c = batch_matmul(&a, &a, true, true).unwrap();
+        assert_eq!(c.shape(), &[2]);
+        assert_eq!(c.as_f64_vec(), vec![5.0, 25.0]);
+        // unbatched falls through to plain matmul
+        let m = t(&[1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let c2 = batch_matmul(&m, &m, false, false).unwrap();
+        assert_eq!(c2.as_f64_vec(), matmul(&m, &m).unwrap().as_f64_vec());
+    }
+
+    #[test]
+    fn batch_matmul_rejects_mismatch() {
+        let a = t(&[1.0; 12], &[2, 2, 3]);
+        let b = t(&[1.0; 18], &[3, 3, 2]);
+        assert!(batch_matmul(&a, &b, true, true).is_err()); // batch 2 vs 3
+        let b2 = t(&[1.0; 8], &[2, 2, 2]);
+        assert!(batch_matmul(&a, &b2, true, true).is_err()); // inner 3 vs 2
     }
 
     #[test]

@@ -352,27 +352,179 @@ pub fn argmax_last(a: &Tensor) -> TResult<Tensor> {
     Tensor::new(shape[..shape.len() - 1].to_vec(), Buffer::I64(out))
 }
 
-/// 2-D transpose (rank must be 2), or rank-0/1 identity.
+/// Transpose: swap the last two axes. Rank-0/1 are the identity; rank 2 is
+/// the ordinary matrix transpose; for rank >= 3 the leading axes are treated
+/// as batch dimensions (which is what `vmap` over a matrix program needs).
 pub fn transpose(a: &Tensor) -> TResult<Tensor> {
-    match a.rank() {
-        0 | 1 => Ok(a.clone()),
-        2 => {
-            let (m, n) = (a.shape()[0], a.shape()[1]);
-            let av = a.as_f64_vec();
-            let mut out = vec![0.0f64; m * n];
-            for i in 0..m {
-                for j in 0..n {
-                    out[j * m + i] = av[i * n + j];
-                }
-            }
-            let buf = match a.dtype() {
-                DType::F32 => Buffer::F32(out.into_iter().map(|x| x as f32).collect()),
-                _ => Buffer::F64(out),
-            };
-            Tensor::new(vec![n, m], buf)
-        }
-        r => terr(format!("transpose expects rank <= 2, got rank {r}")),
+    if a.rank() <= 1 {
+        return Ok(a.clone());
     }
+    let shape = a.shape();
+    let r = shape.len();
+    let (m, n) = (shape[r - 2], shape[r - 1]);
+    let outer: usize = shape[..r - 2].iter().product();
+    let av = a.as_f64_vec();
+    let mut out = vec![0.0f64; av.len()];
+    for o in 0..outer {
+        let base = o * m * n;
+        for i in 0..m {
+            for j in 0..n {
+                out[base + j * m + i] = av[base + i * n + j];
+            }
+        }
+    }
+    let mut out_shape = shape.to_vec();
+    out_shape.swap(r - 2, r - 1);
+    let buf = match a.dtype() {
+        DType::F32 => Buffer::F32(out.into_iter().map(|x| x as f32).collect()),
+        _ => Buffer::F64(out),
+    };
+    Tensor::new(out_shape, buf)
+}
+
+/// Sum over every axis except axis 0 — the batched (`vmap`) counterpart of
+/// `sum`: per-example total reduction. Rank <= 1 is the identity (each
+/// example is already a scalar).
+pub fn sum_tail(a: &Tensor) -> Tensor {
+    if a.rank() <= 1 {
+        return a.clone();
+    }
+    let b = a.shape()[0];
+    let inner = a.numel() / b.max(1);
+    let av = a.as_f64_vec();
+    let mut out = vec![0.0f64; b];
+    for (o, slot) in out.iter_mut().enumerate() {
+        *slot = av[o * inner..(o + 1) * inner].iter().sum();
+    }
+    let buf = match a.dtype() {
+        DType::F32 => Buffer::F32(out.into_iter().map(|x| x as f32).collect()),
+        _ => Buffer::F64(out),
+    };
+    Tensor::new(vec![b], buf).expect("sum_tail shape")
+}
+
+/// Broadcast `v` to `target`, aligning axes on the LEFT: `v`'s shape is
+/// padded with trailing 1s to the target rank before broadcasting. This is
+/// the adjoint of [`sum_tail`] (a per-example scalar `[B]` spreads over
+/// `[B, ...]`) and the batched form of "broadcast a scalar over x".
+pub fn broadcast_lead(v: &Tensor, target: &[usize]) -> TResult<Tensor> {
+    if v.rank() > target.len() {
+        return terr(format!(
+            "broadcast_lead: rank {} exceeds target {:?}",
+            v.rank(),
+            target
+        ));
+    }
+    let mut padded = v.shape().to_vec();
+    padded.resize(target.len(), 1);
+    broadcast_to(&v.reshape(&padded)?, target)
+}
+
+/// Reduce `d` down to `target`, aligning axes on the LEFT — the adjoint of
+/// [`broadcast_lead`].
+pub fn sum_to_lead(d: &Tensor, target: &[usize]) -> TResult<Tensor> {
+    if d.shape() == target {
+        return Ok(d.clone());
+    }
+    if target.len() > d.rank() {
+        return terr(format!(
+            "sum_to_lead: target {:?} has higher rank than {:?}",
+            target,
+            d.shape()
+        ));
+    }
+    let mut padded = target.to_vec();
+    padded.resize(d.rank(), 1);
+    sum_to(d, &padded)?.reshape(target)
+}
+
+/// Per-example `sum_to`: reduce the trailing (per-example) dimensions of a
+/// batched `d` (`[B, ...]`) down to the unbatched `target` shape, keeping
+/// axis 0. The batched (`vmap`) form of `sum_to_like` toward an unbatched
+/// operand. A rank-0 `d` (a not-yet-broadcast shared gradient) reduces like
+/// an unbatched scalar.
+pub fn sum_to_tail(d: &Tensor, target: &[usize]) -> TResult<Tensor> {
+    if d.rank() == 0 {
+        return if target.iter().product::<usize>() <= 1 {
+            d.reshape(target)
+        } else {
+            terr(format!("sum_to_tail: rank-0 gradient toward shape {target:?}"))
+        };
+    }
+    let b = d.shape()[0];
+    let pe: Vec<usize> = d.shape()[1..].to_vec();
+    let mut full = vec![b];
+    full.extend_from_slice(target);
+    if pe == target {
+        return Ok(d.clone());
+    }
+    if pe.len() < target.len() {
+        // Per-example gradient smaller than the operand (degenerate, as in
+        // sum_to_like): broadcast each example up instead.
+        let mut pd = vec![1usize; target.len() - pe.len() + 1];
+        pd[0] = b;
+        pd.extend_from_slice(&pe);
+        return broadcast_to(&d.reshape(&pd)?, &full);
+    }
+    // Pin the batch axis, pad the per-example target with leading 1s so
+    // sum_to's trailing alignment reduces only per-example axes.
+    let mut padded = vec![1usize; pe.len() - target.len() + 1];
+    padded[0] = b;
+    padded.extend_from_slice(target);
+    sum_to(d, &padded)?.reshape(&full)
+}
+
+/// Move axis `src` of `a` to position `dst` (both in range), shifting the
+/// axes in between — NumPy's `moveaxis`. Used by `vmap(in_axes)` to
+/// normalize the mapped axis to 0.
+pub fn move_axis(a: &Tensor, src: usize, dst: usize) -> TResult<Tensor> {
+    let r = a.rank();
+    if src >= r || dst >= r {
+        return terr(format!(
+            "move_axis: axis {src}->{dst} out of range for rank {r}"
+        ));
+    }
+    if src == dst {
+        return Ok(a.clone());
+    }
+    let mut perm: Vec<usize> = (0..r).filter(|&i| i != src).collect();
+    perm.insert(dst, src);
+    let shape = a.shape();
+    let out_shape: Vec<usize> = perm.iter().map(|&i| shape[i]).collect();
+    let in_strides = strides_for(shape);
+    let out_strides = strides_for(&out_shape);
+    let av = a.as_f64_vec();
+    let mut out = vec![0.0f64; av.len()];
+    for (flat, slot) in out.iter_mut().enumerate() {
+        let mut src_idx = 0usize;
+        for (d, &os) in out_strides.iter().enumerate() {
+            let coord = (flat / os) % out_shape[d];
+            src_idx += coord * in_strides[perm[d]];
+        }
+        *slot = av[src_idx];
+    }
+    let buf = match a.dtype() {
+        DType::F32 => Buffer::F32(out.into_iter().map(|x| x as f32).collect()),
+        DType::I64 => Buffer::I64(out.into_iter().map(|x| x as i64).collect()),
+        DType::Bool => Buffer::Bool(out.into_iter().map(|x| x != 0.0).collect()),
+        DType::F64 => Buffer::F64(out),
+    };
+    Tensor::new(out_shape, buf)
+}
+
+/// Stack `B` copies of `v` along a new leading axis, where `B` is the batch
+/// (leading) dimension of `reference`. Lifts a value that does not depend on
+/// any mapped input into the batched world (`vmap` of a constant function).
+pub fn broadcast_batch(v: &Tensor, reference: &Tensor) -> TResult<Tensor> {
+    if reference.rank() == 0 {
+        return terr("broadcast_batch: reference has no batch axis");
+    }
+    let b = reference.shape()[0];
+    let mut target = vec![b];
+    target.extend_from_slice(v.shape());
+    let mut padded = vec![1usize];
+    padded.extend_from_slice(v.shape());
+    broadcast_to(&v.reshape(&padded)?, &target)
 }
 
 /// Concatenate along axis 0.
@@ -556,6 +708,92 @@ mod tests {
         assert_eq!(at.as_f64_vec(), vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
         let v = t(&[1.0], &[1]);
         assert_eq!(transpose(&v).unwrap().shape(), &[1]);
+    }
+
+    #[test]
+    fn transpose_batched_swaps_trailing_axes() {
+        // [2,2,3] → [2,3,2]: each 2x3 slab transposes independently.
+        let a = t(
+            &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0, 11.0, 12.0],
+            &[2, 2, 3],
+        );
+        let at = transpose(&a).unwrap();
+        assert_eq!(at.shape(), &[2, 3, 2]);
+        assert_eq!(
+            at.as_f64_vec(),
+            vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0, 7.0, 10.0, 8.0, 11.0, 9.0, 12.0]
+        );
+    }
+
+    #[test]
+    fn sum_tail_per_example() {
+        let a = t(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        assert_eq!(sum_tail(&a).as_f64_vec(), vec![6.0, 15.0]);
+        let hi = t(&[1.0; 8], &[2, 2, 2]);
+        assert_eq!(sum_tail(&hi).as_f64_vec(), vec![4.0, 4.0]);
+        // rank <= 1: identity (each example already a scalar)
+        let v = t(&[1.0, 2.0], &[2]);
+        assert_eq!(sum_tail(&v).as_f64_vec(), vec![1.0, 2.0]);
+        assert_eq!(sum_tail(&Tensor::scalar_f64(7.0)).item().unwrap(), 7.0);
+    }
+
+    #[test]
+    fn broadcast_lead_and_sum_to_lead_roundtrip() {
+        let v = t(&[1.0, 2.0], &[2]);
+        let b = broadcast_lead(&v, &[2, 3]).unwrap();
+        assert_eq!(b.as_f64_vec(), vec![1.0, 1.0, 1.0, 2.0, 2.0, 2.0]);
+        let s = sum_to_lead(&b, &[2]).unwrap();
+        assert_eq!(s.as_f64_vec(), vec![3.0, 6.0]);
+        // scalar over everything
+        let one = Tensor::scalar_f64(5.0);
+        assert_eq!(broadcast_lead(&one, &[2, 2]).unwrap().as_f64_vec(), vec![5.0; 4]);
+        assert!(broadcast_lead(&t(&[1.0; 6], &[2, 3]), &[2]).is_err());
+    }
+
+    #[test]
+    fn sum_to_tail_keeps_batch_axis() {
+        // d [2,2,3] toward unbatched [3]: per-example column sums.
+        let d = t(&[1.0; 12], &[2, 2, 3]);
+        let s = sum_to_tail(&d, &[3]).unwrap();
+        assert_eq!(s.shape(), &[2, 3]);
+        assert_eq!(s.as_f64_vec(), vec![2.0; 6]);
+        // toward scalar shape: per-example total
+        let tot = sum_to_tail(&d, &[]).unwrap();
+        assert_eq!(tot.shape(), &[2]);
+        assert_eq!(tot.as_f64_vec(), vec![6.0, 6.0]);
+        // rank-0 gradient toward scalar passes through
+        assert_eq!(sum_to_tail(&Tensor::scalar_f64(3.0), &[]).unwrap().item().unwrap(), 3.0);
+        assert!(sum_to_tail(&Tensor::scalar_f64(3.0), &[2]).is_err());
+    }
+
+    #[test]
+    fn move_axis_permutes() {
+        let a = t(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let m = move_axis(&a, 1, 0).unwrap();
+        assert_eq!(m.shape(), &[3, 2]);
+        assert_eq!(m.as_f64_vec(), vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+        // moveaxis round-trips
+        let back = move_axis(&m, 0, 1).unwrap();
+        assert_eq!(back.as_f64_vec(), a.as_f64_vec());
+        // rank-3: move middle axis to front
+        let b = t(&(0..24).map(|i| i as f64).collect::<Vec<_>>(), &[2, 3, 4]);
+        let mb = move_axis(&b, 1, 0).unwrap();
+        assert_eq!(mb.shape(), &[3, 2, 4]);
+        assert_eq!(mb.as_f64_vec()[0..4], [0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(mb.as_f64_vec()[4..8], [12.0, 13.0, 14.0, 15.0]);
+        assert!(move_axis(&a, 2, 0).is_err());
+    }
+
+    #[test]
+    fn broadcast_batch_stacks() {
+        let v = t(&[1.0, 2.0], &[2]);
+        let r = t(&[0.0; 3], &[3]);
+        let b = broadcast_batch(&v, &r).unwrap();
+        assert_eq!(b.shape(), &[3, 2]);
+        assert_eq!(b.as_f64_vec(), vec![1.0, 2.0, 1.0, 2.0, 1.0, 2.0]);
+        let s = broadcast_batch(&Tensor::scalar_f64(4.0), &r).unwrap();
+        assert_eq!(s.shape(), &[3]);
+        assert!(broadcast_batch(&v, &Tensor::scalar_f64(0.0)).is_err());
     }
 
     #[test]

@@ -24,12 +24,14 @@
 //! spec    := stage ("," stage)*
 //! stage   := "grad" ["^" ORDER] ["@" WRT]   differentiate (reverse mode)
 //!          | "vgrad" ["@" WRT]              value_and_grad
+//!          | "vmap" ["@" AXES]              batch the mapped arguments
 //!          | "opt" ["=" PASSSET]            optimize (default: standard)
 //!          | "vm" | "xla"                   lower to a backend (last stage)
 //! PASSSET := "standard" | "none" | "no-" PASS
+//! AXES    := AXIS ("." AXIS)*               per-parameter; "n" = unmapped
 //! ```
 
-use crate::ad::{expand_grad, GradSpec};
+use crate::ad::{expand_grad, expand_vmap, GradSpec, VmapSpec};
 use crate::backend::Backend;
 use crate::ir::{GraphId, Module};
 use crate::opt::PassSet;
@@ -146,6 +148,57 @@ impl Transform for ValueAndGrad {
     }
 }
 
+/// Batching: rewrite the entry so the mapped parameters carry a leading
+/// batch axis and the output is computed for every example at once (the
+/// `vmap` of JAX-style array programming, as an ahead-of-time source
+/// transformation). Composes with [`Grad`] in both orders: `grad` after
+/// `vmap` differentiates the batched program; `vmap` after `grad` yields
+/// per-example gradients.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, Default)]
+pub struct Vmap {
+    /// Per-parameter mapped axis (`None` entries are broadcast); `None` for
+    /// the whole field maps every parameter along axis 0.
+    pub in_axes: Option<Vec<Option<usize>>>,
+}
+
+/// Canonical spec token for a `vmap` stage: `vmap` or `vmap@0.n.1`.
+fn vmap_key(in_axes: &Option<Vec<Option<usize>>>) -> String {
+    match in_axes {
+        None => "vmap".to_string(),
+        Some(axes) => {
+            let parts: Vec<String> = axes
+                .iter()
+                .map(|a| match a {
+                    None => "n".to_string(),
+                    Some(i) => i.to_string(),
+                })
+                .collect();
+            format!("vmap@{}", parts.join("."))
+        }
+    }
+}
+
+impl Transform for Vmap {
+    fn name(&self) -> &'static str {
+        "vmap"
+    }
+
+    fn key(&self) -> String {
+        vmap_key(&self.in_axes)
+    }
+
+    fn apply(&self, m: &mut Module, entry: GraphId, stage: &mut StageMetrics) -> Result<GraphId> {
+        let spec = VmapSpec { in_axes: self.in_axes.clone() };
+        let g = expand_vmap(m, entry, &spec)?;
+        let mapped = match &self.in_axes {
+            None => m.graph(g).params.len(),
+            Some(axes) => axes.iter().filter(|a| a.is_some()).count(),
+        };
+        stage.detail.push(("mapped_params".to_string(), mapped));
+        Ok(g)
+    }
+}
+
 /// Run a named [`PassSet`] to fixpoint over everything reachable from the
 /// entry graph (§4.3 — Figure 1's collapse of the expanded adjoint).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -202,6 +255,7 @@ impl Transform for Lower {
 enum Stage {
     Grad { order: usize, wrt: usize },
     ValueAndGrad { wrt: usize },
+    Vmap { in_axes: Option<Vec<Option<usize>>> },
     Optimize(PassSet),
     Lower(Backend),
     Custom(Rc<dyn Transform>),
@@ -242,6 +296,18 @@ impl PipelineBuilder {
     /// Rewrite to return `(value, gradient)` w.r.t. parameter `wrt`.
     pub fn value_and_grad_wrt(mut self, wrt: usize) -> Self {
         self.stages.push(Stage::ValueAndGrad { wrt });
+        self
+    }
+
+    /// Batch every parameter along axis 0 (see [`Vmap`]).
+    pub fn vmap(mut self) -> Self {
+        self.stages.push(Stage::Vmap { in_axes: None });
+        self
+    }
+
+    /// Batch with explicit per-parameter axes; `None` entries are broadcast.
+    pub fn vmap_axes(mut self, in_axes: Vec<Option<usize>>) -> Self {
+        self.stages.push(Stage::Vmap { in_axes: Some(in_axes) });
         self
     }
 
@@ -334,6 +400,7 @@ impl PipelineBuilder {
                 match s {
                     Stage::Grad { order, wrt } => Rc::new(Grad { order, wrt }),
                     Stage::ValueAndGrad { wrt } => Rc::new(ValueAndGrad { wrt }),
+                    Stage::Vmap { in_axes } => Rc::new(Vmap { in_axes }),
                     Stage::Optimize(passes) => Rc::new(Optimize(passes)),
                     Stage::Custom(t) => t,
                     Stage::Lower(_) => unreachable!("lowering stages were filtered above"),
@@ -469,6 +536,24 @@ fn parse_stage(b: PipelineBuilder, tok: &str) -> Result<PipelineBuilder> {
     if tok == "vm" || tok == "xla" {
         return Ok(b.lower(Backend::parse(tok)?));
     }
+    if let Some(rest) = tok.strip_prefix("vmap") {
+        if rest.is_empty() {
+            return Ok(b.vmap());
+        }
+        let Some(axes_spec) = rest.strip_prefix('@') else {
+            bail!("bad vmap stage `{tok}` (expected vmap or vmap@AXES, e.g. vmap@0.n.0)");
+        };
+        let axes: Vec<Option<usize>> = axes_spec
+            .split('.')
+            .map(|part| match part {
+                "n" => Ok(None),
+                _ => part.parse::<usize>().map(Some).map_err(|_| {
+                    anyhow!("bad axis `{part}` in `{tok}` (expected a number or `n`)")
+                }),
+            })
+            .collect::<Result<_>>()?;
+        return Ok(b.vmap_axes(axes));
+    }
     if let Some(rest) = tok.strip_prefix("vgrad") {
         let (order, wrt) = parse_grad_suffix(tok, rest)?;
         if order != 1 {
@@ -482,7 +567,7 @@ fn parse_stage(b: PipelineBuilder, tok: &str) -> Result<PipelineBuilder> {
     }
     bail!(
         "unknown pipeline stage `{tok}` \
-         (expected grad[^N][@WRT], vgrad[@WRT], opt[=SET], vm, or xla)"
+         (expected grad[^N][@WRT], vgrad[@WRT], vmap[@AXES], opt[=SET], vm, or xla)"
     )
 }
 
@@ -574,6 +659,32 @@ mod tests {
     fn zero_order_grad_rejected() {
         let e = Pipeline::builder().grad_spec(0, 0).build().unwrap_err();
         assert!(format!("{e}").contains(">= 1"), "{e}");
+    }
+
+    #[test]
+    fn vmap_stage_spec_round_trips() {
+        let p = Pipeline::builder().vmap().lower(Backend::Vm).build().unwrap();
+        assert_eq!(p.spec(), "vmap,vm");
+        let q = Pipeline::builder()
+            .grad()
+            .vmap_axes(vec![None, Some(0), Some(0)])
+            .optimize(PassSet::Standard)
+            .build()
+            .unwrap();
+        assert_eq!(q.spec(), "grad,vmap@n.0.0,opt=standard,vm");
+        let r = Pipeline::parse(q.spec()).unwrap();
+        assert_eq!(r.fingerprint(), q.fingerprint());
+        // vmap does not merge with or commute past grad stages.
+        let a = Pipeline::parse("grad,vmap,vm").unwrap();
+        let b = Pipeline::parse("vmap,grad,vm").unwrap();
+        assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn vmap_stage_parse_rejects_garbage() {
+        assert!(Pipeline::parse("vmap@x,vm").is_err());
+        assert!(Pipeline::parse("vmap@,vm").is_err());
+        assert!(Pipeline::parse("vmap^2,vm").is_err());
     }
 
     #[test]

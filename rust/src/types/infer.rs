@@ -206,8 +206,12 @@ fn prim_rule(m: &Module, p: Prim, arg_nodes: &[NodeId], args: &[AType]) -> Resul
         ZerosLike | OnesLike => args[0].clone(),
         MatMul => matmul_rule(&args[0], &args[1])?,
         Transpose => match &args[0] {
-            AType::Tensor { dtype, shape } if shape.len() == 2 => {
-                AType::Tensor { dtype: *dtype, shape: vec![shape[1], shape[0]] }
+            // Swaps the last two axes; leading axes are batch dimensions.
+            AType::Tensor { dtype, shape } if shape.len() >= 2 => {
+                let mut s = shape.clone();
+                let r = s.len();
+                s.swap(r - 2, r - 1);
+                AType::Tensor { dtype: *dtype, shape: s }
             }
             t @ AType::Tensor { .. } => t.clone(),
             AType::Any => AType::Any,

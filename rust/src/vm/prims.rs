@@ -192,6 +192,48 @@ pub fn eval_prim(p: Prim, args: &[Value]) -> Result<Value> {
             let a = need_tensor(&args[0], "sum_last_keep")?;
             Ok(Value::Tensor(ops::sum_last_keep(&a).map_err(err)?))
         }
+        BatchMatMul => {
+            let a = need_tensor(&args[0], "batch_matmul")?;
+            let b = need_tensor(&args[1], "batch_matmul")?;
+            let ab = flag_arg(&args[2], "batch_matmul a_batched")?;
+            let bb = flag_arg(&args[3], "batch_matmul b_batched")?;
+            Ok(Value::Tensor(crate::tensor::batch_matmul(&a, &b, ab, bb).map_err(err)?))
+        }
+        SumTail => {
+            let a = need_tensor(&args[0], "sum_tail")?;
+            Ok(Value::Tensor(ops::sum_tail(&a)))
+        }
+        BroadcastLead => {
+            let v = need_tensor(&args[0], "broadcast_lead")?;
+            let like = need_tensor(&args[1], "broadcast_lead")?;
+            Ok(Value::Tensor(ops::broadcast_lead(&v, like.shape()).map_err(err)?))
+        }
+        SumToLead => {
+            let d = need_tensor(&args[0], "sum_to_lead")?;
+            let like = need_tensor(&args[1], "sum_to_lead")?;
+            Ok(Value::Tensor(ops::sum_to_lead(&d, like.shape()).map_err(err)?))
+        }
+        SumToTail => {
+            let d = need_tensor(&args[0], "sum_to_tail")?;
+            // The target is the (unbatched) per-example operand; scalars
+            // reduce to a per-example scalar.
+            let target: Vec<usize> = match &args[1] {
+                Value::Tensor(t) => t.shape().to_vec(),
+                _ => Vec::new(),
+            };
+            Ok(Value::Tensor(ops::sum_to_tail(&d, &target).map_err(err)?))
+        }
+        MoveAxis => {
+            let a = need_tensor(&args[0], "move_axis")?;
+            let src = args[1].as_i64().ok_or_else(|| anyhow!("move_axis src axis"))? as usize;
+            let dst = args[2].as_i64().ok_or_else(|| anyhow!("move_axis dst axis"))? as usize;
+            Ok(Value::Tensor(ops::move_axis(&a, src, dst).map_err(err)?))
+        }
+        BroadcastBatch => {
+            let v = need_tensor(&args[0], "broadcast_batch")?;
+            let r = need_tensor(&args[1], "broadcast_batch")?;
+            Ok(Value::Tensor(ops::broadcast_batch(&v, &r).map_err(err)?))
+        }
         Print => {
             println!("{}", args[0]);
             Ok(args[0].clone())
@@ -235,7 +277,7 @@ fn zerot_shortcut(p: Prim, args: &[Value]) -> Result<Option<Value>> {
     Ok(match p {
         // Linear unary ops.
         Neg | Transpose | ReduceSum | ReduceMean | SumLastKeep | Item | ScalarToTensor
-        | CastF32 | CastF64 if z(0) => Some(Value::ZeroT),
+        | CastF32 | CastF64 | ReduceSumAxis if z(0) => Some(Value::ZeroT),
         // ZeroT times / through anything is ZeroT.
         Mul | MatMul if z(0) || z(1) => Some(Value::ZeroT),
         Div if z(0) => Some(Value::ZeroT),
@@ -246,8 +288,23 @@ fn zerot_shortcut(p: Prim, args: &[Value]) -> Result<Option<Value>> {
         Sub if z(0) => Some(numeric_unop(Neg, &args[1])?),
         // Shape ops on a zero cotangent stay zero.
         Reshape | BroadcastTo | SumTo | TupleGetItem if z(0) => Some(Value::ZeroT),
+        // The batching kernels are linear in their data operand.
+        SumTail | BroadcastLead | SumToLead | SumToTail | MoveAxis | BroadcastBatch if z(0) => {
+            Some(Value::ZeroT)
+        }
+        BatchMatMul if z(0) || z(1) => Some(Value::ZeroT),
         _ => None,
     })
+}
+
+/// Batch flags for `batch_matmul` (constant bools baked in by Vmap, but
+/// runtime values in the shared ▶/◀ prim graphs).
+fn flag_arg(v: &Value, what: &str) -> Result<bool> {
+    match v {
+        Value::Bool(b) => Ok(*b),
+        Value::I64(i) => Ok(*i != 0),
+        other => bail!("{what} expects a bool, got {}", other.type_name()),
+    }
 }
 
 fn as_tuple<'v>(v: &'v Value, what: &str) -> Result<&'v Rc<Vec<Value>>> {
@@ -740,6 +797,48 @@ mod tests {
             Value::Tuple(items) => assert!(!items[0].structural_eq(&items[1])),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn batching_prims_evaluate() {
+        let x = Value::Tensor(
+            Tensor::from_f64_shaped(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]).unwrap(),
+        );
+        // per-example total
+        assert!(matches!(
+            ev(Prim::SumTail, &[x.clone()]),
+            Value::Tensor(t) if t.as_f64_vec() == vec![6.0, 15.0]
+        ));
+        // bmm: [2,3] per-example vectors @ shared [3,1] matrix
+        let w = Value::Tensor(Tensor::from_f64_shaped(vec![1.0, 1.0, 1.0], vec![3, 1]).unwrap());
+        let r = ev(
+            Prim::BatchMatMul,
+            &[x.clone(), w, Value::Bool(true), Value::Bool(false)],
+        );
+        assert!(matches!(&r, Value::Tensor(t) if t.shape() == [2, 1]));
+        // broadcast_lead / sum_to_lead round-trip
+        let v = Value::Tensor(Tensor::from_f64(&[2.0, 3.0]));
+        let b = ev(Prim::BroadcastLead, &[v.clone(), x.clone()]);
+        assert!(matches!(&b, Value::Tensor(t) if t.shape() == [2, 3]));
+        let s = ev(Prim::SumToLead, &[b, v]);
+        assert!(matches!(&s, Value::Tensor(t) if t.as_f64_vec() == vec![6.0, 9.0]));
+        // move_axis + broadcast_batch
+        let m = ev(Prim::MoveAxis, &[x.clone(), Value::I64(1), Value::I64(0)]);
+        assert!(matches!(&m, Value::Tensor(t) if t.shape() == [3, 2]));
+        let bb = ev(Prim::BroadcastBatch, &[Value::F64(1.5), x.clone()]);
+        assert!(matches!(&bb, Value::Tensor(t) if t.shape() == [2]));
+        // sum_to_tail toward a scalar target
+        let st = ev(Prim::SumToTail, &[x.clone(), Value::F64(0.0)]);
+        assert!(matches!(&st, Value::Tensor(t) if t.as_f64_vec() == vec![6.0, 15.0]));
+        // ZeroT absorbs
+        assert!(matches!(ev(Prim::SumTail, &[Value::ZeroT]), Value::ZeroT));
+        assert!(matches!(
+            ev(
+                Prim::BatchMatMul,
+                &[Value::ZeroT, x, Value::Bool(true), Value::Bool(false)]
+            ),
+            Value::ZeroT
+        ));
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Property tests over randomly generated programs, using the in-crate
-//! `ptest` substrate:
+//! `ptest` substrate (now with program shrinking: a failing case is
+//! greedily minimized and the reduced source is reported alongside the
+//! seed, and written under `target/ptest/` for CI artifact upload):
 //!
 //! 1. optimization preserves semantics (random expression, random input);
 //! 2. ST gradients agree with central finite differences;
@@ -8,31 +10,8 @@
 
 use myia::coordinator::Session;
 use myia::opt::PassSet;
-use myia::ptest;
-use myia::tensor::Rng;
+use myia::ptest::{self, Expr};
 use myia::vm::Value;
-
-/// Generate a random smooth scalar expression over variable `x` with bounded
-/// depth. Only well-conditioned ops so finite differences are meaningful.
-fn gen_expr(rng: &mut Rng, depth: usize) -> String {
-    if depth == 0 {
-        return match rng.below(3) {
-            0 => "x".to_string(),
-            1 => format!("{:.3}", rng.uniform_range(0.2, 2.0)),
-            _ => "x".to_string(),
-        };
-    }
-    match rng.below(8) {
-        0 => format!("({} + {})", gen_expr(rng, depth - 1), gen_expr(rng, depth - 1)),
-        1 => format!("({} - {})", gen_expr(rng, depth - 1), gen_expr(rng, depth - 1)),
-        2 => format!("({} * {})", gen_expr(rng, depth - 1), gen_expr(rng, depth - 1)),
-        3 => format!("sin({})", gen_expr(rng, depth - 1)),
-        4 => format!("cos({})", gen_expr(rng, depth - 1)),
-        5 => format!("tanh({})", gen_expr(rng, depth - 1)),
-        6 => format!("sigmoid({})", gen_expr(rng, depth - 1)),
-        _ => format!("({} * 0.5 + {})", gen_expr(rng, depth - 1), gen_expr(rng, depth - 1)),
-    }
-}
 
 fn eval(src: &str, entry: &str, optimize: bool, x: f64) -> Result<f64, String> {
     let mut s = Session::from_source(src).map_err(|e| e.to_string())?;
@@ -52,8 +31,7 @@ fn eval(src: &str, entry: &str, optimize: bool, x: f64) -> Result<f64, String> {
 
 #[test]
 fn optimization_preserves_semantics() {
-    ptest::check(ptest::Config { cases: 40, seed: 0xA11CE }, |rng| {
-        let expr = gen_expr(rng, 3);
+    ptest::check_exprs(ptest::Config { cases: 40, seed: 0xA11CE }, 3, |expr, rng| {
         let src = format!("def f(x):\n    return {expr}\n");
         let x = ptest::gen_value(rng);
         let a = eval(&src, "f", true, x)?;
@@ -64,8 +42,7 @@ fn optimization_preserves_semantics() {
 
 #[test]
 fn gradients_match_finite_differences() {
-    ptest::check(ptest::Config { cases: 30, seed: 0xBEE }, |rng| {
-        let expr = gen_expr(rng, 3);
+    ptest::check_exprs(ptest::Config { cases: 30, seed: 0xBEE }, 3, |expr, rng| {
         let src = format!(
             "def f(x):\n    return {expr}\n\ndef main(x):\n    return grad(f)(x)\n"
         );
@@ -81,8 +58,7 @@ fn gradients_match_finite_differences() {
 
 #[test]
 fn forward_agrees_with_reverse() {
-    ptest::check(ptest::Config { cases: 25, seed: 0xF0D }, |rng| {
-        let expr = gen_expr(rng, 3);
+    ptest::check_exprs(ptest::Config { cases: 25, seed: 0xF0D }, 3, |expr, rng| {
         let src_r = format!(
             "def f(x):\n    return {expr}\n\ndef main(x):\n    return grad(f)(x)\n"
         );
@@ -98,8 +74,7 @@ fn forward_agrees_with_reverse() {
 
 #[test]
 fn pipeline_never_panics_on_generated_control_flow() {
-    ptest::check(ptest::Config { cases: 20, seed: 4242 }, |rng| {
-        let expr = gen_expr(rng, 2);
+    ptest::check_exprs(ptest::Config { cases: 20, seed: 4242 }, 2, |expr, rng| {
         let n = 1 + rng.below(4);
         let src = format!(
             "def f(x):\n    acc = 0.0\n    for i in range({n}):\n        acc = acc + {expr}\n    \
@@ -114,4 +89,32 @@ fn pipeline_never_panics_on_generated_control_flow() {
             Err(format!("non-finite gradient {g} for {src}"))
         }
     });
+}
+
+/// The shrinker itself, driven through the real compiler: plant a property
+/// that rejects `sigmoid` and check the minimized program is the sigmoid
+/// leaf — i.e. shrinking works against real compile-and-run properties.
+#[test]
+fn shrinking_finds_minimal_compiler_case() {
+    let prop = |e: &Expr| -> Result<(), String> {
+        let src = format!("def f(x):\n    return {e}\n");
+        let v = eval(&src, "f", true, 0.3)?;
+        if !v.is_finite() {
+            return Err("non-finite".into());
+        }
+        // Artificial defect: claim programs containing sigmoid are broken.
+        if src.contains("sigmoid") {
+            return Err("sigmoid rejected".into());
+        }
+        Ok(())
+    };
+    let bad = Expr::Bin(
+        "*",
+        Box::new(Expr::Un("tanh", Box::new(Expr::Un("sigmoid", Box::new(Expr::X))))),
+        Box::new(Expr::Bin("+", Box::new(Expr::X), Box::new(Expr::Const(1.5)))),
+    );
+    assert!(prop(&bad).is_err());
+    let min = ptest::shrink_expr(&bad, |e| prop(e).is_err());
+    assert_eq!(min.to_src(), "sigmoid(x)");
+    assert!(min.size() < bad.size());
 }
