@@ -35,7 +35,7 @@ fn analytic(x: f64) -> (f64, f64, f64, f64) {
 }
 
 fn main() -> anyhow::Result<()> {
-    let mut s = Session::from_source(SRC)?;
+    let s = Engine::from_source(SRC)?;
     // The derivative tower: each order is one more `.grad()` in the chain.
     let fs = vec![
         s.trace("f")?.compile()?,

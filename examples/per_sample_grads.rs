@@ -13,7 +13,7 @@ use myia::coordinator::mlp::{
     compile_per_sample_grads, per_example_rows, params_value, synth_batch, synth_teacher,
     MLP_SOURCE,
 };
-use myia::coordinator::Session;
+use myia::coordinator::Engine;
 use myia::runtime::artifacts::MlpMeta;
 use myia::tensor::{ops, DType, Rng, Tensor};
 use myia::vm::Value;
@@ -26,8 +26,8 @@ fn main() -> anyhow::Result<()> {
     let params: Vec<Tensor> =
         meta.init_params(3).into_iter().map(|t| t.cast(DType::F64)).collect();
 
-    let mut s = Session::from_source(MLP_SOURCE)?;
-    let per_sample = compile_per_sample_grads(&mut s, false)?;
+    let s = Engine::from_source(MLP_SOURCE)?;
+    let per_sample = compile_per_sample_grads(&s, false)?;
     println!("pipeline: {}", per_sample.metrics.pipeline);
 
     let out = per_sample.call(vec![

@@ -19,10 +19,10 @@ def f(x):
 ";
     println!("=== source ===\n{src}");
 
-    // One session serves every pipeline below: each compile transforms its
+    // One engine serves every pipeline below: each compile transforms its
     // own clone of the lowered module, so the arms can't contaminate each
     // other, and identical pipelines share one cached artifact.
-    let mut s = Session::from_source(src)?;
+    let s = Engine::from_source(src)?;
 
     // Stage 1: after parsing + lowering to the graph IR (§3.1).
     println!("=== IR after lowering ===");

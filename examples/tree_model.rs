@@ -50,7 +50,7 @@ fn f64v(v: &Value) -> f64 {
 }
 
 fn main() -> anyhow::Result<()> {
-    let mut s = Session::from_source(SRC)?;
+    let s = Engine::from_source(SRC)?;
     let loss = s.trace("loss")?.compile()?;
     // `grad` differentiates straight through the recursion + higher-order
     // `tree_map` — it is a transform over the loss, not a source wrapper.

@@ -5,7 +5,7 @@
 
 use myia::baselines::tape;
 use myia::bench::{black_box, Bencher};
-use myia::coordinator::Session;
+use myia::coordinator::Engine;
 use myia::tensor::Tensor;
 use myia::vm::Value;
 
@@ -19,7 +19,7 @@ fn main() {
     let src = format!(
         "def f(x):\n    acc = x\n    for i in range({CHAIN}):\n        acc = relu(acc * 1.01 + x)\n    return item(sum(acc))\n\ndef main(x):\n    return grad(f)(x)\n"
     );
-    let mut s = Session::from_source(&src).unwrap();
+    let s = Engine::from_source(&src).unwrap();
     let st = s.trace("main").unwrap().compile().unwrap();
 
     let mut rows = Vec::new();

@@ -3,7 +3,7 @@
 //! size, and the break-even call count against OO tracing.
 
 use myia::bench::Bencher;
-use myia::coordinator::Session;
+use myia::coordinator::Engine;
 use myia::vm::Value;
 use std::time::Instant;
 
@@ -24,7 +24,7 @@ fn main() {
     for n in [4usize, 16, 64, 256] {
         let src = chain_program(n);
         let t0 = Instant::now();
-        let mut s = Session::from_source(&src).unwrap();
+        let s = Engine::from_source(&src).unwrap();
         let parse_us = t0.elapsed().as_micros();
         let f = s.trace("main").unwrap().compile().unwrap();
         println!(
@@ -43,7 +43,7 @@ fn main() {
     // Amortization: per-call time once compiled.
     let mut b = Bencher::default();
     let src = chain_program(64);
-    let mut s = Session::from_source(&src).unwrap();
+    let s = Engine::from_source(&src).unwrap();
     let f = s.trace("main").unwrap().compile().unwrap();
     let sample = b.bench("compiled_call/ops=64", || {
         myia::bench::black_box(f.call(vec![Value::F64(0.3)]).unwrap());

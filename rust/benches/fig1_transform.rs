@@ -5,7 +5,7 @@
 //! ratio, and the unoptimized adjoint cost that optimization removes.
 
 use myia::bench::{black_box, Bencher};
-use myia::coordinator::Session;
+use myia::coordinator::Engine;
 use myia::opt::PassSet;
 use myia::vm::Value;
 
@@ -30,7 +30,7 @@ fn main() {
         "program", "lowered", "expanded", "optimized"
     );
     for (name, src, _) in &cases {
-        let mut s = Session::from_source(src).unwrap();
+        let s = Engine::from_source(src).unwrap();
         let f = s.trace("main").unwrap().compile().unwrap();
         let (l, e, o) = (
             f.metrics.nodes_after_lowering,
@@ -45,7 +45,7 @@ fn main() {
     let mut b = Bencher::default();
     for (name, src, hand_src) in &cases {
         let full = format!("{src}\n{hand_src}");
-        let mut s = Session::from_source(&full).unwrap();
+        let s = Engine::from_source(&full).unwrap();
         let auto = s.trace("main").unwrap().compile().unwrap();
         let hand = s.trace("handwritten").unwrap().compile().unwrap();
         let sa = b.bench(&format!("fig1/{name}/grad_optimized"), || {
@@ -54,7 +54,7 @@ fn main() {
         let sh = b.bench(&format!("fig1/{name}/handwritten"), || {
             black_box(hand.call(vec![Value::F64(1.7)]).unwrap());
         });
-        let mut s2 = Session::from_source(src).unwrap();
+        let s2 = Engine::from_source(src).unwrap();
         let unopt = s2.trace("main").unwrap().optimize(PassSet::None).compile().unwrap();
         let su = b.bench(&format!("fig1/{name}/grad_unoptimized"), || {
             black_box(unopt.call(vec![Value::F64(1.7)]).unwrap());

@@ -5,7 +5,7 @@
 use myia::ad::expand_macros;
 use myia::bench::{black_box, Bencher};
 use myia::coordinator::mlp::MLP_SOURCE;
-use myia::coordinator::Session;
+use myia::coordinator::Engine;
 use myia::ir::analyze;
 use myia::opt::PassSet;
 use myia::parser::compile_source;
@@ -47,9 +47,9 @@ fn main() {
     println!("\n--- adjoint runtime, full vs no optimization ---");
     let src = "def f(x):\n    return x ** 3.0\n\ndef main(x):\n    return grad(f)(x)\n";
     let mut b = Bencher::default();
-    let mut s1 = Session::from_source(src).unwrap();
+    let s1 = Engine::from_source(src).unwrap();
     let opt = s1.trace("main").unwrap().compile().unwrap();
-    let mut s2 = Session::from_source(src).unwrap();
+    let s2 = Engine::from_source(src).unwrap();
     let unopt = s2.trace("main").unwrap().optimize(PassSet::None).compile().unwrap();
     let a = b.bench("ablation/pow3/full", || {
         black_box(opt.call(vec![Value::F64(2.0)]).unwrap());

@@ -6,7 +6,7 @@
 
 use myia::baselines::{tape, DataflowGraph};
 use myia::bench::{black_box, Bencher};
-use myia::coordinator::Session;
+use myia::coordinator::Engine;
 use myia::tensor::Tensor;
 use myia::vm::Value;
 
@@ -27,7 +27,7 @@ def loss(w):
 def main(w):
     return grad(loss)(w)
 ";
-    let mut s = Session::from_source(src).unwrap();
+    let s = Engine::from_source(src).unwrap();
     let grad = s.trace("main").unwrap().compile().unwrap();
     println!(
         "Myia IR: {} nodes for ANY depth (here 8 → 511 runtime nodes)",

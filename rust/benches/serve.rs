@@ -1,0 +1,143 @@
+//! Serve: multi-threaded throughput on one shared `Arc<Executable>`.
+//!
+//! The compile/run split's payoff: a compiled artifact is immutable and
+//! `Send + Sync`, so N serving threads call it with no locks on the VM
+//! path (statistics fold in via relaxed atomics). This bench hammers one
+//! `value_and_grad` MLP executable (and a
+//! scalar grad executable, to isolate interpreter scaling from tensor-op
+//! scaling) from 1/2/4/8 threads, asserts every thread's results are
+//! identical to sequential execution, and writes machine-readable results
+//! to `BENCH_serve.json` at the repository root.
+
+use myia::coordinator::mlp::{self, params_value};
+use myia::coordinator::{Engine, Executable};
+use myia::tensor::{DType, Rng, Tensor};
+use myia::vm::Value;
+use std::sync::Arc;
+use std::time::Instant;
+
+const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+struct Row {
+    workload: &'static str,
+    threads: usize,
+    total_calls: usize,
+    secs: f64,
+}
+
+impl Row {
+    fn calls_per_sec(&self) -> f64 {
+        self.total_calls as f64 / self.secs
+    }
+}
+
+/// Run `iters` calls on each of `n` threads; assert every result equals the
+/// sequential `oracle`; return the wall-clock row.
+fn drive(
+    workload: &'static str,
+    exe: &Arc<Executable>,
+    args: &[Value],
+    oracle: &Value,
+    n: usize,
+    iters: usize,
+) -> Row {
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..n {
+            let exe = exe.clone();
+            let args = args.to_vec();
+            s.spawn(move || {
+                for _ in 0..iters {
+                    let out = exe.call(args.clone()).expect("serve call failed");
+                    assert!(
+                        out.structural_eq(oracle),
+                        "{workload}: concurrent result diverged from sequential oracle"
+                    );
+                }
+            });
+        }
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    let row = Row { workload, threads: n, total_calls: n * iters, secs };
+    println!(
+        "{:<22} threads={:<2} {:>9} calls in {:>7.3}s  →  {:>10.0} calls/s",
+        workload,
+        n,
+        row.total_calls,
+        secs,
+        row.calls_per_sec()
+    );
+    println!("CSV,serve,{workload},{n},{:.1}", row.calls_per_sec());
+    row
+}
+
+fn main() {
+    println!("=== serve: N threads on one Arc<Executable> ===");
+
+    // Workload 1: MLP value_and_grad (tensor-heavy; matmuls dominate).
+    let meta = mlp::default_meta();
+    let mut rng = Rng::new(42);
+    let teacher = mlp::synth_teacher(&meta, &mut rng);
+    let (x, y) = mlp::synth_batch(&meta, &mut rng, &teacher);
+    let params: Vec<Tensor> =
+        meta.init_params(7).into_iter().map(|t| t.cast(DType::F64)).collect();
+    let (_engine, _loss, grad_fn) = mlp::compile_mlp(false).expect("compile MLP");
+    let mlp_args =
+        vec![params_value(&params), Value::Tensor(x.clone()), Value::Tensor(y.clone())];
+    let mlp_oracle = grad_fn.call(mlp_args.clone()).expect("sequential oracle");
+
+    // Workload 2: scalar composite gradient (interpreter-dominated).
+    let engine =
+        Engine::from_source("def f(x):\n    return sin(x) * exp(x) + tanh(x * x)\n").unwrap();
+    let scalar_fn = engine.trace("f").unwrap().grad().compile().unwrap();
+    let scalar_args = vec![Value::F64(0.7)];
+    let scalar_oracle = scalar_fn.call(scalar_args.clone()).expect("sequential oracle");
+
+    let mut rows: Vec<Row> = Vec::new();
+    for &n in &THREAD_COUNTS {
+        rows.push(drive("mlp_value_and_grad", &grad_fn, &mlp_args, &mlp_oracle, n, 60));
+    }
+    for &n in &THREAD_COUNTS {
+        rows.push(drive("scalar_grad", &scalar_fn, &scalar_args, &scalar_oracle, n, 4000));
+    }
+
+    // Speedups relative to each workload's single-thread row.
+    let speedup = |workload: &str| -> (f64, f64) {
+        let base = rows
+            .iter()
+            .find(|r| r.workload == workload && r.threads == 1)
+            .map(Row::calls_per_sec)
+            .unwrap_or(f64::NAN);
+        let top = rows
+            .iter()
+            .find(|r| r.workload == workload && r.threads == 8)
+            .map(Row::calls_per_sec)
+            .unwrap_or(f64::NAN);
+        (base, top / base)
+    };
+    let (mlp_base, mlp_speedup) = speedup("mlp_value_and_grad");
+    let (scalar_base, scalar_speedup) = speedup("scalar_grad");
+    println!("\nmlp_value_and_grad: {mlp_base:.0} calls/s single-thread, {mlp_speedup:.2}x at 8 threads");
+    println!("scalar_grad:        {scalar_base:.0} calls/s single-thread, {scalar_speedup:.2}x at 8 threads");
+
+    // Machine-readable trajectory point (hand-rolled JSON; serde is not in
+    // the offline crate set).
+    let mut json = String::from("{\n  \"bench\": \"serve\",\n  \"identical_to_sequential\": true,\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"workload\": \"{}\", \"threads\": {}, \"total_calls\": {}, \"secs\": {:.6}, \"calls_per_sec\": {:.1}}}{}\n",
+            r.workload,
+            r.threads,
+            r.total_calls,
+            r.secs,
+            r.calls_per_sec(),
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str(&format!(
+        "  ],\n  \"mlp_speedup_8v1\": {mlp_speedup:.3},\n  \"scalar_speedup_8v1\": {scalar_speedup:.3}\n}}\n"
+    ));
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    std::fs::write(path, json).expect("write BENCH_serve.json");
+    println!("\nwrote {path}");
+}

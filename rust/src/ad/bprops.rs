@@ -285,6 +285,10 @@ fn bprop_exprs(
         SumTail => vec![ap!(BroadcastLead, d, xs[0])],
         BroadcastLead => vec![ap!(SumToLead, d, xs[0]), zt],
         SumToLead => vec![ap!(BroadcastLead, d, xs[0]), zt],
+        // Per-example sum_to undone by the batch-pinned trailing broadcast;
+        // this is what makes grad over a vmapped adjoint (per-sample
+        // second order, grad(vmap(grad(f)))-style compositions) work.
+        SumToTail => vec![ap!(BroadcastTail, d, xs[0]), zt],
         MoveAxis => vec![ap!(MoveAxis, d, xs[2], xs[1]), zt, zt],
         BroadcastBatch => {
             let zero_ax = m.constant(Const::I64(0));
@@ -303,10 +307,17 @@ fn bprop_exprs(
             vec![zt, stl!(da, xs[1]), stl!(db, xs[2])]
         }
         Print => vec![d],
-        // Structured ops with no (implemented) linearization. `SumToTail`'s
-        // adjoint needs a batch-pinned trailing broadcast we do not have a
-        // kernel for; second-order-through-vmap raises lazily instead.
-        Concat0 | TakeRow | ReduceSumAxis | Partial | Mod | FloorDiv | SumToTail => return None,
+        // Structured ops with no (implemented) linearization; their
+        // backpropagators raise lazily if anyone calls them. `BroadcastTail`
+        // has no honest adjoint in this shape-erased IR: its `like` operand
+        // carries the *batched* shape while `sum_to_tail`'s target carries
+        // the *unbatched* per-example shape, and with an unbatched cotangent
+        // neither prim expresses the required reduce-over-all-axes — so
+        // third-order-through-vmap raises lazily rather than silently
+        // mis-shaping gradients.
+        Concat0 | TakeRow | ReduceSumAxis | Partial | Mod | FloorDiv | BroadcastTail => {
+            return None
+        }
         // Non-differentiable prims were handled above.
         _ => return None,
     };
@@ -488,6 +499,29 @@ mod tests {
     }
 
     #[test]
+    fn sum_to_tail_bprop_spreads_per_example() {
+        use crate::tensor::Tensor;
+        // forward: d [2,2,3] toward unbatched x [3] → per-example column
+        // sums [2,3]; adjoint: a [2,3] cotangent spreads back over each
+        // example's reduced axis.
+        let d = Value::Tensor(Tensor::from_f64_shaped(vec![1.0; 12], vec![2, 2, 3]).unwrap());
+        let x = Value::Tensor(Tensor::from_f64(&[0.0, 0.0, 0.0]));
+        let g = Value::Tensor(
+            Tensor::from_f64_shaped(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]).unwrap(),
+        );
+        let (r, grads) = fprop_and_bprop(Prim::SumToTail, vec![d, x], g);
+        assert_eq!(r.as_tensor().unwrap().shape(), &[2, 3]);
+        assert_eq!(r.as_tensor().unwrap().as_f64_vec(), vec![2.0; 6]);
+        let dd = grads[1].as_tensor().unwrap();
+        assert_eq!(dd.shape(), &[2, 2, 3]);
+        assert_eq!(
+            dd.as_f64_vec(),
+            vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 4.0, 5.0, 6.0]
+        );
+        assert!(matches!(grads[2], Value::ZeroT));
+    }
+
+    #[test]
     fn broadcast_add_bprop_sums() {
         use crate::tensor::Tensor;
         // [2,3] + [3] : gradient toward the [3] bias must sum over rows.
@@ -516,7 +550,7 @@ mod tests {
         // env_getitem then env_setitem adjoints compose
         let mut env = crate::vm::EnvMap::new();
         env.insert(5, f(2.0));
-        let envv = Value::Env(std::rc::Rc::new(env));
+        let envv = Value::Env(std::sync::Arc::new(env));
         let (r, g) =
             fprop_and_bprop(Prim::EnvGetItem, vec![envv, Value::Key(5)], f(3.0));
         assert_eq!(getf(&r), 2.0);

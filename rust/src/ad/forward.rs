@@ -244,6 +244,7 @@ pub fn fwd_prim(m: &mut Module, p: Prim, arity: usize) -> Result<GraphId> {
         BroadcastLead => ap!(BroadcastLead, dxs[0], xs[1]),
         SumToLead => ap!(SumToLead, dxs[0], xs[1]),
         SumToTail => ap!(SumToTail, dxs[0], xs[1]),
+        BroadcastTail => ap!(BroadcastTail, dxs[0], xs[1]),
         MoveAxis => ap!(MoveAxis, dxs[0], xs[1], xs[2]),
         BroadcastBatch => ap!(BroadcastBatch, dxs[0], xs[1]),
         SoftmaxLast => {

@@ -532,8 +532,8 @@ impl Rewriter {
                 Concat0 | TakeRow if any_b => {
                     bail!("vmap rule for `{p}` over mapped values is not implemented")
                 }
-                BatchMatMul | SumTail | BroadcastLead | SumToLead | SumToTail | MoveAxis
-                | BroadcastBatch
+                BatchMatMul | SumTail | BroadcastLead | SumToLead | SumToTail | BroadcastTail
+                | MoveAxis | BroadcastBatch
                     if any_b =>
                 {
                     bail!("nested vmap (batching `{p}`) is not supported")

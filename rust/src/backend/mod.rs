@@ -17,10 +17,9 @@ use crate::runtime::{dtype_to_elem, dtype_to_prim, LoadedExec, XlaRuntime};
 use crate::tensor::{ops::broadcast_shapes, DType, Tensor};
 use crate::vm::{eval_prim, CodeObject, Instr, Program, SegmentRunner, Value, Vm};
 use anyhow::{anyhow, bail, Result};
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::fmt;
-use std::rc::Rc;
+use std::sync::{Arc, RwLock};
 
 /// Execution backends a pipeline can lower to (the `Lower` transform's
 /// target). `Vm` is always available; `Xla` additionally extracts
@@ -112,20 +111,22 @@ pub struct SegSpec {
 }
 
 /// Install XLA segments into a compiled VM. Returns the segment count.
+/// Runs at compile time, before the VM is frozen into a shared
+/// [`crate::coordinator::Executable`] — the only `&mut Vm` phase.
 pub fn install_segments(vm: &mut Vm) -> Result<usize> {
-    let runtime = Rc::new(XlaRuntime::cpu()?);
+    let runtime = Arc::new(XlaRuntime::cpu()?);
     install_segments_with(vm, runtime, 2)
 }
 
 /// As [`install_segments`] with an explicit runtime and minimum run length.
 pub fn install_segments_with(
     vm: &mut Vm,
-    runtime: Rc<XlaRuntime>,
+    runtime: Arc<XlaRuntime>,
     min_len: usize,
 ) -> Result<usize> {
     let program = vm.program.clone();
-    let mut new_codes: Vec<Rc<CodeObject>> = Vec::with_capacity(program.codes.len());
-    let mut segments: Vec<Rc<dyn SegmentRunner>> = std::mem::take(&mut vm.segments);
+    let mut new_codes: Vec<Arc<CodeObject>> = Vec::with_capacity(program.codes.len());
+    let mut segments: Vec<Arc<dyn SegmentRunner>> = std::mem::take(&mut vm.segments);
     let mut count = 0usize;
 
     for code in &program.codes {
@@ -133,17 +134,17 @@ pub fn install_segments_with(
         let mut rewritten = new_code;
         for (slot, spec) in specs {
             let exec_idx = segments.len();
-            segments.push(Rc::new(XlaSegment::new(spec, runtime.clone())));
+            segments.push(Arc::new(XlaSegment::new(spec, runtime.clone())));
             // Patch the placeholder exec index.
             if let Instr::XlaCall { exec, .. } = &mut rewritten.instrs[slot] {
                 *exec = exec_idx;
             }
             count += 1;
         }
-        new_codes.push(Rc::new(rewritten));
+        new_codes.push(Arc::new(rewritten));
     }
 
-    vm.program = Rc::new(Program {
+    vm.program = Arc::new(Program {
         codes: new_codes,
         consts: program.consts.clone(),
         graph_code: program.graph_code.clone(),
@@ -274,16 +275,21 @@ enum CompiledSeg {
     Fallback,
 }
 
-/// A lazily-compiled XLA segment.
+/// A lazily-compiled XLA segment. The per-shape compile cache sits behind a
+/// `RwLock`, so on the steady state (signature already compiled) concurrent
+/// callers take only a shared read lock; compilation for a new signature
+/// happens outside any lock (a racing thread may compile the same signature
+/// once more — the first insert wins and the duplicate is dropped, which is
+/// cheaper than serializing every call on a compile).
 pub struct XlaSegment {
     spec: SegSpec,
-    runtime: Rc<XlaRuntime>,
-    cache: RefCell<HashMap<Sig, Rc<CompiledSeg>>>,
+    runtime: Arc<XlaRuntime>,
+    cache: RwLock<HashMap<Sig, Arc<CompiledSeg>>>,
 }
 
 impl XlaSegment {
-    pub fn new(spec: SegSpec, runtime: Rc<XlaRuntime>) -> XlaSegment {
-        XlaSegment { spec, runtime, cache: RefCell::new(HashMap::new()) }
+    pub fn new(spec: SegSpec, runtime: Arc<XlaRuntime>) -> XlaSegment {
+        XlaSegment { spec, runtime, cache: RwLock::new(HashMap::new()) }
     }
 
     fn arg_tensor(v: &Value) -> Result<Tensor> {
@@ -354,18 +360,17 @@ impl SegmentRunner for XlaSegment {
             Err(_) => return self.run_fallback(args),
         };
         let sig: Sig = tensors.iter().map(|t| (t.dtype(), t.shape().to_vec())).collect();
-        let compiled = {
-            let mut cache = self.cache.borrow_mut();
-            match cache.get(&sig) {
-                Some(c) => c.clone(),
-                None => {
-                    let c = Rc::new(match self.build(&sig) {
-                        Ok(exec) => CompiledSeg::Xla(exec),
-                        Err(_) => CompiledSeg::Fallback,
-                    });
-                    cache.insert(sig.clone(), c.clone());
-                    c
-                }
+        let hit = self.cache.read().expect("segment cache poisoned").get(&sig).cloned();
+        let compiled = match hit {
+            Some(c) => c,
+            None => {
+                // Build outside any lock; first inserter wins.
+                let built = Arc::new(match self.build(&sig) {
+                    Ok(exec) => CompiledSeg::Xla(exec),
+                    Err(_) => CompiledSeg::Fallback,
+                });
+                let mut cache = self.cache.write().expect("segment cache poisoned");
+                cache.entry(sig).or_insert(built).clone()
             }
         };
         match &*compiled {
@@ -389,7 +394,7 @@ impl SegmentRunner for XlaSegment {
             self.spec.prims.len(),
             self.spec.n_params,
             self.spec.outputs.len(),
-            self.cache.borrow().len()
+            self.cache.read().expect("segment cache poisoned").len()
         )
     }
 }
@@ -548,13 +553,13 @@ fn lower_const(builder: &xla::XlaBuilder, c: &Value) -> Result<(xla::XlaOp, DTyp
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::Session;
+    use crate::coordinator::Engine;
 
     fn run_both(src: &str, entry: &str, args: Vec<Value>) -> (Value, Value, usize) {
-        let mut s = Session::from_source(src).unwrap();
+        let s = Engine::from_source(src).unwrap();
         let plain = s.trace(entry).unwrap().compile().unwrap();
         let v1 = plain.call(args.clone()).unwrap();
-        let mut s2 = Session::from_source(src).unwrap();
+        let s2 = Engine::from_source(src).unwrap();
         let xla = s2.trace(entry).unwrap().jit(Backend::Xla).compile().unwrap();
         let v2 = xla.call(args).unwrap();
         (v1, v2, xla.metrics.xla_segments)
@@ -594,7 +599,7 @@ def main(w):
     #[test]
     fn shape_polymorphic_cache() {
         let src = "def f(a, b):\n    return exp(a) * tanh(b) + a\n";
-        let mut s = Session::from_source(src).unwrap();
+        let s = Engine::from_source(src).unwrap();
         let f = s.trace("f").unwrap().jit(Backend::Xla).compile().unwrap();
         // two different shapes through the same compiled segment
         for n in [3usize, 7] {

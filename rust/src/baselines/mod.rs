@@ -5,6 +5,13 @@
 //!   PyTorch/Autograd/Chainer model, §2.1.1).
 //! * [`dataflow`] — a static dataflow-graph framework without function calls
 //!   or recursion (the Theano/TensorFlow model, §2.2).
+//!
+//! The tape baseline is deliberately `Rc`/`RefCell`-threaded and therefore
+//! single-threaded — that *is* the model under comparison: a mutable
+//! runtime trace coupled to execution. Contrast with the main pipeline's
+//! [`crate::coordinator::Executable`], whose compiled adjoint is an
+//! immutable `Send + Sync` artifact precisely because the transformation
+//! happened ahead of time (§2.1.2).
 
 pub mod dataflow;
 pub mod tape;

@@ -1,17 +1,26 @@
-//! Compilation sessions, function handles, and compiled entry points.
+//! The compile/run split: [`Engine`] owns parsing, the transform pipeline
+//! machinery and the artifact cache; [`Executable`] is the immutable,
+//! `Send + Sync` product of a compile that any number of threads may call
+//! concurrently.
 //!
-//! [`Session`] owns one parsed source module. [`Session::trace`] returns a
-//! [`Function`] handle whose chainable methods (`.grad()`,
-//! `.value_and_grad()`, `.optimize(PassSet)`, `.jit(Backend)`) assemble a
-//! transform [`Pipeline`]; [`Function::compile`] runs it and caches the
-//! result under `(entry, pipeline fingerprint, argument-type signature)`.
-//! `f.grad().grad().compile()` is second-order AD with no `grad(grad(…))`
-//! string anywhere in user source — the transforms compose because the
-//! adjoint program is ordinary IR (§3.2).
+//! The paper's claim (§3.2, §4) is that source-transformation AD produces
+//! adjoint programs that are *ordinary, closed IR* — a compiled function is
+//! a pure artifact with no hidden mutable runtime coupling. The API enforces
+//! that split: everything mutable (the sharded compile cache) lives in the
+//! `Engine` behind interior synchronization, everything an `Executable`
+//! holds is frozen at compile time, and per-call state lives on the stack of
+//! whichever thread is calling.
 //!
-//! The legacy bool-flag [`Options`] struct survives as a deprecated shim
-//! that compiles down to a canonical pipeline, so it shares cache entries
-//! with the equivalent builder-built pipelines.
+//! [`Engine::trace`] returns a [`Function`] handle whose chainable methods
+//! (`.grad()`, `.value_and_grad()`, `.vmap()`, `.optimize(PassSet)`,
+//! `.jit(Backend)`) assemble a transform [`Pipeline`]; [`Function::compile`]
+//! runs it and caches the result under `(entry, pipeline fingerprint,
+//! argument-type signature)`. `f.grad().grad().compile()` is second-order AD
+//! with no `grad(grad(…))` string anywhere in user source — the transforms
+//! compose because the adjoint program is ordinary IR (§3.2).
+//!
+//! [`Session`] survives as a thin deprecated alias for [`Engine`] (and
+//! [`CompiledFn`] for [`Executable`]) so downstream code keeps compiling.
 
 use crate::ad::expand_macros;
 use crate::backend::Backend;
@@ -22,50 +31,11 @@ use crate::transform::{Pipeline, StageMetrics, Transform};
 use crate::types::AType;
 use crate::vm::{compile_program, Value, Vm};
 use anyhow::{anyhow, Result};
+use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::hash::{Hash, Hasher};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
-
-/// Legacy bool-flag pipeline options.
-///
-/// Each flag combination maps onto one canonical [`Pipeline`] (see
-/// [`Options::to_pipeline`]), so code still passing `Options` shares compile
-/// caches with code using the transform API. New code should build
-/// pipelines directly: `session.trace("f")?.grad().compile()?`.
-#[deprecated(
-    note = "use Session::trace(..) with the transform API (or build a Pipeline); \
-            Options compiles down to a canonical pipeline"
-)]
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
-pub struct Options {
-    /// Run the optimizer (§4.3). Off = the "interpreted, unoptimized" arm.
-    pub optimize: bool,
-    /// Extract straight-line tensor segments and compile them with XLA
-    /// (requires the PJRT runtime; the paper's TVM role).
-    pub xla_backend: bool,
-    /// Reserved: run extra verification passes.
-    pub infer: bool,
-}
-
-#[allow(deprecated)]
-impl Default for Options {
-    fn default() -> Self {
-        Options { optimize: true, xla_backend: false, infer: false }
-    }
-}
-
-#[allow(deprecated)]
-impl Options {
-    /// The canonical pipeline these flags describe.
-    pub fn to_pipeline(&self) -> Pipeline {
-        let mut b = Pipeline::builder();
-        if self.optimize {
-            b = b.optimize(PassSet::Standard);
-        }
-        let backend = if self.xla_backend { Backend::Xla } else { Backend::Vm };
-        b.lower(backend).build().expect("Options always maps to a valid pipeline")
-    }
-}
 
 /// Compile-time metrics (E1/E6/E7 read these).
 #[derive(Debug, Clone, Default)]
@@ -96,25 +66,64 @@ pub struct Metrics {
 struct CacheEntry {
     fingerprint: u64,
     signature: Option<Vec<AType>>,
-    compiled: Rc<CompiledFn>,
+    compiled: Arc<Executable>,
 }
 
-/// A compilation session over one source module.
+/// Number of independent cache shards. Entry names hash onto shards, so
+/// compiles of *different* entry points never contend on one lock, and a
+/// long compile holds no lock at all (only the post-compile insert does).
+const CACHE_SHARDS: usize = 8;
+
+/// The sharded, `Mutex`-protected artifact cache.
+struct ArtifactCache {
+    shards: [Mutex<HashMap<String, Vec<CacheEntry>>>; CACHE_SHARDS],
+}
+
+impl ArtifactCache {
+    fn new() -> ArtifactCache {
+        ArtifactCache { shards: std::array::from_fn(|_| Mutex::new(HashMap::new())) }
+    }
+
+    fn shard(&self, name: &str) -> &Mutex<HashMap<String, Vec<CacheEntry>>> {
+        let mut h = DefaultHasher::new();
+        name.hash(&mut h);
+        &self.shards[(h.finish() as usize) % CACHE_SHARDS]
+    }
+}
+
+/// A compilation engine over one source module — the compile-time half of
+/// the compile/run split.
 ///
-/// [`Session::module`] holds the *pristine* lowered IR: every compile
-/// works on its own clone, so an `Optimize` stage in one pipeline can
-/// never leak into another pipeline's artifact (or into the session), and
-/// the cache key honestly describes what each artifact was built from.
-/// The transformed IR a pipeline produced lives in [`CompiledFn::module`].
-pub struct Session {
+/// [`Engine::module`] holds the *pristine* lowered IR: every compile works
+/// on its own clone, so an `Optimize` stage in one pipeline can never leak
+/// into another pipeline's artifact (or into the engine), and the cache key
+/// honestly describes what each artifact was built from. The transformed IR
+/// a pipeline produced lives in [`Executable::module`].
+///
+/// All compile entry points take `&self`: the artifact cache is sharded and
+/// `Mutex`-protected internally, so one `Engine` can serve compile requests
+/// from many threads (see the `concurrent_compiles_share_one_artifact`
+/// test).
+pub struct Engine {
     pub module: Module,
     pub graphs: HashMap<String, GraphId>,
-    cache: HashMap<String, Vec<CacheEntry>>,
+    cache: ArtifactCache,
 }
 
-/// A compiled, executable entry point, owning the transformed IR snapshot
-/// it was generated from ([`CompiledFn::entry`] indexes into it).
-pub struct CompiledFn {
+/// Deprecated name for [`Engine`].
+#[deprecated(note = "renamed to `Engine`; compile with `Engine::trace(..)` and share the \
+                     resulting `Arc<Executable>` across threads")]
+pub type Session = Engine;
+
+/// A compiled, executable entry point: the run-time half of the compile/run
+/// split. Owns the transformed IR snapshot it was generated from
+/// ([`Executable::entry`] indexes into it).
+///
+/// An `Executable` is immutable after compilation and `Send + Sync` — wrap
+/// it in the `Arc` that [`Function::compile`] already returns and call it
+/// from as many threads as you like; results are identical to sequential
+/// execution (the language is purely functional, §3).
+pub struct Executable {
     pub vm: Vm,
     pub entry: GraphId,
     /// The module after this artifact's pipeline ran (for `show`/printing).
@@ -126,18 +135,24 @@ pub struct CompiledFn {
     pub ret_type: Option<AType>,
 }
 
-impl CompiledFn {
+/// Deprecated name for [`Executable`].
+#[deprecated(note = "renamed to `Executable`")]
+pub type CompiledFn = Executable;
+
+impl Executable {
+    /// Execute on argument values. `&self` and thread-safe: all per-call
+    /// state lives in a per-invocation context inside the VM.
     pub fn call(&self, args: Vec<Value>) -> Result<Value> {
         self.vm.call_graph(self.entry, args)
     }
 }
 
-impl Session {
+impl Engine {
     /// Parse and lower a source module.
-    pub fn from_source(source: &str) -> Result<Session> {
+    pub fn from_source(source: &str) -> Result<Engine> {
         let mut module = Module::new();
         let graphs = compile_source(&mut module, source)?;
-        Ok(Session { module, graphs, cache: HashMap::new() })
+        Ok(Engine { module, graphs, cache: ArtifactCache::new() })
     }
 
     /// Graph id of a top-level function.
@@ -157,13 +172,14 @@ impl Session {
     }
 
     /// Begin a transform chain over the named entry point. The returned
-    /// [`Function`] borrows the session; finish the chain with
-    /// [`Function::compile`] to get a cached, callable artifact.
-    pub fn trace(&mut self, name: &str) -> Result<Function<'_>> {
+    /// [`Function`] borrows the engine (shared — several chains can be in
+    /// flight at once); finish the chain with [`Function::compile`] to get a
+    /// cached `Arc<Executable>`.
+    pub fn trace(&self, name: &str) -> Result<Function<'_>> {
         self.graph(name)?; // fail fast on unknown entry points
         Ok(Function {
             name: name.to_string(),
-            session: self,
+            engine: self,
             builder: Pipeline::builder(),
             passes: None,
             backend: Backend::Vm,
@@ -172,35 +188,49 @@ impl Session {
     }
 
     /// Compile `name` through `pipeline` (unspecialized). Cached.
-    pub fn compile_pipeline(&mut self, name: &str, pipeline: &Pipeline) -> Result<Rc<CompiledFn>> {
+    pub fn compile_pipeline(&self, name: &str, pipeline: &Pipeline) -> Result<Arc<Executable>> {
         self.compile_specialized(name, pipeline, None)
     }
 
     /// Compile `name` through `pipeline`, optionally specialized to an
     /// argument-type signature (the signature is type-checked eagerly,
     /// §4.2). Artifacts are cached under `(name, pipeline fingerprint,
-    /// signature)`; a hit performs no allocation.
+    /// signature)`; a hit performs no allocation and no compile ever runs
+    /// under a cache lock. Two threads racing on the same key may both
+    /// compile; the first insert wins and both receive the same artifact.
     pub fn compile_specialized(
-        &mut self,
+        &self,
         name: &str,
         pipeline: &Pipeline,
         signature: Option<&[AType]>,
-    ) -> Result<Rc<CompiledFn>> {
+    ) -> Result<Arc<Executable>> {
         let fp = pipeline.fingerprint();
-        if let Some(entries) = self.cache.get(name) {
-            // The fingerprint is the fast filter; comparing the canonical
-            // spec (already stored in the artifact's metrics) makes a
-            // 64-bit hash collision impossible to serve.
-            if let Some(hit) = entries.iter().find(|e| {
-                e.fingerprint == fp
-                    && e.compiled.metrics.pipeline == pipeline.spec()
-                    && e.signature.as_deref() == signature
-            }) {
-                return Ok(hit.compiled.clone());
+        // The fingerprint is the fast filter; comparing the canonical spec
+        // (already stored in the artifact's metrics) makes a 64-bit hash
+        // collision impossible to serve.
+        let matches = |e: &CacheEntry| {
+            e.fingerprint == fp
+                && e.compiled.metrics.pipeline == pipeline.spec()
+                && e.signature.as_deref() == signature
+        };
+        let shard = self.cache.shard(name);
+        {
+            let guard = shard.lock().expect("artifact cache poisoned");
+            if let Some(entries) = guard.get(name) {
+                if let Some(hit) = entries.iter().find(|&e| matches(e)) {
+                    return Ok(hit.compiled.clone());
+                }
             }
         }
-        let compiled = Rc::new(self.compile_uncached(name, pipeline, signature)?);
-        self.cache.entry(name.to_string()).or_default().push(CacheEntry {
+        let compiled = Arc::new(self.compile_uncached(name, pipeline, signature)?);
+        let mut guard = shard.lock().expect("artifact cache poisoned");
+        let entries = guard.entry(name.to_string()).or_default();
+        if let Some(hit) = entries.iter().find(|&e| matches(e)) {
+            // A racing thread finished first; serve its artifact so every
+            // caller shares one allocation (and one cache entry).
+            return Ok(hit.compiled.clone());
+        }
+        entries.push(CacheEntry {
             fingerprint: fp,
             signature: signature.map(|s| s.to_vec()),
             compiled: compiled.clone(),
@@ -208,23 +238,14 @@ impl Session {
         Ok(compiled)
     }
 
-    /// Deprecated shim: compile with legacy bool flags. Equivalent to
-    /// `compile_pipeline(name, &options.to_pipeline())` — and because the
-    /// mapping is canonical, it shares cache entries with the new API.
-    #[allow(deprecated)]
-    #[deprecated(note = "use Session::trace(name)…compile(), or compile_pipeline")]
-    pub fn compile(&mut self, name: &str, options: Options) -> Result<Rc<CompiledFn>> {
-        self.compile_pipeline(name, &options.to_pipeline())
-    }
-
     fn compile_uncached(
-        &mut self,
+        &self,
         name: &str,
         pipeline: &Pipeline,
         signature: Option<&[AType]>,
-    ) -> Result<CompiledFn> {
+    ) -> Result<Executable> {
         let source_entry = self.graph(name)?;
-        // Transform a private clone: the session module stays pristine, so
+        // Transform a private clone: the engine module stays pristine, so
         // e.g. an unoptimized pipeline compiled after an optimized one of
         // the same entry really is unoptimized.
         let mut module = self.module.clone();
@@ -280,7 +301,7 @@ impl Session {
         }
         metrics.codegen_us = t2.elapsed().as_micros();
 
-        Ok(CompiledFn {
+        Ok(Executable {
             vm,
             entry,
             module,
@@ -292,12 +313,12 @@ impl Session {
 }
 
 /// A traced entry point: a handle that accumulates transforms and compiles
-/// into a cached artifact. Obtained from [`Session::trace`].
+/// into a cached artifact. Obtained from [`Engine::trace`].
 ///
 /// Transform methods consume and return the handle, so chains read like the
-/// math: `s.trace("f")?.grad().grad().compile()?` is d²f/dx².
-pub struct Function<'s> {
-    session: &'s mut Session,
+/// math: `e.trace("f")?.grad().grad().compile()?` is d²f/dx².
+pub struct Function<'e> {
+    engine: &'e Engine,
     name: String,
     builder: crate::transform::PipelineBuilder,
     passes: Option<PassSet>,
@@ -305,7 +326,7 @@ pub struct Function<'s> {
     signature: Option<Vec<AType>>,
 }
 
-impl<'s> Function<'s> {
+impl<'e> Function<'e> {
     /// Differentiate w.r.t. the first parameter (reverse mode). Chainable:
     /// each call raises the derivative order by one.
     pub fn grad(mut self) -> Self {
@@ -383,17 +404,18 @@ impl<'s> Function<'s> {
         self.builder.clone().optimize(passes).lower(self.backend).build()
     }
 
-    /// Run the pipeline and return the (cached) compiled artifact.
-    pub fn compile(self) -> Result<Rc<CompiledFn>> {
+    /// Run the pipeline and return the (cached) compiled artifact — an
+    /// `Arc<Executable>` that is `Send + Sync` and callable from any thread.
+    pub fn compile(self) -> Result<Arc<Executable>> {
         let pipeline = self.pipeline()?;
-        self.session.compile_specialized(&self.name, &pipeline, self.signature.as_deref())
+        self.engine.compile_specialized(&self.name, &pipeline, self.signature.as_deref())
     }
 }
 
 /// One-shot convenience: compile `entry` from `source` and run it.
 pub fn run_source(source: &str, entry: &str, args: Vec<Value>) -> Result<Value> {
-    let mut s = Session::from_source(source)?;
-    let f = s.compile_pipeline(entry, &Pipeline::standard(Backend::Vm))?;
+    let e = Engine::from_source(source)?;
+    let f = e.compile_pipeline(entry, &Pipeline::standard(Backend::Vm))?;
     f.call(args)
 }
 
@@ -410,8 +432,8 @@ def f(x):
 def main(x):
     return grad(f)(x)
 ";
-        let mut s = Session::from_source(src).unwrap();
-        let f = s.trace("main").unwrap().compile().unwrap();
+        let e = Engine::from_source(src).unwrap();
+        let f = e.trace("main").unwrap().compile().unwrap();
         let out = f.call(vec![Value::F64(2.0)]).unwrap();
         assert!((out.as_f64().unwrap() - 12.0).abs() < 1e-12);
         assert_eq!(f.metrics.macros_expanded, 1);
@@ -426,23 +448,40 @@ def main(x):
     }
 
     #[test]
-    fn cache_hits_across_both_apis() {
-        let mut s = Session::from_source("def f(x):\n    return x + 1.0\n").unwrap();
-        let a = s.trace("f").unwrap().compile().unwrap();
-        let b = s.trace("f").unwrap().compile().unwrap();
-        assert!(Rc::ptr_eq(&a, &b));
+    fn cache_hits_and_misses() {
+        let e = Engine::from_source("def f(x):\n    return x + 1.0\n").unwrap();
+        let a = e.trace("f").unwrap().compile().unwrap();
+        let b = e.trace("f").unwrap().compile().unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
         // A different pass set is a different pipeline.
-        let c = s.trace("f").unwrap().optimize(PassSet::None).compile().unwrap();
-        assert!(!Rc::ptr_eq(&a, &c));
-        // The deprecated Options shim canonicalizes onto the SAME pipelines.
-        #[allow(deprecated)]
-        let d = s.compile("f", Options::default()).unwrap();
-        assert!(Rc::ptr_eq(&a, &d));
-        #[allow(deprecated)]
-        let e = s
-            .compile("f", Options { optimize: false, ..Default::default() })
+        let c = e.trace("f").unwrap().optimize(PassSet::None).compile().unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        // Equivalent pipelines built explicitly share the same entry.
+        let d = e
+            .compile_pipeline("f", &Pipeline::standard(Backend::Vm))
             .unwrap();
-        assert!(Rc::ptr_eq(&c, &e));
+        assert!(Arc::ptr_eq(&a, &d));
+    }
+
+    #[test]
+    fn concurrent_compiles_share_one_artifact() {
+        // Many threads race the same (entry, pipeline) key on one shared
+        // engine; everyone must end up with the same Arc'd artifact and the
+        // correct derivative.
+        let e = Engine::from_source("def f(x):\n    return x ** 3.0\n").unwrap();
+        let results: Vec<Arc<Executable>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| s.spawn(|| e.trace("f").unwrap().grad().compile().unwrap()))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for f in &results {
+            let got = f.call(vec![Value::F64(2.0)]).unwrap().as_f64().unwrap();
+            assert!((got - 12.0).abs() < 1e-12);
+        }
+        // All callers share one cache entry (first insert won the race).
+        let first = e.trace("f").unwrap().grad().compile().unwrap();
+        assert!(results.iter().all(|f| Arc::ptr_eq(f, &first)));
     }
 
     #[test]
@@ -454,8 +493,8 @@ def f(x):
 def main(x):
     return grad(f)(x)
 ";
-        let mut s = Session::from_source(src).unwrap();
-        let f = s.trace("main").unwrap().optimize(PassSet::None).compile().unwrap();
+        let e = Engine::from_source(src).unwrap();
+        let f = e.trace("main").unwrap().optimize(PassSet::None).compile().unwrap();
         let out = f.call(vec![Value::F64(0.9)]).unwrap();
         let want = 0.9f64.cos() * 0.9 + 0.9f64.sin();
         assert!((out.as_f64().unwrap() - want).abs() < 1e-12);
@@ -463,8 +502,21 @@ def main(x):
 
     #[test]
     fn missing_entry_reported() {
-        let mut s = Session::from_source("def f(x):\n    return x\n").unwrap();
-        assert!(s.trace("nope").is_err());
+        let e = Engine::from_source("def f(x):\n    return x\n").unwrap();
+        assert!(e.trace("nope").is_err());
+    }
+
+    #[test]
+    fn session_alias_still_compiles() {
+        // The deprecated alias is part of the public surface for one more
+        // cycle; keep it working.
+        #[allow(deprecated)]
+        fn takes_session(s: &super::Session) -> Result<Arc<super::CompiledFn>> {
+            s.trace("f")?.compile()
+        }
+        let e = Engine::from_source("def f(x):\n    return x + 1.0\n").unwrap();
+        let f = takes_session(&e).unwrap();
+        assert!((f.call(vec![Value::F64(1.0)]).unwrap().as_f64().unwrap() - 2.0).abs() < 1e-12);
     }
 
     #[test]
@@ -477,9 +529,9 @@ def f(x):
 def main(x):
     return grad(f)(x)
 ";
-        let mut s = Session::from_source(src).unwrap();
-        let via_macro = s.trace("main").unwrap().compile().unwrap();
-        let via_transform = s.trace("f").unwrap().grad().compile().unwrap();
+        let e = Engine::from_source(src).unwrap();
+        let via_macro = e.trace("main").unwrap().compile().unwrap();
+        let via_transform = e.trace("f").unwrap().grad().compile().unwrap();
         for x in [0.5, -1.0, 2.0] {
             let a = via_macro.call(vec![Value::F64(x)]).unwrap().as_f64().unwrap();
             let b = via_transform.call(vec![Value::F64(x)]).unwrap().as_f64().unwrap();

@@ -7,11 +7,12 @@
 //! `jax.grad` over a params tuple.
 
 use crate::backend::Backend;
-use crate::coordinator::{CompiledFn, Session};
+use crate::coordinator::{Engine, Executable};
 use crate::runtime::artifacts::MlpMeta;
 use crate::tensor::{ops, DType, Rng, Tensor};
 use crate::vm::Value;
 use anyhow::{anyhow, Result};
+use std::sync::Arc;
 
 /// The MLP in the Myia source language.
 pub const MLP_SOURCE: &str = "\
@@ -79,12 +80,12 @@ pub fn sgd_update(params: &[Tensor], grads: &Value, lr: f64) -> Result<Vec<Tenso
 /// Compile the Myia MLP loss+grad entry points. The gradient is derived
 /// from the loss with the transform API — `value_and_grad` is a pipeline
 /// stage, not a string in the model source.
-pub fn compile_mlp(xla: bool) -> Result<(Session, std::rc::Rc<CompiledFn>, std::rc::Rc<CompiledFn>)> {
-    let mut s = Session::from_source(MLP_SOURCE)?;
+pub fn compile_mlp(xla: bool) -> Result<(Engine, Arc<Executable>, Arc<Executable>)> {
+    let e = Engine::from_source(MLP_SOURCE)?;
     let backend = if xla { Backend::Xla } else { Backend::Vm };
-    let loss = s.trace("mlp_loss")?.jit(backend).compile()?;
-    let grad = s.trace("mlp_loss")?.value_and_grad().jit(backend).compile()?;
-    Ok((s, loss, grad))
+    let loss = e.trace("mlp_loss")?.jit(backend).compile()?;
+    let grad = e.trace("mlp_loss")?.value_and_grad().jit(backend).compile()?;
+    Ok((e, loss, grad))
 }
 
 /// Compile ∂loss/∂params *per example*: the `Grad` transform builds the
@@ -95,9 +96,9 @@ pub fn compile_mlp(xla: bool) -> Result<(Session, std::rc::Rc<CompiledFn>, std::
 /// `xs: [N, 1, in]`, `ys: [N, 1, out]` (see [`per_example_rows`]) and
 /// returns a params-shaped tuple whose leaves carry a leading `N` axis.
 pub fn compile_per_sample_grads(
-    s: &mut Session,
+    e: &Engine,
     xla: bool,
-) -> Result<std::rc::Rc<CompiledFn>> {
+) -> Result<Arc<Executable>> {
     if xla {
         // Fail fast with context rather than deep in segment lowering: the
         // batching prims (batch_matmul, sum_tail, ...) have no XLA rules.
@@ -106,7 +107,7 @@ pub fn compile_per_sample_grads(
              primitives have no XLA lowering"
         ));
     }
-    s.trace("mlp_loss")?
+    e.trace("mlp_loss")?
         .grad()
         .vmap_axes(vec![None, Some(0), Some(0)])
         .jit(Backend::Vm)
@@ -124,7 +125,7 @@ pub fn per_example_rows(x: &Tensor) -> Result<Tensor> {
 
 /// One Myia training step; returns the loss.
 pub fn myia_step(
-    grad_fn: &CompiledFn,
+    grad_fn: &Executable,
     params: &mut Vec<Tensor>,
     x: &Tensor,
     y: &Tensor,
@@ -183,8 +184,8 @@ mod tests {
         let params: Vec<Tensor> =
             meta.init_params(2).into_iter().map(|t| t.cast(DType::F64)).collect();
 
-        let mut s = Session::from_source(MLP_SOURCE).unwrap();
-        let per_sample = compile_per_sample_grads(&mut s, false).unwrap();
+        let e = Engine::from_source(MLP_SOURCE).unwrap();
+        let per_sample = compile_per_sample_grads(&e, false).unwrap();
         let xs = per_example_rows(&x).unwrap();
         let ys = per_example_rows(&y).unwrap();
         let batched = per_sample
@@ -197,7 +198,7 @@ mod tests {
         assert_eq!(batched.len(), params.len());
 
         // Oracle: the same Grad pipeline looped over single examples.
-        let grad1 = s.trace("mlp_loss").unwrap().grad().compile().unwrap();
+        let grad1 = e.trace("mlp_loss").unwrap().grad().compile().unwrap();
         for e in 0..meta.batch {
             let xe = ops::take_row(&x, e).unwrap().reshape(&[1, meta.in_dim]).unwrap();
             let ye = ops::take_row(&y, e).unwrap().reshape(&[1, meta.out_dim]).unwrap();

@@ -1,18 +1,27 @@
 //! The compilation pipeline driver.
 //!
 //! Orchestrates the full toolchain the paper describes: parse → lower →
-//! macro (grad) expansion → transform pipeline (grad / optimize / lower) →
-//! VM codegen (optionally with XLA segment extraction) → execution. The
-//! public surface is [`Session::trace`] + [`Function`]: transforms compose
-//! as first-class values, and compiled entry points are cached by
-//! `(entry, pipeline fingerprint, argument-type signature)` so repeated
-//! `grad` calls pay the source-transformation cost once (§2.1.2: "the AD
-//! transformation is done only once per program and hence doesn't incur
-//! overhead at runtime").
+//! macro (grad) expansion → transform pipeline (grad / vmap / optimize /
+//! lower) → VM codegen (optionally with XLA segment extraction) →
+//! execution, behind an explicit compile/run split:
+//!
+//! * [`Engine`] (compile time) owns the parsed module, the transform
+//!   machinery, and a sharded `Mutex`-protected artifact cache keyed by
+//!   `(entry, pipeline fingerprint, argument-type signature)` — so repeated
+//!   `grad` requests pay the source-transformation cost once (§2.1.2: "the
+//!   AD transformation is done only once per program and hence doesn't
+//!   incur overhead at runtime"). All compile entry points take `&self`.
+//! * [`Executable`] (run time) is the immutable compiled artifact:
+//!   `Send + Sync`, shared as `Arc<Executable>`, callable concurrently from
+//!   any number of threads with results identical to sequential execution.
+//!
+//! The public surface is [`Engine::trace`] + [`Function`]: transforms
+//! compose as first-class values. [`Session`] and [`CompiledFn`] remain as
+//! thin deprecated aliases for [`Engine`] and [`Executable`].
 
+pub mod engine;
 pub mod mlp;
-mod session;
 
 #[allow(deprecated)]
-pub use session::Options;
-pub use session::{run_source, CompiledFn, Function, Metrics, Session};
+pub use engine::{CompiledFn, Session};
+pub use engine::{run_source, Engine, Executable, Function, Metrics};

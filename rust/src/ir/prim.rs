@@ -7,7 +7,9 @@
 //! (algebraic identities), the type inferrer (signatures) and the XLA
 //! backend (lowering rules).
 
+use std::collections::HashMap;
 use std::fmt;
+use std::sync::OnceLock;
 
 /// Every primitive operation in the language.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -138,6 +140,11 @@ pub enum Prim {
     /// `x`: reduce trailing axes of a batched `d` to `x`'s shape, keeping
     /// the batch axis.
     SumToTail,
+    /// `broadcast_tail(g, like)` — the adjoint of `sum_to_tail`: spread (or
+    /// reduce) `g` back to the shape of the original batched gradient
+    /// `like`, with the batch axis pinned and trailing alignment per
+    /// example.
+    BroadcastTail,
     /// `move_axis(x, src, dst)` — NumPy moveaxis; normalizes `in_axes` to 0.
     MoveAxis,
     /// `broadcast_batch(v, ref)` — stack `B` copies of `v` along a new
@@ -235,6 +242,7 @@ impl Prim {
             BroadcastLead => "broadcast_lead",
             SumToLead => "sum_to_lead",
             SumToTail => "sum_to_tail",
+            BroadcastTail => "broadcast_tail",
             MoveAxis => "move_axis",
             BroadcastBatch => "broadcast_batch",
             Print => "print_",
@@ -260,7 +268,7 @@ impl Prim {
             | Ge | Eq | Ne | BoolAnd | BoolOr | TupleGetItem | EnvGetItem | Gadd | MatMul
             | Reshape | BroadcastTo | SumTo | ReduceSumAxis | OneHot | Concat0 | TakeRow
             | RngUniform | RngNormal | Partial | SumToLike | BroadcastLike | BroadcastLead
-            | SumToLead | SumToTail | BroadcastBatch => Some(2),
+            | SumToLead | SumToTail | BroadcastTail | BroadcastBatch => Some(2),
             Switch | EnvSetItem | TupleInject | Where | MoveAxis => Some(3),
             BatchMatMul => Some(4),
         }
@@ -295,14 +303,20 @@ impl Prim {
             SumTo, ShapeOf, ReduceSum, ReduceMean, ReduceSumAxis, SoftmaxLast, OneHot,
             ArgmaxLast, Concat0, TakeRow, Item, ScalarToTensor, CastF32, CastF64, Where, Print,
             Raise, RngUniform, RngNormal, RngSplit, Partial, Step, SumToLike, BroadcastLike,
-            SumLastKeep, BatchMatMul, SumTail, BroadcastLead, SumToLead, SumToTail, MoveAxis,
-            BroadcastBatch,
+            SumLastKeep, BatchMatMul, SumTail, BroadcastLead, SumToLead, SumToTail,
+            BroadcastTail, MoveAxis, BroadcastBatch,
         ]
     }
 
-    /// Look up a primitive by its source-level name.
+    /// Look up a primitive by its source-level name. The name table is
+    /// built once behind a `OnceLock` (thread-safe lazy init — the parser
+    /// may run on several threads against one process-wide registry).
     pub fn by_name(name: &str) -> Option<Prim> {
-        Prim::all().into_iter().find(|p| p.name() == name)
+        static BY_NAME: OnceLock<HashMap<&'static str, Prim>> = OnceLock::new();
+        BY_NAME
+            .get_or_init(|| Prim::all().into_iter().map(|p| (p.name(), p)).collect())
+            .get(name)
+            .copied()
     }
 }
 

@@ -28,10 +28,13 @@
 //! * [`backend`] + [`runtime`] — the compiled backend for straight-line graph
 //!   segments (the paper used TVM; we lower to XLA and execute via PJRT), and
 //!   the loader for AOT artifacts produced by the JAX/Pallas build path.
-//! * [`coordinator`] — the end-to-end driver and CLI: [`coordinator::Session`]
-//!   owns a parsed module, and [`coordinator::Session::trace`] returns a
+//! * [`coordinator`] — the end-to-end driver and CLI, built around a
+//!   compile/run split: [`coordinator::Engine`] owns a parsed module and a
+//!   sharded artifact cache, [`coordinator::Engine::trace`] returns a
 //!   [`coordinator::Function`] handle supporting `.grad()`,
-//!   `.value_and_grad()`, `.jit(Backend)`, and `.compile()`. Compiled
+//!   `.value_and_grad()`, `.vmap()`, `.jit(Backend)`, and `.compile()`,
+//!   which yields an `Arc<`[`coordinator::Executable`]`>` — an immutable,
+//!   `Send + Sync` artifact callable from any number of threads. Compiled
 //!   artifacts are cached per (entry, pipeline fingerprint, argument-type
 //!   signature).
 //! * [`tensor`], [`bench`], [`ptest`], [`baselines`] — substrates built from
@@ -57,7 +60,9 @@ pub mod coordinator;
 /// quickstart, the examples, and most downstream code.
 pub mod prelude {
     pub use crate::backend::Backend;
-    pub use crate::coordinator::{CompiledFn, Function, Metrics, Session};
+    #[allow(deprecated)]
+    pub use crate::coordinator::{CompiledFn, Session};
+    pub use crate::coordinator::{Engine, Executable, Function, Metrics};
     pub use crate::opt::PassSet;
     pub use crate::transform::{
         Grad, Lower, Optimize, Pipeline, PipelineBuilder, Transform, ValueAndGrad, Vmap,

@@ -18,7 +18,7 @@
 //! parsing is hand-rolled: clap is not in the offline crate set.
 
 use myia::backend::Backend;
-use myia::coordinator::Session;
+use myia::coordinator::Engine;
 use myia::ir::print_graph;
 use myia::opt::PassSet;
 use myia::transform::Pipeline;
@@ -154,7 +154,7 @@ fn run(args: &[String]) -> anyhow::Result<ExitCode> {
             };
             let pipeline = pipeline_from_flags(&flags, order, wrt)?;
             let source = std::fs::read_to_string(file)?;
-            let mut s = Session::from_source(&source)?;
+            let s = Engine::from_source(&source)?;
             let f = s.compile_pipeline(entry, &pipeline)?;
             let vals: Vec<Value> = pos[2..].iter().map(|a| parse_value(a)).collect();
             let out = f.call(vals)?;
@@ -170,11 +170,11 @@ fn run(args: &[String]) -> anyhow::Result<ExitCode> {
                         "--raw shows the untransformed IR; drop the pipeline-selecting flags"
                     );
                 }
-                let s = Session::from_source(&source)?;
+                let s = Engine::from_source(&source)?;
                 println!("{}", print_graph(&s.module, s.graph(entry)?, true));
             } else {
                 let pipeline = pipeline_from_flags(&flags, 0, 0)?;
-                let mut s = Session::from_source(&source)?;
+                let s = Engine::from_source(&source)?;
                 let f = s.compile_pipeline(entry, &pipeline)?;
                 println!("{}", print_graph(&f.module, f.entry, true));
                 eprintln!(
@@ -190,7 +190,7 @@ fn run(args: &[String]) -> anyhow::Result<ExitCode> {
         "check" => {
             let (Some(file), Some(entry)) = (pos.first(), pos.get(1)) else { return Ok(usage()) };
             let source = std::fs::read_to_string(file)?;
-            let s = Session::from_source(&source)?;
+            let s = Engine::from_source(&source)?;
             let vals: Vec<Value> = pos[2..].iter().map(|a| parse_value(a)).collect();
             let t = s.check_call(entry, &vals)?;
             println!("{entry}: {t}");

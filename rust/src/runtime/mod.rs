@@ -11,29 +11,83 @@ pub mod artifacts;
 
 use crate::tensor::{Buffer, DType, Tensor};
 use anyhow::{anyhow, bail, Result};
+use std::mem::ManuallyDrop;
 use std::path::Path;
+use std::sync::{Arc, Mutex};
 
 /// A PJRT client plus compile/execute helpers.
+///
+/// `client_lock` serializes *every* operation that touches the client
+/// handle — compilation, execution (which materializes result buffers), and
+/// executable teardown. The PJRT C++ layer itself is thread-safe, but the
+/// Rust wrapper crate may share the client through non-atomic reference
+/// counts; the lock makes the `Send`/`Sync` impls below sound without
+/// depending on that implementation detail. The VM interpreter path never
+/// takes this lock — only XLA segment dispatch does.
 pub struct XlaRuntime {
-    pub client: xla::PjRtClient,
+    /// Manually dropped under `client_lock`, mirroring [`LoadedExec`].
+    client: ManuallyDrop<xla::PjRtClient>,
+    client_lock: Arc<Mutex<()>>,
+}
+
+// SAFETY: all operations that manipulate the wrapped PJRT client handle
+// (and any internal non-atomic handle clones the xla crate may make —
+// compile, execute, buffer materialization, executable drop, and the
+// client's own drop) are serialized behind `client_lock`, which every
+// `LoadedExec` shares. Two threads therefore never touch the client handle
+// concurrently, so moving/sharing these wrappers across threads cannot
+// corrupt any internal refcount, and the PJRT objects themselves carry no
+// thread affinity.
+unsafe impl Send for XlaRuntime {}
+unsafe impl Sync for XlaRuntime {}
+
+impl Drop for XlaRuntime {
+    fn drop(&mut self) {
+        // Recover rather than panic on a poisoned lock: a panic escaping a
+        // Drop aborts the process; the () payload cannot be inconsistent.
+        let _guard = self.client_lock.lock().unwrap_or_else(|p| p.into_inner());
+        // SAFETY: `client` is dropped exactly once, here, under the lock.
+        unsafe { ManuallyDrop::drop(&mut self.client) };
+    }
 }
 
 /// A compiled executable ready to run.
 pub struct LoadedExec {
-    exe: xla::PjRtLoadedExecutable,
+    /// Manually dropped under `client_lock` (the executable holds a handle
+    /// to the client internally).
+    exe: ManuallyDrop<xla::PjRtLoadedExecutable>,
     /// Whether the program returns a 1-tuple that should be unwrapped
     /// (jax lowers with `return_tuple=True`).
     pub unwrap_tuple: bool,
+    client_lock: Arc<Mutex<()>>,
+}
+
+// SAFETY: see `XlaRuntime` above — every use (and the drop) of the wrapped
+// executable happens under the shared `client_lock`.
+unsafe impl Send for LoadedExec {}
+unsafe impl Sync for LoadedExec {}
+
+impl Drop for LoadedExec {
+    fn drop(&mut self) {
+        // Recover rather than panic on a poisoned lock (see XlaRuntime).
+        let _guard = self.client_lock.lock().unwrap_or_else(|p| p.into_inner());
+        // SAFETY: `exe` is dropped exactly once, here, under the lock.
+        unsafe { ManuallyDrop::drop(&mut self.exe) };
+    }
 }
 
 impl XlaRuntime {
     /// Create a CPU runtime.
     pub fn cpu() -> Result<XlaRuntime> {
         let client = xla::PjRtClient::cpu().map_err(wrap)?;
-        Ok(XlaRuntime { client })
+        Ok(XlaRuntime {
+            client: ManuallyDrop::new(client),
+            client_lock: Arc::new(Mutex::new(())),
+        })
     }
 
     pub fn platform(&self) -> String {
+        let _guard = self.client_lock.lock().expect("client lock poisoned");
         self.client.platform_name()
     }
 
@@ -52,26 +106,44 @@ impl XlaRuntime {
         )
         .map_err(wrap)?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(wrap)?;
-        Ok(LoadedExec { exe, unwrap_tuple: true })
+        let exe = {
+            let _guard = self.client_lock.lock().expect("client lock poisoned");
+            self.client.compile(&comp).map_err(wrap)?
+        };
+        Ok(LoadedExec {
+            exe: ManuallyDrop::new(exe),
+            unwrap_tuple: true,
+            client_lock: self.client_lock.clone(),
+        })
     }
 
     /// Compile a computation built with `XlaBuilder` (segment backend).
     pub fn compile(&self, comp: &xla::XlaComputation) -> Result<LoadedExec> {
-        let exe = self.client.compile(comp).map_err(wrap)?;
-        Ok(LoadedExec { exe, unwrap_tuple: false })
+        let exe = {
+            let _guard = self.client_lock.lock().expect("client lock poisoned");
+            self.client.compile(comp).map_err(wrap)?
+        };
+        Ok(LoadedExec {
+            exe: ManuallyDrop::new(exe),
+            unwrap_tuple: false,
+            client_lock: self.client_lock.clone(),
+        })
     }
 }
 
 impl LoadedExec {
     /// Execute on tensors; returns the output tensors (a tuple output is
-    /// decomposed into its elements).
+    /// decomposed into its elements). Serialized on the runtime-wide client
+    /// lock (see [`XlaRuntime`]) — device buffers are created and destroyed
+    /// inside the guarded region.
     pub fn run(&self, args: &[Tensor]) -> Result<Vec<Tensor>> {
         let literals: Vec<xla::Literal> =
             args.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+        let _guard = self.client_lock.lock().expect("client lock poisoned");
         let result = self.exe.execute::<xla::Literal>(&literals).map_err(wrap)?;
         let mut out = result[0][0].to_literal_sync().map_err(wrap)?;
-        // Decompose tuple outputs.
+        // Decompose tuple outputs (and drop the device buffers) before the
+        // guard releases.
         let shape = out.shape().map_err(wrap)?;
         if shape.is_tuple() {
             let parts = out.decompose_tuple().map_err(wrap)?;

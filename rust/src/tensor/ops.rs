@@ -474,6 +474,54 @@ pub fn sum_to_tail(d: &Tensor, target: &[usize]) -> TResult<Tensor> {
     sum_to(d, &padded)?.reshape(&full)
 }
 
+/// The adjoint of [`sum_to_tail`]: map a cotangent `g` (shaped like
+/// `sum_to_tail`'s result) back to the shape of the original batched
+/// gradient `like` (`[B, pe...]`), keeping the batch axis pinned and
+/// aligning per-example axes on the RIGHT. Where the forward pass reduced
+/// per-example axes, this broadcasts them back; where the forward pass
+/// broadcast a smaller per-example gradient up (the degenerate case), this
+/// sums back down.
+pub fn broadcast_tail(g: &Tensor, like: &[usize]) -> TResult<Tensor> {
+    if g.shape() == like {
+        return Ok(g.clone());
+    }
+    if like.is_empty() {
+        // Forward reshaped a rank-0 gradient; undo the reshape.
+        if g.numel() != 1 {
+            return terr(format!(
+                "broadcast_tail: cannot reduce {:?} to a rank-0 gradient",
+                g.shape()
+            ));
+        }
+        return g.reshape(&[]);
+    }
+    // A scalar or unbatched cotangent (a shared gradient that was never
+    // broadcast — e.g. the 1.0 grad seed flowing straight through): plain
+    // trailing-aligned broadcast is its adjoint, same as the degenerate
+    // cases of sum_to_like.
+    if g.rank() == 0 || g.shape()[0] != like[0] {
+        return broadcast_to(g, like);
+    }
+    let b = like[0];
+    let gpe: Vec<usize> = g.shape()[1..].to_vec();
+    let pe: Vec<usize> = like[1..].to_vec();
+    if gpe.len() <= pe.len() {
+        // Forward reduced per-example axes: broadcast each example back up,
+        // padding with 1s right after the batch axis (trailing alignment).
+        let mut padded = vec![1usize; pe.len() - gpe.len() + 1];
+        padded[0] = b;
+        padded.extend_from_slice(&gpe);
+        broadcast_to(&g.reshape(&padded)?, like)
+    } else {
+        // Forward broadcast a smaller per-example gradient up: sum the
+        // broadcast axes back out, batch axis pinned.
+        let mut padded = vec![1usize; gpe.len() - pe.len() + 1];
+        padded[0] = b;
+        padded.extend_from_slice(&pe);
+        sum_to(g, &padded)?.reshape(like)
+    }
+}
+
 /// Move axis `src` of `a` to position `dst` (both in range), shifting the
 /// axes in between — NumPy's `moveaxis`. Used by `vmap(in_axes)` to
 /// normalize the mapped axis to 0.
@@ -764,6 +812,42 @@ mod tests {
         // rank-0 gradient toward scalar passes through
         assert_eq!(sum_to_tail(&Tensor::scalar_f64(3.0), &[]).unwrap().item().unwrap(), 3.0);
         assert!(sum_to_tail(&Tensor::scalar_f64(3.0), &[2]).is_err());
+    }
+
+    #[test]
+    fn broadcast_tail_inverts_sum_to_tail() {
+        // Adjoint of the reduction above: [2,3] cotangent spreads back over
+        // the per-example axis that was summed, batch axis pinned.
+        let g = t(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let back = broadcast_tail(&g, &[2, 2, 3]).unwrap();
+        assert_eq!(back.shape(), &[2, 2, 3]);
+        assert_eq!(
+            back.as_f64_vec(),
+            vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 4.0, 5.0, 6.0]
+        );
+        // Per-example totals spread over each example's entries.
+        let tot = t(&[6.0, 15.0], &[2]);
+        let spread = broadcast_tail(&tot, &[2, 3]).unwrap();
+        assert_eq!(spread.as_f64_vec(), vec![6.0, 6.0, 6.0, 15.0, 15.0, 15.0]);
+        // Identity when shapes already match.
+        assert_eq!(broadcast_tail(&g, &[2, 3]).unwrap().as_f64_vec(), g.as_f64_vec());
+        // The degenerate forward (broadcast up) reduces back down.
+        let big = t(&[1.0; 12], &[2, 2, 3]);
+        let down = broadcast_tail(&big, &[2, 3]).unwrap();
+        assert_eq!(down.as_f64_vec(), vec![2.0; 6]);
+        // Rank-0 like: undo the reshape.
+        let s = broadcast_tail(&Tensor::from_f64(&[7.0]), &[]).unwrap();
+        assert_eq!(s.rank(), 0);
+        assert_eq!(s.item().unwrap(), 7.0);
+        assert!(broadcast_tail(&g, &[]).is_err());
+        // Scalar / unbatched cotangents (e.g. the 1.0 grad seed) broadcast
+        // with trailing alignment, like sum_to_like's degenerate cases.
+        let sc = broadcast_tail(&Tensor::scalar_f64(1.5), &[2, 3]).unwrap();
+        assert_eq!(sc.as_f64_vec(), vec![1.5; 6]);
+        let row = broadcast_tail(&Tensor::from_f64(&[1.0, 2.0, 3.0]), &[2, 3]).unwrap();
+        assert_eq!(row.as_f64_vec(), vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+        // An incompatible shape still errors.
+        assert!(broadcast_tail(&g, &[4, 5]).is_err());
     }
 
     #[test]

@@ -39,7 +39,7 @@ use anyhow::{anyhow, bail, Result};
 use std::collections::hash_map::DefaultHasher;
 use std::fmt;
 use std::hash::{Hash, Hasher};
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Per-stage compile metrics, collected by the pipeline runner.
@@ -58,7 +58,13 @@ pub struct StageMetrics {
 /// An IR-module-to-IR-module rewrite. Applying a transform may create new
 /// graphs (e.g. the ∇-wrapper) and returns the entry graph the rest of the
 /// pipeline should continue from.
-pub trait Transform {
+///
+/// Transforms are `Send + Sync`: a built [`Pipeline`] is an immutable value
+/// that an [`crate::coordinator::Engine`] may compile from several threads
+/// at once, so its stages must be shareable. Transforms rewrite the module
+/// they are *given* (`&mut Module`) and carry no interior mutability of
+/// their own, so this is a statement of fact, not a new obligation.
+pub trait Transform: Send + Sync {
     /// Short stable name for metrics and progress output.
     fn name(&self) -> &'static str;
 
@@ -258,7 +264,7 @@ enum Stage {
     Vmap { in_axes: Option<Vec<Option<usize>>> },
     Optimize(PassSet),
     Lower(Backend),
-    Custom(Rc<dyn Transform>),
+    Custom(Arc<dyn Transform>),
 }
 
 /// Chains transforms into a validated [`Pipeline`].
@@ -326,7 +332,7 @@ impl PipelineBuilder {
     /// Append a user-defined transform (the escape hatch for passes the
     /// builder has no dedicated method for).
     pub fn transform(mut self, t: impl Transform + 'static) -> Self {
-        self.stages.push(Stage::Custom(Rc::new(t)));
+        self.stages.push(Stage::Custom(Arc::new(t)));
         self
     }
 
@@ -394,14 +400,14 @@ impl PipelineBuilder {
             canon.push(stage);
         }
 
-        let stages: Vec<Rc<dyn Transform>> = canon
+        let stages: Vec<Arc<dyn Transform>> = canon
             .into_iter()
-            .map(|s| -> Rc<dyn Transform> {
+            .map(|s| -> Arc<dyn Transform> {
                 match s {
-                    Stage::Grad { order, wrt } => Rc::new(Grad { order, wrt }),
-                    Stage::ValueAndGrad { wrt } => Rc::new(ValueAndGrad { wrt }),
-                    Stage::Vmap { in_axes } => Rc::new(Vmap { in_axes }),
-                    Stage::Optimize(passes) => Rc::new(Optimize(passes)),
+                    Stage::Grad { order, wrt } => Arc::new(Grad { order, wrt }),
+                    Stage::ValueAndGrad { wrt } => Arc::new(ValueAndGrad { wrt }),
+                    Stage::Vmap { in_axes } => Arc::new(Vmap { in_axes }),
+                    Stage::Optimize(passes) => Arc::new(Optimize(passes)),
                     Stage::Custom(t) => t,
                     Stage::Lower(_) => unreachable!("lowering stages were filtered above"),
                 }
@@ -424,10 +430,11 @@ impl PipelineBuilder {
 
 /// A validated, canonicalized transform pipeline: the unit compilation is
 /// requested in and cached by. Construct with [`Pipeline::builder`] or
-/// [`Pipeline::parse`].
+/// [`Pipeline::parse`]. Pipelines are immutable, `Send + Sync` values —
+/// clone them freely across threads.
 #[derive(Clone)]
 pub struct Pipeline {
-    stages: Vec<Rc<dyn Transform>>,
+    stages: Vec<Arc<dyn Transform>>,
     backend: Backend,
     fingerprint: u64,
     spec: String,
@@ -438,8 +445,7 @@ impl Pipeline {
         PipelineBuilder::new()
     }
 
-    /// The canonical pipeline the old `Options::default()` mapped to:
-    /// standard optimization, lowered to `backend`.
+    /// The default pipeline: standard optimization, lowered to `backend`.
     pub fn standard(backend: Backend) -> Pipeline {
         Pipeline::builder()
             .optimize(PassSet::Standard)
@@ -465,7 +471,7 @@ impl Pipeline {
     }
 
     /// IR-level stages, in execution order (lowering excluded).
-    pub fn stages(&self) -> &[Rc<dyn Transform>] {
+    pub fn stages(&self) -> &[Arc<dyn Transform>] {
         &self.stages
     }
 

@@ -11,7 +11,7 @@
 use super::value::Value;
 use crate::ir::{Const, GraphId, Module, NodeId, Prim};
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Virtual register index within a frame.
 pub type Reg = u32;
@@ -47,9 +47,13 @@ pub struct CodeObject {
 }
 
 /// A compiled program: all graphs reachable from the entry.
+///
+/// A `Program` is a pure compile-time artifact: once built it is never
+/// mutated, so it is `Send + Sync` and can back any number of concurrent
+/// invocations (each carrying its own per-call state).
 #[derive(Debug, Default)]
 pub struct Program {
-    pub codes: Vec<Rc<CodeObject>>,
+    pub codes: Vec<Arc<CodeObject>>,
     pub consts: Vec<Value>,
     pub graph_code: HashMap<GraphId, usize>,
 }
@@ -75,7 +79,7 @@ pub fn compile_program(m: &Module, entry: GraphId) -> Result<Program, CompileErr
     // Reserve code slots first so MakeClosure can forward-reference.
     for &g in &graphs {
         let idx = program.codes.len();
-        program.codes.push(Rc::new(CodeObject {
+        program.codes.push(Arc::new(CodeObject {
             name: String::new(),
             n_params: 0,
             n_captures: 0,
@@ -87,7 +91,7 @@ pub fn compile_program(m: &Module, entry: GraphId) -> Result<Program, CompileErr
     for &g in &graphs {
         let code = compile_graph(m, g, &fv_map, analysis.order_of(g), &mut program)?;
         let idx = program.graph_code[&g];
-        program.codes[idx] = Rc::new(code);
+        program.codes[idx] = Arc::new(code);
     }
     Ok(program)
 }

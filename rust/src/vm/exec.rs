@@ -4,17 +4,26 @@
 //! the tail-recursive loops emitted by the front end (and the deep
 //! backpropagator chains built by reverse-mode AD) run without growing the
 //! native stack.
+//!
+//! Thread safety: the [`Program`] (and the segment table) is immutable once
+//! built — all per-call mutable state (registers, frames, closure
+//! environments) lives in a per-invocation [`CallCtx`] allocated inside
+//! [`Vm::call_value`]. The only shared mutable state in a [`Vm`] is the
+//! statistics accumulator, kept in relaxed atomics so the calling path
+//! takes no locks at all — `&Vm` calls are safe from any number of threads
+//! concurrently.
 
 use super::compile::{CodeObject, Instr, Program, Reg};
 use super::prims::eval_prim;
 use super::value::{Closure, Value};
 use crate::ir::GraphId;
 use anyhow::{anyhow, bail, Result};
-use std::cell::Cell;
-use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
 
 /// A runner for a fused backend segment (installed by the XLA backend).
-pub trait SegmentRunner {
+/// Runners are shared across concurrent invocations, hence `Send + Sync`.
+pub trait SegmentRunner: Send + Sync {
     /// Execute the segment on argument values.
     fn run(&self, args: &[Value]) -> Result<Value>;
     /// Human-readable description (for metrics).
@@ -31,16 +40,65 @@ pub struct ExecStats {
     pub xla_calls: u64,
 }
 
-/// The virtual machine: a compiled program plus backend segment table.
+/// Lock-free statistics accumulator: per-call counters are folded in with
+/// relaxed atomic adds, so concurrent serving threads never contend on a
+/// lock for bookkeeping. Relaxed ordering is sufficient — the counters are
+/// monotone telemetry, not synchronization.
+#[derive(Default)]
+struct StatsCell {
+    instrs: AtomicU64,
+    calls: AtomicU64,
+    prim_calls: AtomicU64,
+    max_depth: AtomicUsize,
+    xla_calls: AtomicU64,
+}
+
+impl StatsCell {
+    fn merge(&self, s: &ExecStats) {
+        self.instrs.fetch_add(s.instrs, Ordering::Relaxed);
+        self.calls.fetch_add(s.calls, Ordering::Relaxed);
+        self.prim_calls.fetch_add(s.prim_calls, Ordering::Relaxed);
+        self.max_depth.fetch_max(s.max_depth, Ordering::Relaxed);
+        self.xla_calls.fetch_add(s.xla_calls, Ordering::Relaxed);
+    }
+
+    fn take(&self) -> ExecStats {
+        ExecStats {
+            instrs: self.instrs.swap(0, Ordering::Relaxed),
+            calls: self.calls.swap(0, Ordering::Relaxed),
+            prim_calls: self.prim_calls.swap(0, Ordering::Relaxed),
+            max_depth: self.max_depth.swap(0, Ordering::Relaxed),
+            xla_calls: self.xla_calls.swap(0, Ordering::Relaxed),
+        }
+    }
+}
+
+/// The virtual machine: an immutable compiled program plus backend segment
+/// table. Calling is `&self` and thread-safe; per-call state lives in a
+/// [`CallCtx`].
 pub struct Vm {
-    pub program: Rc<Program>,
-    pub segments: Vec<Rc<dyn SegmentRunner>>,
+    pub program: Arc<Program>,
+    pub segments: Vec<Arc<dyn SegmentRunner>>,
     pub max_depth: usize,
-    stats: Cell<ExecStats>,
+    stats: StatsCell,
+}
+
+/// Per-invocation mutable state: the frame stack and this call's statistics.
+/// One `CallCtx` is created per [`Vm::call_value`]; nothing in it is shared,
+/// which is what makes concurrent calls on one `Vm` race-free.
+struct CallCtx {
+    stack: Vec<Frame>,
+    stats: ExecStats,
+}
+
+impl CallCtx {
+    fn new() -> CallCtx {
+        CallCtx { stack: Vec::with_capacity(64), stats: ExecStats::default() }
+    }
 }
 
 struct Frame {
-    code: Rc<CodeObject>,
+    code: Arc<CodeObject>,
     regs: Vec<Value>,
     pc: usize,
     /// Register in the *caller's* frame receiving our return value.
@@ -48,7 +106,7 @@ struct Frame {
 }
 
 impl Frame {
-    fn new(code: Rc<CodeObject>, captures: &[Value], args: Vec<Value>, ret_dst: Reg) -> Result<Frame> {
+    fn new(code: Arc<CodeObject>, captures: &[Value], args: Vec<Value>, ret_dst: Reg) -> Result<Frame> {
         if args.len() != code.n_params {
             bail!(
                 "function `{}` expects {} arguments, got {}",
@@ -67,7 +125,12 @@ impl Frame {
 
 impl Vm {
     pub fn new(program: Program) -> Vm {
-        Vm { program: Rc::new(program), segments: Vec::new(), max_depth: 100_000, stats: Cell::new(ExecStats::default()) }
+        Vm {
+            program: Arc::new(program),
+            segments: Vec::new(),
+            max_depth: 100_000,
+            stats: StatsCell::default(),
+        }
     }
 
     /// Statistics accumulated since the last [`Vm::take_stats`].
@@ -86,7 +149,7 @@ impl Vm {
         if code.n_captures != 0 {
             bail!("graph `{}` captures free variables and cannot be an entry point", code.name);
         }
-        Ok(Value::Closure(Rc::new(Closure { code, captures: Vec::new() })))
+        Ok(Value::Closure(Arc::new(Closure { code, captures: Vec::new() })))
     }
 
     /// Call a compiled graph by id.
@@ -96,14 +159,18 @@ impl Vm {
     }
 
     /// Call any function value (closure, primitive, partial application).
+    /// Thread-safe and lock-free: each invocation runs in its own
+    /// [`CallCtx`]; the call's statistics are folded into the shared
+    /// accumulator with relaxed atomic adds on completion.
     pub fn call_value(&self, f: &Value, args: Vec<Value>) -> Result<Value> {
-        let mut stats = self.stats.take();
-        let result = self.run(f, args, &mut stats);
-        self.stats.set(stats);
+        let mut ctx = CallCtx::new();
+        let result = self.run(&mut ctx, f, args);
+        self.stats.merge(&ctx.stats);
         result
     }
 
-    fn run(&self, f: &Value, mut args: Vec<Value>, stats: &mut ExecStats) -> Result<Value> {
+    fn run(&self, ctx: &mut CallCtx, f: &Value, mut args: Vec<Value>) -> Result<Value> {
+        let CallCtx { stack, stats } = ctx;
         // Resolve non-closure callables without a frame.
         let mut func = f.clone();
         loop {
@@ -127,7 +194,6 @@ impl Vm {
             _ => unreachable!(),
         };
 
-        let mut stack: Vec<Frame> = Vec::with_capacity(64);
         stack.push(Frame::new(closure.code.clone(), &closure.captures, args, 0)?);
 
         loop {
@@ -143,7 +209,8 @@ impl Vm {
                     let cap: Vec<Value> =
                         captures.iter().map(|&r| frame.regs[r as usize].clone()).collect();
                     let code = self.program.codes[*code].clone();
-                    frame.regs[*dst as usize] = Value::Closure(Rc::new(Closure { code, captures: cap }));
+                    frame.regs[*dst as usize] =
+                        Value::Closure(Arc::new(Closure { code, captures: cap }));
                 }
                 Instr::CallPrim { dst, prim, args } => {
                     stats.prim_calls += 1;

@@ -9,7 +9,7 @@ use super::value::{EnvMap, PartialApp, Value};
 use crate::ir::Prim;
 use crate::tensor::{ops, DType, Rng, Tensor};
 use anyhow::{anyhow, bail, Result};
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Evaluate a primitive on argument values.
 pub fn eval_prim(p: Prim, args: &[Value]) -> Result<Value> {
@@ -73,7 +73,7 @@ pub fn eval_prim(p: Prim, args: &[Value]) -> Result<Value> {
             Ok(Value::tuple(items))
         }
         IsNil => Ok(Value::Bool(matches!(args[0], Value::Unit))),
-        NewEnv => Ok(Value::Env(Rc::new(EnvMap::new()))),
+        NewEnv => Ok(Value::Env(Arc::new(EnvMap::new()))),
         EnvSetItem => {
             let mut env: EnvMap = match &args[0] {
                 Value::Env(e) => (**e).clone(),
@@ -85,7 +85,7 @@ pub fn eval_prim(p: Prim, args: &[Value]) -> Result<Value> {
                 other => bail!("env_setitem expects key, got {}", other.type_name()),
             };
             env.insert(key, args[2].clone());
-            Ok(Value::Env(Rc::new(env)))
+            Ok(Value::Env(Arc::new(env)))
         }
         EnvGetItem => {
             let key = match &args[1] {
@@ -223,6 +223,16 @@ pub fn eval_prim(p: Prim, args: &[Value]) -> Result<Value> {
             };
             Ok(Value::Tensor(ops::sum_to_tail(&d, &target).map_err(err)?))
         }
+        BroadcastTail => {
+            // Adjoint of sum_to_tail: spread/reduce `g` back to the shape of
+            // the original batched gradient (`like`), batch axis pinned.
+            let g = need_tensor(&args[0], "broadcast_tail")?;
+            let like: Vec<usize> = match &args[1] {
+                Value::Tensor(t) => t.shape().to_vec(),
+                _ => Vec::new(),
+            };
+            Ok(Value::Tensor(ops::broadcast_tail(&g, &like).map_err(err)?))
+        }
         MoveAxis => {
             let a = need_tensor(&args[0], "move_axis")?;
             let src = args[1].as_i64().ok_or_else(|| anyhow!("move_axis src axis"))? as usize;
@@ -257,7 +267,7 @@ pub fn eval_prim(p: Prim, args: &[Value]) -> Result<Value> {
             };
             Ok(Value::Tensor(t))
         }
-        Partial => Ok(Value::Partial(Rc::new(PartialApp {
+        Partial => Ok(Value::Partial(Arc::new(PartialApp {
             func: args[0].clone(),
             bound: vec![args[1].clone()],
         }))),
@@ -289,7 +299,10 @@ fn zerot_shortcut(p: Prim, args: &[Value]) -> Result<Option<Value>> {
         // Shape ops on a zero cotangent stay zero.
         Reshape | BroadcastTo | SumTo | TupleGetItem if z(0) => Some(Value::ZeroT),
         // The batching kernels are linear in their data operand.
-        SumTail | BroadcastLead | SumToLead | SumToTail | MoveAxis | BroadcastBatch if z(0) => {
+        SumTail | BroadcastLead | SumToLead | SumToTail | BroadcastTail | MoveAxis
+        | BroadcastBatch
+            if z(0) =>
+        {
             Some(Value::ZeroT)
         }
         BatchMatMul if z(0) || z(1) => Some(Value::ZeroT),
@@ -307,7 +320,7 @@ fn flag_arg(v: &Value, what: &str) -> Result<bool> {
     }
 }
 
-fn as_tuple<'v>(v: &'v Value, what: &str) -> Result<&'v Rc<Vec<Value>>> {
+fn as_tuple<'v>(v: &'v Value, what: &str) -> Result<&'v Arc<Vec<Value>>> {
     match v {
         Value::Tuple(items) => Ok(items),
         other => bail!("{what} expects a tuple, got {}", other.type_name()),
@@ -603,7 +616,7 @@ pub fn gadd(a: &Value, b: &Value) -> Result<Value> {
                 };
                 out.insert(*k, merged);
             }
-            Ok(Value::Env(Rc::new(out)))
+            Ok(Value::Env(Arc::new(out)))
         }
         _ => numeric_binop(Prim::Add, a, b)
             .map_err(|_| anyhow!("gadd cannot combine {} and {}", a.type_name(), b.type_name())),
@@ -620,8 +633,8 @@ pub fn zeros_like(x: &Value) -> Value {
         Value::Tuple(items) => Value::tuple(items.iter().map(zeros_like).collect()),
         // The gradient of a function value is an env of free-variable
         // gradients; its zero is the empty env.
-        Value::Closure(_) | Value::Prim(_) | Value::Partial(_) => Value::Env(Rc::new(EnvMap::new())),
-        Value::Env(_) => Value::Env(Rc::new(EnvMap::new())),
+        Value::Closure(_) | Value::Prim(_) | Value::Partial(_) => Value::Env(Arc::new(EnvMap::new())),
+        Value::Env(_) => Value::Env(Arc::new(EnvMap::new())),
         Value::Unit | Value::Str(_) | Value::Key(_) => Value::Unit,
         Value::ZeroT => Value::ZeroT,
     }
@@ -742,7 +755,7 @@ mod tests {
         let mut m2 = EnvMap::new();
         m2.insert(1, Value::F64(2.0));
         m2.insert(2, Value::F64(9.0));
-        let merged = gadd(&Value::Env(Rc::new(m1)), &Value::Env(Rc::new(m2))).unwrap();
+        let merged = gadd(&Value::Env(Arc::new(m1)), &Value::Env(Arc::new(m2))).unwrap();
         match merged {
             Value::Env(e) => {
                 assert!(matches!(e[&1], Value::F64(v) if v == 3.0));
@@ -830,6 +843,15 @@ mod tests {
         // sum_to_tail toward a scalar target
         let st = ev(Prim::SumToTail, &[x.clone(), Value::F64(0.0)]);
         assert!(matches!(&st, Value::Tensor(t) if t.as_f64_vec() == vec![6.0, 15.0]));
+        // broadcast_tail undoes it: per-example scalars spread over each
+        // example's entries (batch axis pinned).
+        let bt = ev(Prim::BroadcastTail, &[st.clone(), x.clone()]);
+        assert!(matches!(
+            &bt,
+            Value::Tensor(t) if t.shape() == [2, 3]
+                && t.as_f64_vec() == vec![6.0, 6.0, 6.0, 15.0, 15.0, 15.0]
+        ));
+        assert!(matches!(ev(Prim::BroadcastTail, &[Value::ZeroT, x.clone()]), Value::ZeroT));
         // ZeroT absorbs
         assert!(matches!(ev(Prim::SumTail, &[Value::ZeroT]), Value::ZeroT));
         assert!(matches!(

@@ -4,12 +4,17 @@
 //! tensors, tuples, first-class functions (closures and primitives), and the
 //! AD environment values of §3.2. `ZeroT` is the symbolic zero tangent — the
 //! additive identity of `gadd` — which keeps never-used gradient paths free.
+//!
+//! Values are `Send + Sync`: the language is purely functional (§3), so a
+//! value is never mutated after construction and all shared ownership goes
+//! through `Arc`. This is what lets one compiled [`crate::coordinator::Executable`]
+//! be called from any number of threads at once.
 
 use crate::ir::Prim;
 use crate::tensor::{DType, Tensor};
 use std::collections::HashMap;
 use std::fmt;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use super::compile::CodeObject;
 
@@ -20,7 +25,7 @@ pub type EnvMap = HashMap<u64, Value>;
 /// the graph's total free variables).
 #[derive(Debug)]
 pub struct Closure {
-    pub code: Rc<CodeObject>,
+    pub code: Arc<CodeObject>,
     pub captures: Vec<Value>,
 }
 
@@ -38,24 +43,24 @@ pub enum Value {
     F64(f64),
     I64(i64),
     Bool(bool),
-    Str(Rc<String>),
+    Str(Arc<String>),
     Tensor(Tensor),
-    Tuple(Rc<Vec<Value>>),
-    Closure(Rc<Closure>),
+    Tuple(Arc<Vec<Value>>),
+    Closure(Arc<Closure>),
     Prim(Prim),
-    Partial(Rc<PartialApp>),
-    Env(Rc<EnvMap>),
+    Partial(Arc<PartialApp>),
+    Env(Arc<EnvMap>),
     Key(u64),
     ZeroT,
 }
 
 impl Value {
     pub fn tuple(items: Vec<Value>) -> Value {
-        Value::Tuple(Rc::new(items))
+        Value::Tuple(Arc::new(items))
     }
 
     pub fn str(s: impl Into<String>) -> Value {
-        Value::Str(Rc::new(s.into()))
+        Value::Str(Arc::new(s.into()))
     }
 
     /// Type name for error messages.

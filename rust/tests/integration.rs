@@ -3,7 +3,7 @@
 //! node-count collapse.
 
 use myia::baselines::tape;
-use myia::coordinator::Session;
+use myia::coordinator::Engine;
 use myia::opt::PassSet;
 use myia::vm::Value;
 
@@ -28,7 +28,7 @@ def main(x):
 def handwritten(x):
     return 3.0 * x ** 2.0
 ";
-    let mut s = Session::from_source(src).unwrap();
+    let s = Engine::from_source(src).unwrap();
     let auto = s.trace("main").unwrap().compile().unwrap();
     let hand = s.trace("handwritten").unwrap().compile().unwrap();
 
@@ -68,7 +68,7 @@ def f(x):
 def main(x):
     return grad(f)(x)
 ";
-    let mut s = Session::from_source(src).unwrap();
+    let s = Engine::from_source(src).unwrap();
     let st = f64v(&s.trace("main").unwrap().compile().unwrap().call(vec![Value::F64(x0)]).unwrap());
     assert!((st - want).abs() < 1e-12, "ST {st} vs analytic {want}");
 
@@ -88,7 +88,7 @@ def f(x):
 def main(x, dx):
     return jfwd(f)(x, dx)
 ";
-    let mut s2 = Session::from_source(src_f).unwrap();
+    let s2 = Engine::from_source(src_f).unwrap();
     let out = s2
         .trace("main")
         .unwrap()
@@ -117,7 +117,7 @@ def model(x):
 def main(x):
     return grad(model)(x)
 ";
-    let mut s = Session::from_source(src).unwrap();
+    let s = Engine::from_source(src).unwrap();
     let g = s.trace("main").unwrap().compile().unwrap();
     let f = s.trace("model").unwrap().compile().unwrap();
     for x0 in [0.2, 0.9, -0.7] {
@@ -148,7 +148,7 @@ def loss(x):
 def main(x):
     return grad(loss)(x)
 ";
-    let mut s = Session::from_source(src).unwrap();
+    let s = Engine::from_source(src).unwrap();
     let g = s.trace("main").unwrap().compile().unwrap();
     let f = s.trace("loss").unwrap().compile().unwrap();
     let x0 = 0.3;
@@ -180,9 +180,9 @@ def main(w, x):
     let x = Value::Tensor(
         myia::tensor::Tensor::from_f64_shaped(vec![1.0, 0.5, -0.5, 0.2], vec![2, 2]).unwrap(),
     );
-    let mut s1 = Session::from_source(src).unwrap();
+    let s1 = Engine::from_source(src).unwrap();
     let opt = s1.trace("main").unwrap().compile().unwrap();
-    let mut s2 = Session::from_source(src).unwrap();
+    let s2 = Engine::from_source(src).unwrap();
     let unopt = s2.trace("main").unwrap().optimize(PassSet::None).compile().unwrap();
     let a = opt.call(vec![w.clone(), x.clone()]).unwrap();
     let b = unopt.call(vec![w, x]).unwrap();
@@ -193,7 +193,7 @@ def main(w, x):
 #[test]
 fn eager_shape_errors_before_execution() {
     let src = "def f(a, b):\n    return matmul(a, b)\n";
-    let s = Session::from_source(src).unwrap();
+    let s = Engine::from_source(src).unwrap();
     let a = Value::Tensor(myia::tensor::Tensor::zeros(myia::tensor::DType::F64, &[2, 3]));
     let b = Value::Tensor(myia::tensor::Tensor::zeros(myia::tensor::DType::F64, &[4, 5]));
     let e = s.check_call("f", &[a, b]).unwrap_err();

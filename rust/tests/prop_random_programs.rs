@@ -8,13 +8,13 @@
 //! 3. forward and reverse mode agree with each other;
 //! 4. the compile pipeline never panics on generated programs.
 
-use myia::coordinator::Session;
+use myia::coordinator::Engine;
 use myia::opt::PassSet;
 use myia::ptest::{self, Expr};
 use myia::vm::Value;
 
 fn eval(src: &str, entry: &str, optimize: bool, x: f64) -> Result<f64, String> {
-    let mut s = Session::from_source(src).map_err(|e| e.to_string())?;
+    let s = Engine::from_source(src).map_err(|e| e.to_string())?;
     let passes = if optimize { PassSet::Standard } else { PassSet::None };
     let f = s
         .trace(entry)

@@ -1,0 +1,171 @@
+//! Thread-safety of the compile/run split: one `Arc<Executable>` hammered
+//! by ≥8 threads must produce results bit-identical to a single-threaded
+//! oracle, for both a grad pipeline and an XLA-lowered pipeline (whose lazy
+//! per-shape segment cache is exercised concurrently).
+//!
+//! Run with `RUST_TEST_THREADS` unpinned so scheduling varies across runs —
+//! these tests spawn their own threads and must pass under any
+//! interleaving.
+
+use myia::backend::Backend;
+use myia::coordinator::{Engine, Executable};
+use myia::tensor::Tensor;
+use myia::transform::Pipeline;
+use myia::vm::{Program, Value};
+use std::sync::Arc;
+
+const THREADS: usize = 8;
+
+/// Compile-time `Send + Sync` assertions: if any of these types loses
+/// thread-safety (an `Rc`, a `RefCell`, a raw pointer without a SAFETY
+/// argument), this test stops compiling.
+#[test]
+fn executable_program_and_value_are_send_sync() {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Executable>();
+    assert_send_sync::<Arc<Executable>>();
+    assert_send_sync::<Program>();
+    assert_send_sync::<Value>();
+    assert_send_sync::<Engine>();
+    assert_send_sync::<Pipeline>();
+}
+
+/// Deterministic, per-thread-distinct scalar inputs.
+fn thread_inputs(thread: usize, n: usize) -> Vec<f64> {
+    (0..n).map(|i| 0.013 * (thread * n + i) as f64 - 1.3).collect()
+}
+
+fn scalar_bits(v: &Value) -> u64 {
+    match v {
+        Value::F64(x) => x.to_bits(),
+        Value::Tensor(t) => t.item().expect("scalar result").to_bits(),
+        other => panic!("expected scalar result, got {other}"),
+    }
+}
+
+#[test]
+fn eight_threads_on_one_grad_executable_match_sequential_oracle() {
+    let src = "def f(x):\n    return sin(x) * exp(x) + tanh(x * x)\n";
+    let e = Engine::from_source(src).unwrap();
+    let f: Arc<Executable> = e.trace("f").unwrap().grad().compile().unwrap();
+
+    let n = 200;
+    // Single-threaded oracle first (exact f64 bits).
+    let oracle: Vec<Vec<u64>> = (0..THREADS)
+        .map(|t| {
+            thread_inputs(t, n)
+                .into_iter()
+                .map(|x| scalar_bits(&f.call(vec![Value::F64(x)]).unwrap()))
+                .collect()
+        })
+        .collect();
+
+    let results: Vec<Vec<u64>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let f = f.clone();
+                s.spawn(move || {
+                    thread_inputs(t, n)
+                        .into_iter()
+                        .map(|x| scalar_bits(&f.call(vec![Value::F64(x)]).unwrap()))
+                        .collect::<Vec<u64>>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for (t, (got, want)) in results.iter().zip(&oracle).enumerate() {
+        assert_eq!(got, want, "thread {t}: concurrent grad results diverged from oracle");
+    }
+}
+
+#[test]
+fn eight_threads_on_one_xla_executable_match_sequential_oracle() {
+    // Straight-line tensor program: lowers to an XLA segment whose lazy
+    // per-shape cache is populated under concurrency (two distinct shapes,
+    // so the RwLock'd signature cache sees real contention).
+    let src = "def f(a, b):\n    return exp(a) * tanh(b) + a\n";
+    let e = Engine::from_source(src).unwrap();
+    let f: Arc<Executable> =
+        e.trace("f").unwrap().jit(Backend::Xla).compile().unwrap();
+    assert!(f.metrics.xla_segments >= 1, "expected at least one XLA segment");
+
+    let arg = |t: usize, i: usize| -> Vec<Value> {
+        let len = if (t + i) % 2 == 0 { 3 } else { 7 };
+        let a: Vec<f64> = (0..len).map(|k| 0.1 * (t + k) as f64).collect();
+        let b: Vec<f64> = (0..len).map(|k| 0.2 * (i + k) as f64 - 0.5).collect();
+        vec![
+            Value::Tensor(Tensor::from_f64(&a)),
+            Value::Tensor(Tensor::from_f64(&b)),
+        ]
+    };
+    let bits = |v: &Value| -> Vec<u64> {
+        v.as_tensor()
+            .expect("tensor result")
+            .as_f64_vec()
+            .into_iter()
+            .map(f64::to_bits)
+            .collect()
+    };
+
+    let n = 60;
+    let oracle: Vec<Vec<Vec<u64>>> = (0..THREADS)
+        .map(|t| (0..n).map(|i| bits(&f.call(arg(t, i)).unwrap())).collect())
+        .collect();
+
+    let results: Vec<Vec<Vec<u64>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let f = f.clone();
+                s.spawn(move || {
+                    (0..n)
+                        .map(|i| bits(&f.call(arg(t, i)).unwrap()))
+                        .collect::<Vec<Vec<u64>>>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for (t, (got, want)) in results.iter().zip(&oracle).enumerate() {
+        assert_eq!(got, want, "thread {t}: concurrent XLA results diverged from oracle");
+    }
+}
+
+#[test]
+fn mixed_pipelines_share_one_engine_across_threads() {
+    // Different threads compile *and* run different pipelines against one
+    // shared engine: the sharded artifact cache plus independent
+    // executables must never interfere.
+    let src = "\
+def f(x):
+    return x ** 3.0
+
+def g(x):
+    return sin(x) + x * x
+";
+    let e = Engine::from_source(src).unwrap();
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let e = &e;
+            s.spawn(move || {
+                let (name, deriv): (&str, Box<dyn Fn(f64) -> f64>) = if t % 2 == 0 {
+                    ("f", Box::new(|x| 3.0 * x * x))
+                } else {
+                    ("g", Box::new(|x| x.cos() + 2.0 * x))
+                };
+                let exe = e.trace(name).unwrap().grad().compile().unwrap();
+                for i in 0..50 {
+                    let x = 0.05 * (i as f64) - 1.0;
+                    let got = exe.call(vec![Value::F64(x)]).unwrap().as_f64().unwrap();
+                    assert!(
+                        (got - deriv(x)).abs() < 1e-9,
+                        "thread {t} ({name}) at {x}: {got} vs {}",
+                        deriv(x)
+                    );
+                }
+            });
+        }
+    });
+}

@@ -6,11 +6,11 @@
 //! variables." These tests apply `grad` up to three deep and compare against
 //! closed forms. The tape baseline cannot do this at all (§2.1.2).
 
-use myia::coordinator::Session;
+use myia::coordinator::Engine;
 use myia::vm::Value;
 
 fn run1(src: &str, x: f64) -> f64 {
-    let mut s = Session::from_source(src).unwrap();
+    let s = Engine::from_source(src).unwrap();
     let f = s.trace("main").unwrap().compile().unwrap();
     match f.call(vec![Value::F64(x)]).unwrap() {
         Value::F64(v) => v,

@@ -9,14 +9,14 @@
 use myia::prelude::*;
 use myia::tensor::DType;
 use myia::types::AType;
-use std::rc::Rc;
+use std::sync::Arc;
 
 const CUBIC: &str = "def f(x):\n    return x ** 3.0\n";
 
 #[test]
 fn second_order_grad_matches_analytic() {
     // f = x³ → f'' = 6x, via reverse-over-reverse as a composed pipeline.
-    let mut s = Session::from_source(CUBIC).unwrap();
+    let s = Engine::from_source(CUBIC).unwrap();
     let d2 = s.trace("f").unwrap().grad().grad().compile().unwrap();
     for x in [0.5, 2.0, -1.25] {
         let got = d2.call(vec![Value::F64(x)]).unwrap().as_f64().unwrap();
@@ -30,7 +30,7 @@ fn second_order_grad_matches_analytic() {
 #[test]
 fn third_order_grad_matches_analytic() {
     // f = x³ → f''' = 6.
-    let mut s = Session::from_source(CUBIC).unwrap();
+    let s = Engine::from_source(CUBIC).unwrap();
     let d3 = s.trace("f").unwrap().grad().grad().grad().compile().unwrap();
     let got = d3.call(vec![Value::F64(1.7)]).unwrap().as_f64().unwrap();
     assert!((got - 6.0).abs() < 1e-6, "{got}");
@@ -38,7 +38,7 @@ fn third_order_grad_matches_analytic() {
 
 #[test]
 fn same_pipeline_built_three_ways_hits_cache() {
-    let mut s = Session::from_source(CUBIC).unwrap();
+    let s = Engine::from_source(CUBIC).unwrap();
     // 1. the Function chain: two .grad() calls merge to grad^2.
     let a = s.trace("f").unwrap().grad().grad().compile().unwrap();
     // 2. an explicit builder pipeline with Grad { order: 2 }.
@@ -52,14 +52,14 @@ fn same_pipeline_built_three_ways_hits_cache() {
     // 3. the parsed CLI spec.
     let q = Pipeline::parse("grad^2,opt=standard,vm").unwrap();
     let c = s.compile_pipeline("f", &q).unwrap();
-    assert!(Rc::ptr_eq(&a, &b), "builder pipeline must hit the chain's cache entry");
-    assert!(Rc::ptr_eq(&a, &c), "parsed pipeline must hit the chain's cache entry");
+    assert!(Arc::ptr_eq(&a, &b), "builder pipeline must hit the chain's cache entry");
+    assert!(Arc::ptr_eq(&a, &c), "parsed pipeline must hit the chain's cache entry");
     assert_eq!(a.metrics.pipeline, "grad^2,opt=standard,vm");
 }
 
 #[test]
 fn differing_pass_sets_and_grad_orders_miss() {
-    let mut s = Session::from_source(CUBIC).unwrap();
+    let s = Engine::from_source(CUBIC).unwrap();
     let full = s.trace("f").unwrap().grad().compile().unwrap();
     let ablated = s
         .trace("f")
@@ -70,9 +70,9 @@ fn differing_pass_sets_and_grad_orders_miss() {
         .unwrap();
     let unopt = s.trace("f").unwrap().grad().optimize(PassSet::None).compile().unwrap();
     let second = s.trace("f").unwrap().grad().grad().compile().unwrap();
-    assert!(!Rc::ptr_eq(&full, &ablated));
-    assert!(!Rc::ptr_eq(&full, &unopt));
-    assert!(!Rc::ptr_eq(&full, &second));
+    assert!(!Arc::ptr_eq(&full, &ablated));
+    assert!(!Arc::ptr_eq(&full, &unopt));
+    assert!(!Arc::ptr_eq(&full, &second));
     // All first-order variants still agree on the derivative.
     for f in [&full, &ablated, &unopt] {
         let got = f.call(vec![Value::F64(2.0)]).unwrap().as_f64().unwrap();
@@ -85,7 +85,7 @@ fn grad_wrt_selects_the_parameter() {
     // f(x, y) = x·y² : ∂f/∂x = y², ∂f/∂y = 2xy. The CLI `grad` subcommand
     // rides on exactly this path, so multi-argument entry points work.
     let src = "def f(x, y):\n    return x * y * y\n";
-    let mut s = Session::from_source(src).unwrap();
+    let s = Engine::from_source(src).unwrap();
     let dx = s.trace("f").unwrap().grad_wrt(0).compile().unwrap();
     let dy = s.trace("f").unwrap().grad_wrt(1).compile().unwrap();
     let args = vec![Value::F64(3.0), Value::F64(2.0)];
@@ -94,19 +94,19 @@ fn grad_wrt_selects_the_parameter() {
     assert!((gx - 4.0).abs() < 1e-12, "∂f/∂x: {gx}");
     assert!((gy - 12.0).abs() < 1e-12, "∂f/∂y: {gy}");
     // Different wrt = different pipeline = different cache entry.
-    assert!(!Rc::ptr_eq(&dx, &dy));
+    assert!(!Arc::ptr_eq(&dx, &dy));
 }
 
 #[test]
 fn grad_wrt_out_of_range_is_reported() {
-    let mut s = Session::from_source(CUBIC).unwrap();
+    let s = Engine::from_source(CUBIC).unwrap();
     let e = s.trace("f").unwrap().grad_wrt(3).compile().unwrap_err();
     assert!(format!("{e}").contains("out of range"), "{e}");
 }
 
 #[test]
 fn value_and_grad_transform_shares_the_forward_pass() {
-    let mut s = Session::from_source(CUBIC).unwrap();
+    let s = Engine::from_source(CUBIC).unwrap();
     let vg = s.trace("f").unwrap().value_and_grad().compile().unwrap();
     match vg.call(vec![Value::F64(2.0)]).unwrap() {
         Value::Tuple(items) => {
@@ -119,14 +119,14 @@ fn value_and_grad_transform_shares_the_forward_pass() {
 
 #[test]
 fn argument_signature_joins_the_cache_key() {
-    let mut s = Session::from_source("def f(x):\n    return x + 1.0\n").unwrap();
+    let s = Engine::from_source("def f(x):\n    return x + 1.0\n").unwrap();
     let generic = s.trace("f").unwrap().compile().unwrap();
     let spec = s.trace("f").unwrap().specialize(vec![AType::F64]).compile().unwrap();
     let spec_again = s.trace("f").unwrap().specialize(vec![AType::F64]).compile().unwrap();
     // Same pipeline, different signature → different artifact; repeating
     // the signature hits the specialized entry.
-    assert!(!Rc::ptr_eq(&generic, &spec));
-    assert!(Rc::ptr_eq(&spec, &spec_again));
+    assert!(!Arc::ptr_eq(&generic, &spec));
+    assert!(Arc::ptr_eq(&spec, &spec_again));
     assert_eq!(spec.signature.as_deref(), Some(&[AType::F64][..]));
     assert!(spec.ret_type.is_some(), "specialized compile infers a return type");
     assert!(generic.ret_type.is_none());
@@ -137,7 +137,7 @@ fn specialization_checks_shapes_eagerly() {
     // Incompatible matmul shapes are rejected at compile time (§4.2), not
     // at the first call.
     let src = "def g(a, b):\n    return matmul(a, b)\n";
-    let mut s = Session::from_source(src).unwrap();
+    let s = Engine::from_source(src).unwrap();
     let bad = vec![
         AType::Tensor { dtype: DType::F64, shape: vec![Some(2), Some(3)] },
         AType::Tensor { dtype: DType::F64, shape: vec![Some(4), Some(5)] },
@@ -148,7 +148,7 @@ fn specialization_checks_shapes_eagerly() {
 
 #[test]
 fn function_pipeline_reports_canonical_spec() {
-    let mut s = Session::from_source(CUBIC).unwrap();
+    let s = Engine::from_source(CUBIC).unwrap();
     let f = s.trace("f").unwrap().grad().jit(Backend::Xla);
     let p = f.pipeline().unwrap();
     assert_eq!(p.spec(), "grad,opt=standard,xla");

@@ -5,7 +5,7 @@
 //! per-example finite differences, both composition orders, and the
 //! pipeline-spec surface.
 
-use myia::coordinator::Session;
+use myia::coordinator::Engine;
 use myia::ptest::{self, Expr};
 use myia::tensor::Tensor;
 use myia::transform::Pipeline;
@@ -32,7 +32,7 @@ fn vmap_agrees_with_stacked_loop_on_random_programs() {
         let src = format!("def f(x):\n    return {expr}\n");
         let batch = 1 + rng.below(5);
         let xs: Vec<f64> = (0..batch).map(|_| ptest::gen_value(rng)).collect();
-        let mut s = Session::from_source(&src).map_err(|e| e.to_string())?;
+        let s = Engine::from_source(&src).map_err(|e| e.to_string())?;
         let vf = s
             .trace("f")
             .map_err(|e| e.to_string())?
@@ -60,7 +60,7 @@ fn vmap_of_grad_matches_per_example_finite_differences() {
     ptest::check_exprs(ptest::Config { cases: 15, seed: 0x5EED }, 3, |expr, rng| {
         let src = format!("def f(x):\n    return {expr}\n");
         let xs: Vec<f64> = (0..4).map(|_| ptest::gen_value(rng)).collect();
-        let mut s = Session::from_source(&src).map_err(|e| e.to_string())?;
+        let s = Engine::from_source(&src).map_err(|e| e.to_string())?;
         // grad then vmap: per-example derivatives, one compiled artifact.
         let pg = s
             .trace("f")
@@ -97,7 +97,7 @@ fn grad_of_vmap_gives_per_example_derivatives_for_elementwise_programs() {
     // program is elementwise across examples the cross terms vanish — the
     // gradient is again the per-example derivative vector.
     let src = "def f(x):\n    return x * x + sin(x)\n";
-    let mut s = Session::from_source(src).unwrap();
+    let s = Engine::from_source(src).unwrap();
     let g = s.trace("f").unwrap().vmap().grad().compile().unwrap();
     let xs = [0.3, -1.2, 2.0];
     let out = g.call(vec![Value::Tensor(Tensor::from_f64(&xs))]).unwrap();
@@ -118,7 +118,7 @@ def loss(w, x, y):
     d = item(sum(x * w)) - y
     return d * d
 ";
-    let mut s = Session::from_source(src).unwrap();
+    let s = Engine::from_source(src).unwrap();
     let per_sample = s
         .trace("loss")
         .unwrap()
@@ -163,10 +163,90 @@ def loss(w, x, y):
 }
 
 #[test]
+fn grad_through_vmapped_adjoint_matches_finite_differences() {
+    // Differentiate THROUGH the vmapped adjoint: the `grad,vmap@n.0.0`
+    // pipeline emits `sum_to_tail` (the batched sum_to_like toward the
+    // shared weights), so a further `grad` stage needs sum_to_tail's
+    // backpropagator — formerly "honestly unsupported", now implemented via
+    // `broadcast_tail`. Oracle: central finite differences of the summed
+    // per-sample-gradient output.
+    let src = "\
+def loss(w, x, y):
+    d = item(sum(x * w)) - y
+    return d * d
+";
+    let s = Engine::from_source(src).unwrap();
+    let per_sample = s
+        .trace("loss")
+        .unwrap()
+        .grad()
+        .vmap_axes(vec![None, Some(0), Some(0)])
+        .compile()
+        .unwrap();
+    let through = s
+        .trace("loss")
+        .unwrap()
+        .grad()
+        .vmap_axes(vec![None, Some(0), Some(0)])
+        .grad()
+        .compile()
+        .unwrap();
+    assert_eq!(through.metrics.pipeline, "grad,vmap@n.0.0,grad,opt=standard,vm");
+
+    let w = [0.5, -1.0, 2.0];
+    let xs = Tensor::from_f64_shaped(
+        vec![1.0, 0.0, 1.0, 0.0, 2.0, -1.0, 1.0, 1.0, 1.0, -2.0, 0.5, 0.0],
+        vec![4, 3],
+    )
+    .unwrap();
+    let ys = Tensor::from_f64(&[1.0, -2.0, 0.5, 3.0]);
+
+    // S(w) = Σ over all entries of the stacked per-sample gradients; the
+    // scalar grad seed broadcasts over the [B, 3] output, so the second
+    // grad computes ∇S.
+    let total = |wv: &[f64]| -> f64 {
+        per_sample
+            .call(vec![
+                Value::Tensor(Tensor::from_f64(wv)),
+                Value::Tensor(xs.clone()),
+                Value::Tensor(ys.clone()),
+            ])
+            .unwrap()
+            .as_tensor()
+            .unwrap()
+            .as_f64_vec()
+            .iter()
+            .sum()
+    };
+    let got = through
+        .call(vec![
+            Value::Tensor(Tensor::from_f64(&w)),
+            Value::Tensor(xs.clone()),
+            Value::Tensor(ys.clone()),
+        ])
+        .unwrap();
+    let got = got.as_tensor().unwrap().as_f64_vec();
+    assert_eq!(got.len(), 3);
+    let eps = 1e-5;
+    for k in 0..3 {
+        let mut up = w.to_vec();
+        up[k] += eps;
+        let mut down = w.to_vec();
+        down[k] -= eps;
+        let fd = (total(&up) - total(&down)) / (2.0 * eps);
+        assert!(
+            (got[k] - fd).abs() < 1e-6,
+            "component {k}: grad-through-vmap {} vs finite difference {fd}",
+            got[k]
+        );
+    }
+}
+
+#[test]
 fn vmap_pipeline_spec_end_to_end() {
     // The CLI surface: a parsed `--pipeline` spec with a vmap stage.
     let src = "def f(x, s):\n    return tanh(x) * s\n";
-    let mut s = Session::from_source(src).unwrap();
+    let s = Engine::from_source(src).unwrap();
     let p = Pipeline::parse("vmap@0.n,opt=standard,vm").unwrap();
     assert_eq!(p.spec(), "vmap@0.n,opt=standard,vm");
     let f = s.compile_pipeline("f", &p).unwrap();
@@ -196,7 +276,7 @@ def f(x):
         i = i + 1
     return acc
 ";
-    let mut s = Session::from_source(src).unwrap();
+    let s = Engine::from_source(src).unwrap();
     let vf = s.trace("f").unwrap().vmap().compile().unwrap();
     let xs = [0.9, -0.3, 1.1, 0.0];
     let got = as_vec(&vf.call(vec![Value::Tensor(Tensor::from_f64(&xs))]).unwrap()).unwrap();
@@ -210,7 +290,7 @@ def f(x):
 #[test]
 fn vmap_rejects_data_dependent_branches_with_clear_error() {
     let src = "def f(x):\n    return x if x > 0.0 else -x\n";
-    let mut s = Session::from_source(src).unwrap();
+    let s = Engine::from_source(src).unwrap();
     let e = s.trace("f").unwrap().vmap().compile().unwrap_err();
     assert!(format!("{e}").contains("data-dependent"), "{e}");
 }
