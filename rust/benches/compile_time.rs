@@ -1,9 +1,18 @@
 //! E7 (§2.1.2): ST pays its cost once, at compile time. Measures pipeline
 //! latency (parse/lower, grad expansion, optimization, codegen) vs program
-//! size, and the break-even call count against OO tracing.
+//! size, and — the headline for the worklist middle-end — optimization wall
+//! time on the MLP `value_and_grad` adjoint under the incremental worklist
+//! driver vs the emulated old full-rescan fixpoint loop, with per-pass
+//! worklist visits as evidence. Writes `BENCH_compile.json` at the
+//! repository root. Set `BENCH_QUICK=1` for the CI quick mode.
 
+use myia::ad::{expand_grad, expand_macros, GradSpec};
 use myia::bench::Bencher;
+use myia::coordinator::mlp::MLP_SOURCE;
 use myia::coordinator::Engine;
+use myia::ir::{analyze, GraphId, Module};
+use myia::opt::PassManager;
+use myia::parser::compile_source;
 use myia::vm::Value;
 use std::time::Instant;
 
@@ -15,13 +24,67 @@ fn chain_program(n: usize) -> String {
     format!("def f(x):\n{body}    return acc\n\ndef main(x):\n    return grad(f)(x)\n")
 }
 
+/// The grad-expanded (unoptimized) MLP `value_and_grad` module — the input
+/// both optimizer arms start from.
+fn mlp_adjoint_module() -> (Module, GraphId) {
+    let mut m = Module::new();
+    let graphs = compile_source(&mut m, MLP_SOURCE).unwrap();
+    let g = graphs["mlp_loss"];
+    expand_macros(&mut m, g).unwrap();
+    let spec = GradSpec { order: 1, wrt: 0, value_and_grad: true };
+    let g = expand_grad(&mut m, g, &spec).unwrap();
+    (m, g)
+}
+
+struct OptArm {
+    us_median: u128,
+    nodes: usize,
+    rounds: usize,
+    visits: usize,
+    per_pass: Vec<(&'static str, usize, usize)>, // (name, visits, rewrites)
+}
+
+/// Run `make_pm()` on fresh copies of the MLP adjoint `reps` times; report
+/// the median wall time plus the stats of one run.
+fn measure_opt(make_pm: impl Fn() -> PassManager, reps: usize) -> OptArm {
+    let mut times: Vec<u128> = Vec::with_capacity(reps);
+    let mut arm: Option<OptArm> = None;
+    for _ in 0..reps {
+        let (mut m, g) = mlp_adjoint_module();
+        let mut pm = make_pm();
+        let t0 = Instant::now();
+        let (root, stats) = pm.run(&mut m, g).unwrap();
+        times.push(t0.elapsed().as_micros());
+        if arm.is_none() {
+            arm = Some(OptArm {
+                us_median: 0,
+                nodes: analyze(&m, root).node_count(&m),
+                rounds: stats.rounds,
+                visits: stats.total_visits(),
+                per_pass: stats
+                    .passes
+                    .iter()
+                    .map(|p| (p.name, p.visits, p.rewrites))
+                    .collect(),
+            });
+        }
+    }
+    times.sort_unstable();
+    let mut arm = arm.unwrap();
+    arm.us_median = times[times.len() / 2];
+    arm
+}
+
 fn main() {
+    let quick = std::env::var_os("BENCH_QUICK").is_some();
     println!("=== E7: compile-pipeline latency vs program size ===");
     println!(
         "{:>6} {:>12} {:>12} {:>12} {:>12} {:>10}",
         "ops", "parse+lower", "expand", "optimize", "codegen", "nodes"
     );
-    for n in [4usize, 16, 64, 256] {
+    let sizes: &[usize] = if quick { &[4, 16, 64] } else { &[4, 16, 64, 256] };
+    let mut size_rows: Vec<(usize, u128, u128, u128, u128, usize)> = Vec::new();
+    for &n in sizes {
         let src = chain_program(n);
         let t0 = Instant::now();
         let s = Engine::from_source(&src).unwrap();
@@ -38,21 +101,86 @@ fn main() {
             "CSV,e7_compile,{n},{parse_us},{},{},{}",
             f.metrics.expand_us, f.metrics.optimize_us, f.metrics.codegen_us
         );
+        size_rows.push((
+            n,
+            parse_us,
+            f.metrics.expand_us,
+            f.metrics.optimize_us,
+            f.metrics.codegen_us,
+            f.metrics.nodes_after_optimize,
+        ));
     }
 
+    // The middle-end A/B: worklist driver vs the emulated old fixpoint loop
+    // on the MLP value_and_grad adjoint.
+    println!("\n=== optimizer driver A/B on the MLP adjoint ===");
+    let reps = if quick { 3 } else { 7 };
+    let worklist = measure_opt(PassManager::standard, reps);
+    let legacy = measure_opt(PassManager::legacy_baseline, reps);
+    let speedup = legacy.us_median as f64 / worklist.us_median.max(1) as f64;
+    println!(
+        "worklist: {}µs, {} nodes, {} rounds, {} visits",
+        worklist.us_median, worklist.nodes, worklist.rounds, worklist.visits
+    );
+    println!(
+        "legacy:   {}µs, {} nodes, {} rounds, {} visits",
+        legacy.us_median, legacy.nodes, legacy.rounds, legacy.visits
+    );
+    println!("optimization wall-time speedup (legacy / worklist): {speedup:.2}x");
+    for (name, visits, rewrites) in &worklist.per_pass {
+        println!("  worklist pass {name:<16} visits={visits:<8} rewrites={rewrites}");
+    }
+    println!("CSV,e7_driver_ab,mlp_vgrad,{},{},{speedup:.3}", worklist.us_median, legacy.us_median);
+
     // Amortization: per-call time once compiled.
-    let mut b = Bencher::default();
+    let mut b = if quick { Bencher::fast() } else { Bencher::default() };
     let src = chain_program(64);
     let s = Engine::from_source(&src).unwrap();
     let f = s.trace("main").unwrap().compile().unwrap();
     let sample = b.bench("compiled_call/ops=64", || {
         myia::bench::black_box(f.call(vec![Value::F64(0.3)]).unwrap());
     });
-    let compile_total = (f.metrics.expand_us + f.metrics.optimize_us + f.metrics.codegen_us) as f64 * 1e-6;
+    let compile_total =
+        (f.metrics.expand_us + f.metrics.optimize_us + f.metrics.codegen_us) as f64 * 1e-6;
     println!(
         "\ncompile cost {:.1} ms amortizes over ~{} calls of {:.1} µs each",
         compile_total * 1e3,
         (compile_total / sample.median).ceil(),
         sample.median * 1e6
     );
+
+    // Machine-readable trajectory point (hand-rolled JSON; serde is not in
+    // the offline crate set).
+    let mut json = String::from("{\n  \"bench\": \"compile_time\",\n  \"sizes\": [\n");
+    for (i, (n, p, e, o, c, nodes)) in size_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"ops\": {n}, \"parse_us\": {p}, \"expand_us\": {e}, \"optimize_us\": {o}, \
+             \"codegen_us\": {c}, \"nodes\": {nodes}}}{}\n",
+            if i + 1 == size_rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ],\n  \"mlp_adjoint\": {\n");
+    json.push_str(&format!(
+        "    \"worklist_us\": {}, \"legacy_us\": {}, \"speedup\": {speedup:.3},\n",
+        worklist.us_median, legacy.us_median
+    ));
+    json.push_str(&format!(
+        "    \"worklist_nodes\": {}, \"legacy_nodes\": {},\n",
+        worklist.nodes, legacy.nodes
+    ));
+    json.push_str(&format!(
+        "    \"worklist_rounds\": {}, \"legacy_rounds\": {},\n",
+        worklist.rounds, legacy.rounds
+    ));
+    json.push_str("    \"worklist_visits_per_pass\": [\n");
+    for (i, (name, visits, rewrites)) in worklist.per_pass.iter().enumerate() {
+        json.push_str(&format!(
+            "      {{\"pass\": \"{name}\", \"visits\": {visits}, \"rewrites\": {rewrites}}}{}\n",
+            if i + 1 == worklist.per_pass.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("    ]\n  }\n}\n");
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_compile.json");
+    std::fs::write(path, json).expect("write BENCH_compile.json");
+    println!("wrote {path}");
 }

@@ -3,11 +3,30 @@
 //! Reports, for `grad(x ** 3)` and a larger program: node counts after
 //! lowering / expansion / optimization, the optimized-vs-handwritten runtime
 //! ratio, and the unoptimized adjoint cost that optimization removes.
+//! Writes the machine-readable trajectory to `BENCH_fig1.json` at the
+//! repository root. Set `BENCH_QUICK=1` for the CI quick mode.
 
 use myia::bench::{black_box, Bencher};
 use myia::coordinator::Engine;
 use myia::opt::PassSet;
 use myia::vm::Value;
+
+struct Row {
+    program: &'static str,
+    lowered: usize,
+    expanded: usize,
+    optimized: usize,
+    opt_vs_hand: f64,
+    unopt_vs_hand: f64,
+}
+
+fn harness() -> Bencher {
+    if std::env::var_os("BENCH_QUICK").is_some() {
+        Bencher::fast()
+    } else {
+        Bencher::default()
+    }
+}
 
 fn main() {
     println!("=== E1 / Figure 1: transform sizes and adjoint quality ===");
@@ -25,6 +44,7 @@ fn main() {
         ),
     ];
 
+    let mut rows: Vec<Row> = Vec::new();
     println!(
         "{:<12} {:>10} {:>10} {:>10}",
         "program", "lowered", "expanded", "optimized"
@@ -39,10 +59,18 @@ fn main() {
         );
         println!("{name:<12} {l:>10} {e:>10} {o:>10}");
         println!("CSV,fig1_nodes,{name},{l},{e},{o}");
+        rows.push(Row {
+            program: name,
+            lowered: l,
+            expanded: e,
+            optimized: o,
+            opt_vs_hand: f64::NAN,
+            unopt_vs_hand: f64::NAN,
+        });
     }
 
     println!("\n--- optimized adjoint vs hand-written derivative (runtime) ---");
-    let mut b = Bencher::default();
+    let mut b = harness();
     for (name, src, hand_src) in &cases {
         let full = format!("{src}\n{hand_src}");
         let s = Engine::from_source(&full).unwrap();
@@ -59,11 +87,35 @@ fn main() {
         let su = b.bench(&format!("fig1/{name}/grad_unoptimized"), || {
             black_box(unopt.call(vec![Value::F64(1.7)]).unwrap());
         });
+        let (r_opt, r_unopt) = (sa.median / sh.median, su.median / sh.median);
         println!(
-            "  {name}: optimized/handwritten = {:.2}x, unoptimized/handwritten = {:.2}x\n",
-            sa.median / sh.median,
-            su.median / sh.median
+            "  {name}: optimized/handwritten = {r_opt:.2}x, unoptimized/handwritten = {r_unopt:.2}x\n"
         );
-        println!("CSV,fig1_runtime,{name},{:.3},{:.3}", sa.median / sh.median, su.median / sh.median);
+        println!("CSV,fig1_runtime,{name},{r_opt:.3},{r_unopt:.3}");
+        if let Some(row) = rows.iter_mut().find(|r| r.program == *name) {
+            row.opt_vs_hand = r_opt;
+            row.unopt_vs_hand = r_unopt;
+        }
     }
+
+    // Machine-readable trajectory point (hand-rolled JSON; serde is not in
+    // the offline crate set).
+    let mut json = String::from("{\n  \"bench\": \"fig1_transform\",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"program\": \"{}\", \"lowered\": {}, \"expanded\": {}, \"optimized\": {}, \
+             \"opt_vs_hand\": {:.3}, \"unopt_vs_hand\": {:.3}}}{}\n",
+            r.program,
+            r.lowered,
+            r.expanded,
+            r.optimized,
+            r.opt_vs_hand,
+            r.unopt_vs_hand,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fig1.json");
+    std::fs::write(path, json).expect("write BENCH_fig1.json");
+    println!("wrote {path}");
 }

@@ -1,52 +1,94 @@
 //! E6 (§4.3): optimization-pass ablation on the grad-expanded MLP and the
-//! Figure-1 program — node counts and adjoint runtime with each pass
-//! disabled, plus the no-optimization arm.
+//! Figure-1 program — node counts, worklist visits and optimization wall
+//! time with each pass disabled, plus the no-optimization arm. Writes the
+//! machine-readable trajectory to `BENCH_opt.json` at the repository root.
+//!
+//! Set `BENCH_QUICK=1` for the CI quick mode (short measurement windows).
 
 use myia::ad::expand_macros;
 use myia::bench::{black_box, Bencher};
 use myia::coordinator::mlp::MLP_SOURCE;
 use myia::coordinator::Engine;
 use myia::ir::analyze;
-use myia::opt::PassSet;
+use myia::opt::{PassSet, STANDARD_PASSES};
 use myia::parser::compile_source;
 use myia::vm::Value;
+use std::time::Instant;
 
-fn ablate(src: &str, entry: &str) {
-    let variants: [(&str, PassSet); 6] = [
-        ("full", PassSet::Standard),
-        ("no-inline", PassSet::Without("inline".to_string())),
-        ("no-tuple-simplify", PassSet::Without("tuple-simplify".to_string())),
-        ("no-algebraic", PassSet::Without("algebraic".to_string())),
-        ("no-cse", PassSet::Without("cse".to_string())),
-        ("none", PassSet::None),
-    ];
-    println!("{:<20} {:>10} {:>8}", "pipeline", "nodes", "iters");
+struct Arm {
+    program: &'static str,
+    arm: String,
+    nodes: usize,
+    rounds: usize,
+    visits: usize,
+    rewrites: usize,
+    opt_us: u128,
+}
+
+fn harness() -> Bencher {
+    if std::env::var_os("BENCH_QUICK").is_some() {
+        Bencher::fast()
+    } else {
+        Bencher::default()
+    }
+}
+
+fn ablate(rows: &mut Vec<Arm>, src: &str, entry: &'static str) {
+    let mut variants: Vec<(String, PassSet)> = vec![("full".to_string(), PassSet::Standard)];
+    for p in STANDARD_PASSES {
+        variants.push((format!("no-{p}"), PassSet::Without(p.to_string())));
+    }
+    variants.push(("none".to_string(), PassSet::None));
+
+    println!(
+        "{:<20} {:>10} {:>8} {:>10} {:>10} {:>10}",
+        "pipeline", "nodes", "rounds", "visits", "rewrites", "opt_us"
+    );
     for (name, passes) in variants {
         let mut m = myia::ir::Module::new();
         let graphs = compile_source(&mut m, src).unwrap();
         let g = graphs[entry];
         expand_macros(&mut m, g).unwrap();
-        let stats = passes.optimizer().run(&mut m, g).unwrap();
-        let nodes = analyze(&m, g).node_count(&m);
-        println!("{name:<20} {nodes:>10} {:>8}", stats.iterations);
+        let t0 = Instant::now();
+        let mut pm = passes.manager();
+        let (root, stats) = pm.run(&mut m, g).unwrap();
+        let opt_us = t0.elapsed().as_micros();
+        let nodes = analyze(&m, root).node_count(&m);
+        println!(
+            "{name:<20} {nodes:>10} {:>8} {:>10} {:>10} {opt_us:>10}",
+            stats.rounds,
+            stats.total_visits(),
+            stats.total_rewrites()
+        );
         println!("CSV,e6_nodes,{entry},{name},{nodes}");
+        rows.push(Arm {
+            program: entry,
+            arm: name,
+            nodes,
+            rounds: stats.rounds,
+            visits: stats.total_visits(),
+            rewrites: stats.total_rewrites(),
+            opt_us,
+        });
     }
 }
 
 fn main() {
     println!("=== E6: per-pass ablation (node counts after optimization) ===");
+    let mut rows: Vec<Arm> = Vec::new();
     println!("\n--- grad(x**3) (Figure 1) ---");
     ablate(
+        &mut rows,
         "def f(x):\n    return x ** 3.0\n\ndef main(x):\n    return grad(f)(x)\n",
         "main",
     );
     println!("\n--- MLP loss gradient ---");
-    ablate(MLP_SOURCE, "mlp_grad");
+    ablate(&mut rows, MLP_SOURCE, "mlp_grad");
 
     // Runtime impact: full vs none on the Figure-1 program.
     println!("\n--- adjoint runtime, full vs no optimization ---");
     let src = "def f(x):\n    return x ** 3.0\n\ndef main(x):\n    return grad(f)(x)\n";
-    let mut b = Bencher::default();
+    let mut b = harness();
     let s1 = Engine::from_source(src).unwrap();
     let opt = s1.trace("main").unwrap().compile().unwrap();
     let s2 = Engine::from_source(src).unwrap();
@@ -57,6 +99,29 @@ fn main() {
     let u = b.bench("ablation/pow3/none", || {
         black_box(unopt.call(vec![Value::F64(2.0)]).unwrap());
     });
-    println!("speedup from optimization: {:.1}x", u.median / a.median);
-    println!("CSV,e6_speedup,pow3,{:.3}", u.median / a.median);
+    let speedup = u.median / a.median;
+    println!("speedup from optimization: {speedup:.1}x");
+    println!("CSV,e6_speedup,pow3,{speedup:.3}");
+
+    // Machine-readable trajectory point (hand-rolled JSON; serde is not in
+    // the offline crate set).
+    let mut json = String::from("{\n  \"bench\": \"opt_ablation\",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"program\": \"{}\", \"arm\": \"{}\", \"nodes\": {}, \"rounds\": {}, \
+             \"visits\": {}, \"rewrites\": {}, \"opt_us\": {}}}{}\n",
+            r.program,
+            r.arm,
+            r.nodes,
+            r.rounds,
+            r.visits,
+            r.rewrites,
+            r.opt_us,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str(&format!("  ],\n  \"pow3_runtime_speedup_full_vs_none\": {speedup:.3}\n}}\n"));
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_opt.json");
+    std::fs::write(path, json).expect("write BENCH_opt.json");
+    println!("\nwrote {path}");
 }

@@ -18,9 +18,6 @@
 //! argument-type signature)`. `f.grad().grad().compile()` is second-order AD
 //! with no `grad(grad(…))` string anywhere in user source — the transforms
 //! compose because the adjoint program is ordinary IR (§3.2).
-//!
-//! [`Session`] survives as a thin deprecated alias for [`Engine`] (and
-//! [`CompiledFn`] for [`Executable`]) so downstream code keeps compiling.
 
 use crate::ad::expand_macros;
 use crate::backend::Backend;
@@ -110,11 +107,6 @@ pub struct Engine {
     cache: ArtifactCache,
 }
 
-/// Deprecated name for [`Engine`].
-#[deprecated(note = "renamed to `Engine`; compile with `Engine::trace(..)` and share the \
-                     resulting `Arc<Executable>` across threads")]
-pub type Session = Engine;
-
 /// A compiled, executable entry point: the run-time half of the compile/run
 /// split. Owns the transformed IR snapshot it was generated from
 /// ([`Executable::entry`] indexes into it).
@@ -134,10 +126,6 @@ pub struct Executable {
     /// Inferred return type, when specialized.
     pub ret_type: Option<AType>,
 }
-
-/// Deprecated name for [`Executable`].
-#[deprecated(note = "renamed to `Executable`")]
-pub type CompiledFn = Executable;
 
 impl Executable {
     /// Execute on argument values. `&self` and thread-safe: all per-call
@@ -507,16 +495,28 @@ def main(x):
     }
 
     #[test]
-    fn session_alias_still_compiles() {
-        // The deprecated alias is part of the public surface for one more
-        // cycle; keep it working.
-        #[allow(deprecated)]
-        fn takes_session(s: &super::Session) -> Result<Arc<super::CompiledFn>> {
-            s.trace("f")?.compile()
-        }
-        let e = Engine::from_source("def f(x):\n    return x + 1.0\n").unwrap();
-        let f = takes_session(&e).unwrap();
-        assert!((f.call(vec![Value::F64(1.0)]).unwrap().as_f64().unwrap() - 2.0).abs() < 1e-12);
+    fn standard_artifact_has_zero_unreachable_graphs() {
+        // The dead-graph GC finalizer must leave the artifact's module
+        // containing exactly the graphs its entry reaches — nothing else.
+        let src = "\
+def f(x):
+    return x ** 3.0
+
+def unrelated(y):
+    return y + 1.0
+
+def main(x):
+    return grad(f)(x)
+";
+        let e = Engine::from_source(src).unwrap();
+        let f = e.trace("main").unwrap().compile().unwrap();
+        let live = analyze(&f.module, f.entry).graphs.len();
+        assert_eq!(
+            f.module.num_graphs(),
+            live,
+            "artifact carries {} graphs but only {live} are reachable",
+            f.module.num_graphs()
+        );
     }
 
     #[test]

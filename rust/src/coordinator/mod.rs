@@ -16,12 +16,9 @@
 //!   any number of threads with results identical to sequential execution.
 //!
 //! The public surface is [`Engine::trace`] + [`Function`]: transforms
-//! compose as first-class values. [`Session`] and [`CompiledFn`] remain as
-//! thin deprecated aliases for [`Engine`] and [`Executable`].
+//! compose as first-class values.
 
 pub mod engine;
 pub mod mlp;
 
-#[allow(deprecated)]
-pub use engine::{CompiledFn, Session};
 pub use engine::{run_source, Engine, Executable, Function, Metrics};

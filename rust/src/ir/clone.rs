@@ -79,10 +79,15 @@ pub fn clone_closure(m: &mut Module, g: GraphId) -> CloneResult {
     }
 
     // 3. Create placeholder applies (so forward references resolve), then fix
-    //    up inputs once every node has its clone.
+    //    up inputs once every node has its clone. Iterate `reachable` (a
+    //    deterministic discovery-order Vec), not the map: clone node ids must
+    //    not depend on HashMap iteration order.
     let dummy = m.constant(Const::Unit);
     let mut cloned_applies: Vec<(NodeId, NodeId, GraphId)> = Vec::new();
-    for (&h, &new_h) in &result.graphs.clone() {
+    let clone_order: Vec<GraphId> =
+        reachable.iter().copied().filter(|h| result.graphs.contains_key(h)).collect();
+    for &h in &clone_order {
+        let new_h = result.graphs[&h];
         for &n in orders.get(&h).map(|v| v.as_slice()).unwrap_or(&[]) {
             let new_n = m.apply(new_h, vec![dummy]);
             if let Some(name) = m.node(n).debug_name.clone() {
@@ -103,8 +108,9 @@ pub fn clone_closure(m: &mut Module, g: GraphId) -> CloneResult {
         m.set_inputs(*new_n, new_inputs);
     }
 
-    // 4. Returns.
-    for (&h, &new_h) in &result.graphs.clone() {
+    // 4. Returns (same deterministic order as step 3).
+    for &h in &clone_order {
+        let new_h = result.graphs[&h];
         if let Some(r) = m.graph(h).ret {
             let new_r = remap(m, &result, r);
             m.set_return(new_h, new_r);

@@ -18,14 +18,28 @@ pub struct Graph {
 }
 
 /// Arena of graphs and nodes with use-list maintenance.
+///
+/// Edges are indexed in both directions: `uses` maps each node to its
+/// `(user, input index)` pairs and `ret_uses` maps each node to the graphs
+/// that return it. Both indexes are maintained *exactly* by every mutation
+/// entry point (`apply`, `set_input`, `set_inputs`, `set_return`,
+/// `replace_all_uses`), so [`Module::uses`] is O(degree) and
+/// [`Module::replace_all_uses`] is O(degree of the replaced node) — no
+/// whole-arena scans anywhere on the optimizer's hot path.
 #[derive(Debug, Default, Clone)]
 pub struct Module {
     nodes: Vec<Node>,
     graphs: Vec<Graph>,
-    /// For each node, the list of (user, input index) pairs.
+    /// For each node, the list of (user, input index) pairs. Exact.
     uses: Vec<Vec<(NodeId, usize)>>,
+    /// For each node, the graphs whose return it is. Exact.
+    ret_uses: HashMap<NodeId, Vec<GraphId>>,
     /// Dedup cache for scalar/prim constants.
     const_cache: HashMap<u64, Vec<NodeId>>,
+    /// Mutation journal for the worklist optimizer: nodes created or whose
+    /// inputs/ownership changed since the last drain. Off by default.
+    journal: Vec<NodeId>,
+    journal_on: bool,
 }
 
 impl Module {
@@ -60,6 +74,7 @@ impl Module {
         for (i, &input) in inputs.iter().enumerate() {
             self.uses[input.0 as usize].push((id, i));
         }
+        self.journal_push(id);
         id
     }
 
@@ -105,9 +120,20 @@ impl Module {
         self.constant(Const::Graph(g))
     }
 
-    /// Set the return node of a graph.
+    /// Set the return node of a graph (maintains the return-use index).
     pub fn set_return(&mut self, g: GraphId, node: NodeId) {
+        let old = self.graphs[g.0 as usize].ret;
+        if old == Some(node) {
+            return;
+        }
+        if let Some(o) = old {
+            if let Some(v) = self.ret_uses.get_mut(&o) {
+                v.retain(|&h| h != g);
+            }
+        }
         self.graphs[g.0 as usize].ret = Some(node);
+        self.ret_uses.entry(node).or_default().push(g);
+        self.journal_return_change(g);
     }
 
     fn push_node(&mut self, node: Node) -> NodeId {
@@ -127,9 +153,9 @@ impl Module {
         &self.graphs[id.0 as usize]
     }
 
-    pub fn graph_mut(&mut self, id: GraphId) -> &mut Graph {
-        &mut self.graphs[id.0 as usize]
-    }
+    // NOTE: there is deliberately no `graph_mut`: `Graph::ret` must only be
+    // written through `set_return`/`replace_all_uses` so the return-use
+    // index stays exact.
 
     pub fn num_nodes(&self) -> usize {
         self.nodes.len()
@@ -143,20 +169,38 @@ impl Module {
         (0..self.graphs.len() as u32).map(GraphId)
     }
 
-    /// Users of a node as (user, input-index) pairs. Stale entries (from
-    /// rewired edges) are filtered out lazily.
+    /// Users of a node as (user, input-index) pairs. The index is exact
+    /// (every mutation entry point maintains it), so this is O(degree).
     pub fn uses(&self, id: NodeId) -> Vec<(NodeId, usize)> {
-        self.uses[id.0 as usize]
+        self.uses[id.0 as usize].clone()
+    }
+
+    /// Number of input edges pointing at `id`. O(1).
+    pub fn use_count(&self, id: NodeId) -> usize {
+        self.uses[id.0 as usize].len()
+    }
+
+    /// True if some graph returns `id`. O(1) via the return-use index.
+    pub fn is_graph_return(&self, id: NodeId) -> bool {
+        self.ret_uses.get(&id).map(|v| !v.is_empty()).unwrap_or(false)
+    }
+
+    /// True if `id` has neither input-edge users nor a graph returning it —
+    /// i.e. rewriting it cannot affect any reachable computation. (Captures
+    /// by nested graphs are ordinary input edges, so they count as uses.)
+    pub fn is_dead(&self, id: NodeId) -> bool {
+        self.use_count(id) == 0 && !self.is_graph_return(id)
+    }
+
+    /// The interned constant node for graph `g`, if one was ever created.
+    /// Unlike [`Module::graph_constant`] this never allocates.
+    pub fn graph_constant_node(&self, g: GraphId) -> Option<NodeId> {
+        let fp = Const::Graph(g).fingerprint();
+        let candidates = self.const_cache.get(&fp)?;
+        candidates
             .iter()
             .copied()
-            .filter(|&(u, i)| {
-                self.nodes[u.0 as usize]
-                    .inputs()
-                    .get(i)
-                    .map(|&x| x == id)
-                    .unwrap_or(false)
-            })
-            .collect()
+            .find(|&c| self.nodes[c.0 as usize].constant() == Some(&Const::Graph(g)))
     }
 
     /// The return node of `g`; panics if unset.
@@ -199,10 +243,11 @@ impl Module {
         // Remove the stale use entry; add the new one.
         self.uses[old.0 as usize].retain(|&(u, i)| !(u == user && i == index));
         self.uses[new.0 as usize].push((user, index));
+        self.journal_push(user);
     }
 
-    /// Replace every use of `old` with `new`, including graph returns and
-    /// parameter lists.
+    /// Replace every use of `old` with `new`, including graph returns.
+    /// O(degree of `old`): both directions come from the edge indexes.
     pub fn replace_all_uses(&mut self, old: NodeId, new: NodeId) {
         if old == new {
             return;
@@ -210,16 +255,20 @@ impl Module {
         for (user, index) in self.uses(old) {
             self.set_input(user, index, new);
         }
-        for g in 0..self.graphs.len() {
-            if self.graphs[g].ret == Some(old) {
-                self.graphs[g].ret = Some(new);
-            }
+        let rets = self.ret_uses.remove(&old).unwrap_or_default();
+        for &g in &rets {
+            self.graphs[g.0 as usize].ret = Some(new);
+            self.ret_uses.entry(new).or_default().push(g);
+        }
+        for g in rets {
+            self.journal_return_change(g);
         }
     }
 
     /// Transfer ownership of a node to another graph (used by inlining).
     pub fn reassign_graph(&mut self, node: NodeId, g: GraphId) {
         self.nodes[node.0 as usize].graph = Some(g);
+        self.journal_push(node);
     }
 
     /// Overwrite the inputs of an apply node.
@@ -234,6 +283,46 @@ impl Module {
         match &mut self.nodes[node.0 as usize].kind {
             NodeKind::Apply(inputs) => *inputs = new_inputs,
             _ => panic!("set_inputs on non-apply node"),
+        }
+        self.journal_push(node);
+    }
+
+    // ---- mutation journal (worklist optimizer) -----------------------------
+
+    /// Start recording mutations. While enabled, every created apply node and
+    /// every node whose inputs/ownership changed is appended to the journal;
+    /// when a graph's return changes, the call sites of that graph (users of
+    /// its graph constant) are recorded instead, since they are the nodes
+    /// whose *observable value* may have changed.
+    pub fn begin_journal(&mut self) {
+        self.journal_on = true;
+        self.journal.clear();
+    }
+
+    /// Stop recording and discard anything unread.
+    pub fn end_journal(&mut self) {
+        self.journal_on = false;
+        self.journal.clear();
+    }
+
+    /// Take everything recorded since the last drain (may contain duplicates).
+    pub fn drain_journal(&mut self) -> Vec<NodeId> {
+        std::mem::take(&mut self.journal)
+    }
+
+    fn journal_push(&mut self, n: NodeId) {
+        if self.journal_on {
+            self.journal.push(n);
+        }
+    }
+
+    fn journal_return_change(&mut self, g: GraphId) {
+        if !self.journal_on {
+            return;
+        }
+        if let Some(c) = self.graph_constant_node(g) {
+            let users: Vec<NodeId> = self.uses[c.0 as usize].iter().map(|&(u, _)| u).collect();
+            self.journal.extend(users);
         }
     }
 
@@ -394,6 +483,35 @@ impl Module {
                 }
             }
         }
+        // ... and contain nothing but actual edges (exactness).
+        for (i, uses) in self.uses.iter().enumerate() {
+            for &(u, j) in uses {
+                let ok = self.nodes[u.0 as usize].inputs().get(j) == Some(&NodeId(i as u32));
+                if !ok {
+                    return Err(format!("stale use entry %{i} -> ({u}, {j})"));
+                }
+            }
+        }
+        // The return-use index must match the graphs' return fields exactly.
+        for (gi, graph) in self.graphs.iter().enumerate() {
+            if let Some(r) = graph.ret {
+                let ok = self
+                    .ret_uses
+                    .get(&r)
+                    .map(|v| v.contains(&GraphId(gi as u32)))
+                    .unwrap_or(false);
+                if !ok {
+                    return Err(format!("missing ret-use entry for @{gi} -> {r}"));
+                }
+            }
+        }
+        for (&n, gs) in &self.ret_uses {
+            for &g in gs {
+                if self.graphs[g.0 as usize].ret != Some(n) {
+                    return Err(format!("stale ret-use entry {n} -> {g}"));
+                }
+            }
+        }
         Ok(())
     }
 }
@@ -520,6 +638,43 @@ mod tests {
         let (m, f, _) = sample_module();
         // x, mul-prim-const, mul, 2.0, add-prim-const, add = 6
         assert_eq!(m.reachable_node_count(f), 6);
+    }
+
+    #[test]
+    fn journal_records_mutations() {
+        let (mut m, f, x) = sample_module();
+        let mul = m.topo_order(f)[0];
+        m.begin_journal();
+        assert!(m.drain_journal().is_empty());
+        // Rewiring an input journals the user.
+        let one = m.constant(Const::F64(1.0));
+        m.set_input(mul, 1, one);
+        assert_eq!(m.drain_journal(), vec![mul]);
+        // replace_all_uses journals every rewired user.
+        let ten = m.constant(Const::F64(10.0));
+        m.replace_all_uses(x, ten);
+        assert!(m.drain_journal().contains(&mul));
+        // New applies are journaled.
+        let fresh = m.apply_prim(f, Prim::Neg, &[ten]);
+        assert_eq!(m.drain_journal(), vec![fresh]);
+        // Return changes journal the graph's call sites.
+        let g = m.add_graph("g");
+        let gc = m.graph_constant(g);
+        let call = m.apply(f, vec![gc]);
+        m.drain_journal();
+        m.set_return(g, ten);
+        assert_eq!(m.drain_journal(), vec![call]);
+        m.end_journal();
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn graph_constant_node_lookup() {
+        let mut m = Module::new();
+        let g = m.add_graph("g");
+        assert_eq!(m.graph_constant_node(g), None);
+        let gc = m.graph_constant(g);
+        assert_eq!(m.graph_constant_node(g), Some(gc));
     }
 
     #[test]

@@ -60,8 +60,6 @@ pub mod coordinator;
 /// quickstart, the examples, and most downstream code.
 pub mod prelude {
     pub use crate::backend::Backend;
-    #[allow(deprecated)]
-    pub use crate::coordinator::{CompiledFn, Session};
     pub use crate::coordinator::{Engine, Executable, Function, Metrics};
     pub use crate::opt::PassSet;
     pub use crate::transform::{

@@ -1,0 +1,233 @@
+//! Module-level dead-graph garbage collection.
+//!
+//! Optimization strands whole graphs: every inlined callee leaves its
+//! original body behind, SCCP and switch folding cut branch thunks loose,
+//! and the per-artifact module clone starts with every top-level function
+//! in the source file even though the pipeline compiles exactly one entry.
+//! Reachability-based consumers (`analyze`, the VM compiler) skip the
+//! corpses, but they still sit in the arena: `Module::clone` copies them
+//! into every artifact, printing walks past them, and node ids stay
+//! non-deterministic because dead clones pad the numbering.
+//!
+//! [`DeadGraphGc`] rebuilds the module to contain *only* what the entry
+//! reaches: live graphs in deterministic discovery order, each body in
+//! closed topological order, constants re-interned on first use. It runs as
+//! a [`PassManager`](super::PassManager) *finalizer* — compaction renumbers
+//! every node, which would invalidate queued worklist entries mid-fixpoint.
+//!
+//! After GC, `module.num_graphs()` equals the reachable-graph count — the
+//! invariant the artifact tests pin.
+
+use super::manager::{GlobalOutcome, GlobalPass};
+use crate::ir::{analyze, Const, GraphId, Module, NodeId};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Statistics from one compaction.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct GcStats {
+    pub graphs_before: usize,
+    pub graphs_after: usize,
+    pub nodes_before: usize,
+    pub nodes_after: usize,
+}
+
+/// Rebuild `m` with only the graphs/nodes reachable from `root`. Returns
+/// the compacted module, the relocated root, and the stats. Deterministic:
+/// graphs are emitted in scope-analysis discovery order and nodes in closed
+/// topological order, so equal input structure yields equal arenas (and
+/// therefore stable printed IR for golden tests).
+pub fn compact(m: &Module, root: GraphId) -> Result<(Module, GraphId, GcStats)> {
+    let analysis = analyze(m, root);
+    let mut out = Module::new();
+    let mut gmap: HashMap<GraphId, GraphId> = HashMap::new();
+    let mut nmap: HashMap<NodeId, NodeId> = HashMap::new();
+
+    // 1. Graph shells and parameters (parameters are the signature: all are
+    //    kept, used or not).
+    for &g in &analysis.graphs {
+        let ng = out.add_graph(m.graph(g).name.clone());
+        gmap.insert(g, ng);
+        for &p in &m.graph(g).params {
+            let name = m.node(p).debug_name.clone().unwrap_or_default();
+            let np = out.add_parameter(ng, name);
+            nmap.insert(p, np);
+        }
+    }
+
+    // 2. Placeholder applies so forward references (mutual capture,
+    //    recursion) resolve, then input fixup.
+    let dummy = out.constant(Const::Unit);
+    for &g in &analysis.graphs {
+        for &n in analysis.order_of(g) {
+            let nn = out.apply(gmap[&g], vec![dummy]);
+            if let Some(name) = m.node(n).debug_name.clone() {
+                out.name_node(nn, name);
+            }
+            nmap.insert(n, nn);
+        }
+    }
+    for &g in &analysis.graphs {
+        for &n in analysis.order_of(g) {
+            let inputs = m.node(n).inputs().to_vec();
+            let mut mapped = Vec::with_capacity(inputs.len());
+            for inp in inputs {
+                mapped.push(map_node(m, &mut out, &gmap, &nmap, inp)?);
+            }
+            out.set_inputs(nmap[&n], mapped);
+        }
+    }
+
+    // 3. Returns.
+    for &g in &analysis.graphs {
+        if let Some(r) = m.graph(g).ret {
+            let nr = map_node(m, &mut out, &gmap, &nmap, r)?;
+            out.set_return(gmap[&g], nr);
+        }
+    }
+
+    let stats = GcStats {
+        graphs_before: m.num_graphs(),
+        graphs_after: out.num_graphs(),
+        nodes_before: m.num_nodes(),
+        nodes_after: out.num_nodes(),
+    };
+    Ok((out, gmap[&root], stats))
+}
+
+/// Remap one node reference into the compacted arena.
+fn map_node(
+    m: &Module,
+    out: &mut Module,
+    gmap: &HashMap<GraphId, GraphId>,
+    nmap: &HashMap<NodeId, NodeId>,
+    n: NodeId,
+) -> Result<NodeId> {
+    if let Some(&mapped) = nmap.get(&n) {
+        return Ok(mapped);
+    }
+    if let Some(c) = m.node(n).constant() {
+        let remapped = match c {
+            Const::Graph(g) => match gmap.get(g) {
+                Some(&ng) => Const::Graph(ng),
+                // A live body referencing a dead graph contradicts the
+                // reachability analysis — refuse to build a broken module.
+                None => bail!("gc: live node {n} references unreachable graph {g}"),
+            },
+            other => other.clone(),
+        };
+        return Ok(out.constant(remapped));
+    }
+    bail!("gc: live node references {n}, which is neither live nor a constant")
+}
+
+/// The GC finalizer pass.
+pub struct DeadGraphGc;
+
+impl GlobalPass for DeadGraphGc {
+    fn name(&self) -> &'static str {
+        "gc"
+    }
+
+    fn run(&mut self, m: &mut Module, root: GraphId) -> Result<GlobalOutcome> {
+        let (compacted, new_root, stats) = compact(m, root)?;
+        let changed =
+            stats.graphs_after < stats.graphs_before || stats.nodes_after < stats.nodes_before;
+        *m = compacted;
+        Ok(GlobalOutcome {
+            changed,
+            rewrites: 0,
+            last: None,
+            new_root: Some(new_root),
+            graphs_collected: stats.graphs_before - stats.graphs_after,
+            nodes_collected: stats.nodes_before.saturating_sub(stats.nodes_after),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{print_graph, Prim};
+    use crate::vm::{compile_program, Value, Vm};
+
+    #[test]
+    fn dead_graph_removed_and_numerics_preserved() {
+        // f(x) = x*2 ; dead(y) = y+1 never referenced from f.
+        let mut m = Module::new();
+        let dead = m.add_graph("dead");
+        let y = m.add_parameter(dead, "y");
+        let one = m.constant(Const::F64(1.0));
+        let db = m.apply_prim(dead, Prim::Add, &[y, one]);
+        m.set_return(dead, db);
+
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let two = m.constant(Const::F64(2.0));
+        let r = m.apply_prim(f, Prim::Mul, &[x, two]);
+        m.set_return(f, r);
+
+        let mut gc = DeadGraphGc;
+        let out = gc.run(&mut m, f).unwrap();
+        let root = out.new_root.unwrap();
+        assert!(out.changed);
+        assert_eq!(out.graphs_collected, 1);
+        assert_eq!(m.num_graphs(), 1);
+        m.validate().unwrap();
+        let program = compile_program(&m, root).unwrap();
+        let got = Vm::new(program).call_graph(root, vec![Value::F64(4.0)]).unwrap();
+        assert_eq!(got.as_f64().unwrap(), 8.0);
+    }
+
+    #[test]
+    fn nested_and_recursive_structure_survives() {
+        // f(x): loop(n) = loop(n + x) — capture + self-recursion.
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let l = m.add_graph("loop");
+        let n = m.add_parameter(l, "n");
+        let nx = m.apply_prim(l, Prim::Add, &[n, x]);
+        let lc = m.graph_constant(l);
+        let rec = m.apply(l, vec![lc, nx]);
+        m.set_return(l, rec);
+        let lc2 = m.graph_constant(l);
+        let call = m.apply(f, vec![lc2, x]);
+        m.set_return(f, call);
+        // Plus one dead graph.
+        let dead = m.add_graph("dead");
+        let z = m.add_parameter(dead, "z");
+        m.set_return(dead, z);
+
+        let (out, root, stats) = compact(&m, f).unwrap();
+        assert_eq!(stats.graphs_after, 2);
+        out.validate().unwrap();
+        // The recursive self-reference points at the compacted loop graph.
+        let a = analyze(&out, root);
+        assert_eq!(a.graphs.len(), 2);
+        let lg = a.graphs[1];
+        let rec2 = out.ret_of(lg);
+        assert_eq!(out.as_graph(out.node(rec2).inputs()[0]), Some(lg));
+        // Capture of f's parameter survives as a free variable.
+        assert_eq!(out.free_variables_total(lg).len(), 1);
+    }
+
+    #[test]
+    fn compaction_is_idempotent_and_deterministic() {
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let t = m.constant(Const::F64(3.0));
+        let a = m.apply_prim(f, Prim::Mul, &[x, t]);
+        let r = m.apply_prim(f, Prim::Add, &[a, x]);
+        m.set_return(f, r);
+        let dead = m.add_graph("dead");
+        let z = m.add_parameter(dead, "z");
+        m.set_return(dead, z);
+
+        let (m1, r1, _) = compact(&m, f).unwrap();
+        let (m2, r2, s2) = compact(&m1, r1).unwrap();
+        assert_eq!(s2.graphs_before, s2.graphs_after);
+        assert_eq!(print_graph(&m1, r1, true), print_graph(&m2, r2, true));
+    }
+}

@@ -1,4 +1,4 @@
-//! Inlining (§4.3).
+//! Inlining (§4.3) with a closure-aware cost model.
 //!
 //! Applications of non-recursive graph constants are replaced by clones of
 //! the callee body, re-owned by the caller. Together with tuple
@@ -7,67 +7,137 @@
 //! inline into straight-line adjoint code, and the algebraic rules erase the
 //! env/ZeroT scaffolding — Figure 1's "after optimization … essentially
 //! identical to what one would have written by hand".
+//!
+//! The decision is no longer "always inline": [`InlinePolicy`] weighs the
+//! callee's body size, its *live* call-site count (computed in O(degree)
+//! from the interned graph constant's use list), recursion, and whether the
+//! callee is a *closure* — a graph capturing free variables. Capturing
+//! callees get a larger budget: inlining one deletes a closure allocation
+//! and is precisely what lets the backpropagator chain of §3.2 collapse,
+//! while duplicating a big pure top-level helper at many call sites only
+//! bloats the artifact.
 
-use super::passes::Pass;
+use super::manager::{LocalPass, PassCtx};
 use crate::ir::{analyze, clone_closure, GraphId, Module, NodeId};
 use anyhow::Result;
-use std::collections::{HashMap, HashSet};
+use std::collections::HashSet;
 
-/// Inline non-recursive callees. `size_limit` bounds the callee body size
-/// for multi-use call sites (single-use callees always inline).
+/// Size/recursion cost model for [`Inline`]. All sizes are callee body
+/// node counts (`Module::topo_order(callee).len()`).
+#[derive(Debug, Clone)]
+pub struct InlinePolicy {
+    /// Cap for callees with exactly one live call site. Single-use inlining
+    /// never duplicates code (the original body becomes unreachable), so
+    /// this is effectively "always" — the cap only guards pathology.
+    pub single_use_limit: usize,
+    /// Cap for multi-use callees that capture nothing (top-level helpers).
+    /// Duplicating these trades size for call overhead; keep them small.
+    pub multi_use_limit: usize,
+    /// Cap for multi-use callees that capture free variables (closures —
+    /// AD backpropagators, if/while thunks). Inlining these additionally
+    /// deletes the closure construction and unlocks downstream folding, so
+    /// they get a larger budget.
+    pub multi_use_capturing_limit: usize,
+}
+
+impl Default for InlinePolicy {
+    fn default() -> Self {
+        InlinePolicy {
+            single_use_limit: 65_536,
+            multi_use_limit: 64,
+            multi_use_capturing_limit: 120,
+        }
+    }
+}
+
+impl InlinePolicy {
+    /// The pre-policy behavior: single-use always, any multi-use up to 120
+    /// regardless of capture. Used by `PassManager::legacy_baseline`.
+    pub fn legacy() -> InlinePolicy {
+        InlinePolicy {
+            single_use_limit: usize::MAX,
+            multi_use_limit: 120,
+            multi_use_capturing_limit: 120,
+        }
+    }
+
+    /// The size cap that applies to a callee with `live_sites` call sites.
+    pub fn limit(&self, live_sites: usize, captures: bool) -> usize {
+        if live_sites <= 1 {
+            self.single_use_limit
+        } else if captures {
+            self.multi_use_capturing_limit
+        } else {
+            self.multi_use_limit
+        }
+    }
+}
+
+/// Inline non-recursive callees according to an [`InlinePolicy`].
 pub struct Inline {
-    pub size_limit: usize,
+    pub policy: InlinePolicy,
 }
 
 impl Default for Inline {
     fn default() -> Self {
-        Inline { size_limit: 120 }
+        Inline { policy: InlinePolicy::default() }
     }
 }
 
-impl Pass for Inline {
+impl Inline {
+    /// The emulated pre-worklist inliner (see [`InlinePolicy::legacy`]).
+    pub fn legacy() -> Inline {
+        Inline { policy: InlinePolicy::legacy() }
+    }
+}
+
+impl LocalPass for Inline {
     fn name(&self) -> &'static str {
         "inline"
     }
 
-    fn run(&mut self, m: &mut Module, root: GraphId) -> Result<bool> {
-        let analysis = analyze(m, root);
-        // Count call sites per callee graph.
-        let mut call_sites: Vec<(NodeId, GraphId, GraphId)> = Vec::new(); // (site, caller, callee)
-        let mut use_counts: HashMap<GraphId, usize> = HashMap::new();
-        for &g in &analysis.graphs {
-            for &n in analysis.order_of(g) {
-                if let Some(h) = m.as_graph(m.node(n).inputs()[0]) {
-                    if h != root {
-                        call_sites.push((n, g, h));
-                        *use_counts.entry(h).or_default() += 1;
-                    }
-                }
-            }
+    fn visit(&mut self, m: &mut Module, ctx: &mut PassCtx, n: NodeId) -> Result<bool> {
+        let node = m.node(n);
+        if !node.is_apply() {
+            return Ok(false);
         }
-
-        let mut changed = false;
-        for (site, caller, callee) in call_sites {
-            // The site may have been rewritten away by a previous inline.
-            let node = m.node(site);
-            if !node.is_apply() || m.as_graph(node.inputs()[0]) != Some(callee) {
-                continue;
-            }
-            if caller == callee || is_recursive(m, callee) {
-                continue;
-            }
-            let body = m.topo_order(callee).len();
-            let arity_ok = m.graph(callee).params.len() == node.inputs().len() - 1;
-            if !arity_ok {
-                continue; // arity error surfaces at runtime with a message
-            }
-            if use_counts[&callee] > 1 && body > self.size_limit {
-                continue;
-            }
-            inline_site(m, site, caller, callee);
-            changed = true;
+        let Some(caller) = node.graph else { return Ok(false) };
+        let callee_const = node.inputs()[0];
+        let Some(callee) = m.as_graph(callee_const) else { return Ok(false) };
+        if callee == ctx.root || callee == caller || is_recursive(m, callee) {
+            return Ok(false);
         }
-        Ok(changed)
+        if m.graph(callee).params.len() != node.inputs().len() - 1 {
+            return Ok(false); // arity error surfaces at runtime with a message
+        }
+        // Dead call sites (in graphs no longer reachable from the root) are
+        // not worth expanding — and must not distort the use counts below.
+        let live: &HashSet<GraphId> = ctx.reachable(&*m);
+        if !live.contains(&caller) {
+            return Ok(false);
+        }
+        // Live call sites of this callee, in O(degree of the interned graph
+        // constant): entries at input index 0 are callee positions. A site
+        // only counts if it is itself alive (it has users or is a return) —
+        // already-inlined sites stay wired to the constant until the GC
+        // collects them and must not inflate the multi-use count.
+        let live_sites = m
+            .uses(callee_const)
+            .iter()
+            .filter(|&&(u, i)| {
+                i == 0
+                    && m.node(u).is_apply()
+                    && !m.is_dead(u)
+                    && m.node(u).graph.map(|g| live.contains(&g)).unwrap_or(false)
+            })
+            .count();
+        let body = m.topo_order(callee).len();
+        let captures = !m.free_variables_total(callee).is_empty();
+        if body > self.policy.limit(live_sites, captures) {
+            return Ok(false);
+        }
+        inline_site(m, n, caller, callee);
+        Ok(true)
     }
 }
 
@@ -126,7 +196,16 @@ fn inline_site(m: &mut Module, site: NodeId, caller: GraphId, callee: GraphId) {
 mod tests {
     use super::*;
     use crate::ir::{Const, Prim};
+    use crate::opt::PassManager;
     use crate::vm::{compile_program, Value, Vm};
+
+    /// Fixpoint-drive just the inliner.
+    fn run_inline(m: &mut Module, root: GraphId) -> bool {
+        let mut pm = PassManager::new();
+        pm.push_local(Box::new(Inline::default()));
+        let (_, stats) = pm.run(m, root).unwrap();
+        stats.total_rewrites() > 0
+    }
 
     #[test]
     fn simple_inline() {
@@ -144,7 +223,7 @@ mod tests {
         let r = m.apply_prim(f, Prim::Add, &[call, one]);
         m.set_return(f, r);
 
-        assert!(Inline::default().run(&mut m, f).unwrap());
+        assert!(run_inline(&mut m, f));
         // After inlining, f should reach no other graph.
         let a = analyze(&m, f);
         assert_eq!(a.graphs.len(), 1, "{}", crate::ir::print_graph(&m, f, true));
@@ -165,7 +244,7 @@ mod tests {
         let rec = m.apply(f, vec![fc, x1]);
         m.set_return(f, rec);
         assert!(is_recursive(&m, f));
-        assert!(!Inline::default().run(&mut m, f).unwrap());
+        assert!(!run_inline(&mut m, f));
     }
 
     #[test]
@@ -179,7 +258,7 @@ mod tests {
         let idc = m.graph_constant(id);
         let call = m.apply(f, vec![idc, x]);
         m.set_return(f, call);
-        assert!(Inline::default().run(&mut m, f).unwrap());
+        assert!(run_inline(&mut m, f));
         assert_eq!(m.ret_of(f), x);
     }
 
@@ -197,7 +276,7 @@ mod tests {
         let call = m.apply(f, vec![tc]);
         m.set_return(f, call);
 
-        assert!(Inline::default().run(&mut m, f).unwrap());
+        assert!(run_inline(&mut m, f));
         let a = analyze(&m, f);
         assert_eq!(a.graphs.len(), 1);
         let program = compile_program(&m, f).unwrap();
@@ -218,11 +297,84 @@ mod tests {
         let c1 = m.apply(f, vec![hc, x]);
         let c2 = m.apply(f, vec![hc, c1]);
         m.set_return(f, c2);
-        let mut pass = Inline::default();
-        while pass.run(&mut m, f).unwrap() {}
+        assert!(run_inline(&mut m, f));
         assert_eq!(analyze(&m, f).graphs.len(), 1);
         let program = compile_program(&m, f).unwrap();
         let out = Vm::new(program).call_graph(f, vec![Value::F64(2.0)]).unwrap();
         assert_eq!(out.as_f64().unwrap(), 16.0); // (2²)² = 16
+    }
+
+    #[test]
+    fn big_multi_use_pure_helper_stays_a_call() {
+        // A >64-node non-capturing helper used twice must NOT inline under
+        // the default policy (it would under the legacy one).
+        let mut m = Module::new();
+        let h = m.add_graph("big");
+        let y = m.add_parameter(h, "y");
+        let mut acc = y;
+        for _ in 0..70 {
+            acc = m.apply_prim(h, Prim::Sin, &[acc]);
+        }
+        m.set_return(h, acc);
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let hc = m.graph_constant(h);
+        let c1 = m.apply(f, vec![hc, x]);
+        let c2 = m.apply(f, vec![hc, x]);
+        let r = m.apply_prim(f, Prim::Add, &[c1, c2]);
+        m.set_return(f, r);
+
+        assert!(!run_inline(&mut m, f), "default policy must keep the big helper shared");
+        let mut legacy = PassManager::new();
+        legacy.push_local(Box::new(Inline::legacy()));
+        let (_, stats) = legacy.run(&mut m, f).unwrap();
+        assert!(stats.total_rewrites() > 0, "legacy policy inlines it");
+    }
+
+    #[test]
+    fn dead_call_sites_do_not_inflate_use_counts() {
+        // A 70-node pure helper with one live site and one dead-but-wired
+        // site (the shape an already-inlined site leaves behind): the dead
+        // site must not push the live one over the multi-use limit.
+        let mut m = Module::new();
+        let h = m.add_graph("big");
+        let y = m.add_parameter(h, "y");
+        let mut acc = y;
+        for _ in 0..70 {
+            acc = m.apply_prim(h, Prim::Sin, &[acc]);
+        }
+        m.set_return(h, acc);
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let hc = m.graph_constant(h);
+        let dead_site = m.apply(f, vec![hc, x]);
+        let live_site = m.apply(f, vec![hc, x]);
+        m.set_return(f, live_site);
+        assert!(m.is_dead(dead_site));
+        assert!(run_inline(&mut m, f), "the single live site must inline as single-use");
+        assert_eq!(analyze(&m, f).graphs.len(), 1);
+    }
+
+    #[test]
+    fn big_multi_use_closure_still_inlines() {
+        // The same size at two sites, but *capturing*: the closure bonus
+        // applies (this is the backpropagator shape that must collapse).
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let h = m.add_graph("bprop");
+        let y = m.add_parameter(h, "y");
+        let mut acc = m.apply_prim(h, Prim::Mul, &[y, x]); // captures x
+        for _ in 0..70 {
+            acc = m.apply_prim(h, Prim::Sin, &[acc]);
+        }
+        m.set_return(h, acc);
+        let hc = m.graph_constant(h);
+        let c1 = m.apply(f, vec![hc, x]);
+        let c2 = m.apply(f, vec![hc, c1]);
+        m.set_return(f, c2);
+
+        assert!(run_inline(&mut m, f));
+        assert_eq!(analyze(&m, f).graphs.len(), 1);
     }
 }

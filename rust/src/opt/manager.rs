@@ -1,0 +1,597 @@
+//! The worklist-driven pass manager.
+//!
+//! The old `Optimizer` ran every pass over every reachable node of every
+//! graph, to a global fixpoint — quadratic on the blown-up graphs the AD
+//! transform emits. The [`PassManager`] replaces that loop with incremental
+//! scheduling over the module's mutation journal:
+//!
+//! * **Local passes** ([`LocalPass`]) are per-node rewrites driven by a
+//!   worklist. Each pass sees every reachable apply node exactly once on the
+//!   first round; afterwards a pass re-visits only nodes the journal reports
+//!   as changed — new applies, rewired users, call sites of graphs whose
+//!   return moved. A rewrite made by *any* pass enqueues the affected nodes
+//!   for *every* pass, so cascades (tuple unpacking exposing an inline site
+//!   exposing a fold) flow through without whole-module rescans.
+//! * **Global passes** ([`GlobalPass`]) run over the whole module (SCCP is
+//!   one: its lattice is inherently inter-procedural). They run on the first
+//!   round and then only when something changed since their last run.
+//! * **Finalizers** run exactly once after the fixpoint; the dead-graph GC
+//!   lives here because compaction invalidates node ids and therefore every
+//!   queued worklist entry.
+//!
+//! Convergence is *enforced*, not assumed: each local pass has a per-round
+//! visit budget and the driver has a round budget. Exceeding either is an
+//! error naming the pass and the last rewritten node — two fighting rewrite
+//! rules surface as a diagnostic instead of a silent infinite loop (the old
+//! driver capped iterations and silently returned a half-rewritten module).
+
+use crate::ir::{analyze, GraphId, Module, NodeId};
+use anyhow::{bail, Result};
+use std::collections::{HashSet, VecDeque};
+
+/// A per-node rewrite. `visit` is called with apply nodes only and returns
+/// whether it changed the module. Rewrites must go through the [`Module`]
+/// mutation API (`replace_all_uses`, `set_input`, `set_inputs`, `apply`,
+/// `set_return`) so the journal sees them.
+pub trait LocalPass {
+    fn name(&self) -> &'static str;
+    fn visit(&mut self, m: &mut Module, ctx: &mut PassCtx, n: NodeId) -> Result<bool>;
+}
+
+/// A whole-module pass (analysis + rewrite).
+pub trait GlobalPass {
+    fn name(&self) -> &'static str;
+    fn run(&mut self, m: &mut Module, root: GraphId) -> Result<GlobalOutcome>;
+}
+
+/// What a [`GlobalPass`] did.
+#[derive(Debug, Default)]
+pub struct GlobalOutcome {
+    pub changed: bool,
+    /// Number of individual rewrites applied.
+    pub rewrites: usize,
+    /// The last node rewritten (for non-convergence diagnostics).
+    pub last: Option<NodeId>,
+    /// Set when the pass relocated the entry graph (dead-graph GC compacts
+    /// the arena, renumbering everything).
+    pub new_root: Option<GraphId>,
+    /// Dead graphs removed (GC only).
+    pub graphs_collected: usize,
+    /// Dead arena nodes removed (GC only).
+    pub nodes_collected: usize,
+}
+
+/// Shared per-run state passes may query. The reachable-graph set is
+/// computed lazily and invalidated after every rewrite, so a pass that
+/// needs liveness (the inliner's call-site counting) pays for it only when
+/// the module actually changed.
+pub struct PassCtx {
+    pub root: GraphId,
+    reachable: Option<HashSet<GraphId>>,
+}
+
+impl PassCtx {
+    fn new(root: GraphId) -> PassCtx {
+        PassCtx { root, reachable: None }
+    }
+
+    /// Construct a context directly (unit tests of individual passes).
+    pub(crate) fn for_tests(root: GraphId) -> PassCtx {
+        PassCtx::new(root)
+    }
+
+    /// Graphs currently reachable from the root (cached until invalidated).
+    pub fn reachable(&mut self, m: &Module) -> &HashSet<GraphId> {
+        if self.reachable.is_none() {
+            self.reachable = Some(m.reachable_graphs(self.root).into_iter().collect());
+        }
+        self.reachable.as_ref().unwrap()
+    }
+
+    fn invalidate(&mut self) {
+        self.reachable = None;
+    }
+}
+
+/// Per-pass counters from one [`PassManager::run`].
+#[derive(Debug, Default, Clone)]
+pub struct PassStats {
+    pub name: &'static str,
+    /// Nodes popped off this pass's worklist (local) — the evidence that the
+    /// worklist driver visits far fewer nodes than rounds × module size.
+    pub visits: usize,
+    /// Rewrites applied.
+    pub rewrites: usize,
+    /// Times the pass body ran (global passes; 1 per seeding for local).
+    pub runs: usize,
+}
+
+/// Statistics from one optimization run, threaded into
+/// [`crate::transform::StageMetrics`] by the `Optimize` transform.
+#[derive(Debug, Default, Clone)]
+pub struct OptStats {
+    pub passes: Vec<PassStats>,
+    /// Fixpoint rounds driven.
+    pub rounds: usize,
+    pub nodes_before: usize,
+    pub nodes_after: usize,
+    /// Dead graphs removed by the GC finalizer.
+    pub graphs_collected: usize,
+    /// Dead arena nodes removed by the GC finalizer.
+    pub nodes_collected: usize,
+}
+
+impl OptStats {
+    /// Total worklist visits across all passes.
+    pub fn total_visits(&self) -> usize {
+        self.passes.iter().map(|p| p.visits).sum()
+    }
+
+    /// Total rewrites across all passes.
+    pub fn total_rewrites(&self) -> usize {
+        self.passes.iter().map(|p| p.rewrites).sum()
+    }
+}
+
+/// How worklists are (re)seeded between rounds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DriverMode {
+    /// Incremental: after round one, passes see only journaled nodes.
+    Worklist,
+    /// Every round re-seeds every pass with a full module sweep — the old
+    /// `Optimizer` cost model, kept for A/B benchmarking.
+    Rescan,
+}
+
+enum Slot {
+    Local { pass: Box<dyn LocalPass>, pending: Vec<NodeId> },
+    Global { pass: Box<dyn GlobalPass>, dirty: bool },
+}
+
+impl Slot {
+    fn name(&self) -> &'static str {
+        match self {
+            Slot::Local { pass, .. } => pass.name(),
+            Slot::Global { pass, .. } => pass.name(),
+        }
+    }
+}
+
+/// The worklist fixpoint driver. Build one with [`PassManager::standard`]
+/// (or [`crate::opt::PassSet::manager`]), or assemble a custom pipeline with
+/// `push_local` / `push_global` / `push_finalizer`.
+pub struct PassManager {
+    slots: Vec<Slot>,
+    finalizers: Vec<Box<dyn GlobalPass>>,
+    pub mode: DriverMode,
+    /// Fixpoint-round budget; exceeding it is an error, not a silent stop.
+    pub max_rounds: usize,
+    /// Per-local-pass, per-round visit budget: `base + per_node × worklist`.
+    pub visit_budget_base: usize,
+    pub visit_budget_per_node: usize,
+}
+
+impl Default for PassManager {
+    fn default() -> Self {
+        PassManager::new()
+    }
+}
+
+impl PassManager {
+    /// An empty manager (the `opt=none` arm).
+    pub fn new() -> PassManager {
+        PassManager {
+            slots: Vec::new(),
+            finalizers: Vec::new(),
+            mode: DriverMode::Worklist,
+            max_rounds: 200,
+            visit_budget_base: 4096,
+            visit_budget_per_node: 64,
+        }
+    }
+
+    /// The standard pipeline (see [`crate::opt::STANDARD_PASSES`]).
+    pub fn standard() -> PassManager {
+        let mut pm = PassManager::new();
+        pm.push_local(Box::new(super::TupleSimplify));
+        pm.push_global(Box::new(super::Sccp));
+        pm.push_local(Box::new(super::Inline::default()));
+        pm.push_local(Box::new(super::Algebraic));
+        pm.push_local(Box::new(super::ConstantFold));
+        pm.push_local(Box::new(super::Cse::default()));
+        pm.push_finalizer(Box::new(super::DeadGraphGc));
+        pm
+    }
+
+    /// The standard pipeline minus one named pass (E6 ablations).
+    pub fn standard_without(name: &str) -> PassManager {
+        let mut pm = PassManager::standard();
+        pm.slots.retain(|s| s.name() != name);
+        pm.finalizers.retain(|f| f.name() != name);
+        pm
+    }
+
+    /// The pre-worklist optimizer, emulated: the original five local passes
+    /// with the old always-inline-single-use / size-120-multi-use policy, no
+    /// SCCP, no GC, and full-rescan scheduling. Exists so benches and the
+    /// golden no-regression tests can A/B the new middle-end against the old
+    /// cost model inside one binary.
+    pub fn legacy_baseline() -> PassManager {
+        let mut pm = PassManager::new();
+        pm.mode = DriverMode::Rescan;
+        pm.push_local(Box::new(super::TupleSimplify));
+        pm.push_local(Box::new(super::Inline::legacy()));
+        pm.push_local(Box::new(super::Algebraic));
+        pm.push_local(Box::new(super::ConstantFold));
+        pm.push_local(Box::new(super::Cse::default()));
+        pm
+    }
+
+    pub fn push_local(&mut self, pass: Box<dyn LocalPass>) {
+        self.slots.push(Slot::Local { pass, pending: Vec::new() });
+    }
+
+    pub fn push_global(&mut self, pass: Box<dyn GlobalPass>) {
+        self.slots.push(Slot::Global { pass, dirty: true });
+    }
+
+    pub fn push_finalizer(&mut self, pass: Box<dyn GlobalPass>) {
+        self.finalizers.push(pass);
+    }
+
+    /// True if any stage (including finalizers) carries `name`.
+    pub fn has_pass(&self, name: &str) -> bool {
+        self.slots.iter().any(|s| s.name() == name)
+            || self.finalizers.iter().any(|f| f.name() == name)
+    }
+
+    /// Run every pass to fixpoint on everything reachable from `root`, then
+    /// the finalizers. Returns the (possibly relocated) root and statistics.
+    pub fn run(&mut self, m: &mut Module, root: GraphId) -> Result<(GraphId, OptStats)> {
+        m.begin_journal();
+        let out = self.drive(m, root);
+        m.end_journal();
+        out
+    }
+
+    fn drive(&mut self, m: &mut Module, mut root: GraphId) -> Result<(GraphId, OptStats)> {
+        let mut stats = OptStats::default();
+        for s in &self.slots {
+            stats.passes.push(PassStats { name: s.name(), ..Default::default() });
+        }
+        for f in &self.finalizers {
+            stats.passes.push(PassStats { name: f.name(), ..Default::default() });
+        }
+        stats.nodes_before = m.reachable_node_count(root);
+
+        if !self.slots.is_empty() {
+            let seed = seed_worklist(m, root);
+            for slot in &mut self.slots {
+                if let Slot::Local { pending, .. } = slot {
+                    pending.extend_from_slice(&seed);
+                }
+            }
+            self.fixpoint(m, root, &mut stats)?;
+        }
+
+        for (k, f) in self.finalizers.iter_mut().enumerate() {
+            let outcome = f.run(m, root)?;
+            let ps = &mut stats.passes[self.slots.len() + k];
+            ps.runs += 1;
+            ps.rewrites += outcome.rewrites;
+            stats.graphs_collected += outcome.graphs_collected;
+            stats.nodes_collected += outcome.nodes_collected;
+            if let Some(r) = outcome.new_root {
+                root = r;
+            }
+            m.drain_journal();
+        }
+
+        stats.nodes_after = m.reachable_node_count(root);
+        Ok((root, stats))
+    }
+
+    // The index loop is deliberate: the body needs `&mut self.slots[i]` and
+    // then `&mut self` for `distribute`, which an iterator borrow forbids.
+    #[allow(clippy::needless_range_loop)]
+    fn fixpoint(&mut self, m: &mut Module, root: GraphId, stats: &mut OptStats) -> Result<()> {
+        let (budget_base, budget_per_node) = (self.visit_budget_base, self.visit_budget_per_node);
+        let mut last_rewrite: Option<(&'static str, NodeId)> = None;
+        let mut first_round = true;
+        loop {
+            stats.rounds += 1;
+            if stats.rounds > self.max_rounds {
+                let (pn, ln) = describe(last_rewrite);
+                bail!(
+                    "optimizer did not converge after {} rounds; the last rewrite was by \
+                     pass `{pn}` on node {ln} — rewrite rules are likely fighting over one \
+                     pattern (raise PassManager::max_rounds only if the pipeline is \
+                     genuinely that deep)",
+                    self.max_rounds
+                );
+            }
+            if self.mode == DriverMode::Rescan && !first_round {
+                let seed = seed_worklist(m, root);
+                for slot in &mut self.slots {
+                    match slot {
+                        Slot::Local { pending, .. } => {
+                            pending.clear();
+                            pending.extend_from_slice(&seed);
+                        }
+                        Slot::Global { dirty, .. } => *dirty = true,
+                    }
+                }
+            }
+
+            let mut changed_any = false;
+            let mut ctx = PassCtx::new(root);
+            for i in 0..self.slots.len() {
+                let mut touched: Vec<NodeId> = Vec::new();
+                match &mut self.slots[i] {
+                    Slot::Local { pass, pending } => {
+                        if pending.is_empty() {
+                            continue;
+                        }
+                        // Drain with order-preserving dedup; the set doubles
+                        // as the in-flight filter for re-enqueues.
+                        let raw = std::mem::take(pending);
+                        let mut inflight: HashSet<NodeId> = HashSet::new();
+                        let mut work: VecDeque<NodeId> = VecDeque::new();
+                        for n in raw {
+                            if inflight.insert(n) {
+                                work.push_back(n);
+                            }
+                        }
+                        let mut budget = budget_base + budget_per_node * work.len();
+                        let mut visits = 0usize;
+                        stats.passes[i].runs += 1;
+                        while let Some(n) = work.pop_front() {
+                            inflight.remove(&n);
+                            // Skip nodes that were folded away or whose last
+                            // user was rewired since they were queued: a
+                            // journaled-but-dead node must not be rewritten
+                            // (the inliner would re-clone whole bodies into
+                            // corpses the GC then has to collect).
+                            if !m.node(n).is_apply() || m.is_dead(n) {
+                                continue;
+                            }
+                            visits += 1;
+                            if visits > budget {
+                                // Legitimate cascades grow the module (an
+                                // inline clones whole bodies onto this very
+                                // worklist); re-size against the arena as it
+                                // is NOW before declaring a fight. In-place
+                                // ping-pong adds no nodes, so it still trips.
+                                let resized =
+                                    budget_base + budget_per_node * m.num_nodes();
+                                if visits > resized {
+                                    let (pn, ln) = describe(last_rewrite);
+                                    bail!(
+                                        "optimization pass `{}` exceeded its per-round \
+                                         rewrite budget ({} visits); the last rewrite was \
+                                         by pass `{pn}` on node {ln} — a rewrite is likely \
+                                         ping-ponging with itself",
+                                        pass.name(),
+                                        budget.max(resized)
+                                    );
+                                }
+                                budget = resized;
+                            }
+                            let changed = pass.visit(m, &mut ctx, n)?;
+                            if changed {
+                                stats.passes[i].rewrites += 1;
+                                changed_any = true;
+                                last_rewrite = Some((pass.name(), n));
+                                ctx.invalidate();
+                                for j in m.drain_journal() {
+                                    touched.push(j);
+                                    if inflight.insert(j) {
+                                        work.push_back(j);
+                                    }
+                                }
+                            }
+                        }
+                        stats.passes[i].visits += visits;
+                    }
+                    Slot::Global { pass, dirty } => {
+                        if !*dirty && !first_round {
+                            continue;
+                        }
+                        *dirty = false;
+                        stats.passes[i].runs += 1;
+                        let outcome = pass.run(m, root)?;
+                        stats.passes[i].rewrites += outcome.rewrites;
+                        touched = m.drain_journal();
+                        if outcome.changed {
+                            changed_any = true;
+                            ctx.invalidate();
+                            last_rewrite =
+                                Some((pass.name(), outcome.last.unwrap_or(NodeId(0))));
+                        } else {
+                            touched.clear();
+                        }
+                    }
+                }
+                self.distribute(&touched, i);
+            }
+
+            first_round = false;
+            if !changed_any {
+                return Ok(());
+            }
+        }
+    }
+
+    /// Push journaled nodes to every *other* pass's pending list (the
+    /// originating slot already fed them into its in-flight queue) and mark
+    /// global passes dirty.
+    fn distribute(&mut self, nodes: &[NodeId], origin: usize) {
+        if nodes.is_empty() {
+            return;
+        }
+        for (j, slot) in self.slots.iter_mut().enumerate() {
+            match slot {
+                Slot::Local { pending, .. } if j != origin => pending.extend_from_slice(nodes),
+                Slot::Global { dirty, .. } => *dirty = true,
+                _ => {}
+            }
+        }
+    }
+}
+
+fn describe(last: Option<(&'static str, NodeId)>) -> (&'static str, String) {
+    match last {
+        Some((p, n)) => (p, format!("{n}")),
+        None => ("<none>", "<none>".to_string()),
+    }
+}
+
+/// All reachable apply nodes, graphs in discovery order, topologically
+/// ordered within each graph (operands before users).
+fn seed_worklist(m: &Module, root: GraphId) -> Vec<NodeId> {
+    let a = analyze(m, root);
+    let mut out = Vec::new();
+    for &g in &a.graphs {
+        out.extend_from_slice(a.order_of(g));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Const, Prim};
+
+    /// A pass that rewrites `add → sub` (test scaffolding for fights).
+    struct Flip {
+        from: Prim,
+        to: Prim,
+        name: &'static str,
+    }
+
+    impl LocalPass for Flip {
+        fn name(&self) -> &'static str {
+            self.name
+        }
+        fn visit(&mut self, m: &mut Module, _ctx: &mut PassCtx, n: NodeId) -> Result<bool> {
+            if !m.is_apply_of(n, self.from) {
+                return Ok(false);
+            }
+            let mut inputs = m.node(n).inputs().to_vec();
+            inputs[0] = m.constant(Const::Prim(self.to));
+            m.set_inputs(n, inputs);
+            Ok(true)
+        }
+    }
+
+    fn add_module() -> (Module, GraphId) {
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let r = m.apply_prim(f, Prim::Add, &[x, x]);
+        m.set_return(f, r);
+        (m, f)
+    }
+
+    #[test]
+    fn fighting_passes_hit_the_round_budget() {
+        // Pass A rewrites add→sub, pass B rewrites sub→add: each round one
+        // of them fires, forever. The driver must bail with a diagnostic
+        // naming a pass and the contested node instead of looping.
+        let (mut m, f) = add_module();
+        let mut pm = PassManager::new();
+        pm.max_rounds = 8;
+        pm.push_local(Box::new(Flip { from: Prim::Add, to: Prim::Sub, name: "a2s" }));
+        pm.push_local(Box::new(Flip { from: Prim::Sub, to: Prim::Add, name: "s2a" }));
+        let err = pm.run(&mut m, f).unwrap_err().to_string();
+        assert!(err.contains("did not converge"), "{err}");
+        assert!(err.contains("a2s") || err.contains("s2a"), "{err}");
+        assert!(err.contains('%'), "diagnostic must name the node: {err}");
+    }
+
+    /// One pass that fights itself: flips add↔sub on every visit.
+    struct SelfFight;
+
+    impl LocalPass for SelfFight {
+        fn name(&self) -> &'static str {
+            "self-fight"
+        }
+        fn visit(&mut self, m: &mut Module, _ctx: &mut PassCtx, n: NodeId) -> Result<bool> {
+            let to = if m.is_apply_of(n, Prim::Add) {
+                Prim::Sub
+            } else if m.is_apply_of(n, Prim::Sub) {
+                Prim::Add
+            } else {
+                return Ok(false);
+            };
+            let mut inputs = m.node(n).inputs().to_vec();
+            inputs[0] = m.constant(Const::Prim(to));
+            m.set_inputs(n, inputs);
+            Ok(true)
+        }
+    }
+
+    #[test]
+    fn self_fighting_pass_hits_the_visit_budget() {
+        let (mut m, f) = add_module();
+        let mut pm = PassManager::new();
+        pm.visit_budget_base = 16;
+        pm.visit_budget_per_node = 0;
+        pm.push_local(Box::new(SelfFight));
+        let err = pm.run(&mut m, f).unwrap_err().to_string();
+        assert!(err.contains("budget"), "{err}");
+        assert!(err.contains("self-fight"), "{err}");
+        assert!(err.contains('%'), "diagnostic must name the node: {err}");
+    }
+
+    #[test]
+    fn empty_manager_is_identity() {
+        let (mut m, f) = add_module();
+        let before = m.reachable_node_count(f);
+        let mut pm = PassManager::new();
+        let (root, stats) = pm.run(&mut m, f).unwrap();
+        assert_eq!(root, f);
+        assert_eq!(stats.nodes_after, before);
+        assert_eq!(stats.rounds, 0);
+    }
+
+    #[test]
+    fn worklist_and_rescan_agree() {
+        // Both drivers must reach the same normal form on a program that
+        // exercises tuples, inlining, folding and CSE.
+        fn build() -> (Module, GraphId) {
+            let mut m = Module::new();
+            let h = m.add_graph("helper");
+            let y = m.add_parameter(h, "y");
+            let two = m.constant(Const::F64(2.0));
+            let hb = m.apply_prim(h, Prim::Mul, &[y, two]);
+            m.set_return(h, hb);
+
+            let f = m.add_graph("f");
+            let x = m.add_parameter(f, "x");
+            let hc = m.graph_constant(h);
+            let call = m.apply(f, vec![hc, x]);
+            let one = m.constant(Const::F64(1.0));
+            let a = m.apply_prim(f, Prim::Mul, &[call, one]); // ×1 → call
+            let t = m.apply_prim_variadic(f, Prim::MakeTuple, &[a, x]);
+            let i0 = m.constant(Const::I64(0));
+            let g0 = m.apply_prim(f, Prim::TupleGetItem, &[t, i0]);
+            let d1 = m.apply_prim(f, Prim::Add, &[g0, g0]);
+            m.set_return(f, d1);
+            (m, f)
+        }
+        let (mut m1, f1) = build();
+        let (r1, s1) = PassManager::standard().run(&mut m1, f1).unwrap();
+        let (mut m2, f2) = build();
+        let mut rescan = PassManager::standard();
+        rescan.mode = DriverMode::Rescan;
+        let (r2, s2) = rescan.run(&mut m2, f2).unwrap();
+        assert_eq!(s1.nodes_after, s2.nodes_after);
+        assert_eq!(
+            crate::ir::print_graph(&m1, r1, true),
+            crate::ir::print_graph(&m2, r2, true)
+        );
+        m1.validate().unwrap();
+        m2.validate().unwrap();
+    }
+}

@@ -1,27 +1,68 @@
-//! The optimization pipeline (§4.3).
+//! The optimization middle-end (§4.3).
 //!
 //! "The AD transform produces graphs that are substantially larger than the
 //! original source … simplified using inlining and local optimizations."
-//! The [`Optimizer`] runs the pass list to a fixpoint; `examples/quickstart`
-//! and `benches/fig1_transform` show the Figure 1 collapse, and
-//! `benches/opt_ablation` (E6) quantifies each pass's contribution.
+//! This module is that simplifier, built as a worklist-driven pass framework
+//! over the module's incrementally-maintained def-use chains:
+//!
+//! * [`PassManager`] (in [`manager`]) schedules passes. Local passes visit
+//!   individual nodes off a worklist seeded once with a full sweep and then
+//!   fed only by the mutation journal — a rewrite re-enqueues exactly the
+//!   users it touched, for every pass, instead of triggering whole-module
+//!   rescans. Global passes (SCCP) re-run only when something changed;
+//!   finalizers (dead-graph GC) run once after the fixpoint. Convergence is
+//!   enforced by per-pass visit budgets and a round budget — fighting
+//!   rewrites produce a diagnostic naming the pass and node, never a hang.
+//! * The pass roster ([`STANDARD_PASSES`], in execution order):
+//!
+//!   | spec name        | kind      | what it does                                        |
+//!   |------------------|-----------|-----------------------------------------------------|
+//!   | `tuple-simplify` | local     | `getitem(make_tuple(..))` → element; inject/len     |
+//!   | `sccp`           | global    | sparse conditional constant propagation through     |
+//!   |                  |           | `switch` and graph-constant closures, inter-proc    |
+//!   | `inline`         | local     | closure-aware cost-model inlining ([`InlinePolicy`])|
+//!   | `algebraic`      | local     | identities, ZeroT absorption, env/switch rules      |
+//!   | `constant-fold`  | local     | pure prims on constants via the VM's `eval_prim`    |
+//!   | `cse`            | local     | per-graph common-subexpression elimination          |
+//!   | `gc`             | finalizer | arena compaction: drop graphs/nodes unreachable     |
+//!   |                  |           | from the entry (deterministic renumbering)          |
+//!
+//! * [`PassSet`] is the cheap, hashable *name* of a pass selection — the
+//!   unit the `Optimize` transform is configured with and the thing
+//!   `--pipeline=…,opt=no-inline,…` parses into. Spec keys are stable
+//!   across optimizer rewrites so existing pipeline specs keep their
+//!   fingerprints (and therefore their cache entries).
+//!
+//! `examples/quickstart` and `benches/fig1_transform` show the Figure 1
+//! collapse; `benches/opt_ablation` (E6) quantifies each pass's
+//! contribution; `benches/compile_time` (E7) A/Bs the worklist driver
+//! against [`LegacyOptimize`], the emulated pre-worklist fixpoint loop.
 
+pub mod gc;
 pub mod inline;
+pub mod manager;
 pub mod passes;
+pub mod sccp;
 
-pub use inline::Inline;
-pub use passes::{Algebraic, ConstantFold, Cse, Pass, TupleSimplify};
+pub use gc::{compact, DeadGraphGc, GcStats};
+pub use inline::{is_recursive, Inline, InlinePolicy};
+pub use manager::{
+    DriverMode, GlobalOutcome, GlobalPass, LocalPass, OptStats, PassCtx, PassManager, PassStats,
+};
+pub use passes::{value_to_const, Algebraic, ConstantFold, Cse, TupleSimplify};
+pub use sccp::Sccp;
 
-use crate::ir::{GraphId, Module};
+use crate::ir::GraphId;
+use crate::transform::{StageMetrics, Transform};
 use anyhow::{bail, Result};
 
 /// Names of every pass in the standard pipeline, in execution order.
-pub const STANDARD_PASSES: [&str; 5] =
-    ["tuple-simplify", "inline", "algebraic", "constant-fold", "cse"];
+pub const STANDARD_PASSES: [&str; 7] =
+    ["tuple-simplify", "sccp", "inline", "algebraic", "constant-fold", "cse", "gc"];
 
 /// A named, selectable set of optimization passes — the unit the `Optimize`
-/// transform is configured with. Unlike a bare [`Optimizer`], a `PassSet` is
-/// cheap to clone, hash and fingerprint, so pipelines that differ only in
+/// transform is configured with. Unlike a bare [`PassManager`], a `PassSet`
+/// is cheap to clone, hash and fingerprint, so pipelines that differ only in
 /// their pass selection get distinct cache entries.
 #[derive(Debug, Clone, PartialEq, Eq, Hash, Default)]
 pub enum PassSet {
@@ -35,12 +76,12 @@ pub enum PassSet {
 }
 
 impl PassSet {
-    /// Instantiate the optimizer this set describes.
-    pub fn optimizer(&self) -> Optimizer {
+    /// Instantiate the pass manager this set describes.
+    pub fn manager(&self) -> PassManager {
         match self {
-            PassSet::Standard => Optimizer::standard(),
-            PassSet::Without(name) => Optimizer::without(name),
-            PassSet::None => Optimizer::none(),
+            PassSet::Standard => PassManager::standard(),
+            PassSet::Without(name) => PassManager::standard_without(name),
+            PassSet::None => PassManager::new(),
         }
     }
 
@@ -53,9 +94,9 @@ impl PassSet {
         }
     }
 
-    /// Check that every pass this set names exists. `Optimizer::without`
-    /// silently removes nothing on a typo, so both [`PassSet::parse`] and
-    /// pipeline building route through this.
+    /// Check that every pass this set names exists.
+    /// `PassManager::standard_without` silently removes nothing on a typo,
+    /// so both [`PassSet::parse`] and pipeline building route through this.
     pub fn validate(&self) -> Result<()> {
         if let PassSet::Without(name) = self {
             if !STANDARD_PASSES.contains(&name.as_str()) {
@@ -84,72 +125,61 @@ impl PassSet {
     }
 }
 
-/// Per-pass change counts from an optimization run.
-#[derive(Debug, Default, Clone)]
-pub struct OptStats {
-    /// (pass name, number of fixpoint iterations in which it fired)
-    pub fired: Vec<(&'static str, usize)>,
-    pub iterations: usize,
-}
+/// The emulated pre-worklist optimizer as a pipeline [`Transform`]: the
+/// original five local passes under full-rescan scheduling with the
+/// always-inline policy — no SCCP, no GC. This is the "old fixpoint loop"
+/// arm of `benches/compile_time` and the baseline the golden-IR tests
+/// compare node counts against; it is *not* part of any `PassSet` spec.
+pub struct LegacyOptimize;
 
-/// The standard pass pipeline with a fixpoint driver.
-pub struct Optimizer {
-    passes: Vec<Box<dyn Pass>>,
-    pub max_iterations: usize,
-}
+impl Transform for LegacyOptimize {
+    fn name(&self) -> &'static str {
+        "legacy-optimize"
+    }
 
-impl Default for Optimizer {
-    fn default() -> Self {
-        Optimizer::standard()
+    fn key(&self) -> String {
+        "opt=legacy-baseline".to_string()
+    }
+
+    fn apply(&self, m: &mut crate::ir::Module, entry: GraphId, stage: &mut StageMetrics) -> Result<GraphId> {
+        let mut pm = PassManager::legacy_baseline();
+        let (root, stats) = pm.run(m, entry)?;
+        stage.detail.push(("iterations".to_string(), stats.rounds));
+        stage.detail.push(("visits".to_string(), stats.total_visits()));
+        stage.detail.push(("rewrites".to_string(), stats.total_rewrites()));
+        Ok(root)
     }
 }
 
-impl Optimizer {
-    /// The full pipeline used by the coordinator.
-    pub fn standard() -> Optimizer {
-        Optimizer {
-            passes: vec![
-                Box::new(TupleSimplify),
-                Box::new(Inline::default()),
-                Box::new(Algebraic),
-                Box::new(ConstantFold),
-                Box::new(Cse),
-            ],
-            max_iterations: 100,
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pass_set_keys_round_trip() {
+        for set in [
+            PassSet::Standard,
+            PassSet::None,
+            PassSet::Without("sccp".to_string()),
+            PassSet::Without("gc".to_string()),
+            PassSet::Without("inline".to_string()),
+        ] {
+            assert_eq!(PassSet::parse(&set.key()).unwrap(), set);
         }
+        assert!(PassSet::parse("no-such-pass").is_err());
     }
 
-    /// A pipeline with one named pass disabled (E6 ablations).
-    pub fn without(pass_name: &str) -> Optimizer {
-        let mut o = Optimizer::standard();
-        o.passes.retain(|p| p.name() != pass_name);
-        o
-    }
-
-    /// An empty pipeline (the "no optimization" arm of E6).
-    pub fn none() -> Optimizer {
-        Optimizer { passes: Vec::new(), max_iterations: 1 }
-    }
-
-    /// Run all passes to fixpoint on everything reachable from `root`.
-    pub fn run(&mut self, m: &mut Module, root: GraphId) -> Result<OptStats> {
-        let mut stats = OptStats::default();
-        for p in &self.passes {
-            stats.fired.push((p.name(), 0));
+    #[test]
+    fn every_standard_pass_is_ablatable() {
+        for name in STANDARD_PASSES {
+            let set = PassSet::Without(name.to_string());
+            set.validate().unwrap();
+            let pm = set.manager();
+            assert!(!pm.has_pass(name), "`{name}` must be removed by no-{name}");
         }
-        for _ in 0..self.max_iterations {
-            stats.iterations += 1;
-            let mut changed = false;
-            for (i, pass) in self.passes.iter_mut().enumerate() {
-                if pass.run(m, root)? {
-                    changed = true;
-                    stats.fired[i].1 += 1;
-                }
-            }
-            if !changed {
-                break;
-            }
+        let full = PassSet::Standard.manager();
+        for name in STANDARD_PASSES {
+            assert!(full.has_pass(name), "standard pipeline must carry `{name}`");
         }
-        Ok(stats)
     }
 }

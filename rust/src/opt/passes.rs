@@ -3,75 +3,68 @@
 //! "These graphs typically contain many computations that are not necessary,
 //! such as gradients with respect to constants, and a lot of tuple packing
 //! and unpacking. These graphs can be simplified using inlining and local
-//! optimizations." The passes here are the local half; inlining lives in
-//! `super::inline`. Dead code needs no pass at all: reachability *is* the
-//! graph representation, so replacing a use cuts the dead subtree (Figure 1:
-//! "All unused computations are cut").
+//! optimizations." The passes here are the per-node half, written against
+//! the worklist API ([`LocalPass`]): each `visit` inspects one apply node
+//! and rewrites through the journaling [`Module`] mutators, so the
+//! [`super::PassManager`] can re-enqueue exactly the affected users. Dead
+//! code needs no pass at all: reachability *is* the graph representation,
+//! so replacing a use cuts the dead subtree (Figure 1: "All unused
+//! computations are cut"); the arena-level corpse collection happens once,
+//! in [`super::DeadGraphGc`].
 
-use crate::ir::{analyze, Const, GraphId, Module, NodeId, Prim};
+use super::manager::{LocalPass, PassCtx};
+use crate::ir::{Const, GraphId, Module, NodeId, Prim};
 use crate::vm::{compile::const_value, eval_prim, Value};
 use anyhow::Result;
 use std::collections::HashMap;
-
-/// A rewriting pass. Returns true if anything changed.
-pub trait Pass {
-    fn name(&self) -> &'static str;
-    fn run(&mut self, m: &mut Module, root: GraphId) -> Result<bool>;
-}
 
 /// `tuple_getitem(make_tuple(a, b, ..), i)` → element; plus the inject and
 /// len variants. This is the pass that exposes backpropagator call sites to
 /// the inliner (the `(result, bprop)` pairs of §3.2 get unpacked statically).
 pub struct TupleSimplify;
 
-impl Pass for TupleSimplify {
+impl LocalPass for TupleSimplify {
     fn name(&self) -> &'static str {
         "tuple-simplify"
     }
 
-    fn run(&mut self, m: &mut Module, root: GraphId) -> Result<bool> {
-        let analysis = analyze(m, root);
-        let mut changed = false;
-        for &g in &analysis.graphs {
-            for &n in analysis.order_of(g) {
-                if !m.is_apply_of(n, Prim::TupleGetItem) && !m.is_apply_of(n, Prim::TupleLen) {
-                    continue;
-                }
-                let inputs = m.node(n).inputs().to_vec();
-                let src = inputs[1];
-                if m.is_apply_of(n, Prim::TupleLen) {
-                    if m.is_apply_of(src, Prim::MakeTuple) {
-                        let len = m.node(src).inputs().len() - 1;
-                        let c = m.constant(Const::I64(len as i64));
-                        m.replace_all_uses(n, c);
-                        changed = true;
-                    }
-                    continue;
-                }
-                // tuple_getitem with constant index
-                let Some(Const::I64(i)) = m.node(inputs[2]).constant().cloned() else {
-                    continue;
-                };
-                if m.is_apply_of(src, Prim::MakeTuple) {
-                    let items = m.node(src).inputs()[1..].to_vec();
-                    let len = items.len() as i64;
-                    let idx = if i < 0 { i + len } else { i };
-                    if idx >= 0 && idx < len {
-                        m.replace_all_uses(n, items[idx as usize]);
-                        changed = true;
-                    }
-                } else if m.is_apply_of(src, Prim::TupleInject) {
-                    // getitem(inject(j, n, v), i) → v if i==j else ZeroT
-                    let inj = m.node(src).inputs().to_vec();
-                    if let Some(Const::I64(j)) = m.node(inj[1]).constant().cloned() {
-                        let r = if i == j { inj[3] } else { m.constant(Const::ZeroT) };
-                        m.replace_all_uses(n, r);
-                        changed = true;
-                    }
-                }
+    fn visit(&mut self, m: &mut Module, _ctx: &mut PassCtx, n: NodeId) -> Result<bool> {
+        if !m.is_apply_of(n, Prim::TupleGetItem) && !m.is_apply_of(n, Prim::TupleLen) {
+            return Ok(false);
+        }
+        let inputs = m.node(n).inputs().to_vec();
+        let src = inputs[1];
+        if m.is_apply_of(n, Prim::TupleLen) {
+            if m.is_apply_of(src, Prim::MakeTuple) {
+                let len = m.node(src).inputs().len() - 1;
+                let c = m.constant(Const::I64(len as i64));
+                m.replace_all_uses(n, c);
+                return Ok(true);
+            }
+            return Ok(false);
+        }
+        // tuple_getitem with constant index
+        let Some(Const::I64(i)) = m.node(inputs[2]).constant().cloned() else {
+            return Ok(false);
+        };
+        if m.is_apply_of(src, Prim::MakeTuple) {
+            let items = m.node(src).inputs()[1..].to_vec();
+            let len = items.len() as i64;
+            let idx = if i < 0 { i + len } else { i };
+            if idx >= 0 && idx < len {
+                m.replace_all_uses(n, items[idx as usize]);
+                return Ok(true);
+            }
+        } else if m.is_apply_of(src, Prim::TupleInject) {
+            // getitem(inject(j, n, v), i) → v if i==j else ZeroT
+            let inj = m.node(src).inputs().to_vec();
+            if let Some(Const::I64(j)) = m.node(inj[1]).constant().cloned() {
+                let r = if i == j { inj[3] } else { m.constant(Const::ZeroT) };
+                m.replace_all_uses(n, r);
+                return Ok(true);
             }
         }
-        Ok(changed)
+        Ok(false)
     }
 }
 
@@ -80,23 +73,19 @@ impl Pass for TupleSimplify {
 /// constants, empty envs) once inlining has flattened the calls.
 pub struct Algebraic;
 
-impl Pass for Algebraic {
+impl LocalPass for Algebraic {
     fn name(&self) -> &'static str {
         "algebraic"
     }
 
-    fn run(&mut self, m: &mut Module, root: GraphId) -> Result<bool> {
-        let analysis = analyze(m, root);
-        let mut changed = false;
-        for &g in &analysis.graphs {
-            for &n in analysis.order_of(g) {
-                if let Some(repl) = self.rewrite(m, n) {
-                    m.replace_all_uses(n, repl);
-                    changed = true;
-                }
+    fn visit(&mut self, m: &mut Module, _ctx: &mut PassCtx, n: NodeId) -> Result<bool> {
+        match self.rewrite(m, n) {
+            Some(repl) => {
+                m.replace_all_uses(n, repl);
+                Ok(true)
             }
+            None => Ok(false),
         }
-        Ok(changed)
     }
 }
 
@@ -285,40 +274,36 @@ fn definitely_not_zerot(m: &Module, n: NodeId, depth: usize) -> bool {
 /// compile time via the VM's own `eval_prim` (one evaluator, no drift).
 pub struct ConstantFold;
 
-impl Pass for ConstantFold {
+impl LocalPass for ConstantFold {
     fn name(&self) -> &'static str {
         "constant-fold"
     }
 
-    fn run(&mut self, m: &mut Module, root: GraphId) -> Result<bool> {
-        let analysis = analyze(m, root);
-        let mut changed = false;
-        for &g in &analysis.graphs {
-            for &n in analysis.order_of(g) {
-                let node = m.node(n);
-                let Some(p) = m.as_prim(node.inputs()[0]) else { continue };
-                if !p.is_pure() || matches!(p, Prim::Switch) {
-                    continue;
-                }
-                let args = node.inputs()[1..].to_vec();
-                let const_args: Option<Vec<Value>> = args
-                    .iter()
-                    .map(|&a| {
-                        m.node(a).constant().and_then(|c| match c {
-                            Const::Graph(_) | Const::Macro(_) => None,
-                            other => Some(const_value(other)),
-                        })
-                    })
-                    .collect();
-                let Some(vals) = const_args else { continue };
-                let Ok(result) = eval_prim(p, &vals) else { continue };
-                let Some(c) = value_to_const(&result) else { continue };
-                let cn = m.constant(c);
-                m.replace_all_uses(n, cn);
-                changed = true;
-            }
+    fn visit(&mut self, m: &mut Module, _ctx: &mut PassCtx, n: NodeId) -> Result<bool> {
+        let node = m.node(n);
+        if !node.is_apply() {
+            return Ok(false);
         }
-        Ok(changed)
+        let Some(p) = m.as_prim(node.inputs()[0]) else { return Ok(false) };
+        if !p.is_pure() || matches!(p, Prim::Switch) {
+            return Ok(false);
+        }
+        let args = node.inputs()[1..].to_vec();
+        let const_args: Option<Vec<Value>> = args
+            .iter()
+            .map(|&a| {
+                m.node(a).constant().and_then(|c| match c {
+                    Const::Graph(_) | Const::Macro(_) => None,
+                    other => Some(const_value(other)),
+                })
+            })
+            .collect();
+        let Some(vals) = const_args else { return Ok(false) };
+        let Ok(result) = eval_prim(p, &vals) else { return Ok(false) };
+        let Some(c) = value_to_const(&result) else { return Ok(false) };
+        let cn = m.constant(c);
+        m.replace_all_uses(n, cn);
+        Ok(true)
     }
 }
 
@@ -338,53 +323,69 @@ pub fn value_to_const(v: &Value) -> Option<Const> {
 }
 
 /// Common-subexpression elimination within each graph: identical pure
-/// applications of the same callee on the same inputs merge.
-pub struct Cse;
+/// applications of the same callee on the same inputs merge. The candidate
+/// map persists across worklist visits; entries are re-validated on hit
+/// because earlier rewrites may have retargeted a recorded node's inputs.
+#[derive(Default)]
+pub struct Cse {
+    seen: HashMap<(GraphId, Vec<NodeId>), NodeId>,
+}
 
-impl Pass for Cse {
+impl LocalPass for Cse {
     fn name(&self) -> &'static str {
         "cse"
     }
 
-    fn run(&mut self, m: &mut Module, root: GraphId) -> Result<bool> {
-        let analysis = analyze(m, root);
-        let mut changed = false;
-        for &g in &analysis.graphs {
-            let mut seen: HashMap<Vec<NodeId>, NodeId> = HashMap::new();
-            for &n in analysis.order_of(g) {
-                let node = m.node(n);
-                // Only pure prim applications (calls to graphs could be
-                // impure through Print and are compile-relevant for AD).
-                match m.as_prim(node.inputs()[0]) {
-                    Some(p) if p.is_pure() => {}
-                    _ => continue,
+    fn visit(&mut self, m: &mut Module, _ctx: &mut PassCtx, n: NodeId) -> Result<bool> {
+        let node = m.node(n);
+        let Some(g) = node.graph else { return Ok(false) };
+        // Only pure prim applications (calls to graphs could be impure
+        // through Print and are compile-relevant for AD).
+        match m.as_prim(node.inputs()[0]) {
+            Some(p) if p.is_pure() => {}
+            _ => return Ok(false),
+        }
+        let key = (g, node.inputs().to_vec());
+        match self.seen.get(&key).copied() {
+            Some(prev) if prev != n => {
+                let pnode = m.node(prev);
+                let valid =
+                    pnode.is_apply() && pnode.graph == Some(g) && pnode.inputs() == &key.1[..];
+                if valid {
+                    m.replace_all_uses(n, prev);
+                    return Ok(true);
                 }
-                let key = node.inputs().to_vec();
-                match seen.get(&key) {
-                    Some(&prev) if prev != n => {
-                        m.replace_all_uses(n, prev);
-                        changed = true;
-                    }
-                    Some(_) => {}
-                    None => {
-                        seen.insert(key, n);
-                    }
-                }
+                // The recorded candidate was rewritten since; adopt n.
+                self.seen.insert(key, n);
+                Ok(false)
+            }
+            Some(_) => Ok(false),
+            None => {
+                self.seen.insert(key, n);
+                Ok(false)
             }
         }
-        Ok(changed)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::opt::PassManager;
 
     fn setup() -> (Module, GraphId, NodeId) {
         let mut m = Module::new();
         let f = m.add_graph("f");
         let x = m.add_parameter(f, "x");
         (m, f, x)
+    }
+
+    /// Drive a single local pass to fixpoint through a bare manager.
+    fn run_one(pass: Box<dyn LocalPass>, m: &mut Module, root: GraphId) -> bool {
+        let mut pm = PassManager::new();
+        pm.push_local(pass);
+        let (_, stats) = pm.run(m, root).unwrap();
+        stats.total_rewrites() > 0
     }
 
     #[test]
@@ -396,7 +397,7 @@ mod tests {
         let get = m.apply_prim(f, Prim::TupleGetItem, &[t, i1]);
         let r = m.apply_prim(f, Prim::Mul, &[get, x]);
         m.set_return(f, r);
-        assert!(TupleSimplify.run(&mut m, f).unwrap());
+        assert!(run_one(Box::new(TupleSimplify), &mut m, f));
         let mul = m.ret_of(f);
         assert_eq!(m.node(mul).inputs()[1], two, "getitem folded to the element");
     }
@@ -411,7 +412,7 @@ mod tests {
         let zt = m.constant(Const::ZeroT);
         let c = m.apply_prim(f, Prim::Gadd, &[b, zt]); // gadd ZeroT → x
         m.set_return(f, c);
-        while Algebraic.run(&mut m, f).unwrap() {}
+        assert!(run_one(Box::new(Algebraic), &mut m, f));
         assert_eq!(m.ret_of(f), x);
     }
 
@@ -425,7 +426,7 @@ mod tests {
         let e2 = m.apply_prim(f, Prim::EnvSetItem, &[e1, k2, x]);
         let got = m.apply_prim(f, Prim::EnvGetItem, &[e2, k1]);
         m.set_return(f, got);
-        while Algebraic.run(&mut m, f).unwrap() {}
+        assert!(run_one(Box::new(Algebraic), &mut m, f));
         assert_eq!(m.ret_of(f), x, "{}", crate::ir::print_graph(&m, f, false));
         // getitem of a missing key folds to ZeroT
         let (mut m, f, _x) = setup();
@@ -433,7 +434,7 @@ mod tests {
         let k = m.constant(Const::Key(9));
         let got = m.apply_prim(f, Prim::EnvGetItem, &[e0, k]);
         m.set_return(f, got);
-        while Algebraic.run(&mut m, f).unwrap() {}
+        assert!(run_one(Box::new(Algebraic), &mut m, f));
         assert!(matches!(m.node(m.ret_of(f)).constant(), Some(Const::ZeroT)));
     }
 
@@ -444,7 +445,7 @@ mod tests {
         let y = m.apply_prim(f, Prim::Neg, &[x]);
         let sw = m.apply_prim(f, Prim::Switch, &[t, x, y]);
         m.set_return(f, sw);
-        assert!(Algebraic.run(&mut m, f).unwrap());
+        assert!(run_one(Box::new(Algebraic), &mut m, f));
         assert_eq!(m.ret_of(f), x);
     }
 
@@ -456,7 +457,7 @@ mod tests {
         let s = m.apply_prim(f, Prim::Add, &[a, b]);
         let r = m.apply_prim(f, Prim::Mul, &[x, s]);
         m.set_return(f, r);
-        assert!(ConstantFold.run(&mut m, f).unwrap());
+        assert!(run_one(Box::new(ConstantFold), &mut m, f));
         let mul = m.ret_of(f);
         assert!(matches!(m.node(m.node(mul).inputs()[2]).constant(), Some(Const::F64(v)) if *v == 7.0));
     }
@@ -467,7 +468,7 @@ mod tests {
         let msg = m.constant(Const::Str("hi".into()));
         let p = m.apply_prim(f, Prim::Print, &[msg]);
         m.set_return(f, p);
-        assert!(!ConstantFold.run(&mut m, f).unwrap());
+        assert!(!run_one(Box::new(ConstantFold), &mut m, f));
     }
 
     #[test]
@@ -477,8 +478,38 @@ mod tests {
         let b = m.apply_prim(f, Prim::Mul, &[x, x]);
         let r = m.apply_prim(f, Prim::Add, &[a, b]);
         m.set_return(f, r);
-        assert!(Cse.run(&mut m, f).unwrap());
+        assert!(run_one(Box::new(Cse::default()), &mut m, f));
         let add = m.ret_of(f);
         assert_eq!(m.node(add).inputs()[1], m.node(add).inputs()[2]);
+    }
+
+    #[test]
+    fn cse_revalidates_stale_candidates() {
+        // Record a node, rewrite its inputs, then present a node with the
+        // old key: the stale candidate must not be used as a replacement.
+        let (mut m, f, x) = setup();
+        let a = m.apply_prim(f, Prim::Mul, &[x, x]);
+        let one = m.constant(Const::F64(1.0));
+        let r = m.apply_prim(f, Prim::Add, &[a, one]);
+        m.set_return(f, r);
+
+        let mut cse = Cse::default();
+        let mut ctx = test_ctx(f);
+        assert!(!cse.visit(&mut m, &mut ctx, a).unwrap()); // records a
+        // Retarget a's inputs: key (f, [mul, x, x]) is now stale.
+        let two = m.constant(Const::F64(2.0));
+        m.set_input(a, 2, two);
+        // A genuinely mul(x,x) node must NOT merge into the rewritten a.
+        let fresh = m.apply_prim(f, Prim::Mul, &[x, x]);
+        let r2 = m.apply_prim(f, Prim::Add, &[fresh, r]);
+        m.set_return(f, r2);
+        assert!(!cse.visit(&mut m, &mut ctx, fresh).unwrap());
+        assert!(m.is_apply_of(m.node(r2).inputs()[1], Prim::Mul));
+        m.validate().unwrap();
+    }
+
+    /// Build a PassCtx for direct-visit tests.
+    fn test_ctx(root: GraphId) -> PassCtx {
+        PassCtx::for_tests(root)
     }
 }

@@ -1,0 +1,619 @@
+//! Sparse conditional constant propagation (SCCP) over the closure IR.
+//!
+//! Classic SCCP (Wegman–Zadeck) generalized to the paper's graph IR, where
+//! "control flow" is `switch` selecting between *graph-constant closures*
+//! that are subsequently called:
+//!
+//! * Every node carries a three-point lattice value: ⊤ (not yet known),
+//!   `Val(c)` (provably the constant `c` on every execution), ⊥ (varies).
+//!   First-class functions participate: `Val(Const::Graph(g))` flows through
+//!   calls, switches and parameters like any other constant.
+//! * Calls whose callee lattice resolves to a known graph propagate argument
+//!   values into that graph's parameters (met over all known call sites) and
+//!   read the callee's return lattice back — inter-procedural propagation
+//!   *without* inlining, which is what makes constants travel through
+//!   recursive graphs the inliner must never touch.
+//! * `switch` with a proven-constant condition only propagates the taken
+//!   branch (the "conditional" in SCCP); with an unknown condition the arms
+//!   meet. A closure that loses its identity in a meet *escapes*: its
+//!   parameters drop to ⊥ because unknown callers may now reach it. The
+//!   same applies to closures stored into tuples/envs or passed to unknown
+//!   callees.
+//!
+//! After the fixpoint, nodes with `Val` lattice are replaced by interned
+//! constants, switches with proven conditions fold to the taken arm, and
+//! parameters of non-escaped graphs that receive one single value at every
+//! call site are substituted. Calls are only folded when the callee's body
+//! is transitively pure (no `print`/`raise` is deleted).
+
+use super::manager::{GlobalOutcome, GlobalPass};
+use super::passes::value_to_const;
+use crate::ir::{analyze, Const, GraphId, Module, NodeId, Prim};
+use crate::vm::{compile::const_value, eval_prim};
+use anyhow::{bail, Result};
+use std::collections::{HashMap, HashSet};
+
+/// The three-point constant lattice.
+#[derive(Debug, Clone, PartialEq)]
+enum Lat {
+    /// Optimistic: no evidence yet (unreached code keeps ⊤ forever).
+    Top,
+    /// Provably this constant on every execution.
+    Val(Const),
+    /// Varies at runtime.
+    Bot,
+}
+
+/// The solved lattice, consumed by the rewrite phase.
+struct Solution {
+    lat: HashMap<NodeId, Lat>,
+    param_lat: HashMap<NodeId, Lat>,
+    /// Graphs whose bodies can execute, in deterministic discovery order.
+    invoked: Vec<GraphId>,
+    escaped: HashSet<GraphId>,
+    /// Per-graph closed topological order (from the scope analysis).
+    orders: HashMap<GraphId, Vec<NodeId>>,
+    /// Graphs that (transitively) may execute an impure primitive.
+    impure: HashSet<GraphId>,
+}
+
+struct Solver<'m> {
+    m: &'m Module,
+    root: GraphId,
+    lat: HashMap<NodeId, Lat>,
+    param_lat: HashMap<NodeId, Lat>,
+    invoked: Vec<GraphId>,
+    invoked_set: HashSet<GraphId>,
+    escaped: HashSet<GraphId>,
+    orders: HashMap<GraphId, Vec<NodeId>>,
+    changed: bool,
+}
+
+impl<'m> Solver<'m> {
+    fn value_of(&self, n: NodeId) -> Lat {
+        let node = self.m.node(n);
+        if let Some(c) = node.constant() {
+            return Lat::Val(c.clone());
+        }
+        if node.is_parameter() {
+            return self.param_lat.get(&n).cloned().unwrap_or(Lat::Top);
+        }
+        self.lat.get(&n).cloned().unwrap_or(Lat::Top)
+    }
+
+    fn invoke(&mut self, g: GraphId) {
+        if self.invoked_set.insert(g) {
+            self.invoked.push(g);
+            self.changed = true;
+        }
+    }
+
+    /// Unknown callers may reach `g`: its parameters are unknowable. Any
+    /// closure a previous call site had merged into a parameter now flows
+    /// to unknown code too, so it escapes transitively. Once escaped,
+    /// parameters stay ⊥ forever (`eval_call` never re-merges them), so
+    /// the stomp runs only on the first escape — and each parameter is
+    /// lowered to ⊥ *before* its old value is escaped, so a closure that
+    /// (transitively) references its own graph cannot recurse back in.
+    fn escape(&mut self, g: GraphId) {
+        self.invoke(g);
+        if !self.escaped.insert(g) {
+            return;
+        }
+        self.changed = true;
+        for &p in &self.m.graph(g).params.clone() {
+            let old = self.param_lat.get(&p).cloned();
+            if old != Some(Lat::Bot) {
+                self.param_lat.insert(p, Lat::Bot);
+                self.changed = true;
+                if let Some(v) = old {
+                    self.escape_if_graph(&v);
+                }
+            }
+        }
+    }
+
+    fn escape_if_graph(&mut self, l: &Lat) {
+        if let Lat::Val(Const::Graph(h)) = l {
+            self.escape(*h);
+        }
+    }
+
+    /// Lattice meet. Losing a closure's identity escapes it (unknown code
+    /// may call the merged value).
+    fn meet(&mut self, a: Lat, b: Lat) -> Lat {
+        match (a, b) {
+            (Lat::Top, x) | (x, Lat::Top) => x,
+            (Lat::Bot, x) | (x, Lat::Bot) => {
+                self.escape_if_graph(&x);
+                Lat::Bot
+            }
+            (Lat::Val(x), Lat::Val(y)) => {
+                if x == y {
+                    Lat::Val(x)
+                } else {
+                    self.escape_if_graph(&Lat::Val(x));
+                    self.escape_if_graph(&Lat::Val(y));
+                    Lat::Bot
+                }
+            }
+        }
+    }
+
+    fn eval_prim_node(&mut self, p: Prim, args: &[NodeId]) -> Lat {
+        if p == Prim::Switch {
+            if args.len() != 3 {
+                return Lat::Bot; // malformed: runtime arity error
+            }
+            return match self.value_of(args[0]) {
+                Lat::Top => Lat::Top,
+                Lat::Val(Const::Bool(b)) => self.value_of(if b { args[1] } else { args[2] }),
+                Lat::Val(_) => Lat::Bot, // non-bool condition: runtime error
+                Lat::Bot => {
+                    let t = self.value_of(args[1]);
+                    let f = self.value_of(args[2]);
+                    self.meet(t, f)
+                }
+            };
+        }
+        // A closure flowing into a data primitive (tuple/env/partial/…)
+        // escapes: we do not track element-wise structure.
+        for &a in args {
+            let v = self.value_of(a);
+            self.escape_if_graph(&v);
+        }
+        if !p.is_pure() {
+            return Lat::Bot;
+        }
+        let mut vals = Vec::with_capacity(args.len());
+        for &a in args {
+            match self.value_of(a) {
+                Lat::Top => return Lat::Top,
+                Lat::Bot => return Lat::Bot,
+                Lat::Val(c) => match c {
+                    Const::Graph(_) | Const::Macro(_) => return Lat::Bot,
+                    other => vals.push(const_value(&other)),
+                },
+            }
+        }
+        match eval_prim(p, &vals) {
+            Ok(v) => match value_to_const(&v) {
+                Some(c) => Lat::Val(c),
+                None => Lat::Bot,
+            },
+            Err(_) => Lat::Bot,
+        }
+    }
+
+    fn eval_call(&mut self, h: GraphId, args: &[NodeId]) -> Lat {
+        self.invoke(h);
+        let params = self.m.graph(h).params.clone();
+        if params.len() != args.len() {
+            return Lat::Bot; // arity error surfaces at runtime
+        }
+        if self.escaped.contains(&h) {
+            // The callee's parameters are already ⊥, but closures passed
+            // here enter an escaped context — unknown code inside `h` (or
+            // whatever `h` forwards them to) may call them.
+            for &a in args {
+                let v = self.value_of(a);
+                self.escape_if_graph(&v);
+            }
+        } else {
+            for (&p, &a) in params.iter().zip(args.iter()) {
+                let av = self.value_of(a);
+                let old = self.param_lat.get(&p).cloned().unwrap_or(Lat::Top);
+                let merged = self.meet(old.clone(), av);
+                if merged != old {
+                    self.param_lat.insert(p, merged);
+                    self.changed = true;
+                }
+            }
+        }
+        match self.m.graph(h).ret {
+            Some(r) => self.value_of(r),
+            None => Lat::Bot,
+        }
+    }
+
+    fn eval_apply(&mut self, n: NodeId) {
+        let inputs = self.m.node(n).inputs().to_vec();
+        let callee = self.value_of(inputs[0]);
+        let new = match callee {
+            Lat::Top => Lat::Top,
+            Lat::Val(Const::Prim(p)) => self.eval_prim_node(p, &inputs[1..]),
+            Lat::Val(Const::Graph(h)) => self.eval_call(h, &inputs[1..]),
+            Lat::Val(_) => Lat::Bot, // calling a non-function: runtime error
+            Lat::Bot => {
+                // Unknown callee: closure arguments may be called anywhere.
+                for &a in &inputs[1..] {
+                    let v = self.value_of(a);
+                    self.escape_if_graph(&v);
+                }
+                Lat::Bot
+            }
+        };
+        let old = self.lat.get(&n).cloned().unwrap_or(Lat::Top);
+        let merged = self.meet(old.clone(), new);
+        if merged != old {
+            self.lat.insert(n, merged);
+            self.changed = true;
+        }
+    }
+
+    fn solve(mut self) -> Result<Solution> {
+        // The root is called from the outside: unknown arguments, and its
+        // return value flows to unknown code.
+        self.escape(self.root);
+        let mut sweeps = 0usize;
+        loop {
+            self.changed = false;
+            let mut i = 0;
+            while i < self.invoked.len() {
+                let g = self.invoked[i];
+                i += 1;
+                let order = self.orders.get(&g).cloned().unwrap_or_default();
+                for n in order {
+                    self.eval_apply(n);
+                }
+                // Closures returned from escaped graphs flow to unknown
+                // callers and escape with them.
+                if self.escaped.contains(&g) {
+                    if let Some(r) = self.m.graph(g).ret {
+                        let v = self.value_of(r);
+                        self.escape_if_graph(&v);
+                    }
+                }
+            }
+            if !self.changed {
+                break;
+            }
+            sweeps += 1;
+            if sweeps > 10_000 {
+                bail!("sccp failed to reach a fixpoint (lattice is not descending — bug)");
+            }
+        }
+        let impure = impure_graphs(self.m, &self.orders);
+        Ok(Solution {
+            lat: self.lat,
+            param_lat: self.param_lat,
+            invoked: self.invoked,
+            escaped: self.escaped,
+            orders: self.orders,
+            impure,
+        })
+    }
+}
+
+/// Graphs that may (transitively) execute `print`/`raise`. Conservative:
+/// referencing an impure graph counts, whether or not the reference is a
+/// taken branch.
+fn impure_graphs(m: &Module, orders: &HashMap<GraphId, Vec<NodeId>>) -> HashSet<GraphId> {
+    let mut impure: HashSet<GraphId> = HashSet::new();
+    for (&g, order) in orders {
+        let own_impure = order.iter().any(|&n| {
+            m.as_prim(m.node(n).inputs()[0]).map(|p| !p.is_pure()).unwrap_or(false)
+        });
+        if own_impure {
+            impure.insert(g);
+        }
+    }
+    // Propagate up the reference relation to a fixpoint.
+    let gs: Vec<GraphId> = orders.keys().copied().collect();
+    loop {
+        let mut changed = false;
+        for &g in &gs {
+            if impure.contains(&g) {
+                continue;
+            }
+            if m.graphs_used_by(g).iter().any(|h| impure.contains(h)) {
+                impure.insert(g);
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    impure
+}
+
+/// A constant the rewrite phase may materialize. Closures are only movable
+/// when closed (no captures): a graph constant's implicit environment is its
+/// free-variable pointers, which are position-independent only when empty.
+fn replaceable(m: &Module, c: &Const) -> bool {
+    match c {
+        Const::Macro(_) => false,
+        Const::Graph(h) => m.free_variables_total(*h).is_empty(),
+        _ => true,
+    }
+}
+
+fn final_value(m: &Module, sol: &Solution, n: NodeId) -> Lat {
+    let node = m.node(n);
+    if let Some(c) = node.constant() {
+        return Lat::Val(c.clone());
+    }
+    if node.is_parameter() {
+        return sol.param_lat.get(&n).cloned().unwrap_or(Lat::Top);
+    }
+    sol.lat.get(&n).cloned().unwrap_or(Lat::Top)
+}
+
+/// True when folding away an execution of apply-node `n` cannot delete a
+/// side effect: prim applications reach `Val` only through pure transfer
+/// functions, but a *call's* lattice is its callee's return and the body
+/// may print — check the callee's transitive purity.
+fn fold_safe(m: &Module, sol: &Solution, n: NodeId) -> bool {
+    let callee = m.node(n).inputs()[0];
+    match final_value(m, sol, callee) {
+        Lat::Val(Const::Graph(h)) => !sol.impure.contains(&h),
+        _ => true,
+    }
+}
+
+fn apply_solution(m: &mut Module, root: GraphId, sol: &Solution) -> (usize, Option<NodeId>) {
+    let mut rewrites = 0usize;
+    let mut last = None;
+    for &g in &sol.invoked {
+        // Parameters pinned to a single value across every known call site.
+        if g != root && !sol.escaped.contains(&g) {
+            for p in m.graph(g).params.clone() {
+                if let Some(Lat::Val(c)) = sol.param_lat.get(&p) {
+                    if replaceable(m, c) && m.use_count(p) > 0 {
+                        let cn = m.constant(c.clone());
+                        m.replace_all_uses(p, cn);
+                        rewrites += 1;
+                        last = Some(p);
+                    }
+                }
+            }
+        }
+        let Some(order) = sol.orders.get(&g) else { continue };
+        for &n in order {
+            if !m.node(n).is_apply() {
+                continue;
+            }
+            match sol.lat.get(&n) {
+                Some(Lat::Val(c)) if replaceable(m, c) && fold_safe(m, sol, n) => {
+                    let cn = m.constant(c.clone());
+                    m.replace_all_uses(n, cn);
+                    rewrites += 1;
+                    last = Some(n);
+                }
+                _ => {
+                    // Conditional folding: the value stays unknown but the
+                    // *branch* is decided — keep only the taken arm.
+                    if m.is_apply_of(n, Prim::Switch) && m.node(n).inputs().len() == 4 {
+                        let inputs = m.node(n).inputs().to_vec();
+                        if let Lat::Val(Const::Bool(b)) = final_value(m, sol, inputs[1]) {
+                            let taken = if b { inputs[2] } else { inputs[3] };
+                            m.replace_all_uses(n, taken);
+                            rewrites += 1;
+                            last = Some(n);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (rewrites, last)
+}
+
+/// The SCCP pass (global: its lattice spans every reachable graph).
+pub struct Sccp;
+
+impl GlobalPass for Sccp {
+    fn name(&self) -> &'static str {
+        "sccp"
+    }
+
+    fn run(&mut self, m: &mut Module, root: GraphId) -> Result<GlobalOutcome> {
+        let analysis = analyze(m, root);
+        let solver = Solver {
+            m: &*m,
+            root,
+            lat: HashMap::new(),
+            param_lat: HashMap::new(),
+            invoked: Vec::new(),
+            invoked_set: HashSet::new(),
+            escaped: HashSet::new(),
+            orders: analysis.order.clone(),
+            changed: false,
+        };
+        let sol = solver.solve()?;
+        let (rewrites, last) = apply_solution(m, root, &sol);
+        Ok(GlobalOutcome {
+            changed: rewrites > 0,
+            rewrites,
+            last,
+            ..Default::default()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::print_graph;
+
+    fn run_sccp(m: &mut Module, root: GraphId) -> usize {
+        Sccp.run(m, root).unwrap().rewrites
+    }
+
+    #[test]
+    fn interprocedural_constant_through_call() {
+        // k(a, b) = a * b called as k(x, 3) and k(y, 3): b is always 3.
+        let mut m = Module::new();
+        let k = m.add_graph("k");
+        let a = m.add_parameter(k, "a");
+        let b = m.add_parameter(k, "b");
+        let kb = m.apply_prim(k, Prim::Mul, &[a, b]);
+        m.set_return(k, kb);
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let three = m.constant(Const::I64(3));
+        let kc = m.graph_constant(k);
+        let c1 = m.apply(f, vec![kc, x, three]);
+        let c2 = m.apply(f, vec![kc, c1, three]);
+        m.set_return(f, c2);
+
+        assert!(run_sccp(&mut m, f) > 0);
+        // b's uses inside k are now the literal 3.
+        assert_eq!(m.node(kb).inputs()[2], three, "{}", print_graph(&m, f, true));
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn conditional_branch_decided_interprocedurally() {
+        // sel(c): t() = 1 ; e() = 2 ; return switch(c, @t, @e)()
+        // Called only as sel(true): the call must fold to 1.
+        let mut m = Module::new();
+        let sel = m.add_graph("sel");
+        let c = m.add_parameter(sel, "c");
+        let t = m.add_graph("t");
+        let one = m.constant(Const::F64(1.0));
+        m.set_return(t, one);
+        let e = m.add_graph("e");
+        let two = m.constant(Const::F64(2.0));
+        m.set_return(e, two);
+        let tc = m.graph_constant(t);
+        let ec = m.graph_constant(e);
+        let sw = m.apply_prim(sel, Prim::Switch, &[c, tc, ec]);
+        let call = m.apply(sel, vec![sw]);
+        m.set_return(sel, call);
+
+        let f = m.add_graph("f");
+        let _x = m.add_parameter(f, "x");
+        let tru = m.constant(Const::Bool(true));
+        let sc = m.graph_constant(sel);
+        let r = m.apply(f, vec![sc, tru]);
+        m.set_return(f, r);
+
+        assert!(run_sccp(&mut m, f) > 0);
+        // The whole chain folds: f returns the constant 1.0.
+        assert_eq!(m.ret_of(f), one, "{}", print_graph(&m, f, true));
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn recursion_with_constant_argument_converges() {
+        // loop(n, k) = switch(n > 0, @body, @exit)() with k captured-ish:
+        // simplified shape — loop(n, k) = loop(n - 1, k); k is always 7 but
+        // n varies. SCCP must pin k and terminate on the cycle.
+        let mut m = Module::new();
+        let l = m.add_graph("loop");
+        let n = m.add_parameter(l, "n");
+        let k = m.add_parameter(l, "k");
+        let one = m.constant(Const::I64(1));
+        let n1 = m.apply_prim(l, Prim::Sub, &[n, one]);
+        let lc = m.graph_constant(l);
+        let rec = m.apply(l, vec![lc, n1, k]);
+        let body = m.apply_prim(l, Prim::Add, &[rec, k]);
+        m.set_return(l, body);
+
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let seven = m.constant(Const::I64(7));
+        let lc2 = m.graph_constant(l);
+        let call = m.apply(f, vec![lc2, x, seven]);
+        m.set_return(f, call);
+
+        assert!(run_sccp(&mut m, f) > 0);
+        // k pinned to 7 inside the loop; n untouched. (`rec` is a raw
+        // apply: inputs are [callee, n1, k]; `body` is apply_prim:
+        // [prim, rec, k].)
+        assert_eq!(m.node(rec).inputs()[2], seven);
+        assert_eq!(m.node(body).inputs()[2], seven);
+        assert!(m.node(n1).inputs()[1] == n, "n must stay a parameter use");
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn escaped_closure_params_not_pinned() {
+        // g(y) = y + 1 is stored in a tuple (escapes): even though the one
+        // visible call passes 3, unknown callers may not — params stay ⊥.
+        let mut m = Module::new();
+        let g = m.add_graph("g");
+        let y = m.add_parameter(g, "y");
+        let one = m.constant(Const::F64(1.0));
+        let gb = m.apply_prim(g, Prim::Add, &[y, one]);
+        m.set_return(g, gb);
+
+        let f = m.add_graph("f");
+        let _x = m.add_parameter(f, "x");
+        let gc = m.graph_constant(g);
+        let three = m.constant(Const::F64(3.0));
+        let call = m.apply(f, vec![gc, three]);
+        let tup = m.apply_prim_variadic(f, Prim::MakeTuple, &[gc, call]);
+        m.set_return(f, tup);
+
+        run_sccp(&mut m, f);
+        // y must NOT have been replaced by 3.0 anywhere.
+        assert_eq!(m.node(gb).inputs()[1], y, "{}", print_graph(&m, f, true));
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn closure_passed_to_escaped_callee_escapes() {
+        // h(f2, v) = f2(v) escapes into a tuple; g is both called directly
+        // with a constant AND passed to h. Unknown code reaching h may call
+        // g with anything, so g's parameter must NOT be pinned to 3.
+        let mut m = Module::new();
+        let g = m.add_graph("g");
+        let y = m.add_parameter(g, "y");
+        let one = m.constant(Const::F64(1.0));
+        let gb = m.apply_prim(g, Prim::Add, &[y, one]);
+        m.set_return(g, gb);
+
+        let h = m.add_graph("h");
+        let f2 = m.add_parameter(h, "f2");
+        let v = m.add_parameter(h, "v");
+        let inner = m.apply(h, vec![f2, v]);
+        m.set_return(h, inner);
+
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let three = m.constant(Const::F64(3.0));
+        let gc = m.graph_constant(g);
+        let hc = m.graph_constant(h);
+        let direct = m.apply(f, vec![gc, three]); // g(3): tracked call site
+        let via_h = m.apply(f, vec![hc, gc, x]); // g enters an escaped context
+        let tup = m.apply_prim_variadic(f, Prim::MakeTuple, &[hc, direct, via_h]);
+        m.set_return(f, tup);
+
+        run_sccp(&mut m, f);
+        assert_eq!(
+            m.node(gb).inputs()[1],
+            y,
+            "g's parameter was pinned despite escaping through h:\n{}",
+            print_graph(&m, f, true)
+        );
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn impure_call_not_folded() {
+        // noisy() = print("hi") then 1 — shaped as print feeding a tuple so
+        // the value is const but the body is impure; the call must survive.
+        let mut m = Module::new();
+        let g = m.add_graph("noisy");
+        let msg = m.constant(Const::Str("hi".into()));
+        let pr = m.apply_prim(g, Prim::Print, &[msg]);
+        let one = m.constant(Const::I64(1));
+        let t = m.apply_prim_variadic(g, Prim::MakeTuple, &[pr, one]);
+        let i1 = m.constant(Const::I64(1));
+        let get = m.apply_prim(g, Prim::TupleGetItem, &[t, i1]);
+        m.set_return(g, get);
+
+        let f = m.add_graph("f");
+        let _x = m.add_parameter(f, "x");
+        let gc = m.graph_constant(g);
+        let call = m.apply(f, vec![gc]);
+        m.set_return(f, call);
+
+        run_sccp(&mut m, f);
+        assert_eq!(m.ret_of(f), call, "impure call must not fold to a constant");
+        m.validate().unwrap();
+    }
+}

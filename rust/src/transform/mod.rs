@@ -205,8 +205,11 @@ impl Transform for Vmap {
     }
 }
 
-/// Run a named [`PassSet`] to fixpoint over everything reachable from the
-/// entry graph (§4.3 — Figure 1's collapse of the expanded adjoint).
+/// Run a named [`PassSet`] through the worklist [`crate::opt::PassManager`]
+/// over everything reachable from the entry graph (§4.3 — Figure 1's
+/// collapse of the expanded adjoint). The standard set ends in the
+/// dead-graph GC, which compacts the module arena — so this stage may
+/// *relocate* the entry graph; downstream stages use the returned id.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct Optimize(pub PassSet);
 
@@ -220,12 +223,16 @@ impl Transform for Optimize {
     }
 
     fn apply(&self, m: &mut Module, entry: GraphId, stage: &mut StageMetrics) -> Result<GraphId> {
-        let stats = self.0.optimizer().run(m, entry)?;
-        stage.detail.push(("iterations".to_string(), stats.iterations));
-        for (pass, fired) in stats.fired {
-            stage.detail.push((format!("fired:{pass}"), fired));
+        let mut pm = self.0.manager();
+        let (root, stats) = pm.run(m, entry)?;
+        stage.detail.push(("iterations".to_string(), stats.rounds));
+        stage.detail.push(("gc_graphs_collected".to_string(), stats.graphs_collected));
+        stage.detail.push(("gc_nodes_collected".to_string(), stats.nodes_collected));
+        for p in &stats.passes {
+            stage.detail.push((format!("visits:{}", p.name), p.visits));
+            stage.detail.push((format!("rewrites:{}", p.name), p.rewrites));
         }
-        Ok(entry)
+        Ok(root)
     }
 }
 

@@ -1,0 +1,201 @@
+//! Golden-IR snapshot tests for the optimizer middle-end.
+//!
+//! The optimized adjoints of the paper's key programs are rendered with
+//! `ir::print_graph` and pinned as text files under `tests/golden/`, so an
+//! optimizer change shows up in review as a readable IR diff instead of a
+//! silent node-count drift. The dead-graph GC makes this possible: it
+//! renumbers the arena deterministically, so equal structure prints
+//! identically across runs and machines.
+//!
+//! Blessing: a missing golden file is written on first run (and the test
+//! passes, so fresh checkouts bootstrap); set `UPDATE_GOLDEN=1` to rewrite
+//! snapshots after an intentional optimizer change — then commit the diff.
+//!
+//! Alongside the snapshots, these tests pin the three acceptance
+//! invariants of the worklist middle-end:
+//!   1. determinism: two fresh compiles print byte-identical IR;
+//!   2. no artifact carries unreachable graphs (the GC postcondition);
+//!   3. the new standard pipeline never produces more reachable nodes than
+//!      the emulated pre-worklist optimizer (`LegacyOptimize`).
+
+use myia::coordinator::mlp::MLP_SOURCE;
+use myia::coordinator::{Engine, Executable};
+use myia::ir::{analyze, print_graph};
+use myia::opt::{LegacyOptimize, PassSet};
+use myia::vm::Value;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const FIG1_SRC: &str = "\
+def f(x):
+    return x ** 3.0
+
+def main(x):
+    return grad(f)(x)
+";
+
+const RECURSIVE_SRC: &str = "\
+def tree_eval(depth, x, w):
+    if depth == 0:
+        return tanh(w * x)
+    l = tree_eval(depth - 1, x * 0.9, w)
+    r = tree_eval(depth - 1, x * 1.1, w)
+    return tanh(w * (l + r))
+
+def loss(w):
+    return tree_eval(4, 1.0, w)
+
+def main(w):
+    return grad(loss)(w)
+";
+
+fn golden_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden").join(format!("{name}.ir"))
+}
+
+/// Compare `actual` against the committed snapshot; bless when asked to or
+/// when the file does not exist yet.
+fn assert_golden(name: &str, actual: &str) {
+    let path = golden_path(name);
+    let bless = std::env::var_os("UPDATE_GOLDEN").is_some() || !path.exists();
+    if bless {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, actual).unwrap();
+        eprintln!("blessed golden snapshot {}", path.display());
+        return;
+    }
+    let expected = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        expected, actual,
+        "optimized IR for `{name}` changed; inspect the diff above and re-bless \
+         with UPDATE_GOLDEN=1 if intentional"
+    );
+}
+
+/// Compile `entry` from `src` through the standard pipeline and the legacy
+/// baseline; return both artifacts.
+fn compile_both(src: &str, entry: &str) -> (Arc<Executable>, Arc<Executable>) {
+    let e = Engine::from_source(src).unwrap();
+    let new = e.trace(entry).unwrap().compile().unwrap();
+    let legacy = e
+        .trace(entry)
+        .unwrap()
+        .transform(LegacyOptimize)
+        .optimize(PassSet::None) // drop the implicit standard optimize stage
+        .compile()
+        .unwrap();
+    (new, legacy)
+}
+
+fn zero_unreachable(exe: &Executable) {
+    let live = analyze(&exe.module, exe.entry).graphs.len();
+    assert_eq!(
+        exe.module.num_graphs(),
+        live,
+        "artifact carries {} graphs, only {live} reachable (GC postcondition broken)",
+        exe.module.num_graphs()
+    );
+}
+
+fn check_program(
+    name: &str,
+    src: &str,
+    entry: &str,
+    max_nodes: usize,
+) -> (Arc<Executable>, Arc<Executable>) {
+    let (new, legacy) = compile_both(src, entry);
+
+    // 1. Determinism: a second fresh engine must print identical IR.
+    let printed = print_graph(&new.module, new.entry, true);
+    let again = Engine::from_source(src).unwrap().trace(entry).unwrap().compile().unwrap();
+    assert_eq!(
+        printed,
+        print_graph(&again.module, again.entry, true),
+        "`{name}`: optimized IR differs between two fresh compiles"
+    );
+
+    // 2. GC postcondition.
+    zero_unreachable(&new);
+    new.module.validate().unwrap();
+
+    // 3. Never worse than the pre-worklist optimizer, and within the
+    //    absolute budget the snapshot was taken at.
+    let (nn, ln) = (new.metrics.nodes_after_optimize, legacy.metrics.nodes_after_optimize);
+    assert!(nn <= ln, "`{name}`: new pipeline {nn} nodes vs legacy {ln}");
+    assert!(nn <= max_nodes, "`{name}`: {nn} reachable nodes exceeds budget {max_nodes}\n{printed}");
+
+    // 4. Snapshot (printed IR + reachable-node count, one reviewable file).
+    let snapshot = format!("reachable nodes: {nn}\n\n{printed}");
+    assert_golden(name, &snapshot);
+    (new, legacy)
+}
+
+#[test]
+fn fig1_adjoint_golden() {
+    let (new, legacy) = check_program("fig1_adjoint", FIG1_SRC, "main", 24);
+    // Both pipelines still compute 3x².
+    for x in [0.5, -1.25, 2.0] {
+        let a = new.call(vec![Value::F64(x)]).unwrap().as_f64().unwrap();
+        let b = legacy.call(vec![Value::F64(x)]).unwrap().as_f64().unwrap();
+        assert!((a - 3.0 * x * x).abs() < 1e-12, "x={x}: new pipeline returned {a}");
+        assert!((a - b).abs() < 1e-12, "x={x}: pipelines disagree ({a} vs {b})");
+    }
+}
+
+#[test]
+fn recursive_adjoint_golden() {
+    // The recursive tree adjoint: graphs must survive as calls (recursion
+    // can't inline) but the module must stay compact and deterministic.
+    let (new, legacy) = check_program("recursive_adjoint", RECURSIVE_SRC, "main", 1500);
+    let w = 0.37;
+    let a = new.call(vec![Value::F64(w)]).unwrap().as_f64().unwrap();
+    let b = legacy.call(vec![Value::F64(w)]).unwrap().as_f64().unwrap();
+    assert!((a - b).abs() < 1e-9, "pipelines disagree: {a} vs {b}");
+    // Finite-difference cross-check.
+    let eng = Engine::from_source(RECURSIVE_SRC).unwrap();
+    let loss = eng.trace("loss").unwrap().compile().unwrap();
+    let eps = 1e-6;
+    let f = |w: f64| loss.call(vec![Value::F64(w)]).unwrap().as_f64().unwrap();
+    let fd = (f(w + eps) - f(w - eps)) / (2.0 * eps);
+    assert!((a - fd).abs() < 1e-5, "adjoint {a} vs finite difference {fd}");
+}
+
+#[test]
+fn mlp_value_and_grad_counts() {
+    // The MLP value_and_grad artifact: no snapshot (tensors in the IR make
+    // the text huge) but the same three invariants.
+    let e = Engine::from_source(MLP_SOURCE).unwrap();
+    let new = e.trace("mlp_loss").unwrap().value_and_grad().compile().unwrap();
+    let legacy = e
+        .trace("mlp_loss")
+        .unwrap()
+        .value_and_grad()
+        .transform(LegacyOptimize)
+        .optimize(PassSet::None)
+        .compile()
+        .unwrap();
+    zero_unreachable(&new);
+    new.module.validate().unwrap();
+    let (nn, ln) = (new.metrics.nodes_after_optimize, legacy.metrics.nodes_after_optimize);
+    assert!(nn <= ln, "MLP value_and_grad: new pipeline {nn} nodes vs legacy {ln}");
+
+    let printed = print_graph(&new.module, new.entry, true);
+    let again =
+        Engine::from_source(MLP_SOURCE).unwrap().trace("mlp_loss").unwrap().value_and_grad().compile().unwrap();
+    assert_eq!(
+        printed,
+        print_graph(&again.module, again.entry, true),
+        "MLP value_and_grad: optimized IR differs between two fresh compiles"
+    );
+}
+
+#[test]
+fn unoptimized_artifacts_keep_their_scaffolding() {
+    // Sanity for the comparison itself: opt=none must not run the GC, so
+    // its artifact still carries the source graphs — i.e. the GC invariant
+    // above is a property of the standard pipeline, not of printing.
+    let e = Engine::from_source(FIG1_SRC).unwrap();
+    let unopt = e.trace("main").unwrap().optimize(PassSet::None).compile().unwrap();
+    let live = analyze(&unopt.module, unopt.entry).graphs.len();
+    assert!(unopt.module.num_graphs() > live, "opt=none unexpectedly compacted the module");
+}
