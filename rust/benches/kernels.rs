@@ -1,0 +1,279 @@
+//! Elementwise kernel fusion + unique-buffer reuse benchmark.
+//!
+//! Three workloads, each A/B'd between the standard pipeline (which carries
+//! the `fusion` pass) and the `opt=no-fusion` ablation:
+//!
+//! 1. a 16-op elementwise chain over a large f64 tensor (the deforestation
+//!    headline: one loop + zero intermediates vs 16 loops + 16 allocations);
+//! 2. the MLP `value_and_grad` training step (fusion inside a real adjoint);
+//! 3. the vmapped per-sample-gradient workload (fusion composed with
+//!    grad-then-vmap).
+//!
+//! Every arm is checked bit-identical against its counterpart before
+//! timing. Results (wall time + the VM's `fused_ops`/`allocs_saved`/
+//! `conversions` counters and the tensor substrate's buffer-reuse count)
+//! land in `BENCH_kernels.json` at the repository root. `BENCH_QUICK=1`
+//! shrinks the measurement windows and tensor sizes for CI;
+//! `BENCH_SMOKE=1` additionally *gates*: the fused chain arm must not be
+//! slower than the unfused arm, and the fused MLP adjoint must report
+//! `allocs_saved > 0`.
+
+use myia::bench::{black_box, Bencher};
+use myia::coordinator::mlp::{
+    default_meta, params_value, per_example_rows, synth_batch, synth_teacher, MLP_SOURCE,
+};
+use myia::coordinator::{Engine, Executable};
+use myia::opt::PassSet;
+use myia::tensor::{buffer_reuse_count, DType, Rng, Tensor};
+use myia::vm::Value;
+use std::sync::Arc;
+
+/// 16 elementwise ops (8 mul + 8 add) in one single-consumer chain — the
+/// shape the fusion pass collapses into a single `fused_map`.
+const CHAIN_SRC: &str = "\
+def chain(x):
+    t0 = x * 1.0001 + 0.0001
+    t1 = t0 * 0.9999 + 0.0002
+    t2 = t1 * 1.0002 + 0.0003
+    t3 = t2 * 0.9998 + 0.0004
+    t4 = t3 * 1.0003 + 0.0005
+    t5 = t4 * 0.9997 + 0.0006
+    t6 = t5 * 1.0004 + 0.0007
+    t7 = t6 * 0.9996 + 0.0008
+    return t7
+";
+
+fn harness() -> Bencher {
+    if std::env::var_os("BENCH_QUICK").is_some() {
+        Bencher::fast()
+    } else {
+        Bencher::default()
+    }
+}
+
+struct Row {
+    workload: &'static str,
+    arm: &'static str,
+    median_us: f64,
+    fused_ops: u64,
+    allocs_saved: u64,
+    conversions: u64,
+    buffer_reuses: u64,
+}
+
+/// Run one arm: verify against `oracle` (when given), collect one call's
+/// VM counters, then time it. Returns (row, output, median seconds).
+#[allow(clippy::too_many_arguments)]
+fn run_arm(
+    b: &mut Bencher,
+    workload: &'static str,
+    arm: &'static str,
+    f: &Arc<Executable>,
+    args: &[Value],
+    oracle: Option<&Value>,
+    rows: &mut Vec<Row>,
+) -> (Value, f64) {
+    let _ = f.vm.take_stats();
+    let reuses_before = buffer_reuse_count();
+    let out = f.call(args.to_vec()).expect(workload);
+    let stats = f.vm.take_stats();
+    let buffer_reuses = buffer_reuse_count() - reuses_before;
+    if let Some(want) = oracle {
+        assert!(
+            out.structural_eq(want),
+            "{workload}/{arm}: fused and unfused pipelines disagree"
+        );
+    }
+    let sample = b.bench(&format!("kernels/{workload}/{arm}"), || {
+        black_box(f.call(args.to_vec()).expect(workload));
+    });
+    rows.push(Row {
+        workload,
+        arm,
+        median_us: sample.median * 1e6,
+        fused_ops: stats.fused_ops,
+        allocs_saved: stats.allocs_saved,
+        conversions: stats.conversions,
+        buffer_reuses,
+    });
+    (out, sample.median)
+}
+
+fn main() {
+    let quick = std::env::var_os("BENCH_QUICK").is_some();
+    let smoke = std::env::var_os("BENCH_SMOKE").is_some();
+    let mut b = harness();
+    let mut rows: Vec<Row> = Vec::new();
+
+    // --- workload 1: elementwise chain --------------------------------
+    let n = if quick { 100_000 } else { 1_000_000 };
+    let mut rng = Rng::new(17);
+    let x = Value::Tensor(rng.normal_tensor(&[n], 1.0));
+    let e = Engine::from_source(CHAIN_SRC).unwrap();
+    let fused =
+        e.trace("chain").unwrap().optimize(PassSet::Standard).compile().unwrap();
+    let unfused = e
+        .trace("chain")
+        .unwrap()
+        .optimize(PassSet::Without("fusion".into()))
+        .compile()
+        .unwrap();
+    let (chain_oracle, t_unfused) =
+        run_arm(&mut b, "chain16", "no-fusion", &unfused, &[x.clone()], None, &mut rows);
+    let (_, t_fused) = run_arm(
+        &mut b,
+        "chain16",
+        "fused",
+        &fused,
+        &[x.clone()],
+        Some(&chain_oracle),
+        &mut rows,
+    );
+    let chain_row = rows.last().unwrap();
+    assert!(chain_row.fused_ops >= 1, "chain did not hit a fused kernel");
+    println!(
+        "chain16: fused {:.1}us vs no-fusion {:.1}us ({:.2}x)",
+        t_fused * 1e6,
+        t_unfused * 1e6,
+        t_unfused / t_fused
+    );
+
+    // --- workload 2: MLP value_and_grad -------------------------------
+    let meta = default_meta();
+    let teacher = synth_teacher(&meta, &mut rng);
+    let (bx, by) = synth_batch(&meta, &mut rng, &teacher);
+    let params: Vec<Tensor> =
+        meta.init_params(11).into_iter().map(|t| t.cast(DType::F64)).collect();
+    let margs = vec![
+        params_value(&params),
+        Value::Tensor(bx.clone()),
+        Value::Tensor(by.clone()),
+    ];
+    let em = Engine::from_source(MLP_SOURCE).unwrap();
+    let mg_fused = em
+        .trace("mlp_loss")
+        .unwrap()
+        .value_and_grad()
+        .optimize(PassSet::Standard)
+        .compile()
+        .unwrap();
+    let mg_unfused = em
+        .trace("mlp_loss")
+        .unwrap()
+        .value_and_grad()
+        .optimize(PassSet::Without("fusion".into()))
+        .compile()
+        .unwrap();
+    let (m_oracle, tm_unfused) =
+        run_arm(&mut b, "mlp_vgrad", "no-fusion", &mg_unfused, &margs, None, &mut rows);
+    let (_, tm_fused) = run_arm(
+        &mut b,
+        "mlp_vgrad",
+        "fused",
+        &mg_fused,
+        &margs,
+        Some(&m_oracle),
+        &mut rows,
+    );
+    let mlp_row = rows.last().unwrap();
+    let mlp_allocs_saved = mlp_row.allocs_saved;
+    println!(
+        "mlp_vgrad: fused {:.1}us vs no-fusion {:.1}us ({:.2}x), allocs_saved={}",
+        tm_fused * 1e6,
+        tm_unfused * 1e6,
+        tm_unfused / tm_fused,
+        mlp_allocs_saved
+    );
+
+    // --- workload 3: vmapped per-sample gradients ----------------------
+    let xs = per_example_rows(&bx).unwrap();
+    let ys = per_example_rows(&by).unwrap();
+    let pargs = vec![
+        params_value(&params),
+        Value::Tensor(xs.clone()),
+        Value::Tensor(ys.clone()),
+    ];
+    let ps_fused = em
+        .trace("mlp_loss")
+        .unwrap()
+        .grad()
+        .vmap_axes(vec![None, Some(0), Some(0)])
+        .optimize(PassSet::Standard)
+        .compile()
+        .unwrap();
+    let ps_unfused = em
+        .trace("mlp_loss")
+        .unwrap()
+        .grad()
+        .vmap_axes(vec![None, Some(0), Some(0)])
+        .optimize(PassSet::Without("fusion".into()))
+        .compile()
+        .unwrap();
+    let (p_oracle, tp_unfused) = run_arm(
+        &mut b,
+        "per_sample_grads",
+        "no-fusion",
+        &ps_unfused,
+        &pargs,
+        None,
+        &mut rows,
+    );
+    let (_, tp_fused) = run_arm(
+        &mut b,
+        "per_sample_grads",
+        "fused",
+        &ps_fused,
+        &pargs,
+        Some(&p_oracle),
+        &mut rows,
+    );
+    println!(
+        "per_sample_grads: fused {:.1}us vs no-fusion {:.1}us ({:.2}x)",
+        tp_fused * 1e6,
+        tp_unfused * 1e6,
+        tp_unfused / tp_fused
+    );
+
+    // --- trajectory JSON ----------------------------------------------
+    let mut json = String::from("{\n  \"bench\": \"kernels\",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"workload\": \"{}\", \"arm\": \"{}\", \"median_us\": {:.3}, \
+             \"fused_ops\": {}, \"allocs_saved\": {}, \"conversions\": {}, \
+             \"buffer_reuses\": {}}}{}\n",
+            r.workload,
+            r.arm,
+            r.median_us,
+            r.fused_ops,
+            r.allocs_saved,
+            r.conversions,
+            r.buffer_reuses,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str(&format!(
+        "  ],\n  \"chain16_speedup\": {:.3},\n  \"mlp_vgrad_speedup\": {:.3},\n  \
+         \"per_sample_speedup\": {:.3}\n}}\n",
+        t_unfused / t_fused,
+        tm_unfused / tm_fused,
+        tp_unfused / tp_fused
+    ));
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json");
+    std::fs::write(path, json).expect("write BENCH_kernels.json");
+    println!("wrote {path}");
+
+    // --- CI smoke gate -------------------------------------------------
+    if smoke {
+        assert!(
+            t_fused <= t_unfused,
+            "perf smoke gate: fused chain ({:.1}us) slower than no-fusion ({:.1}us)",
+            t_fused * 1e6,
+            t_unfused * 1e6
+        );
+        assert!(
+            mlp_allocs_saved > 0,
+            "perf smoke gate: fused MLP adjoint reported allocs_saved == 0"
+        );
+        println!("smoke gate passed");
+    }
+}

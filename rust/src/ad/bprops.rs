@@ -315,9 +315,14 @@ fn bprop_exprs(
         // neither prim expresses the required reduce-over-all-axes — so
         // third-order-through-vmap raises lazily rather than silently
         // mis-shaping gradients.
-        Concat0 | TakeRow | ReduceSumAxis | Partial | Mod | FloorDiv | BroadcastTail => {
-            return None
-        }
+        // `FusedMap` is an optimizer artifact: fusion runs on the already
+        // expanded adjoint (reverse-mode before `opt` in every pipeline the
+        // builder emits), so a fused kernel reaching the AD transform means
+        // the stages were ordered by hand — raise lazily with the usual
+        // unsupported-gradient message rather than differentiating the
+        // postfix program.
+        Concat0 | TakeRow | ReduceSumAxis | Partial | Mod | FloorDiv | BroadcastTail
+        | FusedMap => return None,
         // Non-differentiable prims were handled above.
         _ => return None,
     };

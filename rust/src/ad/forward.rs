@@ -266,6 +266,13 @@ pub fn fwd_prim(m: &mut Module, p: Prim, arity: usize) -> Result<GraphId> {
         EnvSetItem => ap!(EnvSetItem, dxs[0], xs[1], dxs[2]),
         EnvGetItem => ap!(EnvGetItem, dxs[0], xs[1]),
         Print => dxs[0],
+        // Fusion is an *optimizer* rewrite over already-differentiated IR;
+        // differentiating a fused kernel would mean re-deriving per-op
+        // rules from the postfix program. Reject with direction instead.
+        FusedMap => bail!(
+            "fused_map has no forward-mode rule: apply jfwd before optimization \
+             (fusion runs post-AD; use an `opt` stage after the AD transform)"
+        ),
         // Non-differentiable or structural: zero tangent of the right shape.
         _ if p.is_nondifferentiable() || matches!(p, TupleLen | ZerosLike | OnesLike) => {
             ap!(ZerosLike, val)

@@ -538,6 +538,35 @@ impl Rewriter {
                 {
                     bail!("nested vmap (batching `{p}`) is not supported")
                 }
+                // Fused elementwise kernels batch by extending the index
+                // space: the fused loop already iterates the broadcast of
+                // its leaves, so a mapped leaf's extra leading axis flows
+                // through like any other broadcast dimension. (Fusion
+                // normally runs in the `opt` stage *after* vmap; this arm
+                // covers hand-built optimize-then-vmap pipelines.) A static
+                // `broadcast_to` anchor inside the program is the one shape
+                // the index space can NOT absorb — it would conflate the
+                // batch axis with the anchored axes (exactly like unfused
+                // `broadcast_to` to a static shape, which vmap rejects) —
+                // so reject it here too instead of mis-shaping silently.
+                FusedMap if any_b => {
+                    let has_anchor = match m.node(inputs[1]).constant() {
+                        Some(Const::Fused(e)) => e
+                            .ops
+                            .iter()
+                            .any(|op| matches!(op, crate::ir::FusedOp::BroadcastTo(_))),
+                        _ => false,
+                    };
+                    if has_anchor {
+                        bail!(
+                            "vmap: a fused kernel with a static broadcast_to anchor cannot \
+                             be batched; run vmap before fusion (the standard pipeline \
+                             orders vmap ahead of the `opt` stage)"
+                        );
+                    }
+                    self.default_rebuild(m, ng, &inputs)?
+                }
+                FusedMap => self.default_rebuild(m, ng, &inputs)?,
                 // Everything else — elementwise arithmetic, comparisons,
                 // tuple/env plumbing, gadd, casts, last-axis ops, RNG with
                 // unmapped seeds — absorbs the batch axis via broadcasting.

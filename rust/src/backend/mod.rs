@@ -186,7 +186,7 @@ fn extract(code: &CodeObject, program: &Program, min_len: usize) -> (CodeObject,
         let mut prims: Vec<(Prim, Vec<SegArg>)> = Vec::new();
         for (k, ins) in run.iter().enumerate() {
             let (prim, args, dst) = match ins {
-                Instr::CallPrim { dst, prim, args } => (*prim, args, *dst),
+                Instr::CallPrim { dst, prim, args, .. } => (*prim, args, *dst),
                 _ => unreachable!(),
             };
             let sargs = args

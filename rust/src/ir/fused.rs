@@ -1,0 +1,222 @@
+//! Compact postfix programs for fused elementwise kernels.
+//!
+//! The fusion pass (`opt/fusion.rs`) collapses a single-consumer tree of
+//! elementwise primitives into one `Prim::FusedMap` application whose first
+//! argument is a [`FusedExpr`] constant ([`crate::ir::Const::Fused`]) and
+//! whose remaining arguments are the tree's leaves. The VM executes the
+//! postfix program with one loop over the output index space and a small
+//! value stack — no intermediate tensors (see `vm/fused.rs`).
+//!
+//! The IR is shape-erased, so a `FusedExpr` carries *no* shapes or dtypes:
+//! legality beyond "these primitives are pure and elementwise" is decided at
+//! run time by simulating shapes/dtypes over the concrete leaves, with a
+//! step-by-step replay fallback (through the ordinary `eval_prim`) for any
+//! case the monomorphized loop cannot reproduce bit-for-bit.
+
+use super::Prim;
+use std::fmt;
+use std::hash::{Hash, Hasher};
+
+/// One step of a postfix fused program.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FusedOp {
+    /// Push (the broadcast-mapped element of) leaf input `i`.
+    Input(u8),
+    /// Push an embedded scalar constant (an IR `Const::F64` leaf).
+    ConstF64(f64),
+    /// Push an embedded integer constant (an IR `Const::I64` leaf).
+    ConstI64(i64),
+    /// Pop `x`, push `p(x)` — a unary elementwise primitive.
+    Un(Prim),
+    /// Pop `y` then `x`, push `p(x, y)` — a binary elementwise primitive.
+    Bin(Prim),
+    /// Pop `b`, `a`, `cond`; push `cond ? a : b` (elementwise select).
+    Where,
+    /// `broadcast_to(top-of-stack, shape)` with a static shape: the element
+    /// value is unchanged, but `shape` joins the output broadcast (and the
+    /// original op's "target must dominate the operand" check is replayed at
+    /// run time by the shape simulation).
+    BroadcastTo(Vec<usize>),
+}
+
+impl FusedOp {
+    /// How many stack values the op pops.
+    pub fn pops(&self) -> usize {
+        match self {
+            FusedOp::Input(_) | FusedOp::ConstF64(_) | FusedOp::ConstI64(_) => 0,
+            FusedOp::Un(_) | FusedOp::BroadcastTo(_) => 1,
+            FusedOp::Bin(_) => 2,
+            FusedOp::Where => 3,
+        }
+    }
+
+    /// True for steps that, unfused, would each have produced a tensor.
+    pub fn is_compute(&self) -> bool {
+        !matches!(self, FusedOp::Input(_) | FusedOp::ConstF64(_) | FusedOp::ConstI64(_))
+    }
+}
+
+/// Hard caps keeping the VM's fixed-size evaluation stack and the `u8`
+/// input index honest. The fusion pass refuses to build larger groups.
+pub const MAX_FUSED_INPUTS: usize = 12;
+pub const MAX_FUSED_OPS: usize = 64;
+pub const MAX_FUSED_STACK: usize = 16;
+
+/// A validated postfix elementwise program.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FusedExpr {
+    /// Number of leaf inputs (the `FusedMap` application carries exactly
+    /// this many arguments after the expression constant).
+    pub n_inputs: usize,
+    /// The postfix program; evaluation leaves exactly one value.
+    pub ops: Vec<FusedOp>,
+    /// Peak evaluation-stack depth (precomputed by [`FusedExpr::new`]).
+    pub max_stack: usize,
+}
+
+impl FusedExpr {
+    /// Validate and freeze a postfix program. Errors if the stack discipline
+    /// is broken, an input index is out of range, or a cap is exceeded.
+    pub fn new(n_inputs: usize, ops: Vec<FusedOp>) -> Result<FusedExpr, String> {
+        if n_inputs > MAX_FUSED_INPUTS {
+            return Err(format!("fused expr has {n_inputs} inputs (max {MAX_FUSED_INPUTS})"));
+        }
+        if ops.is_empty() || ops.len() > MAX_FUSED_OPS {
+            return Err(format!("fused expr has {} ops (1..={MAX_FUSED_OPS})", ops.len()));
+        }
+        let mut depth = 0usize;
+        let mut max_stack = 0usize;
+        for op in &ops {
+            if let FusedOp::Input(i) = op {
+                if *i as usize >= n_inputs {
+                    return Err(format!("fused input #{i} out of range ({n_inputs} inputs)"));
+                }
+            }
+            let pops = op.pops();
+            if depth < pops {
+                return Err("fused expr underflows its stack".to_string());
+            }
+            depth = depth - pops + 1;
+            max_stack = max_stack.max(depth);
+        }
+        if depth != 1 {
+            return Err(format!("fused expr leaves {depth} values on the stack"));
+        }
+        if max_stack > MAX_FUSED_STACK {
+            return Err(format!("fused expr needs stack depth {max_stack} (max {MAX_FUSED_STACK})"));
+        }
+        Ok(FusedExpr { n_inputs, ops, max_stack })
+    }
+
+    /// Tensor allocations the fused loop avoids relative to unfused
+    /// execution: every compute step but the final one would have
+    /// materialized an intermediate.
+    pub fn interior_allocs(&self) -> u64 {
+        (self.ops.iter().filter(|o| o.is_compute()).count() as u64).saturating_sub(1)
+    }
+
+    /// Structural hash (feeds [`crate::ir::Const::fingerprint`]).
+    pub fn hash_into<H: Hasher>(&self, h: &mut H) {
+        self.n_inputs.hash(h);
+        for op in &self.ops {
+            match op {
+                FusedOp::Input(i) => {
+                    0u8.hash(h);
+                    i.hash(h);
+                }
+                FusedOp::ConstF64(v) => {
+                    1u8.hash(h);
+                    v.to_bits().hash(h);
+                }
+                FusedOp::ConstI64(v) => {
+                    2u8.hash(h);
+                    v.hash(h);
+                }
+                FusedOp::Un(p) => {
+                    3u8.hash(h);
+                    p.hash(h);
+                }
+                FusedOp::Bin(p) => {
+                    4u8.hash(h);
+                    p.hash(h);
+                }
+                FusedOp::Where => 5u8.hash(h),
+                FusedOp::BroadcastTo(s) => {
+                    6u8.hash(h);
+                    s.hash(h);
+                }
+            }
+        }
+    }
+}
+
+impl fmt::Display for FusedExpr {
+    /// Deterministic compact rendering (golden-IR snapshots depend on it),
+    /// e.g. `fused[in0,in1,mul,c2,add]`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "fused[")?;
+        for (i, op) in self.ops.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            match op {
+                FusedOp::Input(k) => write!(f, "in{k}")?,
+                FusedOp::ConstF64(v) => write!(f, "c{v}")?,
+                FusedOp::ConstI64(v) => write!(f, "c{v}i")?,
+                FusedOp::Un(p) | FusedOp::Bin(p) => write!(f, "{}", p.name())?,
+                FusedOp::Where => write!(f, "where")?,
+                FusedOp::BroadcastTo(s) => write!(f, "bcast{s:?}")?,
+            }
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_and_counts() {
+        // in0 * in1 + 2.0
+        let e = FusedExpr::new(
+            2,
+            vec![
+                FusedOp::Input(0),
+                FusedOp::Input(1),
+                FusedOp::Bin(Prim::Mul),
+                FusedOp::ConstF64(2.0),
+                FusedOp::Bin(Prim::Add),
+            ],
+        )
+        .unwrap();
+        assert_eq!(e.max_stack, 2);
+        assert_eq!(e.interior_allocs(), 1);
+        assert_eq!(format!("{e}"), "fused[in0,in1,mul,c2,add]");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(FusedExpr::new(1, vec![FusedOp::Bin(Prim::Add)]).is_err()); // underflow
+        assert!(FusedExpr::new(1, vec![FusedOp::Input(1)]).is_err()); // oob input
+        assert!(FusedExpr::new(
+            1,
+            vec![FusedOp::Input(0), FusedOp::Input(0)] // two values left
+        )
+        .is_err());
+        assert!(FusedExpr::new(MAX_FUSED_INPUTS + 1, vec![FusedOp::Input(0)]).is_err());
+    }
+
+    #[test]
+    fn hash_distinguishes_programs() {
+        use std::collections::hash_map::DefaultHasher;
+        let h = |e: &FusedExpr| {
+            let mut h = DefaultHasher::new();
+            e.hash_into(&mut h);
+            std::hash::Hasher::finish(&h)
+        };
+        let a = FusedExpr::new(1, vec![FusedOp::Input(0), FusedOp::Un(Prim::Exp)]).unwrap();
+        let b = FusedExpr::new(1, vec![FusedOp::Input(0), FusedOp::Un(Prim::Neg)]).unwrap();
+        assert_ne!(h(&a), h(&b));
+    }
+}

@@ -16,18 +16,21 @@
 
 mod analysis;
 mod clone;
+mod fused;
 mod module;
 mod prim;
 mod printer;
 
 pub use analysis::{analyze, ScopeAnalysis};
 pub use clone::{clone_closure, CloneResult};
+pub use fused::{FusedExpr, FusedOp, MAX_FUSED_INPUTS, MAX_FUSED_OPS, MAX_FUSED_STACK};
 pub use module::{Graph, Module};
 pub use prim::Prim;
 pub use printer::print_graph;
 
 use crate::tensor::Tensor;
 use std::fmt;
+use std::sync::Arc;
 
 /// Index of a node in its module's arena.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -72,6 +75,10 @@ pub enum Const {
     /// A compile-time macro (e.g. `grad`), expanded by a dedicated pass
     /// before execution — Figure 1's "after the grad macro is expanded".
     Macro(MacroOp),
+    /// A fused elementwise postfix program — the first argument of every
+    /// `Prim::FusedMap` application (built by the `fusion` optimizer pass,
+    /// executed by one VM loop with no intermediate tensors).
+    Fused(Arc<FusedExpr>),
 }
 
 /// Compile-time macros exposed to the source language.
@@ -142,6 +149,10 @@ impl Const {
                 10u8.hash(&mut h);
                 op.hash(&mut h);
             }
+            Const::Fused(e) => {
+                11u8.hash(&mut h);
+                e.hash_into(&mut h);
+            }
         }
         h.finish()
     }
@@ -161,6 +172,7 @@ impl fmt::Display for Const {
             Const::Key(k) => write!(f, "key#{k}"),
             Const::ZeroT => write!(f, "0̸"),
             Const::Macro(op) => write!(f, "{op}"),
+            Const::Fused(e) => write!(f, "{e}"),
         }
     }
 }

@@ -165,6 +165,11 @@ pub enum Prim {
     RngSplit,
     /// Partial application: `partial(f, x)` returns g with `g(..) = f(x, ..)`.
     Partial,
+    /// `fused_map(expr, x1..xn)` — one fused elementwise kernel: `expr` is a
+    /// `Const::Fused` postfix program over the remaining arguments, executed
+    /// by a single loop over the broadcast output index space (built by the
+    /// `fusion` optimizer pass; never written in user source).
+    FusedMap,
 }
 
 impl Prim {
@@ -251,6 +256,7 @@ impl Prim {
             RngNormal => "rng_normal",
             RngSplit => "rng_split",
             Partial => "partial",
+            FusedMap => "fused_map",
         }
     }
 
@@ -258,7 +264,7 @@ impl Prim {
     pub fn arity(self) -> Option<usize> {
         use Prim::*;
         match self {
-            MakeTuple => None,
+            MakeTuple | FusedMap => None,
             NewEnv => Some(0),
             Neg | Exp | Ln | Tanh | Sqrt | Sin | Cos | Relu | Sigmoid | Abs | Sign | Not
             | TupleLen | IsNil | ZerosLike | OnesLike | Transpose | ShapeOf | ReduceSum
@@ -304,7 +310,7 @@ impl Prim {
             ArgmaxLast, Concat0, TakeRow, Item, ScalarToTensor, CastF32, CastF64, Where, Print,
             Raise, RngUniform, RngNormal, RngSplit, Partial, Step, SumToLike, BroadcastLike,
             SumLastKeep, BatchMatMul, SumTail, BroadcastLead, SumToLead, SumToTail,
-            BroadcastTail, MoveAxis, BroadcastBatch,
+            BroadcastTail, MoveAxis, BroadcastBatch, FusedMap,
         ]
     }
 

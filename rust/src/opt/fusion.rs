@@ -1,0 +1,507 @@
+//! Elementwise kernel fusion (deforestation for the adjoint IR).
+//!
+//! Reverse-mode expansion emits long chains of elementwise primitives
+//! (`mul`/`add`/`neg`/`exp`, masks, `where_`) between the structural ops;
+//! unfused, every link costs a full output allocation and a separate loop.
+//! This pass greedily groups each **maximal single-consumer tree** of
+//! fusable applications into one `Prim::FusedMap` node carrying a compact
+//! postfix [`FusedExpr`] program, which the VM executes with a single loop
+//! and a value stack (`vm/fused.rs`) — no intermediate tensors.
+//!
+//! Legality here is purely structural (the IR is shape-erased):
+//!
+//! * only **pure, elementwise** primitives join a group — the seven binary
+//!   arithmetic ops, the unary math ops, `where_`, scalar constants, and
+//!   `broadcast_to` with a statically-known shape tuple (a shape anchor);
+//! * an interior node must have **exactly one use**, by another group
+//!   member, and must not be a graph return — so fusing can never duplicate
+//!   work or hide a value someone else reads;
+//! * run-time agreement (shapes broadcast together, dtypes land on one
+//!   float type) is checked by the VM's shape/dtype simulation, which falls
+//!   back to an exact unfused replay — fusion is *never* a semantics change.
+//!
+//! Existing `FusedMap` nodes are composite members: when later rewrites
+//! (inlining, algebraic simplification) expose new fusable neighbors, the
+//! inner program is spliced into the larger group, so chains keep growing
+//! to their maximal extent across fixpoint rounds.
+//!
+//! The pass runs on the already-expanded adjoint IR (`opt` stages execute
+//! after `grad`/`vmap` in every pipeline the builder can produce), composes
+//! with both transforms (batched leaves broadcast through the fused loop
+//! unchanged), and is deliberately *not* part of any existing `PassSet`
+//! spec key, so `opt=standard` pipelines keep their fingerprints.
+
+use super::manager::{LocalPass, PassCtx};
+use crate::ir::{
+    Const, FusedExpr, FusedOp, GraphId, Module, NodeId, Prim, MAX_FUSED_INPUTS, MAX_FUSED_OPS,
+};
+use anyhow::Result;
+use std::collections::{HashMap, HashSet};
+
+/// The fusion local pass (spec name `fusion`; ablate with `opt=no-fusion`).
+#[derive(Default)]
+pub struct Fusion;
+
+/// Number of `fused_map` kernels reachable from `root` — the single
+/// definition shared by the optimize-stage `fused_groups` metric and the
+/// test suites.
+pub fn count_fused_kernels(m: &Module, root: GraphId) -> usize {
+    crate::ir::analyze(m, root)
+        .graphs
+        .iter()
+        .map(|&g| {
+            m.topo_order(g)
+                .iter()
+                .filter(|&&n| m.is_apply_of(n, Prim::FusedMap))
+                .count()
+        })
+        .sum()
+}
+
+/// Fusable binary arithmetic primitives.
+fn is_bin(p: Prim) -> bool {
+    use Prim::*;
+    matches!(p, Add | Sub | Mul | Div | Pow | Maximum | Minimum)
+}
+
+/// Fusable unary elementwise primitives.
+fn is_un(p: Prim) -> bool {
+    use Prim::*;
+    matches!(
+        p,
+        Neg | Exp | Ln | Tanh | Sqrt | Sin | Cos | Relu | Sigmoid | Abs | Sign | Step
+    )
+}
+
+/// The statically-known shape of a `make_tuple` of integer constants (the
+/// only fusable form of `broadcast_to`'s shape operand).
+fn static_shape(m: &Module, n: NodeId) -> Option<Vec<usize>> {
+    if !m.is_apply_of(n, Prim::MakeTuple) {
+        return None;
+    }
+    m.node(n).inputs()[1..]
+        .iter()
+        .map(|&d| match m.node(d).constant() {
+            Some(Const::I64(v)) if *v >= 0 => Some(*v as usize),
+            _ => None,
+        })
+        .collect()
+}
+
+/// The fused program of an existing `fused_map` application, if `n` is one.
+fn fused_payload(m: &Module, n: NodeId) -> Option<std::sync::Arc<FusedExpr>> {
+    if !m.is_apply_of(n, Prim::FusedMap) {
+        return None;
+    }
+    let expr_node = *m.node(n).inputs().get(1)?;
+    match m.node(expr_node).constant() {
+        Some(Const::Fused(e)) => Some(e.clone()),
+        _ => None,
+    }
+}
+
+/// Is `n` an application this pass knows how to put inside a group?
+fn fusable_apply(m: &Module, n: NodeId) -> bool {
+    let node = m.node(n);
+    if !node.is_apply() || node.graph.is_none() {
+        return false;
+    }
+    let Some(p) = m.as_prim(node.inputs()[0]) else { return false };
+    if is_bin(p) || is_un(p) || p == Prim::Where {
+        return true;
+    }
+    if p == Prim::BroadcastTo {
+        return static_shape(m, node.inputs()[2]).is_some();
+    }
+    if p == Prim::FusedMap {
+        return fused_payload(m, n).is_some();
+    }
+    false
+}
+
+/// The *value* argument positions of a fusable application (positions a
+/// swallowed producer may occupy): everything after the callee, except
+/// `broadcast_to`'s shape tuple and `fused_map`'s program constant.
+fn value_positions(m: &Module, n: NodeId) -> std::ops::Range<usize> {
+    let inputs = m.node(n).inputs();
+    match m.as_prim(inputs[0]) {
+        Some(Prim::BroadcastTo) => 1..2,
+        Some(Prim::FusedMap) => 2..inputs.len(),
+        _ => 1..inputs.len(),
+    }
+}
+
+impl LocalPass for Fusion {
+    fn name(&self) -> &'static str {
+        "fusion"
+    }
+
+    fn visit(&mut self, m: &mut Module, _ctx: &mut PassCtx, n: NodeId) -> Result<bool> {
+        if !fusable_apply(m, n) {
+            return Ok(false);
+        }
+        // Only fire at group roots. A single-use node whose one consumer is
+        // a fusable *plain* op (in a value position, same graph) will be
+        // swallowed when that consumer fires — fusing it now would just
+        // churn. A consumer that is already a `fused_map` does NOT defer
+        // the fire: it may be at capacity, and a chain segment stranded
+        // below a full kernel must still be able to fuse on its own (the
+        // consumer splices it in later iff the combined program fits).
+        if !m.is_graph_return(n) {
+            let uses = m.uses(n);
+            if uses.len() == 1 {
+                let (user, idx) = uses[0];
+                if fusable_apply(m, user)
+                    && !m.is_apply_of(user, Prim::FusedMap)
+                    && m.node(user).graph == m.node(n).graph
+                    && value_positions(m, user).contains(&idx)
+                    && !m.is_dead(user)
+                {
+                    return Ok(false);
+                }
+            }
+        }
+
+        let g = m.node(n).graph.expect("fusable applies are owned");
+        // Insertion-ordered collection, budgeted so recursion depth and
+        // postfix size stay bounded on arbitrarily deep chains. The order
+        // is prefix-closed (a member precedes every member reached through
+        // it), so truncating the tail always leaves a connected group.
+        let mut members: Vec<NodeId> = vec![n];
+        let mut set: HashSet<NodeId> = members.iter().copied().collect();
+        collect(m, g, n, &mut members, &mut set);
+
+        // Shrink-to-fit: drop the deepest members until the postfix program
+        // honors the expression caps. Chains longer than one kernel fuse in
+        // segments (the stranded tail re-fires thanks to the root gate
+        // above).
+        loop {
+            // Progress guard: re-wrapping a lone fused_map in a fresh
+            // identical fused_map would loop forever; a lone plain op is
+            // not worth a kernel either.
+            if set.len() == 1 && m.is_apply_of(n, Prim::FusedMap) {
+                return Ok(false);
+            }
+            let mut b = Builder {
+                m,
+                group: &set,
+                leaves: Vec::new(),
+                ix: HashMap::new(),
+                ops: Vec::new(),
+            };
+            match b.emit(n) {
+                Err(TooBig) => {
+                    if members.len() <= 1 {
+                        return Ok(false);
+                    }
+                    let dropped = members.pop().expect("non-empty");
+                    set.remove(&dropped);
+                    continue;
+                }
+                Ok(()) => {
+                    let Builder { leaves, ops, .. } = b;
+                    if ops.iter().filter(|o| o.is_compute()).count() < 2 {
+                        return Ok(false);
+                    }
+                    let expr = match FusedExpr::new(leaves.len(), ops) {
+                        Ok(e) => e,
+                        // Validation failure here means the evaluation-stack
+                        // cap (deep right-nested chains): shrink like any
+                        // other overflow — popped members become leaves,
+                        // which flattens the nesting depth.
+                        Err(_) => {
+                            if members.len() <= 1 {
+                                return Ok(false);
+                            }
+                            let dropped = members.pop().expect("non-empty");
+                            set.remove(&dropped);
+                            continue;
+                        }
+                    };
+                    let expr_const = m.constant(Const::Fused(std::sync::Arc::new(expr)));
+                    let prim = m.constant(Const::Prim(Prim::FusedMap));
+                    let mut inputs = Vec::with_capacity(2 + leaves.len());
+                    inputs.push(prim);
+                    inputs.push(expr_const);
+                    inputs.extend(leaves);
+                    let fused = m.apply(g, inputs);
+                    m.replace_all_uses(n, fused);
+                    return Ok(true);
+                }
+            }
+        }
+    }
+}
+
+/// Members a group may carry. Each member contributes at most four postfix
+/// slots (its op plus up to three leaf pushes), so the budget also bounds
+/// the recursion depth of `collect`/`Builder::emit` — deep chains cannot
+/// overflow the native stack; they fuse in segments instead.
+const MAX_GROUP_MEMBERS: usize = MAX_FUSED_OPS;
+
+/// Grow the group downward from `n`: an input joins when it is fusable,
+/// owned by the same graph, used exactly once (by the member that reached
+/// it, in a value position), and not a graph return. `members` keeps
+/// insertion order (prefix-closed: a node precedes everything reached
+/// through it) so the caller can shrink the group from the tail.
+fn collect(
+    m: &Module,
+    g: GraphId,
+    n: NodeId,
+    members: &mut Vec<NodeId>,
+    set: &mut HashSet<NodeId>,
+) {
+    let inputs = m.node(n).inputs().to_vec();
+    // Splicing an inner fused_map re-emits a swallowed operand's subtree
+    // once per `Input` occurrence in the inner program; an operand the
+    // program references more than once must therefore stay a leaf, or the
+    // fused loop would recompute it per reference (the module use-list sees
+    // only one edge because the kernel's leaf list is deduplicated).
+    let payload = fused_payload(m, n);
+    for idx in value_positions(m, n) {
+        let c = inputs[idx];
+        if set.contains(&c) || members.len() >= MAX_GROUP_MEMBERS {
+            continue;
+        }
+        if let Some(expr) = &payload {
+            let ord = (idx - 2) as u8;
+            let refs = expr
+                .ops
+                .iter()
+                .filter(|op| matches!(op, FusedOp::Input(i) if *i == ord))
+                .count();
+            if refs != 1 {
+                continue;
+            }
+        }
+        if fusable_apply(m, c)
+            && m.node(c).graph == Some(g)
+            && m.use_count(c) == 1
+            && !m.is_graph_return(c)
+        {
+            members.push(c);
+            set.insert(c);
+            collect(m, g, c, members, set);
+        }
+    }
+}
+
+/// Too-big marker for the postfix builder.
+struct TooBig;
+
+struct Builder<'m> {
+    m: &'m Module,
+    group: &'m HashSet<NodeId>,
+    leaves: Vec<NodeId>,
+    ix: HashMap<NodeId, u8>,
+    ops: Vec<FusedOp>,
+}
+
+impl<'m> Builder<'m> {
+    fn push(&mut self, op: FusedOp) -> Result<(), TooBig> {
+        if self.ops.len() >= MAX_FUSED_OPS {
+            return Err(TooBig);
+        }
+        self.ops.push(op);
+        Ok(())
+    }
+
+    fn leaf(&mut self, n: NodeId) -> Result<(), TooBig> {
+        // Scalar constants embed directly in the program.
+        match self.m.node(n).constant() {
+            Some(Const::F64(v)) => return self.push(FusedOp::ConstF64(*v)),
+            Some(Const::I64(v)) => return self.push(FusedOp::ConstI64(*v)),
+            _ => {}
+        }
+        let ix = match self.ix.get(&n) {
+            Some(&i) => i,
+            None => {
+                if self.leaves.len() >= MAX_FUSED_INPUTS {
+                    return Err(TooBig);
+                }
+                let i = self.leaves.len() as u8;
+                self.leaves.push(n);
+                self.ix.insert(n, i);
+                i
+            }
+        };
+        self.push(FusedOp::Input(ix))
+    }
+
+    fn emit(&mut self, n: NodeId) -> Result<(), TooBig> {
+        if !self.group.contains(&n) {
+            return self.leaf(n);
+        }
+        let inputs = self.m.node(n).inputs().to_vec();
+        let p = self.m.as_prim(inputs[0]).expect("group members are prim applies");
+        match p {
+            Prim::Where => {
+                self.emit(inputs[1])?; // cond
+                self.emit(inputs[2])?; // a
+                self.emit(inputs[3])?; // b
+                self.push(FusedOp::Where)
+            }
+            Prim::BroadcastTo => {
+                self.emit(inputs[1])?;
+                let shape =
+                    static_shape(self.m, inputs[2]).expect("checked by fusable_apply");
+                self.push(FusedOp::BroadcastTo(shape))
+            }
+            Prim::FusedMap => {
+                // Splice the inner program: its Input(i) ops resolve to the
+                // inner application's operands, which may themselves be
+                // group members or leaves of the outer group.
+                let sub = fused_payload(self.m, n).expect("checked by fusable_apply");
+                for op in &sub.ops {
+                    match op {
+                        FusedOp::Input(i) => self.emit(inputs[2 + *i as usize])?,
+                        other => self.push(other.clone())?,
+                    }
+                }
+                Ok(())
+            }
+            p if is_un(p) => {
+                self.emit(inputs[1])?;
+                self.push(FusedOp::Un(p))
+            }
+            p if is_bin(p) => {
+                self.emit(inputs[1])?;
+                self.emit(inputs[2])?;
+                self.push(FusedOp::Bin(p))
+            }
+            _ => unreachable!("fusable_apply admitted `{p}`"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::PassManager;
+    use crate::vm::{compile_program, Value, Vm};
+
+    fn run_fusion(m: &mut Module, root: GraphId) -> usize {
+        let mut pm = PassManager::new();
+        pm.push_local(Box::new(Fusion));
+        let (_, stats) = pm.run(m, root).unwrap();
+        m.validate().unwrap();
+        stats.total_rewrites()
+    }
+
+    fn count_fused(m: &Module, g: GraphId) -> usize {
+        m.topo_order(g).iter().filter(|&&n| m.is_apply_of(n, Prim::FusedMap)).count()
+    }
+
+    #[test]
+    fn fuses_a_chain_into_one_kernel() {
+        // f(x) = exp(neg(x)) * x + 2.0 — four compute ops, one group.
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let ng = m.apply_prim(f, Prim::Neg, &[x]);
+        let e = m.apply_prim(f, Prim::Exp, &[ng]);
+        let mu = m.apply_prim(f, Prim::Mul, &[e, x]);
+        let two = m.constant(Const::F64(2.0));
+        let r = m.apply_prim(f, Prim::Add, &[mu, two]);
+        m.set_return(f, r);
+
+        assert!(run_fusion(&mut m, f) >= 1);
+        assert_eq!(count_fused(&m, f), 1, "{}", crate::ir::print_graph(&m, f, false));
+        // The fused graph evaluates like the original chain.
+        let program = compile_program(&m, f).unwrap();
+        let vm = Vm::new(program);
+        let out = vm
+            .call_graph(f, vec![Value::Tensor(crate::tensor::Tensor::from_f64(&[0.5, -1.0]))])
+            .unwrap();
+        let want: Vec<f64> = [0.5f64, -1.0].iter().map(|&v| (-v).exp() * v + 2.0).collect();
+        assert_eq!(out.as_tensor().unwrap().as_f64_vec(), want);
+        let stats = vm.take_stats();
+        assert_eq!(stats.fused_ops, 1);
+        assert!(stats.allocs_saved >= 3, "{stats:?}");
+    }
+
+    #[test]
+    fn shared_subexpression_stays_a_leaf() {
+        // t = exp(x) used twice: t must not be recomputed inside the group.
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let t = m.apply_prim(f, Prim::Exp, &[x]);
+        let a = m.apply_prim(f, Prim::Neg, &[t]);
+        let r = m.apply_prim(f, Prim::Mul, &[a, t]);
+        m.set_return(f, r);
+        run_fusion(&mut m, f);
+        // exp survives unfused (two uses); neg+mul fuse over it.
+        let order = m.topo_order(f);
+        assert!(order.iter().any(|&n| m.is_apply_of(n, Prim::Exp)));
+        assert_eq!(count_fused(&m, f), 1);
+    }
+
+    #[test]
+    fn non_elementwise_ops_break_groups() {
+        // sum() splits the chain into two groups (each still >= 2 ops).
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let a = m.apply_prim(f, Prim::Neg, &[x]);
+        let b = m.apply_prim(f, Prim::Exp, &[a]);
+        let s = m.apply_prim(f, Prim::ReduceSum, &[b]);
+        let c = m.apply_prim(f, Prim::Tanh, &[s]);
+        let r = m.apply_prim(f, Prim::Sqrt, &[c]);
+        m.set_return(f, r);
+        run_fusion(&mut m, f);
+        assert_eq!(count_fused(&m, f), 2);
+        assert!(m.topo_order(f).iter().any(|&n| m.is_apply_of(n, Prim::ReduceSum)));
+    }
+
+    #[test]
+    fn single_op_not_fused() {
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let r = m.apply_prim(f, Prim::Neg, &[x]);
+        m.set_return(f, r);
+        assert_eq!(run_fusion(&mut m, f), 0);
+        assert_eq!(count_fused(&m, f), 0);
+    }
+
+    #[test]
+    fn refusion_splices_existing_kernels() {
+        // First fuse a chain, then expose a new consumer op and re-run: the
+        // old kernel must be spliced into one bigger kernel, not nested.
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let a = m.apply_prim(f, Prim::Neg, &[x]);
+        let b = m.apply_prim(f, Prim::Exp, &[a]);
+        m.set_return(f, b);
+        run_fusion(&mut m, f);
+        assert_eq!(count_fused(&m, f), 1);
+        let fused = m.ret_of(f);
+        let c = m.apply_prim(f, Prim::Tanh, &[fused]);
+        let d = m.apply_prim(f, Prim::Sqrt, &[c]);
+        m.set_return(f, d);
+        run_fusion(&mut m, f);
+        assert_eq!(count_fused(&m, f), 1, "{}", crate::ir::print_graph(&m, f, false));
+        let n = m.ret_of(f);
+        let payload = fused_payload(&m, n).unwrap();
+        assert_eq!(payload.ops.iter().filter(|o| o.is_compute()).count(), 4);
+    }
+
+    #[test]
+    fn graph_return_member_not_swallowed() {
+        // g returns neg(x) while f also consumes it: neg is a return, so it
+        // must stay materialized.
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let ng = m.apply_prim(f, Prim::Neg, &[x]);
+        let e = m.apply_prim(f, Prim::Exp, &[ng]);
+        let g2 = m.add_graph("g");
+        m.set_return(g2, ng); // ng is also a graph return
+        let r = m.apply_prim(f, Prim::Mul, &[e, x]);
+        m.set_return(f, r);
+        run_fusion(&mut m, f);
+        assert!(m.topo_order(f).iter().any(|&n| m.is_apply_of(n, Prim::Neg)));
+    }
+}

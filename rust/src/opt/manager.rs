@@ -199,6 +199,10 @@ impl PassManager {
         pm.push_local(Box::new(super::Algebraic));
         pm.push_local(Box::new(super::ConstantFold));
         pm.push_local(Box::new(super::Cse::default()));
+        // Fusion runs after the scalar simplifiers so groups form over the
+        // already-collapsed adjoint; it re-fires (splicing existing fused
+        // kernels) whenever a later round exposes new elementwise neighbors.
+        pm.push_local(Box::new(super::Fusion));
         pm.push_finalizer(Box::new(super::DeadGraphGc));
         pm
     }
@@ -243,6 +247,14 @@ impl PassManager {
     pub fn has_pass(&self, name: &str) -> bool {
         self.slots.iter().any(|s| s.name() == name)
             || self.finalizers.iter().any(|f| f.name() == name)
+    }
+
+    /// Remove every stage (and finalizer) named `name`. Used by the
+    /// `Optimize` transform to drop backend-inapplicable passes (e.g.
+    /// `fusion` under XLA lowering) without touching the pass-set spec.
+    pub fn remove_pass(&mut self, name: &str) {
+        self.slots.retain(|s| s.name() != name);
+        self.finalizers.retain(|f| f.name() != name);
     }
 
     /// Run every pass to fixpoint on everything reachable from `root`, then

@@ -24,6 +24,8 @@
 //!   | `algebraic`      | local     | identities, ZeroT absorption, env/switch rules      |
 //!   | `constant-fold`  | local     | pure prims on constants via the VM's `eval_prim`    |
 //!   | `cse`            | local     | per-graph common-subexpression elimination          |
+//!   | `fusion`         | local     | maximal single-consumer elementwise trees collapse  |
+//!   |                  |           | into one `fused_map` kernel (no intermediates)      |
 //!   | `gc`             | finalizer | arena compaction: drop graphs/nodes unreachable     |
 //!   |                  |           | from the entry (deterministic renumbering)          |
 //!
@@ -38,12 +40,14 @@
 //! contribution; `benches/compile_time` (E7) A/Bs the worklist driver
 //! against [`LegacyOptimize`], the emulated pre-worklist fixpoint loop.
 
+pub mod fusion;
 pub mod gc;
 pub mod inline;
 pub mod manager;
 pub mod passes;
 pub mod sccp;
 
+pub use fusion::{count_fused_kernels, Fusion};
 pub use gc::{compact, DeadGraphGc, GcStats};
 pub use inline::{is_recursive, Inline, InlinePolicy};
 pub use manager::{
@@ -57,8 +61,11 @@ use crate::transform::{StageMetrics, Transform};
 use anyhow::{bail, Result};
 
 /// Names of every pass in the standard pipeline, in execution order.
-pub const STANDARD_PASSES: [&str; 7] =
-    ["tuple-simplify", "sccp", "inline", "algebraic", "constant-fold", "cse", "gc"];
+/// (`fusion` joined in PR 5; the `standard` spec key is unchanged, so
+/// existing `opt=standard` pipeline fingerprints — and their cached
+/// artifacts — are unaffected.)
+pub const STANDARD_PASSES: [&str; 8] =
+    ["tuple-simplify", "sccp", "inline", "algebraic", "constant-fold", "cse", "fusion", "gc"];
 
 /// A named, selectable set of optimization passes — the unit the `Optimize`
 /// transform is configured with. Unlike a bare [`PassManager`], a `PassSet`

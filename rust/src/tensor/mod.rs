@@ -15,8 +15,43 @@ pub use matmul::{batch_matmul, matmul};
 pub use ops::*;
 pub use rng::Rng;
 
+use std::cell::Cell;
 use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+
+/// Process-wide count of elementwise-kernel outputs written in place into a
+/// dying operand's buffer instead of a fresh allocation (see
+/// [`Tensor::try_unique_mut`] and the owned kernels in [`ops`]). Relaxed
+/// telemetry, not synchronization.
+static BUFFER_REUSES: AtomicU64 = AtomicU64::new(0);
+
+pub(crate) fn note_buffer_reuse() {
+    BUFFER_REUSES.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Total in-place buffer reuses since process start.
+pub fn buffer_reuse_count() -> u64 {
+    BUFFER_REUSES.load(Ordering::Relaxed)
+}
+
+thread_local! {
+    /// Per-thread count of full-buffer f64/f32 materializations
+    /// ([`Tensor::as_f64_vec`]/[`Tensor::as_f32_vec`]) — the "conversion
+    /// tax" the typed kernels and fused regions are designed to avoid. The
+    /// VM samples this around each primitive call to attribute conversions
+    /// to execution (`ExecStats::conversions`).
+    static CONVERSIONS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn note_conversion() {
+    CONVERSIONS.with(|c| c.set(c.get() + 1));
+}
+
+/// This thread's running conversion count (monotone).
+pub fn conversion_count() -> u64 {
+    CONVERSIONS.with(|c| c.get())
+}
 
 /// Element dtype of a [`Tensor`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -235,8 +270,27 @@ impl Tensor {
         self.numel() * self.dtype().size_of()
     }
 
+    /// If this tensor is the *only* owner of its buffer (Arc refcount 1),
+    /// borrow it mutably for in-place writes. The language is purely
+    /// functional, so a uniquely-owned buffer is provably dead after its
+    /// last use — writing the next value into it is unobservable.
+    pub fn try_unique_mut(&mut self) -> Option<&mut Buffer> {
+        Arc::get_mut(&mut self.data)
+    }
+
+    /// Consume the tensor; if it uniquely owned its buffer, return the
+    /// buffer for reuse, otherwise hand the (shared) tensor back.
+    pub fn into_unique_buffer(self) -> Result<Buffer, Tensor> {
+        let Tensor { shape, data } = self;
+        match Arc::try_unwrap(data) {
+            Ok(buf) => Ok(buf),
+            Err(data) => Err(Tensor { shape, data }),
+        }
+    }
+
     /// View the buffer as f64, converting if necessary.
     pub fn as_f64_vec(&self) -> Vec<f64> {
+        note_conversion();
         match &*self.data {
             Buffer::F64(v) => v.clone(),
             Buffer::F32(v) => v.iter().map(|&x| x as f64).collect(),
@@ -247,6 +301,7 @@ impl Tensor {
 
     /// View the buffer as f32, converting if necessary.
     pub fn as_f32_vec(&self) -> Vec<f32> {
+        note_conversion();
         match &*self.data {
             Buffer::F32(v) => v.clone(),
             Buffer::F64(v) => v.iter().map(|&x| x as f32).collect(),

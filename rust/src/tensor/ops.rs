@@ -8,7 +8,7 @@
 //! binary ops.
 
 use super::{strides_for, terr, Buffer, DType, TResult, Tensor};
-
+use std::borrow::Cow;
 
 /// Broadcast two shapes together (NumPy rules).
 pub fn broadcast_shapes(a: &[usize], b: &[usize]) -> TResult<Vec<usize>> {
@@ -33,7 +33,7 @@ pub fn broadcast_shapes(a: &[usize], b: &[usize]) -> TResult<Vec<usize>> {
 /// Iterate the flat index of a (possibly broadcast) operand for each output
 /// position. `shape` is the operand's own shape, `out_shape` the broadcast
 /// result shape.
-fn broadcast_index_map(shape: &[usize], out_shape: &[usize]) -> Vec<usize> {
+pub(crate) fn broadcast_index_map(shape: &[usize], out_shape: &[usize]) -> Vec<usize> {
     let out_strides = strides_for(out_shape);
     let in_strides = strides_for(shape);
     let offset = out_shape.len() - shape.len();
@@ -53,7 +53,7 @@ fn broadcast_index_map(shape: &[usize], out_shape: &[usize]) -> Vec<usize> {
 }
 
 /// Result dtype of a binary arithmetic op.
-fn promote(a: DType, b: DType) -> DType {
+pub(crate) fn promote(a: DType, b: DType) -> DType {
     use DType::*;
     match (a, b) {
         (F64, _) | (_, F64) => F64,
@@ -61,6 +61,465 @@ fn promote(a: DType, b: DType) -> DType {
         (I64, _) | (_, I64) => I64,
         _ => Bool,
     }
+}
+
+// ---- typed (dtype-preserving) elementwise kernels -----------------------
+//
+// The original `binary_op`/`unary_op` round-tripped every operand through
+// `as_f64_vec()` and rebuilt the result from f64 — two converting copies
+// per op and exact integers only below 2^53. The kernels below are
+// monomorphized per element type: f32 chains compute in f32, i64 chains in
+// native (wrapping) i64, and — because values are reference-counted and the
+// language is purely functional — an operand whose buffer is uniquely owned
+// at the call is provably dead, so the `*_owned` entry points write the
+// result into it in place instead of allocating.
+
+/// Binary arithmetic ops with a typed kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NumOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Pow,
+    Maximum,
+    Minimum,
+    FloorDiv,
+    Mod,
+}
+
+/// Unary elementwise ops with a typed kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnOp {
+    Neg,
+    Exp,
+    Ln,
+    Tanh,
+    Sqrt,
+    Sin,
+    Cos,
+    Relu,
+    Sigmoid,
+    Abs,
+    Sign,
+    Step,
+    Floor,
+}
+
+/// Output dtype of a typed unary op: floats are preserved; integer `neg`
+/// and `abs` stay integral (exact for all i64); everything else falls back
+/// to f64 (transcendentals of integers, anything over bool).
+pub fn unary_out_dtype(op: UnOp, input: DType) -> DType {
+    match input {
+        DType::F32 => DType::F32,
+        DType::F64 => DType::F64,
+        DType::I64 => match op {
+            UnOp::Neg | UnOp::Abs => DType::I64,
+            _ => DType::F64,
+        },
+        DType::Bool => DType::F64,
+    }
+}
+
+fn f64_bin(op: NumOp, x: f64, y: f64) -> f64 {
+    match op {
+        NumOp::Add => x + y,
+        NumOp::Sub => x - y,
+        NumOp::Mul => x * y,
+        NumOp::Div => x / y,
+        NumOp::Pow => x.powf(y),
+        NumOp::Maximum => x.max(y),
+        NumOp::Minimum => x.min(y),
+        NumOp::FloorDiv => (x / y).floor(),
+        NumOp::Mod => x.rem_euclid(y),
+    }
+}
+
+fn f64_un(op: UnOp, x: f64) -> f64 {
+    match op {
+        UnOp::Neg => -x,
+        UnOp::Exp => x.exp(),
+        UnOp::Ln => x.ln(),
+        UnOp::Tanh => x.tanh(),
+        UnOp::Sqrt => x.sqrt(),
+        UnOp::Sin => x.sin(),
+        UnOp::Cos => x.cos(),
+        UnOp::Relu => x.max(0.0),
+        UnOp::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+        UnOp::Abs => x.abs(),
+        UnOp::Sign => x.signum(),
+        UnOp::Step => {
+            if x > 0.0 {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        UnOp::Floor => x.floor(),
+    }
+}
+
+/// Element type a kernel is monomorphized over. Public because the VM's
+/// fused-kernel loop (`vm/fused.rs`) is generic over the same trait.
+pub trait Elem: Copy + PartialEq + 'static {
+    const DTYPE: DType;
+    fn zero() -> Self;
+    fn from_f64(x: f64) -> Self;
+    fn is_truthy(self) -> bool;
+    /// Borrow the tensor's elements as `Self`, converting (one allocation)
+    /// only when the dtype differs.
+    fn read(t: &Tensor) -> Cow<'_, [Self]>;
+    fn buffer(v: Vec<Self>) -> Buffer;
+    /// Reclaim a uniquely-owned buffer of this dtype for in-place writes.
+    fn from_buffer(b: Buffer) -> Option<Vec<Self>>;
+    /// Borrow a buffer's elements mutably (for in-place rewrites through
+    /// [`Tensor::try_unique_mut`]).
+    fn from_buffer_mut(b: &mut Buffer) -> Option<&mut Vec<Self>>;
+    fn bin(op: NumOp, x: Self, y: Self) -> Self;
+    fn un(op: UnOp, x: Self) -> Self;
+}
+
+impl Elem for f64 {
+    const DTYPE: DType = DType::F64;
+    fn zero() -> f64 {
+        0.0
+    }
+    fn from_f64(x: f64) -> f64 {
+        x
+    }
+    fn is_truthy(self) -> bool {
+        self != 0.0
+    }
+    fn read(t: &Tensor) -> Cow<'_, [f64]> {
+        match t.buffer() {
+            Buffer::F64(v) => Cow::Borrowed(v),
+            Buffer::F32(v) => Cow::Owned(v.iter().map(|&x| x as f64).collect()),
+            Buffer::I64(v) => Cow::Owned(v.iter().map(|&x| x as f64).collect()),
+            Buffer::Bool(v) => {
+                Cow::Owned(v.iter().map(|&x| if x { 1.0 } else { 0.0 }).collect())
+            }
+        }
+    }
+    fn buffer(v: Vec<f64>) -> Buffer {
+        Buffer::F64(v)
+    }
+    fn from_buffer(b: Buffer) -> Option<Vec<f64>> {
+        match b {
+            Buffer::F64(v) => Some(v),
+            _ => None,
+        }
+    }
+    fn from_buffer_mut(b: &mut Buffer) -> Option<&mut Vec<f64>> {
+        match b {
+            Buffer::F64(v) => Some(v),
+            _ => None,
+        }
+    }
+    fn bin(op: NumOp, x: f64, y: f64) -> f64 {
+        f64_bin(op, x, y)
+    }
+    fn un(op: UnOp, x: f64) -> f64 {
+        f64_un(op, x)
+    }
+}
+
+impl Elem for f32 {
+    const DTYPE: DType = DType::F32;
+    fn zero() -> f32 {
+        0.0
+    }
+    fn from_f64(x: f64) -> f32 {
+        x as f32
+    }
+    fn is_truthy(self) -> bool {
+        self != 0.0
+    }
+    fn read(t: &Tensor) -> Cow<'_, [f32]> {
+        match t.buffer() {
+            Buffer::F32(v) => Cow::Borrowed(v),
+            Buffer::F64(v) => Cow::Owned(v.iter().map(|&x| x as f32).collect()),
+            Buffer::I64(v) => Cow::Owned(v.iter().map(|&x| x as f32).collect()),
+            Buffer::Bool(v) => {
+                Cow::Owned(v.iter().map(|&x| if x { 1.0 } else { 0.0 }).collect())
+            }
+        }
+    }
+    fn buffer(v: Vec<f32>) -> Buffer {
+        Buffer::F32(v)
+    }
+    fn from_buffer(b: Buffer) -> Option<Vec<f32>> {
+        match b {
+            Buffer::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+    fn from_buffer_mut(b: &mut Buffer) -> Option<&mut Vec<f32>> {
+        match b {
+            Buffer::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+    fn bin(op: NumOp, x: f32, y: f32) -> f32 {
+        match op {
+            NumOp::Add => x + y,
+            NumOp::Sub => x - y,
+            NumOp::Mul => x * y,
+            NumOp::Div => x / y,
+            NumOp::Pow => x.powf(y),
+            NumOp::Maximum => x.max(y),
+            NumOp::Minimum => x.min(y),
+            NumOp::FloorDiv => (x / y).floor(),
+            NumOp::Mod => x.rem_euclid(y),
+        }
+    }
+    fn un(op: UnOp, x: f32) -> f32 {
+        match op {
+            UnOp::Neg => -x,
+            UnOp::Exp => x.exp(),
+            UnOp::Ln => x.ln(),
+            UnOp::Tanh => x.tanh(),
+            UnOp::Sqrt => x.sqrt(),
+            UnOp::Sin => x.sin(),
+            UnOp::Cos => x.cos(),
+            UnOp::Relu => x.max(0.0),
+            UnOp::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+            UnOp::Abs => x.abs(),
+            UnOp::Sign => x.signum(),
+            UnOp::Step => {
+                if x > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            UnOp::Floor => x.floor(),
+        }
+    }
+}
+
+impl Elem for i64 {
+    const DTYPE: DType = DType::I64;
+    fn zero() -> i64 {
+        0
+    }
+    fn from_f64(x: f64) -> i64 {
+        x as i64
+    }
+    fn is_truthy(self) -> bool {
+        self != 0
+    }
+    fn read(t: &Tensor) -> Cow<'_, [i64]> {
+        match t.buffer() {
+            Buffer::I64(v) => Cow::Borrowed(v),
+            Buffer::F64(v) => Cow::Owned(v.iter().map(|&x| x as i64).collect()),
+            Buffer::F32(v) => Cow::Owned(v.iter().map(|&x| x as i64).collect()),
+            Buffer::Bool(v) => Cow::Owned(v.iter().map(|&x| x as i64).collect()),
+        }
+    }
+    fn buffer(v: Vec<i64>) -> Buffer {
+        Buffer::I64(v)
+    }
+    fn from_buffer(b: Buffer) -> Option<Vec<i64>> {
+        match b {
+            Buffer::I64(v) => Some(v),
+            _ => None,
+        }
+    }
+    fn from_buffer_mut(b: &mut Buffer) -> Option<&mut Vec<i64>> {
+        match b {
+            Buffer::I64(v) => Some(v),
+            _ => None,
+        }
+    }
+    fn bin(op: NumOp, x: i64, y: i64) -> i64 {
+        match op {
+            // Wrapping arithmetic: exact for every representable i64 (the
+            // old f64 round-trip silently lost precision above 2^53).
+            NumOp::Add => x.wrapping_add(y),
+            NumOp::Sub => x.wrapping_sub(y),
+            NumOp::Mul => x.wrapping_mul(y),
+            // Division by zero keeps the old saturating f64 semantics
+            // instead of a hardware trap.
+            NumOp::Div => {
+                if y == 0 {
+                    (x as f64 / y as f64) as i64
+                } else {
+                    x.wrapping_div(y)
+                }
+            }
+            NumOp::Pow => {
+                if y >= 0 {
+                    x.wrapping_pow(y.min(u32::MAX as i64) as u32)
+                } else {
+                    // Clamp before the i32 cast: a huge negative exponent
+                    // must saturate toward 0, not wrap positive.
+                    (x as f64).powi(y.max(i32::MIN as i64) as i32) as i64
+                }
+            }
+            NumOp::Maximum => x.max(y),
+            NumOp::Minimum => x.min(y),
+            // Euclidean forms are exact for every representable i64.
+            NumOp::FloorDiv => {
+                if y == 0 {
+                    ((x as f64) / (y as f64)).floor() as i64
+                } else {
+                    x.div_euclid(y)
+                }
+            }
+            NumOp::Mod => {
+                if y == 0 {
+                    (x as f64).rem_euclid(y as f64) as i64
+                } else {
+                    x.rem_euclid(y)
+                }
+            }
+        }
+    }
+    fn un(op: UnOp, x: i64) -> i64 {
+        match op {
+            UnOp::Neg => x.wrapping_neg(),
+            UnOp::Abs => x.wrapping_abs(),
+            // Remaining ops never reach the i64 kernel (`unary_out_dtype`
+            // routes them through f64); keep a correct fallback anyway.
+            other => f64_un(other, x as f64) as i64,
+        }
+    }
+}
+
+/// A broadcast-aware element reader over one operand of an output space.
+pub(crate) enum Rd<'t, T: Elem> {
+    /// Single element broadcast everywhere.
+    Splat(T),
+    /// Same shape as the output: direct indexing.
+    Slice(Cow<'t, [T]>),
+    /// Arbitrary broadcast: indirect through a precomputed index map.
+    Mapped(Cow<'t, [T]>, Vec<usize>),
+}
+
+impl<'t, T: Elem> Rd<'t, T> {
+    pub(crate) fn new(t: &'t Tensor, out_shape: &[usize]) -> Rd<'t, T> {
+        if t.numel() == 1 {
+            return Rd::Splat(T::read(t)[0]);
+        }
+        if t.shape() == out_shape {
+            return Rd::Slice(T::read(t));
+        }
+        Rd::Mapped(T::read(t), broadcast_index_map(t.shape(), out_shape))
+    }
+
+    #[inline]
+    pub(crate) fn get(&self, k: usize) -> T {
+        match self {
+            Rd::Splat(v) => *v,
+            Rd::Slice(v) => v[k],
+            Rd::Mapped(v, map) => v[map[k]],
+        }
+    }
+}
+
+/// Typed binary arithmetic on borrowed tensors (no in-place reuse — the
+/// caller's references keep both buffers alive).
+pub fn binary_num(a: &Tensor, b: &Tensor, op: NumOp) -> TResult<Tensor> {
+    binary_num_owned(a.clone(), b.clone(), op)
+}
+
+/// Typed binary arithmetic consuming both operands: when an operand has the
+/// output's shape and dtype and uniquely owns its buffer, the result is
+/// written into it in place (zero allocations on the elementwise hot path).
+pub fn binary_num_owned(a: Tensor, b: Tensor, op: NumOp) -> TResult<Tensor> {
+    let out_shape = broadcast_shapes(a.shape(), b.shape())?;
+    match promote(a.dtype(), b.dtype()) {
+        DType::F64 => bin_typed::<f64>(a, b, op, out_shape),
+        DType::F32 => bin_typed::<f32>(a, b, op, out_shape),
+        DType::I64 => bin_typed::<i64>(a, b, op, out_shape),
+        // Arithmetic over two bool tensors: legacy f64 path (rare, tiny).
+        DType::Bool => binary_op(&a, &b, move |x, y| f64_bin(op, x, y), None),
+    }
+}
+
+fn bin_typed<T: Elem>(
+    mut a: Tensor,
+    mut b: Tensor,
+    op: NumOp,
+    out_shape: Vec<usize>,
+) -> TResult<Tensor> {
+    let numel: usize = out_shape.iter().product();
+    // In-place into a dying operand (unique buffer, output shape/dtype). A
+    // shared operand is left untouched — uniqueness of the Arc is the
+    // aliasing guard.
+    if a.shape() == out_shape && a.dtype() == T::DTYPE {
+        match a.into_unique_buffer() {
+            Ok(buf) => {
+                let mut va = T::from_buffer(buf).expect("dtype checked");
+                let rb = Rd::<T>::new(&b, &out_shape);
+                for (k, slot) in va.iter_mut().enumerate() {
+                    *slot = T::bin(op, *slot, rb.get(k));
+                }
+                super::note_buffer_reuse();
+                return Tensor::new(out_shape, T::buffer(va));
+            }
+            Err(shared) => a = shared,
+        }
+    }
+    if b.shape() == out_shape && b.dtype() == T::DTYPE {
+        match b.into_unique_buffer() {
+            Ok(buf) => {
+                let mut vb = T::from_buffer(buf).expect("dtype checked");
+                let ra = Rd::<T>::new(&a, &out_shape);
+                for (k, slot) in vb.iter_mut().enumerate() {
+                    *slot = T::bin(op, ra.get(k), *slot);
+                }
+                super::note_buffer_reuse();
+                return Tensor::new(out_shape, T::buffer(vb));
+            }
+            Err(shared) => b = shared,
+        }
+    }
+    let ra = Rd::<T>::new(&a, &out_shape);
+    let rb = Rd::<T>::new(&b, &out_shape);
+    let out: Vec<T> = (0..numel).map(|k| T::bin(op, ra.get(k), rb.get(k))).collect();
+    Tensor::new(out_shape, T::buffer(out))
+}
+
+/// Typed unary elementwise on a borrowed tensor.
+pub fn unary_num(a: &Tensor, op: UnOp) -> Tensor {
+    unary_num_owned(a.clone(), op)
+}
+
+/// Typed unary elementwise consuming the operand; reuses its buffer in
+/// place when uniquely owned and dtype-preserving.
+pub fn unary_num_owned(a: Tensor, op: UnOp) -> Tensor {
+    match unary_out_dtype(op, a.dtype()) {
+        DType::F64 => un_typed::<f64>(a, op),
+        DType::F32 => un_typed::<f32>(a, op),
+        DType::I64 => un_typed::<i64>(a, op),
+        DType::Bool => unreachable!("unary ops never produce bool"),
+    }
+}
+
+fn un_typed<T: Elem>(mut a: Tensor, op: UnOp) -> Tensor {
+    let shape = a.shape().to_vec();
+    if a.dtype() == T::DTYPE {
+        // Dtype-preserving on a uniquely-owned buffer: rewrite the elements
+        // where they sit (no unwrap/rebuild, no allocation).
+        if let Some(buf) = a.try_unique_mut() {
+            let v = T::from_buffer_mut(buf).expect("dtype checked");
+            for slot in v.iter_mut() {
+                *slot = T::un(op, *slot);
+            }
+            super::note_buffer_reuse();
+            return a;
+        }
+        let out: Vec<T> = T::read(&a).iter().map(|&x| T::un(op, x)).collect();
+        return Tensor::new(shape, T::buffer(out)).expect("unary preserves shape");
+    }
+    // Converting path: `read` already allocated the converted Vec; map it
+    // in place (one allocation total, same as the conversion alone).
+    let mut v: Vec<T> = T::read(&a).into_owned();
+    for slot in v.iter_mut() {
+        *slot = T::un(op, *slot);
+    }
+    Tensor::new(shape, T::buffer(v)).expect("unary preserves shape")
 }
 
 /// Apply a binary f64 function elementwise with broadcasting. Output dtype is
@@ -117,19 +576,19 @@ pub fn unary_op(a: &Tensor, f: impl Fn(f64) -> f64) -> Tensor {
 macro_rules! binary_fns {
     ($($name:ident => $op:expr;)*) => {
         $(pub fn $name(a: &Tensor, b: &Tensor) -> TResult<Tensor> {
-            binary_op(a, b, $op, None)
+            binary_num(a, b, $op)
         })*
     };
 }
 
 binary_fns! {
-    add => |x, y| x + y;
-    sub => |x, y| x - y;
-    mul => |x, y| x * y;
-    div => |x, y| x / y;
-    pow => |x, y| x.powf(y);
-    maximum => |x: f64, y: f64| x.max(y);
-    minimum => |x: f64, y: f64| x.min(y);
+    add => NumOp::Add;
+    sub => NumOp::Sub;
+    mul => NumOp::Mul;
+    div => NumOp::Div;
+    pow => NumOp::Pow;
+    maximum => NumOp::Maximum;
+    minimum => NumOp::Minimum;
 }
 
 macro_rules! compare_fns {
@@ -151,61 +610,141 @@ compare_fns! {
 
 macro_rules! unary_fns {
     ($($name:ident => $op:expr;)*) => {
-        $(pub fn $name(a: &Tensor) -> Tensor { unary_op(a, $op) })*
+        $(pub fn $name(a: &Tensor) -> Tensor { unary_num(a, $op) })*
     };
 }
 
 unary_fns! {
-    neg => |x: f64| -x;
-    exp => f64::exp;
-    ln => f64::ln;
-    tanh => f64::tanh;
-    sqrt => f64::sqrt;
-    sin => f64::sin;
-    cos => f64::cos;
-    relu => |x: f64| x.max(0.0);
-    sigmoid => |x: f64| 1.0 / (1.0 + (-x).exp());
-    abs => f64::abs;
-    sign => f64::signum;
-    floor => f64::floor;
+    neg => UnOp::Neg;
+    exp => UnOp::Exp;
+    ln => UnOp::Ln;
+    tanh => UnOp::Tanh;
+    sqrt => UnOp::Sqrt;
+    sin => UnOp::Sin;
+    cos => UnOp::Cos;
+    relu => UnOp::Relu;
+    sigmoid => UnOp::Sigmoid;
+    abs => UnOp::Abs;
+    sign => UnOp::Sign;
+    floor => UnOp::Floor;
+    step => UnOp::Step;
 }
 
-/// Elementwise select: `cond ? a : b`, with broadcasting.
+/// Elementwise select: `cond ? a : b`, with broadcasting. Typed: the
+/// branch values never round-trip through f64 (exact for large i64).
 pub fn where_(cond: &Tensor, a: &Tensor, b: &Tensor) -> TResult<Tensor> {
-    let ab = binary_op(a, b, |x, _| x, None)?; // broadcast a over (a,b)
-    let ba = binary_op(a, b, |_, y| y, None)?;
-    let shape = broadcast_shapes(cond.shape(), ab.shape())?;
-    let cmap = broadcast_index_map(cond.shape(), &shape);
-    let amap = broadcast_index_map(ab.shape(), &shape);
-    let cv = cond.as_f64_vec();
-    let av = ab.as_f64_vec();
-    let bv = ba.as_f64_vec();
-    let out: Vec<f64> = (0..shape.iter().product::<usize>())
-        .map(|k| if cv[cmap[k]] != 0.0 { av[amap[k]] } else { bv[amap[k]] })
-        .collect();
-    let buf = match promote(a.dtype(), b.dtype()) {
-        DType::F32 => Buffer::F32(out.into_iter().map(|x| x as f32).collect()),
-        DType::I64 => Buffer::I64(out.into_iter().map(|x| x as i64).collect()),
-        DType::Bool => Buffer::Bool(out.into_iter().map(|x| x != 0.0).collect()),
-        DType::F64 => Buffer::F64(out),
-    };
-    Tensor::new(shape, buf)
+    let ab = broadcast_shapes(a.shape(), b.shape())?;
+    let shape = broadcast_shapes(cond.shape(), &ab)?;
+    match promote(a.dtype(), b.dtype()) {
+        DType::F64 => where_typed::<f64>(cond, a, b, shape),
+        DType::F32 => where_typed::<f32>(cond, a, b, shape),
+        DType::I64 => where_typed::<i64>(cond, a, b, shape),
+        DType::Bool => {
+            // bool branches: select as i64 0/1 and cast back (rare).
+            let t = where_typed::<i64>(cond, a, b, shape)?;
+            Ok(t.cast(DType::Bool))
+        }
+    }
 }
 
-/// Broadcast a tensor to a larger shape (materializing the copy).
+/// [`where_`] consuming its operands: a dying same-shape/same-dtype branch
+/// hosts the output in place (only the not-taken slots are overwritten), so
+/// `where_`-bearing adjoints stay on the allocation-free hot path like the
+/// other elementwise kernels.
+pub fn where_owned(cond: Tensor, a: Tensor, b: Tensor) -> TResult<Tensor> {
+    let ab = broadcast_shapes(a.shape(), b.shape())?;
+    let shape = broadcast_shapes(cond.shape(), &ab)?;
+    match promote(a.dtype(), b.dtype()) {
+        DType::F64 => where_typed_owned::<f64>(cond, a, b, shape),
+        DType::F32 => where_typed_owned::<f32>(cond, a, b, shape),
+        DType::I64 => where_typed_owned::<i64>(cond, a, b, shape),
+        DType::Bool => {
+            let t = where_typed::<i64>(&cond, &a, &b, shape)?;
+            Ok(t.cast(DType::Bool))
+        }
+    }
+}
+
+fn where_typed_owned<T: Elem>(
+    cond: Tensor,
+    mut a: Tensor,
+    mut b: Tensor,
+    shape: Vec<usize>,
+) -> TResult<Tensor> {
+    if a.shape() == shape && a.dtype() == T::DTYPE {
+        match a.into_unique_buffer() {
+            Ok(buf) => {
+                let mut va = T::from_buffer(buf).expect("dtype checked");
+                let rc = Rd::<f64>::new(&cond, &shape);
+                let rb = Rd::<T>::new(&b, &shape);
+                for (k, slot) in va.iter_mut().enumerate() {
+                    if rc.get(k) == 0.0 {
+                        *slot = rb.get(k);
+                    }
+                }
+                super::note_buffer_reuse();
+                return Tensor::new(shape, T::buffer(va));
+            }
+            Err(shared) => a = shared,
+        }
+    }
+    if b.shape() == shape && b.dtype() == T::DTYPE {
+        match b.into_unique_buffer() {
+            Ok(buf) => {
+                let mut vb = T::from_buffer(buf).expect("dtype checked");
+                let rc = Rd::<f64>::new(&cond, &shape);
+                let ra = Rd::<T>::new(&a, &shape);
+                for (k, slot) in vb.iter_mut().enumerate() {
+                    if rc.get(k) != 0.0 {
+                        *slot = ra.get(k);
+                    }
+                }
+                super::note_buffer_reuse();
+                return Tensor::new(shape, T::buffer(vb));
+            }
+            Err(shared) => b = shared,
+        }
+    }
+    where_typed::<T>(&cond, &a, &b, shape)
+}
+
+fn where_typed<T: Elem>(
+    cond: &Tensor,
+    a: &Tensor,
+    b: &Tensor,
+    shape: Vec<usize>,
+) -> TResult<Tensor> {
+    // The condition's truthiness is decided in its OWN value domain (read
+    // as f64, like the original kernel) — converting it to the branch
+    // dtype first would truncate fractional/subnormal conditions to 0 and
+    // flip the select.
+    let rc = Rd::<f64>::new(cond, &shape);
+    let ra = Rd::<T>::new(a, &shape);
+    let rb = Rd::<T>::new(b, &shape);
+    let numel: usize = shape.iter().product();
+    let out: Vec<T> = (0..numel)
+        .map(|k| if rc.get(k) != 0.0 { ra.get(k) } else { rb.get(k) })
+        .collect();
+    Tensor::new(shape, T::buffer(out))
+}
+
+/// Broadcast a tensor to a larger shape. The copy is materialized with a
+/// dtype-preserving kernel (no f64 round-trip); broadcasting to the same
+/// shape is a zero-copy buffer share.
 pub fn broadcast_to(a: &Tensor, shape: &[usize]) -> TResult<Tensor> {
     let joint = broadcast_shapes(a.shape(), shape)?;
     if joint != shape {
         return terr(format!("cannot broadcast {:?} to {:?}", a.shape(), shape));
     }
+    if a.shape() == shape {
+        return Ok(a.clone());
+    }
     let map = broadcast_index_map(a.shape(), shape);
-    let av = a.as_f64_vec();
-    let out: Vec<f64> = map.iter().map(|&i| av[i]).collect();
-    let buf = match a.dtype() {
-        DType::F32 => Buffer::F32(out.into_iter().map(|x| x as f32).collect()),
-        DType::I64 => Buffer::I64(out.into_iter().map(|x| x as i64).collect()),
-        DType::Bool => Buffer::Bool(out.into_iter().map(|x| x != 0.0).collect()),
-        DType::F64 => Buffer::F64(out),
+    let buf = match a.buffer() {
+        Buffer::F64(v) => Buffer::F64(map.iter().map(|&i| v[i]).collect()),
+        Buffer::F32(v) => Buffer::F32(map.iter().map(|&i| v[i]).collect()),
+        Buffer::I64(v) => Buffer::I64(map.iter().map(|&i| v[i]).collect()),
+        Buffer::Bool(v) => Buffer::Bool(map.iter().map(|&i| v[i]).collect()),
     };
     Tensor::new(shape.to_vec(), buf)
 }
@@ -912,6 +1451,32 @@ mod tests {
         let a = t(&[1.0, 2.0, 3.0], &[3]);
         let b = t(&[10.0, 20.0, 30.0], &[3]);
         assert_eq!(where_(&c, &a, &b).unwrap().as_f64_vec(), vec![1.0, 20.0, 3.0]);
+    }
+
+    #[test]
+    fn where_owned_reuses_dying_branch() {
+        let before = crate::tensor::buffer_reuse_count();
+        let c = Tensor::new(vec![3], Buffer::Bool(vec![true, false, true])).unwrap();
+        let a = t(&[1.0, 2.0, 3.0], &[3]);
+        let b = t(&[9.0, 9.0, 9.0], &[3]);
+        // `a` is uniquely owned and output-shaped: its buffer hosts the
+        // result; only the not-taken slot is overwritten.
+        let r = where_owned(c, a, b).unwrap();
+        assert_eq!(r.as_f64_vec(), vec![1.0, 9.0, 3.0]);
+        assert!(crate::tensor::buffer_reuse_count() > before);
+    }
+
+    #[test]
+    fn where_fractional_condition_stays_truthy() {
+        // Truthiness is decided in the condition's own domain: a fractional
+        // f64 condition must select the first branch even when the branches
+        // are integral (conversion to i64 would truncate 0.5 to 0).
+        let c = t(&[0.5, 0.0], &[2]);
+        let a = Tensor::from_i64_shaped(vec![1, 1], vec![2]).unwrap();
+        let b = Tensor::from_i64_shaped(vec![2, 2], vec![2]).unwrap();
+        let r = where_(&c, &a, &b).unwrap();
+        assert_eq!(r.dtype(), DType::I64);
+        assert_eq!(r.as_f64_vec(), vec![1.0, 2.0]);
     }
 
     #[test]

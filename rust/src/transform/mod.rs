@@ -77,6 +77,23 @@ pub trait Transform: Send + Sync {
     /// be filled with transform-specific counters.
     fn apply(&self, m: &mut Module, entry: GraphId, stage: &mut StageMetrics) -> Result<GraphId>;
 
+    /// Like [`Transform::apply`], but told which backend the pipeline will
+    /// lower to. Default: ignore the backend. `Optimize` overrides this to
+    /// drop the VM-specific `fusion` pass under XLA (a `fused_map` node is
+    /// opaque to the segment extractor, and XLA performs its own fusion —
+    /// keeping the prims unfused hands it maximal straight-line runs).
+    /// The backend is part of the pipeline spec, so this per-backend
+    /// behavior is already captured by existing fingerprints.
+    fn apply_for_backend(
+        &self,
+        m: &mut Module,
+        entry: GraphId,
+        stage: &mut StageMetrics,
+        _backend: Backend,
+    ) -> Result<GraphId> {
+        self.apply(m, entry, stage)
+    }
+
     /// If this is a lowering stage, the backend to lower to. Lowering
     /// stages terminate a pipeline; codegen happens after all IR rewrites.
     fn lower_to(&self) -> Option<Backend> {
@@ -223,7 +240,35 @@ impl Transform for Optimize {
     }
 
     fn apply(&self, m: &mut Module, entry: GraphId, stage: &mut StageMetrics) -> Result<GraphId> {
+        self.run_manager(self.0.manager(), m, entry, stage)
+    }
+
+    fn apply_for_backend(
+        &self,
+        m: &mut Module,
+        entry: GraphId,
+        stage: &mut StageMetrics,
+        backend: Backend,
+    ) -> Result<GraphId> {
         let mut pm = self.0.manager();
+        if backend == Backend::Xla {
+            // `fused_map` is opaque to the XLA segment extractor, and XLA
+            // fuses elementwise chains itself — leave the prims unfused so
+            // the extractor sees maximal lowerable runs.
+            pm.remove_pass("fusion");
+        }
+        self.run_manager(pm, m, entry, stage)
+    }
+}
+
+impl Optimize {
+    fn run_manager(
+        &self,
+        mut pm: crate::opt::PassManager,
+        m: &mut Module,
+        entry: GraphId,
+        stage: &mut StageMetrics,
+    ) -> Result<GraphId> {
         let (root, stats) = pm.run(m, entry)?;
         stage.detail.push(("iterations".to_string(), stats.rounds));
         stage.detail.push(("gc_graphs_collected".to_string(), stats.graphs_collected));
@@ -231,6 +276,14 @@ impl Transform for Optimize {
         for p in &stats.passes {
             stage.detail.push((format!("visits:{}", p.name), p.visits));
             stage.detail.push((format!("rewrites:{}", p.name), p.rewrites));
+        }
+        if stats.passes.iter().any(|p| p.name == "fusion") {
+            // The number of fused kernels the artifact actually carries.
+            // (Deliberately NOT the pass's rewrite count: re-splicing a
+            // kernel into a bigger one across fixpoint rounds rewrites
+            // twice but yields one kernel.)
+            let kernels = crate::opt::count_fused_kernels(m, root);
+            stage.detail.push(("fused_groups".to_string(), kernels));
         }
         Ok(root)
     }
@@ -510,7 +563,7 @@ impl Pipeline {
         for t in &self.stages {
             let mut sm = StageMetrics { name: t.name().to_string(), ..Default::default() };
             let t0 = Instant::now();
-            cur = t.apply(m, cur, &mut sm)?;
+            cur = t.apply_for_backend(m, cur, &mut sm, self.backend)?;
             sm.us = t0.elapsed().as_micros();
             sm.nodes_after = m.reachable_node_count(cur);
             stages.push(sm);

@@ -99,6 +99,7 @@ impl<'m> Inferrer<'m> {
                 Const::Prim(p) => AType::Prim(*p),
                 Const::Graph(h) => AType::Func(h.0),
                 Const::Macro(_) => AType::Any,
+                Const::Fused(_) => AType::Any,
             });
         }
         // Unbound parameter / free variable: unknown.

@@ -68,6 +68,7 @@ impl AType {
             Value::Tuple(items) => AType::Tuple(items.iter().map(AType::of_value).collect()),
             Value::Closure(_) | Value::Partial(_) => AType::Any,
             Value::Prim(p) => AType::Prim(*p),
+            Value::Fused(_) => AType::Any,
         }
     }
 

@@ -23,8 +23,12 @@ pub enum Instr {
     Const { dst: Reg, idx: usize },
     /// Materialize a closure over `code`, capturing the listed registers.
     MakeClosure { dst: Reg, code: usize, captures: Vec<Reg> },
-    /// Direct primitive application.
-    CallPrim { dst: Reg, prim: Prim, args: Vec<Reg> },
+    /// Direct primitive application. `last` is a bitmask over `args`: bit
+    /// `j` set means this is the final read of `args[j]`'s register, so the
+    /// interpreter *moves* the value out instead of cloning — which is what
+    /// lets uniquely-owned tensor buffers be reused in place by the
+    /// elementwise kernels (args beyond bit 31 are always cloned).
+    CallPrim { dst: Reg, prim: Prim, args: Vec<Reg>, last: u32 },
     /// General call of a function value.
     Call { dst: Reg, func: Reg, args: Vec<Reg> },
     /// Call in return position: replaces the current frame.
@@ -142,7 +146,7 @@ fn compile_graph(
                 .map(|&a| c.reg_for(a))
                 .collect::<Result<_, _>>()?;
             let dst = c.alloc();
-            c.instrs.push(Instr::CallPrim { dst, prim: p, args });
+            c.instrs.push(Instr::CallPrim { dst, prim: p, args, last: 0 });
             c.regs.insert(n, dst);
         } else {
             if let Some(Const::Macro(op)) = m.node(inputs[0]).constant() {
@@ -176,6 +180,8 @@ fn compile_graph(
         c.instrs.push(Instr::Return { src });
     }
 
+    mark_dying_prim_args(&mut c.instrs);
+
     Ok(CodeObject {
         name: graph.name.clone(),
         n_params: params.len(),
@@ -183,6 +189,48 @@ fn compile_graph(
         n_regs: c.next_reg as usize,
         instrs: c.instrs,
     })
+}
+
+/// Registers every instruction reads (bytecode is straight-line — all
+/// control flow is calls — so "last read position" is exact liveness).
+fn instr_reads(ins: &Instr) -> Vec<Reg> {
+    match ins {
+        Instr::Const { .. } => Vec::new(),
+        Instr::MakeClosure { captures, .. } => captures.clone(),
+        Instr::CallPrim { args, .. } | Instr::XlaCall { args, .. } => args.clone(),
+        Instr::Call { func, args, .. } | Instr::TailCall { func, args } => {
+            let mut v = vec![*func];
+            v.extend_from_slice(args);
+            v
+        }
+        Instr::Return { src } => vec![*src],
+    }
+}
+
+/// Compute, per `CallPrim`, which argument registers die at that
+/// instruction: the instruction is the register's final read and the
+/// occurrence is the last within the argument list (so `mul(x, x)` moves
+/// only the second read). The interpreter moves those values out of the
+/// frame, which makes Arc refcount 1 an exact "this buffer is dead" proof
+/// for the in-place elementwise kernels.
+fn mark_dying_prim_args(instrs: &mut [Instr]) {
+    let mut last_read: HashMap<Reg, usize> = HashMap::new();
+    for (i, ins) in instrs.iter().enumerate() {
+        for r in instr_reads(ins) {
+            last_read.insert(r, i);
+        }
+    }
+    for (i, ins) in instrs.iter_mut().enumerate() {
+        if let Instr::CallPrim { args, last, .. } = ins {
+            let mut mask = 0u32;
+            for (j, &r) in args.iter().enumerate().take(32) {
+                if last_read.get(&r) == Some(&i) && !args[j + 1..].contains(&r) {
+                    mask |= 1 << j;
+                }
+            }
+            *last = mask;
+        }
+    }
 }
 
 struct Ctx<'a> {
@@ -282,6 +330,7 @@ pub fn const_value(c: &Const) -> Value {
         Const::Prim(p) => Value::Prim(*p),
         Const::Key(k) => Value::Key(*k),
         Const::ZeroT => Value::ZeroT,
+        Const::Fused(e) => Value::Fused(e.clone()),
         Const::Graph(_) | Const::Macro(_) => unreachable!("handled by compiler"),
     }
 }

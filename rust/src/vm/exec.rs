@@ -14,8 +14,9 @@
 //! concurrently.
 
 use super::compile::{CodeObject, Instr, Program, Reg};
-use super::prims::eval_prim;
+use super::prims::eval_prim_inplace;
 use super::value::{Closure, Value};
+use crate::ir::Prim;
 use crate::ir::GraphId;
 use anyhow::{anyhow, bail, Result};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -38,6 +39,15 @@ pub struct ExecStats {
     pub prim_calls: u64,
     pub max_depth: usize,
     pub xla_calls: u64,
+    /// Fused elementwise kernels executed (`fused_map` dispatches).
+    pub fused_ops: u64,
+    /// Tensor allocations avoided by fused regions: eliminated
+    /// intermediates plus outputs written in place of a dying operand.
+    pub allocs_saved: u64,
+    /// Full-buffer f64/f32 materializations (`as_f64_vec`-style round
+    /// trips) performed inside primitive calls — zero across a fused
+    /// region, the "conversion tax" the typed kernels eliminate.
+    pub conversions: u64,
 }
 
 /// Lock-free statistics accumulator: per-call counters are folded in with
@@ -51,6 +61,9 @@ struct StatsCell {
     prim_calls: AtomicU64,
     max_depth: AtomicUsize,
     xla_calls: AtomicU64,
+    fused_ops: AtomicU64,
+    allocs_saved: AtomicU64,
+    conversions: AtomicU64,
 }
 
 impl StatsCell {
@@ -60,6 +73,9 @@ impl StatsCell {
         self.prim_calls.fetch_add(s.prim_calls, Ordering::Relaxed);
         self.max_depth.fetch_max(s.max_depth, Ordering::Relaxed);
         self.xla_calls.fetch_add(s.xla_calls, Ordering::Relaxed);
+        self.fused_ops.fetch_add(s.fused_ops, Ordering::Relaxed);
+        self.allocs_saved.fetch_add(s.allocs_saved, Ordering::Relaxed);
+        self.conversions.fetch_add(s.conversions, Ordering::Relaxed);
     }
 
     fn take(&self) -> ExecStats {
@@ -69,6 +85,9 @@ impl StatsCell {
             prim_calls: self.prim_calls.swap(0, Ordering::Relaxed),
             max_depth: self.max_depth.swap(0, Ordering::Relaxed),
             xla_calls: self.xla_calls.swap(0, Ordering::Relaxed),
+            fused_ops: self.fused_ops.swap(0, Ordering::Relaxed),
+            allocs_saved: self.allocs_saved.swap(0, Ordering::Relaxed),
+            conversions: self.conversions.swap(0, Ordering::Relaxed),
         }
     }
 }
@@ -103,6 +122,27 @@ struct Frame {
     pc: usize,
     /// Register in the *caller's* frame receiving our return value.
     ret_dst: Reg,
+}
+
+/// Route one primitive call: `fused_map` goes to the single-loop fused
+/// evaluator (with its savings folded into this call's statistics),
+/// everything else to the in-place-capable evaluator. Conversion sampling
+/// lives here so every dispatch path — `CallPrim`, `Call`/`TailCall` prim
+/// resolution, and top-level prim values — attributes its `as_f64_vec`
+/// round-trips to `ExecStats::conversions`.
+fn dispatch_prim(p: Prim, args: &mut [Value], stats: &mut ExecStats) -> Result<Value> {
+    let conv_before = crate::tensor::conversion_count();
+    let result = if p == Prim::FusedMap {
+        stats.fused_ops += 1;
+        super::fused::eval_fused(args).map(|(v, saved)| {
+            stats.allocs_saved += saved;
+            v
+        })
+    } else {
+        eval_prim_inplace(p, args)
+    };
+    stats.conversions += crate::tensor::conversion_count() - conv_before;
+    result
 }
 
 impl Frame {
@@ -177,7 +217,7 @@ impl Vm {
             match func {
                 Value::Prim(p) => {
                     stats.prim_calls += 1;
-                    return eval_prim(p, &args);
+                    return dispatch_prim(p, &mut args, stats);
                 }
                 Value::Partial(pa) => {
                     let mut combined = pa.bound.clone();
@@ -212,21 +252,39 @@ impl Vm {
                     frame.regs[*dst as usize] =
                         Value::Closure(Arc::new(Closure { code, captures: cap }));
                 }
-                Instr::CallPrim { dst, prim, args } => {
+                Instr::CallPrim { dst, prim, args, last } => {
                     stats.prim_calls += 1;
                     // Hot path (§Perf): arity ≤ 4 covers every fixed-arity
                     // primitive; a stack buffer avoids a heap Vec per op.
+                    // Dying registers (`last` bitmask, computed at compile
+                    // time from exact straight-line liveness) are *moved*
+                    // into the argument slots, so a uniquely-owned tensor
+                    // buffer is provably dead and the elementwise kernels
+                    // may write the result into it in place.
                     let v = if args.len() <= 4 {
                         let mut buf: [Value; 4] =
                             [Value::Unit, Value::Unit, Value::Unit, Value::Unit];
                         for (i, &r) in args.iter().enumerate() {
-                            buf[i] = frame.regs[r as usize].clone();
+                            buf[i] = if last & (1 << i) != 0 {
+                                std::mem::replace(&mut frame.regs[r as usize], Value::Unit)
+                            } else {
+                                frame.regs[r as usize].clone()
+                            };
                         }
-                        eval_prim(*prim, &buf[..args.len()])
+                        dispatch_prim(*prim, &mut buf[..args.len()], stats)
                     } else {
-                        let argv: Vec<Value> =
-                            args.iter().map(|&r| frame.regs[r as usize].clone()).collect();
-                        eval_prim(*prim, &argv)
+                        let mut argv: Vec<Value> = args
+                            .iter()
+                            .enumerate()
+                            .map(|(i, &r)| {
+                                if i < 32 && last & (1 << i) != 0 {
+                                    std::mem::replace(&mut frame.regs[r as usize], Value::Unit)
+                                } else {
+                                    frame.regs[r as usize].clone()
+                                }
+                            })
+                            .collect();
+                        dispatch_prim(*prim, &mut argv, stats)
                     }
                     .map_err(|e| anyhow!("in `{}`: {e}", frame.code.name))?;
                     frame.regs[*dst as usize] = v;
@@ -263,7 +321,7 @@ impl Vm {
                         match callee {
                             Value::Prim(p) => {
                                 stats.prim_calls += 1;
-                                let v = eval_prim(p, &argv)?;
+                                let v = dispatch_prim(p, &mut argv, stats)?;
                                 let frame = stack.last_mut().unwrap();
                                 frame.regs[dst as usize] = v;
                                 break;
@@ -302,7 +360,7 @@ impl Vm {
                         match callee {
                             Value::Prim(p) => {
                                 stats.prim_calls += 1;
-                                let v = eval_prim(p, &argv)?;
+                                let v = dispatch_prim(p, &mut argv, stats)?;
                                 stack.pop();
                                 match stack.last_mut() {
                                     None => return Ok(v),

@@ -1,0 +1,499 @@
+//! Execution of `Prim::FusedMap`: one loop, no intermediate tensors.
+//!
+//! A fused region evaluates its postfix [`FusedExpr`] once per output
+//! element on a small value stack, monomorphized per element type (f32 and
+//! f64), so the `as_f64_vec` round-trip and the per-op output allocations of
+//! unfused execution disappear. Because the IR is shape-erased, legality
+//! beyond purity is decided *here*, against the concrete arguments:
+//!
+//! 1. a **shape simulation** replays NumPy broadcasting over the postfix
+//!    program to find the output shape (and rejects exactly what the
+//!    unfused chain would have rejected);
+//! 2. a **dtype simulation** replays the typed kernels' promotion rules; the
+//!    fast path fires only when every compute step lands on one float type;
+//! 3. anything else — symbolic zeros, scalar-only chains, integer or mixed
+//!    intermediates, shape errors — falls back to a step-by-step **replay**
+//!    through the ordinary [`eval_prim`], which is bit-for-bit the unfused
+//!    semantics by construction.
+//!
+//! The output buffer is stolen from a dying same-shape/same-dtype leaf when
+//! one is uniquely owned (the caller moves dying registers into `args`, so
+//! Arc uniqueness is an exact aliasing guard).
+
+use super::prims::eval_prim_inplace;
+use super::value::Value;
+use crate::ir::{FusedExpr, FusedOp, Prim, MAX_FUSED_STACK};
+use crate::tensor::ops::{broadcast_shapes, promote, unary_out_dtype, Elem, NumOp, Rd, UnOp};
+use crate::tensor::{DType, Tensor};
+use anyhow::{anyhow, bail, Result};
+
+/// Map a binary arithmetic primitive onto its typed kernel op. (FloorDiv
+/// and Mod have typed kernels for the in-place path but are not in the
+/// fusion pass's eligible set — `simulate` never sees them.)
+pub fn num_op_of(p: Prim) -> Option<NumOp> {
+    Some(match p {
+        Prim::Add => NumOp::Add,
+        Prim::Sub => NumOp::Sub,
+        Prim::Mul => NumOp::Mul,
+        Prim::Div => NumOp::Div,
+        Prim::Pow => NumOp::Pow,
+        Prim::Maximum => NumOp::Maximum,
+        Prim::Minimum => NumOp::Minimum,
+        Prim::FloorDiv => NumOp::FloorDiv,
+        Prim::Mod => NumOp::Mod,
+        _ => return None,
+    })
+}
+
+/// Map a fusable unary primitive onto its typed kernel op.
+pub fn un_op_of(p: Prim) -> Option<UnOp> {
+    Some(match p {
+        Prim::Neg => UnOp::Neg,
+        Prim::Exp => UnOp::Exp,
+        Prim::Ln => UnOp::Ln,
+        Prim::Tanh => UnOp::Tanh,
+        Prim::Sqrt => UnOp::Sqrt,
+        Prim::Sin => UnOp::Sin,
+        Prim::Cos => UnOp::Cos,
+        Prim::Relu => UnOp::Relu,
+        Prim::Sigmoid => UnOp::Sigmoid,
+        Prim::Abs => UnOp::Abs,
+        Prim::Sign => UnOp::Sign,
+        Prim::Step => UnOp::Step,
+        _ => return None,
+    })
+}
+
+/// Evaluate a `fused_map` application. `args[0]` must be the
+/// [`Value::Fused`] program; `args[1..]` are the leaves, which the VM's hot
+/// path has already *moved* out of dying registers (so uniquely-owned
+/// buffers really are dead and reusable). Returns the result plus the
+/// number of tensor allocations avoided relative to unfused execution.
+pub fn eval_fused(args: &mut [Value]) -> Result<(Value, u64)> {
+    let expr = match &args[0] {
+        Value::Fused(e) => e.clone(),
+        other => bail!("fused_map expects a fused program, got {}", other.type_name()),
+    };
+    let leaves = &mut args[1..];
+    if leaves.len() != expr.n_inputs {
+        bail!("fused_map expects {} inputs, got {}", expr.n_inputs, leaves.len());
+    }
+
+    // Classification: the fast path needs numeric leaves and at least one
+    // tensor (a scalar-only chain must return a scalar Value, with integer
+    // semantics the loop cannot reproduce — replay handles it).
+    let numericish = |v: &Value| {
+        matches!(v, Value::Tensor(_) | Value::F64(_) | Value::I64(_) | Value::Bool(_))
+    };
+    if !leaves.iter().all(numericish) || !leaves.iter().any(|v| matches!(v, Value::Tensor(_))) {
+        return Ok((replay(&expr, leaves)?, 0));
+    }
+
+    match simulate(&expr, leaves) {
+        Some((out_shape, DType::F64)) => run_typed::<f64>(&expr, leaves, out_shape),
+        Some((out_shape, DType::F32)) => run_typed::<f32>(&expr, leaves, out_shape),
+        _ => Ok((replay(&expr, leaves)?, 0)),
+    }
+}
+
+/// Joint shape/dtype simulation mirroring the typed kernels in
+/// `tensor/ops.rs`. Returns the output (shape, dtype) when every compute
+/// step succeeds and lands on a single float dtype; `None` sends the call
+/// to the replay path (which reproduces the unfused behavior, including
+/// any error, exactly).
+fn simulate(expr: &FusedExpr, leaves: &[Value]) -> Option<(Vec<usize>, DType)> {
+    let leaf_meta: Vec<(Vec<usize>, DType)> = leaves
+        .iter()
+        .map(|v| match v {
+            Value::Tensor(t) => (t.shape().to_vec(), t.dtype()),
+            Value::F64(_) => (Vec::new(), DType::F64),
+            Value::I64(_) => (Vec::new(), DType::I64),
+            Value::Bool(_) => (Vec::new(), DType::Bool),
+            _ => unreachable!("classified above"),
+        })
+        .collect();
+
+    // Every compute step must produce the same single float dtype.
+    fn note(dt: DType, target: &mut Option<DType>) -> Option<()> {
+        if !matches!(dt, DType::F32 | DType::F64) {
+            return None;
+        }
+        match target {
+            None => *target = Some(dt),
+            Some(t) if *t == dt => {}
+            Some(_) => return None,
+        }
+        Some(())
+    }
+
+    let mut stack: Vec<(Vec<usize>, DType)> = Vec::with_capacity(expr.max_stack);
+    let mut target: Option<DType> = None;
+    for op in &expr.ops {
+        match op {
+            FusedOp::Input(i) => stack.push(leaf_meta[*i as usize].clone()),
+            FusedOp::ConstF64(_) => stack.push((Vec::new(), DType::F64)),
+            FusedOp::ConstI64(_) => stack.push((Vec::new(), DType::I64)),
+            FusedOp::Un(p) => {
+                let (s, dt) = stack.pop()?;
+                let out = unary_out_dtype(un_op_of(*p)?, dt);
+                note(out, &mut target)?;
+                stack.push((s, out));
+            }
+            FusedOp::Bin(p) => {
+                num_op_of(*p)?;
+                let (sb, db) = stack.pop()?;
+                let (sa, da) = stack.pop()?;
+                let s = broadcast_shapes(&sa, &sb).ok()?;
+                let out = promote(da, db);
+                note(out, &mut target)?;
+                stack.push((s, out));
+            }
+            FusedOp::Where => {
+                let (sb, db) = stack.pop()?;
+                let (sa, da) = stack.pop()?;
+                let (sc, dc) = stack.pop()?;
+                let ab = broadcast_shapes(&sa, &sb).ok()?;
+                let s = broadcast_shapes(&sc, &ab).ok()?;
+                let out = promote(da, db);
+                // The loop reads the condition in T, but the unfused kernel
+                // decides truthiness in f64: those agree only when the
+                // condition is boolean, already in T, or T is f64 itself
+                // (widening is exact). Anything else (e.g. an f64 condition
+                // in an f32 loop, where subnormals would flush to 0) must
+                // take the replay path.
+                if !(dc == DType::Bool || dc == out || out == DType::F64) {
+                    return None;
+                }
+                note(out, &mut target)?;
+                stack.push((s, out));
+            }
+            FusedOp::BroadcastTo(shape) => {
+                let (s, dt) = stack.pop()?;
+                // broadcast_to requires the target to dominate the operand.
+                let joint = broadcast_shapes(&s, shape).ok()?;
+                if &joint != shape {
+                    return None;
+                }
+                note(dt, &mut target)?;
+                stack.push((shape.clone(), dt));
+            }
+        }
+    }
+    let (shape, dt) = stack.pop()?;
+    if Some(dt) != target {
+        return None;
+    }
+    Some((shape, dt))
+}
+
+/// One leaf of the monomorphized loop: tensor leaves go through the same
+/// broadcast reader the unfused typed kernels use ([`Rd`] — borrowed when
+/// the dtype matches, converted/index-mapped otherwise); scalar `Value`s
+/// splat; the stolen-for-output leaf reads back from `out` (the value at
+/// `k` is overwritten only after every reader of index `k` ran).
+enum Leaf<'a, T: Elem> {
+    Rd(Rd<'a, T>),
+    Splat(T),
+    FromOut,
+}
+
+impl<'a, T: Elem> Leaf<'a, T> {
+    fn new(v: &'a Value, out_shape: &[usize]) -> Leaf<'a, T> {
+        match v {
+            Value::Tensor(t) => Leaf::Rd(Rd::new(t, out_shape)),
+            Value::F64(x) => Leaf::Splat(T::from_f64(*x)),
+            Value::I64(x) => Leaf::Splat(T::from_f64(*x as f64)),
+            Value::Bool(b) => Leaf::Splat(T::from_f64(if *b { 1.0 } else { 0.0 })),
+            _ => unreachable!("classified before dispatch"),
+        }
+    }
+
+    #[inline]
+    fn get(&self, out: &[T], k: usize) -> T {
+        match self {
+            Leaf::Rd(r) => r.get(k),
+            Leaf::Splat(v) => *v,
+            Leaf::FromOut => out[k],
+        }
+    }
+}
+
+fn run_typed<T: Elem>(
+    expr: &FusedExpr,
+    leaves: &mut [Value],
+    out_shape: Vec<usize>,
+) -> Result<(Value, u64)> {
+    let numel: usize = out_shape.iter().product();
+
+    // Output buffer: steal a dying same-shape/same-dtype tensor leaf. The
+    // caller moved dying registers into `leaves`, so Arc uniqueness here
+    // proves no other reference exists anywhere.
+    let mut reused: Option<usize> = None;
+    let mut out: Vec<T> = Vec::new();
+    for (i, slot) in leaves.iter_mut().enumerate() {
+        let candidate = matches!(
+            slot,
+            Value::Tensor(t) if t.shape() == out_shape.as_slice() && t.dtype() == T::DTYPE
+        );
+        if !candidate {
+            continue;
+        }
+        let taken = std::mem::replace(slot, Value::Unit);
+        let Value::Tensor(t) = taken else { unreachable!() };
+        match t.into_unique_buffer() {
+            Ok(buf) => {
+                out = T::from_buffer(buf).expect("dtype checked");
+                reused = Some(i);
+                crate::tensor::note_buffer_reuse();
+                break;
+            }
+            Err(shared) => *slot = Value::Tensor(shared),
+        }
+    }
+    if reused.is_none() {
+        out = vec![T::zero(); numel];
+    }
+
+    let accessors: Vec<Leaf<T>> = leaves
+        .iter()
+        .enumerate()
+        .map(|(i, v)| if reused == Some(i) { Leaf::FromOut } else { Leaf::new(v, &out_shape) })
+        .collect();
+
+    let mut stack = [T::zero(); MAX_FUSED_STACK];
+    for k in 0..numel {
+        let mut sp = 0usize;
+        for op in &expr.ops {
+            match op {
+                FusedOp::Input(i) => {
+                    stack[sp] = accessors[*i as usize].get(&out, k);
+                    sp += 1;
+                }
+                FusedOp::ConstF64(v) => {
+                    stack[sp] = T::from_f64(*v);
+                    sp += 1;
+                }
+                FusedOp::ConstI64(v) => {
+                    stack[sp] = T::from_f64(*v as f64);
+                    sp += 1;
+                }
+                FusedOp::Un(p) => {
+                    let op = un_op_of(*p).expect("validated by simulate");
+                    stack[sp - 1] = T::un(op, stack[sp - 1]);
+                }
+                FusedOp::Bin(p) => {
+                    let op = num_op_of(*p).expect("validated by simulate");
+                    sp -= 1;
+                    stack[sp - 1] = T::bin(op, stack[sp - 1], stack[sp]);
+                }
+                FusedOp::Where => {
+                    sp -= 2;
+                    let c = stack[sp - 1];
+                    stack[sp - 1] = if c.is_truthy() { stack[sp] } else { stack[sp + 1] };
+                }
+                FusedOp::BroadcastTo(_) => {} // shape-only; value unchanged
+            }
+        }
+        out[k] = stack[0];
+    }
+
+    let saved = expr.interior_allocs() + u64::from(reused.is_some());
+    let t = Tensor::new(out_shape, T::buffer(out)).map_err(|e| anyhow!("{e}"))?;
+    Ok((Value::Tensor(t), saved))
+}
+
+/// Step-by-step replay of the postfix program through the ordinary
+/// primitive evaluator — the exact unfused semantics (symbolic zeros,
+/// scalar arithmetic, integer wrapping, error messages and all). Leaves
+/// are *moved* at their final textual use and every step goes through
+/// [`eval_prim_inplace`], so a fused-but-replayed chain (integer dtypes,
+/// mixed promotions) keeps the same in-place buffer reuse the unfused
+/// pipeline would have had — replay is a fidelity fallback, never a
+/// pessimization.
+fn replay(expr: &FusedExpr, leaves: &mut [Value]) -> Result<Value> {
+    let mut last_use: Vec<Option<usize>> = vec![None; leaves.len()];
+    for (i, op) in expr.ops.iter().enumerate() {
+        if let FusedOp::Input(k) = op {
+            last_use[*k as usize] = Some(i);
+        }
+    }
+    let mut stack: Vec<Value> = Vec::with_capacity(expr.max_stack);
+    for (i, op) in expr.ops.iter().enumerate() {
+        match op {
+            FusedOp::Input(k) => {
+                let k = *k as usize;
+                // `leaves` is the call's private argument buffer, so the
+                // final read may take the value (dying registers were
+                // already moved in by the interpreter — uniqueness, and
+                // therefore reuse, survives the replay).
+                let v = if last_use[k] == Some(i) {
+                    std::mem::replace(&mut leaves[k], Value::Unit)
+                } else {
+                    leaves[k].clone()
+                };
+                stack.push(v);
+            }
+            FusedOp::ConstF64(v) => stack.push(Value::F64(*v)),
+            FusedOp::ConstI64(v) => stack.push(Value::I64(*v)),
+            FusedOp::Un(p) => {
+                let x = stack.pop().expect("validated");
+                stack.push(eval_prim_inplace(*p, &mut [x])?);
+            }
+            FusedOp::Bin(p) => {
+                let y = stack.pop().expect("validated");
+                let x = stack.pop().expect("validated");
+                stack.push(eval_prim_inplace(*p, &mut [x, y])?);
+            }
+            FusedOp::Where => {
+                let b = stack.pop().expect("validated");
+                let a = stack.pop().expect("validated");
+                let c = stack.pop().expect("validated");
+                stack.push(eval_prim_inplace(Prim::Where, &mut [c, a, b])?);
+            }
+            FusedOp::BroadcastTo(shape) => {
+                let x = stack.pop().expect("validated");
+                let s = Value::tuple(shape.iter().map(|&d| Value::I64(d as i64)).collect());
+                stack.push(eval_prim_inplace(Prim::BroadcastTo, &mut [x, s])?);
+            }
+        }
+    }
+    Ok(stack.pop().expect("validated: one value remains"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::FusedOp as F;
+    use crate::vm::prims::eval_prim;
+
+    fn fused(n: usize, ops: Vec<F>) -> Value {
+        Value::Fused(std::sync::Arc::new(FusedExpr::new(n, ops).unwrap()))
+    }
+
+    fn t(v: &[f64]) -> Value {
+        Value::Tensor(Tensor::from_f64(v))
+    }
+
+    #[test]
+    fn fast_path_matches_unfused_chain() {
+        // exp(x) * y + 2.0 over f64 tensors
+        let e = fused(
+            2,
+            vec![
+                F::Input(0),
+                F::Un(Prim::Exp),
+                F::Input(1),
+                F::Bin(Prim::Mul),
+                F::ConstF64(2.0),
+                F::Bin(Prim::Add),
+            ],
+        );
+        let mut args = vec![e, t(&[0.5, -1.0, 2.0]), t(&[1.0, 2.0, 3.0])];
+        let (out, saved) = eval_fused(&mut args).unwrap();
+        // Unfused oracle through eval_prim.
+        let ex = eval_prim(Prim::Exp, &[t(&[0.5, -1.0, 2.0])]).unwrap();
+        let m = eval_prim(Prim::Mul, &[ex, t(&[1.0, 2.0, 3.0])]).unwrap();
+        let want = eval_prim(Prim::Add, &[m, Value::F64(2.0)]).unwrap();
+        assert!(out.structural_eq(&want), "{out} vs {want}");
+        assert!(saved >= 2, "two interior ops eliminated, got {saved}");
+    }
+
+    #[test]
+    fn broadcasting_leaves() {
+        // x[2,3] + row[3] fused with a scalar multiply
+        let x = Tensor::from_f64_shaped(vec![1., 2., 3., 4., 5., 6.], vec![2, 3]).unwrap();
+        let row = Tensor::from_f64(&[10., 20., 30.]);
+        let e = fused(
+            2,
+            vec![
+                F::Input(0),
+                F::Input(1),
+                F::Bin(Prim::Add),
+                F::ConstF64(2.0),
+                F::Bin(Prim::Mul),
+            ],
+        );
+        let mut args = vec![e, Value::Tensor(x), Value::Tensor(row)];
+        let (out, _) = eval_fused(&mut args).unwrap();
+        let got = out.as_tensor().unwrap();
+        assert_eq!(got.shape(), &[2, 3]);
+        assert_eq!(got.as_f64_vec(), vec![22., 44., 66., 28., 50., 72.]);
+    }
+
+    #[test]
+    fn zerot_and_scalars_replay_exactly() {
+        // add absorbs ZeroT exactly as the unfused eval does.
+        let e = fused(2, vec![F::Input(0), F::Input(1), F::Bin(Prim::Add)]);
+        let mut args = vec![e.clone(), Value::ZeroT, t(&[1.0, 2.0])];
+        let (out, saved) = eval_fused(&mut args).unwrap();
+        assert!(out.structural_eq(&t(&[1.0, 2.0])));
+        assert_eq!(saved, 0, "replay path saves nothing");
+        // scalar-only chains return scalar values with integer semantics.
+        let mut args = vec![e, Value::I64(3), Value::I64(4)];
+        let (out, _) = eval_fused(&mut args).unwrap();
+        assert!(matches!(out, Value::I64(7)));
+    }
+
+    #[test]
+    fn i64_tensor_intermediates_replay() {
+        // (a + b) * c with i64 a,b and f64 c: the intermediate is integral,
+        // so the fast path must decline and the replay must match the
+        // unfused chain bit-for-bit (wrapping add included).
+        let a = Value::Tensor(Tensor::from_i64_shaped(vec![i64::MAX, 5], vec![2]).unwrap());
+        let b = Value::Tensor(Tensor::from_i64_shaped(vec![1, 7], vec![2]).unwrap());
+        let c = t(&[1.0, 2.0]);
+        let e = fused(
+            3,
+            vec![F::Input(0), F::Input(1), F::Bin(Prim::Add), F::Input(2), F::Bin(Prim::Mul)],
+        );
+        let mut args = vec![e, a.clone(), b.clone(), c.clone()];
+        let (out, _) = eval_fused(&mut args).unwrap();
+        let s = eval_prim(Prim::Add, &[a, b]).unwrap();
+        let want = eval_prim(Prim::Mul, &[s, c]).unwrap();
+        assert!(out.structural_eq(&want));
+    }
+
+    #[test]
+    fn unique_output_buffer_is_reused() {
+        let before = crate::tensor::buffer_reuse_count();
+        let e = fused(1, vec![F::Input(0), F::Un(Prim::Neg), F::Un(Prim::Exp)]);
+        // The tensor moved into args is the only owner → its buffer hosts
+        // the output.
+        let mut args = vec![e, t(&[0.1, 0.2, 0.3])];
+        let (out, saved) = eval_fused(&mut args).unwrap();
+        assert!(saved >= 2, "interior + reuse, got {saved}");
+        assert!(crate::tensor::buffer_reuse_count() > before);
+        let got = out.as_tensor().unwrap().as_f64_vec();
+        assert!((got[0] - (-0.1f64).exp()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn shared_leaf_is_not_mutated() {
+        let keep = Tensor::from_f64(&[1.0, 2.0]);
+        let e = fused(1, vec![F::Input(0), F::Un(Prim::Neg)]);
+        let mut args = vec![e, Value::Tensor(keep.clone())];
+        let (out, _) = eval_fused(&mut args).unwrap();
+        assert_eq!(out.as_tensor().unwrap().as_f64_vec(), vec![-1.0, -2.0]);
+        // The retained reference still sees the original values.
+        assert_eq!(keep.as_f64_vec(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn static_broadcast_anchor_extends_output() {
+        // broadcast_to(x[3], [2,3]) * 2.0
+        let e = fused(
+            1,
+            vec![
+                F::Input(0),
+                F::BroadcastTo(vec![2, 3]),
+                F::ConstF64(2.0),
+                F::Bin(Prim::Mul),
+            ],
+        );
+        let mut args = vec![e, t(&[1.0, 2.0, 3.0])];
+        let (out, _) = eval_fused(&mut args).unwrap();
+        let got = out.as_tensor().unwrap();
+        assert_eq!(got.shape(), &[2, 3]);
+        assert_eq!(got.as_f64_vec(), vec![2., 4., 6., 2., 4., 6.]);
+    }
+}

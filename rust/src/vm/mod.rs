@@ -9,10 +9,12 @@
 
 pub mod compile;
 pub mod exec;
+pub mod fused;
 pub mod prims;
 pub mod value;
 
 pub use compile::{compile_program, CodeObject, Instr, Program, Reg};
 pub use exec::{ExecStats, SegmentRunner, Vm};
-pub use prims::{eval_prim, gadd, zeros_like};
+pub use fused::eval_fused;
+pub use prims::{eval_prim, eval_prim_inplace, gadd, zeros_like};
 pub use value::{Closure, EnvMap, PartialApp, Value};

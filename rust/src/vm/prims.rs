@@ -172,13 +172,7 @@ pub fn eval_prim(p: Prim, args: &[Value]) -> Result<Value> {
             Ok(Value::Tensor(ops::where_(&c, &a, &b).map_err(err)?))
         }
         Step => match &args[0] {
-            Value::Tensor(t) => Ok(Value::Tensor(ops::binary_op(
-                t,
-                &Tensor::scalar_f64(0.0),
-                |x, _| (x > 0.0) as i64 as f64,
-                None,
-            )
-            .map_err(err)?)),
+            Value::Tensor(t) => Ok(Value::Tensor(ops::step(t))),
             other => {
                 let x = other
                     .as_f64()
@@ -271,6 +265,76 @@ pub fn eval_prim(p: Prim, args: &[Value]) -> Result<Value> {
             func: args[0].clone(),
             bound: vec![args[1].clone()],
         }))),
+        FusedMap => {
+            // Cold entry point (constant folding, segments, first-class
+            // calls): clone the argument slots so the fused evaluator can
+            // take ownership. The interpreter's hot path calls
+            // `fused::eval_fused` directly with moved registers instead.
+            let mut argv = args.to_vec();
+            let (v, _saved) = super::fused::eval_fused(&mut argv)?;
+            Ok(v)
+        }
+    }
+}
+
+/// Hot-path variant of [`eval_prim`]: the interpreter moves dying register
+/// values into `args`, so elementwise arithmetic can consume its operands
+/// and write the result in place of a uniquely-owned buffer (see
+/// `tensor/ops.rs`). Semantics are identical to [`eval_prim`] — everything
+/// that is not owned-tensor arithmetic delegates to it.
+pub fn eval_prim_inplace(p: Prim, args: &mut [Value]) -> Result<Value> {
+    use Prim::*;
+    if args.iter().any(|a| matches!(a, Value::ZeroT)) {
+        // Symbolic zeros take the shortcut table; no reuse opportunity.
+        return eval_prim(p, args);
+    }
+    match p {
+        Add | Sub | Mul | Div | Pow | Maximum | Minimum | FloorDiv | Mod
+            if args.len() == 2
+                && (matches!(args[0], Value::Tensor(_)) || matches!(args[1], Value::Tensor(_))) =>
+        {
+            let op = super::fused::num_op_of(p).expect("arithmetic prim");
+            let a = take_tensor(&mut args[0], p.name())?;
+            let b = take_tensor(&mut args[1], p.name())?;
+            Ok(Value::Tensor(ops::binary_num_owned(a, b, op).map_err(err)?))
+        }
+        // Tensor ⊕ tensor gradient accumulation is plain addition — the
+        // single hottest op in adjoint programs.
+        Gadd if args.len() == 2
+            && matches!(args[0], Value::Tensor(_))
+            && matches!(args[1], Value::Tensor(_)) =>
+        {
+            let a = take_tensor(&mut args[0], "gadd")?;
+            let b = take_tensor(&mut args[1], "gadd")?;
+            Ok(Value::Tensor(ops::binary_num_owned(a, b, ops::NumOp::Add).map_err(err)?))
+        }
+        Neg | Exp | Ln | Tanh | Sqrt | Sin | Cos | Relu | Sigmoid | Abs | Sign | Step
+            if args.len() == 1 && matches!(args[0], Value::Tensor(_)) =>
+        {
+            let op = super::fused::un_op_of(p).expect("unary prim");
+            let a = take_tensor(&mut args[0], p.name())?;
+            Ok(Value::Tensor(ops::unary_num_owned(a, op)))
+        }
+        Where
+            if args.len() == 3
+                && (matches!(args[1], Value::Tensor(_)) || matches!(args[2], Value::Tensor(_))) =>
+        {
+            let c = take_tensor(&mut args[0], "where_")?;
+            let a = take_tensor(&mut args[1], "where_")?;
+            let b = take_tensor(&mut args[2], "where_")?;
+            Ok(Value::Tensor(ops::where_owned(c, a, b).map_err(err)?))
+        }
+        _ => eval_prim(p, args),
+    }
+}
+
+/// Move a tensor out of an argument slot (scalars promote to rank-0).
+fn take_tensor(v: &mut Value, what: &str) -> Result<Tensor> {
+    match std::mem::replace(v, Value::Unit) {
+        Value::Tensor(t) => Ok(t),
+        other => other.to_tensor().ok_or_else(|| {
+            anyhow!("{what} expects a tensor (or scalar), got {}", other.type_name())
+        }),
     }
 }
 
@@ -426,8 +490,10 @@ fn numeric_binop(p: Prim, a: &Value, b: &Value) -> Result<Value> {
             Pow => ops::pow(&ta, &tb),
             Maximum => ops::maximum(&ta, &tb),
             Minimum => ops::minimum(&ta, &tb),
-            FloorDiv => ops::div(&ta, &tb).map(|t| ops::floor(&t)),
-            Mod => ops::binary_op(&ta, &tb, |x, y| x.rem_euclid(y), None),
+            // Typed kernels: i64 floordiv/mod use the same exact Euclidean
+            // forms as the scalar path instead of an f64 round-trip.
+            FloorDiv => ops::binary_num(&ta, &tb, ops::NumOp::FloorDiv),
+            Mod => ops::binary_num(&ta, &tb, ops::NumOp::Mod),
             _ => unreachable!(),
         }
         .map_err(err)?;
@@ -461,7 +527,9 @@ fn numeric_binop(p: Prim, a: &Value, b: &Value) -> Result<Value> {
                 if y >= 0 {
                     Value::I64(x.pow(y.min(u32::MAX as i64) as u32))
                 } else {
-                    Value::F64((x as f64).powi(y as i32))
+                    // Clamp before the i32 cast: a huge negative exponent
+                    // must saturate toward 0, not wrap positive.
+                    Value::F64((x as f64).powi(y.max(i32::MIN as i64) as i32))
                 }
             }
             Maximum => Value::I64(x.max(y)),
@@ -635,7 +703,7 @@ pub fn zeros_like(x: &Value) -> Value {
         // gradients; its zero is the empty env.
         Value::Closure(_) | Value::Prim(_) | Value::Partial(_) => Value::Env(Arc::new(EnvMap::new())),
         Value::Env(_) => Value::Env(Arc::new(EnvMap::new())),
-        Value::Unit | Value::Str(_) | Value::Key(_) => Value::Unit,
+        Value::Unit | Value::Str(_) | Value::Key(_) | Value::Fused(_) => Value::Unit,
         Value::ZeroT => Value::ZeroT,
     }
 }

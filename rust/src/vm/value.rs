@@ -10,7 +10,7 @@
 //! through `Arc`. This is what lets one compiled [`crate::coordinator::Executable`]
 //! be called from any number of threads at once.
 
-use crate::ir::Prim;
+use crate::ir::{FusedExpr, Prim};
 use crate::tensor::{DType, Tensor};
 use std::collections::HashMap;
 use std::fmt;
@@ -52,6 +52,9 @@ pub enum Value {
     Env(Arc<EnvMap>),
     Key(u64),
     ZeroT,
+    /// A fused elementwise program (the first argument of `fused_map`);
+    /// created only by the optimizer's fusion pass via `Const::Fused`.
+    Fused(Arc<FusedExpr>),
 }
 
 impl Value {
@@ -79,6 +82,7 @@ impl Value {
             Value::Env(_) => "env",
             Value::Key(_) => "key",
             Value::ZeroT => "zero-tangent",
+            Value::Fused(_) => "fused-expr",
         }
     }
 
@@ -146,6 +150,7 @@ impl Value {
             (Value::Key(a), Value::Key(b)) => a == b,
             (Value::ZeroT, Value::ZeroT) => true,
             (Value::Prim(a), Value::Prim(b)) => a == b,
+            (Value::Fused(a), Value::Fused(b)) => a == b,
             _ => false,
         }
     }
@@ -179,6 +184,7 @@ impl fmt::Display for Value {
             Value::Env(e) => write!(f, "<env with {} entries>", e.len()),
             Value::Key(k) => write!(f, "<key {k}>"),
             Value::ZeroT => write!(f, "<zero>"),
+            Value::Fused(e) => write!(f, "<{e}>"),
         }
     }
 }

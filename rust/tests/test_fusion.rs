@@ -1,0 +1,334 @@
+//! Fusion + unique-buffer-reuse acceptance suite.
+//!
+//! * property: random expression programs (pinned seeds, shrinker-minimized
+//!   failures via the ptest artifact path) are **bit-identical** between the
+//!   standard pipeline (fusion on) and the `opt=no-fusion` ablation — for
+//!   forward values, for gradients, on tensors and on scalars;
+//! * counters: a fused elementwise chain executes as one `fused_map` with
+//!   zero intermediate tensor allocations and zero `as_f64_vec`-style
+//!   round-trips (`ExecStats::{fused_ops, allocs_saved, conversions}`);
+//! * dtype: typed kernels preserve i64 exactly (values above 2^53, where
+//!   the old f64 round-trip silently lost precision);
+//! * aliasing: the same tensor as both operands, shared (refcount > 1)
+//!   operands, and 8 threads on one `Arc<Executable>` all stay correct with
+//!   in-place reuse enabled;
+//! * caching: pipeline fingerprints without fusion are unchanged.
+
+use myia::coordinator::mlp::{
+    default_meta, params_value, synth_batch, synth_teacher, MLP_SOURCE,
+};
+use myia::coordinator::{Engine, Executable};
+use myia::opt::PassSet;
+use myia::ptest::{check_exprs, gen_value, Config};
+use myia::tensor::{buffer_reuse_count, ops, DType, Tensor};
+use myia::transform::Pipeline;
+use myia::vm::Value;
+use std::sync::Arc;
+
+fn no_fusion() -> PassSet {
+    PassSet::Without("fusion".to_string())
+}
+
+/// Compile `entry` with and without the fusion pass.
+fn compile_pair(src: &str, entry: &str) -> (Arc<Executable>, Arc<Executable>) {
+    let e = Engine::from_source(src).unwrap();
+    let fused = e.trace(entry).unwrap().optimize(PassSet::Standard).compile().unwrap();
+    let plain = e.trace(entry).unwrap().optimize(no_fusion()).compile().unwrap();
+    (fused, plain)
+}
+
+/// Count `fused_map` applications reachable from the artifact's entry.
+fn fused_kernels(exe: &Executable) -> usize {
+    myia::opt::count_fused_kernels(&exe.module, exe.entry)
+}
+
+const CHAIN_SRC: &str = "\
+def f(x):
+    a = exp(neg(x)) * x
+    b = tanh(a + 0.5) * 2.0
+    c = relu(b - 0.25)
+    return sigmoid(c) + a
+";
+
+#[test]
+fn fused_chain_is_bit_identical_and_allocation_free() {
+    let (fused, plain) = compile_pair(CHAIN_SRC, "f");
+    assert!(fused_kernels(&fused) >= 1, "standard pipeline produced no fused kernels");
+    assert_eq!(fused_kernels(&plain), 0, "no-fusion arm must carry none");
+
+    let x = Value::Tensor(Tensor::from_f64(&[0.3, -1.7, 2.2, 0.0, 5.5]));
+    let _ = fused.vm.take_stats();
+    let a = fused.call(vec![x.clone()]).unwrap();
+    let stats = fused.vm.take_stats();
+    let b = plain.call(vec![x]).unwrap();
+    assert!(a.structural_eq(&b), "fused {a} vs unfused {b}");
+
+    assert!(stats.fused_ops >= 1, "{stats:?}");
+    // Zero intermediate tensors inside fused regions: every interior op of
+    // every fused kernel is reported as an avoided allocation.
+    assert!(stats.allocs_saved >= 4, "{stats:?}");
+    // Zero dtype round-trips anywhere on this elementwise program: the
+    // typed kernels and the fused loop never materialize an f64 view.
+    assert_eq!(stats.conversions, 0, "{stats:?}");
+}
+
+#[test]
+fn property_fused_matches_no_fusion_forward_and_grad() {
+    // Pinned seeds; failures are shrinker-minimized and written to the
+    // ptest artifact dir for CI upload (same path as the other suites).
+    check_exprs(Config { cases: 40, seed: 0xF05E_D001 }, 4, |expr, rng| {
+        let src = format!("def f(x):\n    return {expr}\n");
+        let e = Engine::from_source(&src).map_err(|e| e.to_string())?;
+        let fused = e
+            .trace("f")
+            .unwrap()
+            .optimize(PassSet::Standard)
+            .compile()
+            .map_err(|e| e.to_string())?;
+        let plain = e
+            .trace("f")
+            .unwrap()
+            .optimize(no_fusion())
+            .compile()
+            .map_err(|e| e.to_string())?;
+
+        // Tensor input (exercises the monomorphized fused loop)...
+        let xs: Vec<f64> = (0..7).map(|_| gen_value(rng)).collect();
+        let tv = Value::Tensor(Tensor::from_f64(&xs));
+        let a = fused.call(vec![tv.clone()]).map_err(|e| e.to_string())?;
+        let b = plain.call(vec![tv]).map_err(|e| e.to_string())?;
+        if !a.structural_eq(&b) {
+            return Err(format!("tensor forward diverged: {a} vs {b}"));
+        }
+        // ...and scalar input (exercises the exact replay path).
+        let s = Value::F64(gen_value(rng));
+        let a = fused.call(vec![s.clone()]).map_err(|e| e.to_string())?;
+        let b = plain.call(vec![s]).map_err(|e| e.to_string())?;
+        if !a.structural_eq(&b) {
+            return Err(format!("scalar forward diverged: {a} vs {b}"));
+        }
+
+        // Gradients: fuse inside the expanded adjoint, compare bitwise.
+        let gsrc = format!(
+            "def f(x):\n    return {expr}\n\ndef loss(x):\n    return item(sum(f(x)))\n"
+        );
+        let ge = Engine::from_source(&gsrc).map_err(|e| e.to_string())?;
+        let gf = ge
+            .trace("loss")
+            .unwrap()
+            .grad()
+            .optimize(PassSet::Standard)
+            .compile()
+            .map_err(|e| e.to_string())?;
+        let gp = ge
+            .trace("loss")
+            .unwrap()
+            .grad()
+            .optimize(no_fusion())
+            .compile()
+            .map_err(|e| e.to_string())?;
+        let tv = Value::Tensor(Tensor::from_f64(&xs));
+        let a = gf.call(vec![tv.clone()]).map_err(|e| e.to_string())?;
+        let b = gp.call(vec![tv]).map_err(|e| e.to_string())?;
+        if !a.structural_eq(&b) {
+            return Err(format!("gradient diverged: {a} vs {b}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mlp_value_and_grad_bit_identical_with_fusion() {
+    let mut rng = myia::tensor::Rng::new(23);
+    let meta = default_meta();
+    let teacher = synth_teacher(&meta, &mut rng);
+    let (x, y) = synth_batch(&meta, &mut rng, &teacher);
+    let params: Vec<Tensor> =
+        meta.init_params(5).into_iter().map(|t| t.cast(DType::F64)).collect();
+    let args = vec![params_value(&params), Value::Tensor(x), Value::Tensor(y)];
+
+    let e = Engine::from_source(MLP_SOURCE).unwrap();
+    let fused = e
+        .trace("mlp_loss")
+        .unwrap()
+        .value_and_grad()
+        .optimize(PassSet::Standard)
+        .compile()
+        .unwrap();
+    let plain = e
+        .trace("mlp_loss")
+        .unwrap()
+        .value_and_grad()
+        .optimize(no_fusion())
+        .compile()
+        .unwrap();
+    let _ = fused.vm.take_stats();
+    let a = fused.call(args.clone()).unwrap();
+    let stats = fused.vm.take_stats();
+    let b = plain.call(args).unwrap();
+    assert!(a.structural_eq(&b), "MLP value_and_grad diverged under fusion");
+    assert!(stats.fused_ops >= 1, "MLP adjoint produced no fused dispatches: {stats:?}");
+    assert!(stats.allocs_saved > 0, "{stats:?}");
+}
+
+#[test]
+fn i64_binary_ops_are_exact_above_2_pow_53() {
+    // Regression: the old f64 round-trip lost the low bits of large i64s.
+    let big = (1i64 << 60) + 1;
+    let a = Tensor::from_i64_shaped(vec![big, -big, 7], vec![3]).unwrap();
+    let b = Tensor::from_i64_shaped(vec![1, 2, 3], vec![3]).unwrap();
+
+    let s = ops::add(&a, &b).unwrap();
+    assert_eq!(s.dtype(), DType::I64, "i64 + i64 must stay i64");
+    match s.buffer() {
+        myia::tensor::Buffer::I64(v) => {
+            assert_eq!(v, &vec![big + 1, -big + 2, 10], "exact large-i64 addition");
+        }
+        other => panic!("expected i64 buffer, got {}", other.dtype()),
+    }
+
+    let m = ops::mul(&a, &b).unwrap();
+    match m.buffer() {
+        myia::tensor::Buffer::I64(v) => {
+            assert_eq!(v, &vec![big, -2 * big, 21], "exact large-i64 multiplication");
+        }
+        other => panic!("expected i64 buffer, got {}", other.dtype()),
+    }
+
+    // Through the whole VM pipeline too.
+    let e = Engine::from_source("def f(a, b):\n    return a * b + a\n").unwrap();
+    let f = e.trace("f").unwrap().compile().unwrap();
+    let out = f
+        .call(vec![
+            Value::Tensor(Tensor::from_i64_shaped(vec![big], vec![1]).unwrap()),
+            Value::Tensor(Tensor::from_i64_shaped(vec![1], vec![1]).unwrap()),
+        ])
+        .unwrap();
+    let t = out.as_tensor().unwrap().clone();
+    assert_eq!(t.dtype(), DType::I64);
+    match t.buffer() {
+        myia::tensor::Buffer::I64(v) => assert_eq!(v, &vec![2 * big]),
+        other => panic!("expected i64 buffer, got {}", other.dtype()),
+    }
+}
+
+#[test]
+fn aliasing_same_tensor_both_operands() {
+    // x * x with one register read twice: only the final read may be moved,
+    // so the multiply sees both operands intact.
+    let e = Engine::from_source("def f(x):\n    return x * x\n").unwrap();
+    let f = e.trace("f").unwrap().compile().unwrap();
+    let keep = Tensor::from_f64(&[1.0, -2.0, 3.0]);
+    let out = f.call(vec![Value::Tensor(keep.clone())]).unwrap();
+    assert_eq!(out.as_tensor().unwrap().as_f64_vec(), vec![1.0, 4.0, 9.0]);
+    // The caller's reference is untouched.
+    assert_eq!(keep.as_f64_vec(), vec![1.0, -2.0, 3.0]);
+}
+
+#[test]
+fn shared_operand_is_never_mutated_in_place() {
+    let orig = Tensor::from_f64(&[1.0, 2.0, 3.0]);
+    let other = Tensor::from_f64(&[10.0, 10.0, 10.0]);
+    // `orig.clone()` shares the buffer (refcount 2): the owned kernel must
+    // allocate instead of writing through.
+    let out = ops::binary_num_owned(orig.clone(), other.clone(), ops::NumOp::Add).unwrap();
+    assert_eq!(out.as_f64_vec(), vec![11.0, 12.0, 13.0]);
+    assert_eq!(orig.as_f64_vec(), vec![1.0, 2.0, 3.0], "shared operand mutated!");
+
+    // A uniquely-owned operand IS reused.
+    let before = buffer_reuse_count();
+    let unique = Tensor::from_f64(&[5.0, 6.0, 7.0]);
+    let out = ops::binary_num_owned(unique, other, ops::NumOp::Add).unwrap();
+    assert_eq!(out.as_f64_vec(), vec![15.0, 16.0, 17.0]);
+    assert!(buffer_reuse_count() > before, "unique operand was not reused");
+}
+
+#[test]
+fn eight_threads_on_one_executable_match_sequential_oracle() {
+    // Reuse decisions depend on runtime refcounts; under concurrency they
+    // must never let one call's in-place write leak into another's data.
+    let gsrc = format!("{CHAIN_SRC}\ndef loss(x):\n    return item(sum(f(x)))\n");
+    let e = Engine::from_source(&gsrc).unwrap();
+    let f = e.trace("loss").unwrap().grad().optimize(PassSet::Standard).compile().unwrap();
+    let inputs: Vec<Tensor> = (0..8)
+        .map(|i| {
+            let vals: Vec<f64> = (0..64).map(|j| ((i * 64 + j) as f64).sin()).collect();
+            Tensor::from_f64(&vals)
+        })
+        .collect();
+    let oracle: Vec<Value> = inputs
+        .iter()
+        .map(|t| f.call(vec![Value::Tensor(t.clone())]).unwrap())
+        .collect();
+
+    let results: Vec<Vec<Value>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let f = &f;
+                let inputs = &inputs;
+                s.spawn(move || {
+                    (0..20)
+                        .flat_map(|_| {
+                            inputs
+                                .iter()
+                                .map(|t| f.call(vec![Value::Tensor(t.clone())]).unwrap())
+                                .collect::<Vec<_>>()
+                        })
+                        .collect::<Vec<Value>>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for thread_out in &results {
+        for (k, v) in thread_out.iter().enumerate() {
+            let want = &oracle[k % oracle.len()];
+            assert!(v.structural_eq(want), "thread result diverged: {v} vs {want}");
+        }
+    }
+    // And the inputs the threads shared were never mutated.
+    for (i, t) in inputs.iter().enumerate() {
+        assert_eq!(t.as_f64_vec()[0], ((i * 64) as f64).sin());
+    }
+}
+
+#[test]
+fn fingerprints_without_fusion_are_stable() {
+    // The fusion pass rides inside `opt=standard` without renaming it, so
+    // every pre-existing pipeline spec keeps its fingerprint (and cached
+    // artifacts stay valid). The ablation arm parses and is distinct.
+    let std_pipe = Pipeline::parse("grad,opt=standard,vm").unwrap();
+    assert_eq!(std_pipe.spec(), "grad,opt=standard,vm");
+    let ablated = Pipeline::parse("grad,opt=no-fusion,vm").unwrap();
+    assert_eq!(ablated.spec(), "grad,opt=no-fusion,vm");
+    assert_ne!(std_pipe.fingerprint(), ablated.fingerprint());
+    assert!(PassSet::parse("no-fusion").is_ok());
+    assert!(Pipeline::parse("opt=no-fusio,vm").is_err());
+}
+
+#[test]
+fn fusion_composes_with_vmap() {
+    // grad-then-vmap per-example gradients with fusion on/off agree bitwise.
+    let src = "def f(x):\n    return item(sum(exp(neg(x)) * x + 0.5))\n";
+    let e = Engine::from_source(src).unwrap();
+    let fused = e
+        .trace("f")
+        .unwrap()
+        .grad()
+        .vmap()
+        .optimize(PassSet::Standard)
+        .compile()
+        .unwrap();
+    let plain = e
+        .trace("f")
+        .unwrap()
+        .grad()
+        .vmap()
+        .optimize(no_fusion())
+        .compile()
+        .unwrap();
+    let x = Tensor::from_f64_shaped((0..12).map(|i| 0.1 * i as f64).collect(), vec![4, 3]).unwrap();
+    let a = fused.call(vec![Value::Tensor(x.clone())]).unwrap();
+    let b = plain.call(vec![Value::Tensor(x)]).unwrap();
+    assert!(a.structural_eq(&b), "vmapped adjoint diverged under fusion: {a} vs {b}");
+}

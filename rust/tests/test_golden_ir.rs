@@ -190,6 +190,56 @@ fn mlp_value_and_grad_counts() {
 }
 
 #[test]
+fn fig1_fusion_golden() {
+    // The Figure-1 adjoint with fusion on: the surviving elementwise ops
+    // collapse into fused kernels, the artifact never has more reachable
+    // nodes than the `opt=no-fusion` ablation, and the fused IR is pinned
+    // as its own snapshot (the printed `fused[...]` program makes kernel
+    // regressions reviewable as text).
+    let e = Engine::from_source(FIG1_SRC).unwrap();
+    let fused = e.trace("main").unwrap().compile().unwrap();
+    let plain = e
+        .trace("main")
+        .unwrap()
+        .optimize(PassSet::Without("fusion".to_string()))
+        .compile()
+        .unwrap();
+
+    let kernels = myia::opt::count_fused_kernels(&fused.module, fused.entry);
+    assert!(kernels >= 1, "fig1 adjoint carries no fused kernels");
+    let groups: usize = fused
+        .metrics
+        .stages
+        .iter()
+        .flat_map(|s| s.detail.iter())
+        .filter(|(k, _)| k == "fused_groups")
+        .map(|(_, v)| *v)
+        .sum();
+    assert!(groups >= 1, "optimize stage reported no fused groups");
+    assert!(
+        fused.metrics.nodes_after_optimize <= plain.metrics.nodes_after_optimize,
+        "fusion increased node count: {} vs {}",
+        fused.metrics.nodes_after_optimize,
+        plain.metrics.nodes_after_optimize
+    );
+
+    // Semantics unchanged, bit for bit.
+    for x in [0.5, -1.25, 2.0] {
+        let a = fused.call(vec![Value::F64(x)]).unwrap().as_f64().unwrap();
+        let b = plain.call(vec![Value::F64(x)]).unwrap().as_f64().unwrap();
+        assert_eq!(a, b, "x={x}");
+        assert!((a - 3.0 * x * x).abs() < 1e-12);
+    }
+
+    let snapshot = format!(
+        "fused kernels: {kernels}\nreachable nodes: {}\n\n{}",
+        fused.metrics.nodes_after_optimize,
+        print_graph(&fused.module, fused.entry, true)
+    );
+    assert_golden("fig1_fused", &snapshot);
+}
+
+#[test]
 fn unoptimized_artifacts_keep_their_scaffolding() {
     // Sanity for the comparison itself: opt=none must not run the GC, so
     // its artifact still carries the source graphs — i.e. the GC invariant
