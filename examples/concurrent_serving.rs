@@ -1,77 +1,152 @@
-//! Concurrent serving: the compile/run split in action.
+//! Concurrent serving through the micro-batching subsystem.
 //!
-//! An [`Engine`] compiles a gradient pipeline once; the resulting
-//! `Arc<Executable>` is an immutable, `Send + Sync` artifact — exactly the
-//! property the paper ascribes to ahead-of-time source-transformation AD
-//! (§3.2: the adjoint program is ordinary, closed IR). Eight threads then
-//! serve requests from the single shared artifact — the interpreter loop
-//! takes no locks — and every answer is checked against a sequential
-//! oracle. Run with:
+//! An [`Engine`] compiles a gradient pipeline twice — once unbatched (the
+//! per-example semantics of record) and once `vmap`ped along a fresh batch
+//! axis — and a [`Server`] coalesces concurrent single-example requests
+//! into one call of the batched artifact:
+//!
+//! ```text
+//! clients → submit() → [admission] → queue → batcher → vmapped call → scatter
+//! ```
+//!
+//! The demo drives three request populations at once:
+//!
+//! * well-typed scalar requests, answered bit-identically to a sequential
+//!   oracle whatever batches they ride in;
+//! * an invalid request (wrong type), turned away at admission before it
+//!   can occupy queue space;
+//! * during a second round, a shape poison that forces a whole batch onto
+//!   the per-example fallback path — its neighbors still get their exact
+//!   results.
+//!
+//! Finishes by printing the server's metrics snapshot (and the engine's
+//! artifact-cache counters riding along in it). Run with:
 //!
 //! ```text
 //! cargo run --release --example concurrent_serving
 //! ```
 
 use myia::prelude::*;
+use myia::tensor::Tensor;
+use myia::types::AType;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-const THREADS: usize = 8;
-const REQUESTS_PER_THREAD: usize = 2000;
+const CLIENTS: usize = 8;
+const REQUESTS_PER_CLIENT: usize = 500;
 
 fn main() -> anyhow::Result<()> {
     let src = "\
 def f(x):
     return sin(x) * exp(x) + tanh(x * x)
 ";
-    // Compile once. `trace` takes `&self`: the engine's artifact cache is
-    // sharded and Mutex-protected internally, so compiles could themselves
-    // come from many threads.
     let engine = Engine::from_source(src)?;
-    let f: Arc<Executable> = engine.trace("f")?.grad().compile()?;
-    println!("compiled pipeline: {}", f.metrics.pipeline);
 
-    // Sequential oracle for a spot-check set of inputs.
-    let probe: Vec<f64> = (0..32).map(|i| 0.11 * i as f64 - 1.7).collect();
-    let mut oracle: Vec<f64> = Vec::with_capacity(probe.len());
-    for &x in &probe {
-        let v = f
-            .call(vec![Value::F64(x)])?
-            .as_f64()
-            .ok_or_else(|| anyhow::anyhow!("non-scalar result"))?;
-        oracle.push(v);
-    }
+    // Sequential oracle: the unbatched gradient pipeline.
+    let oracle: Arc<Executable> = engine.trace("f")?.grad().compile()?;
+    println!("compiled pipeline: {}", oracle.metrics.pipeline);
 
-    // Serve: THREADS workers share the one Arc<Executable>.
+    // Round 1: a signature-specialized server. `for_entry` compiles the
+    // same pipeline unbatched (fallback) and vmapped (batched), binds no
+    // shared arguments, and arms admission with the f64 signature.
+    let cfg = ServerConfig {
+        max_batch: 16,
+        max_wait: Duration::from_millis(1),
+        queue_capacity: 128,
+        workers: 2,
+        full_policy: FullPolicy::Block,
+    };
+    let server = Arc::new(Server::for_entry(
+        &engine,
+        "f",
+        vec![],
+        Some(vec![AType::F64]),
+        cfg,
+        |f| f.grad(),
+    )?);
+
     let t0 = Instant::now();
     std::thread::scope(|s| {
-        for t in 0..THREADS {
-            let f = f.clone();
-            let probe = probe.clone();
+        for c in 0..CLIENTS {
+            let server = server.clone();
             let oracle = oracle.clone();
             s.spawn(move || {
-                for i in 0..REQUESTS_PER_THREAD {
-                    let k = (t + i) % probe.len();
-                    let got = f
-                        .call(vec![Value::F64(probe[k])])
-                        .expect("serve call failed")
+                for i in 0..REQUESTS_PER_CLIENT {
+                    let x = 0.11 * ((c * 37 + i) % 32) as f64 - 1.7;
+                    let got = server
+                        .submit(vec![Value::F64(x)])
+                        .expect("serve failed")
+                        .as_f64()
+                        .expect("scalar result");
+                    let want = oracle
+                        .call(vec![Value::F64(x)])
+                        .expect("oracle failed")
                         .as_f64()
                         .expect("scalar result");
                     assert_eq!(
                         got.to_bits(),
-                        oracle[k].to_bits(),
-                        "thread {t}: result diverged from the sequential oracle"
+                        want.to_bits(),
+                        "client {c}: served result diverged from the sequential oracle"
                     );
                 }
             });
         }
+        // One ill-typed request rides along: admission turns it away
+        // without it ever joining a batch.
+        let server = server.clone();
+        s.spawn(move || {
+            let refused = server.submit(vec![Value::str("not a number")]);
+            assert!(
+                matches!(refused, Err(ServeError::Rejected(_))),
+                "invalid request must be rejected at admission"
+            );
+        });
     });
     let secs = t0.elapsed().as_secs_f64();
-    let calls = THREADS * REQUESTS_PER_THREAD;
+    let calls = CLIENTS * REQUESTS_PER_CLIENT;
     println!(
-        "{calls} requests on {THREADS} threads in {secs:.3}s → {:.0} calls/s, \
+        "\n{calls} requests from {CLIENTS} clients in {secs:.3}s → {:.0} req/s, \
          all bit-identical to sequential execution",
         calls as f64 / secs
     );
+    println!("\n--- server metrics (specialized round) ---\n{}", server.metrics());
+    server.shutdown();
+
+    // Round 2: a generic server, plus a shape poison. A [2]-tensor among
+    // scalars can't stack, so its batch drops to the per-example fallback:
+    // the poison gets its own (correct!) elementwise answer and every
+    // neighbor still matches the oracle exactly.
+    let generic_oracle: Arc<Executable> = engine.trace("f")?.compile()?;
+    let cfg = ServerConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(5),
+        queue_capacity: 64,
+        workers: 1,
+        full_policy: FullPolicy::Block,
+    };
+    let server = Arc::new(Server::for_entry(&engine, "f", vec![], None, cfg, |f| f)?);
+    std::thread::scope(|s| {
+        for c in 0..CLIENTS {
+            let server = server.clone();
+            let oracle = generic_oracle.clone();
+            s.spawn(move || {
+                let x = 0.2 * c as f64 - 0.8;
+                let got = server.submit(vec![Value::F64(x)]).expect("serve failed");
+                let want = oracle.call(vec![Value::F64(x)]).expect("oracle failed");
+                assert!(got.structural_eq(&want), "neighbor of the poison diverged");
+            });
+        }
+        let server = server.clone();
+        let oracle = generic_oracle.clone();
+        s.spawn(move || {
+            let poison = Value::Tensor(Tensor::from_f64(&[0.3, -0.6]));
+            let got = server.submit(vec![poison.clone()]).expect("poison request");
+            let want = oracle.call(vec![poison]).expect("oracle on poison");
+            assert!(got.structural_eq(&want), "poison's own result must match the oracle");
+        });
+    });
+    println!("\n--- server metrics (generic round, with shape poison) ---\n{}", server.metrics());
+    println!("\nok: batching stayed invisible — rejections at admission, poison isolated, \
+              every response bit-identical");
     Ok(())
 }

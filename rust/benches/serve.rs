@@ -1,22 +1,58 @@
-//! Serve: multi-threaded throughput on one shared `Arc<Executable>`.
+//! Serve: concurrent throughput on one compiled artifact, with and without
+//! micro-batching.
 //!
-//! The compile/run split's payoff: a compiled artifact is immutable and
-//! `Send + Sync`, so N serving threads call it with no locks on the VM
-//! path (statistics fold in via relaxed atomics). This bench hammers one
-//! `value_and_grad` MLP executable (and a
-//! scalar grad executable, to isolate interpreter scaling from tensor-op
-//! scaling) from 1/2/4/8 threads, asserts every thread's results are
-//! identical to sequential execution, and writes machine-readable results
-//! to `BENCH_serve.json` at the repository root.
+//! Two families of arms, one shared harness:
+//!
+//! * **Legacy scaling arms** — N threads hammer one `Arc<Executable>`
+//!   directly (the compile/run split's payoff: no locks on the VM path).
+//!   Thread counts come from `BENCH_THREADS` (default `1,2,4,8`) instead of
+//!   a hardcoded table, and every arm routes through the same `drive`
+//!   harness and oracle check.
+//! * **Serving arms** — 1/8/64 concurrent clients submit single-example
+//!   requests either through a micro-batching [`Server`] (`batched`) or by
+//!   calling the unbatched executable directly (`unbatched`). Each request's
+//!   latency is recorded exactly (no histogram buckets here), yielding
+//!   throughput + p50/p99/max per arm; every response is verified
+//!   bit-identical to the sequential oracle after the clock stops.
+//!
+//! `BENCH_QUICK=1` (CI) or `BENCH_SMOKE=1` shrinks iteration counts; the
+//! non-quick run additionally asserts the acceptance criterion that batching
+//! beats unbatched dispatch at 64 clients. Results land in
+//! `BENCH_serve.json` at the repository root.
 
 use myia::coordinator::mlp::{self, params_value};
 use myia::coordinator::{Engine, Executable};
+use myia::serve::{FullPolicy, Server, ServerConfig};
 use myia::tensor::{DType, Rng, Tensor};
 use myia::vm::Value;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+fn env_flag(name: &str) -> bool {
+    std::env::var(name).map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+}
+
+fn quick() -> bool {
+    env_flag("BENCH_QUICK") || env_flag("BENCH_SMOKE")
+}
+
+/// Thread counts for the legacy scaling arms: `BENCH_THREADS="1,2,4,8"`.
+fn thread_counts() -> Vec<usize> {
+    std::env::var("BENCH_THREADS")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .filter_map(|t| t.trim().parse::<usize>().ok())
+                .filter(|&n| n > 0)
+                .collect::<Vec<_>>()
+        })
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| vec![1, 2, 4, 8])
+}
+
+const CLIENT_COUNTS: [usize; 3] = [1, 8, 64];
+
+// ---- shared harness -----------------------------------------------------
 
 struct Row {
     workload: &'static str,
@@ -31,8 +67,8 @@ impl Row {
     }
 }
 
-/// Run `iters` calls on each of `n` threads; assert every result equals the
-/// sequential `oracle`; return the wall-clock row.
+/// Legacy arm: `iters` identical calls on each of `n` threads against one
+/// executable; every result must equal the sequential `oracle`.
 fn drive(
     workload: &'static str,
     exe: &Arc<Executable>,
@@ -71,7 +107,104 @@ fn drive(
     row
 }
 
+// ---- serving arms -------------------------------------------------------
+
+struct ServeRow {
+    mode: &'static str,
+    clients: usize,
+    requests: usize,
+    secs: f64,
+    p50_us: u64,
+    p99_us: u64,
+    max_us: u64,
+}
+
+impl ServeRow {
+    fn throughput(&self) -> f64 {
+        self.requests as f64 / self.secs
+    }
+}
+
+/// Deterministic per-request input, bounded so `exp` stays well-conditioned.
+fn request_input(client: usize, i: usize, per_client: usize) -> f64 {
+    -1.5 + 0.0007 * ((client * per_client + i) % 4096) as f64
+}
+
+/// Exact percentile over collected per-request latencies (µs).
+fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((sorted.len() as f64 * p).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// Serving arm: `clients` threads each issue `per_client` single-example
+/// requests through `call`, recording exact per-request latency. Responses
+/// are collected and verified against the oracle *after* the clock stops,
+/// so verification cost never pollutes the measurement.
+fn drive_clients(
+    mode: &'static str,
+    clients: usize,
+    per_client: usize,
+    call: &(dyn Fn(f64) -> Value + Sync),
+) -> (ServeRow, Vec<(f64, Value)>) {
+    let t0 = Instant::now();
+    let per_thread: Vec<(Vec<u64>, Vec<(f64, Value)>)> = std::thread::scope(|s| {
+        (0..clients)
+            .map(|c| {
+                s.spawn(move || {
+                    let mut lats = Vec::with_capacity(per_client);
+                    let mut outs = Vec::with_capacity(per_client);
+                    for i in 0..per_client {
+                        let x = request_input(c, i, per_client);
+                        let q0 = Instant::now();
+                        let v = call(x);
+                        lats.push(q0.elapsed().as_micros() as u64);
+                        outs.push((x, v));
+                    }
+                    (lats, outs)
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    let mut lats: Vec<u64> = Vec::with_capacity(clients * per_client);
+    let mut results: Vec<(f64, Value)> = Vec::with_capacity(clients * per_client);
+    for (l, o) in per_thread {
+        lats.extend(l);
+        results.extend(o);
+    }
+    lats.sort_unstable();
+    let row = ServeRow {
+        mode,
+        clients,
+        requests: clients * per_client,
+        secs,
+        p50_us: percentile(&lats, 0.50),
+        p99_us: percentile(&lats, 0.99),
+        max_us: lats.last().copied().unwrap_or(0),
+    };
+    println!(
+        "serving {:<9} clients={:<3} {:>7} reqs in {:>7.3}s  →  {:>9.0} req/s   p50/p99/max {:>5}/{:>6}/{:>7} µs",
+        mode,
+        clients,
+        row.requests,
+        secs,
+        row.throughput(),
+        row.p50_us,
+        row.p99_us,
+        row.max_us
+    );
+    println!("CSV,serving,{mode},{clients},{:.1},{}", row.throughput(), row.p99_us);
+    (row, results)
+}
+
 fn main() {
+    let quick = quick();
     println!("=== serve: N threads on one Arc<Executable> ===");
 
     // Workload 1: MLP value_and_grad (tensor-heavy; matmuls dominate).
@@ -93,12 +226,14 @@ fn main() {
     let scalar_args = vec![Value::F64(0.7)];
     let scalar_oracle = scalar_fn.call(scalar_args.clone()).expect("sequential oracle");
 
+    let (mlp_iters, scalar_iters) = if quick { (5, 200) } else { (60, 4000) };
+    let threads = thread_counts();
     let mut rows: Vec<Row> = Vec::new();
-    for &n in &THREAD_COUNTS {
-        rows.push(drive("mlp_value_and_grad", &grad_fn, &mlp_args, &mlp_oracle, n, 60));
+    for &n in &threads {
+        rows.push(drive("mlp_value_and_grad", &grad_fn, &mlp_args, &mlp_oracle, n, mlp_iters));
     }
-    for &n in &THREAD_COUNTS {
-        rows.push(drive("scalar_grad", &scalar_fn, &scalar_args, &scalar_oracle, n, 4000));
+    for &n in &threads {
+        rows.push(drive("scalar_grad", &scalar_fn, &scalar_args, &scalar_oracle, n, scalar_iters));
     }
 
     // Speedups relative to each workload's single-thread row.
@@ -110,19 +245,91 @@ fn main() {
             .unwrap_or(f64::NAN);
         let top = rows
             .iter()
-            .find(|r| r.workload == workload && r.threads == 8)
+            .filter(|r| r.workload == workload)
             .map(Row::calls_per_sec)
-            .unwrap_or(f64::NAN);
+            .fold(f64::NAN, f64::max);
         (base, top / base)
     };
     let (mlp_base, mlp_speedup) = speedup("mlp_value_and_grad");
     let (scalar_base, scalar_speedup) = speedup("scalar_grad");
-    println!("\nmlp_value_and_grad: {mlp_base:.0} calls/s single-thread, {mlp_speedup:.2}x at 8 threads");
-    println!("scalar_grad:        {scalar_base:.0} calls/s single-thread, {scalar_speedup:.2}x at 8 threads");
+    println!("\nmlp_value_and_grad: {mlp_base:.0} calls/s single-thread, {mlp_speedup:.2}x at peak");
+    println!("scalar_grad:        {scalar_base:.0} calls/s single-thread, {scalar_speedup:.2}x at peak");
+
+    // ---- serving arms: batched vs unbatched at 1/8/64 clients ----------
+
+    println!("\n=== serving: micro-batched vs unbatched dispatch ===");
+    let per_client = if quick { 8 } else { 200 };
+    let server_workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let mut serve_rows: Vec<ServeRow> = Vec::new();
+    for &clients in &CLIENT_COUNTS {
+        let cfg = ServerConfig {
+            max_batch: clients.clamp(1, 32),
+            max_wait: Duration::from_micros(500),
+            queue_capacity: 2 * clients.max(32),
+            workers: server_workers.min(clients.max(1)),
+            full_policy: FullPolicy::Block,
+        };
+        let server = Arc::new(
+            Server::for_entry(&engine, "f", vec![], None, cfg, |f| f.grad())
+                .expect("build server"),
+        );
+        let (brow, bres) = drive_clients("batched", clients, per_client, &|x| {
+            server.submit(vec![Value::F64(x)]).expect("submit failed")
+        });
+        let snap = server.metrics();
+        println!(
+            "  mean batch {:.2} over {} vmapped + {} direct + {} fallback dispatches",
+            snap.mean_batch_size(),
+            snap.batched_batches,
+            snap.direct_calls,
+            snap.fallback_batches
+        );
+        server.shutdown();
+
+        let exe = scalar_fn.clone();
+        let (urow, ures) = drive_clients("unbatched", clients, per_client, &|x| {
+            exe.call(vec![Value::F64(x)]).expect("call failed")
+        });
+
+        // Off-the-clock oracle verification: every served response, batched
+        // or not, must be bit-identical to sequential per-example execution.
+        for (x, got) in bres.iter().chain(ures.iter()) {
+            let want = scalar_fn.call(vec![Value::F64(*x)]).expect("oracle");
+            let (got_bits, want_bits) = match (got, &want) {
+                (Value::F64(a), Value::F64(b)) => (a.to_bits(), b.to_bits()),
+                other => panic!("unexpected result kinds: {other:?}"),
+            };
+            assert_eq!(got_bits, want_bits, "served result diverged from oracle at x = {x}");
+        }
+        serve_rows.push(brow);
+        serve_rows.push(urow);
+    }
+
+    let rps = |mode: &str, clients: usize| -> f64 {
+        serve_rows
+            .iter()
+            .find(|r| r.mode == mode && r.clients == clients)
+            .map(ServeRow::throughput)
+            .unwrap_or(f64::NAN)
+    };
+    let batched_64 = rps("batched", 64);
+    let unbatched_64 = rps("unbatched", 64);
+    println!(
+        "\nat 64 clients: batched {batched_64:.0} req/s vs unbatched {unbatched_64:.0} req/s ({:.2}x)",
+        batched_64 / unbatched_64
+    );
+    if !quick {
+        assert!(
+            batched_64 > unbatched_64,
+            "acceptance: micro-batching must beat unbatched dispatch at 64 clients \
+             ({batched_64:.0} vs {unbatched_64:.0} req/s)"
+        );
+    }
 
     // Machine-readable trajectory point (hand-rolled JSON; serde is not in
     // the offline crate set).
-    let mut json = String::from("{\n  \"bench\": \"serve\",\n  \"identical_to_sequential\": true,\n  \"rows\": [\n");
+    let mut json = String::from("{\n  \"bench\": \"serve\",\n  \"identical_to_sequential\": true,\n");
+    json.push_str(&format!("  \"quick\": {quick},\n  \"rows\": [\n"));
     for (i, r) in rows.iter().enumerate() {
         json.push_str(&format!(
             "    {{\"workload\": \"{}\", \"threads\": {}, \"total_calls\": {}, \"secs\": {:.6}, \"calls_per_sec\": {:.1}}}{}\n",
@@ -134,8 +341,24 @@ fn main() {
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }
+    json.push_str("  ],\n  \"serving\": [\n");
+    for (i, r) in serve_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"workload\": \"scalar_grad_serving\", \"mode\": \"{}\", \"clients\": {}, \"requests\": {}, \"secs\": {:.6}, \"throughput_rps\": {:.1}, \"p50_us\": {}, \"p99_us\": {}, \"max_us\": {}}}{}\n",
+            r.mode,
+            r.clients,
+            r.requests,
+            r.secs,
+            r.throughput(),
+            r.p50_us,
+            r.p99_us,
+            r.max_us,
+            if i + 1 == serve_rows.len() { "" } else { "," }
+        ));
+    }
     json.push_str(&format!(
-        "  ],\n  \"mlp_speedup_8v1\": {mlp_speedup:.3},\n  \"scalar_speedup_8v1\": {scalar_speedup:.3}\n}}\n"
+        "  ],\n  \"mlp_speedup_8v1\": {mlp_speedup:.3},\n  \"scalar_speedup_8v1\": {scalar_speedup:.3},\n  \"batched_rps_64\": {batched_64:.1},\n  \"unbatched_rps_64\": {unbatched_64:.1},\n  \"batched_beats_unbatched_at_64\": {}\n}}\n",
+        batched_64 > unbatched_64
     ));
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
     std::fs::write(path, json).expect("write BENCH_serve.json");

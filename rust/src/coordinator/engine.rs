@@ -24,6 +24,7 @@ use crate::backend::Backend;
 use crate::ir::{analyze, GraphId, Module};
 use crate::opt::PassSet;
 use crate::parser::compile_source;
+use crate::serve::metrics::{CacheCounters, CacheStats};
 use crate::transform::{Pipeline, StageMetrics, Transform};
 use crate::types::AType;
 use crate::vm::{compile_program, Value, Vm};
@@ -105,6 +106,9 @@ pub struct Engine {
     pub module: Module,
     pub graphs: HashMap<String, GraphId>,
     cache: ArtifactCache,
+    /// Artifact-cache hit/miss telemetry, `Arc`-shared so a serving layer
+    /// built on this engine can fold it into one metrics snapshot.
+    stats: Arc<CacheCounters>,
 }
 
 /// A compiled, executable entry point: the run-time half of the compile/run
@@ -133,6 +137,52 @@ impl Executable {
     pub fn call(&self, args: Vec<Value>) -> Result<Value> {
         self.vm.call_graph(self.entry, args)
     }
+
+    /// Number of parameters the entry point takes.
+    pub fn arity(&self) -> usize {
+        self.module.graph(self.entry).params.len()
+    }
+
+    /// The argument-type signature this artifact was specialized to
+    /// (`None` = compiled generically).
+    pub fn signature(&self) -> Option<&[AType]> {
+        self.signature.as_deref()
+    }
+
+    /// Inferred return type, when specialized.
+    pub fn ret_type(&self) -> Option<&AType> {
+        self.ret_type.as_ref()
+    }
+
+    /// Validate a prospective call against this artifact *without running
+    /// it*: arity, data-kind (no closures/environments through a serving
+    /// boundary), and — when the artifact is specialized — per-argument
+    /// conformance to the stored signature ([`AType::accepts`], which
+    /// tolerates unknown dims). This is the `Engine::check_call`-style
+    /// admission check the serving layer runs before a request may enqueue,
+    /// so a bad request fails at the front door instead of mid-batch.
+    pub fn check_args(&self, args: &[Value]) -> Result<()> {
+        let arity = self.arity();
+        if args.len() != arity {
+            return Err(anyhow!("expected {arity} arguments, got {}", args.len()));
+        }
+        for (i, arg) in args.iter().enumerate() {
+            if matches!(arg, Value::Closure(_) | Value::Partial(_) | Value::Env(_) | Value::Fused(_))
+            {
+                return Err(anyhow!("argument {i} is a {} — not serveable data", arg.type_name()));
+            }
+            if let Some(expected) = self.signature.as_deref().and_then(|s| s.get(i)) {
+                let actual = AType::of_value(arg);
+                if !expected.accepts(&actual) {
+                    return Err(anyhow!(
+                        "argument {i} has type {actual}, but the artifact is specialized to \
+                         {expected}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 impl Engine {
@@ -140,7 +190,24 @@ impl Engine {
     pub fn from_source(source: &str) -> Result<Engine> {
         let mut module = Module::new();
         let graphs = compile_source(&mut module, source)?;
-        Ok(Engine { module, graphs, cache: ArtifactCache::new() })
+        Ok(Engine {
+            module,
+            graphs,
+            cache: ArtifactCache::new(),
+            stats: Arc::new(CacheCounters::default()),
+        })
+    }
+
+    /// Point-in-time artifact-cache hit/miss counts.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.stats.snapshot()
+    }
+
+    /// The live cache counters, shareable with a serving layer so cache
+    /// behavior lands in the same snapshot as serving metrics
+    /// (`serve::MetricsSnapshot`).
+    pub fn cache_counters(&self) -> Arc<CacheCounters> {
+        self.stats.clone()
     }
 
     /// Graph id of a top-level function.
@@ -206,10 +273,14 @@ impl Engine {
             let guard = shard.lock().expect("artifact cache poisoned");
             if let Some(entries) = guard.get(name) {
                 if let Some(hit) = entries.iter().find(|&e| matches(e)) {
+                    self.stats.hits.inc();
                     return Ok(hit.compiled.clone());
                 }
             }
         }
+        // A miss pays the full compile (even a racing loser did the work —
+        // the counter measures compiles performed, not entries inserted).
+        self.stats.misses.inc();
         let compiled = Arc::new(self.compile_uncached(name, pipeline, signature)?);
         let mut guard = shard.lock().expect("artifact cache poisoned");
         let entries = guard.entry(name.to_string()).or_default();
@@ -449,6 +520,35 @@ def main(x):
             .compile_pipeline("f", &Pipeline::standard(Backend::Vm))
             .unwrap();
         assert!(Arc::ptr_eq(&a, &d));
+        // The unified telemetry saw exactly these four lookups.
+        let stats = e.cache_stats();
+        assert_eq!((stats.hits, stats.misses), (2, 2), "{stats:?}");
+    }
+
+    #[test]
+    fn check_args_validates_against_stored_signature() {
+        let e = Engine::from_source("def f(w, x):\n    return sum(w * x)\n").unwrap();
+        let sig = vec![
+            AType::Tensor { dtype: crate::tensor::DType::F64, shape: vec![Some(3)] },
+            AType::Tensor { dtype: crate::tensor::DType::F64, shape: vec![Some(3)] },
+        ];
+        let f = e.trace("f").unwrap().specialize(sig).compile().unwrap();
+        assert_eq!(f.arity(), 2);
+        assert_eq!(f.signature().map(<[AType]>::len), Some(2));
+        let good = crate::tensor::Tensor::from_f64(&[1.0, 2.0, 3.0]);
+        let bad = crate::tensor::Tensor::from_f64(&[1.0, 2.0]);
+        f.check_args(&[Value::Tensor(good.clone()), Value::Tensor(good.clone())]).unwrap();
+        // Wrong shape, wrong kind, wrong arity — each caught before a call.
+        assert!(f
+            .check_args(&[Value::Tensor(good.clone()), Value::Tensor(bad)])
+            .is_err());
+        assert!(f.check_args(&[Value::Tensor(good.clone()), Value::F64(1.0)]).is_err());
+        assert!(f.check_args(&[Value::Tensor(good)]).is_err());
+        // Generic artifacts still enforce arity and data-kind.
+        let g = e.trace("f").unwrap().compile().unwrap();
+        assert!(g.signature().is_none());
+        g.check_args(&[Value::F64(1.0), Value::F64(2.0)]).unwrap();
+        assert!(g.check_args(&[Value::F64(1.0)]).is_err());
     }
 
     #[test]

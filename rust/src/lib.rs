@@ -37,6 +37,12 @@
 //!   `Send + Sync` artifact callable from any number of threads. Compiled
 //!   artifacts are cached per (entry, pipeline fingerprint, argument-type
 //!   signature).
+//! * [`serve`] — the async micro-batching serving subsystem: a std-only
+//!   [`serve::Server`] that coalesces concurrent single-example requests
+//!   into one call of the vmapped pipeline (queue → batcher → vmapped
+//!   executable → scatter), with admission-time signature checking,
+//!   bounded-queue backpressure, per-example fallback isolation, and
+//!   relaxed-atomic telemetry.
 //! * [`tensor`], [`bench`], [`ptest`], [`baselines`] — substrates built from
 //!   scratch: a dense tensor library, a micro-benchmark harness, a property
 //!   testing framework, and the dataflow-graph / OO-tape comparators.
@@ -55,6 +61,7 @@ pub mod runtime;
 pub mod backend;
 pub mod baselines;
 pub mod coordinator;
+pub mod serve;
 
 /// The common public surface: `use myia::prelude::*` is enough for the
 /// quickstart, the examples, and most downstream code.
@@ -62,6 +69,7 @@ pub mod prelude {
     pub use crate::backend::Backend;
     pub use crate::coordinator::{Engine, Executable, Function, Metrics};
     pub use crate::opt::PassSet;
+    pub use crate::serve::{error::ServeError, FullPolicy, Server, ServerConfig};
     pub use crate::transform::{
         Grad, Lower, Optimize, Pipeline, PipelineBuilder, Transform, ValueAndGrad, Vmap,
     };

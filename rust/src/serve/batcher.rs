@@ -1,0 +1,422 @@
+//! The batch engine: gather requests, stack along a new leading axis,
+//! dispatch the vmapped executable once, scatter per-example slices back.
+//!
+//! Correctness story, in order of defense:
+//!
+//! 1. Admission (in `serve::Server::submit`) already rejected anything that
+//!    contradicts the compiled signature — a malformed request never reaches
+//!    this module.
+//! 2. The batched path is *total or abandoned*: if stacking, dispatch, or
+//!    scatter fails for any reason, no partial results leak; the whole batch
+//!    moves to the fallback path.
+//! 3. The fallback path re-runs every request alone through the unbatched
+//!    executable, so each caller gets exactly what sequential execution
+//!    would have given them — a failing request fails by itself
+//!    ([`crate::serve::error::ServeError::Exec`]) and never poisons its
+//!    co-batched neighbors.
+//!
+//! Batch-of-one dispatches skip the vmapped artifact entirely and run the
+//! unbatched executable: no stacking tax when there is nothing to coalesce.
+
+use crate::coordinator::Executable;
+use crate::serve::error::ServeError;
+use crate::serve::metrics::ServeMetrics;
+use crate::serve::queue::BoundedQueue;
+use crate::tensor::{ops, DType, Tensor};
+use crate::types::AType;
+use crate::vm::Value;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// One-shot response cell a submitting thread parks on.
+pub(crate) struct ResponseSlot {
+    result: Mutex<Option<Result<Value, ServeError>>>,
+    ready: Condvar,
+}
+
+impl ResponseSlot {
+    pub(crate) fn new() -> Arc<ResponseSlot> {
+        Arc::new(ResponseSlot { result: Mutex::new(None), ready: Condvar::new() })
+    }
+
+    /// Deliver the response. First write wins: the panic safety net in
+    /// [`worker_loop`] may try to fill slots that the happy path already
+    /// answered.
+    pub(crate) fn fill(&self, r: Result<Value, ServeError>) {
+        let mut guard = self.result.lock().expect("response slot poisoned");
+        if guard.is_none() {
+            *guard = Some(r);
+            drop(guard);
+            self.ready.notify_all();
+        }
+    }
+
+    /// Park until the response arrives.
+    pub(crate) fn wait(&self) -> Result<Value, ServeError> {
+        let mut guard = self.result.lock().expect("response slot poisoned");
+        loop {
+            if let Some(r) = guard.take() {
+                return r;
+            }
+            guard = self.ready.wait(guard).expect("response slot poisoned");
+        }
+    }
+}
+
+/// An admitted request waiting in the queue: the per-request (mapped)
+/// arguments only — shared arguments live on the server.
+pub(crate) struct Request {
+    pub args: Vec<Value>,
+    pub enqueued_at: Instant,
+    pub slot: Arc<ResponseSlot>,
+}
+
+/// Everything a worker thread needs, shared behind one `Arc` by
+/// `serve::Server`.
+pub(crate) struct BatcherCtx {
+    /// The vmapped pipeline: shared args unmapped, request args batched
+    /// along axis 0.
+    pub batched: Arc<Executable>,
+    /// The unbatched pipeline: the sequential-oracle semantics every
+    /// response must match, and the isolation path when a batch fails.
+    pub fallback: Arc<Executable>,
+    /// Values bound to the leading (unmapped) parameters, e.g. model
+    /// weights.
+    pub shared: Vec<Value>,
+    pub queue: BoundedQueue<Request>,
+    pub metrics: ServeMetrics,
+    pub max_batch: usize,
+    pub max_wait: std::time::Duration,
+}
+
+/// Worker thread body: drain the queue into batches and execute them,
+/// until the queue closes and empties. Flush policy: a batch ships when it
+/// reaches `max_batch` examples or when `max_wait` has passed since its
+/// first request was picked up, whichever comes first.
+pub(crate) fn worker_loop(ctx: &BatcherCtx) {
+    while let Some(first) = ctx.queue.pop_blocking() {
+        let mut batch = vec![first];
+        let deadline = Instant::now() + ctx.max_wait;
+        while batch.len() < ctx.max_batch {
+            match ctx.queue.pop_until(deadline) {
+                Some(req) => batch.push(req),
+                None => break,
+            }
+        }
+        // Safety net: a panic inside tensor/VM code must not strand the
+        // batch's callers on their slots (and must not kill the worker).
+        let slots: Vec<Arc<ResponseSlot>> = batch.iter().map(|r| r.slot.clone()).collect();
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            execute_batch(ctx, batch);
+        }));
+        if outcome.is_err() {
+            for slot in &slots {
+                slot.fill(Err(ServeError::Exec("panic during batch execution".into())));
+            }
+        }
+    }
+}
+
+/// Execute one gathered batch and answer every request in it.
+fn execute_batch(ctx: &BatcherCtx, batch: Vec<Request>) {
+    let n = batch.len();
+    let dispatched = Instant::now();
+    for req in &batch {
+        ctx.metrics.wait.record(dispatched.duration_since(req.enqueued_at));
+    }
+    ctx.metrics.batch_sizes.record(n);
+
+    if n == 1 {
+        ctx.metrics.direct_calls.inc();
+        let req = batch.into_iter().next().expect("n == 1");
+        let result = call_unbatched(ctx, &req.args);
+        finish(ctx, &req, result);
+    } else {
+        match try_batched(ctx, &batch) {
+            Ok(per_example) => {
+                ctx.metrics.batched_batches.inc();
+                ctx.metrics.batched_examples.add(n as u64);
+                for (req, value) in batch.iter().zip(per_example) {
+                    finish(ctx, req, Ok(value));
+                }
+            }
+            Err(_batch_failure) => {
+                // Error isolation: re-run everyone alone. Only the request
+                // that actually fails unbatched sees an error.
+                ctx.metrics.fallback_batches.inc();
+                ctx.metrics.fallback_examples.add(n as u64);
+                for req in &batch {
+                    let result = call_unbatched(ctx, &req.args);
+                    finish(ctx, req, result);
+                }
+            }
+        }
+    }
+    ctx.metrics.exec.record(dispatched.elapsed());
+}
+
+/// Deliver a response and account for it.
+fn finish(ctx: &BatcherCtx, req: &Request, result: Result<Value, ServeError>) {
+    match &result {
+        Ok(_) => ctx.metrics.completed.inc(),
+        Err(_) => ctx.metrics.failed.inc(),
+    }
+    req.slot.fill(result);
+}
+
+/// One request through the unbatched executable — the per-example semantics
+/// of record.
+fn call_unbatched(ctx: &BatcherCtx, args: &[Value]) -> Result<Value, ServeError> {
+    let mut full = Vec::with_capacity(ctx.shared.len() + args.len());
+    full.extend(ctx.shared.iter().cloned());
+    full.extend(args.iter().cloned());
+    ctx.fallback.call(full).map_err(|e| ServeError::Exec(e.to_string()))
+}
+
+/// The whole batch through the vmapped executable: stack → dispatch →
+/// scatter. Any failure abandons the batched attempt (the caller falls back
+/// per-example); no partial results escape.
+fn try_batched(ctx: &BatcherCtx, batch: &[Request]) -> Result<Vec<Value>, String> {
+    let request_arity = ctx.fallback.arity() - ctx.shared.len();
+    let mut full = Vec::with_capacity(ctx.shared.len() + request_arity);
+    full.extend(ctx.shared.iter().cloned());
+    for pos in 0..request_arity {
+        let column: Vec<&Value> = batch.iter().map(|r| &r.args[pos]).collect();
+        full.push(stack_column(&column).map_err(|e| format!("argument {pos}: {e}"))?);
+    }
+    let out = ctx.batched.call(full).map_err(|e| e.to_string())?;
+    let split = split_results(&out, batch.len(), ctx.fallback.ret_type())?;
+    if split.len() != batch.len() {
+        return Err(format!("scatter produced {} results for {} requests", split.len(), batch.len()));
+    }
+    Ok(split)
+}
+
+/// Stack one argument position across the batch into the value the vmapped
+/// parameter expects: scalars become a rank-1 tensor of length `B`, tensors
+/// of shape `s` become one `[B, ..s]` tensor. Heterogeneous columns (mixed
+/// kinds, shapes or dtypes) are a batch-level failure.
+pub(crate) fn stack_column(column: &[&Value]) -> Result<Value, String> {
+    let Some(first) = column.first() else {
+        return Err("empty batch".into());
+    };
+    match first {
+        Value::F64(_) => {
+            let mut data = Vec::with_capacity(column.len());
+            for v in column {
+                match v {
+                    Value::F64(x) => data.push(*x),
+                    other => return Err(mix_err("f64 scalar", other)),
+                }
+            }
+            Ok(Value::Tensor(Tensor::from_f64(&data)))
+        }
+        Value::I64(_) => {
+            let mut data = Vec::with_capacity(column.len());
+            for v in column {
+                match v {
+                    Value::I64(x) => data.push(*x),
+                    other => return Err(mix_err("i64 scalar", other)),
+                }
+            }
+            let n = data.len();
+            Tensor::from_i64_shaped(data, vec![n])
+                .map(Value::Tensor)
+                .map_err(|e| e.to_string())
+        }
+        Value::Tensor(_) => {
+            let mut parts: Vec<&Tensor> = Vec::with_capacity(column.len());
+            for v in column {
+                match v {
+                    Value::Tensor(t) => parts.push(t),
+                    other => return Err(mix_err("tensor", other)),
+                }
+            }
+            ops::stack0(&parts).map(Value::Tensor).map_err(|e| e.to_string())
+        }
+        other => Err(format!("cannot batch a {} argument", other.type_name())),
+    }
+}
+
+fn mix_err(expected: &str, got: &Value) -> String {
+    format!("mixed batch: expected {expected} like the first request, got {}", got.type_name())
+}
+
+/// Scatter a batched result into per-example values.
+///
+/// The `template` — the unbatched pipeline's inferred return type, when it
+/// was specialized — disambiguates rank-0 slices: without it, a slice of a
+/// rank-1 `[B]` result is returned as the scalar the sequential path
+/// produces (`item()`-style), not as a rank-0 tensor.
+///
+/// Unmapped (constant) results are replicated: if the vmapped program
+/// proved its output independent of the mapped inputs, every example's
+/// sequential result is that same value.
+pub(crate) fn split_results(
+    out: &Value,
+    batch: usize,
+    template: Option<&AType>,
+) -> Result<Vec<Value>, String> {
+    match out {
+        Value::Tensor(t) => {
+            if t.rank() == 0 || t.shape()[0] != batch {
+                return Err(format!(
+                    "result tensor {:?} does not carry the batch axis ({batch})",
+                    t.shape()
+                ));
+            }
+            let keep_tensor = matches!(template, Some(AType::Tensor { .. }));
+            let mut out_vals = Vec::with_capacity(batch);
+            for i in 0..batch {
+                let slice = ops::slice_lead(t, i).map_err(|e| e.to_string())?;
+                out_vals.push(unbatch_scalar(slice, keep_tensor)?);
+            }
+            Ok(out_vals)
+        }
+        Value::Tuple(items) => {
+            let templates: Option<&Vec<AType>> = match template {
+                Some(AType::Tuple(ts)) if ts.len() == items.len() => Some(ts),
+                _ => None,
+            };
+            let mut per_component: Vec<Vec<Value>> = Vec::with_capacity(items.len());
+            for (k, item) in items.iter().enumerate() {
+                let t = templates.map(|ts| &ts[k]);
+                per_component.push(split_results(item, batch, t)?);
+            }
+            Ok((0..batch)
+                .map(|i| Value::tuple(per_component.iter().map(|c| c[i].clone()).collect()))
+                .collect())
+        }
+        // Constant results: replicate for every example.
+        Value::F64(_)
+        | Value::I64(_)
+        | Value::Bool(_)
+        | Value::Unit
+        | Value::Str(_)
+        | Value::ZeroT => Ok(vec![out.clone(); batch]),
+        other => Err(format!("cannot scatter a {} result", other.type_name())),
+    }
+}
+
+/// A rank-0 slice is the batched image of a scalar unless the template says
+/// the per-example result really is a tensor.
+fn unbatch_scalar(slice: Tensor, keep_tensor: bool) -> Result<Value, String> {
+    if slice.rank() > 0 || keep_tensor {
+        return Ok(Value::Tensor(slice));
+    }
+    match slice.dtype() {
+        DType::F64 | DType::F32 => {
+            slice.item().map(Value::F64).map_err(|e| e.to_string())
+        }
+        DType::I64 => match slice.buffer() {
+            crate::tensor::Buffer::I64(v) => Ok(Value::I64(v[0])),
+            _ => Err("rank-0 i64 slice with non-i64 buffer".into()),
+        },
+        DType::Bool => match slice.buffer() {
+            crate::tensor::Buffer::Bool(v) => Ok(Value::Bool(v[0])),
+            _ => Err("rank-0 bool slice with non-bool buffer".into()),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stack_column_scalars_and_tensors() {
+        let a = Value::F64(1.0);
+        let b = Value::F64(2.5);
+        match stack_column(&[&a, &b]).unwrap() {
+            Value::Tensor(t) => {
+                assert_eq!(t.shape(), &[2]);
+                assert_eq!(t.as_f64_vec(), vec![1.0, 2.5]);
+            }
+            other => panic!("{other}"),
+        }
+        let t1 = Value::Tensor(Tensor::from_f64(&[1.0, 2.0]));
+        let t2 = Value::Tensor(Tensor::from_f64(&[3.0, 4.0]));
+        match stack_column(&[&t1, &t2]).unwrap() {
+            Value::Tensor(t) => assert_eq!(t.shape(), &[2, 2]),
+            other => panic!("{other}"),
+        }
+        // Mixed kinds and mismatched shapes are batch-level failures.
+        assert!(stack_column(&[&a, &t1]).is_err());
+        let t3 = Value::Tensor(Tensor::from_f64(&[1.0, 2.0, 3.0]));
+        assert!(stack_column(&[&t1, &t3]).is_err());
+        assert!(stack_column(&[&Value::str("x"), &Value::str("y")]).is_err());
+    }
+
+    #[test]
+    fn split_results_scalars_tuples_and_constants() {
+        // [B] tensor → per-example f64 scalars (no template).
+        let out = Value::Tensor(Tensor::from_f64(&[1.0, 2.0, 3.0]));
+        let split = split_results(&out, 3, None).unwrap();
+        assert!(matches!(split[1], Value::F64(v) if v == 2.0));
+        // [B, 2] tensor → per-example [2] tensors.
+        let out = Value::Tensor(
+            Tensor::from_f64_shaped(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]).unwrap(),
+        );
+        let split = split_results(&out, 2, None).unwrap();
+        match &split[1] {
+            Value::Tensor(t) => assert_eq!(t.as_f64_vec(), vec![3.0, 4.0]),
+            other => panic!("{other}"),
+        }
+        // Tuple of batched tensors → per-example tuples.
+        let out = Value::tuple(vec![
+            Value::Tensor(Tensor::from_f64(&[1.0, 2.0])),
+            Value::Tensor(Tensor::from_f64(&[10.0, 20.0])),
+        ]);
+        let split = split_results(&out, 2, None).unwrap();
+        match &split[0] {
+            Value::Tuple(items) => {
+                assert!(matches!(items[0], Value::F64(v) if v == 1.0));
+                assert!(matches!(items[1], Value::F64(v) if v == 10.0));
+            }
+            other => panic!("{other}"),
+        }
+        // Constants replicate.
+        let split = split_results(&Value::F64(7.0), 4, None).unwrap();
+        assert_eq!(split.len(), 4);
+        assert!(split.iter().all(|v| matches!(v, Value::F64(x) if *x == 7.0)));
+        // Batch-axis mismatch is an error (→ fallback), not a guess.
+        let out = Value::Tensor(Tensor::from_f64(&[1.0, 2.0]));
+        assert!(split_results(&out, 3, None).is_err());
+        assert!(split_results(&Value::Tensor(Tensor::scalar_f64(1.0)), 2, None).is_err());
+    }
+
+    #[test]
+    fn split_keeps_rank0_tensor_under_tensor_template() {
+        let out = Value::Tensor(Tensor::from_f64(&[1.0, 2.0]));
+        let template = AType::Tensor { dtype: DType::F64, shape: vec![] };
+        let split = split_results(&out, 2, Some(&template)).unwrap();
+        match &split[0] {
+            Value::Tensor(t) => assert_eq!(t.rank(), 0),
+            other => panic!("expected rank-0 tensor, got {other}"),
+        }
+    }
+
+    #[test]
+    fn response_slot_first_write_wins() {
+        let slot = ResponseSlot::new();
+        slot.fill(Ok(Value::F64(1.0)));
+        slot.fill(Err(ServeError::Shutdown)); // late panic-path fill ignored
+        match slot.wait() {
+            Ok(Value::F64(v)) => assert_eq!(v, 1.0),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn response_slot_crosses_threads() {
+        let slot = ResponseSlot::new();
+        let s2 = slot.clone();
+        let h = std::thread::spawn(move || s2.wait());
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        slot.fill(Ok(Value::I64(9)));
+        match h.join().unwrap() {
+            Ok(Value::I64(9)) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! Serving-layer errors.
+//!
+//! The error taxonomy encodes the subsystem's isolation story: a request is
+//! either turned away *before* it can touch anyone else ([`ServeError::Rejected`],
+//! [`ServeError::QueueFull`]), fails *alone* after batch-level recovery
+//! ([`ServeError::Exec`]), or observes server teardown
+//! ([`ServeError::Shutdown`]). There is deliberately no "your batch failed"
+//! variant — a co-batched neighbor's failure is never a caller-visible
+//! outcome (see `batcher::execute_batch`).
+
+use std::fmt;
+
+/// What went wrong with one request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission-time validation failed: the request does not match the
+    /// compiled signature (wrong arity, type, dtype or shape) or carries a
+    /// non-data value. Rejected before enqueue — it never joins a batch.
+    Rejected(String),
+    /// The submission queue is at capacity and the server's backpressure
+    /// policy is [`crate::serve::FullPolicy::Reject`].
+    QueueFull,
+    /// This request's own execution failed. Under the batch-recovery path
+    /// every co-batched request was re-run unbatched, so this error belongs
+    /// to exactly this request.
+    Exec(String),
+    /// The server shut down before the request completed.
+    Shutdown,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Rejected(msg) => write!(f, "request rejected at admission: {msg}"),
+            ServeError::QueueFull => write!(f, "submission queue full"),
+            ServeError::Exec(msg) => write!(f, "request execution failed: {msg}"),
+            ServeError::Shutdown => write!(f, "server shut down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_forms() {
+        assert!(ServeError::Rejected("bad arity".into()).to_string().contains("admission"));
+        assert_eq!(ServeError::QueueFull.to_string(), "submission queue full");
+        assert!(ServeError::Exec("boom".into()).to_string().contains("boom"));
+        assert_eq!(ServeError::Shutdown.to_string(), "server shut down");
+    }
+}

@@ -1,0 +1,419 @@
+//! Serving and compile-cache telemetry: relaxed-atomic counters in the
+//! idiom of `ExecStats` (`vm/exec.rs`).
+//!
+//! Everything here is monotone telemetry, not synchronization, so every
+//! atomic uses `Ordering::Relaxed`: concurrent clients and batcher workers
+//! never contend on a lock for bookkeeping. [`ServeMetrics`] is the live
+//! accumulator owned by a `serve::Server`; [`MetricsSnapshot`] is the plain
+//! data a caller gets from `Server::metrics()` — one coherent-enough view
+//! including the engine's artifact-cache hit/miss counters
+//! ([`CacheCounters`], shared with `coordinator::Engine` by `Arc`), so a
+//! serving process dumps its whole story from one place.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// A relaxed monotone counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Raise to `v` if `v` is larger (high-water marks).
+    pub fn max_of(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Artifact-cache hit/miss counters, owned by `coordinator::Engine` and
+/// shared (via `Arc`) with any server built on that engine so cache
+/// behavior appears in the same [`MetricsSnapshot`] as serving counters.
+#[derive(Debug, Default)]
+pub struct CacheCounters {
+    /// Compile requests answered from the artifact cache.
+    pub hits: Counter,
+    /// Compile requests that ran a full compile (including the losers of a
+    /// racing-compile tie, who did the work even if the winner's artifact
+    /// was served).
+    pub misses: Counter,
+}
+
+impl CacheCounters {
+    pub fn snapshot(&self) -> CacheStats {
+        CacheStats { hits: self.hits.get(), misses: self.misses.get() }
+    }
+}
+
+/// Point-in-time artifact-cache statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+/// Number of power-of-two latency buckets: bucket `i` counts samples with
+/// `us` in `[2^i, 2^(i+1))` (bucket 0 holds 0–1 µs). 2^31 µs ≈ 36 min caps
+/// the range.
+const LAT_BUCKETS: usize = 32;
+
+/// Log₂-bucketed latency histogram over microseconds. `percentile` returns
+/// the *upper bound* of the bucket containing the requested rank — a
+/// conservative estimate that never under-reports a tail latency.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; LAT_BUCKETS],
+    count: Counter,
+    sum_us: Counter,
+    max_us: Counter,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: Counter::default(),
+            sum_us: Counter::default(),
+            max_us: Counter::default(),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&self, d: Duration) {
+        let us = u64::try_from(d.as_micros()).unwrap_or(u64::MAX);
+        let idx = (64 - us.leading_zeros() as usize).min(LAT_BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.inc();
+        self.sum_us.add(us);
+        self.max_us.max_of(us);
+    }
+
+    pub fn snapshot(&self) -> LatencyStats {
+        let count = self.count.get();
+        let pct = |p: f64| -> u64 {
+            if count == 0 {
+                return 0;
+            }
+            // Rank of the requested percentile, 1-based.
+            let rank = ((count as f64 * p).ceil() as u64).clamp(1, count);
+            let mut seen = 0u64;
+            for (i, b) in self.buckets.iter().enumerate() {
+                seen += b.load(Ordering::Relaxed);
+                if seen >= rank {
+                    // Upper bound of bucket i is 2^i - 1 (bucket 0: 1 µs).
+                    return (1u64 << i).saturating_sub(1).max(1);
+                }
+            }
+            self.max_us.get()
+        };
+        LatencyStats {
+            count,
+            mean_us: if count == 0 { 0.0 } else { self.sum_us.get() as f64 / count as f64 },
+            p50_us: pct(0.50),
+            p99_us: pct(0.99),
+            max_us: self.max_us.get(),
+        }
+    }
+}
+
+/// Point-in-time latency summary (µs).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencyStats {
+    pub count: u64,
+    pub mean_us: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+/// Exact batch-size histogram: slot `s` counts batches of exactly `s`
+/// examples (slot 0 unused; the last slot absorbs anything ≥ its index).
+#[derive(Debug)]
+pub struct BatchHistogram {
+    slots: Vec<AtomicU64>,
+}
+
+impl BatchHistogram {
+    pub fn new(max_batch: usize) -> BatchHistogram {
+        BatchHistogram { slots: (0..=max_batch).map(|_| AtomicU64::new(0)).collect() }
+    }
+
+    pub fn record(&self, size: usize) {
+        let idx = size.min(self.slots.len() - 1);
+        self.slots[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `(size, count)` pairs for sizes that occurred.
+    pub fn snapshot(&self) -> Vec<(usize, u64)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(s, c)| {
+                let c = c.load(Ordering::Relaxed);
+                (c > 0).then_some((s, c))
+            })
+            .collect()
+    }
+}
+
+/// Live serving counters, owned by `serve::Server`.
+#[derive(Debug)]
+pub struct ServeMetrics {
+    /// Requests offered to `submit` (before any checking).
+    pub submitted: Counter,
+    /// Admission-time validation rejects (never enqueued).
+    pub rejected_invalid: Counter,
+    /// Backpressure rejects under the `Reject` policy.
+    pub rejected_full: Counter,
+    /// Requests answered with a value.
+    pub completed: Counter,
+    /// Requests answered with an execution error (their own failure).
+    pub failed: Counter,
+    /// Batches dispatched through the vmapped executable.
+    pub batched_batches: Counter,
+    /// Examples served through the vmapped executable.
+    pub batched_examples: Counter,
+    /// Batch-of-one dispatches through the unbatched executable.
+    pub direct_calls: Counter,
+    /// Batch-level failures recovered by per-example fallback.
+    pub fallback_batches: Counter,
+    /// Examples re-run unbatched by the fallback path.
+    pub fallback_examples: Counter,
+    /// High-water mark of the submission queue depth.
+    pub queue_depth_max: Counter,
+    /// Enqueue → dispatch wait per request.
+    pub wait: LatencyHistogram,
+    /// Dispatch → response fill per batch.
+    pub exec: LatencyHistogram,
+    /// Batch-size distribution (batched + direct dispatches).
+    pub batch_sizes: BatchHistogram,
+}
+
+impl ServeMetrics {
+    pub fn new(max_batch: usize) -> ServeMetrics {
+        ServeMetrics {
+            submitted: Counter::default(),
+            rejected_invalid: Counter::default(),
+            rejected_full: Counter::default(),
+            completed: Counter::default(),
+            failed: Counter::default(),
+            batched_batches: Counter::default(),
+            batched_examples: Counter::default(),
+            direct_calls: Counter::default(),
+            fallback_batches: Counter::default(),
+            fallback_examples: Counter::default(),
+            queue_depth_max: Counter::default(),
+            wait: LatencyHistogram::default(),
+            exec: LatencyHistogram::default(),
+            batch_sizes: BatchHistogram::new(max_batch),
+        }
+    }
+
+    /// One coherent-enough view of everything (counters are read relaxed, so
+    /// a snapshot taken mid-flight may be off by in-flight requests — fine
+    /// for telemetry).
+    pub fn snapshot(&self, queue_depth: usize, cache: Option<CacheStats>) -> MetricsSnapshot {
+        MetricsSnapshot {
+            submitted: self.submitted.get(),
+            rejected_invalid: self.rejected_invalid.get(),
+            rejected_full: self.rejected_full.get(),
+            completed: self.completed.get(),
+            failed: self.failed.get(),
+            batched_batches: self.batched_batches.get(),
+            batched_examples: self.batched_examples.get(),
+            direct_calls: self.direct_calls.get(),
+            fallback_batches: self.fallback_batches.get(),
+            fallback_examples: self.fallback_examples.get(),
+            queue_depth,
+            queue_depth_max: self.queue_depth_max.get(),
+            wait: self.wait.snapshot(),
+            exec: self.exec.snapshot(),
+            batch_sizes: self.batch_sizes.snapshot(),
+            cache,
+        }
+    }
+}
+
+/// The snapshot a server dumps: serving counters, latency summaries, the
+/// batch-size histogram, and (when the server was built from an `Engine`)
+/// the artifact-cache hit/miss counters.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub rejected_invalid: u64,
+    pub rejected_full: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub batched_batches: u64,
+    pub batched_examples: u64,
+    pub direct_calls: u64,
+    pub fallback_batches: u64,
+    pub fallback_examples: u64,
+    pub queue_depth: usize,
+    pub queue_depth_max: u64,
+    pub wait: LatencyStats,
+    pub exec: LatencyStats,
+    pub batch_sizes: Vec<(usize, u64)>,
+    pub cache: Option<CacheStats>,
+}
+
+impl MetricsSnapshot {
+    /// Mean examples per dispatched batch (batched + direct).
+    pub fn mean_batch_size(&self) -> f64 {
+        let batches = self.batched_batches + self.direct_calls;
+        if batches == 0 {
+            return 0.0;
+        }
+        (self.batched_examples + self.direct_calls) as f64 / batches as f64
+    }
+}
+
+impl fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "requests: {} submitted, {} completed, {} failed, {} rejected \
+             ({} invalid, {} full)",
+            self.submitted,
+            self.completed,
+            self.failed,
+            self.rejected_invalid + self.rejected_full,
+            self.rejected_invalid,
+            self.rejected_full
+        )?;
+        writeln!(
+            f,
+            "batches:  {} vmapped ({} examples), {} direct, {} fallback \
+             ({} examples re-run), mean batch {:.2}",
+            self.batched_batches,
+            self.batched_examples,
+            self.direct_calls,
+            self.fallback_batches,
+            self.fallback_examples,
+            self.mean_batch_size()
+        )?;
+        writeln!(
+            f,
+            "queue:    depth {} (max {}), wait p50/p99/max {}/{}/{} µs",
+            self.queue_depth, self.queue_depth_max, self.wait.p50_us, self.wait.p99_us, self.wait.max_us
+        )?;
+        writeln!(
+            f,
+            "exec:     p50/p99/max {}/{}/{} µs over {} dispatches",
+            self.exec.p50_us, self.exec.p99_us, self.exec.max_us, self.exec.count
+        )?;
+        write!(f, "sizes:    ")?;
+        for (i, (s, c)) in self.batch_sizes.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{s}×{c}")?;
+        }
+        if self.batch_sizes.is_empty() {
+            write!(f, "(none)")?;
+        }
+        if let Some(cache) = &self.cache {
+            write!(f, "\ncache:    {} hits, {} misses", cache.hits, cache.misses)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn counters_survive_concurrent_increments() {
+        // The unification contract: relaxed counters lose nothing under
+        // contention — N threads × M increments arrive exactly.
+        let m = Arc::new(ServeMetrics::new(16));
+        let cache = Arc::new(CacheCounters::default());
+        let threads = 8;
+        let per = 10_000;
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                let m = m.clone();
+                let cache = cache.clone();
+                s.spawn(move || {
+                    for i in 0..per {
+                        m.submitted.inc();
+                        m.completed.inc();
+                        m.batch_sizes.record(1 + (i % 16));
+                        m.wait.record(Duration::from_micros(i as u64 % 512));
+                        cache.hits.inc();
+                        if i % 2 == 0 {
+                            cache.misses.inc();
+                        }
+                    }
+                });
+            }
+        });
+        let total = (threads * per) as u64;
+        let snap = m.snapshot(0, Some(cache.snapshot()));
+        assert_eq!(snap.submitted, total);
+        assert_eq!(snap.completed, total);
+        assert_eq!(snap.wait.count, total);
+        assert_eq!(snap.batch_sizes.iter().map(|(_, c)| c).sum::<u64>(), total);
+        let cs = snap.cache.unwrap();
+        assert_eq!(cs.hits, total);
+        assert_eq!(cs.misses, total / 2);
+    }
+
+    #[test]
+    fn latency_percentiles_are_conservative() {
+        let h = LatencyHistogram::default();
+        for us in [1u64, 2, 3, 100, 100, 100, 100, 100, 100, 5000] {
+            h.record(Duration::from_micros(us));
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 10);
+        assert_eq!(s.max_us, 5000);
+        // p99 falls in the 5000 µs bucket [4096, 8192); upper bound 8191.
+        assert!(s.p99_us >= 5000, "p99 {} under-reports the tail", s.p99_us);
+        // p50 falls in the 100 µs bucket [64, 128); upper bound 127.
+        assert!((100..=127).contains(&s.p50_us), "p50 {}", s.p50_us);
+        assert!(s.mean_us > 0.0);
+    }
+
+    #[test]
+    fn empty_histogram_snapshots_zero() {
+        let s = LatencyHistogram::default().snapshot();
+        assert_eq!((s.count, s.p50_us, s.p99_us, s.max_us), (0, 0, 0, 0));
+    }
+
+    #[test]
+    fn batch_histogram_caps_at_max() {
+        let h = BatchHistogram::new(4);
+        h.record(1);
+        h.record(4);
+        h.record(9); // clamped into the top slot
+        assert_eq!(h.snapshot(), vec![(1, 1), (4, 2)]);
+    }
+
+    #[test]
+    fn snapshot_display_renders() {
+        let m = ServeMetrics::new(8);
+        m.submitted.inc();
+        m.completed.inc();
+        m.direct_calls.inc();
+        m.batch_sizes.record(1);
+        let shown = m.snapshot(0, Some(CacheStats { hits: 3, misses: 1 })).to_string();
+        assert!(shown.contains("1 submitted"));
+        assert!(shown.contains("3 hits"));
+        assert!(shown.contains("1×1"));
+    }
+}

@@ -1,0 +1,502 @@
+//! Async micro-batching serving subsystem: coalesce concurrent requests
+//! into one vmapped call.
+//!
+//! The paper's pipeline ends at an `Arc<Executable>` — immutable,
+//! `Send + Sync`, callable from any thread. This module turns that artifact
+//! into a *server*: many client threads each submit one example, and the
+//! server transparently coalesces whatever is waiting into a single call of
+//! the **vmapped** pipeline, amortizing interpreter dispatch and kernel
+//! launch overhead across the batch:
+//!
+//! ```text
+//!  clients ──▶ submit() ──▶ [admission check] ──▶ bounded queue
+//!                                │ reject                │
+//!                                ▼                       ▼  drain ≤ max_batch
+//!                          Err(Rejected)           batcher worker
+//!                                                        │ stack along axis 0
+//!                                                        ▼
+//!                                             vmapped Executable (1 call)
+//!                                                        │ slice per request
+//!                                                        ▼
+//!                                              scatter → response slots
+//! ```
+//!
+//! Everything is std-only (threads, `Mutex`/`Condvar`, atomics) by crate
+//! policy — no async runtime.
+//!
+//! **Batching must be invisible.** Each response is required to be exactly
+//! what the unbatched pipeline would have produced for that request alone.
+//! Three mechanisms enforce it:
+//!
+//! 1. *Admission*: [`Server::submit`] validates arity and argument types
+//!    against the unbatched artifact's stored signature (`AType::accepts`)
+//!    and rejects before enqueueing — a typo never occupies queue capacity.
+//! 2. *Fallback isolation*: if the batched path fails for any reason
+//!    (heterogeneous shapes that refuse to stack, a kernel error on the
+//!    stacked input), the whole batch is re-run request-by-request through
+//!    the unbatched executable. The poison request gets its own
+//!    [`error::ServeError::Exec`]; its co-batched neighbors get their exact
+//!    sequential results.
+//! 3. *Batch-of-one bypass*: a lone request skips stacking entirely and
+//!    runs the unbatched artifact — identical to calling it yourself.
+//!
+//! Backpressure is explicit: the submission queue is bounded, and
+//! [`ServerConfig::full_policy`] picks between blocking the client
+//! ([`FullPolicy::Block`]) and failing fast with
+//! [`error::ServeError::QueueFull`] ([`FullPolicy::Reject`]).
+
+pub mod error;
+pub mod metrics;
+pub mod queue;
+
+mod batcher;
+
+use crate::coordinator::{Engine, Executable, Function};
+use crate::serve::batcher::{worker_loop, BatcherCtx, Request, ResponseSlot};
+use crate::serve::error::ServeError;
+use crate::serve::metrics::{CacheCounters, MetricsSnapshot, ServeMetrics};
+use crate::serve::queue::{BoundedQueue, PushError};
+use crate::types::AType;
+use crate::vm::Value;
+use crate::Result;
+use anyhow::bail;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// What `submit` does when the bounded queue is at capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FullPolicy {
+    /// Block the submitting thread until space frees up (default): load
+    /// sheds onto clients as latency, never as errors.
+    Block,
+    /// Fail fast with [`ServeError::QueueFull`]: load sheds as errors the
+    /// client can retry elsewhere.
+    Reject,
+}
+
+/// Admission-policy knobs for a [`Server`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServerConfig {
+    /// Flush a batch at this many examples (upper bound on the vmap axis).
+    pub max_batch: usize,
+    /// Flush a partial batch this long after its first request was picked
+    /// up: the latency a lone request pays, at most, waiting for company.
+    pub max_wait: Duration,
+    /// Bound on queued-but-undispatched requests (backpressure threshold).
+    pub queue_capacity: usize,
+    /// Batcher worker threads draining the queue.
+    pub workers: usize,
+    /// Behavior when the queue is at capacity.
+    pub full_policy: FullPolicy,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_capacity: 64,
+            workers: 1,
+            full_policy: FullPolicy::Block,
+        }
+    }
+}
+
+/// A micro-batching server over one compiled pipeline.
+///
+/// Built from two artifacts of the *same* pipeline — the unbatched original
+/// (the semantics of record, and the fallback/isolation path) and its
+/// `vmap_axes` batched sibling (the throughput path) — plus the values
+/// bound to the shared (unmapped) leading parameters, e.g. model weights.
+///
+/// `Server` is `Send + Sync`; call [`Server::submit`] from as many threads
+/// as you like. Dropping the server (or calling [`Server::shutdown`])
+/// closes the queue, drains already-accepted requests, and joins the
+/// workers — accepted requests are always answered.
+pub struct Server {
+    ctx: Arc<BatcherCtx>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    full_policy: FullPolicy,
+    /// Arguments each request must supply: total arity minus shared prefix.
+    request_arity: usize,
+    /// Engine cache counters, present when built via [`Server::for_entry`].
+    cache: Option<Arc<CacheCounters>>,
+}
+
+impl Server {
+    /// Assemble a server from explicitly compiled artifacts.
+    ///
+    /// `batched` must be the `vmap_axes` form of `fallback` with `None`
+    /// (broadcast) axes for the first `shared.len()` parameters and
+    /// `Some(0)` for the rest. `shared` is validated against `fallback`'s
+    /// stored signature here, once, so per-request admission only checks
+    /// the request suffix.
+    pub fn new(
+        batched: Arc<Executable>,
+        fallback: Arc<Executable>,
+        shared: Vec<Value>,
+        cfg: ServerConfig,
+    ) -> Result<Server> {
+        if cfg.max_batch == 0 || cfg.workers == 0 || cfg.queue_capacity == 0 {
+            bail!("serve: max_batch, workers and queue_capacity must all be positive");
+        }
+        if batched.arity() != fallback.arity() {
+            bail!(
+                "serve: batched arity {} != fallback arity {}",
+                batched.arity(),
+                fallback.arity()
+            );
+        }
+        if shared.len() >= fallback.arity() {
+            bail!(
+                "serve: {} shared argument(s) leave no mapped parameter (arity {})",
+                shared.len(),
+                fallback.arity()
+            );
+        }
+        if let Some(sig) = fallback.signature() {
+            for (i, v) in shared.iter().enumerate() {
+                if let Some(expected) = sig.get(i) {
+                    let actual = AType::of_value(v);
+                    if !expected.accepts(&actual) {
+                        bail!("serve: shared argument {i}: expected {expected}, got {actual}");
+                    }
+                }
+            }
+        }
+        let request_arity = fallback.arity() - shared.len();
+        let ctx = Arc::new(BatcherCtx {
+            batched,
+            fallback,
+            shared,
+            queue: BoundedQueue::new(cfg.queue_capacity),
+            metrics: ServeMetrics::new(cfg.max_batch),
+            max_batch: cfg.max_batch,
+            max_wait: cfg.max_wait,
+        });
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for i in 0..cfg.workers {
+            let ctx = ctx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("serve-worker-{i}"))
+                .spawn(move || worker_loop(&ctx))
+                .map_err(|e| anyhow::anyhow!("serve: failed to spawn worker: {e}"))?;
+            workers.push(handle);
+        }
+        Ok(Server {
+            ctx,
+            workers: Mutex::new(workers),
+            full_policy: cfg.full_policy,
+            request_arity,
+            cache: None,
+        })
+    }
+
+    /// Compile both sides of a server from an [`Engine`] entry point.
+    ///
+    /// `pipeline` configures the transform chain applied to *both*
+    /// artifacts (e.g. `|f| f.grad()` to serve per-example gradients); the
+    /// batched sibling additionally gets `vmap_axes` with the first
+    /// `shared.len()` parameters broadcast. When `request_sig` is given,
+    /// the unbatched artifact is specialized to
+    /// `types-of(shared) ++ request_sig`, which both moves type/shape
+    /// checking to compile time (§4.2) and arms the admission check with a
+    /// concrete signature. The engine's artifact-cache counters ride along
+    /// into [`Server::metrics`].
+    pub fn for_entry<'e>(
+        engine: &'e Engine,
+        entry: &str,
+        shared: Vec<Value>,
+        request_sig: Option<Vec<AType>>,
+        cfg: ServerConfig,
+        pipeline: impl Fn(Function<'e>) -> Function<'e>,
+    ) -> Result<Server> {
+        let mut f = pipeline(engine.trace(entry)?);
+        if let Some(rs) = &request_sig {
+            let full: Vec<AType> =
+                shared.iter().map(AType::of_value).chain(rs.iter().cloned()).collect();
+            f = f.specialize(full);
+        }
+        let fallback = f.compile()?;
+        let arity = fallback.arity();
+        if shared.len() >= arity {
+            bail!("serve: {} shared argument(s) leave no mapped parameter (arity {arity})", shared.len());
+        }
+        let axes: Vec<Option<usize>> =
+            (0..arity).map(|i| if i < shared.len() { None } else { Some(0) }).collect();
+        let batched = pipeline(engine.trace(entry)?).vmap_axes(axes).compile()?;
+        let mut server = Server::new(batched, fallback, shared, cfg)?;
+        server.cache = Some(engine.cache_counters());
+        Ok(server)
+    }
+
+    /// Submit one request (its mapped arguments only — shared arguments
+    /// were bound at construction) and block until its response arrives.
+    ///
+    /// The response is exactly what the unbatched pipeline would produce
+    /// for these arguments alone, whatever batch the request rode in.
+    pub fn submit(&self, args: Vec<Value>) -> std::result::Result<Value, ServeError> {
+        self.ctx.metrics.submitted.inc();
+        if let Err(msg) = self.validate(&args) {
+            self.ctx.metrics.rejected_invalid.inc();
+            return Err(ServeError::Rejected(msg));
+        }
+        let slot = ResponseSlot::new();
+        let request = Request { args, enqueued_at: Instant::now(), slot: slot.clone() };
+        match self.full_policy {
+            FullPolicy::Block => {
+                if self.ctx.queue.push_blocking(request).is_err() {
+                    return Err(ServeError::Shutdown);
+                }
+            }
+            FullPolicy::Reject => match self.ctx.queue.try_push(request) {
+                Ok(()) => {}
+                Err(PushError::Full(_)) => {
+                    self.ctx.metrics.rejected_full.inc();
+                    return Err(ServeError::QueueFull);
+                }
+                Err(PushError::Closed(_)) => return Err(ServeError::Shutdown),
+            },
+        }
+        self.ctx.metrics.queue_depth_max.max_of(self.ctx.queue.len() as u64);
+        slot.wait()
+    }
+
+    /// Admission check: arity, serveable data kinds, and — when the
+    /// unbatched artifact was specialized — the stored signature entry for
+    /// each request position.
+    fn validate(&self, args: &[Value]) -> std::result::Result<(), String> {
+        if args.len() != self.request_arity {
+            return Err(format!(
+                "expected {} request argument(s), got {}",
+                self.request_arity,
+                args.len()
+            ));
+        }
+        let shared_len = self.ctx.shared.len();
+        let sig = self.ctx.fallback.signature();
+        for (j, arg) in args.iter().enumerate() {
+            if matches!(
+                arg,
+                Value::Closure(_) | Value::Partial(_) | Value::Env(_) | Value::Fused(_)
+            ) {
+                return Err(format!(
+                    "argument {j}: a {} is not serveable data",
+                    arg.type_name()
+                ));
+            }
+            if let Some(expected) = sig.and_then(|s| s.get(shared_len + j)) {
+                let actual = AType::of_value(arg);
+                if !expected.accepts(&actual) {
+                    return Err(format!("argument {j}: expected {expected}, got {actual}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Point-in-time telemetry: serving counters, wait/exec latency
+    /// summaries, the batch-size histogram, and (when built via
+    /// [`Server::for_entry`]) the engine's artifact-cache hit/miss stats.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.ctx
+            .metrics
+            .snapshot(self.ctx.queue.len(), self.cache.as_ref().map(|c| c.snapshot()))
+    }
+
+    /// Requests each `submit` call must carry (arity minus shared prefix).
+    pub fn request_arity(&self) -> usize {
+        self.request_arity
+    }
+
+    /// Close the queue and join the workers. Already-accepted requests are
+    /// drained and answered first; new submissions get
+    /// [`ServeError::Shutdown`]. Idempotent; also runs on drop.
+    pub fn shutdown(&self) {
+        self.ctx.queue.close();
+        let handles: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.workers.lock().expect("worker registry poisoned"));
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    const SQUARE: &str = "def main(x):\n    return x * x + 1.0\n";
+
+    fn square_server(cfg: ServerConfig) -> (Engine, Server) {
+        let engine = Engine::from_source(SQUARE).unwrap();
+        let server = Server::for_entry(
+            &engine,
+            "main",
+            vec![],
+            Some(vec![AType::F64]),
+            cfg,
+            |f| f,
+        )
+        .unwrap();
+        (engine, server)
+    }
+
+    #[test]
+    fn single_request_round_trips() {
+        let (_e, server) = square_server(ServerConfig::default());
+        match server.submit(vec![Value::F64(3.0)]) {
+            Ok(Value::F64(v)) => assert_eq!(v, 10.0),
+            other => panic!("{other:?}"),
+        }
+        let m = server.metrics();
+        assert_eq!(m.submitted, 1);
+        assert_eq!(m.completed, 1);
+        assert!(m.cache.is_some(), "for_entry must attach engine cache stats");
+    }
+
+    #[test]
+    fn concurrent_submissions_coalesce_and_match_oracle() {
+        let cfg = ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(20),
+            ..ServerConfig::default()
+        };
+        let (engine, server) = square_server(cfg);
+        let oracle = engine.trace("main").unwrap().compile().unwrap();
+        let server = Arc::new(server);
+        let results: Vec<(f64, f64)> = std::thread::scope(|s| {
+            (0..16)
+                .map(|i| {
+                    let server = server.clone();
+                    s.spawn(move || {
+                        let x = 0.25 * i as f64 - 2.0;
+                        match server.submit(vec![Value::F64(x)]) {
+                            Ok(Value::F64(v)) => (x, v),
+                            other => panic!("{other:?}"),
+                        }
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        for (x, got) in results {
+            match oracle.call(vec![Value::F64(x)]).unwrap() {
+                Value::F64(want) => assert_eq!(got.to_bits(), want.to_bits(), "x = {x}"),
+                other => panic!("{other}"),
+            }
+        }
+        let m = server.metrics();
+        assert_eq!(m.completed, 16);
+        assert_eq!(m.failed + m.rejected_invalid + m.rejected_full, 0);
+        assert_eq!(
+            m.batched_examples + m.direct_calls + m.fallback_examples,
+            16,
+            "every example must be accounted to exactly one dispatch path"
+        );
+    }
+
+    #[test]
+    fn admission_rejects_before_enqueue() {
+        let (_e, server) = square_server(ServerConfig::default());
+        // Wrong arity.
+        match server.submit(vec![]) {
+            Err(ServeError::Rejected(msg)) => assert!(msg.contains("argument"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+        // Wrong type against the stored signature.
+        match server.submit(vec![Value::Tensor(Tensor::from_f64(&[1.0, 2.0]))]) {
+            Err(ServeError::Rejected(msg)) => assert!(msg.contains("expected f64"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+        let m = server.metrics();
+        assert_eq!(m.rejected_invalid, 2);
+        assert_eq!(m.completed + m.failed, 0, "rejected requests never dispatch");
+    }
+
+    #[test]
+    fn reject_policy_surfaces_queue_full() {
+        let engine = Engine::from_source(SQUARE).unwrap();
+        // No workers draining: build via explicit artifacts, then close off
+        // capacity by filling the queue from this thread.
+        let fallback = engine.trace("main").unwrap().compile().unwrap();
+        let batched =
+            engine.trace("main").unwrap().vmap_axes(vec![Some(0)]).compile().unwrap();
+        let cfg = ServerConfig {
+            queue_capacity: 1,
+            workers: 1,
+            max_batch: 4,
+            max_wait: Duration::from_millis(5),
+            full_policy: FullPolicy::Reject,
+        };
+        let server = Server::new(batched, fallback, vec![], cfg).unwrap();
+        // The single worker will drain whatever we push; QueueFull is timing
+        // dependent, so only assert the policy's error type is reachable by
+        // construction: submit a large burst and require that every response
+        // is either a correct value or QueueFull — never a hang or a wrong
+        // answer.
+        let server = Arc::new(server);
+        let outcomes = std::thread::scope(|s| {
+            (0..32)
+                .map(|i| {
+                    let server = server.clone();
+                    s.spawn(move || server.submit(vec![Value::F64(i as f64)]))
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect::<Vec<_>>()
+        });
+        let mut ok = 0;
+        for (i, r) in outcomes.into_iter().enumerate() {
+            match r {
+                Ok(Value::F64(v)) => {
+                    let x = i as f64;
+                    assert_eq!(v, x * x + 1.0);
+                    ok += 1;
+                }
+                Err(ServeError::QueueFull) => {}
+                other => panic!("{other:?}"),
+            }
+        }
+        assert!(ok > 0, "at least some requests must be served");
+        let m = server.metrics();
+        assert_eq!(m.completed, ok);
+        assert_eq!(m.rejected_full + m.completed, 32);
+    }
+
+    #[test]
+    fn shutdown_answers_accepted_then_rejects_new() {
+        let (_e, server) = square_server(ServerConfig::default());
+        assert!(server.submit(vec![Value::F64(1.0)]).is_ok());
+        server.shutdown();
+        match server.submit(vec![Value::F64(1.0)]) {
+            Err(ServeError::Shutdown) => {}
+            other => panic!("{other:?}"),
+        }
+        server.shutdown(); // idempotent
+    }
+
+    #[test]
+    fn config_validation() {
+        let engine = Engine::from_source(SQUARE).unwrap();
+        let fallback = engine.trace("main").unwrap().compile().unwrap();
+        let batched =
+            engine.trace("main").unwrap().vmap_axes(vec![Some(0)]).compile().unwrap();
+        let bad = ServerConfig { max_batch: 0, ..ServerConfig::default() };
+        assert!(Server::new(batched.clone(), fallback.clone(), vec![], bad).is_err());
+        // A shared prefix that consumes every parameter is rejected.
+        assert!(Server::new(batched, fallback, vec![Value::F64(1.0)], ServerConfig::default())
+            .is_err());
+    }
+}

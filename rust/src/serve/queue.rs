@@ -1,0 +1,231 @@
+//! Bounded MPMC submission queue: `Mutex<VecDeque>` + two `Condvar`s.
+//!
+//! Std-only by crate policy (no tokio, no crossbeam): callers block on
+//! `not_full` when the queue is at capacity (or get an immediate `Full` under
+//! the reject policy), workers block on `not_empty` — with a deadline
+//! variant so a batcher holding a partial batch can wait *up to* its flush
+//! deadline for more work and no longer. Closing the queue wakes everyone;
+//! already-enqueued items drain normally so accepted requests are never
+//! dropped on shutdown.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Why a push did not enqueue.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    /// Queue at capacity (reject policy / non-blocking push). The item is
+    /// handed back so the caller can fail its request without cloning.
+    Full(T),
+    /// Queue closed: the server is shutting down.
+    Closed(T),
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded blocking queue. `len()` is the live queue-depth gauge the
+/// metrics snapshot reads.
+pub struct BoundedQueue<T> {
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> BoundedQueue<T> {
+        assert!(capacity > 0, "queue capacity must be positive");
+        BoundedQueue {
+            state: Mutex::new(State { items: VecDeque::with_capacity(capacity), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Current depth (snapshot; racy by nature, fine for telemetry).
+    pub fn len(&self) -> usize {
+        self.state.lock().expect("queue poisoned").items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enqueue, failing immediately when full — the `Reject` backpressure
+    /// policy.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut st = self.state.lock().expect("queue poisoned");
+        if st.closed {
+            return Err(PushError::Closed(item));
+        }
+        if st.items.len() >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Enqueue, blocking while the queue is at capacity — the `Block`
+    /// backpressure policy. Errs only if the queue closes while waiting.
+    pub fn push_blocking(&self, item: T) -> Result<(), PushError<T>> {
+        let mut st = self.state.lock().expect("queue poisoned");
+        loop {
+            if st.closed {
+                return Err(PushError::Closed(item));
+            }
+            if st.items.len() < self.capacity {
+                st.items.push_back(item);
+                drop(st);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.not_full.wait(st).expect("queue poisoned");
+        }
+    }
+
+    /// Dequeue, blocking until an item arrives. `None` means the queue is
+    /// closed *and* fully drained — the worker-thread exit signal.
+    pub fn pop_blocking(&self) -> Option<T> {
+        let mut st = self.state.lock().expect("queue poisoned");
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).expect("queue poisoned");
+        }
+    }
+
+    /// Dequeue, waiting no later than `deadline`: the batch-gathering wait.
+    /// `None` means the deadline passed (flush what you have) or the queue
+    /// closed empty.
+    pub fn pop_until(&self, deadline: Instant) -> Option<T> {
+        let mut st = self.state.lock().expect("queue poisoned");
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, timeout) = self
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .expect("queue poisoned");
+            st = guard;
+            if timeout.timed_out() && st.items.is_empty() {
+                return None;
+            }
+        }
+    }
+
+    /// Close the queue: no new items are accepted, everyone blocked wakes.
+    /// Items already enqueued remain poppable until drained.
+    pub fn close(&self) {
+        let mut st = self.state.lock().expect("queue poisoned");
+        st.closed = true;
+        drop(st);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order_and_capacity() {
+        let q = BoundedQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.try_push(3), Err(PushError::Full(3)));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop_blocking(), Some(1));
+        assert_eq!(q.pop_blocking(), Some(2));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn pop_until_times_out_empty() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(4);
+        let deadline = Instant::now() + Duration::from_millis(10);
+        assert_eq!(q.pop_until(deadline), None);
+        assert!(Instant::now() >= deadline);
+    }
+
+    #[test]
+    fn close_wakes_blocked_popper_and_drains() {
+        let q = Arc::new(BoundedQueue::new(4));
+        q.try_push(7).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            let first = q2.pop_blocking();
+            let second = q2.pop_blocking(); // blocks until close
+            (first, second)
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), (Some(7), None));
+        assert_eq!(q.try_push(8), Err(PushError::Closed(8)));
+    }
+
+    #[test]
+    fn blocking_push_waits_for_space() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.try_push(1).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.push_blocking(2));
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop_blocking(), Some(1));
+        h.join().unwrap().unwrap();
+        assert_eq!(q.pop_blocking(), Some(2));
+    }
+
+    #[test]
+    fn many_producers_one_consumer_lose_nothing() {
+        let q = Arc::new(BoundedQueue::new(8));
+        let producers = 4;
+        let per = 100;
+        std::thread::scope(|s| {
+            for t in 0..producers {
+                let q = q.clone();
+                s.spawn(move || {
+                    for i in 0..per {
+                        q.push_blocking(t * per + i).unwrap();
+                    }
+                });
+            }
+            let mut seen = vec![false; producers * per];
+            for _ in 0..producers * per {
+                let v = q.pop_blocking().unwrap();
+                assert!(!seen[v], "duplicate item {v}");
+                seen[v] = true;
+            }
+            assert!(seen.iter().all(|&b| b));
+        });
+    }
+}

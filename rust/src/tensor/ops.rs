@@ -1134,6 +1134,71 @@ pub fn concat0(parts: &[Tensor]) -> TResult<Tensor> {
     Tensor::new(shape, Buffer::F64(data))
 }
 
+/// Stack tensors along a NEW leading axis: `B` tensors of shape `s` become
+/// one `[B, ..s]` tensor. Unlike [`concat0`] this is dtype-preserving and
+/// never round-trips through f64 (the serving batcher stacks request
+/// payloads with it, and i64 payloads must stay exact beyond 2^53). All
+/// parts must agree on shape *and* dtype.
+pub fn stack0(parts: &[&Tensor]) -> TResult<Tensor> {
+    let Some(first) = parts.first() else {
+        return terr("stack0 of zero tensors");
+    };
+    let shape = first.shape();
+    let dtype = first.dtype();
+    for p in parts.iter().skip(1) {
+        if p.shape() != shape {
+            return terr(format!("stack0 shape mismatch: {:?} vs {:?}", p.shape(), shape));
+        }
+        if p.dtype() != dtype {
+            return terr(format!("stack0 dtype mismatch: {} vs {}", p.dtype(), dtype));
+        }
+    }
+    let mut out_shape = Vec::with_capacity(shape.len() + 1);
+    out_shape.push(parts.len());
+    out_shape.extend_from_slice(shape);
+    macro_rules! gather {
+        ($variant:ident) => {{
+            let mut data = Vec::with_capacity(parts.len() * first.numel());
+            for p in parts {
+                match p.buffer() {
+                    Buffer::$variant(v) => data.extend_from_slice(v),
+                    _ => unreachable!("dtype checked above"),
+                }
+            }
+            Buffer::$variant(data)
+        }};
+    }
+    let buf = match dtype {
+        DType::F64 => gather!(F64),
+        DType::F32 => gather!(F32),
+        DType::I64 => gather!(I64),
+        DType::Bool => gather!(Bool),
+    };
+    Tensor::new(out_shape, buf)
+}
+
+/// Slice index `i` off the leading axis, dropping it: `[B, ..s]` → `[..s]`.
+/// Dtype-preserving (no f64 round-trip), unlike [`take_row`] — the serving
+/// scatter path uses it so per-example results are bit-identical to
+/// unbatched execution.
+pub fn slice_lead(a: &Tensor, i: usize) -> TResult<Tensor> {
+    if a.rank() == 0 {
+        return terr("slice_lead on rank-0 tensor");
+    }
+    if i >= a.shape()[0] {
+        return terr(format!("index {} out of range for shape {:?}", i, a.shape()));
+    }
+    let inner: usize = a.shape()[1..].iter().product();
+    let range = i * inner..(i + 1) * inner;
+    let buf = match a.buffer() {
+        Buffer::F64(v) => Buffer::F64(v[range].to_vec()),
+        Buffer::F32(v) => Buffer::F32(v[range].to_vec()),
+        Buffer::I64(v) => Buffer::I64(v[range].to_vec()),
+        Buffer::Bool(v) => Buffer::Bool(v[range].to_vec()),
+    };
+    Tensor::new(a.shape()[1..].to_vec(), buf)
+}
+
 /// Take row `i` from axis 0.
 pub fn take_row(a: &Tensor, i: usize) -> TResult<Tensor> {
     if a.rank() == 0 {
@@ -1417,6 +1482,43 @@ mod tests {
         let s = broadcast_batch(&Tensor::scalar_f64(4.0), &r).unwrap();
         assert_eq!(s.shape(), &[3]);
         assert!(broadcast_batch(&v, &Tensor::scalar_f64(0.0)).is_err());
+    }
+
+    #[test]
+    fn stack0_and_slice_lead_round_trip() {
+        let a = t(&[1.0, 2.0], &[2]);
+        let b = t(&[3.0, 4.0], &[2]);
+        let s = stack0(&[&a, &b]).unwrap();
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.as_f64_vec(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(slice_lead(&s, 0).unwrap(), a);
+        assert_eq!(slice_lead(&s, 1).unwrap(), b);
+        assert!(slice_lead(&s, 2).is_err());
+        assert!(slice_lead(&Tensor::scalar_f64(1.0), 0).is_err());
+        // Rank-0 parts stack into a vector.
+        let v = stack0(&[&Tensor::scalar_f64(7.0), &Tensor::scalar_f64(8.0)]).unwrap();
+        assert_eq!(v.shape(), &[2]);
+        assert_eq!(slice_lead(&v, 1).unwrap().rank(), 0);
+        // Mismatches are errors, not coercions.
+        assert!(stack0(&[&a, &t(&[1.0], &[1])]).is_err());
+        assert!(stack0(&[&a, &b.cast(DType::F32)]).is_err());
+        assert!(stack0(&[]).is_err());
+    }
+
+    #[test]
+    fn stack0_preserves_i64_exactly() {
+        // No f64 round-trip: values beyond 2^53 survive stacking and
+        // slicing bit-exactly.
+        let big = (1i64 << 60) + 7;
+        let a = Tensor::from_i64_shaped(vec![big, 1], vec![2]).unwrap();
+        let b = Tensor::from_i64_shaped(vec![big + 1, 2], vec![2]).unwrap();
+        let s = stack0(&[&a, &b]).unwrap();
+        assert_eq!(s.dtype(), DType::I64);
+        let back = slice_lead(&s, 1).unwrap();
+        match back.buffer() {
+            Buffer::I64(v) => assert_eq!(v, &vec![big + 1, 2]),
+            other => panic!("expected i64 buffer, got {other:?}"),
+        }
     }
 
     #[test]

@@ -77,6 +77,40 @@ impl AType {
         matches!(self, AType::F64 | AType::I64 | AType::Bool)
     }
 
+    /// Does a value of abstract type `actual` satisfy this (expected) type?
+    ///
+    /// The admission check of the serving layer: `expected` is a compiled
+    /// artifact's stored signature entry, `actual` is `AType::of_value` of an
+    /// incoming argument. Acceptance is *structural* equality except that
+    /// the expected side may be less precise: `Any` accepts everything, an
+    /// unknown tensor dimension (`None`) accepts any extent, and `ZeroT`
+    /// (the symbolic zero) is accepted wherever a numeric or tensor value is
+    /// expected. An `actual` of `Any` is rejected — an admission check that
+    /// cannot see the value's type must not vouch for it.
+    pub fn accepts(&self, actual: &AType) -> bool {
+        match (self, actual) {
+            (AType::Any, _) => true,
+            (_, AType::Any) => false,
+            (AType::ZeroT, AType::ZeroT) => true,
+            (AType::F64 | AType::I64 | AType::Tensor { .. }, AType::ZeroT) => true,
+            (
+                AType::Tensor { dtype: ed, shape: es },
+                AType::Tensor { dtype: ad, shape: as_ },
+            ) => {
+                ed == ad
+                    && es.len() == as_.len()
+                    && es
+                        .iter()
+                        .zip(as_.iter())
+                        .all(|(e, a)| e.is_none() || e == a)
+            }
+            (AType::Tuple(es), AType::Tuple(asv)) => {
+                es.len() == asv.len() && es.iter().zip(asv.iter()).all(|(e, a)| e.accepts(a))
+            }
+            (e, a) => e == a,
+        }
+    }
+
     /// Least upper bound (widening join).
     pub fn join(&self, other: &AType) -> AType {
         if self == other {
@@ -196,6 +230,36 @@ mod tests {
             AType::Tensor { dtype: DType::F64, shape: vec![None, Some(3)] }
         );
         assert_eq!(AType::ZeroT.join(&AType::F64), AType::F64);
+    }
+
+    #[test]
+    fn accepts_is_structural_with_unknown_dims() {
+        let exact = AType::Tensor { dtype: DType::F64, shape: vec![Some(2), Some(3)] };
+        let loose = AType::Tensor { dtype: DType::F64, shape: vec![None, Some(3)] };
+        let other = AType::Tensor { dtype: DType::F64, shape: vec![Some(4), Some(3)] };
+        let f32_t = AType::Tensor { dtype: DType::F32, shape: vec![Some(2), Some(3)] };
+        assert!(exact.accepts(&exact));
+        assert!(loose.accepts(&exact));
+        assert!(loose.accepts(&other));
+        assert!(!exact.accepts(&other), "concrete dims must match");
+        assert!(!exact.accepts(&f32_t), "dtype must match");
+        assert!(!exact.accepts(&loose), "actual side must be concrete");
+        // Scalars: exact kind match, no numeric coercion at admission.
+        assert!(AType::F64.accepts(&AType::F64));
+        assert!(!AType::F64.accepts(&AType::I64));
+        assert!(!AType::F64.accepts(&AType::Str));
+        // Any expected accepts all; Any actual is never vouched for.
+        assert!(AType::Any.accepts(&AType::Str));
+        assert!(!AType::F64.accepts(&AType::Any));
+        // Symbolic zero rides wherever numbers/tensors are expected.
+        assert!(AType::F64.accepts(&AType::ZeroT));
+        assert!(exact.accepts(&AType::ZeroT));
+        assert!(!AType::Str.accepts(&AType::ZeroT));
+        // Tuples recurse.
+        let tup_e = AType::Tuple(vec![AType::F64, loose.clone()]);
+        let tup_a = AType::Tuple(vec![AType::F64, exact.clone()]);
+        assert!(tup_e.accepts(&tup_a));
+        assert!(!tup_e.accepts(&AType::Tuple(vec![AType::F64])));
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 use myia::backend::Backend;
 use myia::coordinator::{Engine, Executable};
+use myia::serve::{Server, ServerConfig};
 use myia::tensor::Tensor;
 use myia::transform::Pipeline;
 use myia::vm::{Program, Value};
@@ -28,6 +29,57 @@ fn executable_program_and_value_are_send_sync() {
     assert_send_sync::<Value>();
     assert_send_sync::<Engine>();
     assert_send_sync::<Pipeline>();
+    assert_send_sync::<Server>();
+    assert_send_sync::<Arc<Server>>();
+}
+
+/// The serving front door under the same microscope as the raw executable:
+/// many threads submitting through one `Server` must see exactly the
+/// single-threaded oracle's bits, whatever batches the scheduler forms.
+#[test]
+fn eight_threads_through_one_server_match_sequential_oracle() {
+    let src = "def f(x):\n    return sin(x) * exp(x) + tanh(x * x)\n";
+    let e = Engine::from_source(src).unwrap();
+    let oracle_exe: Arc<Executable> = e.trace("f").unwrap().compile().unwrap();
+    let cfg = ServerConfig {
+        max_batch: 8,
+        max_wait: std::time::Duration::from_millis(2),
+        workers: 2,
+        ..ServerConfig::default()
+    };
+    let server = Arc::new(Server::for_entry(&e, "f", vec![], None, cfg, |f| f).unwrap());
+
+    let n = 100;
+    let oracle: Vec<Vec<u64>> = (0..THREADS)
+        .map(|t| {
+            thread_inputs(t, n)
+                .into_iter()
+                .map(|x| scalar_bits(&oracle_exe.call(vec![Value::F64(x)]).unwrap()))
+                .collect()
+        })
+        .collect();
+
+    let results: Vec<Vec<u64>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let server = server.clone();
+                s.spawn(move || {
+                    thread_inputs(t, n)
+                        .into_iter()
+                        .map(|x| scalar_bits(&server.submit(vec![Value::F64(x)]).unwrap()))
+                        .collect::<Vec<u64>>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for (t, (got, want)) in results.iter().zip(&oracle).enumerate() {
+        assert_eq!(got, want, "thread {t}: served results diverged from oracle");
+    }
+    let m = server.metrics();
+    assert_eq!(m.completed, (THREADS * n) as u64);
+    assert_eq!(m.failed + m.rejected_invalid + m.rejected_full, 0);
 }
 
 /// Deterministic, per-thread-distinct scalar inputs.

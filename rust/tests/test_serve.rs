@@ -1,0 +1,410 @@
+//! Integration tests for the micro-batching serving subsystem.
+//!
+//! The contract under test: **batching must be invisible**. Whatever batch a
+//! request rides in — full, partial, singleton, or one that failed and fell
+//! back — its response must be bit-identical to what the unbatched pipeline
+//! produces for that request alone, and a poisoned neighbor must never leak
+//! into anyone else's result.
+//!
+//! The property test draws random scalar programs (ptest `Expr`: smooth
+//! unary ops and `+`/`-`/`*`) and random client interleavings, then compares
+//! every served response against the sequential per-example oracle with
+//! `f64::to_bits` equality. Scalar elementwise programs evaluate with the
+//! same f64 operation sequence per lane in the scalar VM path and in the
+//! vmapped tensor kernels, so bit-identity — not just tolerance — is the
+//! right bar. One invalid request is injected per round to keep the
+//! rejection/fallback machinery under the same microscope.
+
+use myia::prelude::*;
+use myia::ptest::{self, Config};
+use myia::serve::error::ServeError;
+use myia::tensor::Tensor;
+use myia::types::AType;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Bitwise equality for served values: exact f64 bits, recursively.
+fn bit_eq(got: &Value, want: &Value) -> Result<(), String> {
+    match (got, want) {
+        (Value::F64(a), Value::F64(b)) => {
+            if a.to_bits() == b.to_bits() {
+                Ok(())
+            } else {
+                Err(format!("f64 bits differ: {a:?} vs {b:?}"))
+            }
+        }
+        (Value::I64(a), Value::I64(b)) if a == b => Ok(()),
+        (Value::Tensor(a), Value::Tensor(b)) => {
+            if a.shape() != b.shape() {
+                return Err(format!("shapes differ: {:?} vs {:?}", a.shape(), b.shape()));
+            }
+            let (av, bv) = (a.as_f64_vec(), b.as_f64_vec());
+            for (x, y) in av.iter().zip(bv.iter()) {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!("tensor lanes differ: {x:?} vs {y:?}"));
+                }
+            }
+            Ok(())
+        }
+        (Value::Tuple(a), Value::Tuple(b)) if a.len() == b.len() => {
+            for (x, y) in a.iter().zip(b.iter()) {
+                bit_eq(x, y)?;
+            }
+            Ok(())
+        }
+        _ => Err(format!("kinds differ: {} vs {}", got.type_name(), want.type_name())),
+    }
+}
+
+/// Random programs × random interleavings: every served response is
+/// bit-identical to the sequential oracle, with one invalid request injected
+/// per round. Rounds alternate between a signature-specialized server (the
+/// invalid request dies at admission) and a generic server (the invalid
+/// request is a shape poison that forces the fallback path mid-batch).
+#[test]
+fn prop_serving_is_bit_identical_to_sequential_oracle() {
+    ptest::check_exprs(Config { cases: 18, seed: 0x5E4E_D0C5 }, 4, |expr, rng| {
+        let src = format!("def main(x):\n    return {expr}\n");
+        let engine = Engine::from_source(&src).map_err(|e| e.to_string())?;
+        let oracle =
+            engine.trace("main").and_then(|f| f.compile()).map_err(|e| e.to_string())?;
+        let specialized = rng.below(2) == 0;
+        let cfg = ServerConfig {
+            max_batch: [2, 4, 8][rng.below(3)],
+            max_wait: Duration::from_millis(4),
+            queue_capacity: 64,
+            workers: 1 + rng.below(2),
+            full_policy: FullPolicy::Block,
+        };
+        let request_sig = specialized.then(|| vec![AType::F64]);
+        let server = Server::for_entry(&engine, "main", vec![], request_sig, cfg, |f| f)
+            .map_err(|e| e.to_string())?;
+        let server = Arc::new(server);
+
+        // Draw the whole schedule up front so it is seed-determined.
+        let clients = 4 + rng.below(8);
+        let inputs: Vec<Vec<f64>> = (0..clients)
+            .map(|_| (0..1 + rng.below(3)).map(|_| ptest::gen_value(rng)).collect())
+            .collect();
+        let delays: Vec<u64> = (0..clients).map(|_| rng.below(3) as u64).collect();
+        // The injected invalid request for this round.
+        let poison: Value = if specialized {
+            Value::str("not a number") // wrong type: must die at admission
+        } else {
+            // [2]-shaped tensor among scalars: stacks refuse, batch falls
+            // back per-example; the generic pipeline still evaluates it
+            // elementwise, so its own result must match the oracle too.
+            Value::Tensor(Tensor::from_f64(&[ptest::gen_value(rng), ptest::gen_value(rng)]))
+        };
+
+        let (results, poison_result) = std::thread::scope(|s| {
+            let handles: Vec<_> = inputs
+                .iter()
+                .zip(&delays)
+                .map(|(xs, &d)| {
+                    let server = server.clone();
+                    s.spawn(move || {
+                        std::thread::sleep(Duration::from_millis(d));
+                        xs.iter()
+                            .map(|&x| (x, server.submit(vec![Value::F64(x)])))
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            let p = {
+                let server = server.clone();
+                let poison = poison.clone();
+                s.spawn(move || server.submit(vec![poison]))
+            };
+            let results: Vec<Vec<(f64, Result<Value, ServeError>)>> =
+                handles.into_iter().map(|h| h.join().unwrap()).collect();
+            (results, p.join().unwrap())
+        });
+
+        // Every valid request: bit-identical to the sequential oracle.
+        let mut served = 0u64;
+        for row in &results {
+            for (x, r) in row {
+                let got = match r {
+                    Ok(v) => v,
+                    Err(e) => return Err(format!("x = {x} failed: {e}")),
+                };
+                let want = oracle.call(vec![Value::F64(*x)]).map_err(|e| e.to_string())?;
+                bit_eq(got, &want).map_err(|e| format!("x = {x}: {e}"))?;
+                served += 1;
+            }
+        }
+        // The poison request: rejected at admission (specialized) or served
+        // its own correct result via the fallback path (generic).
+        let m = server.metrics();
+        if specialized {
+            match &poison_result {
+                Err(ServeError::Rejected(_)) => {}
+                other => return Err(format!("poison not rejected: {other:?}")),
+            }
+            if m.rejected_invalid != 1 {
+                return Err(format!("rejected_invalid = {}", m.rejected_invalid));
+            }
+        } else {
+            let got = poison_result.map_err(|e| format!("tensor poison failed: {e}"))?;
+            let want = oracle.call(vec![poison]).map_err(|e| e.to_string())?;
+            bit_eq(&got, &want).map_err(|e| format!("tensor poison: {e}"))?;
+            served += 1;
+        }
+        if m.completed != served {
+            return Err(format!("completed {} != served {served}", m.completed));
+        }
+        if m.batched_examples + m.direct_calls + m.fallback_examples != served {
+            return Err(format!(
+                "dispatch accounting off: {} batched + {} direct + {} fallback != {served}",
+                m.batched_examples, m.direct_calls, m.fallback_examples
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Poison isolation, deterministic variant: when every request has a
+/// *different* tensor shape, no two can ever stack, so the vmapped path can
+/// never serve a multi-request batch — yet every response must still be
+/// bit-identical to the oracle. This pins the fallback path open regardless
+/// of timing.
+#[test]
+fn heterogeneous_shapes_never_poison_each_other() {
+    let src = "def main(x):\n    return sin(x) * x + 1.0\n";
+    let engine = Engine::from_source(src).unwrap();
+    let oracle = engine.trace("main").unwrap().compile().unwrap();
+    let cfg = ServerConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(50),
+        workers: 1,
+        ..ServerConfig::default()
+    };
+    let server =
+        Arc::new(Server::for_entry(&engine, "main", vec![], None, cfg, |f| f).unwrap());
+    let results: Vec<(Tensor, Result<Value, ServeError>)> = std::thread::scope(|s| {
+        (1..=8usize)
+            .map(|n| {
+                let server = server.clone();
+                s.spawn(move || {
+                    let data: Vec<f64> = (0..n).map(|i| 0.1 * (n * 10 + i) as f64).collect();
+                    let t = Tensor::from_f64(&data);
+                    let r = server.submit(vec![Value::Tensor(t.clone())]);
+                    (t, r)
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+    for (t, r) in results {
+        let got = r.unwrap();
+        let want = oracle.call(vec![Value::Tensor(t)]).unwrap();
+        bit_eq(&got, &want).unwrap();
+    }
+    let m = server.metrics();
+    assert_eq!(m.completed, 8);
+    assert_eq!(m.failed, 0);
+    assert_eq!(
+        m.batched_batches, 0,
+        "no two distinct-shape requests can stack; every multi-request batch must fall back"
+    );
+    assert_eq!(m.direct_calls + m.fallback_examples, 8);
+}
+
+/// Poison isolation, exec-failure branch: the *batched* executable itself
+/// fails at run time (sabotaged with `raise_`), so every multi-request batch
+/// takes the per-example fallback — and every caller still gets the exact
+/// unbatched result. This is the hard acceptance case: a batch-level
+/// execution failure must cost throughput, never correctness.
+#[test]
+fn batched_exec_failure_falls_back_per_example() {
+    let src = "def main(x):\n    return x * 3.0 + 1.0\n\
+               \ndef boom(x):\n    return raise_(\"deliberate batched failure\")\n";
+    let engine = Engine::from_source(src).unwrap();
+    let fallback = engine.trace("main").unwrap().compile().unwrap();
+    let sabotaged = engine.trace("boom").unwrap().compile().unwrap();
+    let cfg = ServerConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(50),
+        workers: 1,
+        ..ServerConfig::default()
+    };
+    let server = Arc::new(Server::new(sabotaged, fallback, vec![], cfg).unwrap());
+    let results: Vec<(f64, Result<Value, ServeError>)> = std::thread::scope(|s| {
+        (0..8)
+            .map(|i| {
+                let server = server.clone();
+                s.spawn(move || {
+                    let x = 0.5 * i as f64 - 2.0;
+                    (x, server.submit(vec![Value::F64(x)]))
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+    for (x, r) in results {
+        match r.unwrap() {
+            Value::F64(v) => assert_eq!(v.to_bits(), (x * 3.0 + 1.0).to_bits(), "x = {x}"),
+            other => panic!("{other}"),
+        }
+    }
+    let m = server.metrics();
+    assert_eq!(m.completed, 8);
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.batched_batches, 0, "the sabotaged batched artifact can never succeed");
+    assert_eq!(m.direct_calls + m.fallback_examples, 8);
+}
+
+/// A failing *request* (not a failing batch) gets its own `Exec` error and
+/// nothing else: neighbors in the same storm of submissions all succeed.
+#[test]
+fn failing_request_gets_its_own_error() {
+    // `item` demands a single-element tensor: [1] requests succeed, the [3]
+    // poison fails in both the batched and the unbatched pipeline.
+    let src = "def main(x):\n    return item(x) * 2.0\n";
+    let engine = Engine::from_source(src).unwrap();
+    let oracle = engine.trace("main").unwrap().compile().unwrap();
+    let cfg = ServerConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(30),
+        workers: 1,
+        ..ServerConfig::default()
+    };
+    let server =
+        Arc::new(Server::for_entry(&engine, "main", vec![], None, cfg, |f| f).unwrap());
+    let poison = Tensor::from_f64(&[1.0, 2.0, 3.0]);
+    assert!(oracle.call(vec![Value::Tensor(poison.clone())]).is_err(), "poison must fail solo");
+    let (goods, bad) = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..7)
+            .map(|i| {
+                let server = server.clone();
+                s.spawn(move || {
+                    let x = 0.3 * i as f64 + 0.1;
+                    (x, server.submit(vec![Value::Tensor(Tensor::from_f64(&[x]))]))
+                })
+            })
+            .collect();
+        let bad = {
+            let server = server.clone();
+            let poison = poison.clone();
+            s.spawn(move || server.submit(vec![Value::Tensor(poison)]))
+        };
+        let goods: Vec<(f64, Result<Value, ServeError>)> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        (goods, bad.join().unwrap())
+    });
+    match bad {
+        Err(ServeError::Exec(msg)) => {
+            assert!(msg.contains("item"), "error should name the failing op: {msg}")
+        }
+        other => panic!("poison request must fail with Exec, got {other:?}"),
+    }
+    for (x, r) in goods {
+        let got = r.unwrap_or_else(|e| panic!("neighbor x = {x} poisoned: {e}"));
+        let want = oracle.call(vec![Value::Tensor(Tensor::from_f64(&[x]))]).unwrap();
+        bit_eq(&got, &want).unwrap();
+    }
+    let m = server.metrics();
+    assert_eq!(m.completed, 7);
+    assert_eq!(m.failed, 1);
+}
+
+/// Shared (broadcast) arguments: serve per-example predictions of a model
+/// whose weights are bound once at server construction, batched along the
+/// request axis only.
+#[test]
+fn shared_weights_are_broadcast_not_batched() {
+    let src = "def main(w, x):\n    return sum(w * x)\n";
+    let engine = Engine::from_source(src).unwrap();
+    let w = Tensor::from_f64(&[0.5, -1.0, 2.0]);
+    let oracle = engine.trace("main").unwrap().compile().unwrap();
+    let cfg = ServerConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(20),
+        ..ServerConfig::default()
+    };
+    let server = Arc::new(
+        Server::for_entry(
+            &engine,
+            "main",
+            vec![Value::Tensor(w.clone())],
+            Some(vec![AType::Tensor { dtype: myia::tensor::DType::F64, shape: vec![Some(3)] }]),
+            cfg,
+            |f| f,
+        )
+        .unwrap(),
+    );
+    assert_eq!(server.request_arity(), 1, "shared weight is bound, not submitted");
+    let results: Vec<(Tensor, Result<Value, ServeError>)> = std::thread::scope(|s| {
+        (0..8)
+            .map(|i| {
+                let server = server.clone();
+                s.spawn(move || {
+                    let x = Tensor::from_f64(&[i as f64, 0.5 * i as f64, -0.25 * i as f64]);
+                    let r = server.submit(vec![Value::Tensor(x.clone())]);
+                    (x, r)
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+    for (x, r) in results {
+        let got = r.unwrap();
+        let want = oracle
+            .call(vec![Value::Tensor(w.clone()), Value::Tensor(x)])
+            .unwrap();
+        bit_eq(&got, &want).unwrap();
+    }
+    // Wrong request shape dies at admission against the stored signature.
+    match server.submit(vec![Value::Tensor(Tensor::from_f64(&[1.0, 2.0]))]) {
+        Err(ServeError::Rejected(msg)) => assert!(msg.contains("expected"), "{msg}"),
+        other => panic!("{other:?}"),
+    }
+}
+
+/// Served gradients: the pipeline closure applies `.grad()` to both the
+/// fallback and the vmapped artifact, so the server coalesces per-example
+/// gradient requests the same way it coalesces forward passes.
+#[test]
+fn serves_gradients_bit_identical_to_unbatched_grad() {
+    let src = "def main(x):\n    return sin(x) * x + tanh(x)\n";
+    let engine = Engine::from_source(src).unwrap();
+    let grad_oracle = engine.trace("main").unwrap().grad().compile().unwrap();
+    let cfg = ServerConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(20),
+        ..ServerConfig::default()
+    };
+    let server = Arc::new(
+        Server::for_entry(&engine, "main", vec![], Some(vec![AType::F64]), cfg, |f| f.grad())
+            .unwrap(),
+    );
+    let results: Vec<(f64, Result<Value, ServeError>)> = std::thread::scope(|s| {
+        (0..12)
+            .map(|i| {
+                let server = server.clone();
+                s.spawn(move || {
+                    let x = 0.25 * i as f64 - 1.5;
+                    (x, server.submit(vec![Value::F64(x)]))
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+    for (x, r) in results {
+        let got = r.unwrap();
+        let want = grad_oracle.call(vec![Value::F64(x)]).unwrap();
+        bit_eq(&got, &want).unwrap_or_else(|e| panic!("grad at x = {x}: {e}"));
+    }
+    let m = server.metrics();
+    assert_eq!(m.completed, 12);
+    assert_eq!(m.failed + m.rejected_invalid, 0);
+}
