@@ -25,7 +25,7 @@ use myia::coordinator::mlp::{
 use myia::coordinator::{Engine, Executable};
 use myia::opt::PassSet;
 use myia::tensor::{buffer_reuse_count, DType, Rng, Tensor};
-use myia::vm::Value;
+use myia::vm::{pool, Value};
 use std::sync::Arc;
 
 /// 16 elementwise ops (8 mul + 8 add) in one single-consumer chain — the
@@ -136,6 +136,33 @@ fn main() {
         t_fused * 1e6,
         t_unfused * 1e6,
         t_unfused / t_fused
+    );
+
+    // --- workload 1b: fused chain across intra-op pool sizes -----------
+    // Same executable, same oracle: only the worker count changes. Chunk
+    // boundaries are a function of the shape, so `run_arm`'s structural
+    // check doubles as the parallel==sequential determinism gate.
+    let lanes_before = pool::intra_op_threads();
+    let mut thread_times: Vec<(usize, f64)> = Vec::new();
+    for (n, label) in
+        [(1usize, "threads1"), (2, "threads2"), (4, "threads4"), (8, "threads8")]
+    {
+        pool::set_intra_op_threads(n);
+        let (_, t) =
+            run_arm(&mut b, "chain16", label, &fused, &[x.clone()], Some(&chain_oracle), &mut rows);
+        thread_times.push((n, t));
+    }
+    pool::set_intra_op_threads(lanes_before);
+    let t_threads = |n: usize| {
+        thread_times.iter().find(|(t, _)| *t == n).map(|(_, s)| *s).unwrap_or(f64::NAN)
+    };
+    let chain_speedup_4v1 = t_threads(1) / t_threads(4);
+    println!(
+        "chain16 scaling: 1t {:.1}us, 2t {:.1}us, 4t {:.1}us ({chain_speedup_4v1:.2}x), 8t {:.1}us",
+        t_threads(1) * 1e6,
+        t_threads(2) * 1e6,
+        t_threads(4) * 1e6,
+        t_threads(8) * 1e6
     );
 
     // --- workload 2: MLP value_and_grad -------------------------------
@@ -251,10 +278,20 @@ fn main() {
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }
+    json.push_str("  ],\n  \"chain16_threads\": [\n");
+    for (i, (n, t)) in thread_times.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"threads\": {}, \"median_us\": {:.3}}}{}\n",
+            n,
+            t * 1e6,
+            if i + 1 == thread_times.len() { "" } else { "," }
+        ));
+    }
     json.push_str(&format!(
-        "  ],\n  \"chain16_speedup\": {:.3},\n  \"mlp_vgrad_speedup\": {:.3},\n  \
-         \"per_sample_speedup\": {:.3}\n}}\n",
+        "  ],\n  \"chain16_speedup\": {:.3},\n  \"chain16_speedup_threads_4v1\": {:.3},\n  \
+         \"mlp_vgrad_speedup\": {:.3},\n  \"per_sample_speedup\": {:.3}\n}}\n",
         t_unfused / t_fused,
+        chain_speedup_4v1,
         tm_unfused / tm_fused,
         tp_unfused / tp_fused
     ));
@@ -274,6 +311,27 @@ fn main() {
             mlp_allocs_saved > 0,
             "perf smoke gate: fused MLP adjoint reported allocs_saved == 0"
         );
+        let cores =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        if cores >= 4 {
+            // 10% slack absorbs scheduler noise on shared CI runners; the
+            // real claim is "more workers never lose", not a speedup bound.
+            assert!(
+                t_threads(8) <= t_threads(1) * 1.10,
+                "perf smoke gate: 8-worker fused chain ({:.1}us) slower than 1-worker ({:.1}us)",
+                t_threads(8) * 1e6,
+                t_threads(1) * 1e6
+            );
+        }
         println!("smoke gate passed");
+    }
+
+    // Acceptance (non-quick, enough cores): the 1e6-element fused chain must
+    // clear 1.5x at 4 workers.
+    if !quick && std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) >= 4 {
+        assert!(
+            chain_speedup_4v1 > 1.5,
+            "acceptance: fused chain speedup at 4 workers is {chain_speedup_4v1:.2}x (need > 1.5x)"
+        );
     }
 }

@@ -1,51 +1,263 @@
-//! E3 (§5): MLP loss+grad throughput — Myia VM vs Myia+XLA segments vs the
-//! JAX AOT artifact ("performance similar to compiled frameworks such as
-//! TensorFlow, while providing the flexibility of OO frameworks").
+//! E3 (§5): MLP training-step throughput on the Engine/Transform pipeline.
+//!
+//! Three families of arms, all sharing one harness:
+//!
+//! 1. **Training step, thread-scaled** — the `value_and_grad` executable from
+//!    `compile_mlp` driven at intra-op pool sizes 1/2/4/8. The output at every
+//!    pool size is asserted bit-identical to the single-thread run (chunk
+//!    boundaries come from shapes, never from worker count).
+//! 2. **Baseline comparison** — an apples-to-apples no-bias MSE MLP
+//!    (relu/tanh hidden layers, squared-error head) expressed three ways:
+//!    the Myia pipeline (compile once, call many), the operator-overloading
+//!    tape baseline (re-traces every call, §2.1.1), and the static dataflow
+//!    graph baseline (build once, feed per call, §2.2). Losses and gradients
+//!    must agree across all three before anything is timed.
+//!
+//! Results land in `BENCH_train.json` at the repository root. `BENCH_QUICK=1`
+//! shrinks measurement windows for CI.
 
+use myia::baselines::dataflow::DataflowGraph;
+use myia::baselines::tape::{tensor as tape_tensor, Tape, TVal};
 use myia::bench::{black_box, Bencher};
-use myia::coordinator::mlp::{compile_mlp, default_meta, params_value, synth_batch, synth_teacher};
-use myia::runtime::artifacts::MlpArtifacts;
-use myia::runtime::XlaRuntime;
+use myia::coordinator::mlp::{
+    compile_mlp, default_meta, params_value, synth_batch, synth_teacher,
+};
+use myia::coordinator::Engine;
 use myia::tensor::{DType, Rng, Tensor};
-use myia::vm::Value;
+use myia::vm::{pool, Value};
+use std::collections::HashMap;
+
+/// The same model in Myia source: no biases, so the tape and dataflow
+/// baselines (which have exactly matmul/relu/tanh/sub/mul/sum) can express
+/// it op-for-op.
+const MSE_MLP_SRC: &str = "\
+def mlp_mse(params, x, y):
+    w1 = params[0]
+    w2 = params[1]
+    w3 = params[2]
+    h1 = relu(matmul(x, w1))
+    h2 = tanh(matmul(h1, w2))
+    d = matmul(h2, w3) - y
+    return item(sum(d * d))
+";
+
+const THREAD_ARMS: [usize; 4] = [1, 2, 4, 8];
+
+fn harness() -> Bencher {
+    if std::env::var_os("BENCH_QUICK").is_some() {
+        Bencher::fast()
+    } else {
+        Bencher::default()
+    }
+}
+
+struct Row {
+    workload: &'static str,
+    arm: String,
+    threads: usize,
+    median_us: f64,
+}
+
+fn tval_tensor(v: &TVal) -> Tensor {
+    match v {
+        TVal::Tensor(t) => t.clone(),
+        TVal::F64(v) => Tensor::scalar_f64(*v),
+    }
+}
+
+fn assert_close(a: f64, b: f64, what: &str) {
+    let scale = a.abs().max(b.abs()).max(1.0);
+    assert!(
+        (a - b).abs() <= 1e-9 * scale,
+        "{what}: {a} vs {b} disagree beyond tolerance"
+    );
+}
 
 fn main() {
-    println!("=== E3: MLP (64-128-64-10, batch 32) loss+grad throughput ===");
+    println!("=== E3: MLP (64-128-64-10, batch 32) training-step throughput ===");
     let meta = default_meta();
     let mut rng = Rng::new(99);
     let teacher = synth_teacher(&meta, &mut rng);
     let (x, y) = synth_batch(&meta, &mut rng, &teacher);
-    let params_f32 = meta.init_params(11);
-    let params_f64: Vec<Tensor> = params_f32.iter().map(|t| t.cast(DType::F64)).collect();
+    let params: Vec<Tensor> =
+        meta.init_params(11).into_iter().map(|t| t.cast(DType::F64)).collect();
 
-    let mut b = Bencher::default();
+    let mut b = harness();
+    let mut rows: Vec<Row> = Vec::new();
 
-    let (_s1, _l1, grad_vm) = compile_mlp(false).unwrap();
+    // --- arm family 1: training step across intra-op pool sizes ----------
+    let (_engine, _loss, grad_fn) = compile_mlp(false).unwrap();
     let args =
-        || vec![params_value(&params_f64), Value::Tensor(x.clone()), Value::Tensor(y.clone())];
-    let t_vm = b.bench("mlp/loss_and_grad/myia_vm", || {
-        black_box(grad_vm.call(args()).unwrap());
-    });
-
-    let (_s2, _l2, grad_xla) = compile_mlp(true).unwrap();
-    println!("   ({} XLA segments)", grad_xla.metrics.xla_segments);
-    let t_xla = b.bench("mlp/loss_and_grad/myia_xla", || {
-        black_box(grad_xla.call(args()).unwrap());
-    });
-
-    match XlaRuntime::cpu().and_then(|rt| MlpArtifacts::load(&rt, "artifacts")) {
-        Ok(arts) => {
-            let t_jax = b.bench("mlp/loss_and_grad/jax_artifact", || {
-                black_box(arts.loss_and_grads(&params_f32, &x, &y).unwrap());
-            });
-            println!(
-                "\nratios:   vm/jax = {:.2}x   myia+xla/jax = {:.2}x",
-                t_vm.median / t_jax.median,
-                t_xla.median / t_jax.median
-            );
-            println!("CSV,e3_ratio,vm_over_jax,{:.3}", t_vm.median / t_jax.median);
-            println!("CSV,e3_ratio,xla_over_jax,{:.3}", t_xla.median / t_jax.median);
-        }
-        Err(e) => println!("(artifacts unavailable: {e}; run `make artifacts`)"),
+        vec![params_value(&params), Value::Tensor(x.clone()), Value::Tensor(y.clone())];
+    let lanes_before = pool::intra_op_threads();
+    pool::set_intra_op_threads(1);
+    let oracle = grad_fn.call(args.clone()).unwrap();
+    let mut t_by_threads: Vec<(usize, f64)> = Vec::new();
+    for &n in &THREAD_ARMS {
+        pool::set_intra_op_threads(n);
+        let out = grad_fn.call(args.clone()).unwrap();
+        assert!(
+            out.structural_eq(&oracle),
+            "training step at {n} intra-op threads diverged from single-thread run"
+        );
+        let s = b.bench(&format!("train/loss_and_grad/threads{n}"), || {
+            black_box(grad_fn.call(args.clone()).unwrap());
+        });
+        t_by_threads.push((n, s.median));
+        rows.push(Row {
+            workload: "loss_and_grad",
+            arm: format!("threads{n}"),
+            threads: n,
+            median_us: s.median * 1e6,
+        });
     }
+    pool::set_intra_op_threads(lanes_before);
+    let t_at = |n: usize| {
+        t_by_threads.iter().find(|(t, _)| *t == n).map(|(_, s)| *s).unwrap_or(f64::NAN)
+    };
+    let speedup_4v1 = t_at(1) / t_at(4);
+    println!(
+        "loss_and_grad: {:.1}us at 1 thread, {:.1}us at 4 ({speedup_4v1:.2}x)",
+        t_at(1) * 1e6,
+        t_at(4) * 1e6
+    );
+
+    // --- arm family 2: no-bias MSE MLP, myia vs tape vs dataflow ----------
+    let w: Vec<Tensor> = params.iter().step_by(2).cloned().collect(); // w1, w2, w3
+    assert_eq!(w.len(), 3);
+
+    // Myia: compile once, call many.
+    let e = Engine::from_source(MSE_MLP_SRC).unwrap();
+    let mse_fn = e.trace("mlp_mse").unwrap().value_and_grad().compile().unwrap();
+    let margs =
+        vec![params_value(&w), Value::Tensor(x.clone()), Value::Tensor(y.clone())];
+    let (myia_loss, myia_grads) = match mse_fn.call(margs.clone()).unwrap() {
+        Value::Tuple(items) => {
+            let loss = items[0].as_f64().expect("scalar loss");
+            let grads = match &items[1] {
+                Value::Tuple(gs) => gs
+                    .iter()
+                    .map(|g| g.as_tensor().expect("tensor grad").clone())
+                    .collect::<Vec<_>>(),
+                other => panic!("expected gradient tuple, got {other}"),
+            };
+            (loss, grads)
+        }
+        other => panic!("expected (loss, grads), got {other}"),
+    };
+
+    // Tape: the whole forward+backward re-traces on every call.
+    let run_tape = |w: &[Tensor]| -> (f64, Vec<Tensor>) {
+        let tape = Tape::new();
+        let wv: Vec<_> = w.iter().map(|t| tape_tensor(&tape, t.clone())).collect();
+        let xv = tape_tensor(&tape, x.clone());
+        let yv = tape_tensor(&tape, y.clone());
+        let h1 = xv.matmul(&wv[0]).relu();
+        let h2 = h1.matmul(&wv[1]).tanh();
+        let d = h2.matmul(&wv[2]).sub(&yv);
+        let loss = d.mul(&d).sum();
+        let grads = loss.backward().expect("tape backward");
+        let gs = wv.iter().map(|v| tval_tensor(&loss.grad_of(&grads, v))).collect();
+        (loss.value().as_f64().expect("scalar loss"), gs)
+    };
+    let (tape_loss, tape_grads) = run_tape(&w);
+
+    // Dataflow: graph + symbolic adjoint built once, fed per call.
+    let mut g = DataflowGraph::new();
+    let (pw1, pw2, pw3) = (g.placeholder("w1"), g.placeholder("w2"), g.placeholder("w3"));
+    let (px, py) = (g.placeholder("x"), g.placeholder("y"));
+    let m1 = g.matmul(px, pw1);
+    let h1 = g.relu(m1);
+    let m2 = g.matmul(h1, pw2);
+    let h2 = g.tanh(m2);
+    let m3 = g.matmul(h2, pw3);
+    let d = g.sub(m3, py);
+    let dd = g.mul(d, d);
+    let loss = g.sum(dd);
+    let df_grads = g.gradients(loss, &[pw1, pw2, pw3]).expect("dataflow gradients");
+    let outputs = [loss, df_grads[0], df_grads[1], df_grads[2]];
+    let feed: HashMap<String, Tensor> = [
+        ("w1".to_string(), w[0].clone()),
+        ("w2".to_string(), w[1].clone()),
+        ("w3".to_string(), w[2].clone()),
+        ("x".to_string(), x.clone()),
+        ("y".to_string(), y.clone()),
+    ]
+    .into();
+    let df_out = g.run(&outputs, &feed).expect("dataflow run");
+    let df_loss = df_out[0].item().expect("scalar loss");
+
+    // All three systems must describe the same mathematics.
+    assert_close(myia_loss, tape_loss, "myia vs tape loss");
+    assert_close(myia_loss, df_loss, "myia vs dataflow loss");
+    for (i, mg) in myia_grads.iter().enumerate() {
+        let mv = mg.as_f64_vec();
+        for (sys, other) in
+            [("tape", tape_grads[i].as_f64_vec()), ("dataflow", df_out[i + 1].as_f64_vec())]
+        {
+            assert_eq!(mv.len(), other.len(), "w{} grad shape vs {sys}", i + 1);
+            for (a, c) in mv.iter().zip(other.iter()) {
+                assert_close(*a, *c, &format!("w{} grad vs {sys}", i + 1));
+            }
+        }
+    }
+    println!("myia/tape/dataflow agree on loss {myia_loss:.6} and all gradients");
+
+    let s_myia = b.bench("train/mse_nobias/myia", || {
+        black_box(mse_fn.call(margs.clone()).unwrap());
+    });
+    rows.push(Row {
+        workload: "mse_nobias",
+        arm: "myia".to_string(),
+        threads: pool::intra_op_threads(),
+        median_us: s_myia.median * 1e6,
+    });
+    let s_tape = b.bench("train/mse_nobias/tape", || {
+        black_box(run_tape(&w));
+    });
+    rows.push(Row {
+        workload: "mse_nobias",
+        arm: "tape".to_string(),
+        threads: 1,
+        median_us: s_tape.median * 1e6,
+    });
+    let s_df = b.bench("train/mse_nobias/dataflow", || {
+        black_box(g.run(&outputs, &feed).expect("dataflow run"));
+    });
+    rows.push(Row {
+        workload: "mse_nobias",
+        arm: "dataflow".to_string(),
+        threads: 1,
+        median_us: s_df.median * 1e6,
+    });
+    println!(
+        "mse_nobias: myia {:.1}us, tape {:.1}us ({:.2}x), dataflow {:.1}us ({:.2}x)",
+        s_myia.median * 1e6,
+        s_tape.median * 1e6,
+        s_tape.median / s_myia.median,
+        s_df.median * 1e6,
+        s_df.median / s_myia.median
+    );
+
+    // --- trajectory JSON --------------------------------------------------
+    let mut json = String::from("{\n  \"bench\": \"train\",\n  \"identical_across_threads\": true,\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"workload\": \"{}\", \"arm\": \"{}\", \"threads\": {}, \"median_us\": {:.3}}}{}\n",
+            r.workload,
+            r.arm,
+            r.threads,
+            r.median_us,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str(&format!(
+        "  ],\n  \"train_speedup_4v1\": {speedup_4v1:.3},\n  \
+         \"tape_over_myia\": {:.3},\n  \"dataflow_over_myia\": {:.3}\n}}\n",
+        s_tape.median / s_myia.median,
+        s_df.median / s_myia.median
+    ));
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_train.json");
+    std::fs::write(path, json).expect("write BENCH_train.json");
+    println!("wrote {path}");
 }

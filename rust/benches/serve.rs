@@ -13,7 +13,12 @@
 //!   calling the unbatched executable directly (`unbatched`). Each request's
 //!   latency is recorded exactly (no histogram buckets here), yielding
 //!   throughput + p50/p99/max per arm; every response is verified
-//!   bit-identical to the sequential oracle after the clock stops.
+//!   bit-identical to the sequential oracle after the clock stops. At 64
+//!   clients the batcher forms ≥16-example batches, so these arms also
+//!   exercise the pool-sharded vmapped dispatch path end to end.
+//! * **Intra-op scaling arms** — one external thread drives the MLP
+//!   `value_and_grad` executable while the worker pool size sweeps
+//!   `BENCH_THREADS`; the oracle check doubles as the bit-identical gate.
 //!
 //! `BENCH_QUICK=1` (CI) or `BENCH_SMOKE=1` shrinks iteration counts; the
 //! non-quick run additionally asserts the acceptance criterion that batching
@@ -24,7 +29,7 @@ use myia::coordinator::mlp::{self, params_value};
 use myia::coordinator::{Engine, Executable};
 use myia::serve::{FullPolicy, Server, ServerConfig};
 use myia::tensor::{DType, Rng, Tensor};
-use myia::vm::Value;
+use myia::vm::{pool, Value};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -236,6 +241,19 @@ fn main() {
         rows.push(drive("scalar_grad", &scalar_fn, &scalar_args, &scalar_oracle, n, scalar_iters));
     }
 
+    // Intra-op scaling: ONE external thread, the worker pool parallelizes
+    // inside each call (fused chunks, matmul row blocks). `drive`'s oracle
+    // check doubles as the parallel==sequential determinism gate; the row's
+    // `threads` field reports the pool size rather than the client count.
+    let lanes_before = pool::intra_op_threads();
+    for &n in &threads {
+        pool::set_intra_op_threads(n);
+        let mut r = drive("mlp_vgrad_intra_op", &grad_fn, &mlp_args, &mlp_oracle, 1, mlp_iters);
+        r.threads = n;
+        rows.push(r);
+    }
+    pool::set_intra_op_threads(lanes_before);
+
     // Speedups relative to each workload's single-thread row.
     let speedup = |workload: &str| -> (f64, f64) {
         let base = rows
@@ -252,8 +270,10 @@ fn main() {
     };
     let (mlp_base, mlp_speedup) = speedup("mlp_value_and_grad");
     let (scalar_base, scalar_speedup) = speedup("scalar_grad");
+    let (intra_base, intra_speedup) = speedup("mlp_vgrad_intra_op");
     println!("\nmlp_value_and_grad: {mlp_base:.0} calls/s single-thread, {mlp_speedup:.2}x at peak");
     println!("scalar_grad:        {scalar_base:.0} calls/s single-thread, {scalar_speedup:.2}x at peak");
+    println!("mlp_vgrad_intra_op: {intra_base:.0} calls/s at pool size 1, {intra_speedup:.2}x at peak");
 
     // ---- serving arms: batched vs unbatched at 1/8/64 clients ----------
 
@@ -357,7 +377,7 @@ fn main() {
         ));
     }
     json.push_str(&format!(
-        "  ],\n  \"mlp_speedup_8v1\": {mlp_speedup:.3},\n  \"scalar_speedup_8v1\": {scalar_speedup:.3},\n  \"batched_rps_64\": {batched_64:.1},\n  \"unbatched_rps_64\": {unbatched_64:.1},\n  \"batched_beats_unbatched_at_64\": {}\n}}\n",
+        "  ],\n  \"mlp_speedup_8v1\": {mlp_speedup:.3},\n  \"scalar_speedup_8v1\": {scalar_speedup:.3},\n  \"intra_op_speedup\": {intra_speedup:.3},\n  \"batched_rps_64\": {batched_64:.1},\n  \"unbatched_rps_64\": {unbatched_64:.1},\n  \"batched_beats_unbatched_at_64\": {}\n}}\n",
         batched_64 > unbatched_64
     ));
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");

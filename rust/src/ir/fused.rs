@@ -58,8 +58,13 @@ impl FusedOp {
 
 /// Hard caps keeping the VM's fixed-size evaluation stack and the `u8`
 /// input index honest. The fusion pass refuses to build larger groups.
+/// The op budget is sized for the intra-op pool: a longer program means
+/// more arithmetic per memory pass over each output chunk, which is what
+/// makes the parallel fused loop scale — adjoint chains from `grad` often
+/// run past 64 steps, and splitting them would halve the work per element
+/// available to each worker. The stack cap stays small (per-element cost).
 pub const MAX_FUSED_INPUTS: usize = 12;
-pub const MAX_FUSED_OPS: usize = 64;
+pub const MAX_FUSED_OPS: usize = 128;
 pub const MAX_FUSED_STACK: usize = 16;
 
 /// A validated postfix elementwise program.

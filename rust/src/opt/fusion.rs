@@ -236,7 +236,10 @@ impl LocalPass for Fusion {
 /// Members a group may carry. Each member contributes at most four postfix
 /// slots (its op plus up to three leaf pushes), so the budget also bounds
 /// the recursion depth of `collect`/`Builder::emit` — deep chains cannot
-/// overflow the native stack; they fuse in segments instead.
+/// overflow the native stack; they fuse in segments instead. Tracking
+/// `MAX_FUSED_OPS` keeps the group-size heuristic aligned with the pool's
+/// scaling model: bigger kernels raise arithmetic intensity per output
+/// chunk, which is where parallel speedup comes from (see `vm/pool.rs`).
 const MAX_GROUP_MEMBERS: usize = MAX_FUSED_OPS;
 
 /// Grow the group downward from `n`: an input joins when it is fusable,

@@ -24,7 +24,7 @@ use crate::serve::metrics::ServeMetrics;
 use crate::serve::queue::BoundedQueue;
 use crate::tensor::{ops, DType, Tensor};
 use crate::types::AType;
-use crate::vm::Value;
+use crate::vm::{pool, Value};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
@@ -95,22 +95,37 @@ pub(crate) struct BatcherCtx {
 /// first request was picked up, whichever comes first.
 pub(crate) fn worker_loop(ctx: &BatcherCtx) {
     while let Some(first) = ctx.queue.pop_blocking() {
-        let mut batch = vec![first];
-        let deadline = Instant::now() + ctx.max_wait;
-        while batch.len() < ctx.max_batch {
-            match ctx.queue.pop_until(deadline) {
-                Some(req) => batch.push(req),
-                None => break,
-            }
-        }
-        // Safety net: a panic inside tensor/VM code must not strand the
-        // batch's callers on their slots (and must not kill the worker).
-        let slots: Vec<Arc<ResponseSlot>> = batch.iter().map(|r| r.slot.clone()).collect();
+        // Safety net for the WHOLE dequeue→flush window, not just
+        // execution: the registry records every request popped so far, so
+        // a panic anywhere after a pop — deadline arithmetic, gathering,
+        // tensor/VM code — fills the affected slots instead of stranding
+        // their callers forever, and the worker survives to serve the
+        // next batch. `ResponseSlot::fill` is first-write-wins, so
+        // re-filling already-answered slots is harmless.
+        let registry: Mutex<Vec<Arc<ResponseSlot>>> = Mutex::new(vec![first.slot.clone()]);
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut batch = vec![first];
+            // `Instant + Duration` panics on overflow (a huge `max_wait`
+            // means "no deadline"); saturate to an hour instead.
+            let deadline = Instant::now()
+                .checked_add(ctx.max_wait)
+                .unwrap_or_else(|| Instant::now() + std::time::Duration::from_secs(3600));
+            while batch.len() < ctx.max_batch {
+                match ctx.queue.pop_until(deadline) {
+                    Some(req) => {
+                        registry
+                            .lock()
+                            .unwrap_or_else(|p| p.into_inner())
+                            .push(req.slot.clone());
+                        batch.push(req);
+                    }
+                    None => break,
+                }
+            }
             execute_batch(ctx, batch);
         }));
         if outcome.is_err() {
-            for slot in &slots {
+            for slot in registry.lock().unwrap_or_else(|p| p.into_inner()).iter() {
                 slot.fill(Err(ServeError::Exec("panic during batch execution".into())));
             }
         }
@@ -173,10 +188,57 @@ fn call_unbatched(ctx: &BatcherCtx, args: &[Value]) -> Result<Value, ServeError>
     ctx.fallback.call(full).map_err(|e| ServeError::Exec(e.to_string()))
 }
 
-/// The whole batch through the vmapped executable: stack → dispatch →
-/// scatter. Any failure abandons the batched attempt (the caller falls back
+/// The whole batch through the vmapped executable, sharded across the
+/// intra-op pool when large enough to amortize the handoff. Any failure —
+/// in any shard — abandons the batched attempt (the caller falls back
 /// per-example); no partial results escape.
 fn try_batched(ctx: &BatcherCtx, batch: &[Request]) -> Result<Vec<Value>, String> {
+    let shards = shard_sizes(batch.len());
+    if shards.len() < 2 || !pool::parallel_enabled() {
+        return dispatch_shard(ctx, batch);
+    }
+    // Shard boundaries derive from the batch length alone, and batching is
+    // contractually invisible (every example's response is bit-identical
+    // to its sequential result), so shard composition cannot change what
+    // any caller receives — it only changes how many examples share one
+    // vmapped dispatch.
+    let mut results: Vec<Option<Result<Vec<Value>, String>>> = Vec::new();
+    results.resize_with(shards.len(), || None);
+    {
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(shards.len());
+        let mut start = 0usize;
+        for (slot, &size) in results.iter_mut().zip(&shards) {
+            let shard = &batch[start..start + size];
+            start += size;
+            tasks.push(Box::new(move || {
+                *slot = Some(dispatch_shard(ctx, shard));
+            }));
+        }
+        pool::pool().scope_run(tasks);
+    }
+    let mut all = Vec::with_capacity(batch.len());
+    for r in results {
+        all.extend(r.ok_or("sharded dispatch dropped a shard")??);
+    }
+    Ok(all)
+}
+
+/// Deterministic shard partition of `n` examples: about
+/// [`pool::SERVE_SHARD_EXAMPLES`] each, balanced to within one example, and
+/// no split at all below two full shards (a pure function of `n`).
+fn shard_sizes(n: usize) -> Vec<usize> {
+    if n < 2 * pool::SERVE_SHARD_EXAMPLES {
+        return vec![n];
+    }
+    let k = n.div_ceil(pool::SERVE_SHARD_EXAMPLES);
+    let base = n / k;
+    let rem = n % k;
+    (0..k).map(|i| base + usize::from(i < rem)).collect()
+}
+
+/// One shard (or the whole batch) through the vmapped executable:
+/// stack → dispatch → scatter.
+fn dispatch_shard(ctx: &BatcherCtx, batch: &[Request]) -> Result<Vec<Value>, String> {
     let request_arity = ctx.fallback.arity() - ctx.shared.len();
     let mut full = Vec::with_capacity(ctx.shared.len() + request_arity);
     full.extend(ctx.shared.iter().cloned());
@@ -322,6 +384,23 @@ fn unbatch_scalar(slice: Tensor, keep_tensor: bool) -> Result<Value, String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn shard_sizes_are_balanced_and_cover() {
+        use crate::vm::pool::SERVE_SHARD_EXAMPLES as S;
+        // Below two full shards: no split.
+        for n in 0..2 * S {
+            assert_eq!(shard_sizes(n), vec![n]);
+        }
+        for n in (2 * S)..(6 * S + 5) {
+            let sizes = shard_sizes(n);
+            assert!(sizes.len() >= 2, "n={n}");
+            assert_eq!(sizes.iter().sum::<usize>(), n, "n={n}");
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "unbalanced shards for n={n}: {sizes:?}");
+            assert!(*max <= S, "oversized shard for n={n}: {sizes:?}");
+        }
+    }
 
     #[test]
     fn stack_column_scalars_and_tensors() {

@@ -1,16 +1,32 @@
 //! Blocked matrix multiplication.
 //!
 //! The interpreter's fallback matmul kernel — used when the XLA backend is
-//! disabled or unavailable. Row-major `ikj` loop order with a fixed j-block
-//! keeps the inner loop vectorizable by LLVM; this is not MKL, but it is the
-//! honest CPU baseline the paper's VM-vs-compiled comparisons need.
+//! disabled or unavailable. Row-major `ikj` loop order keeps the inner loop
+//! vectorizable by LLVM; this is not MKL, but it is the honest CPU baseline
+//! the paper's VM-vs-compiled comparisons need.
+//!
+//! Kernels are monomorphized over [`Elem`] like the elementwise kernels in
+//! [`super::ops`]: f32×f32 accumulates in f32 (no silent f64 round-trip —
+//! the old kernel materialized two f64 copies, accumulated in f64, and
+//! truncated back), i64×i64 is native wrapping arithmetic, and an operand
+//! whose dtype differs from the promoted target counts into the conversion
+//! telemetry the VM samples into `ExecStats::conversions`.
+//!
+//! Large products run data-parallel on the shared intra-op pool
+//! ([`crate::vm::pool`]): `matmul` splits over fixed-size row blocks and
+//! `batch_matmul` over fixed-size example groups. Each task owns a disjoint
+//! output slice and runs the full `k` reduction for its rows in sequential
+//! order, so parallel results are bit-identical to sequential ones; sizes
+//! below [`pool::MATMUL_PAR_MIN_FLOPS`] bypass the pool entirely.
 
-use super::{terr, Buffer, DType, TResult, Tensor};
+use super::ops::{promote, Elem, NumOp};
+use super::{note_conversion, terr, Buffer, DType, TResult, Tensor};
+use crate::vm::pool;
+use std::borrow::Cow;
 
 /// Matrix product. Supports `[m,k] @ [k,n]`, `[k] @ [k,n]`, `[m,k] @ [k]`
 /// and `[k] @ [k]` (dot product), mirroring NumPy's `matmul` for ranks <= 2.
 pub fn matmul(a: &Tensor, b: &Tensor) -> TResult<Tensor> {
-    let (av, bv) = (a.as_f64_vec(), b.as_f64_vec());
     let (m, k1, lifted_a) = match a.rank() {
         1 => (1, a.shape()[0], true),
         2 => (a.shape()[0], a.shape()[1], false),
@@ -28,7 +44,6 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> TResult<Tensor> {
             b.shape()
         ));
     }
-    let out = matmul_f64(&av, &bv, m, k1, n);
     let mut shape = Vec::new();
     if !lifted_a {
         shape.push(m);
@@ -36,10 +51,11 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> TResult<Tensor> {
     if !lifted_b {
         shape.push(n);
     }
-    let buf = if a.dtype() == DType::F32 && b.dtype() == DType::F32 {
-        Buffer::F32(out.into_iter().map(|x| x as f32).collect())
-    } else {
-        Buffer::F64(out)
+    let buf = match mm_dtype(a, b) {
+        DType::F64 => Buffer::F64(mm_typed::<f64>(a, b, m, k1, n)),
+        DType::F32 => Buffer::F32(mm_typed::<f32>(a, b, m, k1, n)),
+        DType::I64 => Buffer::I64(mm_typed::<i64>(a, b, m, k1, n)),
+        DType::Bool => unreachable!("mm_dtype never yields bool"),
     };
     Tensor::new(shape, buf)
 }
@@ -50,8 +66,8 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> TResult<Tensor> {
 /// (the transform knows this statically and bakes it into the call). The
 /// per-example operands follow the same rank-1/rank-2 lifting rules as
 /// [`matmul`]; an unbatched operand is shared across all examples. Each
-/// example runs through the same blocked `ikj` kernel, so this is a loop of
-/// contiguous [`matmul_f64`] slabs rather than a gather.
+/// example runs through the same blocked `ikj` kernel over a contiguous
+/// slab; example groups are the parallel unit.
 pub fn batch_matmul(a: &Tensor, b: &Tensor, a_batched: bool, b_batched: bool) -> TResult<Tensor> {
     if !a_batched && !b_batched {
         return matmul(a, b);
@@ -93,15 +109,8 @@ pub fn batch_matmul(a: &Tensor, b: &Tensor, a_batched: bool, b_batched: bool) ->
             b.shape()
         ));
     }
-    let (av, bv) = (a.as_f64_vec(), b.as_f64_vec());
     let a_stride = if a_batched { m * k1 } else { 0 };
     let b_stride = if b_batched { k1 * n } else { 0 };
-    let mut out = Vec::with_capacity(batch * m * n);
-    for e in 0..batch {
-        let ae = &av[e * a_stride..e * a_stride + m * k1];
-        let be = &bv[e * b_stride..e * b_stride + k1 * n];
-        out.extend(matmul_f64(ae, be, m, k1, n));
-    }
     let mut shape = vec![batch];
     if !lifted_a {
         shape.push(m);
@@ -109,36 +118,122 @@ pub fn batch_matmul(a: &Tensor, b: &Tensor, a_batched: bool, b_batched: bool) ->
     if !lifted_b {
         shape.push(n);
     }
-    let buf = if a.dtype() == DType::F32 && b.dtype() == DType::F32 {
-        Buffer::F32(out.into_iter().map(|x| x as f32).collect())
-    } else {
-        Buffer::F64(out)
+    let buf = match mm_dtype(a, b) {
+        DType::F64 => Buffer::F64(bmm_typed::<f64>(a, b, batch, m, k1, n, a_stride, b_stride)),
+        DType::F32 => Buffer::F32(bmm_typed::<f32>(a, b, batch, m, k1, n, a_stride, b_stride)),
+        DType::I64 => Buffer::I64(bmm_typed::<i64>(a, b, batch, m, k1, n, a_stride, b_stride)),
+        DType::Bool => unreachable!("mm_dtype never yields bool"),
     };
     Tensor::new(shape, buf)
 }
 
-/// Dense `m×k @ k×n` in f64, ikj order.
-pub fn matmul_f64(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
-    let mut out = vec![0.0f64; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
+/// Result dtype: the typed-kernel promotion rule of `tensor/ops.rs`, with
+/// bool×bool promoted to f64 (matmul over booleans is counting). This also
+/// matches the shape checker's `matmul_rule` for i64 operands, which the
+/// old always-f64 kernel contradicted.
+fn mm_dtype(a: &Tensor, b: &Tensor) -> DType {
+    match promote(a.dtype(), b.dtype()) {
+        DType::Bool => DType::F64,
+        dt => dt,
+    }
+}
+
+/// Borrow an operand's elements in the target type, counting a conversion
+/// when its dtype differs (the typed-kernel guarantee: matching dtypes are
+/// borrowed, never copied).
+fn read_as<T: Elem>(t: &Tensor) -> Cow<'_, [T]> {
+    if t.dtype() != T::DTYPE {
+        note_conversion();
+    }
+    T::read(t)
+}
+
+fn mm_typed<T: Elem + Send + Sync>(a: &Tensor, b: &Tensor, m: usize, k: usize, n: usize) -> Vec<T> {
+    let av = read_as::<T>(a);
+    let bv = read_as::<T>(b);
+    matmul_elem(&av, &bv, m, k, n)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn bmm_typed<T: Elem + Send + Sync>(
+    a: &Tensor,
+    b: &Tensor,
+    batch: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a_stride: usize,
+    b_stride: usize,
+) -> Vec<T> {
+    let av = read_as::<T>(a);
+    let bv = read_as::<T>(b);
+    let per = m * n;
+    let mut out = vec![T::zero(); batch * per];
+    let run_examples = |piece: &mut [T], base: usize| {
+        let e0 = base / per;
+        for (j, opiece) in piece.chunks_mut(per).enumerate() {
+            let e = e0 + j;
+            let ae = &av[e * a_stride..e * a_stride + m * k];
+            let be = &bv[e * b_stride..e * b_stride + k * n];
+            mm_block(opiece, ae, be, k, n);
+        }
+    };
+    if batch < 2 || batch * m * k * n < pool::MATMUL_PAR_MIN_FLOPS {
+        run_examples(&mut out, 0);
+    } else {
+        // Examples per task: enough that each task clears the sequential-
+        // bypass amount of work. Derived from shape only — deterministic.
+        let group = (pool::MATMUL_PAR_MIN_FLOPS / (m * k * n).max(1)).max(1);
+        pool::for_chunks_mut(&mut out, group * per, run_examples);
+    }
+    out
+}
+
+/// Dense `m×k @ k×n`, ikj order, parallel over fixed row blocks.
+fn matmul_elem<T: Elem + Send + Sync>(a: &[T], b: &[T], m: usize, k: usize, n: usize) -> Vec<T> {
+    let mut out = vec![T::zero(); m * n];
+    if m * k * n < pool::MATMUL_PAR_MIN_FLOPS {
+        mm_block(&mut out, a, b, k, n);
+    } else {
+        // Chunk size is a multiple of `n`, so every piece is whole rows.
+        pool::for_chunks_mut(&mut out, pool::MATMUL_ROW_CHUNK * n, |piece, base| {
+            let r0 = base / n;
+            let rows = piece.len() / n;
+            mm_block(piece, &a[r0 * k..(r0 + rows) * k], b, k, n);
+        });
+    }
+    out
+}
+
+/// `rows×k @ k×n` into `out_rows` (`out_rows.len() / n` rows of `a_rows`),
+/// ikj order with zero-skip. Each output row's `k` reduction runs here in
+/// full, in fixed order — row blocks are the only parallel split — so
+/// chunked and sequential execution are bit-identical.
+fn mm_block<T: Elem>(out_rows: &mut [T], a_rows: &[T], b: &[T], k: usize, n: usize) {
+    let zero = T::zero();
+    for (orow, arow) in out_rows.chunks_mut(n).zip(a_rows.chunks(k)) {
         for (p, &ap) in arow.iter().enumerate() {
-            if ap == 0.0 {
+            if ap == zero {
                 continue;
             }
             let brow = &b[p * n..(p + 1) * n];
             for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
-                *o += ap * bv;
+                *o = T::bin(NumOp::Add, *o, T::bin(NumOp::Mul, ap, bv));
             }
         }
     }
-    out
+}
+
+/// Dense `m×k @ k×n` in f64, ikj order. Retained entry point for callers
+/// that already hold f64 slices (tests, baselines).
+pub fn matmul_f64(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    matmul_elem(a, b, m, k, n)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::conversion_count;
 
     fn t(v: &[f64], s: &[usize]) -> Tensor {
         Tensor::from_f64_shaped(v.to_vec(), s.to_vec()).unwrap()
@@ -233,11 +328,97 @@ mod tests {
     }
 
     #[test]
-    fn f32_preserved() {
+    fn f32_preserved_without_conversion() {
         let a = Tensor::from_f32(&[1.0, 2.0]).reshape(&[1, 2]).unwrap();
         let b = Tensor::from_f32(&[3.0, 4.0]).reshape(&[2, 1]).unwrap();
+        let before = conversion_count();
         let c = matmul(&a, &b).unwrap();
+        // The honest f32 kernel borrows both operands — no f64 round-trip.
+        // (Asserted before as_f64_vec below, which itself counts.)
+        assert_eq!(conversion_count(), before, "f32 matmul must not convert");
         assert_eq!(c.dtype(), DType::F32);
         assert_eq!(c.as_f64_vec(), vec![11.0]);
+    }
+
+    #[test]
+    fn f32_accumulates_in_f32() {
+        // 1e8 + 1 is representable in f64 but rounds to 1e8 in f32: the
+        // old truncate-from-f64 kernel returned the f64 sum narrowed at
+        // the end, the honest kernel accumulates in f32 throughout.
+        let a = Tensor::from_f32(&[1e8, 1.0]).reshape(&[1, 2]).unwrap();
+        let b = Tensor::from_f32(&[1.0, 1.0]).reshape(&[2, 1]).unwrap();
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.dtype(), DType::F32);
+        let got = match c.buffer() {
+            Buffer::F32(v) => v[0],
+            other => panic!("expected f32 buffer, got {other:?}"),
+        };
+        assert_eq!(got, 1e8f32 + 1.0f32); // == 1e8: f32 accumulation
+    }
+
+    #[test]
+    fn i64_matmul_is_native_and_counts_conversions() {
+        // Exact beyond 2^53: impossible through an f64 round-trip.
+        let big = (1i64 << 60) + 3;
+        let a = Tensor::from_i64_shaped(vec![big, 1], vec![1, 2]).unwrap();
+        let b = Tensor::from_i64_shaped(vec![1, 0], vec![2, 1]).unwrap();
+        let before = conversion_count();
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.dtype(), DType::I64);
+        assert_eq!(conversion_count(), before, "i64 matmul must not convert");
+        let got = match c.buffer() {
+            Buffer::I64(v) => v[0],
+            other => panic!("expected i64 buffer, got {other:?}"),
+        };
+        assert_eq!(got, big);
+        // Mixed i64 × f64 promotes to f64 and counts the i64 conversion.
+        let f = t(&[1.0, 0.0], &[2, 1]);
+        let ib = Tensor::from_i64_shaped(vec![2, 3], vec![1, 2]).unwrap();
+        let before = conversion_count();
+        let c2 = matmul(&ib, &f).unwrap();
+        assert_eq!(conversion_count(), before + 1, "one converted operand");
+        assert_eq!(c2.dtype(), DType::F64);
+        assert_eq!(c2.as_f64_vec(), vec![2.0]);
+    }
+
+    #[test]
+    fn parallel_row_blocks_match_sequential() {
+        let _g = pool::test_guard();
+        let prev = pool::intra_op_threads();
+        // Above MATMUL_PAR_MIN_FLOPS, with m not a multiple of the row
+        // chunk so the ragged tail block is exercised.
+        let (m, k, n) = (67, 48, 64);
+        let av: Vec<f64> = (0..m * k).map(|i| ((i * 37 % 101) as f64 - 50.0) * 0.1).collect();
+        let bv: Vec<f64> = (0..k * n).map(|i| ((i * 53 % 97) as f64 - 48.0) * 0.1).collect();
+        let a = t(&av, &[m, k]);
+        let b = t(&bv, &[k, n]);
+        let run = |lanes: usize| {
+            pool::set_intra_op_threads(lanes);
+            matmul(&a, &b).unwrap().as_f64_vec()
+        };
+        let seq = run(1);
+        for lanes in [2, 8] {
+            let par = run(lanes);
+            let same = seq.iter().zip(&par).all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(same, "matmul differs at {lanes} lanes");
+        }
+        // batch_matmul grouping too: [B,m,k] @ [k,n] with a ragged group.
+        let batch = 9;
+        let ab = Tensor::from_f64_shaped(
+            (0..batch * m * k).map(|i| ((i * 29 % 89) as f64 - 44.0) * 0.1).collect(),
+            vec![batch, m, k],
+        )
+        .unwrap();
+        let run_b = |lanes: usize| {
+            pool::set_intra_op_threads(lanes);
+            batch_matmul(&ab, &b, true, false).unwrap().as_f64_vec()
+        };
+        let seq = run_b(1);
+        for lanes in [2, 8] {
+            let par = run_b(lanes);
+            let same = seq.iter().zip(&par).all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(same, "batch_matmul differs at {lanes} lanes");
+        }
+        pool::set_intra_op_threads(prev);
     }
 }

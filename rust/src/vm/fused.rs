@@ -19,7 +19,17 @@
 //! The output buffer is stolen from a dying same-shape/same-dtype leaf when
 //! one is uniquely owned (the caller moves dying registers into `args`, so
 //! Arc uniqueness is an exact aliasing guard).
+//!
+//! Large index spaces run data-parallel on the shared intra-op pool
+//! ([`super::pool`]): the output is split into fixed-size contiguous chunks
+//! (boundaries derive from the element count alone, never the thread
+//! count), each task writes a disjoint `&mut` slice, and element `k` reads
+//! only leaf index `k` — including the stolen-for-output leaf, whose chunk
+//! partition coincides with the output's because stealing requires shape
+//! equality. Results are therefore bit-identical to the sequential loop at
+//! every pool size.
 
+use super::pool;
 use super::prims::eval_prim_inplace;
 use super::value::Value;
 use crate::ir::{FusedExpr, FusedOp, Prim, MAX_FUSED_STACK};
@@ -189,8 +199,9 @@ fn simulate(expr: &FusedExpr, leaves: &[Value]) -> Option<(Vec<usize>, DType)> {
 /// One leaf of the monomorphized loop: tensor leaves go through the same
 /// broadcast reader the unfused typed kernels use ([`Rd`] — borrowed when
 /// the dtype matches, converted/index-mapped otherwise); scalar `Value`s
-/// splat; the stolen-for-output leaf reads back from `out` (the value at
-/// `k` is overwritten only after every reader of index `k` ran).
+/// splat; the stolen-for-output leaf reads the current value of output
+/// cell `k` (`cur` — passed in by the loop before it overwrites the cell,
+/// so chunked tasks only ever touch their own slice).
 enum Leaf<'a, T: Elem> {
     Rd(Rd<'a, T>),
     Splat(T),
@@ -209,16 +220,16 @@ impl<'a, T: Elem> Leaf<'a, T> {
     }
 
     #[inline]
-    fn get(&self, out: &[T], k: usize) -> T {
+    fn get(&self, cur: T, k: usize) -> T {
         match self {
             Leaf::Rd(r) => r.get(k),
             Leaf::Splat(v) => *v,
-            Leaf::FromOut => out[k],
+            Leaf::FromOut => cur,
         }
     }
 }
 
-fn run_typed<T: Elem>(
+fn run_typed<T: Elem + Send + Sync>(
     expr: &FusedExpr,
     leaves: &mut [Value],
     out_shape: Vec<usize>,
@@ -260,41 +271,54 @@ fn run_typed<T: Elem>(
         .map(|(i, v)| if reused == Some(i) { Leaf::FromOut } else { Leaf::new(v, &out_shape) })
         .collect();
 
-    let mut stack = [T::zero(); MAX_FUSED_STACK];
-    for k in 0..numel {
-        let mut sp = 0usize;
-        for op in &expr.ops {
-            match op {
-                FusedOp::Input(i) => {
-                    stack[sp] = accessors[*i as usize].get(&out, k);
-                    sp += 1;
+    // The per-chunk body: identical to the sequential loop over `0..numel`
+    // restricted to `[base, base + piece.len())`. Each output cell is read
+    // (the stolen leaf's `cur`) and written exactly once, by exactly one
+    // task, so chunked execution is bit-identical to sequential.
+    let exec_chunk = |piece: &mut [T], base: usize| {
+        let mut stack = [T::zero(); MAX_FUSED_STACK];
+        for (j, cell) in piece.iter_mut().enumerate() {
+            let k = base + j;
+            let cur = *cell;
+            let mut sp = 0usize;
+            for op in &expr.ops {
+                match op {
+                    FusedOp::Input(i) => {
+                        stack[sp] = accessors[*i as usize].get(cur, k);
+                        sp += 1;
+                    }
+                    FusedOp::ConstF64(v) => {
+                        stack[sp] = T::from_f64(*v);
+                        sp += 1;
+                    }
+                    FusedOp::ConstI64(v) => {
+                        stack[sp] = T::from_f64(*v as f64);
+                        sp += 1;
+                    }
+                    FusedOp::Un(p) => {
+                        let op = un_op_of(*p).expect("validated by simulate");
+                        stack[sp - 1] = T::un(op, stack[sp - 1]);
+                    }
+                    FusedOp::Bin(p) => {
+                        let op = num_op_of(*p).expect("validated by simulate");
+                        sp -= 1;
+                        stack[sp - 1] = T::bin(op, stack[sp - 1], stack[sp]);
+                    }
+                    FusedOp::Where => {
+                        sp -= 2;
+                        let c = stack[sp - 1];
+                        stack[sp - 1] = if c.is_truthy() { stack[sp] } else { stack[sp + 1] };
+                    }
+                    FusedOp::BroadcastTo(_) => {} // shape-only; value unchanged
                 }
-                FusedOp::ConstF64(v) => {
-                    stack[sp] = T::from_f64(*v);
-                    sp += 1;
-                }
-                FusedOp::ConstI64(v) => {
-                    stack[sp] = T::from_f64(*v as f64);
-                    sp += 1;
-                }
-                FusedOp::Un(p) => {
-                    let op = un_op_of(*p).expect("validated by simulate");
-                    stack[sp - 1] = T::un(op, stack[sp - 1]);
-                }
-                FusedOp::Bin(p) => {
-                    let op = num_op_of(*p).expect("validated by simulate");
-                    sp -= 1;
-                    stack[sp - 1] = T::bin(op, stack[sp - 1], stack[sp]);
-                }
-                FusedOp::Where => {
-                    sp -= 2;
-                    let c = stack[sp - 1];
-                    stack[sp - 1] = if c.is_truthy() { stack[sp] } else { stack[sp + 1] };
-                }
-                FusedOp::BroadcastTo(_) => {} // shape-only; value unchanged
             }
+            *cell = stack[0];
         }
-        out[k] = stack[0];
+    };
+    if numel < pool::FUSED_PAR_MIN_ELEMS {
+        exec_chunk(&mut out, 0);
+    } else {
+        pool::for_chunks_mut(&mut out, pool::FUSED_CHUNK_ELEMS, exec_chunk);
     }
 
     let saved = expr.interior_allocs() + u64::from(reused.is_some());
@@ -495,5 +519,40 @@ mod tests {
         let got = out.as_tensor().unwrap();
         assert_eq!(got.shape(), &[2, 3]);
         assert_eq!(got.as_f64_vec(), vec![2., 4., 6., 2., 4., 6.]);
+    }
+
+    #[test]
+    fn chunked_parallel_loop_is_bit_identical() {
+        let _g = pool::test_guard();
+        let prev = pool::intra_op_threads();
+        // Big enough to cross FUSED_PAR_MIN_ELEMS with several chunks, and
+        // not chunk-aligned so the ragged tail is exercised.
+        let n = 3 * pool::FUSED_CHUNK_ELEMS + 17;
+        let xs: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        let ops = vec![
+            F::Input(0),
+            F::Un(Prim::Tanh),
+            F::Input(0),
+            F::Bin(Prim::Mul),
+            F::ConstF64(0.5),
+            F::Bin(Prim::Add),
+        ];
+        let run = |lanes: usize| {
+            pool::set_intra_op_threads(lanes);
+            // A uniquely-owned leaf: the kernel steals it for the output,
+            // so the chunked FromOut read path is exercised too.
+            let mut args =
+                vec![fused(1, ops.clone()), Value::Tensor(Tensor::from_f64(&xs))];
+            let (out, saved) = eval_fused(&mut args).unwrap();
+            assert!(saved >= 1, "dying unique leaf must be reused");
+            out.as_tensor().unwrap().as_f64_vec()
+        };
+        let seq = run(1);
+        for lanes in [2, 8] {
+            let par = run(lanes);
+            let same = seq.iter().zip(&par).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "fused loop differs at {lanes} lanes");
+        }
+        pool::set_intra_op_threads(prev);
     }
 }

@@ -10,6 +10,7 @@
 pub mod compile;
 pub mod exec;
 pub mod fused;
+pub mod pool;
 pub mod prims;
 pub mod value;
 

@@ -1,0 +1,409 @@
+//! Shared intra-op worker pool.
+//!
+//! One process-wide, lazily-started pool (std-only: `std::thread` +
+//! `Mutex`/`Condvar`) executes the data-parallel regions of the three hot
+//! loops — fused elementwise kernels ([`crate::vm::fused`]), the blocked
+//! matmul ([`crate::tensor::matmul`]), and the serve batcher's sharded
+//! vmapped dispatch ([`crate::serve`]). The IR is purely functional, so a
+//! kernel's index space has no cross-iteration dependences and can be split
+//! freely; the pool's job is to do that split *deterministically*.
+//!
+//! # Determinism contract
+//!
+//! Parallel execution is bit-identical to sequential execution, by
+//! construction:
+//!
+//! * **Chunk boundaries derive only from shape.** Every split uses fixed
+//!   chunk sizes (consts below) applied to the output's element count —
+//!   never the live thread count — so the partition is a pure function of
+//!   the tensor shapes.
+//! * **Disjoint writes.** Each task owns a contiguous `&mut` slice of one
+//!   pre-allocated output buffer; there is no shared accumulator.
+//! * **Per-chunk sequential reduction.** Reductions (the matmul `k` loop)
+//!   run entirely inside one task in the same order as the sequential
+//!   kernel; chunks never split a reduction, so there is no combine step
+//!   whose association could vary.
+//! * **Small-size bypass.** Index spaces below the thresholds run inline on
+//!   the calling thread — microscopic tensors never pay handoff latency,
+//!   and (trivially) keep sequential results.
+//!
+//! # Sizing
+//!
+//! The pool holds `intra_op_threads() - 1` workers (the caller is the
+//! remaining lane). The initial size comes from the `MYIA_THREADS`
+//! environment variable when set (clamped to `[1, MAX_THREADS]`), else
+//! `std::thread::available_parallelism()`. Benches and tests resize at
+//! runtime with [`set_intra_op_threads`]; shrinking parks the surplus
+//! workers rather than joining them.
+//!
+//! # Scheduling
+//!
+//! [`Pool::scope_run`] enqueues a batch of borrowing closures and then the
+//! *caller helps*: it drains the shared queue until empty and finally waits
+//! on a latch for its own tasks. Every queued task is executed by someone
+//! (a worker or the helping caller), so the scheme cannot deadlock even
+//! with zero workers. Nested data-parallel regions (a fused kernel inside a
+//! sharded serve batch, say) run inline — a thread-local flag marks pool
+//! tasks, and [`parallel_enabled`] returns false inside one — which bounds
+//! the pool's working set and avoids oversubscription.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Elements per fused-loop chunk (and the unit the matmul/serve splits are
+/// scaled against). Boundaries are `k * FUSED_CHUNK_ELEMS`, a pure function
+/// of the output element count.
+pub const FUSED_CHUNK_ELEMS: usize = 16 * 1024;
+
+/// Fused loops with fewer output elements than this run inline (a single
+/// chunk would gain nothing; two tiny chunks would pay handoff latency).
+pub const FUSED_PAR_MIN_ELEMS: usize = 2 * FUSED_CHUNK_ELEMS;
+
+/// Output rows per matmul task.
+pub const MATMUL_ROW_CHUNK: usize = 8;
+
+/// `m * k * n` below which a matmul runs inline. Also the per-task floor
+/// `batch_matmul` uses when grouping examples.
+pub const MATMUL_PAR_MIN_FLOPS: usize = 128 * 1024;
+
+/// Examples per serve-batcher shard.
+pub const SERVE_SHARD_EXAMPLES: usize = 8;
+
+/// Hard cap on pool size; `MYIA_THREADS` and [`set_intra_op_threads`] are
+/// clamped to it.
+pub const MAX_THREADS: usize = 64;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Completion latch for one `scope_run` batch.
+struct Latch {
+    state: Mutex<(usize, usize)>, // (remaining, panicked)
+    all_done: Condvar,
+}
+
+impl Latch {
+    fn new(remaining: usize) -> Arc<Latch> {
+        Arc::new(Latch { state: Mutex::new((remaining, 0)), all_done: Condvar::new() })
+    }
+
+    fn done(&self, panicked: bool) {
+        let mut st = self.state.lock().expect("pool latch poisoned");
+        st.0 -= 1;
+        if panicked {
+            st.1 += 1;
+        }
+        if st.0 == 0 {
+            self.all_done.notify_all();
+        }
+    }
+
+    /// Block until every task has settled; returns how many panicked.
+    fn wait(&self) -> usize {
+        let mut st = self.state.lock().expect("pool latch poisoned");
+        while st.0 > 0 {
+            st = self.all_done.wait(st).expect("pool latch poisoned");
+        }
+        st.1
+    }
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    work: Condvar,
+    /// Current lane limit (callers count as one lane); workers with index
+    /// `>= limit - 1` park until the limit grows again.
+    limit: AtomicUsize,
+}
+
+/// The process-wide worker pool. Obtain it with [`pool`].
+pub struct Pool {
+    shared: Arc<Shared>,
+    /// Workers spawned so far (monotone; shrinking parks, never joins).
+    spawned: Mutex<usize>,
+}
+
+thread_local! {
+    /// True while this thread is executing a pool task; nested regions see
+    /// it via [`parallel_enabled`] and run inline.
+    static IN_POOL_TASK: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Parse a `MYIA_THREADS`-style override against a fallback lane count.
+/// Zero, negatives, and garbage fall back; everything clamps to
+/// [`MAX_THREADS`].
+fn parse_threads(var: Option<&str>, fallback: usize) -> usize {
+    match var.and_then(|s| s.trim().parse::<usize>().ok()) {
+        Some(n) if n >= 1 => n.min(MAX_THREADS),
+        _ => fallback.clamp(1, MAX_THREADS),
+    }
+}
+
+fn initial_threads() -> usize {
+    let fallback = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let var = std::env::var("MYIA_THREADS").ok();
+    parse_threads(var.as_deref(), fallback)
+}
+
+/// The shared pool (created, but with no threads spawned, on first use;
+/// workers start lazily on the first parallel region).
+pub fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool {
+        shared: Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            work: Condvar::new(),
+            limit: AtomicUsize::new(initial_threads()),
+        }),
+        spawned: Mutex::new(0),
+    })
+}
+
+/// Current lane limit (1 = sequential).
+pub fn intra_op_threads() -> usize {
+    pool().shared.limit.load(Ordering::Relaxed)
+}
+
+/// Resize the pool at runtime (benches and the determinism suite sweep 1,
+/// 2, 8 lanes). Results are unaffected — chunking never consults this.
+pub fn set_intra_op_threads(n: usize) {
+    let p = pool();
+    let n = n.clamp(1, MAX_THREADS);
+    p.shared.limit.store(n, Ordering::Relaxed);
+    p.ensure_workers(n);
+    // Wake parked workers whose index just became active.
+    p.shared.work.notify_all();
+}
+
+/// True when a data-parallel region would actually fan out: more than one
+/// lane, and not already inside a pool task (nested regions run inline).
+pub fn parallel_enabled() -> bool {
+    intra_op_threads() > 1 && !IN_POOL_TASK.with(|f| f.get())
+}
+
+/// Pop one queued job. A helper (rather than an inline `while let`) so the
+/// queue guard is provably dropped before the job runs.
+fn pop_job(shared: &Shared) -> Option<Job> {
+    shared.queue.lock().expect("pool queue poisoned").pop_front()
+}
+
+fn run_job(job: Job) {
+    IN_POOL_TASK.with(|f| {
+        let prev = f.get();
+        f.set(true);
+        // Jobs never unwind: `scope_run` wraps each task in `catch_unwind`.
+        job();
+        f.set(prev);
+    });
+}
+
+fn worker(shared: Arc<Shared>, index: usize) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().expect("pool queue poisoned");
+            loop {
+                if index + 1 < shared.limit.load(Ordering::Relaxed) {
+                    if let Some(j) = q.pop_front() {
+                        break j;
+                    }
+                }
+                q = shared.work.wait(q).expect("pool queue poisoned");
+            }
+        };
+        run_job(job);
+    }
+}
+
+impl Pool {
+    fn ensure_workers(&self, limit: usize) {
+        let want = limit.saturating_sub(1);
+        let mut spawned = self.spawned.lock().expect("pool spawn registry poisoned");
+        while *spawned < want {
+            let index = *spawned;
+            let shared = Arc::clone(&self.shared);
+            std::thread::Builder::new()
+                .name(format!("myia-intra-op-{index}"))
+                .spawn(move || worker(shared, index))
+                .expect("spawn intra-op worker");
+            *spawned += 1;
+        }
+    }
+
+    /// Run `tasks` to completion across the pool. The calling thread helps
+    /// drain the queue, so completion never depends on workers existing.
+    /// Panics (after every task has settled — no slice is left mid-write)
+    /// if any task panicked.
+    pub fn scope_run<'scope>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        if tasks.len() == 1 || !parallel_enabled() {
+            for t in tasks {
+                t();
+            }
+            return;
+        }
+        self.ensure_workers(self.shared.limit.load(Ordering::Relaxed));
+        let latch = Latch::new(tasks.len());
+        {
+            let mut q = self.shared.queue.lock().expect("pool queue poisoned");
+            for t in tasks {
+                // SAFETY: every task settles before `scope_run` returns —
+                // the latch below counts all of them down, and we wait on
+                // it — so borrows captured by the task cannot outlive the
+                // caller's frame. The erased lifetime is never observable.
+                let t: Box<dyn FnOnce() + Send + 'static> = unsafe {
+                    std::mem::transmute::<
+                        Box<dyn FnOnce() + Send + 'scope>,
+                        Box<dyn FnOnce() + Send + 'static>,
+                    >(t)
+                };
+                let latch = Arc::clone(&latch);
+                q.push_back(Box::new(move || {
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(t));
+                    latch.done(r.is_err());
+                }));
+            }
+        }
+        self.shared.work.notify_all();
+        // Help: run queued jobs (ours or a concurrent scope's — either is
+        // progress) until the queue is empty.
+        while let Some(job) = pop_job(&self.shared) {
+            run_job(job);
+        }
+        let panicked = latch.wait();
+        if panicked > 0 {
+            panic!("{panicked} intra-op pool task(s) panicked");
+        }
+    }
+}
+
+/// Split `data` into fixed `chunk`-element pieces (boundaries depend only
+/// on `data.len()` and `chunk` — never on thread count) and run
+/// `f(piece, base_offset)` for each across the pool. Runs inline when
+/// there is a single piece or parallelism is off.
+pub fn for_chunks_mut<T, F>(data: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(&mut [T], usize) + Sync,
+{
+    assert!(chunk > 0, "pool chunk size must be positive");
+    if data.is_empty() {
+        return;
+    }
+    if data.len() <= chunk || !parallel_enabled() {
+        f(data, 0);
+        return;
+    }
+    let fr = &f;
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = data
+        .chunks_mut(chunk)
+        .enumerate()
+        .map(|(i, piece)| Box::new(move || fr(piece, i * chunk)) as Box<dyn FnOnce() + Send + '_>)
+        .collect();
+    pool().scope_run(tasks);
+}
+
+/// Pool-size mutations are process-global; in-crate tests that resize the
+/// pool hold this to serialize against each other.
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static GUARD: Mutex<()> = Mutex::new(());
+    GUARD.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        test_guard()
+    }
+
+    #[test]
+    fn parse_threads_override_and_fallback() {
+        assert_eq!(parse_threads(Some("4"), 8), 4);
+        assert_eq!(parse_threads(Some(" 2 "), 8), 2);
+        assert_eq!(parse_threads(Some("0"), 8), 8); // zero falls back
+        assert_eq!(parse_threads(Some("nope"), 8), 8);
+        assert_eq!(parse_threads(None, 8), 8);
+        assert_eq!(parse_threads(Some("9999"), 8), MAX_THREADS);
+        assert_eq!(parse_threads(None, 0), 1); // fallback itself clamps
+    }
+
+    #[test]
+    fn chunked_fill_covers_every_index_once() {
+        let _g = lock();
+        let prev = intra_op_threads();
+        for lanes in [1, 2, 8] {
+            set_intra_op_threads(lanes);
+            let mut data = vec![0u32; 10_000];
+            for_chunks_mut(&mut data, 1024, |piece, base| {
+                for (j, cell) in piece.iter_mut().enumerate() {
+                    *cell += (base + j) as u32;
+                }
+            });
+            for (k, v) in data.iter().enumerate() {
+                assert_eq!(*v, k as u32, "index {k} at {lanes} lanes");
+            }
+        }
+        set_intra_op_threads(prev);
+    }
+
+    #[test]
+    fn scope_run_runs_every_task_and_propagates_panics() {
+        let _g = lock();
+        let prev = intra_op_threads();
+        set_intra_op_threads(4);
+        let hits = AtomicU64::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..32)
+            .map(|_| {
+                Box::new(|| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool().scope_run(tasks);
+        assert_eq!(hits.load(Ordering::Relaxed), 32);
+
+        let survivors = AtomicU64::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+            .map(|i| {
+                let survivors = &survivors;
+                Box::new(move || {
+                    if i == 3 {
+                        panic!("task boom");
+                    }
+                    survivors.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool().scope_run(tasks);
+        }));
+        assert!(r.is_err(), "panic must propagate to the caller");
+        // All non-panicking tasks still settled before the propagation.
+        assert_eq!(survivors.load(Ordering::Relaxed), 7);
+        set_intra_op_threads(prev);
+    }
+
+    #[test]
+    fn nested_regions_run_inline() {
+        let _g = lock();
+        let prev = intra_op_threads();
+        set_intra_op_threads(4);
+        let mut outer = vec![0u8; 4 * FUSED_CHUNK_ELEMS];
+        for_chunks_mut(&mut outer, FUSED_CHUNK_ELEMS, |piece, _| {
+            assert!(!parallel_enabled(), "nested region must be inline");
+            let mut inner = vec![0u8; 8];
+            for_chunks_mut(&mut inner, 2, |p, _| {
+                for c in p.iter_mut() {
+                    *c = 1;
+                }
+            });
+            piece[0] = inner.iter().sum();
+        });
+        set_intra_op_threads(prev);
+    }
+}

@@ -1,0 +1,224 @@
+//! Determinism of the intra-op worker pool (PR 7 acceptance).
+//!
+//! The pool's contract is *bit-identical results at every pool size*: chunk
+//! boundaries are a pure function of shapes, reductions within a chunk stay
+//! sequential, and the matmul k-loop is never split. This suite drives
+//! randomly generated programs (via the in-crate `ptest` substrate, pinned
+//! seeds) through forward execution, `grad`, and `grad`-then-`vmap` at pool
+//! sizes 1, 2, and 8, comparing raw f64 bit patterns — plus a serving-style
+//! test where 8 external threads hammer one `Arc<Executable>` while the
+//! pool parallelizes inside every call.
+//!
+//! CI runs this binary twice: once normally and once with `MYIA_THREADS=1`
+//! to cover the env-var initialization path end to end (the resize APIs
+//! must still work from that starting point).
+
+use myia::coordinator::mlp::{self, params_value};
+use myia::coordinator::Engine;
+use myia::opt::PassSet;
+use myia::ptest;
+use myia::tensor::{DType, Rng, Tensor};
+use myia::vm::{pool, Value};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Pool size is process-global; every test here serializes on this lock and
+/// restores the previous size on drop, so tests cannot observe each other's
+/// resizes regardless of execution order.
+fn lock() -> MutexGuard<'static, ()> {
+    static L: OnceLock<Mutex<()>> = OnceLock::new();
+    L.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|p| p.into_inner())
+}
+
+struct RestoreSize {
+    prev: usize,
+}
+
+impl RestoreSize {
+    fn new() -> RestoreSize {
+        RestoreSize { prev: pool::intra_op_threads() }
+    }
+}
+
+impl Drop for RestoreSize {
+    fn drop(&mut self) {
+        pool::set_intra_op_threads(self.prev);
+    }
+}
+
+const POOL_SIZES: [usize; 3] = [1, 2, 8];
+
+/// Flatten a result to raw bit patterns (NaN-safe equality).
+fn value_bits(v: &Value, out: &mut Vec<u64>) -> Result<(), String> {
+    match v {
+        Value::F64(x) => {
+            out.push(x.to_bits());
+            Ok(())
+        }
+        Value::Tensor(t) => {
+            for x in t.as_f64_vec() {
+                out.push(x.to_bits());
+            }
+            Ok(())
+        }
+        Value::Tuple(items) => {
+            for i in items.iter() {
+                value_bits(i, out)?;
+            }
+            Ok(())
+        }
+        Value::ZeroT => {
+            out.push(0x5Eed_2e20); // stable sentinel for the symbolic zero
+            Ok(())
+        }
+        other => Err(format!("unexpected result kind {other}")),
+    }
+}
+
+/// Run `exe` once per pool size and require every run to reproduce the
+/// size-1 run bit for bit.
+fn assert_identical_across_sizes(
+    exe: &myia::coordinator::Executable,
+    args: &[Value],
+    what: &str,
+) -> Result<(), String> {
+    let mut reference: Option<Vec<u64>> = None;
+    for &n in &POOL_SIZES {
+        pool::set_intra_op_threads(n);
+        let out = exe.call(args.to_vec()).map_err(|e| format!("{what}: {e}"))?;
+        let mut bits = Vec::new();
+        value_bits(&out, &mut bits)?;
+        match &reference {
+            None => reference = Some(bits),
+            Some(want) => {
+                if *want != bits {
+                    return Err(format!(
+                        "{what}: result at pool size {n} differs from pool size 1"
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn forward_is_bit_identical_across_pool_sizes() {
+    let _g = lock();
+    let _r = RestoreSize::new();
+    // 40_000 elements clears FUSED_PAR_MIN_ELEMS, so the fused loop really
+    // does split into chunks at sizes 2 and 8.
+    assert!(40_000 > pool::FUSED_PAR_MIN_ELEMS);
+    ptest::check_exprs(ptest::Config { cases: 12, seed: 0xD17E_C7 }, 3, |expr, rng| {
+        let src = format!("def f(x):\n    return {expr}\n");
+        let e = Engine::from_source(&src).map_err(|e| e.to_string())?;
+        let exe = e
+            .trace("f")
+            .map_err(|e| e.to_string())?
+            .optimize(PassSet::Standard)
+            .compile()
+            .map_err(|e| e.to_string())?;
+        let mut trng = Rng::new(rng.below(1 << 30) as u64);
+        let x = Value::Tensor(trng.normal_tensor(&[40_000], 1.0));
+        assert_identical_across_sizes(&exe, &[x], &format!("forward {expr}"))
+    });
+}
+
+#[test]
+fn grad_is_bit_identical_across_pool_sizes() {
+    let _g = lock();
+    let _r = RestoreSize::new();
+    ptest::check_exprs(ptest::Config { cases: 10, seed: 0x9AD5 }, 3, |expr, rng| {
+        let src = format!("def g(x):\n    return item(sum({expr}))\n");
+        let e = Engine::from_source(&src).map_err(|e| e.to_string())?;
+        let exe = e
+            .trace("g")
+            .map_err(|e| e.to_string())?
+            .grad()
+            .optimize(PassSet::Standard)
+            .compile()
+            .map_err(|e| e.to_string())?;
+        let mut trng = Rng::new(rng.below(1 << 30) as u64);
+        let x = Value::Tensor(trng.normal_tensor(&[40_000], 1.0));
+        assert_identical_across_sizes(&exe, &[x], &format!("grad {expr}"))
+    });
+}
+
+#[test]
+fn grad_then_vmap_is_bit_identical_across_pool_sizes() {
+    let _g = lock();
+    let _r = RestoreSize::new();
+    ptest::check_exprs(ptest::Config { cases: 8, seed: 0x7A9B }, 3, |expr, rng| {
+        let src = format!("def g(x):\n    return item(sum({expr}))\n");
+        let e = Engine::from_source(&src).map_err(|e| e.to_string())?;
+        let exe = e
+            .trace("g")
+            .map_err(|e| e.to_string())?
+            .grad()
+            .vmap_axes(vec![Some(0)])
+            .optimize(PassSet::Standard)
+            .compile()
+            .map_err(|e| e.to_string())?;
+        let mut trng = Rng::new(rng.below(1 << 30) as u64);
+        let xb = Value::Tensor(trng.normal_tensor(&[4, 16_384], 1.0));
+        assert_identical_across_sizes(&exe, &[xb], &format!("grad∘vmap {expr}"))
+    });
+}
+
+/// Serving shape: 8 external threads share one `Arc<Executable>` (the MLP
+/// `value_and_grad`, whose matmuls clear `MATMUL_PAR_MIN_FLOPS`) while the
+/// intra-op pool is at size 8. Every concurrent call must reproduce the
+/// single-threaded, single-lane reference bit for bit.
+#[test]
+fn concurrent_serving_over_intra_op_pool_is_deterministic() {
+    let _g = lock();
+    let _r = RestoreSize::new();
+    let meta = mlp::default_meta();
+    let mut rng = Rng::new(7);
+    let teacher = mlp::synth_teacher(&meta, &mut rng);
+    let (x, y) = mlp::synth_batch(&meta, &mut rng, &teacher);
+    let params: Vec<Tensor> =
+        meta.init_params(5).into_iter().map(|t| t.cast(DType::F64)).collect();
+    let (_e, _loss, grad_fn) = mlp::compile_mlp(false).expect("compile MLP");
+    let args = vec![params_value(&params), Value::Tensor(x), Value::Tensor(y)];
+
+    pool::set_intra_op_threads(1);
+    let mut want = Vec::new();
+    value_bits(&grad_fn.call(args.clone()).expect("reference"), &mut want).unwrap();
+
+    pool::set_intra_op_threads(8);
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            let grad_fn = grad_fn.clone();
+            let args = args.clone();
+            let want = &want;
+            s.spawn(move || {
+                for _ in 0..5 {
+                    let out = grad_fn.call(args.clone()).expect("concurrent call");
+                    let mut got = Vec::new();
+                    value_bits(&out, &mut got).unwrap();
+                    assert_eq!(
+                        &got, want,
+                        "concurrent result diverged from 1-lane sequential reference"
+                    );
+                }
+            });
+        }
+    });
+}
+
+/// When CI sets `MYIA_THREADS`, the pool must have initialized from it (the
+/// lock + restore discipline above guarantees the size observed here is the
+/// initial one). Without the variable, it must match available parallelism.
+#[test]
+fn pool_size_respects_env_override() {
+    let _g = lock();
+    let n = pool::intra_op_threads();
+    assert!((1..=pool::MAX_THREADS).contains(&n));
+    if let Some(v) =
+        std::env::var("MYIA_THREADS").ok().and_then(|s| s.trim().parse::<usize>().ok())
+    {
+        if v >= 1 {
+            assert_eq!(n, v.min(pool::MAX_THREADS), "MYIA_THREADS override ignored");
+        }
+    }
+}

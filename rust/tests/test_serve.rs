@@ -408,3 +408,67 @@ fn serves_gradients_bit_identical_to_unbatched_grad() {
     assert_eq!(m.completed, 12);
     assert_eq!(m.failed + m.rejected_invalid, 0);
 }
+
+/// Close/drain race regression: shut the server down while 16 submitter
+/// threads are hammering it. The contract is that every accepted `submit`
+/// gets an answer — a bit-correct value or `Shutdown` — and never hangs on
+/// a stranded response slot. The test completing at all proves no slot was
+/// dropped without a fill; the accounting check proves no response was
+/// fabricated either.
+#[test]
+fn close_under_load_answers_every_accepted_request() {
+    let src = "def main(x):\n    return sin(x) * x + 1.0\n";
+    let engine = Engine::from_source(src).unwrap();
+    let oracle = engine.trace("main").unwrap().compile().unwrap();
+    let cfg = ServerConfig {
+        max_batch: 4,
+        max_wait: Duration::from_micros(200),
+        queue_capacity: 8, // small, so submitters block on backpressure mid-close
+        workers: 2,
+        full_policy: FullPolicy::Block,
+    };
+    let server =
+        Arc::new(Server::for_entry(&engine, "main", vec![], None, cfg, |f| f).unwrap());
+
+    let outcomes: Vec<Vec<(f64, Result<Value, ServeError>)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..16usize)
+            .map(|c| {
+                let server = server.clone();
+                s.spawn(move || {
+                    (0..50)
+                        .map(|i| {
+                            let x = 0.01 * (c * 50 + i) as f64 - 2.0;
+                            (x, server.submit(vec![Value::F64(x)]))
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        // Shut down mid-flight, while queues are full and batches in-progress.
+        std::thread::sleep(Duration::from_millis(5));
+        server.shutdown();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let mut ok = 0u64;
+    let mut shut_down = 0u64;
+    for (x, r) in outcomes.iter().flatten() {
+        match r {
+            Ok(got) => {
+                // Accepted and served: must be the exact sequential answer.
+                let want = oracle.call(vec![Value::F64(*x)]).unwrap();
+                bit_eq(got, &want).unwrap_or_else(|e| panic!("x = {x}: {e}"));
+                ok += 1;
+            }
+            Err(ServeError::Shutdown) | Err(ServeError::QueueFull) => shut_down += 1,
+            Err(other) => panic!("x = {x}: unexpected error {other}"),
+        }
+    }
+    assert_eq!(ok + shut_down, 16 * 50, "every submit must return");
+    let m = server.metrics();
+    assert_eq!(
+        m.completed, ok,
+        "served-response accounting must reconcile across the close"
+    );
+    assert_eq!(m.failed, 0, "no request may fail with Exec during a clean close");
+}
