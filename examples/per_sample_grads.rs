@@ -11,10 +11,9 @@
 
 use myia::coordinator::mlp::{
     compile_per_sample_grads, per_example_rows, params_value, synth_batch, synth_teacher,
-    MLP_SOURCE,
+    MlpMeta, MLP_SOURCE,
 };
 use myia::coordinator::Engine;
-use myia::runtime::artifacts::MlpMeta;
 use myia::tensor::{ops, DType, Rng, Tensor};
 use myia::vm::Value;
 

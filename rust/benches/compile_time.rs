@@ -3,8 +3,14 @@
 //! size, and — the headline for the worklist middle-end — optimization wall
 //! time on the MLP `value_and_grad` adjoint under the incremental worklist
 //! driver vs the emulated old full-rescan fixpoint loop, with per-pass
-//! worklist visits as evidence. Writes `BENCH_compile.json` at the
-//! repository root. Set `BENCH_QUICK=1` for the CI quick mode.
+//! worklist visits as evidence. Also measures the incremental-compilation
+//! arms (PR 8): cold compile vs warm start from the persistent disk
+//! artifact cache vs incremental recompile after a one-function edit. The
+//! shared cache directory comes from `MYIA_CACHE_DIR` (default:
+//! `target/bench-myia-cache`), so running the bench twice against the same
+//! directory demonstrates a warm process start — CI does exactly that.
+//! Writes `BENCH_compile.json` at the repository root. Set `BENCH_QUICK=1`
+//! for the CI quick mode.
 
 use myia::ad::{expand_grad, expand_macros, GradSpec};
 use myia::bench::Bencher;
@@ -75,8 +81,123 @@ fn measure_opt(make_pm: impl Fn() -> PassManager, reps: usize) -> OptArm {
     arm
 }
 
+/// A module with `k` independent entry points (`main_i` = grad of its own
+/// chain `f_i`), plus one shared helper so the edit arm has a dependency
+/// fan-out to leave untouched.
+fn multi_fn_program(k: usize, ops: usize, edited: bool) -> String {
+    let mut src = String::new();
+    for i in 0..k {
+        let mut body = String::from("    acc = x\n");
+        for j in 0..ops {
+            body.push_str(&format!("    acc = acc * 1.0{} + sin(acc)\n", (i + j) % 10));
+        }
+        // The edit touches f_0 only: every other entry's dependency closure
+        // is unchanged and must keep its artifact.
+        if edited && i == 0 {
+            body.push_str("    acc = acc + 0.5\n");
+        }
+        src.push_str(&format!("def f_{i}(x):\n{body}    return acc\n\n"));
+        src.push_str(&format!("def main_{i}(x):\n    return grad(f_{i})(x)\n\n"));
+    }
+    src
+}
+
+struct CacheArms {
+    entries: usize,
+    prewarm_disk_hits: u64,
+    disk_writes: u64,
+    cold_us: u128,
+    warm_us: u128,
+    warm_disk_hits: u64,
+    incremental_us: u128,
+    incremental_executed: u64,
+    incremental_green: u64,
+    incremental_hot_hits: u64,
+}
+
+/// The incremental-compilation arms. `shared_dir` persists across runs;
+/// the cold arm uses a throwaway directory so it never sees prior state.
+fn measure_cache_arms(shared_dir: &str, k: usize, ops: usize) -> CacheArms {
+    let src = multi_fn_program(k, ops, false);
+    let entries: Vec<String> = (0..k).map(|i| format!("main_{i}")).collect();
+    let compile_all = |e: &Engine| -> u128 {
+        let t0 = Instant::now();
+        for name in &entries {
+            e.trace(name).unwrap().compile().unwrap();
+        }
+        t0.elapsed().as_micros()
+    };
+    let probe_all = |e: &Engine| -> Vec<u64> {
+        entries
+            .iter()
+            .map(|name| {
+                let f = e.trace(name).unwrap().compile().unwrap();
+                f.call(vec![Value::F64(0.7)]).unwrap().as_f64().unwrap().to_bits()
+            })
+            .collect()
+    };
+
+    // Prewarm the shared directory (on a second bench run against the same
+    // MYIA_CACHE_DIR this is itself a warm start — CI asserts that).
+    let prewarm = Engine::from_source(&src).unwrap().with_cache_dir(shared_dir).unwrap();
+    compile_all(&prewarm);
+    let prewarm_stats = prewarm.cache_stats();
+    drop(prewarm);
+
+    // Cold: an empty throwaway cache directory — a first-ever process.
+    let cold_dir = std::env::temp_dir().join(format!("myia-bench-cold-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&cold_dir);
+    let cold_engine = Engine::from_source(&src).unwrap().with_cache_dir(&cold_dir).unwrap();
+    let cold_us = compile_all(&cold_engine);
+    let cold_bits = probe_all(&cold_engine);
+    drop(cold_engine);
+    let _ = std::fs::remove_dir_all(&cold_dir);
+
+    // Warm: a fresh engine over the prewarmed shared directory — a process
+    // restart with the cache in place.
+    let warm = Engine::from_source(&src).unwrap().with_cache_dir(shared_dir).unwrap();
+    let warm_us = compile_all(&warm);
+    let warm_stats = warm.cache_stats();
+    let warm_bits = probe_all(&warm);
+    assert_eq!(cold_bits, warm_bits, "disk-cached artifacts must execute bit-identically");
+    assert!(warm_stats.disk_hits > 0, "warm start saw no disk hits: {warm_stats:?}");
+
+    // Incremental: edit one function, recompile every entry. Only the
+    // edited entry's queries re-run; the rest hit the hot tier.
+    let mut warm = warm;
+    let q0 = warm.query_stats();
+    let h0 = warm.cache_stats().hits;
+    warm.update_source(&multi_fn_program(k, ops, true)).unwrap();
+    let incremental_us = compile_all(&warm);
+    let q1 = warm.query_stats();
+    let hot_hits = warm.cache_stats().hits - h0;
+
+    CacheArms {
+        entries: k,
+        prewarm_disk_hits: prewarm_stats.disk_hits,
+        disk_writes: prewarm_stats.disk_writes,
+        cold_us,
+        warm_us,
+        warm_disk_hits: warm_stats.disk_hits,
+        incremental_us,
+        incremental_executed: q1.total_executed() - q0.total_executed(),
+        incremental_green: q1.total_green() - q0.total_green(),
+        incremental_hot_hits: hot_hits,
+    }
+}
+
 fn main() {
     let quick = std::env::var_os("BENCH_QUICK").is_some();
+    // Resolve the shared cache directory once, then clear the variable so
+    // every other engine in this bench stays memory-only (otherwise a
+    // second run would report warm-start numbers for the E7 sections too).
+    let shared_cache_dir = std::env::var("MYIA_CACHE_DIR")
+        .ok()
+        .filter(|d| !d.is_empty())
+        .unwrap_or_else(|| {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/target/bench-myia-cache").to_string()
+        });
+    std::env::remove_var("MYIA_CACHE_DIR");
     println!("=== E7: compile-pipeline latency vs program size ===");
     println!(
         "{:>6} {:>12} {:>12} {:>12} {:>12} {:>10}",
@@ -149,6 +270,36 @@ fn main() {
         sample.median * 1e6
     );
 
+    // Incremental compilation and the persistent artifact cache (PR 8).
+    println!("\n=== incremental compilation & artifact cache ===");
+    let (k, ops) = if quick { (4, 8) } else { (8, 24) };
+    let arms = measure_cache_arms(&shared_cache_dir, k, ops);
+    println!("cache dir: {shared_cache_dir} ({} entries)", arms.entries);
+    println!(
+        "prewarm:     disk_hits={} disk_writes={} (hits > 0 means a prior run warmed this dir)",
+        arms.prewarm_disk_hits, arms.disk_writes
+    );
+    println!("cold start:  {}µs for {} entries", arms.cold_us, arms.entries);
+    println!(
+        "warm start:  {}µs ({} disk hits) — {:.2}x vs cold",
+        arms.warm_us,
+        arms.warm_disk_hits,
+        arms.cold_us as f64 / arms.warm_us.max(1) as f64
+    );
+    println!(
+        "incremental: {}µs after editing 1 of {} functions \
+         ({} queries executed, {} green, {} hot hits)",
+        arms.incremental_us,
+        arms.entries,
+        arms.incremental_executed,
+        arms.incremental_green,
+        arms.incremental_hot_hits
+    );
+    println!(
+        "CSV,e8_artifact_cache,{},{},{},{},{}",
+        arms.entries, arms.cold_us, arms.warm_us, arms.incremental_us, arms.warm_disk_hits
+    );
+
     // Machine-readable trajectory point (hand-rolled JSON; serde is not in
     // the offline crate set).
     let mut json = String::from("{\n  \"bench\": \"compile_time\",\n  \"sizes\": [\n");
@@ -179,7 +330,26 @@ fn main() {
             if i + 1 == worklist.per_pass.len() { "" } else { "," }
         ));
     }
-    json.push_str("    ]\n  }\n}\n");
+    json.push_str("    ]\n  },\n  \"artifact_cache\": {\n");
+    json.push_str(&format!(
+        "    \"entries\": {}, \"cold_us\": {}, \"warm_us\": {}, \"incremental_us\": {},\n",
+        arms.entries, arms.cold_us, arms.warm_us, arms.incremental_us
+    ));
+    json.push_str(&format!(
+        "    \"prewarm_disk_hits\": {}, \"warm_disk_hits\": {}, \"disk_writes\": {},\n",
+        arms.prewarm_disk_hits, arms.warm_disk_hits, arms.disk_writes
+    ));
+    json.push_str(&format!(
+        "    \"incremental_executed\": {}, \"incremental_green\": {}, \
+         \"incremental_hot_hits\": {},\n",
+        arms.incremental_executed, arms.incremental_green, arms.incremental_hot_hits
+    ));
+    json.push_str(&format!(
+        "    \"prewarm_was_warm\": {}, \"warm_faster_than_cold\": {}\n",
+        arms.prewarm_disk_hits > 0,
+        arms.warm_us < arms.cold_us
+    ));
+    json.push_str("  }\n}\n");
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_compile.json");
     std::fs::write(path, json).expect("write BENCH_compile.json");
     println!("wrote {path}");

@@ -18,12 +18,24 @@
 //! argument-type signature)`. `f.grad().grad().compile()` is second-order AD
 //! with no `grad(grad(…))` string anywhere in user source — the transforms
 //! compose because the adjoint program is ordinary IR (§3.2).
+//!
+//! Compilation itself runs as a DAG of memoized queries
+//! ([`crate::query::QueryEngine`]): macro expansion, each pipeline stage,
+//! typechecking and codegen are separate queries keyed by structural
+//! fingerprints of their inputs, so [`Engine::update_source`] re-runs only
+//! the queries an edit actually reaches (red-green revalidation). The
+//! sharded artifact cache is the *hot tier* above the queries; a persistent
+//! *disk tier* ([`crate::runtime::diskcache::DiskCache`], enabled by
+//! `MYIA_CACHE_DIR` or [`Engine::with_cache_dir`]) lets a fresh process
+//! start warm.
 
 use crate::ad::expand_macros;
 use crate::backend::Backend;
-use crate::ir::{analyze, GraphId, Module};
+use crate::ir::{analyze, content_fingerprint, GraphId, Module};
 use crate::opt::PassSet;
 use crate::parser::compile_source;
+use crate::query::{mix_fp, IrSnapshot, QueryEngine, QueryKind, QueryStatsSnapshot};
+use crate::runtime::diskcache::{ArtifactKey, DiskCache, StoredArtifact, StoredMeta};
 use crate::serve::metrics::{CacheCounters, CacheStats};
 use crate::transform::{Pipeline, StageMetrics, Transform};
 use crate::types::AType;
@@ -63,6 +75,10 @@ pub struct Metrics {
 /// allocates nothing (no `name` clone, no key construction).
 struct CacheEntry {
     fingerprint: u64,
+    /// Deep structural fingerprint of the entry's callee closure at compile
+    /// time: an `update_source` that reaches this entry changes the
+    /// fingerprint and silently retires the entry (it stops matching).
+    module_fp: u64,
     signature: Option<Vec<AType>>,
     compiled: Arc<Executable>,
 }
@@ -109,6 +125,12 @@ pub struct Engine {
     /// Artifact-cache hit/miss telemetry, `Arc`-shared so a serving layer
     /// built on this engine can fold it into one metrics snapshot.
     stats: Arc<CacheCounters>,
+    /// The memoized compilation-query engine (red-green revalidation).
+    queries: QueryEngine,
+    /// Optional persistent artifact tier (`MYIA_CACHE_DIR` /
+    /// [`Engine::with_cache_dir`]). VM artifacts only — XLA executables hold
+    /// process-local runtime handles that cannot be serialized.
+    disk: Option<DiskCache>,
 }
 
 /// A compiled, executable entry point: the run-time half of the compile/run
@@ -186,21 +208,66 @@ impl Executable {
 }
 
 impl Engine {
-    /// Parse and lower a source module.
+    /// Parse and lower a source module. When `MYIA_CACHE_DIR` names a
+    /// usable directory, the persistent disk tier is enabled automatically
+    /// (an unusable directory degrades silently to memory-only — ambient
+    /// configuration must never turn a working compile into an error; use
+    /// [`Engine::with_cache_dir`] to opt into strict failures).
     pub fn from_source(source: &str) -> Result<Engine> {
         let mut module = Module::new();
         let graphs = compile_source(&mut module, source)?;
-        Ok(Engine {
+        let engine = Engine {
             module,
             graphs,
             cache: ArtifactCache::new(),
             stats: Arc::new(CacheCounters::default()),
-        })
+            queries: QueryEngine::new(),
+            disk: match std::env::var("MYIA_CACHE_DIR") {
+                Ok(dir) if !dir.is_empty() => DiskCache::new(dir).ok(),
+                _ => None,
+            },
+        };
+        engine.queries.begin_revision(&engine.module, &engine.graphs);
+        Ok(engine)
     }
 
-    /// Point-in-time artifact-cache hit/miss counts.
+    /// Enable (or redirect) the persistent disk tier explicitly. Unlike the
+    /// `MYIA_CACHE_DIR` path, an unusable directory is an error here.
+    pub fn with_cache_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Result<Engine> {
+        self.disk = Some(DiskCache::new(dir).map_err(|e| anyhow!("{e}"))?);
+        Ok(self)
+    }
+
+    /// Replace the engine's source with an edited version, starting a new
+    /// query revision. Artifacts for entry points whose transitive callee
+    /// closure is untouched by the edit keep serving from the hot tier
+    /// (their deep fingerprints still match); everything the edit reaches
+    /// recompiles through the query DAG, re-running only red queries.
+    pub fn update_source(&mut self, source: &str) -> Result<()> {
+        let mut module = Module::new();
+        let graphs = compile_source(&mut module, source)?;
+        self.module = module;
+        self.graphs = graphs;
+        self.queries.begin_revision(&self.module, &self.graphs);
+        Ok(())
+    }
+
+    /// Point-in-time artifact-cache hit/miss counts (memory + disk tiers).
     pub fn cache_stats(&self) -> CacheStats {
         self.stats.snapshot()
+    }
+
+    /// Point-in-time compilation-query telemetry: per-kind executed / green
+    /// / memo counts (what the incremental tests assert deltas on).
+    pub fn query_stats(&self) -> QueryStatsSnapshot {
+        self.queries.snapshot()
+    }
+
+    /// The dependency edge set of `name`'s compilation: its transitive
+    /// callee closure (sorted, includes `name`), or `None` for an unknown
+    /// entry point.
+    pub fn query_dependencies(&self, name: &str) -> Option<Vec<String>> {
+        self.queries.dependencies(name)
     }
 
     /// The live cache counters, shareable with a serving layer so cache
@@ -250,21 +317,34 @@ impl Engine {
     /// Compile `name` through `pipeline`, optionally specialized to an
     /// argument-type signature (the signature is type-checked eagerly,
     /// §4.2). Artifacts are cached under `(name, pipeline fingerprint,
-    /// signature)`; a hit performs no allocation and no compile ever runs
-    /// under a cache lock. Two threads racing on the same key may both
-    /// compile; the first insert wins and both receive the same artifact.
+    /// deep module fingerprint, signature)`; a hit performs no allocation
+    /// and no compile ever runs under a cache lock. Two threads racing on
+    /// the same key may both compile; the first insert wins and both
+    /// receive the same artifact.
+    ///
+    /// Lookup order: hot tier (in-memory), then the disk tier (VM backend
+    /// only; a disk hit counts as neither `hits` nor `misses` — no compile
+    /// ran, but the answer wasn't in memory either), then the query DAG.
+    /// Anything wrong with a disk artifact — missing, truncated, corrupt,
+    /// wrong schema — degrades to a cold compile; corruption is counted
+    /// (`disk_invalid`) and quarantined, never propagated as an error.
     pub fn compile_specialized(
         &self,
         name: &str,
         pipeline: &Pipeline,
         signature: Option<&[AType]>,
     ) -> Result<Arc<Executable>> {
+        let (module_fp, _deps) = self
+            .queries
+            .entry_fingerprint(name)
+            .ok_or_else(|| anyhow!("no top-level function named `{name}`"))?;
         let fp = pipeline.fingerprint();
         // The fingerprint is the fast filter; comparing the canonical spec
         // (already stored in the artifact's metrics) makes a 64-bit hash
         // collision impossible to serve.
         let matches = |e: &CacheEntry| {
             e.fingerprint == fp
+                && e.module_fp == module_fp
                 && e.compiled.metrics.pipeline == pipeline.spec()
                 && e.signature.as_deref() == signature
         };
@@ -278,95 +358,325 @@ impl Engine {
                 }
             }
         }
+        if let Some(compiled) = self.try_disk_load(name, pipeline, signature, module_fp) {
+            self.stats.disk_hits.inc();
+            return Ok(self.insert_hot(shard, name, fp, module_fp, signature, compiled, &matches));
+        }
         // A miss pays the full compile (even a racing loser did the work —
         // the counter measures compiles performed, not entries inserted).
         self.stats.misses.inc();
-        let compiled = Arc::new(self.compile_uncached(name, pipeline, signature)?);
+        let compiled = self.compile_via_queries(name, pipeline, signature, module_fp)?;
+        if let Some(disk) = self.disk_for(pipeline) {
+            let key = Self::disk_key(name, pipeline, signature, module_fp);
+            if disk.store(&key, &Self::to_stored(&compiled)).is_ok() {
+                self.stats.disk_writes.inc();
+            }
+        }
+        Ok(self.insert_hot(shard, name, fp, module_fp, signature, compiled, &matches))
+    }
+
+    /// Insert into the hot tier unless a racing thread beat us to the key —
+    /// then serve *its* artifact so every caller shares one allocation (and
+    /// one cache entry).
+    #[allow(clippy::too_many_arguments)]
+    fn insert_hot(
+        &self,
+        shard: &Mutex<HashMap<String, Vec<CacheEntry>>>,
+        name: &str,
+        fp: u64,
+        module_fp: u64,
+        signature: Option<&[AType]>,
+        compiled: Arc<Executable>,
+        matches: &dyn Fn(&CacheEntry) -> bool,
+    ) -> Arc<Executable> {
         let mut guard = shard.lock().expect("artifact cache poisoned");
         let entries = guard.entry(name.to_string()).or_default();
-        if let Some(hit) = entries.iter().find(|&e| matches(e)) {
-            // A racing thread finished first; serve its artifact so every
-            // caller shares one allocation (and one cache entry).
-            return Ok(hit.compiled.clone());
+        if let Some(hit) = entries.iter().find(|e| matches(e)) {
+            return hit.compiled.clone();
         }
         entries.push(CacheEntry {
             fingerprint: fp,
+            module_fp,
             signature: signature.map(|s| s.to_vec()),
             compiled: compiled.clone(),
         });
-        Ok(compiled)
+        compiled
     }
 
-    fn compile_uncached(
+    /// The disk tier, when it applies to this pipeline: only VM artifacts
+    /// persist (an XLA executable embeds process-local PJRT handles).
+    fn disk_for(&self, pipeline: &Pipeline) -> Option<&DiskCache> {
+        match pipeline.backend() {
+            Backend::Vm => self.disk.as_ref(),
+            _ => None,
+        }
+    }
+
+    /// Canonical signature token for query labels and disk keys.
+    fn sig_token(signature: Option<&[AType]>) -> String {
+        match signature {
+            None => "generic".to_string(),
+            Some(sig) => {
+                sig.iter().map(ToString::to_string).collect::<Vec<_>>().join(";")
+            }
+        }
+    }
+
+    fn disk_key(
+        name: &str,
+        pipeline: &Pipeline,
+        signature: Option<&[AType]>,
+        module_fp: u64,
+    ) -> ArtifactKey {
+        ArtifactKey {
+            entry: name.to_string(),
+            pipeline_spec: pipeline.spec().to_string(),
+            signature: Self::sig_token(signature),
+            module_fp,
+        }
+    }
+
+    /// Probe the disk tier and rebuild an [`Executable`] from a stored
+    /// artifact. Returns `None` on every failure mode (counting misses and
+    /// invalid artifacts) — callers always have the cold path to fall back
+    /// on.
+    fn try_disk_load(
         &self,
         name: &str,
         pipeline: &Pipeline,
         signature: Option<&[AType]>,
+        module_fp: u64,
+    ) -> Option<Arc<Executable>> {
+        let disk = self.disk_for(pipeline)?;
+        let key = Self::disk_key(name, pipeline, signature, module_fp);
+        let stored = match disk.load(&key) {
+            Ok(Some(stored)) => stored,
+            Ok(None) => {
+                self.stats.disk_misses.inc();
+                return None;
+            }
+            Err(_) => {
+                self.stats.disk_invalid.inc();
+                return None;
+            }
+        };
+        match Self::from_stored(stored, pipeline, signature) {
+            Ok(exec) => Some(Arc::new(exec)),
+            Err(_) => {
+                self.stats.disk_invalid.inc();
+                None
+            }
+        }
+    }
+
+    /// Snapshot an executable for the disk tier. The VM program itself is
+    /// not serialized — codegen is deterministic and cheap relative to the
+    /// transform pipeline, so a load re-runs it on the stored IR and gets a
+    /// bit-identical program.
+    fn to_stored(exec: &Executable) -> StoredArtifact {
+        let m = &exec.metrics;
+        StoredArtifact {
+            module: exec.module.clone(),
+            entry: exec.entry,
+            signature: exec.signature.clone(),
+            ret_type: exec.ret_type.clone(),
+            meta: StoredMeta {
+                macros_expanded: m.macros_expanded as u64,
+                grad_transforms: m.grad_transforms as u64,
+                nodes_after_lowering: m.nodes_after_lowering as u64,
+                nodes_after_expand: m.nodes_after_expand as u64,
+                nodes_after_optimize: m.nodes_after_optimize as u64,
+                graphs_after_optimize: m.graphs_after_optimize as u64,
+                opt_iterations: m.opt_iterations as u64,
+            },
+        }
+    }
+
+    /// Rebuild an executable from a disk artifact: re-run codegen on the
+    /// stored post-transform IR. Transform metrics come from the stored
+    /// meta; the per-stage breakdown is gone (the stages didn't run), and
+    /// `codegen_us` reports the reload cost.
+    fn from_stored(
+        stored: StoredArtifact,
+        pipeline: &Pipeline,
+        signature: Option<&[AType]>,
     ) -> Result<Executable> {
+        if stored.signature.as_deref() != signature {
+            return Err(anyhow!("stored artifact signature mismatch"));
+        }
+        let t0 = Instant::now();
+        let program = compile_program(&stored.module, stored.entry).map_err(|e| anyhow!("{e}"))?;
+        let vm = Vm::new(program);
+        let meta = stored.meta;
+        let metrics = Metrics {
+            pipeline: pipeline.spec().to_string(),
+            codegen_us: t0.elapsed().as_micros(),
+            nodes_after_lowering: meta.nodes_after_lowering as usize,
+            nodes_after_expand: meta.nodes_after_expand as usize,
+            nodes_after_optimize: meta.nodes_after_optimize as usize,
+            graphs_after_optimize: meta.graphs_after_optimize as usize,
+            macros_expanded: meta.macros_expanded as usize,
+            grad_transforms: meta.grad_transforms as usize,
+            opt_iterations: meta.opt_iterations as usize,
+            ..Default::default()
+        };
+        Ok(Executable {
+            vm,
+            entry: stored.entry,
+            module: stored.module,
+            metrics,
+            signature: stored.signature,
+            ret_type: stored.ret_type,
+        })
+    }
+
+    /// The cold path, phrased as the query DAG: ad_expand → one query per
+    /// pipeline stage → typecheck (when specialized) → codegen. Each query's
+    /// input fingerprint chains through the *content* fingerprint of the
+    /// previous stage's output IR, so after an `update_source` only the
+    /// queries an edit actually reaches re-run (the rest revalidate green);
+    /// a reused stage reports its original metrics.
+    fn compile_via_queries(
+        &self,
+        name: &str,
+        pipeline: &Pipeline,
+        signature: Option<&[AType]>,
+        module_fp: u64,
+    ) -> Result<Arc<Executable>> {
         let source_entry = self.graph(name)?;
-        // Transform a private clone: the engine module stays pristine, so
-        // e.g. an unoptimized pipeline compiled after an optimized one of
-        // the same entry really is unoptimized.
-        let mut module = self.module.clone();
-        let m = &mut module;
-        let mut metrics =
-            Metrics { pipeline: pipeline.spec().to_string(), ..Default::default() };
-        metrics.nodes_after_lowering = m.reachable_node_count(source_entry);
+        let backend = pipeline.backend();
+        let sig_tok = Self::sig_token(signature);
 
         // Source-level macros (`grad(f)` written in user code) are expanded
         // unconditionally: the VM cannot execute a Macro constant, so this
         // is a semantic requirement rather than a pipeline choice — it is
-        // deliberately not part of the fingerprint.
-        let t0 = Instant::now();
-        metrics.macros_expanded = expand_macros(m, source_entry)?;
-        metrics.expand_us = t0.elapsed().as_micros();
-        metrics.nodes_after_expand = m.reachable_node_count(source_entry);
+        // deliberately not part of the pipeline fingerprint. The query works
+        // on a private clone: the engine module stays pristine, so e.g. an
+        // unoptimized pipeline compiled after an optimized one of the same
+        // entry really is unoptimized.
+        let expanded = self.queries.get_ir(
+            QueryKind::AdExpand,
+            &format!("expand:{name}"),
+            module_fp,
+            || {
+                let mut m = self.module.clone();
+                let nodes_before = m.reachable_node_count(source_entry);
+                let mut stage =
+                    StageMetrics { name: "expand_macros".to_string(), ..Default::default() };
+                let t0 = Instant::now();
+                let n = expand_macros(&mut m, source_entry)?;
+                stage.us = t0.elapsed().as_micros();
+                stage.nodes_after = m.reachable_node_count(source_entry);
+                stage.detail.push(("macros_expanded".to_string(), n));
+                let output_fp = content_fingerprint(&m, source_entry);
+                Ok(Arc::new(IrSnapshot {
+                    module: m,
+                    entry: source_entry,
+                    output_fp,
+                    stage,
+                    nodes_before,
+                }))
+            },
+        )?;
 
-        let (entry, stages) = pipeline.apply_ir(m, source_entry)?;
-        for sm in &stages {
-            for (k, v) in &sm.detail {
-                match k.as_str() {
-                    "grad_order" => metrics.grad_transforms += *v,
-                    "iterations" => metrics.opt_iterations += *v,
-                    _ => {}
-                }
-            }
-            match sm.name.as_str() {
-                "grad" | "value_and_grad" => {
-                    metrics.expand_us += sm.us;
-                    metrics.nodes_after_expand = sm.nodes_after;
-                }
-                "optimize" => metrics.optimize_us += sm.us,
-                _ => {}
-            }
+        let mut cur = expanded.clone();
+        let mut stage_snaps: Vec<Arc<IrSnapshot>> = Vec::with_capacity(pipeline.stages().len());
+        for (t, prefix) in pipeline.stages().iter().zip(pipeline.stage_key_prefixes()) {
+            // The label carries the cumulative upstream stage keys: two
+            // pipelines sharing a prefix share these queries and their
+            // memoized IR.
+            let label = format!("{name}|{prefix}|{}", backend.key());
+            let input_fp = mix_fp(cur.output_fp, &[&t.key(), backend.key()]);
+            let kind = if t.name() == "optimize" {
+                QueryKind::Optimize
+            } else {
+                QueryKind::AdExpand
+            };
+            let prev = cur.clone();
+            let next = self.queries.get_ir(kind, &label, input_fp, || {
+                let mut m = prev.module.clone();
+                let nodes_before = m.reachable_node_count(prev.entry);
+                let mut stage =
+                    StageMetrics { name: t.name().to_string(), ..Default::default() };
+                let t0 = Instant::now();
+                let entry = t.apply_for_backend(&mut m, prev.entry, &mut stage, backend)?;
+                stage.us = t0.elapsed().as_micros();
+                stage.nodes_after = m.reachable_node_count(entry);
+                let output_fp = content_fingerprint(&m, entry);
+                Ok(Arc::new(IrSnapshot { module: m, entry, output_fp, stage, nodes_before }))
+            })?;
+            stage_snaps.push(next.clone());
+            cur = next;
         }
-        metrics.stages = stages;
 
-        let analysis = analyze(m, entry);
-        metrics.nodes_after_optimize = analysis.node_count(m);
-        metrics.graphs_after_optimize = analysis.graphs.len();
-
-        // Eager per-signature specialization check (§4.2).
+        // Eager per-signature specialization check (§4.2), keyed by the
+        // final IR's content fingerprint and the signature.
         let ret_type = match signature {
-            Some(sig) => Some(crate::types::infer_call(m, entry, sig)?),
+            Some(sig) => {
+                let label = format!("{name}|{}|{sig_tok}", pipeline.spec());
+                let input_fp = mix_fp(cur.output_fp, &[&sig_tok]);
+                let final_snap = &cur;
+                Some(self.queries.get_type(&label, input_fp, || {
+                    crate::types::infer_call(&final_snap.module, final_snap.entry, sig)
+                })?)
+            }
             None => None,
         };
 
-        let t2 = Instant::now();
-        let program = compile_program(m, entry).map_err(|e| anyhow!("{e}"))?;
-        let mut vm = Vm::new(program);
-        if pipeline.backend() == Backend::Xla {
-            metrics.xla_segments = crate::backend::install_segments(&mut vm)?;
-        }
-        metrics.codegen_us = t2.elapsed().as_micros();
+        let codegen_label = format!("{name}|{}|{sig_tok}", pipeline.spec());
+        let input_fp = mix_fp(cur.output_fp, &[&sig_tok, backend.key()]);
+        self.queries.get_exec(&codegen_label, input_fp, || {
+            let mut metrics =
+                Metrics { pipeline: pipeline.spec().to_string(), ..Default::default() };
+            metrics.nodes_after_lowering = expanded.nodes_before;
+            for (k, v) in &expanded.stage.detail {
+                if k == "macros_expanded" {
+                    metrics.macros_expanded += *v;
+                }
+            }
+            metrics.expand_us = expanded.stage.us;
+            metrics.nodes_after_expand = expanded.stage.nodes_after;
+            for snap in &stage_snaps {
+                let sm = &snap.stage;
+                for (k, v) in &sm.detail {
+                    match k.as_str() {
+                        "grad_order" => metrics.grad_transforms += *v,
+                        "iterations" => metrics.opt_iterations += *v,
+                        _ => {}
+                    }
+                }
+                match sm.name.as_str() {
+                    "grad" | "value_and_grad" => {
+                        metrics.expand_us += sm.us;
+                        metrics.nodes_after_expand = sm.nodes_after;
+                    }
+                    "optimize" => metrics.optimize_us += sm.us,
+                    _ => {}
+                }
+                metrics.stages.push(sm.clone());
+            }
 
-        Ok(Executable {
-            vm,
-            entry,
-            module,
-            metrics,
-            signature: signature.map(|s| s.to_vec()),
-            ret_type,
+            let analysis = analyze(&cur.module, cur.entry);
+            metrics.nodes_after_optimize = analysis.node_count(&cur.module);
+            metrics.graphs_after_optimize = analysis.graphs.len();
+
+            let module = cur.module.clone();
+            let t2 = Instant::now();
+            let program = compile_program(&module, cur.entry).map_err(|e| anyhow!("{e}"))?;
+            let mut vm = Vm::new(program);
+            if backend == Backend::Xla {
+                metrics.xla_segments = crate::backend::install_segments(&mut vm)?;
+            }
+            metrics.codegen_us = t2.elapsed().as_micros();
+
+            Ok(Arc::new(Executable {
+                vm,
+                entry: cur.entry,
+                module,
+                metrics,
+                signature: signature.map(|s| s.to_vec()),
+                ret_type: ret_type.clone(),
+            }))
         })
     }
 }
@@ -617,6 +927,54 @@ def main(x):
             "artifact carries {} graphs but only {live} are reachable",
             f.module.num_graphs()
         );
+    }
+
+    #[test]
+    fn update_source_retires_only_affected_entries() {
+        let v1 = "def f(x):\n    return x + 1.0\n\ndef g(x):\n    return x * 2.0\n";
+        let v2 = "def f(x):\n    return x + 1.0\n\ndef g(x):\n    return x * 3.0\n";
+        let mut e = Engine::from_source(v1).unwrap();
+        let f1 = e.trace("f").unwrap().compile().unwrap();
+        let g1 = e.trace("g").unwrap().compile().unwrap();
+        e.update_source(v2).unwrap();
+        // `f` is untouched by the edit: its deep fingerprint still matches,
+        // so the hot tier keeps serving the original artifact.
+        let f2 = e.trace("f").unwrap().compile().unwrap();
+        assert!(Arc::ptr_eq(&f1, &f2), "untouched entry must keep its artifact");
+        // `g` changed: its entry stops matching and a fresh compile runs.
+        let g2 = e.trace("g").unwrap().compile().unwrap();
+        assert!(!Arc::ptr_eq(&g1, &g2), "edited entry must recompile");
+        let got = g2.call(vec![Value::F64(2.0)]).unwrap().as_f64().unwrap();
+        assert!((got - 6.0).abs() < 1e-12);
+        let stats = e.cache_stats();
+        assert_eq!((stats.hits, stats.misses), (1, 3), "{stats:?}");
+        assert_eq!(e.query_stats().parse.executed, 2);
+        assert_eq!(e.query_dependencies("f"), Some(vec!["f".to_string()]));
+    }
+
+    #[test]
+    fn disk_tier_round_trips_across_engines() {
+        let dir = std::env::temp_dir()
+            .join(format!("myia-engine-disk-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let src = "def f(x):\n    return sin(x) * x\n";
+        let cold = {
+            let e = Engine::from_source(src).unwrap().with_cache_dir(&dir).unwrap();
+            let f = e.trace("f").unwrap().grad().compile().unwrap();
+            let stats = e.cache_stats();
+            assert_eq!((stats.disk_hits, stats.disk_misses), (0, 1), "{stats:?}");
+            assert!(stats.disk_writes >= 1, "{stats:?}");
+            f.call(vec![Value::F64(0.7)]).unwrap().as_f64().unwrap()
+        };
+        // A second engine (fresh process stand-in) starts warm from disk:
+        // no compile runs and execution is bit-identical.
+        let e = Engine::from_source(src).unwrap().with_cache_dir(&dir).unwrap();
+        let f = e.trace("f").unwrap().grad().compile().unwrap();
+        let stats = e.cache_stats();
+        assert_eq!((stats.disk_hits, stats.misses), (1, 0), "{stats:?}");
+        let warm = f.call(vec![Value::F64(0.7)]).unwrap().as_f64().unwrap();
+        assert_eq!(cold.to_bits(), warm.to_bits());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

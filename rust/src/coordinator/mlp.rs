@@ -8,11 +8,49 @@
 
 use crate::backend::Backend;
 use crate::coordinator::{Engine, Executable};
-use crate::runtime::artifacts::MlpMeta;
 use crate::tensor::{ops, DType, Rng, Tensor};
 use crate::vm::Value;
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
+
+/// Model dimensions for the MLP workload (formerly part of the deleted
+/// JAX-artifact loading path; now owned by the workload itself).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MlpMeta {
+    pub batch: usize,
+    pub in_dim: usize,
+    pub h1: usize,
+    pub h2: usize,
+    pub out_dim: usize,
+    pub lr: f64,
+}
+
+impl MlpMeta {
+    /// Parameter shapes in call order (w1, b1, w2, b2, w3, b3).
+    pub fn param_shapes(&self) -> Vec<Vec<usize>> {
+        vec![
+            vec![self.in_dim, self.h1],
+            vec![self.h1],
+            vec![self.h1, self.h2],
+            vec![self.h2],
+            vec![self.h2, self.out_dim],
+            vec![self.out_dim],
+        ]
+    }
+
+    /// Deterministic f32 parameter init matching [`MlpMeta::param_shapes`].
+    pub fn init_params(&self, seed: u64) -> Vec<Tensor> {
+        let mut rng = Rng::new(seed);
+        self.param_shapes()
+            .into_iter()
+            .map(|shape| {
+                let fan_in = shape[0].max(1) as f64;
+                let scale = if shape.len() == 2 { 1.0 / fan_in.sqrt() } else { 0.0 };
+                rng.normal_tensor(&shape, scale).cast(DType::F32)
+            })
+            .collect()
+    }
+}
 
 /// The MLP in the Myia source language.
 pub const MLP_SOURCE: &str = "\

@@ -1,0 +1,311 @@
+//! Content-based structural fingerprints over the IR — the input layer of
+//! the incremental compilation query engine (`crate::query`).
+//!
+//! Arena indexes (`NodeId`/`GraphId`) are *not* stable across reparses: the
+//! same source text lowered twice (or with an unrelated function edited)
+//! assigns different ids. A fingerprint therefore hashes *structure*, with
+//! ids replaced by canonical traversal-order numbers:
+//!
+//! * nodes hash recursively by kind — an apply is the hash of its inputs'
+//!   hashes, a parameter is `(owner slot, parameter index)`, a constant is
+//!   [`Const::fingerprint`] — so shared subexpressions and shifted arena
+//!   positions cannot change the result;
+//! * graphs are numbered by first-discovery order ("slots") starting from
+//!   the root, so nested/anonymous graphs get stable numbers no matter
+//!   where the arena placed them;
+//! * references to *named top-level functions* (the `boundary` map) hash as
+//!   the callee's **name** instead of recursing into its body. That makes a
+//!   function's [`local`](GraphFingerprint::local) fingerprint depend only
+//!   on its own text: editing a callee's body leaves the caller's local
+//!   fingerprint untouched, which is exactly the separation the query
+//!   engine's red-green marking needs. The set of boundary names a function
+//!   references is returned as [`GraphFingerprint::callees`], from which the
+//!   query engine builds the *deep* fingerprint (hash over the transitive
+//!   `(name, local)` set — cycle-safe by construction, since names are
+//!   hashed without recursion).
+//!
+//! [`content_fingerprint`] is the boundary-free variant (recurse into
+//! everything): the fingerprint of a transformed module snapshot, used to
+//! chain pipeline-stage queries (stage *n*'s input fingerprint is stage
+//! *n−1*'s output fingerprint).
+
+use super::{Const, GraphId, Module, NodeId, NodeKind};
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{BTreeSet, HashMap};
+use std::hash::{Hash, Hasher};
+
+/// The fingerprint of one function: its boundary-local structural hash plus
+/// the names of the top-level functions it references (directly, from its
+/// own body or any graph nested in it).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GraphFingerprint {
+    /// Structural hash of the function's own body (callees by name).
+    pub local: u64,
+    /// Referenced boundary (top-level) function names, sorted, deduplicated.
+    pub callees: Vec<String>,
+}
+
+/// Hash a function's reachable structure, treating graphs named in
+/// `boundary` (other than `root` itself) as opaque names.
+pub fn graph_fingerprint(
+    m: &Module,
+    root: GraphId,
+    boundary: &HashMap<GraphId, String>,
+) -> GraphFingerprint {
+    let mut w = Walker {
+        m,
+        boundary,
+        root,
+        node_memo: HashMap::new(),
+        slots: HashMap::new(),
+        queue: Vec::new(),
+        callees: BTreeSet::new(),
+    };
+    let local = w.run();
+    GraphFingerprint { local, callees: w.callees.into_iter().collect() }
+}
+
+/// Full-content structural hash: recurse into every referenced graph (no
+/// boundary). Equal for two modules iff everything reachable from the entry
+/// is structurally identical — the stage-output fingerprint of the query
+/// engine.
+pub fn content_fingerprint(m: &Module, root: GraphId) -> u64 {
+    graph_fingerprint(m, root, &HashMap::new()).local
+}
+
+struct Walker<'a> {
+    m: &'a Module,
+    boundary: &'a HashMap<GraphId, String>,
+    root: GraphId,
+    node_memo: HashMap<NodeId, u64>,
+    /// Canonical graph numbers, assigned on first discovery.
+    slots: HashMap<GraphId, u32>,
+    /// Graphs whose bodies still need hashing, in slot order.
+    queue: Vec<GraphId>,
+    callees: BTreeSet<String>,
+}
+
+impl Walker<'_> {
+    fn run(&mut self) -> u64 {
+        self.slot(self.root);
+        let mut h = DefaultHasher::new();
+        // The queue grows while bodies are hashed (discovery); iterate by
+        // index. Slot order == discovery order == deterministic.
+        let mut i = 0;
+        while i < self.queue.len() {
+            let g = self.queue[i];
+            let graph = self.m.graph(g);
+            (i as u32).hash(&mut h);
+            graph.params.len().hash(&mut h);
+            let body = match graph.ret {
+                Some(r) => self.node_hash(r),
+                None => 0x9e3779b97f4a7c15, // unfinished graph marker
+            };
+            body.hash(&mut h);
+            i += 1;
+        }
+        h.finish()
+    }
+
+    fn slot(&mut self, g: GraphId) -> u32 {
+        if let Some(&s) = self.slots.get(&g) {
+            return s;
+        }
+        let s = self.slots.len() as u32;
+        self.slots.insert(g, s);
+        self.queue.push(g);
+        s
+    }
+
+    /// Hash of one leaf (non-apply) node. May assign graph slots (and queue
+    /// bodies) as a side effect, in deterministic traversal order.
+    fn leaf_hash(&mut self, n: NodeId) -> u64 {
+        let node = self.m.node(n);
+        let mut h = DefaultHasher::new();
+        match &node.kind {
+            NodeKind::Parameter => {
+                let owner = node.graph.expect("parameter without owning graph");
+                let idx = self
+                    .m
+                    .graph(owner)
+                    .params
+                    .iter()
+                    .position(|&p| p == n)
+                    .unwrap_or(usize::MAX);
+                0u8.hash(&mut h);
+                self.slot(owner).hash(&mut h);
+                idx.hash(&mut h);
+            }
+            NodeKind::Constant(Const::Graph(g)) => {
+                if *g != self.root {
+                    if let Some(name) = self.boundary.get(g) {
+                        // Named top-level callee: hash by name, don't recurse.
+                        self.callees.insert(name.clone());
+                        1u8.hash(&mut h);
+                        name.hash(&mut h);
+                        return h.finish();
+                    }
+                }
+                2u8.hash(&mut h);
+                self.slot(*g).hash(&mut h);
+            }
+            NodeKind::Constant(c) => {
+                3u8.hash(&mut h);
+                c.fingerprint().hash(&mut h);
+            }
+            NodeKind::Apply(_) => unreachable!("apply nodes are hashed iteratively"),
+        }
+        h.finish()
+    }
+
+    /// Structural hash of a node, memoized. Iterative post-order: adjoint
+    /// chains run to thousands of nodes, so no native recursion. The data
+    /// edges of the IR form a DAG (cycles only exist through `Const::Graph`
+    /// references, which are handled as leaves), so this terminates.
+    fn node_hash(&mut self, start: NodeId) -> u64 {
+        if let Some(&hh) = self.node_memo.get(&start) {
+            return hh;
+        }
+        let mut stack: Vec<(NodeId, bool)> = vec![(start, false)];
+        while let Some((n, expanded)) = stack.pop() {
+            if self.node_memo.contains_key(&n) {
+                continue;
+            }
+            let node = self.m.node(n);
+            match &node.kind {
+                NodeKind::Apply(inputs) => {
+                    if expanded {
+                        let mut h = DefaultHasher::new();
+                        4u8.hash(&mut h);
+                        inputs.len().hash(&mut h);
+                        for inp in inputs {
+                            self.node_memo[inp].hash(&mut h);
+                        }
+                        self.node_memo.insert(n, h.finish());
+                    } else {
+                        stack.push((n, true));
+                        for &inp in inputs.iter().rev() {
+                            if !self.node_memo.contains_key(&inp) {
+                                stack.push((inp, false));
+                            }
+                        }
+                    }
+                }
+                _ => {
+                    let hh = self.leaf_hash(n);
+                    self.node_memo.insert(n, hh);
+                }
+            }
+        }
+        self.node_memo[&start]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Prim;
+
+    fn boundary_of(pairs: &[(GraphId, &str)]) -> HashMap<GraphId, String> {
+        pairs.iter().map(|&(g, n)| (g, n.to_string())).collect()
+    }
+
+    /// Build `f(x) = x * x + c` with optional arena padding before it, so
+    /// the same structure lands on different NodeIds.
+    fn build_f(m: &mut Module, pad: usize, c: f64) -> GraphId {
+        for i in 0..pad {
+            m.constant(Const::F64(1000.0 + i as f64));
+        }
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let sq = m.apply_prim(f, Prim::Mul, &[x, x]);
+        let cc = m.constant(Const::F64(c));
+        let r = m.apply_prim(f, Prim::Add, &[sq, cc]);
+        m.set_return(f, r);
+        f
+    }
+
+    #[test]
+    fn stable_across_arena_positions() {
+        let mut m1 = Module::new();
+        let f1 = build_f(&mut m1, 0, 2.0);
+        let mut m2 = Module::new();
+        let f2 = build_f(&mut m2, 7, 2.0);
+        assert_eq!(content_fingerprint(&m1, f1), content_fingerprint(&m2, f2));
+    }
+
+    #[test]
+    fn sensitive_to_structure() {
+        let mut m1 = Module::new();
+        let f1 = build_f(&mut m1, 0, 2.0);
+        let mut m2 = Module::new();
+        let f2 = build_f(&mut m2, 0, 3.0);
+        assert_ne!(content_fingerprint(&m1, f1), content_fingerprint(&m2, f2));
+    }
+
+    /// caller(x) = callee(x) + 1; editing the callee's body must leave the
+    /// caller's boundary-local fingerprint untouched (that separation is
+    /// what lets the query engine skip unaffected dependents), while the
+    /// boundary-free content fingerprint must change.
+    #[test]
+    fn boundary_isolates_callee_edits() {
+        let build = |callee_c: f64| -> (Module, GraphId, GraphId) {
+            let mut m = Module::new();
+            let callee = m.add_graph("callee");
+            let y = m.add_parameter(callee, "y");
+            let c = m.constant(Const::F64(callee_c));
+            let body = m.apply_prim(callee, Prim::Mul, &[y, c]);
+            m.set_return(callee, body);
+            let caller = m.add_graph("caller");
+            let x = m.add_parameter(caller, "x");
+            let gc = m.graph_constant(callee);
+            let call = m.apply(caller, vec![gc, x]);
+            let one = m.constant(Const::F64(1.0));
+            let r = m.apply_prim(caller, Prim::Add, &[call, one]);
+            m.set_return(caller, r);
+            (m, caller, callee)
+        };
+        let (m1, caller1, callee1) = build(2.0);
+        let (m2, caller2, callee2) = build(5.0);
+        let b1 = boundary_of(&[(caller1, "caller"), (callee1, "callee")]);
+        let b2 = boundary_of(&[(caller2, "caller"), (callee2, "callee")]);
+        let fp1 = graph_fingerprint(&m1, caller1, &b1);
+        let fp2 = graph_fingerprint(&m2, caller2, &b2);
+        assert_eq!(fp1.local, fp2.local, "caller local fp must ignore callee bodies");
+        assert_eq!(fp1.callees, vec!["callee".to_string()]);
+        // The callee's own local fingerprint sees the edit...
+        assert_ne!(
+            graph_fingerprint(&m1, callee1, &b1).local,
+            graph_fingerprint(&m2, callee2, &b2).local
+        );
+        // ...and so does the boundary-free content fingerprint of the caller.
+        assert_ne!(content_fingerprint(&m1, caller1), content_fingerprint(&m2, caller2));
+    }
+
+    #[test]
+    fn recursion_terminates_and_is_stable() {
+        // loop(n) = loop(n + x) with x free — self-reference through a
+        // graph constant plus a free variable into the parent.
+        let build = |pad: usize| -> (Module, GraphId) {
+            let mut m = Module::new();
+            for i in 0..pad {
+                m.constant(Const::I64(i as i64));
+            }
+            let f = m.add_graph("f");
+            let x = m.add_parameter(f, "x");
+            let l = m.add_graph("loop");
+            let n = m.add_parameter(l, "n");
+            let body = m.apply_prim(l, Prim::Add, &[n, x]);
+            let lc = m.graph_constant(l);
+            let rec = m.apply(l, vec![lc, body]);
+            m.set_return(l, rec);
+            let lc2 = m.graph_constant(l);
+            let call = m.apply(f, vec![lc2, x]);
+            m.set_return(f, call);
+            (m, f)
+        };
+        let (m1, f1) = build(0);
+        let (m2, f2) = build(3);
+        assert_eq!(content_fingerprint(&m1, f1), content_fingerprint(&m2, f2));
+    }
+}

@@ -16,6 +16,7 @@
 
 mod analysis;
 mod clone;
+mod fingerprint;
 mod fused;
 mod module;
 mod prim;
@@ -23,6 +24,7 @@ mod printer;
 
 pub use analysis::{analyze, ScopeAnalysis};
 pub use clone::{clone_closure, CloneResult};
+pub use fingerprint::{content_fingerprint, graph_fingerprint, GraphFingerprint};
 pub use fused::{FusedExpr, FusedOp, MAX_FUSED_INPUTS, MAX_FUSED_OPS, MAX_FUSED_STACK};
 pub use module::{Graph, Module};
 pub use prim::Prim;

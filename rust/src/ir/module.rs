@@ -143,6 +143,82 @@ impl Module {
         id
     }
 
+    /// Rebuild a module from bare arenas — the deserialization entry point
+    /// for the disk artifact cache (`runtime/diskcache.rs`). The derived
+    /// indexes (use lists, return uses, constant dedup cache) are
+    /// reconstructed from the node/graph data, then [`Module::validate`] runs
+    /// so a corrupted or hand-forged payload is rejected instead of
+    /// panicking later inside the compiler.
+    pub fn from_raw(nodes: Vec<Node>, graphs: Vec<Graph>) -> Result<Module, String> {
+        let n_nodes = nodes.len();
+        let n_graphs = graphs.len();
+        let in_node_range = |id: NodeId| (id.0 as usize) < n_nodes;
+        let in_graph_range = |id: GraphId| (id.0 as usize) < n_graphs;
+        for (i, node) in nodes.iter().enumerate() {
+            if let Some(g) = node.graph {
+                if !in_graph_range(g) {
+                    return Err(format!("node %{i} owned by missing graph {g}"));
+                }
+            }
+            for &inp in node.inputs() {
+                if !in_node_range(inp) {
+                    return Err(format!("node %{i} references missing node {inp}"));
+                }
+            }
+            if let Some(Const::Graph(g)) = node.constant() {
+                if !in_graph_range(*g) {
+                    return Err(format!("node %{i} references missing graph {g}"));
+                }
+            }
+        }
+        for (gi, graph) in graphs.iter().enumerate() {
+            for &p in &graph.params {
+                if !in_node_range(p) {
+                    return Err(format!("graph @{gi} has missing parameter node {p}"));
+                }
+            }
+            if let Some(r) = graph.ret {
+                if !in_node_range(r) {
+                    return Err(format!("graph @{gi} returns missing node {r}"));
+                }
+            }
+        }
+        let mut m = Module {
+            nodes,
+            graphs,
+            uses: vec![Vec::new(); n_nodes],
+            ret_uses: HashMap::new(),
+            const_cache: HashMap::new(),
+            journal: Vec::new(),
+            journal_on: false,
+        };
+        for i in 0..n_nodes {
+            let id = NodeId(i as u32);
+            // Clone the input list to sidestep the simultaneous &self/&mut
+            // self borrow; input lists are short.
+            let inputs = m.nodes[i].inputs().to_vec();
+            for (idx, inp) in inputs.into_iter().enumerate() {
+                m.uses[inp.0 as usize].push((id, idx));
+            }
+            if let Some(c) = m.nodes[i].constant() {
+                let fp = c.fingerprint();
+                m.const_cache.entry(fp).or_default().push(id);
+            }
+        }
+        for gi in 0..n_graphs {
+            if let Some(r) = m.graphs[gi].ret {
+                m.ret_uses.entry(r).or_default().push(GraphId(gi as u32));
+            }
+        }
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// The bare arenas, for serialization (paired with [`Module::from_raw`]).
+    pub fn raw_parts(&self) -> (&[Node], &[Graph]) {
+        (&self.nodes, &self.graphs)
+    }
+
     // ---- accessors --------------------------------------------------------
 
     pub fn node(&self, id: NodeId) -> &Node {
@@ -675,6 +751,36 @@ mod tests {
         assert_eq!(m.graph_constant_node(g), None);
         let gc = m.graph_constant(g);
         assert_eq!(m.graph_constant_node(g), Some(gc));
+    }
+
+    #[test]
+    fn from_raw_round_trips_and_validates() {
+        let (m, f, _) = sample_module();
+        let (nodes, graphs) = m.raw_parts();
+        let m2 = Module::from_raw(nodes.to_vec(), graphs.to_vec()).unwrap();
+        m2.validate().unwrap();
+        assert_eq!(m2.num_nodes(), m.num_nodes());
+        assert_eq!(m2.num_graphs(), m.num_graphs());
+        assert_eq!(m2.topo_order(f), m.topo_order(f));
+        // Derived indexes rebuilt exactly.
+        for i in 0..m.num_nodes() {
+            let id = NodeId(i as u32);
+            assert_eq!(m2.uses(id), m.uses(id));
+        }
+        // The constant dedup cache is live again: interning an existing
+        // constant must return the original node, not allocate.
+        let mut m3 = m2.clone();
+        let before = m3.num_nodes();
+        m3.constant(Const::F64(2.0));
+        assert_eq!(m3.num_nodes(), before);
+
+        // Out-of-range references are rejected, not panicked on.
+        let (nodes, graphs) = m.raw_parts();
+        let mut bad = nodes.to_vec();
+        if let NodeKind::Apply(inputs) = &mut bad.last_mut().unwrap().kind {
+            inputs[0] = NodeId(9999);
+        }
+        assert!(Module::from_raw(bad, graphs.to_vec()).is_err());
     }
 
     #[test]

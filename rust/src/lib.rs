@@ -25,9 +25,15 @@
 //!   (§4.2).
 //! * [`vm`] — Myia's virtual machine: a closure-converted register-bytecode
 //!   interpreter with proper tail calls.
+//! * [`query`] — the memoized, dependency-tracked compilation query engine
+//!   (rustc-query style): compilation runs as a DAG of fingerprint-keyed
+//!   queries with red-green revalidation, so editing one function re-runs
+//!   only the queries that depend on it.
 //! * [`backend`] + [`runtime`] — the compiled backend for straight-line graph
 //!   segments (the paper used TVM; we lower to XLA and execute via PJRT), and
-//!   the loader for AOT artifacts produced by the JAX/Pallas build path.
+//!   the persistent on-disk artifact cache
+//!   ([`runtime::diskcache::DiskCache`]) that lets a fresh process start
+//!   with warm compiles.
 //! * [`coordinator`] — the end-to-end driver and CLI, built around a
 //!   compile/run split: [`coordinator::Engine`] owns a parsed module and a
 //!   sharded artifact cache, [`coordinator::Engine::trace`] returns a
@@ -35,8 +41,9 @@
 //!   `.value_and_grad()`, `.vmap()`, `.jit(Backend)`, and `.compile()`,
 //!   which yields an `Arc<`[`coordinator::Executable`]`>` — an immutable,
 //!   `Send + Sync` artifact callable from any number of threads. Compiled
-//!   artifacts are cached per (entry, pipeline fingerprint, argument-type
-//!   signature).
+//!   artifacts are cached per (entry, pipeline fingerprint, deep module
+//!   fingerprint, argument-type signature), with an optional disk tier
+//!   behind `MYIA_CACHE_DIR` / [`coordinator::Engine::with_cache_dir`].
 //! * [`serve`] — the async micro-batching serving subsystem: a std-only
 //!   [`serve::Server`] that coalesces concurrent single-example requests
 //!   into one call of the vmapped pipeline (queue → batcher → vmapped
@@ -57,6 +64,7 @@ pub mod ad;
 pub mod opt;
 pub mod transform;
 pub mod types;
+pub mod query;
 pub mod runtime;
 pub mod backend;
 pub mod baselines;

@@ -1,0 +1,551 @@
+//! Memoized, dependency-tracked compilation queries (rustc-query style) —
+//! the incremental core the [`crate::coordinator::Engine`] compiles through.
+//!
+//! Compilation is phrased as a DAG of queries per entry point:
+//!
+//! ```text
+//! parse(module) ──> graph_fingerprint(fn)*           (one per top-level fn)
+//!                        │
+//!                        ▼  deep fp of the entry's callee closure
+//!                   ad_expand(entry)
+//!                        │
+//!                        ▼  content fp of the expanded IR
+//!                   stage queries (grad / vmap / optimize, in pipeline order)
+//!                        │
+//!                        ├──> typecheck(entry, sig)   (when specialized)
+//!                        ▼
+//!                   codegen(entry, backend, sig)
+//! ```
+//!
+//! Each query is keyed by a label and an **input fingerprint** — a structural
+//! hash of everything the query reads ([`crate::ir::graph_fingerprint`] /
+//! [`crate::ir::content_fingerprint`], mixed with pipeline/backend/signature
+//! keys). Revalidation is the red-green algorithm in miniature:
+//!
+//! * **memo** — same revision, same input fingerprint: the query was already
+//!   answered this revision; return the stored value.
+//! * **green** — a *new* revision (the module was edited via
+//!   `Engine::update_source`), but the query's recomputed input fingerprint
+//!   equals the stored one: the edit didn't reach this query, so the stored
+//!   value is still valid. Mark it verified for the current revision and
+//!   return it without executing anything.
+//! * **executed** (red) — no stored value, or the input fingerprint changed:
+//!   run the query for real and store the result.
+//!
+//! Because stage query inputs chain through *content* fingerprints of the
+//! previous stage's output IR, an edit that an early stage absorbs (e.g. a
+//! change constant-folded away) turns every later query green automatically.
+//!
+//! All counters are relaxed atomics ([`crate::serve::metrics::Counter`]) so
+//! telemetry can be asserted from tests without synchronizing the compile
+//! path; the memo table itself is one `Mutex` that is **never held while a
+//! query executes** — concurrent compiles race politely (both may execute;
+//! the first insert wins and both callers get the winner's value, preserving
+//! `Arc` identity for the artifact-sharing guarantees of PR 3).
+
+use crate::coordinator::Executable;
+use crate::ir::{graph_fingerprint, GraphFingerprint, GraphId, Module};
+use crate::serve::metrics::Counter;
+use crate::transform::StageMetrics;
+use crate::types::AType;
+use anyhow::{anyhow, Result};
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{HashMap, HashSet};
+use std::hash::{Hash, Hasher};
+use std::sync::{Arc, Mutex};
+
+/// The query families of the compilation DAG.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QueryKind {
+    /// Source → lowered module (re-runs on every `update_source`).
+    Parse,
+    /// Per-function structural fingerprint (executed = fn changed).
+    GraphFingerprint,
+    /// Signature type/shape inference against the transformed IR.
+    Typecheck,
+    /// Macro expansion and AD/vmap source transformations.
+    AdExpand,
+    /// The optimizer pass set.
+    Optimize,
+    /// IR → VM program (+ XLA segments), wrapped as an [`Executable`].
+    Codegen,
+}
+
+impl QueryKind {
+    pub const ALL: [QueryKind; 6] = [
+        QueryKind::Parse,
+        QueryKind::GraphFingerprint,
+        QueryKind::Typecheck,
+        QueryKind::AdExpand,
+        QueryKind::Optimize,
+        QueryKind::Codegen,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QueryKind::Parse => "parse",
+            QueryKind::GraphFingerprint => "graph_fingerprint",
+            QueryKind::Typecheck => "typecheck",
+            QueryKind::AdExpand => "ad_expand",
+            QueryKind::Optimize => "optimize",
+            QueryKind::Codegen => "codegen",
+        }
+    }
+}
+
+/// Live per-kind execution counters.
+#[derive(Debug, Default)]
+pub struct KindCounters {
+    /// Queries that ran for real (red, or first computation).
+    pub executed: Counter,
+    /// Queries revalidated across a revision without running (green).
+    pub green: Counter,
+    /// Same-revision memoized answers.
+    pub memo: Counter,
+}
+
+impl KindCounters {
+    fn snapshot(&self) -> KindSnapshot {
+        KindSnapshot {
+            executed: self.executed.get(),
+            green: self.green.get(),
+            memo: self.memo.get(),
+        }
+    }
+}
+
+/// Point-in-time copy of one kind's counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KindSnapshot {
+    pub executed: u64,
+    pub green: u64,
+    pub memo: u64,
+}
+
+/// Live query telemetry, indexed by [`QueryKind`].
+#[derive(Debug, Default)]
+pub struct QueryStats {
+    pub parse: KindCounters,
+    pub graph_fingerprint: KindCounters,
+    pub typecheck: KindCounters,
+    pub ad_expand: KindCounters,
+    pub optimize: KindCounters,
+    pub codegen: KindCounters,
+}
+
+impl QueryStats {
+    pub fn of(&self, kind: QueryKind) -> &KindCounters {
+        match kind {
+            QueryKind::Parse => &self.parse,
+            QueryKind::GraphFingerprint => &self.graph_fingerprint,
+            QueryKind::Typecheck => &self.typecheck,
+            QueryKind::AdExpand => &self.ad_expand,
+            QueryKind::Optimize => &self.optimize,
+            QueryKind::Codegen => &self.codegen,
+        }
+    }
+
+    pub fn snapshot(&self) -> QueryStatsSnapshot {
+        QueryStatsSnapshot {
+            parse: self.parse.snapshot(),
+            graph_fingerprint: self.graph_fingerprint.snapshot(),
+            typecheck: self.typecheck.snapshot(),
+            ad_expand: self.ad_expand.snapshot(),
+            optimize: self.optimize.snapshot(),
+            codegen: self.codegen.snapshot(),
+        }
+    }
+}
+
+/// Point-in-time copy of all query counters (what tests assert deltas on).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueryStatsSnapshot {
+    pub parse: KindSnapshot,
+    pub graph_fingerprint: KindSnapshot,
+    pub typecheck: KindSnapshot,
+    pub ad_expand: KindSnapshot,
+    pub optimize: KindSnapshot,
+    pub codegen: KindSnapshot,
+}
+
+impl QueryStatsSnapshot {
+    pub fn of(&self, kind: QueryKind) -> KindSnapshot {
+        match kind {
+            QueryKind::Parse => self.parse,
+            QueryKind::GraphFingerprint => self.graph_fingerprint,
+            QueryKind::Typecheck => self.typecheck,
+            QueryKind::AdExpand => self.ad_expand,
+            QueryKind::Optimize => self.optimize,
+            QueryKind::Codegen => self.codegen,
+        }
+    }
+
+    /// Total queries executed (red) across all kinds.
+    pub fn total_executed(&self) -> u64 {
+        QueryKind::ALL.iter().map(|&k| self.of(k).executed).sum()
+    }
+
+    /// Total green revalidations across all kinds.
+    pub fn total_green(&self) -> u64 {
+        QueryKind::ALL.iter().map(|&k| self.of(k).green).sum()
+    }
+}
+
+/// The result of an IR-producing query (ad_expand or one pipeline stage):
+/// the transformed module snapshot plus the content fingerprint that keys
+/// the next stage.
+#[derive(Debug)]
+pub struct IrSnapshot {
+    pub module: Module,
+    pub entry: GraphId,
+    /// Content fingerprint of `module` at `entry` — the next query's input.
+    pub output_fp: u64,
+    /// The stage's metrics as originally executed (a memoized or green reuse
+    /// reports the original timing — document, don't re-time).
+    pub stage: StageMetrics,
+    /// Reachable node count *before* this stage ran.
+    pub nodes_before: usize,
+}
+
+/// A memoizable query result.
+#[derive(Clone)]
+enum QueryValue {
+    Ir(Arc<IrSnapshot>),
+    Type(AType),
+    Exec(Arc<Executable>),
+}
+
+struct Memoized {
+    input_fp: u64,
+    /// Revision this entry was last verified (executed or green) at.
+    verified_rev: u64,
+    value: QueryValue,
+}
+
+/// Deep-fingerprint memo: `(revision computed at, deep fp, callee closure)`.
+struct DeepEntry {
+    rev: u64,
+    fp: u64,
+    deps: Arc<[String]>,
+}
+
+#[derive(Default)]
+struct State {
+    /// Bumped by every [`QueryEngine::begin_revision`].
+    revision: u64,
+    /// Per-function boundary-local fingerprints at the current revision.
+    fns: HashMap<String, GraphFingerprint>,
+    /// Per-function deep (transitive-closure) fingerprints, current revision.
+    deep: HashMap<String, DeepEntry>,
+    memo: HashMap<(QueryKind, String), Memoized>,
+}
+
+/// The memoized query engine: per-function fingerprints, the red-green memo
+/// table, and execution telemetry. One instance lives inside each
+/// [`crate::coordinator::Engine`]; all methods take `&self`.
+#[derive(Default)]
+pub struct QueryEngine {
+    stats: QueryStats,
+    state: Mutex<State>,
+}
+
+impl QueryEngine {
+    pub fn new() -> QueryEngine {
+        QueryEngine::default()
+    }
+
+    pub fn stats(&self) -> &QueryStats {
+        &self.stats
+    }
+
+    pub fn snapshot(&self) -> QueryStatsSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// Install a new module revision: recompute every top-level function's
+    /// boundary-local fingerprint and count, per function, whether it
+    /// changed (`graph_fingerprint.executed`) or survived (`green`). Called
+    /// once at construction and once per `Engine::update_source`.
+    ///
+    /// Stage/codegen memo entries are *not* cleared — they revalidate lazily
+    /// (green) the next time each query is asked for.
+    pub fn begin_revision(&self, module: &Module, graphs: &HashMap<String, GraphId>) {
+        let boundary: HashMap<GraphId, String> =
+            graphs.iter().map(|(n, &g)| (g, n.clone())).collect();
+        // Deterministic order for counter attribution.
+        let mut names: Vec<&String> = graphs.keys().collect();
+        names.sort();
+        let mut fresh: HashMap<String, GraphFingerprint> = HashMap::with_capacity(graphs.len());
+        let mut st = self.state.lock().expect("query state poisoned");
+        self.stats.parse.executed.inc();
+        for name in names {
+            let fp = graph_fingerprint(module, graphs[name], &boundary);
+            match st.fns.get(name) {
+                Some(old) if st.revision > 0 && *old == fp => {
+                    self.stats.graph_fingerprint.green.inc()
+                }
+                _ => self.stats.graph_fingerprint.executed.inc(),
+            }
+            fresh.insert(name.clone(), fp);
+        }
+        st.fns = fresh;
+        st.deep.clear();
+        st.revision += 1;
+    }
+
+    /// Deep fingerprint of `name`: a hash over the sorted
+    /// `(function, local fingerprint)` pairs of its transitive callee
+    /// closure (including itself). Cycle-safe — recursion appears as a name,
+    /// never a traversal. Returns the fingerprint and the closure (sorted),
+    /// or `None` for an unknown function. Memoized per revision.
+    pub fn entry_fingerprint(&self, name: &str) -> Option<(u64, Arc<[String]>)> {
+        let mut st = self.state.lock().expect("query state poisoned");
+        let rev = st.revision;
+        if let Some(d) = st.deep.get(name) {
+            if d.rev == rev {
+                return Some((d.fp, d.deps.clone()));
+            }
+        }
+        st.fns.get(name)?;
+        let mut closure: HashSet<String> = HashSet::new();
+        let mut stack = vec![name.to_string()];
+        while let Some(n) = stack.pop() {
+            if !closure.insert(n.clone()) {
+                continue;
+            }
+            if let Some(fp) = st.fns.get(&n) {
+                for c in &fp.callees {
+                    if !closure.contains(c) {
+                        stack.push(c.clone());
+                    }
+                }
+            }
+        }
+        let mut members: Vec<String> = closure.into_iter().collect();
+        members.sort();
+        let mut h = DefaultHasher::new();
+        for m in &members {
+            m.hash(&mut h);
+            match st.fns.get(m) {
+                Some(fp) => fp.local.hash(&mut h),
+                // Unresolved name (not a top-level fn — e.g. a builtin):
+                // hash a marker so the set is still covered.
+                None => 0u64.hash(&mut h),
+            }
+        }
+        let fp = h.finish();
+        let deps: Arc<[String]> = members.into();
+        st.deep.insert(name.to_string(), DeepEntry { rev, fp, deps: deps.clone() });
+        Some((fp, deps))
+    }
+
+    /// The transitive callee closure of `name` (sorted, includes `name`) —
+    /// the dependency edge set recorded for its compilation queries.
+    pub fn dependencies(&self, name: &str) -> Option<Vec<String>> {
+        self.entry_fingerprint(name).map(|(_, deps)| deps.to_vec())
+    }
+
+    /// Current revision number (bumped by [`QueryEngine::begin_revision`]).
+    pub fn revision(&self) -> u64 {
+        self.state.lock().expect("query state poisoned").revision
+    }
+
+    /// The red-green core. Returns the memoized value when `input_fp`
+    /// matches (counting `memo` same-revision / `green` across revisions);
+    /// otherwise executes `run` **without holding the lock** and stores the
+    /// result. Two racers may both execute; the first insert wins and both
+    /// get the winner's value.
+    fn get_with<F>(&self, kind: QueryKind, label: &str, input_fp: u64, run: F) -> Result<QueryValue>
+    where
+        F: FnOnce() -> Result<QueryValue>,
+    {
+        {
+            let mut st = self.state.lock().expect("query state poisoned");
+            let rev = st.revision;
+            if let Some(m) = st.memo.get_mut(&(kind, label.to_string())) {
+                if m.input_fp == input_fp {
+                    if m.verified_rev == rev {
+                        self.stats.of(kind).memo.inc();
+                    } else {
+                        m.verified_rev = rev;
+                        self.stats.of(kind).green.inc();
+                    }
+                    return Ok(m.value.clone());
+                }
+            }
+        }
+        self.stats.of(kind).executed.inc();
+        let value = run()?;
+        let mut st = self.state.lock().expect("query state poisoned");
+        let rev = st.revision;
+        match st.memo.get(&(kind, label.to_string())) {
+            Some(m) if m.input_fp == input_fp => Ok(m.value.clone()),
+            _ => {
+                st.memo.insert(
+                    (kind, label.to_string()),
+                    Memoized { input_fp, verified_rev: rev, value: value.clone() },
+                );
+                Ok(value)
+            }
+        }
+    }
+
+    /// IR-producing query (ad_expand / pipeline stage).
+    pub fn get_ir<F>(
+        &self,
+        kind: QueryKind,
+        label: &str,
+        input_fp: u64,
+        run: F,
+    ) -> Result<Arc<IrSnapshot>>
+    where
+        F: FnOnce() -> Result<Arc<IrSnapshot>>,
+    {
+        match self.get_with(kind, label, input_fp, || run().map(QueryValue::Ir))? {
+            QueryValue::Ir(v) => Ok(v),
+            _ => Err(anyhow!("query `{label}` memoized under the wrong kind")),
+        }
+    }
+
+    /// Typecheck query: inferred return type for a signature.
+    pub fn get_type<F>(&self, label: &str, input_fp: u64, run: F) -> Result<AType>
+    where
+        F: FnOnce() -> Result<AType>,
+    {
+        match self.get_with(QueryKind::Typecheck, label, input_fp, || run().map(QueryValue::Type))?
+        {
+            QueryValue::Type(v) => Ok(v),
+            _ => Err(anyhow!("query `{label}` memoized under the wrong kind")),
+        }
+    }
+
+    /// Codegen query: the final executable artifact.
+    pub fn get_exec<F>(&self, label: &str, input_fp: u64, run: F) -> Result<Arc<Executable>>
+    where
+        F: FnOnce() -> Result<Arc<Executable>>,
+    {
+        match self.get_with(QueryKind::Codegen, label, input_fp, || run().map(QueryValue::Exec))? {
+            QueryValue::Exec(v) => Ok(v),
+            _ => Err(anyhow!("query `{label}` memoized under the wrong kind")),
+        }
+    }
+}
+
+/// Mix an input fingerprint with extra key material (pipeline stage keys,
+/// backend, signature tokens). Order-sensitive by design.
+pub fn mix_fp(base: u64, parts: &[&str]) -> u64 {
+    let mut h = DefaultHasher::new();
+    base.hash(&mut h);
+    for p in parts {
+        p.hash(&mut h);
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parser::compile_source;
+
+    fn engine_state(src: &str) -> (Module, HashMap<String, GraphId>) {
+        let mut m = Module::new();
+        let graphs = compile_source(&mut m, src).unwrap();
+        (m, graphs)
+    }
+
+    const SRC_V1: &str = "\
+def leaf(x):
+    return x * x
+
+def mid(x):
+    return leaf(x) + 1.0
+
+def other(x):
+    return x - 3.0
+";
+
+    const SRC_V2: &str = "\
+def leaf(x):
+    return x * x + 2.0
+
+def mid(x):
+    return leaf(x) + 1.0
+
+def other(x):
+    return x - 3.0
+";
+
+    #[test]
+    fn revision_counts_changed_functions() {
+        let q = QueryEngine::new();
+        let (m1, g1) = engine_state(SRC_V1);
+        q.begin_revision(&m1, &g1);
+        let s = q.snapshot();
+        assert_eq!(s.parse.executed, 1);
+        assert_eq!(s.graph_fingerprint.executed, 3);
+        assert_eq!(s.graph_fingerprint.green, 0);
+
+        // Reparse of an edit touching only `leaf`: exactly one red fn.
+        let (m2, g2) = engine_state(SRC_V2);
+        q.begin_revision(&m2, &g2);
+        let s = q.snapshot();
+        assert_eq!(s.parse.executed, 2);
+        assert_eq!(s.graph_fingerprint.executed, 4, "{s:?}");
+        assert_eq!(s.graph_fingerprint.green, 2, "{s:?}");
+    }
+
+    #[test]
+    fn deep_fingerprint_tracks_callee_closure() {
+        let q = QueryEngine::new();
+        let (m1, g1) = engine_state(SRC_V1);
+        q.begin_revision(&m1, &g1);
+        let (mid1, deps) = q.entry_fingerprint("mid").unwrap();
+        assert_eq!(deps.to_vec(), vec!["leaf".to_string(), "mid".to_string()]);
+        let (other1, _) = q.entry_fingerprint("other").unwrap();
+        assert!(q.entry_fingerprint("nope").is_none());
+
+        let (m2, g2) = engine_state(SRC_V2);
+        q.begin_revision(&m2, &g2);
+        let (mid2, _) = q.entry_fingerprint("mid").unwrap();
+        let (other2, _) = q.entry_fingerprint("other").unwrap();
+        // `mid` transitively depends on the edited `leaf`; `other` doesn't.
+        assert_ne!(mid1, mid2);
+        assert_eq!(other1, other2);
+    }
+
+    #[test]
+    fn red_green_memoization() {
+        let q = QueryEngine::new();
+        let (m1, g1) = engine_state(SRC_V1);
+        q.begin_revision(&m1, &g1);
+
+        let run = |q: &QueryEngine, fp: u64| {
+            q.get_type("typecheck:mid", fp, || Ok(AType::F64)).unwrap()
+        };
+        // First ask: executed. Second ask, same revision: memo.
+        run(&q, 7);
+        run(&q, 7);
+        let s = q.snapshot();
+        assert_eq!((s.typecheck.executed, s.typecheck.memo, s.typecheck.green), (1, 1, 0));
+
+        // New revision, unchanged fingerprint: green, not executed.
+        let (m2, g2) = engine_state(SRC_V1);
+        q.begin_revision(&m2, &g2);
+        run(&q, 7);
+        let s = q.snapshot();
+        assert_eq!((s.typecheck.executed, s.typecheck.memo, s.typecheck.green), (1, 1, 1));
+
+        // Changed fingerprint: red — executes and replaces the entry.
+        run(&q, 8);
+        run(&q, 8);
+        let s = q.snapshot();
+        assert_eq!((s.typecheck.executed, s.typecheck.memo, s.typecheck.green), (2, 2, 1));
+    }
+
+    #[test]
+    fn mix_fp_is_order_sensitive() {
+        assert_ne!(mix_fp(1, &["a", "b"]), mix_fp(1, &["b", "a"]));
+        assert_ne!(mix_fp(1, &["a"]), mix_fp(2, &["a"]));
+        assert_eq!(mix_fp(3, &["x", "y"]), mix_fp(3, &["x", "y"]));
+    }
+}

@@ -1,0 +1,1006 @@
+//! Persistent on-disk artifact cache — the cold tier below the Engine's
+//! sharded in-memory artifact cache.
+//!
+//! Compiled artifacts (the post-transform IR module plus signature/metric
+//! metadata) serialize to one file per `(entry, pipeline fingerprint,
+//! signature, module fingerprint)` key inside a cache directory, so a fresh
+//! process — e.g. a member of a serving fleet pointed at a shared
+//! `MYIA_CACHE_DIR` — skips macro expansion, AD transformation, and the
+//! optimizer entirely and goes straight to codegen (which is deterministic,
+//! so the reloaded artifact executes bit-identically to a cold compile).
+//!
+//! ## File format (version [`SCHEMA_VERSION`])
+//!
+//! ```text
+//! magic   b"MYIC"                      4 bytes
+//! schema  u32 LE                       bumped on any layout change
+//! length  u64 LE                       payload byte count
+//! check   u64 LE                       FNV-1a 64 over the payload
+//! payload key block (entry, pipeline spec, signature token, module fp)
+//!         signature + return type      tag-encoded `AType`s
+//!         metrics                      7 × u64
+//!         entry graph id, graph arena, node arena
+//! ```
+//!
+//! Everything is hand-rolled little-endian (the offline crate set has no
+//! serde); every read is bounds-checked and every container count is
+//! sanity-checked against the bytes remaining, so a truncated, corrupted, or
+//! hand-forged file yields an `Err` — never a panic or an over-allocation.
+//! Deserialized modules additionally pass [`Module::from_raw`]'s structural
+//! validation before they are handed to the compiler.
+//!
+//! Writes go to a temp file in the same directory followed by an atomic
+//! `rename`, so concurrent writers (or a crash mid-write) can never leave a
+//! half-written file under a final name. The engine treats every `Err` from
+//! [`DiskCache::load`] as "invalid tier entry": it counts it, deletes the
+//! file (best effort), and falls back to a cold compile.
+
+use crate::ir::{Const, FusedExpr, FusedOp, Graph, GraphId, MacroOp, Module, Node, NodeId, NodeKind, Prim};
+use crate::tensor::{Buffer, DType, Tensor};
+use crate::types::AType;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Bump on ANY change to the serialized layout. Old files then read as
+/// stale and degrade to a cold compile (plus a rewrite under the new
+/// schema) instead of misparsing.
+pub const SCHEMA_VERSION: u32 = 1;
+
+const MAGIC: [u8; 4] = *b"MYIC";
+
+/// Cache key of one artifact. `signature` is the canonical signature token
+/// (`"generic"` or the `Display`-joined argument types); `module_fp` is the
+/// deep structural fingerprint of the entry's callee closure at compile
+/// time, so an edited function can never serve a stale artifact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactKey {
+    pub entry: String,
+    pub pipeline_spec: String,
+    pub signature: String,
+    pub module_fp: u64,
+}
+
+impl ArtifactKey {
+    /// File name: hex of an FNV-1a hash over every key component plus the
+    /// schema version. Filesystem-safe regardless of what characters the
+    /// entry name or signature contain.
+    pub fn file_name(&self) -> String {
+        let mut h = Fnv::new();
+        h.write(&SCHEMA_VERSION.to_le_bytes());
+        for part in [&self.entry, &self.pipeline_spec, &self.signature] {
+            h.write(part.as_bytes());
+            h.write(&[0xff]); // separator: ("ab","c") != ("a","bc")
+        }
+        h.write(&self.module_fp.to_le_bytes());
+        format!("{:016x}.myic", h.finish())
+    }
+}
+
+/// Compile metrics that survive the round trip (timings don't — a reloaded
+/// artifact reports its reload time as codegen time and zero elsewhere).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoredMeta {
+    pub macros_expanded: u64,
+    pub grad_transforms: u64,
+    pub nodes_after_lowering: u64,
+    pub nodes_after_expand: u64,
+    pub nodes_after_optimize: u64,
+    pub graphs_after_optimize: u64,
+    pub opt_iterations: u64,
+}
+
+/// A deserialized artifact: everything the engine needs to rebuild an
+/// `Executable` (codegen re-runs on load; it is deterministic and cheap
+/// relative to the transform pipeline).
+#[derive(Debug)]
+pub struct StoredArtifact {
+    pub module: Module,
+    pub entry: GraphId,
+    pub signature: Option<Vec<AType>>,
+    pub ret_type: Option<AType>,
+    pub meta: StoredMeta,
+}
+
+/// Handle on a cache directory.
+#[derive(Debug, Clone)]
+pub struct DiskCache {
+    dir: PathBuf,
+}
+
+impl DiskCache {
+    /// Open (creating if needed) a cache directory.
+    pub fn new(dir: impl Into<PathBuf>) -> Result<DiskCache, String> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| format!("creating cache dir {}: {e}", dir.display()))?;
+        Ok(DiskCache { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Load the artifact stored under `key`.
+    ///
+    /// * `Ok(None)` — no file: an ordinary disk miss.
+    /// * `Ok(Some(..))` — verified hit (magic, schema, checksum, key block
+    ///   and module validation all passed).
+    /// * `Err(reason)` — the file exists but is truncated/corrupt/stale;
+    ///   the offender is deleted best-effort so it can't fail again.
+    pub fn load(&self, key: &ArtifactKey) -> Result<Option<StoredArtifact>, String> {
+        let path = self.dir.join(key.file_name());
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(format!("reading {}: {e}", path.display())),
+        };
+        match parse_artifact(&bytes, key) {
+            Ok(a) => Ok(Some(a)),
+            Err(reason) => {
+                let _ = std::fs::remove_file(&path);
+                Err(format!("{}: {reason}", path.display()))
+            }
+        }
+    }
+
+    /// Serialize `artifact` under `key`: temp file + atomic rename.
+    pub fn store(&self, key: &ArtifactKey, artifact: &StoredArtifact) -> Result<(), String> {
+        let payload = encode_payload(key, artifact);
+        let mut file = Vec::with_capacity(payload.len() + 24);
+        file.extend_from_slice(&MAGIC);
+        file.extend_from_slice(&SCHEMA_VERSION.to_le_bytes());
+        file.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        file.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+        file.extend_from_slice(&payload);
+
+        let name = key.file_name();
+        let tmp = self.dir.join(format!(".tmp-{}-{}", name, std::process::id()));
+        let final_path = self.dir.join(&name);
+        std::fs::write(&tmp, &file).map_err(|e| format!("writing {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &final_path).map_err(|e| {
+            let _ = std::fs::remove_file(&tmp);
+            format!("renaming into {}: {e}", final_path.display())
+        })
+    }
+}
+
+// ---- FNV-1a 64 --------------------------------------------------------------
+// Explicit implementation (not `DefaultHasher`) so the on-disk checksum is
+// stable across Rust versions and binaries forever.
+
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = Fnv::new();
+    h.write(bytes);
+    h.finish()
+}
+
+// ---- byte writer ------------------------------------------------------------
+
+#[derive(Default)]
+struct W(Vec<u8>);
+
+impl W {
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn i64(&mut self, v: i64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+    fn boolean(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+    fn str(&mut self, s: &str) {
+        self.usize(s.len());
+        self.0.extend_from_slice(s.as_bytes());
+    }
+}
+
+// ---- byte reader ------------------------------------------------------------
+
+struct R<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> R<'a> {
+    fn new(bytes: &'a [u8]) -> R<'a> {
+        R { bytes, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.bytes.len() - self.pos < n {
+            return Err("unexpected end of payload".to_string());
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn i64(&mut self) -> Result<i64, String> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    fn usize(&mut self) -> Result<usize, String> {
+        usize::try_from(self.u64()?).map_err(|_| "length overflows usize".to_string())
+    }
+    fn boolean(&mut self) -> Result<bool, String> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(format!("invalid bool byte {b}")),
+        }
+    }
+
+    /// Read a container count and reject counts that could not possibly fit
+    /// in the remaining bytes (corrupt lengths must not drive allocation).
+    fn count(&mut self, min_elem_bytes: usize) -> Result<usize, String> {
+        let n = self.usize()?;
+        let remaining = self.bytes.len() - self.pos;
+        if n.saturating_mul(min_elem_bytes.max(1)) > remaining {
+            return Err(format!("count {n} exceeds remaining payload ({remaining} bytes)"));
+        }
+        Ok(n)
+    }
+
+    fn str(&mut self) -> Result<String, String> {
+        let n = self.count(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| "invalid utf-8 string".to_string())
+    }
+
+    fn done(&self) -> Result<(), String> {
+        if self.pos == self.bytes.len() {
+            Ok(())
+        } else {
+            Err(format!("{} trailing bytes after payload", self.bytes.len() - self.pos))
+        }
+    }
+}
+
+// ---- leaf encoders/decoders -------------------------------------------------
+
+fn dtype_tag(d: DType) -> u8 {
+    match d {
+        DType::F32 => 0,
+        DType::F64 => 1,
+        DType::I64 => 2,
+        DType::Bool => 3,
+    }
+}
+
+fn dtype_from(tag: u8) -> Result<DType, String> {
+    match tag {
+        0 => Ok(DType::F32),
+        1 => Ok(DType::F64),
+        2 => Ok(DType::I64),
+        3 => Ok(DType::Bool),
+        t => Err(format!("invalid dtype tag {t}")),
+    }
+}
+
+fn write_prim(w: &mut W, p: Prim) {
+    w.str(p.name());
+}
+
+fn read_prim(r: &mut R) -> Result<Prim, String> {
+    let name = r.str()?;
+    Prim::by_name(&name).ok_or_else(|| format!("unknown primitive `{name}`"))
+}
+
+fn write_tensor(w: &mut W, t: &Tensor) {
+    w.usize(t.shape().len());
+    for &d in t.shape() {
+        w.usize(d);
+    }
+    match t.buffer() {
+        Buffer::F32(v) => {
+            w.u8(0);
+            w.usize(v.len());
+            for &x in v {
+                w.u32(x.to_bits());
+            }
+        }
+        Buffer::F64(v) => {
+            w.u8(1);
+            w.usize(v.len());
+            for &x in v {
+                w.f64(x);
+            }
+        }
+        Buffer::I64(v) => {
+            w.u8(2);
+            w.usize(v.len());
+            for &x in v {
+                w.i64(x);
+            }
+        }
+        Buffer::Bool(v) => {
+            w.u8(3);
+            w.usize(v.len());
+            for &x in v {
+                w.boolean(x);
+            }
+        }
+    }
+}
+
+fn read_tensor(r: &mut R) -> Result<Tensor, String> {
+    let ndim = r.count(8)?;
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        shape.push(r.usize()?);
+    }
+    let tag = r.u8()?;
+    let buffer = match tag {
+        0 => {
+            let n = r.count(4)?;
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                v.push(f32::from_bits(r.u32()?));
+            }
+            Buffer::F32(v)
+        }
+        1 => {
+            let n = r.count(8)?;
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                v.push(r.f64()?);
+            }
+            Buffer::F64(v)
+        }
+        2 => {
+            let n = r.count(8)?;
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                v.push(r.i64()?);
+            }
+            Buffer::I64(v)
+        }
+        3 => {
+            let n = r.count(1)?;
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                v.push(r.boolean()?);
+            }
+            Buffer::Bool(v)
+        }
+        t => return Err(format!("invalid buffer tag {t}")),
+    };
+    Tensor::new(shape, buffer).map_err(|e| format!("invalid stored tensor: {e}"))
+}
+
+fn write_atype(w: &mut W, t: &AType) {
+    match t {
+        AType::Unit => w.u8(0),
+        AType::F64 => w.u8(1),
+        AType::I64 => w.u8(2),
+        AType::Bool => w.u8(3),
+        AType::Str => w.u8(4),
+        AType::Key => w.u8(5),
+        AType::ZeroT => w.u8(6),
+        AType::Env => w.u8(7),
+        AType::Tensor { dtype, shape } => {
+            w.u8(8);
+            w.u8(dtype_tag(*dtype));
+            w.usize(shape.len());
+            for d in shape {
+                match d {
+                    Some(d) => {
+                        w.u8(1);
+                        w.usize(*d);
+                    }
+                    None => w.u8(0),
+                }
+            }
+        }
+        AType::Tuple(items) => {
+            w.u8(9);
+            w.usize(items.len());
+            for it in items {
+                write_atype(w, it);
+            }
+        }
+        AType::Func(g) => {
+            w.u8(10);
+            w.u32(*g);
+        }
+        AType::FuncUnion(gs) => {
+            w.u8(11);
+            w.usize(gs.len());
+            for g in gs {
+                w.u32(*g);
+            }
+        }
+        AType::Prim(p) => {
+            w.u8(12);
+            write_prim(w, *p);
+        }
+        AType::Any => w.u8(13),
+    }
+}
+
+fn read_atype(r: &mut R) -> Result<AType, String> {
+    Ok(match r.u8()? {
+        0 => AType::Unit,
+        1 => AType::F64,
+        2 => AType::I64,
+        3 => AType::Bool,
+        4 => AType::Str,
+        5 => AType::Key,
+        6 => AType::ZeroT,
+        7 => AType::Env,
+        8 => {
+            let dtype = dtype_from(r.u8()?)?;
+            let ndim = r.count(1)?;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(match r.u8()? {
+                    0 => None,
+                    1 => Some(r.usize()?),
+                    b => return Err(format!("invalid shape option byte {b}")),
+                });
+            }
+            AType::Tensor { dtype, shape }
+        }
+        9 => {
+            let n = r.count(1)?;
+            let mut items = Vec::with_capacity(n);
+            for _ in 0..n {
+                items.push(read_atype(r)?);
+            }
+            AType::Tuple(items)
+        }
+        10 => AType::Func(r.u32()?),
+        11 => {
+            let n = r.count(4)?;
+            let mut gs = Vec::with_capacity(n);
+            for _ in 0..n {
+                gs.push(r.u32()?);
+            }
+            AType::FuncUnion(gs)
+        }
+        12 => AType::Prim(read_prim(r)?),
+        13 => AType::Any,
+        t => return Err(format!("invalid AType tag {t}")),
+    })
+}
+
+fn write_const(w: &mut W, c: &Const) {
+    match c {
+        Const::Unit => w.u8(0),
+        Const::F64(v) => {
+            w.u8(1);
+            w.f64(*v);
+        }
+        Const::I64(v) => {
+            w.u8(2);
+            w.i64(*v);
+        }
+        Const::Bool(v) => {
+            w.u8(3);
+            w.boolean(*v);
+        }
+        Const::Str(s) => {
+            w.u8(4);
+            w.str(s);
+        }
+        Const::Tensor(t) => {
+            w.u8(5);
+            write_tensor(w, t);
+        }
+        Const::Prim(p) => {
+            w.u8(6);
+            write_prim(w, *p);
+        }
+        Const::Graph(g) => {
+            w.u8(7);
+            w.u32(g.0);
+        }
+        Const::Key(k) => {
+            w.u8(8);
+            w.u64(*k);
+        }
+        Const::ZeroT => w.u8(9),
+        Const::Macro(op) => {
+            w.u8(10);
+            w.u8(match op {
+                MacroOp::Grad => 0,
+                MacroOp::ValueAndGrad => 1,
+                MacroOp::Jfwd => 2,
+            });
+        }
+        Const::Fused(e) => {
+            w.u8(11);
+            w.usize(e.n_inputs);
+            w.usize(e.ops.len());
+            for op in &e.ops {
+                match op {
+                    FusedOp::Input(i) => {
+                        w.u8(0);
+                        w.u8(*i);
+                    }
+                    FusedOp::ConstF64(v) => {
+                        w.u8(1);
+                        w.f64(*v);
+                    }
+                    FusedOp::ConstI64(v) => {
+                        w.u8(2);
+                        w.i64(*v);
+                    }
+                    FusedOp::Un(p) => {
+                        w.u8(3);
+                        write_prim(w, *p);
+                    }
+                    FusedOp::Bin(p) => {
+                        w.u8(4);
+                        write_prim(w, *p);
+                    }
+                    FusedOp::Where => w.u8(5),
+                    FusedOp::BroadcastTo(shape) => {
+                        w.u8(6);
+                        w.usize(shape.len());
+                        for &d in shape {
+                            w.usize(d);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn read_const(r: &mut R) -> Result<Const, String> {
+    Ok(match r.u8()? {
+        0 => Const::Unit,
+        1 => Const::F64(r.f64()?),
+        2 => Const::I64(r.i64()?),
+        3 => Const::Bool(r.boolean()?),
+        4 => Const::Str(r.str()?),
+        5 => Const::Tensor(read_tensor(r)?),
+        6 => Const::Prim(read_prim(r)?),
+        7 => Const::Graph(GraphId(r.u32()?)),
+        8 => Const::Key(r.u64()?),
+        9 => Const::ZeroT,
+        10 => Const::Macro(match r.u8()? {
+            0 => MacroOp::Grad,
+            1 => MacroOp::ValueAndGrad,
+            2 => MacroOp::Jfwd,
+            t => return Err(format!("invalid macro tag {t}")),
+        }),
+        11 => {
+            let n_inputs = r.usize()?;
+            let n_ops = r.count(2)?;
+            let mut ops = Vec::with_capacity(n_ops);
+            for _ in 0..n_ops {
+                ops.push(match r.u8()? {
+                    0 => FusedOp::Input(r.u8()?),
+                    1 => FusedOp::ConstF64(r.f64()?),
+                    2 => FusedOp::ConstI64(r.i64()?),
+                    3 => FusedOp::Un(read_prim(r)?),
+                    4 => FusedOp::Bin(read_prim(r)?),
+                    5 => FusedOp::Where,
+                    6 => {
+                        let ndim = r.count(8)?;
+                        let mut shape = Vec::with_capacity(ndim);
+                        for _ in 0..ndim {
+                            shape.push(r.usize()?);
+                        }
+                        FusedOp::BroadcastTo(shape)
+                    }
+                    t => return Err(format!("invalid fused op tag {t}")),
+                });
+            }
+            // Re-validate the stack discipline — corrupt programs must not
+            // reach the VM.
+            let expr = FusedExpr::new(n_inputs, ops)
+                .map_err(|e| format!("invalid stored fused expr: {e}"))?;
+            Const::Fused(Arc::new(expr))
+        }
+        t => return Err(format!("invalid const tag {t}")),
+    })
+}
+
+// ---- payload ----------------------------------------------------------------
+
+fn encode_payload(key: &ArtifactKey, artifact: &StoredArtifact) -> Vec<u8> {
+    let mut w = W::default();
+    // Key block: verified on load so a file-name hash collision (or a file
+    // copied between directories) can never serve the wrong artifact.
+    w.str(&key.entry);
+    w.str(&key.pipeline_spec);
+    w.str(&key.signature);
+    w.u64(key.module_fp);
+
+    match &artifact.signature {
+        Some(sig) => {
+            w.u8(1);
+            w.usize(sig.len());
+            for t in sig {
+                write_atype(&mut w, t);
+            }
+        }
+        None => w.u8(0),
+    }
+    match &artifact.ret_type {
+        Some(t) => {
+            w.u8(1);
+            write_atype(&mut w, t);
+        }
+        None => w.u8(0),
+    }
+
+    let m = artifact.meta;
+    for v in [
+        m.macros_expanded,
+        m.grad_transforms,
+        m.nodes_after_lowering,
+        m.nodes_after_expand,
+        m.nodes_after_optimize,
+        m.graphs_after_optimize,
+        m.opt_iterations,
+    ] {
+        w.u64(v);
+    }
+
+    w.u32(artifact.entry.0);
+    let (nodes, graphs) = artifact.module.raw_parts();
+    w.usize(graphs.len());
+    for g in graphs {
+        w.str(&g.name);
+        w.usize(g.params.len());
+        for p in &g.params {
+            w.u32(p.0);
+        }
+        match g.ret {
+            Some(r) => {
+                w.u8(1);
+                w.u32(r.0);
+            }
+            None => w.u8(0),
+        }
+    }
+    w.usize(nodes.len());
+    for n in nodes {
+        match &n.kind {
+            NodeKind::Apply(inputs) => {
+                w.u8(0);
+                w.usize(inputs.len());
+                for i in inputs {
+                    w.u32(i.0);
+                }
+            }
+            NodeKind::Parameter => w.u8(1),
+            NodeKind::Constant(c) => {
+                w.u8(2);
+                write_const(&mut w, c);
+            }
+        }
+        match n.graph {
+            Some(g) => {
+                w.u8(1);
+                w.u32(g.0);
+            }
+            None => w.u8(0),
+        }
+        match &n.debug_name {
+            Some(s) => {
+                w.u8(1);
+                w.str(s);
+            }
+            None => w.u8(0),
+        }
+    }
+    w.0
+}
+
+fn parse_artifact(bytes: &[u8], key: &ArtifactKey) -> Result<StoredArtifact, String> {
+    if bytes.len() < 24 {
+        return Err("file shorter than header".to_string());
+    }
+    if bytes[0..4] != MAGIC {
+        return Err("bad magic".to_string());
+    }
+    let schema = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if schema != SCHEMA_VERSION {
+        return Err(format!("schema version {schema} (expected {SCHEMA_VERSION})"));
+    }
+    let len = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    let check = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+    let payload = &bytes[24..];
+    if payload.len() as u64 != len {
+        return Err(format!("payload is {} bytes, header claims {len}", payload.len()));
+    }
+    if fnv1a(payload) != check {
+        return Err("checksum mismatch".to_string());
+    }
+
+    let mut r = R::new(payload);
+    let entry_name = r.str()?;
+    let pipeline_spec = r.str()?;
+    let signature_token = r.str()?;
+    let module_fp = r.u64()?;
+    if entry_name != key.entry
+        || pipeline_spec != key.pipeline_spec
+        || signature_token != key.signature
+        || module_fp != key.module_fp
+    {
+        return Err("key block does not match the requested key".to_string());
+    }
+
+    let signature = match r.u8()? {
+        0 => None,
+        1 => {
+            let n = r.count(1)?;
+            let mut sig = Vec::with_capacity(n);
+            for _ in 0..n {
+                sig.push(read_atype(&mut r)?);
+            }
+            Some(sig)
+        }
+        b => Err(format!("invalid option byte {b}"))?,
+    };
+    let ret_type = match r.u8()? {
+        0 => None,
+        1 => Some(read_atype(&mut r)?),
+        b => Err(format!("invalid option byte {b}"))?,
+    };
+
+    let meta = StoredMeta {
+        macros_expanded: r.u64()?,
+        grad_transforms: r.u64()?,
+        nodes_after_lowering: r.u64()?,
+        nodes_after_expand: r.u64()?,
+        nodes_after_optimize: r.u64()?,
+        graphs_after_optimize: r.u64()?,
+        opt_iterations: r.u64()?,
+    };
+
+    let entry = GraphId(r.u32()?);
+    let n_graphs = r.count(1)?;
+    let mut graphs = Vec::with_capacity(n_graphs);
+    for _ in 0..n_graphs {
+        let name = r.str()?;
+        let n_params = r.count(4)?;
+        let mut params = Vec::with_capacity(n_params);
+        for _ in 0..n_params {
+            params.push(NodeId(r.u32()?));
+        }
+        let ret = match r.u8()? {
+            0 => None,
+            1 => Some(NodeId(r.u32()?)),
+            b => return Err(format!("invalid option byte {b}")),
+        };
+        graphs.push(Graph { name, params, ret });
+    }
+    let n_nodes = r.count(2)?;
+    let mut nodes = Vec::with_capacity(n_nodes);
+    for _ in 0..n_nodes {
+        let kind = match r.u8()? {
+            0 => {
+                let n = r.count(4)?;
+                let mut inputs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    inputs.push(NodeId(r.u32()?));
+                }
+                NodeKind::Apply(inputs)
+            }
+            1 => NodeKind::Parameter,
+            2 => NodeKind::Constant(read_const(&mut r)?),
+            t => return Err(format!("invalid node kind tag {t}")),
+        };
+        let graph = match r.u8()? {
+            0 => None,
+            1 => Some(GraphId(r.u32()?)),
+            b => return Err(format!("invalid option byte {b}")),
+        };
+        let debug_name = match r.u8()? {
+            0 => None,
+            1 => Some(r.str()?),
+            b => return Err(format!("invalid option byte {b}")),
+        };
+        nodes.push(Node { kind, graph, debug_name });
+    }
+    r.done()?;
+
+    let module =
+        Module::from_raw(nodes, graphs).map_err(|e| format!("stored module invalid: {e}"))?;
+    if entry.0 as usize >= module.num_graphs() {
+        return Err(format!("entry graph {entry} out of range"));
+    }
+    Ok(StoredArtifact { module, entry, signature, ret_type, meta })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "myia-diskcache-test-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    /// A module exercising every constant family the encoder handles.
+    fn rich_artifact() -> (ArtifactKey, StoredArtifact) {
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let t = m.constant(Const::Tensor(
+            Tensor::from_f64_shaped(vec![1.0, -2.5, 3.25, 0.0], vec![2, 2]).unwrap(),
+        ));
+        let scaled = m.apply_prim(f, Prim::Mul, &[x, t]);
+        let fused = FusedExpr::new(
+            2,
+            vec![
+                FusedOp::Input(0),
+                FusedOp::Input(1),
+                FusedOp::Bin(Prim::Add),
+                FusedOp::ConstF64(0.5),
+                FusedOp::Bin(Prim::Mul),
+                FusedOp::Un(Prim::Exp),
+            ],
+        )
+        .unwrap();
+        let fc = m.constant(Const::Fused(Arc::new(fused)));
+        let fm = m.constant(Const::Prim(Prim::FusedMap));
+        let y = m.apply(f, vec![fm, fc, scaled, x]);
+        let k = m.constant(Const::Key(42));
+        let z = m.constant(Const::ZeroT);
+        let tup = m.apply_prim_variadic(f, Prim::MakeTuple, &[y, k, z]);
+        m.set_return(f, tup);
+        m.validate().unwrap();
+
+        let key = ArtifactKey {
+            entry: "f".to_string(),
+            pipeline_spec: "opt=standard,vm".to_string(),
+            signature: "tensor<f64,[2,2]>".to_string(),
+            module_fp: 0xdead_beef,
+        };
+        let artifact = StoredArtifact {
+            module: m,
+            entry: f,
+            signature: Some(vec![AType::Tensor {
+                dtype: DType::F64,
+                shape: vec![Some(2), None],
+            }]),
+            ret_type: Some(AType::Tuple(vec![AType::Any, AType::Key, AType::ZeroT])),
+            meta: StoredMeta {
+                macros_expanded: 1,
+                grad_transforms: 2,
+                nodes_after_lowering: 30,
+                nodes_after_expand: 120,
+                nodes_after_optimize: 40,
+                graphs_after_optimize: 3,
+                opt_iterations: 5,
+            },
+        };
+        (key, artifact)
+    }
+
+    #[test]
+    fn round_trip_is_byte_identical() {
+        let (key, artifact) = rich_artifact();
+        let cache = DiskCache::new(temp_dir("roundtrip")).unwrap();
+        cache.store(&key, &artifact).unwrap();
+        let loaded = cache.load(&key).unwrap().expect("stored artifact must load");
+        assert_eq!(loaded.meta, artifact.meta);
+        assert_eq!(loaded.entry, artifact.entry);
+        assert_eq!(loaded.signature, artifact.signature);
+        assert_eq!(loaded.ret_type, artifact.ret_type);
+        loaded.module.validate().unwrap();
+        // Strongest structural check available without Eq on Module:
+        // re-encoding the loaded artifact reproduces the exact payload.
+        assert_eq!(encode_payload(&key, &loaded), encode_payload(&key, &artifact));
+        let _ = std::fs::remove_dir_all(cache.dir());
+    }
+
+    #[test]
+    fn missing_file_is_a_clean_miss() {
+        let (key, _) = rich_artifact();
+        let cache = DiskCache::new(temp_dir("miss")).unwrap();
+        assert!(cache.load(&key).unwrap().is_none());
+        let _ = std::fs::remove_dir_all(cache.dir());
+    }
+
+    #[test]
+    fn corruption_is_detected_and_quarantined() {
+        let (key, artifact) = rich_artifact();
+
+        // Truncation.
+        let cache = DiskCache::new(temp_dir("trunc")).unwrap();
+        cache.store(&key, &artifact).unwrap();
+        let path = cache.dir().join(key.file_name());
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(cache.load(&key).is_err());
+        // The offender was deleted: the next lookup is an ordinary miss.
+        assert!(cache.load(&key).unwrap().is_none());
+        let _ = std::fs::remove_dir_all(cache.dir());
+
+        // Bit flip in the payload.
+        let cache = DiskCache::new(temp_dir("flip")).unwrap();
+        cache.store(&key, &artifact).unwrap();
+        let path = cache.dir().join(key.file_name());
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = cache.load(&key).unwrap_err();
+        assert!(err.contains("checksum"), "{err}");
+        let _ = std::fs::remove_dir_all(cache.dir());
+
+        // Schema bump: written under version N, read expecting N — simulate
+        // by rewriting the version field.
+        let cache = DiskCache::new(temp_dir("schema")).unwrap();
+        cache.store(&key, &artifact).unwrap();
+        let path = cache.dir().join(key.file_name());
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4..8].copy_from_slice(&(SCHEMA_VERSION + 1).to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = cache.load(&key).unwrap_err();
+        assert!(err.contains("schema"), "{err}");
+        let _ = std::fs::remove_dir_all(cache.dir());
+    }
+
+    #[test]
+    fn key_block_guards_against_collisions() {
+        let (key, artifact) = rich_artifact();
+        let cache = DiskCache::new(temp_dir("keyblock")).unwrap();
+        cache.store(&key, &artifact).unwrap();
+        // Copy the file to where a *different* key would look for it.
+        let other = ArtifactKey { module_fp: key.module_fp ^ 1, ..key.clone() };
+        std::fs::copy(
+            cache.dir().join(key.file_name()),
+            cache.dir().join(other.file_name()),
+        )
+        .unwrap();
+        let err = cache.load(&other).unwrap_err();
+        assert!(err.contains("key block"), "{err}");
+        let _ = std::fs::remove_dir_all(cache.dir());
+    }
+}

@@ -1,13 +1,14 @@
-//! XLA/PJRT runtime (the execution half of the paper's backend story).
+//! Run-time support: the XLA/PJRT execution backend and the persistent
+//! on-disk artifact cache.
 //!
-//! Wraps the `xla` crate: a PJRT CPU client that (a) loads AOT artifacts
-//! produced by the JAX/Pallas build path (`artifacts/*.hlo.txt`, HLO *text*
-//! because jax ≥ 0.5 emits protos with 64-bit ids that xla_extension 0.5.1
-//! rejects), and (b) compiles `XlaComputation`s built at runtime by the
-//! segment backend. Python never runs on this path — the artifacts are
-//! self-contained.
+//! The XLA half wraps the `xla` crate: a PJRT CPU client that (a) loads
+//! HLO-text computations (jax ≥ 0.5 emits protos with 64-bit ids that
+//! xla_extension 0.5.1 rejects, hence text) and (b) compiles
+//! `XlaComputation`s built at runtime by the segment backend. The
+//! [`diskcache`] half persists compiled Engine artifacts across processes
+//! (see `runtime/diskcache.rs` and `Engine::with_cache_dir`).
 
-pub mod artifacts;
+pub mod diskcache;
 
 use crate::tensor::{Buffer, DType, Tensor};
 use anyhow::{anyhow, bail, Result};

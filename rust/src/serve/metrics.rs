@@ -42,25 +42,56 @@ impl Counter {
 /// behavior appears in the same [`MetricsSnapshot`] as serving counters.
 #[derive(Debug, Default)]
 pub struct CacheCounters {
-    /// Compile requests answered from the artifact cache.
+    /// Compile requests answered from the in-memory artifact cache.
     pub hits: Counter,
     /// Compile requests that ran a full compile (including the losers of a
     /// racing-compile tie, who did the work even if the winner's artifact
     /// was served).
     pub misses: Counter,
+    /// Compile requests answered from the persistent disk cache (these
+    /// count as neither `hits` nor `misses`: no compile ran, but the answer
+    /// did not come from memory either).
+    pub disk_hits: Counter,
+    /// Disk-cache probes that found no artifact file (only counted when a
+    /// disk cache is configured).
+    pub disk_misses: Counter,
+    /// Artifacts successfully persisted to the disk cache.
+    pub disk_writes: Counter,
+    /// Disk artifacts rejected as corrupt, stale-schema, or unloadable; each
+    /// such probe degraded to a cold compile.
+    pub disk_invalid: Counter,
 }
 
 impl CacheCounters {
     pub fn snapshot(&self) -> CacheStats {
-        CacheStats { hits: self.hits.get(), misses: self.misses.get() }
+        CacheStats {
+            hits: self.hits.get(),
+            misses: self.misses.get(),
+            disk_hits: self.disk_hits.get(),
+            disk_misses: self.disk_misses.get(),
+            disk_writes: self.disk_writes.get(),
+            disk_invalid: self.disk_invalid.get(),
+        }
     }
 }
 
-/// Point-in-time artifact-cache statistics.
+/// Point-in-time artifact-cache statistics (memory tier + disk tier).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
+    pub disk_hits: u64,
+    pub disk_misses: u64,
+    pub disk_writes: u64,
+    pub disk_invalid: u64,
+}
+
+impl CacheStats {
+    /// Whether the disk tier saw any traffic (used to keep `Display` quiet
+    /// for the common cache-dir-less configuration).
+    pub fn disk_active(&self) -> bool {
+        self.disk_hits + self.disk_misses + self.disk_writes + self.disk_invalid > 0
+    }
 }
 
 /// Number of power-of-two latency buckets: bucket `i` counts samples with
@@ -326,6 +357,13 @@ impl fmt::Display for MetricsSnapshot {
         }
         if let Some(cache) = &self.cache {
             write!(f, "\ncache:    {} hits, {} misses", cache.hits, cache.misses)?;
+            if cache.disk_active() {
+                write!(
+                    f,
+                    "; disk {} hits, {} misses, {} writes, {} invalid",
+                    cache.disk_hits, cache.disk_misses, cache.disk_writes, cache.disk_invalid
+                )?;
+            }
         }
         Ok(())
     }
@@ -358,6 +396,16 @@ mod tests {
                         if i % 2 == 0 {
                             cache.misses.inc();
                         }
+                        if i % 4 == 0 {
+                            cache.disk_hits.inc();
+                        }
+                        if i % 5 == 0 {
+                            cache.disk_misses.inc();
+                            cache.disk_writes.inc();
+                        }
+                        if i % 8 == 0 {
+                            cache.disk_invalid.inc();
+                        }
                     }
                 });
             }
@@ -371,6 +419,10 @@ mod tests {
         let cs = snap.cache.unwrap();
         assert_eq!(cs.hits, total);
         assert_eq!(cs.misses, total / 2);
+        assert_eq!(cs.disk_hits, total / 4);
+        assert_eq!(cs.disk_misses, total / 5);
+        assert_eq!(cs.disk_writes, total / 5);
+        assert_eq!(cs.disk_invalid, total / 8);
     }
 
     #[test]
@@ -411,9 +463,16 @@ mod tests {
         m.completed.inc();
         m.direct_calls.inc();
         m.batch_sizes.record(1);
-        let shown = m.snapshot(0, Some(CacheStats { hits: 3, misses: 1 })).to_string();
+        let mut cs = CacheStats { hits: 3, misses: 1, ..Default::default() };
+        let shown = m.snapshot(0, Some(cs)).to_string();
         assert!(shown.contains("1 submitted"));
         assert!(shown.contains("3 hits"));
         assert!(shown.contains("1×1"));
+        // The disk tier stays out of the dump until it sees traffic.
+        assert!(!shown.contains("disk"));
+        cs.disk_hits = 2;
+        cs.disk_writes = 1;
+        let with_disk = m.snapshot(0, Some(cs)).to_string();
+        assert!(with_disk.contains("disk 2 hits, 0 misses, 1 writes, 0 invalid"), "{with_disk}");
     }
 }

@@ -550,6 +550,25 @@ impl Pipeline {
         &self.spec
     }
 
+    /// Cumulative stage-key prefixes, one per IR stage: for
+    /// `grad,opt=standard` this is `["grad", "grad,opt=standard"]`. The
+    /// query engine labels stage *n*'s compilation query with prefix *n*, so
+    /// a stage's identity includes everything upstream of it — two pipelines
+    /// sharing a prefix share those queries (and their memoized IR), while a
+    /// divergence anywhere upstream forces distinct queries.
+    pub fn stage_key_prefixes(&self) -> Vec<String> {
+        let mut out = Vec::with_capacity(self.stages.len());
+        let mut cur = String::new();
+        for t in &self.stages {
+            if !cur.is_empty() {
+                cur.push(',');
+            }
+            cur.push_str(&t.key());
+            out.push(cur.clone());
+        }
+        out
+    }
+
     /// Apply every IR-level stage in order, collecting per-stage metrics.
     /// Returns the final entry graph; codegen for [`Pipeline::backend`] is
     /// the caller's job (the session owns the VM and the XLA runtime).
@@ -761,6 +780,16 @@ mod tests {
             let q = Pipeline::parse(p.spec()).unwrap();
             assert_eq!(p.fingerprint(), q.fingerprint());
         }
+    }
+
+    #[test]
+    fn stage_key_prefixes_are_cumulative() {
+        let p = Pipeline::parse("grad^2,vmap,opt=standard,vm").unwrap();
+        assert_eq!(
+            p.stage_key_prefixes(),
+            vec!["grad^2", "grad^2,vmap", "grad^2,vmap,opt=standard"]
+        );
+        assert!(Pipeline::parse("vm").unwrap().stage_key_prefixes().is_empty());
     }
 
     #[test]

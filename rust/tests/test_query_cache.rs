@@ -1,0 +1,277 @@
+//! Integration tests for query-based incremental compilation and the
+//! persistent disk artifact cache.
+//!
+//! The contract under test (ISSUE 8):
+//! * editing one of N functions re-runs only the queries that depend on it
+//!   (asserted through query telemetry, not timing);
+//! * an artifact round-trips through the disk cache across two `Engine`
+//!   instances with bit-identical execution;
+//! * truncated / corrupted / schema-bumped cache files degrade to a cold
+//!   compile without surfacing an error.
+
+use myia::coordinator::Engine;
+use myia::opt::PassSet;
+use myia::types::AType;
+use myia::vm::Value;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+const SRC_V1: &str = "\
+def leaf_a(x):
+    return x * x + 1.0
+
+def leaf_b(x):
+    return sin(x) * x
+
+def mid(x):
+    return leaf_a(x) + leaf_b(x)
+
+def top_a(x):
+    return leaf_a(x) * 2.0
+
+def top_b(x):
+    return leaf_b(x) - 1.0
+
+def top_mid(x):
+    return mid(x) + 0.5
+";
+
+/// V1 with exactly one function edited: `leaf_b` now uses `cos`.
+const SRC_V2: &str = "\
+def leaf_a(x):
+    return x * x + 1.0
+
+def leaf_b(x):
+    return cos(x) * x
+
+def mid(x):
+    return leaf_a(x) + leaf_b(x)
+
+def top_a(x):
+    return leaf_a(x) * 2.0
+
+def top_b(x):
+    return leaf_b(x) - 1.0
+
+def top_mid(x):
+    return mid(x) + 0.5
+";
+
+fn call_f64(f: &myia::coordinator::Executable, x: f64) -> f64 {
+    f.call(vec![Value::F64(x)]).unwrap().as_f64().unwrap()
+}
+
+/// Fresh per-test cache directory (removed at both ends so a crashed
+/// earlier run can't poison this one).
+fn temp_cache_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("myia-qc-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn cache_files(dir: &Path) -> Vec<PathBuf> {
+    let mut files: Vec<PathBuf> = std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension() == Some(std::ffi::OsStr::new("myic")))
+        .collect();
+    files.sort();
+    files
+}
+
+#[test]
+fn incremental_edit_reruns_only_dependents() {
+    let mut e = Engine::from_source(SRC_V1).unwrap();
+    let entries = ["top_a", "top_b", "top_mid"];
+    let mut first: Vec<Arc<myia::coordinator::Executable>> = Vec::new();
+    for name in entries {
+        first.push(e.trace(name).unwrap().compile().unwrap());
+    }
+    let q0 = e.query_stats();
+    let c0 = e.cache_stats();
+
+    e.update_source(SRC_V2).unwrap();
+    let mut second = Vec::new();
+    for name in entries {
+        second.push(e.trace(name).unwrap().compile().unwrap());
+    }
+    let q1 = e.query_stats();
+    let c1 = e.cache_stats();
+
+    // `top_a` never touches `leaf_b`: its deep fingerprint is unchanged, so
+    // the hot tier serves the original artifact untouched.
+    assert!(Arc::ptr_eq(&first[0], &second[0]), "top_a must keep its artifact");
+    assert_eq!(c1.hits - c0.hits, 1, "exactly one hot-tier hit: {c0:?} -> {c1:?}");
+    assert_eq!(c1.misses - c0.misses, 2, "exactly two recompiles: {c0:?} -> {c1:?}");
+
+    // The reparse is one new revision; of the six functions only `leaf_b`
+    // refingerprints red, the other five revalidate green.
+    assert_eq!(q1.parse.executed - q0.parse.executed, 1);
+    assert_eq!(q1.graph_fingerprint.executed - q0.graph_fingerprint.executed, 1, "{q1:?}");
+    assert_eq!(q1.graph_fingerprint.green - q0.graph_fingerprint.green, 5, "{q1:?}");
+
+    // Only the two dependent entry points walk the compile DAG again:
+    // one expand, one optimize, one codegen query each.
+    assert_eq!(q1.ad_expand.executed - q0.ad_expand.executed, 2, "{q1:?}");
+    assert_eq!(q1.optimize.executed - q0.optimize.executed, 2, "{q1:?}");
+    assert_eq!(q1.codegen.executed - q0.codegen.executed, 2, "{q1:?}");
+
+    // The recompiled artifacts compute the edited program.
+    let x = 0.8;
+    let want_top_b = x.cos() * x - 1.0;
+    let want_top_mid = (x * x + 1.0) + x.cos() * x + 0.5;
+    assert!((call_f64(&second[1], x) - want_top_b).abs() < 1e-12);
+    assert!((call_f64(&second[2], x) - want_top_mid).abs() < 1e-12);
+
+    // The recorded dependency edges name the transitive callee closure.
+    let deps = e.query_dependencies("top_mid").unwrap();
+    for needed in ["leaf_a", "leaf_b", "mid", "top_mid"] {
+        assert!(deps.iter().any(|d| d == needed), "{needed} missing from {deps:?}");
+    }
+}
+
+#[test]
+fn second_signature_reuses_ir_stages() {
+    let e = Engine::from_source(SRC_V1).unwrap();
+    let generic = e.trace("top_a").unwrap().compile().unwrap();
+    let q0 = e.query_stats();
+
+    // Same entry, same pipeline, new signature: the expand and optimize
+    // queries answer from memo; only typecheck and codegen run.
+    let specialized =
+        e.trace("top_a").unwrap().specialize(vec![AType::F64]).compile().unwrap();
+    let q1 = e.query_stats();
+    assert_eq!(q1.ad_expand.executed, q0.ad_expand.executed, "{q1:?}");
+    assert_eq!(q1.optimize.executed, q0.optimize.executed, "{q1:?}");
+    assert!(q1.ad_expand.memo > q0.ad_expand.memo, "{q1:?}");
+    assert!(q1.optimize.memo > q0.optimize.memo, "{q1:?}");
+    assert_eq!(q1.typecheck.executed - q0.typecheck.executed, 1, "{q1:?}");
+    assert_eq!(q1.codegen.executed - q0.codegen.executed, 1, "{q1:?}");
+
+    assert!(!Arc::ptr_eq(&generic, &specialized));
+    assert_eq!(specialized.ret_type(), Some(&AType::F64));
+    let x = 1.3;
+    assert_eq!(call_f64(&generic, x).to_bits(), call_f64(&specialized, x).to_bits());
+}
+
+#[test]
+fn disk_round_trip_across_engines_is_bit_identical() {
+    let dir = temp_cache_dir("roundtrip");
+    let points = [0.3, -1.1, 2.4];
+
+    // Cold oracle: compile in one engine, record exact output bits.
+    let (cold_grad, cold_raw, nodes_opt) = {
+        let e = Engine::from_source(SRC_V1).unwrap().with_cache_dir(&dir).unwrap();
+        let g = e.trace("top_mid").unwrap().grad().compile().unwrap();
+        // A PassSet::None adjoint keeps the env/Key plumbing in the IR —
+        // the serializer must round-trip those constants too.
+        let raw = e
+            .trace("top_b")
+            .unwrap()
+            .grad()
+            .optimize(PassSet::None)
+            .compile()
+            .unwrap();
+        let stats = e.cache_stats();
+        assert!(stats.disk_writes >= 2, "{stats:?}");
+        assert_eq!(stats.disk_hits, 0, "{stats:?}");
+        let gs: Vec<u64> = points.iter().map(|&x| call_f64(&g, x).to_bits()).collect();
+        let rs: Vec<u64> = points.iter().map(|&x| call_f64(&raw, x).to_bits()).collect();
+        (gs, rs, g.metrics.nodes_after_optimize)
+    };
+    assert!(!cache_files(&dir).is_empty());
+
+    // A second engine instance (stand-in for a fresh process with the same
+    // MYIA_CACHE_DIR) must start warm and execute bit-identically.
+    let e = Engine::from_source(SRC_V1).unwrap().with_cache_dir(&dir).unwrap();
+    let g = e.trace("top_mid").unwrap().grad().compile().unwrap();
+    let raw =
+        e.trace("top_b").unwrap().grad().optimize(PassSet::None).compile().unwrap();
+    let stats = e.cache_stats();
+    assert!(stats.disk_hits >= 2, "{stats:?}");
+    assert_eq!(stats.misses, 0, "warm engine must not compile: {stats:?}");
+    assert_eq!(g.metrics.nodes_after_optimize, nodes_opt);
+    for (i, &x) in points.iter().enumerate() {
+        assert_eq!(call_f64(&g, x).to_bits(), cold_grad[i], "x={x}");
+        assert_eq!(call_f64(&raw, x).to_bits(), cold_raw[i], "x={x}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_and_stale_cache_files_degrade_to_cold_compile() {
+    let dir = temp_cache_dir("corrupt");
+    let oracle = {
+        let e = Engine::from_source(SRC_V1).unwrap().with_cache_dir(&dir).unwrap();
+        let f = e.trace("top_mid").unwrap().grad().compile().unwrap();
+        call_f64(&f, 0.6)
+    };
+
+    // Truncate every artifact to half its length: the loader must detect,
+    // quarantine, and recompile cold — never error.
+    for p in cache_files(&dir) {
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+    }
+    {
+        let e = Engine::from_source(SRC_V1).unwrap().with_cache_dir(&dir).unwrap();
+        let f = e.trace("top_mid").unwrap().grad().compile().unwrap();
+        assert_eq!(call_f64(&f, 0.6).to_bits(), oracle.to_bits());
+        let stats = e.cache_stats();
+        assert!(stats.disk_invalid >= 1, "{stats:?}");
+        assert_eq!(stats.disk_hits, 0, "{stats:?}");
+        assert_eq!(stats.misses, 1, "{stats:?}");
+    }
+
+    // Flip a payload byte under an intact header: checksum catches it.
+    for p in cache_files(&dir) {
+        let mut bytes = std::fs::read(&p).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xff;
+        std::fs::write(&p, &bytes).unwrap();
+    }
+    {
+        let e = Engine::from_source(SRC_V1).unwrap().with_cache_dir(&dir).unwrap();
+        let f = e.trace("top_mid").unwrap().grad().compile().unwrap();
+        assert_eq!(call_f64(&f, 0.6).to_bits(), oracle.to_bits());
+        assert!(e.cache_stats().disk_invalid >= 1, "{:?}", e.cache_stats());
+    }
+
+    // A schema bump (bytes 4..8 of the header) must read as stale, not
+    // crash — future-versioned files are rejected the same way.
+    for p in cache_files(&dir) {
+        let mut bytes = std::fs::read(&p).unwrap();
+        let bumped = myia::runtime::diskcache::SCHEMA_VERSION + 1;
+        bytes[4..8].copy_from_slice(&bumped.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+    }
+    {
+        let e = Engine::from_source(SRC_V1).unwrap().with_cache_dir(&dir).unwrap();
+        let f = e.trace("top_mid").unwrap().grad().compile().unwrap();
+        assert_eq!(call_f64(&f, 0.6).to_bits(), oracle.to_bits());
+        assert!(e.cache_stats().disk_invalid >= 1, "{:?}", e.cache_stats());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn source_edit_changes_the_disk_key() {
+    let dir = temp_cache_dir("editkey");
+    {
+        let e = Engine::from_source(SRC_V1).unwrap().with_cache_dir(&dir).unwrap();
+        let f = e.trace("top_b").unwrap().compile().unwrap();
+        let x = 0.9;
+        assert!((call_f64(&f, x) - (x.sin() * x - 1.0)).abs() < 1e-12);
+    }
+    // Same entry name, same pipeline, edited source: the deep module
+    // fingerprint differs, so the V1 artifact must not be served.
+    let e = Engine::from_source(SRC_V2).unwrap().with_cache_dir(&dir).unwrap();
+    let f = e.trace("top_b").unwrap().compile().unwrap();
+    let x = 0.9;
+    assert!((call_f64(&f, x) - (x.cos() * x - 1.0)).abs() < 1e-12);
+    let stats = e.cache_stats();
+    assert_eq!(stats.disk_hits, 0, "stale artifact served: {stats:?}");
+    assert!(stats.disk_misses >= 1, "{stats:?}");
+    assert_eq!(stats.misses, 1, "{stats:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
