@@ -1,7 +1,7 @@
 //! Elementwise kernel fusion + unique-buffer reuse benchmark.
 //!
-//! Three workloads, each A/B'd between the standard pipeline (which carries
-//! the `fusion` pass) and the `opt=no-fusion` ablation:
+//! Five workloads. The first three A/B the standard pipeline (which
+//! carries the `fusion` pass) against the `opt=no-fusion` ablation:
 //!
 //! 1. a 16-op elementwise chain over a large f64 tensor (the deforestation
 //!    headline: one loop + zero intermediates vs 16 loops + 16 allocations);
@@ -9,14 +9,26 @@
 //! 3. the vmapped per-sample-gradient workload (fusion composed with
 //!    grad-then-vmap).
 //!
+//! The last two target the shape-specializing plan tier and the fused
+//! reduction / matmul-epilogue kernels, A/B'ing *specialized vs generic
+//! dispatch on the same executable* (via `Executable::set_specialization`)
+//! on top of the fused-vs-unfused comparison:
+//!
+//! 4. `map_reduce` — an elementwise map with a trailing `sum`, which the
+//!    fusion pass swallows into one reduced kernel;
+//! 5. `matmul_ep` — `relu(matmul(a, b) + c)`, folded into a single
+//!    `matmul_ep` site with the bias add + activation in the epilogue.
+//!
 //! Every arm is checked bit-identical against its counterpart before
 //! timing. Results (wall time + the VM's `fused_ops`/`allocs_saved`/
-//! `conversions` counters and the tensor substrate's buffer-reuse count)
-//! land in `BENCH_kernels.json` at the repository root. `BENCH_QUICK=1`
-//! shrinks the measurement windows and tensor sizes for CI;
-//! `BENCH_SMOKE=1` additionally *gates*: the fused chain arm must not be
-//! slower than the unfused arm, and the fused MLP adjoint must report
-//! `allocs_saved > 0`.
+//! `conversions`/`plan_hits`/`plans_compiled` counters and the tensor
+//! substrate's buffer-reuse count) land in `BENCH_kernels.json` at the
+//! repository root. `BENCH_QUICK=1` shrinks the measurement windows and
+//! tensor sizes for CI; `BENCH_SMOKE=1` additionally *gates*: the fused
+//! chain arm must not be slower than the unfused arm, the fused MLP
+//! adjoint must report `allocs_saved > 0`, the fused map+reduce arm must
+//! not be slower than the unfused one, and the specialized arms must
+//! report `plan_hits > 0` on their post-warm-up call.
 
 use myia::bench::{black_box, Bencher};
 use myia::coordinator::mlp::{
@@ -43,6 +55,21 @@ def chain(x):
     return t7
 ";
 
+/// Elementwise map with a trailing full reduction — the shape the fusion
+/// pass swallows into one *reduced* kernel (no materialized map output).
+const MAP_REDUCE_SRC: &str = "\
+def mr(x):
+    s = tanh(x) * x + 0.5
+    return sum(s)
+";
+
+/// Bias add + activation on a matmul output — folded into one `matmul_ep`
+/// site whose epilogue runs in the output write.
+const MATMUL_EP_SRC: &str = "\
+def ep(a, b, c):
+    return relu(matmul(a, b) + c)
+";
+
 fn harness() -> Bencher {
     if std::env::var_os("BENCH_QUICK").is_some() {
         Bencher::fast()
@@ -59,6 +86,8 @@ struct Row {
     allocs_saved: u64,
     conversions: u64,
     buffer_reuses: u64,
+    plans_compiled: u64,
+    plan_hits: u64,
 }
 
 /// Run one arm: verify against `oracle` (when given), collect one call's
@@ -95,6 +124,8 @@ fn run_arm(
         allocs_saved: stats.allocs_saved,
         conversions: stats.conversions,
         buffer_reuses,
+        plans_compiled: stats.plans_compiled,
+        plan_hits: stats.plan_hits,
     });
     (out, sample.median)
 }
@@ -261,13 +292,139 @@ fn main() {
         tp_unfused / tp_fused
     );
 
+    // --- workload 4: map + swallowed reduction -------------------------
+    // Three arms on the same program: the no-fusion ablation (map loops +
+    // a separate ReduceSum), the fused reduced kernel with the plan tier
+    // disabled (generic per-call shape simulation), and the fused kernel
+    // with specialized dispatch (warmed, so the measured calls hit the
+    // cached plan).
+    let rn = if quick { 100_000 } else { 1_000_000 };
+    let rx = Value::Tensor(rng.normal_tensor(&[rn], 1.0));
+    let er = Engine::from_source(MAP_REDUCE_SRC).unwrap();
+    let mr_fused =
+        er.trace("mr").unwrap().optimize(PassSet::Standard).compile().unwrap();
+    let mr_unfused = er
+        .trace("mr")
+        .unwrap()
+        .optimize(PassSet::Without("fusion".into()))
+        .compile()
+        .unwrap();
+    let (mr_oracle, tr_unfused) = run_arm(
+        &mut b,
+        "map_reduce",
+        "no-fusion",
+        &mr_unfused,
+        &[rx.clone()],
+        None,
+        &mut rows,
+    );
+    mr_fused.set_specialization(false);
+    let (_, tr_generic) = run_arm(
+        &mut b,
+        "map_reduce",
+        "fused-generic",
+        &mr_fused,
+        &[rx.clone()],
+        Some(&mr_oracle),
+        &mut rows,
+    );
+    mr_fused.set_specialization(true);
+    // Warm once so run_arm's counter-collection call is the *second* call
+    // at this shape: its stats must show a plan hit, not the compile.
+    let _ = mr_fused.call(vec![rx.clone()]).expect("map_reduce warm-up");
+    let (_, tr_spec) = run_arm(
+        &mut b,
+        "map_reduce",
+        "fused-specialized",
+        &mr_fused,
+        &[rx.clone()],
+        Some(&mr_oracle),
+        &mut rows,
+    );
+    let mr_plan_hits = rows.last().unwrap().plan_hits;
+    assert!(
+        mr_plan_hits > 0,
+        "map_reduce: second fixed-shape call did not hit a cached plan"
+    );
+    println!(
+        "map_reduce: specialized {:.1}us vs generic {:.1}us vs no-fusion {:.1}us \
+         ({:.2}x over no-fusion), plan_hits={}",
+        tr_spec * 1e6,
+        tr_generic * 1e6,
+        tr_unfused * 1e6,
+        tr_unfused / tr_spec,
+        mr_plan_hits
+    );
+
+    // --- workload 5: matmul epilogue -----------------------------------
+    // relu(matmul(a, b) + c) folds into one matmul_ep site; the A/B is the
+    // same specialized-vs-generic split on top of the fused-vs-unfused one.
+    let (mdim, kdim) = if quick { (64, 96) } else { (256, 384) };
+    let ea = Value::Tensor(rng.normal_tensor(&[mdim, kdim], 1.0));
+    let eb = Value::Tensor(rng.normal_tensor(&[kdim, mdim], 1.0));
+    let ec = Value::Tensor(rng.normal_tensor(&[mdim], 1.0));
+    let eargs = vec![ea, eb, ec];
+    let ee = Engine::from_source(MATMUL_EP_SRC).unwrap();
+    let ep_fused =
+        ee.trace("ep").unwrap().optimize(PassSet::Standard).compile().unwrap();
+    let ep_unfused = ee
+        .trace("ep")
+        .unwrap()
+        .optimize(PassSet::Without("fusion".into()))
+        .compile()
+        .unwrap();
+    let (ep_oracle, te_unfused) = run_arm(
+        &mut b,
+        "matmul_ep",
+        "no-fusion",
+        &ep_unfused,
+        &eargs,
+        None,
+        &mut rows,
+    );
+    ep_fused.set_specialization(false);
+    let (_, te_generic) = run_arm(
+        &mut b,
+        "matmul_ep",
+        "fused-generic",
+        &ep_fused,
+        &eargs,
+        Some(&ep_oracle),
+        &mut rows,
+    );
+    ep_fused.set_specialization(true);
+    let _ = ep_fused.call(eargs.clone()).expect("matmul_ep warm-up");
+    let (_, te_spec) = run_arm(
+        &mut b,
+        "matmul_ep",
+        "fused-specialized",
+        &ep_fused,
+        &eargs,
+        Some(&ep_oracle),
+        &mut rows,
+    );
+    let ep_plan_hits = rows.last().unwrap().plan_hits;
+    assert!(
+        ep_plan_hits > 0,
+        "matmul_ep: second fixed-shape call did not hit a cached plan"
+    );
+    println!(
+        "matmul_ep: specialized {:.1}us vs generic {:.1}us vs no-fusion {:.1}us \
+         ({:.2}x over no-fusion), plan_hits={}",
+        te_spec * 1e6,
+        te_generic * 1e6,
+        te_unfused * 1e6,
+        te_unfused / te_spec,
+        ep_plan_hits
+    );
+
     // --- trajectory JSON ----------------------------------------------
     let mut json = String::from("{\n  \"bench\": \"kernels\",\n  \"rows\": [\n");
     for (i, r) in rows.iter().enumerate() {
         json.push_str(&format!(
             "    {{\"workload\": \"{}\", \"arm\": \"{}\", \"median_us\": {:.3}, \
              \"fused_ops\": {}, \"allocs_saved\": {}, \"conversions\": {}, \
-             \"buffer_reuses\": {}}}{}\n",
+             \"buffer_reuses\": {}, \"plans_compiled\": {}, \"plan_hits\": {}}}{}\n",
             r.workload,
             r.arm,
             r.median_us,
@@ -275,6 +432,8 @@ fn main() {
             r.allocs_saved,
             r.conversions,
             r.buffer_reuses,
+            r.plans_compiled,
+            r.plan_hits,
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }
@@ -289,11 +448,17 @@ fn main() {
     }
     json.push_str(&format!(
         "  ],\n  \"chain16_speedup\": {:.3},\n  \"chain16_speedup_threads_4v1\": {:.3},\n  \
-         \"mlp_vgrad_speedup\": {:.3},\n  \"per_sample_speedup\": {:.3}\n}}\n",
+         \"mlp_vgrad_speedup\": {:.3},\n  \"per_sample_speedup\": {:.3},\n  \
+         \"map_reduce_speedup\": {:.3},\n  \"map_reduce_speedup_specialized\": {:.3},\n  \
+         \"matmul_ep_speedup\": {:.3},\n  \"matmul_ep_speedup_specialized\": {:.3}\n}}\n",
         t_unfused / t_fused,
         chain_speedup_4v1,
         tm_unfused / tm_fused,
-        tp_unfused / tp_fused
+        tp_unfused / tp_fused,
+        tr_unfused / tr_spec,
+        tr_generic / tr_spec,
+        te_unfused / te_spec,
+        te_generic / te_spec
     ));
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json");
     std::fs::write(path, json).expect("write BENCH_kernels.json");
@@ -310,6 +475,16 @@ fn main() {
         assert!(
             mlp_allocs_saved > 0,
             "perf smoke gate: fused MLP adjoint reported allocs_saved == 0"
+        );
+        assert!(
+            tr_spec <= tr_unfused,
+            "perf smoke gate: fused map+reduce ({:.1}us) slower than unfused ({:.1}us)",
+            tr_spec * 1e6,
+            tr_unfused * 1e6
+        );
+        assert!(
+            mr_plan_hits > 0 && ep_plan_hits > 0,
+            "perf smoke gate: specialized arms reported no plan hits on the second call"
         );
         let cores =
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);

@@ -321,8 +321,11 @@ fn bprop_exprs(
         // the stages were ordered by hand — raise lazily with the usual
         // unsupported-gradient message rather than differentiating the
         // postfix program.
+        // `MatMulEp` follows `FusedMap`'s reasoning: the fusion pass runs
+        // after AD, so an epilogue kernel reaching the transform means the
+        // stages were ordered by hand.
         Concat0 | TakeRow | ReduceSumAxis | Partial | Mod | FloorDiv | BroadcastTail
-        | FusedMap => return None,
+        | FusedMap | MatMulEp => return None,
         // Non-differentiable prims were handled above.
         _ => return None,
     };

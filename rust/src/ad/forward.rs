@@ -273,6 +273,10 @@ pub fn fwd_prim(m: &mut Module, p: Prim, arity: usize) -> Result<GraphId> {
             "fused_map has no forward-mode rule: apply jfwd before optimization \
              (fusion runs post-AD; use an `opt` stage after the AD transform)"
         ),
+        MatMulEp => bail!(
+            "matmul_ep has no forward-mode rule: apply jfwd before optimization \
+             (epilogue fusion runs post-AD; use an `opt` stage after the AD transform)"
+        ),
         // Non-differentiable or structural: zero tangent of the right shape.
         _ if p.is_nondifferentiable() || matches!(p, TupleLen | ZerosLike | OnesLike) => {
             ap!(ZerosLike, val)

@@ -533,7 +533,7 @@ impl Rewriter {
                     bail!("vmap rule for `{p}` over mapped values is not implemented")
                 }
                 BatchMatMul | SumTail | BroadcastLead | SumToLead | SumToTail | BroadcastTail
-                | MoveAxis | BroadcastBatch
+                | MoveAxis | BroadcastBatch | MatMulEp
                     if any_b =>
                 {
                     bail!("nested vmap (batching `{p}`) is not supported")
@@ -550,17 +550,29 @@ impl Rewriter {
                 // `broadcast_to` to a static shape, which vmap rejects) —
                 // so reject it here too instead of mis-shaping silently.
                 FusedMap if any_b => {
-                    let has_anchor = match m.node(inputs[1]).constant() {
-                        Some(Const::Fused(e)) => e
-                            .ops
-                            .iter()
-                            .any(|op| matches!(op, crate::ir::FusedOp::BroadcastTo(_))),
-                        _ => false,
+                    let (has_anchor, has_reduce) = match m.node(inputs[1]).constant() {
+                        Some(Const::Fused(e)) => (
+                            e.ops
+                                .iter()
+                                .any(|op| matches!(op, crate::ir::FusedOp::BroadcastTo(_))),
+                            e.reduce.is_some(),
+                        ),
+                        _ => (false, false),
                     };
                     if has_anchor {
                         bail!(
                             "vmap: a fused kernel with a static broadcast_to anchor cannot \
                              be batched; run vmap before fusion (the standard pipeline \
+                             orders vmap ahead of the `opt` stage)"
+                        );
+                    }
+                    // A trailing reduction is the other shape a bigger index
+                    // space cannot absorb: extending the map space would
+                    // fold the batch axis into the reduction.
+                    if has_reduce {
+                        bail!(
+                            "vmap: a fused kernel with a trailing reduction cannot be \
+                             batched; run vmap before fusion (the standard pipeline \
                              orders vmap ahead of the `opt` stage)"
                         );
                     }

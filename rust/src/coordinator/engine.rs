@@ -205,6 +205,20 @@ impl Executable {
         }
         Ok(())
     }
+
+    /// Cumulative shape-specialization telemetry for this artifact's plan
+    /// cache: kernel plans compiled, plan-cache hits, and shape misses since
+    /// the artifact was built (see `vm::plan`).
+    pub fn plan_stats(&self) -> crate::vm::PlanStats {
+        self.vm.plan_stats()
+    }
+
+    /// Enable or disable the shape-specializing plan tier at runtime
+    /// (already-compiled plans are kept but not consulted while disabled).
+    /// The `MYIA_SPECIALIZE=0` environment variable sets the initial state.
+    pub fn set_specialization(&self, on: bool) {
+        self.vm.set_specialization(on);
+    }
 }
 
 impl Engine {

@@ -39,6 +39,33 @@ pub enum FusedOp {
     BroadcastTo(Vec<usize>),
 }
 
+/// A trailing reduction fused onto the end of a map program: the map's
+/// (virtual) output tensor is never materialized; instead each mapped
+/// element feeds a sequential f64 accumulator with exactly the iteration
+/// order of the standalone reduction kernels in `tensor/ops.rs`, so the
+/// fused result is bit-identical to map-then-reduce.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FusedReduce {
+    /// `sum`: reduce every element to a rank-0 tensor.
+    Sum,
+    /// `sum_tail`: keep axis 0, reduce the per-example tail (identity on
+    /// rank ≤ 1 map outputs, like `ops::sum_tail`).
+    SumTail,
+    /// `sum_axis(k)`: reduce one axis (removing it); the axis is static
+    /// because fusion only fires on constant-axis `sum_axis` calls.
+    SumAxis(usize),
+}
+
+impl fmt::Display for FusedReduce {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FusedReduce::Sum => write!(f, "sum"),
+            FusedReduce::SumTail => write!(f, "sum_tail"),
+            FusedReduce::SumAxis(k) => write!(f, "sum_axis({k})"),
+        }
+    }
+}
+
 impl FusedOp {
     /// How many stack values the op pops.
     pub fn pops(&self) -> usize {
@@ -77,12 +104,25 @@ pub struct FusedExpr {
     pub ops: Vec<FusedOp>,
     /// Peak evaluation-stack depth (precomputed by [`FusedExpr::new`]).
     pub max_stack: usize,
+    /// Optional trailing reduction over the map's index space. A reduced
+    /// kernel's output shape differs from its map space, so the fusion pass
+    /// never splices a reduced kernel into another group (it stays a leaf).
+    pub reduce: Option<FusedReduce>,
 }
 
 impl FusedExpr {
     /// Validate and freeze a postfix program. Errors if the stack discipline
     /// is broken, an input index is out of range, or a cap is exceeded.
     pub fn new(n_inputs: usize, ops: Vec<FusedOp>) -> Result<FusedExpr, String> {
+        FusedExpr::with_reduce(n_inputs, ops, None)
+    }
+
+    /// Like [`FusedExpr::new`] with a trailing reduction attached.
+    pub fn with_reduce(
+        n_inputs: usize,
+        ops: Vec<FusedOp>,
+        reduce: Option<FusedReduce>,
+    ) -> Result<FusedExpr, String> {
         if n_inputs > MAX_FUSED_INPUTS {
             return Err(format!("fused expr has {n_inputs} inputs (max {MAX_FUSED_INPUTS})"));
         }
@@ -110,14 +150,21 @@ impl FusedExpr {
         if max_stack > MAX_FUSED_STACK {
             return Err(format!("fused expr needs stack depth {max_stack} (max {MAX_FUSED_STACK})"));
         }
-        Ok(FusedExpr { n_inputs, ops, max_stack })
+        Ok(FusedExpr { n_inputs, ops, max_stack, reduce })
     }
 
     /// Tensor allocations the fused loop avoids relative to unfused
     /// execution: every compute step but the final one would have
-    /// materialized an intermediate.
+    /// materialized an intermediate. With a trailing reduction even the
+    /// final map value is virtual (only the reduced output materializes),
+    /// so every compute step counts.
     pub fn interior_allocs(&self) -> u64 {
-        (self.ops.iter().filter(|o| o.is_compute()).count() as u64).saturating_sub(1)
+        let computes = self.ops.iter().filter(|o| o.is_compute()).count() as u64;
+        if self.reduce.is_some() {
+            computes
+        } else {
+            computes.saturating_sub(1)
+        }
     }
 
     /// Structural hash (feeds [`crate::ir::Const::fingerprint`]).
@@ -152,6 +199,15 @@ impl FusedExpr {
                 }
             }
         }
+        match self.reduce {
+            None => 7u8.hash(h),
+            Some(FusedReduce::Sum) => 8u8.hash(h),
+            Some(FusedReduce::SumTail) => 9u8.hash(h),
+            Some(FusedReduce::SumAxis(k)) => {
+                10u8.hash(h);
+                k.hash(h);
+            }
+        }
     }
 }
 
@@ -172,6 +228,9 @@ impl fmt::Display for FusedExpr {
                 FusedOp::Where => write!(f, "where")?,
                 FusedOp::BroadcastTo(s) => write!(f, "bcast{s:?}")?,
             }
+        }
+        if let Some(r) = &self.reduce {
+            write!(f, ";{r}")?;
         }
         write!(f, "]")
     }
@@ -210,6 +269,48 @@ mod tests {
         )
         .is_err());
         assert!(FusedExpr::new(MAX_FUSED_INPUTS + 1, vec![FusedOp::Input(0)]).is_err());
+    }
+
+    #[test]
+    fn reduced_expr_displays_and_counts() {
+        let e = FusedExpr::with_reduce(
+            1,
+            vec![FusedOp::Input(0), FusedOp::Un(Prim::Exp)],
+            Some(FusedReduce::Sum),
+        )
+        .unwrap();
+        assert_eq!(format!("{e}"), "fused[in0,exp;sum]");
+        // The map output is virtual too: every compute step saves an alloc.
+        assert_eq!(e.interior_allocs(), 1);
+        let a = FusedExpr::with_reduce(
+            2,
+            vec![FusedOp::Input(0), FusedOp::Input(1), FusedOp::Bin(Prim::Mul)],
+            Some(FusedReduce::SumAxis(1)),
+        )
+        .unwrap();
+        assert_eq!(format!("{a}"), "fused[in0,in1,mul;sum_axis(1)]");
+    }
+
+    #[test]
+    fn hash_distinguishes_reductions() {
+        use std::collections::hash_map::DefaultHasher;
+        let h = |e: &FusedExpr| {
+            let mut h = DefaultHasher::new();
+            e.hash_into(&mut h);
+            std::hash::Hasher::finish(&h)
+        };
+        let ops = vec![FusedOp::Input(0), FusedOp::Un(Prim::Exp)];
+        let plain = FusedExpr::new(1, ops.clone()).unwrap();
+        let sum = FusedExpr::with_reduce(1, ops.clone(), Some(FusedReduce::Sum)).unwrap();
+        let tail = FusedExpr::with_reduce(1, ops.clone(), Some(FusedReduce::SumTail)).unwrap();
+        let ax0 = FusedExpr::with_reduce(1, ops.clone(), Some(FusedReduce::SumAxis(0))).unwrap();
+        let ax1 = FusedExpr::with_reduce(1, ops, Some(FusedReduce::SumAxis(1))).unwrap();
+        let hashes = [h(&plain), h(&sum), h(&tail), h(&ax0), h(&ax1)];
+        for i in 0..hashes.len() {
+            for j in i + 1..hashes.len() {
+                assert_ne!(hashes[i], hashes[j], "{i} vs {j}");
+            }
+        }
     }
 
     #[test]

@@ -25,7 +25,7 @@ mod printer;
 pub use analysis::{analyze, ScopeAnalysis};
 pub use clone::{clone_closure, CloneResult};
 pub use fingerprint::{content_fingerprint, graph_fingerprint, GraphFingerprint};
-pub use fused::{FusedExpr, FusedOp, MAX_FUSED_INPUTS, MAX_FUSED_OPS, MAX_FUSED_STACK};
+pub use fused::{FusedExpr, FusedOp, FusedReduce, MAX_FUSED_INPUTS, MAX_FUSED_OPS, MAX_FUSED_STACK};
 pub use module::{Graph, Module};
 pub use prim::Prim;
 pub use printer::print_graph;

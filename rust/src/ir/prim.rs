@@ -170,6 +170,15 @@ pub enum Prim {
     /// by a single loop over the broadcast output index space (built by the
     /// `fusion` optimizer pass; never written in user source).
     FusedMap,
+    /// `matmul_ep(a, b, bias, a_batched, b_batched, ep_code)` — a (batch)
+    /// matmul with its epilogue (bias add and/or activation) folded into
+    /// the output write of the blocked kernel. The batch flags mirror
+    /// `batch_matmul` (both false = plain `matmul`); `ep_code` is a
+    /// constant i64: bits 0..3 select the activation (0 none, 1 relu,
+    /// 2 sigmoid, 3 tanh) and bit 3 marks a commuted bias add
+    /// (`bias + mm` instead of `mm + bias`). Built by the `fusion`
+    /// optimizer pass; never written in user source.
+    MatMulEp,
 }
 
 impl Prim {
@@ -257,6 +266,7 @@ impl Prim {
             RngSplit => "rng_split",
             Partial => "partial",
             FusedMap => "fused_map",
+            MatMulEp => "matmul_ep",
         }
     }
 
@@ -277,6 +287,7 @@ impl Prim {
             | SumToLead | SumToTail | BroadcastTail | BroadcastBatch => Some(2),
             Switch | EnvSetItem | TupleInject | Where | MoveAxis => Some(3),
             BatchMatMul => Some(4),
+            MatMulEp => Some(6),
         }
     }
 
@@ -310,7 +321,7 @@ impl Prim {
             ArgmaxLast, Concat0, TakeRow, Item, ScalarToTensor, CastF32, CastF64, Where, Print,
             Raise, RngUniform, RngNormal, RngSplit, Partial, Step, SumToLike, BroadcastLike,
             SumLastKeep, BatchMatMul, SumTail, BroadcastLead, SumToLead, SumToTail,
-            BroadcastTail, MoveAxis, BroadcastBatch, FusedMap,
+            BroadcastTail, MoveAxis, BroadcastBatch, FusedMap, MatMulEp,
         ]
     }
 

@@ -23,7 +23,27 @@
 //! Existing `FusedMap` nodes are composite members: when later rewrites
 //! (inlining, algebraic simplification) expose new fusable neighbors, the
 //! inner program is spliced into the larger group, so chains keep growing
-//! to their maximal extent across fixpoint rounds.
+//! to their maximal extent across fixpoint rounds. A kernel that already
+//! carries a trailing reduction is *final*: its output is not the map
+//! space, so it can be neither spliced nor swallowed.
+//!
+//! Beyond elementwise groups, the pass fuses two consumer shapes that
+//! reverse-mode IR produces constantly:
+//!
+//! * **trailing reductions** — `sum(map)`, `sum_tail(map)` and
+//!   `sum_axis(map, k)` with a constant non-negative axis swallow their
+//!   single-use map producer into one kernel carrying a
+//!   [`FusedReduce`](crate::ir::FusedReduce): the VM accumulates per output
+//!   cell directly from the fused loop and the map tensor is never
+//!   materialized;
+//! * **matmul epilogues** — `act(matmul(a, b) + bias)` (activation
+//!   optional, bias on either side of the add, `batch_matmul` included)
+//!   rewrites to one `matmul_ep` application whose blocked kernel folds the
+//!   bias add and activation into the output write (`tensor/matmul.rs`).
+//!
+//! Both run under this pass's `fusion` spec key, so `opt=no-fusion`
+//! ablates the reduction and epilogue rewrites together with elementwise
+//! grouping.
 //!
 //! The pass runs on the already-expanded adjoint IR (`opt` stages execute
 //! after `grad`/`vmap` in every pipeline the builder can produce), composes
@@ -33,7 +53,8 @@
 
 use super::manager::{LocalPass, PassCtx};
 use crate::ir::{
-    Const, FusedExpr, FusedOp, GraphId, Module, NodeId, Prim, MAX_FUSED_INPUTS, MAX_FUSED_OPS,
+    Const, FusedExpr, FusedOp, FusedReduce, GraphId, Module, NodeId, Prim, MAX_FUSED_INPUTS,
+    MAX_FUSED_OPS,
 };
 use anyhow::Result;
 use std::collections::{HashMap, HashSet};
@@ -88,14 +109,18 @@ fn static_shape(m: &Module, n: NodeId) -> Option<Vec<usize>> {
         .collect()
 }
 
-/// The fused program of an existing `fused_map` application, if `n` is one.
+/// The fused program of an existing `fused_map` application, if `n` is one
+/// this pass may keep growing. A kernel that already carries a trailing
+/// reduction is final — its output lives in the reduced space, not the map
+/// space, so splicing it into a map group (or swallowing it again) would be
+/// a shape error; such kernels report no payload and stay opaque here.
 fn fused_payload(m: &Module, n: NodeId) -> Option<std::sync::Arc<FusedExpr>> {
     if !m.is_apply_of(n, Prim::FusedMap) {
         return None;
     }
     let expr_node = *m.node(n).inputs().get(1)?;
     match m.node(expr_node).constant() {
-        Some(Const::Fused(e)) => Some(e.clone()),
+        Some(Const::Fused(e)) if e.reduce.is_none() => Some(e.clone()),
         _ => None,
     }
 }
@@ -131,22 +156,221 @@ fn value_positions(m: &Module, n: NodeId) -> std::ops::Range<usize> {
     }
 }
 
+/// The `ep_code` activation bits (0..=2) for a unary the matmul epilogue
+/// kernel can fold into its output write; `None` for everything else.
+fn act_code(p: Prim) -> Option<i64> {
+    match p {
+        Prim::Relu => Some(1),
+        Prim::Sigmoid => Some(2),
+        Prim::Tanh => Some(3),
+        _ => None,
+    }
+}
+
+/// If `n` is a reduction this pass can swallow, its kind and map operand:
+/// `sum(x)` / `sum_tail(x)`, or `sum_axis(x, k)` with a constant
+/// non-negative axis (a runtime axis can't be baked into a kernel plan).
+fn reduction_of(m: &Module, n: NodeId) -> Option<(FusedReduce, NodeId)> {
+    let node = m.node(n);
+    if !node.is_apply() || node.graph.is_none() {
+        return None;
+    }
+    let inputs = node.inputs();
+    let p = m.as_prim(*inputs.first()?)?;
+    match p {
+        Prim::ReduceSum if inputs.len() == 2 => Some((FusedReduce::Sum, inputs[1])),
+        Prim::SumTail if inputs.len() == 2 => Some((FusedReduce::SumTail, inputs[1])),
+        Prim::ReduceSumAxis if inputs.len() == 3 => match m.node(inputs[2]).constant() {
+            Some(Const::I64(v)) if *v >= 0 => Some((FusedReduce::SumAxis(*v as usize), inputs[1])),
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+/// Rewrite `act(matmul(a, b) + bias)` — activation optional, bias on either
+/// side of the add, `batch_matmul` included — into one `matmul_ep`
+/// application. The matmul (and the add, when an activation roots the
+/// pattern) must be single-use, same-graph and not a graph return, so the
+/// fold never duplicates a matmul or hides a value someone else reads.
+fn try_fuse_epilogue(m: &mut Module, n: NodeId) -> bool {
+    let node = m.node(n);
+    let (Some(g), true) = (node.graph, node.is_apply()) else { return false };
+    let inputs = node.inputs().to_vec();
+    let Some(p0) = m.as_prim(inputs[0]) else { return false };
+
+    // The root is the activation, or the add itself when there is none.
+    let (act, add) = match act_code(p0) {
+        Some(code) if inputs.len() == 2 => {
+            let a = inputs[1];
+            if !(m.is_apply_of(a, Prim::Add)
+                && m.node(a).graph == Some(g)
+                && m.use_count(a) == 1
+                && !m.is_graph_return(a))
+            {
+                return false;
+            }
+            (code, a)
+        }
+        None if p0 == Prim::Add && inputs.len() == 3 => (0, n),
+        _ => return false,
+    };
+    // A bare add whose one consumer is a foldable activation defers: the
+    // bigger pattern fires at the activation and takes the add with it.
+    if add == n && !m.is_graph_return(n) {
+        let uses = m.uses(n);
+        if uses.len() == 1 {
+            let (user, _) = uses[0];
+            let unode = m.node(user);
+            if unode.graph == Some(g)
+                && unode.is_apply()
+                && !m.is_dead(user)
+                && unode
+                    .inputs()
+                    .first()
+                    .and_then(|&c| m.as_prim(c))
+                    .and_then(act_code)
+                    .is_some()
+            {
+                return false;
+            }
+        }
+    }
+
+    let addin = m.node(add).inputs().to_vec();
+    let foldable_mm = |m: &Module, c: NodeId| {
+        (m.is_apply_of(c, Prim::MatMul) || m.is_apply_of(c, Prim::BatchMatMul))
+            && m.node(c).graph == Some(g)
+            && m.use_count(c) == 1
+            && !m.is_graph_return(c)
+    };
+    // `bias_first` (bit 3 of ep_code) records a commuted add `bias + mm`,
+    // which matters for non-commutative dtype promotion in the kernel.
+    let (mm, bias, bias_first) = if foldable_mm(m, addin[1]) {
+        (addin[1], addin[2], false)
+    } else if foldable_mm(m, addin[2]) {
+        (addin[2], addin[1], true)
+    } else {
+        return false;
+    };
+
+    let mmin = m.node(mm).inputs().to_vec();
+    let (a, b, fa, fb) = if m.is_apply_of(mm, Prim::BatchMatMul) {
+        // Pass the batching-flag operands through unchanged.
+        (mmin[1], mmin[2], mmin[3], mmin[4])
+    } else {
+        let f = m.constant(Const::Bool(false));
+        (mmin[1], mmin[2], f, f)
+    };
+    let code = m.constant(Const::I64(act | if bias_first { 8 } else { 0 }));
+    let ep = m.apply_prim(g, Prim::MatMulEp, &[a, b, bias, fa, fb, code]);
+    m.replace_all_uses(n, ep);
+    true
+}
+
+/// Swallow a reduction into its map producer: `sum(map_chain)` becomes one
+/// `fused_map` whose program carries a trailing [`FusedReduce`], so the map
+/// tensor is accumulated per output cell instead of materialized. The
+/// operand must be a fusable single-use same-graph non-return application;
+/// the group below it grows exactly like plain elementwise grouping
+/// (including splicing an existing unreduced kernel).
+fn try_fuse_reduction(m: &mut Module, n: NodeId) -> bool {
+    let Some((reduce, x)) = reduction_of(m, n) else { return false };
+    let g = m.node(n).graph.expect("reduction_of requires an owner graph");
+    if !(fusable_apply(m, x)
+        && m.node(x).graph == Some(g)
+        && m.use_count(x) == 1
+        && !m.is_graph_return(x))
+    {
+        return false;
+    }
+
+    let mut members: Vec<NodeId> = vec![x];
+    let mut set: HashSet<NodeId> = members.iter().copied().collect();
+    collect(m, g, x, &mut members, &mut set);
+    loop {
+        let mut b = Builder {
+            m,
+            group: &set,
+            leaves: Vec::new(),
+            ix: HashMap::new(),
+            ops: Vec::new(),
+        };
+        let shrink = |members: &mut Vec<NodeId>, set: &mut HashSet<NodeId>| {
+            if members.len() <= 1 {
+                return false;
+            }
+            let dropped = members.pop().expect("non-empty");
+            set.remove(&dropped);
+            true
+        };
+        match b.emit(x) {
+            Err(TooBig) => {
+                if !shrink(&mut members, &mut set) {
+                    return false;
+                }
+            }
+            Ok(()) => {
+                let Builder { leaves, ops, .. } = b;
+                // Unlike plain grouping, a single compute op is already a
+                // win here: the reduction makes the whole map intermediate
+                // disappear.
+                if !ops.iter().any(|o| o.is_compute()) {
+                    return false;
+                }
+                match FusedExpr::with_reduce(leaves.len(), ops, Some(reduce)) {
+                    Ok(expr) => {
+                        let expr_const = m.constant(Const::Fused(std::sync::Arc::new(expr)));
+                        let prim = m.constant(Const::Prim(Prim::FusedMap));
+                        let mut inputs = Vec::with_capacity(2 + leaves.len());
+                        inputs.push(prim);
+                        inputs.push(expr_const);
+                        inputs.extend(leaves);
+                        let fused = m.apply(g, inputs);
+                        m.replace_all_uses(n, fused);
+                        return true;
+                    }
+                    Err(_) => {
+                        if !shrink(&mut members, &mut set) {
+                            return false;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 impl LocalPass for Fusion {
     fn name(&self) -> &'static str {
         "fusion"
     }
 
     fn visit(&mut self, m: &mut Module, _ctx: &mut PassCtx, n: NodeId) -> Result<bool> {
+        // The two non-elementwise patterns fire first: their roots (`add`,
+        // activations, reductions) overlap with what plain grouping would
+        // swallow, and the folded forms are strictly better — the epilogue
+        // writes bias+activation during the matmul output pass, and the
+        // swallowed reduction never materializes the map tensor at all.
+        if try_fuse_epilogue(m, n) {
+            return Ok(true);
+        }
+        if try_fuse_reduction(m, n) {
+            return Ok(true);
+        }
         if !fusable_apply(m, n) {
             return Ok(false);
         }
         // Only fire at group roots. A single-use node whose one consumer is
         // a fusable *plain* op (in a value position, same graph) will be
         // swallowed when that consumer fires — fusing it now would just
-        // churn. A consumer that is already a `fused_map` does NOT defer
-        // the fire: it may be at capacity, and a chain segment stranded
-        // below a full kernel must still be able to fuse on its own (the
-        // consumer splices it in later iff the combined program fits).
+        // churn. The same deferral applies when the one consumer is a
+        // reduction this pass can swallow: let `try_fuse_reduction` fire
+        // there and take the whole chain in one reduced kernel. A consumer
+        // that is already a `fused_map` does NOT defer the fire: it may be
+        // at capacity, and a chain segment stranded below a full kernel
+        // must still be able to fuse on its own (the consumer splices it in
+        // later iff the combined program fits).
         if !m.is_graph_return(n) {
             let uses = m.uses(n);
             if uses.len() == 1 {
@@ -155,6 +379,12 @@ impl LocalPass for Fusion {
                     && !m.is_apply_of(user, Prim::FusedMap)
                     && m.node(user).graph == m.node(n).graph
                     && value_positions(m, user).contains(&idx)
+                    && !m.is_dead(user)
+                {
+                    return Ok(false);
+                }
+                if reduction_of(m, user).map(|(_, x)| x == n).unwrap_or(false)
+                    && m.node(user).graph == m.node(n).graph
                     && !m.is_dead(user)
                 {
                     return Ok(false);
@@ -441,8 +671,10 @@ mod tests {
     }
 
     #[test]
-    fn non_elementwise_ops_break_groups() {
-        // sum() splits the chain into two groups (each still >= 2 ops).
+    fn reductions_are_swallowed_into_kernels() {
+        // f(x) = sqrt(tanh(sum(exp(neg(x))))): the sum swallows its map
+        // chain into one reduced kernel; the trailing scalar chain fuses
+        // separately (the reduced kernel is final, so it stays a leaf).
         let mut m = Module::new();
         let f = m.add_graph("f");
         let x = m.add_parameter(f, "x");
@@ -452,9 +684,212 @@ mod tests {
         let c = m.apply_prim(f, Prim::Tanh, &[s]);
         let r = m.apply_prim(f, Prim::Sqrt, &[c]);
         m.set_return(f, r);
+
+        let xs = crate::tensor::Tensor::from_f64(&[0.5, -1.0, 2.0, -0.25]);
+        let vm0 = Vm::new(compile_program(&m, f).unwrap());
+        let want = vm0.call_graph(f, vec![Value::Tensor(xs.clone())]).unwrap();
+
         run_fusion(&mut m, f);
+        let order = m.topo_order(f);
+        assert_eq!(count_fused(&m, f), 2, "{}", crate::ir::print_graph(&m, f, false));
+        assert!(!order.iter().any(|&n| m.is_apply_of(n, Prim::ReduceSum)));
+        let reduced = order
+            .iter()
+            .filter_map(|&n| {
+                if !m.is_apply_of(n, Prim::FusedMap) {
+                    return None;
+                }
+                match m.node(m.node(n).inputs()[1]).constant() {
+                    Some(Const::Fused(e)) => e.reduce,
+                    _ => None,
+                }
+            })
+            .collect::<Vec<_>>();
+        assert_eq!(reduced, vec![FusedReduce::Sum]);
+
+        let vm = Vm::new(compile_program(&m, f).unwrap());
+        let got = vm.call_graph(f, vec![Value::Tensor(xs)]).unwrap();
+        assert!(got.structural_eq(&want), "got {got:?}, want {want:?}");
+    }
+
+    #[test]
+    fn constant_axis_reduction_swallowed_runtime_axis_kept() {
+        // sum_axis(x * x, 1) with a constant axis fuses; the same shape
+        // with the axis arriving as a parameter must stay a plain apply.
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let sq = m.apply_prim(f, Prim::Mul, &[x, x]);
+        let one = m.constant(Const::I64(1));
+        let r = m.apply_prim(f, Prim::ReduceSumAxis, &[sq, one]);
+        m.set_return(f, r);
+
+        let xs = crate::tensor::Tensor::from_f64_shaped(
+            vec![1.0, -2.0, 3.0, 0.5, 4.0, -1.5],
+            vec![2, 3],
+        )
+        .unwrap();
+        let vm0 = Vm::new(compile_program(&m, f).unwrap());
+        let want = vm0.call_graph(f, vec![Value::Tensor(xs.clone())]).unwrap();
+        run_fusion(&mut m, f);
+        assert_eq!(count_fused(&m, f), 1);
+        assert!(!m.topo_order(f).iter().any(|&n| m.is_apply_of(n, Prim::ReduceSumAxis)));
+        let vm = Vm::new(compile_program(&m, f).unwrap());
+        let got = vm.call_graph(f, vec![Value::Tensor(xs)]).unwrap();
+        assert!(got.structural_eq(&want), "got {got:?}, want {want:?}");
+
+        // Runtime axis: no constant to bake, reduction stays.
+        let mut m2 = Module::new();
+        let g2 = m2.add_graph("g");
+        let y = m2.add_parameter(g2, "y");
+        let ax = m2.add_parameter(g2, "ax");
+        let sq2 = m2.apply_prim(g2, Prim::Mul, &[y, y]);
+        let r2 = m2.apply_prim(g2, Prim::ReduceSumAxis, &[sq2, ax]);
+        m2.set_return(g2, r2);
+        run_fusion(&mut m2, g2);
+        assert!(m2.topo_order(g2).iter().any(|&n| m2.is_apply_of(n, Prim::ReduceSumAxis)));
+    }
+
+    #[test]
+    fn reduced_kernel_not_respliced() {
+        // Once a kernel carries a reduction it is final: a later consumer
+        // chain fuses over it as a leaf, and a second sum over the reduced
+        // output does not try to swallow it.
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let a = m.apply_prim(f, Prim::Neg, &[x]);
+        let b = m.apply_prim(f, Prim::Exp, &[a]);
+        let s = m.apply_prim(f, Prim::SumTail, &[b]);
+        m.set_return(f, s);
+        run_fusion(&mut m, f);
+        assert_eq!(count_fused(&m, f), 1);
+        let reduced = m.ret_of(f);
+        assert!(fused_payload(&m, reduced).is_none(), "reduced kernels are opaque");
+
+        // Consume the reduced output with a second reduction + a chain.
+        let t = m.apply_prim(f, Prim::ReduceSum, &[reduced]);
+        let u = m.apply_prim(f, Prim::Tanh, &[t]);
+        let v = m.apply_prim(f, Prim::Sqrt, &[u]);
+        m.set_return(f, v);
+        run_fusion(&mut m, f);
+        // The reduced kernel survives untouched; sum over it stays a plain
+        // apply (its operand reports no payload); tanh+sqrt fuse.
         assert_eq!(count_fused(&m, f), 2);
         assert!(m.topo_order(f).iter().any(|&n| m.is_apply_of(n, Prim::ReduceSum)));
+    }
+
+    #[test]
+    fn matmul_epilogue_folds_bias_and_activation() {
+        // relu(matmul(a, b) + c) collapses to one matmul_ep application.
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let a = m.add_parameter(f, "a");
+        let b = m.add_parameter(f, "b");
+        let c = m.add_parameter(f, "c");
+        let mm = m.apply_prim(f, Prim::MatMul, &[a, b]);
+        let s = m.apply_prim(f, Prim::Add, &[mm, c]);
+        let r = m.apply_prim(f, Prim::Relu, &[s]);
+        m.set_return(f, r);
+
+        let av = crate::tensor::Tensor::from_f64_shaped(
+            vec![1.0, -2.0, 3.0, 4.0, -0.5, 0.25],
+            vec![2, 3],
+        )
+        .unwrap();
+        let bv = crate::tensor::Tensor::from_f64_shaped(
+            vec![0.5, 1.0, -1.0, 2.0, 0.75, -0.25],
+            vec![3, 2],
+        )
+        .unwrap();
+        let cv = crate::tensor::Tensor::from_f64(&[0.25, -0.5]);
+        let args = || {
+            vec![
+                Value::Tensor(av.clone()),
+                Value::Tensor(bv.clone()),
+                Value::Tensor(cv.clone()),
+            ]
+        };
+        let vm0 = Vm::new(compile_program(&m, f).unwrap());
+        let want = vm0.call_graph(f, args()).unwrap();
+
+        assert!(run_fusion(&mut m, f) >= 1);
+        let order = m.topo_order(f);
+        assert!(order.iter().any(|&n| m.is_apply_of(n, Prim::MatMulEp)));
+        assert!(!order.iter().any(|&n| m.is_apply_of(n, Prim::MatMul)));
+        assert!(!order.iter().any(|&n| m.is_apply_of(n, Prim::Add)));
+        assert!(!order.iter().any(|&n| m.is_apply_of(n, Prim::Relu)));
+        let vm = Vm::new(compile_program(&m, f).unwrap());
+        let got = vm.call_graph(f, args()).unwrap();
+        assert!(got.structural_eq(&want), "got {got:?}, want {want:?}");
+    }
+
+    #[test]
+    fn commuted_bias_and_bare_add_epilogues() {
+        // c + matmul(a, b) with no activation: still folds, with the
+        // commuted-bias bit recorded so dtype promotion order is preserved.
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let a = m.add_parameter(f, "a");
+        let b = m.add_parameter(f, "b");
+        let c = m.add_parameter(f, "c");
+        let mm = m.apply_prim(f, Prim::MatMul, &[a, b]);
+        let r = m.apply_prim(f, Prim::Add, &[c, mm]);
+        m.set_return(f, r);
+
+        let av =
+            crate::tensor::Tensor::from_f64_shaped(vec![1.0, -2.0, 3.0, 4.0], vec![2, 2]).unwrap();
+        let bv =
+            crate::tensor::Tensor::from_f64_shaped(vec![0.5, 1.0, -1.0, 2.0], vec![2, 2]).unwrap();
+        let cv = crate::tensor::Tensor::from_f64(&[0.25, -0.5]);
+        let args = || {
+            vec![
+                Value::Tensor(av.clone()),
+                Value::Tensor(bv.clone()),
+                Value::Tensor(cv.clone()),
+            ]
+        };
+        let vm0 = Vm::new(compile_program(&m, f).unwrap());
+        let want = vm0.call_graph(f, args()).unwrap();
+
+        assert!(run_fusion(&mut m, f) >= 1);
+        let order = m.topo_order(f);
+        assert!(order.iter().any(|&n| m.is_apply_of(n, Prim::MatMulEp)));
+        let code = order
+            .iter()
+            .find_map(|&n| {
+                if !m.is_apply_of(n, Prim::MatMulEp) {
+                    return None;
+                }
+                match m.node(*m.node(n).inputs().last().unwrap()).constant() {
+                    Some(Const::I64(v)) => Some(*v),
+                    _ => None,
+                }
+            })
+            .unwrap();
+        assert_eq!(code, 8, "no activation, commuted bias");
+        let vm = Vm::new(compile_program(&m, f).unwrap());
+        let got = vm.call_graph(f, args()).unwrap();
+        assert!(got.structural_eq(&want), "got {got:?}, want {want:?}");
+    }
+
+    #[test]
+    fn shared_matmul_not_folded() {
+        // The matmul output is also returned alongside the epilogue result:
+        // folding would hide a value someone else reads, so nothing fires.
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let a = m.add_parameter(f, "a");
+        let b = m.add_parameter(f, "b");
+        let c = m.add_parameter(f, "c");
+        let mm = m.apply_prim(f, Prim::MatMul, &[a, b]);
+        let s = m.apply_prim(f, Prim::Add, &[mm, c]);
+        let r = m.apply_prim(f, Prim::MakeTuple, &[s, mm]);
+        m.set_return(f, r);
+        run_fusion(&mut m, f);
+        let order = m.topo_order(f);
+        assert!(!order.iter().any(|&n| m.is_apply_of(n, Prim::MatMulEp)));
+        assert!(order.iter().any(|&n| m.is_apply_of(n, Prim::MatMul)));
     }
 
     #[test]

@@ -35,7 +35,10 @@
 //! [`DiskCache::load`] as "invalid tier entry": it counts it, deletes the
 //! file (best effort), and falls back to a cold compile.
 
-use crate::ir::{Const, FusedExpr, FusedOp, Graph, GraphId, MacroOp, Module, Node, NodeId, NodeKind, Prim};
+use crate::ir::{
+    Const, FusedExpr, FusedOp, FusedReduce, Graph, GraphId, MacroOp, Module, Node, NodeId,
+    NodeKind, Prim,
+};
 use crate::tensor::{Buffer, DType, Tensor};
 use crate::types::AType;
 use std::path::{Path, PathBuf};
@@ -44,7 +47,18 @@ use std::sync::Arc;
 /// Bump on ANY change to the serialized layout. Old files then read as
 /// stale and degrade to a cold compile (plus a rewrite under the new
 /// schema) instead of misparsing.
-pub const SCHEMA_VERSION: u32 = 1;
+///
+/// v2: `Const::Fused` gained a trailing-reduction byte (the fusion pass
+/// now swallows `sum`/`sum_tail`/`sum_axis` into fused kernels).
+///
+/// Note: the shape-specialization tier's kernel plans (`vm::plan`) are
+/// deliberately *not* persisted — they are process-local, rebuilt from the
+/// first call per shape, and cheap relative to the transform pipeline this
+/// cache skips. Persisting them would mean serializing shape-keyed plan
+/// lists (key block + `KernelPlan` variants + broadcast index maps) per
+/// site; recorded here as the natural follow-up if cold-start dispatch
+/// latency ever matters.
+pub const SCHEMA_VERSION: u32 = 2;
 
 const MAGIC: [u8; 4] = *b"MYIC";
 
@@ -587,6 +601,15 @@ fn write_const(w: &mut W, c: &Const) {
                     }
                 }
             }
+            match e.reduce {
+                None => w.u8(0),
+                Some(FusedReduce::Sum) => w.u8(1),
+                Some(FusedReduce::SumTail) => w.u8(2),
+                Some(FusedReduce::SumAxis(ax)) => {
+                    w.u8(3);
+                    w.usize(ax);
+                }
+            }
         }
     }
 }
@@ -632,9 +655,16 @@ fn read_const(r: &mut R) -> Result<Const, String> {
                     t => return Err(format!("invalid fused op tag {t}")),
                 });
             }
+            let reduce = match r.u8()? {
+                0 => None,
+                1 => Some(FusedReduce::Sum),
+                2 => Some(FusedReduce::SumTail),
+                3 => Some(FusedReduce::SumAxis(r.usize()?)),
+                t => return Err(format!("invalid fused reduce tag {t}")),
+            };
             // Re-validate the stack discipline — corrupt programs must not
             // reach the VM.
-            let expr = FusedExpr::new(n_inputs, ops)
+            let expr = FusedExpr::with_reduce(n_inputs, ops, reduce)
                 .map_err(|e| format!("invalid stored fused expr: {e}"))?;
             Const::Fused(Arc::new(expr))
         }
@@ -874,7 +904,7 @@ mod tests {
             Tensor::from_f64_shaped(vec![1.0, -2.5, 3.25, 0.0], vec![2, 2]).unwrap(),
         ));
         let scaled = m.apply_prim(f, Prim::Mul, &[x, t]);
-        let fused = FusedExpr::new(
+        let fused = FusedExpr::with_reduce(
             2,
             vec![
                 FusedOp::Input(0),
@@ -884,6 +914,7 @@ mod tests {
                 FusedOp::Bin(Prim::Mul),
                 FusedOp::Un(Prim::Exp),
             ],
+            Some(FusedReduce::SumAxis(1)),
         )
         .unwrap();
         let fc = m.constant(Const::Fused(Arc::new(fused)));

@@ -10,6 +10,7 @@
 //! ([`CacheCounters`], shared with `coordinator::Engine` by `Arc`), so a
 //! serving process dumps its whole story from one place.
 
+use crate::vm::PlanStats;
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -255,7 +256,12 @@ impl ServeMetrics {
     /// One coherent-enough view of everything (counters are read relaxed, so
     /// a snapshot taken mid-flight may be off by in-flight requests — fine
     /// for telemetry).
-    pub fn snapshot(&self, queue_depth: usize, cache: Option<CacheStats>) -> MetricsSnapshot {
+    pub fn snapshot(
+        &self,
+        queue_depth: usize,
+        cache: Option<CacheStats>,
+        plans: Option<PlanStats>,
+    ) -> MetricsSnapshot {
         MetricsSnapshot {
             submitted: self.submitted.get(),
             rejected_invalid: self.rejected_invalid.get(),
@@ -273,6 +279,7 @@ impl ServeMetrics {
             exec: self.exec.snapshot(),
             batch_sizes: self.batch_sizes.snapshot(),
             cache,
+            plans,
         }
     }
 }
@@ -298,6 +305,9 @@ pub struct MetricsSnapshot {
     pub exec: LatencyStats,
     pub batch_sizes: Vec<(usize, u64)>,
     pub cache: Option<CacheStats>,
+    /// Shape-specialization plan-cache counters summed over the server's
+    /// executables (`None` when the server exposes no VM artifacts).
+    pub plans: Option<PlanStats>,
 }
 
 impl MetricsSnapshot {
@@ -365,6 +375,13 @@ impl fmt::Display for MetricsSnapshot {
                 )?;
             }
         }
+        if let Some(plans) = &self.plans {
+            write!(
+                f,
+                "\nplans:    {} compiled, {} hits, {} shape misses",
+                plans.plans_compiled, plans.plan_hits, plans.plan_shape_misses
+            )?;
+        }
         Ok(())
     }
 }
@@ -411,7 +428,7 @@ mod tests {
             }
         });
         let total = (threads * per) as u64;
-        let snap = m.snapshot(0, Some(cache.snapshot()));
+        let snap = m.snapshot(0, Some(cache.snapshot()), None);
         assert_eq!(snap.submitted, total);
         assert_eq!(snap.completed, total);
         assert_eq!(snap.wait.count, total);
@@ -464,15 +481,20 @@ mod tests {
         m.direct_calls.inc();
         m.batch_sizes.record(1);
         let mut cs = CacheStats { hits: 3, misses: 1, ..Default::default() };
-        let shown = m.snapshot(0, Some(cs)).to_string();
+        let shown = m.snapshot(0, Some(cs), None).to_string();
         assert!(shown.contains("1 submitted"));
         assert!(shown.contains("3 hits"));
         assert!(shown.contains("1×1"));
-        // The disk tier stays out of the dump until it sees traffic.
+        // The disk tier stays out of the dump until it sees traffic, and the
+        // plan line only appears when plan telemetry was supplied.
         assert!(!shown.contains("disk"));
+        assert!(!shown.contains("plans:"));
         cs.disk_hits = 2;
         cs.disk_writes = 1;
-        let with_disk = m.snapshot(0, Some(cs)).to_string();
+        let plans =
+            PlanStats { plans_compiled: 4, plan_hits: 9, plan_shape_misses: 2 };
+        let with_disk = m.snapshot(0, Some(cs), Some(plans)).to_string();
         assert!(with_disk.contains("disk 2 hits, 0 misses, 1 writes, 0 invalid"), "{with_disk}");
+        assert!(with_disk.contains("plans:    4 compiled, 9 hits, 2 shape misses"), "{with_disk}");
     }
 }

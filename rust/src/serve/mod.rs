@@ -297,12 +297,23 @@ impl Server {
     }
 
     /// Point-in-time telemetry: serving counters, wait/exec latency
-    /// summaries, the batch-size histogram, and (when built via
-    /// [`Server::for_entry`]) the engine's artifact-cache hit/miss stats.
+    /// summaries, the batch-size histogram, (when built via
+    /// [`Server::for_entry`]) the engine's artifact-cache hit/miss stats,
+    /// and the shape-specialization plan counters summed over the batched
+    /// and fallback executables.
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.ctx
-            .metrics
-            .snapshot(self.ctx.queue.len(), self.cache.as_ref().map(|c| c.snapshot()))
+        let b = self.ctx.batched.plan_stats();
+        let f = self.ctx.fallback.plan_stats();
+        let plans = crate::vm::PlanStats {
+            plans_compiled: b.plans_compiled + f.plans_compiled,
+            plan_hits: b.plan_hits + f.plan_hits,
+            plan_shape_misses: b.plan_shape_misses + f.plan_shape_misses,
+        };
+        self.ctx.metrics.snapshot(
+            self.ctx.queue.len(),
+            self.cache.as_ref().map(|c| c.snapshot()),
+            Some(plans),
+        )
     }
 
     /// Requests each `submit` call must carry (arity minus shared prefix).

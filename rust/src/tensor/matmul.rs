@@ -19,7 +19,7 @@
 //! order, so parallel results are bit-identical to sequential ones; sizes
 //! below [`pool::MATMUL_PAR_MIN_FLOPS`] bypass the pool entirely.
 
-use super::ops::{promote, Elem, NumOp};
+use super::ops::{broadcast_shapes, promote, Elem, NumOp, Rd, UnOp};
 use super::{note_conversion, terr, Buffer, DType, TResult, Tensor};
 use crate::vm::pool;
 use std::borrow::Cow;
@@ -230,6 +230,83 @@ pub fn matmul_f64(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64
     matmul_elem(a, b, m, k, n)
 }
 
+/// Blocked matmul with its epilogue — `act((a @ b) + bias)`, or
+/// `act(bias + (a @ b))` when `bias_first` — folded into the product's
+/// output buffer in place: the bias-add and activation results of the
+/// unfused chain are never allocated as separate tensors, and no
+/// `as_f64_vec` round-trip occurs. `act` is one of the fused activations
+/// (`Relu`, `Sigmoid`, `Tanh`) or `None` for a bare bias add.
+///
+/// Returns `Ok(None)` when the fast kernel does not apply — a non-float
+/// product dtype, a bias dtype differing from the product's, or a bias
+/// shape the product does not dominate — and the caller must replay
+/// through the constituent primitives (the exact unfused semantics,
+/// errors included). The fold is elementwise over the finished product
+/// and the bias is read through the same broadcast reader ([`Rd`]) the
+/// unfused typed kernels use, so the result is bit-identical to the
+/// unfused `matmul → add → activation` chain at every pool size.
+pub fn matmul_ep(
+    a: &Tensor,
+    b: &Tensor,
+    bias: &Tensor,
+    a_batched: bool,
+    b_batched: bool,
+    act: Option<UnOp>,
+    bias_first: bool,
+) -> TResult<Option<Tensor>> {
+    let md = mm_dtype(a, b);
+    if !matches!(md, DType::F32 | DType::F64) || bias.dtype() != md {
+        return Ok(None);
+    }
+    let mm = batch_matmul(a, b, a_batched, b_batched)?;
+    match broadcast_shapes(mm.shape(), bias.shape()) {
+        Ok(joint) if joint == mm.shape() => {}
+        // A non-dominating (or incompatible) bias means the unfused add
+        // would broadcast the output up (or error) — replay handles both.
+        _ => return Ok(None),
+    }
+    Ok(Some(match md {
+        DType::F64 => ep_fold::<f64>(mm, bias, act, bias_first)?,
+        DType::F32 => ep_fold::<f32>(mm, bias, act, bias_first)?,
+        _ => unreachable!("dtype gated above"),
+    }))
+}
+
+fn ep_fold<T: Elem + Send + Sync>(
+    mm: Tensor,
+    bias: &Tensor,
+    act: Option<UnOp>,
+    bias_first: bool,
+) -> TResult<Tensor> {
+    let shape = mm.shape().to_vec();
+    let mut out: Vec<T> = match mm.into_unique_buffer() {
+        Ok(buf) => T::from_buffer(buf).expect("dtype gated by caller"),
+        // The product was just built, so it is unique in practice; a
+        // shared buffer (hypothetically) just costs one copy.
+        Err(shared) => T::read(&shared).into_owned(),
+    };
+    let rd = Rd::<T>::new(bias, &shape);
+    let fold = |piece: &mut [T], base: usize| {
+        for (j, o) in piece.iter_mut().enumerate() {
+            let s = if bias_first {
+                T::bin(NumOp::Add, rd.get(base + j), *o)
+            } else {
+                T::bin(NumOp::Add, *o, rd.get(base + j))
+            };
+            *o = match act {
+                Some(u) => T::un(u, s),
+                None => s,
+            };
+        }
+    };
+    if out.len() < pool::FUSED_PAR_MIN_ELEMS {
+        fold(&mut out, 0);
+    } else {
+        pool::for_chunks_mut(&mut out, pool::FUSED_CHUNK_ELEMS, fold);
+    }
+    Tensor::new(shape, T::buffer(out))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -379,6 +456,92 @@ mod tests {
         assert_eq!(conversion_count(), before + 1, "one converted operand");
         assert_eq!(c2.dtype(), DType::F64);
         assert_eq!(c2.as_f64_vec(), vec![2.0]);
+    }
+
+    #[test]
+    fn epilogue_matches_unfused_chain() {
+        use crate::tensor::ops::{binary_num, unary_num, NumOp, UnOp};
+        let a = t(&[1.0, -2.0, 3.0, 4.0, -5.0, 6.0], &[2, 3]);
+        let b = t(&[0.5, -1.0, 2.0, 0.25, -0.75, 1.5], &[3, 2]);
+        let bias = t(&[0.1, -0.2], &[2]); // broadcast row over [2,2]
+        for act in [None, Some(UnOp::Relu), Some(UnOp::Sigmoid), Some(UnOp::Tanh)] {
+            let got = matmul_ep(&a, &b, &bias, false, false, act, false).unwrap().unwrap();
+            let mm = matmul(&a, &b).unwrap();
+            let sum = binary_num(&mm, &bias, NumOp::Add).unwrap();
+            let want = match act {
+                Some(u) => unary_num(&sum, u),
+                None => sum,
+            };
+            assert_eq!(got.shape(), want.shape());
+            let same = got
+                .as_f64_vec()
+                .iter()
+                .zip(want.as_f64_vec())
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(same, "epilogue differs from unfused chain for {act:?}");
+        }
+        // bias_first flips the add's operand order (bit-parity with replay).
+        let got = matmul_ep(&a, &b, &bias, false, false, None, true).unwrap().unwrap();
+        let mm = matmul(&a, &b).unwrap();
+        let want = binary_num(&bias, &mm, NumOp::Add).unwrap();
+        assert_eq!(got.as_f64_vec(), want.as_f64_vec());
+    }
+
+    #[test]
+    fn epilogue_rank0_and_f32() {
+        use crate::tensor::ops::UnOp;
+        // Rank-0 product (dot) with a scalar bias takes the fast path too.
+        let v = t(&[1.0, 2.0], &[2]);
+        let bias = Tensor::scalar_f64(0.5);
+        let got = matmul_ep(&v, &v, &bias, false, false, Some(UnOp::Relu), false)
+            .unwrap()
+            .unwrap();
+        assert_eq!(got.rank(), 0);
+        assert_eq!(got.item().unwrap(), 5.5);
+        // f32 throughout: no conversion, f32 dtype preserved.
+        let af = Tensor::from_f32(&[1.0, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        let biasf = Tensor::from_f32(&[1.0, -100.0]);
+        let before = conversion_count();
+        let got = matmul_ep(&af, &af, &biasf, false, false, Some(UnOp::Relu), false)
+            .unwrap()
+            .unwrap();
+        assert_eq!(conversion_count(), before, "f32 epilogue must not convert");
+        assert_eq!(got.dtype(), DType::F32);
+        assert_eq!(got.as_f64_vec(), vec![8.0, 0.0, 16.0, 0.0]);
+    }
+
+    #[test]
+    fn epilogue_declines_mixed_dtypes_and_bad_bias() {
+        let a = t(&[1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        // Mismatched bias dtype → fast path declines.
+        let bias32 = Tensor::from_f32(&[1.0, 1.0]);
+        assert!(matmul_ep(&a, &a, &bias32, false, false, None, false).unwrap().is_none());
+        // Bias the product does not dominate → declines (replay broadcasts).
+        let big = t(&[1.0; 8], &[2, 2, 2]);
+        assert!(matmul_ep(&a, &a, &big, false, false, None, false).unwrap().is_none());
+        // Integer product → declines.
+        let ai = Tensor::from_i64_shaped(vec![1, 2, 3, 4], vec![2, 2]).unwrap();
+        let biasi = Tensor::from_i64_shaped(vec![1, 1], vec![2]).unwrap();
+        assert!(matmul_ep(&ai, &ai, &biasi, false, false, None, false).unwrap().is_none());
+    }
+
+    #[test]
+    fn epilogue_batched_matches_loop() {
+        use crate::tensor::ops::{binary_num, unary_num, NumOp, UnOp};
+        let a = t(&(1..=12).map(|i| i as f64 * 0.25 - 1.5).collect::<Vec<_>>(), &[2, 2, 3]);
+        let b = t(&[1.0, 0.0, 0.0, 1.0, 1.0, -1.0], &[3, 2]);
+        let bias = t(&[0.5, -0.5], &[2]);
+        let got =
+            matmul_ep(&a, &b, &bias, true, false, Some(UnOp::Tanh), false).unwrap().unwrap();
+        let mm = batch_matmul(&a, &b, true, false).unwrap();
+        let want = unary_num(&binary_num(&mm, &bias, NumOp::Add).unwrap(), UnOp::Tanh);
+        assert_eq!(got.shape(), want.shape());
+        let same = got
+            .as_f64_vec()
+            .iter()
+            .zip(want.as_f64_vec())
+            .all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(same, "batched epilogue differs from unfused chain");
     }
 
     #[test]

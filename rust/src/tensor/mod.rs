@@ -11,7 +11,7 @@ pub mod rng;
 pub mod ops;
 pub mod matmul;
 
-pub use matmul::{batch_matmul, matmul};
+pub use matmul::{batch_matmul, matmul, matmul_ep};
 pub use ops::*;
 pub use rng::Rng;
 

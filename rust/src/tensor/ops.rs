@@ -177,6 +177,10 @@ pub trait Elem: Copy + PartialEq + 'static {
     fn from_buffer_mut(b: &mut Buffer) -> Option<&mut Vec<Self>>;
     fn bin(op: NumOp, x: Self, y: Self) -> Self;
     fn un(op: UnOp, x: Self) -> Self;
+    /// Widen to f64 — exactly the per-element conversion `as_f64_vec`
+    /// applies (the fused reductions accumulate in f64 to match the
+    /// unfused reduction kernels bit-for-bit).
+    fn to_f64(self) -> f64;
 }
 
 impl Elem for f64 {
@@ -186,6 +190,9 @@ impl Elem for f64 {
     }
     fn from_f64(x: f64) -> f64 {
         x
+    }
+    fn to_f64(self) -> f64 {
+        self
     }
     fn is_truthy(self) -> bool {
         self != 0.0
@@ -230,6 +237,9 @@ impl Elem for f32 {
     }
     fn from_f64(x: f64) -> f32 {
         x as f32
+    }
+    fn to_f64(self) -> f64 {
+        self as f64
     }
     fn is_truthy(self) -> bool {
         self != 0.0
@@ -304,6 +314,9 @@ impl Elem for i64 {
     }
     fn from_f64(x: f64) -> i64 {
         x as i64
+    }
+    fn to_f64(self) -> f64 {
+        self as f64
     }
     fn is_truthy(self) -> bool {
         self != 0
@@ -392,8 +405,11 @@ pub(crate) enum Rd<'t, T: Elem> {
     Splat(T),
     /// Same shape as the output: direct indexing.
     Slice(Cow<'t, [T]>),
-    /// Arbitrary broadcast: indirect through a precomputed index map.
-    Mapped(Cow<'t, [T]>, Vec<usize>),
+    /// Arbitrary broadcast: indirect through a precomputed index map. The
+    /// map is borrowed (`Cow::Borrowed`) when a shape-specialized kernel
+    /// plan lends its cached copy (`vm/plan.rs`), owned when computed here
+    /// per call.
+    Mapped(Cow<'t, [T]>, Cow<'t, [usize]>),
 }
 
 impl<'t, T: Elem> Rd<'t, T> {
@@ -404,7 +420,7 @@ impl<'t, T: Elem> Rd<'t, T> {
         if t.shape() == out_shape {
             return Rd::Slice(T::read(t));
         }
-        Rd::Mapped(T::read(t), broadcast_index_map(t.shape(), out_shape))
+        Rd::Mapped(T::read(t), Cow::Owned(broadcast_index_map(t.shape(), out_shape)))
     }
 
     #[inline]

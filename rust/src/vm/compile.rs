@@ -27,8 +27,11 @@ pub enum Instr {
     /// `j` set means this is the final read of `args[j]`'s register, so the
     /// interpreter *moves* the value out instead of cloning — which is what
     /// lets uniquely-owned tensor buffers be reused in place by the
-    /// elementwise kernels (args beyond bit 31 are always cloned).
-    CallPrim { dst: Reg, prim: Prim, args: Vec<Reg>, last: u32 },
+    /// elementwise kernels (args beyond bit 31 are always cloned). `site` is
+    /// this call's slot in the per-`Vm` shape-specialization plan cache
+    /// (see `vm::plan`), or [`super::plan::NO_SITE`] for prims that never
+    /// specialize.
+    CallPrim { dst: Reg, prim: Prim, args: Vec<Reg>, last: u32, site: u32 },
     /// General call of a function value.
     Call { dst: Reg, func: Reg, args: Vec<Reg> },
     /// Call in return position: replaces the current frame.
@@ -60,6 +63,9 @@ pub struct Program {
     pub codes: Vec<Arc<CodeObject>>,
     pub consts: Vec<Value>,
     pub graph_code: HashMap<GraphId, usize>,
+    /// Number of plan-eligible `CallPrim` sites (consecutively numbered
+    /// across all code objects); sizes the `Vm`'s plan cache.
+    pub plan_sites: usize,
 }
 
 /// Compilation error.
@@ -146,7 +152,14 @@ fn compile_graph(
                 .map(|&a| c.reg_for(a))
                 .collect::<Result<_, _>>()?;
             let dst = c.alloc();
-            c.instrs.push(Instr::CallPrim { dst, prim: p, args, last: 0 });
+            let site = if super::plan::plan_eligible(p) {
+                let s = c.program.plan_sites as u32;
+                c.program.plan_sites += 1;
+                s
+            } else {
+                super::plan::NO_SITE
+            };
+            c.instrs.push(Instr::CallPrim { dst, prim: p, args, last: 0, site });
             c.regs.insert(n, dst);
         } else {
             if let Some(Const::Macro(op)) = m.node(inputs[0]).constant() {
@@ -352,6 +365,36 @@ mod tests {
         assert_eq!(code.n_captures, 0);
         assert!(matches!(code.instrs[0], Instr::CallPrim { prim: Prim::Mul, .. }));
         assert!(matches!(code.instrs.last(), Some(Instr::Return { .. })));
+    }
+
+    #[test]
+    fn plan_sites_numbered_for_eligible_prims() {
+        let mut m = Module::new();
+        let f = m.add_graph("f");
+        let x = m.add_parameter(f, "x");
+        let mm = m.apply_prim(f, Prim::MatMul, &[x, x]);
+        let sq = m.apply_prim(f, Prim::Mul, &[mm, mm]);
+        let s = m.apply_prim(f, Prim::ReduceSum, &[sq]);
+        m.set_return(f, s);
+        let p = compile_program(&m, f).unwrap();
+        assert_eq!(p.plan_sites, 2, "matmul + reduce_sum get sites; mul does not");
+        let code = &p.codes[p.graph_code[&f]];
+        let sites: Vec<(Prim, u32)> = code
+            .instrs
+            .iter()
+            .filter_map(|i| match i {
+                Instr::CallPrim { prim, site, .. } => Some((*prim, *site)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(
+            sites,
+            vec![
+                (Prim::MatMul, 0),
+                (Prim::Mul, super::super::plan::NO_SITE),
+                (Prim::ReduceSum, 1),
+            ]
+        );
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //! concurrently.
 
 use super::compile::{CodeObject, Instr, Program, Reg};
+use super::plan::{PlanCache, PlanStats, NO_SITE};
 use super::prims::eval_prim_inplace;
 use super::value::{Closure, Value};
 use crate::ir::Prim;
@@ -48,6 +49,15 @@ pub struct ExecStats {
     /// trips) performed inside primitive calls — zero across a fused
     /// region, the "conversion tax" the typed kernels eliminate.
     pub conversions: u64,
+    /// Shape-specialized kernel plans compiled during this call (first
+    /// sight of a shape key at a plan-eligible site; see `vm::plan`).
+    pub plans_compiled: u64,
+    /// Dispatches that matched a cached plan and skipped shape/dtype
+    /// simulation entirely.
+    pub plan_hits: u64,
+    /// Dispatches at a site that had plans, none matching the live
+    /// shapes (shape-polymorphic call site).
+    pub plan_shape_misses: u64,
 }
 
 /// Lock-free statistics accumulator: per-call counters are folded in with
@@ -64,6 +74,9 @@ struct StatsCell {
     fused_ops: AtomicU64,
     allocs_saved: AtomicU64,
     conversions: AtomicU64,
+    plans_compiled: AtomicU64,
+    plan_hits: AtomicU64,
+    plan_shape_misses: AtomicU64,
 }
 
 impl StatsCell {
@@ -76,6 +89,9 @@ impl StatsCell {
         self.fused_ops.fetch_add(s.fused_ops, Ordering::Relaxed);
         self.allocs_saved.fetch_add(s.allocs_saved, Ordering::Relaxed);
         self.conversions.fetch_add(s.conversions, Ordering::Relaxed);
+        self.plans_compiled.fetch_add(s.plans_compiled, Ordering::Relaxed);
+        self.plan_hits.fetch_add(s.plan_hits, Ordering::Relaxed);
+        self.plan_shape_misses.fetch_add(s.plan_shape_misses, Ordering::Relaxed);
     }
 
     fn take(&self) -> ExecStats {
@@ -88,6 +104,9 @@ impl StatsCell {
             fused_ops: self.fused_ops.swap(0, Ordering::Relaxed),
             allocs_saved: self.allocs_saved.swap(0, Ordering::Relaxed),
             conversions: self.conversions.swap(0, Ordering::Relaxed),
+            plans_compiled: self.plans_compiled.swap(0, Ordering::Relaxed),
+            plan_hits: self.plan_hits.swap(0, Ordering::Relaxed),
+            plan_shape_misses: self.plan_shape_misses.swap(0, Ordering::Relaxed),
         }
     }
 }
@@ -100,6 +119,9 @@ pub struct Vm {
     pub segments: Vec<Arc<dyn SegmentRunner>>,
     pub max_depth: usize,
     stats: StatsCell,
+    /// The shape-specialization tier: per-site, shape-keyed kernel plans
+    /// shared (lock-free) by every thread calling through this `Vm`.
+    plans: PlanCache,
 }
 
 /// Per-invocation mutable state: the frame stack and this call's statistics.
@@ -126,18 +148,30 @@ struct Frame {
 
 /// Route one primitive call: `fused_map` goes to the single-loop fused
 /// evaluator (with its savings folded into this call's statistics),
-/// everything else to the in-place-capable evaluator. Conversion sampling
-/// lives here so every dispatch path — `CallPrim`, `Call`/`TailCall` prim
-/// resolution, and top-level prim values — attributes its `as_f64_vec`
-/// round-trips to `ExecStats::conversions`.
-fn dispatch_prim(p: Prim, args: &mut [Value], stats: &mut ExecStats) -> Result<Value> {
+/// other plan-eligible prims at a numbered `CallPrim` site go through the
+/// shape-specialization tier, everything else to the in-place-capable
+/// evaluator. Conversion sampling lives here so every dispatch path —
+/// `CallPrim`, `Call`/`TailCall` prim resolution, and top-level prim
+/// values — attributes its `as_f64_vec` round-trips to
+/// `ExecStats::conversions`.
+fn dispatch_prim(
+    p: Prim,
+    args: &mut [Value],
+    stats: &mut ExecStats,
+    plans: &PlanCache,
+    site: u32,
+) -> Result<Value> {
     let conv_before = crate::tensor::conversion_count();
     let result = if p == Prim::FusedMap {
         stats.fused_ops += 1;
-        super::fused::eval_fused(args).map(|(v, saved)| {
-            stats.allocs_saved += saved;
-            v
-        })
+        super::fused::eval_fused_at(args, plans.site(site).map(|s| (plans, s)), stats).map(
+            |(v, saved)| {
+                stats.allocs_saved += saved;
+                v
+            },
+        )
+    } else if let Some(s) = plans.site(site) {
+        super::plan::dispatch_sized(p, args, plans, s, stats)
     } else {
         eval_prim_inplace(p, args)
     };
@@ -165,17 +199,35 @@ impl Frame {
 
 impl Vm {
     pub fn new(program: Program) -> Vm {
+        let plans = PlanCache::new(program.plan_sites);
         Vm {
             program: Arc::new(program),
             segments: Vec::new(),
             max_depth: 100_000,
             stats: StatsCell::default(),
+            plans,
         }
     }
 
     /// Statistics accumulated since the last [`Vm::take_stats`].
     pub fn take_stats(&self) -> ExecStats {
         self.stats.take()
+    }
+
+    /// Cumulative shape-specialization counters (never reset).
+    pub fn plan_stats(&self) -> PlanStats {
+        self.plans.stats()
+    }
+
+    /// Force the shape-specialization tier on or off for this `Vm`
+    /// (overrides the `MYIA_SPECIALIZE` decision taken at construction).
+    pub fn set_specialization(&self, on: bool) {
+        self.plans.set_enabled(on);
+    }
+
+    /// Is the shape-specialization tier active?
+    pub fn specialization_enabled(&self) -> bool {
+        self.plans.enabled()
     }
 
     /// Build the entry closure for a compiled graph (must capture nothing).
@@ -217,7 +269,7 @@ impl Vm {
             match func {
                 Value::Prim(p) => {
                     stats.prim_calls += 1;
-                    return dispatch_prim(p, &mut args, stats);
+                    return dispatch_prim(p, &mut args, stats, &self.plans, NO_SITE);
                 }
                 Value::Partial(pa) => {
                     let mut combined = pa.bound.clone();
@@ -252,7 +304,7 @@ impl Vm {
                     frame.regs[*dst as usize] =
                         Value::Closure(Arc::new(Closure { code, captures: cap }));
                 }
-                Instr::CallPrim { dst, prim, args, last } => {
+                Instr::CallPrim { dst, prim, args, last, site } => {
                     stats.prim_calls += 1;
                     // Hot path (§Perf): arity ≤ 4 covers every fixed-arity
                     // primitive; a stack buffer avoids a heap Vec per op.
@@ -271,7 +323,7 @@ impl Vm {
                                 frame.regs[r as usize].clone()
                             };
                         }
-                        dispatch_prim(*prim, &mut buf[..args.len()], stats)
+                        dispatch_prim(*prim, &mut buf[..args.len()], stats, &self.plans, *site)
                     } else {
                         let mut argv: Vec<Value> = args
                             .iter()
@@ -284,7 +336,7 @@ impl Vm {
                                 }
                             })
                             .collect();
-                        dispatch_prim(*prim, &mut argv, stats)
+                        dispatch_prim(*prim, &mut argv, stats, &self.plans, *site)
                     }
                     .map_err(|e| anyhow!("in `{}`: {e}", frame.code.name))?;
                     frame.regs[*dst as usize] = v;
@@ -321,7 +373,7 @@ impl Vm {
                         match callee {
                             Value::Prim(p) => {
                                 stats.prim_calls += 1;
-                                let v = dispatch_prim(p, &mut argv, stats)?;
+                                let v = dispatch_prim(p, &mut argv, stats, &self.plans, NO_SITE)?;
                                 let frame = stack.last_mut().unwrap();
                                 frame.regs[dst as usize] = v;
                                 break;
@@ -360,7 +412,7 @@ impl Vm {
                         match callee {
                             Value::Prim(p) => {
                                 stats.prim_calls += 1;
-                                let v = dispatch_prim(p, &mut argv, stats)?;
+                                let v = dispatch_prim(p, &mut argv, stats, &self.plans, NO_SITE)?;
                                 stack.pop();
                                 match stack.last_mut() {
                                     None => return Ok(v),
@@ -616,6 +668,56 @@ def main():
         assert!(stats.prim_calls >= 2);
         // stats reset after take
         assert_eq!(vm.take_stats().instrs, 0);
+    }
+
+    #[test]
+    fn plan_tier_compiles_then_hits() {
+        let mut m = Module::new();
+        let graphs =
+            compile_source(&mut m, "def f(w, x):\n    return sum(matmul(w, x))\n").unwrap();
+        let g = graphs["f"];
+        let program = compile_program(&m, g).unwrap();
+        assert_eq!(program.plan_sites, 2, "matmul and sum are plan-eligible");
+        let vm = Vm::new(program);
+        vm.set_specialization(true);
+        let w = Value::Tensor(
+            crate::tensor::Tensor::from_f64_shaped(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]).unwrap(),
+        );
+        let x = Value::Tensor(
+            crate::tensor::Tensor::from_f64_shaped(vec![1.0, 1.0], vec![2]).unwrap(),
+        );
+        vm.call_graph(g, vec![w.clone(), x.clone()]).unwrap();
+        let first = vm.take_stats();
+        assert_eq!(first.plans_compiled, 2, "both sites compile on first sight");
+        assert_eq!(first.plan_hits, 0);
+        vm.call_graph(g, vec![w.clone(), x.clone()]).unwrap();
+        let second = vm.take_stats();
+        assert_eq!(second.plan_hits, 2, "repeat shapes hit cached plans");
+        assert_eq!(second.plans_compiled, 0);
+        // A new shape at the same sites is a shape miss + recompile…
+        let w3 = Value::Tensor(
+            crate::tensor::Tensor::from_f64_shaped(vec![1.0; 9], vec![3, 3]).unwrap(),
+        );
+        let x3 = Value::Tensor(
+            crate::tensor::Tensor::from_f64_shaped(vec![1.0; 3], vec![3]).unwrap(),
+        );
+        vm.call_graph(g, vec![w3.clone(), x3.clone()]).unwrap();
+        let third = vm.take_stats();
+        assert_eq!(third.plan_shape_misses, 2);
+        assert_eq!(third.plans_compiled, 2);
+        // …and then hits.
+        vm.call_graph(g, vec![w3, x3]).unwrap();
+        assert_eq!(vm.take_stats().plan_hits, 2);
+        let cum = vm.plan_stats();
+        assert_eq!(cum.plans_compiled, 4);
+        assert_eq!(cum.plan_hits, 4);
+        assert_eq!(cum.plan_shape_misses, 2);
+        // Disabling the tier stops all plan activity but not execution.
+        vm.set_specialization(false);
+        vm.call_graph(g, vec![w, x]).unwrap();
+        let off = vm.take_stats();
+        assert_eq!(off.plan_hits + off.plans_compiled + off.plan_shape_misses, 0);
+        assert_eq!(vm.plan_stats(), cum);
     }
 
     #[test]

@@ -28,14 +28,40 @@
 //! partition coincides with the output's because stealing requires shape
 //! equality. Results are therefore bit-identical to the sequential loop at
 //! every pool size.
+//!
+//! ## Trailing reductions
+//!
+//! A fused program may carry a [`FusedReduce`]: the map values are then
+//! consumed by an inline `sum` / `sum_tail` / `sum_axis` instead of being
+//! materialized. Each output cell accumulates its map elements in f64, in
+//! the exact index order of the standalone reduction kernels
+//! (`tensor/ops.rs`), and narrows once at the end — so a fused reduction is
+//! bit-identical to map-then-reduce. Parallelism splits *output cells*
+//! only; a single cell's accumulation is never divided, which keeps the
+//! result independent of the pool size.
+//!
+//! ## Shape-specialized plans
+//!
+//! When the `CallPrim` site carries a plan slot (see `vm::plan`), the
+//! simulation and the O(numel) broadcast index maps run once per leaf-shape
+//! key; later calls with the same shapes dispatch straight into the typed
+//! loop with the cached geometry (or straight to replay, when simulation
+//! declined for those shapes).
 
+use super::plan::{
+    fused_leaf_keys, fused_leaf_match, FusedPlan, KernelPlan, LeafAccess, PlanCache, Site,
+    TypedFused,
+};
 use super::pool;
 use super::prims::eval_prim_inplace;
 use super::value::Value;
-use crate::ir::{FusedExpr, FusedOp, Prim, MAX_FUSED_STACK};
+use crate::ir::{FusedExpr, FusedOp, FusedReduce, Prim, MAX_FUSED_STACK};
 use crate::tensor::ops::{broadcast_shapes, promote, unary_out_dtype, Elem, NumOp, Rd, UnOp};
 use crate::tensor::{DType, Tensor};
+use crate::vm::exec::ExecStats;
 use anyhow::{anyhow, bail, Result};
+use std::borrow::Cow;
+use std::sync::Arc;
 
 /// Map a binary arithmetic primitive onto its typed kernel op. (FloorDiv
 /// and Mod have typed kernels for the in-place path but are not in the
@@ -79,7 +105,24 @@ pub fn un_op_of(p: Prim) -> Option<UnOp> {
 /// path has already *moved* out of dying registers (so uniquely-owned
 /// buffers really are dead and reusable). Returns the result plus the
 /// number of tensor allocations avoided relative to unfused execution.
+///
+/// This is the generic (plan-less) entry point; the VM's `CallPrim` path
+/// goes through [`eval_fused_at`] so repeat shapes skip the simulation.
 pub fn eval_fused(args: &mut [Value]) -> Result<(Value, u64)> {
+    let mut sink = ExecStats::default();
+    eval_fused_at(args, None, &mut sink)
+}
+
+/// Evaluate a `fused_map` application, consulting (and feeding) the shape
+/// specialization tier when the call site has a plan slot. `site` is `None`
+/// on plan-less paths (tier disabled, first-class prim call, generic
+/// wrapper); the result is identical either way — plans change where shape
+/// work happens, never what is computed.
+pub(crate) fn eval_fused_at(
+    args: &mut [Value],
+    site: Option<(&PlanCache, &Site)>,
+    stats: &mut ExecStats,
+) -> Result<(Value, u64)> {
     let expr = match &args[0] {
         Value::Fused(e) => e.clone(),
         other => bail!("fused_map expects a fused program, got {}", other.type_name()),
@@ -91,7 +134,10 @@ pub fn eval_fused(args: &mut [Value]) -> Result<(Value, u64)> {
 
     // Classification: the fast path needs numeric leaves and at least one
     // tensor (a scalar-only chain must return a scalar Value, with integer
-    // semantics the loop cannot reproduce — replay handles it).
+    // semantics the loop cannot reproduce — replay handles it). Non-numeric
+    // leaves (symbolic zeros, tuples) are unkeyable and bypass the plan
+    // tier entirely — this is deliberate and value-kind-based; rank-0 and
+    // batch-of-1 *tensors* never bypass.
     let numericish = |v: &Value| {
         matches!(v, Value::Tensor(_) | Value::F64(_) | Value::I64(_) | Value::Bool(_))
     };
@@ -99,9 +145,61 @@ pub fn eval_fused(args: &mut [Value]) -> Result<(Value, u64)> {
         return Ok((replay(&expr, leaves)?, 0));
     }
 
+    if let Some((cache, s)) = site {
+        // Hit path: compare stored keys directly against the live leaves —
+        // no key is allocated on a hit.
+        if let Some(plan) = s.find(|k| fused_leaf_match(k, leaves)) {
+            stats.plan_hits += 1;
+            cache.note_hit();
+            match plan {
+                KernelPlan::Fused(FusedPlan::Typed(tp)) => {
+                    return match tp.dtype {
+                        DType::F64 => run_typed::<f64>(&expr, leaves, tp.map_shape.to_vec(), Some(tp)),
+                        _ => run_typed::<f32>(&expr, leaves, tp.map_shape.to_vec(), Some(tp)),
+                    };
+                }
+                KernelPlan::Fused(FusedPlan::Replay) => return Ok((replay(&expr, leaves)?, 0)),
+                // A foreign plan kind at a fused site (impossible today):
+                // fall through to the generic flow below.
+                _ => {}
+            }
+        } else {
+            let had_plans = s.has_plans();
+            if let Some(key) = fused_leaf_keys(leaves) {
+                let (plan, result) = match simulate(&expr, leaves) {
+                    Some((map_shape, dt @ (DType::F64 | DType::F32))) => {
+                        let tp = Arc::new(TypedFused {
+                            dtype: dt,
+                            map_shape: map_shape.clone().into_boxed_slice(),
+                            access: super::plan::build_access(leaves, &map_shape),
+                        });
+                        let r = match dt {
+                            DType::F64 => run_typed::<f64>(&expr, leaves, map_shape, Some(&tp))?,
+                            _ => run_typed::<f32>(&expr, leaves, map_shape, Some(&tp))?,
+                        };
+                        (KernelPlan::Fused(FusedPlan::Typed(tp)), r)
+                    }
+                    _ => (KernelPlan::Fused(FusedPlan::Replay), (replay(&expr, leaves)?, 0)),
+                };
+                if s.insert(key, plan) {
+                    stats.plans_compiled += 1;
+                    cache.note_compiled();
+                    if had_plans {
+                        stats.plan_shape_misses += 1;
+                        cache.note_shape_miss();
+                    }
+                } else {
+                    stats.plan_shape_misses += 1;
+                    cache.note_shape_miss();
+                }
+                return Ok(result);
+            }
+        }
+    }
+
     match simulate(&expr, leaves) {
-        Some((out_shape, DType::F64)) => run_typed::<f64>(&expr, leaves, out_shape),
-        Some((out_shape, DType::F32)) => run_typed::<f32>(&expr, leaves, out_shape),
+        Some((out_shape, DType::F64)) => run_typed::<f64>(&expr, leaves, out_shape, None),
+        Some((out_shape, DType::F32)) => run_typed::<f32>(&expr, leaves, out_shape, None),
         _ => Ok((replay(&expr, leaves)?, 0)),
     }
 }
@@ -193,6 +291,13 @@ fn simulate(expr: &FusedExpr, leaves: &[Value]) -> Option<(Vec<usize>, DType)> {
     if Some(dt) != target {
         return None;
     }
+    // A trailing axis reduction must be in range for the map shape; out of
+    // range declines so replay reproduces the kernel's error verbatim.
+    if let Some(FusedReduce::SumAxis(ax)) = &expr.reduce {
+        if *ax >= shape.len() {
+            return None;
+        }
+    }
     Some((shape, dt))
 }
 
@@ -219,6 +324,26 @@ impl<'a, T: Elem> Leaf<'a, T> {
         }
     }
 
+    /// Like [`Leaf::new`] but with a cached [`LeafAccess`] from a kernel
+    /// plan: the broadcast decision (and the O(numel) index map) comes
+    /// from the plan instead of being re-derived. Any mismatch between the
+    /// plan and the live value falls back to the unplanned constructor —
+    /// the plan is an accelerator, never an authority over correctness.
+    fn with_plan(v: &'a Value, out_shape: &[usize], acc: Option<&'a LeafAccess>) -> Leaf<'a, T> {
+        match (acc, v) {
+            (Some(LeafAccess::Direct), Value::Tensor(t)) if t.shape() == out_shape => {
+                Leaf::Rd(Rd::Slice(T::read(t)))
+            }
+            (Some(LeafAccess::TensorSplat), Value::Tensor(t)) if t.numel() == 1 => {
+                Leaf::Rd(Rd::Splat(T::read(t)[0]))
+            }
+            (Some(LeafAccess::Mapped(map)), Value::Tensor(t)) => {
+                Leaf::Rd(Rd::Mapped(T::read(t), Cow::Borrowed(&map[..])))
+            }
+            _ => Leaf::new(v, out_shape),
+        }
+    }
+
     #[inline]
     fn get(&self, cur: T, k: usize) -> T {
         match self {
@@ -229,10 +354,32 @@ impl<'a, T: Elem> Leaf<'a, T> {
     }
 }
 
+/// Execute the typed fast path: the fused map loop, then any trailing
+/// reduction. `map_shape` is the pre-reduction index space (what
+/// [`simulate`] returned, or what the plan cached); `plan` supplies cached
+/// per-leaf access when the call came through the specialization tier.
 fn run_typed<T: Elem + Send + Sync>(
     expr: &FusedExpr,
     leaves: &mut [Value],
+    map_shape: Vec<usize>,
+    plan: Option<&TypedFused>,
+) -> Result<(Value, u64)> {
+    match expr.reduce {
+        None => run_map::<T>(expr, leaves, map_shape, plan),
+        // `sum_tail` on rank ≤ 1 is the identity (matches `ops::sum_tail`):
+        // run the plain map loop.
+        Some(FusedReduce::SumTail) if map_shape.len() <= 1 => {
+            run_map::<T>(expr, leaves, map_shape, plan)
+        }
+        Some(r) => run_reduced::<T>(expr, leaves, map_shape, plan, r),
+    }
+}
+
+fn run_map<T: Elem + Send + Sync>(
+    expr: &FusedExpr,
+    leaves: &mut [Value],
     out_shape: Vec<usize>,
+    plan: Option<&TypedFused>,
 ) -> Result<(Value, u64)> {
     let numel: usize = out_shape.iter().product();
 
@@ -268,7 +415,13 @@ fn run_typed<T: Elem + Send + Sync>(
     let accessors: Vec<Leaf<T>> = leaves
         .iter()
         .enumerate()
-        .map(|(i, v)| if reused == Some(i) { Leaf::FromOut } else { Leaf::new(v, &out_shape) })
+        .map(|(i, v)| {
+            if reused == Some(i) {
+                Leaf::FromOut
+            } else {
+                Leaf::with_plan(v, &out_shape, plan.map(|p| &p.access[i]))
+            }
+        })
         .collect();
 
     // The per-chunk body: identical to the sequential loop over `0..numel`
@@ -323,6 +476,133 @@ fn run_typed<T: Elem + Send + Sync>(
 
     let saved = expr.interior_allocs() + u64::from(reused.is_some());
     let t = Tensor::new(out_shape, T::buffer(out)).map_err(|e| anyhow!("{e}"))?;
+    Ok((Value::Tensor(t), saved))
+}
+
+/// Execute the fused map with a trailing reduction: map values are
+/// consumed by per-output-cell f64 accumulation in the exact index order
+/// of the standalone kernels (`reduce_sum_all` / `sum_tail` /
+/// `reduce_axis` in `tensor/ops.rs`), narrowing once per cell — so the
+/// result is bit-identical to map-then-reduce at every pool size. No
+/// output-buffer steal happens here (the output is smaller than the map
+/// space); `saved` is [`FusedExpr::interior_allocs`], which for reduced
+/// programs already counts the never-materialized map tensor.
+fn run_reduced<T: Elem + Send + Sync>(
+    expr: &FusedExpr,
+    leaves: &mut [Value],
+    map_shape: Vec<usize>,
+    plan: Option<&TypedFused>,
+    reduce: FusedReduce,
+) -> Result<(Value, u64)> {
+    let map_numel: usize = map_shape.iter().product();
+    let accessors: Vec<Leaf<T>> = leaves
+        .iter()
+        .enumerate()
+        .map(|(i, v)| Leaf::with_plan(v, &map_shape, plan.map(|p| &p.access[i])))
+        .collect();
+
+    // Evaluate the postfix program at map index `k`. No leaf is stolen
+    // for the output here, so no accessor is `FromOut` and `cur` is inert.
+    let eval_at = |k: usize| -> T {
+        let mut stack = [T::zero(); MAX_FUSED_STACK];
+        let mut sp = 0usize;
+        for op in &expr.ops {
+            match op {
+                FusedOp::Input(i) => {
+                    stack[sp] = accessors[*i as usize].get(T::zero(), k);
+                    sp += 1;
+                }
+                FusedOp::ConstF64(v) => {
+                    stack[sp] = T::from_f64(*v);
+                    sp += 1;
+                }
+                FusedOp::ConstI64(v) => {
+                    stack[sp] = T::from_f64(*v as f64);
+                    sp += 1;
+                }
+                FusedOp::Un(p) => {
+                    let op = un_op_of(*p).expect("validated by simulate");
+                    stack[sp - 1] = T::un(op, stack[sp - 1]);
+                }
+                FusedOp::Bin(p) => {
+                    let op = num_op_of(*p).expect("validated by simulate");
+                    sp -= 1;
+                    stack[sp - 1] = T::bin(op, stack[sp - 1], stack[sp]);
+                }
+                FusedOp::Where => {
+                    sp -= 2;
+                    let c = stack[sp - 1];
+                    stack[sp - 1] = if c.is_truthy() { stack[sp] } else { stack[sp + 1] };
+                }
+                FusedOp::BroadcastTo(_) => {} // shape-only; value unchanged
+            }
+        }
+        stack[0]
+    };
+
+    // Chunked fill over *output cells*: one cell's accumulation is never
+    // split, and chunk boundaries derive from shape alone (cells per chunk
+    // scaled down by the reduction length so a chunk stays ~the same work
+    // as an elementwise chunk), so results are identical at any pool size.
+    let fill = |out: &mut [T], red_len: usize, cell: &(dyn Fn(usize) -> f64 + Sync)| {
+        let body = |piece: &mut [T], base: usize| {
+            for (j, o) in piece.iter_mut().enumerate() {
+                *o = T::from_f64(cell(base + j));
+            }
+        };
+        if map_numel < pool::FUSED_PAR_MIN_ELEMS || out.len() < 2 {
+            body(out, 0);
+        } else {
+            let chunk = (pool::FUSED_CHUNK_ELEMS / red_len.max(1)).max(1);
+            pool::for_chunks_mut(out, chunk, body);
+        }
+    };
+
+    let saved = expr.interior_allocs();
+    let t = match reduce {
+        FusedReduce::Sum => {
+            // Strictly sequential, ascending k — `reduce_sum_all`'s order.
+            let mut acc = 0.0f64;
+            for k in 0..map_numel {
+                acc += eval_at(k).to_f64();
+            }
+            Tensor::new(Vec::new(), T::buffer(vec![T::from_f64(acc)]))
+        }
+        FusedReduce::SumTail => {
+            // rank ≥ 2 here (rank ≤ 1 ran the identity map path).
+            let b = map_shape[0];
+            let inner = map_numel / b.max(1);
+            let mut out = vec![T::zero(); b];
+            fill(&mut out, inner, &|o| {
+                let mut acc = 0.0f64;
+                for i in 0..inner {
+                    acc += eval_at(o * inner + i).to_f64();
+                }
+                acc
+            });
+            Tensor::new(vec![b], T::buffer(out))
+        }
+        FusedReduce::SumAxis(ax) => {
+            // In range by `simulate`'s check; decomposition and per-cell
+            // ascending-k order mirror `ops::reduce_axis` exactly.
+            let n_r = map_shape[ax];
+            let outer: usize = map_shape[..ax].iter().product();
+            let inner: usize = map_shape[ax + 1..].iter().product();
+            let mut out_shape = map_shape.clone();
+            out_shape.remove(ax);
+            let mut out = vec![T::zero(); outer * inner];
+            fill(&mut out, n_r, &|c| {
+                let (o, i) = (c / inner, c % inner);
+                let mut acc = 0.0f64;
+                for k in 0..n_r {
+                    acc += eval_at((o * n_r + k) * inner + i).to_f64();
+                }
+                acc
+            });
+            Tensor::new(out_shape, T::buffer(out))
+        }
+    }
+    .map_err(|e| anyhow!("{e}"))?;
     Ok((Value::Tensor(t), saved))
 }
 
@@ -381,7 +661,17 @@ fn replay(expr: &FusedExpr, leaves: &mut [Value]) -> Result<Value> {
             }
         }
     }
-    Ok(stack.pop().expect("validated: one value remains"))
+    let v = stack.pop().expect("validated: one value remains");
+    // The trailing reduction replays through the standalone kernel — the
+    // exact unfused semantics (ZeroT absorption, error messages and all).
+    match expr.reduce {
+        None => Ok(v),
+        Some(FusedReduce::Sum) => eval_prim_inplace(Prim::ReduceSum, &mut [v]),
+        Some(FusedReduce::SumTail) => eval_prim_inplace(Prim::SumTail, &mut [v]),
+        Some(FusedReduce::SumAxis(ax)) => {
+            eval_prim_inplace(Prim::ReduceSumAxis, &mut [v, Value::I64(ax as i64)])
+        }
+    }
 }
 
 #[cfg(test)]
@@ -392,6 +682,10 @@ mod tests {
 
     fn fused(n: usize, ops: Vec<F>) -> Value {
         Value::Fused(std::sync::Arc::new(FusedExpr::new(n, ops).unwrap()))
+    }
+
+    fn fused_red(n: usize, ops: Vec<F>, r: FusedReduce) -> Value {
+        Value::Fused(std::sync::Arc::new(FusedExpr::with_reduce(n, ops, Some(r)).unwrap()))
     }
 
     fn t(v: &[f64]) -> Value {
@@ -519,6 +813,171 @@ mod tests {
         let got = out.as_tensor().unwrap();
         assert_eq!(got.shape(), &[2, 3]);
         assert_eq!(got.as_f64_vec(), vec![2., 4., 6., 2., 4., 6.]);
+    }
+
+    #[test]
+    fn fused_reductions_match_map_then_reduce() {
+        let _g = pool::test_guard();
+        let prev = pool::intra_op_threads();
+        // Rows × odd column count: crosses FUSED_PAR_MIN_ELEMS with a
+        // ragged chunk tail in the reduced fill.
+        let m = 4099usize;
+        let xs: Vec<f64> = (0..8 * m).map(|i| (i as f64 * 0.37).sin()).collect();
+        let x = Tensor::from_f64_shaped(xs, vec![8, m]).unwrap();
+        let ops = vec![
+            F::Input(0),
+            F::Un(Prim::Tanh),
+            F::Input(0),
+            F::Bin(Prim::Mul),
+            F::ConstF64(0.5),
+            F::Bin(Prim::Add),
+        ];
+        // Oracle: the unreduced fused map, then the standalone kernel.
+        let map = {
+            let mut args = vec![fused(1, ops.clone()), Value::Tensor(x.clone())];
+            eval_fused(&mut args).unwrap().0
+        };
+        let cases = vec![
+            (FusedReduce::Sum, eval_prim(Prim::ReduceSum, &[map.clone()]).unwrap()),
+            (FusedReduce::SumTail, eval_prim(Prim::SumTail, &[map.clone()]).unwrap()),
+            (
+                FusedReduce::SumAxis(0),
+                eval_prim(Prim::ReduceSumAxis, &[map.clone(), Value::I64(0)]).unwrap(),
+            ),
+            (
+                FusedReduce::SumAxis(1),
+                eval_prim(Prim::ReduceSumAxis, &[map.clone(), Value::I64(1)]).unwrap(),
+            ),
+        ];
+        for (r, want) in cases {
+            for lanes in [1usize, 2, 8] {
+                pool::set_intra_op_threads(lanes);
+                let mut args = vec![fused_red(1, ops.clone(), r), Value::Tensor(x.clone())];
+                let (got, saved) = eval_fused(&mut args).unwrap();
+                assert!(saved >= 2, "{r:?}: interior + map output eliminated, got {saved}");
+                let g = got.as_tensor().unwrap();
+                let w = want.as_tensor().unwrap();
+                assert_eq!(g.shape(), w.shape(), "{r:?}");
+                let same = g
+                    .as_f64_vec()
+                    .iter()
+                    .zip(w.as_f64_vec())
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "fused {r:?} differs from map-then-reduce at {lanes} lanes");
+            }
+        }
+        pool::set_intra_op_threads(prev);
+    }
+
+    #[test]
+    fn f32_reduction_narrows_like_the_kernels() {
+        let x = Tensor::new(
+            vec![2, 3],
+            crate::tensor::Buffer::F32(vec![0.1, 0.7, -1.3, 2.2, 0.05, -0.6]),
+        )
+        .unwrap();
+        let ops = vec![F::Input(0), F::Input(0), F::Bin(Prim::Mul)];
+        let map = {
+            let mut args = vec![fused(1, ops.clone()), Value::Tensor(x.clone())];
+            eval_fused(&mut args).unwrap().0
+        };
+        let want = eval_prim(Prim::SumTail, &[map]).unwrap();
+        let mut args = vec![fused_red(1, ops, FusedReduce::SumTail), Value::Tensor(x)];
+        let (got, _) = eval_fused(&mut args).unwrap();
+        let g = got.as_tensor().unwrap();
+        assert_eq!(g.dtype(), DType::F32);
+        assert!(got.structural_eq(&want), "{got} vs {want}");
+    }
+
+    #[test]
+    fn sum_tail_on_rank1_is_identity() {
+        // `ops::sum_tail` is the identity below rank 2; the fused form must
+        // agree (and still apply the map).
+        let e = fused_red(1, vec![F::Input(0), F::Un(Prim::Neg)], FusedReduce::SumTail);
+        let mut args = vec![e, t(&[1.0, 2.0, 3.0])];
+        let (out, _) = eval_fused(&mut args).unwrap();
+        let g = out.as_tensor().unwrap();
+        assert_eq!(g.shape(), &[3]);
+        assert_eq!(g.as_f64_vec(), vec![-1.0, -2.0, -3.0]);
+    }
+
+    #[test]
+    fn sum_axis_out_of_range_replays_to_kernel_error() {
+        let e = fused_red(1, vec![F::Input(0), F::Un(Prim::Neg)], FusedReduce::SumAxis(5));
+        let mut args = vec![e, t(&[1.0, 2.0])];
+        let err = eval_fused(&mut args).unwrap_err();
+        assert!(format!("{err}").contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn planned_dispatch_matches_generic_and_counts() {
+        use crate::vm::plan::PlanCache;
+        let cache = PlanCache::new(1);
+        cache.set_enabled(true);
+        let s = cache.site(0).unwrap();
+        let x = Tensor::from_f64_shaped(vec![1., 2., 3., 4., 5., 6.], vec![2, 3]).unwrap();
+        let row = Tensor::from_f64(&[10., 20., 30.]);
+        let ops = vec![F::Input(0), F::Input(1), F::Bin(Prim::Add), F::Un(Prim::Tanh)];
+        let e = fused_red(2, ops, FusedReduce::SumAxis(0));
+        let mut stats = ExecStats::default();
+
+        let run_at = |stats: &mut ExecStats| {
+            let mut args =
+                vec![e.clone(), Value::Tensor(x.clone()), Value::Tensor(row.clone())];
+            eval_fused_at(&mut args, Some((&cache, s)), stats).unwrap().0
+        };
+        let first = run_at(&mut stats);
+        assert_eq!(stats.plans_compiled, 1);
+        assert_eq!(stats.plan_hits, 0);
+        let second = run_at(&mut stats);
+        assert_eq!(stats.plan_hits, 1, "repeat shapes must hit the cached plan");
+
+        // Planned results are bit-identical to the plan-less path.
+        let generic = {
+            let mut args =
+                vec![e.clone(), Value::Tensor(x.clone()), Value::Tensor(row.clone())];
+            eval_fused(&mut args).unwrap().0
+        };
+        assert!(first.structural_eq(&generic), "{first} vs {generic}");
+        assert!(second.structural_eq(&generic));
+
+        // A new leaf shape at the same site: miss, recompile, then hit.
+        let x2 = Tensor::from_f64_shaped(vec![1.0; 12], vec![4, 3]).unwrap();
+        let mut args = vec![e.clone(), Value::Tensor(x2), Value::Tensor(row.clone())];
+        eval_fused_at(&mut args, Some((&cache, s)), &mut stats).unwrap();
+        assert_eq!(stats.plan_shape_misses, 1);
+        assert_eq!(stats.plans_compiled, 2);
+
+        // Unkeyable leaves (ZeroT) bypass the tier without touching it.
+        let before = cache.stats();
+        let mut args = vec![e, Value::ZeroT, Value::Tensor(row)];
+        eval_fused_at(&mut args, Some((&cache, s)), &mut stats).unwrap();
+        assert_eq!(cache.stats(), before, "ZeroT must bypass, not count");
+    }
+
+    #[test]
+    fn rank0_and_batch_of_1_take_the_plan_path() {
+        use crate::vm::plan::PlanCache;
+        let cache = PlanCache::new(2);
+        cache.set_enabled(true);
+        // Rank-0 output: full-sum reduction.
+        let s0 = cache.site(0).unwrap();
+        let e0 = fused_red(1, vec![F::Input(0), F::Un(Prim::Exp)], FusedReduce::Sum);
+        for _ in 0..2 {
+            let mut args = vec![e0.clone(), t(&[0.1, 0.2])];
+            eval_fused_at(&mut args, Some((&cache, s0)), &mut ExecStats::default()).unwrap();
+        }
+        // Batch-of-1 leaf: shape [1, 2].
+        let s1 = cache.site(1).unwrap();
+        let e1 = fused(1, vec![F::Input(0), F::Un(Prim::Neg)]);
+        for _ in 0..2 {
+            let one = Tensor::from_f64_shaped(vec![1.0, 2.0], vec![1, 2]).unwrap();
+            let mut args = vec![e1.clone(), Value::Tensor(one)];
+            eval_fused_at(&mut args, Some((&cache, s1)), &mut ExecStats::default()).unwrap();
+        }
+        let st = cache.stats();
+        assert_eq!(st.plans_compiled, 2);
+        assert_eq!(st.plan_hits, 2, "rank-0 and batch-of-1 must hit plans, never bypass");
     }
 
     #[test]

@@ -10,12 +10,14 @@
 pub mod compile;
 pub mod exec;
 pub mod fused;
+pub mod plan;
 pub mod pool;
 pub mod prims;
 pub mod value;
 
 pub use compile::{compile_program, CodeObject, Instr, Program, Reg};
 pub use exec::{ExecStats, SegmentRunner, Vm};
+pub use plan::{PlanCache, PlanStats, NO_SITE};
 pub use fused::eval_fused;
 pub use prims::{eval_prim, eval_prim_inplace, gadd, zeros_like};
 pub use value::{Closure, EnvMap, PartialApp, Value};

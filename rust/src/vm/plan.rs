@@ -1,0 +1,530 @@
+//! The shape-specializing kernel tier (ROADMAP item 2).
+//!
+//! The IR is shape-erased, so generic dispatch pays a shape/dtype
+//! simulation on every fused-kernel call (`vm/fused.rs`) and rebuilds
+//! O(numel) broadcast index maps per call. This module caches that work
+//! per *call site* and *argument shape*: the first call at a plan-eligible
+//! `CallPrim` site with concrete shapes compiles a straight-line
+//! [`KernelPlan`] — the resolved map space, dtype, per-leaf broadcast
+//! access (index maps included) and the typed-vs-replay decision — into a
+//! lock-free-read, shape-keyed cache hanging off the [`super::Vm`] (and
+//! therefore off every `Executable` sharing it, across any number of
+//! serving threads). Subsequent fixed-shape calls dispatch with zero
+//! simulation.
+//!
+//! ## Concurrency
+//!
+//! Each site is a push-only linked list headed by an `AtomicPtr`. Readers
+//! walk with `Acquire` loads and take no locks; writers publish a new head
+//! with a `Release` compare-exchange. Two threads racing to compile the
+//! same plan both succeed — the plans are identical (fully determined by
+//! the shape/dtype key), one lands first and the other simply prepends a
+//! duplicate that later lookups never reach past the first match. Nodes
+//! are freed only when the cache is dropped.
+//!
+//! ## Keying and bypass
+//!
+//! Keys are shape + dtype for tensor arguments, kind-only for scalar
+//! leaves of a fused kernel (their *values* change per call and never
+//! affect the plan), and value-carrying for structural integers/bools
+//! (batch flags, reduction axes, epilogue codes). There is deliberately
+//! **no size-based bypass**: rank-0 outputs and batch-of-1 calls take the
+//! plan path like any other shape. The only bypass is a value the key
+//! cannot describe — symbolic zeros, tuples, closures — which dispatches
+//! generically without touching the counters. A site accumulates at most
+//! [`MAX_PLANS_PER_SITE`] plans; beyond that, new shapes execute
+//! generically (counted as shape misses) instead of growing the list.
+//!
+//! ## Determinism
+//!
+//! A plan changes *where* shape work happens, never what is computed:
+//! planned and generic execution are bit-identical at every pool size
+//! (property-tested in `tests/test_specialize.rs`).
+//!
+//! ## Knobs
+//!
+//! `MYIA_SPECIALIZE=0` disables the tier at [`Vm`](super::Vm) construction;
+//! [`PlanCache::set_enabled`] is the programmatic override (the serving
+//! path may hold an `Executable` from the hot artifact cache whose `Vm` —
+//! and plan cache — predates any env change).
+
+use super::prims::eval_prim_inplace;
+use super::value::Value;
+use crate::ir::Prim;
+use crate::tensor::DType;
+use crate::vm::exec::ExecStats;
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Sentinel for "this dispatch path has no plan site" (first-class prim
+/// calls, tail-call resolution, cold constant folding).
+pub const NO_SITE: u32 = u32::MAX;
+
+/// Cap on distinct shape keys per site: a site cycling through more shapes
+/// than this is shape-polymorphic for real, and caching would only grow an
+/// unbounded list that every lookup walks.
+pub const MAX_PLANS_PER_SITE: usize = 16;
+
+/// Is `p` a specializable kernel site? (The bytecode compiler numbers one
+/// plan slot per `CallPrim` of these.)
+pub fn plan_eligible(p: Prim) -> bool {
+    matches!(
+        p,
+        Prim::FusedMap
+            | Prim::MatMul
+            | Prim::BatchMatMul
+            | Prim::MatMulEp
+            | Prim::ReduceSum
+            | Prim::SumTail
+            | Prim::ReduceSumAxis
+    )
+}
+
+/// One entry of a plan key.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArgKey {
+    /// A tensor argument: shape and dtype (the values never matter).
+    Tensor(Box<[usize]>, DType),
+    /// A scalar fused-kernel leaf — kind only, the value varies per call.
+    ScalarF64,
+    ScalarI64,
+    ScalarBool,
+    /// A structural integer whose *value* shapes the plan (reduction axis,
+    /// epilogue code, integer batch flag).
+    I64(i64),
+    /// A structural bool whose value shapes the plan (batch flags).
+    Bool(bool),
+}
+
+impl ArgKey {
+    /// Key a fused-kernel leaf (scalar values keyed by kind only).
+    fn of_leaf(v: &Value) -> Option<ArgKey> {
+        Some(match v {
+            Value::Tensor(t) => ArgKey::Tensor(t.shape().into(), t.dtype()),
+            Value::F64(_) => ArgKey::ScalarF64,
+            Value::I64(_) => ArgKey::ScalarI64,
+            Value::Bool(_) => ArgKey::ScalarBool,
+            _ => return None,
+        })
+    }
+
+    /// Key a structural argument (flag/axis/code values are load-bearing).
+    fn of_arg(v: &Value) -> Option<ArgKey> {
+        Some(match v {
+            Value::Tensor(t) => ArgKey::Tensor(t.shape().into(), t.dtype()),
+            Value::F64(_) => ArgKey::ScalarF64,
+            Value::I64(x) => ArgKey::I64(*x),
+            Value::Bool(b) => ArgKey::Bool(*b),
+            _ => return None,
+        })
+    }
+
+    fn matches_leaf(&self, v: &Value) -> bool {
+        match (self, v) {
+            (ArgKey::Tensor(s, dt), Value::Tensor(t)) => {
+                t.dtype() == *dt && t.shape() == &s[..]
+            }
+            (ArgKey::ScalarF64, Value::F64(_)) => true,
+            (ArgKey::ScalarI64, Value::I64(_)) => true,
+            (ArgKey::ScalarBool, Value::Bool(_)) => true,
+            _ => false,
+        }
+    }
+
+    fn matches_arg(&self, v: &Value) -> bool {
+        match (self, v) {
+            (ArgKey::Tensor(s, dt), Value::Tensor(t)) => {
+                t.dtype() == *dt && t.shape() == &s[..]
+            }
+            (ArgKey::ScalarF64, Value::F64(_)) => true,
+            (ArgKey::I64(x), Value::I64(y)) => x == y,
+            (ArgKey::Bool(x), Value::Bool(y)) => x == y,
+            _ => false,
+        }
+    }
+}
+
+/// Build a fused-leaf key (`None` when some leaf is unkeyable → bypass).
+pub(crate) fn fused_leaf_keys(leaves: &[Value]) -> Option<Box<[ArgKey]>> {
+    leaves.iter().map(ArgKey::of_leaf).collect()
+}
+
+/// Match a stored fused-leaf key against live leaves (no allocation).
+pub(crate) fn fused_leaf_match(key: &[ArgKey], leaves: &[Value]) -> bool {
+    key.len() == leaves.len() && key.iter().zip(leaves).all(|(k, v)| k.matches_leaf(v))
+}
+
+fn sized_keys(args: &[Value]) -> Option<Box<[ArgKey]>> {
+    args.iter().map(ArgKey::of_arg).collect()
+}
+
+fn sized_match(key: &[ArgKey], args: &[Value]) -> bool {
+    key.len() == args.len() && key.iter().zip(args).all(|(k, v)| k.matches_arg(v))
+}
+
+/// How the typed fused loop reads one leaf in the map space.
+#[derive(Debug)]
+pub enum LeafAccess {
+    /// Scalar `Value` leaf: splat its (per-call) value.
+    Scalar,
+    /// Single-element tensor: splat element 0.
+    TensorSplat,
+    /// Shape equals the map space: direct indexing.
+    Direct,
+    /// Arbitrary broadcast: the cached index map, computed once per shape
+    /// and lent to every call (`Rd::Mapped` borrows it).
+    Mapped(Arc<Vec<usize>>),
+}
+
+/// The specialized form of one fused kernel for one leaf-shape key.
+#[derive(Debug)]
+pub struct TypedFused {
+    /// The single float dtype every compute step lands on.
+    pub dtype: DType,
+    /// The map-space shape (pre-reduction output of the postfix program).
+    pub map_shape: Box<[usize]>,
+    /// Per-leaf access, aligned with the kernel's leaf order.
+    pub access: Box<[LeafAccess]>,
+}
+
+/// Build per-leaf access for a typed fused plan, mirroring `Rd::new`'s
+/// decision order exactly (single-element splat first, then direct, then
+/// index-mapped) so planned and unplanned reads are the same reads.
+pub(crate) fn build_access(leaves: &[Value], map_shape: &[usize]) -> Box<[LeafAccess]> {
+    leaves
+        .iter()
+        .map(|v| match v {
+            Value::Tensor(t) if t.numel() == 1 => LeafAccess::TensorSplat,
+            Value::Tensor(t) if t.shape() == map_shape => LeafAccess::Direct,
+            Value::Tensor(t) => LeafAccess::Mapped(Arc::new(
+                crate::tensor::ops::broadcast_index_map(t.shape(), map_shape),
+            )),
+            _ => LeafAccess::Scalar,
+        })
+        .collect()
+}
+
+/// The fused-kernel plan kinds.
+#[derive(Debug)]
+pub enum FusedPlan {
+    /// `simulate` landed on one float dtype: run the typed loop with the
+    /// cached geometry (zero simulation on hits).
+    Typed(Arc<TypedFused>),
+    /// `simulate` declined for these shapes/dtypes (integer or mixed
+    /// intermediates): replay immediately, skipping the re-simulation.
+    Replay,
+}
+
+/// A compiled per-shape plan for one call site.
+#[derive(Debug)]
+pub enum KernelPlan {
+    /// A fused elementwise/reduction kernel.
+    Fused(FusedPlan),
+    /// A matmul-family or standalone-reduction site: the plan pins the
+    /// resolved output geometry for this key. The kernels' own geometry
+    /// derivation is O(rank), so the hit's value here is the pinned
+    /// decision and the telemetry, not skipped work.
+    Sized { out_shape: Box<[usize]>, dtype: DType },
+    /// The keyed call produced a non-tensor result (scalar-typed site);
+    /// dispatch stays generic but the site is tracked.
+    Opaque,
+}
+
+struct PlanNode {
+    key: Box<[ArgKey]>,
+    plan: KernelPlan,
+    next: *mut PlanNode,
+}
+
+/// One call site's plans: a push-only, lock-free-read linked list.
+pub struct Site {
+    head: AtomicPtr<PlanNode>,
+}
+
+// The raw next-pointers are only ever read behind Acquire loads of a
+// Release-published head, and nodes are freed exclusively by `Drop`
+// (`&mut`), so sharing sites across threads is sound.
+unsafe impl Send for Site {}
+unsafe impl Sync for Site {}
+
+impl Site {
+    fn new() -> Site {
+        Site { head: AtomicPtr::new(std::ptr::null_mut()) }
+    }
+
+    /// Lock-free lookup: walk the list, return the first plan whose key
+    /// matches. The borrow is tied to `&self`; nodes live until `Drop`.
+    pub fn find(&self, matches: impl Fn(&[ArgKey]) -> bool) -> Option<&KernelPlan> {
+        let mut p = self.head.load(Ordering::Acquire);
+        while !p.is_null() {
+            let node = unsafe { &*p };
+            if matches(&node.key) {
+                return Some(&node.plan);
+            }
+            p = node.next;
+        }
+        None
+    }
+
+    /// Did this site ever compile a plan? (Distinguishes a first compile
+    /// from a shape miss in the telemetry.)
+    pub fn has_plans(&self) -> bool {
+        !self.head.load(Ordering::Acquire).is_null()
+    }
+
+    /// Publish a plan. Returns `false` (dropping the plan) when the site
+    /// is already at [`MAX_PLANS_PER_SITE`].
+    pub fn insert(&self, key: Box<[ArgKey]>, plan: KernelPlan) -> bool {
+        let mut node = Box::new(PlanNode { key, plan, next: std::ptr::null_mut() });
+        let mut head = self.head.load(Ordering::Acquire);
+        loop {
+            let mut n = 0usize;
+            let mut p = head;
+            while !p.is_null() {
+                n += 1;
+                p = unsafe { (*p).next };
+            }
+            if n >= MAX_PLANS_PER_SITE {
+                return false;
+            }
+            node.next = head;
+            let raw = Box::into_raw(node);
+            match self.head.compare_exchange(head, raw, Ordering::Release, Ordering::Acquire) {
+                Ok(_) => return true,
+                Err(cur) => {
+                    // Lost the race: take the box back and retry against
+                    // the new head (the racer may have inserted our key —
+                    // a duplicate entry is correct, so no re-check).
+                    node = unsafe { Box::from_raw(raw) };
+                    head = cur;
+                }
+            }
+        }
+    }
+}
+
+impl Drop for Site {
+    fn drop(&mut self) {
+        let mut p = *self.head.get_mut();
+        while !p.is_null() {
+            let node = unsafe { Box::from_raw(p) };
+            p = node.next;
+        }
+    }
+}
+
+/// Cumulative plan-tier counters (never reset; the serve metrics snapshot
+/// them directly, unlike the drained per-call `ExecStats`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlanStats {
+    pub plans_compiled: u64,
+    pub plan_hits: u64,
+    pub plan_shape_misses: u64,
+}
+
+/// The per-`Vm` plan cache: one [`Site`] per plan-eligible `CallPrim`.
+pub struct PlanCache {
+    sites: Box<[Site]>,
+    enabled: AtomicBool,
+    plans_compiled: AtomicU64,
+    plan_hits: AtomicU64,
+    plan_shape_misses: AtomicU64,
+}
+
+impl PlanCache {
+    /// Build a cache with `n_sites` slots; enabled unless
+    /// `MYIA_SPECIALIZE=0` (or `false`/`off`) is set.
+    pub fn new(n_sites: usize) -> PlanCache {
+        let enabled = !matches!(
+            std::env::var("MYIA_SPECIALIZE").ok().as_deref(),
+            Some("0") | Some("false") | Some("off")
+        );
+        PlanCache {
+            sites: (0..n_sites).map(|_| Site::new()).collect(),
+            enabled: AtomicBool::new(enabled),
+            plans_compiled: AtomicU64::new(0),
+            plan_hits: AtomicU64::new(0),
+            plan_shape_misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The site for a dispatch, or `None` when the tier is off, the path
+    /// has no site ([`NO_SITE`]), or the index is foreign to this program.
+    pub fn site(&self, site: u32) -> Option<&Site> {
+        if site == NO_SITE || !self.enabled.load(Ordering::Relaxed) {
+            return None;
+        }
+        self.sites.get(site as usize)
+    }
+
+    /// Force the tier on/off for this `Vm` (overrides the env decision).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn note_hit(&self) {
+        self.plan_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_compiled(&self) {
+        self.plans_compiled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_shape_miss(&self) {
+        self.plan_shape_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot the cumulative counters.
+    pub fn stats(&self) -> PlanStats {
+        PlanStats {
+            plans_compiled: self.plans_compiled.load(Ordering::Relaxed),
+            plan_hits: self.plan_hits.load(Ordering::Relaxed),
+            plan_shape_misses: self.plan_shape_misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Dispatch a non-fused specializable site (matmul family, standalone
+/// reductions) through the plan tier: key the call, count hit/compile/
+/// shape-miss, pin the resolved output geometry on first sight, and
+/// execute through the ordinary kernels either way.
+pub(crate) fn dispatch_sized(
+    p: Prim,
+    args: &mut [Value],
+    cache: &PlanCache,
+    site: &Site,
+    stats: &mut ExecStats,
+) -> Result<Value> {
+    if site.find(|k| sized_match(k, args)).is_some() {
+        stats.plan_hits += 1;
+        cache.note_hit();
+        return eval_prim_inplace(p, args);
+    }
+    // Unkeyable arguments (symbolic zeros, tuples) bypass the tier.
+    let Some(key) = sized_keys(args) else {
+        return eval_prim_inplace(p, args);
+    };
+    let had_plans = site.has_plans();
+    let v = eval_prim_inplace(p, args)?;
+    let plan = match &v {
+        Value::Tensor(t) => KernelPlan::Sized { out_shape: t.shape().into(), dtype: t.dtype() },
+        _ => KernelPlan::Opaque,
+    };
+    if site.insert(key, plan) {
+        stats.plans_compiled += 1;
+        cache.note_compiled();
+        if had_plans {
+            stats.plan_shape_misses += 1;
+            cache.note_shape_miss();
+        }
+    } else {
+        // At capacity: the shape differs from everything cached.
+        stats.plan_shape_misses += 1;
+        cache.note_shape_miss();
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn t(shape: &[usize]) -> Value {
+        Value::Tensor(Tensor::zeros(DType::F64, shape))
+    }
+
+    #[test]
+    fn site_insert_find_roundtrip() {
+        let s = Site::new();
+        assert!(!s.has_plans());
+        let key = fused_leaf_keys(&[t(&[2, 3]), Value::F64(1.0)]).unwrap();
+        assert!(s.insert(key, KernelPlan::Fused(FusedPlan::Replay)));
+        assert!(s.has_plans());
+        // Same shapes, different scalar value: still a hit (kind-only key).
+        let live = [t(&[2, 3]), Value::F64(42.0)];
+        assert!(s.find(|k| fused_leaf_match(k, &live)).is_some());
+        // Different shape: miss.
+        let other = [t(&[3, 2]), Value::F64(1.0)];
+        assert!(s.find(|k| fused_leaf_match(k, &other)).is_none());
+        // Different dtype: miss.
+        let f32s = [
+            Value::Tensor(Tensor::zeros(DType::F32, &[2, 3])),
+            Value::F64(1.0),
+        ];
+        assert!(s.find(|k| fused_leaf_match(k, &f32s)).is_none());
+    }
+
+    #[test]
+    fn site_caps_plan_count() {
+        let s = Site::new();
+        for i in 0..MAX_PLANS_PER_SITE {
+            let key = fused_leaf_keys(&[t(&[i + 1])]).unwrap();
+            assert!(s.insert(key, KernelPlan::Opaque), "insert {i}");
+        }
+        let key = fused_leaf_keys(&[t(&[99])]).unwrap();
+        assert!(!s.insert(key, KernelPlan::Opaque), "cap must hold");
+    }
+
+    #[test]
+    fn structural_args_key_by_value() {
+        let s = Site::new();
+        let args = [t(&[4]), Value::I64(0)];
+        let key = sized_keys(&args).unwrap();
+        s.insert(key, KernelPlan::Opaque);
+        assert!(s.find(|k| sized_match(k, &args)).is_some());
+        // A different axis value is a different plan.
+        let other = [t(&[4]), Value::I64(1)];
+        assert!(s.find(|k| sized_match(k, &other)).is_none());
+    }
+
+    #[test]
+    fn zerot_is_unkeyable() {
+        assert!(fused_leaf_keys(&[Value::ZeroT]).is_none());
+        assert!(sized_keys(&[t(&[1]), Value::ZeroT]).is_none());
+    }
+
+    #[test]
+    fn concurrent_insert_and_find() {
+        let s = std::sync::Arc::new(Site::new());
+        let mut handles = Vec::new();
+        for i in 0..8usize {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for r in 0..50usize {
+                    let shape = [(i * 50 + r) % 7 + 1];
+                    let live = [t(&shape)];
+                    if s.find(|k| fused_leaf_match(k, &live)).is_none() {
+                        let key = fused_leaf_keys(&live).unwrap();
+                        s.insert(key, KernelPlan::Opaque);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // All 7 distinct shapes findable afterwards (dups are harmless).
+        for d in 1..=7usize {
+            let live = [t(&[d])];
+            assert!(s.find(|k| fused_leaf_match(k, &live)).is_some(), "shape {d}");
+        }
+    }
+
+    #[test]
+    fn cache_env_and_override() {
+        let c = PlanCache::new(2);
+        c.set_enabled(false);
+        assert!(c.site(0).is_none(), "disabled tier yields no sites");
+        c.set_enabled(true);
+        assert!(c.site(0).is_some());
+        assert!(c.site(NO_SITE).is_none());
+        assert!(c.site(5).is_none(), "out-of-range site");
+        assert_eq!(c.stats(), PlanStats::default());
+    }
+}

@@ -274,6 +274,62 @@ pub fn eval_prim(p: Prim, args: &[Value]) -> Result<Value> {
             let (v, _saved) = super::fused::eval_fused(&mut argv)?;
             Ok(v)
         }
+        MatMulEp => eval_matmul_ep(args),
+    }
+}
+
+/// `matmul_ep(a, b, bias, a_batched, b_batched, code)` — a blocked matmul
+/// with its bias-add + activation epilogue folded into the product's output
+/// buffer (built by the `fusion` pass from `act(mm + bias)` chains).
+///
+/// `code` bits 0..=2 select the activation (0 none, 1 relu, 2 sigmoid,
+/// 3 tanh); bit 3 records that the bias was the *left* operand of the add
+/// (`bias + mm`), preserved for exact replay parity. Anything the fast
+/// kernel declines — symbolic zeros, non-float or mixed dtypes, a bias the
+/// product does not dominate — replays through the constituent primitives,
+/// which is bit-for-bit the unfused semantics (shortcuts, promotions and
+/// error messages included).
+fn eval_matmul_ep(args: &[Value]) -> Result<Value> {
+    let code = args[5]
+        .as_i64()
+        .ok_or_else(|| anyhow!("matmul_ep epilogue code must be an integer"))?;
+    let act = match code & 7 {
+        0 => None,
+        1 => Some(Prim::Relu),
+        2 => Some(Prim::Sigmoid),
+        3 => Some(Prim::Tanh),
+        c => bail!("matmul_ep: unknown activation code {c}"),
+    };
+    let bias_first = code & 8 != 0;
+    let replay = || -> Result<Value> {
+        let mm = eval_prim(
+            Prim::BatchMatMul,
+            &[args[0].clone(), args[1].clone(), args[3].clone(), args[4].clone()],
+        )?;
+        let sum = if bias_first {
+            eval_prim(Prim::Add, &[args[2].clone(), mm])?
+        } else {
+            eval_prim(Prim::Add, &[mm, args[2].clone()])?
+        };
+        match act {
+            Some(p) => eval_prim(p, &[sum]),
+            None => Ok(sum),
+        }
+    };
+    // Symbolic zeros flow through the replay's shortcut table (a ZeroT
+    // operand zeroes the product, a ZeroT bias is the additive identity).
+    if args[..3].iter().any(|v| matches!(v, Value::ZeroT)) {
+        return replay();
+    }
+    let a = need_tensor(&args[0], "matmul_ep")?;
+    let b = need_tensor(&args[1], "matmul_ep")?;
+    let bias = need_tensor(&args[2], "matmul_ep")?;
+    let ab = flag_arg(&args[3], "matmul_ep a_batched")?;
+    let bb = flag_arg(&args[4], "matmul_ep b_batched")?;
+    let un = act.map(|p| super::fused::un_op_of(p).expect("activation set above"));
+    match crate::tensor::matmul_ep(&a, &b, &bias, ab, bb, un, bias_first).map_err(err)? {
+        Some(t) => Ok(Value::Tensor(t)),
+        None => replay(),
     }
 }
 

@@ -1,0 +1,348 @@
+//! Shape-specializing kernel tier acceptance (PR 9).
+//!
+//! The plan tier's contract is *zero observable semantics*: a call
+//! dispatched through a cached `KernelPlan` must be bit-identical to the
+//! same call with the tier disabled (`Executable::set_specialization`), at
+//! every pool size, from any number of threads, across mid-stream shape
+//! changes. This suite drives randomly generated programs (the in-crate
+//! `ptest` substrate, pinned seeds) through forward, `grad`, and
+//! `grad`-then-`vmap` pipelines with the tier on and off, asserts the
+//! `plans_compiled` / `plan_hits` / `plan_shape_misses` telemetry at each
+//! transition, and pins the PR's bypass decision: rank-0 and batch-of-1
+//! outputs take the plan path like any other shape (only non-numeric
+//! values bypass).
+
+use myia::coordinator::mlp::{self, params_value};
+use myia::coordinator::{Engine, Executable};
+use myia::opt::PassSet;
+use myia::ptest;
+use myia::tensor::{DType, Rng, Tensor};
+use myia::vm::{pool, Value};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+/// Pool size and `MYIA_SPECIALIZE` are process-global; tests that touch
+/// either serialize here and restore on drop.
+fn lock() -> MutexGuard<'static, ()> {
+    static L: OnceLock<Mutex<()>> = OnceLock::new();
+    L.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|p| p.into_inner())
+}
+
+struct RestoreSize {
+    prev: usize,
+}
+
+impl RestoreSize {
+    fn new() -> RestoreSize {
+        RestoreSize { prev: pool::intra_op_threads() }
+    }
+}
+
+impl Drop for RestoreSize {
+    fn drop(&mut self) {
+        pool::set_intra_op_threads(self.prev);
+    }
+}
+
+/// Flatten a result to raw bit patterns (NaN-safe equality).
+fn value_bits(v: &Value, out: &mut Vec<u64>) -> Result<(), String> {
+    match v {
+        Value::F64(x) => {
+            out.push(x.to_bits());
+            Ok(())
+        }
+        Value::Tensor(t) => {
+            for x in t.as_f64_vec() {
+                out.push(x.to_bits());
+            }
+            Ok(())
+        }
+        Value::Tuple(items) => {
+            for i in items.iter() {
+                value_bits(i, out)?;
+            }
+            Ok(())
+        }
+        Value::ZeroT => {
+            out.push(0x5Eed_2e20);
+            Ok(())
+        }
+        other => Err(format!("unexpected result kind {other}")),
+    }
+}
+
+fn bits(v: &Value) -> Vec<u64> {
+    let mut out = Vec::new();
+    value_bits(v, &mut out).expect("flattenable result");
+    out
+}
+
+/// Call three times — cold (plans compile), warm (plans hit), and with the
+/// tier disabled (generic dispatch) — and require all three bit-identical.
+/// Returns plan hits observed on the warm call.
+fn specialized_matches_generic(
+    exe: &Executable,
+    args: &[Value],
+    what: &str,
+) -> Result<u64, String> {
+    exe.set_specialization(true);
+    let cold = exe.call(args.to_vec()).map_err(|e| format!("{what} (cold): {e}"))?;
+    let before = exe.plan_stats();
+    let warm = exe.call(args.to_vec()).map_err(|e| format!("{what} (warm): {e}"))?;
+    let hits = exe.plan_stats().plan_hits - before.plan_hits;
+    exe.set_specialization(false);
+    let generic = exe.call(args.to_vec()).map_err(|e| format!("{what} (generic): {e}"))?;
+    exe.set_specialization(true);
+    if bits(&cold) != bits(&warm) {
+        return Err(format!("{what}: warm (planned) call diverged from cold call"));
+    }
+    if bits(&cold) != bits(&generic) {
+        return Err(format!("{what}: specialized result diverged from generic dispatch"));
+    }
+    Ok(hits)
+}
+
+#[test]
+fn specialized_forward_matches_generic() {
+    // Serialized like every test here: the env-var test's compile window
+    // must never overlap a VM construction that expects the tier on.
+    let _g = lock();
+    let total_hits = std::sync::atomic::AtomicU64::new(0);
+    ptest::check_exprs(ptest::Config { cases: 30, seed: 0x59EC_0001 }, 4, |expr, rng| {
+        let src = format!("def f(x):\n    return {expr}\n");
+        let e = Engine::from_source(&src).map_err(|e| e.to_string())?;
+        let exe = e
+            .trace("f")
+            .map_err(|e| e.to_string())?
+            .optimize(PassSet::Standard)
+            .compile()
+            .map_err(|e| e.to_string())?;
+        let mut trng = Rng::new(rng.below(1 << 30) as u64);
+        let x = Value::Tensor(trng.normal_tensor(&[4099], 1.0));
+        let hits = specialized_matches_generic(&exe, &[x], &format!("forward {expr}"))?;
+        total_hits.fetch_add(hits, std::sync::atomic::Ordering::Relaxed);
+        Ok(())
+    });
+    // Not every random program has a plan-eligible site (a bare `x` has no
+    // prims at all), but across 30 cases the tier must have fired.
+    assert!(
+        total_hits.load(std::sync::atomic::Ordering::Relaxed) > 0,
+        "no warm call ever hit a cached plan"
+    );
+}
+
+#[test]
+fn specialized_grad_matches_generic() {
+    let _g = lock();
+    ptest::check_exprs(ptest::Config { cases: 20, seed: 0x59EC_0002 }, 4, |expr, rng| {
+        let src = format!("def g(x):\n    return item(sum({expr}))\n");
+        let e = Engine::from_source(&src).map_err(|e| e.to_string())?;
+        let exe = e
+            .trace("g")
+            .map_err(|e| e.to_string())?
+            .grad()
+            .optimize(PassSet::Standard)
+            .compile()
+            .map_err(|e| e.to_string())?;
+        let mut trng = Rng::new(rng.below(1 << 30) as u64);
+        let x = Value::Tensor(trng.normal_tensor(&[2053], 1.0));
+        specialized_matches_generic(&exe, &[x], &format!("grad {expr}"))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn specialized_grad_vmap_matches_generic() {
+    let _g = lock();
+    ptest::check_exprs(ptest::Config { cases: 12, seed: 0x59EC_0003 }, 3, |expr, rng| {
+        let src = format!("def g(x):\n    return item(sum({expr}))\n");
+        let e = Engine::from_source(&src).map_err(|e| e.to_string())?;
+        let exe = e
+            .trace("g")
+            .map_err(|e| e.to_string())?
+            .grad()
+            .vmap_axes(vec![Some(0)])
+            .optimize(PassSet::Standard)
+            .compile()
+            .map_err(|e| e.to_string())?;
+        let mut trng = Rng::new(rng.below(1 << 30) as u64);
+        let xb = Value::Tensor(trng.normal_tensor(&[4, 513], 1.0));
+        specialized_matches_generic(&exe, &[xb], &format!("grad∘vmap {expr}"))?;
+        Ok(())
+    });
+}
+
+const CHAIN_SRC: &str = "\
+def f(x):
+    a = exp(neg(x)) * x
+    b = tanh(a + 0.5) * 2.0
+    return item(sum(relu(b - 0.25)))
+";
+
+#[test]
+fn planned_dispatch_is_bit_identical_at_pool_sizes_1_and_8() {
+    let _g = lock();
+    let _r = RestoreSize::new();
+    let e = Engine::from_source(CHAIN_SRC).unwrap();
+    let exe =
+        e.trace("f").unwrap().grad().optimize(PassSet::Standard).compile().unwrap();
+    // 40_000 elements clears FUSED_PAR_MIN_ELEMS, so the planned fused loop
+    // really splits into chunks at size 8.
+    assert!(40_000 > pool::FUSED_PAR_MIN_ELEMS);
+    let mut trng = Rng::new(11);
+    let x = Value::Tensor(trng.normal_tensor(&[40_000], 1.0));
+
+    pool::set_intra_op_threads(1);
+    exe.set_specialization(false);
+    let want = bits(&exe.call(vec![x.clone()]).unwrap());
+    exe.set_specialization(true);
+
+    for n in [1usize, 8] {
+        pool::set_intra_op_threads(n);
+        let before = exe.plan_stats();
+        let a = exe.call(vec![x.clone()]).unwrap(); // compiles or hits
+        let b = exe.call(vec![x.clone()]).unwrap(); // hits
+        assert_eq!(bits(&a), want, "pool size {n}, first planned call");
+        assert_eq!(bits(&b), want, "pool size {n}, warm planned call");
+        let after = exe.plan_stats();
+        assert!(
+            after.plan_hits > before.plan_hits,
+            "pool size {n}: no plan hits ({before:?} -> {after:?})"
+        );
+    }
+}
+
+#[test]
+fn eight_threads_share_one_plan_cache() {
+    let _g = lock();
+    let _r = RestoreSize::new();
+    pool::set_intra_op_threads(2);
+    let meta = mlp::default_meta();
+    let mut rng = Rng::new(7);
+    let teacher = mlp::synth_teacher(&meta, &mut rng);
+    let (x, y) = mlp::synth_batch(&meta, &mut rng, &teacher);
+    let params: Vec<Tensor> =
+        meta.init_params(5).into_iter().map(|t| t.cast(DType::F64)).collect();
+    let (_e, _loss, grad_fn) = mlp::compile_mlp(false).expect("compile MLP");
+    let grad_fn: Arc<Executable> = grad_fn;
+    let args = vec![params_value(&params), Value::Tensor(x), Value::Tensor(y)];
+
+    // Reference with the tier off, then one warm-up call to compile plans.
+    grad_fn.set_specialization(false);
+    let want = bits(&grad_fn.call(args.clone()).expect("reference"));
+    grad_fn.set_specialization(true);
+    let _ = grad_fn.call(args.clone()).expect("warm-up");
+    let warm = grad_fn.plan_stats();
+    assert!(warm.plans_compiled > 0, "MLP adjoint compiled no plans: {warm:?}");
+
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            let grad_fn = grad_fn.clone();
+            let args = args.clone();
+            let want = &want;
+            s.spawn(move || {
+                for _ in 0..5 {
+                    let out = grad_fn.call(args.clone()).expect("concurrent call");
+                    assert_eq!(&bits(&out), want, "planned concurrent call diverged");
+                }
+            });
+        }
+    });
+    let after = grad_fn.plan_stats();
+    // Fixed shapes: the hammering hits cached plans and never recompiles.
+    assert_eq!(
+        after.plans_compiled, warm.plans_compiled,
+        "fixed-shape serving recompiled plans: {warm:?} -> {after:?}"
+    );
+    assert!(
+        after.plan_hits >= warm.plan_hits + 40,
+        "8 threads x 5 calls produced too few plan hits: {warm:?} -> {after:?}"
+    );
+}
+
+#[test]
+fn shape_change_mid_stream_recompiles_then_hits() {
+    let _g = lock();
+    let e = Engine::from_source(CHAIN_SRC).unwrap();
+    let exe =
+        e.trace("f").unwrap().grad().optimize(PassSet::Standard).compile().unwrap();
+    exe.set_specialization(true);
+    let mut trng = Rng::new(23);
+    let a = Value::Tensor(trng.normal_tensor(&[64], 1.0));
+    let b = Value::Tensor(trng.normal_tensor(&[65], 1.0));
+
+    let s0 = exe.plan_stats();
+    exe.call(vec![a.clone()]).unwrap();
+    let s1 = exe.plan_stats();
+    assert!(s1.plans_compiled > s0.plans_compiled, "first shape compiled no plans");
+    assert_eq!(s1.plan_shape_misses, s0.plan_shape_misses, "cold compile is not a shape miss");
+
+    exe.call(vec![a.clone()]).unwrap();
+    let s2 = exe.plan_stats();
+    assert!(s2.plan_hits > s1.plan_hits, "repeat shape did not hit");
+    assert_eq!(s2.plans_compiled, s1.plans_compiled, "repeat shape recompiled");
+
+    exe.call(vec![b.clone()]).unwrap();
+    let s3 = exe.plan_stats();
+    assert!(s3.plan_shape_misses > s2.plan_shape_misses, "new shape was not a miss");
+    assert!(s3.plans_compiled > s2.plans_compiled, "new shape compiled no plans");
+
+    exe.call(vec![b]).unwrap();
+    let s4 = exe.plan_stats();
+    assert!(s4.plan_hits > s3.plan_hits, "second shape did not hit after recompile");
+
+    // The first shape's plans are still cached alongside the second's.
+    exe.call(vec![a]).unwrap();
+    let s5 = exe.plan_stats();
+    assert!(s5.plan_hits > s4.plan_hits, "original shape evicted");
+    assert_eq!(s5.plans_compiled, s4.plans_compiled, "original shape recompiled");
+}
+
+#[test]
+fn rank0_and_batch_of_1_take_the_plan_path() {
+    let _g = lock();
+    // Rank-0 output: a full reduction.
+    let e = Engine::from_source("def f(x):\n    return sum(x * x)\n").unwrap();
+    let exe = e.trace("f").unwrap().optimize(PassSet::Standard).compile().unwrap();
+    let x = Value::Tensor(Tensor::from_f64(&[1.5, -2.0, 0.25]));
+    let hits =
+        specialized_matches_generic(&exe, &[x], "rank-0 reduction").unwrap();
+    assert!(hits > 0, "rank-0 output bypassed the plan tier");
+
+    // Batch-of-1 tensors: no size-based bypass either.
+    let e = Engine::from_source("def g(x):\n    return x * x + 1.0\n").unwrap();
+    let exe = e.trace("g").unwrap().optimize(PassSet::Standard).compile().unwrap();
+    let x = Value::Tensor(Tensor::from_f64(&[3.0]));
+    let hits = specialized_matches_generic(&exe, &[x], "batch-of-1").unwrap();
+    assert!(hits > 0, "batch-of-1 output bypassed the plan tier");
+}
+
+#[test]
+fn myia_specialize_env_var_disables_the_tier() {
+    let _g = lock();
+    std::env::set_var("MYIA_SPECIALIZE", "0");
+    let e = Engine::from_source(CHAIN_SRC).unwrap();
+    let exe =
+        e.trace("f").unwrap().grad().optimize(PassSet::Standard).compile().unwrap();
+    std::env::remove_var("MYIA_SPECIALIZE");
+
+    assert!(!exe.vm.specialization_enabled(), "MYIA_SPECIALIZE=0 ignored");
+    let mut trng = Rng::new(5);
+    let x = Value::Tensor(trng.normal_tensor(&[256], 1.0));
+    let want = bits(&exe.call(vec![x.clone()]).unwrap());
+    let _ = exe.call(vec![x.clone()]).unwrap();
+    let s = exe.plan_stats();
+    assert_eq!(
+        (s.plans_compiled, s.plan_hits, s.plan_shape_misses),
+        (0, 0, 0),
+        "disabled tier still counted: {s:?}"
+    );
+
+    // The runtime override re-arms the tier on the same artifact.
+    exe.set_specialization(true);
+    let a = exe.call(vec![x.clone()]).unwrap();
+    let b = exe.call(vec![x]).unwrap();
+    let s = exe.plan_stats();
+    assert!(s.plans_compiled > 0 && s.plan_hits > 0, "{s:?}");
+    assert_eq!(bits(&a), want);
+    assert_eq!(bits(&b), want);
+}
