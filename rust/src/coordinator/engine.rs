@@ -160,6 +160,19 @@ impl Executable {
         self.vm.call_graph(self.entry, args)
     }
 
+    /// [`Executable::call`] under a resource budget: instruction fuel, frame
+    /// depth, tensor-bytes ceiling, and/or a deadline-carrying cancel token
+    /// (see [`crate::vm::ExecBudget`]). Exceeding any limit unwinds into a
+    /// structured [`crate::vm::Trap`] error — never a panic or an OOM — and
+    /// bumps this artifact's cumulative [`Executable::trap_stats`].
+    pub fn call_with_budget(
+        &self,
+        args: Vec<Value>,
+        budget: &crate::vm::ExecBudget,
+    ) -> Result<Value> {
+        self.vm.call_graph_with(self.entry, args, budget)
+    }
+
     /// Number of parameters the entry point takes.
     pub fn arity(&self) -> usize {
         self.module.graph(self.entry).params.len()
@@ -211,6 +224,13 @@ impl Executable {
     /// the artifact was built (see `vm::plan`).
     pub fn plan_stats(&self) -> crate::vm::PlanStats {
         self.vm.plan_stats()
+    }
+
+    /// Cumulative budget-trap counters for this artifact: how many calls
+    /// ran out of fuel, recursion depth, tensor bytes, or deadline since the
+    /// artifact was built. Never reset — the `PlanStats` idiom.
+    pub fn trap_stats(&self) -> crate::vm::TrapStats {
+        self.vm.trap_stats()
     }
 
     /// Enable or disable the shape-specializing plan tier at runtime
@@ -385,6 +405,7 @@ impl Engine {
             if disk.store(&key, &Self::to_stored(&compiled)).is_ok() {
                 self.stats.disk_writes.inc();
             }
+            self.stats.disk_retries.add(disk.take_retries());
         }
         Ok(self.insert_hot(shard, name, fp, module_fp, signature, compiled, &matches))
     }
@@ -463,7 +484,9 @@ impl Engine {
     ) -> Option<Arc<Executable>> {
         let disk = self.disk_for(pipeline)?;
         let key = Self::disk_key(name, pipeline, signature, module_fp);
-        let stored = match disk.load(&key) {
+        let loaded = disk.load(&key);
+        self.stats.disk_retries.add(disk.take_retries());
+        let stored = match loaded {
             Ok(Some(stored)) => stored,
             Ok(None) => {
                 self.stats.disk_misses.inc();

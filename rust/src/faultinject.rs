@@ -1,0 +1,364 @@
+//! Deterministic, site-addressed fault injection.
+//!
+//! Chaos testing substrate for the serve/VM/cache stack: a seeded
+//! [`FaultPlan`] decides — purely as a function of `(seed, site, n)` where
+//! `n` is the site's invocation index — whether the `n`-th arrival at an
+//! instrumented [`Site`] experiences an injected error, panic, or latency
+//! spike. The property suites (`tests/test_chaos.rs`) run real client
+//! interleavings against a plan and assert the stack's robustness
+//! contract: every request terminates with either a bit-identical result
+//! or a structured error, no hangs, no panic escapes, no poisoned locks.
+//!
+//! # Activation
+//!
+//! Injection is compiled only into `cfg(test)` and `--features chaos`
+//! builds; release builds compile every hook to nothing. Within an
+//! injection-capable build it is still opt-in twice over:
+//!
+//! * programmatically: [`install`] / [`clear`] (what the test suites use
+//!   to scope faults to one phase — oracles are computed in a cleared
+//!   window);
+//! * by environment: `MYIA_FAULT=seed:rate:sites`, e.g.
+//!   `MYIA_FAULT=42:0.05:all` or `MYIA_FAULT=7:0.1:prim,disk_read`.
+//!   `seed` is a u64, `rate` a probability in `[0, 1]`, and `sites` a
+//!   comma list of `prim`, `pool`, `queue_pop`, `disk_read`,
+//!   `disk_write`, `dispatch`, or `all`. The env plan is read once, at
+//!   the first instrumented site; a later [`clear`] wins over it.
+//!
+//! # What each site can suffer
+//!
+//! Fault kinds are drawn per arrival (error 50%, latency 30%, panic 20%),
+//! then clamped to what the site can physically express: queue pops can
+//! only be delayed (a failing pop would be indistinguishable from
+//! shutdown), pool tasks can only panic or stall (their closures return
+//! no `Result`), disk I/O maps panics to transient `io::Error`s (the
+//! retry/quarantine path is the contract under test, not unwinding
+//! through the compiler).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+/// An instrumented location in the stack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Site {
+    /// `vm::exec::dispatch_prim` — every primitive evaluation.
+    PrimEval = 0,
+    /// `vm::pool` — the body of every intra-op pool task.
+    PoolTask = 1,
+    /// `serve::queue` — every dequeue by a batcher worker.
+    QueuePop = 2,
+    /// `runtime::diskcache::DiskCache::load`.
+    DiskRead = 3,
+    /// `runtime::diskcache::DiskCache::store`.
+    DiskWrite = 4,
+    /// `serve::batcher::dispatch_shard` — the batched (vmapped) call.
+    BatchDispatch = 5,
+}
+
+/// Every site, for `sites=all` and for iteration in tests.
+pub const ALL_SITES: [Site; 6] = [
+    Site::PrimEval,
+    Site::PoolTask,
+    Site::QueuePop,
+    Site::DiskRead,
+    Site::DiskWrite,
+    Site::BatchDispatch,
+];
+
+impl Site {
+    fn bit(self) -> u8 {
+        1 << (self as u8)
+    }
+
+    /// The token naming this site in the `MYIA_FAULT` grammar.
+    pub fn token(self) -> &'static str {
+        match self {
+            Site::PrimEval => "prim",
+            Site::PoolTask => "pool",
+            Site::QueuePop => "queue_pop",
+            Site::DiskRead => "disk_read",
+            Site::DiskWrite => "disk_write",
+            Site::BatchDispatch => "dispatch",
+        }
+    }
+}
+
+/// What an arrival at a site suffers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// A structured error return.
+    Error,
+    /// A `panic!` (exercises every `catch_unwind` net and lock-poison
+    /// recovery path above the site).
+    Panic,
+    /// A 1–3 ms stall (exercises deadlines, batch-gather windows, and
+    /// interleaving diversity).
+    Latency(Duration),
+}
+
+/// A seeded injection plan. Decisions depend only on
+/// `(seed, site, arrival index)` — rerunning the same single-threaded
+/// schedule reproduces the same faults.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Injection probability per arrival, in `[0, 1]`.
+    pub rate: f64,
+    /// Bitmask of enabled sites (see [`Site::bit`]).
+    sites: u8,
+}
+
+impl FaultPlan {
+    /// A plan covering every site.
+    pub fn all(seed: u64, rate: f64) -> FaultPlan {
+        FaultPlan { seed, rate: rate.clamp(0.0, 1.0), sites: 0b11_1111 }
+    }
+
+    /// A plan covering the given sites only.
+    pub fn for_sites(seed: u64, rate: f64, sites: &[Site]) -> FaultPlan {
+        let mask = sites.iter().fold(0u8, |m, s| m | s.bit());
+        FaultPlan { seed, rate: rate.clamp(0.0, 1.0), sites: mask }
+    }
+
+    /// Parse the `MYIA_FAULT` grammar `seed:rate:sites`. Returns `None`
+    /// for anything malformed — ambient configuration must never turn
+    /// into a panic inside the stack under test.
+    pub fn parse(spec: &str) -> Option<FaultPlan> {
+        let mut parts = spec.splitn(3, ':');
+        let seed: u64 = parts.next()?.trim().parse().ok()?;
+        let rate: f64 = parts.next()?.trim().parse().ok()?;
+        if !(0.0..=1.0).contains(&rate) {
+            return None;
+        }
+        let sites_spec = parts.next()?.trim();
+        let mut mask = 0u8;
+        for tok in sites_spec.split(',') {
+            let tok = tok.trim();
+            if tok == "all" {
+                mask = 0b11_1111;
+                continue;
+            }
+            let site = ALL_SITES.iter().find(|s| s.token() == tok)?;
+            mask |= site.bit();
+        }
+        if mask == 0 {
+            return None;
+        }
+        Some(FaultPlan { seed, rate, sites: mask })
+    }
+
+    fn covers(&self, site: Site) -> bool {
+        self.sites & site.bit() != 0
+    }
+}
+
+/// Fast gate: a single relaxed load on the no-plan path.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ACTIVE: Mutex<Option<Arc<FaultPlan>>> = Mutex::new(None);
+/// Per-site arrival counters (index = `Site as u8`).
+static ARRIVALS: [AtomicU64; 6] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+
+/// Install a plan (and reset the per-site arrival counters so a run is
+/// reproducible from its install point).
+pub fn install(plan: FaultPlan) {
+    for c in &ARRIVALS {
+        c.store(0, Ordering::Relaxed);
+    }
+    *ACTIVE.lock().unwrap_or_else(|p| p.into_inner()) = Some(Arc::new(plan));
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Remove any active plan (programmatic or env-derived). Idempotent.
+pub fn clear() {
+    *ACTIVE.lock().unwrap_or_else(|p| p.into_inner()) = None;
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// True when a plan is currently installed.
+pub fn active() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Read `MYIA_FAULT` once, installing its plan if present and well-formed.
+/// Runs lazily at the first instrumented site so plain test runs pay one
+/// `OnceLock` load per hook.
+fn init_env_once() {
+    static INIT: OnceLock<()> = OnceLock::new();
+    INIT.get_or_init(|| {
+        if let Ok(spec) = std::env::var("MYIA_FAULT") {
+            if let Some(plan) = FaultPlan::parse(&spec) {
+                install(plan);
+            }
+        }
+    });
+}
+
+/// SplitMix64: a tiny, high-quality mixer — the decision function.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Decide the fate of this arrival at `site`. `None` = proceed normally.
+#[allow(unreachable_code, unused_variables)]
+pub fn fire(site: Site) -> Option<FaultKind> {
+    #[cfg(not(any(test, feature = "chaos")))]
+    return None;
+    init_env_once();
+    if !ENABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let plan = ACTIVE.lock().unwrap_or_else(|p| p.into_inner()).clone()?;
+    if !plan.covers(site) {
+        return None;
+    }
+    let n = ARRIVALS[site as usize].fetch_add(1, Ordering::Relaxed);
+    let h = mix(plan.seed ^ mix((site as u64) << 32 ^ n));
+    // Top 53 bits → uniform in [0, 1).
+    let u = (h >> 11) as f64 / (1u64 << 53) as f64;
+    if u >= plan.rate {
+        return None;
+    }
+    let kind = match (h >> 32) % 10 {
+        0..=4 => FaultKind::Error,
+        5..=7 => FaultKind::Latency(Duration::from_millis(1 + h % 3)),
+        _ => FaultKind::Panic,
+    };
+    Some(kind)
+}
+
+/// Hook for sites that propagate `anyhow` errors (prim eval, batched
+/// dispatch): error → `Err`, panic → `panic!`, latency → sleep.
+pub fn error_at(site: Site) -> anyhow::Result<()> {
+    match fire(site) {
+        None => Ok(()),
+        Some(FaultKind::Error) => Err(anyhow::anyhow!("injected fault at {}", site.token())),
+        Some(FaultKind::Panic) => panic!("injected panic at {}", site.token()),
+        Some(FaultKind::Latency(d)) => {
+            std::thread::sleep(d);
+            Ok(())
+        }
+    }
+}
+
+/// Hook for sites that can only be delayed (queue pops): any drawn fault
+/// becomes a stall.
+pub fn latency_at(site: Site) {
+    if let Some(kind) = fire(site) {
+        let d = match kind {
+            FaultKind::Latency(d) => d,
+            _ => Duration::from_millis(1),
+        };
+        std::thread::sleep(d);
+    }
+}
+
+/// Hook for pool task bodies (no `Result` channel): error and panic draws
+/// both panic — the caller's `catch_unwind`/latch path is the contract
+/// under test — and latency stalls.
+pub fn panic_or_stall_at(site: Site) {
+    match fire(site) {
+        None => {}
+        Some(FaultKind::Latency(d)) => std::thread::sleep(d),
+        Some(_) => panic!("injected panic at {}", site.token()),
+    }
+}
+
+/// Hook for disk I/O: error and panic draws both become transient
+/// `io::Error`s (the retry-then-quarantine path is the contract under
+/// test), latency stalls.
+pub fn io_error_at(site: Site) -> std::io::Result<()> {
+    match fire(site) {
+        None => Ok(()),
+        Some(FaultKind::Latency(d)) => {
+            std::thread::sleep(d);
+            Ok(())
+        }
+        Some(_) => Err(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            format!("injected io fault at {}", site.token()),
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Plan mutations are process-global; tests serialize on this.
+    pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+        static GUARD: Mutex<()> = Mutex::new(());
+        GUARD.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn parse_grammar() {
+        let p = FaultPlan::parse("42:0.25:all").unwrap();
+        assert_eq!(p.seed, 42);
+        assert_eq!(p.rate, 0.25);
+        assert!(ALL_SITES.iter().all(|&s| p.covers(s)));
+        let p = FaultPlan::parse("7:0.5:prim,disk_read").unwrap();
+        assert!(p.covers(Site::PrimEval));
+        assert!(p.covers(Site::DiskRead));
+        assert!(!p.covers(Site::PoolTask));
+        for bad in ["", "x:0.1:all", "1:2.0:all", "1:0.1:nope", "1:0.1:", "1:0.1"] {
+            assert!(FaultPlan::parse(bad).is_none(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_rate_bounded() {
+        let _g = test_guard();
+        install(FaultPlan::all(1234, 0.2));
+        let first: Vec<Option<FaultKind>> = (0..200).map(|_| fire(Site::PrimEval)).collect();
+        install(FaultPlan::all(1234, 0.2)); // resets arrival counters
+        let second: Vec<Option<FaultKind>> = (0..200).map(|_| fire(Site::PrimEval)).collect();
+        assert_eq!(first, second, "same seed + same schedule → same faults");
+        let hits = first.iter().filter(|f| f.is_some()).count();
+        assert!(hits > 10 && hits < 90, "rate 0.2 over 200 draws hit {hits} times");
+        clear();
+        assert!(fire(Site::PrimEval).is_none());
+    }
+
+    #[test]
+    fn disabled_sites_never_fire() {
+        let _g = test_guard();
+        install(FaultPlan::for_sites(9, 1.0, &[Site::DiskRead]));
+        assert!(fire(Site::PrimEval).is_none());
+        assert!(fire(Site::DiskRead).is_some());
+        clear();
+    }
+
+    #[test]
+    fn hooks_translate_kinds() {
+        let _g = test_guard();
+        // rate 1.0: every arrival draws a fault; check each hook's contract.
+        install(FaultPlan::all(5, 1.0));
+        let mut saw_err = false;
+        for _ in 0..64 {
+            let r = std::panic::catch_unwind(|| error_at(Site::PrimEval));
+            match r {
+                Ok(Ok(())) => {}       // latency draw
+                Ok(Err(_)) => saw_err = true,
+                Err(_) => {}           // panic draw
+            }
+        }
+        assert!(saw_err, "error draws must surface as Err");
+        // io hook never panics.
+        for _ in 0..64 {
+            let _ = io_error_at(Site::DiskRead);
+        }
+        clear();
+    }
+}

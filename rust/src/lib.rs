@@ -55,6 +55,7 @@
 //!   testing framework, and the dataflow-graph / OO-tape comparators.
 
 pub mod tensor;
+pub mod faultinject;
 pub mod ptest;
 pub mod bench;
 pub mod ir;
@@ -77,11 +78,11 @@ pub mod prelude {
     pub use crate::backend::Backend;
     pub use crate::coordinator::{Engine, Executable, Function, Metrics};
     pub use crate::opt::PassSet;
-    pub use crate::serve::{error::ServeError, FullPolicy, Server, ServerConfig};
+    pub use crate::serve::{error::ServeError, FullPolicy, Server, ServerConfig, SubmitOpts};
     pub use crate::transform::{
         Grad, Lower, Optimize, Pipeline, PipelineBuilder, Transform, ValueAndGrad, Vmap,
     };
-    pub use crate::vm::Value;
+    pub use crate::vm::{CancelToken, ExecBudget, Trap, Value};
 }
 
 /// Crate-wide result type.

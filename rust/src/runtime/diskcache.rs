@@ -42,7 +42,9 @@ use crate::ir::{
 use crate::tensor::{Buffer, DType, Tensor};
 use crate::types::AType;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Bump on ANY change to the serialized layout. Old files then read as
 /// stale and degrade to a cold compile (plus a rewrite under the new
@@ -115,10 +117,21 @@ pub struct StoredArtifact {
     pub meta: StoredMeta,
 }
 
+/// How many *extra* attempts a transiently failing IO operation gets
+/// before the error surfaces (and the engine degrades to a cold compile).
+const IO_RETRIES: u32 = 3;
+/// Backoff bounds for the decorrelated-jitter sleep between attempts.
+const RETRY_BASE: Duration = Duration::from_millis(1);
+const RETRY_CAP: Duration = Duration::from_millis(20);
+
 /// Handle on a cache directory.
 #[derive(Debug, Clone)]
 pub struct DiskCache {
     dir: PathBuf,
+    /// Cumulative transient-IO retries across all clones of this handle
+    /// (clones share the counter so the engine's periodic
+    /// [`DiskCache::take_retries`] drain sees every retry).
+    retries: Arc<AtomicU64>,
 }
 
 impl DiskCache {
@@ -127,11 +140,50 @@ impl DiskCache {
         let dir = dir.into();
         std::fs::create_dir_all(&dir)
             .map_err(|e| format!("creating cache dir {}: {e}", dir.display()))?;
-        Ok(DiskCache { dir })
+        Ok(DiskCache { dir, retries: Arc::new(AtomicU64::new(0)) })
     }
 
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+
+    /// Drain the transient-IO retry count accumulated since the last call.
+    /// The engine folds this into its `disk_retries` cache counter.
+    pub fn take_retries(&self) -> u64 {
+        self.retries.swap(0, Ordering::Relaxed)
+    }
+
+    /// Run `op` with up to [`IO_RETRIES`] extra attempts. Retries only
+    /// plausibly-transient failures — `NotFound` is a final answer (a miss),
+    /// not a flake — and sleeps a decorrelated-jitter backoff between
+    /// attempts: each delay is drawn uniformly from `[RETRY_BASE, 3×prev]`
+    /// capped at [`RETRY_CAP`], so concurrent retriers spread out instead of
+    /// hammering a recovering filesystem in lockstep.
+    fn retry_io<T>(
+        &self,
+        path: &Path,
+        mut op: impl FnMut() -> std::io::Result<T>,
+    ) -> std::io::Result<T> {
+        // Deterministic per-(path, history) jitter seed; no RNG dependency.
+        let mut state = fnv1a(path.to_string_lossy().as_bytes())
+            ^ self.retries.load(Ordering::Relaxed).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let mut prev = RETRY_BASE;
+        let mut attempt = 0;
+        loop {
+            match op() {
+                Ok(v) => return Ok(v),
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Err(e),
+                Err(e) => {
+                    if attempt == IO_RETRIES {
+                        return Err(e);
+                    }
+                    attempt += 1;
+                    self.retries.fetch_add(1, Ordering::Relaxed);
+                    prev = decorrelated_jitter(&mut state, prev);
+                    std::thread::sleep(prev);
+                }
+            }
+        }
     }
 
     /// Load the artifact stored under `key`.
@@ -143,7 +195,11 @@ impl DiskCache {
     ///   the offender is deleted best-effort so it can't fail again.
     pub fn load(&self, key: &ArtifactKey) -> Result<Option<StoredArtifact>, String> {
         let path = self.dir.join(key.file_name());
-        let bytes = match std::fs::read(&path) {
+        let read = self.retry_io(&path, || {
+            crate::faultinject::io_error_at(crate::faultinject::Site::DiskRead)?;
+            std::fs::read(&path)
+        });
+        let bytes = match read {
             Ok(b) => b,
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
             Err(e) => return Err(format!("reading {}: {e}", path.display())),
@@ -170,12 +226,33 @@ impl DiskCache {
         let name = key.file_name();
         let tmp = self.dir.join(format!(".tmp-{}-{}", name, std::process::id()));
         let final_path = self.dir.join(&name);
-        std::fs::write(&tmp, &file).map_err(|e| format!("writing {}: {e}", tmp.display()))?;
-        std::fs::rename(&tmp, &final_path).map_err(|e| {
+        // Retry the write+rename pair as a unit: both steps are idempotent
+        // (same bytes, same destination), so a flake anywhere just re-runs
+        // the whole publish.
+        self.retry_io(&final_path, || {
+            crate::faultinject::io_error_at(crate::faultinject::Site::DiskWrite)?;
+            std::fs::write(&tmp, &file)?;
+            std::fs::rename(&tmp, &final_path)
+        })
+        .map_err(|e| {
             let _ = std::fs::remove_file(&tmp);
-            format!("renaming into {}: {e}", final_path.display())
+            format!("storing {}: {e}", final_path.display())
         })
     }
+}
+
+/// One decorrelated-jitter step: uniform in `[RETRY_BASE, 3 × prev]`,
+/// capped at [`RETRY_CAP`]. `state` advances through a splitmix64 sequence.
+fn decorrelated_jitter(state: &mut u64, prev: Duration) -> Duration {
+    *state = state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    let base = RETRY_BASE.as_micros() as u64;
+    let cap = RETRY_CAP.as_micros() as u64;
+    let hi = (prev.as_micros() as u64).saturating_mul(3).clamp(base, cap);
+    Duration::from_micros(base + z % (hi - base + 1))
 }
 
 // ---- FNV-1a 64 --------------------------------------------------------------
@@ -1016,6 +1093,55 @@ mod tests {
         let err = cache.load(&key).unwrap_err();
         assert!(err.contains("schema"), "{err}");
         let _ = std::fs::remove_dir_all(cache.dir());
+    }
+
+    #[test]
+    fn transient_io_failures_retry_bounded_and_not_found_is_final() {
+        let cache = DiskCache::new(temp_dir("retry")).unwrap();
+        let p = Path::new("probe");
+
+        // Recovers once the flake clears; each re-attempt is counted.
+        let calls = std::cell::Cell::new(0u32);
+        let out = cache.retry_io(p, || {
+            calls.set(calls.get() + 1);
+            if calls.get() <= 2 {
+                Err(std::io::Error::new(std::io::ErrorKind::Other, "transient"))
+            } else {
+                Ok(7)
+            }
+        });
+        assert_eq!(out.unwrap(), 7);
+        assert_eq!(calls.get(), 3);
+        assert_eq!(cache.take_retries(), 2);
+        assert_eq!(cache.take_retries(), 0, "take_retries drains");
+
+        // A persistent failure exhausts the budget and surfaces.
+        let out: std::io::Result<()> = cache.retry_io(p, || {
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "disk down"))
+        });
+        assert!(out.is_err());
+        assert_eq!(cache.take_retries(), IO_RETRIES as u64);
+
+        // NotFound is an answer (a miss), never retried.
+        let seen = std::cell::Cell::new(0u32);
+        let out: std::io::Result<()> = cache.retry_io(p, || {
+            seen.set(seen.get() + 1);
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+        });
+        assert_eq!(out.unwrap_err().kind(), std::io::ErrorKind::NotFound);
+        assert_eq!(seen.get(), 1);
+        assert_eq!(cache.take_retries(), 0);
+        let _ = std::fs::remove_dir_all(cache.dir());
+    }
+
+    #[test]
+    fn jitter_stays_within_bounds() {
+        let mut state = 0x1234_5678u64;
+        let mut prev = RETRY_BASE;
+        for _ in 0..64 {
+            prev = decorrelated_jitter(&mut state, prev);
+            assert!(prev >= RETRY_BASE && prev <= RETRY_CAP, "{prev:?}");
+        }
     }
 
     #[test]

@@ -22,11 +22,14 @@ use crate::coordinator::Executable;
 use crate::serve::error::ServeError;
 use crate::serve::metrics::ServeMetrics;
 use crate::serve::queue::BoundedQueue;
+use crate::serve::sync::{lock_or_recover, wait_or_recover};
 use crate::tensor::{ops, DType, Tensor};
 use crate::types::AType;
-use crate::vm::{pool, Value};
+use crate::vm::{pool, CancelToken, ExecBudget, Trap, Value};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// One-shot response cell a submitting thread parks on.
 pub(crate) struct ResponseSlot {
@@ -43,7 +46,7 @@ impl ResponseSlot {
     /// [`worker_loop`] may try to fill slots that the happy path already
     /// answered.
     pub(crate) fn fill(&self, r: Result<Value, ServeError>) {
-        let mut guard = self.result.lock().expect("response slot poisoned");
+        let mut guard = lock_or_recover(&self.result);
         if guard.is_none() {
             *guard = Some(r);
             drop(guard);
@@ -53,12 +56,12 @@ impl ResponseSlot {
 
     /// Park until the response arrives.
     pub(crate) fn wait(&self) -> Result<Value, ServeError> {
-        let mut guard = self.result.lock().expect("response slot poisoned");
+        let mut guard = lock_or_recover(&self.result);
         loop {
             if let Some(r) = guard.take() {
                 return r;
             }
-            guard = self.ready.wait(guard).expect("response slot poisoned");
+            guard = wait_or_recover(&self.ready, guard);
         }
     }
 }
@@ -68,7 +71,174 @@ impl ResponseSlot {
 pub(crate) struct Request {
     pub args: Vec<Value>,
     pub enqueued_at: Instant,
+    /// Client deadline ([`crate::serve::SubmitOpts`]): expired requests are
+    /// answered [`ServeError::DeadlineExceeded`] without executing, and live
+    /// ones carry the deadline into the VM as a cancel token.
+    pub deadline: Option<Instant>,
     pub slot: Arc<ResponseSlot>,
+}
+
+/// Observed health of the batched dispatch path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: batched dispatch attempted normally.
+    Closed,
+    /// Tripped: batched dispatch skipped (straight to per-example fallback)
+    /// until the cooldown elapses.
+    Open,
+    /// Cooldown elapsed: exactly one trial batch probes the batched path;
+    /// success re-closes the breaker, failure re-opens it.
+    HalfOpen,
+}
+
+impl std::fmt::Display for BreakerState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        })
+    }
+}
+
+/// Outcomes tracked per batched attempt.
+pub(crate) const BREAKER_WINDOW: usize = 16;
+/// Minimum outcomes in the window before the failure ratio is judged.
+pub(crate) const BREAKER_MIN_SAMPLES: usize = 8;
+/// How long an open breaker rests before half-opening a trial.
+pub(crate) const BREAKER_COOLDOWN: Duration = Duration::from_millis(250);
+
+struct BreakerInner {
+    /// Sliding window of recent batched outcomes; `true` = failure.
+    window: VecDeque<bool>,
+    state: BreakerState,
+    opened_at: Option<Instant>,
+    /// In half-open, whether the single probe batch is still in flight.
+    trial_in_flight: bool,
+}
+
+/// Sliding-window circuit breaker over the batched dispatch path.
+///
+/// When at least [`BREAKER_MIN_SAMPLES`] of the last [`BREAKER_WINDOW`]
+/// batched attempts are recorded and at least half failed, the breaker
+/// opens: batches go straight to the per-example fallback (which is the
+/// semantics of record anyway — degraded means slower, never wrong). After
+/// [`BREAKER_COOLDOWN`] one trial batch half-opens the path; its outcome
+/// decides between re-closing and re-opening. Deadline-caused batch
+/// failures are *neutral*: a client running out of time says nothing about
+/// the batched path's health.
+pub(crate) struct CircuitBreaker {
+    inner: Mutex<BreakerInner>,
+    opens: AtomicU64,
+    closes: AtomicU64,
+}
+
+impl CircuitBreaker {
+    pub(crate) fn new() -> CircuitBreaker {
+        CircuitBreaker {
+            inner: Mutex::new(BreakerInner {
+                window: VecDeque::with_capacity(BREAKER_WINDOW),
+                state: BreakerState::Closed,
+                opened_at: None,
+                trial_in_flight: false,
+            }),
+            opens: AtomicU64::new(0),
+            closes: AtomicU64::new(0),
+        }
+    }
+
+    /// May the batched path be attempted right now? (May transition
+    /// `Open` → `HalfOpen` when the cooldown has elapsed.)
+    pub(crate) fn allow_batched(&self) -> bool {
+        let mut g = lock_or_recover(&self.inner);
+        match g.state {
+            BreakerState::Closed => true,
+            BreakerState::Open => {
+                let rested =
+                    g.opened_at.map_or(true, |t| t.elapsed() >= BREAKER_COOLDOWN);
+                if rested {
+                    g.state = BreakerState::HalfOpen;
+                    g.trial_in_flight = true;
+                    true
+                } else {
+                    false
+                }
+            }
+            BreakerState::HalfOpen => {
+                if g.trial_in_flight {
+                    false
+                } else {
+                    g.trial_in_flight = true;
+                    true
+                }
+            }
+        }
+    }
+
+    pub(crate) fn record_success(&self) {
+        let mut g = lock_or_recover(&self.inner);
+        match g.state {
+            BreakerState::HalfOpen => {
+                g.trial_in_flight = false;
+                g.state = BreakerState::Closed;
+                g.window.clear();
+                g.opened_at = None;
+                self.closes.fetch_add(1, Ordering::Relaxed);
+            }
+            BreakerState::Closed => Self::push(&mut g, false),
+            BreakerState::Open => {}
+        }
+    }
+
+    pub(crate) fn record_failure(&self) {
+        let mut g = lock_or_recover(&self.inner);
+        match g.state {
+            BreakerState::HalfOpen => {
+                g.trial_in_flight = false;
+                g.state = BreakerState::Open;
+                g.opened_at = Some(Instant::now());
+                self.opens.fetch_add(1, Ordering::Relaxed);
+            }
+            BreakerState::Closed => {
+                Self::push(&mut g, true);
+                let n = g.window.len();
+                let failures = g.window.iter().filter(|&&f| f).count();
+                if n >= BREAKER_MIN_SAMPLES && failures * 2 >= n {
+                    g.state = BreakerState::Open;
+                    g.opened_at = Some(Instant::now());
+                    g.window.clear();
+                    self.opens.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            BreakerState::Open => {}
+        }
+    }
+
+    /// A batched attempt that ended for reasons unrelated to the path's
+    /// health (its requests ran out of deadline): releases a half-open
+    /// trial without judging it, and leaves the window untouched.
+    pub(crate) fn record_neutral(&self) {
+        let mut g = lock_or_recover(&self.inner);
+        if g.state == BreakerState::HalfOpen {
+            g.trial_in_flight = false;
+        }
+    }
+
+    fn push(g: &mut BreakerInner, failed: bool) {
+        if g.window.len() == BREAKER_WINDOW {
+            g.window.pop_front();
+        }
+        g.window.push_back(failed);
+    }
+
+    pub(crate) fn state(&self) -> BreakerState {
+        lock_or_recover(&self.inner).state
+    }
+
+    /// Cumulative (never reset) transition counts: (opens, closes).
+    pub(crate) fn transitions(&self) -> (u64, u64) {
+        (self.opens.load(Ordering::Relaxed), self.closes.load(Ordering::Relaxed))
+    }
 }
 
 /// Everything a worker thread needs, shared behind one `Arc` by
@@ -85,6 +255,7 @@ pub(crate) struct BatcherCtx {
     pub shared: Vec<Value>,
     pub queue: BoundedQueue<Request>,
     pub metrics: ServeMetrics,
+    pub breaker: CircuitBreaker,
     pub max_batch: usize,
     pub max_wait: std::time::Duration,
 }
@@ -113,10 +284,7 @@ pub(crate) fn worker_loop(ctx: &BatcherCtx) {
             while batch.len() < ctx.max_batch {
                 match ctx.queue.pop_until(deadline) {
                     Some(req) => {
-                        registry
-                            .lock()
-                            .unwrap_or_else(|p| p.into_inner())
-                            .push(req.slot.clone());
+                        lock_or_recover(&registry).push(req.slot.clone());
                         batch.push(req);
                     }
                     None => break,
@@ -125,7 +293,7 @@ pub(crate) fn worker_loop(ctx: &BatcherCtx) {
             execute_batch(ctx, batch);
         }));
         if outcome.is_err() {
-            for slot in registry.lock().unwrap_or_else(|p| p.into_inner()).iter() {
+            for slot in lock_or_recover(&registry).iter() {
                 slot.fill(Err(ServeError::Exec("panic during batch execution".into())));
             }
         }
@@ -134,34 +302,62 @@ pub(crate) fn worker_loop(ctx: &BatcherCtx) {
 
 /// Execute one gathered batch and answer every request in it.
 fn execute_batch(ctx: &BatcherCtx, batch: Vec<Request>) {
-    let n = batch.len();
     let dispatched = Instant::now();
     for req in &batch {
         ctx.metrics.wait.record(dispatched.duration_since(req.enqueued_at));
+    }
+
+    // Shed requests that expired while queued: they are answered without
+    // executing (and without dragging the live batch's deadline down).
+    let (live, expired): (Vec<Request>, Vec<Request>) =
+        batch.into_iter().partition(|r| r.deadline.map_or(true, |d| dispatched < d));
+    for req in &expired {
+        finish(ctx, req, Err(ServeError::DeadlineExceeded));
+    }
+    let n = live.len();
+    if n == 0 {
+        return;
     }
     ctx.metrics.batch_sizes.record(n);
 
     if n == 1 {
         ctx.metrics.direct_calls.inc();
-        let req = batch.into_iter().next().expect("n == 1");
-        let result = call_unbatched(ctx, &req.args);
+        let req = live.into_iter().next().expect("n == 1");
+        let result = call_unbatched(ctx, &req);
         finish(ctx, &req, result);
+    } else if !ctx.breaker.allow_batched() {
+        // Breaker open: degrade straight to the per-example path. Slower,
+        // never wrong — and nothing here feeds the window, so the breaker's
+        // verdict comes only from actual batched attempts.
+        ctx.metrics.fallback_batches.inc();
+        ctx.metrics.fallback_examples.add(n as u64);
+        for req in &live {
+            let result = call_unbatched(ctx, req);
+            finish(ctx, req, result);
+        }
     } else {
-        match try_batched(ctx, &batch) {
+        match try_batched(ctx, &live) {
             Ok(per_example) => {
+                ctx.breaker.record_success();
                 ctx.metrics.batched_batches.inc();
                 ctx.metrics.batched_examples.add(n as u64);
-                for (req, value) in batch.iter().zip(per_example) {
+                for (req, value) in live.iter().zip(per_example) {
                     finish(ctx, req, Ok(value));
                 }
             }
-            Err(_batch_failure) => {
+            Err(failure) => {
                 // Error isolation: re-run everyone alone. Only the request
-                // that actually fails unbatched sees an error.
+                // that actually fails unbatched sees an error. Deadline
+                // failures don't count against the breaker — the path is
+                // healthy, the clients were just out of time.
+                match failure {
+                    BatchFail::Deadline => ctx.breaker.record_neutral(),
+                    BatchFail::Other(_) => ctx.breaker.record_failure(),
+                }
                 ctx.metrics.fallback_batches.inc();
                 ctx.metrics.fallback_examples.add(n as u64);
-                for req in &batch {
-                    let result = call_unbatched(ctx, &req.args);
+                for req in &live {
+                    let result = call_unbatched(ctx, req);
                     finish(ctx, req, result);
                 }
             }
@@ -174,25 +370,59 @@ fn execute_batch(ctx: &BatcherCtx, batch: Vec<Request>) {
 fn finish(ctx: &BatcherCtx, req: &Request, result: Result<Value, ServeError>) {
     match &result {
         Ok(_) => ctx.metrics.completed.inc(),
+        Err(ServeError::DeadlineExceeded) => {
+            ctx.metrics.deadline_expired.inc();
+            ctx.metrics.failed.inc();
+        }
         Err(_) => ctx.metrics.failed.inc(),
     }
     req.slot.fill(result);
 }
 
+/// The execution budget a deadline translates to: a cancel token the VM
+/// probes from its dispatch loop and chunked kernels.
+fn budget_for(deadline: Option<Instant>) -> ExecBudget {
+    match deadline {
+        Some(d) => ExecBudget::default().with_token(CancelToken::with_deadline(d)),
+        None => ExecBudget::default(),
+    }
+}
+
 /// One request through the unbatched executable — the per-example semantics
-/// of record.
-fn call_unbatched(ctx: &BatcherCtx, args: &[Value]) -> Result<Value, ServeError> {
-    let mut full = Vec::with_capacity(ctx.shared.len() + args.len());
+/// of record. Checks the deadline first (a request that expired during a
+/// neighbor's fallback run is shed, not run) and carries it into the VM.
+fn call_unbatched(ctx: &BatcherCtx, req: &Request) -> Result<Value, ServeError> {
+    if req.deadline.map_or(false, |d| Instant::now() >= d) {
+        return Err(ServeError::DeadlineExceeded);
+    }
+    let mut full = Vec::with_capacity(ctx.shared.len() + req.args.len());
     full.extend(ctx.shared.iter().cloned());
-    full.extend(args.iter().cloned());
-    ctx.fallback.call(full).map_err(|e| ServeError::Exec(e.to_string()))
+    full.extend(req.args.iter().cloned());
+    ctx.fallback
+        .call_with_budget(full, &budget_for(req.deadline))
+        .map_err(|e| ServeError::from_exec(&e))
+}
+
+/// Why a batched attempt was abandoned — the distinction feeds the circuit
+/// breaker (deadline failures are neutral, everything else counts).
+pub(crate) enum BatchFail {
+    /// The dispatch was cut short by its requests' minimum deadline.
+    Deadline,
+    /// Anything else: stack/scatter mismatch, VM error, injected fault.
+    Other(String),
+}
+
+impl BatchFail {
+    fn other(msg: impl Into<String>) -> BatchFail {
+        BatchFail::Other(msg.into())
+    }
 }
 
 /// The whole batch through the vmapped executable, sharded across the
 /// intra-op pool when large enough to amortize the handoff. Any failure —
 /// in any shard — abandons the batched attempt (the caller falls back
 /// per-example); no partial results escape.
-fn try_batched(ctx: &BatcherCtx, batch: &[Request]) -> Result<Vec<Value>, String> {
+fn try_batched(ctx: &BatcherCtx, batch: &[Request]) -> Result<Vec<Value>, BatchFail> {
     let shards = shard_sizes(batch.len());
     if shards.len() < 2 || !pool::parallel_enabled() {
         return dispatch_shard(ctx, batch);
@@ -202,7 +432,7 @@ fn try_batched(ctx: &BatcherCtx, batch: &[Request]) -> Result<Vec<Value>, String
     // to its sequential result), so shard composition cannot change what
     // any caller receives — it only changes how many examples share one
     // vmapped dispatch.
-    let mut results: Vec<Option<Result<Vec<Value>, String>>> = Vec::new();
+    let mut results: Vec<Option<Result<Vec<Value>, BatchFail>>> = Vec::new();
     results.resize_with(shards.len(), || None);
     {
         let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(shards.len());
@@ -216,9 +446,23 @@ fn try_batched(ctx: &BatcherCtx, batch: &[Request]) -> Result<Vec<Value>, String
         }
         pool::pool().scope_run(tasks);
     }
+    // A real failure in any shard outranks a deadline cut: the breaker must
+    // hear about it.
     let mut all = Vec::with_capacity(batch.len());
+    let mut deadline_cut = false;
+    let mut shard_results = Vec::with_capacity(results.len());
     for r in results {
-        all.extend(r.ok_or("sharded dispatch dropped a shard")??);
+        match r.ok_or_else(|| BatchFail::other("sharded dispatch dropped a shard"))? {
+            Ok(vals) => shard_results.push(vals),
+            Err(BatchFail::Deadline) => deadline_cut = true,
+            Err(e @ BatchFail::Other(_)) => return Err(e),
+        }
+    }
+    if deadline_cut {
+        return Err(BatchFail::Deadline);
+    }
+    for vals in shard_results {
+        all.extend(vals);
     }
     Ok(all)
 }
@@ -237,19 +481,36 @@ fn shard_sizes(n: usize) -> Vec<usize> {
 }
 
 /// One shard (or the whole batch) through the vmapped executable:
-/// stack → dispatch → scatter.
-fn dispatch_shard(ctx: &BatcherCtx, batch: &[Request]) -> Result<Vec<Value>, String> {
+/// stack → dispatch → scatter. The shard's minimum live deadline rides into
+/// the VM as a cancel token, so one slow batch cannot outlive the requests
+/// inside it.
+fn dispatch_shard(ctx: &BatcherCtx, batch: &[Request]) -> Result<Vec<Value>, BatchFail> {
+    crate::faultinject::error_at(crate::faultinject::Site::BatchDispatch)
+        .map_err(|e| BatchFail::other(e.to_string()))?;
     let request_arity = ctx.fallback.arity() - ctx.shared.len();
     let mut full = Vec::with_capacity(ctx.shared.len() + request_arity);
     full.extend(ctx.shared.iter().cloned());
     for pos in 0..request_arity {
         let column: Vec<&Value> = batch.iter().map(|r| &r.args[pos]).collect();
-        full.push(stack_column(&column).map_err(|e| format!("argument {pos}: {e}"))?);
+        full.push(
+            stack_column(&column).map_err(|e| BatchFail::other(format!("argument {pos}: {e}")))?,
+        );
     }
-    let out = ctx.batched.call(full).map_err(|e| e.to_string())?;
-    let split = split_results(&out, batch.len(), ctx.fallback.ret_type())?;
+    let min_deadline = batch.iter().filter_map(|r| r.deadline).min();
+    let out = ctx.batched.call_with_budget(full, &budget_for(min_deadline)).map_err(|e| {
+        match e.downcast_ref::<Trap>() {
+            Some(Trap::DeadlineExceeded) | Some(Trap::Cancelled) => BatchFail::Deadline,
+            _ => BatchFail::other(e.to_string()),
+        }
+    })?;
+    let split =
+        split_results(&out, batch.len(), ctx.fallback.ret_type()).map_err(BatchFail::Other)?;
     if split.len() != batch.len() {
-        return Err(format!("scatter produced {} results for {} requests", split.len(), batch.len()));
+        return Err(BatchFail::other(format!(
+            "scatter produced {} results for {} requests",
+            split.len(),
+            batch.len()
+        )));
     }
     Ok(split)
 }
@@ -473,6 +734,57 @@ mod tests {
             Value::Tensor(t) => assert_eq!(t.rank(), 0),
             other => panic!("expected rank-0 tensor, got {other}"),
         }
+    }
+
+    #[test]
+    fn breaker_opens_half_opens_and_recloses() {
+        let b = CircuitBreaker::new();
+        assert_eq!(b.state(), BreakerState::Closed);
+        for _ in 0..BREAKER_MIN_SAMPLES {
+            assert!(b.allow_batched());
+            b.record_failure();
+        }
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.transitions(), (1, 0));
+        assert!(!b.allow_batched(), "open breaker must short-circuit");
+        std::thread::sleep(BREAKER_COOLDOWN + Duration::from_millis(30));
+        assert!(b.allow_batched(), "cooldown elapsed: one trial allowed");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(!b.allow_batched(), "only one trial at a time");
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.transitions(), (1, 1));
+        assert!(b.allow_batched());
+    }
+
+    #[test]
+    fn breaker_failed_trial_reopens_and_neutral_releases() {
+        let b = CircuitBreaker::new();
+        for _ in 0..BREAKER_MIN_SAMPLES {
+            b.record_failure();
+        }
+        std::thread::sleep(BREAKER_COOLDOWN + Duration::from_millis(30));
+        assert!(b.allow_batched());
+        // A deadline-cut trial neither closes nor reopens — it hands the
+        // trial slot back.
+        b.record_neutral();
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(b.allow_batched(), "neutral outcome releases the trial slot");
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.transitions(), (2, 0));
+    }
+
+    #[test]
+    fn breaker_tolerates_minority_failures() {
+        let b = CircuitBreaker::new();
+        for _ in 0..32 {
+            b.record_success();
+            b.record_success();
+            b.record_failure();
+        }
+        assert_eq!(b.state(), BreakerState::Closed, "1/3 failures stays under the trip ratio");
+        assert_eq!(b.transitions(), (0, 0));
     }
 
     #[test]

@@ -3,12 +3,24 @@
 //! The error taxonomy encodes the subsystem's isolation story: a request is
 //! either turned away *before* it can touch anyone else ([`ServeError::Rejected`],
 //! [`ServeError::QueueFull`]), fails *alone* after batch-level recovery
-//! ([`ServeError::Exec`]), or observes server teardown
+//! ([`ServeError::Exec`], [`ServeError::Trap`]), runs out of time at any
+//! stage ([`ServeError::DeadlineExceeded`]), or observes server teardown
 //! ([`ServeError::Shutdown`]). There is deliberately no "your batch failed"
 //! variant — a co-batched neighbor's failure is never a caller-visible
 //! outcome (see `batcher::execute_batch`).
+//!
+//! | Variant            | When                                            | Executed? |
+//! |--------------------|-------------------------------------------------|-----------|
+//! | `Rejected`         | signature mismatch at admission                 | no        |
+//! | `QueueFull`        | queue at capacity under `FullPolicy::Reject`    | no        |
+//! | `DeadlineExceeded` | deadline passed queued, blocked, or mid-run     | maybe     |
+//! | `Trap`             | own run exceeded a resource budget              | partially |
+//! | `Exec`             | own run failed (after batch-level recovery)     | yes       |
+//! | `Shutdown`         | server closed before a terminal response        | maybe     |
 
 use std::fmt;
+
+use crate::vm::Trap;
 
 /// What went wrong with one request.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -20,6 +32,15 @@ pub enum ServeError {
     /// The submission queue is at capacity and the server's backpressure
     /// policy is [`crate::serve::FullPolicy::Reject`].
     QueueFull,
+    /// The request's deadline passed — while waiting for queue space, while
+    /// queued, or while executing (the batcher forwards the minimum live
+    /// deadline into the VM as a cancel token). The work was skipped or cut
+    /// short; it never produced a result.
+    DeadlineExceeded,
+    /// This request's own execution exceeded a resource budget (instruction
+    /// fuel, frame depth, tensor-bytes ceiling) and trapped. The payload is
+    /// the trap's message, e.g. `instruction fuel exhausted (limit 500000)`.
+    Trap(String),
     /// This request's own execution failed. Under the batch-recovery path
     /// every co-batched request was re-run unbatched, so this error belongs
     /// to exactly this request.
@@ -28,11 +49,26 @@ pub enum ServeError {
     Shutdown,
 }
 
+impl ServeError {
+    /// Classify an execution error from the VM: budget traps map to the
+    /// structured [`ServeError::DeadlineExceeded`] / [`ServeError::Trap`]
+    /// variants, everything else stays a generic [`ServeError::Exec`].
+    pub(crate) fn from_exec(e: &anyhow::Error) -> ServeError {
+        match e.downcast_ref::<Trap>() {
+            Some(Trap::DeadlineExceeded) | Some(Trap::Cancelled) => ServeError::DeadlineExceeded,
+            Some(t) => ServeError::Trap(t.to_string()),
+            None => ServeError::Exec(e.to_string()),
+        }
+    }
+}
+
 impl fmt::Display for ServeError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             ServeError::Rejected(msg) => write!(f, "request rejected at admission: {msg}"),
             ServeError::QueueFull => write!(f, "submission queue full"),
+            ServeError::DeadlineExceeded => write!(f, "request deadline exceeded"),
+            ServeError::Trap(msg) => write!(f, "request trapped: {msg}"),
             ServeError::Exec(msg) => write!(f, "request execution failed: {msg}"),
             ServeError::Shutdown => write!(f, "server shut down"),
         }
@@ -51,5 +87,22 @@ mod tests {
         assert_eq!(ServeError::QueueFull.to_string(), "submission queue full");
         assert!(ServeError::Exec("boom".into()).to_string().contains("boom"));
         assert_eq!(ServeError::Shutdown.to_string(), "server shut down");
+        assert_eq!(ServeError::DeadlineExceeded.to_string(), "request deadline exceeded");
+        assert!(ServeError::Trap("fuel".into()).to_string().contains("trapped: fuel"));
+    }
+
+    #[test]
+    fn exec_errors_classify_by_trap_kind() {
+        let deadline = anyhow::Error::new(Trap::DeadlineExceeded);
+        assert_eq!(ServeError::from_exec(&deadline), ServeError::DeadlineExceeded);
+        let cancel = anyhow::Error::new(Trap::Cancelled);
+        assert_eq!(ServeError::from_exec(&cancel), ServeError::DeadlineExceeded);
+        let fuel = anyhow::Error::new(Trap::FuelExhausted { limit: 10 });
+        match ServeError::from_exec(&fuel) {
+            ServeError::Trap(m) => assert!(m.contains("fuel"), "{m}"),
+            other => panic!("{other:?}"),
+        }
+        let plain = anyhow::anyhow!("boom");
+        assert_eq!(ServeError::from_exec(&plain), ServeError::Exec("boom".into()));
     }
 }

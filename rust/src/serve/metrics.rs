@@ -10,7 +10,8 @@
 //! ([`CacheCounters`], shared with `coordinator::Engine` by `Arc`), so a
 //! serving process dumps its whole story from one place.
 
-use crate::vm::PlanStats;
+use crate::serve::batcher::BreakerState;
+use crate::vm::{PlanStats, TrapStats};
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -61,6 +62,9 @@ pub struct CacheCounters {
     /// Disk artifacts rejected as corrupt, stale-schema, or unloadable; each
     /// such probe degraded to a cold compile.
     pub disk_invalid: Counter,
+    /// Transient disk IO errors that were retried (with backoff) before the
+    /// operation succeeded or was quarantined.
+    pub disk_retries: Counter,
 }
 
 impl CacheCounters {
@@ -72,6 +76,7 @@ impl CacheCounters {
             disk_misses: self.disk_misses.get(),
             disk_writes: self.disk_writes.get(),
             disk_invalid: self.disk_invalid.get(),
+            disk_retries: self.disk_retries.get(),
         }
     }
 }
@@ -85,13 +90,16 @@ pub struct CacheStats {
     pub disk_misses: u64,
     pub disk_writes: u64,
     pub disk_invalid: u64,
+    pub disk_retries: u64,
 }
 
 impl CacheStats {
     /// Whether the disk tier saw any traffic (used to keep `Display` quiet
     /// for the common cache-dir-less configuration).
     pub fn disk_active(&self) -> bool {
-        self.disk_hits + self.disk_misses + self.disk_writes + self.disk_invalid > 0
+        self.disk_hits + self.disk_misses + self.disk_writes + self.disk_invalid
+            + self.disk_retries
+            > 0
     }
 }
 
@@ -223,6 +231,9 @@ pub struct ServeMetrics {
     pub fallback_batches: Counter,
     /// Examples re-run unbatched by the fallback path.
     pub fallback_examples: Counter,
+    /// Requests answered `DeadlineExceeded` — expired while blocked on a
+    /// full queue, while queued, or cut short mid-execution.
+    pub deadline_expired: Counter,
     /// High-water mark of the submission queue depth.
     pub queue_depth_max: Counter,
     /// Enqueue → dispatch wait per request.
@@ -246,6 +257,7 @@ impl ServeMetrics {
             direct_calls: Counter::default(),
             fallback_batches: Counter::default(),
             fallback_examples: Counter::default(),
+            deadline_expired: Counter::default(),
             queue_depth_max: Counter::default(),
             wait: LatencyHistogram::default(),
             exec: LatencyHistogram::default(),
@@ -261,7 +273,13 @@ impl ServeMetrics {
         queue_depth: usize,
         cache: Option<CacheStats>,
         plans: Option<PlanStats>,
+        traps: Option<TrapStats>,
+        breaker: Option<(BreakerState, u64, u64)>,
     ) -> MetricsSnapshot {
+        let (breaker_state, breaker_opens, breaker_closes) = match breaker {
+            Some((state, opens, closes)) => (Some(state), opens, closes),
+            None => (None, 0, 0),
+        };
         MetricsSnapshot {
             submitted: self.submitted.get(),
             rejected_invalid: self.rejected_invalid.get(),
@@ -273,6 +291,7 @@ impl ServeMetrics {
             direct_calls: self.direct_calls.get(),
             fallback_batches: self.fallback_batches.get(),
             fallback_examples: self.fallback_examples.get(),
+            deadline_expired: self.deadline_expired.get(),
             queue_depth,
             queue_depth_max: self.queue_depth_max.get(),
             wait: self.wait.snapshot(),
@@ -280,6 +299,10 @@ impl ServeMetrics {
             batch_sizes: self.batch_sizes.snapshot(),
             cache,
             plans,
+            traps,
+            breaker_state,
+            breaker_opens,
+            breaker_closes,
         }
     }
 }
@@ -304,10 +327,21 @@ pub struct MetricsSnapshot {
     pub wait: LatencyStats,
     pub exec: LatencyStats,
     pub batch_sizes: Vec<(usize, u64)>,
+    pub deadline_expired: u64,
     pub cache: Option<CacheStats>,
     /// Shape-specialization plan-cache counters summed over the server's
     /// executables (`None` when the server exposes no VM artifacts).
     pub plans: Option<PlanStats>,
+    /// Cumulative budget-trap counters summed over the server's executables
+    /// (`None` when the server exposes no VM artifacts).
+    pub traps: Option<TrapStats>,
+    /// Circuit-breaker state over the batched dispatch path (`None` before
+    /// the server exposes a breaker).
+    pub breaker_state: Option<BreakerState>,
+    /// Cumulative closed→open (and half-open→open) transitions.
+    pub breaker_opens: u64,
+    /// Cumulative half-open→closed transitions.
+    pub breaker_closes: u64,
 }
 
 impl MetricsSnapshot {
@@ -370,8 +404,12 @@ impl fmt::Display for MetricsSnapshot {
             if cache.disk_active() {
                 write!(
                     f,
-                    "; disk {} hits, {} misses, {} writes, {} invalid",
-                    cache.disk_hits, cache.disk_misses, cache.disk_writes, cache.disk_invalid
+                    "; disk {} hits, {} misses, {} writes, {} invalid, {} retries",
+                    cache.disk_hits,
+                    cache.disk_misses,
+                    cache.disk_writes,
+                    cache.disk_invalid,
+                    cache.disk_retries
                 )?;
             }
         }
@@ -381,6 +419,32 @@ impl fmt::Display for MetricsSnapshot {
                 "\nplans:    {} compiled, {} hits, {} shape misses",
                 plans.plans_compiled, plans.plan_hits, plans.plan_shape_misses
             )?;
+        }
+        // Robustness telemetry stays out of the dump until something
+        // actually trips — a healthy server's snapshot looks like before.
+        if self.deadline_expired > 0 {
+            write!(f, "\ndeadline: {} requests expired", self.deadline_expired)?;
+        }
+        if let Some(traps) = &self.traps {
+            if traps.total() > 0 {
+                write!(
+                    f,
+                    "\ntraps:    {} fuel, {} depth, {} mem, {} deadline",
+                    traps.fuel_exhausted,
+                    traps.depth_trapped,
+                    traps.mem_trapped,
+                    traps.deadline_exceeded
+                )?;
+            }
+        }
+        if let Some(state) = self.breaker_state {
+            if state != BreakerState::Closed || self.breaker_opens + self.breaker_closes > 0 {
+                write!(
+                    f,
+                    "\nbreaker:  {state} ({} opens, {} closes)",
+                    self.breaker_opens, self.breaker_closes
+                )?;
+            }
         }
         Ok(())
     }
@@ -428,7 +492,7 @@ mod tests {
             }
         });
         let total = (threads * per) as u64;
-        let snap = m.snapshot(0, Some(cache.snapshot()), None);
+        let snap = m.snapshot(0, Some(cache.snapshot()), None, None, None);
         assert_eq!(snap.submitted, total);
         assert_eq!(snap.completed, total);
         assert_eq!(snap.wait.count, total);
@@ -481,7 +545,7 @@ mod tests {
         m.direct_calls.inc();
         m.batch_sizes.record(1);
         let mut cs = CacheStats { hits: 3, misses: 1, ..Default::default() };
-        let shown = m.snapshot(0, Some(cs), None).to_string();
+        let shown = m.snapshot(0, Some(cs), None, None, None).to_string();
         assert!(shown.contains("1 submitted"));
         assert!(shown.contains("3 hits"));
         assert!(shown.contains("1×1"));
@@ -493,8 +557,32 @@ mod tests {
         cs.disk_writes = 1;
         let plans =
             PlanStats { plans_compiled: 4, plan_hits: 9, plan_shape_misses: 2 };
-        let with_disk = m.snapshot(0, Some(cs), Some(plans)).to_string();
-        assert!(with_disk.contains("disk 2 hits, 0 misses, 1 writes, 0 invalid"), "{with_disk}");
+        let with_disk = m.snapshot(0, Some(cs), Some(plans), None, None).to_string();
+        assert!(
+            with_disk.contains("disk 2 hits, 0 misses, 1 writes, 0 invalid, 0 retries"),
+            "{with_disk}"
+        );
         assert!(with_disk.contains("plans:    4 compiled, 9 hits, 2 shape misses"), "{with_disk}");
+    }
+
+    #[test]
+    fn robustness_lines_are_gated() {
+        let m = ServeMetrics::new(8);
+        // Quiet server: no trap/breaker/deadline lines at all.
+        let quiet = m
+            .snapshot(0, None, None, Some(TrapStats::default()), Some((BreakerState::Closed, 0, 0)))
+            .to_string();
+        assert!(!quiet.contains("traps:"), "{quiet}");
+        assert!(!quiet.contains("breaker:"), "{quiet}");
+        assert!(!quiet.contains("deadline:"), "{quiet}");
+        // Once something trips, each line appears.
+        m.deadline_expired.add(3);
+        let traps = TrapStats { fuel_exhausted: 1, deadline_exceeded: 2, ..Default::default() };
+        let loud = m
+            .snapshot(0, None, None, Some(traps), Some((BreakerState::Open, 2, 1)))
+            .to_string();
+        assert!(loud.contains("deadline: 3 requests expired"), "{loud}");
+        assert!(loud.contains("traps:    1 fuel, 0 depth, 0 mem, 2 deadline"), "{loud}");
+        assert!(loud.contains("breaker:  open (2 opens, 1 closes)"), "{loud}");
     }
 }

@@ -48,14 +48,18 @@
 pub mod error;
 pub mod metrics;
 pub mod queue;
+pub mod sync;
 
 mod batcher;
 
+pub use batcher::BreakerState;
+
 use crate::coordinator::{Engine, Executable, Function};
-use crate::serve::batcher::{worker_loop, BatcherCtx, Request, ResponseSlot};
+use crate::serve::batcher::{worker_loop, BatcherCtx, CircuitBreaker, Request, ResponseSlot};
 use crate::serve::error::ServeError;
 use crate::serve::metrics::{CacheCounters, MetricsSnapshot, ServeMetrics};
 use crate::serve::queue::{BoundedQueue, PushError};
+use crate::serve::sync::lock_or_recover;
 use crate::types::AType;
 use crate::vm::Value;
 use crate::Result;
@@ -63,6 +67,29 @@ use anyhow::bail;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Per-request submission options. The default (`SubmitOpts::default()`)
+/// is exactly the old `submit` behavior: no deadline.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SubmitOpts {
+    /// Answer the request [`ServeError::DeadlineExceeded`] once this instant
+    /// passes — whether it is still blocked on a full queue, waiting in the
+    /// queue, or already executing (the deadline rides into the VM as a
+    /// cancel token and cuts the run short).
+    pub deadline: Option<Instant>,
+}
+
+impl SubmitOpts {
+    /// Absolute deadline.
+    pub fn deadline(d: Instant) -> SubmitOpts {
+        SubmitOpts { deadline: Some(d) }
+    }
+
+    /// Deadline `d` from now.
+    pub fn timeout(d: Duration) -> SubmitOpts {
+        SubmitOpts { deadline: Instant::now().checked_add(d) }
+    }
+}
 
 /// What `submit` does when the bounded queue is at capacity.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -172,6 +199,7 @@ impl Server {
             shared,
             queue: BoundedQueue::new(cfg.queue_capacity),
             metrics: ServeMetrics::new(cfg.max_batch),
+            breaker: CircuitBreaker::new(),
             max_batch: cfg.max_batch,
             max_wait: cfg.max_wait,
         });
@@ -237,26 +265,51 @@ impl Server {
     /// The response is exactly what the unbatched pipeline would produce
     /// for these arguments alone, whatever batch the request rode in.
     pub fn submit(&self, args: Vec<Value>) -> std::result::Result<Value, ServeError> {
+        self.submit_with(args, SubmitOpts::default())
+    }
+
+    /// [`Server::submit`] with per-request options: a deadline bounds the
+    /// whole submit → response interval, including a `Block`-policy wait for
+    /// queue space and the execution itself.
+    pub fn submit_with(
+        &self,
+        args: Vec<Value>,
+        opts: SubmitOpts,
+    ) -> std::result::Result<Value, ServeError> {
         self.ctx.metrics.submitted.inc();
         if let Err(msg) = self.validate(&args) {
             self.ctx.metrics.rejected_invalid.inc();
             return Err(ServeError::Rejected(msg));
         }
+        if opts.deadline.map_or(false, |d| Instant::now() >= d) {
+            self.ctx.metrics.deadline_expired.inc();
+            self.ctx.metrics.failed.inc();
+            return Err(ServeError::DeadlineExceeded);
+        }
         let slot = ResponseSlot::new();
-        let request = Request { args, enqueued_at: Instant::now(), slot: slot.clone() };
+        let request = Request {
+            args,
+            enqueued_at: Instant::now(),
+            deadline: opts.deadline,
+            slot: slot.clone(),
+        };
         match self.full_policy {
-            FullPolicy::Block => {
-                if self.ctx.queue.push_blocking(request).is_err() {
-                    return Err(ServeError::Shutdown);
+            FullPolicy::Block => match self.ctx.queue.push_until(request, opts.deadline) {
+                Ok(()) => {}
+                Err(PushError::TimedOut(_)) => {
+                    self.ctx.metrics.deadline_expired.inc();
+                    self.ctx.metrics.failed.inc();
+                    return Err(ServeError::DeadlineExceeded);
                 }
-            }
+                Err(_) => return Err(ServeError::Shutdown),
+            },
             FullPolicy::Reject => match self.ctx.queue.try_push(request) {
                 Ok(()) => {}
                 Err(PushError::Full(_)) => {
                     self.ctx.metrics.rejected_full.inc();
                     return Err(ServeError::QueueFull);
                 }
-                Err(PushError::Closed(_)) => return Err(ServeError::Shutdown),
+                Err(_) => return Err(ServeError::Shutdown),
             },
         }
         self.ctx.metrics.queue_depth_max.max_of(self.ctx.queue.len() as u64);
@@ -309,10 +362,14 @@ impl Server {
             plan_hits: b.plan_hits + f.plan_hits,
             plan_shape_misses: b.plan_shape_misses + f.plan_shape_misses,
         };
+        let traps = self.ctx.batched.trap_stats().plus(&self.ctx.fallback.trap_stats());
+        let (opens, closes) = self.ctx.breaker.transitions();
         self.ctx.metrics.snapshot(
             self.ctx.queue.len(),
             self.cache.as_ref().map(|c| c.snapshot()),
             Some(plans),
+            Some(traps),
+            Some((self.ctx.breaker.state(), opens, closes)),
         )
     }
 
@@ -326,8 +383,7 @@ impl Server {
     /// [`ServeError::Shutdown`]. Idempotent; also runs on drop.
     pub fn shutdown(&self) {
         self.ctx.queue.close();
-        let handles: Vec<JoinHandle<()>> =
-            std::mem::take(&mut *self.workers.lock().expect("worker registry poisoned"));
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *lock_or_recover(&self.workers));
         for h in handles {
             let _ = h.join();
         }

@@ -12,6 +12,8 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
+use super::sync::{lock_or_recover, wait_or_recover, wait_timeout_or_recover};
+
 /// Why a push did not enqueue.
 #[derive(Debug, PartialEq, Eq)]
 pub enum PushError<T> {
@@ -20,6 +22,9 @@ pub enum PushError<T> {
     Full(T),
     /// Queue closed: the server is shutting down.
     Closed(T),
+    /// The caller's deadline passed while waiting for space
+    /// ([`BoundedQueue::push_until`]).
+    TimedOut(T),
 }
 
 struct State<T> {
@@ -53,7 +58,7 @@ impl<T> BoundedQueue<T> {
 
     /// Current depth (snapshot; racy by nature, fine for telemetry).
     pub fn len(&self) -> usize {
-        self.state.lock().expect("queue poisoned").items.len()
+        lock_or_recover(&self.state).items.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -63,7 +68,7 @@ impl<T> BoundedQueue<T> {
     /// Enqueue, failing immediately when full — the `Reject` backpressure
     /// policy.
     pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
-        let mut st = self.state.lock().expect("queue poisoned");
+        let mut st = lock_or_recover(&self.state);
         if st.closed {
             return Err(PushError::Closed(item));
         }
@@ -79,7 +84,17 @@ impl<T> BoundedQueue<T> {
     /// Enqueue, blocking while the queue is at capacity — the `Block`
     /// backpressure policy. Errs only if the queue closes while waiting.
     pub fn push_blocking(&self, item: T) -> Result<(), PushError<T>> {
-        let mut st = self.state.lock().expect("queue poisoned");
+        self.push_until(item, None)
+    }
+
+    /// Enqueue, blocking while the queue is at capacity but no later than
+    /// `deadline`. `None` waits indefinitely (the classic `Block` policy);
+    /// `Some(d)` returns [`PushError::TimedOut`] once `d` passes with the
+    /// queue still full — the wait a deadlined submit is wired to, so a
+    /// client can never be parked past its own deadline. Closing the queue
+    /// wins over both outcomes: a blocked pusher always wakes on `close()`.
+    pub fn push_until(&self, item: T, deadline: Option<Instant>) -> Result<(), PushError<T>> {
+        let mut st = lock_or_recover(&self.state);
         loop {
             if st.closed {
                 return Err(PushError::Closed(item));
@@ -90,14 +105,25 @@ impl<T> BoundedQueue<T> {
                 self.not_empty.notify_one();
                 return Ok(());
             }
-            st = self.not_full.wait(st).expect("queue poisoned");
+            match deadline {
+                None => st = wait_or_recover(&self.not_full, st),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return Err(PushError::TimedOut(item));
+                    }
+                    let (guard, _) = wait_timeout_or_recover(&self.not_full, st, d - now);
+                    st = guard;
+                }
+            }
         }
     }
 
     /// Dequeue, blocking until an item arrives. `None` means the queue is
     /// closed *and* fully drained — the worker-thread exit signal.
     pub fn pop_blocking(&self) -> Option<T> {
-        let mut st = self.state.lock().expect("queue poisoned");
+        crate::faultinject::latency_at(crate::faultinject::Site::QueuePop);
+        let mut st = lock_or_recover(&self.state);
         loop {
             if let Some(item) = st.items.pop_front() {
                 drop(st);
@@ -107,7 +133,7 @@ impl<T> BoundedQueue<T> {
             if st.closed {
                 return None;
             }
-            st = self.not_empty.wait(st).expect("queue poisoned");
+            st = wait_or_recover(&self.not_empty, st);
         }
     }
 
@@ -115,7 +141,8 @@ impl<T> BoundedQueue<T> {
     /// `None` means the deadline passed (flush what you have) or the queue
     /// closed empty.
     pub fn pop_until(&self, deadline: Instant) -> Option<T> {
-        let mut st = self.state.lock().expect("queue poisoned");
+        crate::faultinject::latency_at(crate::faultinject::Site::QueuePop);
+        let mut st = lock_or_recover(&self.state);
         loop {
             if let Some(item) = st.items.pop_front() {
                 drop(st);
@@ -129,10 +156,7 @@ impl<T> BoundedQueue<T> {
             if now >= deadline {
                 return None;
             }
-            let (guard, timeout) = self
-                .not_empty
-                .wait_timeout(st, deadline - now)
-                .expect("queue poisoned");
+            let (guard, timeout) = wait_timeout_or_recover(&self.not_empty, st, deadline - now);
             st = guard;
             if timeout.timed_out() && st.items.is_empty() {
                 return None;
@@ -143,7 +167,7 @@ impl<T> BoundedQueue<T> {
     /// Close the queue: no new items are accepted, everyone blocked wakes.
     /// Items already enqueued remain poppable until drained.
     pub fn close(&self) {
-        let mut st = self.state.lock().expect("queue poisoned");
+        let mut st = lock_or_recover(&self.state);
         st.closed = true;
         drop(st);
         self.not_empty.notify_all();
@@ -203,6 +227,63 @@ mod tests {
         assert_eq!(q.pop_blocking(), Some(1));
         h.join().unwrap().unwrap();
         assert_eq!(q.pop_blocking(), Some(2));
+    }
+
+    #[test]
+    fn push_until_times_out_while_full() {
+        let q = BoundedQueue::new(1);
+        q.try_push(1).unwrap();
+        let t0 = Instant::now();
+        let deadline = t0 + Duration::from_millis(15);
+        assert_eq!(q.push_until(2, Some(deadline)), Err(PushError::TimedOut(2)));
+        assert!(Instant::now() >= deadline);
+        // The resident item was untouched and space admits a later push.
+        assert_eq!(q.pop_blocking(), Some(1));
+        q.push_until(3, Some(Instant::now() + Duration::from_millis(15))).unwrap();
+        assert_eq!(q.pop_blocking(), Some(3));
+    }
+
+    /// Regression (ISSUE 10): a `Block`-policy push parked on a full queue
+    /// must wake when the queue closes — with no deadline it used to be
+    /// able to block forever if the close notification raced the wait.
+    #[test]
+    fn close_wakes_blocked_pusher() {
+        for _ in 0..20 {
+            let q = Arc::new(BoundedQueue::new(1));
+            q.try_push(0).unwrap();
+            let q2 = q.clone();
+            let pusher = std::thread::spawn(move || q2.push_blocking(1));
+            let q3 = q.clone();
+            let closer = std::thread::spawn(move || {
+                q3.close();
+            });
+            closer.join().unwrap();
+            // The pusher either got in just before close (queue had space
+            // never — cap 1 and the resident item is still there, so it
+            // cannot have) or observed the close. Either way it terminates.
+            assert_eq!(pusher.join().unwrap(), Err(PushError::Closed(1)));
+            assert_eq!(q.pop_blocking(), Some(0));
+            assert_eq!(q.pop_blocking(), None);
+        }
+    }
+
+    /// A *deadlined* pusher racing `close()` also terminates, with either
+    /// verdict but never a hang.
+    #[test]
+    fn close_races_deadlined_pusher_without_hanging() {
+        for _ in 0..20 {
+            let q = Arc::new(BoundedQueue::new(1));
+            q.try_push(0).unwrap();
+            let q2 = q.clone();
+            let deadline = Instant::now() + Duration::from_millis(50);
+            let pusher = std::thread::spawn(move || q2.push_until(1, Some(deadline)));
+            std::thread::sleep(Duration::from_millis(2));
+            q.close();
+            match pusher.join().unwrap() {
+                Err(PushError::Closed(1)) | Err(PushError::TimedOut(1)) => {}
+                other => panic!("unexpected push outcome: {other:?}"),
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,74 @@
+//! Poison-tolerant locking for the serving layer.
+//!
+//! A panicking worker (a buggy primitive, an injected fault) poisons every
+//! `Mutex` it held at unwind time. The serving stack treats poisoning as a
+//! recoverable event, not a contagion: every guard in `serve/` is acquired
+//! through these helpers, which take the inner data from a `PoisonError`
+//! and carry on. That is sound here because each protected region leaves
+//! its data structurally consistent at every await/panic point — queues
+//! push/pop a whole item under one guard, slots write one terminal value,
+//! registries insert/remove whole entries — so the only thing poisoning
+//! would add is a cascade of `PoisonError` panics through every *later*
+//! client call, which is exactly the failure amplification a serving layer
+//! must not have.
+
+use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Acquire `m`, recovering the guard if a previous holder panicked.
+pub fn lock_or_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// `Condvar::wait`, recovering the reacquired guard on poison.
+pub fn wait_or_recover<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|p| p.into_inner())
+}
+
+/// `Condvar::wait_timeout`, recovering the reacquired guard on poison.
+pub fn wait_timeout_or_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(guard, dur).unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    fn poison(m: &Arc<Mutex<u32>>) {
+        let m2 = Arc::clone(m);
+        std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join()
+        .unwrap_err();
+        assert!(m.is_poisoned());
+    }
+
+    #[test]
+    fn lock_recovers_after_holder_panics() {
+        let m = Arc::new(Mutex::new(7u32));
+        poison(&m);
+        let mut g = lock_or_recover(&m);
+        assert_eq!(*g, 7);
+        *g = 8;
+        drop(g);
+        assert_eq!(*lock_or_recover(&m), 8);
+    }
+
+    #[test]
+    fn wait_timeout_recovers_after_poison() {
+        let m = Arc::new(Mutex::new(0u32));
+        poison(&m);
+        let cv = Condvar::new();
+        let g = lock_or_recover(&m);
+        let (g, r) = wait_timeout_or_recover(&cv, g, Duration::from_millis(5));
+        assert!(r.timed_out());
+        assert_eq!(*g, 0);
+    }
+}

@@ -1,0 +1,452 @@
+//! Execution budgets and cooperative cancellation.
+//!
+//! The IR "naturally supports function calls, higher-order functions and
+//! recursion" (paper §3) — which means a served artifact can legally
+//! diverge, recurse without bound, or allocate without bound. This module
+//! is the governor: a per-invocation [`ExecBudget`] carries four
+//! independent ceilings —
+//!
+//! * **instruction fuel** — a hard cap on bytecode instructions retired;
+//! * **call-frame depth** — a cap that *tightens* the VM's own
+//!   `max_depth` (it can never loosen it);
+//! * **tensor bytes** — a ceiling on tensor bytes produced by primitive
+//!   calls during the invocation;
+//! * **a wall-clock deadline / cancel flag** — carried as a shared
+//!   [`CancelToken`] so the serving layer (or any other owner) can revoke
+//!   an in-flight call from outside.
+//!
+//! Exceeding any ceiling unwinds the interpreter with a structured
+//! [`Trap`] error — never a panic, never an OOM. Traps travel as the
+//! source of the `anyhow` error chain, so callers at any layer can
+//! `downcast_ref::<Trap>()` to distinguish "the program was stopped by
+//! policy" from "the program was wrong".
+//!
+//! Cost discipline: budget checks ride the interpreter's existing
+//! per-instruction bookkeeping. Fuel is one branch + decrement; the
+//! wall-clock read (`Instant::now`) happens once per
+//! [`DEADLINE_CHECK_PERIOD`] instructions, and once per chunk inside
+//! fused-kernel loops (`vm::fused` via `pool::for_chunks_mut_cancellable`)
+//! where a single chunk is ~16k elements of work. A default budget
+//! short-circuits to a single boolean test per instruction.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Instructions between wall-clock deadline probes on the interpreter's
+/// hot path. 1024 instructions is microseconds of work — far finer than
+/// any deadline a serving layer would set — while keeping `Instant::now`
+/// off the per-instruction path.
+pub const DEADLINE_CHECK_PERIOD: u64 = 1024;
+
+/// Why an invocation was stopped by its budget. Structured (not a string)
+/// so every layer above the VM — fallback isolation, the serve error
+/// taxonomy, metrics — can react to *which* ceiling was hit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trap {
+    /// The instruction-fuel ceiling was exhausted.
+    FuelExhausted { limit: u64 },
+    /// The call-frame depth cap was reached (the budget's cap or the VM's
+    /// own `max_depth`, whichever is tighter).
+    DepthExceeded { limit: usize },
+    /// The invocation produced more tensor bytes than its ceiling.
+    MemExceeded { limit: u64, used: u64 },
+    /// The wall-clock deadline on the invocation's [`CancelToken`] passed.
+    DeadlineExceeded,
+    /// The invocation's [`CancelToken`] was revoked explicitly.
+    Cancelled,
+}
+
+impl fmt::Display for Trap {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Trap::FuelExhausted { limit } => {
+                write!(f, "instruction fuel exhausted ({limit} instructions)")
+            }
+            // Same wording as the VM's historic depth error so existing
+            // callers matching on "recursion limit" keep working.
+            Trap::DepthExceeded { limit } => {
+                write!(f, "recursion limit exceeded ({limit} frames)")
+            }
+            Trap::MemExceeded { limit, used } => {
+                write!(f, "tensor allocation budget exceeded ({used} of {limit} bytes)")
+            }
+            Trap::DeadlineExceeded => write!(f, "execution deadline exceeded"),
+            Trap::Cancelled => write!(f, "execution cancelled"),
+        }
+    }
+}
+
+impl std::error::Error for Trap {}
+
+/// A shared cancellation handle: an explicit revoke flag plus an optional
+/// wall-clock deadline, fixed at construction. Clone it freely — all
+/// clones observe one flag. The VM polls it on the instruction path (every
+/// [`DEADLINE_CHECK_PERIOD`] instructions) and fused chunk loops poll it
+/// per chunk, including on intra-op pool worker threads.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    inner: Arc<TokenInner>,
+}
+
+#[derive(Debug, Default)]
+struct TokenInner {
+    cancelled: AtomicBool,
+    deadline: Option<Instant>,
+}
+
+impl CancelToken {
+    /// A token with no deadline; fires only via [`CancelToken::cancel`].
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// A token that fires when `deadline` passes (or on explicit cancel).
+    pub fn with_deadline(deadline: Instant) -> CancelToken {
+        CancelToken {
+            inner: Arc::new(TokenInner { cancelled: AtomicBool::new(false), deadline: Some(deadline) }),
+        }
+    }
+
+    /// Convenience: a deadline `timeout` from now (saturating).
+    pub fn with_timeout(timeout: Duration) -> CancelToken {
+        let deadline =
+            Instant::now().checked_add(timeout).unwrap_or_else(|| Instant::now() + Duration::from_secs(3600));
+        CancelToken::with_deadline(deadline)
+    }
+
+    /// The wall-clock deadline, when one was set.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.inner.deadline
+    }
+
+    /// Revoke: every holder's next check observes [`Trap::Cancelled`].
+    pub fn cancel(&self) {
+        self.inner.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    /// Has the token been explicitly revoked? (Flag only — does not read
+    /// the clock.)
+    pub fn is_cancelled(&self) -> bool {
+        self.inner.cancelled.load(Ordering::Relaxed)
+    }
+
+    /// Should a cooperative loop stop now? Flag check plus (when a
+    /// deadline exists) one clock read.
+    pub fn should_stop(&self) -> bool {
+        self.is_cancelled() || self.inner.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+
+    /// Full check, as a structured error: explicit revocation wins over
+    /// deadline expiry so a `cancel()` is always reported as such.
+    pub fn check(&self) -> Result<(), Trap> {
+        if self.is_cancelled() {
+            return Err(Trap::Cancelled);
+        }
+        if self.inner.deadline.is_some_and(|d| Instant::now() >= d) {
+            return Err(Trap::DeadlineExceeded);
+        }
+        Ok(())
+    }
+}
+
+/// Per-invocation resource ceilings. `Default` is unlimited in every
+/// dimension; each `with_*` tightens one of them. Cheap to clone — the
+/// only non-scalar member is the token's `Arc`.
+#[derive(Clone, Debug, Default)]
+pub struct ExecBudget {
+    /// Maximum bytecode instructions this invocation may retire.
+    pub fuel: Option<u64>,
+    /// Call-frame depth cap. Applied as `min` with the VM's own
+    /// `max_depth` — a budget can only tighten the recursion limit.
+    pub max_depth: Option<usize>,
+    /// Ceiling on tensor bytes produced by primitive calls.
+    pub max_tensor_bytes: Option<u64>,
+    /// Shared deadline / cancellation handle.
+    pub token: Option<CancelToken>,
+}
+
+impl ExecBudget {
+    /// The unlimited budget (same as `Default`).
+    pub fn unlimited() -> ExecBudget {
+        ExecBudget::default()
+    }
+
+    pub fn with_fuel(mut self, fuel: u64) -> ExecBudget {
+        self.fuel = Some(fuel);
+        self
+    }
+
+    pub fn with_max_depth(mut self, depth: usize) -> ExecBudget {
+        self.max_depth = Some(depth);
+        self
+    }
+
+    pub fn with_max_tensor_bytes(mut self, bytes: u64) -> ExecBudget {
+        self.max_tensor_bytes = Some(bytes);
+        self
+    }
+
+    pub fn with_token(mut self, token: CancelToken) -> ExecBudget {
+        self.token = Some(token);
+        self
+    }
+
+    /// Attach a fresh token expiring at `deadline`.
+    pub fn with_deadline(self, deadline: Instant) -> ExecBudget {
+        self.with_token(CancelToken::with_deadline(deadline))
+    }
+
+    /// True when no ceiling is set at all (the common case, which the
+    /// meter fast-paths).
+    pub fn is_unlimited(&self) -> bool {
+        self.fuel.is_none()
+            && self.max_depth.is_none()
+            && self.max_tensor_bytes.is_none()
+            && self.token.is_none()
+    }
+}
+
+/// The per-invocation checking state compiled from an [`ExecBudget`]: a
+/// local fuel countdown, the effective depth cap, a byte accumulator, and
+/// the deadline probe countdown. Lives on the interpreter's stack frame —
+/// no atomics, no sharing.
+pub(crate) struct BudgetMeter {
+    active: bool,
+    fuel_limit: u64,
+    fuel_left: u64,
+    depth_cap: usize,
+    bytes_cap: u64,
+    bytes_used: u64,
+    token: Option<CancelToken>,
+    probe_countdown: u64,
+}
+
+impl BudgetMeter {
+    pub(crate) fn new(budget: &ExecBudget, vm_max_depth: usize) -> BudgetMeter {
+        let fuel = budget.fuel.unwrap_or(u64::MAX);
+        BudgetMeter {
+            active: !budget.is_unlimited(),
+            fuel_limit: fuel,
+            fuel_left: fuel,
+            depth_cap: budget.max_depth.map_or(vm_max_depth, |d| d.min(vm_max_depth)),
+            bytes_cap: budget.max_tensor_bytes.unwrap_or(u64::MAX),
+            bytes_used: 0,
+            token: budget.token.clone(),
+            probe_countdown: DEADLINE_CHECK_PERIOD,
+        }
+    }
+
+    /// Per-instruction check: fuel, and a periodic token probe. One
+    /// branch when the budget is unlimited.
+    #[inline(always)]
+    pub(crate) fn step(&mut self) -> Result<(), Trap> {
+        if !self.active {
+            return Ok(());
+        }
+        if self.fuel_left == 0 {
+            return Err(Trap::FuelExhausted { limit: self.fuel_limit });
+        }
+        self.fuel_left -= 1;
+        self.probe_countdown -= 1;
+        if self.probe_countdown == 0 {
+            self.probe_countdown = DEADLINE_CHECK_PERIOD;
+            if let Some(t) = &self.token {
+                t.check()?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Depth check at frame push (replaces the VM's inline `max_depth`
+    /// test; the budget can only have tightened the cap).
+    #[inline(always)]
+    pub(crate) fn check_depth(&self, frames: usize) -> Result<(), Trap> {
+        if frames >= self.depth_cap {
+            return Err(Trap::DepthExceeded { limit: self.depth_cap });
+        }
+        Ok(())
+    }
+
+    /// Account tensor bytes a primitive call just produced. Free when no
+    /// byte ceiling is set.
+    #[inline(always)]
+    pub(crate) fn charge(&mut self, v: &crate::vm::value::Value) -> Result<(), Trap> {
+        if self.bytes_cap == u64::MAX {
+            return Ok(());
+        }
+        self.bytes_used = self.bytes_used.saturating_add(value_bytes(v));
+        if self.bytes_used > self.bytes_cap {
+            return Err(Trap::MemExceeded { limit: self.bytes_cap, used: self.bytes_used });
+        }
+        Ok(())
+    }
+
+    /// The token to thread into fused chunk loops (pool workers poll it).
+    pub(crate) fn token(&self) -> Option<&CancelToken> {
+        self.token.as_ref()
+    }
+}
+
+/// Tensor bytes referenced by a value: tensors report their buffer size,
+/// tuples sum their members, everything else is free.
+pub(crate) fn value_bytes(v: &crate::vm::value::Value) -> u64 {
+    use crate::vm::value::Value;
+    match v {
+        Value::Tensor(t) => t.nbytes() as u64,
+        Value::Tuple(items) => items.iter().map(value_bytes).sum(),
+        _ => 0,
+    }
+}
+
+/// Cumulative trap telemetry, in the idiom of `vm::plan::PlanStats`:
+/// never reset, safe to read from any thread, surfaced through
+/// `Executable::trap_stats` and the serve metrics snapshot.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TrapStats {
+    /// Invocations stopped by the instruction-fuel ceiling.
+    pub fuel_exhausted: u64,
+    /// Invocations stopped by the call-frame depth cap.
+    pub depth_trapped: u64,
+    /// Invocations stopped by the tensor-bytes ceiling.
+    pub mem_trapped: u64,
+    /// Invocations stopped by a deadline or explicit cancellation.
+    pub deadline_exceeded: u64,
+}
+
+impl TrapStats {
+    pub fn total(&self) -> u64 {
+        self.fuel_exhausted + self.depth_trapped + self.mem_trapped + self.deadline_exceeded
+    }
+
+    /// Component-wise sum (for aggregating over several executables).
+    pub fn plus(&self, o: &TrapStats) -> TrapStats {
+        TrapStats {
+            fuel_exhausted: self.fuel_exhausted + o.fuel_exhausted,
+            depth_trapped: self.depth_trapped + o.depth_trapped,
+            mem_trapped: self.mem_trapped + o.mem_trapped,
+            deadline_exceeded: self.deadline_exceeded + o.deadline_exceeded,
+        }
+    }
+}
+
+/// Lock-free cumulative trap accumulator owned by a `Vm` (relaxed atomics:
+/// monotone telemetry, not synchronization).
+#[derive(Debug, Default)]
+pub(crate) struct TrapCell {
+    fuel_exhausted: AtomicU64,
+    depth_trapped: AtomicU64,
+    mem_trapped: AtomicU64,
+    deadline_exceeded: AtomicU64,
+}
+
+impl TrapCell {
+    pub(crate) fn record(&self, t: &Trap) {
+        let c = match t {
+            Trap::FuelExhausted { .. } => &self.fuel_exhausted,
+            Trap::DepthExceeded { .. } => &self.depth_trapped,
+            Trap::MemExceeded { .. } => &self.mem_trapped,
+            Trap::DeadlineExceeded | Trap::Cancelled => &self.deadline_exceeded,
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn stats(&self) -> TrapStats {
+        TrapStats {
+            fuel_exhausted: self.fuel_exhausted.load(Ordering::Relaxed),
+            depth_trapped: self.depth_trapped.load(Ordering::Relaxed),
+            mem_trapped: self.mem_trapped.load(Ordering::Relaxed),
+            deadline_exceeded: self.deadline_exceeded.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_budget_is_unlimited_and_meter_is_inert() {
+        let b = ExecBudget::default();
+        assert!(b.is_unlimited());
+        let mut m = BudgetMeter::new(&b, 100);
+        for _ in 0..10_000 {
+            m.step().unwrap();
+        }
+        m.check_depth(99).unwrap();
+        assert!(m.check_depth(100).is_err(), "the VM's own cap still applies");
+    }
+
+    #[test]
+    fn fuel_runs_out_exactly() {
+        let b = ExecBudget::default().with_fuel(3);
+        let mut m = BudgetMeter::new(&b, 100);
+        m.step().unwrap();
+        m.step().unwrap();
+        m.step().unwrap();
+        match m.step() {
+            Err(Trap::FuelExhausted { limit: 3 }) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn budget_depth_only_tightens() {
+        let tight = BudgetMeter::new(&ExecBudget::default().with_max_depth(5), 100);
+        assert!(tight.check_depth(5).is_err());
+        let loose = BudgetMeter::new(&ExecBudget::default().with_max_depth(500), 100);
+        assert!(loose.check_depth(100).is_err(), "vm cap wins when tighter");
+    }
+
+    #[test]
+    fn cancel_and_deadline_fire() {
+        let t = CancelToken::new();
+        assert!(t.check().is_ok());
+        t.cancel();
+        assert_eq!(t.check(), Err(Trap::Cancelled));
+        let t = CancelToken::with_deadline(Instant::now() - Duration::from_millis(1));
+        assert_eq!(t.check(), Err(Trap::DeadlineExceeded));
+        assert!(t.should_stop());
+        // Explicit revocation outranks deadline expiry in the report.
+        t.cancel();
+        assert_eq!(t.check(), Err(Trap::Cancelled));
+    }
+
+    #[test]
+    fn byte_charging_trips_the_ceiling() {
+        use crate::tensor::Tensor;
+        use crate::vm::value::Value;
+        let v = Value::Tensor(Tensor::from_f64(&[0.0; 4])); // 32 bytes
+        assert_eq!(value_bytes(&v), 32);
+        let tup = Value::tuple(vec![v.clone(), v.clone()]);
+        assert_eq!(value_bytes(&tup), 64);
+        let mut m = BudgetMeter::new(&ExecBudget::default().with_max_tensor_bytes(40), 100);
+        m.charge(&v).unwrap();
+        match m.charge(&v) {
+            Err(Trap::MemExceeded { limit: 40, used: 64 }) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn trap_cell_accumulates_by_kind() {
+        let c = TrapCell::default();
+        c.record(&Trap::FuelExhausted { limit: 1 });
+        c.record(&Trap::DeadlineExceeded);
+        c.record(&Trap::Cancelled);
+        let s = c.stats();
+        assert_eq!(s.fuel_exhausted, 1);
+        assert_eq!(s.deadline_exceeded, 2);
+        assert_eq!(s.total(), 3);
+        assert_eq!(s.plus(&s).total(), 6);
+    }
+
+    #[test]
+    fn trap_messages_are_stable() {
+        assert!(Trap::DepthExceeded { limit: 7 }.to_string().contains("recursion limit"));
+        assert!(Trap::FuelExhausted { limit: 9 }.to_string().contains("fuel"));
+        assert!(Trap::DeadlineExceeded.to_string().contains("deadline"));
+        assert!(Trap::MemExceeded { limit: 1, used: 2 }.to_string().contains("budget"));
+    }
+}

@@ -13,6 +13,7 @@
 //! takes no locks at all — `&Vm` calls are safe from any number of threads
 //! concurrently.
 
+use super::budget::{BudgetMeter, CancelToken, ExecBudget, Trap, TrapCell, TrapStats};
 use super::compile::{CodeObject, Instr, Program, Reg};
 use super::plan::{PlanCache, PlanStats, NO_SITE};
 use super::prims::eval_prim_inplace;
@@ -58,6 +59,15 @@ pub struct ExecStats {
     /// Dispatches at a site that had plans, none matching the live
     /// shapes (shape-polymorphic call site).
     pub plan_shape_misses: u64,
+    /// Invocations trapped by the instruction-fuel ceiling of their
+    /// [`ExecBudget`].
+    pub fuel_exhausted: u64,
+    /// Invocations trapped by the call-frame depth cap (budget or VM).
+    pub depth_trapped: u64,
+    /// Invocations trapped by the tensor-bytes ceiling.
+    pub mem_trapped: u64,
+    /// Invocations trapped by a deadline or explicit cancellation.
+    pub deadline_exceeded: u64,
 }
 
 /// Lock-free statistics accumulator: per-call counters are folded in with
@@ -77,6 +87,10 @@ struct StatsCell {
     plans_compiled: AtomicU64,
     plan_hits: AtomicU64,
     plan_shape_misses: AtomicU64,
+    fuel_exhausted: AtomicU64,
+    depth_trapped: AtomicU64,
+    mem_trapped: AtomicU64,
+    deadline_exceeded: AtomicU64,
 }
 
 impl StatsCell {
@@ -92,6 +106,10 @@ impl StatsCell {
         self.plans_compiled.fetch_add(s.plans_compiled, Ordering::Relaxed);
         self.plan_hits.fetch_add(s.plan_hits, Ordering::Relaxed);
         self.plan_shape_misses.fetch_add(s.plan_shape_misses, Ordering::Relaxed);
+        self.fuel_exhausted.fetch_add(s.fuel_exhausted, Ordering::Relaxed);
+        self.depth_trapped.fetch_add(s.depth_trapped, Ordering::Relaxed);
+        self.mem_trapped.fetch_add(s.mem_trapped, Ordering::Relaxed);
+        self.deadline_exceeded.fetch_add(s.deadline_exceeded, Ordering::Relaxed);
     }
 
     fn take(&self) -> ExecStats {
@@ -107,6 +125,10 @@ impl StatsCell {
             plans_compiled: self.plans_compiled.swap(0, Ordering::Relaxed),
             plan_hits: self.plan_hits.swap(0, Ordering::Relaxed),
             plan_shape_misses: self.plan_shape_misses.swap(0, Ordering::Relaxed),
+            fuel_exhausted: self.fuel_exhausted.swap(0, Ordering::Relaxed),
+            depth_trapped: self.depth_trapped.swap(0, Ordering::Relaxed),
+            mem_trapped: self.mem_trapped.swap(0, Ordering::Relaxed),
+            deadline_exceeded: self.deadline_exceeded.swap(0, Ordering::Relaxed),
         }
     }
 }
@@ -122,6 +144,9 @@ pub struct Vm {
     /// The shape-specialization tier: per-site, shape-keyed kernel plans
     /// shared (lock-free) by every thread calling through this `Vm`.
     plans: PlanCache,
+    /// Cumulative budget-trap counters (never reset; see
+    /// [`Vm::trap_stats`]).
+    traps: TrapCell,
 }
 
 /// Per-invocation mutable state: the frame stack and this call's statistics.
@@ -160,11 +185,13 @@ fn dispatch_prim(
     stats: &mut ExecStats,
     plans: &PlanCache,
     site: u32,
+    token: Option<&CancelToken>,
 ) -> Result<Value> {
+    crate::faultinject::error_at(crate::faultinject::Site::PrimEval)?;
     let conv_before = crate::tensor::conversion_count();
     let result = if p == Prim::FusedMap {
         stats.fused_ops += 1;
-        super::fused::eval_fused_at(args, plans.site(site).map(|s| (plans, s)), stats).map(
+        super::fused::eval_fused_at(args, plans.site(site).map(|s| (plans, s)), stats, token).map(
             |(v, saved)| {
                 stats.allocs_saved += saved;
                 v
@@ -206,6 +233,7 @@ impl Vm {
             max_depth: 100_000,
             stats: StatsCell::default(),
             plans,
+            traps: TrapCell::default(),
         }
     }
 
@@ -217,6 +245,12 @@ impl Vm {
     /// Cumulative shape-specialization counters (never reset).
     pub fn plan_stats(&self) -> PlanStats {
         self.plans.stats()
+    }
+
+    /// Cumulative budget-trap counters (never reset): invocations stopped
+    /// by fuel, depth, memory, or deadline/cancellation ceilings.
+    pub fn trap_stats(&self) -> TrapStats {
+        self.traps.stats()
     }
 
     /// Force the shape-specialization tier on or off for this `Vm`
@@ -246,8 +280,13 @@ impl Vm {
 
     /// Call a compiled graph by id.
     pub fn call_graph(&self, g: GraphId, args: Vec<Value>) -> Result<Value> {
+        self.call_graph_with(g, args, &ExecBudget::default())
+    }
+
+    /// Call a compiled graph by id under a resource budget.
+    pub fn call_graph_with(&self, g: GraphId, args: Vec<Value>, budget: &ExecBudget) -> Result<Value> {
         let f = self.closure_for(g)?;
-        self.call_value(&f, args)
+        self.call_value_with(&f, args, budget)
     }
 
     /// Call any function value (closure, primitive, partial application).
@@ -255,13 +294,34 @@ impl Vm {
     /// [`CallCtx`]; the call's statistics are folded into the shared
     /// accumulator with relaxed atomic adds on completion.
     pub fn call_value(&self, f: &Value, args: Vec<Value>) -> Result<Value> {
+        self.call_value_with(f, args, &ExecBudget::default())
+    }
+
+    /// [`Vm::call_value`] under a resource budget: exceeding any ceiling
+    /// unwinds with a structured [`Trap`] error (recoverable via
+    /// `anyhow::Error::downcast_ref::<Trap>`), which is also recorded in
+    /// both the resettable [`ExecStats`] counters and the cumulative
+    /// [`Vm::trap_stats`].
+    pub fn call_value_with(&self, f: &Value, args: Vec<Value>, budget: &ExecBudget) -> Result<Value> {
         let mut ctx = CallCtx::new();
-        let result = self.run(&mut ctx, f, args);
+        let result = self.run(&mut ctx, f, args, budget);
+        if let Err(e) = &result {
+            if let Some(trap) = e.downcast_ref::<Trap>() {
+                match trap {
+                    Trap::FuelExhausted { .. } => ctx.stats.fuel_exhausted += 1,
+                    Trap::DepthExceeded { .. } => ctx.stats.depth_trapped += 1,
+                    Trap::MemExceeded { .. } => ctx.stats.mem_trapped += 1,
+                    Trap::DeadlineExceeded | Trap::Cancelled => ctx.stats.deadline_exceeded += 1,
+                }
+                self.traps.record(trap);
+            }
+        }
         self.stats.merge(&ctx.stats);
         result
     }
 
-    fn run(&self, ctx: &mut CallCtx, f: &Value, mut args: Vec<Value>) -> Result<Value> {
+    fn run(&self, ctx: &mut CallCtx, f: &Value, mut args: Vec<Value>, budget: &ExecBudget) -> Result<Value> {
+        let mut meter = BudgetMeter::new(budget, self.max_depth);
         let CallCtx { stack, stats } = ctx;
         // Resolve non-closure callables without a frame.
         let mut func = f.clone();
@@ -269,7 +329,9 @@ impl Vm {
             match func {
                 Value::Prim(p) => {
                     stats.prim_calls += 1;
-                    return dispatch_prim(p, &mut args, stats, &self.plans, NO_SITE);
+                    let v = dispatch_prim(p, &mut args, stats, &self.plans, NO_SITE, meter.token())?;
+                    meter.charge(&v)?;
+                    return Ok(v);
                 }
                 Value::Partial(pa) => {
                     let mut combined = pa.bound.clone();
@@ -293,6 +355,7 @@ impl Vm {
             let instr = &frame.code.instrs[frame.pc];
             frame.pc += 1;
             stats.instrs += 1;
+            meter.step()?;
             match instr {
                 Instr::Const { dst, idx } => {
                     frame.regs[*dst as usize] = self.program.consts[*idx].clone();
@@ -323,7 +386,7 @@ impl Vm {
                                 frame.regs[r as usize].clone()
                             };
                         }
-                        dispatch_prim(*prim, &mut buf[..args.len()], stats, &self.plans, *site)
+                        dispatch_prim(*prim, &mut buf[..args.len()], stats, &self.plans, *site, meter.token())
                     } else {
                         let mut argv: Vec<Value> = args
                             .iter()
@@ -336,9 +399,16 @@ impl Vm {
                                 }
                             })
                             .collect();
-                        dispatch_prim(*prim, &mut argv, stats, &self.plans, *site)
+                        dispatch_prim(*prim, &mut argv, stats, &self.plans, *site, meter.token())
                     }
-                    .map_err(|e| anyhow!("in `{}`: {e}", frame.code.name))?;
+                    // Wrap with the function name for diagnostics — but pass
+                    // budget traps through untouched so callers can still
+                    // downcast them to `Trap`.
+                    .map_err(|e| match e.downcast_ref::<Trap>() {
+                        Some(_) => e,
+                        None => anyhow!("in `{}`: {e}", frame.code.name),
+                    })?;
+                    meter.charge(&v)?;
                     frame.regs[*dst as usize] = v;
                 }
                 Instr::XlaCall { dsts, exec, args } => {
@@ -373,7 +443,8 @@ impl Vm {
                         match callee {
                             Value::Prim(p) => {
                                 stats.prim_calls += 1;
-                                let v = dispatch_prim(p, &mut argv, stats, &self.plans, NO_SITE)?;
+                                let v = dispatch_prim(p, &mut argv, stats, &self.plans, NO_SITE, meter.token())?;
+                                meter.charge(&v)?;
                                 let frame = stack.last_mut().unwrap();
                                 frame.regs[dst as usize] = v;
                                 break;
@@ -385,9 +456,7 @@ impl Vm {
                                 callee = pa.func.clone();
                             }
                             Value::Closure(c) => {
-                                if stack.len() >= self.max_depth {
-                                    bail!("recursion limit exceeded ({} frames)", self.max_depth);
-                                }
+                                meter.check_depth(stack.len())?;
                                 let new = Frame::new(c.code.clone(), &c.captures, argv, dst)?;
                                 stack.push(new);
                                 break;
@@ -412,7 +481,8 @@ impl Vm {
                         match callee {
                             Value::Prim(p) => {
                                 stats.prim_calls += 1;
-                                let v = dispatch_prim(p, &mut argv, stats, &self.plans, NO_SITE)?;
+                                let v = dispatch_prim(p, &mut argv, stats, &self.plans, NO_SITE, meter.token())?;
+                                meter.charge(&v)?;
                                 stack.pop();
                                 match stack.last_mut() {
                                     None => return Ok(v),
@@ -718,6 +788,113 @@ def main():
         let off = vm.take_stats();
         assert_eq!(off.plan_hits + off.plans_compiled + off.plan_shape_misses, 0);
         assert_eq!(vm.plan_stats(), cum);
+    }
+
+    /// Compile one entry and return the (vm, graph) pair for budget tests.
+    fn vm_for(src: &str, entry: &str) -> (Vm, GraphId) {
+        let mut m = Module::new();
+        let graphs = compile_source(&mut m, src).unwrap();
+        let g = graphs[entry];
+        let program = compile_program(&m, g).unwrap();
+        (Vm::new(program), g)
+    }
+
+    #[test]
+    fn budget_fuel_traps_runaway_loop() {
+        let (vm, g) = vm_for(
+            "def f(n):\n    i = 0\n    while i < n:\n        i = i + 1\n    return i\n",
+            "f",
+        );
+        let budget = ExecBudget::default().with_fuel(10_000);
+        let e = vm.call_graph_with(g, vec![Value::I64(100_000_000)], &budget).unwrap_err();
+        match e.downcast_ref::<Trap>() {
+            Some(Trap::FuelExhausted { limit: 10_000 }) => {}
+            other => panic!("{other:?}: {e}"),
+        }
+        let stats = vm.take_stats();
+        assert_eq!(stats.fuel_exhausted, 1);
+        assert_eq!(vm.trap_stats().fuel_exhausted, 1);
+        // The same call without a budget still succeeds (smaller n so the
+        // test stays fast) and the cumulative trap counters don't move.
+        vm.call_graph(g, vec![Value::I64(10)]).unwrap();
+        assert_eq!(vm.trap_stats().fuel_exhausted, 1);
+    }
+
+    #[test]
+    fn budget_deadline_cancels_unbounded_loop() {
+        // `x + 1.0` never overflows (f64 saturates to inf), so this loop is
+        // genuinely unbounded — only the deadline can stop it.
+        let (vm, g) = vm_for(
+            "def f(x):\n    while x > 0.0:\n        x = x + 1.0\n    return x\n",
+            "f",
+        );
+        let budget = ExecBudget::default()
+            .with_token(CancelToken::with_timeout(std::time::Duration::from_millis(30)));
+        let e = vm.call_graph_with(g, vec![Value::F64(1.0)], &budget).unwrap_err();
+        match e.downcast_ref::<Trap>() {
+            Some(Trap::DeadlineExceeded) => {}
+            other => panic!("{other:?}: {e}"),
+        }
+        assert_eq!(vm.trap_stats().deadline_exceeded, 1);
+        assert_eq!(vm.take_stats().deadline_exceeded, 1);
+    }
+
+    #[test]
+    fn budget_cancel_token_revokes_from_another_thread() {
+        let (vm, g) = vm_for(
+            "def f(x):\n    while x > 0.0:\n        x = x + 1.0\n    return x\n",
+            "f",
+        );
+        let token = CancelToken::new();
+        let t2 = token.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            t2.cancel();
+        });
+        let budget = ExecBudget::default().with_token(token);
+        let e = vm.call_graph_with(g, vec![Value::F64(1.0)], &budget).unwrap_err();
+        h.join().unwrap();
+        match e.downcast_ref::<Trap>() {
+            Some(Trap::Cancelled) => {}
+            other => panic!("{other:?}: {e}"),
+        }
+        assert_eq!(vm.trap_stats().deadline_exceeded, 1);
+    }
+
+    #[test]
+    fn budget_mem_ceiling_traps_allocation() {
+        let (vm, g) = vm_for("def f(x):\n    return x + x\n", "f");
+        let x = Value::Tensor(
+            crate::tensor::Tensor::from_f64_shaped(vec![1.0; 64], vec![64]).unwrap(),
+        );
+        // 64 f64s = 512 bytes out; a 100-byte ceiling must trap…
+        let tight = ExecBudget::default().with_max_tensor_bytes(100);
+        let e = vm.call_graph_with(g, vec![x.clone()], &tight).unwrap_err();
+        match e.downcast_ref::<Trap>() {
+            Some(Trap::MemExceeded { limit: 100, .. }) => {}
+            other => panic!("{other:?}: {e}"),
+        }
+        assert_eq!(vm.trap_stats().mem_trapped, 1);
+        // …while a roomy one passes.
+        let roomy = ExecBudget::default().with_max_tensor_bytes(1 << 20);
+        vm.call_graph_with(g, vec![x], &roomy).unwrap();
+        assert_eq!(vm.trap_stats().mem_trapped, 1);
+    }
+
+    #[test]
+    fn budget_depth_cap_tightens_vm_limit() {
+        let (vm, g) = vm_for("def f(n):\n    return 0 if n <= 0 else 1 + f(n - 1)\n", "f");
+        let budget = ExecBudget::default().with_max_depth(50);
+        let e = vm.call_graph_with(g, vec![Value::I64(1000)], &budget).unwrap_err();
+        match e.downcast_ref::<Trap>() {
+            Some(Trap::DepthExceeded { limit: 50 }) => {}
+            other => panic!("{other:?}: {e}"),
+        }
+        assert_eq!(vm.trap_stats().depth_trapped, 1);
+        assert_eq!(vm.take_stats().depth_trapped, 1);
+        // Shallow recursion under the same budget completes normally.
+        let r = vm.call_graph_with(g, vec![Value::I64(10)], &budget).unwrap();
+        assert!(matches!(r, Value::I64(10)));
     }
 
     #[test]

@@ -48,6 +48,7 @@
 //! loop with the cached geometry (or straight to replay, when simulation
 //! declined for those shapes).
 
+use super::budget::CancelToken;
 use super::plan::{
     fused_leaf_keys, fused_leaf_match, FusedPlan, KernelPlan, LeafAccess, PlanCache, Site,
     TypedFused,
@@ -110,7 +111,7 @@ pub fn un_op_of(p: Prim) -> Option<UnOp> {
 /// goes through [`eval_fused_at`] so repeat shapes skip the simulation.
 pub fn eval_fused(args: &mut [Value]) -> Result<(Value, u64)> {
     let mut sink = ExecStats::default();
-    eval_fused_at(args, None, &mut sink)
+    eval_fused_at(args, None, &mut sink, None)
 }
 
 /// Evaluate a `fused_map` application, consulting (and feeding) the shape
@@ -122,6 +123,7 @@ pub(crate) fn eval_fused_at(
     args: &mut [Value],
     site: Option<(&PlanCache, &Site)>,
     stats: &mut ExecStats,
+    token: Option<&CancelToken>,
 ) -> Result<(Value, u64)> {
     let expr = match &args[0] {
         Value::Fused(e) => e.clone(),
@@ -154,8 +156,12 @@ pub(crate) fn eval_fused_at(
             match plan {
                 KernelPlan::Fused(FusedPlan::Typed(tp)) => {
                     return match tp.dtype {
-                        DType::F64 => run_typed::<f64>(&expr, leaves, tp.map_shape.to_vec(), Some(tp)),
-                        _ => run_typed::<f32>(&expr, leaves, tp.map_shape.to_vec(), Some(tp)),
+                        DType::F64 => {
+                            run_typed::<f64>(&expr, leaves, tp.map_shape.to_vec(), Some(tp), token)
+                        }
+                        _ => {
+                            run_typed::<f32>(&expr, leaves, tp.map_shape.to_vec(), Some(tp), token)
+                        }
                     };
                 }
                 KernelPlan::Fused(FusedPlan::Replay) => return Ok((replay(&expr, leaves)?, 0)),
@@ -174,8 +180,10 @@ pub(crate) fn eval_fused_at(
                             access: super::plan::build_access(leaves, &map_shape),
                         });
                         let r = match dt {
-                            DType::F64 => run_typed::<f64>(&expr, leaves, map_shape, Some(&tp))?,
-                            _ => run_typed::<f32>(&expr, leaves, map_shape, Some(&tp))?,
+                            DType::F64 => {
+                                run_typed::<f64>(&expr, leaves, map_shape, Some(&tp), token)?
+                            }
+                            _ => run_typed::<f32>(&expr, leaves, map_shape, Some(&tp), token)?,
                         };
                         (KernelPlan::Fused(FusedPlan::Typed(tp)), r)
                     }
@@ -198,8 +206,8 @@ pub(crate) fn eval_fused_at(
     }
 
     match simulate(&expr, leaves) {
-        Some((out_shape, DType::F64)) => run_typed::<f64>(&expr, leaves, out_shape, None),
-        Some((out_shape, DType::F32)) => run_typed::<f32>(&expr, leaves, out_shape, None),
+        Some((out_shape, DType::F64)) => run_typed::<f64>(&expr, leaves, out_shape, None, token),
+        Some((out_shape, DType::F32)) => run_typed::<f32>(&expr, leaves, out_shape, None, token),
         _ => Ok((replay(&expr, leaves)?, 0)),
     }
 }
@@ -363,15 +371,16 @@ fn run_typed<T: Elem + Send + Sync>(
     leaves: &mut [Value],
     map_shape: Vec<usize>,
     plan: Option<&TypedFused>,
+    token: Option<&CancelToken>,
 ) -> Result<(Value, u64)> {
     match expr.reduce {
-        None => run_map::<T>(expr, leaves, map_shape, plan),
+        None => run_map::<T>(expr, leaves, map_shape, plan, token),
         // `sum_tail` on rank ≤ 1 is the identity (matches `ops::sum_tail`):
         // run the plain map loop.
         Some(FusedReduce::SumTail) if map_shape.len() <= 1 => {
-            run_map::<T>(expr, leaves, map_shape, plan)
+            run_map::<T>(expr, leaves, map_shape, plan, token)
         }
-        Some(r) => run_reduced::<T>(expr, leaves, map_shape, plan, r),
+        Some(r) => run_reduced::<T>(expr, leaves, map_shape, plan, r, token),
     }
 }
 
@@ -380,6 +389,7 @@ fn run_map<T: Elem + Send + Sync>(
     leaves: &mut [Value],
     out_shape: Vec<usize>,
     plan: Option<&TypedFused>,
+    token: Option<&CancelToken>,
 ) -> Result<(Value, u64)> {
     let numel: usize = out_shape.iter().product();
 
@@ -469,9 +479,11 @@ fn run_map<T: Elem + Send + Sync>(
         }
     };
     if numel < pool::FUSED_PAR_MIN_ELEMS {
+        // Small spaces finish in microseconds; a budget check here would
+        // cost more than the loop.
         exec_chunk(&mut out, 0);
     } else {
-        pool::for_chunks_mut(&mut out, pool::FUSED_CHUNK_ELEMS, exec_chunk);
+        pool::for_chunks_mut_cancellable(&mut out, pool::FUSED_CHUNK_ELEMS, token, exec_chunk)?;
     }
 
     let saved = expr.interior_allocs() + u64::from(reused.is_some());
@@ -493,6 +505,7 @@ fn run_reduced<T: Elem + Send + Sync>(
     map_shape: Vec<usize>,
     plan: Option<&TypedFused>,
     reduce: FusedReduce,
+    token: Option<&CancelToken>,
 ) -> Result<(Value, u64)> {
     let map_numel: usize = map_shape.iter().product();
     let accessors: Vec<Leaf<T>> = leaves
@@ -544,7 +557,10 @@ fn run_reduced<T: Elem + Send + Sync>(
     // split, and chunk boundaries derive from shape alone (cells per chunk
     // scaled down by the reduction length so a chunk stays ~the same work
     // as an elementwise chunk), so results are identical at any pool size.
-    let fill = |out: &mut [T], red_len: usize, cell: &(dyn Fn(usize) -> f64 + Sync)| {
+    let fill = |out: &mut [T],
+                red_len: usize,
+                cell: &(dyn Fn(usize) -> f64 + Sync)|
+     -> Result<(), super::budget::Trap> {
         let body = |piece: &mut [T], base: usize| {
             for (j, o) in piece.iter_mut().enumerate() {
                 *o = T::from_f64(cell(base + j));
@@ -552,9 +568,10 @@ fn run_reduced<T: Elem + Send + Sync>(
         };
         if map_numel < pool::FUSED_PAR_MIN_ELEMS || out.len() < 2 {
             body(out, 0);
+            Ok(())
         } else {
             let chunk = (pool::FUSED_CHUNK_ELEMS / red_len.max(1)).max(1);
-            pool::for_chunks_mut(out, chunk, body);
+            pool::for_chunks_mut_cancellable(out, chunk, token, body)
         }
     };
 
@@ -562,8 +579,15 @@ fn run_reduced<T: Elem + Send + Sync>(
     let t = match reduce {
         FusedReduce::Sum => {
             // Strictly sequential, ascending k — `reduce_sum_all`'s order.
+            // Long accumulations still honor the token, checking once per
+            // chunk-sized stretch.
             let mut acc = 0.0f64;
             for k in 0..map_numel {
+                if k % pool::FUSED_CHUNK_ELEMS == 0 {
+                    if let Some(tok) = token {
+                        tok.check()?;
+                    }
+                }
                 acc += eval_at(k).to_f64();
             }
             Tensor::new(Vec::new(), T::buffer(vec![T::from_f64(acc)]))
@@ -579,7 +603,7 @@ fn run_reduced<T: Elem + Send + Sync>(
                     acc += eval_at(o * inner + i).to_f64();
                 }
                 acc
-            });
+            })?;
             Tensor::new(vec![b], T::buffer(out))
         }
         FusedReduce::SumAxis(ax) => {
@@ -598,7 +622,7 @@ fn run_reduced<T: Elem + Send + Sync>(
                     acc += eval_at((o * n_r + k) * inner + i).to_f64();
                 }
                 acc
-            });
+            })?;
             Tensor::new(out_shape, T::buffer(out))
         }
     }

@@ -7,6 +7,7 @@
 //! replaces straight-line tensor regions with `XlaCall` instructions that
 //! dispatch into compiled XLA executables — the paper's TVM role.
 
+pub mod budget;
 pub mod compile;
 pub mod exec;
 pub mod fused;
@@ -15,6 +16,7 @@ pub mod pool;
 pub mod prims;
 pub mod value;
 
+pub use budget::{CancelToken, ExecBudget, Trap, TrapStats};
 pub use compile::{compile_program, CodeObject, Instr, Program, Reg};
 pub use exec::{ExecStats, SegmentRunner, Vm};
 pub use plan::{PlanCache, PlanStats, NO_SITE};

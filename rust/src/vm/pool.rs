@@ -51,6 +51,8 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
+use super::budget::{CancelToken, Trap};
+
 /// Elements per fused-loop chunk (and the unit the matmul/serve splits are
 /// scaled against). Boundaries are `k * FUSED_CHUNK_ELEMS`, a pure function
 /// of the output element count.
@@ -260,7 +262,10 @@ impl Pool {
                 };
                 let latch = Arc::clone(&latch);
                 q.push_back(Box::new(move || {
-                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(t));
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        crate::faultinject::panic_or_stall_at(crate::faultinject::Site::PoolTask);
+                        t()
+                    }));
                     latch.done(r.is_err());
                 }));
             }
@@ -302,6 +307,35 @@ where
         .map(|(i, piece)| Box::new(move || fr(piece, i * chunk)) as Box<dyn FnOnce() + Send + '_>)
         .collect();
     pool().scope_run(tasks);
+}
+
+/// [`for_chunks_mut`] with cooperative cancellation: before running and
+/// between chunks each lane consults `token`, and chunks whose token has
+/// already fired are skipped (their slice is left untouched — the caller
+/// discards the output on `Err`). Chunk boundaries are identical to the
+/// uncancelled variant, so a run that completes without tripping the token
+/// is bit-identical to [`for_chunks_mut`].
+pub fn for_chunks_mut_cancellable<T, F>(
+    data: &mut [T],
+    chunk: usize,
+    token: Option<&CancelToken>,
+    f: F,
+) -> Result<(), Trap>
+where
+    T: Send,
+    F: Fn(&mut [T], usize) + Sync,
+{
+    let Some(tok) = token else {
+        for_chunks_mut(data, chunk, f);
+        return Ok(());
+    };
+    tok.check()?;
+    for_chunks_mut(data, chunk, |piece, base| {
+        if !tok.should_stop() {
+            f(piece, base);
+        }
+    });
+    tok.check()
 }
 
 /// Pool-size mutations are process-global; in-crate tests that resize the
@@ -385,6 +419,40 @@ mod tests {
         assert!(r.is_err(), "panic must propagate to the caller");
         // All non-panicking tasks still settled before the propagation.
         assert_eq!(survivors.load(Ordering::Relaxed), 7);
+        set_intra_op_threads(prev);
+    }
+
+    #[test]
+    fn cancellable_chunks_match_plain_and_trip_on_cancel() {
+        let _g = lock();
+        let prev = intra_op_threads();
+        set_intra_op_threads(4);
+        // Without a token (or with a live one) results match for_chunks_mut.
+        let mut a = vec![0u32; 5_000];
+        for_chunks_mut_cancellable(&mut a, 512, None, |piece, base| {
+            for (j, cell) in piece.iter_mut().enumerate() {
+                *cell = (base + j) as u32;
+            }
+        })
+        .unwrap();
+        let token = CancelToken::new();
+        let mut b = vec![0u32; 5_000];
+        for_chunks_mut_cancellable(&mut b, 512, Some(&token), |piece, base| {
+            for (j, cell) in piece.iter_mut().enumerate() {
+                *cell = (base + j) as u32;
+            }
+        })
+        .unwrap();
+        assert_eq!(a, b);
+        // A pre-cancelled token refuses before any chunk runs.
+        token.cancel();
+        let mut c = vec![0u32; 5_000];
+        let e = for_chunks_mut_cancellable(&mut c, 512, Some(&token), |_, _| {
+            panic!("must not run after cancellation");
+        })
+        .unwrap_err();
+        assert!(matches!(e, Trap::Cancelled));
+        assert!(c.iter().all(|&v| v == 0));
         set_intra_op_threads(prev);
     }
 

@@ -1,0 +1,329 @@
+//! Robustness acceptance tests: deadlines end-to-end, plus (under
+//! `--features chaos`) deterministic fault-injection storms.
+//!
+//! The contract under test: **every accepted request terminates with either
+//! a bit-identical result or a structured [`ServeError`]** — no hang, no
+//! panic escape, no poisoned lock — whatever goes wrong underneath: a
+//! runaway program, an injected primitive failure, a pool-task panic, a
+//! delayed queue pop, or a flaky disk.
+//!
+//! The storm tests are compiled only with `--features chaos` (the library's
+//! injection hooks are no-ops otherwise) and run under `MYIA_FAULT` seeds
+//! pinned by the CI chaos job. Faults are scoped: oracles are always
+//! computed in a cleared window, so a surviving `Ok` can be held to exact
+//! bit equality.
+
+use myia::prelude::*;
+use myia::serve::error::ServeError;
+use myia::types::AType;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Fault plans are process-global state; every test in this binary holds
+/// this lock so plans never leak across concurrently running tests.
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+/// Take the fault lock and neutralize any ambient `MYIA_FAULT` plan: the
+/// env plan installs itself lazily at the first instrumented site, so touch
+/// one site first, then clear. Each test then opts into its own plan.
+fn fault_quiet() -> MutexGuard<'static, ()> {
+    let guard = FAULT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _ = myia::faultinject::fire(myia::faultinject::Site::PrimEval);
+    myia::faultinject::clear();
+    guard
+}
+
+/// Terminates for `x <= 0` (returning `x * 2 - 1`), spins forever for
+/// `x > 0`: the canonical runaway request.
+const SPIN_OR_SERVE: &str = "def main(x):\n\
+                             \x20   while x > 0.0:\n\
+                             \x20       x = x + 1.0\n\
+                             \x20   return x * 2.0 - 1.0\n";
+
+/// The headline acceptance case: a request that would never terminate is
+/// served with a 50 ms deadline and comes back `DeadlineExceeded`, while
+/// well-behaved requests on the same server keep returning results
+/// bit-identical to the sequential oracle. The runaway must not pin a
+/// worker forever, poison a lock, or distort any neighbor's answer.
+#[test]
+fn deadline_cuts_runaway_request_while_neighbors_serve() {
+    let _g = fault_quiet();
+    let engine = Engine::from_source(SPIN_OR_SERVE).unwrap();
+    let oracle = engine.trace("main").unwrap().compile().unwrap();
+    // Data-dependent control flow cannot be vmapped, so build the server
+    // from two unbatched artifacts: any multi-request batch fails on the
+    // stacked input and degrades to the per-example fallback, which is
+    // exactly the layer the deadline budget must protect.
+    let fallback = engine.trace("main").unwrap().compile().unwrap();
+    let batched = engine.trace("main").unwrap().compile().unwrap();
+    let cfg = ServerConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(2),
+        queue_capacity: 32,
+        workers: 2,
+        full_policy: FullPolicy::Block,
+    };
+    let server = Arc::new(Server::new(batched, fallback, vec![], cfg).unwrap());
+
+    let started = Instant::now();
+    let (goods, runaway) = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..6)
+            .map(|c| {
+                let server = server.clone();
+                s.spawn(move || {
+                    (0..5)
+                        .map(|i| {
+                            let x = -0.3 * (c * 5 + i + 1) as f64;
+                            (x, server.submit(vec![Value::F64(x)]))
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        let runaway = {
+            let server = server.clone();
+            s.spawn(move || {
+                server.submit_with(
+                    vec![Value::F64(1.0)],
+                    SubmitOpts::timeout(Duration::from_millis(50)),
+                )
+            })
+        };
+        let goods: Vec<Vec<(f64, Result<Value, ServeError>)>> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        (goods, runaway.join().unwrap())
+    });
+
+    match runaway {
+        Err(ServeError::DeadlineExceeded) => {}
+        other => panic!("runaway request must hit its deadline, got {other:?}"),
+    }
+    assert!(
+        started.elapsed() < Duration::from_secs(30),
+        "the runaway must be cut promptly, not ride a worker forever"
+    );
+    for (x, r) in goods.iter().flatten() {
+        let got = r.as_ref().unwrap_or_else(|e| panic!("neighbor x = {x} failed: {e}"));
+        match (got, oracle.call(vec![Value::F64(*x)]).unwrap()) {
+            (Value::F64(a), Value::F64(b)) => {
+                assert_eq!(a.to_bits(), b.to_bits(), "x = {x}")
+            }
+            (got, want) => panic!("x = {x}: {got} vs {want}"),
+        }
+    }
+    let m = server.metrics();
+    assert_eq!(m.completed, 30, "every well-behaved request must be served");
+    assert!(m.deadline_expired >= 1, "the runaway must be counted:\n{m}");
+    server.shutdown();
+}
+
+/// A deadline that has already passed is refused at admission — counted,
+/// answered `DeadlineExceeded`, and never enqueued or executed — while an
+/// unexpired deadline on the same server serves normally.
+#[test]
+fn expired_deadline_refused_at_admission() {
+    let _g = fault_quiet();
+    let engine = Engine::from_source("def main(x):\n    return x * x + 1.0\n").unwrap();
+    let server = Server::for_entry(
+        &engine,
+        "main",
+        vec![],
+        Some(vec![AType::F64]),
+        ServerConfig::default(),
+        |f| f,
+    )
+    .unwrap();
+    let past = Instant::now()
+        .checked_sub(Duration::from_millis(5))
+        .unwrap_or_else(Instant::now);
+    match server.submit_with(vec![Value::F64(2.0)], SubmitOpts::deadline(past)) {
+        Err(ServeError::DeadlineExceeded) => {}
+        other => panic!("{other:?}"),
+    }
+    let m = server.metrics();
+    assert_eq!(m.deadline_expired, 1);
+    assert_eq!(m.completed, 0, "an expired request must never execute");
+
+    match server.submit_with(vec![Value::F64(2.0)], SubmitOpts::timeout(Duration::from_secs(10)))
+    {
+        Ok(Value::F64(v)) => assert_eq!(v, 5.0),
+        other => panic!("{other:?}"),
+    }
+    assert_eq!(server.metrics().completed, 1);
+}
+
+#[cfg(feature = "chaos")]
+mod storm {
+    use super::*;
+    use myia::faultinject::{self, FaultKind, FaultPlan, Site};
+    use myia::ptest::{self, Config};
+    use myia::runtime::diskcache::{ArtifactKey, DiskCache};
+
+    /// The chaos property: random programs × random client interleavings
+    /// × an injected-fault plan covering every site class. Every submit
+    /// must terminate with `Ok` **bit-identical to the fault-free oracle**
+    /// or a structured `ServeError`; afterwards the server still snapshots
+    /// metrics and shuts down cleanly (no hang, no panic escape, no
+    /// poisoned lock). The plan comes from `MYIA_FAULT` when set (the CI
+    /// chaos job pins three seeds) and a default all-site plan otherwise.
+    #[test]
+    fn chaos_storm_every_request_terminates_structurally() {
+        let _g = fault_quiet();
+        let plan = std::env::var("MYIA_FAULT")
+            .ok()
+            .and_then(|s| FaultPlan::parse(&s))
+            .unwrap_or_else(|| FaultPlan::all(0xC4A0_5EED, 0.08));
+
+        ptest::check_exprs(Config { cases: 10, seed: 0xC4A0_5EED }, 4, |expr, rng| {
+            faultinject::clear();
+            let src = format!("def main(x):\n    return {expr}\n");
+            let engine = Engine::from_source(&src).map_err(|e| e.to_string())?;
+            let oracle =
+                engine.trace("main").and_then(|f| f.compile()).map_err(|e| e.to_string())?;
+            let cfg = ServerConfig {
+                max_batch: [2, 4, 8][rng.below(3)],
+                max_wait: Duration::from_millis(3),
+                queue_capacity: 16,
+                workers: 1 + rng.below(2),
+                full_policy: if rng.below(2) == 0 {
+                    FullPolicy::Block
+                } else {
+                    FullPolicy::Reject
+                },
+            };
+            let server = Server::for_entry(&engine, "main", vec![], None, cfg, |f| f)
+                .map_err(|e| e.to_string())?;
+            let server = Arc::new(server);
+
+            // Draw the whole schedule, then the oracle bits, both with
+            // injection OFF — `Ok` under faults is held to these bits.
+            let clients = 4 + rng.below(5);
+            let schedule: Vec<Vec<(f64, u64, bool)>> = (0..clients)
+                .map(|_| {
+                    (0..1 + rng.below(3))
+                        .map(|_| {
+                            (ptest::gen_value(rng), rng.below(3) as u64, rng.below(4) == 0)
+                        })
+                        .collect()
+                })
+                .collect();
+            let mut want: Vec<Vec<u64>> = Vec::with_capacity(schedule.len());
+            for row in &schedule {
+                let mut bits = Vec::with_capacity(row.len());
+                for (x, _, _) in row {
+                    match oracle.call(vec![Value::F64(*x)]).map_err(|e| e.to_string())? {
+                        Value::F64(v) => bits.push(v.to_bits()),
+                        other => return Err(format!("oracle returned {other}")),
+                    }
+                }
+                want.push(bits);
+            }
+
+            faultinject::install(plan.clone());
+            let outcomes: Vec<Vec<(f64, Result<Value, ServeError>)>> =
+                std::thread::scope(|s| {
+                    schedule
+                        .iter()
+                        .map(|row| {
+                            let server = server.clone();
+                            s.spawn(move || {
+                                row.iter()
+                                    .map(|&(x, delay, tight)| {
+                                        std::thread::sleep(Duration::from_millis(delay));
+                                        let opts = if tight {
+                                            SubmitOpts::timeout(Duration::from_millis(2))
+                                        } else {
+                                            SubmitOpts::default()
+                                        };
+                                        (x, server.submit_with(vec![Value::F64(x)], opts))
+                                    })
+                                    .collect::<Vec<_>>()
+                            })
+                        })
+                        .collect::<Vec<_>>()
+                        .into_iter()
+                        .map(|h| h.join().unwrap())
+                        .collect()
+                });
+            faultinject::clear();
+
+            let mut submitted = 0u64;
+            for (row, wrow) in outcomes.iter().zip(&want) {
+                for ((x, r), wbits) in row.iter().zip(wrow) {
+                    submitted += 1;
+                    match r {
+                        Ok(Value::F64(v)) => {
+                            if v.to_bits() != *wbits {
+                                return Err(format!(
+                                    "x = {x}: fault-window success not bit-identical: \
+                                     {v:?} vs {:?}",
+                                    f64::from_bits(*wbits)
+                                ));
+                            }
+                        }
+                        Ok(other) => return Err(format!("x = {x}: non-scalar {other}")),
+                        // Injection never makes a valid request invalid.
+                        Err(ServeError::Rejected(msg)) => {
+                            return Err(format!("x = {x}: valid request rejected: {msg}"))
+                        }
+                        // Every other variant is an acceptable structured
+                        // outcome under injected faults.
+                        Err(_) => {}
+                    }
+                }
+            }
+            // The stack must still be fully operational: metrics snapshot
+            // (poison-free locks) and a clean drain.
+            let m = server.metrics();
+            if m.submitted != submitted {
+                return Err(format!("submitted {} != {submitted}", m.submitted));
+            }
+            server.shutdown();
+            Ok(())
+        });
+    }
+
+    /// Disk-tier chaos: under a full-rate `disk_read` plan whose first four
+    /// draws are all hard faults, a load exhausts its bounded retries and
+    /// surfaces a structured error (the engine's cue to cold-compile) —
+    /// never a panic — and the cache recovers the moment faults stop.
+    #[test]
+    fn chaos_disk_read_faults_exhaust_retries_then_recover() {
+        let _g = fault_quiet();
+        let dir = std::env::temp_dir().join(format!("myia-chaos-disk-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = DiskCache::new(&dir).unwrap();
+        let key = ArtifactKey {
+            entry: "f".to_string(),
+            pipeline_spec: "vm".to_string(),
+            signature: "generic".to_string(),
+            module_fp: 1,
+        };
+        assert!(cache.load(&key).unwrap().is_none(), "clean miss with no plan");
+        assert_eq!(cache.take_retries(), 0);
+
+        // Pick a seed whose first four disk_read draws are all errors or
+        // panics (a latency draw would let the real read through): the
+        // retry loop then deterministically exhausts its budget.
+        let seed = (0u64..256)
+            .find(|&s| {
+                faultinject::install(FaultPlan::for_sites(s, 1.0, &[Site::DiskRead]));
+                (0..4).all(|_| {
+                    matches!(
+                        faultinject::fire(Site::DiskRead),
+                        Some(FaultKind::Error) | Some(FaultKind::Panic)
+                    )
+                })
+            })
+            .expect("some seed must draw four hard faults in a row");
+        faultinject::install(FaultPlan::for_sites(seed, 1.0, &[Site::DiskRead]));
+        let err = cache.load(&key).unwrap_err();
+        assert!(err.contains("injected"), "{err}");
+        assert_eq!(cache.take_retries(), 3, "exactly the bounded retry budget");
+
+        faultinject::clear();
+        assert!(cache.load(&key).unwrap().is_none(), "recovers once faults stop");
+        assert_eq!(cache.take_retries(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

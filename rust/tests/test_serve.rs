@@ -472,3 +472,66 @@ fn close_under_load_answers_every_accepted_request() {
     );
     assert_eq!(m.failed, 0, "no request may fail with Exec during a clean close");
 }
+
+/// Shutdown while the *fallback* path is hot: the batched artifact is
+/// sabotaged with `raise_` so every multi-request batch degrades to
+/// per-example recovery (and the circuit breaker trips open mid-storm), then
+/// the server is closed with queues full and fallback re-runs in flight. The
+/// contract: every accepted request gets exactly one terminal response — a
+/// bit-correct value or `Shutdown` — even when the close lands between a
+/// batch's failure and its per-example re-runs.
+#[test]
+fn shutdown_during_fallback_answers_every_accepted_request() {
+    let src = "def main(x):\n    return x * 3.0 + 1.0\n\
+               \ndef boom(x):\n    return raise_(\"deliberate batched failure\")\n";
+    let engine = Engine::from_source(src).unwrap();
+    let fallback = engine.trace("main").unwrap().compile().unwrap();
+    let sabotaged = engine.trace("boom").unwrap().compile().unwrap();
+    let cfg = ServerConfig {
+        max_batch: 4,
+        max_wait: Duration::from_micros(200),
+        queue_capacity: 8, // small, so submitters block on backpressure mid-close
+        workers: 2,
+        full_policy: FullPolicy::Block,
+    };
+    let server = Arc::new(Server::new(sabotaged, fallback, vec![], cfg).unwrap());
+
+    let outcomes: Vec<Vec<(f64, Result<Value, ServeError>)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8usize)
+            .map(|c| {
+                let server = server.clone();
+                s.spawn(move || {
+                    (0..40)
+                        .map(|i| {
+                            let x = 0.05 * (c * 40 + i) as f64 - 4.0;
+                            (x, server.submit(vec![Value::F64(x)]))
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        // Close while fallback re-runs are mid-flight.
+        std::thread::sleep(Duration::from_millis(5));
+        server.shutdown();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let mut ok = 0u64;
+    let mut shut_down = 0u64;
+    for (x, r) in outcomes.iter().flatten() {
+        match r {
+            Ok(Value::F64(v)) => {
+                assert_eq!(v.to_bits(), (x * 3.0 + 1.0).to_bits(), "x = {x}");
+                ok += 1;
+            }
+            Ok(other) => panic!("x = {x}: unexpected value {other}"),
+            Err(ServeError::Shutdown) | Err(ServeError::QueueFull) => shut_down += 1,
+            Err(other) => panic!("x = {x}: unexpected error {other}"),
+        }
+    }
+    assert_eq!(ok + shut_down, 8 * 40, "every submit must return exactly once");
+    let m = server.metrics();
+    assert_eq!(m.completed, ok, "accounting must reconcile across the close");
+    assert_eq!(m.failed, 0, "fallback must isolate the batch failure from every request");
+    assert_eq!(m.batched_batches, 0, "the sabotaged batched artifact can never succeed");
+}
